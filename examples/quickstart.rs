@@ -1,0 +1,66 @@
+//! Quickstart — the paper's Figure 2 workflow:
+//!
+//! 1. `prepare_debug(dir)`: run a model under the compiler and dump
+//!    everything it did (`full_code.py`, `__compiled_fn_*.py`,
+//!    `__transformed_*.py`, disassembly).
+//! 2. `debug()`: set a breakpoint inside a compiled graph's dumped source
+//!    and step through it line by line, inspecting intermediate tensors.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use depyf::backend::BackendKind;
+use depyf::session::DebugSession;
+
+const MODEL: &str = "\
+torch.manual_seed(0)
+W1 = torch.randn([8, 16])
+W2 = torch.randn([16, 4])
+def forward(x):
+    h = (x @ W1).relu()
+    return (h @ W2).softmax()
+x = torch.randn([2, 8])
+print('out sum:', forward(x).sum().item())
+print('out sum:', forward(x).sum().item())
+";
+
+fn main() -> Result<(), String> {
+    let dir = std::env::temp_dir().join("depyf_quickstart");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // ---- with depyf.prepare_debug(dir): ----
+    println!("== prepare_debug: capture + dump ==");
+    let mut session = DebugSession::prepare_debug(&dir, BackendKind::Eager)?;
+    session.run_source("main", MODEL).map_err(|e| e.to_string())?;
+    println!("{}", session.vm.take_output());
+    println!("compiler metrics: {}", session.dynamo.metrics.report());
+    let files = session.finish()?;
+    println!("\ndumped {} files into {}:", files.len(), dir.display());
+    for f in &files {
+        println!("  {}", f.file_name().unwrap().to_string_lossy());
+    }
+    let compiled = std::fs::read_to_string(dir.join("__compiled_fn_1.py")).map_err(|e| e.to_string())?;
+    println!("\n--- __compiled_fn_1.py (the captured graph) ---\n{}", compiled);
+    let transformed = std::fs::read_to_string(dir.join("__transformed___transformed_forward.py")).map_err(|e| e.to_string())?;
+    println!("--- __transformed_forward.py (decompiled transformed bytecode) ---\n{}", transformed);
+
+    // ---- with depyf.debug(): ----
+    println!("== debug: step through the compiled graph ==");
+    let dir2 = std::env::temp_dir().join("depyf_quickstart_dbg");
+    let _ = std::fs::remove_dir_all(&dir2);
+    let mut dbg_session = DebugSession::debug(&dir2)?;
+    // Break on line 3 of the compiled graph (the second op).
+    dbg_session.debugger.break_at("__compiled_fn_1.py", 3);
+    dbg_session.run_source("main", MODEL).map_err(|e| e.to_string())?;
+    dbg_session.finish()?;
+    for ev in dbg_session.debugger.events() {
+        println!(
+            "breakpoint hit: {}:{} in {} -> {}",
+            std::path::Path::new(&ev.file).file_name().unwrap().to_string_lossy(),
+            ev.line,
+            ev.func,
+            ev.locals.iter().map(|(k, v)| format!("{}={}", k, v)).collect::<Vec<_>>().join(", ")
+        );
+    }
+    println!("\nquickstart OK");
+    Ok(())
+}

@@ -1,0 +1,127 @@
+//! End-to-end driver: train the Layer-2 transformer LM through the full
+//! three-layer stack — JAX+Pallas AOT artifacts (built by `make artifacts`)
+//! loaded and executed by the Rust PJRT runtime; Python never runs here.
+//!
+//! Trains ~100k parameters for a few hundred steps on a synthetic
+//! next-token corpus and logs the loss curve (recorded in EXPERIMENTS.md).
+//!
+//! Run: `make artifacts && cargo run --release --example train_transformer`
+
+use depyf::runtime::{Arg, Runtime};
+use depyf::tensor::{Rng, Tensor};
+
+const VOCAB: usize = 128;
+const SEQ: usize = 32;
+const BATCH: usize = 8;
+const STEPS: usize = 300;
+
+/// Synthetic corpus: an affine token recurrence with noise — learnable
+/// structure for a tiny LM.
+fn make_batch(rng: &mut Rng) -> (Tensor, Tensor) {
+    let mut toks = Vec::with_capacity(BATCH * SEQ);
+    for _ in 0..BATCH {
+        let mut t = rng.below(VOCAB) as u64;
+        for _ in 0..SEQ {
+            toks.push(t as f32);
+            // tok[i+1] = 7*tok[i] + 3 (mod V), with occasional noise
+            t = if rng.below(10) == 0 { rng.below(VOCAB) as u64 } else { (7 * t + 3) % VOCAB as u64 };
+        }
+    }
+    let tokens = Tensor::new(vec![BATCH, SEQ], toks);
+    // next-token targets (shift left; final target follows the recurrence)
+    let mut tgt = Vec::with_capacity(BATCH * SEQ);
+    for b in 0..BATCH {
+        for s in 0..SEQ {
+            let v = if s + 1 < SEQ {
+                tokens.data()[b * SEQ + s + 1]
+            } else {
+                ((7 * tokens.data()[b * SEQ + s] as u64 + 3) % VOCAB as u64) as f32
+            };
+            tgt.push(v);
+        }
+    }
+    (tokens, Tensor::new(vec![BATCH, SEQ], tgt))
+}
+
+fn main() -> Result<(), String> {
+    let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".to_string());
+    let rt = Runtime::cpu_with_artifacts(&dir)?;
+    println!("PJRT platform: {}", rt.platform());
+    let names = rt.manifest().map(|m| m.names().join(", ")).unwrap_or_default();
+    println!("artifacts: {}", names);
+
+    // 1. Initialize parameters via the AOT init graph (constants baked from
+    //    the jax PRNG — bit-identical to what python/tests validated).
+    let (init_exe, init_art) = rt.load_artifact("init_params")?;
+    let params: Vec<Tensor> = rt.execute(&init_exe, &[])?;
+    let n_params: usize = params.iter().map(|p| p.numel()).sum();
+    println!("initialized {} tensors, {} parameters", params.len(), n_params);
+    assert_eq!(params.len(), init_art.n_outputs);
+
+    // 2. Golden cross-check: first-step loss on the fixed batch must match
+    //    what jax computed at artifact-build time.
+    let (step_exe, _) = rt.load_artifact("train_step")?;
+    let golden = std::fs::read_to_string(format!("{}/goldens/first_step_loss.txt", dir)).ok();
+    let tok_text = std::fs::read_to_string(format!("{}/goldens/first_batch_tokens.txt", dir)).ok();
+    if let (Some(golden), Some(tok_text)) = (golden, tok_text) {
+        let toks: Vec<f32> = tok_text.split_whitespace().filter_map(|v| v.parse().ok()).collect();
+        let tokens = Tensor::new(vec![BATCH, SEQ], toks);
+        // np.roll(tokens, -1, axis=1)
+        let mut tgt = vec![0f32; BATCH * SEQ];
+        for b in 0..BATCH {
+            for s in 0..SEQ {
+                tgt[b * SEQ + s] = tokens.data()[b * SEQ + (s + 1) % SEQ];
+            }
+        }
+        let targets = Tensor::new(vec![BATCH, SEQ], tgt);
+        let mut args: Vec<Arg> = vec![Arg::I32(&tokens), Arg::I32(&targets)];
+        for p in &params {
+            args.push(Arg::F32(p));
+        }
+        let out = rt.execute_args(&step_exe, &args)?;
+        let loss0 = out[0].item();
+        let expected: f32 = golden.trim().parse().map_err(|e| format!("golden parse: {}", e))?;
+        let diff = (loss0 - expected).abs();
+        println!("golden check: rust-PJRT loss {:.6} vs jax {:.6} (|d|={:.2e})", loss0, expected, diff);
+        assert!(diff < 1e-3, "golden mismatch");
+    }
+
+    // 3. Train.
+    let mut params = params;
+    let mut rng = Rng::new(42);
+    let t0 = std::time::Instant::now();
+    let mut first = None;
+    let mut last = 0.0f32;
+    for step in 0..STEPS {
+        let (tokens, targets) = make_batch(&mut rng);
+        let mut args: Vec<Arg> = vec![Arg::I32(&tokens), Arg::I32(&targets)];
+        for p in &params {
+            args.push(Arg::F32(p));
+        }
+        let mut out = rt.execute_args(&step_exe, &args)?;
+        let loss = out.remove(0).item();
+        params = out;
+        if first.is_none() {
+            first = Some(loss);
+        }
+        last = loss;
+        if step % 25 == 0 || step == STEPS - 1 {
+            println!("step {:>4}  loss {:.4}", step, loss);
+        }
+        assert!(loss.is_finite(), "loss diverged at step {}", step);
+    }
+    let dt = t0.elapsed();
+    let first = first.unwrap();
+    println!(
+        "trained {} steps in {:.1?} ({:.1} ms/step); loss {:.4} -> {:.4} (ln V = {:.4})",
+        STEPS,
+        dt,
+        dt.as_millis() as f64 / STEPS as f64,
+        first,
+        last,
+        (VOCAB as f32).ln()
+    );
+    assert!(last < first * 0.7, "loss did not decrease enough: {} -> {}", first, last);
+    println!("train_transformer OK");
+    Ok(())
+}

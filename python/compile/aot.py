@@ -1,0 +1,111 @@
+"""AOT lowering: JAX functions -> HLO **text** artifacts for the Rust
+runtime (`rust/src/runtime`). Runs once at build time (`make artifacts`).
+
+HLO text (not `.serialize()`) is the interchange format: jax >= 0.5 emits
+protos with 64-bit instruction ids that the crate's xla_extension 0.5.1
+rejects; the text parser reassigns ids. See /opt/xla-example/README.md.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .kernels.attention import attention
+from .kernels.layernorm import layernorm
+from .model import Config, init_params, loss_fn, param_shapes, train_step
+
+
+def to_hlo_text(fn, *example_args) -> str:
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def shape_str(shape) -> str:
+    return ",".join(str(d) for d in shape) if shape else "scalar"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    args = ap.parse_args()
+    out = args.out
+    os.makedirs(out, exist_ok=True)
+    os.makedirs(os.path.join(out, "goldens"), exist_ok=True)
+
+    cfg = Config()
+    manifest = []
+
+    def emit(name, fn, example_args, n_outputs, out_shapes):
+        text = to_hlo_text(fn, *example_args)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out, fname), "w") as f:
+            f.write(text)
+        ins = ";".join(shape_str(a.shape) for a in example_args)
+        outs = ";".join(shape_str(s) for s in out_shapes)
+        manifest.append(f"{name} {fname} {n_outputs} in={ins} out={outs}")
+        print(f"wrote {fname} ({len(text)} chars)")
+
+    # ---- Layer-1 kernels as standalone artifacts (fused-op registry) ----
+    bhtd = (2, cfg.n_heads, cfg.seq, cfg.d_model // cfg.n_heads)
+    q = jnp.zeros(bhtd, jnp.float32)
+    emit("attention", lambda a, b, c: (attention(a, b, c),), (q, q, q), 1, [bhtd])
+
+    nd = (cfg.batch * cfg.seq, cfg.d_model)
+    x = jnp.zeros(nd, jnp.float32)
+    g = jnp.ones((cfg.d_model,), jnp.float32)
+    emit("layernorm", lambda a, b, c: (layernorm(a, b, c),), (x, g, g), 1, [nd])
+
+    # ---- Layer-2 model ----
+    params = init_params(cfg, seed=0)
+    tokens = jnp.zeros((cfg.batch, cfg.seq), jnp.int32)
+    targets = jnp.zeros((cfg.batch, cfg.seq), jnp.int32)
+    pshapes = [s for _, s in param_shapes(cfg)]
+
+    # init(): no inputs -> params tuple (constants baked into HLO).
+    emit("init_params", lambda: init_params(cfg, seed=0), (), len(pshapes), pshapes)
+
+    # loss(tokens, targets, *params) -> (loss,)
+    def loss_flat(tok, tgt, *ps):
+        return (loss_fn(cfg, tuple(ps), tok, tgt),)
+
+    emit("loss", loss_flat, (tokens, targets) + params, 1, [()])
+
+    # train_step(tokens, targets, *params) -> (loss, *new_params)
+    def step_flat(tok, tgt, *ps):
+        return train_step(cfg, tuple(ps), tok, tgt)
+
+    emit("train_step", step_flat, (tokens, targets) + params, 1 + len(pshapes), [()] + pshapes)
+
+    # ---- goldens: deterministic first-step loss for the Rust driver ----
+    rng = np.random.RandomState(1234)
+    tok_np = rng.randint(0, cfg.vocab, size=(cfg.batch, cfg.seq)).astype(np.int32)
+    tgt_np = np.roll(tok_np, -1, axis=1).astype(np.int32)
+    step0 = step_flat(jnp.asarray(tok_np), jnp.asarray(tgt_np), *params)
+    loss0 = float(step0[0])
+    with open(os.path.join(out, "goldens", "first_step_loss.txt"), "w") as f:
+        f.write(f"{loss0}\n")
+    with open(os.path.join(out, "goldens", "first_batch_tokens.txt"), "w") as f:
+        f.write(" ".join(str(int(v)) for v in tok_np.reshape(-1)) + "\n")
+    print(f"golden first-step loss: {loss0:.6f} (ln(vocab)={np.log(cfg.vocab):.4f})")
+
+    # config line for the Rust driver
+    manifest.append(
+        f"# config vocab={cfg.vocab} d_model={cfg.d_model} n_heads={cfg.n_heads} "
+        f"n_layers={cfg.n_layers} seq={cfg.seq} batch={cfg.batch} lr={cfg.lr}"
+    )
+    with open(os.path.join(out, "manifest.txt"), "w") as f:
+        f.write("# name file n_outputs in=<shapes> out=<shapes>\n")
+        f.write("\n".join(manifest) + "\n")
+    print(f"manifest with {len(manifest)} entries")
+
+
+if __name__ == "__main__":
+    main()

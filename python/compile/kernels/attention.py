@@ -1,0 +1,109 @@
+"""Layer 1: fused causal attention as a Pallas kernel.
+
+TPU-style adaptation of the FlashAttention insight the paper cites as its
+motivating example (DESIGN.md §Hardware-Adaptation): instead of
+warps/shared-memory tiling, the grid maps one (batch, head) pair per
+program instance, the Q/K/V head-slices are staged into VMEM via
+`BlockSpec`, QKᵀ hits the MXU, and the softmax is computed with the
+numerically-stable row-max rewrite before the PV matmul — one fused kernel,
+no [T, T] intermediate ever leaving VMEM.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel lowers to plain HLO for this testbed; real-TPU
+performance is *estimated* in DESIGN.md §Perf from the VMEM footprint and
+MXU utilization of these block shapes.
+"""
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, causal: bool):
+    # One (batch, head) slice: q/k/v refs are [T, D] VMEM blocks.
+    q = q_ref[...]
+    k = k_ref[...]
+    v = v_ref[...]
+    d = q.shape[-1]
+    scale = 1.0 / math.sqrt(d)
+    # MXU matmul, then stable softmax entirely in VMEM.
+    scores = jnp.dot(q, k.T) * scale  # [T, T]
+    if causal:
+        t = q.shape[0]
+        row = jax.lax.broadcasted_iota(jnp.int32, (t, t), 0)
+        col = jax.lax.broadcasted_iota(jnp.int32, (t, t), 1)
+        scores = jnp.where(row >= col, scores, jnp.float32(-1e30))
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[...] = jnp.dot(p, v)
+
+
+def _attention_impl(q, k, v, causal):
+    b, h, t, d = q.shape
+    grid = (b, h)
+    spec = pl.BlockSpec((1, 1, t, d), lambda i, j: (i, j, 0, 0))
+    kernel = functools.partial(_attn_kernel_wrapped, causal=causal)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, t, d), jnp.float32),
+        interpret=True,
+    )(q, k, v)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def attention(q, k, v, causal=True):
+    """Fused attention. q/k/v: [B, H, T, D] f32 -> [B, H, T, D].
+
+    Forward runs the Pallas kernel; the backward pass uses the analytic
+    VJP of the reference formulation (interpret-mode pallas_call has no
+    reverse-mode rule — on a real TPU the backward would be a second
+    Pallas kernel, see DESIGN.md §Hardware-Adaptation).
+    """
+    return _attention_impl(q, k, v, causal)
+
+
+def _attention_fwd(q, k, v, causal):
+    return _attention_impl(q, k, v, causal), (q, k, v)
+
+
+def _attention_bwd(causal, res, g):
+    from .ref import attention_ref
+
+    q, k, v = res
+    _, vjp = jax.vjp(lambda a, b, c: attention_ref(a, b, c, causal), q, k, v)
+    return vjp(g)
+
+
+attention.defvjp(_attention_fwd, _attention_bwd)
+
+
+def _attn_kernel_wrapped(q_ref, k_ref, v_ref, o_ref, *, causal):
+    # Block shapes come in as [1, 1, T, D]; squeeze the unit dims.
+    q = q_ref[0, 0]
+    k = k_ref[0, 0]
+    v = v_ref[0, 0]
+    d = q.shape[-1]
+    scale = 1.0 / math.sqrt(d)
+    scores = jnp.dot(q, k.T) * scale
+    if causal:
+        t = q.shape[0]
+        row = jax.lax.broadcasted_iota(jnp.int32, (t, t), 0)
+        col = jax.lax.broadcasted_iota(jnp.int32, (t, t), 1)
+        scores = jnp.where(row >= col, scores, jnp.float32(-1e30))
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[0, 0] = jnp.dot(p, v)
+
+
+def vmem_footprint_bytes(t: int, d: int) -> int:
+    """Estimated VMEM bytes per program instance (DESIGN.md §Perf):
+    q+k+v+o blocks [T, D] + scores/probs [T, T], all f32."""
+    return 4 * (4 * t * d + 2 * t * t)

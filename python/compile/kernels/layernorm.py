@@ -1,0 +1,67 @@
+"""Layer 1: fused LayerNorm as a Pallas kernel.
+
+Grid over row-blocks: each program instance normalizes a [ROWS_PER_BLOCK, D]
+tile in VMEM (mean/variance/scale in one pass over the tile — the classic
+fusion that avoids materializing mean/var in HBM). `interpret=True` for the
+CPU testbed (see attention.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ln_kernel(x_ref, g_ref, b_ref, o_ref, *, eps: float):
+    x = x_ref[...]  # [ROWS, D]
+    g = g_ref[...]  # [D]
+    b = b_ref[...]
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mean) ** 2, axis=-1, keepdims=True)
+    o_ref[...] = (x - mean) / jnp.sqrt(var + eps) * g + b
+
+
+def _layernorm_impl(x, gamma, beta, eps=1e-5, block_rows=8):
+    n, d = x.shape
+    while n % block_rows != 0:
+        block_rows //= 2
+    block_rows = max(block_rows, 1)
+    grid = (n // block_rows,)
+    return pl.pallas_call(
+        functools.partial(_ln_kernel, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), jnp.float32),
+        interpret=True,
+    )(x, gamma, beta)
+
+
+@jax.custom_vjp
+def layernorm(x, gamma, beta):
+    """Fused layernorm. x: [N, D] f32; gamma/beta: [D].
+
+    Pallas forward; analytic reference VJP backward (interpret-mode
+    pallas_call has no reverse-mode rule).
+    """
+    return _layernorm_impl(x, gamma, beta)
+
+
+def _ln_fwd(x, gamma, beta):
+    return _layernorm_impl(x, gamma, beta), (x, gamma, beta)
+
+
+def _ln_bwd(res, g):
+    from .ref import layernorm_ref
+
+    x, gamma, beta = res
+    _, vjp = jax.vjp(layernorm_ref, x, gamma, beta)
+    return vjp(g)
+
+
+layernorm.defvjp(_ln_fwd, _ln_bwd)

@@ -1,0 +1,34 @@
+"""Pure-jnp reference oracles for the Pallas kernels (Layer 1 correctness).
+
+These are the ground truth the kernels are pytest-verified against, and the
+semantics the Rust eager backend mirrors.
+"""
+
+import jax.numpy as jnp
+
+
+def softmax_last(x):
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def attention_ref(q, k, v, causal=True):
+    """Scaled dot-product attention with optional causal mask.
+
+    q, k, v: [B, H, T, D] (f32). Returns [B, H, T, D].
+    """
+    d = q.shape[-1]
+    scores = jnp.einsum("bhtd,bhsd->bhts", q, k) / jnp.sqrt(jnp.float32(d))
+    if causal:
+        t = q.shape[-2]
+        mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+        scores = jnp.where(mask, scores, jnp.float32(-1e30))
+    return jnp.einsum("bhts,bhsd->bhtd", softmax_last(scores), v)
+
+
+def layernorm_ref(x, gamma, beta, eps=1e-5):
+    """LayerNorm over the last axis. x: [..., D]; gamma/beta: [D]."""
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mean) ** 2, axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + eps) * gamma + beta

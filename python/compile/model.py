@@ -1,0 +1,112 @@
+"""Layer 2: a small causal transformer LM in JAX, calling the Layer-1
+Pallas kernels. Build-time only — `aot.py` lowers these functions to HLO
+text; the Rust runtime executes them. Python never runs on the request
+path.
+"""
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import attention
+from .kernels.layernorm import layernorm
+
+
+class Config(NamedTuple):
+    vocab: int = 128
+    d_model: int = 64
+    n_heads: int = 4
+    n_layers: int = 2
+    d_ff: int = 128
+    seq: int = 32
+    batch: int = 8
+    lr: float = 0.1
+
+
+def param_shapes(cfg: Config):
+    """Ordered (name, shape) list — the flat param convention shared with
+    the Rust driver."""
+    shapes = [("tok_emb", (cfg.vocab, cfg.d_model)), ("pos_emb", (cfg.seq, cfg.d_model))]
+    for i in range(cfg.n_layers):
+        shapes += [
+            (f"l{i}.wqkv", (cfg.d_model, 3 * cfg.d_model)),
+            (f"l{i}.wo", (cfg.d_model, cfg.d_model)),
+            (f"l{i}.ln1_g", (cfg.d_model,)),
+            (f"l{i}.ln1_b", (cfg.d_model,)),
+            (f"l{i}.w1", (cfg.d_model, cfg.d_ff)),
+            (f"l{i}.w2", (cfg.d_ff, cfg.d_model)),
+            (f"l{i}.ln2_g", (cfg.d_model,)),
+            (f"l{i}.ln2_b", (cfg.d_model,)),
+        ]
+    shapes += [("lnf_g", (cfg.d_model,)), ("lnf_b", (cfg.d_model,))]
+    return shapes
+
+
+def init_params(cfg: Config, seed: int = 0):
+    """Deterministic init, returned as a flat tuple in param_shapes order."""
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for name, shape in param_shapes(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(("_g",)):
+            out.append(jnp.ones(shape, jnp.float32))
+        elif name.endswith(("_b",)):
+            out.append(jnp.zeros(shape, jnp.float32))
+        else:
+            scale = 0.08
+            out.append(scale * jax.random.normal(sub, shape, jnp.float32))
+    return tuple(out)
+
+
+def _ln2d(x, g, b):
+    """LayerNorm via the Pallas kernel, reshaping to rows."""
+    shape = x.shape
+    flat = x.reshape(-1, shape[-1])
+    return layernorm(flat, g, b).reshape(shape)
+
+
+def forward(cfg: Config, params, tokens):
+    """Logits for token ids [B, T] -> [B, T, vocab]."""
+    it = iter(params)
+    tok_emb = next(it)
+    pos_emb = next(it)
+    b, t = tokens.shape
+    x = tok_emb[tokens] + pos_emb[None, :t, :]
+    for _ in range(cfg.n_layers):
+        wqkv, wo, ln1_g, ln1_b, w1, w2, ln2_g, ln2_b = (next(it) for _ in range(8))
+        h = _ln2d(x, ln1_g, ln1_b)
+        qkv = h @ wqkv  # [B, T, 3D]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        dh = cfg.d_model // cfg.n_heads
+        def heads(z):
+            return z.reshape(b, t, cfg.n_heads, dh).transpose(0, 2, 1, 3)
+        att = attention(heads(q), heads(k), heads(v), causal=True)  # [B,H,T,dh]
+        att = att.transpose(0, 2, 1, 3).reshape(b, t, cfg.d_model)
+        x = x + att @ wo
+        h2 = _ln2d(x, ln2_g, ln2_b)
+        x = x + jax.nn.gelu(h2 @ w1) @ w2
+    lnf_g = next(it)
+    lnf_b = next(it)
+    x = _ln2d(x, lnf_g, lnf_b)
+    return x @ tok_emb.T  # weight tying
+
+
+def loss_fn(cfg: Config, params, tokens, targets):
+    logits = forward(cfg, params, tokens)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - picked)
+
+
+def train_step(cfg: Config, params, tokens, targets):
+    """(loss, new_params...) with inline SGD — the whole step is one HLO."""
+    loss, grads = jax.value_and_grad(lambda p: loss_fn(cfg, p, tokens, targets))(params)
+    new_params = tuple(p - cfg.lr * g for p, g in zip(params, grads))
+    return (loss,) + new_params
+
+
+@functools.lru_cache(maxsize=None)
+def default_config():
+    return Config()

@@ -1,0 +1,106 @@
+//! Backend throughput: eager reference executor vs the XLA/PJRT backend on
+//! captured graphs of increasing size, plus the AOT Pallas attention
+//! artifact vs the eager composition. Shows where the compiled path wins
+//! (the paper's "backend generates binary executables" claim, quantified).
+//!
+//! Run: `cargo bench --bench backend_throughput` (artifacts optional; the
+//! attention section is skipped if `artifacts/` is missing).
+
+use std::rc::Rc;
+use std::time::Instant;
+
+use depyf::backend::{compile_graph, BackendKind};
+use depyf::graph::{Graph, OpKind};
+use depyf::runtime::Runtime;
+use depyf::tensor::{Rng, Tensor};
+
+fn mlp_graph(n: usize, d: usize) -> Graph {
+    let mut g = Graph::new("bench_mlp");
+    let x = g.placeholder("x", &[n, d]);
+    let w1 = g.placeholder("w1", &[d, d]);
+    let w2 = g.placeholder("w2", &[d, d]);
+    let h = g.add_op(OpKind::MatMul, vec![x, w1]).unwrap();
+    let r = g.add_op(OpKind::Relu, vec![h]).unwrap();
+    let o = g.add_op(OpKind::MatMul, vec![r, w2]).unwrap();
+    let s = g.add_op(OpKind::Softmax, vec![o]).unwrap();
+    let out = g.add_op(OpKind::Sum(None), vec![s]).unwrap();
+    g.set_outputs(vec![out]);
+    g
+}
+
+fn time_ns(iters: usize, mut f: impl FnMut()) -> f64 {
+    for _ in 0..iters.min(10) {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t0.elapsed().as_nanos() as f64 / iters as f64
+}
+
+fn main() {
+    let rt = Runtime::cpu().expect("pjrt cpu");
+    let mut rng = Rng::new(7);
+    println!("{:<10} {:>6} {:>14} {:>14} {:>10} {:>14}", "graph", "dim", "eager ns", "xla ns", "speedup", "GFLOP/s(xla)");
+    for &d in &[16usize, 32, 64, 128, 256] {
+        let n = 32;
+        let g = Rc::new(mlp_graph(n, d));
+        let flops = g.flops();
+        let name = format!("bench_d{}", d);
+        let eager = compile_graph(&name, Rc::clone(&g), BackendKind::Eager, None);
+        let xla = compile_graph(&name, Rc::clone(&g), BackendKind::Xla, Some(Rc::clone(&rt)));
+        assert_eq!(xla.backend_name, "xla", "xla backend failed: {}", xla.backend_name);
+        let inputs: Vec<Rc<Tensor>> = vec![
+            Rc::new(Tensor::randn(&[n, d], &mut rng)),
+            Rc::new(Tensor::randn(&[d, d], &mut rng)),
+            Rc::new(Tensor::randn(&[d, d], &mut rng)),
+        ];
+        // correctness cross-check before timing
+        let a = eager.call(&inputs).unwrap();
+        let b = xla.call(&inputs).unwrap();
+        assert!(a[0].allclose(&b[0], 2e-2 * d as f32), "backend divergence at d={}", d);
+
+        let iters = if d >= 128 { 50 } else { 200 };
+        let te = time_ns(iters, || {
+            eager.call(&inputs).unwrap();
+        });
+        let tx = time_ns(iters, || {
+            xla.call(&inputs).unwrap();
+        });
+        println!(
+            "{:<10} {:>6} {:>14.0} {:>14.0} {:>9.2}x {:>14.2}",
+            "mlp",
+            d,
+            te,
+            tx,
+            te / tx,
+            flops as f64 / tx
+        );
+    }
+
+    // AOT Pallas attention artifact (if built).
+    if let Ok(rt2) = Runtime::cpu_with_artifacts("artifacts") {
+        if let Ok((exe, art)) = rt2.load_artifact("attention") {
+            let shape = &art.input_shapes[0];
+            let mk = |seed: u64| {
+                let mut r = Rng::new(seed);
+                Tensor::randn(shape, &mut r)
+            };
+            let (q, k, v) = (mk(1), mk(2), mk(3));
+            let t = time_ns(200, || {
+                rt2.execute(&exe, &[&q, &k, &v]).unwrap();
+            });
+            let (b, h, tt, dd) = (shape[0], shape[1], shape[2], shape[3]);
+            let flops = 4 * b * h * tt * tt * dd; // 2 matmuls
+            println!(
+                "\nAOT Pallas attention {:?}: {:.0} ns/call, {:.2} GFLOP/s (interpret-mode CPU)",
+                shape,
+                t,
+                flops as f64 / t
+            );
+        }
+    } else {
+        println!("\n(artifacts/ not built; skipping AOT attention — run `make artifacts`)");
+    }
+}

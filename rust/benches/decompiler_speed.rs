@@ -1,0 +1,65 @@
+//! Decompiler throughput: instructions/ms over the corpora, per tool —
+//! the §Perf target for the decompilation hot path (depyf is meant for
+//! interactive debugging sessions; decompiling a whole dump dir must be
+//! instant).
+//!
+//! Run: `cargo bench --bench decompiler_speed`
+
+use std::rc::Rc;
+use std::time::Instant;
+
+use depyf::bytecode::IsaVersion;
+use depyf::corpus::syntax_cases;
+use depyf::decompiler::baselines::all_tools_rc;
+use depyf::dynamo::{Dynamo, DynamoConfig};
+use depyf::pylang::compile_module;
+use depyf::vm::Vm;
+
+fn main() {
+    // Corpus of code objects: all syntax cases + generated code from a few
+    // models.
+    let mut codes = Vec::new();
+    for c in syntax_cases() {
+        let m = compile_module(c.source, "<b>", IsaVersion::V310).unwrap();
+        codes.push(m.clone());
+        codes.extend(m.nested_codes());
+    }
+    let model = "def f(x):\n    y = x * 2\n    print('mid')\n    if y.sum() >= 0:\n        y = y + 1\n    return y.sum()\nprint(f(torch.ones([4])).item())\n";
+    let mut vm = Vm::new();
+    let d = Dynamo::new(DynamoConfig::default());
+    vm.eval_hook = Some(d.clone());
+    vm.exec_source(model, IsaVersion::V310).unwrap();
+    for (_, code) in d.generated_codes() {
+        codes.push(code);
+    }
+    let total_instrs: usize = codes.iter().map(|c| c.instrs.len()).sum();
+    let total_bytes: usize = codes.iter().map(|c| c.raw.len()).sum();
+    println!("corpus: {} code objects, {} instructions, {} raw bytes\n", codes.len(), total_instrs, total_bytes);
+
+    for tool in all_tools_rc() {
+        if tool.name() != "depyf" && tool.name() != "pycdc" {
+            continue; // version-locked baselines can't decode V310
+        }
+        let iters = 20;
+        let mut ok = 0usize;
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            ok = 0;
+            for code in &codes {
+                if tool.decompile(&Rc::clone(code)).is_ok() {
+                    ok += 1;
+                }
+            }
+        }
+        let dt = t0.elapsed();
+        let per_pass_ms = dt.as_secs_f64() * 1000.0 / iters as f64;
+        println!(
+            "{:<8} {:>8.2} ms/corpus-pass  {:>10.1} instrs/ms  ({} of {} decompiled)",
+            tool.name(),
+            per_pass_ms,
+            (total_instrs * iters) as f64 / (dt.as_secs_f64() * 1000.0),
+            ok,
+            codes.len()
+        );
+    }
+}

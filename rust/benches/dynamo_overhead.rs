@@ -1,0 +1,86 @@
+//! Dynamo frontend overheads: one-time capture cost, cache-hit dispatch
+//! (guard evaluation) cost per call, and the eager-vs-compiled steady
+//! state. The "compiler must not slow down steady state" bar from
+//! DESIGN.md §Perf.
+//!
+//! Run: `cargo bench --bench dynamo_overhead`
+
+use std::rc::Rc;
+use std::time::Instant;
+
+use depyf::bytecode::IsaVersion;
+use depyf::dynamo::{Dynamo, DynamoConfig};
+use depyf::tensor::Tensor;
+use depyf::value::Value;
+use depyf::vm::Vm;
+
+const SRC: &str = "\
+torch.manual_seed(0)
+W1 = torch.randn([32, 64])
+W2 = torch.randn([64, 32])
+def forward(x):
+    h = (x @ W1).relu()
+    return (h @ W2).softmax().sum()
+";
+
+fn bench(name: &str, iters: usize, mut f: impl FnMut()) -> f64 {
+    // warmup
+    for _ in 0..iters.min(50) {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed().as_nanos() as f64 / iters as f64;
+    println!("{:<36} {:>12.0} ns/call ({} iters)", name, per, iters);
+    per
+}
+
+fn main() {
+    let x = Value::tensor(Tensor::ones(&[16, 32]));
+
+    // Plain eager execution (no hook).
+    let vm = Vm::new();
+    vm.exec_source(SRC, IsaVersion::V310).unwrap();
+    let f = vm.get_global("forward").unwrap();
+    let eager = bench("eager call (no compiler)", 2000, || {
+        vm.call(&f, &[x.clone()]).unwrap();
+    });
+
+    // Compiled path.
+    let mut vm2 = Vm::new();
+    let dynamo = Dynamo::new(DynamoConfig::default());
+    vm2.eval_hook = Some(dynamo.clone());
+    vm2.exec_source(SRC, IsaVersion::V310).unwrap();
+    let f2 = vm2.get_global("forward").unwrap();
+
+    // One-time capture cost.
+    let t0 = Instant::now();
+    vm2.call(&f2, &[x.clone()]).unwrap();
+    println!("{:<36} {:>12.0} ns (one-time)", "first call (capture+compile)", t0.elapsed().as_nanos() as f64);
+
+    let hit = bench("cache-hit call (guards + dispatch)", 2000, || {
+        vm2.call(&f2, &[x.clone()]).unwrap();
+    });
+    println!(
+        "\nsteady-state ratio compiled/eager: {:.2}x ({} captures, {} cache hits)",
+        hit / eager,
+        dynamo.metrics.captures.get(),
+        dynamo.metrics.cache_hits.get()
+    );
+
+    // Pure guard-check overhead: intercept cost when args only vary.
+    let shapes = [[16usize, 32], [8, 32]];
+    let xs: Vec<Value> = shapes.iter().map(|s| Value::tensor(Tensor::ones(s))).collect();
+    for v in &xs {
+        vm2.call(&f2, &[v.clone()]).unwrap(); // ensure both entries cached
+    }
+    let mut i = 0;
+    bench("alternating-shape call (2 entries)", 2000, || {
+        vm2.call(&f2, &[xs[i % 2].clone()]).unwrap();
+        i += 1;
+    });
+    println!("\ncompile-time total: {:?}", dynamo.metrics.compile_time());
+    println!("metrics: {}", dynamo.metrics.report());
+}

@@ -1,0 +1,37 @@
+//! Bench/regeneration harness for **Table 1** (the paper's only table):
+//! decompiler correctness across ISA versions and program-generated
+//! bytecode, plus wall-clock per suite.
+//!
+//! Run: `cargo bench --bench table1_correctness`
+
+use depyf::bytecode::IsaVersion;
+use depyf::corpus::{render_table1, run_model_suite, run_syntax_suite, run_table1};
+use depyf::decompiler::baselines::all_tools_rc;
+
+fn main() {
+    println!("=== Table 1: decompiler correctness (regenerated) ===\n");
+    let t0 = std::time::Instant::now();
+    let table = run_table1();
+    println!("{}", render_table1(&table));
+    println!("total wall-clock: {:.2?}\n", t0.elapsed());
+
+    println!("=== per-suite timing ===");
+    for tool in all_tools_rc() {
+        let t = std::time::Instant::now();
+        let (cell, _) = run_syntax_suite(tool.as_ref(), IsaVersion::V310);
+        let syn = t.elapsed();
+        let t = std::time::Instant::now();
+        let (mcell, _) = run_model_suite(&tool);
+        let mdl = t.elapsed();
+        println!(
+            "{:<12} syntax@3.10 {:>3}/{} in {:>8.1?}   models {:>3}/{} in {:>8.1?}",
+            tool.name(),
+            cell.pass,
+            cell.total,
+            syn,
+            mcell.pass,
+            mcell.total,
+            mdl
+        );
+    }
+}

@@ -1,0 +1,147 @@
+//! Eager reference backend: executes a captured graph node-by-node with the
+//! CPU tensor library. This is the correctness oracle for the XLA backend
+//! and the executor the debugger steps through (`on_node` callback maps to
+//! dump lines).
+
+use std::rc::Rc;
+
+use crate::graph::{Graph, NodeKind, OpKind};
+use crate::tensor::{self, Tensor};
+
+/// Execute with a per-node callback (node id, result) — used by the
+/// debugger to step through `__compiled_fn` dumps line by line.
+pub fn execute_traced(
+    g: &Graph,
+    inputs: &[Rc<Tensor>],
+    mut on_node: impl FnMut(usize, &Tensor),
+) -> Result<Vec<Tensor>, String> {
+    if inputs.len() != g.inputs.len() {
+        return Err(format!("graph {} expects {} inputs, got {}", g.name, g.inputs.len(), inputs.len()));
+    }
+    let mut env: Vec<Option<Tensor>> = vec![None; g.nodes.len()];
+    for (slot, input) in g.inputs.iter().zip(inputs.iter()) {
+        let node = &g.nodes[*slot];
+        if node.shape != input.shape() {
+            return Err(format!(
+                "graph {} input {} shape mismatch: expected {:?}, got {:?}",
+                g.name,
+                slot,
+                node.shape,
+                input.shape()
+            ));
+        }
+        env[*slot] = Some((**input).clone());
+    }
+    for (id, node) in g.nodes.iter().enumerate() {
+        match &node.kind {
+            NodeKind::Placeholder { .. } => {}
+            NodeKind::ConstScalar(v) => env[id] = Some(Tensor::scalar(*v as f32)),
+            NodeKind::ConstTensor(t) => env[id] = Some(t.clone()),
+            NodeKind::Op(op, args) => {
+                let get = |i: usize| -> Result<&Tensor, String> {
+                    env[args[i]].as_ref().ok_or_else(|| format!("node {} uses unevaluated node {}", id, args[i]))
+                };
+                let r = match op {
+                    OpKind::Add => tensor::add(get(0)?, get(1)?)?,
+                    OpKind::Sub => tensor::sub(get(0)?, get(1)?)?,
+                    OpKind::Mul => tensor::mul(get(0)?, get(1)?)?,
+                    OpKind::Div => tensor::div(get(0)?, get(1)?)?,
+                    OpKind::Pow => tensor::pow(get(0)?, get(1)?)?,
+                    OpKind::Maximum => tensor::maximum(get(0)?, get(1)?)?,
+                    OpKind::Minimum => tensor::minimum(get(0)?, get(1)?)?,
+                    OpKind::Neg => tensor::neg(get(0)?),
+                    OpKind::Relu => tensor::relu(get(0)?),
+                    OpKind::Gelu => tensor::gelu(get(0)?),
+                    OpKind::Tanh => tensor::tanh(get(0)?),
+                    OpKind::Sigmoid => tensor::sigmoid(get(0)?),
+                    OpKind::Exp => tensor::exp(get(0)?),
+                    OpKind::Log => tensor::log(get(0)?),
+                    OpKind::Sqrt => tensor::sqrt(get(0)?),
+                    OpKind::Abs => tensor::abs(get(0)?),
+                    OpKind::MatMul => tensor::matmul(get(0)?, get(1)?)?,
+                    OpKind::Transpose => tensor::transpose(get(0)?)?,
+                    OpKind::Reshape(spec) => {
+                        let t = get(0)?;
+                        let shape = tensor::reshape_infer(t.numel(), spec)?;
+                        t.reshape(shape)
+                    }
+                    OpKind::Permute(perm) => tensor::permute(get(0)?, perm)?,
+                    OpKind::Softmax => tensor::softmax(get(0)?)?,
+                    OpKind::Sum(ax) => tensor::sum(get(0)?, *ax)?,
+                    OpKind::Mean(ax) => tensor::mean(get(0)?, *ax)?,
+                    OpKind::Max(ax) => tensor::max_reduce(get(0)?, *ax)?,
+                    OpKind::Min(ax) => tensor::min_reduce(get(0)?, *ax)?,
+                    OpKind::LayerNorm => tensor::layernorm(get(0)?, get(1)?, get(2)?, 1e-5)?,
+                    OpKind::Embedding => tensor::embedding(get(0)?, get(1)?)?,
+                    OpKind::CrossEntropy => tensor::cross_entropy(get(0)?, get(1)?)?,
+                };
+                on_node(id, &r);
+                env[id] = Some(r);
+            }
+        }
+    }
+    g.outputs
+        .iter()
+        .map(|&o| env[o].clone().ok_or_else(|| format!("output node {} unevaluated", o)))
+        .collect()
+}
+
+/// Plain execution without tracing.
+pub fn execute(g: &Graph, inputs: &[Rc<Tensor>]) -> Result<Vec<Tensor>, String> {
+    execute_traced(g, inputs, |_, _| {})
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Graph;
+
+    #[test]
+    fn executes_mlp_block() {
+        let mut g = Graph::new("g");
+        let x = g.placeholder("x", &[2, 3]);
+        let w = g.placeholder("w", &[3, 4]);
+        let m = g.add_op(OpKind::MatMul, vec![x, w]).unwrap();
+        let r = g.add_op(OpKind::Relu, vec![m]).unwrap();
+        let s = g.add_op(OpKind::Sum(None), vec![r]).unwrap();
+        g.set_outputs(vec![s]);
+        let x_t = Rc::new(Tensor::ones(&[2, 3]));
+        let w_t = Rc::new(Tensor::ones(&[3, 4]));
+        let out = execute(&g, &[x_t, w_t]).unwrap();
+        assert_eq!(out[0].item(), 24.0);
+    }
+
+    #[test]
+    fn const_nodes() {
+        let mut g = Graph::new("g");
+        let x = g.placeholder("x", &[2]);
+        let c = g.const_scalar(2.0);
+        let ct = g.const_tensor(Tensor::new(vec![2], vec![10.0, 20.0]));
+        let m = g.add_op(OpKind::Mul, vec![x, c]).unwrap();
+        let a = g.add_op(OpKind::Add, vec![m, ct]).unwrap();
+        g.set_outputs(vec![a]);
+        let out = execute(&g, &[Rc::new(Tensor::new(vec![2], vec![1.0, 2.0]))]).unwrap();
+        assert_eq!(out[0].data(), &[12.0, 24.0]);
+    }
+
+    #[test]
+    fn input_shape_checked() {
+        let mut g = Graph::new("g");
+        let x = g.placeholder("x", &[2, 3]);
+        g.set_outputs(vec![x]);
+        assert!(execute(&g, &[Rc::new(Tensor::ones(&[3, 2]))]).is_err());
+        assert!(execute(&g, &[]).is_err());
+    }
+
+    #[test]
+    fn traced_callback_order() {
+        let mut g = Graph::new("g");
+        let x = g.placeholder("x", &[2]);
+        let a = g.add_op(OpKind::Relu, vec![x]).unwrap();
+        let b = g.add_op(OpKind::Exp, vec![a]).unwrap();
+        g.set_outputs(vec![b]);
+        let mut seen = Vec::new();
+        execute_traced(&g, &[Rc::new(Tensor::zeros(&[2]))], |id, _| seen.push(id)).unwrap();
+        assert_eq!(seen, vec![a, b]);
+    }
+}

@@ -1,0 +1,98 @@
+//! Graph backends: the eager reference executor and the XLA/PJRT backend.
+//!
+//! `compile_graph` is dynamo's exit point: it turns a captured [`Graph`]
+//! into a [`CompiledGraphFn`] callable installed into the VM globals.
+
+pub mod eager;
+pub mod xla;
+
+use std::rc::Rc;
+
+use crate::graph::{CompiledGraphFn, Graph};
+use crate::runtime::Runtime;
+
+/// Which backend compiles captured graphs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Node-by-node CPU reference execution.
+    Eager,
+    /// Lower to HLO text, compile + run via PJRT (fused kernels dispatched
+    /// to AOT Pallas artifacts when shapes match).
+    Xla,
+}
+
+impl BackendKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::Eager => "eager",
+            BackendKind::Xla => "xla",
+        }
+    }
+}
+
+/// Compile a captured graph with the chosen backend.
+///
+/// The XLA backend needs a [`Runtime`]; if compilation fails (unsupported
+/// op, no runtime) it degrades to eager — mirroring how torch.compile
+/// backends fall back — and records the reason in the returned name.
+pub fn compile_graph(
+    name: &str,
+    graph: Rc<Graph>,
+    kind: BackendKind,
+    runtime: Option<Rc<Runtime>>,
+) -> CompiledGraphFn {
+    if kind == BackendKind::Xla {
+        if let Some(rt) = runtime {
+            match xla::compile(name, &graph, &rt) {
+                Ok(f) => return f,
+                Err(e) => {
+                    // Degrade to eager; callers can see backend_name.
+                    let g = Rc::clone(&graph);
+                    return CompiledGraphFn {
+                        name: name.to_string(),
+                        graph: g,
+                        backend_name: format!("eager (xla fallback: {})", e),
+                        executor: Box::new(move |inputs| eager::execute(&graph, inputs)),
+                        calls: std::cell::Cell::new(0),
+                    };
+                }
+            }
+        }
+    }
+    let g = Rc::clone(&graph);
+    CompiledGraphFn {
+        name: name.to_string(),
+        graph,
+        backend_name: "eager".into(),
+        executor: Box::new(move |inputs| eager::execute(&g, inputs)),
+        calls: std::cell::Cell::new(0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::OpKind;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn eager_compile_and_call() {
+        let mut g = Graph::new("__compiled_fn_0");
+        let x = g.placeholder("x", &[2]);
+        let r = g.add_op(OpKind::Relu, vec![x]).unwrap();
+        g.set_outputs(vec![r]);
+        let f = compile_graph("__compiled_fn_0", Rc::new(g), BackendKind::Eager, None);
+        let out = f.call(&[Rc::new(Tensor::new(vec![2], vec![-1.0, 2.0]))]).unwrap();
+        assert_eq!(out[0].data(), &[0.0, 2.0]);
+        assert_eq!(f.calls.get(), 1);
+    }
+
+    #[test]
+    fn xla_without_runtime_degrades_to_eager() {
+        let mut g = Graph::new("g");
+        let x = g.placeholder("x", &[2]);
+        g.set_outputs(vec![x]);
+        let f = compile_graph("g", Rc::new(g), BackendKind::Xla, None);
+        assert!(f.backend_name.starts_with("eager"));
+    }
+}

@@ -1,0 +1,621 @@
+//! XLA backend: lowers a captured [`Graph`] to HLO **text**, compiles it on
+//! the PJRT CPU client via [`Runtime`], and wraps execution in a
+//! [`CompiledGraphFn`]. This is the "backend generates binary executables"
+//! half of the paper's compiler, made real.
+//!
+//! The emitted dialect matches what `xla_extension` 0.5.1's HLO text parser
+//! accepts (validated by `runtime::tests` and the eager-vs-xla cross-check
+//! below).
+
+use std::fmt::Write as _;
+use std::rc::Rc;
+
+use crate::graph::{CompiledGraphFn, Graph, NodeKind, OpKind};
+use crate::runtime::Runtime;
+use crate::tensor::Tensor;
+
+/// Compile a graph via HLO text + PJRT.
+pub fn compile(name: &str, graph: &Rc<Graph>, rt: &Rc<Runtime>) -> Result<CompiledGraphFn, String> {
+    let hlo = emit_hlo(graph)?;
+    let exe = rt.compile_hlo_text(&format!("graph:{}", name), &hlo, graph.outputs.len())?;
+    let rt2 = Rc::clone(rt);
+    let g2 = Rc::clone(graph);
+    Ok(CompiledGraphFn {
+        name: name.to_string(),
+        graph: Rc::clone(graph),
+        backend_name: "xla".into(),
+        executor: Box::new(move |inputs| {
+            let refs: Vec<&Tensor> = inputs.iter().map(|t| &**t).collect();
+            let _ = &g2;
+            rt2.execute(&exe, &refs)
+        }),
+        calls: std::cell::Cell::new(0),
+    })
+}
+
+fn f32ty(shape: &[usize]) -> String {
+    if shape.is_empty() {
+        "f32[]".into()
+    } else {
+        format!("f32[{}]", shape.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(","))
+    }
+}
+
+fn dims_attr(dims: &[usize]) -> String {
+    format!("{{{}}}", dims.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(","))
+}
+
+/// Recursive braces for tensor constants.
+fn const_braces(shape: &[usize], data: &[f32]) -> String {
+    if shape.is_empty() {
+        return format!("{}", data[0]);
+    }
+    let n = shape[0];
+    let inner: usize = shape[1..].iter().product::<usize>().max(1);
+    let parts: Vec<String> = (0..n).map(|i| const_braces(&shape[1..], &data[i * inner..(i + 1) * inner])).collect();
+    format!("{{{}}}", parts.join(", "))
+}
+
+struct Emitter {
+    body: String,
+    /// Scoped reduce computations used (emitted before ENTRY).
+    used_add: bool,
+    used_max: bool,
+    used_min: bool,
+    tmp: usize,
+}
+
+impl Emitter {
+    fn fresh(&mut self, base: &str) -> String {
+        self.tmp += 1;
+        format!("{}_t{}", base, self.tmp)
+    }
+
+    fn line(&mut self, s: &str) {
+        self.body.push_str("  ");
+        self.body.push_str(s);
+        self.body.push('\n');
+    }
+
+    /// Broadcast `src` (shape `from`) to shape `to` (numpy semantics).
+    fn broadcast_to(&mut self, src: &str, from: &[usize], to: &[usize]) -> String {
+        if from == to {
+            return src.to_string();
+        }
+        let offset = to.len() - from.len();
+        // Keep dims that already match; squeeze size-1 dims that must grow.
+        let mut kept_dims: Vec<usize> = Vec::new(); // positions in `to`
+        let mut kept_sizes: Vec<usize> = Vec::new();
+        for (i, &s) in from.iter().enumerate() {
+            let tpos = i + offset;
+            if s == to[tpos] {
+                kept_dims.push(tpos);
+                kept_sizes.push(s);
+            } else {
+                assert_eq!(s, 1, "unbroadcastable {:?} -> {:?}", from, to);
+            }
+        }
+        let mut cur = src.to_string();
+        if kept_sizes != from {
+            let r = self.fresh(src);
+            self.line(&format!("{} = {} reshape({})", r, f32ty(&kept_sizes), cur));
+            cur = r;
+        }
+        let b = self.fresh(src);
+        self.line(&format!("{} = {} broadcast({}), dimensions={}", b, f32ty(to), cur, dims_attr(&kept_dims)));
+        b
+    }
+
+    /// Broadcast with an explicit dims mapping (`from[i] == to[kept[i]]`) —
+    /// used to re-expand reduction results back over the reduced axis.
+    fn broadcast_dims(&mut self, src: &str, to: &[usize], kept: &[usize]) -> String {
+        let b = self.fresh(src);
+        self.line(&format!("{} = {} broadcast({}), dimensions={}", b, f32ty(to), src, dims_attr(kept)));
+        b
+    }
+
+    /// Scalar constant broadcast to a shape.
+    fn scalar(&mut self, v: f32, shape: &[usize]) -> String {
+        let c = self.fresh("c");
+        self.line(&format!("{} = f32[] constant({})", c, v));
+        if shape.is_empty() {
+            c
+        } else {
+            self.broadcast_to(&c, &[], shape)
+        }
+    }
+
+    /// Reduce `src` over `dims` with a named reduction, producing `out_shape`.
+    fn reduce(&mut self, src: &str, src_shape: &[usize], dims: &[usize], kind: &str, out_shape: &[usize]) -> String {
+        let (comp, init) = match kind {
+            "add" => {
+                self.used_add = true;
+                ("add_f32", "0")
+            }
+            "max" => {
+                self.used_max = true;
+                ("max_f32", "-inf")
+            }
+            "min" => {
+                self.used_min = true;
+                ("min_f32", "inf")
+            }
+            _ => unreachable!(),
+        };
+        let z = self.fresh("z");
+        self.line(&format!("{} = f32[] constant({})", z, init));
+        let r = self.fresh(src);
+        let _ = src_shape;
+        self.line(&format!(
+            "{} = {} reduce({}, {}), dimensions={}, to_apply={}",
+            r,
+            f32ty(out_shape),
+            src,
+            z,
+            dims_attr(dims),
+            comp
+        ));
+        r
+    }
+}
+
+/// Emit a whole HLO module for the graph.
+pub fn emit_hlo(g: &Graph) -> Result<String, String> {
+    let mut e = Emitter { body: String::new(), used_add: false, used_max: false, used_min: false, tmp: 0 };
+    let mut names: Vec<String> = vec![String::new(); g.nodes.len()];
+
+    // Parameters first, in graph-input order.
+    for (pi, &id) in g.inputs.iter().enumerate() {
+        let n = format!("p{}", pi);
+        e.line(&format!("{} = {} parameter({})", n, f32ty(&g.nodes[id].shape), pi));
+        names[id] = n;
+    }
+
+    for (id, node) in g.nodes.iter().enumerate() {
+        let out_shape = node.shape.clone();
+        match &node.kind {
+            NodeKind::Placeholder { .. } => {} // already a parameter
+            NodeKind::ConstScalar(v) => {
+                let n = format!("v{}", id);
+                e.line(&format!("{} = f32[] constant({})", n, *v as f32));
+                names[id] = n;
+            }
+            NodeKind::ConstTensor(t) => {
+                let n = format!("v{}", id);
+                e.line(&format!("{} = {} constant({})", n, f32ty(t.shape()), const_braces(t.shape(), t.data())));
+                names[id] = n;
+            }
+            NodeKind::Op(op, args) => {
+                let arg_name = |i: usize| names[args[i]].clone();
+                let arg_shape = |i: usize| g.nodes[args[i]].shape.clone();
+                let n = format!("v{}", id);
+                match op {
+                    OpKind::Add | OpKind::Sub | OpKind::Mul | OpKind::Div | OpKind::Pow | OpKind::Maximum | OpKind::Minimum => {
+                        let hop = match op {
+                            OpKind::Add => "add",
+                            OpKind::Sub => "subtract",
+                            OpKind::Mul => "multiply",
+                            OpKind::Div => "divide",
+                            OpKind::Pow => "power",
+                            OpKind::Maximum => "maximum",
+                            _ => "minimum",
+                        };
+                        let a = e.broadcast_to(&arg_name(0), &arg_shape(0), &out_shape);
+                        let b = e.broadcast_to(&arg_name(1), &arg_shape(1), &out_shape);
+                        e.line(&format!("{} = {} {}({}, {})", n, f32ty(&out_shape), hop, a, b));
+                    }
+                    OpKind::Neg | OpKind::Exp | OpKind::Log | OpKind::Sqrt | OpKind::Abs | OpKind::Tanh | OpKind::Sigmoid => {
+                        let hop = match op {
+                            OpKind::Neg => "negate",
+                            OpKind::Exp => "exponential",
+                            OpKind::Log => "log",
+                            OpKind::Sqrt => "sqrt",
+                            OpKind::Abs => "abs",
+                            OpKind::Tanh => "tanh",
+                            _ => "logistic",
+                        };
+                        e.line(&format!("{} = {} {}({})", n, f32ty(&out_shape), hop, arg_name(0)));
+                    }
+                    OpKind::Relu => {
+                        let zero = e.scalar(0.0, &out_shape);
+                        e.line(&format!("{} = {} maximum({}, {})", n, f32ty(&out_shape), arg_name(0), zero));
+                    }
+                    OpKind::Gelu => {
+                        // 0.5*x*(1+tanh(sqrt(2/pi)*(x+0.044715*x^3)))
+                        let x = arg_name(0);
+                        let x2 = e.fresh("g");
+                        e.line(&format!("{} = {} multiply({}, {})", x2, f32ty(&out_shape), x, x));
+                        let x3 = e.fresh("g");
+                        e.line(&format!("{} = {} multiply({}, {})", x3, f32ty(&out_shape), x2, x));
+                        let c1 = e.scalar(0.044715, &out_shape);
+                        let t1 = e.fresh("g");
+                        e.line(&format!("{} = {} multiply({}, {})", t1, f32ty(&out_shape), c1, x3));
+                        let t2 = e.fresh("g");
+                        e.line(&format!("{} = {} add({}, {})", t2, f32ty(&out_shape), x, t1));
+                        let c2 = e.scalar((2.0f32 / std::f32::consts::PI).sqrt(), &out_shape);
+                        let t3 = e.fresh("g");
+                        e.line(&format!("{} = {} multiply({}, {})", t3, f32ty(&out_shape), c2, t2));
+                        let th = e.fresh("g");
+                        e.line(&format!("{} = {} tanh({})", th, f32ty(&out_shape), t3));
+                        let one = e.scalar(1.0, &out_shape);
+                        let t4 = e.fresh("g");
+                        e.line(&format!("{} = {} add({}, {})", t4, f32ty(&out_shape), one, th));
+                        let half = e.scalar(0.5, &out_shape);
+                        let t5 = e.fresh("g");
+                        e.line(&format!("{} = {} multiply({}, {})", t5, f32ty(&out_shape), half, x));
+                        e.line(&format!("{} = {} multiply({}, {})", n, f32ty(&out_shape), t5, t4));
+                    }
+                    OpKind::MatMul => {
+                        let (sa, sb) = (arg_shape(0), arg_shape(1));
+                        if sa.len() == 2 && sb.len() == 2 {
+                            e.line(&format!(
+                                "{} = {} dot({}, {}), lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}",
+                                n,
+                                f32ty(&out_shape),
+                                arg_name(0),
+                                arg_name(1)
+                            ));
+                        } else if sa.len() == sb.len() && sa.len() >= 3 {
+                            let batch: Vec<usize> = (0..sa.len() - 2).collect();
+                            e.line(&format!(
+                                "{} = {} dot({}, {}), lhs_batch_dims={}, rhs_batch_dims={}, lhs_contracting_dims={{{}}}, rhs_contracting_dims={{{}}}",
+                                n,
+                                f32ty(&out_shape),
+                                arg_name(0),
+                                arg_name(1),
+                                dims_attr(&batch),
+                                dims_attr(&batch),
+                                sa.len() - 1,
+                                sb.len() - 2
+                            ));
+                        } else if sa.len() > 2 && sb.len() == 2 {
+                            // [B.., M, K] @ [K, N]: flatten batch, dot, unflatten.
+                            let m: usize = sa[..sa.len() - 1].iter().product();
+                            let k = sa[sa.len() - 1];
+                            let flat = e.fresh("mm");
+                            e.line(&format!("{} = {} reshape({})", flat, f32ty(&[m, k]), arg_name(0)));
+                            let d = e.fresh("mm");
+                            e.line(&format!(
+                                "{} = {} dot({}, {}), lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}",
+                                d,
+                                f32ty(&[m, sb[1]]),
+                                flat,
+                                arg_name(1)
+                            ));
+                            e.line(&format!("{} = {} reshape({})", n, f32ty(&out_shape), d));
+                        } else {
+                            return Err(format!("xla: unsupported matmul {:?} @ {:?}", sa, sb));
+                        }
+                    }
+                    OpKind::Transpose => {
+                        let r = arg_shape(0).len();
+                        let mut perm: Vec<usize> = (0..r).collect();
+                        perm.swap(r - 2, r - 1);
+                        e.line(&format!("{} = {} transpose({}), dimensions={}", n, f32ty(&out_shape), arg_name(0), dims_attr(&perm)));
+                    }
+                    OpKind::Permute(perm) => {
+                        e.line(&format!("{} = {} transpose({}), dimensions={}", n, f32ty(&out_shape), arg_name(0), dims_attr(perm)));
+                    }
+                    OpKind::Reshape(_) => {
+                        e.line(&format!("{} = {} reshape({})", n, f32ty(&out_shape), arg_name(0)));
+                    }
+                    OpKind::Sum(ax) | OpKind::Max(ax) | OpKind::Min(ax) | OpKind::Mean(ax) => {
+                        let kind = match op {
+                            OpKind::Sum(_) | OpKind::Mean(_) => "add",
+                            OpKind::Max(_) => "max",
+                            _ => "min",
+                        };
+                        let in_shape = arg_shape(0);
+                        let dims: Vec<usize> = match ax {
+                            Some(a) => vec![*a],
+                            None => (0..in_shape.len()).collect(),
+                        };
+                        let r = e.reduce(&arg_name(0), &in_shape, &dims, kind, &out_shape);
+                        if matches!(op, OpKind::Mean(_)) {
+                            let count: usize = dims.iter().map(|&d| in_shape[d]).product();
+                            let c = e.scalar(count as f32, &out_shape);
+                            e.line(&format!("{} = {} divide({}, {})", n, f32ty(&out_shape), r, c));
+                        } else {
+                            e.line(&format!("{} = {} copy({})", n, f32ty(&out_shape), r));
+                        }
+                    }
+                    OpKind::Softmax => {
+                        let shape = arg_shape(0);
+                        let last = shape.len() - 1;
+                        let mut red_shape = shape.clone();
+                        red_shape.pop();
+                        let kept: Vec<usize> = (0..last).collect();
+                        let m = e.reduce(&arg_name(0), &shape, &[last], "max", &red_shape);
+                        let mb = e.broadcast_dims(&m, &shape, &kept);
+                        let sh = e.fresh("sm");
+                        e.line(&format!("{} = {} subtract({}, {})", sh, f32ty(&shape), arg_name(0), mb));
+                        let ex = e.fresh("sm");
+                        e.line(&format!("{} = {} exponential({})", ex, f32ty(&shape), sh));
+                        let s = e.reduce(&ex, &shape, &[last], "add", &red_shape);
+                        let sb = e.broadcast_dims(&s, &shape, &kept);
+                        e.line(&format!("{} = {} divide({}, {})", n, f32ty(&shape), ex, sb));
+                    }
+                    OpKind::LayerNorm => {
+                        let shape = arg_shape(0);
+                        let last = shape.len() - 1;
+                        let d = shape[last];
+                        let mut red_shape = shape.clone();
+                        red_shape.pop();
+                        let kept: Vec<usize> = (0..last).collect();
+                        let s = e.reduce(&arg_name(0), &shape, &[last], "add", &red_shape);
+                        let cnt = e.scalar(d as f32, &red_shape);
+                        let mean = e.fresh("ln");
+                        e.line(&format!("{} = {} divide({}, {})", mean, f32ty(&red_shape), s, cnt));
+                        let mb = e.broadcast_dims(&mean, &shape, &kept);
+                        let cen = e.fresh("ln");
+                        e.line(&format!("{} = {} subtract({}, {})", cen, f32ty(&shape), arg_name(0), mb));
+                        let sq = e.fresh("ln");
+                        e.line(&format!("{} = {} multiply({}, {})", sq, f32ty(&shape), cen, cen));
+                        let vs = e.reduce(&sq, &shape, &[last], "add", &red_shape);
+                        let cnt2 = e.scalar(d as f32, &red_shape);
+                        let var = e.fresh("ln");
+                        e.line(&format!("{} = {} divide({}, {})", var, f32ty(&red_shape), vs, cnt2));
+                        let eps = e.scalar(1e-5, &red_shape);
+                        let ve = e.fresh("ln");
+                        e.line(&format!("{} = {} add({}, {})", ve, f32ty(&red_shape), var, eps));
+                        let sd = e.fresh("ln");
+                        e.line(&format!("{} = {} sqrt({})", sd, f32ty(&red_shape), ve));
+                        let sdb = e.broadcast_dims(&sd, &shape, &kept);
+                        let norm = e.fresh("ln");
+                        e.line(&format!("{} = {} divide({}, {})", norm, f32ty(&shape), cen, sdb));
+                        let gb = e.broadcast_to(&arg_name(1), &arg_shape(1), &shape);
+                        let scaled = e.fresh("ln");
+                        e.line(&format!("{} = {} multiply({}, {})", scaled, f32ty(&shape), norm, gb));
+                        let bb = e.broadcast_to(&arg_name(2), &arg_shape(2), &shape);
+                        e.line(&format!("{} = {} add({}, {})", n, f32ty(&shape), scaled, bb));
+                    }
+                    OpKind::Embedding => {
+                        // table [V, D], ids [..I] (f32 -> s32), gather.
+                        let tshape = arg_shape(0);
+                        let ishape = arg_shape(1);
+                        let d = tshape[1];
+                        let ids32 = e.fresh("emb");
+                        let ity = if ishape.is_empty() {
+                            "s32[]".to_string()
+                        } else {
+                            format!("s32[{}]", ishape.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(","))
+                        };
+                        e.line(&format!("{} = {} convert({})", ids32, ity, arg_name(1)));
+                        let offset_dim = ishape.len(); // D lands after all index dims
+                        e.line(&format!(
+                            "{} = {} gather({}, {}), offset_dims={{{}}}, collapsed_slice_dims={{0}}, start_index_map={{0}}, index_vector_dim={}, slice_sizes={{1,{}}}",
+                            n,
+                            f32ty(&out_shape),
+                            arg_name(0),
+                            ids32,
+                            offset_dim,
+                            ishape.len(),
+                            d
+                        ));
+                    }
+                    OpKind::CrossEntropy => {
+                        // logits [..,V], targets [..]: mean over rows of
+                        // (logsumexp(l) - l[target]) via one-hot.
+                        let lshape = arg_shape(0);
+                        let v = *lshape.last().unwrap();
+                        let rows: usize = lshape[..lshape.len() - 1].iter().product::<usize>().max(1);
+                        let l2 = e.fresh("ce");
+                        e.line(&format!("{} = {} reshape({})", l2, f32ty(&[rows, v]), arg_name(0)));
+                        let t2 = e.fresh("ce");
+                        e.line(&format!("{} = {} reshape({})", t2, f32ty(&[rows]), arg_name(1)));
+                        // logsumexp
+                        let m = e.reduce(&l2, &[rows, v], &[1], "max", &[rows]);
+                        let mb = e.broadcast_dims(&m, &[rows, v], &[0]);
+                        let sh = e.fresh("ce");
+                        e.line(&format!("{} = {} subtract({}, {})", sh, f32ty(&[rows, v]), l2, mb));
+                        let ex = e.fresh("ce");
+                        e.line(&format!("{} = {} exponential({})", ex, f32ty(&[rows, v]), sh));
+                        let se = e.reduce(&ex, &[rows, v], &[1], "add", &[rows]);
+                        // (remaining reductions below reuse row-major one-hot picks)
+                        let lg = e.fresh("ce");
+                        e.line(&format!("{} = {} log({})", lg, f32ty(&[rows]), se));
+                        let lse = e.fresh("ce");
+                        e.line(&format!("{} = {} add({}, {})", lse, f32ty(&[rows]), m, lg));
+                        // one-hot pick of target logit
+                        let t32 = e.fresh("ce");
+                        e.line(&format!("{} = s32[{}] convert({})", t32, rows, t2));
+                        let tb = e.fresh("ce");
+                        e.line(&format!("{} = s32[{},{}] broadcast({}), dimensions={{0}}", tb, rows, v, t32));
+                        let io = e.fresh("ce");
+                        e.line(&format!("{} = s32[{},{}] iota(), iota_dimension=1", io, rows, v));
+                        let eq = e.fresh("ce");
+                        e.line(&format!("{} = pred[{},{}] compare({}, {}), direction=EQ", eq, rows, v, io, tb));
+                        let oh = e.fresh("ce");
+                        e.line(&format!("{} = {} convert({})", oh, f32ty(&[rows, v]), eq));
+                        let pick = e.fresh("ce");
+                        e.line(&format!("{} = {} multiply({}, {})", pick, f32ty(&[rows, v]), l2, oh));
+                        let tl = e.reduce(&pick, &[rows, v], &[1], "add", &[rows]);
+                        let diff = e.fresh("ce");
+                        e.line(&format!("{} = {} subtract({}, {})", diff, f32ty(&[rows]), lse, tl));
+                        let tot = e.reduce(&diff, &[rows], &[0], "add", &[]);
+                        let cnt = e.scalar(rows as f32, &[]);
+                        e.line(&format!("{} = f32[] divide({}, {})", n, tot, cnt));
+                    }
+                }
+                names[id] = n;
+            }
+        }
+    }
+
+    // ROOT tuple.
+    let out_types: Vec<String> = g.outputs.iter().map(|&o| f32ty(&g.nodes[o].shape)).collect();
+    let out_names: Vec<String> = g.outputs.iter().map(|&o| names[o].clone()).collect();
+    e.line(&format!("ROOT out = ({}) tuple({})", out_types.join(", "), out_names.join(", ")));
+
+    let mut module = String::new();
+    let _ = writeln!(module, "HloModule {}\n", sanitize(&g.name));
+    if e.used_add {
+        module.push_str("add_f32 {\n  lhs = f32[] parameter(0)\n  rhs = f32[] parameter(1)\n  ROOT r = f32[] add(lhs, rhs)\n}\n\n");
+    }
+    if e.used_max {
+        module.push_str("max_f32 {\n  lhs = f32[] parameter(0)\n  rhs = f32[] parameter(1)\n  ROOT r = f32[] maximum(lhs, rhs)\n}\n\n");
+    }
+    if e.used_min {
+        module.push_str("min_f32 {\n  lhs = f32[] parameter(0)\n  rhs = f32[] parameter(1)\n  ROOT r = f32[] minimum(lhs, rhs)\n}\n\n");
+    }
+    module.push_str("ENTRY main {\n");
+    module.push_str(&e.body);
+    module.push_str("}\n");
+    Ok(module)
+}
+
+fn sanitize(name: &str) -> String {
+    let s: String = name.chars().map(|c| if c.is_ascii_alphanumeric() || c == '_' { c } else { '_' }).collect();
+    if s.is_empty() {
+        "graph".into()
+    } else {
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::eager;
+    use crate::graph::Graph;
+    use crate::tensor::Rng;
+
+    fn cross_check(g: &Graph, inputs: Vec<Tensor>, tol: f32) {
+        let rt = Runtime::cpu().expect("pjrt");
+        let g = Rc::new(g.clone());
+        let f = compile("test", &g, &rt).unwrap_or_else(|e| panic!("xla compile failed: {}\n{}", e, emit_hlo(&g).unwrap()));
+        let rcs: Vec<Rc<Tensor>> = inputs.into_iter().map(Rc::new).collect();
+        let got = f.call(&rcs).expect("xla exec");
+        let want = eager::execute(&g, &rcs).expect("eager exec");
+        assert_eq!(got.len(), want.len());
+        for (a, b) in got.iter().zip(want.iter()) {
+            assert!(a.allclose(b, tol), "xla {:?} vs eager {:?}", a, b);
+        }
+    }
+
+    #[test]
+    fn elementwise_with_broadcast() {
+        let mut g = Graph::new("ew");
+        let x = g.placeholder("x", &[2, 3]);
+        let b = g.placeholder("b", &[3]);
+        let c = g.const_scalar(2.0);
+        let s = g.add_op(OpKind::Add, vec![x, b]).unwrap();
+        let m = g.add_op(OpKind::Mul, vec![s, c]).unwrap();
+        let r = g.add_op(OpKind::Relu, vec![m]).unwrap();
+        g.set_outputs(vec![r]);
+        let mut rng = Rng::new(1);
+        cross_check(&g, vec![Tensor::randn(&[2, 3], &mut rng), Tensor::randn(&[3], &mut rng)], 1e-5);
+    }
+
+    #[test]
+    fn matmul_variants() {
+        let mut rng = Rng::new(2);
+        // 2D
+        let mut g = Graph::new("mm2");
+        let a = g.placeholder("a", &[4, 5]);
+        let b = g.placeholder("b", &[5, 3]);
+        let m = g.add_op(OpKind::MatMul, vec![a, b]).unwrap();
+        g.set_outputs(vec![m]);
+        cross_check(&g, vec![Tensor::randn(&[4, 5], &mut rng), Tensor::randn(&[5, 3], &mut rng)], 1e-4);
+        // batched
+        let mut g = Graph::new("mm3");
+        let a = g.placeholder("a", &[2, 4, 5]);
+        let b = g.placeholder("b", &[2, 5, 3]);
+        let m = g.add_op(OpKind::MatMul, vec![a, b]).unwrap();
+        g.set_outputs(vec![m]);
+        cross_check(&g, vec![Tensor::randn(&[2, 4, 5], &mut rng), Tensor::randn(&[2, 5, 3], &mut rng)], 1e-4);
+        // batched @ unbatched
+        let mut g = Graph::new("mmb");
+        let a = g.placeholder("a", &[2, 4, 5]);
+        let b = g.placeholder("b", &[5, 3]);
+        let m = g.add_op(OpKind::MatMul, vec![a, b]).unwrap();
+        g.set_outputs(vec![m]);
+        cross_check(&g, vec![Tensor::randn(&[2, 4, 5], &mut rng), Tensor::randn(&[5, 3], &mut rng)], 1e-4);
+    }
+
+    #[test]
+    fn reductions_and_softmax() {
+        let mut rng = Rng::new(3);
+        let mut g = Graph::new("red");
+        let x = g.placeholder("x", &[3, 4]);
+        let s0 = g.add_op(OpKind::Sum(Some(0)), vec![x]).unwrap();
+        let s1 = g.add_op(OpKind::Mean(Some(1)), vec![x]).unwrap();
+        let sa = g.add_op(OpKind::Sum(None), vec![x]).unwrap();
+        let mx = g.add_op(OpKind::Max(None), vec![x]).unwrap();
+        let sm = g.add_op(OpKind::Softmax, vec![x]).unwrap();
+        g.set_outputs(vec![s0, s1, sa, mx, sm]);
+        cross_check(&g, vec![Tensor::randn(&[3, 4], &mut rng)], 1e-5);
+    }
+
+    #[test]
+    fn unary_chain_and_gelu() {
+        let mut rng = Rng::new(4);
+        let mut g = Graph::new("un");
+        let x = g.placeholder("x", &[8]);
+        let a = g.add_op(OpKind::Tanh, vec![x]).unwrap();
+        let b = g.add_op(OpKind::Gelu, vec![a]).unwrap();
+        let c = g.add_op(OpKind::Sigmoid, vec![b]).unwrap();
+        let d = g.add_op(OpKind::Neg, vec![c]).unwrap();
+        let f = g.add_op(OpKind::Abs, vec![d]).unwrap();
+        g.set_outputs(vec![f]);
+        cross_check(&g, vec![Tensor::randn(&[8], &mut rng)], 1e-5);
+    }
+
+    #[test]
+    fn layernorm_matches_eager() {
+        let mut rng = Rng::new(5);
+        let mut g = Graph::new("ln");
+        let x = g.placeholder("x", &[4, 16]);
+        let gm = g.placeholder("g", &[16]);
+        let bt = g.placeholder("b", &[16]);
+        let y = g.add_op(OpKind::LayerNorm, vec![x, gm, bt]).unwrap();
+        g.set_outputs(vec![y]);
+        cross_check(
+            &g,
+            vec![Tensor::randn(&[4, 16], &mut rng), Tensor::randn(&[16], &mut rng), Tensor::randn(&[16], &mut rng)],
+            1e-4,
+        );
+    }
+
+    #[test]
+    fn embedding_and_cross_entropy() {
+        let mut rng = Rng::new(6);
+        let mut g = Graph::new("emb");
+        let table = g.placeholder("table", &[10, 4]);
+        let ids = g.placeholder("ids", &[2, 3]);
+        let emb = g.add_op(OpKind::Embedding, vec![table, ids]).unwrap();
+        g.set_outputs(vec![emb]);
+        let ids_t = Tensor::new(vec![2, 3], vec![0.0, 3.0, 9.0, 1.0, 1.0, 2.0]);
+        cross_check(&g, vec![Tensor::randn(&[10, 4], &mut rng), ids_t], 1e-5);
+
+        let mut g = Graph::new("ce");
+        let logits = g.placeholder("logits", &[6, 10]);
+        let tgt = g.placeholder("tgt", &[6]);
+        let ce = g.add_op(OpKind::CrossEntropy, vec![logits, tgt]).unwrap();
+        g.set_outputs(vec![ce]);
+        let tgt_t = Tensor::new(vec![6], vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+        cross_check(&g, vec![Tensor::randn(&[6, 10], &mut rng), tgt_t], 1e-4);
+    }
+
+    #[test]
+    fn transpose_permute_reshape() {
+        let mut rng = Rng::new(7);
+        let mut g = Graph::new("tp");
+        let x = g.placeholder("x", &[2, 3, 4]);
+        let t = g.add_op(OpKind::Transpose, vec![x]).unwrap();
+        let p = g.add_op(OpKind::Permute(vec![2, 0, 1]), vec![x]).unwrap();
+        let r = g.add_op(OpKind::Reshape(vec![6, -1]), vec![x]).unwrap();
+        g.set_outputs(vec![t, p, r]);
+        cross_check(&g, vec![Tensor::randn(&[2, 3, 4], &mut rng)], 1e-6);
+    }
+
+    #[test]
+    fn const_tensor_embedded() {
+        let mut g = Graph::new("ct");
+        let x = g.placeholder("x", &[2, 2]);
+        let c = g.const_tensor(Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]));
+        let s = g.add_op(OpKind::Add, vec![x, c]).unwrap();
+        g.set_outputs(vec![s]);
+        cross_check(&g, vec![Tensor::ones(&[2, 2])], 1e-6);
+    }
+}

@@ -1,0 +1,353 @@
+//! Versioned disassembler: raw bytes → abstract instruction stream.
+//!
+//! This is the decoder depyf-rs uses (complete over all four ISA versions).
+//! The modeled baseline decompilers implement their *own* partial decoding
+//! in `decompiler::baselines` — version lock-in is their failure mode, not
+//! ours. `decode(encode(x)) == x` is property-tested.
+
+use super::tables as t;
+use super::{BinOp, CmpOp, Instr, IsaVersion, UnOp};
+
+/// Decoding failures (what a decompiler reports as "unsupported input").
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum DecodeError {
+    UnknownOpcode(u8),
+    BadJumpTarget { from_unit: usize, to_unit: usize },
+    BadCompareArg(u32),
+    Truncated,
+}
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DecodeError::UnknownOpcode(op) => write!(f, "unknown opcode {}", op),
+            DecodeError::BadJumpTarget { from_unit, to_unit } => {
+                write!(f, "jump from unit {} to non-instruction unit {}", from_unit, to_unit)
+            }
+            DecodeError::BadCompareArg(a) => write!(f, "bad COMPARE_OP arg {}", a),
+            DecodeError::Truncated => write!(f, "truncated bytecode"),
+        }
+    }
+}
+
+impl std::error::Error for DecodeError {}
+
+/// A decoded logical instruction before jump-target resolution.
+struct Decoded {
+    /// Unit offset of the first unit of this instruction's block
+    /// (including EXTENDED_ARG / PRECALL prefixes).
+    block_start: usize,
+    /// Unit offset of the opcode unit itself.
+    op_unit: usize,
+    opcode: u8,
+    arg: u32,
+}
+
+/// Decode versioned raw bytes back into the abstract stream.
+pub fn decode(raw: &[u8], version: IsaVersion) -> Result<Vec<Instr>, DecodeError> {
+    if raw.len() % 2 != 0 {
+        return Err(DecodeError::Truncated);
+    }
+    let units: Vec<(u8, u8)> = raw.chunks(2).map(|c| (c[0], c[1])).collect();
+    let v311 = version == IsaVersion::V311;
+
+    // Pass 1: gather logical instructions.
+    let mut decoded: Vec<Decoded> = Vec::new();
+    let mut i = 0usize;
+    let mut ext: u32 = 0;
+    let mut block_start: Option<usize> = None;
+    while i < units.len() {
+        let (op, argb) = units[i];
+        if v311 && op == t::CACHE {
+            // Inline cache unit (robustness: normally skipped below).
+            i += 1;
+            continue;
+        }
+        let start = *block_start.get_or_insert(i);
+        let arg = (ext << 8) | argb as u32;
+        match op {
+            t::EXTENDED_ARG => {
+                ext = arg;
+                i += 1;
+            }
+            t::RESUME if v311 => {
+                ext = 0;
+                block_start = None;
+                i += 1;
+            }
+            t::PRECALL if v311 => {
+                // Redundant arity prefix of CALL / CALL_METHOD; the block
+                // start stays where the PRECALL (or its ext args) began.
+                ext = 0;
+                i += 1;
+            }
+            _ => {
+                decoded.push(Decoded { block_start: start, op_unit: i, opcode: op, arg });
+                ext = 0;
+                block_start = None;
+                i += 1 + t::cache_slots(version, op);
+            }
+        }
+    }
+
+    // Unit offset of block start -> abstract index.
+    let mut start_to_idx = std::collections::HashMap::new();
+    for (idx, d) in decoded.iter().enumerate() {
+        start_to_idx.insert(d.block_start, idx as u32);
+    }
+    // End-of-stream is a valid jump target (e.g. FOR_ITER out of a loop that
+    // ends the function).
+    let end_unit = units.len();
+    let end_idx = decoded.len() as u32;
+
+    // Pass 2: map opcodes to abstract instructions, resolving jump targets.
+    let resolve = |d: &Decoded, target_unit: usize| -> Result<u32, DecodeError> {
+        if target_unit == end_unit {
+            return Ok(end_idx);
+        }
+        start_to_idx
+            .get(&target_unit)
+            .copied()
+            .ok_or(DecodeError::BadJumpTarget { from_unit: d.op_unit, to_unit: target_unit })
+    };
+    let jump_target_unit = |d: &Decoded, relative: bool, backward: bool| -> usize {
+        let next = d.op_unit + 1 + t::cache_slots(version, d.opcode);
+        match version {
+            IsaVersion::V38 | IsaVersion::V39 => {
+                if relative {
+                    next + (d.arg as usize) / 2
+                } else {
+                    (d.arg as usize) / 2
+                }
+            }
+            IsaVersion::V310 => {
+                if relative {
+                    next + d.arg as usize
+                } else {
+                    d.arg as usize
+                }
+            }
+            IsaVersion::V311 => {
+                if backward {
+                    next - d.arg as usize
+                } else {
+                    next + d.arg as usize
+                }
+            }
+        }
+    };
+
+    let mut out = Vec::with_capacity(decoded.len());
+    for d in &decoded {
+        let instr = match d.opcode {
+            t::POP_TOP => Instr::PopTop,
+            t::ROT_TWO => Instr::RotTwo,
+            t::ROT_THREE => Instr::RotThree,
+            t::DUP_TOP => Instr::DupTop,
+            t::NOP => Instr::Nop,
+            t::UNARY_POSITIVE => Instr::Unary(UnOp::Pos),
+            t::UNARY_NEGATIVE => Instr::Unary(UnOp::Neg),
+            t::UNARY_NOT => Instr::Unary(UnOp::Not),
+            t::BINARY_MATRIX_MULTIPLY if !v311 => Instr::Binary(BinOp::MatMul),
+            t::BINARY_POWER if !v311 => Instr::Binary(BinOp::Pow),
+            t::BINARY_MULTIPLY if !v311 => Instr::Binary(BinOp::Mul),
+            t::BINARY_MODULO if !v311 => Instr::Binary(BinOp::Mod),
+            t::BINARY_ADD if !v311 => Instr::Binary(BinOp::Add),
+            t::BINARY_SUBTRACT if !v311 => Instr::Binary(BinOp::Sub),
+            t::BINARY_FLOOR_DIVIDE if !v311 => Instr::Binary(BinOp::FloorDiv),
+            t::BINARY_TRUE_DIVIDE if !v311 => Instr::Binary(BinOp::Div),
+            t::BINARY_OP_311 if v311 => {
+                let b = match d.arg {
+                    t::NB_ADD => BinOp::Add,
+                    t::NB_SUB => BinOp::Sub,
+                    t::NB_MUL => BinOp::Mul,
+                    t::NB_TRUEDIV => BinOp::Div,
+                    t::NB_FLOORDIV => BinOp::FloorDiv,
+                    t::NB_MOD => BinOp::Mod,
+                    t::NB_POW => BinOp::Pow,
+                    t::NB_MATMUL => BinOp::MatMul,
+                    _ => return Err(DecodeError::BadCompareArg(d.arg)),
+                };
+                Instr::Binary(b)
+            }
+            t::BINARY_SUBSCR => Instr::BinarySubscr,
+            t::STORE_SUBSCR => Instr::StoreSubscr,
+            t::BUILD_SLICE => Instr::BuildSlice(d.arg),
+            t::GET_ITER => Instr::GetIter,
+            t::RETURN_VALUE => Instr::ReturnValue,
+            t::UNPACK_SEQUENCE => Instr::UnpackSequence(d.arg),
+            t::FOR_ITER => Instr::ForIter(resolve(d, jump_target_unit(d, true, false))?),
+            t::STORE_GLOBAL => Instr::StoreGlobal(d.arg),
+            t::LOAD_CONST => Instr::LoadConst(d.arg),
+            t::BUILD_TUPLE => Instr::BuildTuple(d.arg),
+            t::BUILD_LIST => Instr::BuildList(d.arg),
+            t::BUILD_MAP => Instr::BuildMap(d.arg),
+            t::LOAD_ATTR => Instr::LoadAttr(d.arg),
+            t::COMPARE_OP => {
+                if version == IsaVersion::V38 {
+                    match d.arg {
+                        t::CMP38_IN => Instr::ContainsOp(false),
+                        t::CMP38_NOT_IN => Instr::ContainsOp(true),
+                        t::CMP38_IS => Instr::IsOp(false),
+                        t::CMP38_IS_NOT => Instr::IsOp(true),
+                        a => Instr::Compare(CmpOp::from_index(a).ok_or(DecodeError::BadCompareArg(a))?),
+                    }
+                } else {
+                    Instr::Compare(CmpOp::from_index(d.arg).ok_or(DecodeError::BadCompareArg(d.arg))?)
+                }
+            }
+            t::JUMP_FORWARD => Instr::Jump(resolve(d, jump_target_unit(d, true, false))?),
+            t::JUMP_IF_FALSE_OR_POP => {
+                Instr::JumpIfFalseOrPop(resolve(d, jump_target_unit(d, !matches!(version, IsaVersion::V38 | IsaVersion::V39 | IsaVersion::V310), false))?)
+            }
+            t::JUMP_IF_TRUE_OR_POP => {
+                Instr::JumpIfTrueOrPop(resolve(d, jump_target_unit(d, !matches!(version, IsaVersion::V38 | IsaVersion::V39 | IsaVersion::V310), false))?)
+            }
+            t::JUMP_ABSOLUTE if !v311 => Instr::Jump(resolve(d, jump_target_unit(d, false, false))?),
+            t::POP_JUMP_IF_FALSE => Instr::PopJumpIfFalse(resolve(d, jump_target_unit(d, v311, false))?),
+            t::POP_JUMP_IF_TRUE => Instr::PopJumpIfTrue(resolve(d, jump_target_unit(d, v311, false))?),
+            t::JUMP_BACKWARD if v311 => Instr::Jump(resolve(d, jump_target_unit(d, true, true))?),
+            t::POP_JUMP_BACKWARD_IF_FALSE if v311 => Instr::PopJumpIfFalse(resolve(d, jump_target_unit(d, true, true))?),
+            t::POP_JUMP_BACKWARD_IF_TRUE if v311 => Instr::PopJumpIfTrue(resolve(d, jump_target_unit(d, true, true))?),
+            t::LOAD_GLOBAL => Instr::LoadGlobal(d.arg),
+            t::IS_OP if version != IsaVersion::V38 => Instr::IsOp(d.arg != 0),
+            t::CONTAINS_OP if version != IsaVersion::V38 => Instr::ContainsOp(d.arg != 0),
+            t::LOAD_FAST => Instr::LoadFast(d.arg),
+            t::STORE_FAST => Instr::StoreFast(d.arg),
+            t::RAISE_VARARGS => Instr::Raise,
+            t::CALL_FUNCTION if !v311 => Instr::Call(d.arg),
+            t::CALL_311 if v311 => Instr::Call(d.arg),
+            t::MAKE_FUNCTION => Instr::MakeFunction(d.arg),
+            t::LOAD_CLOSURE => Instr::LoadClosure(d.arg),
+            t::LOAD_DEREF => Instr::LoadDeref(d.arg),
+            t::STORE_DEREF => Instr::StoreDeref(d.arg),
+            t::LIST_APPEND => Instr::ListAppend(d.arg),
+            t::LOAD_METHOD => Instr::LoadMethod(d.arg),
+            t::CALL_METHOD => Instr::CallMethod(d.arg),
+            other => return Err(DecodeError::UnknownOpcode(other)),
+        };
+        out.push(instr);
+    }
+
+    // Jump targets currently index into `decoded`; those are already the
+    // abstract indices, so we're done.
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::encode;
+    use super::*;
+
+    fn roundtrip(instrs: Vec<Instr>) {
+        for v in IsaVersion::ALL {
+            let raw = encode(&instrs, v);
+            let back = decode(&raw, v).unwrap_or_else(|e| panic!("decode failed on {}: {}", v, e));
+            assert_eq!(back, instrs, "roundtrip mismatch on {}", v);
+        }
+    }
+
+    #[test]
+    fn roundtrip_straightline() {
+        roundtrip(vec![
+            Instr::LoadFast(0),
+            Instr::LoadConst(1),
+            Instr::Binary(BinOp::Add),
+            Instr::ReturnValue,
+        ]);
+    }
+
+    #[test]
+    fn roundtrip_branch() {
+        roundtrip(vec![
+            Instr::LoadFast(0),
+            Instr::PopJumpIfFalse(5),
+            Instr::LoadConst(0),
+            Instr::StoreFast(1),
+            Instr::Jump(7),
+            Instr::LoadConst(1),
+            Instr::StoreFast(1),
+            Instr::LoadFast(1),
+            Instr::ReturnValue,
+        ]);
+    }
+
+    #[test]
+    fn roundtrip_loop() {
+        roundtrip(vec![
+            Instr::LoadGlobal(0),
+            Instr::LoadConst(0),
+            Instr::Call(1),
+            Instr::GetIter,
+            Instr::ForIter(9),
+            Instr::StoreFast(0),
+            Instr::LoadFast(0),
+            Instr::PopTop,
+            Instr::Jump(4),
+            Instr::LoadConst(1),
+            Instr::ReturnValue,
+        ]);
+    }
+
+    #[test]
+    fn roundtrip_calls_and_methods() {
+        roundtrip(vec![
+            Instr::LoadFast(0),
+            Instr::LoadMethod(0),
+            Instr::LoadConst(0),
+            Instr::CallMethod(1),
+            Instr::LoadGlobal(1),
+            Instr::LoadFast(0),
+            Instr::Call(1),
+            Instr::Binary(BinOp::Add),
+            Instr::ReturnValue,
+        ]);
+    }
+
+    #[test]
+    fn roundtrip_wide_args() {
+        roundtrip(vec![Instr::LoadConst(70000), Instr::LoadConst(257), Instr::Binary(BinOp::Add), Instr::ReturnValue]);
+    }
+
+    #[test]
+    fn roundtrip_compare_contains_is() {
+        roundtrip(vec![
+            Instr::LoadFast(0),
+            Instr::LoadFast(1),
+            Instr::Compare(CmpOp::Le),
+            Instr::LoadFast(0),
+            Instr::LoadFast(1),
+            Instr::ContainsOp(true),
+            Instr::LoadFast(0),
+            Instr::LoadConst(0),
+            Instr::IsOp(false),
+            Instr::BuildTuple(3),
+            Instr::ReturnValue,
+        ]);
+    }
+
+    #[test]
+    fn roundtrip_jump_to_end() {
+        roundtrip(vec![
+            Instr::LoadFast(0),
+            Instr::GetIter,
+            Instr::ForIter(5),
+            Instr::PopTop,
+            Instr::Jump(2),
+        ]);
+    }
+
+    #[test]
+    fn unknown_opcode_rejected() {
+        assert!(matches!(decode(&[200, 0], IsaVersion::V38), Err(DecodeError::UnknownOpcode(200))));
+    }
+
+    #[test]
+    fn v38_contains_encoded_as_compare() {
+        let raw = encode(&[Instr::LoadFast(0), Instr::LoadFast(1), Instr::ContainsOp(false), Instr::ReturnValue], IsaVersion::V38);
+        // No CONTAINS_OP byte anywhere in V38 encoding.
+        assert!(!raw.chunks(2).any(|c| c[0] == t::CONTAINS_OP));
+        let raw39 = encode(&[Instr::LoadFast(0), Instr::LoadFast(1), Instr::ContainsOp(false), Instr::ReturnValue], IsaVersion::V39);
+        assert!(raw39.chunks(2).any(|c| c[0] == t::CONTAINS_OP));
+    }
+}

@@ -1,0 +1,306 @@
+//! Versioned assembler: abstract instruction stream → raw bytes.
+//!
+//! Raw format (all versions): a sequence of 2-byte units `(opcode, arg)`.
+//! Args wider than one byte are carried by `EXTENDED_ARG` prefix units.
+//! Jump-arg semantics and auxiliary units (RESUME / PRECALL / CACHE) differ
+//! per version — see `tables.rs`.
+
+use super::tables as t;
+use super::{BinOp, Instr, IsaVersion, UnOp};
+
+/// One raw unit before byte emission.
+#[derive(Clone, Copy, Debug)]
+struct RawOp {
+    opcode: u8,
+    arg: u32,
+}
+
+/// How many EXTENDED_ARG prefix units an arg needs.
+fn ext_count(arg: u32) -> usize {
+    match arg {
+        0..=0xFF => 0,
+        0x100..=0xFFFF => 1,
+        0x1_0000..=0xFF_FFFF => 2,
+        _ => 3,
+    }
+}
+
+/// Units occupied by one raw op: EXTENDED_ARGs + the op + its caches.
+fn op_units(version: IsaVersion, op: RawOp) -> usize {
+    ext_count(op.arg) + 1 + t::cache_slots(version, op.opcode)
+}
+
+/// The raw ops for one abstract instruction, with jump args left as 0
+/// (filled during layout). Returns (ops, jump_op_index_within_ops).
+fn lower_instr(instr: &Instr, version: IsaVersion) -> (Vec<RawOp>, Option<usize>) {
+    let v311 = version == IsaVersion::V311;
+    let op = |opcode: u8, arg: u32| RawOp { opcode, arg };
+    match instr {
+        Instr::LoadConst(a) => (vec![op(t::LOAD_CONST, *a)], None),
+        Instr::LoadFast(a) => (vec![op(t::LOAD_FAST, *a)], None),
+        Instr::StoreFast(a) => (vec![op(t::STORE_FAST, *a)], None),
+        Instr::LoadGlobal(a) => (vec![op(t::LOAD_GLOBAL, *a)], None),
+        Instr::StoreGlobal(a) => (vec![op(t::STORE_GLOBAL, *a)], None),
+        Instr::LoadAttr(a) => (vec![op(t::LOAD_ATTR, *a)], None),
+        Instr::LoadMethod(a) => (vec![op(t::LOAD_METHOD, *a)], None),
+        Instr::LoadDeref(a) => (vec![op(t::LOAD_DEREF, *a)], None),
+        Instr::StoreDeref(a) => (vec![op(t::STORE_DEREF, *a)], None),
+        Instr::LoadClosure(a) => (vec![op(t::LOAD_CLOSURE, *a)], None),
+        Instr::BinarySubscr => (vec![op(t::BINARY_SUBSCR, 0)], None),
+        Instr::StoreSubscr => (vec![op(t::STORE_SUBSCR, 0)], None),
+        Instr::BuildSlice(n) => (vec![op(t::BUILD_SLICE, *n)], None),
+        Instr::PopTop => (vec![op(t::POP_TOP, 0)], None),
+        Instr::DupTop => (vec![op(t::DUP_TOP, 0)], None),
+        Instr::RotTwo => (vec![op(t::ROT_TWO, 0)], None),
+        Instr::RotThree => (vec![op(t::ROT_THREE, 0)], None),
+        Instr::Binary(b) => {
+            if v311 {
+                let nb = match b {
+                    BinOp::Add => t::NB_ADD,
+                    BinOp::Sub => t::NB_SUB,
+                    BinOp::Mul => t::NB_MUL,
+                    BinOp::Div => t::NB_TRUEDIV,
+                    BinOp::FloorDiv => t::NB_FLOORDIV,
+                    BinOp::Mod => t::NB_MOD,
+                    BinOp::Pow => t::NB_POW,
+                    BinOp::MatMul => t::NB_MATMUL,
+                };
+                (vec![op(t::BINARY_OP_311, nb)], None)
+            } else {
+                let opcode = match b {
+                    BinOp::Add => t::BINARY_ADD,
+                    BinOp::Sub => t::BINARY_SUBTRACT,
+                    BinOp::Mul => t::BINARY_MULTIPLY,
+                    BinOp::Div => t::BINARY_TRUE_DIVIDE,
+                    BinOp::FloorDiv => t::BINARY_FLOOR_DIVIDE,
+                    BinOp::Mod => t::BINARY_MODULO,
+                    BinOp::Pow => t::BINARY_POWER,
+                    BinOp::MatMul => t::BINARY_MATRIX_MULTIPLY,
+                };
+                (vec![op(opcode, 0)], None)
+            }
+        }
+        Instr::Unary(u) => {
+            let opcode = match u {
+                UnOp::Neg => t::UNARY_NEGATIVE,
+                UnOp::Not => t::UNARY_NOT,
+                UnOp::Pos => t::UNARY_POSITIVE,
+            };
+            (vec![op(opcode, 0)], None)
+        }
+        Instr::Compare(c) => (vec![op(t::COMPARE_OP, c.index())], None),
+        Instr::ContainsOp(invert) => {
+            if version == IsaVersion::V38 {
+                (vec![op(t::COMPARE_OP, if *invert { t::CMP38_NOT_IN } else { t::CMP38_IN })], None)
+            } else {
+                (vec![op(t::CONTAINS_OP, *invert as u32)], None)
+            }
+        }
+        Instr::IsOp(invert) => {
+            if version == IsaVersion::V38 {
+                (vec![op(t::COMPARE_OP, if *invert { t::CMP38_IS_NOT } else { t::CMP38_IS })], None)
+            } else {
+                (vec![op(t::IS_OP, *invert as u32)], None)
+            }
+        }
+        // Jump opcodes are chosen during layout (direction matters on V311);
+        // use a placeholder opcode here.
+        Instr::Jump(_) => (vec![op(if v311 { t::JUMP_FORWARD } else { t::JUMP_ABSOLUTE }, 0)], Some(0)),
+        Instr::PopJumpIfFalse(_) => (vec![op(t::POP_JUMP_IF_FALSE, 0)], Some(0)),
+        Instr::PopJumpIfTrue(_) => (vec![op(t::POP_JUMP_IF_TRUE, 0)], Some(0)),
+        Instr::JumpIfFalseOrPop(_) => (vec![op(t::JUMP_IF_FALSE_OR_POP, 0)], Some(0)),
+        Instr::JumpIfTrueOrPop(_) => (vec![op(t::JUMP_IF_TRUE_OR_POP, 0)], Some(0)),
+        Instr::GetIter => (vec![op(t::GET_ITER, 0)], None),
+        Instr::ForIter(_) => (vec![op(t::FOR_ITER, 0)], Some(0)),
+        Instr::Call(n) => {
+            if v311 {
+                (vec![op(t::PRECALL, *n), op(t::CALL_311, *n)], None)
+            } else {
+                (vec![op(t::CALL_FUNCTION, *n)], None)
+            }
+        }
+        Instr::CallMethod(n) => {
+            if v311 {
+                (vec![op(t::PRECALL, *n), op(t::CALL_METHOD, *n)], None)
+            } else {
+                (vec![op(t::CALL_METHOD, *n)], None)
+            }
+        }
+        Instr::MakeFunction(f) => (vec![op(t::MAKE_FUNCTION, *f)], None),
+        Instr::ReturnValue => (vec![op(t::RETURN_VALUE, 0)], None),
+        Instr::BuildList(n) => (vec![op(t::BUILD_LIST, *n)], None),
+        Instr::BuildTuple(n) => (vec![op(t::BUILD_TUPLE, *n)], None),
+        Instr::BuildMap(n) => (vec![op(t::BUILD_MAP, *n)], None),
+        Instr::ListAppend(n) => (vec![op(t::LIST_APPEND, *n)], None),
+        Instr::UnpackSequence(n) => (vec![op(t::UNPACK_SEQUENCE, *n)], None),
+        Instr::Raise => (vec![op(t::RAISE_VARARGS, 1)], None),
+        Instr::Nop => (vec![op(t::NOP, 0)], None),
+    }
+}
+
+/// Assemble the abstract stream into the versioned binary encoding.
+pub fn encode(instrs: &[Instr], version: IsaVersion) -> Vec<u8> {
+    let v311 = version == IsaVersion::V311;
+    // Lower every abstract instruction once; jump args patched per layout pass.
+    let mut lowered: Vec<(Vec<RawOp>, Option<usize>)> = instrs.iter().map(|i| lower_instr(i, version)).collect();
+    let base: usize = if v311 { 1 } else { 0 }; // RESUME prologue unit
+
+    // Fixpoint layout: unit offset of each abstract instruction's block.
+    let mut offsets = vec![0usize; instrs.len() + 1];
+    for _round in 0..16 {
+        // 1. offsets from current arg widths
+        let mut off = base;
+        for (i, (ops, _)) in lowered.iter().enumerate() {
+            offsets[i] = off;
+            off += ops.iter().map(|&o| op_units(version, o)).sum::<usize>();
+        }
+        offsets[instrs.len()] = off;
+
+        // 2. recompute jump args + opcode direction
+        let mut changed = false;
+        for (i, instr) in instrs.iter().enumerate() {
+            let Some(target) = instr.jump_target() else { continue };
+            let (ops, jslot) = &mut lowered[i];
+            let j = jslot.expect("jump instr must have a jump slot");
+            // Unit index of the jump opcode itself (after any ext prefixes
+            // of preceding ops in this block and its own ext prefix).
+            let mut jump_unit = offsets[i];
+            for (k, o) in ops.iter().enumerate() {
+                if k == j {
+                    jump_unit += ext_count(o.arg);
+                    break;
+                }
+                jump_unit += op_units(version, *o);
+            }
+            let next_unit = jump_unit + 1 + t::cache_slots(version, ops[j].opcode);
+            let target_unit = offsets[target as usize];
+            let (new_opcode, new_arg): (u8, u32) = match version {
+                IsaVersion::V38 | IsaVersion::V39 => match ops[j].opcode {
+                    // Relative jumps measured in bytes from the next unit.
+                    t::JUMP_FORWARD | t::FOR_ITER => (ops[j].opcode, ((target_unit - next_unit) * 2) as u32),
+                    // Absolute jumps measured in byte offsets.
+                    _ => (ops[j].opcode, (target_unit * 2) as u32),
+                },
+                IsaVersion::V310 => match ops[j].opcode {
+                    // Same split, but args are unit offsets.
+                    t::JUMP_FORWARD | t::FOR_ITER => (ops[j].opcode, (target_unit - next_unit) as u32),
+                    _ => (ops[j].opcode, target_unit as u32),
+                },
+                IsaVersion::V311 => {
+                    // All jumps relative; backward variants where needed.
+                    if target_unit >= next_unit {
+                        let fwd = (target_unit - next_unit) as u32;
+                        let opc = match instrs[i] {
+                            Instr::Jump(_) => t::JUMP_FORWARD,
+                            Instr::PopJumpIfFalse(_) => t::POP_JUMP_IF_FALSE,
+                            Instr::PopJumpIfTrue(_) => t::POP_JUMP_IF_TRUE,
+                            Instr::JumpIfFalseOrPop(_) => t::JUMP_IF_FALSE_OR_POP,
+                            Instr::JumpIfTrueOrPop(_) => t::JUMP_IF_TRUE_OR_POP,
+                            Instr::ForIter(_) => t::FOR_ITER,
+                            _ => unreachable!(),
+                        };
+                        (opc, fwd)
+                    } else {
+                        let bwd = (next_unit - target_unit) as u32;
+                        let opc = match instrs[i] {
+                            Instr::Jump(_) => t::JUMP_BACKWARD,
+                            Instr::PopJumpIfFalse(_) => t::POP_JUMP_BACKWARD_IF_FALSE,
+                            Instr::PopJumpIfTrue(_) => t::POP_JUMP_BACKWARD_IF_TRUE,
+                            other => panic!("unsupported backward jump {:?} in V311 encoding", other),
+                        };
+                        (opc, bwd)
+                    }
+                }
+            };
+            if ops[j].opcode != new_opcode || ops[j].arg != new_arg {
+                ops[j].opcode = new_opcode;
+                ops[j].arg = new_arg;
+                changed = true;
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+
+    // 3. emit bytes
+    let mut out: Vec<u8> = Vec::new();
+    if v311 {
+        out.push(t::RESUME);
+        out.push(0);
+    }
+    for (ops, _) in &lowered {
+        for o in ops {
+            let n_ext = ext_count(o.arg);
+            for k in (1..=n_ext).rev() {
+                out.push(t::EXTENDED_ARG);
+                out.push(((o.arg >> (8 * k)) & 0xFF) as u8);
+            }
+            out.push(o.opcode);
+            out.push((o.arg & 0xFF) as u8);
+            for _ in 0..t::cache_slots(version, o.opcode) {
+                out.push(t::CACHE);
+                out.push(0);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simple_encode_v38() {
+        let instrs = vec![Instr::LoadFast(0), Instr::ReturnValue];
+        let raw = encode(&instrs, IsaVersion::V38);
+        assert_eq!(raw, vec![t::LOAD_FAST, 0, t::RETURN_VALUE, 0]);
+    }
+
+    #[test]
+    fn v311_has_resume_and_caches() {
+        let instrs = vec![Instr::LoadGlobal(0), Instr::Call(0), Instr::ReturnValue];
+        let raw = encode(&instrs, IsaVersion::V311);
+        assert_eq!(raw[0], t::RESUME);
+        // RESUME, LOAD_GLOBAL + 2 caches, PRECALL, CALL + 3 caches, RETURN
+        let units = raw.len() / 2;
+        assert_eq!(units, 1 + 3 + 1 + 4 + 1);
+    }
+
+    #[test]
+    fn extended_arg_emitted() {
+        let instrs = vec![Instr::LoadConst(300), Instr::ReturnValue];
+        let raw = encode(&instrs, IsaVersion::V38);
+        assert_eq!(raw[0], t::EXTENDED_ARG);
+        assert_eq!(raw[1], 1);
+        assert_eq!(raw[2], t::LOAD_CONST);
+        assert_eq!(raw[3], 44); // 300 = 0x12C
+    }
+
+    #[test]
+    fn jump_args_differ_across_versions() {
+        // 0: load 1: pjif->3 2: load 3: return
+        let instrs = vec![
+            Instr::LoadFast(0),
+            Instr::PopJumpIfFalse(3),
+            Instr::LoadFast(0),
+            Instr::ReturnValue,
+        ];
+        let v38 = encode(&instrs, IsaVersion::V38);
+        let v310 = encode(&instrs, IsaVersion::V310);
+        // V38 arg = byte offset (unit 3 -> byte 6); V310 arg = unit 3.
+        assert_eq!(v38[3], 6);
+        assert_eq!(v310[3], 3);
+    }
+
+    #[test]
+    fn v311_backward_jump() {
+        // while-true style: 0: nop 1: jump->0
+        let instrs = vec![Instr::Nop, Instr::Jump(0)];
+        let raw = encode(&instrs, IsaVersion::V311);
+        // RESUME, NOP, JUMP_BACKWARD
+        assert_eq!(raw[4], t::JUMP_BACKWARD);
+        assert_eq!(raw[5], 2); // next_unit(3) - target_unit(1)
+    }
+}

@@ -1,0 +1,135 @@
+//! Per-version raw opcode numbering tables.
+//!
+//! The numbers track real CPython closely enough that the version deltas are
+//! the *same kind* that broke real decompilers: 3.9 splits `CONTAINS_OP` /
+//! `IS_OP` out of `COMPARE_OP`; 3.10 reinterprets jump args as instruction
+//! offsets; 3.11 removes `JUMP_ABSOLUTE`, adds `RESUME` / `PRECALL` /
+//! `CACHE`, unifies arithmetic under `BINARY_OP`, and makes jumps relative.
+
+use super::IsaVersion;
+
+// ---- opcodes shared by all versions (numbers from CPython 3.8) ----
+pub const POP_TOP: u8 = 1;
+pub const ROT_TWO: u8 = 2;
+pub const ROT_THREE: u8 = 3;
+pub const DUP_TOP: u8 = 4;
+pub const NOP: u8 = 9;
+pub const UNARY_POSITIVE: u8 = 10;
+pub const UNARY_NEGATIVE: u8 = 11;
+pub const UNARY_NOT: u8 = 12;
+pub const BINARY_MATRIX_MULTIPLY: u8 = 16;
+pub const BINARY_POWER: u8 = 19;
+pub const BINARY_MULTIPLY: u8 = 20;
+pub const BINARY_MODULO: u8 = 22;
+pub const BINARY_ADD: u8 = 23;
+pub const BINARY_SUBTRACT: u8 = 24;
+pub const BINARY_SUBSCR: u8 = 25;
+pub const BINARY_FLOOR_DIVIDE: u8 = 26;
+pub const BINARY_TRUE_DIVIDE: u8 = 27;
+pub const STORE_SUBSCR: u8 = 60;
+pub const GET_ITER: u8 = 68;
+pub const RETURN_VALUE: u8 = 83;
+pub const UNPACK_SEQUENCE: u8 = 92;
+pub const FOR_ITER: u8 = 93;
+pub const STORE_GLOBAL: u8 = 97;
+pub const LOAD_CONST: u8 = 100;
+pub const BUILD_TUPLE: u8 = 102;
+pub const BUILD_LIST: u8 = 103;
+pub const BUILD_MAP: u8 = 105;
+pub const LOAD_ATTR: u8 = 106;
+pub const COMPARE_OP: u8 = 107;
+pub const JUMP_FORWARD: u8 = 110;
+pub const JUMP_IF_FALSE_OR_POP: u8 = 111;
+pub const JUMP_IF_TRUE_OR_POP: u8 = 112;
+pub const JUMP_ABSOLUTE: u8 = 113; // absent in V311
+pub const POP_JUMP_IF_FALSE: u8 = 114;
+pub const POP_JUMP_IF_TRUE: u8 = 115;
+pub const LOAD_GLOBAL: u8 = 116;
+pub const IS_OP: u8 = 117; // V39+
+pub const CONTAINS_OP: u8 = 118; // V39+
+pub const LOAD_FAST: u8 = 124;
+pub const STORE_FAST: u8 = 125;
+pub const RAISE_VARARGS: u8 = 130;
+pub const CALL_FUNCTION: u8 = 131; // pre-V311
+pub const MAKE_FUNCTION: u8 = 132;
+pub const BUILD_SLICE: u8 = 133;
+pub const LOAD_CLOSURE: u8 = 135;
+pub const LOAD_DEREF: u8 = 136;
+pub const STORE_DEREF: u8 = 137;
+pub const EXTENDED_ARG: u8 = 144;
+pub const LIST_APPEND: u8 = 145;
+pub const LOAD_METHOD: u8 = 160;
+pub const CALL_METHOD: u8 = 161; // pre-V311
+
+// ---- V311-only opcodes ----
+pub const CACHE: u8 = 0;
+pub const BINARY_OP_311: u8 = 122; // unified; operation in oparg
+pub const JUMP_BACKWARD: u8 = 140;
+pub const RESUME: u8 = 151;
+pub const PRECALL: u8 = 166;
+pub const CALL_311: u8 = 171;
+pub const POP_JUMP_BACKWARD_IF_FALSE: u8 = 175;
+pub const POP_JUMP_BACKWARD_IF_TRUE: u8 = 176;
+
+/// `BINARY_OP` opargs for V311 (subset of `_nb_ops`).
+pub const NB_ADD: u32 = 0;
+pub const NB_SUB: u32 = 1;
+pub const NB_MUL: u32 = 2;
+pub const NB_TRUEDIV: u32 = 3;
+pub const NB_FLOORDIV: u32 = 4;
+pub const NB_MOD: u32 = 5;
+pub const NB_POW: u32 = 6;
+pub const NB_MATMUL: u32 = 7;
+
+/// V38 `COMPARE_OP` args beyond the six orderings.
+pub const CMP38_IN: u32 = 6;
+pub const CMP38_NOT_IN: u32 = 7;
+pub const CMP38_IS: u32 = 8;
+pub const CMP38_IS_NOT: u32 = 9;
+
+/// Number of inline CACHE units following an opcode in the V311 encoding
+/// (0 for every opcode in earlier versions).
+pub fn cache_slots(version: IsaVersion, opcode: u8) -> usize {
+    if version != IsaVersion::V311 {
+        return 0;
+    }
+    match opcode {
+        CALL_311 | CALL_METHOD => 3,
+        LOAD_METHOD => 3,
+        LOAD_GLOBAL | LOAD_ATTR => 2,
+        BINARY_OP_311 | COMPARE_OP => 1,
+        _ => 0,
+    }
+}
+
+/// Does this opcode's argument denote a jump target?
+#[allow(dead_code)]
+pub fn is_jump(version: IsaVersion, opcode: u8) -> bool {
+    match opcode {
+        JUMP_FORWARD | JUMP_IF_FALSE_OR_POP | JUMP_IF_TRUE_OR_POP | POP_JUMP_IF_FALSE | POP_JUMP_IF_TRUE | FOR_ITER => true,
+        JUMP_ABSOLUTE => version != IsaVersion::V311,
+        JUMP_BACKWARD | POP_JUMP_BACKWARD_IF_FALSE | POP_JUMP_BACKWARD_IF_TRUE => version == IsaVersion::V311,
+        _ => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cache_slots_only_311() {
+        assert_eq!(cache_slots(IsaVersion::V38, CALL_FUNCTION), 0);
+        assert_eq!(cache_slots(IsaVersion::V311, CALL_311), 3);
+        assert_eq!(cache_slots(IsaVersion::V311, LOAD_GLOBAL), 2);
+        assert_eq!(cache_slots(IsaVersion::V310, LOAD_GLOBAL), 0);
+    }
+
+    #[test]
+    fn jump_classification() {
+        assert!(is_jump(IsaVersion::V38, JUMP_ABSOLUTE));
+        assert!(!is_jump(IsaVersion::V311, JUMP_ABSOLUTE));
+        assert!(is_jump(IsaVersion::V311, JUMP_BACKWARD));
+        assert!(!is_jump(IsaVersion::V38, LOAD_CONST));
+    }
+}

@@ -1,0 +1,11 @@
+//! Test corpora and the Table 1 harness: the 85-case syntax suite
+//! (Appendix C analogue), the 140-model suite (Appendix B analogue), and
+//! the correctness matrix runner.
+
+pub mod models;
+pub mod syntax;
+pub mod table1;
+
+pub use models::{model_cases, ModelCase};
+pub use syntax::{syntax_cases, SyntaxCase};
+pub use table1::{render_table1, run_model_suite, run_syntax_suite, run_table1, Cell, Table1};

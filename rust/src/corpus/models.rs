@@ -1,0 +1,227 @@
+//! The 140-model suite — the analogue of the paper's Appendix B corpus
+//! (TorchBench / HuggingFace / TIMM models). Each model is a complete
+//! program: weight initialization, a `forward` (or `step`) function that
+//! dynamo compiles, and a driver that calls it twice and prints results.
+//!
+//! Families mirror the failure surface real models exercise: pure-graph
+//! models (full capture), training steps that log (print breaks),
+//! data-dependent control flow (branch breaks), `.item()` escapes, helper
+//! calls (user-function breaks), global state (store breaks), unrolled
+//! recurrences, and multi-break pipelines.
+
+/// One model program.
+#[derive(Clone, Debug)]
+pub struct ModelCase {
+    pub id: usize,
+    pub name: String,
+    pub family: &'static str,
+    pub source: String,
+    /// Expected to capture without any graph break.
+    pub full_capture: bool,
+}
+
+fn mlp(i: usize) -> (String, String) {
+    let acts = ["relu", "tanh", "gelu", "sigmoid"];
+    let act = acts[i % acts.len()];
+    let d = 4 + 2 * (i % 3);
+    let h = 8 + 4 * (i % 2);
+    let src = format!(
+        "torch.manual_seed({seed})\nW1 = torch.randn([{d}, {h}])\nb1 = torch.randn([{h}])\nW2 = torch.randn([{h}, 4])\ndef forward(x):\n    h1 = (x @ W1 + b1).{act}()\n    return (h1 @ W2).softmax()\nx = torch.randn([3, {d}])\nprint(forward(x).sum().item())\nprint(forward(x).mean().item())\n",
+        seed = 100 + i,
+        d = d,
+        h = h,
+        act = act
+    );
+    (format!("mlp_{}_{}", act, i), src)
+}
+
+fn attention(i: usize) -> (String, String) {
+    let dk = 4 + 2 * (i % 3);
+    let t = 3 + (i % 4);
+    let src = format!(
+        "torch.manual_seed({seed})\nWq = torch.randn([{dk}, {dk}])\nWk = torch.randn([{dk}, {dk}])\nWv = torch.randn([{dk}, {dk}])\ndef forward(x):\n    q = x @ Wq\n    k = x @ Wk\n    v = x @ Wv\n    scores = (q @ k.t()) / {scale}.0\n    att = scores.softmax()\n    return (att @ v).sum()\nx = torch.randn([{t}, {dk}])\nprint(forward(x).item())\nprint(forward(x).item())\n",
+        seed = 200 + i,
+        dk = dk,
+        t = t,
+        scale = dk
+    );
+    (format!("attention_d{}_{}", dk, i), src)
+}
+
+fn embed_classifier(i: usize) -> (String, String) {
+    let vocab = 16 + 4 * (i % 3);
+    let dim = 6 + 2 * (i % 2);
+    let src = format!(
+        "torch.manual_seed({seed})\nE = torch.randn([{vocab}, {dim}])\nWo = torch.randn([{dim}, 3])\ndef forward(ids):\n    emb = torch.embedding(E, ids)\n    pooled = emb.mean(0).reshape([1, {dim}])\n    return (pooled @ Wo).softmax()\nids = torch.randint({vocab}, [5])\nprint(forward(ids).sum().item())\nprint(forward(ids).max().item())\n",
+        seed = 300 + i,
+        vocab = vocab,
+        dim = dim
+    );
+    (format!("embed_cls_v{}_{}", vocab, i), src)
+}
+
+fn conv_mixer(i: usize) -> (String, String) {
+    // Conv-as-matmul over unfolded patches (classic im2col formulation).
+    let c = 2 + (i % 2);
+    let src = format!(
+        "torch.manual_seed({seed})\nK = torch.randn([{c} * 4, 8])\nWo = torch.randn([8, 2])\ngamma = torch.ones([8])\nbeta = torch.zeros([8])\ndef forward(patches):\n    feats = (patches @ K).relu()\n    normed = torch.layernorm(feats, gamma, beta)\n    pooled = normed.mean(0).reshape([1, 8])\n    return pooled @ Wo\npatches = torch.randn([9, {c} * 4])\nprint(forward(patches).sum().item())\nprint(forward(patches).abs().sum().item())\n",
+        seed = 400 + i,
+        c = c
+    );
+    (format!("convmix_c{}_{}", c, i), src)
+}
+
+fn train_print(i: usize) -> (String, String) {
+    let d = 4 + (i % 3);
+    let classes = 3 + (i % 2);
+    let src = format!(
+        "torch.manual_seed({seed})\nW = torch.randn([{d}, {cls}])\ndef step(x, y):\n    logits = x @ W\n    loss = torch.cross_entropy(logits, y)\n    print('loss computed')\n    return loss + 0.0\nx = torch.randn([6, {d}])\ny = torch.randint({cls}, [6])\nprint(step(x, y).item())\nprint(step(x, y).item())\n",
+        seed = 500 + i,
+        d = d,
+        cls = classes
+    );
+    (format!("train_print_{}", i), src)
+}
+
+fn branchy(i: usize) -> (String, String) {
+    let d = 4 + (i % 4);
+    let src = format!(
+        "torch.manual_seed({seed})\nW = torch.randn([{d}, {d}])\ndef forward(x):\n    h = x @ W\n    if h.sum() >= 0:\n        h = h * 2\n    else:\n        h = h - 1\n    return h.mean()\nx = torch.randn([3, {d}])\nprint(forward(x).item())\nprint(forward(x * -1).item())\n",
+        seed = 600 + i,
+        d = d
+    );
+    (format!("branchy_{}", i), src)
+}
+
+fn item_log(i: usize) -> (String, String) {
+    let d = 5 + (i % 3);
+    let src = format!(
+        "torch.manual_seed({seed})\nW = torch.randn([{d}, {d}])\ndef forward(x):\n    h = (x @ W).relu()\n    s = h.sum().item()\n    if s > 1000.0:\n        return h * 0\n    return h.softmax()\nx = torch.randn([2, {d}])\nprint(forward(x).sum().item())\nprint(forward(x + 1).sum().item())\n",
+        seed = 700 + i,
+        d = d
+    );
+    (format!("item_log_{}", i), src)
+}
+
+fn helper_call(i: usize) -> (String, String) {
+    let d = 4 + (i % 3);
+    let src = format!(
+        "torch.manual_seed({seed})\nW = torch.randn([{d}, {d}])\ndef act(t):\n    return t.tanh() + 1\ndef forward(x):\n    h = x @ W\n    h = act(h)\n    return h.sum()\nx = torch.randn([3, {d}])\nprint(forward(x).item())\nprint(forward(x).item())\n",
+        seed = 800 + i,
+        d = d
+    );
+    (format!("helper_call_{}", i), src)
+}
+
+fn stateful(i: usize) -> (String, String) {
+    let d = 3 + (i % 3);
+    let src = format!(
+        "torch.manual_seed({seed})\nW = torch.randn([{d}, {d}])\ncalls = 0\ndef forward(x):\n    global calls\n    calls = calls + 1\n    return (x @ W).sum()\nx = torch.randn([2, {d}])\nprint(forward(x).item())\nprint(forward(x).item())\nprint(calls)\n",
+        seed = 900 + i,
+        d = d
+    );
+    (format!("stateful_{}", i), src)
+}
+
+fn rnn_unrolled(i: usize) -> (String, String) {
+    let d = 3 + (i % 3);
+    let steps = 2 + (i % 3);
+    let src = format!(
+        "torch.manual_seed({seed})\nWh = torch.randn([{d}, {d}])\nWx = torch.randn([{d}, {d}])\ndef forward(x, h):\n    for t in range({steps}):\n        h = (h @ Wh + x @ Wx).tanh()\n    print('unrolled')\n    return h.sum()\nx = torch.randn([2, {d}])\nh0 = torch.zeros([2, {d}])\nprint(forward(x, h0).item())\nprint(forward(x, h0).item())\n",
+        seed = 1000 + i,
+        d = d,
+        steps = steps
+    );
+    (format!("rnn_unrolled_s{}_{}", steps, i), src)
+}
+
+fn pipeline(i: usize) -> (String, String) {
+    let d = 4 + (i % 2);
+    let src = format!(
+        "torch.manual_seed({seed})\nW1 = torch.randn([{d}, {d}])\nW2 = torch.randn([{d}, 2])\ngamma = torch.ones([{d}])\nbeta = torch.zeros([{d}])\ndef forward(x):\n    h = torch.layernorm(x @ W1, gamma, beta)\n    print('stage one done')\n    if h.mean() >= 0:\n        h = h.relu()\n    out = (h @ W2).softmax()\n    return out.sum()\nx = torch.randn([3, {d}])\nprint(forward(x).item())\nprint(forward(x * 2).item())\n",
+        seed = 1100 + i,
+        d = d
+    );
+    (format!("pipeline_{}", i), src)
+}
+
+/// The 140-model corpus.
+pub fn model_cases() -> Vec<ModelCase> {
+    let mut out: Vec<ModelCase> = Vec::new();
+    let mut push = |family: &'static str, full: bool, n: usize, f: &dyn Fn(usize) -> (String, String)| {
+        for i in 0..n {
+            let (name, source) = f(i);
+            out.push(ModelCase { id: 0, name, family, source, full_capture: full });
+        }
+    };
+    // 27 fully-capturable models (the share pycdc can follow)…
+    push("mlp", true, 7, &mlp);
+    push("attention", true, 7, &attention);
+    push("embed_cls", true, 7, &embed_classifier);
+    push("convmix", true, 6, &conv_mixer);
+    // …and 113 with graph breaks (program-generated resume functions).
+    push("train_print", false, 17, &train_print);
+    push("branchy", false, 16, &branchy);
+    push("item_log", false, 16, &item_log);
+    push("helper_call", false, 16, &helper_call);
+    push("stateful", false, 16, &stateful);
+    push("rnn_unrolled", false, 16, &rnn_unrolled);
+    push("pipeline", false, 16, &pipeline);
+    for (i, m) in out.iter_mut().enumerate() {
+        m.id = i + 1;
+    }
+    assert_eq!(out.len(), 140, "model corpus must have exactly 140 cases, has {}", out.len());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bytecode::IsaVersion;
+    use crate::dynamo::{Dynamo, DynamoConfig};
+    use crate::vm::Vm;
+
+    #[test]
+    fn exactly_140_models_all_run() {
+        let cases = model_cases();
+        assert_eq!(cases.len(), 140);
+        // Spot-run one per family plainly.
+        let mut seen = std::collections::HashSet::new();
+        for c in &cases {
+            if seen.insert(c.family) {
+                let vm = Vm::new();
+                vm.exec_source(&c.source, IsaVersion::V310)
+                    .unwrap_or_else(|e| panic!("model {} failed: {}\n{}", c.name, e, c.source));
+            }
+        }
+    }
+
+    #[test]
+    fn full_capture_flags_are_accurate() {
+        // One representative per family: dynamo must agree with the flag.
+        let cases = model_cases();
+        let mut seen = std::collections::HashSet::new();
+        for c in &cases {
+            if !seen.insert(c.family) {
+                continue;
+            }
+            let plain = Vm::new();
+            plain.exec_source(&c.source, IsaVersion::V310).unwrap();
+            let expected = plain.take_output();
+
+            let mut vm = Vm::new();
+            let d = Dynamo::new(DynamoConfig::default());
+            vm.eval_hook = Some(d.clone());
+            vm.exec_source(&c.source, IsaVersion::V310)
+                .unwrap_or_else(|e| panic!("model {} under dynamo: {}\nlog: {:?}", c.name, e, d.log()));
+            assert_eq!(vm.take_output(), expected, "output changed under dynamo for {}", c.name);
+            let breaks = d.metrics.graph_breaks.get();
+            if c.full_capture {
+                assert_eq!(breaks, 0, "{} expected full capture, log: {:?}", c.name, d.log());
+                assert!(d.metrics.captures.get() >= 1, "{} never captured: {:?}", c.name, d.log());
+            } else {
+                assert!(breaks >= 1, "{} expected graph breaks, log: {:?}", c.name, d.log());
+            }
+        }
+    }
+}

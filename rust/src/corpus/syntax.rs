@@ -1,0 +1,154 @@
+//! The 85-case syntax test suite — the analogue of depyf's
+//! `tests/test.py` (Appendix C): one self-contained, printing program per
+//! language-feature cluster. Every case must satisfy the behavioural
+//! round-trip (decompile → recompile → identical output).
+
+/// One syntax test case.
+#[derive(Clone, Debug)]
+pub struct SyntaxCase {
+    pub id: usize,
+    pub name: &'static str,
+    pub source: &'static str,
+}
+
+/// All 85 cases.
+pub fn syntax_cases() -> Vec<SyntaxCase> {
+    let sources: Vec<(&'static str, &'static str)> = vec![
+        // --- literals & basics (1-10) ---
+        ("int_literals", "print(0, 42, -17)\n"),
+        ("float_literals", "print(1.5, -2.25, 2e3)\n"),
+        ("string_literals", "print('hello', 'a\\nb', '')\n"),
+        ("bool_none", "print(True, False, None)\n"),
+        ("list_literal", "print([1, 2, 3], [])\n"),
+        ("tuple_literal", "print((1, 2), (5,), ())\n"),
+        ("dict_literal", "print({'a': 1, 'b': 2})\n"),
+        ("nested_literals", "print([[1, 2], [3, [4, 5]]], {'k': [1, (2, 3)]})\n"),
+        ("guard_clause_or", "x = 0\ny = x or 5\nz = y and 'set'\nprint(y, z)\n"),
+        ("for_else_break", "for i in range(9):\n    if i == 2:\n        break\nelse:\n    print('none')\nprint('end', i)\n"),
+        // --- arithmetic (11-20) ---
+        ("while_else_break", "n = 0\nwhile n < 10:\n    n += 1\n    if n == 4:\n        break\nelse:\n    print('no break')\nprint(n)\n"),
+        ("precedence", "print(2 + 3 * 4, (2 + 3) * 4)\n"),
+        ("power_operator", "print(2 ** 10, 3 ** 2 ** 2)\n"),
+        ("floor_division", "print(7 // 2, -7 // 2, 9 // 3)\n"),
+        ("modulo", "print(7 % 3, -7 % 3, 10 % 5)\n"),
+        ("true_division", "print(7 / 2, 1 / 4)\n"),
+        ("unary_ops", "x = 5\nprint(-x, +x, not x, not 0)\n"),
+        ("aug_add_sub", "x = 10\nx += 5\nx -= 3\nprint(x)\n"),
+        ("aug_mul_div", "x = 8\nx *= 3\nx /= 4\nprint(x)\n"),
+        ("mixed_arith", "print(10 - 3 * 2 + 8 / 4)\n"),
+        // --- comparisons & boolean logic (21-32) ---
+        ("simple_compare", "x = 5\nprint(x < 10, x > 10, x == 5, x != 5, x <= 5, x >= 6)\n"),
+        ("chained_compare_basic", "x = 5\nprint(1 < x <= 5)\nprint(1 < x < 3)\n"),
+        ("chained_compare_long", "x = 5\nprint(0 <= x <= 9 <= 10)\n"),
+        ("chained_compare_sideeffect", "def f():\n    print('eval once')\n    return 5\nprint(1 < f() < 10)\n"),
+        ("and_value", "a = 0\nb = 7\nprint(a and b, b and a, 3 and 4)\n"),
+        ("or_value", "a = 0\nb = 7\nprint(a or b, b or a, 0 or '')\n"),
+        ("and_or_mixed", "a = 1\nb = 0\nc = 2\nprint(a and b or c)\nprint(b or a and c)\n"),
+        ("not_combinations", "a = 1\nb = 0\nprint(not a and not b, not (a and b))\n"),
+        ("short_circuit_and", "def t():\n    print('called')\n    return True\nr = False and t()\nprint(r)\n"),
+        ("short_circuit_or", "def t():\n    print('called')\n    return True\nr = True or t()\nprint(r)\n"),
+        ("bool_in_condition", "x = 3\ny = 4\nif x > 0 and y > 0:\n    print('both positive')\n"),
+        ("default_idiom", "name = ''\nresolved = name or 'anonymous'\nprint(resolved)\n"),
+        // --- is / in (33-36) ---
+        ("is_none", "x = None\ny = 5\nprint(x is None, y is None, x is not None)\n"),
+        ("in_list", "xs = [1, 2, 3]\nprint(2 in xs, 7 in xs, 7 not in xs)\n"),
+        ("in_string_dict", "s = 'hello'\nd = {'k': 1}\nprint('ell' in s, 'k' in d, 'z' not in d)\n"),
+        ("in_range", "print(3 in range(5), 7 in range(5))\n"),
+        // --- conditionals (37-44) ---
+        ("if_simple", "x = 5\nif x > 3:\n    print('big')\nprint('after')\n"),
+        ("if_else", "x = 1\nif x > 3:\n    print('big')\nelse:\n    print('small')\n"),
+        ("if_elif_else", "x = 2\nif x == 1:\n    print('one')\nelif x == 2:\n    print('two')\nelif x == 3:\n    print('three')\nelse:\n    print('many')\n"),
+        ("nested_if", "x = 5\ny = 10\nif x > 0:\n    if y > 5:\n        print('both')\n    else:\n        print('x only')\n"),
+        ("ternary_simple", "x = 4\nprint('even' if x % 2 == 0 else 'odd')\n"),
+        ("ternary_nested", "x = 2\nprint(1 if x == 1 else 2 if x == 2 else 3)\n"),
+        ("ternary_in_call", "x = 7\nprint(max(x if x > 0 else -x, 3))\n"),
+        ("nested_bool_conditions", "x = 3\ny = 7\nif (x > 1 and y > 1) or x == 0:\n    print('yes')\nif x > 2 and y > 5 and x + y == 10:\n    print('sum ten')\n"),
+        // --- while loops (45-50) ---
+        ("while_countdown", "n = 5\nwhile n > 0:\n    n -= 1\nprint(n)\n"),
+        ("flag_and_check", "a = True\nb = False\nif a and not b:\n    print('go')\nprint(a and b or not b)\n"),
+        ("while_break", "n = 0\nwhile True:\n    n += 1\n    if n == 7:\n        break\nprint(n)\n"),
+        ("while_continue", "n = 0\ns = 0\nwhile n < 10:\n    n += 1\n    if n > 5:\n        continue\n    s += n\nprint(s)\n"),
+        ("while_else", "n = 3\nwhile n > 0:\n    n -= 1\nelse:\n    print('drained')\nprint(n)\n"),
+        ("while_complex_cond", "a = 0\nb = 10\nwhile a < 5 and b > 5:\n    a += 1\n    b -= 1\nprint(a, b)\n"),
+        // --- for loops (51-60) ---
+        ("for_range", "t = 0\nfor i in range(5):\n    t += i\nprint(t)\n"),
+        ("for_range_args", "for i in range(2, 10, 3):\n    print(i)\n"),
+        ("for_list", "for x in [10, 20, 30]:\n    print(x)\n"),
+        ("for_string", "for c in 'abc':\n    print(c)\n"),
+        ("for_break_continue", "for i in range(10):\n    if i == 3:\n        continue\n    if i == 6:\n        break\n    print(i)\n"),
+        ("for_else_nobreak", "for i in range(3):\n    print(i)\nelse:\n    print('completed')\n"),
+        ("for_nested", "for i in range(3):\n    for j in range(2):\n        print(i * 10 + j)\n"),
+        ("for_tuple_unpack", "for k, v in [(1, 'a'), (2, 'b')]:\n    print(k, v)\n"),
+        ("for_enumerate", "for i, x in enumerate(['p', 'q']):\n    print(i, x)\n"),
+        ("for_zip", "for a, b in zip([1, 2], [3, 4]):\n    print(a + b)\n"),
+        // --- functions (61-70) ---
+        ("func_simple", "def add(a, b):\n    return a + b\nprint(add(2, 3))\n"),
+        ("func_defaults", "def greet(name, greeting='hi'):\n    return greeting + ' ' + name\nprint(greet('bob'), greet('al', 'yo'))\n"),
+        ("func_recursion", "def fact(n):\n    if n <= 1:\n        return 1\n    return n * fact(n - 1)\nprint(fact(6))\n"),
+        ("func_early_return", "def sign(x):\n    if x > 0:\n        return 1\n    if x < 0:\n        return -1\n    return 0\nprint(sign(5), sign(-5), sign(0))\n"),
+        ("func_multiple", "def double(x):\n    return x * 2\ndef triple(x):\n    return x * 3\nprint(double(triple(2)))\n"),
+        ("func_nested", "def outer():\n    x = 10\n    def inner():\n        return x + 1\n    return inner()\nprint(outer())\n"),
+        ("func_closure_write", "def counter():\n    n = 0\n    def bump():\n        nonlocal n\n        n += 1\n        return n\n    return bump\nc = counter()\nc()\nprint(c())\n"),
+        ("lambda_simple", "f = lambda a, b: a * b + 1\nprint(f(3, 4))\n"),
+        ("lambda_in_call", "def apply(f, x):\n    return f(x)\nprint(apply(lambda v: v * v, 6))\n"),
+        ("func_global", "g = 1\ndef setg():\n    global g\n    g = 99\nsetg()\nprint(g)\n"),
+        // --- collections & subscripts (71-78) ---
+        ("list_methods", "xs = [3, 1]\nxs.append(2)\nxs.sort()\nprint(xs, xs.pop(), xs)\n"),
+        ("list_index_store", "xs = [0, 0, 0]\nxs[1] = 5\nxs[-1] = 9\nprint(xs)\n"),
+        ("slices", "xs = [0, 1, 2, 3, 4, 5]\nprint(xs[1:3], xs[:2], xs[3:], xs[::2], xs[::-1])\n"),
+        ("dict_ops", "d = {}\nd['a'] = 1\nd['b'] = d['a'] + 1\nprint(d, d.get('z', 0), len(d))\n"),
+        ("tuple_unpack_assign", "a, b, c = 1, 2, 3\na, b = b, a\nprint(a, b, c)\n"),
+        ("builtin_folds", "xs = [4, 2, 9]\nprint(len(xs), sum(xs), min(xs), max(xs), sorted(xs))\n"),
+        ("str_methods", "s = ' Hello '\nprint(s.strip().upper(), s.strip().lower(), 'a,b'.split(','))\n"),
+        ("aug_subscript", "d = {'n': 10}\nd['n'] += 5\nxs = [1, 2]\nxs[0] += 9\nprint(d['n'], xs)\n"),
+        // --- comprehensions (79-81) ---
+        ("comprehension_simple", "print([x * x for x in range(6)])\n"),
+        ("comprehension_cond", "print([x for x in range(10) if x % 2 == 0])\n"),
+        ("comprehension_two_conds", "print([x for x in range(20) if x % 2 == 0 if x % 3 == 0])\n"),
+        // --- misc & integration (82-85) ---
+        ("assert_stmt", "x = 5\nassert x == 5, 'boom'\nprint('ok')\n"),
+        ("fizzbuzz", "for i in range(1, 16):\n    if i % 15 == 0:\n        print('fizzbuzz')\n    elif i % 3 == 0:\n        print('fizz')\n    elif i % 5 == 0:\n        print('buzz')\n    else:\n        print(i)\n"),
+        ("gcd_euclid", "def gcd(a, b):\n    while b != 0:\n        a, b = b, a % b\n    return a\nprint(gcd(48, 36), gcd(17, 5))\n"),
+        ("tensor_program", "t = torch.ones([2, 3])\nu = (t * 2 + 1).sum()\nprint(u.item())\nm = torch.arange(6).reshape([2, 3])\nprint(m.t().shape, (m @ m.t()).sum().item())\n"),
+    ];
+    assert_eq!(sources.len(), 85, "syntax corpus must have exactly 85 cases, has {}", sources.len());
+    sources
+        .into_iter()
+        .enumerate()
+        .map(|(i, (name, source))| SyntaxCase { id: i + 1, name, source })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bytecode::IsaVersion;
+    use crate::vm::Vm;
+
+    #[test]
+    fn exactly_85_cases_all_run() {
+        let cases = syntax_cases();
+        assert_eq!(cases.len(), 85);
+        for c in &cases {
+            let vm = Vm::new();
+            vm.seed(1);
+            vm.exec_source(c.source, IsaVersion::V310)
+                .unwrap_or_else(|e| panic!("case {} ({}) failed to run: {}", c.id, c.name, e));
+            assert!(!vm.take_output().is_empty(), "case {} ({}) printed nothing", c.id, c.name);
+        }
+    }
+
+    #[test]
+    fn cases_run_identically_on_all_versions() {
+        for c in syntax_cases() {
+            let mut outs = Vec::new();
+            for v in IsaVersion::ALL {
+                let vm = Vm::new();
+                vm.seed(1);
+                vm.exec_source(c.source, v).unwrap_or_else(|e| panic!("case {} on {}: {}", c.name, v, e));
+                outs.push(vm.take_output());
+            }
+            assert!(outs.windows(2).all(|w| w[0] == w[1]), "case {} differs across versions", c.name);
+        }
+    }
+}

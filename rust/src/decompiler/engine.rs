@@ -1,0 +1,921 @@
+//! The decompilation engine: symbolic execution of raw bytecode over an
+//! expression stack, with structural reconstruction of loops, branches,
+//! bool-ops, ternaries, chained comparisons and comprehensions.
+//!
+//! Works from `CodeObject::raw` (the versioned byte encoding), never from
+//! the in-memory instruction stream — exactly the position a real
+//! decompiler is in.
+
+use std::rc::Rc;
+
+use super::DecompilerOptions;
+use crate::bytecode::{decode, BinOp, CodeObject, Const, Instr, IsaVersion, UnOp};
+use crate::pylang::ast::*;
+
+#[derive(Clone, Debug)]
+pub struct DecompileError(pub String);
+
+impl std::fmt::Display for DecompileError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "decompile error: {}", self.0)
+    }
+}
+
+impl std::error::Error for DecompileError {}
+
+fn err<T>(m: impl Into<String>) -> Result<T, DecompileError> {
+    Err(DecompileError(m.into()))
+}
+
+/// Stack items: expressions, plus code objects awaiting MAKE_FUNCTION.
+#[derive(Clone, Debug)]
+enum Item {
+    E(Expr),
+    Code(Rc<CodeObject>),
+}
+
+impl Item {
+    fn expr(self) -> Result<Expr, DecompileError> {
+        match self {
+            Item::E(e) => Ok(e),
+            Item::Code(c) => err(format!("raw code object <{}> on stack", c.name)),
+        }
+    }
+}
+
+#[derive(Clone)]
+struct LoopEnv {
+    /// Continue target (while-cond start or FOR_ITER position).
+    header: usize,
+    /// First instruction after the loop body (the loop's exit-test target).
+    exit: usize,
+    is_for: bool,
+}
+
+struct Engine<'a> {
+    code: &'a CodeObject,
+    instrs: Vec<Instr>,
+    opts: &'a DecompilerOptions,
+    /// Names needing `global` declarations (function scope stores).
+    global_decls: std::cell::RefCell<Vec<String>>,
+    /// Names needing `nonlocal` declarations (freevar stores).
+    nonlocal_decls: std::cell::RefCell<Vec<String>>,
+    is_module: bool,
+    /// Positions of backward `Jump`s, by target (precomputed once; the
+    /// per-statement scan was the decompiler's hot spot — see
+    /// EXPERIMENTS.md §Perf).
+    back_jumps: std::collections::HashMap<usize, Vec<usize>>,
+}
+
+/// Decompile one code object into a statement list.
+pub fn decompile_code_to_stmts(code: &Rc<CodeObject>, opts: &DecompilerOptions) -> Result<Vec<Stmt>, DecompileError> {
+    if let Some(vs) = &opts.versions {
+        if !vs.contains(&code.version) {
+            return err(format!("unsupported bytecode version {}", code.version));
+        }
+    }
+    let instrs = decode(&code.raw, code.version).map_err(|e| DecompileError(format!("decode: {}", e)))?;
+    if code.version == IsaVersion::V311 && !opts.v311_full_binary {
+        // Models pycdc's partial 3.11 BINARY_OP support.
+        for i in &instrs {
+            if matches!(i, Instr::Binary(BinOp::Pow | BinOp::MatMul | BinOp::FloorDiv | BinOp::Mod)) {
+                return err("unhandled BINARY_OP oparg on 3.11");
+            }
+        }
+    }
+    let is_module = code.name == "<module>";
+    let mut back_jumps: std::collections::HashMap<usize, Vec<usize>> = std::collections::HashMap::new();
+    for (j, ins) in instrs.iter().enumerate() {
+        if let Instr::Jump(t) = ins {
+            if (*t as usize) <= j {
+                back_jumps.entry(*t as usize).or_default().push(j);
+            }
+        }
+    }
+    let eng = Engine {
+        code,
+        instrs,
+        opts,
+        global_decls: Default::default(),
+        nonlocal_decls: Default::default(),
+        is_module,
+        back_jumps,
+    };
+
+    // Program-generated entry prologue (resume functions): leading
+    // LOAD_FASTs followed by a forward JUMP into the body.
+    let mut stack: Vec<Item> = Vec::new();
+    let mut start = 0usize;
+    {
+        let mut k = 0;
+        while matches!(eng.instrs.get(k), Some(Instr::LoadFast(_))) {
+            k += 1;
+        }
+        if let Some(Instr::Jump(t)) = eng.instrs.get(k) {
+            let t = *t as usize;
+            if t > k + 1 {
+                if !opts.jump_entry {
+                    return err("program-generated entry jump (resume function) not supported");
+                }
+                for i in 0..k {
+                    let Instr::LoadFast(slot) = eng.instrs[i] else { unreachable!() };
+                    stack.push(Item::E(Expr::Name(eng.varname(slot))));
+                }
+                start = t;
+            }
+        }
+    }
+
+    let mut stmts = eng.block(start, eng.instrs.len(), &mut stack, None)?;
+    if !stack.is_empty() {
+        return err(format!("{} values left on stack", stack.len()));
+    }
+    // Drop the trailing implicit `return None`.
+    if let Some(Stmt { kind: StmtKind::Return(v), .. }) = stmts.last() {
+        let implicit = matches!(v, None | Some(Expr::NoneLit));
+        if implicit && (is_module || code.argcount > 0 || true) {
+            // Only drop when it is the compiler's epilogue (last two raw
+            // instructions LOAD_CONST None; RETURN_VALUE).
+            let n = eng.instrs.len();
+            if n >= 2 && matches!(eng.instrs[n - 1], Instr::ReturnValue) {
+                if let Instr::LoadConst(c) = eng.instrs[n - 2] {
+                    if matches!(eng.code.consts.get(c as usize), Some(Const::None)) {
+                        stmts.pop();
+                    }
+                }
+            }
+        }
+    }
+    // Prepend scope declarations.
+    let mut out = Vec::new();
+    let nl = eng.nonlocal_decls.borrow();
+    if !nl.is_empty() {
+        out.push(Stmt::new(StmtKind::Nonlocal(nl.clone()), 0));
+    }
+    let gl = eng.global_decls.borrow();
+    if !gl.is_empty() {
+        out.push(Stmt::new(StmtKind::Global(gl.clone()), 0));
+    }
+    out.extend(stmts);
+    if out.is_empty() {
+        out.push(Stmt::new(StmtKind::Pass, 0));
+    }
+    Ok(out)
+}
+
+impl<'a> Engine<'a> {
+    fn varname(&self, i: u32) -> String {
+        self.code.varnames.get(i as usize).cloned().unwrap_or_else(|| format!("__v{}", i))
+    }
+
+    fn name(&self, i: u32) -> Result<String, DecompileError> {
+        self.code.names.get(i as usize).cloned().ok_or_else(|| DecompileError(format!("bad name index {}", i)))
+    }
+
+    fn deref_name(&self, i: u32) -> String {
+        self.code.cell_and_free_name(i as usize)
+    }
+
+    fn const_expr(&self, i: u32) -> Result<Item, DecompileError> {
+        match self.code.consts.get(i as usize) {
+            Some(Const::None) => Ok(Item::E(Expr::NoneLit)),
+            Some(Const::Bool(b)) => Ok(Item::E(Expr::Bool(*b))),
+            Some(Const::Int(v)) => Ok(Item::E(Expr::Int(*v))),
+            Some(Const::Float(f)) => Ok(Item::E(Expr::Float(*f))),
+            Some(Const::Str(s)) => Ok(Item::E(Expr::Str(s.clone()))),
+            Some(Const::Code(c)) => Ok(Item::Code(Rc::clone(c))),
+            None => err(format!("bad const index {}", i)),
+        }
+    }
+
+    /// Innermost loop starting exactly at `ip` (a backward jump in
+    /// [ip+1, end) targets ip). Returns the backward-jump position
+    /// (outermost / furthest wins).
+    fn backjump_to(&self, ip: usize, end: usize) -> Option<usize> {
+        let end = end.min(self.instrs.len());
+        self.back_jumps.get(&ip)?.iter().copied().filter(|&j| j > ip && j < end).max()
+    }
+
+    /// Evaluate a pure expression range: no statements may be produced.
+    fn expr_range(&self, start: usize, end: usize) -> Result<Expr, DecompileError> {
+        let mut stack = Vec::new();
+        let stmts = self.block(start, end, &mut stack, None)?;
+        if !stmts.is_empty() {
+            return err("expected expression, found statements");
+        }
+        if stack.len() != 1 {
+            return err(format!("expression range left {} values", stack.len()));
+        }
+        stack.pop().unwrap().expr()
+    }
+
+    /// Decompile [start, end) into statements, mutating the expression
+    /// stack.
+    fn block(&self, start: usize, end: usize, stack: &mut Vec<Item>, lp: Option<&LoopEnv>) -> Result<Vec<Stmt>, DecompileError> {
+        let mut out: Vec<Stmt> = Vec::new();
+        let mut ip = start;
+        while ip < end {
+            // While-loop at a statement boundary: a backward jump targets ip.
+            if stack.is_empty() {
+                if let Some(j) = self.backjump_to(ip, end) {
+                    // Not a for-loop (those are detected at FOR_ITER).
+                    if !matches!(self.instrs.get(ip), Some(Instr::ForIter(_))) {
+                        let (stmt, next) = self.while_loop(ip, j, end)?;
+                        out.push(stmt);
+                        ip = next;
+                        continue;
+                    }
+                }
+            }
+            let instr = self.instrs[ip].clone();
+            match instr {
+                Instr::Nop => ip += 1,
+                Instr::LoadConst(c) => {
+                    stack.push(self.const_expr(c)?);
+                    ip += 1;
+                }
+                Instr::LoadFast(i) => {
+                    stack.push(Item::E(Expr::Name(self.varname(i))));
+                    ip += 1;
+                }
+                Instr::LoadGlobal(n) => {
+                    stack.push(Item::E(Expr::Name(self.name(n)?)));
+                    ip += 1;
+                }
+                Instr::LoadDeref(i) => {
+                    stack.push(Item::E(Expr::Name(self.deref_name(i))));
+                    ip += 1;
+                }
+                Instr::LoadClosure(i) => {
+                    stack.push(Item::E(Expr::Name(self.deref_name(i))));
+                    ip += 1;
+                }
+                Instr::StoreFast(i) => {
+                    let v = stack.pop().ok_or_else(|| DecompileError("store with empty stack".into()))?.expr()?;
+                    out.push(Stmt::new(StmtKind::Assign { target: Target::Name(self.varname(i)), value: v }, 0));
+                    ip += 1;
+                }
+                Instr::StoreGlobal(n) => {
+                    let name = self.name(n)?;
+                    if !self.is_module {
+                        let mut g = self.global_decls.borrow_mut();
+                        if !g.contains(&name) {
+                            g.push(name.clone());
+                        }
+                    }
+                    let v = stack.pop().ok_or_else(|| DecompileError("store with empty stack".into()))?.expr()?;
+                    out.push(Stmt::new(StmtKind::Assign { target: Target::Name(name), value: v }, 0));
+                    ip += 1;
+                }
+                Instr::StoreDeref(i) => {
+                    let name = self.deref_name(i);
+                    if i as usize >= self.code.cellvars.len() {
+                        let mut nl = self.nonlocal_decls.borrow_mut();
+                        if !nl.contains(&name) {
+                            nl.push(name.clone());
+                        }
+                    }
+                    let v = stack.pop().ok_or_else(|| DecompileError("store with empty stack".into()))?.expr()?;
+                    out.push(Stmt::new(StmtKind::Assign { target: Target::Name(name), value: v }, 0));
+                    ip += 1;
+                }
+                Instr::StoreSubscr => {
+                    let idx = stack.pop().ok_or_else(|| DecompileError("underflow".into()))?.expr()?;
+                    let obj = stack.pop().ok_or_else(|| DecompileError("underflow".into()))?.expr()?;
+                    let val = stack.pop().ok_or_else(|| DecompileError("underflow".into()))?.expr()?;
+                    out.push(Stmt::new(StmtKind::Assign { target: Target::Subscript { value: obj, index: idx }, value: val }, 0));
+                    ip += 1;
+                }
+                Instr::BinarySubscr => {
+                    let idx = stack.pop().ok_or_else(|| DecompileError("underflow".into()))?.expr()?;
+                    let obj = stack.pop().ok_or_else(|| DecompileError("underflow".into()))?.expr()?;
+                    stack.push(Item::E(Expr::Subscript { value: Box::new(obj), index: Box::new(idx) }));
+                    ip += 1;
+                }
+                Instr::BuildSlice(n) => {
+                    let parts: Vec<Expr> = self.pop_exprs(stack, n as usize)?;
+                    let opt = |e: &Expr| -> Option<Box<Expr>> {
+                        if matches!(e, Expr::NoneLit) {
+                            None
+                        } else {
+                            Some(Box::new(e.clone()))
+                        }
+                    };
+                    let slice = Expr::Slice {
+                        start: opt(&parts[0]),
+                        stop: opt(&parts[1]),
+                        step: parts.get(2).and_then(opt),
+                    };
+                    stack.push(Item::E(slice));
+                    ip += 1;
+                }
+                Instr::PopTop => {
+                    // A bare POP_TOP with empty stack inside a for-loop is a
+                    // `break` discarding the iterator.
+                    if stack.is_empty() {
+                        if let (Some(l), Some(Instr::Jump(t))) = (lp, self.instrs.get(ip + 1)) {
+                            if l.is_for && *t as usize >= l.exit {
+                                out.push(Stmt::new(StmtKind::Break, 0));
+                                ip += 2;
+                                continue;
+                            }
+                        }
+                        return err("POP_TOP with empty stack");
+                    }
+                    let e = stack.pop().unwrap().expr()?;
+                    out.push(Stmt::new(StmtKind::Expr(e), 0));
+                    ip += 1;
+                }
+                Instr::DupTop => {
+                    // Chained comparison: DUP_TOP; ROT_THREE; COMPARE; ...
+                    if matches!(self.instrs.get(ip + 1), Some(Instr::RotThree)) {
+                        ip = self.chained_compare(ip, stack)?;
+                    } else {
+                        return err("DUP_TOP outside chained comparison");
+                    }
+                }
+                Instr::RotTwo | Instr::RotThree => return err("stray stack rotation"),
+                Instr::Binary(op) => {
+                    let b = stack.pop().ok_or_else(|| DecompileError("underflow".into()))?.expr()?;
+                    let a = stack.pop().ok_or_else(|| DecompileError("underflow".into()))?.expr()?;
+                    stack.push(Item::E(Expr::BinOp(op, Box::new(a), Box::new(b))));
+                    ip += 1;
+                }
+                Instr::Unary(op) => {
+                    let a = stack.pop().ok_or_else(|| DecompileError("underflow".into()))?.expr()?;
+                    stack.push(Item::E(Expr::UnaryOp(op, Box::new(a))));
+                    ip += 1;
+                }
+                Instr::Compare(c) => {
+                    let b = stack.pop().ok_or_else(|| DecompileError("underflow".into()))?.expr()?;
+                    let a = stack.pop().ok_or_else(|| DecompileError("underflow".into()))?.expr()?;
+                    stack.push(Item::E(Expr::Compare {
+                        left: Box::new(a),
+                        ops: vec![CompareKind::Cmp(c)],
+                        comparators: vec![b],
+                    }));
+                    ip += 1;
+                }
+                Instr::ContainsOp(inv) => {
+                    let b = stack.pop().ok_or_else(|| DecompileError("underflow".into()))?.expr()?;
+                    let a = stack.pop().ok_or_else(|| DecompileError("underflow".into()))?.expr()?;
+                    let k = if inv { CompareKind::NotIn } else { CompareKind::In };
+                    stack.push(Item::E(Expr::Compare { left: Box::new(a), ops: vec![k], comparators: vec![b] }));
+                    ip += 1;
+                }
+                Instr::IsOp(inv) => {
+                    let b = stack.pop().ok_or_else(|| DecompileError("underflow".into()))?.expr()?;
+                    let a = stack.pop().ok_or_else(|| DecompileError("underflow".into()))?.expr()?;
+                    let k = if inv { CompareKind::IsNot } else { CompareKind::Is };
+                    stack.push(Item::E(Expr::Compare { left: Box::new(a), ops: vec![k], comparators: vec![b] }));
+                    ip += 1;
+                }
+                Instr::JumpIfFalseOrPop(t) | Instr::JumpIfTrueOrPop(t) => {
+                    if !self.opts.boolop_value {
+                        return err("short-circuit boolean value reconstruction unsupported");
+                    }
+                    let kind = if matches!(instr, Instr::JumpIfFalseOrPop(_)) { BoolOpKind::And } else { BoolOpKind::Or };
+                    let lhs = stack.pop().ok_or_else(|| DecompileError("underflow".into()))?.expr()?;
+                    let rhs = self.expr_range(ip + 1, t as usize)?;
+                    let merged = match (kind, lhs) {
+                        (k, Expr::BoolOp(k2, mut items)) if k == k2 => {
+                            items.push(rhs);
+                            Expr::BoolOp(k, items)
+                        }
+                        (k, l) => Expr::BoolOp(k, vec![l, rhs]),
+                    };
+                    stack.push(Item::E(merged));
+                    ip = t as usize;
+                }
+                Instr::Jump(t) => {
+                    let t = t as usize;
+                    if let Some(l) = lp {
+                        if t == l.header {
+                            out.push(Stmt::new(StmtKind::Continue, 0));
+                            ip += 1;
+                            continue;
+                        }
+                        if t >= l.exit {
+                            out.push(Stmt::new(StmtKind::Break, 0));
+                            ip += 1;
+                            continue;
+                        }
+                    }
+                    if t < start {
+                        return err("irreducible control flow (jump before block)");
+                    }
+                    if t <= end && stack.is_empty() {
+                        // A statement-level forward jump whose construct was
+                        // not consumed by any structure handler: the region
+                        // in between is unreachable (e.g. the dead `else`
+                        // branch inside a dynamo resume function). Skip it.
+                        ip = t;
+                        continue;
+                    }
+                    return err(format!("unstructured forward jump {} -> {}", ip, t));
+                }
+                Instr::PopJumpIfFalse(t) => {
+                    let t = t as usize;
+                    // Try ternary first (value-producing if).
+                    if let Some(next) = self.try_ternary(ip, t, stack)? {
+                        ip = next;
+                        continue;
+                    }
+                    let cond = stack.pop().ok_or_else(|| DecompileError("underflow".into()))?.expr()?;
+                    // Loop-exit conditions are handled by while_loop; here a
+                    // forward target within block bounds is a statement if.
+                    if t > end {
+                        // `if cond: break`-style exit from enclosing loop.
+                        if let Some(l) = lp {
+                            if t >= l.exit {
+                                out.push(Stmt::new(
+                                    StmtKind::If {
+                                        cond: Expr::UnaryOp(UnOp::Not, Box::new(cond)),
+                                        then: vec![Stmt::new(StmtKind::Break, 0)],
+                                        orelse: vec![],
+                                    },
+                                    0,
+                                ));
+                                ip += 1;
+                                continue;
+                            }
+                        }
+                        return err("conditional jump out of block");
+                    }
+                    // Does the then-branch end with a forward else-skip?
+                    let mut then_end = t;
+                    let mut orelse = Vec::new();
+                    let mut next = t;
+                    if t >= 1 && t <= end {
+                        if let Some(Instr::Jump(e)) = self.instrs.get(t - 1) {
+                            let e = *e as usize;
+                            if e >= t && e <= end && !(lp.map(|l| e >= l.exit && e > end).unwrap_or(false)) {
+                                then_end = t - 1;
+                                let mut s2 = Vec::new();
+                                orelse = self.block(t, e, &mut s2, lp)?;
+                                if !s2.is_empty() {
+                                    return err("else branch left values on stack");
+                                }
+                                next = e;
+                            }
+                        }
+                    }
+                    let mut s1 = Vec::new();
+                    let then = self.block(ip + 1, then_end, &mut s1, lp)?;
+                    if !s1.is_empty() {
+                        return err("then branch left values on stack");
+                    }
+                    let then = if then.is_empty() { vec![Stmt::new(StmtKind::Pass, 0)] } else { then };
+                    out.push(Stmt::new(StmtKind::If { cond, then, orelse }, 0));
+                    ip = next;
+                }
+                Instr::PopJumpIfTrue(t) => {
+                    let t = t as usize;
+                    let cond = stack.pop().ok_or_else(|| DecompileError("underflow".into()))?.expr()?;
+                    // assert pattern: [LOAD_CONST msg; RAISE] then target.
+                    if t == ip + 3 {
+                        if let (Some(Instr::LoadConst(m)), Some(Instr::Raise)) = (self.instrs.get(ip + 1), self.instrs.get(ip + 2)) {
+                            let msg = self.const_expr(*m)?.expr()?;
+                            let msg = if matches!(msg, Expr::Str(ref s) if s == "AssertionError") { None } else { Some(msg) };
+                            out.push(Stmt::new(StmtKind::Assert { cond, msg }, 0));
+                            ip = t;
+                            continue;
+                        }
+                    }
+                    // General: `if not cond: ...`
+                    let mut s1 = Vec::new();
+                    let then = self.block(ip + 1, t, &mut s1, lp)?;
+                    if !s1.is_empty() {
+                        return err("if-not branch left values".to_string());
+                    }
+                    out.push(Stmt::new(
+                        StmtKind::If { cond: Expr::UnaryOp(UnOp::Not, Box::new(cond)), then, orelse: vec![] },
+                        0,
+                    ));
+                    ip = t;
+                }
+                Instr::GetIter => {
+                    // Part of a for-loop / comprehension when followed by
+                    // FOR_ITER; otherwise an explicit iter(...) value.
+                    if matches!(self.instrs.get(ip + 1), Some(Instr::ForIter(_))) {
+                        let (work, next) = self.for_loop(ip, end, stack, lp)?;
+                        match work {
+                            ForResult::Stmt(s) => out.push(s),
+                            ForResult::Value(e) => stack.push(Item::E(e)),
+                        }
+                        ip = next;
+                    } else {
+                        let e = stack.pop().ok_or_else(|| DecompileError("underflow".into()))?.expr()?;
+                        stack.push(Item::E(Expr::Call { func: Box::new(Expr::Name("iter".into())), args: vec![e] }));
+                        ip += 1;
+                    }
+                }
+                Instr::ForIter(_) => return err("FOR_ITER without GET_ITER"),
+                Instr::Call(n) => {
+                    let args = self.pop_exprs(stack, n as usize)?;
+                    let f = stack.pop().ok_or_else(|| DecompileError("underflow".into()))?.expr()?;
+                    stack.push(Item::E(Expr::Call { func: Box::new(f), args }));
+                    ip += 1;
+                }
+                Instr::LoadMethod(n) => {
+                    let name = self.name(n)?;
+                    let obj = stack.pop().ok_or_else(|| DecompileError("underflow".into()))?.expr()?;
+                    stack.push(Item::E(Expr::Attribute { value: Box::new(obj), name }));
+                    ip += 1;
+                }
+                Instr::CallMethod(n) => {
+                    let args = self.pop_exprs(stack, n as usize)?;
+                    let f = stack.pop().ok_or_else(|| DecompileError("underflow".into()))?.expr()?;
+                    let Expr::Attribute { value, name } = f else {
+                        return err("CALL_METHOD without method load");
+                    };
+                    stack.push(Item::E(Expr::MethodCall { recv: value, name, args }));
+                    ip += 1;
+                }
+                Instr::LoadAttr(n) => {
+                    let name = self.name(n)?;
+                    let obj = stack.pop().ok_or_else(|| DecompileError("underflow".into()))?.expr()?;
+                    stack.push(Item::E(Expr::Attribute { value: Box::new(obj), name }));
+                    ip += 1;
+                }
+                Instr::BuildList(n) => {
+                    let items = self.pop_exprs(stack, n as usize)?;
+                    stack.push(Item::E(Expr::List(items)));
+                    ip += 1;
+                }
+                Instr::BuildTuple(n) => {
+                    let items = self.pop_exprs(stack, n as usize)?;
+                    stack.push(Item::E(Expr::Tuple(items)));
+                    ip += 1;
+                }
+                Instr::BuildMap(n) => {
+                    let mut kvs = self.pop_exprs(stack, 2 * n as usize)?;
+                    let mut pairs = Vec::new();
+                    while !kvs.is_empty() {
+                        let k = kvs.remove(0);
+                        let v = kvs.remove(0);
+                        pairs.push((k, v));
+                    }
+                    stack.push(Item::E(Expr::Dict(pairs)));
+                    ip += 1;
+                }
+                Instr::ListAppend(_) => return err("LIST_APPEND outside comprehension"),
+                Instr::UnpackSequence(n) => {
+                    let value = stack.pop().ok_or_else(|| DecompileError("underflow".into()))?.expr()?;
+                    let (target, next) = self.parse_unpack_targets(ip + 1, n as usize)?;
+                    out.push(Stmt::new(StmtKind::Assign { target, value }, 0));
+                    ip = next;
+                }
+                Instr::MakeFunction(flags) => {
+                    let Item::Code(fcode) = stack.pop().ok_or_else(|| DecompileError("underflow".into()))? else {
+                        return err("MAKE_FUNCTION without code constant");
+                    };
+                    if flags & 2 != 0 {
+                        stack.pop(); // closure tuple — implicit in source form
+                    }
+                    let defaults: Vec<Expr> = if flags & 1 != 0 {
+                        match stack.pop().ok_or_else(|| DecompileError("underflow".into()))?.expr()? {
+                            Expr::Tuple(items) => items,
+                            other => vec![other],
+                        }
+                    } else {
+                        Vec::new()
+                    };
+                    // Lambda value or named def?
+                    let body = decompile_code_to_stmts(&fcode, self.opts)?;
+                    if fcode.name == "<lambda>" {
+                        if body.len() != 1 {
+                            return err("lambda body is not a single return");
+                        }
+                        let StmtKind::Return(Some(e)) = &body[0].kind else {
+                            return err("lambda body is not a single return");
+                        };
+                        let params: Vec<String> = fcode.varnames.iter().take(fcode.argcount).cloned().collect();
+                        stack.push(Item::E(Expr::Lambda { params, body: Box::new(e.clone()) }));
+                        ip += 1;
+                    } else {
+                        // Must be stored next.
+                        let (fname, next) = match self.instrs.get(ip + 1) {
+                            Some(Instr::StoreFast(i)) => (self.varname(*i), ip + 2),
+                            Some(Instr::StoreGlobal(n)) => (self.name(*n)?, ip + 2),
+                            Some(Instr::StoreDeref(i)) => (self.deref_name(*i), ip + 2),
+                            _ => return err("function object not stored"),
+                        };
+                        let nparams = fcode.argcount;
+                        let n_def = defaults.len();
+                        let params: Vec<Param> = fcode
+                            .varnames
+                            .iter()
+                            .take(nparams)
+                            .enumerate()
+                            .map(|(i, p)| Param {
+                                name: p.clone(),
+                                default: if i + n_def >= nparams { Some(defaults[i + n_def - nparams].clone()) } else { None },
+                            })
+                            .collect();
+                        out.push(Stmt::new(StmtKind::FuncDef { name: fname, params, body }, 0));
+                        ip = next;
+                    }
+                }
+                Instr::ReturnValue => {
+                    let v = stack.pop().ok_or_else(|| DecompileError("return with empty stack".into()))?.expr()?;
+                    out.push(Stmt::new(StmtKind::Return(Some(v)), 0));
+                    ip += 1;
+                    // Skip any unreachable padding up to the next jump target
+                    // (the structurer delimits ranges, so just stop here if
+                    // nothing follows).
+                }
+                Instr::Raise => {
+                    let v = stack.pop().ok_or_else(|| DecompileError("raise with empty stack".into()))?.expr()?;
+                    out.push(Stmt::new(StmtKind::Raise(v), 0));
+                    ip += 1;
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    fn pop_exprs(&self, stack: &mut Vec<Item>, n: usize) -> Result<Vec<Expr>, DecompileError> {
+        if stack.len() < n {
+            return err("stack underflow");
+        }
+        let items = stack.split_off(stack.len() - n);
+        items.into_iter().map(|i| i.expr()).collect()
+    }
+
+    /// `while` loop whose condition starts at `h` and whose backward jump is
+    /// at `j`. Returns (stmt, continuation ip).
+    fn while_loop(&self, h: usize, j: usize, end: usize) -> Result<(Stmt, usize), DecompileError> {
+        // Find the exit test: first PopJumpIfFalse in [h, j) at top level
+        // whose target is beyond j.
+        let mut p = None;
+        for k in h..j {
+            if let Instr::PopJumpIfFalse(t) = self.instrs[k] {
+                if t as usize > j {
+                    p = Some((k, t as usize));
+                    break;
+                }
+            }
+        }
+        let Some((ptest, exit)) = p else {
+            return err("while loop without exit test");
+        };
+        let cond = self.expr_range(h, ptest)?;
+        // Break targets beyond the exit mark a while-else region.
+        let mut break_target: Option<usize> = None;
+        for k in ptest + 1..j {
+            if let Instr::Jump(t) = self.instrs[k] {
+                let t = t as usize;
+                if t > exit && t <= end {
+                    break_target = Some(break_target.map_or(t, |b: usize| b.max(t)));
+                }
+            }
+        }
+        let construct_end = break_target.unwrap_or(exit);
+        let lp = LoopEnv { header: h, exit, is_for: false };
+        let mut s = Vec::new();
+        let body = self.block(ptest + 1, j, &mut s, Some(&lp))?;
+        if !s.is_empty() {
+            return err("while body left values on stack");
+        }
+        let orelse = if construct_end > exit {
+            if !self.opts.loop_else {
+                return err("while-else reconstruction unsupported");
+            }
+            let mut s2 = Vec::new();
+            let o = self.block(exit, construct_end, &mut s2, None)?;
+            if !s2.is_empty() {
+                return err("while else left values on stack");
+            }
+            o
+        } else {
+            Vec::new()
+        };
+        Ok((Stmt::new(StmtKind::While { cond, body, orelse }, 0), construct_end))
+    }
+
+    /// A for-loop (or comprehension) at `GET_ITER` position `gi`.
+    fn for_loop(
+        &self,
+        gi: usize,
+        end: usize,
+        stack: &mut Vec<Item>,
+        _outer: Option<&LoopEnv>,
+    ) -> Result<(ForResult, usize), DecompileError> {
+        let h = gi + 1; // FOR_ITER position
+        let Instr::ForIter(exit) = self.instrs[h] else {
+            return err("expected FOR_ITER");
+        };
+        let exit = exit as usize;
+        let Some(j) = self.backjump_to(h, end.max(exit)) else {
+            return err("for loop without backward jump");
+        };
+        let iterable = stack.pop().ok_or_else(|| DecompileError("GET_ITER with empty stack".into()))?.expr()?;
+
+        // Comprehension: empty-list accumulator directly below the iterable.
+        let is_comp = matches!(stack.last(), Some(Item::E(Expr::List(items))) if items.is_empty())
+            && (h + 1..j).any(|k| matches!(self.instrs[k], Instr::ListAppend(_)));
+        if is_comp {
+            if !self.opts.comprehension {
+                return err("comprehension reconstruction unsupported");
+            }
+            stack.pop(); // the accumulator
+            let (target, mut k) = self.parse_unpack_or_store(h + 1)?;
+            // conds: POP_JUMP_IF_FALSE back to header.
+            let mut conds = Vec::new();
+            loop {
+                // Scan one expression followed by PJIF(header)?
+                let mut probe = k;
+                let mut found = None;
+                while probe < j {
+                    if let Instr::PopJumpIfFalse(t) = self.instrs[probe] {
+                        if t as usize == h {
+                            found = Some(probe);
+                        }
+                        break;
+                    }
+                    if matches!(self.instrs[probe], Instr::ListAppend(_)) {
+                        break;
+                    }
+                    probe += 1;
+                }
+                match found {
+                    Some(p) => {
+                        if !self.opts.comprehension_conds {
+                            return err("comprehension condition reconstruction unsupported");
+                        }
+                        conds.push(self.expr_range(k, p)?);
+                        k = p + 1;
+                    }
+                    None => break,
+                }
+            }
+            // elt expression ends right before LIST_APPEND.
+            let mut append_at = None;
+            for q in k..j {
+                if matches!(self.instrs[q], Instr::ListAppend(_)) {
+                    append_at = Some(q);
+                    break;
+                }
+            }
+            let Some(app) = append_at else {
+                return err("comprehension without LIST_APPEND");
+            };
+            let elt = self.expr_range(k, app)?;
+            let comp = Expr::ListComp { elt: Box::new(elt), target: Box::new(target), iter: Box::new(iterable), conds };
+            return Ok((ForResult::Value(comp), exit));
+        }
+
+        // Regular for-loop.
+        let (target, body_start) = self.parse_unpack_or_store(h + 1)?;
+        // Break targets beyond exit -> for-else.
+        let mut break_target: Option<usize> = None;
+        for q in body_start..j {
+            if let Instr::Jump(t) = self.instrs[q] {
+                let t = t as usize;
+                if t > exit {
+                    break_target = Some(break_target.map_or(t, |b: usize| b.max(t)));
+                }
+            }
+        }
+        let construct_end = break_target.unwrap_or(exit);
+        let lp = LoopEnv { header: h, exit, is_for: true };
+        let mut s = Vec::new();
+        let body = self.block(body_start, j, &mut s, Some(&lp))?;
+        if !s.is_empty() {
+            return err("for body left values on stack");
+        }
+        let orelse = if construct_end > exit {
+            if !self.opts.loop_else {
+                return err("for-else reconstruction unsupported");
+            }
+            let mut s2 = Vec::new();
+            let o = self.block(exit, construct_end, &mut s2, None)?;
+            if !s2.is_empty() {
+                return err("for else left values on stack");
+            }
+            o
+        } else {
+            Vec::new()
+        };
+        Ok((ForResult::Stmt(Stmt::new(StmtKind::For { target, iter: iterable, body, orelse }, 0)), construct_end))
+    }
+
+    /// Parse a store-target at `ip` (StoreFast / tuple unpack).
+    fn parse_unpack_or_store(&self, ip: usize) -> Result<(Target, usize), DecompileError> {
+        match self.instrs.get(ip) {
+            Some(Instr::StoreFast(i)) => Ok((Target::Name(self.varname(*i)), ip + 1)),
+            Some(Instr::StoreGlobal(n)) => Ok((Target::Name(self.name(*n)?), ip + 1)),
+            Some(Instr::StoreDeref(i)) => Ok((Target::Name(self.deref_name(*i)), ip + 1)),
+            Some(Instr::UnpackSequence(n)) => self.parse_unpack_targets(ip + 1, *n as usize),
+            other => err(format!("expected store target, found {:?}", other)),
+        }
+    }
+
+    fn parse_unpack_targets(&self, mut ip: usize, n: usize) -> Result<(Target, usize), DecompileError> {
+        let mut ts = Vec::new();
+        for _ in 0..n {
+            let (t, next) = self.parse_unpack_or_store(ip)?;
+            ts.push(t);
+            ip = next;
+        }
+        Ok((Target::Tuple(ts), ip))
+    }
+
+    /// Ternary: PJIF(t); <then-expr>; JUMP(e); t: <else-expr>; e:
+    /// Returns Some(next ip) and pushes the IfExp on success.
+    fn try_ternary(&self, ip: usize, t: usize, stack: &mut Vec<Item>) -> Result<Option<usize>, DecompileError> {
+        if t < 1 || t > self.instrs.len() {
+            return Ok(None);
+        }
+        let Some(Instr::Jump(e)) = self.instrs.get(t - 1) else {
+            return Ok(None);
+        };
+        let e = *e as usize;
+        if e <= t {
+            return Ok(None);
+        }
+        let Ok(then) = self.expr_range(ip + 1, t - 1) else {
+            return Ok(None);
+        };
+        let Ok(orelse) = self.expr_range(t, e) else {
+            return Ok(None);
+        };
+        if !self.opts.ternary {
+            return err("ternary reconstruction unsupported");
+        }
+        if !self.opts.nested_ternary && (matches!(then, Expr::IfExp { .. }) || matches!(orelse, Expr::IfExp { .. })) {
+            return err("nested ternary reconstruction unsupported");
+        }
+        let cond = stack.pop().ok_or_else(|| DecompileError("underflow".into()))?.expr()?;
+        stack.push(Item::E(Expr::IfExp { cond: Box::new(cond), then: Box::new(then), orelse: Box::new(orelse) }));
+        Ok(Some(e))
+    }
+
+    /// Chained comparison starting at the DUP_TOP of the first link.
+    /// Stack on entry: [..., left, c1].
+    fn chained_compare(&self, mut ip: usize, stack: &mut Vec<Item>) -> Result<usize, DecompileError> {
+        if !self.opts.chained_compare {
+            return err("chained comparison reconstruction unsupported");
+        }
+        let mut ops: Vec<CompareKind> = Vec::new();
+        let mut comparators: Vec<Expr> = Vec::new();
+        let first_right = stack.pop().ok_or_else(|| DecompileError("underflow".into()))?.expr()?;
+        let left = stack.pop().ok_or_else(|| DecompileError("underflow".into()))?.expr()?;
+        let mut pending_right = first_right;
+        loop {
+            // expect DUP_TOP, ROT_THREE, <compare-ish>, JIFOP(cleanup)
+            if !matches!(self.instrs.get(ip), Some(Instr::DupTop)) || !matches!(self.instrs.get(ip + 1), Some(Instr::RotThree)) {
+                return err("malformed comparison chain");
+            }
+            let op = self.compare_kind_at(ip + 2)?;
+            let Some(Instr::JumpIfFalseOrPop(c)) = self.instrs.get(ip + 3) else {
+                return err("malformed comparison chain (no short-circuit)");
+            };
+            ops.push(op);
+            comparators.push(pending_right.clone());
+            // Next comparator expression: up to the next DUP_TOP link or the
+            // final compare (at cleanup-2).
+            let clean = *c as usize;
+            let final_cmp = clean.checked_sub(2).ok_or_else(|| DecompileError("bad chain cleanup".into()))?;
+            let mut q = ip + 4;
+            while q < final_cmp {
+                if matches!(self.instrs[q], Instr::DupTop) && matches!(self.instrs.get(q + 1), Some(Instr::RotThree)) {
+                    break;
+                }
+                q += 1;
+            }
+            pending_right = self.expr_range(ip + 4, q)?;
+            if q == final_cmp {
+                // final link: compare at q, then JUMP(end)
+                let op = self.compare_kind_at(q)?;
+                ops.push(op);
+                comparators.push(pending_right);
+                let Some(Instr::Jump(endt)) = self.instrs.get(q + 1) else {
+                    return err("malformed chain tail");
+                };
+                let endt = *endt as usize;
+                // cleanup block: ROT_TWO, POP_TOP
+                stack.push(Item::E(Expr::Compare { left: Box::new(left), ops, comparators }));
+                return Ok(endt);
+            }
+            ip = q;
+        }
+    }
+
+    fn compare_kind_at(&self, ip: usize) -> Result<CompareKind, DecompileError> {
+        match self.instrs.get(ip) {
+            Some(Instr::Compare(c)) => Ok(CompareKind::Cmp(*c)),
+            Some(Instr::ContainsOp(false)) => Ok(CompareKind::In),
+            Some(Instr::ContainsOp(true)) => Ok(CompareKind::NotIn),
+            Some(Instr::IsOp(false)) => Ok(CompareKind::Is),
+            Some(Instr::IsOp(true)) => Ok(CompareKind::IsNot),
+            other => err(format!("expected comparison op, found {:?}", other)),
+        }
+    }
+}
+
+enum ForResult {
+    Stmt(Stmt),
+    Value(Expr),
+}

@@ -1,0 +1,1259 @@
+//! Symbolic evaluation of bytecode: dynamo's frontend.
+//!
+//! Executes a function's bytecode over [`Sym`] values: Python-level
+//! computation (ints, lists, loops over ranges) runs *concretely* — loops
+//! unroll, branches fold — while tensor operations become graph nodes. The
+//! first operation that cannot be represented produces a graph **break**
+//! ([`Outcome::Break`] / [`Outcome::Branch`]); unsupported constructs abort
+//! the capture entirely (the function then runs uncompiled).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use super::guards::Guard;
+use super::sym::{Origin, Sym};
+use crate::bytecode::{BinOp, CmpOp, CodeObject, Instr, UnOp};
+use crate::graph::{Graph, NodeId, OpKind};
+use crate::value::Value;
+use crate::vm;
+
+/// What the transformed bytecode must replay inline at the break site.
+#[derive(Clone, Debug)]
+pub enum InlineEmit {
+    /// `callee(args...)` — operands: [callee, arg0..argn-1].
+    CallFn(u32),
+    /// `recv.name(args...)` — operands: [recv, arg0..argn-1].
+    CallMethod { name: String, argc: u32 },
+    /// `iter(obj)` — operands: [obj].
+    GetIterOp,
+    /// `obj[idx]` — operands: [obj, idx].
+    Subscr,
+    /// tensor-op the graph can't hold — operands: [a, b].
+    BinaryInline(BinOp),
+    CompareInline(CmpOp),
+    ContainsInline(bool),
+    UnaryInline(UnOp),
+    /// `global = value` — operands: [value]; no result.
+    StoreGlobalInline(String),
+    /// `obj[idx] = value` — operands: [value, obj, idx]; no result.
+    StoreSubscrInline,
+    /// `raise value` — operands: [value]; no resume.
+    RaiseInline,
+    /// unpack a tensor — operands: [seq]; results = n.
+    UnpackInline(u32),
+}
+
+impl InlineEmit {
+    pub fn results(&self) -> usize {
+        match self {
+            InlineEmit::StoreGlobalInline(_) | InlineEmit::StoreSubscrInline | InlineEmit::RaiseInline => 0,
+            InlineEmit::UnpackInline(n) => *n as usize,
+            _ => 1,
+        }
+    }
+
+    pub fn describe(&self) -> String {
+        match self {
+            InlineEmit::CallFn(n) => format!("call({})", n),
+            InlineEmit::CallMethod { name, argc } => format!(".{}({})", name, argc),
+            InlineEmit::GetIterOp => "iter()".into(),
+            InlineEmit::Subscr => "subscript".into(),
+            InlineEmit::BinaryInline(op) => format!("binary {}", op.symbol()),
+            InlineEmit::CompareInline(op) => format!("compare {}", op.symbol()),
+            InlineEmit::ContainsInline(_) => "contains".into(),
+            InlineEmit::UnaryInline(op) => format!("unary {}", op.symbol().trim()),
+            InlineEmit::StoreGlobalInline(n) => format!("store global {}", n),
+            InlineEmit::StoreSubscrInline => "store subscript".into(),
+            InlineEmit::RaiseInline => "raise".into(),
+            InlineEmit::UnpackInline(n) => format!("unpack {}", n),
+        }
+    }
+}
+
+#[derive(Debug)]
+pub enum Outcome {
+    /// Ran to RETURN_VALUE: full-graph capture.
+    Return(Sym),
+    /// Graph break: replay `emit` over `operands` inline, then resume at
+    /// `at + 1` with `results` extra stack values.
+    Break { at: usize, emit: InlineEmit, operands: Vec<Sym>, stack: Vec<Sym>, locals: Vec<Option<Sym>>, reason: String },
+    /// Data-dependent branch on a tensor: two resume points.
+    Branch { at: usize, cond: Sym, true_at: usize, false_at: usize, stack: Vec<Sym>, locals: Vec<Option<Sym>>, reason: String },
+}
+
+/// A completed capture.
+pub struct Capture {
+    pub graph: Graph,
+    /// Origin of each graph input (parallel to `graph.inputs`).
+    pub input_origins: Vec<Origin>,
+    pub guards: Vec<Guard>,
+    pub outcome: Outcome,
+    pub traced_instrs: usize,
+}
+
+/// Capture failure → the function runs uncompiled.
+#[derive(Debug, Clone)]
+pub struct Abort(pub String);
+
+pub struct Limits {
+    pub max_instrs: usize,
+    pub max_nodes: usize,
+}
+
+impl Default for Limits {
+    fn default() -> Self {
+        Limits { max_instrs: 20_000, max_nodes: 2_000 }
+    }
+}
+
+struct Tracer<'a> {
+    code: &'a CodeObject,
+    globals: &'a HashMap<String, Value>,
+    graph: Graph,
+    input_origins: Vec<Origin>,
+    lifted: HashMap<String, NodeId>,
+    guards: Vec<Guard>,
+    guard_keys: std::collections::HashSet<String>,
+    stack: Vec<Sym>,
+    locals: Vec<Option<Sym>>,
+    limits: Limits,
+    traced: usize,
+}
+
+type Step = Result<Option<Outcome>, Abort>;
+
+pub fn capture(
+    code: &Rc<CodeObject>,
+    args: &[Value],
+    globals: &HashMap<String, Value>,
+    graph_name: &str,
+    limits: Limits,
+) -> Result<Capture, Abort> {
+    if !code.freevars.is_empty() || !code.cellvars.is_empty() {
+        return Err(Abort("function uses closures".into()));
+    }
+    if args.len() != code.argcount {
+        return Err(Abort(format!("arity mismatch: {} args for {}", args.len(), code.argcount)));
+    }
+    let mut t = Tracer {
+        code,
+        globals,
+        graph: Graph::new(graph_name),
+        input_origins: Vec::new(),
+        lifted: HashMap::new(),
+        guards: Vec::new(),
+        guard_keys: std::collections::HashSet::new(),
+        stack: Vec::new(),
+        locals: vec![None; code.varnames.len().max(code.argcount)],
+        limits,
+        traced: 0,
+    };
+    for (i, a) in args.iter().enumerate() {
+        let sym = t.value_to_sym(a, Some(Origin::Arg(i)))?;
+        t.locals[i] = Some(sym);
+    }
+    let outcome = t.run()?;
+    Ok(Capture {
+        graph: t.graph,
+        input_origins: t.input_origins,
+        guards: t.guards,
+        outcome,
+        traced_instrs: t.traced,
+    })
+}
+
+impl<'a> Tracer<'a> {
+    // ---- guards & lifting ----
+
+    fn add_guard(&mut self, g: Guard) {
+        let key = g.describe();
+        if self.guard_keys.insert(key) {
+            self.guards.push(g);
+        }
+    }
+
+    fn lift_tensor(&mut self, t: &crate::tensor::Tensor, origin: Origin) -> NodeId {
+        let key = origin.describe();
+        if let Some(&id) = self.lifted.get(&key) {
+            return id;
+        }
+        let id = self.graph.placeholder(&format!("l_{}", key), t.shape());
+        self.lifted.insert(key, id);
+        self.input_origins.push(origin.clone());
+        self.add_guard(Guard::TensorShape { origin, shape: t.shape().to_vec() });
+        id
+    }
+
+    /// Convert a concrete runtime value into a Sym, adding guards.
+    fn value_to_sym(&mut self, v: &Value, origin: Option<Origin>) -> Result<Sym, Abort> {
+        match v {
+            Value::Tensor(t) => match origin {
+                Some(o) => Ok(Sym::Tensor(self.lift_tensor(t, o))),
+                None => Ok(Sym::Tensor(self.graph.const_tensor((**t).clone()))),
+            },
+            Value::None | Value::Bool(_) | Value::Int(_) | Value::Float(_) | Value::Str(_) | Value::Range(..) => {
+                if let Some(o) = &origin {
+                    self.add_guard(Guard::ConstEq { origin: o.clone(), value: v.clone() });
+                }
+                Ok(Sym::Const { value: v.clone(), origin })
+            }
+            Value::Builtin(_) | Value::Func(_) | Value::Dict(_) | Value::CompiledGraph(_) => {
+                if let Some(o) = &origin {
+                    self.add_guard(Guard::Identity { origin: o.clone(), value: v.clone() });
+                }
+                Ok(Sym::Const { value: v.clone(), origin })
+            }
+            Value::List(l) => {
+                let o = origin.ok_or_else(|| Abort("list value without origin".into()))?;
+                self.add_guard(Guard::Len { origin: o.clone(), len: l.borrow().len() });
+                let items: Result<Vec<Sym>, Abort> = l
+                    .borrow()
+                    .iter()
+                    .enumerate()
+                    .map(|(i, e)| self.value_to_sym(e, Some(o.clone().index(Value::Int(i as i64)))))
+                    .collect();
+                Ok(Sym::List { items: Rc::new(RefCell::new(items?)), external: true })
+            }
+            Value::Tuple(t) => {
+                let o = origin.ok_or_else(|| Abort("tuple value without origin".into()))?;
+                self.add_guard(Guard::Len { origin: o.clone(), len: t.len() });
+                let items: Result<Vec<Sym>, Abort> = t
+                    .iter()
+                    .enumerate()
+                    .map(|(i, e)| self.value_to_sym(e, Some(o.clone().index(Value::Int(i as i64)))))
+                    .collect();
+                Ok(Sym::Tuple(Rc::new(items?)))
+            }
+            Value::Iter(it) => {
+                let o = origin.ok_or_else(|| Abort("iterator without origin".into()))?;
+                let b = it.borrow();
+                self.add_guard(Guard::IterRemaining { origin: o.clone(), len: b.items.len() - b.pos });
+                let items: Result<Vec<Sym>, Abort> = b.items[b.pos..]
+                    .iter()
+                    .enumerate()
+                    .map(|(i, e)| self.value_to_sym(e, Some(o.clone().index(Value::Int(i as i64)))))
+                    .collect();
+                Ok(Sym::Iter { items: Rc::new(RefCell::new(items?)), pos: 0 })
+            }
+            Value::Slice(_) => Ok(Sym::Const { value: v.clone(), origin }),
+            other => Err(Abort(format!("unsupported argument type {}", other.type_name()))),
+        }
+    }
+
+    /// Tensor node for a sym participating in a tensor op.
+    fn tensorify(&mut self, s: &Sym) -> Result<NodeId, Abort> {
+        match s {
+            Sym::Tensor(id) => Ok(*id),
+            Sym::Const { value, .. } => match value {
+                Value::Int(i) => Ok(self.graph.const_scalar(*i as f64)),
+                Value::Float(f) => Ok(self.graph.const_scalar(*f)),
+                Value::Bool(b) => Ok(self.graph.const_scalar(*b as i64 as f64)),
+                other => Err(Abort(format!("cannot use {} in tensor op", other.type_name()))),
+            },
+            other => Err(Abort(format!("cannot use {} in tensor op", other.type_desc()))),
+        }
+    }
+
+    fn is_tensorish(s: &Sym) -> bool {
+        matches!(s, Sym::Tensor(_))
+    }
+
+    fn add_node(&mut self, op: OpKind, args: Vec<NodeId>) -> Result<Sym, Abort> {
+        if self.graph.nodes.len() > self.limits.max_nodes {
+            return Err(Abort("graph too large".into()));
+        }
+        let id = self.graph.add_op(op, args).map_err(Abort)?;
+        Ok(Sym::Tensor(id))
+    }
+
+    // ---- driver ----
+
+    fn pop(&mut self) -> Result<Sym, Abort> {
+        self.stack.pop().ok_or_else(|| Abort("symbolic stack underflow".into()))
+    }
+
+    fn popn(&mut self, n: usize) -> Result<Vec<Sym>, Abort> {
+        if self.stack.len() < n {
+            return Err(Abort("symbolic stack underflow".into()));
+        }
+        Ok(self.stack.split_off(self.stack.len() - n))
+    }
+
+    fn brk(&mut self, at: usize, emit: InlineEmit, operands: Vec<Sym>, reason: &str) -> Outcome {
+        Outcome::Break {
+            at,
+            emit,
+            operands,
+            stack: self.stack.clone(),
+            locals: self.locals.clone(),
+            reason: reason.to_string(),
+        }
+    }
+
+    fn run(&mut self) -> Result<Outcome, Abort> {
+        let mut ip = 0usize;
+        loop {
+            self.traced += 1;
+            if self.traced > self.limits.max_instrs {
+                return Err(Abort("trace budget exceeded (unbounded python loop?)".into()));
+            }
+            let Some(instr) = self.code.instrs.get(ip).cloned() else {
+                return Err(Abort(format!("symbolic ip {} out of range", ip)));
+            };
+            let cur = ip;
+            ip += 1;
+            match self.step(&instr, cur, &mut ip)? {
+                Some(outcome) => return Ok(outcome),
+                None => continue,
+            }
+        }
+    }
+
+    /// Execute one instruction; Some(outcome) ends the capture.
+    fn step(&mut self, instr: &Instr, cur: usize, ip: &mut usize) -> Step {
+        match instr {
+            Instr::Nop => {}
+            Instr::LoadConst(c) => {
+                let v = vm_const(self.code, *c)?;
+                self.stack.push(Sym::constant(v));
+            }
+            Instr::LoadFast(i) => {
+                let s = self.locals.get(*i as usize).cloned().flatten().ok_or_else(|| {
+                    Abort(format!(
+                        "local '{}' referenced before assignment",
+                        self.code.varnames.get(*i as usize).cloned().unwrap_or_default()
+                    ))
+                })?;
+                self.stack.push(s);
+            }
+            Instr::StoreFast(i) => {
+                let s = self.pop()?;
+                let idx = *i as usize;
+                if idx >= self.locals.len() {
+                    self.locals.resize(idx + 1, None);
+                }
+                self.locals[idx] = Some(s);
+            }
+            Instr::LoadGlobal(n) => {
+                let name = self.code.names[*n as usize].clone();
+                let v = self
+                    .globals
+                    .get(&name)
+                    .cloned()
+                    .ok_or_else(|| Abort(format!("global '{}' not defined at capture", name)))?;
+                let s = self.value_to_sym(&v, Some(Origin::Global(name)))?;
+                self.stack.push(s);
+            }
+            Instr::StoreGlobal(n) => {
+                let name = self.code.names[*n as usize].clone();
+                let val = self.pop()?;
+                return Ok(Some(self.brk(cur, InlineEmit::StoreGlobalInline(name.clone()), vec![val], &format!("side effect: global store to '{}'", name))));
+            }
+            Instr::LoadDeref(_) | Instr::StoreDeref(_) | Instr::LoadClosure(_) => {
+                return Err(Abort("closure variable access".into()));
+            }
+            Instr::MakeFunction(_) => return Err(Abort("nested function construction".into())),
+            Instr::PopTop => {
+                self.pop()?;
+            }
+            Instr::DupTop => {
+                let s = self.stack.last().cloned().ok_or_else(|| Abort("underflow".into()))?;
+                self.stack.push(s);
+            }
+            Instr::RotTwo => {
+                let n = self.stack.len();
+                if n < 2 {
+                    return Err(Abort("underflow".into()));
+                }
+                self.stack.swap(n - 1, n - 2);
+            }
+            Instr::RotThree => {
+                let c = self.pop()?;
+                let b = self.pop()?;
+                let a = self.pop()?;
+                self.stack.push(c);
+                self.stack.push(a);
+                self.stack.push(b);
+            }
+            Instr::Binary(op) => {
+                let b = self.pop()?;
+                let a = self.pop()?;
+                return self.binary(cur, *op, a, b);
+            }
+            Instr::Unary(op) => {
+                let a = self.pop()?;
+                match (op, &a) {
+                    (UnOp::Neg, Sym::Tensor(id)) => {
+                        let s = self.add_node(OpKind::Neg, vec![*id])?;
+                        self.stack.push(s);
+                    }
+                    (UnOp::Pos, Sym::Tensor(_)) => self.stack.push(a),
+                    (UnOp::Not, Sym::Tensor(_)) => {
+                        return Ok(Some(self.brk(cur, InlineEmit::UnaryInline(*op), vec![a], "data-dependent `not tensor`")));
+                    }
+                    _ => match a.as_value() {
+                        Some(v) => {
+                            let r = match op {
+                                UnOp::Not => Value::Bool(!v.truthy().map_err(Abort)?),
+                                UnOp::Neg => vm::binary_op_values(BinOp::Sub, &Value::Int(0), &v).map_err(Abort)?,
+                                UnOp::Pos => v,
+                            };
+                            self.stack.push(Sym::constant(r));
+                        }
+                        None => return Err(Abort(format!("unary {} on {}", op.symbol().trim(), a.type_desc()))),
+                    },
+                }
+            }
+            Instr::Compare(cmp) => {
+                let b = self.pop()?;
+                let a = self.pop()?;
+                if Self::is_tensorish(&a) || Self::is_tensorish(&b) {
+                    return Ok(Some(self.brk(cur, InlineEmit::CompareInline(*cmp), vec![a, b], "tensor comparison materializes a value")));
+                }
+                match (a.as_value(), b.as_value()) {
+                    (Some(x), Some(y)) => {
+                        let r = vm::interp_compare(*cmp, &x, &y).map_err(Abort)?;
+                        self.stack.push(Sym::constant(r));
+                    }
+                    _ => return Err(Abort("comparison on traced structure".into())),
+                }
+            }
+            Instr::ContainsOp(inv) => {
+                let container = self.pop()?;
+                let item = self.pop()?;
+                if Self::is_tensorish(&container) || Self::is_tensorish(&item) {
+                    return Ok(Some(self.brk(cur, InlineEmit::ContainsInline(*inv), vec![item, container], "tensor containment")));
+                }
+                match (item.as_value(), container.as_value()) {
+                    (Some(i), Some(c)) => {
+                        let found = vm::interp_contains(&c, &i).map_err(Abort)?;
+                        self.stack.push(Sym::constant(Value::Bool(found != *inv)));
+                    }
+                    _ => return Err(Abort("containment on traced structure".into())),
+                }
+            }
+            Instr::IsOp(inv) => {
+                let b = self.pop()?;
+                let a = self.pop()?;
+                // `tensor is None` folds to False.
+                let r = match (&a, &b) {
+                    (Sym::Tensor(_), Sym::Const { value: Value::None, .. }) | (Sym::Const { value: Value::None, .. }, Sym::Tensor(_)) => false,
+                    _ => match (a.as_value(), b.as_value()) {
+                        (Some(x), Some(y)) => x.is_identical(&y),
+                        _ => return Err(Abort("identity test on traced structure".into())),
+                    },
+                };
+                self.stack.push(Sym::constant(Value::Bool(r != *inv)));
+            }
+            Instr::Jump(t) => {
+                *ip = *t as usize;
+            }
+            Instr::PopJumpIfFalse(t) | Instr::PopJumpIfTrue(t) => {
+                let jump_on = matches!(instr, Instr::PopJumpIfTrue(_));
+                let cond = self.pop()?;
+                if Self::is_tensorish(&cond) {
+                    let (true_at, false_at) = if jump_on { (*t as usize, cur + 1) } else { (cur + 1, *t as usize) };
+                    return Ok(Some(Outcome::Branch {
+                        at: cur,
+                        cond,
+                        true_at,
+                        false_at,
+                        stack: self.stack.clone(),
+                        locals: self.locals.clone(),
+                        reason: "data-dependent control flow on a tensor".into(),
+                    }));
+                }
+                let v = cond.as_value().ok_or_else(|| Abort("branch on traced structure".into()))?;
+                let truth = v.truthy().map_err(Abort)?;
+                if truth == jump_on {
+                    *ip = *t as usize;
+                }
+            }
+            Instr::JumpIfFalseOrPop(t) | Instr::JumpIfTrueOrPop(t) => {
+                let jump_on = matches!(instr, Instr::JumpIfTrueOrPop(_));
+                let cond = self.stack.last().cloned().ok_or_else(|| Abort("underflow".into()))?;
+                if Self::is_tensorish(&cond) {
+                    return Err(Abort("boolean operator on tensor".into()));
+                }
+                let v = cond.as_value().ok_or_else(|| Abort("bool-op on traced structure".into()))?;
+                let truth = v.truthy().map_err(Abort)?;
+                if truth == jump_on {
+                    *ip = *t as usize;
+                } else {
+                    self.stack.pop();
+                }
+            }
+            Instr::GetIter => {
+                let obj = self.pop()?;
+                match &obj {
+                    Sym::List { items, .. } => {
+                        let its = items.borrow().clone();
+                        self.stack.push(Sym::Iter { items: Rc::new(RefCell::new(its)), pos: 0 });
+                    }
+                    Sym::Tuple(items) => {
+                        self.stack.push(Sym::Iter { items: Rc::new(RefCell::new(items.to_vec())), pos: 0 });
+                    }
+                    Sym::Iter { .. } => self.stack.push(obj),
+                    Sym::Const { value, origin } => {
+                        let iter_v = vm::make_iter(value).map_err(Abort)?;
+                        let Value::Iter(it) = &iter_v else { unreachable!() };
+                        let items: Result<Vec<Sym>, Abort> = it
+                            .borrow()
+                            .items
+                            .iter()
+                            .enumerate()
+                            .map(|(i, e)| match e {
+                                // Encodable scalars need no origin.
+                                Value::None | Value::Bool(_) | Value::Int(_) | Value::Float(_) | Value::Str(_) => {
+                                    Ok(Sym::constant(e.clone()))
+                                }
+                                _ => {
+                                    let o = origin
+                                        .clone()
+                                        .ok_or_else(|| Abort("iterating unmaterializable container".into()))?
+                                        .index(Value::Int(i as i64));
+                                    self.value_to_sym(e, Some(o))
+                                }
+                            })
+                            .collect();
+                        self.stack.push(Sym::Iter { items: Rc::new(RefCell::new(items?)), pos: 0 });
+                    }
+                    Sym::Tensor(_) => {
+                        return Ok(Some(self.brk(cur, InlineEmit::GetIterOp, vec![obj], "iteration over a tensor")));
+                    }
+                    other => return Err(Abort(format!("not iterable: {}", other.type_desc()))),
+                }
+            }
+            Instr::ForIter(t) => {
+                let top = self.pop()?;
+                let Sym::Iter { items, pos } = top else {
+                    return Err(Abort("FOR_ITER on non-iterator sym".into()));
+                };
+                let item = items.borrow().get(pos).cloned();
+                match item {
+                    Some(s) => {
+                        self.stack.push(Sym::Iter { items, pos: pos + 1 });
+                        self.stack.push(s);
+                    }
+                    None => {
+                        *ip = *t as usize;
+                    }
+                }
+            }
+            Instr::Call(n) => {
+                let args = self.popn(*n as usize)?;
+                let callee = self.pop()?;
+                return self.call(cur, callee, args);
+            }
+            Instr::LoadMethod(nidx) => {
+                let name = self.code.names[*nidx as usize].clone();
+                let obj = self.pop()?;
+                match &obj {
+                    // Module-style dicts resolve functions.
+                    Sym::Const { value: Value::Dict(d), origin } => {
+                        let item = d.borrow().get(&crate::value::DictKey::Str(name.clone())).cloned();
+                        match item {
+                            Some(f) => {
+                                let o = origin.clone().map(|o| o.index(Value::str(&name)));
+                                let s = self.value_to_sym(&f, o)?;
+                                self.stack.push(s);
+                            }
+                            None => return Err(Abort(format!("module has no attribute '{}'", name))),
+                        }
+                    }
+                    _ => self.stack.push(Sym::MethodRef { recv: Box::new(obj), name }),
+                }
+            }
+            Instr::CallMethod(n) => {
+                let args = self.popn(*n as usize)?;
+                let callee = self.pop()?;
+                match callee {
+                    Sym::MethodRef { recv, name } => return self.call_method(cur, *recv, name, args),
+                    other => return self.call(cur, other, args),
+                }
+            }
+            Instr::LoadAttr(nidx) => {
+                let name = self.code.names[*nidx as usize].clone();
+                let obj = self.pop()?;
+                match (&obj, name.as_str()) {
+                    (Sym::Tensor(id), "shape") => {
+                        let shape = self.graph.nodes[*id].shape.clone();
+                        self.stack.push(Sym::constant(Value::tuple(shape.iter().map(|&d| Value::Int(d as i64)).collect())));
+                    }
+                    (Sym::Tensor(id), "ndim") => {
+                        let r = self.graph.nodes[*id].shape.len();
+                        self.stack.push(Sym::constant(Value::Int(r as i64)));
+                    }
+                    (Sym::Tensor(id), "T") => {
+                        let s = self.add_node(OpKind::Transpose, vec![*id])?;
+                        self.stack.push(s);
+                    }
+                    (Sym::Const { value: Value::Dict(d), origin }, _) => {
+                        let item = d.borrow().get(&crate::value::DictKey::Str(name.clone())).cloned();
+                        match item {
+                            Some(v) => {
+                                let o = origin.clone().map(|o| o.index(Value::str(&name)));
+                                let s = self.value_to_sym(&v, o)?;
+                                self.stack.push(s);
+                            }
+                            None => return Err(Abort(format!("no attribute '{}'", name))),
+                        }
+                    }
+                    _ => return Err(Abort(format!("attribute '{}' on {}", name, obj.type_desc()))),
+                }
+            }
+            Instr::BinarySubscr => {
+                let idx = self.pop()?;
+                let obj = self.pop()?;
+                return self.subscript(cur, obj, idx);
+            }
+            Instr::StoreSubscr => {
+                let idx = self.pop()?;
+                let obj = self.pop()?;
+                let val = self.pop()?;
+                match &obj {
+                    Sym::List { items, external: false } => {
+                        let i = idx
+                            .as_value()
+                            .and_then(|v| v.as_int().ok())
+                            .ok_or_else(|| Abort("non-constant list index store".into()))?;
+                        let len = items.borrow().len() as i64;
+                        let j = if i < 0 { i + len } else { i };
+                        if j < 0 || j >= len {
+                            return Err(Abort("list index out of range at capture".into()));
+                        }
+                        items.borrow_mut()[j as usize] = val;
+                    }
+                    _ => {
+                        return Ok(Some(self.brk(
+                            cur,
+                            InlineEmit::StoreSubscrInline,
+                            vec![val, obj, idx],
+                            "side effect: store into caller-visible container",
+                        )));
+                    }
+                }
+            }
+            Instr::BuildSlice(n) => {
+                let parts = self.popn(*n as usize)?;
+                let vals: Option<Vec<Value>> = parts.iter().map(|s| s.as_value()).collect();
+                match vals {
+                    Some(mut v) => {
+                        if v.len() == 2 {
+                            v.push(Value::None);
+                        }
+                        let slice = Value::Slice(Rc::new((v[0].clone(), v[1].clone(), v[2].clone())));
+                        self.stack.push(Sym::constant(slice));
+                    }
+                    None => return Err(Abort("non-constant slice".into())),
+                }
+            }
+            Instr::BuildList(n) => {
+                let items = self.popn(*n as usize)?;
+                self.stack.push(Sym::List { items: Rc::new(RefCell::new(items)), external: false });
+            }
+            Instr::BuildTuple(n) => {
+                let items = self.popn(*n as usize)?;
+                self.stack.push(Sym::Tuple(Rc::new(items)));
+            }
+            Instr::BuildMap(n) => {
+                let kvs = self.popn(2 * *n as usize)?;
+                // Traced dicts only as concrete values.
+                let vals: Option<Vec<Value>> = kvs.iter().map(|s| s.as_value()).collect();
+                match vals {
+                    Some(v) => {
+                        let d = Value::dict();
+                        if let Value::Dict(map) = &d {
+                            let mut m = map.borrow_mut();
+                            for pair in v.chunks(2) {
+                                let k = crate::value::DictKey::from_value(&pair[0]).map_err(Abort)?;
+                                m.insert(k, pair[1].clone());
+                            }
+                        }
+                        self.stack.push(Sym::constant(d));
+                    }
+                    None => return Err(Abort("dict of traced tensors".into())),
+                }
+            }
+            Instr::ListAppend(depth) => {
+                let elt = self.pop()?;
+                let idx = self
+                    .stack
+                    .len()
+                    .checked_sub(*depth as usize)
+                    .ok_or_else(|| Abort("LIST_APPEND depth".into()))?;
+                match &self.stack[idx] {
+                    Sym::List { items, .. } => items.borrow_mut().push(elt),
+                    other => return Err(Abort(format!("LIST_APPEND on {}", other.type_desc()))),
+                }
+            }
+            Instr::UnpackSequence(n) => {
+                let seq = self.pop()?;
+                match &seq {
+                    Sym::Tuple(items) => {
+                        if items.len() != *n as usize {
+                            return Err(Abort("unpack arity mismatch".into()));
+                        }
+                        for s in items.iter().rev() {
+                            self.stack.push(s.clone());
+                        }
+                    }
+                    Sym::List { items, .. } => {
+                        let it = items.borrow();
+                        if it.len() != *n as usize {
+                            return Err(Abort("unpack arity mismatch".into()));
+                        }
+                        for s in it.iter().rev() {
+                            self.stack.push(s.clone());
+                        }
+                    }
+                    Sym::Const { value, origin } => {
+                        let iter_v = vm::make_iter(value).map_err(Abort)?;
+                        let Value::Iter(itr) = &iter_v else { unreachable!() };
+                        let items = itr.borrow().items.clone();
+                        if items.len() != *n as usize {
+                            return Err(Abort("unpack arity mismatch".into()));
+                        }
+                        for (i, e) in items.iter().enumerate().rev() {
+                            let o = origin.clone().map(|o| o.index(Value::Int(i as i64)));
+                            let s = self.value_to_sym(e, o)?;
+                            self.stack.push(s);
+                        }
+                    }
+                    Sym::Tensor(_) => {
+                        return Ok(Some(self.brk(cur, InlineEmit::UnpackInline(*n), vec![seq], "unpacking a tensor")));
+                    }
+                    other => return Err(Abort(format!("cannot unpack {}", other.type_desc()))),
+                }
+            }
+            Instr::Raise => {
+                let v = self.pop()?;
+                return Ok(Some(self.brk(cur, InlineEmit::RaiseInline, vec![v], "exception raised")));
+            }
+            Instr::ReturnValue => {
+                let s = self.pop()?;
+                return Ok(Some(Outcome::Return(s)));
+            }
+        }
+        Ok(None)
+    }
+
+    // ---- op dispatch helpers ----
+
+    fn binary(&mut self, cur: usize, op: BinOp, a: Sym, b: Sym) -> Step {
+        let any_tensor = Self::is_tensorish(&a) || Self::is_tensorish(&b);
+        if any_tensor {
+            let kind = match op {
+                BinOp::Add => Some(OpKind::Add),
+                BinOp::Sub => Some(OpKind::Sub),
+                BinOp::Mul => Some(OpKind::Mul),
+                BinOp::Div => Some(OpKind::Div),
+                BinOp::Pow => Some(OpKind::Pow),
+                BinOp::MatMul => Some(OpKind::MatMul),
+                BinOp::FloorDiv | BinOp::Mod => None,
+            };
+            match kind {
+                Some(k) => {
+                    let (na, nb) = (self.tensorify(&a)?, self.tensorify(&b)?);
+                    let s = self.add_node(k, vec![na, nb])?;
+                    self.stack.push(s);
+                    return Ok(None);
+                }
+                None => {
+                    return Ok(Some(self.brk(cur, InlineEmit::BinaryInline(op), vec![a, b], "tensor op not representable in graph")));
+                }
+            }
+        }
+        // Structural list concat.
+        if op == BinOp::Add {
+            if let (Sym::List { items: ia, .. }, Sym::List { items: ib, .. }) = (&a, &b) {
+                let mut out = ia.borrow().clone();
+                out.extend(ib.borrow().iter().cloned());
+                self.stack.push(Sym::List { items: Rc::new(RefCell::new(out)), external: false });
+                return Ok(None);
+            }
+        }
+        match (a.as_value(), b.as_value()) {
+            (Some(x), Some(y)) => {
+                let r = vm::binary_op_values(op, &x, &y).map_err(Abort)?;
+                self.stack.push(Sym::constant(r));
+                Ok(None)
+            }
+            _ => Err(Abort(format!("binary {} on {} and {}", op.symbol(), a.type_desc(), b.type_desc()))),
+        }
+    }
+
+    fn subscript(&mut self, cur: usize, obj: Sym, idx: Sym) -> Step {
+        match &obj {
+            Sym::Tensor(_) => {
+                return Ok(Some(self.brk(cur, InlineEmit::Subscr, vec![obj, idx], "tensor indexing materializes data")));
+            }
+            Sym::List { items, .. } => {
+                let i = idx.as_value().and_then(|v| v.as_int().ok()).ok_or_else(|| Abort("non-constant list index".into()))?;
+                let it = items.borrow();
+                let len = it.len() as i64;
+                let j = if i < 0 { i + len } else { i };
+                if j < 0 || j >= len {
+                    return Err(Abort("list index out of range at capture".into()));
+                }
+                self.stack.push(it[j as usize].clone());
+            }
+            Sym::Tuple(items) => {
+                let i = idx.as_value().and_then(|v| v.as_int().ok()).ok_or_else(|| Abort("non-constant tuple index".into()))?;
+                let len = items.len() as i64;
+                let j = if i < 0 { i + len } else { i };
+                if j < 0 || j >= len {
+                    return Err(Abort("tuple index out of range at capture".into()));
+                }
+                self.stack.push(items[j as usize].clone());
+            }
+            Sym::Const { value, origin } => {
+                let key = idx.as_value().ok_or_else(|| Abort("non-constant subscript".into()))?;
+                let elem = crate::vm::apply_subscript(value, &key).map_err(Abort)?;
+                let o = origin.clone().map(|o| o.index(key));
+                let s = self.value_to_sym(&elem, o)?;
+                self.stack.push(s);
+            }
+            other => return Err(Abort(format!("subscript on {}", other.type_desc()))),
+        }
+        Ok(None)
+    }
+
+    fn call(&mut self, cur: usize, callee: Sym, args: Vec<Sym>) -> Step {
+        let Sym::Const { value, .. } = &callee else {
+            return Err(Abort(format!("call of {}", callee.type_desc())));
+        };
+        match value {
+            Value::Builtin(b) => {
+                let name = b.name.clone();
+                self.call_builtin(cur, callee.clone(), &name, args)
+            }
+            Value::Func(_) | Value::CompiledGraph(_) => {
+                // No inlining of user functions: graph break, run it for real.
+                let n = args.len() as u32;
+                let mut operands = vec![callee];
+                operands.extend(args);
+                Ok(Some(self.brk(cur, InlineEmit::CallFn(n), operands, "call to user function (not inlined)")))
+            }
+            other => Err(Abort(format!("call of non-callable {}", other.type_name()))),
+        }
+    }
+
+    fn call_builtin(&mut self, cur: usize, callee: Sym, name: &str, args: Vec<Sym>) -> Step {
+        let any_tensor = args.iter().any(|a| {
+            let mut ids = Vec::new();
+            a.collect_tensors(&mut ids);
+            !ids.is_empty()
+        });
+        // Tensor-graph ops.
+        let unary_op = |n: &str| -> Option<OpKind> {
+            Some(match n {
+                "relu" => OpKind::Relu,
+                "gelu" => OpKind::Gelu,
+                "tanh" => OpKind::Tanh,
+                "softmax" => OpKind::Softmax,
+                _ => return None,
+            })
+        };
+        if any_tensor {
+            match name {
+                "matmul" | "maximum" | "minimum" if args.len() == 2 => {
+                    let k = match name {
+                        "matmul" => OpKind::MatMul,
+                        "maximum" => OpKind::Maximum,
+                        _ => OpKind::Minimum,
+                    };
+                    let na = self.tensorify(&args[0])?;
+                    let nb = self.tensorify(&args[1])?;
+                    let s = self.add_node(k, vec![na, nb])?;
+                    self.stack.push(s);
+                    return Ok(None);
+                }
+                _ if unary_op(name).is_some() && args.len() == 1 => {
+                    let na = self.tensorify(&args[0])?;
+                    let s = self.add_node(unary_op(name).unwrap(), vec![na])?;
+                    self.stack.push(s);
+                    return Ok(None);
+                }
+                "layernorm" if args.len() == 3 => {
+                    let ns: Result<Vec<NodeId>, Abort> = args.iter().map(|a| self.tensorify(a)).collect();
+                    let s = self.add_node(OpKind::LayerNorm, ns?)?;
+                    self.stack.push(s);
+                    return Ok(None);
+                }
+                "embedding" | "cross_entropy" if args.len() == 2 => {
+                    let k = if name == "embedding" { OpKind::Embedding } else { OpKind::CrossEntropy };
+                    let na = self.tensorify(&args[0])?;
+                    let nb = self.tensorify(&args[1])?;
+                    let s = self.add_node(k, vec![na, nb])?;
+                    self.stack.push(s);
+                    return Ok(None);
+                }
+                "abs" if args.len() == 1 => {
+                    let na = self.tensorify(&args[0])?;
+                    let s = self.add_node(OpKind::Abs, vec![na])?;
+                    self.stack.push(s);
+                    return Ok(None);
+                }
+                "len" if args.len() == 1 => {
+                    if let Sym::Tensor(id) = &args[0] {
+                        let d0 = *self.graph.nodes[*id].shape.first().unwrap_or(&0);
+                        self.stack.push(Sym::constant(Value::Int(d0 as i64)));
+                        return Ok(None);
+                    }
+                }
+                "sum" if args.len() == 1 => {
+                    // sum over a python list of tensors -> chained adds.
+                    if let Sym::List { items, .. } = &args[0] {
+                        let its = items.borrow().clone();
+                        if !its.is_empty() {
+                            let mut acc = self.tensorify(&its[0])?;
+                            for s in &its[1..] {
+                                let n = self.tensorify(s)?;
+                                let Sym::Tensor(a2) = self.add_node(OpKind::Add, vec![acc, n])? else { unreachable!() };
+                                acc = a2;
+                            }
+                            self.stack.push(Sym::Tensor(acc));
+                            return Ok(None);
+                        }
+                    }
+                }
+                // Data-dependent escapes: break and run for real.
+                "print" | "int" | "float" | "bool" | "str" | "min" | "max" | "sorted" => {
+                    let n = args.len() as u32;
+                    let mut operands = vec![callee];
+                    operands.extend(args);
+                    let reason = if name == "print" { "side effect: print of a tensor" } else { "data-dependent conversion of a tensor" };
+                    return Ok(Some(self.brk(cur, InlineEmit::CallFn(n), operands, reason)));
+                }
+                _ => {
+                    let n = args.len() as u32;
+                    let mut operands = vec![callee];
+                    operands.extend(args);
+                    return Ok(Some(self.brk(cur, InlineEmit::CallFn(n), operands, &format!("builtin '{}' with tensor args", name))));
+                }
+            }
+        }
+        // print is a side effect even on constants.
+        if name == "print" || name == "manual_seed" {
+            let n = args.len() as u32;
+            let mut operands = vec![callee];
+            operands.extend(args);
+            return Ok(Some(self.brk(cur, InlineEmit::CallFn(n), operands, &format!("side effect: {}", name))));
+        }
+        // Random tensor creation cannot be baked into the graph.
+        if matches!(name, "randn" | "rand" | "randint") {
+            let n = args.len() as u32;
+            let mut operands = vec![callee];
+            operands.extend(args);
+            return Ok(Some(self.brk(cur, InlineEmit::CallFn(n), operands, "nondeterministic tensor creation")));
+        }
+        // Deterministic tensor creation folds into a graph constant.
+        if matches!(name, "zeros" | "ones" | "arange" | "tensor") {
+            let vals: Option<Vec<Value>> = args.iter().map(|a| a.as_value()).collect();
+            let Some(vals) = vals else {
+                return Err(Abort(format!("torch.{} with traced args", name)));
+            };
+            let Sym::Const { value: Value::Builtin(b), .. } = &callee else {
+                return Err(Abort("lost builtin".into()));
+            };
+            let out = (b.func)(&vals).map_err(Abort)?;
+            let Value::Tensor(t) = out else {
+                return Err(Abort(format!("torch.{} did not produce a tensor", name)));
+            };
+            let id = self.graph.const_tensor((*t).clone());
+            self.stack.push(Sym::Tensor(id));
+            return Ok(None);
+        }
+        // Structural folds.
+        match name {
+            "enumerate" if args.len() == 1 => {
+                if let Some(items) = iter_items(&args[0]) {
+                    let out: Vec<Sym> = items
+                        .into_iter()
+                        .enumerate()
+                        .map(|(i, s)| Sym::Tuple(Rc::new(vec![Sym::constant(Value::Int(i as i64)), s])))
+                        .collect();
+                    self.stack.push(Sym::List { items: Rc::new(RefCell::new(out)), external: false });
+                    return Ok(None);
+                }
+            }
+            "zip" if args.len() >= 2 => {
+                let lists: Option<Vec<Vec<Sym>>> = args.iter().map(iter_items).collect();
+                if let Some(lists) = lists {
+                    let n = lists.iter().map(|l| l.len()).min().unwrap_or(0);
+                    let out: Vec<Sym> =
+                        (0..n).map(|i| Sym::Tuple(Rc::new(lists.iter().map(|l| l[i].clone()).collect()))).collect();
+                    self.stack.push(Sym::List { items: Rc::new(RefCell::new(out)), external: false });
+                    return Ok(None);
+                }
+            }
+            "list" if args.len() == 1 => {
+                if let Some(items) = iter_items(&args[0]) {
+                    self.stack.push(Sym::List { items: Rc::new(RefCell::new(items)), external: false });
+                    return Ok(None);
+                }
+            }
+            "tuple" if args.len() == 1 => {
+                if let Some(items) = iter_items(&args[0]) {
+                    self.stack.push(Sym::Tuple(Rc::new(items)));
+                    return Ok(None);
+                }
+            }
+            "len" if args.len() == 1 => {
+                if let Some(items) = iter_items(&args[0]) {
+                    self.stack.push(Sym::constant(Value::Int(items.len() as i64)));
+                    return Ok(None);
+                }
+            }
+            _ => {}
+        }
+        // Pure fold over concrete values.
+        let vals: Option<Vec<Value>> = args.iter().map(|a| a.as_value()).collect();
+        match vals {
+            Some(vals) => {
+                let Sym::Const { value: Value::Builtin(b), .. } = &callee else {
+                    return Err(Abort("lost builtin".into()));
+                };
+                let r = (b.func)(&vals).map_err(Abort)?;
+                let s = self.value_to_sym(&r, None).or_else(|_| {
+                    // Non-materializable results (fresh lists) become traced lists.
+                    match &r {
+                        Value::List(l) => {
+                            let items: Vec<Sym> = l.borrow().iter().map(|v| Sym::constant(v.clone())).collect();
+                            Ok(Sym::List { items: Rc::new(RefCell::new(items)), external: false })
+                        }
+                        other => Err(Abort(format!("builtin '{}' result {} not traceable", name, other.type_name()))),
+                    }
+                })?;
+                self.stack.push(s);
+                Ok(None)
+            }
+            None => Err(Abort(format!("builtin '{}' with traced args", name))),
+        }
+    }
+
+    fn call_method(&mut self, cur: usize, recv: Sym, name: String, args: Vec<Sym>) -> Step {
+        match &recv {
+            Sym::Tensor(id) => return self.tensor_method(cur, *id, recv.clone(), &name, args),
+            Sym::List { items, external } => {
+                match name.as_str() {
+                    "append" if !external && args.len() == 1 => {
+                        items.borrow_mut().push(args[0].clone());
+                        self.stack.push(Sym::constant(Value::None));
+                        return Ok(None);
+                    }
+                    "extend" if !external && args.len() == 1 => {
+                        if let Some(more) = iter_items(&args[0]) {
+                            items.borrow_mut().extend(more);
+                            self.stack.push(Sym::constant(Value::None));
+                            return Ok(None);
+                        }
+                    }
+                    "pop" if !external && args.is_empty() => {
+                        let v = items.borrow_mut().pop().ok_or_else(|| Abort("pop from empty list".into()))?;
+                        self.stack.push(v);
+                        return Ok(None);
+                    }
+                    _ => {}
+                }
+                // Caller-visible mutation (or unsupported method): break.
+                let argc = args.len() as u32;
+                let mut operands = vec![recv];
+                operands.extend(args);
+                return Ok(Some(self.brk(
+                    cur,
+                    InlineEmit::CallMethod { name: name.clone(), argc },
+                    operands,
+                    "side effect: mutation of caller-visible list",
+                )));
+            }
+            Sym::Const { value, .. } => {
+                let vals: Option<Vec<Value>> = args.iter().map(|a| a.as_value()).collect();
+                if let Some(vals) = vals {
+                    // Pure const-method fold (str methods, dict.get, ...).
+                    if !matches!(name.as_str(), "append" | "extend" | "pop" | "insert" | "sort" | "reverse") {
+                        let r = vm::call_method_pure(value, &name, &vals).map_err(Abort)?;
+                        let s = self.value_to_sym(&r, None).unwrap_or(Sym::constant(r));
+                        self.stack.push(s);
+                        return Ok(None);
+                    }
+                }
+                let argc = args.len() as u32;
+                let mut operands = vec![recv];
+                operands.extend(args);
+                return Ok(Some(self.brk(
+                    cur,
+                    InlineEmit::CallMethod { name: name.clone(), argc },
+                    operands,
+                    "method call with side effects or traced args",
+                )));
+            }
+            Sym::Tuple(items) => {
+                if name == "index" || name == "count" {
+                    let vals: Option<Vec<Value>> = args.iter().map(|a| a.as_value()).collect();
+                    let tup: Option<Vec<Value>> = items.iter().map(|s| s.as_value()).collect();
+                    if let (Some(vals), Some(tup)) = (vals, tup) {
+                        let r = vm::call_method_pure(&Value::tuple(tup), &name, &vals).map_err(Abort)?;
+                        self.stack.push(Sym::constant(r));
+                        return Ok(None);
+                    }
+                }
+            }
+            _ => {}
+        }
+        Err(Abort(format!("method '{}' on {}", name, recv.type_desc())))
+    }
+
+    fn tensor_method(&mut self, cur: usize, id: NodeId, recv: Sym, name: &str, args: Vec<Sym>) -> Step {
+        let simple = |n: &str| -> Option<OpKind> {
+            Some(match n {
+                "relu" => OpKind::Relu,
+                "gelu" => OpKind::Gelu,
+                "tanh" => OpKind::Tanh,
+                "sigmoid" => OpKind::Sigmoid,
+                "exp" => OpKind::Exp,
+                "log" => OpKind::Log,
+                "sqrt" => OpKind::Sqrt,
+                "abs" => OpKind::Abs,
+                "neg" => OpKind::Neg,
+                "softmax" => OpKind::Softmax,
+                "t" => OpKind::Transpose,
+                _ => return None,
+            })
+        };
+        if let Some(k) = simple(name) {
+            if args.is_empty() {
+                let s = self.add_node(k, vec![id])?;
+                self.stack.push(s);
+                return Ok(None);
+            }
+        }
+        match name {
+            "matmul" | "add" | "sub" | "mul" | "div" | "pow" | "maximum" | "minimum" if args.len() == 1 => {
+                let k = match name {
+                    "matmul" => OpKind::MatMul,
+                    "add" => OpKind::Add,
+                    "sub" => OpKind::Sub,
+                    "mul" => OpKind::Mul,
+                    "div" => OpKind::Div,
+                    "pow" => OpKind::Pow,
+                    "maximum" => OpKind::Maximum,
+                    _ => OpKind::Minimum,
+                };
+                let nb = self.tensorify(&args[0])?;
+                let s = self.add_node(k, vec![id, nb])?;
+                self.stack.push(s);
+                Ok(None)
+            }
+            "sum" | "mean" | "max" | "min" => {
+                let axis = match args.first() {
+                    None => None,
+                    Some(s) => match s.as_value() {
+                        Some(Value::Int(i)) => Some(i as usize),
+                        Some(Value::None) => None,
+                        _ => return Err(Abort("non-constant reduction axis".into())),
+                    },
+                };
+                let k = match name {
+                    "sum" => OpKind::Sum(axis),
+                    "mean" => OpKind::Mean(axis),
+                    "max" => OpKind::Max(axis),
+                    _ => OpKind::Min(axis),
+                };
+                let s = self.add_node(k, vec![id])?;
+                self.stack.push(s);
+                Ok(None)
+            }
+            "reshape" | "view" if args.len() == 1 => {
+                let spec = args[0]
+                    .as_value()
+                    .and_then(|v| match v {
+                        Value::List(l) => l.borrow().iter().map(|x| x.as_int().ok()).collect::<Option<Vec<i64>>>(),
+                        Value::Tuple(t) => t.iter().map(|x| x.as_int().ok()).collect::<Option<Vec<i64>>>(),
+                        _ => None,
+                    })
+                    .ok_or_else(|| Abort("non-constant reshape spec".into()))?;
+                let s = self.add_node(OpKind::Reshape(spec), vec![id])?;
+                self.stack.push(s);
+                Ok(None)
+            }
+            "permute" if args.len() == 1 => {
+                let perm = args[0]
+                    .as_value()
+                    .and_then(|v| match v {
+                        Value::List(l) => l.borrow().iter().map(|x| x.as_int().ok().map(|i| i as usize)).collect::<Option<Vec<usize>>>(),
+                        Value::Tuple(t) => t.iter().map(|x| x.as_int().ok().map(|i| i as usize)).collect::<Option<Vec<usize>>>(),
+                        _ => None,
+                    })
+                    .ok_or_else(|| Abort("non-constant permute spec".into()))?;
+                let s = self.add_node(OpKind::Permute(perm), vec![id])?;
+                self.stack.push(s);
+                Ok(None)
+            }
+            "numel" => {
+                let n: usize = self.graph.nodes[id].shape.iter().product();
+                self.stack.push(Sym::constant(Value::Int(n as i64)));
+                Ok(None)
+            }
+            // Data escapes: break, run for real, resume.
+            "item" | "tolist" => {
+                let argc = args.len() as u32;
+                let mut operands = vec![recv];
+                operands.extend(args);
+                Ok(Some(self.brk(
+                    cur,
+                    InlineEmit::CallMethod { name: name.to_string(), argc },
+                    operands,
+                    &format!("data-dependent .{}() reads tensor contents", name),
+                )))
+            }
+            other => Err(Abort(format!("tensor method '{}' unsupported in graph", other))),
+        }
+    }
+}
+
+fn vm_const(code: &CodeObject, idx: u32) -> Result<Value, Abort> {
+    let c = code.consts.get(idx as usize).ok_or_else(|| Abort("bad const".into()))?;
+    match c {
+        crate::bytecode::Const::Code(_) => Err(Abort("code constant in compiled region".into())),
+        other => Ok(crate::vm::const_to_runtime(other)),
+    }
+}
+
+/// Items of an iterable sym, if structurally known.
+fn iter_items(s: &Sym) -> Option<Vec<Sym>> {
+    match s {
+        Sym::List { items, .. } => Some(items.borrow().clone()),
+        Sym::Tuple(items) => Some(items.to_vec()),
+        Sym::Iter { items, pos } => Some(items.borrow()[*pos..].to_vec()),
+        Sym::Const { value, origin } => {
+            let it = vm::make_iter(value).ok()?;
+            let Value::Iter(itr) = &it else { return None };
+            let out: Option<Vec<Sym>> = itr
+                .borrow()
+                .items
+                .iter()
+                .enumerate()
+                .map(|(i, e)| match e {
+                    Value::None | Value::Bool(_) | Value::Int(_) | Value::Float(_) | Value::Str(_) => {
+                        Some(Sym::constant(e.clone()))
+                    }
+                    Value::Tuple(t) => {
+                        // tuples of scalars (enumerate/zip results)
+                        if t.iter().all(|x| matches!(x, Value::Int(_) | Value::Float(_) | Value::Str(_) | Value::Bool(_) | Value::None)) {
+                            Some(Sym::constant(e.clone()))
+                        } else {
+                            let _ = (i, origin);
+                            None
+                        }
+                    }
+                    _ => None,
+                })
+                .collect();
+            out
+        }
+        _ => None,
+    }
+}

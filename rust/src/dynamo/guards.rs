@@ -1,0 +1,108 @@
+//! Guards: the conditions under which a cached compiled entry is valid.
+//! Checked on every hooked call; a miss triggers recompilation (up to the
+//! cache-size limit), exactly like TorchDynamo's guard system.
+
+use std::collections::HashMap;
+
+use super::sym::Origin;
+use crate::value::Value;
+
+#[derive(Clone, Debug)]
+pub enum Guard {
+    /// A lifted tensor input must keep its capture-time shape.
+    TensorShape { origin: Origin, shape: Vec<usize> },
+    /// A Python scalar that was baked into the trace must be unchanged.
+    ConstEq { origin: Origin, value: Value },
+    /// A callable / module object must be the same object.
+    Identity { origin: Origin, value: Value },
+    /// Container length (lists/tuples seen structurally).
+    Len { origin: Origin, len: usize },
+    /// Remaining items of an iterator argument (resume functions).
+    IterRemaining { origin: Origin, len: usize },
+}
+
+impl Guard {
+    /// Does this guard hold for the given call state?
+    pub fn check(&self, args: &[Value], globals: &HashMap<String, Value>) -> bool {
+        match self {
+            Guard::TensorShape { origin, shape } => match origin.resolve(args, globals) {
+                Some(Value::Tensor(t)) => t.shape() == &shape[..],
+                _ => false,
+            },
+            Guard::ConstEq { origin, value } => match origin.resolve(args, globals) {
+                Some(v) => v.eq_value(value),
+                None => false,
+            },
+            Guard::Identity { origin, value } => match origin.resolve(args, globals) {
+                Some(v) => v.is_identical(value),
+                None => false,
+            },
+            Guard::Len { origin, len } => match origin.resolve(args, globals) {
+                Some(Value::List(l)) => l.borrow().len() == *len,
+                Some(Value::Tuple(t)) => t.len() == *len,
+                Some(Value::Dict(d)) => d.borrow().len() == *len,
+                _ => false,
+            },
+            Guard::IterRemaining { origin, len } => match origin.resolve(args, globals) {
+                Some(Value::Iter(it)) => {
+                    let it = it.borrow();
+                    it.items.len() - it.pos == *len
+                }
+                _ => false,
+            },
+        }
+    }
+
+    /// Rendered into `full_code` dumps.
+    pub fn describe(&self) -> String {
+        match self {
+            Guard::TensorShape { origin, shape } => format!("check_tensor({}, shape={:?})", origin.describe(), shape),
+            Guard::ConstEq { origin, value } => format!("{} == {}", origin.describe(), value.repr()),
+            Guard::Identity { origin, value } => format!("{} is {}", origin.describe(), value.repr()),
+            Guard::Len { origin, len } => format!("len({}) == {}", origin.describe(), len),
+            Guard::IterRemaining { origin, len } => format!("iter_remaining({}) == {}", origin.describe(), len),
+        }
+    }
+}
+
+/// Check a full guard set.
+pub fn check_all(guards: &[Guard], args: &[Value], globals: &HashMap<String, Value>) -> bool {
+    guards.iter().all(|g| g.check(args, globals))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn shape_guard() {
+        let g = Guard::TensorShape { origin: Origin::Arg(0), shape: vec![2, 3] };
+        let globals = HashMap::new();
+        assert!(g.check(&[Value::tensor(Tensor::zeros(&[2, 3]))], &globals));
+        assert!(!g.check(&[Value::tensor(Tensor::zeros(&[3, 2]))], &globals));
+        assert!(!g.check(&[Value::Int(1)], &globals));
+    }
+
+    #[test]
+    fn const_and_identity_guards() {
+        let globals = HashMap::new();
+        let g = Guard::ConstEq { origin: Origin::Arg(0), value: Value::Int(4) };
+        assert!(g.check(&[Value::Int(4)], &globals));
+        assert!(!g.check(&[Value::Int(5)], &globals));
+
+        let f = Value::builtin("f", |_| Ok(Value::None));
+        let gi = Guard::Identity { origin: Origin::Arg(0), value: f.clone() };
+        assert!(gi.check(&[f.clone()], &globals));
+        let f2 = Value::builtin("f", |_| Ok(Value::None));
+        assert!(!gi.check(&[f2], &globals));
+    }
+
+    #[test]
+    fn len_guard() {
+        let globals = HashMap::new();
+        let g = Guard::Len { origin: Origin::Arg(0), len: 2 };
+        assert!(g.check(&[Value::list(vec![Value::Int(1), Value::Int(2)])], &globals));
+        assert!(!g.check(&[Value::list(vec![Value::Int(1)])], &globals));
+    }
+}

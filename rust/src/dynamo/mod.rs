@@ -1,0 +1,429 @@
+//! Dynamo: the graph-capturing compiler frontend (the paper's "opaque box").
+//!
+//! Installed as the VM's frame-evaluation hook. On each call of a user
+//! function it either (a) returns cached transformed bytecode whose guards
+//! pass, (b) symbolically evaluates the function, compiles the captured
+//! tensor graph with a backend, synthesizes transformed + resume bytecode,
+//! and installs the callables as globals, or (c) marks the function as
+//! skipped and lets it run uncompiled.
+
+pub mod capture;
+pub mod emit;
+pub mod guards;
+pub mod sym;
+
+pub use capture::{Capture, InlineEmit, Limits, Outcome};
+pub use emit::{emit_transformed, make_resume, select_outputs, CodeBuilder};
+pub use guards::Guard;
+pub use sym::{Origin, Sym};
+
+use std::cell::RefCell;
+use std::collections::{HashMap, HashSet};
+use std::rc::Rc;
+
+use crate::backend::BackendKind;
+use crate::bytecode::CodeObject;
+use crate::graph::Graph;
+use crate::metrics::Metrics;
+use crate::runtime::Runtime;
+use crate::value::{Function, Value};
+use crate::vm::EvalHook;
+
+/// Per-node trace callback for the debugger ("step through the compiled
+/// graph line by line"). Forces the eager backend.
+pub trait GraphTracer {
+    fn on_node(&self, graph_name: &str, node_id: usize, value: &crate::tensor::Tensor);
+}
+
+/// Configuration of the dynamo instance.
+pub struct DynamoConfig {
+    pub backend: BackendKind,
+    /// Max cache entries per code object before giving up (recompile limit).
+    pub cache_limit: usize,
+    pub max_trace_instrs: usize,
+    pub max_graph_nodes: usize,
+    /// Present in `depyf.debug()` sessions: forces eager execution with
+    /// per-node callbacks.
+    pub tracer: Option<Rc<dyn GraphTracer>>,
+}
+
+impl Default for DynamoConfig {
+    fn default() -> Self {
+        DynamoConfig { backend: BackendKind::Eager, cache_limit: 8, max_trace_instrs: 20_000, max_graph_nodes: 2_000, tracer: None }
+    }
+}
+
+struct Entry {
+    guards: Vec<Guard>,
+    code: Rc<CodeObject>,
+}
+
+#[derive(Default)]
+struct CodeCache {
+    entries: Vec<Entry>,
+    skip: bool,
+    skip_reason: Option<String>,
+}
+
+#[derive(Default)]
+struct State {
+    cache: HashMap<usize, CodeCache>,
+    /// Code objects produced by us — never re-hooked.
+    own_output: HashSet<usize>,
+    next_id: usize,
+    /// `full_code`-style event log.
+    log: Vec<String>,
+    /// Captured graphs (name -> graph) for dumps & benches.
+    graphs: Vec<(String, Rc<Graph>)>,
+    /// Transformed + resume code objects for dumps.
+    generated_codes: Vec<(String, Rc<CodeObject>)>,
+}
+
+/// The dynamo compiler instance. Install with
+/// `vm.eval_hook = Some(dynamo.clone())`.
+pub struct Dynamo {
+    pub config: DynamoConfig,
+    pub runtime: Option<Rc<Runtime>>,
+    pub metrics: Metrics,
+    state: RefCell<State>,
+}
+
+impl Dynamo {
+    pub fn new(config: DynamoConfig) -> Rc<Dynamo> {
+        Rc::new(Dynamo { config, runtime: None, metrics: Metrics::new(), state: RefCell::new(State::default()) })
+    }
+
+    pub fn with_runtime(config: DynamoConfig, runtime: Rc<Runtime>) -> Rc<Dynamo> {
+        Rc::new(Dynamo { config, runtime: Some(runtime), metrics: Metrics::new(), state: RefCell::new(State::default()) })
+    }
+
+    /// The `full_code`-style decision log.
+    pub fn log(&self) -> Vec<String> {
+        self.state.borrow().log.clone()
+    }
+
+    /// Captured graphs, in compile order.
+    pub fn graphs(&self) -> Vec<(String, Rc<Graph>)> {
+        self.state.borrow().graphs.clone()
+    }
+
+    /// Program-generated code objects (transformed bodies + resume fns).
+    pub fn generated_codes(&self) -> Vec<(String, Rc<CodeObject>)> {
+        self.state.borrow().generated_codes.clone()
+    }
+
+    fn note(&self, msg: String) {
+        self.state.borrow_mut().log.push(msg);
+    }
+
+    fn compile_backend(&self, name: &str, graph: Rc<Graph>) -> Value {
+        // Debug tracing forces the eager executor with per-node callbacks.
+        if let Some(tracer) = &self.config.tracer {
+            let t = Rc::clone(tracer);
+            let gname = name.to_string();
+            let g2 = Rc::clone(&graph);
+            let f = crate::graph::CompiledGraphFn {
+                name: name.to_string(),
+                graph: Rc::clone(&graph),
+                backend_name: "eager+trace".into(),
+                executor: Box::new(move |inputs| {
+                    crate::backend::eager::execute_traced(&g2, inputs, |id, v| t.on_node(&gname, id, v))
+                }),
+                calls: std::cell::Cell::new(0),
+            };
+            return Value::CompiledGraph(Rc::new(f));
+        }
+        let f = crate::backend::compile_graph(name, graph, self.config.backend, self.runtime.clone());
+        Value::CompiledGraph(Rc::new(f))
+    }
+}
+
+impl EvalHook for Dynamo {
+    fn eval_frame(
+        &self,
+        func: &Rc<Function>,
+        args: &[Value],
+        globals: &Rc<RefCell<HashMap<String, Value>>>,
+    ) -> Option<Rc<CodeObject>> {
+        let ptr = Rc::as_ptr(&func.code) as usize;
+        {
+            let st = self.state.borrow();
+            if st.own_output.contains(&ptr) {
+                return None;
+            }
+            if let Some(cc) = st.cache.get(&ptr) {
+                if cc.skip {
+                    return None;
+                }
+                Metrics::bump(&self.metrics.guard_checks);
+                let g = globals.borrow();
+                for entry in &cc.entries {
+                    if guards::check_all(&entry.guards, args, &g) {
+                        Metrics::bump(&self.metrics.cache_hits);
+                        return Some(Rc::clone(&entry.code));
+                    }
+                }
+                Metrics::bump(&self.metrics.guard_failures);
+                if cc.entries.len() >= self.config.cache_limit {
+                    return None; // too many recompiles; run uncompiled
+                }
+            }
+        }
+        Metrics::bump(&self.metrics.cache_misses);
+
+        // ---- compile ----
+        let result = self.metrics.time_compile(|| {
+            let id = {
+                let mut st = self.state.borrow_mut();
+                st.next_id += 1;
+                st.next_id
+            };
+            let graph_name = format!("__compiled_fn_{}", id);
+            let resume_base = format!("__resume_{}", id);
+            let limits = Limits { max_instrs: self.config.max_trace_instrs, max_nodes: self.config.max_graph_nodes };
+
+            let cap_result = {
+                let g = globals.borrow();
+                capture::capture(&func.code, args, &g, &graph_name, limits)
+            };
+            let mut cap = match cap_result {
+                Ok(c) => c,
+                Err(capture::Abort(reason)) => {
+                    self.note(format!("skip {}: {}", func.name, reason));
+                    Metrics::bump(&self.metrics.fallbacks);
+                    let mut st = self.state.borrow_mut();
+                    st.cache.entry(ptr).or_default().skip = true;
+                    st.cache.entry(ptr).or_default().skip_reason = Some(reason);
+                    return None;
+                }
+            };
+
+            // Pure-python functions gain nothing from compilation.
+            if cap.graph.num_ops() == 0 && matches!(cap.outcome, Outcome::Return(_)) {
+                self.note(format!("skip {}: no tensor operations", func.name));
+                Metrics::bump(&self.metrics.fallbacks);
+                let mut st = self.state.borrow_mut();
+                st.cache.entry(ptr).or_default().skip = true;
+                return None;
+            }
+
+            emit::select_outputs(&mut cap);
+            let transformed = match emit::emit_transformed(&func.code, &cap, &graph_name, &resume_base) {
+                Ok(t) => t,
+                Err(emit::EmitError(reason)) => {
+                    self.note(format!("skip {}: cannot materialize state ({})", func.name, reason));
+                    Metrics::bump(&self.metrics.fallbacks);
+                    let mut st = self.state.borrow_mut();
+                    st.cache.entry(ptr).or_default().skip = true;
+                    return None;
+                }
+            };
+
+            Metrics::bump(&self.metrics.captures);
+            match &cap.outcome {
+                Outcome::Return(_) => self.note(format!(
+                    "compiled {} -> {} ({} ops, {} guards, full graph)",
+                    func.name,
+                    graph_name,
+                    cap.graph.num_ops(),
+                    cap.guards.len()
+                )),
+                Outcome::Break { at, reason, .. } => {
+                    Metrics::bump(&self.metrics.graph_breaks);
+                    self.note(format!(
+                        "compiled {} -> {} ({} ops, {} guards) with graph break at instr {}: {}",
+                        func.name,
+                        graph_name,
+                        cap.graph.num_ops(),
+                        cap.guards.len(),
+                        at,
+                        reason
+                    ));
+                }
+                Outcome::Branch { at, reason, .. } => {
+                    Metrics::bump(&self.metrics.graph_breaks);
+                    self.note(format!(
+                        "compiled {} -> {} ({} ops, {} guards) with branch break at instr {}: {}",
+                        func.name,
+                        graph_name,
+                        cap.graph.num_ops(),
+                        cap.guards.len(),
+                        at,
+                        reason
+                    ));
+                }
+            }
+            for g in &cap.guards {
+                self.note(format!("  guard: {}", g.describe()));
+            }
+
+            // Install the compiled graph + resume functions as globals.
+            let graph = Rc::new(cap.graph.clone());
+            {
+                let mut gm = globals.borrow_mut();
+                if transformed.graph_used {
+                    gm.insert(graph_name.clone(), self.compile_backend(&graph_name, Rc::clone(&graph)));
+                }
+                for (rname, rcode) in &transformed.resume_codes {
+                    gm.insert(
+                        rname.clone(),
+                        Value::Func(Rc::new(Function {
+                            name: rname.clone(),
+                            code: Rc::clone(rcode),
+                            defaults: Vec::new(),
+                            closure: Vec::new(),
+                        })),
+                    );
+                }
+            }
+
+            // Book-keeping for dumps and the no-rehook set.
+            {
+                let mut st = self.state.borrow_mut();
+                st.own_output.insert(Rc::as_ptr(&transformed.code) as usize);
+                if transformed.graph_used {
+                    st.graphs.push((graph_name.clone(), Rc::clone(&graph)));
+                }
+                st.generated_codes.push((transformed.code.name.clone(), Rc::clone(&transformed.code)));
+                for (rname, rcode) in &transformed.resume_codes {
+                    st.generated_codes.push((rname.clone(), Rc::clone(rcode)));
+                }
+                st.cache
+                    .entry(ptr)
+                    .or_default()
+                    .entries
+                    .push(Entry { guards: cap.guards.clone(), code: Rc::clone(&transformed.code) });
+            }
+            Some(transformed.code)
+        });
+        result
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bytecode::IsaVersion;
+    use crate::vm::Vm;
+
+    /// Run a module source twice: once plain, once under dynamo; outputs
+    /// must match and (for the hooked run) compilation must have happened.
+    fn check(src: &str) -> (Rc<Dynamo>, String) {
+        let plain = Vm::new();
+        plain.seed(7);
+        plain.exec_source(src, IsaVersion::V310).unwrap_or_else(|e| panic!("plain run failed: {}\n{}", e, src));
+        let expected = plain.take_output();
+
+        let mut vm = Vm::new();
+        vm.seed(7);
+        let dynamo = Dynamo::new(DynamoConfig::default());
+        vm.eval_hook = Some(dynamo.clone());
+        vm.exec_source(src, IsaVersion::V310).unwrap_or_else(|e| panic!("dynamo run failed: {}\n{}", e, src));
+        let got = vm.take_output();
+        assert_eq!(got, expected, "behaviour changed under dynamo for:\n{}", src);
+        (dynamo, got)
+    }
+
+    #[test]
+    fn full_graph_capture() {
+        let (d, _) = check(
+            "def f(x, y):\n    return (x @ y).relu().sum()\na = torch.ones([4, 4])\nb = torch.ones([4, 4])\nprint(f(a, b).item())\nprint(f(a, b).item())\n",
+        );
+        assert_eq!(d.metrics.captures.get(), 1);
+        assert!(d.metrics.cache_hits.get() >= 1, "second call should hit cache");
+        assert_eq!(d.metrics.graph_breaks.get(), 0);
+        let graphs = d.graphs();
+        assert_eq!(graphs.len(), 1);
+        assert!(graphs[0].1.num_ops() >= 3);
+    }
+
+    #[test]
+    fn graph_break_on_print() {
+        let (d, _) = check(
+            "def f(x):\n    y = x * 2\n    print('mid', y.sum().item())\n    return (y + 1).sum()\nprint(f(torch.ones([3])).item())\n",
+        );
+        assert!(d.metrics.graph_breaks.get() >= 1, "print must cause a graph break: {:?}", d.log());
+    }
+
+    #[test]
+    fn branch_break_two_resumes() {
+        // The paper's Figure 1 example: data-dependent branch.
+        let src = "def f(a, b):\n    x = a / (abs(a) + 1)\n    if b.sum() >= 0:\n        b = b * -1\n    return x * b\nprint(f(torch.ones([4]), torch.ones([4])).sum().item())\nprint(f(torch.ones([4]), (torch.ones([4]) * -1)).sum().item())\n";
+        let (d, _) = check(src);
+        assert!(d.metrics.graph_breaks.get() >= 1);
+        // Two resume functions => at least 3 generated code objects.
+        let gen = d.generated_codes();
+        assert!(gen.len() >= 3, "{:?}", gen.iter().map(|(n, _)| n.clone()).collect::<Vec<_>>());
+        assert!(gen.iter().any(|(n, _)| n.contains("__resume_")));
+    }
+
+    #[test]
+    fn guards_trigger_recompile_on_shape_change() {
+        let src = "def f(x):\n    return (x * 2).sum()\nprint(f(torch.ones([2, 2])).item())\nprint(f(torch.ones([3, 3])).item())\nprint(f(torch.ones([2, 2])).item())\n";
+        let (d, _) = check(src);
+        assert_eq!(d.metrics.captures.get(), 2, "shape change must recompile: {:?}", d.log());
+        assert!(d.metrics.cache_hits.get() >= 1, "third call should reuse the first entry");
+    }
+
+    #[test]
+    fn python_loop_unrolls_into_graph() {
+        let src = "def f(x):\n    for i in range(4):\n        x = x.relu() + i\n    return x.sum()\nprint(f(torch.ones([8])).item())\n";
+        let (d, _) = check(src);
+        assert_eq!(d.metrics.graph_breaks.get(), 0);
+        let graphs = d.graphs();
+        assert!(graphs[0].1.num_ops() >= 8, "loop should unroll into the graph");
+    }
+
+    #[test]
+    fn scalar_arg_guard() {
+        let src = "def f(x, k):\n    return (x * k).sum()\nprint(f(torch.ones([2]), 3).item())\nprint(f(torch.ones([2]), 4).item())\n";
+        let (d, _) = check(src);
+        assert_eq!(d.metrics.captures.get(), 2, "int arg is guarded, change recompiles: {:?}", d.log());
+    }
+
+    #[test]
+    fn global_weights_are_lifted_and_guarded() {
+        let src = "W = torch.ones([3, 3])\ndef f(x):\n    return (x @ W).sum()\nprint(f(torch.ones([2, 3])).item())\n";
+        let (d, _) = check(src);
+        let graphs = d.graphs();
+        assert_eq!(graphs[0].1.inputs.len(), 2, "global W lifted as input");
+    }
+
+    #[test]
+    fn user_function_call_breaks() {
+        let src = "def helper(t):\n    return t * 3\ndef f(x):\n    y = x + 1\n    z = helper(y)\n    return z.sum()\nprint(f(torch.ones([4])).item())\n";
+        let (d, _) = check(src);
+        assert!(d.metrics.graph_breaks.get() >= 1, "{:?}", d.log());
+    }
+
+    #[test]
+    fn item_breaks_then_resumes() {
+        let src = "def f(x):\n    m = x.mean()\n    v = m.item()\n    if v > 0:\n        return x * 2\n    return x * -2\nprint(f(torch.ones([4])).sum().item())\n";
+        let (d, _) = check(src);
+        assert!(d.metrics.graph_breaks.get() >= 1);
+    }
+
+    #[test]
+    fn skip_list_for_unsupported() {
+        // Closures abort the capture; behaviour must still be correct.
+        let src = "def outer():\n    n = torch.ones([2])\n    def inner():\n        return n\n    return inner\ng = outer()\nprint(g().sum().item())\n";
+        let (d, _) = check(src);
+        assert!(d.metrics.fallbacks.get() >= 1);
+    }
+
+    #[test]
+    fn xla_backend_end_to_end() {
+        let src = "def f(x, y):\n    return ((x @ y) + 1).relu().sum()\nprint(f(torch.ones([4, 4]), torch.ones([4, 4])).item())\n";
+        let plain = Vm::new();
+        plain.exec_source(src, IsaVersion::V310).unwrap();
+        let expected = plain.take_output();
+
+        let rt = Runtime::cpu().expect("pjrt");
+        let mut vm = Vm::new();
+        let dynamo = Dynamo::with_runtime(DynamoConfig { backend: BackendKind::Xla, ..Default::default() }, rt);
+        vm.eval_hook = Some(dynamo.clone());
+        vm.exec_source(src, IsaVersion::V310).unwrap();
+        assert_eq!(vm.take_output(), expected);
+        assert_eq!(dynamo.metrics.captures.get(), 1);
+    }
+}

@@ -1,0 +1,177 @@
+//! Symbolic values for dynamo's bytecode-level symbolic evaluation.
+//!
+//! A [`Sym`] is what lives on the *symbolic* stack during capture: either a
+//! proxy for a tensor graph node, a concrete Python value known at capture
+//! time (with a provenance [`Origin`] when it can be re-materialized in
+//! transformed bytecode), or trace-side structure (lists/tuples/iterators
+//! built while unrolling Python-level control flow).
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::graph::NodeId;
+use crate::value::Value;
+
+/// Where a concrete value came from — how transformed bytecode can reload
+/// it at run time, and how guards re-resolve it on later calls.
+#[derive(Clone, Debug)]
+pub enum Origin {
+    /// The i-th positional argument of the intercepted function.
+    Arg(usize),
+    /// A module global.
+    Global(String),
+    /// `base[key]` with a constant key (also resolves dict-module
+    /// attributes like `torch.matmul`).
+    Index(Box<Origin>, Value),
+}
+
+impl Origin {
+    pub fn index(self, key: Value) -> Origin {
+        Origin::Index(Box::new(self), key)
+    }
+
+    /// Resolve against concrete call state. Returns None if the path no
+    /// longer exists (guards treat that as failure).
+    pub fn resolve(
+        &self,
+        args: &[Value],
+        globals: &std::collections::HashMap<String, Value>,
+    ) -> Option<Value> {
+        match self {
+            Origin::Arg(i) => args.get(*i).cloned(),
+            Origin::Global(n) => globals.get(n).cloned(),
+            Origin::Index(base, key) => {
+                let b = base.resolve(args, globals)?;
+                match (&b, key) {
+                    (Value::Iter(it), Value::Int(k)) => {
+                        let it = it.borrow();
+                        it.items.get(it.pos + *k as usize).cloned()
+                    }
+                    _ => crate::vm::apply_subscript(&b, key).ok(),
+                }
+            }
+        }
+    }
+
+    /// Human-readable form (used in dumps and placeholder names).
+    pub fn describe(&self) -> String {
+        match self {
+            Origin::Arg(i) => format!("arg{}", i),
+            Origin::Global(n) => format!("g_{}", n),
+            Origin::Index(base, k) => format!("{}_{}", base.describe(), sanitize(&k.to_display())),
+        }
+    }
+}
+
+fn sanitize(s: &str) -> String {
+    s.chars().map(|c| if c.is_ascii_alphanumeric() { c } else { '_' }).collect()
+}
+
+/// A symbolic value.
+#[derive(Clone, Debug)]
+pub enum Sym {
+    /// A tensor proxy: graph node id.
+    Tensor(NodeId),
+    /// A concrete Python value known at capture time.
+    Const { value: Value, origin: Option<Origin> },
+    /// A list built (or unaliased from an argument) during tracing.
+    /// `external` marks lists that alias caller-visible state — mutating
+    /// those forces a graph break.
+    List { items: Rc<RefCell<Vec<Sym>>>, external: bool },
+    Tuple(Rc<Vec<Sym>>),
+    /// A trace-side iterator (Python loops unroll during capture).
+    Iter { items: Rc<RefCell<Vec<Sym>>>, pos: usize },
+    /// `recv.name` awaiting CALL_METHOD.
+    MethodRef { recv: Box<Sym>, name: String },
+}
+
+impl Sym {
+    pub fn constant(value: Value) -> Sym {
+        Sym::Const { value, origin: None }
+    }
+
+    pub fn with_origin(value: Value, origin: Origin) -> Sym {
+        Sym::Const { value, origin: Some(origin) }
+    }
+
+    /// Is this a concrete Python value (usable for constant folding)?
+    pub fn as_value(&self) -> Option<Value> {
+        match self {
+            Sym::Const { value, .. } => Some(value.clone()),
+            Sym::Tuple(items) => {
+                let vs: Option<Vec<Value>> = items.iter().map(|s| s.as_value()).collect();
+                vs.map(Value::tuple)
+            }
+            Sym::List { items, .. } => {
+                let vs: Option<Vec<Value>> = items.borrow().iter().map(|s| s.as_value()).collect();
+                vs.map(Value::list)
+            }
+            _ => None,
+        }
+    }
+
+    /// All tensor node ids referenced by this sym (for graph-output
+    /// selection at a break).
+    pub fn collect_tensors(&self, out: &mut Vec<NodeId>) {
+        match self {
+            Sym::Tensor(id) => {
+                if !out.contains(id) {
+                    out.push(*id);
+                }
+            }
+            Sym::List { items, .. } | Sym::Iter { items, .. } => {
+                for s in items.borrow().iter() {
+                    s.collect_tensors(out);
+                }
+            }
+            Sym::Tuple(items) => {
+                for s in items.iter() {
+                    s.collect_tensors(out);
+                }
+            }
+            Sym::MethodRef { recv, .. } => recv.collect_tensors(out),
+            Sym::Const { .. } => {}
+        }
+    }
+
+    pub fn type_desc(&self) -> String {
+        match self {
+            Sym::Tensor(id) => format!("TensorProxy(node {})", id),
+            Sym::Const { value, .. } => format!("Const({})", value.type_name()),
+            Sym::List { .. } => "List".into(),
+            Sym::Tuple(_) => "Tuple".into(),
+            Sym::Iter { .. } => "Iter".into(),
+            Sym::MethodRef { name, .. } => format!("MethodRef(.{})", name),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    #[test]
+    fn origin_resolution() {
+        let args = vec![Value::Int(5), Value::list(vec![Value::Int(10), Value::Int(20)])];
+        let globals: HashMap<String, Value> = [("w".to_string(), Value::Float(1.5))].into_iter().collect();
+        assert!(Origin::Arg(0).resolve(&args, &globals).unwrap().eq_value(&Value::Int(5)));
+        assert!(Origin::Global("w".into()).resolve(&args, &globals).unwrap().eq_value(&Value::Float(1.5)));
+        let idx = Origin::Arg(1).index(Value::Int(1));
+        assert!(idx.resolve(&args, &globals).unwrap().eq_value(&Value::Int(20)));
+        assert!(Origin::Arg(7).resolve(&args, &globals).is_none());
+        assert!(Origin::Global("nope".into()).resolve(&args, &globals).is_none());
+    }
+
+    #[test]
+    fn collect_tensor_ids() {
+        let s = Sym::Tuple(Rc::new(vec![
+            Sym::Tensor(3),
+            Sym::constant(Value::Int(1)),
+            Sym::List { items: Rc::new(RefCell::new(vec![Sym::Tensor(5), Sym::Tensor(3)])), external: false },
+        ]));
+        let mut ids = Vec::new();
+        s.collect_tensors(&mut ids);
+        assert_eq!(ids, vec![3, 5]);
+    }
+}

@@ -1,0 +1,375 @@
+//! Tensor computation-graph IR — the analogue of torch.fx graphs that
+//! Dynamo extracts. Nodes are created by dynamo's symbolic evaluation;
+//! shapes are inferred eagerly so capture fails fast on invalid programs.
+
+mod printer;
+
+pub use printer::print_graph;
+
+use std::cell::Cell;
+use std::fmt;
+use std::rc::Rc;
+
+use crate::tensor::{self, Tensor};
+
+pub type NodeId = usize;
+
+/// Tensor operations representable in a captured graph.
+#[derive(Clone, Debug, PartialEq)]
+pub enum OpKind {
+    // elementwise binary (broadcasting)
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Pow,
+    Maximum,
+    Minimum,
+    // elementwise unary
+    Neg,
+    Relu,
+    Gelu,
+    Tanh,
+    Sigmoid,
+    Exp,
+    Log,
+    Sqrt,
+    Abs,
+    // linear algebra
+    MatMul,
+    Transpose,
+    Reshape(Vec<i64>),
+    Permute(Vec<usize>),
+    // reductions / normalization
+    Softmax,
+    Sum(Option<usize>),
+    Mean(Option<usize>),
+    Max(Option<usize>),
+    Min(Option<usize>),
+    LayerNorm,
+    // NN specifics
+    Embedding,
+    CrossEntropy,
+}
+
+impl OpKind {
+    /// The tensor-method name users write (`x.relu()`, `t.matmul(u)`).
+    pub fn method_name(&self) -> &'static str {
+        match self {
+            OpKind::Add => "add",
+            OpKind::Sub => "sub",
+            OpKind::Mul => "mul",
+            OpKind::Div => "div",
+            OpKind::Pow => "pow",
+            OpKind::Maximum => "maximum",
+            OpKind::Minimum => "minimum",
+            OpKind::Neg => "neg",
+            OpKind::Relu => "relu",
+            OpKind::Gelu => "gelu",
+            OpKind::Tanh => "tanh",
+            OpKind::Sigmoid => "sigmoid",
+            OpKind::Exp => "exp",
+            OpKind::Log => "log",
+            OpKind::Sqrt => "sqrt",
+            OpKind::Abs => "abs",
+            OpKind::MatMul => "matmul",
+            OpKind::Transpose => "t",
+            OpKind::Reshape(_) => "reshape",
+            OpKind::Permute(_) => "permute",
+            OpKind::Softmax => "softmax",
+            OpKind::Sum(_) => "sum",
+            OpKind::Mean(_) => "mean",
+            OpKind::Max(_) => "max",
+            OpKind::Min(_) => "min",
+            OpKind::LayerNorm => "layernorm",
+            OpKind::Embedding => "embedding",
+            OpKind::CrossEntropy => "cross_entropy",
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub enum NodeKind {
+    /// A graph input (lifted local or global tensor).
+    Placeholder { name: String },
+    /// A Python-number constant that entered tensor compute.
+    ConstScalar(f64),
+    /// A tensor materialized at capture time (torch.zeros/ones/arange with
+    /// constant arguments) embedded as a graph constant.
+    ConstTensor(Tensor),
+    /// A tensor op over earlier nodes.
+    Op(OpKind, Vec<NodeId>),
+}
+
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub kind: NodeKind,
+    pub shape: Vec<usize>,
+}
+
+/// A captured tensor computation graph.
+#[derive(Clone, Debug, Default)]
+pub struct Graph {
+    pub name: String,
+    pub nodes: Vec<Node>,
+    pub inputs: Vec<NodeId>,
+    pub outputs: Vec<NodeId>,
+}
+
+impl Graph {
+    pub fn new(name: &str) -> Graph {
+        Graph { name: name.to_string(), ..Default::default() }
+    }
+
+    pub fn placeholder(&mut self, name: &str, shape: &[usize]) -> NodeId {
+        let id = self.nodes.len();
+        self.nodes.push(Node { kind: NodeKind::Placeholder { name: name.to_string() }, shape: shape.to_vec() });
+        self.inputs.push(id);
+        id
+    }
+
+    pub fn const_scalar(&mut self, v: f64) -> NodeId {
+        let id = self.nodes.len();
+        self.nodes.push(Node { kind: NodeKind::ConstScalar(v), shape: vec![] });
+        id
+    }
+
+    pub fn const_tensor(&mut self, t: Tensor) -> NodeId {
+        let id = self.nodes.len();
+        let shape = t.shape().to_vec();
+        self.nodes.push(Node { kind: NodeKind::ConstTensor(t), shape });
+        id
+    }
+
+    /// Add an op node, inferring (and validating) its output shape.
+    pub fn add_op(&mut self, op: OpKind, args: Vec<NodeId>) -> Result<NodeId, String> {
+        let shapes: Vec<&[usize]> = args.iter().map(|&a| self.nodes[a].shape.as_slice()).collect();
+        let shape = infer_shape(&op, &shapes)?;
+        let id = self.nodes.len();
+        self.nodes.push(Node { kind: NodeKind::Op(op, args), shape });
+        Ok(id)
+    }
+
+    pub fn set_outputs(&mut self, outputs: Vec<NodeId>) {
+        self.outputs = outputs;
+    }
+
+    pub fn num_ops(&self) -> usize {
+        self.nodes.iter().filter(|n| matches!(n.kind, NodeKind::Op(..))).count()
+    }
+
+    /// Approximate FLOP count (matmuls dominate).
+    pub fn flops(&self) -> u64 {
+        let mut total = 0u64;
+        for n in &self.nodes {
+            if let NodeKind::Op(OpKind::MatMul, args) = &n.kind {
+                let a = &self.nodes[args[0]].shape;
+                let k = *a.last().unwrap_or(&1) as u64;
+                total += 2 * k * n.shape.iter().product::<usize>() as u64;
+            } else if let NodeKind::Op(_, _) = &n.kind {
+                total += n.shape.iter().product::<usize>() as u64;
+            }
+        }
+        total
+    }
+}
+
+/// Output-shape inference for each op.
+pub fn infer_shape(op: &OpKind, shapes: &[&[usize]]) -> Result<Vec<usize>, String> {
+    let need = |n: usize| -> Result<(), String> {
+        if shapes.len() != n {
+            Err(format!("{:?} expects {} args, got {}", op, n, shapes.len()))
+        } else {
+            Ok(())
+        }
+    };
+    match op {
+        OpKind::Add | OpKind::Sub | OpKind::Mul | OpKind::Div | OpKind::Pow | OpKind::Maximum | OpKind::Minimum => {
+            need(2)?;
+            tensor::broadcast_shapes(shapes[0], shapes[1])
+        }
+        OpKind::Neg
+        | OpKind::Relu
+        | OpKind::Gelu
+        | OpKind::Tanh
+        | OpKind::Sigmoid
+        | OpKind::Exp
+        | OpKind::Log
+        | OpKind::Sqrt
+        | OpKind::Abs
+        | OpKind::Softmax => {
+            need(1)?;
+            Ok(shapes[0].to_vec())
+        }
+        OpKind::MatMul => {
+            need(2)?;
+            let (a, b) = (shapes[0], shapes[1]);
+            if a.len() < 2 || b.len() < 2 {
+                return Err(format!("matmul needs rank>=2, got {:?} @ {:?}", a, b));
+            }
+            if a[a.len() - 1] != b[b.len() - 2] {
+                return Err(format!("matmul inner-dim mismatch: {:?} @ {:?}", a, b));
+            }
+            let batch = if a.len() >= b.len() { &a[..a.len() - 2] } else { &b[..b.len() - 2] };
+            if a.len() > 2 && b.len() > 2 && a[..a.len() - 2] != b[..b.len() - 2] {
+                return Err(format!("matmul batch mismatch: {:?} @ {:?}", a, b));
+            }
+            let mut s = batch.to_vec();
+            s.push(a[a.len() - 2]);
+            s.push(b[b.len() - 1]);
+            Ok(s)
+        }
+        OpKind::Transpose => {
+            need(1)?;
+            let a = shapes[0];
+            if a.len() < 2 {
+                return Err(format!("transpose needs rank>=2, got {:?}", a));
+            }
+            let mut s = a.to_vec();
+            let r = s.len();
+            s.swap(r - 2, r - 1);
+            Ok(s)
+        }
+        OpKind::Reshape(spec) => {
+            need(1)?;
+            let numel: usize = shapes[0].iter().product();
+            tensor::reshape_infer(numel, spec)
+        }
+        OpKind::Permute(perm) => {
+            need(1)?;
+            if perm.len() != shapes[0].len() {
+                return Err(format!("permute {:?} on rank-{}", perm, shapes[0].len()));
+            }
+            Ok(perm.iter().map(|&p| shapes[0][p]).collect())
+        }
+        OpKind::Sum(axis) | OpKind::Mean(axis) | OpKind::Max(axis) | OpKind::Min(axis) => {
+            need(1)?;
+            match axis {
+                None => Ok(vec![]),
+                Some(ax) => {
+                    if *ax >= shapes[0].len() {
+                        return Err(format!("reduce axis {} out of range for {:?}", ax, shapes[0]));
+                    }
+                    let mut s = shapes[0].to_vec();
+                    s.remove(*ax);
+                    Ok(s)
+                }
+            }
+        }
+        OpKind::LayerNorm => {
+            need(3)?;
+            let n = *shapes[0].last().ok_or("layernorm on rank-0")?;
+            if shapes[1] != [n] || shapes[2] != [n] {
+                return Err(format!("layernorm params must be [{}], got {:?} {:?}", n, shapes[1], shapes[2]));
+            }
+            Ok(shapes[0].to_vec())
+        }
+        OpKind::Embedding => {
+            need(2)?;
+            if shapes[0].len() != 2 {
+                return Err(format!("embedding table must be rank 2, got {:?}", shapes[0]));
+            }
+            let mut s = shapes[1].to_vec();
+            s.push(shapes[0][1]);
+            Ok(s)
+        }
+        OpKind::CrossEntropy => {
+            need(2)?;
+            if shapes[0].is_empty() {
+                return Err("cross_entropy on rank-0 logits".into());
+            }
+            let rows: usize = shapes[0][..shapes[0].len() - 1].iter().product();
+            let trows: usize = shapes[1].iter().product();
+            if rows != trows {
+                return Err(format!("cross_entropy rows {} vs targets {}", rows, trows));
+            }
+            Ok(vec![])
+        }
+    }
+}
+
+/// A compiled graph installed by dynamo as a callable global
+/// (`__compiled_fn_N`). Routes tensor inputs to a backend executor.
+pub struct CompiledGraphFn {
+    pub name: String,
+    pub graph: Rc<Graph>,
+    /// Which backend compiled this (for dumps/metrics).
+    pub backend_name: String,
+    #[allow(clippy::type_complexity)]
+    pub executor: Box<dyn Fn(&[Rc<Tensor>]) -> Result<Vec<Tensor>, String>>,
+    pub calls: Cell<u64>,
+}
+
+impl CompiledGraphFn {
+    pub fn call(&self, inputs: &[Rc<Tensor>]) -> Result<Vec<Tensor>, String> {
+        self.calls.set(self.calls.get() + 1);
+        (self.executor)(inputs)
+    }
+}
+
+impl fmt::Debug for CompiledGraphFn {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "<compiled graph {} via {}, {} calls>", self.name, self.backend_name, self.calls.get())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_small_graph() {
+        let mut g = Graph::new("g");
+        let x = g.placeholder("x", &[2, 3]);
+        let y = g.placeholder("y", &[3, 4]);
+        let m = g.add_op(OpKind::MatMul, vec![x, y]).unwrap();
+        assert_eq!(g.nodes[m].shape, vec![2, 4]);
+        let r = g.add_op(OpKind::Relu, vec![m]).unwrap();
+        g.set_outputs(vec![r]);
+        assert_eq!(g.num_ops(), 2);
+        assert!(g.flops() >= 2 * 3 * 2 * 4);
+    }
+
+    #[test]
+    fn shape_errors_at_capture() {
+        let mut g = Graph::new("g");
+        let x = g.placeholder("x", &[2, 3]);
+        let y = g.placeholder("y", &[2, 3]);
+        assert!(g.add_op(OpKind::MatMul, vec![x, y]).is_err());
+        assert!(g.add_op(OpKind::Sum(Some(5)), vec![x]).is_err());
+    }
+
+    #[test]
+    fn broadcast_shape_inference() {
+        let mut g = Graph::new("g");
+        let x = g.placeholder("x", &[4, 1]);
+        let y = g.placeholder("y", &[3]);
+        let s = g.add_op(OpKind::Add, vec![x, y]).unwrap();
+        assert_eq!(g.nodes[s].shape, vec![4, 3]);
+    }
+
+    #[test]
+    fn reduction_and_reshape() {
+        let mut g = Graph::new("g");
+        let x = g.placeholder("x", &[2, 6]);
+        let r = g.add_op(OpKind::Reshape(vec![3, -1]), vec![x]).unwrap();
+        assert_eq!(g.nodes[r].shape, vec![3, 4]);
+        let s = g.add_op(OpKind::Sum(Some(1)), vec![r]).unwrap();
+        assert_eq!(g.nodes[s].shape, vec![3]);
+        let t = g.add_op(OpKind::Sum(None), vec![s]).unwrap();
+        assert_eq!(g.nodes[t].shape, Vec::<usize>::new());
+    }
+
+    #[test]
+    fn embedding_and_ce() {
+        let mut g = Graph::new("g");
+        let tb = g.placeholder("table", &[10, 4]);
+        let ids = g.placeholder("ids", &[2, 3]);
+        let e = g.add_op(OpKind::Embedding, vec![tb, ids]).unwrap();
+        assert_eq!(g.nodes[e].shape, vec![2, 3, 4]);
+        let logits = g.placeholder("logits", &[6, 10]);
+        let tgt = g.placeholder("tgt", &[6]);
+        let ce = g.add_op(OpKind::CrossEntropy, vec![logits, tgt]).unwrap();
+        assert_eq!(g.nodes[ce].shape, Vec::<usize>::new());
+    }
+}

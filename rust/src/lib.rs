@@ -1,0 +1,49 @@
+//! # depyf-rs
+//!
+//! A Rust reproduction of **depyf** ("Open the Opaque Box of PyTorch
+//! Compiler for Machine Learning Researchers", You et al., 2024), built as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the compiler being opened *and* the tool
+//!   that opens it: a Python-subset language & VM ([`pylang`], [`vm`],
+//!   [`bytecode`]), a Dynamo-like graph-capturing frontend ([`dynamo`]),
+//!   the symbolic-execution bytecode decompiler ([`decompiler`]), the
+//!   introspection/debugging API ([`session`], [`hijack`], [`debugger`]),
+//!   and graph backends ([`backend`]) including an XLA/PJRT backend.
+//! * **Layer 2 (build-time JAX)** — a transformer model AOT-lowered to HLO
+//!   text artifacts loaded by [`runtime`].
+//! * **Layer 1 (build-time Pallas)** — fused attention / layernorm kernels
+//!   called from Layer 2.
+//!
+//! See `DESIGN.md` for the full system inventory and `EXPERIMENTS.md` for
+//! the paper-vs-measured results.
+
+pub mod backend;
+pub mod bytecode;
+pub mod corpus;
+pub mod debugger;
+pub mod decompiler;
+pub mod dynamo;
+pub mod graph;
+pub mod hijack;
+pub mod metrics;
+pub mod pylang;
+pub mod runtime;
+pub mod session;
+pub mod tensor;
+pub mod value;
+pub mod vm;
+
+/// Convenient re-exports for examples and tests.
+pub mod prelude {
+    pub use crate::backend::BackendKind;
+    pub use crate::bytecode::{disassemble, CodeObject, Instr, IsaVersion};
+    pub use crate::decompiler::{decompile, Decompiler};
+    pub use crate::dynamo::{Dynamo, DynamoConfig};
+    pub use crate::pylang::compile_module;
+    pub use crate::runtime::Runtime;
+    pub use crate::session::DebugSession;
+    pub use crate::tensor::Tensor;
+    pub use crate::value::Value;
+    pub use crate::vm::Vm;
+}

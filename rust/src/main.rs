@@ -1,0 +1,147 @@
+//! depyf-rs CLI — the leader entrypoint.
+//!
+//! ```text
+//! depyf run <file.py> [--compile] [--backend eager|xla] [--version 3.8..3.11]
+//! depyf disasm <file.py> [--version V]       # compile + disassemble
+//! depyf decompile <file.py> [--tool NAME]    # bytecode -> source
+//! depyf dump <file.py> <dir>                 # prepare_debug: run + dump all
+//! depyf table1                               # regenerate the paper's Table 1
+//! ```
+//!
+//! (Hand-rolled arg parsing: the offline environment has no clap.)
+
+use depyf::backend::BackendKind;
+use depyf::bytecode::{disassemble, IsaVersion};
+use depyf::corpus::{render_table1, run_table1};
+use depyf::decompiler::baselines::all_tools_rc;
+use depyf::dynamo::{Dynamo, DynamoConfig};
+use depyf::pylang::compile_module;
+use depyf::runtime::Runtime;
+use depyf::session::DebugSession;
+use depyf::vm::Vm;
+
+fn parse_version(args: &[String]) -> IsaVersion {
+    match flag_value(args, "--version").as_deref() {
+        Some("3.8") => IsaVersion::V38,
+        Some("3.9") => IsaVersion::V39,
+        Some("3.10") => IsaVersion::V310,
+        Some("3.11") | None => IsaVersion::V311,
+        Some(other) => {
+            eprintln!("unknown version '{}', using 3.11", other);
+            IsaVersion::V311
+        }
+    }
+}
+
+fn flag_value(args: &[String], name: &str) -> Option<String> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
+}
+
+fn has_flag(args: &[String], name: &str) -> bool {
+    args.iter().any(|a| a == name)
+}
+
+fn read_source(path: &str) -> Result<String, String> {
+    std::fs::read_to_string(path).map_err(|e| format!("read {}: {}", path, e))
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = run_cli(&args);
+    std::process::exit(code);
+}
+
+fn run_cli(args: &[String]) -> i32 {
+    let Some(cmd) = args.first() else {
+        eprintln!("usage: depyf <run|disasm|decompile|dump|table1> ...");
+        return 2;
+    };
+    let rest = &args[1..];
+    let result = match cmd.as_str() {
+        "run" => cmd_run(rest),
+        "disasm" => cmd_disasm(rest),
+        "decompile" => cmd_decompile(rest),
+        "dump" => cmd_dump(rest),
+        "table1" => cmd_table1(rest),
+        other => Err(format!("unknown command '{}'", other)),
+    };
+    match result {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {}", e);
+            1
+        }
+    }
+}
+
+fn cmd_run(args: &[String]) -> Result<(), String> {
+    let file = args.first().ok_or("usage: depyf run <file.py> [--compile] [--backend eager|xla]")?;
+    let src = read_source(file)?;
+    let version = parse_version(args);
+    let mut vm = Vm::new();
+    let dynamo = if has_flag(args, "--compile") {
+        let backend = match flag_value(args, "--backend").as_deref() {
+            Some("xla") => BackendKind::Xla,
+            _ => BackendKind::Eager,
+        };
+        let d = if backend == BackendKind::Xla {
+            let rt = Runtime::cpu()?;
+            Dynamo::with_runtime(DynamoConfig { backend, ..Default::default() }, rt)
+        } else {
+            Dynamo::new(DynamoConfig { backend, ..Default::default() })
+        };
+        vm.eval_hook = Some(d.clone());
+        Some(d)
+    } else {
+        None
+    };
+    vm.exec_source(&src, version).map_err(|e| e.to_string())?;
+    print!("{}", vm.take_output());
+    if let Some(d) = dynamo {
+        eprintln!("[depyf] {}", d.metrics.report());
+    }
+    Ok(())
+}
+
+fn cmd_disasm(args: &[String]) -> Result<(), String> {
+    let file = args.first().ok_or("usage: depyf disasm <file.py>")?;
+    let src = read_source(file)?;
+    let version = parse_version(args);
+    let code = compile_module(&src, file, version).map_err(|e| e.to_string())?;
+    print!("{}", disassemble(&code));
+    Ok(())
+}
+
+fn cmd_decompile(args: &[String]) -> Result<(), String> {
+    let file = args.first().ok_or("usage: depyf decompile <file.py> [--tool depyf|pycdc|decompyle3|uncompyle6]")?;
+    let src = read_source(file)?;
+    let version = parse_version(args);
+    let toolname = flag_value(args, "--tool").unwrap_or_else(|| "depyf".into());
+    let tool = all_tools_rc()
+        .into_iter()
+        .find(|t| t.name() == toolname)
+        .ok_or_else(|| format!("unknown tool '{}'", toolname))?;
+    let code = compile_module(&src, file, version).map_err(|e| e.to_string())?;
+    let out = tool.decompile_module(&code).map_err(|e| e.to_string())?;
+    print!("{}", out);
+    Ok(())
+}
+
+fn cmd_dump(args: &[String]) -> Result<(), String> {
+    let file = args.first().ok_or("usage: depyf dump <file.py> <dir>")?;
+    let dir = args.get(1).ok_or("usage: depyf dump <file.py> <dir>")?;
+    let src = read_source(file)?;
+    let mut session = DebugSession::prepare_debug(dir, BackendKind::Eager)?;
+    session.set_version(parse_version(args));
+    session.run_source("main", &src).map_err(|e| e.to_string())?;
+    print!("{}", session.vm.take_output());
+    let files = session.finish()?;
+    eprintln!("[depyf] dumped {} files into {}", files.len(), dir);
+    Ok(())
+}
+
+fn cmd_table1(_args: &[String]) -> Result<(), String> {
+    let t = run_table1();
+    print!("{}", render_table1(&t));
+    Ok(())
+}

@@ -1,0 +1,69 @@
+//! Counters and timers for the compiler stack (captures, cache hits, graph
+//! breaks, backend calls). Cheap `Cell`-based, suitable for the hot path.
+
+use std::cell::Cell;
+use std::time::{Duration, Instant};
+
+#[derive(Default, Debug)]
+pub struct Metrics {
+    pub captures: Cell<u64>,
+    pub cache_hits: Cell<u64>,
+    pub cache_misses: Cell<u64>,
+    pub graph_breaks: Cell<u64>,
+    pub fallbacks: Cell<u64>,
+    pub guard_checks: Cell<u64>,
+    pub guard_failures: Cell<u64>,
+    pub compile_ns: Cell<u64>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn bump(c: &Cell<u64>) {
+        c.set(c.get() + 1);
+    }
+
+    /// Time a closure, accumulating into `compile_ns`.
+    pub fn time_compile<T>(&self, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let r = f();
+        self.compile_ns.set(self.compile_ns.get() + t0.elapsed().as_nanos() as u64);
+        r
+    }
+
+    pub fn compile_time(&self) -> Duration {
+        Duration::from_nanos(self.compile_ns.get())
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "captures={} cache_hits={} cache_misses={} graph_breaks={} fallbacks={} guard_checks={} guard_failures={} compile_time={:?}",
+            self.captures.get(),
+            self.cache_hits.get(),
+            self.cache_misses.get(),
+            self.graph_breaks.get(),
+            self.fallbacks.get(),
+            self.guard_checks.get(),
+            self.guard_failures.get(),
+            self.compile_time(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_timer() {
+        let m = Metrics::new();
+        Metrics::bump(&m.captures);
+        Metrics::bump(&m.captures);
+        assert_eq!(m.captures.get(), 2);
+        let v = m.time_compile(|| 42);
+        assert_eq!(v, 42);
+        assert!(m.report().contains("captures=2"));
+    }
+}

@@ -1,0 +1,125 @@
+//! Abstract syntax tree for the `pylang` Python subset.
+//!
+//! The same AST is produced by the parser (source → AST) and by the
+//! decompiler (bytecode → AST), which then renders it back to source via
+//! [`super::unparse`].
+
+use crate::bytecode::{BinOp, CmpOp, UnOp};
+
+/// One link of a (possibly chained) comparison.
+#[derive(Clone, Debug, PartialEq)]
+pub enum CompareKind {
+    Cmp(CmpOp),
+    In,
+    NotIn,
+    Is,
+    IsNot,
+}
+
+impl CompareKind {
+    pub fn symbol(&self) -> &'static str {
+        match self {
+            CompareKind::Cmp(c) => c.symbol(),
+            CompareKind::In => "in",
+            CompareKind::NotIn => "not in",
+            CompareKind::Is => "is",
+            CompareKind::IsNot => "is not",
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BoolOpKind {
+    And,
+    Or,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Expr {
+    NoneLit,
+    Bool(bool),
+    Int(i64),
+    Float(f64),
+    Str(String),
+    Name(String),
+    List(Vec<Expr>),
+    Tuple(Vec<Expr>),
+    Dict(Vec<(Expr, Expr)>),
+    BinOp(BinOp, Box<Expr>, Box<Expr>),
+    UnaryOp(UnOp, Box<Expr>),
+    /// `a and b and c` / `a or b` (short-circuit, value-producing).
+    BoolOp(BoolOpKind, Vec<Expr>),
+    /// `a < b <= c`: left, then op/comparator pairs.
+    Compare { left: Box<Expr>, ops: Vec<CompareKind>, comparators: Vec<Expr> },
+    Call { func: Box<Expr>, args: Vec<Expr> },
+    /// `recv.name(args)` — kept distinct from Call(Attribute) because the
+    /// bytecode uses LOAD_METHOD / CALL_METHOD.
+    MethodCall { recv: Box<Expr>, name: String, args: Vec<Expr> },
+    Attribute { value: Box<Expr>, name: String },
+    Subscript { value: Box<Expr>, index: Box<Expr> },
+    /// Only valid directly under `Subscript.index`.
+    Slice { start: Option<Box<Expr>>, stop: Option<Box<Expr>>, step: Option<Box<Expr>> },
+    IfExp { cond: Box<Expr>, then: Box<Expr>, orelse: Box<Expr> },
+    Lambda { params: Vec<String>, body: Box<Expr> },
+    /// Single-`for` list comprehension `[elt for var in iter if cond...]`.
+    ListComp { elt: Box<Expr>, target: Box<Target>, iter: Box<Expr>, conds: Vec<Expr> },
+}
+
+/// Assignment targets.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Target {
+    Name(String),
+    Tuple(Vec<Target>),
+    Subscript { value: Expr, index: Expr },
+}
+
+/// A function parameter (with optional default).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Param {
+    pub name: String,
+    pub default: Option<Expr>,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Stmt {
+    pub kind: StmtKind,
+    pub line: u32,
+}
+
+impl Stmt {
+    pub fn new(kind: StmtKind, line: u32) -> Stmt {
+        Stmt { kind, line }
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum StmtKind {
+    Expr(Expr),
+    Assign { target: Target, value: Expr },
+    AugAssign { target: Target, op: BinOp, value: Expr },
+    If { cond: Expr, then: Vec<Stmt>, orelse: Vec<Stmt> },
+    While { cond: Expr, body: Vec<Stmt>, orelse: Vec<Stmt> },
+    For { target: Target, iter: Expr, body: Vec<Stmt>, orelse: Vec<Stmt> },
+    FuncDef { name: String, params: Vec<Param>, body: Vec<Stmt> },
+    Return(Option<Expr>),
+    Break,
+    Continue,
+    Pass,
+    Global(Vec<String>),
+    Nonlocal(Vec<String>),
+    Assert { cond: Expr, msg: Option<Expr> },
+    Raise(Expr),
+}
+
+/// A parsed module (top-level statement list).
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct Module {
+    pub body: Vec<Stmt>,
+}
+
+impl Expr {
+    /// Is this a constant literal?
+    pub fn is_const(&self) -> bool {
+        matches!(self, Expr::NoneLit | Expr::Bool(_) | Expr::Int(_) | Expr::Float(_) | Expr::Str(_))
+    }
+}

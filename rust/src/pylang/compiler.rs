@@ -1,0 +1,1116 @@
+//! AST → bytecode compiler, targeting any of the four ISA versions.
+//!
+//! Scoping follows CPython: names assigned in a function are locals; `global`
+//! / `nonlocal` declarations override; names captured by nested functions
+//! become cells; free reads resolve to enclosing function scopes or fall
+//! back to globals. Comprehensions are compiled inline (an accumulator list
+//! kept on the stack) rather than as nested code objects — a documented
+//! simplification that preserves behaviour for our subset.
+
+use std::collections::HashSet;
+use std::rc::Rc;
+
+use super::ast::*;
+use super::parser::parse;
+use crate::bytecode::{CodeObject, Const, Instr, IsaVersion};
+
+#[derive(Clone, Debug)]
+pub struct CompileError {
+    pub message: String,
+    pub line: u32,
+}
+
+impl std::fmt::Display for CompileError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "compile error at line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for CompileError {}
+
+/// Compile source text to a module code object.
+pub fn compile_module(src: &str, file: &str, version: IsaVersion) -> Result<Rc<CodeObject>, CompileError> {
+    let module = parse(src).map_err(|e| CompileError { message: e.message, line: e.line })?;
+    compile_module_ast(&module, file, version)
+}
+
+/// Compile a parsed module.
+pub fn compile_module_ast(module: &Module, file: &str, version: IsaVersion) -> Result<Rc<CodeObject>, CompileError> {
+    let mut ctx = FnCtx::new("<module>", version, file.to_string(), true);
+    ctx.compile_body(&module.body)?;
+    let c = ctx.add_const(Const::None);
+    ctx.emit(Instr::LoadConst(c), 0);
+    ctx.emit(Instr::ReturnValue, 0);
+    Ok(Rc::new(ctx.finish(0, vec![], vec![], 1)))
+}
+
+// ---------------------------------------------------------------- analysis
+
+/// Names assigned anywhere in `body` (order-preserving, unique), not
+/// descending into nested function bodies.
+fn assigned_names(body: &[Stmt], out: &mut Vec<String>) {
+    fn add(out: &mut Vec<String>, n: &str) {
+        if !out.iter().any(|x| x == n) {
+            out.push(n.to_string());
+        }
+    }
+    fn target(out: &mut Vec<String>, t: &Target) {
+        match t {
+            Target::Name(n) => add(out, n),
+            Target::Tuple(ts) => ts.iter().for_each(|t| target(out, t)),
+            Target::Subscript { .. } => {}
+        }
+    }
+    fn expr(out: &mut Vec<String>, e: &Expr) {
+        // Comprehension targets bind in the enclosing scope (inlined).
+        match e {
+            Expr::ListComp { elt, target: t, iter, conds } => {
+                target(out, t);
+                expr(out, elt);
+                expr(out, iter);
+                conds.iter().for_each(|c| expr(out, c));
+            }
+            Expr::BinOp(_, a, b) => {
+                expr(out, a);
+                expr(out, b);
+            }
+            Expr::UnaryOp(_, a) => expr(out, a),
+            Expr::BoolOp(_, items) | Expr::List(items) | Expr::Tuple(items) => items.iter().for_each(|i| expr(out, i)),
+            Expr::Dict(kvs) => kvs.iter().for_each(|(k, v)| {
+                expr(out, k);
+                expr(out, v);
+            }),
+            Expr::Compare { left, comparators, .. } => {
+                expr(out, left);
+                comparators.iter().for_each(|c| expr(out, c));
+            }
+            Expr::Call { func, args } => {
+                expr(out, func);
+                args.iter().for_each(|a| expr(out, a));
+            }
+            Expr::MethodCall { recv, args, .. } => {
+                expr(out, recv);
+                args.iter().for_each(|a| expr(out, a));
+            }
+            Expr::Attribute { value, .. } => expr(out, value),
+            Expr::Subscript { value, index } => {
+                expr(out, value);
+                expr(out, index);
+            }
+            Expr::Slice { start, stop, step } => {
+                [start, stop, step].iter().for_each(|o| {
+                    if let Some(e) = o {
+                        expr(out, e);
+                    }
+                });
+            }
+            Expr::IfExp { cond, then, orelse } => {
+                expr(out, cond);
+                expr(out, then);
+                expr(out, orelse);
+            }
+            _ => {}
+        }
+    }
+    for s in body {
+        match &s.kind {
+            StmtKind::Assign { target: t, value } => {
+                expr(out, value);
+                target(out, t);
+            }
+            StmtKind::AugAssign { target: t, value, .. } => {
+                expr(out, value);
+                target(out, t);
+            }
+            StmtKind::Expr(e) => expr(out, e),
+            StmtKind::If { cond, then, orelse } => {
+                expr(out, cond);
+                assigned_names(then, out);
+                assigned_names(orelse, out);
+            }
+            StmtKind::While { cond, body: b, orelse } => {
+                expr(out, cond);
+                assigned_names(b, out);
+                assigned_names(orelse, out);
+            }
+            StmtKind::For { target: t, iter, body: b, orelse } => {
+                expr(out, iter);
+                target(out, t);
+                assigned_names(b, out);
+                assigned_names(orelse, out);
+            }
+            StmtKind::FuncDef { name, .. } => add(out, name),
+            StmtKind::Return(Some(e)) | StmtKind::Raise(e) => expr(out, e),
+            StmtKind::Assert { cond, msg } => {
+                expr(out, cond);
+                if let Some(m) = msg {
+                    expr(out, m);
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Names read anywhere in `body`, not descending into nested functions.
+fn read_names(body: &[Stmt], out: &mut HashSet<String>) {
+    fn expr(out: &mut HashSet<String>, e: &Expr) {
+        match e {
+            Expr::Name(n) => {
+                out.insert(n.clone());
+            }
+            Expr::BinOp(_, a, b) => {
+                expr(out, a);
+                expr(out, b);
+            }
+            Expr::UnaryOp(_, a) => expr(out, a),
+            Expr::BoolOp(_, items) | Expr::List(items) | Expr::Tuple(items) => items.iter().for_each(|i| expr(out, i)),
+            Expr::Dict(kvs) => kvs.iter().for_each(|(k, v)| {
+                expr(out, k);
+                expr(out, v);
+            }),
+            Expr::Compare { left, comparators, .. } => {
+                expr(out, left);
+                comparators.iter().for_each(|c| expr(out, c));
+            }
+            Expr::Call { func, args } => {
+                expr(out, func);
+                args.iter().for_each(|a| expr(out, a));
+            }
+            Expr::MethodCall { recv, args, .. } => {
+                expr(out, recv);
+                args.iter().for_each(|a| expr(out, a));
+            }
+            Expr::Attribute { value, .. } => expr(out, value),
+            Expr::Subscript { value, index } => {
+                expr(out, value);
+                expr(out, index);
+            }
+            Expr::Slice { start, stop, step } => {
+                [start, stop, step].iter().for_each(|o| {
+                    if let Some(e) = o {
+                        expr(out, e);
+                    }
+                });
+            }
+            Expr::IfExp { cond, then, orelse } => {
+                expr(out, cond);
+                expr(out, then);
+                expr(out, orelse);
+            }
+            Expr::ListComp { elt, iter, conds, .. } => {
+                expr(out, elt);
+                expr(out, iter);
+                conds.iter().for_each(|c| expr(out, c));
+            }
+            _ => {}
+        }
+    }
+    fn target_reads(out: &mut HashSet<String>, t: &Target) {
+        if let Target::Subscript { value, index } = t {
+            expr(out, value);
+            expr(out, index);
+        } else if let Target::Tuple(ts) = t {
+            ts.iter().for_each(|t| target_reads(out, t));
+        }
+    }
+    for s in body {
+        match &s.kind {
+            StmtKind::Assign { target, value } => {
+                expr(out, value);
+                target_reads(out, target);
+            }
+            StmtKind::AugAssign { target, value, .. } => {
+                expr(out, value);
+                target_reads(out, target);
+                // aug-assign also reads a Name target
+                if let Target::Name(n) = target {
+                    out.insert(n.clone());
+                }
+            }
+            StmtKind::Expr(e) => expr(out, e),
+            StmtKind::If { cond, then, orelse } => {
+                expr(out, cond);
+                read_names(then, out);
+                read_names(orelse, out);
+            }
+            StmtKind::While { cond, body, orelse } => {
+                expr(out, cond);
+                read_names(body, out);
+                read_names(orelse, out);
+            }
+            StmtKind::For { target, iter, body, orelse } => {
+                expr(out, iter);
+                target_reads(out, target);
+                read_names(body, out);
+                read_names(orelse, out);
+            }
+            StmtKind::Return(Some(e)) | StmtKind::Raise(e) => expr(out, e),
+            StmtKind::Assert { cond, msg } => {
+                expr(out, cond);
+                if let Some(m) = msg {
+                    expr(out, m);
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Direct nested functions (defs + lambdas) of `body`, not descending into
+/// them.
+fn nested_functions(body: &[Stmt]) -> Vec<(Vec<String>, Vec<Stmt>)> {
+    let mut out = Vec::new();
+    fn from_expr(out: &mut Vec<(Vec<String>, Vec<Stmt>)>, e: &Expr) {
+        match e {
+            Expr::Lambda { params, body } => {
+                out.push((params.clone(), vec![Stmt::new(StmtKind::Return(Some((**body).clone())), 0)]));
+            }
+            Expr::BinOp(_, a, b) => {
+                from_expr(out, a);
+                from_expr(out, b);
+            }
+            Expr::UnaryOp(_, a) => from_expr(out, a),
+            Expr::BoolOp(_, items) | Expr::List(items) | Expr::Tuple(items) => items.iter().for_each(|i| from_expr(out, i)),
+            Expr::Dict(kvs) => kvs.iter().for_each(|(k, v)| {
+                from_expr(out, k);
+                from_expr(out, v);
+            }),
+            Expr::Compare { left, comparators, .. } => {
+                from_expr(out, left);
+                comparators.iter().for_each(|c| from_expr(out, c));
+            }
+            Expr::Call { func, args } => {
+                from_expr(out, func);
+                args.iter().for_each(|a| from_expr(out, a));
+            }
+            Expr::MethodCall { recv, args, .. } => {
+                from_expr(out, recv);
+                args.iter().for_each(|a| from_expr(out, a));
+            }
+            Expr::Attribute { value, .. } => from_expr(out, value),
+            Expr::Subscript { value, index } => {
+                from_expr(out, value);
+                from_expr(out, index);
+            }
+            Expr::IfExp { cond, then, orelse } => {
+                from_expr(out, cond);
+                from_expr(out, then);
+                from_expr(out, orelse);
+            }
+            Expr::ListComp { elt, iter, conds, .. } => {
+                from_expr(out, elt);
+                from_expr(out, iter);
+                conds.iter().for_each(|c| from_expr(out, c));
+            }
+            _ => {}
+        }
+    }
+    fn walk(out: &mut Vec<(Vec<String>, Vec<Stmt>)>, body: &[Stmt]) {
+        for s in body {
+            match &s.kind {
+                StmtKind::FuncDef { params, body: b, .. } => {
+                    out.push((params.iter().map(|p| p.name.clone()).collect(), b.clone()));
+                    // Defaults evaluate in the enclosing scope.
+                    for p in params {
+                        if let Some(d) = &p.default {
+                            from_expr(out, d);
+                        }
+                    }
+                }
+                StmtKind::Assign { value, .. } => from_expr(out, value),
+                StmtKind::AugAssign { value, .. } => from_expr(out, value),
+                StmtKind::Expr(e) | StmtKind::Return(Some(e)) | StmtKind::Raise(e) => from_expr(out, e),
+                StmtKind::If { cond, then, orelse } => {
+                    from_expr(out, cond);
+                    walk(out, then);
+                    walk(out, orelse);
+                }
+                StmtKind::While { cond, body, orelse } => {
+                    from_expr(out, cond);
+                    walk(out, body);
+                    walk(out, orelse);
+                }
+                StmtKind::For { iter, body, orelse, .. } => {
+                    from_expr(out, iter);
+                    walk(out, body);
+                    walk(out, orelse);
+                }
+                StmtKind::Assert { cond, msg } => {
+                    from_expr(out, cond);
+                    if let Some(m) = msg {
+                        from_expr(out, m);
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    walk(&mut out, body);
+    out
+}
+
+fn declared(body: &[Stmt]) -> (HashSet<String>, HashSet<String>) {
+    let mut globals = HashSet::new();
+    let mut nonlocals = HashSet::new();
+    fn walk(body: &[Stmt], g: &mut HashSet<String>, n: &mut HashSet<String>) {
+        for s in body {
+            match &s.kind {
+                StmtKind::Global(names) => names.iter().for_each(|x| {
+                    g.insert(x.clone());
+                }),
+                StmtKind::Nonlocal(names) => names.iter().for_each(|x| {
+                    n.insert(x.clone());
+                }),
+                StmtKind::If { then, orelse, .. } => {
+                    walk(then, g, n);
+                    walk(orelse, g, n);
+                }
+                StmtKind::While { body, orelse, .. } | StmtKind::For { body, orelse, .. } => {
+                    walk(body, g, n);
+                    walk(orelse, g, n);
+                }
+                _ => {}
+            }
+        }
+    }
+    walk(body, &mut globals, &mut nonlocals);
+    (globals, nonlocals)
+}
+
+/// Names a function (params, body) might capture from enclosing function
+/// scopes (recursively includes its nested functions' needs).
+fn candidate_free(params: &[String], body: &[Stmt]) -> HashSet<String> {
+    let (globals, nonlocals) = declared(body);
+    let mut locals: Vec<String> = params.to_vec();
+    assigned_names(body, &mut locals);
+    let locals: HashSet<String> = locals.into_iter().filter(|n| !globals.contains(n) && !nonlocals.contains(n)).collect();
+    let mut reads = HashSet::new();
+    read_names(body, &mut reads);
+    for (ps, b) in nested_functions(body) {
+        reads.extend(candidate_free(&ps, &b));
+    }
+    reads.extend(nonlocals.iter().cloned());
+    reads.retain(|n| !locals.contains(n) && !globals.contains(n));
+    reads
+}
+
+// ---------------------------------------------------------------- emission
+
+struct LoopCtx {
+    header: usize, // instruction index of the loop test / FOR_ITER
+    is_for: bool,
+    /// Indices of emitted `Jump(PLACEHOLDER)` instrs to patch to loop end.
+    break_jumps: Vec<usize>,
+}
+
+const PLACEHOLDER: u32 = u32::MAX;
+
+struct FnCtx {
+    name: String,
+    version: IsaVersion,
+    file: String,
+    is_module: bool,
+    varnames: Vec<String>,
+    names: Vec<String>,
+    consts: Vec<Const>,
+    instrs: Vec<Instr>,
+    lines: Vec<u32>,
+    cur_line: u32,
+    cellvars: Vec<String>,
+    freevars: Vec<String>,
+    locals: HashSet<String>,
+    global_decls: HashSet<String>,
+    nonlocal_decls: HashSet<String>,
+    /// Bindings of enclosing function scopes (innermost first).
+    enclosing: Vec<HashSet<String>>,
+    loops: Vec<LoopCtx>,
+}
+
+impl FnCtx {
+    fn new(name: &str, version: IsaVersion, file: String, is_module: bool) -> FnCtx {
+        FnCtx {
+            name: name.to_string(),
+            version,
+            file,
+            is_module,
+            varnames: Vec::new(),
+            names: Vec::new(),
+            consts: Vec::new(),
+            instrs: Vec::new(),
+            lines: Vec::new(),
+            cur_line: 0,
+            cellvars: Vec::new(),
+            freevars: Vec::new(),
+            locals: HashSet::new(),
+            global_decls: HashSet::new(),
+            nonlocal_decls: HashSet::new(),
+            enclosing: Vec::new(),
+            loops: Vec::new(),
+        }
+    }
+
+    fn emit(&mut self, i: Instr, line: u32) -> usize {
+        self.instrs.push(i);
+        self.lines.push(if line == 0 { self.cur_line } else { line });
+        self.instrs.len() - 1
+    }
+
+    fn here(&self) -> u32 {
+        self.instrs.len() as u32
+    }
+
+    fn patch(&mut self, idx: usize, target: u32) {
+        self.instrs[idx] = self.instrs[idx].with_jump_target(target);
+    }
+
+    fn add_const(&mut self, c: Const) -> u32 {
+        if let Some(i) = self.consts.iter().position(|e| e.same(&c)) {
+            return i as u32;
+        }
+        self.consts.push(c);
+        (self.consts.len() - 1) as u32
+    }
+
+    fn add_name(&mut self, n: &str) -> u32 {
+        if let Some(i) = self.names.iter().position(|e| e == n) {
+            return i as u32;
+        }
+        self.names.push(n.to_string());
+        (self.names.len() - 1) as u32
+    }
+
+    fn add_varname(&mut self, n: &str) -> u32 {
+        if let Some(i) = self.varnames.iter().position(|e| e == n) {
+            return i as u32;
+        }
+        self.varnames.push(n.to_string());
+        (self.varnames.len() - 1) as u32
+    }
+
+    fn deref_index(&self, n: &str) -> Option<u32> {
+        if let Some(i) = self.cellvars.iter().position(|e| e == n) {
+            return Some(i as u32);
+        }
+        self.freevars.iter().position(|e| e == n).map(|i| (self.cellvars.len() + i) as u32)
+    }
+
+    fn err(&self, message: &str, line: u32) -> CompileError {
+        CompileError { message: message.to_string(), line }
+    }
+
+    fn finish(mut self, argcount: usize, cellvars: Vec<String>, freevars: Vec<String>, first_line: u32) -> CodeObject {
+        // Sanity: no placeholder jumps left.
+        debug_assert!(!self.instrs.iter().any(|i| i.jump_target() == Some(PLACEHOLDER)), "unpatched jump in {}", self.name);
+        let name = std::mem::take(&mut self.name);
+        let code = CodeObject::new(
+            &name,
+            self.version,
+            argcount,
+            std::mem::take(&mut self.varnames),
+            std::mem::take(&mut self.names),
+            std::mem::take(&mut self.consts),
+            std::mem::take(&mut self.instrs),
+            std::mem::take(&mut self.lines),
+        )
+        .with_closure_vars(cellvars, freevars);
+        code.with_source(&self.file, first_line)
+    }
+
+    // ---- name access ----
+
+    fn load_name(&mut self, n: &str, line: u32) {
+        if let Some(i) = self.deref_index(n) {
+            self.emit(Instr::LoadDeref(i), line);
+        } else if !self.is_module && self.locals.contains(n) {
+            let i = self.add_varname(n);
+            self.emit(Instr::LoadFast(i), line);
+        } else {
+            let i = self.add_name(n);
+            self.emit(Instr::LoadGlobal(i), line);
+        }
+    }
+
+    fn store_name(&mut self, n: &str, line: u32) {
+        if self.global_decls.contains(n) || self.is_module {
+            let i = self.add_name(n);
+            self.emit(Instr::StoreGlobal(i), line);
+        } else if let Some(i) = self.deref_index(n) {
+            self.emit(Instr::StoreDeref(i), line);
+        } else {
+            let i = self.add_varname(n);
+            self.emit(Instr::StoreFast(i), line);
+        }
+    }
+
+    // ---- statements ----
+
+    fn compile_body(&mut self, body: &[Stmt]) -> Result<(), CompileError> {
+        for s in body {
+            self.compile_stmt(s)?;
+        }
+        Ok(())
+    }
+
+    fn compile_stmt(&mut self, s: &Stmt) -> Result<(), CompileError> {
+        self.cur_line = s.line;
+        let line = s.line;
+        match &s.kind {
+            StmtKind::Pass | StmtKind::Global(_) | StmtKind::Nonlocal(_) => Ok(()),
+            StmtKind::Expr(e) => {
+                self.compile_expr(e)?;
+                self.emit(Instr::PopTop, line);
+                Ok(())
+            }
+            StmtKind::Assign { target, value } => {
+                self.compile_expr(value)?;
+                self.compile_store(target, line)
+            }
+            StmtKind::AugAssign { target, op, value } => match target {
+                Target::Name(n) => {
+                    self.load_name(n, line);
+                    self.compile_expr(value)?;
+                    self.emit(Instr::Binary(*op), line);
+                    self.store_name(n, line);
+                    Ok(())
+                }
+                Target::Subscript { value: obj, index } => {
+                    // Re-evaluates obj/index (documented subset semantics).
+                    self.compile_expr(obj)?;
+                    self.compile_expr(index)?;
+                    self.emit(Instr::BinarySubscr, line);
+                    self.compile_expr(value)?;
+                    self.emit(Instr::Binary(*op), line);
+                    self.compile_expr(obj)?;
+                    self.compile_expr(index)?;
+                    self.emit(Instr::StoreSubscr, line);
+                    Ok(())
+                }
+                Target::Tuple(_) => Err(self.err("cannot aug-assign to tuple", line)),
+            },
+            StmtKind::Return(v) => {
+                match v {
+                    Some(e) => self.compile_expr(e)?,
+                    None => {
+                        let c = self.add_const(Const::None);
+                        self.emit(Instr::LoadConst(c), line);
+                    }
+                }
+                self.emit(Instr::ReturnValue, line);
+                Ok(())
+            }
+            StmtKind::If { cond, then, orelse } => {
+                self.compile_expr(cond)?;
+                let jf = self.emit(Instr::PopJumpIfFalse(PLACEHOLDER), line);
+                self.compile_body(then)?;
+                if orelse.is_empty() {
+                    let t = self.here();
+                    self.patch(jf, t);
+                } else {
+                    let jend = self.emit(Instr::Jump(PLACEHOLDER), line);
+                    let t = self.here();
+                    self.patch(jf, t);
+                    self.compile_body(orelse)?;
+                    let end = self.here();
+                    self.patch(jend, end);
+                }
+                Ok(())
+            }
+            StmtKind::While { cond, body, orelse } => {
+                let header = self.here() as usize;
+                self.compile_expr(cond)?;
+                let jf = self.emit(Instr::PopJumpIfFalse(PLACEHOLDER), line);
+                self.loops.push(LoopCtx { header, is_for: false, break_jumps: Vec::new() });
+                self.compile_body(body)?;
+                self.emit(Instr::Jump(header as u32), line);
+                let else_start = self.here();
+                self.patch(jf, else_start);
+                let lp = self.loops.pop().unwrap();
+                self.compile_body(orelse)?;
+                let end = self.here();
+                for b in lp.break_jumps {
+                    self.patch(b, end);
+                }
+                Ok(())
+            }
+            StmtKind::For { target, iter, body, orelse } => {
+                self.compile_expr(iter)?;
+                self.emit(Instr::GetIter, line);
+                let header = self.here() as usize;
+                let fi = self.emit(Instr::ForIter(PLACEHOLDER), line);
+                self.compile_store(target, line)?;
+                self.loops.push(LoopCtx { header, is_for: true, break_jumps: Vec::new() });
+                self.compile_body(body)?;
+                self.emit(Instr::Jump(header as u32), line);
+                let else_start = self.here();
+                self.patch(fi, else_start);
+                let lp = self.loops.pop().unwrap();
+                self.compile_body(orelse)?;
+                let end = self.here();
+                for b in lp.break_jumps {
+                    self.patch(b, end);
+                }
+                Ok(())
+            }
+            StmtKind::Break => {
+                let lp = self.loops.last().ok_or_else(|| self.err("'break' outside loop", line))?;
+                let is_for = lp.is_for;
+                if is_for {
+                    // Discard the loop iterator.
+                    self.emit(Instr::PopTop, line);
+                }
+                let j = self.emit(Instr::Jump(PLACEHOLDER), line);
+                self.loops.last_mut().unwrap().break_jumps.push(j);
+                Ok(())
+            }
+            StmtKind::Continue => {
+                let header = self.loops.last().ok_or_else(|| self.err("'continue' outside loop", line))?.header;
+                self.emit(Instr::Jump(header as u32), line);
+                Ok(())
+            }
+            StmtKind::Assert { cond, msg } => {
+                self.compile_expr(cond)?;
+                let jt = self.emit(Instr::PopJumpIfTrue(PLACEHOLDER), line);
+                match msg {
+                    Some(m) => self.compile_expr(m)?,
+                    None => {
+                        let c = self.add_const(Const::Str("AssertionError".into()));
+                        self.emit(Instr::LoadConst(c), line);
+                    }
+                }
+                self.emit(Instr::Raise, line);
+                let t = self.here();
+                self.patch(jt, t);
+                Ok(())
+            }
+            StmtKind::Raise(e) => {
+                self.compile_expr(e)?;
+                self.emit(Instr::Raise, line);
+                Ok(())
+            }
+            StmtKind::FuncDef { name, params, body } => {
+                self.compile_function_object(name, params, body, line)?;
+                self.store_name(name, line);
+                Ok(())
+            }
+        }
+    }
+
+    /// Emit code leaving a new function object on the stack.
+    fn compile_function_object(&mut self, name: &str, params: &[Param], body: &[Stmt], line: u32) -> Result<(), CompileError> {
+        let param_names: Vec<String> = params.iter().map(|p| p.name.clone()).collect();
+
+        // Child scope analysis.
+        let (child_globals, child_nonlocals) = declared(body);
+        let mut child_locals_v: Vec<String> = param_names.clone();
+        assigned_names(body, &mut child_locals_v);
+        let child_locals: HashSet<String> =
+            child_locals_v.iter().filter(|n| !child_globals.contains(*n) && !child_nonlocals.contains(*n)).cloned().collect();
+
+        // Which enclosing bindings can the child capture?
+        let mut enclosing_for_child: Vec<HashSet<String>> = Vec::new();
+        if !self.is_module {
+            let mut mine: HashSet<String> = self.locals.clone();
+            mine.extend(self.cellvars.iter().cloned());
+            mine.extend(self.freevars.iter().cloned());
+            enclosing_for_child.push(mine);
+            enclosing_for_child.extend(self.enclosing.iter().cloned());
+        }
+
+        let cand = candidate_free(&param_names, body);
+        let mut child_freevars: Vec<String> = cand
+            .iter()
+            .filter(|n| enclosing_for_child.iter().any(|b| b.contains(*n)))
+            .cloned()
+            .collect();
+        child_freevars.sort();
+
+        // Child's own cellvars: locals captured by ITS nested functions.
+        let mut grandchild_cand: HashSet<String> = HashSet::new();
+        for (ps, b) in nested_functions(body) {
+            grandchild_cand.extend(candidate_free(&ps, &b));
+        }
+        let mut child_cellvars: Vec<String> = child_locals.iter().filter(|n| grandchild_cand.contains(*n)).cloned().collect();
+        child_cellvars.sort();
+
+        // Compile the child.
+        let mut child = FnCtx::new(name, self.version, self.file.clone(), false);
+        child.locals = child_locals;
+        child.global_decls = child_globals;
+        child.nonlocal_decls = child_nonlocals;
+        child.cellvars = child_cellvars.clone();
+        child.freevars = child_freevars.clone();
+        child.enclosing = enclosing_for_child;
+        for p in &param_names {
+            child.add_varname(p);
+        }
+        child.compile_body(body)?;
+        // Implicit `return None`.
+        let c = child.add_const(Const::None);
+        child.emit(Instr::LoadConst(c), 0);
+        child.emit(Instr::ReturnValue, 0);
+        let code = Rc::new(child.finish(param_names.len(), child_cellvars, child_freevars.clone(), line));
+
+        // Defaults tuple.
+        let mut flags = 0u32;
+        let n_defaults = params.iter().filter(|p| p.default.is_some()).count();
+        if n_defaults > 0 {
+            // Defaults must be trailing.
+            let first_default = params.iter().position(|p| p.default.is_some()).unwrap();
+            if params[first_default..].iter().any(|p| p.default.is_none()) {
+                return Err(self.err("non-default argument follows default argument", line));
+            }
+            for p in &params[first_default..] {
+                self.compile_expr(p.default.as_ref().unwrap())?;
+            }
+            self.emit(Instr::BuildTuple(n_defaults as u32), line);
+            flags |= 1;
+        }
+        // Closure tuple.
+        if !child_freevars.is_empty() {
+            for fv in &child_freevars {
+                let idx = self
+                    .deref_index(fv)
+                    .ok_or_else(|| self.err(&format!("cannot capture '{}': not a cell in enclosing scope", fv), line))?;
+                self.emit(Instr::LoadClosure(idx), line);
+            }
+            self.emit(Instr::BuildTuple(child_freevars.len() as u32), line);
+            flags |= 2;
+        }
+        let ci = self.add_const(Const::Code(code));
+        self.emit(Instr::LoadConst(ci), line);
+        self.emit(Instr::MakeFunction(flags), line);
+        Ok(())
+    }
+
+    fn compile_store(&mut self, target: &Target, line: u32) -> Result<(), CompileError> {
+        match target {
+            Target::Name(n) => {
+                self.store_name(n, line);
+                Ok(())
+            }
+            Target::Tuple(ts) => {
+                self.emit(Instr::UnpackSequence(ts.len() as u32), line);
+                for t in ts {
+                    self.compile_store(t, line)?;
+                }
+                Ok(())
+            }
+            Target::Subscript { value, index } => {
+                // stack: [val]; push obj, key; STORE_SUBSCR pops all three.
+                self.compile_expr(value)?;
+                self.compile_expr(index)?;
+                self.emit(Instr::StoreSubscr, line);
+                Ok(())
+            }
+        }
+    }
+
+    // ---- expressions ----
+
+    fn compile_expr(&mut self, e: &Expr) -> Result<(), CompileError> {
+        let line = self.cur_line;
+        match e {
+            Expr::NoneLit => {
+                let c = self.add_const(Const::None);
+                self.emit(Instr::LoadConst(c), line);
+            }
+            Expr::Bool(b) => {
+                let c = self.add_const(Const::Bool(*b));
+                self.emit(Instr::LoadConst(c), line);
+            }
+            Expr::Int(i) => {
+                let c = self.add_const(Const::Int(*i));
+                self.emit(Instr::LoadConst(c), line);
+            }
+            Expr::Float(f) => {
+                let c = self.add_const(Const::Float(*f));
+                self.emit(Instr::LoadConst(c), line);
+            }
+            Expr::Str(s) => {
+                let c = self.add_const(Const::Str(s.clone()));
+                self.emit(Instr::LoadConst(c), line);
+            }
+            Expr::Name(n) => self.load_name(n, line),
+            Expr::List(items) => {
+                for i in items {
+                    self.compile_expr(i)?;
+                }
+                self.emit(Instr::BuildList(items.len() as u32), line);
+            }
+            Expr::Tuple(items) => {
+                for i in items {
+                    self.compile_expr(i)?;
+                }
+                self.emit(Instr::BuildTuple(items.len() as u32), line);
+            }
+            Expr::Dict(kvs) => {
+                for (k, v) in kvs {
+                    self.compile_expr(k)?;
+                    self.compile_expr(v)?;
+                }
+                self.emit(Instr::BuildMap(kvs.len() as u32), line);
+            }
+            Expr::BinOp(op, a, b) => {
+                self.compile_expr(a)?;
+                self.compile_expr(b)?;
+                self.emit(Instr::Binary(*op), line);
+            }
+            Expr::UnaryOp(op, a) => {
+                self.compile_expr(a)?;
+                self.emit(Instr::Unary(*op), line);
+            }
+            Expr::BoolOp(kind, items) => {
+                // a and b and c: JUMP_IF_FALSE_OR_POP chains to the end.
+                let mut jumps = Vec::new();
+                for (i, item) in items.iter().enumerate() {
+                    self.compile_expr(item)?;
+                    if i + 1 < items.len() {
+                        let j = match kind {
+                            BoolOpKind::And => self.emit(Instr::JumpIfFalseOrPop(PLACEHOLDER), line),
+                            BoolOpKind::Or => self.emit(Instr::JumpIfTrueOrPop(PLACEHOLDER), line),
+                        };
+                        jumps.push(j);
+                    }
+                }
+                let end = self.here();
+                for j in jumps {
+                    self.patch(j, end);
+                }
+            }
+            Expr::Compare { left, ops, comparators } => {
+                if ops.len() == 1 {
+                    self.compile_expr(left)?;
+                    self.compile_expr(&comparators[0])?;
+                    self.emit_compare(&ops[0], line);
+                } else {
+                    // Chained: a < b <= c  =>  evaluate pairwise with DUP/ROT,
+                    // exactly like CPython.
+                    self.compile_expr(left)?;
+                    let mut false_jumps = Vec::new();
+                    for (i, (op, comp)) in ops.iter().zip(comparators.iter()).enumerate() {
+                        let last = i + 1 == ops.len();
+                        self.compile_expr(comp)?;
+                        if !last {
+                            self.emit(Instr::DupTop, line);
+                            self.emit(Instr::RotThree, line);
+                            // stack now: [next, prev, next]; compare pops two
+                        }
+                        // For the non-last case the stack is [next, prev, next];
+                        // Compare consumes [prev, next].
+                        self.emit_compare(op, line);
+                        if !last {
+                            let j = self.emit(Instr::JumpIfFalseOrPop(PLACEHOLDER), line);
+                            false_jumps.push(j);
+                        }
+                    }
+                    if !false_jumps.is_empty() {
+                        let jend = self.emit(Instr::Jump(PLACEHOLDER), line);
+                        let cleanup = self.here();
+                        for j in false_jumps {
+                            self.patch(j, cleanup);
+                        }
+                        // On short-circuit the leftover `next` sits under the
+                        // False result: [next, False] -> swap & pop.
+                        self.emit(Instr::RotTwo, line);
+                        self.emit(Instr::PopTop, line);
+                        let end = self.here();
+                        self.patch(jend, end);
+                    }
+                }
+            }
+            Expr::Call { func, args } => {
+                self.compile_expr(func)?;
+                for a in args {
+                    self.compile_expr(a)?;
+                }
+                self.emit(Instr::Call(args.len() as u32), line);
+            }
+            Expr::MethodCall { recv, name, args } => {
+                self.compile_expr(recv)?;
+                let ni = self.add_name(name);
+                self.emit(Instr::LoadMethod(ni), line);
+                for a in args {
+                    self.compile_expr(a)?;
+                }
+                self.emit(Instr::CallMethod(args.len() as u32), line);
+            }
+            Expr::Attribute { value, name } => {
+                self.compile_expr(value)?;
+                let ni = self.add_name(name);
+                self.emit(Instr::LoadAttr(ni), line);
+            }
+            Expr::Subscript { value, index } => {
+                self.compile_expr(value)?;
+                self.compile_expr(index)?;
+                self.emit(Instr::BinarySubscr, line);
+            }
+            Expr::Slice { start, stop, step } => {
+                let parts: [&Option<Box<Expr>>; 3] = [start, stop, step];
+                let n = if step.is_some() { 3 } else { 2 };
+                for p in parts.iter().take(n) {
+                    match p {
+                        Some(e) => self.compile_expr(e)?,
+                        None => {
+                            let c = self.add_const(Const::None);
+                            self.emit(Instr::LoadConst(c), line);
+                        }
+                    }
+                }
+                self.emit(Instr::BuildSlice(n as u32), line);
+            }
+            Expr::IfExp { cond, then, orelse } => {
+                self.compile_expr(cond)?;
+                let jf = self.emit(Instr::PopJumpIfFalse(PLACEHOLDER), line);
+                self.compile_expr(then)?;
+                let jend = self.emit(Instr::Jump(PLACEHOLDER), line);
+                let t = self.here();
+                self.patch(jf, t);
+                self.compile_expr(orelse)?;
+                let end = self.here();
+                self.patch(jend, end);
+            }
+            Expr::Lambda { params, body } => {
+                let ps: Vec<Param> = params.iter().map(|p| Param { name: p.clone(), default: None }).collect();
+                let body_stmts = vec![Stmt::new(StmtKind::Return(Some((**body).clone())), line)];
+                self.compile_function_object("<lambda>", &ps, &body_stmts, line)?;
+            }
+            Expr::ListComp { elt, target, iter, conds } => {
+                // Inline: [], iter on stack; loop appends.
+                self.emit(Instr::BuildList(0), line);
+                self.compile_expr(iter)?;
+                self.emit(Instr::GetIter, line);
+                let header = self.here();
+                let fi = self.emit(Instr::ForIter(PLACEHOLDER), line);
+                self.compile_store(target, line)?;
+                for c in conds {
+                    self.compile_expr(c)?;
+                    self.emit(Instr::PopJumpIfFalse(header), line);
+                }
+                self.compile_expr(elt)?;
+                self.emit(Instr::ListAppend(2), line);
+                self.emit(Instr::Jump(header), line);
+                let end = self.here();
+                self.patch(fi, end);
+            }
+        }
+        Ok(())
+    }
+
+    fn emit_compare(&mut self, op: &CompareKind, line: u32) {
+        match op {
+            CompareKind::Cmp(c) => {
+                self.emit(Instr::Compare(*c), line);
+            }
+            CompareKind::In => {
+                self.emit(Instr::ContainsOp(false), line);
+            }
+            CompareKind::NotIn => {
+                self.emit(Instr::ContainsOp(true), line);
+            }
+            CompareKind::Is => {
+                self.emit(Instr::IsOp(false), line);
+            }
+            CompareKind::IsNot => {
+                self.emit(Instr::IsOp(true), line);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bytecode::decode;
+
+    fn compile(src: &str) -> Rc<CodeObject> {
+        compile_module(src, "<test>", IsaVersion::V310).unwrap_or_else(|e| panic!("{}\n{}", e, src))
+    }
+
+    #[test]
+    fn module_compiles_and_encodes() {
+        let code = compile("x = 1\ny = x + 2\n");
+        assert!(code.instrs.len() >= 6);
+        // raw round-trips through the canonical decoder
+        let back = decode(&code.raw, code.version).unwrap();
+        assert_eq!(back, code.instrs);
+    }
+
+    #[test]
+    fn function_scoping() {
+        let code = compile("def f(a):\n    b = a + 1\n    return b\n");
+        let inner = code.nested_codes();
+        assert_eq!(inner.len(), 1);
+        let f = &inner[0];
+        assert_eq!(f.argcount, 1);
+        assert_eq!(f.varnames, vec!["a".to_string(), "b".to_string()]);
+        // all accesses are LoadFast/StoreFast
+        assert!(f.instrs.iter().any(|i| matches!(i, Instr::LoadFast(_))));
+        assert!(!f.instrs.iter().any(|i| matches!(i, Instr::LoadGlobal(_))));
+    }
+
+    #[test]
+    fn global_read_in_function() {
+        let code = compile("g = 1\ndef f():\n    return g\n");
+        let f = &code.nested_codes()[0];
+        assert!(f.instrs.iter().any(|i| matches!(i, Instr::LoadGlobal(_))));
+    }
+
+    #[test]
+    fn closure_cells() {
+        let code = compile("def outer():\n    x = 1\n    def inner():\n        return x\n    return inner\n");
+        let outer = &code.nested_codes()[0];
+        assert_eq!(outer.cellvars, vec!["x".to_string()]);
+        let inner = &outer.nested_codes()[0];
+        assert_eq!(inner.freevars, vec!["x".to_string()]);
+        assert!(inner.instrs.iter().any(|i| matches!(i, Instr::LoadDeref(_))));
+        assert!(outer.instrs.iter().any(|i| matches!(i, Instr::LoadClosure(_))));
+    }
+
+    #[test]
+    fn nonlocal_write() {
+        let code = compile(
+            "def outer():\n    x = 0\n    def bump():\n        nonlocal x\n        x = x + 1\n    bump()\n    return x\n",
+        );
+        let outer = &code.nested_codes()[0];
+        assert_eq!(outer.cellvars, vec!["x".to_string()]);
+        let bump = &outer.nested_codes()[0];
+        assert!(bump.instrs.iter().any(|i| matches!(i, Instr::StoreDeref(_))));
+    }
+
+    #[test]
+    fn loops_compile() {
+        let code = compile("total = 0\nfor i in range(10):\n    if i == 3:\n        continue\n    if i == 7:\n        break\n    total += i\n");
+        assert!(code.instrs.iter().any(|i| matches!(i, Instr::ForIter(_))));
+        let back = decode(&code.raw, code.version).unwrap();
+        assert_eq!(back, code.instrs);
+    }
+
+    #[test]
+    fn comprehension_inline() {
+        let code = compile("ys = [x * 2 for x in range(5) if x > 1]\n");
+        assert!(code.instrs.iter().any(|i| matches!(i, Instr::ListAppend(2))));
+    }
+
+    #[test]
+    fn all_versions_compile() {
+        for v in IsaVersion::ALL {
+            let code = compile_module("def f(x):\n    return x + 1\nr = f(1)\n", "<t>", v).unwrap();
+            let back = decode(&code.raw, v).unwrap();
+            assert_eq!(back, code.instrs, "version {}", v);
+            let f = &code.nested_codes()[0];
+            let back_f = decode(&f.raw, v).unwrap();
+            assert_eq!(back_f, f.instrs, "version {}", v);
+        }
+    }
+
+    #[test]
+    fn default_arg_order_enforced() {
+        assert!(compile_module("def f(a=1, b):\n    return a\n", "<t>", IsaVersion::V310).is_err());
+    }
+
+    #[test]
+    fn break_outside_loop_rejected() {
+        assert!(compile_module("break\n", "<t>", IsaVersion::V310).is_err());
+    }
+}

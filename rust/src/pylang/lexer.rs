@@ -1,0 +1,462 @@
+//! Tokenizer for the `pylang` Python subset: significant indentation
+//! (INDENT/DEDENT), keywords, numbers, strings, and the operator set the
+//! grammar needs.
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tok {
+    // layout
+    Newline,
+    Indent,
+    Dedent,
+    EndOfFile,
+    // literals & names
+    Name(String),
+    Int(i64),
+    Float(f64),
+    Str(String),
+    // keywords
+    KwDef,
+    KwIf,
+    KwElif,
+    KwElse,
+    KwWhile,
+    KwFor,
+    KwIn,
+    KwNot,
+    KwAnd,
+    KwOr,
+    KwReturn,
+    KwBreak,
+    KwContinue,
+    KwPass,
+    KwNone,
+    KwTrue,
+    KwFalse,
+    KwIs,
+    KwLambda,
+    KwAssert,
+    KwRaise,
+    KwGlobal,
+    KwNonlocal,
+    // punctuation / operators
+    LParen,
+    RParen,
+    LBracket,
+    RBracket,
+    LBrace,
+    RBrace,
+    Comma,
+    Colon,
+    Dot,
+    Assign,
+    Plus,
+    Minus,
+    Star,
+    DoubleStar,
+    Slash,
+    DoubleSlash,
+    Percent,
+    At,
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    PlusAssign,
+    MinusAssign,
+    StarAssign,
+    SlashAssign,
+}
+
+/// A token plus its 1-based source line.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Token {
+    pub tok: Tok,
+    pub line: u32,
+}
+
+#[derive(Clone, Debug)]
+pub struct LexError {
+    pub message: String,
+    pub line: u32,
+}
+
+impl std::fmt::Display for LexError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "lex error at line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for LexError {}
+
+fn keyword(s: &str) -> Option<Tok> {
+    Some(match s {
+        "def" => Tok::KwDef,
+        "if" => Tok::KwIf,
+        "elif" => Tok::KwElif,
+        "else" => Tok::KwElse,
+        "while" => Tok::KwWhile,
+        "for" => Tok::KwFor,
+        "in" => Tok::KwIn,
+        "not" => Tok::KwNot,
+        "and" => Tok::KwAnd,
+        "or" => Tok::KwOr,
+        "return" => Tok::KwReturn,
+        "break" => Tok::KwBreak,
+        "continue" => Tok::KwContinue,
+        "pass" => Tok::KwPass,
+        "None" => Tok::KwNone,
+        "True" => Tok::KwTrue,
+        "False" => Tok::KwFalse,
+        "is" => Tok::KwIs,
+        "lambda" => Tok::KwLambda,
+        "assert" => Tok::KwAssert,
+        "raise" => Tok::KwRaise,
+        "global" => Tok::KwGlobal,
+        "nonlocal" => Tok::KwNonlocal,
+        _ => return None,
+    })
+}
+
+/// Tokenize a whole module.
+pub fn lex(src: &str) -> Result<Vec<Token>, LexError> {
+    let mut out: Vec<Token> = Vec::new();
+    let mut indents: Vec<usize> = vec![0];
+    // Bracket nesting suppresses NEWLINE/indentation (implicit line joining).
+    let mut depth = 0usize;
+
+    for (lineno0, raw_line) in src.lines().enumerate() {
+        let line = lineno0 as u32 + 1;
+        // When inside brackets, the entire physical line is continuation.
+        if depth == 0 {
+            // Indentation handling.
+            let stripped = raw_line.trim_start_matches(|c| c == ' ');
+            let indent = raw_line.len() - stripped.len();
+            if raw_line.trim().is_empty() || stripped.starts_with('#') {
+                continue; // blank/comment line
+            }
+            if raw_line.contains('\t') {
+                return Err(LexError { message: "tabs are not supported; use spaces".into(), line });
+            }
+            let current = *indents.last().unwrap();
+            if indent > current {
+                indents.push(indent);
+                out.push(Token { tok: Tok::Indent, line });
+            } else if indent < current {
+                while *indents.last().unwrap() > indent {
+                    indents.pop();
+                    out.push(Token { tok: Tok::Dedent, line });
+                }
+                if *indents.last().unwrap() != indent {
+                    return Err(LexError { message: "inconsistent dedent".into(), line });
+                }
+            }
+        }
+
+        // Tokenize the line content.
+        let chars: Vec<char> = raw_line.chars().collect();
+        let mut i = if depth == 0 { raw_line.len() - raw_line.trim_start_matches(' ').len() } else { 0 };
+        while i < chars.len() {
+            let c = chars[i];
+            match c {
+                ' ' => {
+                    i += 1;
+                }
+                '#' => break,
+                '(' | '[' | '{' => {
+                    depth += 1;
+                    out.push(Token {
+                        tok: match c {
+                            '(' => Tok::LParen,
+                            '[' => Tok::LBracket,
+                            _ => Tok::LBrace,
+                        },
+                        line,
+                    });
+                    i += 1;
+                }
+                ')' | ']' | '}' => {
+                    depth = depth.saturating_sub(1);
+                    out.push(Token {
+                        tok: match c {
+                            ')' => Tok::RParen,
+                            ']' => Tok::RBracket,
+                            _ => Tok::RBrace,
+                        },
+                        line,
+                    });
+                    i += 1;
+                }
+                ',' => {
+                    out.push(Token { tok: Tok::Comma, line });
+                    i += 1;
+                }
+                ':' => {
+                    out.push(Token { tok: Tok::Colon, line });
+                    i += 1;
+                }
+                '.' => {
+                    // Could be a float like .5? Require leading digit; dot is attribute access.
+                    out.push(Token { tok: Tok::Dot, line });
+                    i += 1;
+                }
+                '+' => {
+                    if chars.get(i + 1) == Some(&'=') {
+                        out.push(Token { tok: Tok::PlusAssign, line });
+                        i += 2;
+                    } else {
+                        out.push(Token { tok: Tok::Plus, line });
+                        i += 1;
+                    }
+                }
+                '-' => {
+                    if chars.get(i + 1) == Some(&'=') {
+                        out.push(Token { tok: Tok::MinusAssign, line });
+                        i += 2;
+                    } else {
+                        out.push(Token { tok: Tok::Minus, line });
+                        i += 1;
+                    }
+                }
+                '*' => {
+                    if chars.get(i + 1) == Some(&'*') {
+                        out.push(Token { tok: Tok::DoubleStar, line });
+                        i += 2;
+                    } else if chars.get(i + 1) == Some(&'=') {
+                        out.push(Token { tok: Tok::StarAssign, line });
+                        i += 2;
+                    } else {
+                        out.push(Token { tok: Tok::Star, line });
+                        i += 1;
+                    }
+                }
+                '/' => {
+                    if chars.get(i + 1) == Some(&'/') {
+                        out.push(Token { tok: Tok::DoubleSlash, line });
+                        i += 2;
+                    } else if chars.get(i + 1) == Some(&'=') {
+                        out.push(Token { tok: Tok::SlashAssign, line });
+                        i += 2;
+                    } else {
+                        out.push(Token { tok: Tok::Slash, line });
+                        i += 1;
+                    }
+                }
+                '%' => {
+                    out.push(Token { tok: Tok::Percent, line });
+                    i += 1;
+                }
+                '@' => {
+                    out.push(Token { tok: Tok::At, line });
+                    i += 1;
+                }
+                '=' => {
+                    if chars.get(i + 1) == Some(&'=') {
+                        out.push(Token { tok: Tok::Eq, line });
+                        i += 2;
+                    } else {
+                        out.push(Token { tok: Tok::Assign, line });
+                        i += 1;
+                    }
+                }
+                '!' => {
+                    if chars.get(i + 1) == Some(&'=') {
+                        out.push(Token { tok: Tok::Ne, line });
+                        i += 2;
+                    } else {
+                        return Err(LexError { message: "unexpected '!'".into(), line });
+                    }
+                }
+                '<' => {
+                    if chars.get(i + 1) == Some(&'=') {
+                        out.push(Token { tok: Tok::Le, line });
+                        i += 2;
+                    } else {
+                        out.push(Token { tok: Tok::Lt, line });
+                        i += 1;
+                    }
+                }
+                '>' => {
+                    if chars.get(i + 1) == Some(&'=') {
+                        out.push(Token { tok: Tok::Ge, line });
+                        i += 2;
+                    } else {
+                        out.push(Token { tok: Tok::Gt, line });
+                        i += 1;
+                    }
+                }
+                '\'' | '"' => {
+                    let quote = c;
+                    let mut s = String::new();
+                    let mut j = i + 1;
+                    let mut closed = false;
+                    while j < chars.len() {
+                        if chars[j] == '\\' && j + 1 < chars.len() {
+                            let esc = chars[j + 1];
+                            s.push(match esc {
+                                'n' => '\n',
+                                't' => '\t',
+                                '\\' => '\\',
+                                '\'' => '\'',
+                                '"' => '"',
+                                other => other,
+                            });
+                            j += 2;
+                        } else if chars[j] == quote {
+                            closed = true;
+                            j += 1;
+                            break;
+                        } else {
+                            s.push(chars[j]);
+                            j += 1;
+                        }
+                    }
+                    if !closed {
+                        return Err(LexError { message: "unterminated string".into(), line });
+                    }
+                    out.push(Token { tok: Tok::Str(s), line });
+                    i = j;
+                }
+                d if d.is_ascii_digit() => {
+                    let mut j = i;
+                    let mut is_float = false;
+                    while j < chars.len() && (chars[j].is_ascii_digit() || chars[j] == '.' || chars[j] == 'e' || chars[j] == 'E' || ((chars[j] == '+' || chars[j] == '-') && j > i && (chars[j - 1] == 'e' || chars[j - 1] == 'E'))) {
+                        if chars[j] == '.' {
+                            // "1." then a name means attribute on int literal: not supported; treat as float
+                            if is_float {
+                                break;
+                            }
+                            // `1.method()` not supported; digits then dot then digit = float
+                            if chars.get(j + 1).map(|c| c.is_ascii_digit()).unwrap_or(false) {
+                                is_float = true;
+                            } else {
+                                break;
+                            }
+                        }
+                        if chars[j] == 'e' || chars[j] == 'E' {
+                            is_float = true;
+                        }
+                        j += 1;
+                    }
+                    let text: String = chars[i..j].iter().collect();
+                    if is_float {
+                        let v: f64 = text.parse().map_err(|_| LexError { message: format!("bad float '{}'", text), line })?;
+                        out.push(Token { tok: Tok::Float(v), line });
+                    } else {
+                        let v: i64 = text.parse().map_err(|_| LexError { message: format!("bad int '{}'", text), line })?;
+                        out.push(Token { tok: Tok::Int(v), line });
+                    }
+                    i = j;
+                }
+                a if a.is_ascii_alphabetic() || a == '_' => {
+                    let mut j = i;
+                    while j < chars.len() && (chars[j].is_ascii_alphanumeric() || chars[j] == '_') {
+                        j += 1;
+                    }
+                    let text: String = chars[i..j].iter().collect();
+                    out.push(Token { tok: keyword(&text).unwrap_or(Tok::Name(text)), line });
+                    i = j;
+                }
+                other => {
+                    return Err(LexError { message: format!("unexpected character '{}'", other), line });
+                }
+            }
+        }
+        if depth == 0 {
+            out.push(Token { tok: Tok::Newline, line });
+        }
+    }
+    // Close remaining indents.
+    let last_line = src.lines().count() as u32;
+    while indents.len() > 1 {
+        indents.pop();
+        out.push(Token { tok: Tok::Dedent, line: last_line });
+    }
+    out.push(Token { tok: Tok::EndOfFile, line: last_line });
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(src: &str) -> Vec<Tok> {
+        lex(src).unwrap().into_iter().map(|t| t.tok).collect()
+    }
+
+    #[test]
+    fn simple_assignment() {
+        assert_eq!(
+            toks("x = 1\n"),
+            vec![Tok::Name("x".into()), Tok::Assign, Tok::Int(1), Tok::Newline, Tok::EndOfFile]
+        );
+    }
+
+    #[test]
+    fn indentation() {
+        let ts = toks("if x:\n    y = 1\nz = 2\n");
+        assert!(ts.contains(&Tok::Indent));
+        assert!(ts.contains(&Tok::Dedent));
+    }
+
+    #[test]
+    fn operators() {
+        let ts = toks("a += b ** 2 // 3 != c @ d\n");
+        assert!(ts.contains(&Tok::PlusAssign));
+        assert!(ts.contains(&Tok::DoubleStar));
+        assert!(ts.contains(&Tok::DoubleSlash));
+        assert!(ts.contains(&Tok::Ne));
+        assert!(ts.contains(&Tok::At));
+    }
+
+    #[test]
+    fn strings_and_escapes() {
+        let ts = toks("s = 'a\\nb'\n");
+        assert!(ts.contains(&Tok::Str("a\nb".into())));
+    }
+
+    #[test]
+    fn floats_and_ints() {
+        let ts = toks("a = 1.5\nb = 2e3\nc = 10\n");
+        assert!(ts.contains(&Tok::Float(1.5)));
+        assert!(ts.contains(&Tok::Float(2000.0)));
+        assert!(ts.contains(&Tok::Int(10)));
+    }
+
+    #[test]
+    fn implicit_line_joining_in_brackets() {
+        let ts = toks("a = [1,\n     2]\n");
+        // No NEWLINE between 1, and 2
+        let newline_count = ts.iter().filter(|t| **t == Tok::Newline).count();
+        assert_eq!(newline_count, 1);
+        assert!(!ts.contains(&Tok::Indent));
+    }
+
+    #[test]
+    fn comments_skipped() {
+        let ts = toks("# comment\nx = 1  # trailing\n");
+        assert_eq!(ts.iter().filter(|t| matches!(t, Tok::Int(_))).count(), 1);
+    }
+
+    #[test]
+    fn keywords_vs_names() {
+        let ts = toks("for x in xs:\n    pass\n");
+        assert!(ts.contains(&Tok::KwFor));
+        assert!(ts.contains(&Tok::KwIn));
+        assert!(ts.contains(&Tok::Name("xs".into())));
+        assert!(ts.contains(&Tok::KwPass));
+    }
+
+    #[test]
+    fn error_on_tab() {
+        assert!(lex("if x:\n\ty = 1\n").is_err());
+    }
+
+    #[test]
+    fn multi_dedent() {
+        let ts = toks("if a:\n    if b:\n        c = 1\nd = 2\n");
+        let dedents = ts.iter().filter(|t| **t == Tok::Dedent).count();
+        assert_eq!(dedents, 2);
+    }
+}

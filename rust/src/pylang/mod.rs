@@ -1,0 +1,16 @@
+//! `pylang` — the Python-subset source language: lexer, parser, AST,
+//! bytecode compiler, and unparser.
+//!
+//! This is the substrate standing in for CPython's source level: it gives us
+//! source-compiled bytecode to decompile (the paper's 85-case syntax suite)
+//! and the model programs that dynamo traces (the 140-model suite).
+
+pub mod ast;
+pub mod compiler;
+pub mod lexer;
+pub mod parser;
+pub mod unparse;
+
+pub use compiler::{compile_module, compile_module_ast, CompileError};
+pub use parser::{parse, ParseError};
+pub use unparse::{unparse_expr, unparse_module, unparse_stmt};

@@ -1,0 +1,763 @@
+//! Recursive-descent parser for the `pylang` Python subset.
+
+use super::ast::*;
+use super::lexer::{lex, Tok, Token};
+use crate::bytecode::{BinOp, CmpOp, UnOp};
+
+#[derive(Clone, Debug)]
+pub struct ParseError {
+    pub message: String,
+    pub line: u32,
+}
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "parse error at line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// Parse a module.
+pub fn parse(src: &str) -> Result<Module, ParseError> {
+    let toks = lex(src).map_err(|e| ParseError { message: e.message, line: e.line })?;
+    let mut p = Parser { toks, pos: 0 };
+    p.module()
+}
+
+struct Parser {
+    toks: Vec<Token>,
+    pos: usize,
+}
+
+impl Parser {
+    fn peek(&self) -> &Tok {
+        &self.toks[self.pos].tok
+    }
+
+    fn peek2(&self) -> &Tok {
+        self.toks.get(self.pos + 1).map(|t| &t.tok).unwrap_or(&Tok::EndOfFile)
+    }
+
+    fn line(&self) -> u32 {
+        self.toks[self.pos].line
+    }
+
+    fn bump(&mut self) -> Tok {
+        let t = self.toks[self.pos].tok.clone();
+        if self.pos < self.toks.len() - 1 {
+            self.pos += 1;
+        }
+        t
+    }
+
+    fn eat(&mut self, t: &Tok) -> bool {
+        if self.peek() == t {
+            self.bump();
+            true
+        } else {
+            false
+        }
+    }
+
+    fn expect(&mut self, t: &Tok, what: &str) -> Result<(), ParseError> {
+        if self.eat(t) {
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected {}, found {:?}", what, self.peek())))
+        }
+    }
+
+    fn err(&self, message: &str) -> ParseError {
+        ParseError { message: message.to_string(), line: self.line() }
+    }
+
+    fn module(&mut self) -> Result<Module, ParseError> {
+        let mut body = Vec::new();
+        while *self.peek() != Tok::EndOfFile {
+            if self.eat(&Tok::Newline) {
+                continue;
+            }
+            body.push(self.stmt()?);
+        }
+        Ok(Module { body })
+    }
+
+    fn block(&mut self) -> Result<Vec<Stmt>, ParseError> {
+        self.expect(&Tok::Colon, "':'")?;
+        self.expect(&Tok::Newline, "newline")?;
+        self.expect(&Tok::Indent, "indented block")?;
+        let mut body = Vec::new();
+        while *self.peek() != Tok::Dedent && *self.peek() != Tok::EndOfFile {
+            if self.eat(&Tok::Newline) {
+                continue;
+            }
+            body.push(self.stmt()?);
+        }
+        self.expect(&Tok::Dedent, "dedent")?;
+        if body.is_empty() {
+            return Err(self.err("empty block"));
+        }
+        Ok(body)
+    }
+
+    fn stmt(&mut self) -> Result<Stmt, ParseError> {
+        let line = self.line();
+        match self.peek().clone() {
+            Tok::KwDef => self.funcdef(),
+            Tok::KwIf => self.if_stmt(),
+            Tok::KwWhile => self.while_stmt(),
+            Tok::KwFor => self.for_stmt(),
+            Tok::KwReturn => {
+                self.bump();
+                let value = if *self.peek() == Tok::Newline { None } else { Some(self.testlist()?) };
+                self.expect(&Tok::Newline, "newline")?;
+                Ok(Stmt::new(StmtKind::Return(value), line))
+            }
+            Tok::KwBreak => {
+                self.bump();
+                self.expect(&Tok::Newline, "newline")?;
+                Ok(Stmt::new(StmtKind::Break, line))
+            }
+            Tok::KwContinue => {
+                self.bump();
+                self.expect(&Tok::Newline, "newline")?;
+                Ok(Stmt::new(StmtKind::Continue, line))
+            }
+            Tok::KwPass => {
+                self.bump();
+                self.expect(&Tok::Newline, "newline")?;
+                Ok(Stmt::new(StmtKind::Pass, line))
+            }
+            Tok::KwGlobal | Tok::KwNonlocal => {
+                let is_global = self.bump() == Tok::KwGlobal;
+                let mut names = vec![self.name()?];
+                while self.eat(&Tok::Comma) {
+                    names.push(self.name()?);
+                }
+                self.expect(&Tok::Newline, "newline")?;
+                Ok(Stmt::new(if is_global { StmtKind::Global(names) } else { StmtKind::Nonlocal(names) }, line))
+            }
+            Tok::KwAssert => {
+                self.bump();
+                let cond = self.test()?;
+                let msg = if self.eat(&Tok::Comma) { Some(self.test()?) } else { None };
+                self.expect(&Tok::Newline, "newline")?;
+                Ok(Stmt::new(StmtKind::Assert { cond, msg }, line))
+            }
+            Tok::KwRaise => {
+                self.bump();
+                let e = self.test()?;
+                self.expect(&Tok::Newline, "newline")?;
+                Ok(Stmt::new(StmtKind::Raise(e), line))
+            }
+            _ => self.expr_stmt(),
+        }
+    }
+
+    fn name(&mut self) -> Result<String, ParseError> {
+        match self.bump() {
+            Tok::Name(s) => Ok(s),
+            other => Err(self.err(&format!("expected name, found {:?}", other))),
+        }
+    }
+
+    fn funcdef(&mut self) -> Result<Stmt, ParseError> {
+        let line = self.line();
+        self.bump(); // def
+        let name = self.name()?;
+        self.expect(&Tok::LParen, "'('")?;
+        let mut params = Vec::new();
+        if *self.peek() != Tok::RParen {
+            loop {
+                let pname = self.name()?;
+                let default = if self.eat(&Tok::Assign) { Some(self.test()?) } else { None };
+                params.push(Param { name: pname, default });
+                if !self.eat(&Tok::Comma) {
+                    break;
+                }
+            }
+        }
+        self.expect(&Tok::RParen, "')'")?;
+        let body = self.block()?;
+        Ok(Stmt::new(StmtKind::FuncDef { name, params, body }, line))
+    }
+
+    fn if_stmt(&mut self) -> Result<Stmt, ParseError> {
+        let line = self.line();
+        self.bump(); // if / elif
+        let cond = self.test()?;
+        let then = self.block()?;
+        let orelse = if *self.peek() == Tok::KwElif {
+            vec![self.if_stmt_from_elif()?]
+        } else if self.eat(&Tok::KwElse) {
+            self.block()?
+        } else {
+            Vec::new()
+        };
+        Ok(Stmt::new(StmtKind::If { cond, then, orelse }, line))
+    }
+
+    fn if_stmt_from_elif(&mut self) -> Result<Stmt, ParseError> {
+        // `elif` parses exactly like a nested `if`.
+        self.if_stmt()
+    }
+
+    fn while_stmt(&mut self) -> Result<Stmt, ParseError> {
+        let line = self.line();
+        self.bump();
+        let cond = self.test()?;
+        let body = self.block()?;
+        let orelse = if self.eat(&Tok::KwElse) { self.block()? } else { Vec::new() };
+        Ok(Stmt::new(StmtKind::While { cond, body, orelse }, line))
+    }
+
+    fn for_stmt(&mut self) -> Result<Stmt, ParseError> {
+        let line = self.line();
+        self.bump();
+        let target_expr = self.target_list()?;
+        let target = expr_to_target(target_expr).map_err(|m| self.err(&m))?;
+        self.expect(&Tok::KwIn, "'in'")?;
+        let iter = self.testlist()?;
+        let body = self.block()?;
+        let orelse = if self.eat(&Tok::KwElse) { self.block()? } else { Vec::new() };
+        Ok(Stmt::new(StmtKind::For { target, iter, body, orelse }, line))
+    }
+
+    /// Comma-separated names/subscripts before `in` (for-loop targets).
+    fn target_list(&mut self) -> Result<Expr, ParseError> {
+        let first = self.postfix()?;
+        if *self.peek() == Tok::Comma {
+            let mut items = vec![first];
+            while self.eat(&Tok::Comma) {
+                if *self.peek() == Tok::KwIn {
+                    break;
+                }
+                items.push(self.postfix()?);
+            }
+            Ok(Expr::Tuple(items))
+        } else {
+            Ok(first)
+        }
+    }
+
+    fn expr_stmt(&mut self) -> Result<Stmt, ParseError> {
+        let line = self.line();
+        let first = self.testlist()?;
+        let kind = match self.peek().clone() {
+            Tok::Assign => {
+                self.bump();
+                let value = self.testlist()?;
+                let target = expr_to_target(first).map_err(|m| self.err(&m))?;
+                StmtKind::Assign { target, value }
+            }
+            Tok::PlusAssign | Tok::MinusAssign | Tok::StarAssign | Tok::SlashAssign => {
+                let op = match self.bump() {
+                    Tok::PlusAssign => BinOp::Add,
+                    Tok::MinusAssign => BinOp::Sub,
+                    Tok::StarAssign => BinOp::Mul,
+                    _ => BinOp::Div,
+                };
+                let value = self.testlist()?;
+                let target = expr_to_target(first).map_err(|m| self.err(&m))?;
+                StmtKind::AugAssign { target, op, value }
+            }
+            _ => StmtKind::Expr(first),
+        };
+        self.expect(&Tok::Newline, "newline")?;
+        Ok(Stmt::new(kind, line))
+    }
+
+    /// `test (',' test)*` — a tuple when more than one.
+    fn testlist(&mut self) -> Result<Expr, ParseError> {
+        let first = self.test()?;
+        if *self.peek() == Tok::Comma {
+            let mut items = vec![first];
+            while self.eat(&Tok::Comma) {
+                // Trailing comma before a closer/assign.
+                if matches!(self.peek(), Tok::Newline | Tok::Assign | Tok::RParen | Tok::RBracket) {
+                    break;
+                }
+                items.push(self.test()?);
+            }
+            Ok(Expr::Tuple(items))
+        } else {
+            Ok(first)
+        }
+    }
+
+    /// Conditional expression / lambda.
+    fn test(&mut self) -> Result<Expr, ParseError> {
+        if *self.peek() == Tok::KwLambda {
+            self.bump();
+            let mut params = Vec::new();
+            if *self.peek() != Tok::Colon {
+                loop {
+                    params.push(self.name()?);
+                    if !self.eat(&Tok::Comma) {
+                        break;
+                    }
+                }
+            }
+            self.expect(&Tok::Colon, "':'")?;
+            let body = Box::new(self.test()?);
+            return Ok(Expr::Lambda { params, body });
+        }
+        let body = self.or_test()?;
+        if self.eat(&Tok::KwIf) {
+            let cond = Box::new(self.or_test()?);
+            self.expect(&Tok::KwElse, "'else'")?;
+            let orelse = Box::new(self.test()?);
+            return Ok(Expr::IfExp { cond, then: Box::new(body), orelse });
+        }
+        Ok(body)
+    }
+
+    fn or_test(&mut self) -> Result<Expr, ParseError> {
+        let first = self.and_test()?;
+        if *self.peek() != Tok::KwOr {
+            return Ok(first);
+        }
+        let mut items = vec![first];
+        while self.eat(&Tok::KwOr) {
+            items.push(self.and_test()?);
+        }
+        Ok(Expr::BoolOp(BoolOpKind::Or, items))
+    }
+
+    fn and_test(&mut self) -> Result<Expr, ParseError> {
+        let first = self.not_test()?;
+        if *self.peek() != Tok::KwAnd {
+            return Ok(first);
+        }
+        let mut items = vec![first];
+        while self.eat(&Tok::KwAnd) {
+            items.push(self.not_test()?);
+        }
+        Ok(Expr::BoolOp(BoolOpKind::And, items))
+    }
+
+    fn not_test(&mut self) -> Result<Expr, ParseError> {
+        if self.eat(&Tok::KwNot) {
+            let inner = self.not_test()?;
+            return Ok(Expr::UnaryOp(UnOp::Not, Box::new(inner)));
+        }
+        self.comparison()
+    }
+
+    fn comparison(&mut self) -> Result<Expr, ParseError> {
+        let left = self.arith()?;
+        let mut ops = Vec::new();
+        let mut comparators = Vec::new();
+        loop {
+            let op = match self.peek() {
+                Tok::Lt => CompareKind::Cmp(CmpOp::Lt),
+                Tok::Le => CompareKind::Cmp(CmpOp::Le),
+                Tok::Gt => CompareKind::Cmp(CmpOp::Gt),
+                Tok::Ge => CompareKind::Cmp(CmpOp::Ge),
+                Tok::Eq => CompareKind::Cmp(CmpOp::Eq),
+                Tok::Ne => CompareKind::Cmp(CmpOp::Ne),
+                Tok::KwIn => CompareKind::In,
+                Tok::KwIs => {
+                    // `is` / `is not`
+                    if *self.peek2() == Tok::KwNot {
+                        self.bump();
+                        self.bump();
+                        ops.push(CompareKind::IsNot);
+                        comparators.push(self.arith()?);
+                        continue;
+                    }
+                    CompareKind::Is
+                }
+                Tok::KwNot => {
+                    // `not in`
+                    if *self.peek2() == Tok::KwIn {
+                        self.bump();
+                        self.bump();
+                        ops.push(CompareKind::NotIn);
+                        comparators.push(self.arith()?);
+                        continue;
+                    }
+                    break;
+                }
+                _ => break,
+            };
+            self.bump();
+            ops.push(op);
+            comparators.push(self.arith()?);
+        }
+        if ops.is_empty() {
+            Ok(left)
+        } else {
+            Ok(Expr::Compare { left: Box::new(left), ops, comparators })
+        }
+    }
+
+    fn arith(&mut self) -> Result<Expr, ParseError> {
+        let mut left = self.term()?;
+        loop {
+            let op = match self.peek() {
+                Tok::Plus => BinOp::Add,
+                Tok::Minus => BinOp::Sub,
+                _ => break,
+            };
+            self.bump();
+            let right = self.term()?;
+            left = Expr::BinOp(op, Box::new(left), Box::new(right));
+        }
+        Ok(left)
+    }
+
+    fn term(&mut self) -> Result<Expr, ParseError> {
+        let mut left = self.factor()?;
+        loop {
+            let op = match self.peek() {
+                Tok::Star => BinOp::Mul,
+                Tok::Slash => BinOp::Div,
+                Tok::DoubleSlash => BinOp::FloorDiv,
+                Tok::Percent => BinOp::Mod,
+                Tok::At => BinOp::MatMul,
+                _ => break,
+            };
+            self.bump();
+            let right = self.factor()?;
+            left = Expr::BinOp(op, Box::new(left), Box::new(right));
+        }
+        Ok(left)
+    }
+
+    fn factor(&mut self) -> Result<Expr, ParseError> {
+        if self.eat(&Tok::Minus) {
+            let inner = self.factor()?;
+            // Fold negative literals.
+            return Ok(match inner {
+                Expr::Int(i) => Expr::Int(-i),
+                Expr::Float(f) => Expr::Float(-f),
+                other => Expr::UnaryOp(UnOp::Neg, Box::new(other)),
+            });
+        }
+        if self.eat(&Tok::Plus) {
+            let inner = self.factor()?;
+            return Ok(Expr::UnaryOp(UnOp::Pos, Box::new(inner)));
+        }
+        self.power()
+    }
+
+    fn power(&mut self) -> Result<Expr, ParseError> {
+        let base = self.postfix()?;
+        if self.eat(&Tok::DoubleStar) {
+            let exp = self.factor()?; // right-assoc
+            return Ok(Expr::BinOp(BinOp::Pow, Box::new(base), Box::new(exp)));
+        }
+        Ok(base)
+    }
+
+    fn postfix(&mut self) -> Result<Expr, ParseError> {
+        let mut e = self.atom()?;
+        loop {
+            match self.peek().clone() {
+                Tok::LParen => {
+                    self.bump();
+                    let args = self.call_args()?;
+                    e = match e {
+                        Expr::Attribute { value, name } => Expr::MethodCall { recv: value, name, args },
+                        other => Expr::Call { func: Box::new(other), args },
+                    };
+                }
+                Tok::Dot => {
+                    self.bump();
+                    let name = self.name()?;
+                    e = Expr::Attribute { value: Box::new(e), name };
+                }
+                Tok::LBracket => {
+                    self.bump();
+                    let index = self.subscript()?;
+                    self.expect(&Tok::RBracket, "']'")?;
+                    e = Expr::Subscript { value: Box::new(e), index: Box::new(index) };
+                }
+                _ => break,
+            }
+        }
+        Ok(e)
+    }
+
+    fn call_args(&mut self) -> Result<Vec<Expr>, ParseError> {
+        let mut args = Vec::new();
+        if *self.peek() != Tok::RParen {
+            loop {
+                args.push(self.test()?);
+                if !self.eat(&Tok::Comma) {
+                    break;
+                }
+                if *self.peek() == Tok::RParen {
+                    break;
+                }
+            }
+        }
+        self.expect(&Tok::RParen, "')'")?;
+        Ok(args)
+    }
+
+    fn subscript(&mut self) -> Result<Expr, ParseError> {
+        // Possible slice: [a:b:c] with any part empty.
+        let start = if matches!(self.peek(), Tok::Colon) { None } else { Some(Box::new(self.test()?)) };
+        if !self.eat(&Tok::Colon) {
+            return Ok(*start.unwrap());
+        }
+        let stop = if matches!(self.peek(), Tok::Colon | Tok::RBracket) { None } else { Some(Box::new(self.test()?)) };
+        let step = if self.eat(&Tok::Colon) {
+            if matches!(self.peek(), Tok::RBracket) {
+                None
+            } else {
+                Some(Box::new(self.test()?))
+            }
+        } else {
+            None
+        };
+        Ok(Expr::Slice { start, stop, step })
+    }
+
+    fn atom(&mut self) -> Result<Expr, ParseError> {
+        match self.bump() {
+            Tok::Name(s) => Ok(Expr::Name(s)),
+            Tok::Int(i) => Ok(Expr::Int(i)),
+            Tok::Float(f) => Ok(Expr::Float(f)),
+            Tok::Str(s) => Ok(Expr::Str(s)),
+            Tok::KwNone => Ok(Expr::NoneLit),
+            Tok::KwTrue => Ok(Expr::Bool(true)),
+            Tok::KwFalse => Ok(Expr::Bool(false)),
+            Tok::LParen => {
+                if self.eat(&Tok::RParen) {
+                    return Ok(Expr::Tuple(vec![]));
+                }
+                let inner = self.testlist()?;
+                self.expect(&Tok::RParen, "')'")?;
+                Ok(inner)
+            }
+            Tok::LBracket => {
+                if self.eat(&Tok::RBracket) {
+                    return Ok(Expr::List(vec![]));
+                }
+                let first = self.test()?;
+                if *self.peek() == Tok::KwFor {
+                    // list comprehension
+                    self.bump();
+                    let target_expr = self.target_list()?;
+                    let target = expr_to_target(target_expr).map_err(|m| self.err(&m))?;
+                    self.expect(&Tok::KwIn, "'in'")?;
+                    let iter = self.or_test()?;
+                    let mut conds = Vec::new();
+                    while self.eat(&Tok::KwIf) {
+                        conds.push(self.or_test()?);
+                    }
+                    self.expect(&Tok::RBracket, "']'")?;
+                    return Ok(Expr::ListComp {
+                        elt: Box::new(first),
+                        target: Box::new(target),
+                        iter: Box::new(iter),
+                        conds,
+                    });
+                }
+                let mut items = vec![first];
+                while self.eat(&Tok::Comma) {
+                    if *self.peek() == Tok::RBracket {
+                        break;
+                    }
+                    items.push(self.test()?);
+                }
+                self.expect(&Tok::RBracket, "']'")?;
+                Ok(Expr::List(items))
+            }
+            Tok::LBrace => {
+                let mut items = Vec::new();
+                if *self.peek() != Tok::RBrace {
+                    loop {
+                        let k = self.test()?;
+                        self.expect(&Tok::Colon, "':'")?;
+                        let v = self.test()?;
+                        items.push((k, v));
+                        if !self.eat(&Tok::Comma) {
+                            break;
+                        }
+                        if *self.peek() == Tok::RBrace {
+                            break;
+                        }
+                    }
+                }
+                self.expect(&Tok::RBrace, "'}'")?;
+                Ok(Expr::Dict(items))
+            }
+            other => Err(self.err(&format!("unexpected token {:?}", other))),
+        }
+    }
+}
+
+/// Convert an expression that appeared in target position into a [`Target`].
+pub fn expr_to_target(e: Expr) -> Result<Target, String> {
+    match e {
+        Expr::Name(n) => Ok(Target::Name(n)),
+        Expr::Tuple(items) | Expr::List(items) => {
+            let ts: Result<Vec<Target>, String> = items.into_iter().map(expr_to_target).collect();
+            Ok(Target::Tuple(ts?))
+        }
+        Expr::Subscript { value, index } => Ok(Target::Subscript { value: *value, index: *index }),
+        other => Err(format!("invalid assignment target: {:?}", other)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_ok(src: &str) -> Module {
+        parse(src).unwrap_or_else(|e| panic!("{} in:\n{}", e, src))
+    }
+
+    #[test]
+    fn assignment_and_arith() {
+        let m = parse_ok("x = 1 + 2 * 3\n");
+        assert_eq!(m.body.len(), 1);
+        match &m.body[0].kind {
+            StmtKind::Assign { target: Target::Name(n), value } => {
+                assert_eq!(n, "x");
+                // precedence: 1 + (2*3)
+                assert!(matches!(value, Expr::BinOp(BinOp::Add, _, r) if matches!(**r, Expr::BinOp(BinOp::Mul, _, _))));
+            }
+            other => panic!("{:?}", other),
+        }
+    }
+
+    #[test]
+    fn chained_comparison() {
+        let m = parse_ok("r = 1 < x <= 10\n");
+        match &m.body[0].kind {
+            StmtKind::Assign { value: Expr::Compare { ops, comparators, .. }, .. } => {
+                assert_eq!(ops.len(), 2);
+                assert_eq!(comparators.len(), 2);
+            }
+            other => panic!("{:?}", other),
+        }
+    }
+
+    #[test]
+    fn funcdef_with_defaults() {
+        let m = parse_ok("def f(a, b=2):\n    return a + b\n");
+        match &m.body[0].kind {
+            StmtKind::FuncDef { name, params, body } => {
+                assert_eq!(name, "f");
+                assert_eq!(params.len(), 2);
+                assert!(params[1].default.is_some());
+                assert_eq!(body.len(), 1);
+            }
+            other => panic!("{:?}", other),
+        }
+    }
+
+    #[test]
+    fn if_elif_else() {
+        let m = parse_ok("if a:\n    x = 1\nelif b:\n    x = 2\nelse:\n    x = 3\n");
+        match &m.body[0].kind {
+            StmtKind::If { orelse, .. } => {
+                assert_eq!(orelse.len(), 1);
+                assert!(matches!(&orelse[0].kind, StmtKind::If { orelse: e2, .. } if e2.len() == 1));
+            }
+            other => panic!("{:?}", other),
+        }
+    }
+
+    #[test]
+    fn loops_with_else() {
+        parse_ok("while x > 0:\n    x -= 1\nelse:\n    y = 1\n");
+        parse_ok("for i in range(10):\n    if i == 5:\n        break\nelse:\n    y = 2\n");
+    }
+
+    #[test]
+    fn tuple_unpack_for() {
+        let m = parse_ok("for k, v in items:\n    pass\n");
+        match &m.body[0].kind {
+            StmtKind::For { target: Target::Tuple(ts), .. } => assert_eq!(ts.len(), 2),
+            other => panic!("{:?}", other),
+        }
+    }
+
+    #[test]
+    fn method_vs_attribute() {
+        let m = parse_ok("y = x.relu()\nz = x.shape\n");
+        assert!(matches!(&m.body[0].kind, StmtKind::Assign { value: Expr::MethodCall { .. }, .. }));
+        assert!(matches!(&m.body[1].kind, StmtKind::Assign { value: Expr::Attribute { .. }, .. }));
+    }
+
+    #[test]
+    fn list_comp_with_conds() {
+        let m = parse_ok("ys = [x * 2 for x in xs if x > 0 if x < 10]\n");
+        match &m.body[0].kind {
+            StmtKind::Assign { value: Expr::ListComp { conds, .. }, .. } => assert_eq!(conds.len(), 2),
+            other => panic!("{:?}", other),
+        }
+    }
+
+    #[test]
+    fn slices() {
+        let m = parse_ok("a = xs[1:3]\nb = xs[:2]\nc = xs[::2]\nd = xs[1]\n");
+        assert_eq!(m.body.len(), 4);
+        assert!(matches!(
+            &m.body[0].kind,
+            StmtKind::Assign { value: Expr::Subscript { index, .. }, .. } if matches!(**index, Expr::Slice { .. })
+        ));
+        assert!(matches!(
+            &m.body[3].kind,
+            StmtKind::Assign { value: Expr::Subscript { index, .. }, .. } if matches!(**index, Expr::Int(1))
+        ));
+    }
+
+    #[test]
+    fn lambda_and_ternary() {
+        parse_ok("f = lambda a, b: a + b\ny = 1 if c else 2\n");
+    }
+
+    #[test]
+    fn ternary_nested() {
+        let m = parse_ok("y = 1 if a else 2 if b else 3\n");
+        match &m.body[0].kind {
+            StmtKind::Assign { value: Expr::IfExp { orelse, .. }, .. } => {
+                assert!(matches!(**orelse, Expr::IfExp { .. }));
+            }
+            other => panic!("{:?}", other),
+        }
+    }
+
+    #[test]
+    fn boolops_collect() {
+        let m = parse_ok("r = a and b and c or d\n");
+        match &m.body[0].kind {
+            StmtKind::Assign { value: Expr::BoolOp(BoolOpKind::Or, items), .. } => {
+                assert_eq!(items.len(), 2);
+                assert!(matches!(&items[0], Expr::BoolOp(BoolOpKind::And, inner) if inner.len() == 3));
+            }
+            other => panic!("{:?}", other),
+        }
+    }
+
+    #[test]
+    fn is_not_and_not_in() {
+        let m = parse_ok("a = x is not None\nb = y not in xs\n");
+        assert_eq!(m.body.len(), 2);
+        match &m.body[0].kind {
+            StmtKind::Assign { value: Expr::Compare { ops, .. }, .. } => assert_eq!(ops[0], CompareKind::IsNot),
+            other => panic!("{:?}", other),
+        }
+    }
+
+    #[test]
+    fn subscript_store() {
+        let m = parse_ok("d['k'] = 3\n");
+        assert!(matches!(&m.body[0].kind, StmtKind::Assign { target: Target::Subscript { .. }, .. }));
+    }
+
+    #[test]
+    fn error_cases() {
+        assert!(parse("x = = 1\n").is_err());
+        assert!(parse("if x\n    pass\n").is_err());
+        assert!(parse("1 = x\n").is_err());
+    }
+}

@@ -1,0 +1,272 @@
+//! AST → source text (precedence-aware). Used by the decompiler to render
+//! reconstructed ASTs, and by tests to round-trip corpus programs.
+
+use super::ast::*;
+use crate::bytecode::{BinOp, UnOp};
+
+/// Operator precedence (higher binds tighter). Mirrors Python's table.
+fn prec(e: &Expr) -> u8 {
+    match e {
+        Expr::Lambda { .. } => 1,
+        Expr::IfExp { .. } => 2,
+        Expr::BoolOp(BoolOpKind::Or, _) => 3,
+        Expr::BoolOp(BoolOpKind::And, _) => 4,
+        Expr::UnaryOp(UnOp::Not, _) => 5,
+        Expr::Compare { .. } => 6,
+        Expr::BinOp(BinOp::Add | BinOp::Sub, ..) => 9,
+        Expr::BinOp(BinOp::Mul | BinOp::Div | BinOp::FloorDiv | BinOp::Mod | BinOp::MatMul, ..) => 10,
+        Expr::UnaryOp(UnOp::Neg | UnOp::Pos, _) => 11,
+        Expr::BinOp(BinOp::Pow, ..) => 12,
+        _ => 14, // atoms, calls, subscripts, attributes
+    }
+}
+
+/// Render an expression, parenthesizing children of lower precedence.
+pub fn unparse_expr(e: &Expr) -> String {
+    let paren = |child: &Expr, min: u8| -> String {
+        let s = unparse_expr(child);
+        if prec(child) < min {
+            format!("({})", s)
+        } else {
+            s
+        }
+    };
+    match e {
+        Expr::NoneLit => "None".into(),
+        Expr::Bool(true) => "True".into(),
+        Expr::Bool(false) => "False".into(),
+        Expr::Int(i) => i.to_string(),
+        Expr::Float(f) => {
+            if f.fract() == 0.0 && f.abs() < 1e16 {
+                format!("{:.1}", f)
+            } else {
+                format!("{}", f)
+            }
+        }
+        Expr::Str(s) => format!("'{}'", s.replace('\\', "\\\\").replace('\'', "\\'").replace('\n', "\\n").replace('\t', "\\t")),
+        Expr::Name(n) => n.clone(),
+        Expr::List(items) => format!("[{}]", items.iter().map(unparse_expr).collect::<Vec<_>>().join(", ")),
+        Expr::Tuple(items) => {
+            if items.is_empty() {
+                "()".into()
+            } else if items.len() == 1 {
+                format!("({},)", unparse_expr(&items[0]))
+            } else {
+                format!("({})", items.iter().map(unparse_expr).collect::<Vec<_>>().join(", "))
+            }
+        }
+        Expr::Dict(kvs) => format!(
+            "{{{}}}",
+            kvs.iter().map(|(k, v)| format!("{}: {}", unparse_expr(k), unparse_expr(v))).collect::<Vec<_>>().join(", ")
+        ),
+        Expr::BinOp(op, a, b) => {
+            let p = prec(e);
+            match op {
+                // Right-associative.
+                BinOp::Pow => format!("{} ** {}", paren(a, p + 1), paren(b, p)),
+                _ => format!("{} {} {}", paren(a, p), op.symbol(), paren(b, p + 1)),
+            }
+        }
+        Expr::UnaryOp(op, a) => {
+            let p = prec(e);
+            format!("{}{}", op.symbol(), paren(a, p))
+        }
+        Expr::BoolOp(kind, items) => {
+            let p = prec(e);
+            let sep = match kind {
+                BoolOpKind::And => " and ",
+                BoolOpKind::Or => " or ",
+            };
+            items.iter().map(|i| paren(i, p + 1)).collect::<Vec<_>>().join(sep)
+        }
+        Expr::Compare { left, ops, comparators } => {
+            let p = prec(e);
+            let mut s = paren(left, p + 1);
+            for (op, c) in ops.iter().zip(comparators.iter()) {
+                s.push_str(&format!(" {} {}", op.symbol(), paren(c, p + 1)));
+            }
+            s
+        }
+        Expr::Call { func, args } => {
+            format!("{}({})", paren(func, 14), args.iter().map(unparse_expr).collect::<Vec<_>>().join(", "))
+        }
+        Expr::MethodCall { recv, name, args } => {
+            format!("{}.{}({})", paren(recv, 14), name, args.iter().map(unparse_expr).collect::<Vec<_>>().join(", "))
+        }
+        Expr::Attribute { value, name } => format!("{}.{}", paren(value, 14), name),
+        Expr::Subscript { value, index } => format!("{}[{}]", paren(value, 14), unparse_expr(index)),
+        Expr::Slice { start, stop, step } => {
+            let part = |o: &Option<Box<Expr>>| o.as_ref().map(|e| unparse_expr(e)).unwrap_or_default();
+            match step {
+                Some(_) => format!("{}:{}:{}", part(start), part(stop), part(step)),
+                None => format!("{}:{}", part(start), part(stop)),
+            }
+        }
+        Expr::IfExp { cond, then, orelse } => {
+            let p = prec(e);
+            format!("{} if {} else {}", paren(then, p + 1), paren(cond, p + 1), paren(orelse, p))
+        }
+        Expr::Lambda { params, body } => format!("lambda {}: {}", params.join(", "), unparse_expr(body)),
+        Expr::ListComp { elt, target, iter, conds } => {
+            let mut s = format!("[{} for {} in {}", unparse_expr(elt), unparse_target(target), paren(iter, 3));
+            for c in conds {
+                s.push_str(&format!(" if {}", paren(c, 3)));
+            }
+            s.push(']');
+            s
+        }
+    }
+}
+
+pub fn unparse_target(t: &Target) -> String {
+    match t {
+        Target::Name(n) => n.clone(),
+        Target::Tuple(ts) if ts.len() == 1 => format!("{},", unparse_target(&ts[0])),
+        Target::Tuple(ts) => ts.iter().map(unparse_target).collect::<Vec<_>>().join(", "),
+        Target::Subscript { value, index } => format!("{}[{}]", unparse_expr(value), unparse_expr(index)),
+    }
+}
+
+fn unparse_block(body: &[Stmt], indent: usize, out: &mut String) {
+    if body.is_empty() {
+        out.push_str(&"    ".repeat(indent));
+        out.push_str("pass\n");
+        return;
+    }
+    for s in body {
+        unparse_stmt(s, indent, out);
+    }
+}
+
+pub fn unparse_stmt(s: &Stmt, indent: usize, out: &mut String) {
+    let pad = "    ".repeat(indent);
+    match &s.kind {
+        StmtKind::Expr(e) => out.push_str(&format!("{}{}\n", pad, unparse_expr(e))),
+        StmtKind::Assign { target, value } => out.push_str(&format!("{}{} = {}\n", pad, unparse_target(target), unparse_expr(value))),
+        StmtKind::AugAssign { target, op, value } => {
+            out.push_str(&format!("{}{} {}= {}\n", pad, unparse_target(target), op.symbol(), unparse_expr(value)))
+        }
+        StmtKind::If { cond, then, orelse } => {
+            out.push_str(&format!("{}if {}:\n", pad, unparse_expr(cond)));
+            unparse_block(then, indent + 1, out);
+            if !orelse.is_empty() {
+                // elif chains render as nested `else: if:` — flatten one level.
+                if orelse.len() == 1 {
+                    if let StmtKind::If { .. } = &orelse[0].kind {
+                        let mut tmp = String::new();
+                        unparse_stmt(&orelse[0], indent, &mut tmp);
+                        let flat = tmp.replacen(&format!("{}if ", pad), &format!("{}elif ", pad), 1);
+                        out.push_str(&flat);
+                        return;
+                    }
+                }
+                out.push_str(&format!("{}else:\n", pad));
+                unparse_block(orelse, indent + 1, out);
+            }
+        }
+        StmtKind::While { cond, body, orelse } => {
+            out.push_str(&format!("{}while {}:\n", pad, unparse_expr(cond)));
+            unparse_block(body, indent + 1, out);
+            if !orelse.is_empty() {
+                out.push_str(&format!("{}else:\n", pad));
+                unparse_block(orelse, indent + 1, out);
+            }
+        }
+        StmtKind::For { target, iter, body, orelse } => {
+            out.push_str(&format!("{}for {} in {}:\n", pad, unparse_target(target), unparse_expr(iter)));
+            unparse_block(body, indent + 1, out);
+            if !orelse.is_empty() {
+                out.push_str(&format!("{}else:\n", pad));
+                unparse_block(orelse, indent + 1, out);
+            }
+        }
+        StmtKind::FuncDef { name, params, body } => {
+            let ps: Vec<String> = params
+                .iter()
+                .map(|p| match &p.default {
+                    Some(d) => format!("{}={}", p.name, unparse_expr(d)),
+                    None => p.name.clone(),
+                })
+                .collect();
+            out.push_str(&format!("{}def {}({}):\n", pad, name, ps.join(", ")));
+            unparse_block(body, indent + 1, out);
+        }
+        StmtKind::Return(v) => match v {
+            Some(e) => out.push_str(&format!("{}return {}\n", pad, unparse_expr(e))),
+            None => out.push_str(&format!("{}return\n", pad)),
+        },
+        StmtKind::Break => out.push_str(&format!("{}break\n", pad)),
+        StmtKind::Continue => out.push_str(&format!("{}continue\n", pad)),
+        StmtKind::Pass => out.push_str(&format!("{}pass\n", pad)),
+        StmtKind::Global(names) => out.push_str(&format!("{}global {}\n", pad, names.join(", "))),
+        StmtKind::Nonlocal(names) => out.push_str(&format!("{}nonlocal {}\n", pad, names.join(", "))),
+        StmtKind::Assert { cond, msg } => match msg {
+            Some(m) => out.push_str(&format!("{}assert {}, {}\n", pad, unparse_expr(cond), unparse_expr(m))),
+            None => out.push_str(&format!("{}assert {}\n", pad, unparse_expr(cond))),
+        },
+        StmtKind::Raise(e) => out.push_str(&format!("{}raise {}\n", pad, unparse_expr(e))),
+    }
+}
+
+/// Render a whole module.
+pub fn unparse_module(m: &Module) -> String {
+    let mut out = String::new();
+    for s in &m.body {
+        unparse_stmt(s, 0, &mut out);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::parser::parse;
+    use super::*;
+
+    /// Parse → unparse → parse must be a fixpoint (same AST).
+    fn stable(src: &str) {
+        let m1 = parse(src).unwrap();
+        let text = unparse_module(&m1);
+        let m2 = parse(&text).unwrap_or_else(|e| panic!("{}\nunparsed was:\n{}", e, text));
+        // Compare ignoring line numbers.
+        let t2 = unparse_module(&m2);
+        assert_eq!(text, t2, "unparse not stable for:\n{}", src);
+    }
+
+    #[test]
+    fn roundtrip_arith_precedence() {
+        stable("x = (1 + 2) * 3 - 4 ** 2 ** 2\n");
+        stable("y = -x ** 2\n");
+        stable("z = (a + b) % (c - d) // e\n");
+    }
+
+    #[test]
+    fn roundtrip_bool_and_compare() {
+        stable("r = a and (b or c) and not d\n");
+        stable("r = 1 < x <= 10 != y\n");
+        stable("r = x is not None and y not in xs\n");
+    }
+
+    #[test]
+    fn roundtrip_statements() {
+        stable("def f(a, b=1):\n    if a > b:\n        return a\n    elif a == b:\n        return 0\n    else:\n        return b\n");
+        stable("for i, v in pairs:\n    total += v\nelse:\n    done = True\n");
+        stable("while n > 0:\n    n -= 1\n");
+    }
+
+    #[test]
+    fn roundtrip_comprehension_and_lambda() {
+        stable("ys = [f(x) for x in xs if x > 0]\n");
+        stable("g = lambda a, b: a * b + 1\n");
+    }
+
+    #[test]
+    fn roundtrip_calls_slices() {
+        stable("v = d['k'][1:3]\nw = xs[::2]\nu = obj.method(1, x + 2).attr\n");
+    }
+
+    #[test]
+    fn ternary_parens() {
+        stable("y = (1 if a else 2) + 3\n");
+        stable("y = 1 if a else 2 if b else 3\n");
+    }
+}

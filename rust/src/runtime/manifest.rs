@@ -1,0 +1,119 @@
+//! The artifact manifest written by `python/compile/aot.py`.
+//!
+//! Plain-text line format (no serde_json in the offline environment):
+//!
+//! ```text
+//! # name file n_outputs in=<shape>;<shape>... out=<shape>;...
+//! attention attention.hlo.txt 1 in=4,8,64;4,8,64;4,8,64 out=4,8,64
+//! ```
+//!
+//! Shapes are comma-separated dims; scalar = empty string.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Artifact {
+    pub name: String,
+    pub file: String,
+    pub n_outputs: usize,
+    pub input_shapes: Vec<Vec<usize>>,
+    pub output_shapes: Vec<Vec<usize>>,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    entries: HashMap<String, Artifact>,
+}
+
+fn parse_shapes(s: &str) -> Result<Vec<Vec<usize>>, String> {
+    if s.is_empty() {
+        return Ok(vec![]);
+    }
+    s.split(';')
+        .map(|shape| {
+            if shape.is_empty() || shape == "scalar" {
+                return Ok(vec![]);
+            }
+            shape
+                .split(',')
+                .map(|d| d.parse::<usize>().map_err(|e| format!("bad dim '{}': {}", d, e)))
+                .collect()
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest, String> {
+        let mut entries = HashMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            if parts.len() != 5 {
+                return Err(format!("manifest line {}: expected 5 fields, got {}", lineno + 1, parts.len()));
+            }
+            let n_outputs: usize = parts[2].parse().map_err(|e| format!("manifest line {}: {}", lineno + 1, e))?;
+            let ins = parts[3].strip_prefix("in=").ok_or(format!("manifest line {}: missing in=", lineno + 1))?;
+            let outs = parts[4].strip_prefix("out=").ok_or(format!("manifest line {}: missing out=", lineno + 1))?;
+            let art = Artifact {
+                name: parts[0].to_string(),
+                file: parts[1].to_string(),
+                n_outputs,
+                input_shapes: parse_shapes(ins)?,
+                output_shapes: parse_shapes(outs)?,
+            };
+            entries.insert(art.name.clone(), art);
+        }
+        Ok(Manifest { entries })
+    }
+
+    pub fn load(path: &Path) -> Result<Manifest, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("read {}: {}", path.display(), e))?;
+        Manifest::parse(&text)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Artifact> {
+        self.entries.get(name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.entries.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        let text = "# comment\nattention attention.hlo.txt 1 in=4,8,64;4,8,64;4,8,64 out=4,8,64\nloss loss.hlo.txt 2 in=8,16 out=;8,16\n";
+        let m = Manifest::parse(text).unwrap();
+        assert_eq!(m.len(), 2);
+        let a = m.get("attention").unwrap();
+        assert_eq!(a.input_shapes.len(), 3);
+        assert_eq!(a.input_shapes[0], vec![4, 8, 64]);
+        let l = m.get("loss").unwrap();
+        assert_eq!(l.output_shapes[0], Vec::<usize>::new()); // scalar
+        assert_eq!(l.output_shapes[1], vec![8, 16]);
+    }
+
+    #[test]
+    fn bad_lines_rejected() {
+        assert!(Manifest::parse("too few fields\n").is_err());
+        assert!(Manifest::parse("a b notanum in= out=\n").is_err());
+    }
+}

@@ -1,0 +1,178 @@
+//! A small f32 CPU tensor library.
+//!
+//! This is the substrate standing in for PyTorch's eager tensor type: the
+//! value that user programs manipulate, that dynamo proxies during symbolic
+//! evaluation, and that the eager backend computes with. Row-major, f32 only
+//! (the dtype the paper's models overwhelmingly use), functional (ops return
+//! new tensors; data is shared via `Rc`).
+
+mod ops;
+mod rng;
+
+pub use ops::*;
+pub use rng::Rng;
+
+use std::fmt;
+use std::rc::Rc;
+
+/// A dense row-major f32 tensor.
+#[derive(Clone)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Rc<Vec<f32>>,
+}
+
+impl Tensor {
+    /// Build a tensor from a shape and data. Panics if sizes disagree.
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        let n: usize = shape.iter().product();
+        assert_eq!(n, data.len(), "shape {:?} wants {} elems, got {}", shape, n, data.len());
+        Tensor { shape, data: Rc::new(data) }
+    }
+
+    /// A scalar (rank-0) tensor.
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { shape: vec![], data: Rc::new(vec![v]) }
+    }
+
+    /// All-zeros tensor.
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: Rc::new(vec![0.0; n]) }
+    }
+
+    /// All-ones tensor.
+    pub fn ones(shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: Rc::new(vec![1.0; n]) }
+    }
+
+    /// `[0, 1, ..., n-1]` as f32.
+    pub fn arange(n: usize) -> Tensor {
+        Tensor { shape: vec![n], data: Rc::new((0..n).map(|i| i as f32).collect()) }
+    }
+
+    /// Standard-normal tensor from a caller-owned PRNG (deterministic).
+    pub fn randn(shape: &[usize], rng: &mut Rng) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: Rc::new((0..n).map(|_| rng.normal()).collect()) }
+    }
+
+    /// Uniform [0,1) tensor from a caller-owned PRNG.
+    pub fn rand(shape: &[usize], rng: &mut Rng) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: Rc::new((0..n).map(|_| rng.uniform()).collect()) }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// The single element of a rank-0/1-element tensor (`.item()`).
+    pub fn item(&self) -> f32 {
+        assert_eq!(self.numel(), 1, "item() on tensor with {} elements", self.numel());
+        self.data[0]
+    }
+
+    /// Reinterpret with a new shape (same element count). `-1` handling is
+    /// done by the caller (`ops::reshape_infer`).
+    pub fn reshape(&self, shape: Vec<usize>) -> Tensor {
+        let n: usize = shape.iter().product();
+        assert_eq!(n, self.numel(), "reshape {:?} -> {:?}", self.shape, shape);
+        Tensor { shape, data: Rc::clone(&self.data) }
+    }
+
+    /// Strides (in elements) of the row-major layout.
+    pub fn strides(&self) -> Vec<usize> {
+        let mut s = vec![1usize; self.shape.len()];
+        for i in (0..self.shape.len().saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * self.shape[i + 1];
+        }
+        s
+    }
+
+    /// Max |a-b| against another tensor of identical shape.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max)
+    }
+
+    /// Elementwise approximate equality.
+    pub fn allclose(&self, other: &Tensor, tol: f32) -> bool {
+        self.shape == other.shape && self.max_abs_diff(other) <= tol
+    }
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let preview: Vec<f32> = self.data.iter().take(8).cloned().collect();
+        write!(f, "Tensor(shape={:?}, data={:?}{})", self.shape, preview, if self.numel() > 8 { ", ..." } else { "" })
+    }
+}
+
+impl fmt::Display for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.numel() == 1 {
+            return write!(f, "tensor({:.4})", self.data[0]);
+        }
+        let preview: Vec<String> = self.data.iter().take(6).map(|v| format!("{:.4}", v)).collect();
+        write!(f, "tensor(shape={:?}, [{}{}])", self.shape, preview.join(", "), if self.numel() > 6 { ", ..." } else { "" })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_item() {
+        let t = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(t.shape(), &[2, 2]);
+        assert_eq!(t.numel(), 4);
+        assert_eq!(Tensor::scalar(7.5).item(), 7.5);
+    }
+
+    #[test]
+    fn zeros_ones_arange() {
+        assert_eq!(Tensor::zeros(&[3]).data(), &[0.0, 0.0, 0.0]);
+        assert_eq!(Tensor::ones(&[2]).data(), &[1.0, 1.0]);
+        assert_eq!(Tensor::arange(3).data(), &[0.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn strides_row_major() {
+        let t = Tensor::zeros(&[2, 3, 4]);
+        assert_eq!(t.strides(), vec![12, 4, 1]);
+    }
+
+    #[test]
+    fn randn_deterministic() {
+        let mut r1 = Rng::new(42);
+        let mut r2 = Rng::new(42);
+        let a = Tensor::randn(&[4, 4], &mut r1);
+        let b = Tensor::randn(&[4, 4], &mut r2);
+        assert!(a.allclose(&b, 0.0));
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_shape_panics() {
+        Tensor::new(vec![2, 2], vec![1.0]);
+    }
+}

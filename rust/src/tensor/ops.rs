@@ -1,0 +1,546 @@
+//! Tensor operations: broadcasting elementwise ops, matmul, reductions,
+//! activations, normalization, and the couple of NN-specific ops the model
+//! corpus needs (embedding gather, cross-entropy).
+//!
+//! These double as the **eager backend** semantics: graph execution in
+//! `backend::eager` calls straight into this module, and the XLA backend is
+//! cross-checked against it.
+
+use super::Tensor;
+
+/// Broadcast two shapes (numpy rules). Returns the broadcast shape or an
+/// error message describing the mismatch.
+pub fn broadcast_shapes(a: &[usize], b: &[usize]) -> Result<Vec<usize>, String> {
+    let rank = a.len().max(b.len());
+    let mut out = vec![0usize; rank];
+    for i in 0..rank {
+        let da = if i < rank - a.len() { 1 } else { a[i - (rank - a.len())] };
+        let db = if i < rank - b.len() { 1 } else { b[i - (rank - b.len())] };
+        out[i] = if da == db {
+            da
+        } else if da == 1 {
+            db
+        } else if db == 1 {
+            da
+        } else {
+            return Err(format!("cannot broadcast {:?} with {:?}", a, b));
+        };
+    }
+    Ok(out)
+}
+
+/// Map a flat index in the broadcast output back to a flat index in `t`.
+fn broadcast_src_index(out_shape: &[usize], out_idx: usize, t: &Tensor) -> usize {
+    let t_shape = t.shape();
+    let t_strides = t.strides();
+    let offset = out_shape.len() - t_shape.len();
+    let mut rem = out_idx;
+    let mut src = 0usize;
+    for (i, &dim) in out_shape.iter().enumerate() {
+        // out stride for axis i
+        let stride: usize = out_shape[i + 1..].iter().product();
+        let coord = rem / stride;
+        rem %= stride;
+        let _ = dim;
+        if i >= offset {
+            let ti = i - offset;
+            let tc = if t_shape[ti] == 1 { 0 } else { coord };
+            src += tc * t_strides[ti];
+        }
+    }
+    src
+}
+
+/// Elementwise binary op with broadcasting.
+pub fn binary_op(a: &Tensor, b: &Tensor, f: impl Fn(f32, f32) -> f32) -> Result<Tensor, String> {
+    let out_shape = broadcast_shapes(a.shape(), b.shape())?;
+    let n: usize = out_shape.iter().product();
+    // Fast path: identical shapes.
+    if a.shape() == b.shape() {
+        let data: Vec<f32> = a.data().iter().zip(b.data().iter()).map(|(&x, &y)| f(x, y)).collect();
+        return Ok(Tensor::new(out_shape, data));
+    }
+    let mut data = Vec::with_capacity(n);
+    for i in 0..n {
+        let x = a.data()[broadcast_src_index(&out_shape, i, a)];
+        let y = b.data()[broadcast_src_index(&out_shape, i, b)];
+        data.push(f(x, y));
+    }
+    Ok(Tensor::new(out_shape, data))
+}
+
+pub fn add(a: &Tensor, b: &Tensor) -> Result<Tensor, String> {
+    binary_op(a, b, |x, y| x + y)
+}
+pub fn sub(a: &Tensor, b: &Tensor) -> Result<Tensor, String> {
+    binary_op(a, b, |x, y| x - y)
+}
+pub fn mul(a: &Tensor, b: &Tensor) -> Result<Tensor, String> {
+    binary_op(a, b, |x, y| x * y)
+}
+pub fn div(a: &Tensor, b: &Tensor) -> Result<Tensor, String> {
+    binary_op(a, b, |x, y| x / y)
+}
+pub fn pow(a: &Tensor, b: &Tensor) -> Result<Tensor, String> {
+    binary_op(a, b, |x, y| x.powf(y))
+}
+pub fn maximum(a: &Tensor, b: &Tensor) -> Result<Tensor, String> {
+    binary_op(a, b, f32::max)
+}
+pub fn minimum(a: &Tensor, b: &Tensor) -> Result<Tensor, String> {
+    binary_op(a, b, f32::min)
+}
+
+/// Elementwise unary op.
+pub fn unary_op(a: &Tensor, f: impl Fn(f32) -> f32) -> Tensor {
+    Tensor::new(a.shape().to_vec(), a.data().iter().map(|&x| f(x)).collect())
+}
+
+pub fn neg(a: &Tensor) -> Tensor {
+    unary_op(a, |x| -x)
+}
+pub fn exp(a: &Tensor) -> Tensor {
+    unary_op(a, f32::exp)
+}
+pub fn log(a: &Tensor) -> Tensor {
+    unary_op(a, f32::ln)
+}
+pub fn sqrt(a: &Tensor) -> Tensor {
+    unary_op(a, f32::sqrt)
+}
+pub fn abs(a: &Tensor) -> Tensor {
+    unary_op(a, f32::abs)
+}
+pub fn relu(a: &Tensor) -> Tensor {
+    unary_op(a, |x| x.max(0.0))
+}
+pub fn tanh(a: &Tensor) -> Tensor {
+    unary_op(a, f32::tanh)
+}
+pub fn sigmoid(a: &Tensor) -> Tensor {
+    unary_op(a, |x| 1.0 / (1.0 + (-x).exp()))
+}
+
+/// tanh-approximation GELU (the variant JAX uses by default).
+pub fn gelu(a: &Tensor) -> Tensor {
+    unary_op(a, |x| {
+        let c = (2.0f32 / std::f32::consts::PI).sqrt();
+        0.5 * x * (1.0 + (c * (x + 0.044715 * x * x * x)).tanh())
+    })
+}
+
+/// Matrix multiply. Supports 2D @ 2D, and batched (leading dims must match
+/// exactly; the last two dims are contracted).
+pub fn matmul(a: &Tensor, b: &Tensor) -> Result<Tensor, String> {
+    if a.rank() < 2 || b.rank() < 2 {
+        return Err(format!("matmul needs rank>=2 operands, got {:?} @ {:?}", a.shape(), b.shape()));
+    }
+    let (am, ak) = (a.shape()[a.rank() - 2], a.shape()[a.rank() - 1]);
+    let (bk, bn) = (b.shape()[b.rank() - 2], b.shape()[b.rank() - 1]);
+    if ak != bk {
+        return Err(format!("matmul inner-dim mismatch: {:?} @ {:?}", a.shape(), b.shape()));
+    }
+    let a_batch: Vec<usize> = a.shape()[..a.rank() - 2].to_vec();
+    let b_batch: Vec<usize> = b.shape()[..b.rank() - 2].to_vec();
+    // Allow one side to be unbatched.
+    let batch: Vec<usize> = if a_batch == b_batch {
+        a_batch.clone()
+    } else if b_batch.is_empty() {
+        a_batch.clone()
+    } else if a_batch.is_empty() {
+        b_batch.clone()
+    } else {
+        return Err(format!("matmul batch mismatch: {:?} @ {:?}", a.shape(), b.shape()));
+    };
+    let nbatch: usize = batch.iter().product::<usize>().max(1);
+    let mut out = vec![0.0f32; nbatch * am * bn];
+    let a_mat = am * ak;
+    let b_mat = bk * bn;
+    let o_mat = am * bn;
+    for bi in 0..nbatch {
+        let a_off = if a_batch.is_empty() { 0 } else { bi * a_mat };
+        let b_off = if b_batch.is_empty() { 0 } else { bi * b_mat };
+        let ad = &a.data()[a_off..a_off + a_mat];
+        let bd = &b.data()[b_off..b_off + b_mat];
+        let od = &mut out[bi * o_mat..(bi + 1) * o_mat];
+        // i-k-j loop order: streams through bd rows, vectorizes the j loop.
+        for i in 0..am {
+            for k in 0..ak {
+                let av = ad[i * ak + k];
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &bd[k * bn..(k + 1) * bn];
+                let orow = &mut od[i * bn..(i + 1) * bn];
+                for j in 0..bn {
+                    orow[j] += av * brow[j];
+                }
+            }
+        }
+    }
+    let mut shape = batch;
+    shape.push(am);
+    shape.push(bn);
+    Ok(Tensor::new(shape, out))
+}
+
+/// Transpose the last two axes.
+pub fn transpose(a: &Tensor) -> Result<Tensor, String> {
+    if a.rank() < 2 {
+        return Err(format!("transpose needs rank>=2, got {:?}", a.shape()));
+    }
+    let r = a.rank();
+    let (m, n) = (a.shape()[r - 2], a.shape()[r - 1]);
+    let nbatch: usize = a.shape()[..r - 2].iter().product::<usize>().max(1);
+    let mut out = vec![0.0f32; a.numel()];
+    for b in 0..nbatch {
+        let src = &a.data()[b * m * n..(b + 1) * m * n];
+        let dst = &mut out[b * m * n..(b + 1) * m * n];
+        for i in 0..m {
+            for j in 0..n {
+                dst[j * m + i] = src[i * n + j];
+            }
+        }
+    }
+    let mut shape = a.shape().to_vec();
+    shape.swap(r - 2, r - 1);
+    Ok(Tensor::new(shape, out))
+}
+
+/// General axis permutation.
+pub fn permute(a: &Tensor, perm: &[usize]) -> Result<Tensor, String> {
+    if perm.len() != a.rank() {
+        return Err(format!("permute {:?} on rank-{} tensor", perm, a.rank()));
+    }
+    let in_strides = a.strides();
+    let out_shape: Vec<usize> = perm.iter().map(|&p| a.shape()[p]).collect();
+    let n = a.numel();
+    let mut out = vec![0.0f32; n];
+    let mut out_strides = vec![1usize; out_shape.len()];
+    for i in (0..out_shape.len().saturating_sub(1)).rev() {
+        out_strides[i] = out_strides[i + 1] * out_shape[i + 1];
+    }
+    for (o, slot) in out.iter_mut().enumerate() {
+        let mut rem = o;
+        let mut src = 0usize;
+        for i in 0..out_shape.len() {
+            let c = rem / out_strides[i];
+            rem %= out_strides[i];
+            src += c * in_strides[perm[i]];
+        }
+        *slot = a.data()[src];
+    }
+    Ok(Tensor::new(out_shape, out))
+}
+
+/// Reduce over one axis (or all axes if `axis` is None) with a fold.
+fn reduce(a: &Tensor, axis: Option<usize>, init: f32, f: impl Fn(f32, f32) -> f32) -> Result<Tensor, String> {
+    match axis {
+        None => {
+            let v = a.data().iter().fold(init, |acc, &x| f(acc, x));
+            Ok(Tensor::scalar(v))
+        }
+        Some(ax) => {
+            if ax >= a.rank() {
+                return Err(format!("reduce axis {} out of range for {:?}", ax, a.shape()));
+            }
+            let outer: usize = a.shape()[..ax].iter().product::<usize>().max(1);
+            let len = a.shape()[ax];
+            let inner: usize = a.shape()[ax + 1..].iter().product::<usize>().max(1);
+            let mut out = vec![init; outer * inner];
+            for o in 0..outer {
+                for k in 0..len {
+                    for i in 0..inner {
+                        let v = a.data()[(o * len + k) * inner + i];
+                        let slot = &mut out[o * inner + i];
+                        *slot = f(*slot, v);
+                    }
+                }
+            }
+            let mut shape = a.shape().to_vec();
+            shape.remove(ax);
+            Ok(Tensor::new(shape, out))
+        }
+    }
+}
+
+pub fn sum(a: &Tensor, axis: Option<usize>) -> Result<Tensor, String> {
+    reduce(a, axis, 0.0, |x, y| x + y)
+}
+
+pub fn max_reduce(a: &Tensor, axis: Option<usize>) -> Result<Tensor, String> {
+    reduce(a, axis, f32::NEG_INFINITY, f32::max)
+}
+
+pub fn min_reduce(a: &Tensor, axis: Option<usize>) -> Result<Tensor, String> {
+    reduce(a, axis, f32::INFINITY, f32::min)
+}
+
+pub fn mean(a: &Tensor, axis: Option<usize>) -> Result<Tensor, String> {
+    let denom = match axis {
+        None => a.numel() as f32,
+        Some(ax) => a.shape()[ax] as f32,
+    };
+    let s = sum(a, axis)?;
+    Ok(unary_op(&s, |x| x / denom))
+}
+
+/// Softmax over the last axis, numerically stabilized.
+pub fn softmax(a: &Tensor) -> Result<Tensor, String> {
+    if a.rank() == 0 {
+        return Ok(Tensor::scalar(1.0));
+    }
+    let n = a.shape()[a.rank() - 1];
+    let rows = a.numel() / n;
+    let mut out = vec![0.0f32; a.numel()];
+    for r in 0..rows {
+        let row = &a.data()[r * n..(r + 1) * n];
+        let m = row.iter().fold(f32::NEG_INFINITY, |acc, &x| acc.max(x));
+        let mut z = 0.0f32;
+        for (j, &x) in row.iter().enumerate() {
+            let e = (x - m).exp();
+            out[r * n + j] = e;
+            z += e;
+        }
+        for j in 0..n {
+            out[r * n + j] /= z;
+        }
+    }
+    Ok(Tensor::new(a.shape().to_vec(), out))
+}
+
+/// Layer normalization over the last axis with learned scale/shift.
+pub fn layernorm(x: &Tensor, gamma: &Tensor, beta: &Tensor, eps: f32) -> Result<Tensor, String> {
+    let n = *x.shape().last().ok_or("layernorm on rank-0")?;
+    if gamma.numel() != n || beta.numel() != n {
+        return Err(format!("layernorm param mismatch: x last dim {}, gamma {}, beta {}", n, gamma.numel(), beta.numel()));
+    }
+    let rows = x.numel() / n;
+    let mut out = vec![0.0f32; x.numel()];
+    for r in 0..rows {
+        let row = &x.data()[r * n..(r + 1) * n];
+        let mean: f32 = row.iter().sum::<f32>() / n as f32;
+        let var: f32 = row.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / n as f32;
+        let inv = 1.0 / (var + eps).sqrt();
+        for j in 0..n {
+            out[r * n + j] = (row[j] - mean) * inv * gamma.data()[j] + beta.data()[j];
+        }
+    }
+    Ok(Tensor::new(x.shape().to_vec(), out))
+}
+
+/// Embedding lookup: `ids` is an integer-valued f32 tensor; gathers rows of
+/// `table` (shape [vocab, dim]).
+pub fn embedding(table: &Tensor, ids: &Tensor) -> Result<Tensor, String> {
+    if table.rank() != 2 {
+        return Err(format!("embedding table must be rank 2, got {:?}", table.shape()));
+    }
+    let (vocab, dim) = (table.shape()[0], table.shape()[1]);
+    let mut out = Vec::with_capacity(ids.numel() * dim);
+    for &idf in ids.data() {
+        let id = idf as usize;
+        if id >= vocab {
+            return Err(format!("embedding id {} out of vocab {}", id, vocab));
+        }
+        out.extend_from_slice(&table.data()[id * dim..(id + 1) * dim]);
+    }
+    let mut shape = ids.shape().to_vec();
+    shape.push(dim);
+    Ok(Tensor::new(shape, out))
+}
+
+/// Mean cross-entropy between logits [.., n, vocab] and integer targets
+/// [.., n] (f32-encoded).
+pub fn cross_entropy(logits: &Tensor, targets: &Tensor) -> Result<Tensor, String> {
+    let vocab = *logits.shape().last().ok_or("cross_entropy on rank-0 logits")?;
+    let rows = logits.numel() / vocab;
+    if targets.numel() != rows {
+        return Err(format!("cross_entropy: {} rows vs {} targets", rows, targets.numel()));
+    }
+    let mut total = 0.0f32;
+    for r in 0..rows {
+        let row = &logits.data()[r * vocab..(r + 1) * vocab];
+        let m = row.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(x));
+        let logz = m + row.iter().map(|&x| (x - m).exp()).sum::<f32>().ln();
+        let t = targets.data()[r] as usize;
+        if t >= vocab {
+            return Err(format!("target {} out of vocab {}", t, vocab));
+        }
+        total += logz - row[t];
+    }
+    Ok(Tensor::scalar(total / rows as f32))
+}
+
+/// Resolve a reshape spec that may contain a single `-1` wildcard.
+pub fn reshape_infer(numel: usize, spec: &[i64]) -> Result<Vec<usize>, String> {
+    let mut known: usize = 1;
+    let mut wild = None;
+    for (i, &d) in spec.iter().enumerate() {
+        if d == -1 {
+            if wild.is_some() {
+                return Err("reshape: more than one -1".into());
+            }
+            wild = Some(i);
+        } else if d < 0 {
+            return Err(format!("reshape: bad dim {}", d));
+        } else {
+            known *= d as usize;
+        }
+    }
+    let mut out: Vec<usize> = spec.iter().map(|&d| if d < 0 { 0 } else { d as usize }).collect();
+    if let Some(i) = wild {
+        if known == 0 || numel % known != 0 {
+            return Err(format!("reshape: cannot infer -1 for numel {} with {:?}", numel, spec));
+        }
+        out[i] = numel / known;
+    } else if known != numel {
+        return Err(format!("reshape: {:?} incompatible with numel {}", spec, numel));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(shape: &[usize], data: &[f32]) -> Tensor {
+        Tensor::new(shape.to_vec(), data.to_vec())
+    }
+
+    #[test]
+    fn broadcast_rules() {
+        assert_eq!(broadcast_shapes(&[2, 3], &[3]).unwrap(), vec![2, 3]);
+        assert_eq!(broadcast_shapes(&[2, 1], &[1, 4]).unwrap(), vec![2, 4]);
+        assert_eq!(broadcast_shapes(&[], &[5]).unwrap(), vec![5]);
+        assert!(broadcast_shapes(&[2, 3], &[4]).is_err());
+    }
+
+    #[test]
+    fn add_broadcast() {
+        let a = t(&[2, 2], &[1.0, 2.0, 3.0, 4.0]);
+        let b = t(&[2], &[10.0, 20.0]);
+        let c = add(&a, &b).unwrap();
+        assert_eq!(c.data(), &[11.0, 22.0, 13.0, 24.0]);
+    }
+
+    #[test]
+    fn scalar_broadcast() {
+        let a = t(&[3], &[1.0, 2.0, 3.0]);
+        let c = mul(&a, &Tensor::scalar(2.0)).unwrap();
+        assert_eq!(c.data(), &[2.0, 4.0, 6.0]);
+    }
+
+    #[test]
+    fn matmul_2d() {
+        let a = t(&[2, 2], &[1.0, 2.0, 3.0, 4.0]);
+        let b = t(&[2, 2], &[1.0, 1.0, 1.0, 1.0]);
+        let c = matmul(&a, &b).unwrap();
+        assert_eq!(c.data(), &[3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_batched() {
+        let a = t(&[2, 1, 2], &[1.0, 2.0, 3.0, 4.0]);
+        let b = t(&[2, 2, 1], &[1.0, 1.0, 2.0, 2.0]);
+        let c = matmul(&a, &b).unwrap();
+        assert_eq!(c.shape(), &[2, 1, 1]);
+        assert_eq!(c.data(), &[3.0, 14.0]);
+    }
+
+    #[test]
+    fn matmul_broadcast_rhs() {
+        let a = t(&[2, 2, 2], &[1.0, 0.0, 0.0, 1.0, 2.0, 0.0, 0.0, 2.0]);
+        let b = t(&[2, 2], &[1.0, 2.0, 3.0, 4.0]);
+        let c = matmul(&a, &b).unwrap();
+        assert_eq!(c.shape(), &[2, 2, 2]);
+        assert_eq!(&c.data()[..4], &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(&c.data()[4..], &[2.0, 4.0, 6.0, 8.0]);
+    }
+
+    #[test]
+    fn matmul_mismatch() {
+        assert!(matmul(&t(&[2, 3], &[0.0; 6]), &t(&[2, 3], &[0.0; 6])).is_err());
+    }
+
+    #[test]
+    fn transpose_2d() {
+        let a = t(&[2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let b = transpose(&a).unwrap();
+        assert_eq!(b.shape(), &[3, 2]);
+        assert_eq!(b.data(), &[1.0, 4.0, 2.0, 5.0, 3.0, 6.0]);
+    }
+
+    #[test]
+    fn permute_3d() {
+        let a = Tensor::arange(24).reshape(vec![2, 3, 4]);
+        let b = permute(&a, &[2, 0, 1]).unwrap();
+        assert_eq!(b.shape(), &[4, 2, 3]);
+        // b[i][j][k] == a[j][k][i]
+        assert_eq!(b.data()[0], 0.0);
+        assert_eq!(b.data()[1 * 2 * 3], 1.0); // i=1,j=0,k=0 -> a[0][0][1]
+    }
+
+    #[test]
+    fn reductions() {
+        let a = t(&[2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(sum(&a, None).unwrap().item(), 21.0);
+        assert_eq!(sum(&a, Some(0)).unwrap().data(), &[5.0, 7.0, 9.0]);
+        assert_eq!(sum(&a, Some(1)).unwrap().data(), &[6.0, 15.0]);
+        assert_eq!(mean(&a, None).unwrap().item(), 3.5);
+        assert_eq!(max_reduce(&a, Some(1)).unwrap().data(), &[3.0, 6.0]);
+        assert_eq!(min_reduce(&a, None).unwrap().item(), 1.0);
+    }
+
+    #[test]
+    fn softmax_rows() {
+        let a = t(&[2, 2], &[0.0, 0.0, 1000.0, 1000.0]);
+        let s = softmax(&a).unwrap();
+        for &v in s.data() {
+            assert!((v - 0.5).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn layernorm_basic() {
+        let x = t(&[1, 4], &[1.0, 2.0, 3.0, 4.0]);
+        let g = Tensor::ones(&[4]);
+        let b = Tensor::zeros(&[4]);
+        let y = layernorm(&x, &g, &b, 1e-5).unwrap();
+        let m: f32 = y.data().iter().sum::<f32>() / 4.0;
+        assert!(m.abs() < 1e-5);
+    }
+
+    #[test]
+    fn embedding_gather() {
+        let table = t(&[3, 2], &[0.0, 1.0, 10.0, 11.0, 20.0, 21.0]);
+        let ids = t(&[2], &[2.0, 0.0]);
+        let e = embedding(&table, &ids).unwrap();
+        assert_eq!(e.shape(), &[2, 2]);
+        assert_eq!(e.data(), &[20.0, 21.0, 0.0, 1.0]);
+        assert!(embedding(&table, &t(&[1], &[5.0])).is_err());
+    }
+
+    #[test]
+    fn cross_entropy_uniform() {
+        let logits = t(&[2, 4], &[0.0; 8]);
+        let targets = t(&[2], &[1.0, 3.0]);
+        let ce = cross_entropy(&logits, &targets).unwrap();
+        assert!((ce.item() - (4.0f32).ln()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn reshape_wildcard() {
+        assert_eq!(reshape_infer(12, &[3, -1]).unwrap(), vec![3, 4]);
+        assert_eq!(reshape_infer(12, &[12]).unwrap(), vec![12]);
+        assert!(reshape_infer(12, &[5, -1]).is_err());
+        assert!(reshape_infer(12, &[-1, -1]).is_err());
+    }
+
+    #[test]
+    fn activations() {
+        let a = t(&[3], &[-1.0, 0.0, 1.0]);
+        assert_eq!(relu(&a).data(), &[0.0, 0.0, 1.0]);
+        assert!((sigmoid(&a).data()[1] - 0.5).abs() < 1e-6);
+        assert!((gelu(&a).data()[2] - 0.8412).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,426 @@
+//! The dynamic value model of the mini Python (`pylang`) runtime — the
+//! analogue of `PyObject`. Everything the VM pushes on its stack is a
+//! [`Value`]. Heap values share storage via `Rc`; lists and dicts are
+//! interior-mutable like their Python counterparts.
+
+use std::cell::RefCell;
+use std::cmp::Ordering;
+use std::collections::BTreeMap;
+use std::fmt;
+use std::rc::Rc;
+
+use crate::bytecode::CodeObject;
+use crate::tensor::Tensor;
+
+/// A runtime value.
+#[derive(Clone)]
+pub enum Value {
+    None,
+    Bool(bool),
+    Int(i64),
+    Float(f64),
+    Str(Rc<str>),
+    List(Rc<RefCell<Vec<Value>>>),
+    Tuple(Rc<Vec<Value>>),
+    Dict(Rc<RefCell<BTreeMap<DictKey, Value>>>),
+    Tensor(Rc<Tensor>),
+    /// A user function: code object + the name-resolution module + closure cells.
+    Func(Rc<Function>),
+    /// A native builtin (print, range, len, torch.*, tensor methods...).
+    Builtin(Rc<Builtin>),
+    /// A bound method: receiver + method name, resolved at call time.
+    BoundMethod(Rc<(Value, String)>),
+    /// A range object (start, stop, step).
+    Range(i64, i64, i64),
+    /// A slice object (start, stop, step; `None` = default).
+    Slice(Rc<(Value, Value, Value)>),
+    /// An iterator (materialized; created by GET_ITER).
+    Iter(Rc<RefCell<ValueIter>>),
+    /// A compiled-graph callable installed by dynamo (routes to a backend).
+    CompiledGraph(Rc<crate::graph::CompiledGraphFn>),
+    /// A closure cell.
+    Cell(Rc<RefCell<Value>>),
+    /// A code object value (what MAKE_FUNCTION consumes).
+    Code(Rc<CodeObject>),
+}
+
+/// Hashable dict keys (Python-ish subset).
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum DictKey {
+    Int(i64),
+    Str(String),
+    Bool(bool),
+}
+
+impl DictKey {
+    pub fn from_value(v: &Value) -> Result<DictKey, String> {
+        match v {
+            Value::Int(i) => Ok(DictKey::Int(*i)),
+            Value::Str(s) => Ok(DictKey::Str(s.to_string())),
+            Value::Bool(b) => Ok(DictKey::Bool(*b)),
+            other => Err(format!("unhashable dict key: {}", other.type_name())),
+        }
+    }
+
+    pub fn to_value(&self) -> Value {
+        match self {
+            DictKey::Int(i) => Value::Int(*i),
+            DictKey::Str(s) => Value::str(s),
+            DictKey::Bool(b) => Value::Bool(*b),
+        }
+    }
+}
+
+/// A materialized iterator.
+#[derive(Debug)]
+pub struct ValueIter {
+    pub items: Vec<Value>,
+    pub pos: usize,
+}
+
+impl ValueIter {
+    pub fn next_item(&mut self) -> Option<Value> {
+        let v = self.items.get(self.pos).cloned();
+        if v.is_some() {
+            self.pos += 1;
+        }
+        v
+    }
+}
+
+/// A user-defined function.
+pub struct Function {
+    pub name: String,
+    pub code: Rc<CodeObject>,
+    /// Default values for trailing parameters.
+    pub defaults: Vec<Value>,
+    /// Captured closure cells (indexed by the code object's freevars).
+    pub closure: Vec<Rc<RefCell<Value>>>,
+}
+
+/// A native builtin function.
+pub struct Builtin {
+    pub name: String,
+    #[allow(clippy::type_complexity)]
+    pub func: Box<dyn Fn(&[Value]) -> Result<Value, String>>,
+}
+
+impl fmt::Debug for Builtin {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "<builtin {}>", self.name)
+    }
+}
+
+impl Value {
+    pub fn str(s: &str) -> Value {
+        Value::Str(Rc::from(s))
+    }
+
+    pub fn list(items: Vec<Value>) -> Value {
+        Value::List(Rc::new(RefCell::new(items)))
+    }
+
+    pub fn tuple(items: Vec<Value>) -> Value {
+        Value::Tuple(Rc::new(items))
+    }
+
+    pub fn dict() -> Value {
+        Value::Dict(Rc::new(RefCell::new(BTreeMap::new())))
+    }
+
+    pub fn tensor(t: Tensor) -> Value {
+        Value::Tensor(Rc::new(t))
+    }
+
+    pub fn builtin(name: &str, f: impl Fn(&[Value]) -> Result<Value, String> + 'static) -> Value {
+        Value::Builtin(Rc::new(Builtin { name: name.to_string(), func: Box::new(f) }))
+    }
+
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            Value::None => "NoneType",
+            Value::Bool(_) => "bool",
+            Value::Int(_) => "int",
+            Value::Float(_) => "float",
+            Value::Str(_) => "str",
+            Value::List(_) => "list",
+            Value::Tuple(_) => "tuple",
+            Value::Dict(_) => "dict",
+            Value::Tensor(_) => "Tensor",
+            Value::Func(_) => "function",
+            Value::Builtin(_) => "builtin_function_or_method",
+            Value::BoundMethod(_) => "method",
+            Value::Range(..) => "range",
+            Value::Slice(_) => "slice",
+            Value::Iter(_) => "iterator",
+            Value::CompiledGraph(_) => "compiled_graph",
+            Value::Cell(_) => "cell",
+            Value::Code(_) => "code",
+        }
+    }
+
+    /// Python truthiness.
+    pub fn truthy(&self) -> Result<bool, String> {
+        Ok(match self {
+            Value::None => false,
+            Value::Bool(b) => *b,
+            Value::Int(i) => *i != 0,
+            Value::Float(f) => *f != 0.0,
+            Value::Str(s) => !s.is_empty(),
+            Value::List(l) => !l.borrow().is_empty(),
+            Value::Tuple(t) => !t.is_empty(),
+            Value::Dict(d) => !d.borrow().is_empty(),
+            Value::Range(a, b, s) => {
+                if *s > 0 {
+                    a < b
+                } else {
+                    a > b
+                }
+            }
+            Value::Tensor(t) => {
+                if t.numel() != 1 {
+                    return Err("Boolean value of Tensor with more than one element is ambiguous".into());
+                }
+                t.item() != 0.0
+            }
+            _ => true,
+        })
+    }
+
+    pub fn as_int(&self) -> Result<i64, String> {
+        match self {
+            Value::Int(i) => Ok(*i),
+            Value::Bool(b) => Ok(*b as i64),
+            Value::Float(f) => Ok(*f as i64),
+            Value::Tensor(t) if t.numel() == 1 => Ok(t.item() as i64),
+            other => Err(format!("expected int, got {}", other.type_name())),
+        }
+    }
+
+    pub fn as_float(&self) -> Result<f64, String> {
+        match self {
+            Value::Int(i) => Ok(*i as f64),
+            Value::Float(f) => Ok(*f),
+            Value::Bool(b) => Ok(*b as i64 as f64),
+            Value::Tensor(t) if t.numel() == 1 => Ok(t.item() as f64),
+            other => Err(format!("expected float, got {}", other.type_name())),
+        }
+    }
+
+    pub fn as_tensor(&self) -> Result<Rc<Tensor>, String> {
+        match self {
+            Value::Tensor(t) => Ok(Rc::clone(t)),
+            other => Err(format!("expected Tensor, got {}", other.type_name())),
+        }
+    }
+
+    pub fn is_none(&self) -> bool {
+        matches!(self, Value::None)
+    }
+
+    /// Structural equality (Python `==` semantics for the supported types).
+    pub fn eq_value(&self, other: &Value) -> bool {
+        match (self, other) {
+            (Value::None, Value::None) => true,
+            (Value::Bool(a), Value::Bool(b)) => a == b,
+            (Value::Int(a), Value::Int(b)) => a == b,
+            (Value::Float(a), Value::Float(b)) => a == b,
+            (Value::Int(a), Value::Float(b)) | (Value::Float(b), Value::Int(a)) => *a as f64 == *b,
+            (Value::Bool(a), Value::Int(b)) | (Value::Int(b), Value::Bool(a)) => (*a as i64) == *b,
+            (Value::Str(a), Value::Str(b)) => a == b,
+            (Value::List(a), Value::List(b)) => {
+                let (a, b) = (a.borrow(), b.borrow());
+                a.len() == b.len() && a.iter().zip(b.iter()).all(|(x, y)| x.eq_value(y))
+            }
+            (Value::Tuple(a), Value::Tuple(b)) => a.len() == b.len() && a.iter().zip(b.iter()).all(|(x, y)| x.eq_value(y)),
+            (Value::Dict(a), Value::Dict(b)) => {
+                let (a, b) = (a.borrow(), b.borrow());
+                a.len() == b.len() && a.iter().zip(b.iter()).all(|((ka, va), (kb, vb))| ka == kb && va.eq_value(vb))
+            }
+            (Value::Tensor(a), Value::Tensor(b)) => a.shape() == b.shape() && a.data() == b.data(),
+            (Value::Range(a1, b1, c1), Value::Range(a2, b2, c2)) => a1 == a2 && b1 == b2 && c1 == c2,
+            _ => false,
+        }
+    }
+
+    /// Python `<` comparison for orderable types.
+    pub fn cmp_value(&self, other: &Value) -> Result<Ordering, String> {
+        match (self, other) {
+            (Value::Int(a), Value::Int(b)) => Ok(a.cmp(b)),
+            (Value::Float(a), Value::Float(b)) => a.partial_cmp(b).ok_or_else(|| "nan comparison".into()),
+            (Value::Int(a), Value::Float(b)) => (*a as f64).partial_cmp(b).ok_or_else(|| "nan comparison".into()),
+            (Value::Float(a), Value::Int(b)) => a.partial_cmp(&(*b as f64)).ok_or_else(|| "nan comparison".into()),
+            (Value::Bool(a), Value::Bool(b)) => Ok(a.cmp(b)),
+            (Value::Bool(a), Value::Int(b)) => Ok((*a as i64).cmp(b)),
+            (Value::Int(a), Value::Bool(b)) => Ok(a.cmp(&(*b as i64))),
+            (Value::Str(a), Value::Str(b)) => Ok(a.cmp(b)),
+            (Value::List(a), Value::List(b)) => {
+                let (a, b) = (a.borrow(), b.borrow());
+                for (x, y) in a.iter().zip(b.iter()) {
+                    match x.cmp_value(y)? {
+                        Ordering::Equal => continue,
+                        o => return Ok(o),
+                    }
+                }
+                Ok(a.len().cmp(&b.len()))
+            }
+            (Value::Tuple(a), Value::Tuple(b)) => {
+                for (x, y) in a.iter().zip(b.iter()) {
+                    match x.cmp_value(y)? {
+                        Ordering::Equal => continue,
+                        o => return Ok(o),
+                    }
+                }
+                Ok(a.len().cmp(&b.len()))
+            }
+            _ => Err(format!("'<' not supported between {} and {}", self.type_name(), other.type_name())),
+        }
+    }
+
+    /// Identity (`is`): reference identity for heap types, value identity
+    /// for immediates (mirrors small-int caching closely enough for tests).
+    pub fn is_identical(&self, other: &Value) -> bool {
+        match (self, other) {
+            (Value::None, Value::None) => true,
+            (Value::Bool(a), Value::Bool(b)) => a == b,
+            (Value::Int(a), Value::Int(b)) => a == b,
+            (Value::Str(a), Value::Str(b)) => Rc::ptr_eq(a, b),
+            (Value::List(a), Value::List(b)) => Rc::ptr_eq(a, b),
+            (Value::Tuple(a), Value::Tuple(b)) => Rc::ptr_eq(a, b),
+            (Value::Dict(a), Value::Dict(b)) => Rc::ptr_eq(a, b),
+            (Value::Tensor(a), Value::Tensor(b)) => Rc::ptr_eq(a, b),
+            (Value::Func(a), Value::Func(b)) => Rc::ptr_eq(a, b),
+            (Value::Builtin(a), Value::Builtin(b)) => Rc::ptr_eq(a, b),
+            _ => false,
+        }
+    }
+
+    /// Python `repr`.
+    pub fn repr(&self) -> String {
+        match self {
+            Value::None => "None".into(),
+            Value::Bool(b) => if *b { "True".into() } else { "False".into() },
+            Value::Int(i) => i.to_string(),
+            Value::Float(f) => {
+                if f.fract() == 0.0 && f.abs() < 1e16 {
+                    format!("{:.1}", f)
+                } else {
+                    format!("{}", f)
+                }
+            }
+            Value::Str(s) => format!("'{}'", s),
+            Value::List(l) => {
+                let items: Vec<String> = l.borrow().iter().map(|v| v.repr()).collect();
+                format!("[{}]", items.join(", "))
+            }
+            Value::Tuple(t) => {
+                let items: Vec<String> = t.iter().map(|v| v.repr()).collect();
+                if t.len() == 1 {
+                    format!("({},)", items[0])
+                } else {
+                    format!("({})", items.join(", "))
+                }
+            }
+            Value::Dict(d) => {
+                let items: Vec<String> = d.borrow().iter().map(|(k, v)| format!("{}: {}", k.to_value().repr(), v.repr())).collect();
+                format!("{{{}}}", items.join(", "))
+            }
+            Value::Tensor(t) => format!("{}", t),
+            Value::Func(f) => format!("<function {}>", f.name),
+            Value::Builtin(b) => format!("<builtin {}>", b.name),
+            Value::BoundMethod(m) => format!("<bound method {}>", m.1),
+            Value::Range(a, b, s) => {
+                if *s == 1 {
+                    format!("range({}, {})", a, b)
+                } else {
+                    format!("range({}, {}, {})", a, b, s)
+                }
+            }
+            Value::Slice(s) => format!("slice({}, {}, {})", s.0.repr(), s.1.repr(), s.2.repr()),
+            Value::Iter(_) => "<iterator>".into(),
+            Value::CompiledGraph(g) => format!("<compiled graph {}>", g.name),
+            Value::Cell(_) => "<cell>".into(),
+            Value::Code(c) => format!("<code {}>", c.name),
+        }
+    }
+
+    /// Python `str` (repr except for strings).
+    pub fn to_display(&self) -> String {
+        match self {
+            Value::Str(s) => s.to_string(),
+            other => other.repr(),
+        }
+    }
+}
+
+impl fmt::Debug for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.repr())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn truthiness() {
+        assert!(!Value::None.truthy().unwrap());
+        assert!(Value::Int(3).truthy().unwrap());
+        assert!(!Value::Int(0).truthy().unwrap());
+        assert!(!Value::str("").truthy().unwrap());
+        assert!(Value::str("x").truthy().unwrap());
+        assert!(!Value::list(vec![]).truthy().unwrap());
+        assert!(Value::tuple(vec![Value::None]).truthy().unwrap());
+    }
+
+    #[test]
+    fn tensor_truthiness_ambiguous() {
+        let t = Value::tensor(Tensor::zeros(&[2]));
+        assert!(t.truthy().is_err());
+        let s = Value::tensor(Tensor::scalar(1.0));
+        assert!(s.truthy().unwrap());
+    }
+
+    #[test]
+    fn equality_mixed_numeric() {
+        assert!(Value::Int(1).eq_value(&Value::Float(1.0)));
+        assert!(Value::Bool(true).eq_value(&Value::Int(1)));
+        assert!(!Value::Int(1).eq_value(&Value::str("1")));
+    }
+
+    #[test]
+    fn ordering() {
+        assert_eq!(Value::Int(1).cmp_value(&Value::Float(2.0)).unwrap(), Ordering::Less);
+        assert_eq!(Value::str("b").cmp_value(&Value::str("a")).unwrap(), Ordering::Greater);
+        assert!(Value::Int(1).cmp_value(&Value::str("a")).is_err());
+        let a = Value::list(vec![Value::Int(1), Value::Int(2)]);
+        let b = Value::list(vec![Value::Int(1), Value::Int(3)]);
+        assert_eq!(a.cmp_value(&b).unwrap(), Ordering::Less);
+    }
+
+    #[test]
+    fn reprs() {
+        assert_eq!(Value::Float(2.0).repr(), "2.0");
+        assert_eq!(Value::tuple(vec![Value::Int(1)]).repr(), "(1,)");
+        assert_eq!(Value::list(vec![Value::str("a")]).repr(), "['a']");
+        assert_eq!(Value::Bool(true).repr(), "True");
+    }
+
+    #[test]
+    fn dict_keys() {
+        assert!(DictKey::from_value(&Value::Int(3)).is_ok());
+        assert!(DictKey::from_value(&Value::list(vec![])).is_err());
+        let k = DictKey::from_value(&Value::str("k")).unwrap();
+        assert!(k.to_value().eq_value(&Value::str("k")));
+    }
+
+    #[test]
+    fn identity_vs_equality() {
+        let l1 = Value::list(vec![Value::Int(1)]);
+        let l2 = Value::list(vec![Value::Int(1)]);
+        assert!(l1.eq_value(&l2));
+        assert!(!l1.is_identical(&l2));
+        assert!(l1.is_identical(&l1.clone()));
+    }
+}

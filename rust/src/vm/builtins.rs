@@ -1,0 +1,413 @@
+//! Global builtins (`print`, `range`, `len`, ...) and the `torch` module —
+//! the eager tensor API that dynamo intercepts.
+
+use std::rc::Rc;
+
+use super::Vm;
+use crate::tensor::{self, Rng, Tensor};
+use crate::value::{DictKey, Value};
+
+fn nested_list_to_tensor(v: &Value) -> Result<(Vec<usize>, Vec<f32>), String> {
+    match v {
+        Value::List(l) => {
+            let items = l.borrow();
+            if items.is_empty() {
+                return Ok((vec![0], vec![]));
+            }
+            // Leaf level?
+            let is_leaf = !matches!(items[0], Value::List(_));
+            if is_leaf {
+                let data: Result<Vec<f32>, String> = items.iter().map(|x| Ok(x.as_float()? as f32)).collect();
+                let data = data?;
+                Ok((vec![data.len()], data))
+            } else {
+                let mut shape: Option<Vec<usize>> = None;
+                let mut data = Vec::new();
+                for item in items.iter() {
+                    let (s, d) = nested_list_to_tensor(item)?;
+                    match &shape {
+                        None => shape = Some(s),
+                        Some(prev) => {
+                            if *prev != s {
+                                return Err("ragged nested list".into());
+                            }
+                        }
+                    }
+                    data.extend(d);
+                }
+                let mut full = vec![items.len()];
+                full.extend(shape.unwrap());
+                Ok((full, data))
+            }
+        }
+        Value::Int(i) => Ok((vec![], vec![*i as f32])),
+        Value::Float(f) => Ok((vec![], vec![*f as f32])),
+        other => Err(format!("cannot build tensor from {}", other.type_name())),
+    }
+}
+
+fn shape_arg(v: &Value) -> Result<Vec<usize>, String> {
+    match v {
+        Value::List(l) => l.borrow().iter().map(|x| Ok(x.as_int()? as usize)).collect(),
+        Value::Tuple(t) => t.iter().map(|x| Ok(x.as_int()? as usize)).collect(),
+        Value::Int(i) => Ok(vec![*i as usize]),
+        other => Err(format!("expected shape list, got {}", other.type_name())),
+    }
+}
+
+fn values_as_iterable(v: &Value) -> Result<Vec<Value>, String> {
+    match super::interp::make_iter(v)? {
+        Value::Iter(it) => Ok(it.borrow().items.clone()),
+        _ => unreachable!(),
+    }
+}
+
+/// Install all builtins + the `torch` module into the VM globals.
+pub fn install(vm: &Vm) {
+    let g = &vm.globals;
+    let mut globals = g.borrow_mut();
+
+    // print — captures to vm.output (tests compare output), echoes if asked.
+    {
+        let out = Rc::clone(&vm.output);
+        let echo = vm.echo;
+        globals.insert(
+            "print".into(),
+            Value::builtin("print", move |args| {
+                let line = args.iter().map(|a| a.to_display()).collect::<Vec<_>>().join(" ");
+                out.borrow_mut().push_str(&line);
+                out.borrow_mut().push('\n');
+                if echo {
+                    println!("{}", line);
+                }
+                Ok(Value::None)
+            }),
+        );
+    }
+
+    globals.insert(
+        "range".into(),
+        Value::builtin("range", |args| match args {
+            [stop] => Ok(Value::Range(0, stop.as_int()?, 1)),
+            [start, stop] => Ok(Value::Range(start.as_int()?, stop.as_int()?, 1)),
+            [start, stop, step] => {
+                let s = step.as_int()?;
+                if s == 0 {
+                    return Err("range() arg 3 must not be zero".into());
+                }
+                Ok(Value::Range(start.as_int()?, stop.as_int()?, s))
+            }
+            _ => Err(format!("range expected 1..3 arguments, got {}", args.len())),
+        }),
+    );
+
+    globals.insert(
+        "len".into(),
+        Value::builtin("len", |args| match args {
+            [Value::List(l)] => Ok(Value::Int(l.borrow().len() as i64)),
+            [Value::Tuple(t)] => Ok(Value::Int(t.len() as i64)),
+            [Value::Str(s)] => Ok(Value::Int(s.chars().count() as i64)),
+            [Value::Dict(d)] => Ok(Value::Int(d.borrow().len() as i64)),
+            [Value::Range(a, b, s)] => {
+                let n = if *s > 0 { (b - a + s - 1) / s } else { (a - b - s - 1) / (-s) };
+                Ok(Value::Int(n.max(0)))
+            }
+            [Value::Tensor(t)] => Ok(Value::Int(*t.shape().first().unwrap_or(&0) as i64)),
+            [other] => Err(format!("object of type '{}' has no len()", other.type_name())),
+            _ => Err("len() takes exactly one argument".into()),
+        }),
+    );
+
+    globals.insert(
+        "abs".into(),
+        Value::builtin("abs", |args| match args {
+            [Value::Int(i)] => Ok(Value::Int(i.abs())),
+            [Value::Float(f)] => Ok(Value::Float(f.abs())),
+            [Value::Tensor(t)] => Ok(Value::tensor(tensor::abs(t))),
+            [other] => Err(format!("bad operand for abs(): {}", other.type_name())),
+            _ => Err("abs() takes exactly one argument".into()),
+        }),
+    );
+
+    globals.insert(
+        "sum".into(),
+        Value::builtin("sum", |args| match args {
+            [v] => {
+                let items = values_as_iterable(v)?;
+                let mut acc = Value::Int(0);
+                for it in items {
+                    acc = super::interp::binary_op_values(crate::bytecode::BinOp::Add, &acc, &it)?;
+                }
+                Ok(acc)
+            }
+            _ => Err("sum() takes one argument".into()),
+        }),
+    );
+
+    globals.insert(
+        "min".into(),
+        Value::builtin("min", |args| {
+            let items = if args.len() == 1 { values_as_iterable(&args[0])? } else { args.to_vec() };
+            let mut best: Option<Value> = None;
+            for it in items {
+                best = Some(match best {
+                    None => it,
+                    Some(b) => {
+                        if it.cmp_value(&b)? == std::cmp::Ordering::Less {
+                            it
+                        } else {
+                            b
+                        }
+                    }
+                });
+            }
+            best.ok_or_else(|| "min() arg is an empty sequence".into())
+        }),
+    );
+
+    globals.insert(
+        "max".into(),
+        Value::builtin("max", |args| {
+            let items = if args.len() == 1 { values_as_iterable(&args[0])? } else { args.to_vec() };
+            let mut best: Option<Value> = None;
+            for it in items {
+                best = Some(match best {
+                    None => it,
+                    Some(b) => {
+                        if it.cmp_value(&b)? == std::cmp::Ordering::Greater {
+                            it
+                        } else {
+                            b
+                        }
+                    }
+                });
+            }
+            best.ok_or_else(|| "max() arg is an empty sequence".into())
+        }),
+    );
+
+    globals.insert(
+        "int".into(),
+        Value::builtin("int", |args| match args {
+            [v] => Ok(Value::Int(v.as_int()?)),
+            _ => Err("int() takes one argument".into()),
+        }),
+    );
+
+    globals.insert(
+        "float".into(),
+        Value::builtin("float", |args| match args {
+            [v] => Ok(Value::Float(v.as_float()?)),
+            _ => Err("float() takes one argument".into()),
+        }),
+    );
+
+    globals.insert(
+        "bool".into(),
+        Value::builtin("bool", |args| match args {
+            [v] => Ok(Value::Bool(v.truthy()?)),
+            _ => Err("bool() takes one argument".into()),
+        }),
+    );
+
+    globals.insert(
+        "str".into(),
+        Value::builtin("str", |args| match args {
+            [v] => Ok(Value::str(&v.to_display())),
+            _ => Err("str() takes one argument".into()),
+        }),
+    );
+
+    globals.insert(
+        "list".into(),
+        Value::builtin("list", |args| match args {
+            [] => Ok(Value::list(vec![])),
+            [v] => Ok(Value::list(values_as_iterable(v)?)),
+            _ => Err("list() takes at most one argument".into()),
+        }),
+    );
+
+    globals.insert(
+        "tuple".into(),
+        Value::builtin("tuple", |args| match args {
+            [] => Ok(Value::tuple(vec![])),
+            [v] => Ok(Value::tuple(values_as_iterable(v)?)),
+            _ => Err("tuple() takes at most one argument".into()),
+        }),
+    );
+
+    globals.insert(
+        "iter".into(),
+        Value::builtin("iter", |args| match args {
+            [v] => super::interp::make_iter(v),
+            _ => Err("iter() takes one argument".into()),
+        }),
+    );
+
+    globals.insert(
+        "sorted".into(),
+        Value::builtin("sorted", |args| match args {
+            [v] => {
+                let mut items = values_as_iterable(v)?;
+                let mut err = None;
+                items.sort_by(|a, b| match a.cmp_value(b) {
+                    Ok(o) => o,
+                    Err(e) => {
+                        err = Some(e);
+                        std::cmp::Ordering::Equal
+                    }
+                });
+                match err {
+                    Some(e) => Err(e),
+                    None => Ok(Value::list(items)),
+                }
+            }
+            _ => Err("sorted() takes one argument".into()),
+        }),
+    );
+
+    globals.insert(
+        "enumerate".into(),
+        Value::builtin("enumerate", |args| match args {
+            [v] => {
+                let items = values_as_iterable(v)?;
+                Ok(Value::list(
+                    items.into_iter().enumerate().map(|(i, x)| Value::tuple(vec![Value::Int(i as i64), x])).collect(),
+                ))
+            }
+            _ => Err("enumerate() takes one argument".into()),
+        }),
+    );
+
+    globals.insert(
+        "zip".into(),
+        Value::builtin("zip", |args| {
+            let lists: Result<Vec<Vec<Value>>, String> = args.iter().map(values_as_iterable).collect();
+            let lists = lists?;
+            let n = lists.iter().map(|l| l.len()).min().unwrap_or(0);
+            Ok(Value::list(
+                (0..n).map(|i| Value::tuple(lists.iter().map(|l| l[i].clone()).collect())).collect(),
+            ))
+        }),
+    );
+
+    // ---- torch module ----
+    let torch = Value::dict();
+    if let Value::Dict(td) = &torch {
+        let mut t = td.borrow_mut();
+        let rng = &vm.rng;
+
+        t.insert(DictKey::Str("tensor".into()), Value::builtin("tensor", |args| match args {
+            [v] => {
+                let (shape, data) = nested_list_to_tensor(v)?;
+                Ok(Value::tensor(Tensor::new(shape, data)))
+            }
+            _ => Err("torch.tensor() takes one argument".into()),
+        }));
+
+        t.insert(DictKey::Str("zeros".into()), Value::builtin("zeros", |args| match args {
+            [s] => Ok(Value::tensor(Tensor::zeros(&shape_arg(s)?))),
+            _ => Err("torch.zeros(shape)".into()),
+        }));
+
+        t.insert(DictKey::Str("ones".into()), Value::builtin("ones", |args| match args {
+            [s] => Ok(Value::tensor(Tensor::ones(&shape_arg(s)?))),
+            _ => Err("torch.ones(shape)".into()),
+        }));
+
+        t.insert(DictKey::Str("arange".into()), Value::builtin("arange", |args| match args {
+            [n] => Ok(Value::tensor(Tensor::arange(n.as_int()? as usize))),
+            _ => Err("torch.arange(n)".into()),
+        }));
+
+        {
+            let rng = Rc::clone(rng);
+            t.insert(DictKey::Str("randn".into()), Value::builtin("randn", move |args| match args {
+                [s] => Ok(Value::tensor(Tensor::randn(&shape_arg(s)?, &mut rng.borrow_mut()))),
+                _ => Err("torch.randn(shape)".into()),
+            }));
+        }
+        {
+            let rng = Rc::clone(rng);
+            t.insert(DictKey::Str("rand".into()), Value::builtin("rand", move |args| match args {
+                [s] => Ok(Value::tensor(Tensor::rand(&shape_arg(s)?, &mut rng.borrow_mut()))),
+                _ => Err("torch.rand(shape)".into()),
+            }));
+        }
+        {
+            let rng = Rc::clone(rng);
+            t.insert(DictKey::Str("randint".into()), Value::builtin("randint", move |args| match args {
+                [hi, s] => {
+                    let hi = hi.as_int()?.max(1) as u64;
+                    let shape = shape_arg(s)?;
+                    let n: usize = shape.iter().product();
+                    let mut r = rng.borrow_mut();
+                    let data: Vec<f32> = (0..n).map(|_| (r.next_u64() % hi) as f32).collect();
+                    Ok(Value::tensor(Tensor::new(shape, data)))
+                }
+                _ => Err("torch.randint(high, shape)".into()),
+            }));
+        }
+        {
+            let rng = Rc::clone(rng);
+            t.insert(DictKey::Str("manual_seed".into()), Value::builtin("manual_seed", move |args| match args {
+                [s] => {
+                    *rng.borrow_mut() = Rng::new(s.as_int()? as u64);
+                    Ok(Value::None)
+                }
+                _ => Err("torch.manual_seed(n)".into()),
+            }));
+        }
+
+        t.insert(DictKey::Str("matmul".into()), Value::builtin("matmul", |args| match args {
+            [a, b] => Ok(Value::tensor(tensor::matmul(&*a.as_tensor()?, &*b.as_tensor()?)?)),
+            _ => Err("torch.matmul(a, b)".into()),
+        }));
+
+        t.insert(DictKey::Str("maximum".into()), Value::builtin("maximum", |args| match args {
+            [a, b] => Ok(Value::tensor(tensor::maximum(&*a.as_tensor()?, &*b.as_tensor()?)?)),
+            _ => Err("torch.maximum(a, b)".into()),
+        }));
+
+        t.insert(DictKey::Str("minimum".into()), Value::builtin("minimum", |args| match args {
+            [a, b] => Ok(Value::tensor(tensor::minimum(&*a.as_tensor()?, &*b.as_tensor()?)?)),
+            _ => Err("torch.minimum(a, b)".into()),
+        }));
+
+        t.insert(DictKey::Str("softmax".into()), Value::builtin("softmax", |args| match args {
+            [x] => Ok(Value::tensor(tensor::softmax(&*x.as_tensor()?)?)),
+            _ => Err("torch.softmax(x)".into()),
+        }));
+
+        t.insert(DictKey::Str("relu".into()), Value::builtin("relu", |args| match args {
+            [x] => Ok(Value::tensor(tensor::relu(&*x.as_tensor()?))),
+            _ => Err("torch.relu(x)".into()),
+        }));
+
+        t.insert(DictKey::Str("gelu".into()), Value::builtin("gelu", |args| match args {
+            [x] => Ok(Value::tensor(tensor::gelu(&*x.as_tensor()?))),
+            _ => Err("torch.gelu(x)".into()),
+        }));
+
+        t.insert(DictKey::Str("tanh".into()), Value::builtin("tanh", |args| match args {
+            [x] => Ok(Value::tensor(tensor::tanh(&*x.as_tensor()?))),
+            _ => Err("torch.tanh(x)".into()),
+        }));
+
+        t.insert(DictKey::Str("layernorm".into()), Value::builtin("layernorm", |args| match args {
+            [x, g, b] => Ok(Value::tensor(tensor::layernorm(&*x.as_tensor()?, &*g.as_tensor()?, &*b.as_tensor()?, 1e-5)?)),
+            _ => Err("torch.layernorm(x, gamma, beta)".into()),
+        }));
+
+        t.insert(DictKey::Str("embedding".into()), Value::builtin("embedding", |args| match args {
+            [table, ids] => Ok(Value::tensor(tensor::embedding(&*table.as_tensor()?, &*ids.as_tensor()?)?)),
+            _ => Err("torch.embedding(table, ids)".into()),
+        }));
+
+        t.insert(DictKey::Str("cross_entropy".into()), Value::builtin("cross_entropy", |args| match args {
+            [logits, targets] => Ok(Value::tensor(tensor::cross_entropy(&*logits.as_tensor()?, &*targets.as_tensor()?)?)),
+            _ => Err("torch.cross_entropy(logits, targets)".into()),
+        }));
+    }
+    globals.insert("torch".into(), torch);
+}

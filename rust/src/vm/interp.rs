@@ -1,0 +1,723 @@
+//! The bytecode dispatch loop.
+
+use std::cell::RefCell;
+use std::cmp::Ordering;
+use std::rc::Rc;
+
+use super::methods::{apply_subscript, call_method_on, get_attr, store_subscript};
+use super::{Vm, VmError};
+use crate::bytecode::{BinOp, CodeObject, Const, Instr, UnOp};
+use crate::tensor::{self, Tensor};
+use crate::value::{Function, Value, ValueIter};
+
+/// Convert a compile-time constant to a runtime value.
+pub fn const_to_value(c: &Const) -> Value {
+    match c {
+        Const::None => Value::None,
+        Const::Bool(b) => Value::Bool(*b),
+        Const::Int(i) => Value::Int(*i),
+        Const::Float(f) => Value::Float(*f),
+        Const::Str(s) => Value::str(s),
+        Const::Code(code) => Value::Code(Rc::clone(code)),
+    }
+}
+
+/// Call any callable value.
+pub fn call_value(vm: &Vm, callee: &Value, args: &[Value]) -> Result<Value, VmError> {
+    match callee {
+        Value::Func(f) => {
+            // Frame-evaluation hook (PEP 523 analogue): dynamo may swap in
+            // transformed bytecode. The hook sees every frame — including
+            // dynamo's own resume functions, which are recursively analyzed
+            // (the hook maintains its own skip set for transformed output).
+            let mut code = Rc::clone(&f.code);
+            if let Some(hook) = vm.eval_hook.clone() {
+                if let Some(replacement) = hook.eval_frame(f, args, &vm.globals) {
+                    code = replacement;
+                }
+            }
+            run_function(vm, &code, f, args)
+        }
+        Value::Builtin(b) => (b.func)(args).map_err(VmError::new),
+        Value::BoundMethod(m) => call_method_on(vm, &m.0, &m.1, args).map_err(VmError::new),
+        Value::CompiledGraph(g) => {
+            let tensors: Result<Vec<Rc<Tensor>>, String> = args.iter().map(|a| a.as_tensor()).collect();
+            let outs = g.call(&tensors.map_err(VmError::new)?).map_err(VmError::new)?;
+            Ok(Value::tuple(outs.into_iter().map(Value::tensor).collect()))
+        }
+        other => Err(VmError::new(format!("'{}' object is not callable", other.type_name()))),
+    }
+}
+
+/// Bind arguments (with defaults) and run a function body.
+fn run_function(vm: &Vm, code: &Rc<CodeObject>, f: &Rc<Function>, args: &[Value]) -> Result<Value, VmError> {
+    let argc = code.argcount;
+    if args.len() > argc || args.len() + f.defaults.len() < argc {
+        return Err(VmError::new(format!(
+            "{}() takes {} arguments but {} were given",
+            f.name,
+            argc,
+            args.len()
+        )));
+    }
+    let mut bound: Vec<Value> = args.to_vec();
+    let missing = argc - args.len();
+    let dstart = f.defaults.len() - missing;
+    bound.extend(f.defaults[dstart..].iter().cloned());
+    run_code(vm, code, &bound, &f.closure, Some(&f.name))
+}
+
+/// Execute a code object with pre-bound arguments.
+pub fn run_code(
+    vm: &Vm,
+    code: &Rc<CodeObject>,
+    args: &[Value],
+    closure: &[Rc<RefCell<Value>>],
+    func_name: Option<&str>,
+) -> Result<Value, VmError> {
+    let depth = vm.depth.get();
+    if depth >= vm.max_depth {
+        return Err(VmError::new("maximum recursion depth exceeded"));
+    }
+    vm.depth.set(depth + 1);
+    let result = run_frame(vm, code, args, closure, func_name);
+    vm.depth.set(depth);
+    result.map_err(|mut e| {
+        let line = e.traceback.last().map(|_| 0).unwrap_or(0);
+        let _ = line;
+        e.traceback.push((func_name.unwrap_or(&code.name).to_string(), 0));
+        e
+    })
+}
+
+fn run_frame(
+    vm: &Vm,
+    code: &Rc<CodeObject>,
+    args: &[Value],
+    closure: &[Rc<RefCell<Value>>],
+    func_name: Option<&str>,
+) -> Result<Value, VmError> {
+    let name = func_name.unwrap_or(&code.name);
+    // Locals.
+    let mut locals: Vec<Option<Value>> = vec![None; code.varnames.len().max(code.argcount)];
+    for (i, a) in args.iter().enumerate() {
+        locals[i] = Some(a.clone());
+    }
+    // Cells: cellvars get fresh cells (seeded from params of the same name),
+    // freevars come from the closure.
+    let mut cells: Vec<Rc<RefCell<Value>>> = Vec::with_capacity(code.cellvars.len() + code.freevars.len());
+    for cv in &code.cellvars {
+        let init = code.varnames.iter().position(|v| v == cv).and_then(|i| locals.get(i).cloned().flatten());
+        cells.push(Rc::new(RefCell::new(init.unwrap_or(Value::None))));
+    }
+    if closure.len() != code.freevars.len() {
+        return Err(VmError::new(format!(
+            "{}: closure length {} != freevars {}",
+            name,
+            closure.len(),
+            code.freevars.len()
+        )));
+    }
+    cells.extend(closure.iter().cloned());
+
+    let mut stack: Vec<Value> = Vec::with_capacity(16);
+    let mut ip: usize = 0;
+    let mut last_line: u32 = 0;
+
+    let fail = |msg: String, ip: usize| -> VmError {
+        VmError { message: msg, traceback: vec![(name.to_string(), code.line_of(ip))] }
+    };
+
+    macro_rules! pop {
+        () => {
+            stack.pop().ok_or_else(|| fail("stack underflow".into(), ip))?
+        };
+    }
+
+    loop {
+        let budget = vm.instr_budget.get();
+        if budget == 0 {
+            return Err(fail("instruction budget exceeded".into(), ip));
+        }
+        vm.instr_budget.set(budget - 1);
+
+        let Some(instr) = code.instrs.get(ip) else {
+            return Err(fail(format!("instruction pointer {} out of range", ip), ip));
+        };
+
+        // Line tracing for the debugger.
+        if let (Some(tracer), Some(src)) = (&vm.tracer, &code.source) {
+            let line = code.line_of(ip);
+            if line != 0 && line != last_line {
+                last_line = line;
+                let locs: Vec<(String, Value)> = code
+                    .varnames
+                    .iter()
+                    .enumerate()
+                    .filter_map(|(i, n)| locals.get(i).cloned().flatten().map(|v| (n.clone(), v)))
+                    .collect();
+                tracer.on_line(&src.file, line, name, &locs);
+            }
+        }
+
+        let cur = ip;
+        ip += 1;
+        match instr {
+            Instr::Nop => {}
+            Instr::LoadConst(c) => {
+                let k = code.consts.get(*c as usize).ok_or_else(|| fail(format!("bad const {}", c), cur))?;
+                stack.push(const_to_value(k));
+            }
+            Instr::LoadFast(i) => {
+                let v = locals
+                    .get(*i as usize)
+                    .cloned()
+                    .flatten()
+                    .ok_or_else(|| fail(format!("local variable '{}' referenced before assignment", code.varnames.get(*i as usize).cloned().unwrap_or_default()), cur))?;
+                stack.push(v);
+            }
+            Instr::StoreFast(i) => {
+                let v = pop!();
+                let idx = *i as usize;
+                if idx >= locals.len() {
+                    locals.resize(idx + 1, None);
+                }
+                locals[idx] = Some(v);
+            }
+            Instr::LoadGlobal(n) => {
+                let gname = code.names.get(*n as usize).ok_or_else(|| fail(format!("bad name {}", n), cur))?;
+                let v = vm
+                    .globals
+                    .borrow()
+                    .get(gname)
+                    .cloned()
+                    .ok_or_else(|| fail(format!("name '{}' is not defined", gname), cur))?;
+                stack.push(v);
+            }
+            Instr::StoreGlobal(n) => {
+                let gname = code.names[*n as usize].clone();
+                let v = pop!();
+                vm.globals.borrow_mut().insert(gname, v);
+            }
+            Instr::LoadDeref(i) => {
+                let cell = cells.get(*i as usize).ok_or_else(|| fail(format!("bad deref {}", i), cur))?;
+                let v = cell.borrow().clone();
+                if v.is_none() && code.cell_and_free_name(*i as usize) != "None" {
+                    // Allow None values; only truly-unset cells would be an
+                    // error, but we initialize with None, so pass through.
+                }
+                stack.push(v);
+            }
+            Instr::StoreDeref(i) => {
+                let v = pop!();
+                let cell = cells.get(*i as usize).ok_or_else(|| fail(format!("bad deref {}", i), cur))?;
+                *cell.borrow_mut() = v;
+            }
+            Instr::LoadClosure(i) => {
+                let cell = cells.get(*i as usize).ok_or_else(|| fail(format!("bad closure {}", i), cur))?;
+                stack.push(Value::Cell(Rc::clone(cell)));
+            }
+            Instr::LoadAttr(n) => {
+                let obj = pop!();
+                let aname = &code.names[*n as usize];
+                stack.push(get_attr(&obj, aname).map_err(|m| fail(m, cur))?);
+            }
+            Instr::LoadMethod(n) => {
+                let obj = pop!();
+                let mname = &code.names[*n as usize];
+                // Dict "modules" (torch) expose functions as items.
+                if let Value::Dict(d) = &obj {
+                    if let Some(f) = d.borrow().get(&crate::value::DictKey::Str(mname.to_string())) {
+                        stack.push(f.clone());
+                        continue;
+                    }
+                }
+                stack.push(Value::BoundMethod(Rc::new((obj, mname.to_string()))));
+            }
+            Instr::BinarySubscr => {
+                let idx = pop!();
+                let obj = pop!();
+                stack.push(apply_subscript(&obj, &idx).map_err(|m| fail(m, cur))?);
+            }
+            Instr::StoreSubscr => {
+                let idx = pop!();
+                let obj = pop!();
+                let val = pop!();
+                store_subscript(&obj, &idx, val).map_err(|m| fail(m, cur))?;
+            }
+            Instr::BuildSlice(n) => {
+                let step = if *n == 3 { pop!() } else { Value::None };
+                let stop = pop!();
+                let start = pop!();
+                stack.push(Value::Slice(Rc::new((start, stop, step))));
+            }
+            Instr::PopTop => {
+                pop!();
+            }
+            Instr::DupTop => {
+                let v = stack.last().ok_or_else(|| fail("stack underflow".into(), cur))?.clone();
+                stack.push(v);
+            }
+            Instr::RotTwo => {
+                let len = stack.len();
+                if len < 2 {
+                    return Err(fail("stack underflow".into(), cur));
+                }
+                stack.swap(len - 1, len - 2);
+            }
+            Instr::RotThree => {
+                // [a, b, c] -> [c, a, b]
+                let c = pop!();
+                let b = pop!();
+                let a = pop!();
+                stack.push(c);
+                stack.push(a);
+                stack.push(b);
+            }
+            Instr::Binary(op) => {
+                let b = pop!();
+                let a = pop!();
+                stack.push(binary_op_values(*op, &a, &b).map_err(|m| fail(m, cur))?);
+            }
+            Instr::Unary(op) => {
+                let a = pop!();
+                let v = match op {
+                    UnOp::Not => Value::Bool(!a.truthy().map_err(|m| fail(m, cur))?),
+                    UnOp::Neg => match &a {
+                        Value::Int(i) => Value::Int(-i),
+                        Value::Float(f) => Value::Float(-f),
+                        Value::Bool(b) => Value::Int(-(*b as i64)),
+                        Value::Tensor(t) => Value::tensor(tensor::neg(t)),
+                        other => return Err(fail(format!("bad operand for unary -: {}", other.type_name()), cur)),
+                    },
+                    UnOp::Pos => match &a {
+                        Value::Int(_) | Value::Float(_) | Value::Tensor(_) => a,
+                        Value::Bool(b) => Value::Int(*b as i64),
+                        other => return Err(fail(format!("bad operand for unary +: {}", other.type_name()), cur)),
+                    },
+                };
+                stack.push(v);
+            }
+            Instr::Compare(c) => {
+                let b = pop!();
+                let a = pop!();
+                let r = compare_values(*c, &a, &b).map_err(|m| fail(m, cur))?;
+                stack.push(r);
+            }
+            Instr::ContainsOp(invert) => {
+                let container = pop!();
+                let item = pop!();
+                let found = contains(&container, &item).map_err(|m| fail(m, cur))?;
+                stack.push(Value::Bool(found != *invert));
+            }
+            Instr::IsOp(invert) => {
+                let b = pop!();
+                let a = pop!();
+                stack.push(Value::Bool(a.is_identical(&b) != *invert));
+            }
+            Instr::Jump(t) => {
+                ip = *t as usize;
+            }
+            Instr::PopJumpIfFalse(t) => {
+                let v = pop!();
+                if !v.truthy().map_err(|m| fail(m, cur))? {
+                    ip = *t as usize;
+                }
+            }
+            Instr::PopJumpIfTrue(t) => {
+                let v = pop!();
+                if v.truthy().map_err(|m| fail(m, cur))? {
+                    ip = *t as usize;
+                }
+            }
+            Instr::JumpIfFalseOrPop(t) => {
+                let v = stack.last().ok_or_else(|| fail("stack underflow".into(), cur))?;
+                if !v.truthy().map_err(|m| fail(m, cur))? {
+                    ip = *t as usize;
+                } else {
+                    stack.pop();
+                }
+            }
+            Instr::JumpIfTrueOrPop(t) => {
+                let v = stack.last().ok_or_else(|| fail("stack underflow".into(), cur))?;
+                if v.truthy().map_err(|m| fail(m, cur))? {
+                    ip = *t as usize;
+                } else {
+                    stack.pop();
+                }
+            }
+            Instr::GetIter => {
+                let v = pop!();
+                stack.push(make_iter(&v).map_err(|m| fail(m, cur))?);
+            }
+            Instr::ForIter(t) => {
+                let Some(Value::Iter(it)) = stack.last() else {
+                    return Err(fail("FOR_ITER on non-iterator".into(), cur));
+                };
+                let nxt = it.borrow_mut().next_item();
+                match nxt {
+                    Some(v) => stack.push(v),
+                    None => {
+                        stack.pop();
+                        ip = *t as usize;
+                    }
+                }
+            }
+            Instr::Call(n) => {
+                let argv: Vec<Value> = drain_top(&mut stack, *n as usize).map_err(|m| fail(m, cur))?;
+                let callee = pop!();
+                let r = call_value(vm, &callee, &argv).map_err(|mut e| {
+                    e.traceback.push((name.to_string(), code.line_of(cur)));
+                    e
+                })?;
+                stack.push(r);
+            }
+            Instr::CallMethod(n) => {
+                let argv: Vec<Value> = drain_top(&mut stack, *n as usize).map_err(|m| fail(m, cur))?;
+                let callee = pop!();
+                let r = call_value(vm, &callee, &argv).map_err(|mut e| {
+                    e.traceback.push((name.to_string(), code.line_of(cur)));
+                    e
+                })?;
+                stack.push(r);
+            }
+            Instr::MakeFunction(flags) => {
+                let Value::Code(fcode) = pop!() else {
+                    return Err(fail("MAKE_FUNCTION without code".into(), cur));
+                };
+                let mut fclosure: Vec<Rc<RefCell<Value>>> = Vec::new();
+                if flags & 2 != 0 {
+                    let Value::Tuple(t) = pop!() else {
+                        return Err(fail("MAKE_FUNCTION closure must be tuple".into(), cur));
+                    };
+                    for c in t.iter() {
+                        let Value::Cell(cell) = c else {
+                            return Err(fail("closure tuple must contain cells".into(), cur));
+                        };
+                        fclosure.push(Rc::clone(cell));
+                    }
+                }
+                let mut defaults: Vec<Value> = Vec::new();
+                if flags & 1 != 0 {
+                    let Value::Tuple(t) = pop!() else {
+                        return Err(fail("MAKE_FUNCTION defaults must be tuple".into(), cur));
+                    };
+                    defaults = t.to_vec();
+                }
+                let fname = fcode.name.clone();
+                stack.push(Value::Func(Rc::new(Function { name: fname, code: fcode, defaults, closure: fclosure })));
+            }
+            Instr::ReturnValue => {
+                return Ok(pop!());
+            }
+            Instr::BuildList(n) => {
+                let items = drain_top(&mut stack, *n as usize).map_err(|m| fail(m, cur))?;
+                stack.push(Value::list(items));
+            }
+            Instr::BuildTuple(n) => {
+                let items = drain_top(&mut stack, *n as usize).map_err(|m| fail(m, cur))?;
+                stack.push(Value::tuple(items));
+            }
+            Instr::BuildMap(n) => {
+                let mut kvs = drain_top(&mut stack, 2 * *n as usize).map_err(|m| fail(m, cur))?;
+                let d = Value::dict();
+                if let Value::Dict(map) = &d {
+                    let mut m = map.borrow_mut();
+                    for _ in 0..*n {
+                        let k = kvs.remove(0);
+                        let v = kvs.remove(0);
+                        let key = crate::value::DictKey::from_value(&k).map_err(|e| fail(e, cur))?;
+                        m.insert(key, v);
+                    }
+                }
+                stack.push(d);
+            }
+            Instr::ListAppend(depth) => {
+                let elt = pop!();
+                let idx = stack
+                    .len()
+                    .checked_sub(*depth as usize)
+                    .ok_or_else(|| fail("LIST_APPEND depth".into(), cur))?;
+                let Value::List(l) = &stack[idx] else {
+                    return Err(fail("LIST_APPEND target is not a list".into(), cur));
+                };
+                l.borrow_mut().push(elt);
+            }
+            Instr::UnpackSequence(n) => {
+                let v = pop!();
+                let items: Vec<Value> = match &v {
+                    Value::List(l) => l.borrow().clone(),
+                    Value::Tuple(t) => t.to_vec(),
+                    Value::Range(..) => match make_iter(&v) {
+                        Ok(Value::Iter(it)) => it.borrow().items.clone(),
+                        _ => return Err(fail("cannot unpack".into(), cur)),
+                    },
+                    other => return Err(fail(format!("cannot unpack {}", other.type_name()), cur)),
+                };
+                if items.len() != *n as usize {
+                    return Err(fail(format!("expected {} values to unpack, got {}", n, items.len()), cur));
+                }
+                for item in items.into_iter().rev() {
+                    stack.push(item);
+                }
+            }
+            Instr::Raise => {
+                let v = pop!();
+                return Err(fail(v.to_display(), cur));
+            }
+        }
+    }
+}
+
+fn drain_top(stack: &mut Vec<Value>, n: usize) -> Result<Vec<Value>, String> {
+    if stack.len() < n {
+        return Err("stack underflow".into());
+    }
+    Ok(stack.split_off(stack.len() - n))
+}
+
+/// Create an iterator value.
+pub fn make_iter(v: &Value) -> Result<Value, String> {
+    let items: Vec<Value> = match v {
+        Value::List(l) => l.borrow().clone(),
+        Value::Tuple(t) => t.to_vec(),
+        Value::Str(s) => s.chars().map(|c| Value::str(&c.to_string())).collect(),
+        Value::Dict(d) => d.borrow().keys().map(|k| k.to_value()).collect(),
+        Value::Range(start, stop, step) => {
+            let mut out = Vec::new();
+            let (mut i, stop, step) = (*start, *stop, *step);
+            if step == 0 {
+                return Err("range() step must not be zero".into());
+            }
+            while (step > 0 && i < stop) || (step < 0 && i > stop) {
+                out.push(Value::Int(i));
+                i += step;
+            }
+            out
+        }
+        Value::Iter(_) => return Ok(v.clone()),
+        other => return Err(format!("'{}' object is not iterable", other.type_name())),
+    };
+    Ok(Value::Iter(Rc::new(RefCell::new(ValueIter { items, pos: 0 }))))
+}
+
+/// Python `%` (sign of divisor) and `//` (floor) semantics for ints.
+fn floordiv_i(a: i64, b: i64) -> Result<i64, String> {
+    if b == 0 {
+        return Err("integer division by zero".into());
+    }
+    let q = a / b;
+    if a % b != 0 && ((a < 0) != (b < 0)) {
+        Ok(q - 1)
+    } else {
+        Ok(q)
+    }
+}
+
+fn mod_i(a: i64, b: i64) -> Result<i64, String> {
+    if b == 0 {
+        return Err("integer modulo by zero".into());
+    }
+    let r = a % b;
+    if r != 0 && ((r < 0) != (b < 0)) {
+        Ok(r + b)
+    } else {
+        Ok(r)
+    }
+}
+
+/// The binary-operator semantics shared by the VM and the dynamo constant
+/// folder.
+pub fn binary_op_values(op: BinOp, a: &Value, b: &Value) -> Result<Value, String> {
+    use Value as V;
+    // Tensor ops (with scalar promotion).
+    let tensorish = |v: &Value| -> Option<Tensor> {
+        match v {
+            V::Tensor(t) => Some((**t).clone()),
+            V::Int(i) => Some(Tensor::scalar(*i as f32)),
+            V::Float(f) => Some(Tensor::scalar(*f as f32)),
+            V::Bool(x) => Some(Tensor::scalar(*x as i64 as f32)),
+            _ => None,
+        }
+    };
+    if matches!(a, V::Tensor(_)) || matches!(b, V::Tensor(_)) {
+        let (ta, tb) = match (tensorish(a), tensorish(b)) {
+            (Some(x), Some(y)) => (x, y),
+            _ => return Err(format!("unsupported tensor op between {} and {}", a.type_name(), b.type_name())),
+        };
+        let r = match op {
+            BinOp::Add => tensor::add(&ta, &tb)?,
+            BinOp::Sub => tensor::sub(&ta, &tb)?,
+            BinOp::Mul => tensor::mul(&ta, &tb)?,
+            BinOp::Div => tensor::div(&ta, &tb)?,
+            BinOp::Pow => tensor::pow(&ta, &tb)?,
+            BinOp::MatMul => tensor::matmul(&ta, &tb)?,
+            BinOp::FloorDiv => tensor::unary_op(&tensor::div(&ta, &tb)?, f32::floor),
+            BinOp::Mod => return Err("tensor % not supported".into()),
+        };
+        return Ok(V::tensor(r));
+    }
+    // Numeric ops.
+    let as_f = |v: &Value| -> Option<f64> {
+        match v {
+            V::Int(i) => Some(*i as f64),
+            V::Float(f) => Some(*f),
+            V::Bool(b) => Some(*b as i64 as f64),
+            _ => None,
+        }
+    };
+    let as_i = |v: &Value| -> Option<i64> {
+        match v {
+            V::Int(i) => Some(*i),
+            V::Bool(b) => Some(*b as i64),
+            _ => None,
+        }
+    };
+    match op {
+        BinOp::Add => match (a, b) {
+            (V::Str(x), V::Str(y)) => return Ok(V::str(&format!("{}{}", x, y))),
+            (V::List(x), V::List(y)) => {
+                let mut out = x.borrow().clone();
+                out.extend(y.borrow().iter().cloned());
+                return Ok(V::list(out));
+            }
+            (V::Tuple(x), V::Tuple(y)) => {
+                let mut out = x.to_vec();
+                out.extend(y.iter().cloned());
+                return Ok(V::tuple(out));
+            }
+            _ => {}
+        },
+        BinOp::Mul => match (a, b) {
+            (V::Str(s), V::Int(n)) | (V::Int(n), V::Str(s)) => {
+                return Ok(V::str(&s.repeat((*n).max(0) as usize)));
+            }
+            (V::List(l), V::Int(n)) | (V::Int(n), V::List(l)) => {
+                let mut out = Vec::new();
+                for _ in 0..(*n).max(0) {
+                    out.extend(l.borrow().iter().cloned());
+                }
+                return Ok(V::list(out));
+            }
+            _ => {}
+        },
+        BinOp::Mod => {
+            if let (V::Str(s), other) = (a, b) {
+                // printf-style with a single %s / %d (subset).
+                let formatted = s.replacen("%s", &other.to_display(), 1).replacen("%d", &other.to_display(), 1);
+                return Ok(V::str(&formatted));
+            }
+        }
+        _ => {}
+    }
+    // Int-preserving paths.
+    if let (Some(x), Some(y)) = (as_i(a), as_i(b)) {
+        return Ok(match op {
+            BinOp::Add => V::Int(x + y),
+            BinOp::Sub => V::Int(x - y),
+            BinOp::Mul => V::Int(x * y),
+            BinOp::Div => {
+                if y == 0 {
+                    return Err("division by zero".into());
+                }
+                V::Float(x as f64 / y as f64)
+            }
+            BinOp::FloorDiv => V::Int(floordiv_i(x, y)?),
+            BinOp::Mod => V::Int(mod_i(x, y)?),
+            BinOp::Pow => {
+                if y >= 0 {
+                    V::Int(x.pow(y.min(63) as u32))
+                } else {
+                    V::Float((x as f64).powi(y as i32))
+                }
+            }
+            BinOp::MatMul => return Err("@ requires tensors".into()),
+        });
+    }
+    if let (Some(x), Some(y)) = (as_f(a), as_f(b)) {
+        return Ok(match op {
+            BinOp::Add => V::Float(x + y),
+            BinOp::Sub => V::Float(x - y),
+            BinOp::Mul => V::Float(x * y),
+            BinOp::Div => {
+                if y == 0.0 {
+                    return Err("float division by zero".into());
+                }
+                V::Float(x / y)
+            }
+            BinOp::FloorDiv => V::Float((x / y).floor()),
+            BinOp::Mod => {
+                let r = x % y;
+                V::Float(if r != 0.0 && (r < 0.0) != (y < 0.0) { r + y } else { r })
+            }
+            BinOp::Pow => V::Float(x.powf(y)),
+            BinOp::MatMul => return Err("@ requires tensors".into()),
+        });
+    }
+    Err(format!(
+        "unsupported operand type(s) for {}: '{}' and '{}'",
+        op.symbol(),
+        a.type_name(),
+        b.type_name()
+    ))
+}
+
+/// Comparison dispatch. Tensor comparisons are elementwise (0.0/1.0 masks),
+/// like PyTorch.
+pub fn compare_values(op: crate::bytecode::CmpOp, a: &Value, b: &Value) -> Result<Value, String> {
+    use crate::bytecode::CmpOp;
+    if matches!(a, Value::Tensor(_)) || matches!(b, Value::Tensor(_)) {
+        let ta = match a {
+            Value::Tensor(t) => (**t).clone(),
+            v => Tensor::scalar(v.as_float()? as f32),
+        };
+        let tb = match b {
+            Value::Tensor(t) => (**t).clone(),
+            v => Tensor::scalar(v.as_float()? as f32),
+        };
+        let f: fn(f32, f32) -> f32 = match op {
+            CmpOp::Lt => |x, y| (x < y) as i32 as f32,
+            CmpOp::Le => |x, y| (x <= y) as i32 as f32,
+            CmpOp::Gt => |x, y| (x > y) as i32 as f32,
+            CmpOp::Ge => |x, y| (x >= y) as i32 as f32,
+            CmpOp::Eq => |x, y| (x == y) as i32 as f32,
+            CmpOp::Ne => |x, y| (x != y) as i32 as f32,
+        };
+        return Ok(Value::tensor(tensor::binary_op(&ta, &tb, f)?));
+    }
+    let r = match op {
+        CmpOp::Eq => a.eq_value(b),
+        CmpOp::Ne => !a.eq_value(b),
+        CmpOp::Lt => a.cmp_value(b)? == Ordering::Less,
+        CmpOp::Le => a.cmp_value(b)? != Ordering::Greater,
+        CmpOp::Gt => a.cmp_value(b)? == Ordering::Greater,
+        CmpOp::Ge => a.cmp_value(b)? != Ordering::Less,
+    };
+    Ok(Value::Bool(r))
+}
+
+pub fn contains(container: &Value, item: &Value) -> Result<bool, String> {
+    match container {
+        Value::List(l) => Ok(l.borrow().iter().any(|v| v.eq_value(item))),
+        Value::Tuple(t) => Ok(t.iter().any(|v| v.eq_value(item))),
+        Value::Dict(d) => {
+            let k = crate::value::DictKey::from_value(item)?;
+            Ok(d.borrow().contains_key(&k))
+        }
+        Value::Str(s) => match item {
+            Value::Str(sub) => Ok(s.contains(&**sub)),
+            other => Err(format!("'in <string>' requires string, got {}", other.type_name())),
+        },
+        Value::Range(start, stop, step) => match item {
+            Value::Int(i) => {
+                if *step > 0 {
+                    Ok(*i >= *start && *i < *stop && (*i - *start) % *step == 0)
+                } else {
+                    Ok(*i <= *start && *i > *stop && (*start - *i) % (-*step) == 0)
+                }
+            }
+            _ => Ok(false),
+        },
+        other => Err(format!("argument of type '{}' is not iterable", other.type_name())),
+    }
+}

@@ -1,0 +1,461 @@
+//! Attribute access, subscripting, and built-in methods on values
+//! (list/str/dict/tuple/tensor method tables).
+
+use std::rc::Rc;
+
+use super::Vm;
+use crate::tensor::{self, Tensor};
+use crate::value::{DictKey, Value};
+
+/// `obj.name` for non-call attribute access.
+pub fn get_attr(obj: &Value, name: &str) -> Result<Value, String> {
+    match (obj, name) {
+        (Value::Tensor(t), "shape") => Ok(Value::tuple(t.shape().iter().map(|&d| Value::Int(d as i64)).collect())),
+        (Value::Tensor(t), "ndim") => Ok(Value::Int(t.rank() as i64)),
+        (Value::Tensor(t), "T") => Ok(Value::tensor(tensor::transpose(t)?)),
+        (Value::Dict(d), _) => d
+            .borrow()
+            .get(&DictKey::Str(name.to_string()))
+            .cloned()
+            .ok_or_else(|| format!("'dict' object has no attribute '{}'", name)),
+        (Value::Func(f), "__name__") => Ok(Value::str(&f.name)),
+        // Unbound method reference (e.g. `m = x.relu`).
+        (Value::Tensor(_) | Value::List(_) | Value::Str(_) | Value::Tuple(_), _) => {
+            Ok(Value::BoundMethod(Rc::new((obj.clone(), name.to_string()))))
+        }
+        (other, _) => Err(format!("'{}' object has no attribute '{}'", other.type_name(), name)),
+    }
+}
+
+/// Resolve Python slice semantics into concrete indices.
+fn slice_indices(len: i64, start: &Value, stop: &Value, step: &Value) -> Result<Vec<i64>, String> {
+    let step = match step {
+        Value::None => 1,
+        v => v.as_int()?,
+    };
+    if step == 0 {
+        return Err("slice step cannot be zero".into());
+    }
+    let norm = |v: &Value, default: i64| -> Result<i64, String> {
+        match v {
+            Value::None => Ok(default),
+            other => {
+                let mut i = other.as_int()?;
+                if i < 0 {
+                    i += len;
+                }
+                Ok(i)
+            }
+        }
+    };
+    let (dstart, dstop) = if step > 0 { (0, len) } else { (len - 1, -1) };
+    let mut start = norm(start, dstart)?;
+    let mut stop = norm(stop, dstop)?;
+    if step > 0 {
+        start = start.clamp(0, len);
+        stop = stop.clamp(0, len);
+    } else {
+        start = start.clamp(-1, len - 1);
+        stop = stop.clamp(-1, len - 1);
+    }
+    let mut idx = Vec::new();
+    let mut i = start;
+    while (step > 0 && i < stop) || (step < 0 && i > stop) {
+        idx.push(i);
+        i += step;
+    }
+    Ok(idx)
+}
+
+fn norm_index(len: usize, i: i64) -> Result<usize, String> {
+    let n = len as i64;
+    let j = if i < 0 { i + n } else { i };
+    if j < 0 || j >= n {
+        Err(format!("index {} out of range (len {})", i, len))
+    } else {
+        Ok(j as usize)
+    }
+}
+
+/// `obj[idx]`
+pub fn apply_subscript(obj: &Value, idx: &Value) -> Result<Value, String> {
+    match obj {
+        Value::List(l) => match idx {
+            Value::Slice(s) => {
+                let items = l.borrow();
+                let picked = slice_indices(items.len() as i64, &s.0, &s.1, &s.2)?;
+                Ok(Value::list(picked.into_iter().map(|i| items[i as usize].clone()).collect()))
+            }
+            other => {
+                let i = norm_index(l.borrow().len(), other.as_int()?)?;
+                Ok(l.borrow()[i].clone())
+            }
+        },
+        Value::Tuple(t) => match idx {
+            Value::Slice(s) => {
+                let picked = slice_indices(t.len() as i64, &s.0, &s.1, &s.2)?;
+                Ok(Value::tuple(picked.into_iter().map(|i| t[i as usize].clone()).collect()))
+            }
+            other => {
+                let i = norm_index(t.len(), other.as_int()?)?;
+                Ok(t[i].clone())
+            }
+        },
+        Value::Str(s) => {
+            let chars: Vec<char> = s.chars().collect();
+            match idx {
+                Value::Slice(sl) => {
+                    let picked = slice_indices(chars.len() as i64, &sl.0, &sl.1, &sl.2)?;
+                    Ok(Value::str(&picked.into_iter().map(|i| chars[i as usize]).collect::<String>()))
+                }
+                other => {
+                    let i = norm_index(chars.len(), other.as_int()?)?;
+                    Ok(Value::str(&chars[i].to_string()))
+                }
+            }
+        }
+        Value::Dict(d) => {
+            let k = DictKey::from_value(idx)?;
+            d.borrow().get(&k).cloned().ok_or_else(|| format!("KeyError: {}", idx.repr()))
+        }
+        Value::Tensor(t) => {
+            // Integer index along the first axis.
+            let i = idx.as_int()?;
+            if t.rank() == 0 {
+                return Err("cannot index rank-0 tensor".into());
+            }
+            let rows = t.shape()[0];
+            let j = norm_index(rows, i)?;
+            let inner: usize = t.shape()[1..].iter().product::<usize>().max(1);
+            let data = t.data()[j * inner..(j + 1) * inner].to_vec();
+            Ok(Value::tensor(Tensor::new(t.shape()[1..].to_vec(), data)))
+        }
+        other => Err(format!("'{}' object is not subscriptable", other.type_name())),
+    }
+}
+
+/// `obj[idx] = val`
+pub fn store_subscript(obj: &Value, idx: &Value, val: Value) -> Result<(), String> {
+    match obj {
+        Value::List(l) => {
+            let i = norm_index(l.borrow().len(), idx.as_int()?)?;
+            l.borrow_mut()[i] = val;
+            Ok(())
+        }
+        Value::Dict(d) => {
+            let k = DictKey::from_value(idx)?;
+            d.borrow_mut().insert(k, val);
+            Ok(())
+        }
+        other => Err(format!("'{}' object does not support item assignment", other.type_name())),
+    }
+}
+
+/// Dispatch `recv.name(args)`.
+pub fn call_method_on(_vm: &Vm, recv: &Value, name: &str, args: &[Value]) -> Result<Value, String> {
+    call_method_pure(recv, name, args)
+}
+
+/// Method dispatch without a VM handle (none of the built-in methods need
+/// one) — used by dynamo's constant folder too.
+pub fn call_method_pure(recv: &Value, name: &str, args: &[Value]) -> Result<Value, String> {
+    match recv {
+        Value::List(l) => list_method(l, name, args),
+        Value::Str(s) => str_method(s, name, args),
+        Value::Dict(d) => dict_method(d, name, args),
+        Value::Tuple(t) => tuple_method(t, name, args),
+        Value::Tensor(t) => tensor_method(t, name, args),
+        other => Err(format!("'{}' object has no method '{}'", other.type_name(), name)),
+    }
+}
+
+fn arity(args: &[Value], lo: usize, hi: usize, name: &str) -> Result<(), String> {
+    if args.len() < lo || args.len() > hi {
+        Err(format!("{}() takes {}..{} arguments, got {}", name, lo, hi, args.len()))
+    } else {
+        Ok(())
+    }
+}
+
+fn list_method(l: &Rc<std::cell::RefCell<Vec<Value>>>, name: &str, args: &[Value]) -> Result<Value, String> {
+    match name {
+        "append" => {
+            arity(args, 1, 1, name)?;
+            l.borrow_mut().push(args[0].clone());
+            Ok(Value::None)
+        }
+        "extend" => {
+            arity(args, 1, 1, name)?;
+            match &args[0] {
+                Value::List(o) => {
+                    let items = o.borrow().clone();
+                    l.borrow_mut().extend(items);
+                }
+                Value::Tuple(t) => l.borrow_mut().extend(t.iter().cloned()),
+                other => return Err(format!("extend expects list/tuple, got {}", other.type_name())),
+            }
+            Ok(Value::None)
+        }
+        "pop" => {
+            arity(args, 0, 1, name)?;
+            let mut items = l.borrow_mut();
+            if items.is_empty() {
+                return Err("pop from empty list".into());
+            }
+            let i = if args.is_empty() { items.len() - 1 } else { norm_index(items.len(), args[0].as_int()?)? };
+            Ok(items.remove(i))
+        }
+        "insert" => {
+            arity(args, 2, 2, name)?;
+            let mut items = l.borrow_mut();
+            let i = (args[0].as_int()?).clamp(0, items.len() as i64) as usize;
+            items.insert(i, args[1].clone());
+            Ok(Value::None)
+        }
+        "index" => {
+            arity(args, 1, 1, name)?;
+            let items = l.borrow();
+            items
+                .iter()
+                .position(|v| v.eq_value(&args[0]))
+                .map(|i| Value::Int(i as i64))
+                .ok_or_else(|| format!("{} is not in list", args[0].repr()))
+        }
+        "count" => {
+            arity(args, 1, 1, name)?;
+            Ok(Value::Int(l.borrow().iter().filter(|v| v.eq_value(&args[0])).count() as i64))
+        }
+        "reverse" => {
+            arity(args, 0, 0, name)?;
+            l.borrow_mut().reverse();
+            Ok(Value::None)
+        }
+        "sort" => {
+            arity(args, 0, 0, name)?;
+            let mut items = l.borrow_mut();
+            let mut err = None;
+            items.sort_by(|a, b| match a.cmp_value(b) {
+                Ok(o) => o,
+                Err(e) => {
+                    err = Some(e);
+                    std::cmp::Ordering::Equal
+                }
+            });
+            match err {
+                Some(e) => Err(e),
+                None => Ok(Value::None),
+            }
+        }
+        other => Err(format!("'list' object has no method '{}'", other)),
+    }
+}
+
+fn str_method(s: &Rc<str>, name: &str, args: &[Value]) -> Result<Value, String> {
+    match name {
+        "upper" => Ok(Value::str(&s.to_uppercase())),
+        "lower" => Ok(Value::str(&s.to_lowercase())),
+        "strip" => Ok(Value::str(s.trim())),
+        "startswith" => {
+            arity(args, 1, 1, name)?;
+            match &args[0] {
+                Value::Str(p) => Ok(Value::Bool(s.starts_with(&**p))),
+                other => Err(format!("startswith expects str, got {}", other.type_name())),
+            }
+        }
+        "endswith" => {
+            arity(args, 1, 1, name)?;
+            match &args[0] {
+                Value::Str(p) => Ok(Value::Bool(s.ends_with(&**p))),
+                other => Err(format!("endswith expects str, got {}", other.type_name())),
+            }
+        }
+        "split" => {
+            let parts: Vec<Value> = match args.first() {
+                None => s.split_whitespace().map(Value::str).collect(),
+                Some(Value::Str(sep)) => s.split(&**sep).map(Value::str).collect(),
+                Some(other) => return Err(format!("split expects str, got {}", other.type_name())),
+            };
+            Ok(Value::list(parts))
+        }
+        "join" => {
+            arity(args, 1, 1, name)?;
+            match &args[0] {
+                Value::List(l) => {
+                    let parts: Result<Vec<String>, String> = l
+                        .borrow()
+                        .iter()
+                        .map(|v| match v {
+                            Value::Str(x) => Ok(x.to_string()),
+                            other => Err(format!("join expects strings, got {}", other.type_name())),
+                        })
+                        .collect();
+                    Ok(Value::str(&parts?.join(s)))
+                }
+                other => Err(format!("join expects list, got {}", other.type_name())),
+            }
+        }
+        "replace" => {
+            arity(args, 2, 2, name)?;
+            match (&args[0], &args[1]) {
+                (Value::Str(a), Value::Str(b)) => Ok(Value::str(&s.replace(&**a, b))),
+                _ => Err("replace expects two strings".into()),
+            }
+        }
+        other => Err(format!("'str' object has no method '{}'", other)),
+    }
+}
+
+fn dict_method(
+    d: &Rc<std::cell::RefCell<std::collections::BTreeMap<DictKey, Value>>>,
+    name: &str,
+    args: &[Value],
+) -> Result<Value, String> {
+    match name {
+        "get" => {
+            arity(args, 1, 2, name)?;
+            let k = DictKey::from_value(&args[0])?;
+            Ok(d.borrow().get(&k).cloned().unwrap_or_else(|| args.get(1).cloned().unwrap_or(Value::None)))
+        }
+        "keys" => Ok(Value::list(d.borrow().keys().map(|k| k.to_value()).collect())),
+        "values" => Ok(Value::list(d.borrow().values().cloned().collect())),
+        "items" => Ok(Value::list(d.borrow().iter().map(|(k, v)| Value::tuple(vec![k.to_value(), v.clone()])).collect())),
+        "pop" => {
+            arity(args, 1, 2, name)?;
+            let k = DictKey::from_value(&args[0])?;
+            match d.borrow_mut().remove(&k) {
+                Some(v) => Ok(v),
+                None => args.get(1).cloned().ok_or_else(|| format!("KeyError: {}", args[0].repr())),
+            }
+        }
+        other => Err(format!("'dict' object has no method '{}'", other)),
+    }
+}
+
+fn tuple_method(t: &Rc<Vec<Value>>, name: &str, args: &[Value]) -> Result<Value, String> {
+    match name {
+        "index" => {
+            arity(args, 1, 1, name)?;
+            t.iter()
+                .position(|v| v.eq_value(&args[0]))
+                .map(|i| Value::Int(i as i64))
+                .ok_or_else(|| format!("{} is not in tuple", args[0].repr()))
+        }
+        "count" => {
+            arity(args, 1, 1, name)?;
+            Ok(Value::Int(t.iter().filter(|v| v.eq_value(&args[0])).count() as i64))
+        }
+        other => Err(format!("'tuple' object has no method '{}'", other)),
+    }
+}
+
+fn value_to_axis(v: Option<&Value>) -> Result<Option<usize>, String> {
+    match v {
+        None | Some(Value::None) => Ok(None),
+        Some(other) => Ok(Some(other.as_int()? as usize)),
+    }
+}
+
+fn int_list(v: &Value) -> Result<Vec<i64>, String> {
+    match v {
+        Value::List(l) => l.borrow().iter().map(|x| x.as_int()).collect(),
+        Value::Tuple(t) => t.iter().map(|x| x.as_int()).collect(),
+        other => Err(format!("expected list of ints, got {}", other.type_name())),
+    }
+}
+
+/// Tensor methods (`x.relu()`, `x.sum(1)`, `x.reshape([2, -1])`, ...).
+pub fn tensor_method(t: &Rc<Tensor>, name: &str, args: &[Value]) -> Result<Value, String> {
+    let tv = |x: Tensor| Ok(Value::tensor(x));
+    match name {
+        "item" => {
+            if t.numel() != 1 {
+                return Err(format!("item() on tensor with {} elements", t.numel()));
+            }
+            Ok(Value::Float(t.item() as f64))
+        }
+        "tolist" => {
+            // 1-D only (enough for the corpus).
+            Ok(Value::list(t.data().iter().map(|&v| Value::Float(v as f64)).collect()))
+        }
+        "numel" => Ok(Value::Int(t.numel() as i64)),
+        "sum" => tv(tensor::sum(t, value_to_axis(args.first())?)?),
+        "mean" => tv(tensor::mean(t, value_to_axis(args.first())?)?),
+        "max" => tv(tensor::max_reduce(t, value_to_axis(args.first())?)?),
+        "min" => tv(tensor::min_reduce(t, value_to_axis(args.first())?)?),
+        "relu" => tv(tensor::relu(t)),
+        "gelu" => tv(tensor::gelu(t)),
+        "tanh" => tv(tensor::tanh(t)),
+        "sigmoid" => tv(tensor::sigmoid(t)),
+        "exp" => tv(tensor::exp(t)),
+        "log" => tv(tensor::log(t)),
+        "sqrt" => tv(tensor::sqrt(t)),
+        "abs" => tv(tensor::abs(t)),
+        "neg" => tv(tensor::neg(t)),
+        "softmax" => tv(tensor::softmax(t)?),
+        "t" => tv(tensor::transpose(t)?),
+        "matmul" => {
+            arity(args, 1, 1, name)?;
+            tv(tensor::matmul(t, &*args[0].as_tensor()?)?)
+        }
+        "add" | "sub" | "mul" | "div" | "pow" | "maximum" | "minimum" => {
+            arity(args, 1, 1, name)?;
+            let other = match &args[0] {
+                Value::Tensor(o) => (**o).clone(),
+                v => Tensor::scalar(v.as_float()? as f32),
+            };
+            let r = match name {
+                "add" => tensor::add(t, &other)?,
+                "sub" => tensor::sub(t, &other)?,
+                "mul" => tensor::mul(t, &other)?,
+                "div" => tensor::div(t, &other)?,
+                "pow" => tensor::pow(t, &other)?,
+                "maximum" => tensor::maximum(t, &other)?,
+                _ => tensor::minimum(t, &other)?,
+            };
+            tv(r)
+        }
+        "reshape" | "view" => {
+            arity(args, 1, 1, name)?;
+            let spec = int_list(&args[0])?;
+            let shape = tensor::reshape_infer(t.numel(), &spec)?;
+            tv(t.reshape(shape))
+        }
+        "permute" => {
+            arity(args, 1, 1, name)?;
+            let perm: Vec<usize> = int_list(&args[0])?.iter().map(|&i| i as usize).collect();
+            tv(tensor::permute(t, &perm)?)
+        }
+        other => Err(format!("'Tensor' object has no method '{}'", other)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slice_index_semantics() {
+        assert_eq!(slice_indices(5, &Value::Int(1), &Value::Int(3), &Value::None).unwrap(), vec![1, 2]);
+        assert_eq!(slice_indices(5, &Value::None, &Value::None, &Value::Int(2)).unwrap(), vec![0, 2, 4]);
+        assert_eq!(slice_indices(5, &Value::None, &Value::None, &Value::Int(-1)).unwrap(), vec![4, 3, 2, 1, 0]);
+        assert_eq!(slice_indices(5, &Value::Int(-2), &Value::None, &Value::None).unwrap(), vec![3, 4]);
+        assert!(slice_indices(5, &Value::None, &Value::None, &Value::Int(0)).is_err());
+    }
+
+    #[test]
+    fn tensor_attr_shape() {
+        let t = Value::tensor(Tensor::zeros(&[2, 3]));
+        let s = get_attr(&t, "shape").unwrap();
+        assert_eq!(s.repr(), "(2, 3)");
+    }
+
+    #[test]
+    fn tensor_index_row() {
+        let t = Value::tensor(Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]));
+        let row = apply_subscript(&t, &Value::Int(1)).unwrap();
+        match row {
+            Value::Tensor(r) => assert_eq!(r.data(), &[3.0, 4.0]),
+            other => panic!("{:?}", other),
+        }
+    }
+}

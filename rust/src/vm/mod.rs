@@ -1,0 +1,287 @@
+//! The `pylang` virtual machine: a stack-machine interpreter over
+//! [`crate::bytecode`] with a PEP 523-style **frame-evaluation hook** — the
+//! entry point dynamo uses to intercept user functions, and the mechanism
+//! the paper's Figure 1 calls "the opaque box".
+
+mod builtins;
+mod interp;
+mod methods;
+
+pub use interp::{binary_op_values, compare_values as interp_compare, const_to_value as const_to_runtime, contains as interp_contains, make_iter};
+pub use methods::{apply_subscript, call_method_on, call_method_pure, get_attr};
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use crate::bytecode::CodeObject;
+use crate::value::{Function, Value};
+
+/// Runtime error with a lightweight traceback.
+#[derive(Clone, Debug)]
+pub struct VmError {
+    pub message: String,
+    /// (function name, source line) innermost last.
+    pub traceback: Vec<(String, u32)>,
+}
+
+impl VmError {
+    pub fn new(message: impl Into<String>) -> VmError {
+        VmError { message: message.into(), traceback: Vec::new() }
+    }
+}
+
+impl std::fmt::Display for VmError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for (name, line) in &self.traceback {
+            writeln!(f, "  in {} (line {})", name, line)?;
+        }
+        write!(f, "{}", self.message)
+    }
+}
+
+impl std::error::Error for VmError {}
+
+/// PEP 523 analogue: intercepts user-function frames before execution.
+///
+/// Returning `Some(code)` makes the VM execute `code` *instead of*
+/// `func.code` (dynamo's transformed bytecode). The hook may install
+/// globals (compiled graph callables, resume functions) through `globals`.
+pub trait EvalHook {
+    fn eval_frame(
+        &self,
+        func: &Rc<Function>,
+        args: &[Value],
+        globals: &Rc<RefCell<HashMap<String, Value>>>,
+    ) -> Option<Rc<CodeObject>>;
+}
+
+/// Line-level tracer (the debugger's hook).
+pub trait Tracer {
+    /// Called when execution reaches a new source line of a code object
+    /// that has an on-disk source file. `locals` are (name, value) pairs.
+    fn on_line(&self, file: &str, line: u32, func: &str, locals: &[(String, Value)]);
+}
+
+/// The virtual machine.
+pub struct Vm {
+    pub globals: Rc<RefCell<HashMap<String, Value>>>,
+    /// Captured `print` output (behavioural-equivalence oracle for tests).
+    pub output: Rc<RefCell<String>>,
+    /// Also echo print to stdout.
+    pub echo: bool,
+    /// Deterministic RNG shared with `torch.*` builtins.
+    pub rng: Rc<RefCell<crate::tensor::Rng>>,
+    /// The frame-evaluation hook (dynamo), if installed.
+    pub eval_hook: Option<Rc<dyn EvalHook>>,
+    /// Line tracer (debugger), if installed.
+    pub tracer: Option<Rc<dyn Tracer>>,
+    /// Recursion guard.
+    pub max_depth: usize,
+    pub(crate) depth: std::cell::Cell<usize>,
+    /// Instruction budget (guards against runaway loops in fuzzed inputs).
+    pub instr_budget: std::cell::Cell<u64>,
+}
+
+impl Default for Vm {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Vm {
+    pub fn new() -> Vm {
+        let output = Rc::new(RefCell::new(String::new()));
+        let rng = Rc::new(RefCell::new(crate::tensor::Rng::new(0)));
+        let globals = Rc::new(RefCell::new(HashMap::new()));
+        let vm = Vm {
+            globals,
+            output,
+            echo: false,
+            rng,
+            eval_hook: None,
+            tracer: None,
+            // VM frames recurse on the Rust stack; keep headroom for 2 MiB
+            // test-thread stacks (debug frames are large).
+            max_depth: 64,
+            depth: std::cell::Cell::new(0),
+            instr_budget: std::cell::Cell::new(u64::MAX),
+        };
+        builtins::install(&vm);
+        vm
+    }
+
+    /// Reset the deterministic RNG (torch.manual_seed).
+    pub fn seed(&self, s: u64) {
+        *self.rng.borrow_mut() = crate::tensor::Rng::new(s);
+    }
+
+    /// Take and clear captured print output.
+    pub fn take_output(&self) -> String {
+        std::mem::take(&mut self.output.borrow_mut())
+    }
+
+    pub fn set_global(&self, name: &str, v: Value) {
+        self.globals.borrow_mut().insert(name.to_string(), v);
+    }
+
+    pub fn get_global(&self, name: &str) -> Option<Value> {
+        self.globals.borrow().get(name).cloned()
+    }
+
+    /// Execute a module code object (top-level globals scope).
+    pub fn run_module(&self, code: &Rc<CodeObject>) -> Result<Value, VmError> {
+        interp::run_code(self, code, &[], &[], None)
+    }
+
+    /// Call any callable value with arguments.
+    pub fn call(&self, callee: &Value, args: &[Value]) -> Result<Value, VmError> {
+        interp::call_value(self, callee, args)
+    }
+
+    /// Compile + run a source module in one step (tests, examples).
+    pub fn exec_source(&self, src: &str, version: crate::bytecode::IsaVersion) -> Result<Value, VmError> {
+        let code = crate::pylang::compile_module(src, "<string>", version).map_err(|e| VmError::new(e.to_string()))?;
+        self.run_module(&code)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bytecode::IsaVersion;
+
+    fn run(src: &str) -> String {
+        let vm = Vm::new();
+        vm.exec_source(src, IsaVersion::V310).unwrap_or_else(|e| panic!("{}\nsource:\n{}", e, src));
+        vm.take_output()
+    }
+
+    #[test]
+    fn hello_world() {
+        assert_eq!(run("print('hello')\n"), "hello\n");
+    }
+
+    #[test]
+    fn arithmetic_semantics() {
+        assert_eq!(run("print(7 // 2, -7 // 2, 7 % 3, -7 % 3)\n"), "3 -4 1 2\n");
+        assert_eq!(run("print(2 ** 10, 1 / 2)\n"), "1024 0.5\n");
+    }
+
+    #[test]
+    fn control_flow() {
+        assert_eq!(run("x = 3\nif x > 2:\n    print('big')\nelse:\n    print('small')\n"), "big\n");
+        assert_eq!(run("t = 0\nfor i in range(5):\n    t += i\nprint(t)\n"), "10\n");
+        assert_eq!(run("n = 3\nwhile n > 0:\n    n -= 1\nprint(n)\n"), "0\n");
+    }
+
+    #[test]
+    fn break_continue_else() {
+        assert_eq!(
+            run("for i in range(5):\n    if i == 2:\n        break\nelse:\n    print('no break')\nprint(i)\n"),
+            "2\n"
+        );
+        assert_eq!(
+            run("for i in range(3):\n    pass\nelse:\n    print('done')\n"),
+            "done\n"
+        );
+    }
+
+    #[test]
+    fn functions_and_recursion() {
+        assert_eq!(run("def fib(n):\n    if n < 2:\n        return n\n    return fib(n - 1) + fib(n - 2)\nprint(fib(10))\n"), "55\n");
+    }
+
+    #[test]
+    fn defaults_and_lambda() {
+        assert_eq!(run("def f(a, b=10):\n    return a + b\nprint(f(1), f(1, 2))\n"), "11 3\n");
+        assert_eq!(run("g = lambda x: x * 3\nprint(g(4))\n"), "12\n");
+    }
+
+    #[test]
+    fn closures() {
+        assert_eq!(
+            run("def counter():\n    n = 0\n    def bump():\n        nonlocal n\n        n += 1\n        return n\n    return bump\nc = counter()\nc()\nc()\nprint(c())\n"),
+            "3\n"
+        );
+    }
+
+    #[test]
+    fn collections() {
+        assert_eq!(run("xs = [1, 2, 3]\nxs.append(4)\nprint(xs, len(xs), xs[0], xs[-1])\n"), "[1, 2, 3, 4] 4 1 4\n");
+        assert_eq!(run("d = {'a': 1}\nd['b'] = 2\nprint(d['a'] + d['b'])\n"), "3\n");
+        assert_eq!(run("t = (1, 2)\na, b = t\nprint(b, a)\n"), "2 1\n");
+        assert_eq!(run("print([x * x for x in range(4) if x > 0])\n"), "[1, 4, 9]\n");
+    }
+
+    #[test]
+    fn slices_and_strings() {
+        assert_eq!(run("xs = [0, 1, 2, 3, 4]\nprint(xs[1:3], xs[:2], xs[::2])\n"), "[1, 2] [0, 1] [0, 2, 4]\n");
+        assert_eq!(run("s = 'abc'\nprint(s + 'd', s * 2, len(s))\n"), "abcd abcabc 3\n");
+    }
+
+    #[test]
+    fn chained_comparisons() {
+        assert_eq!(run("x = 5\nprint(1 < x <= 5, 1 < x < 3)\n"), "True False\n");
+        // middle evaluates once
+        assert_eq!(run("def f():\n    print('f')\n    return 5\nprint(1 < f() < 10)\n"), "f\nTrue\n");
+    }
+
+    #[test]
+    fn boolean_short_circuit() {
+        assert_eq!(run("def t():\n    print('t')\n    return True\nr = False and t()\nprint(r)\n"), "False\n");
+        assert_eq!(run("print(0 or 'x', 1 and 2)\n"), "x 2\n");
+    }
+
+    #[test]
+    fn tensor_basics() {
+        assert_eq!(run("x = torch.ones([2, 2])\ny = x + 1\nprint(y.sum().item())\n"), "8.0\n");
+        assert_eq!(run("a = torch.arange(6).reshape([2, 3])\nprint(a.t().shape)\n"), "(3, 2)\n");
+        assert_eq!(run("m = torch.ones([2, 3]).matmul(torch.ones([3, 4]))\nprint(m.shape, m.sum().item())\n"), "(2, 4) 24.0\n");
+    }
+
+    #[test]
+    fn assert_and_raise() {
+        let vm = Vm::new();
+        assert!(vm.exec_source("assert 1 == 2, 'boom'\n", IsaVersion::V310).is_err());
+        assert!(vm.exec_source("raise 'custom error'\n", IsaVersion::V310).is_err());
+        assert!(vm.exec_source("assert 1 == 1\nprint('ok')\n", IsaVersion::V310).is_ok());
+    }
+
+    #[test]
+    fn same_behaviour_across_isa_versions() {
+        let src = "def f(n):\n    acc = 0\n    for i in range(n):\n        if i % 2 == 0:\n            acc += i\n        else:\n            acc -= 1\n    return acc\nprint(f(10))\n";
+        let mut outs = Vec::new();
+        for v in IsaVersion::ALL {
+            let vm = Vm::new();
+            vm.exec_source(src, v).unwrap();
+            outs.push(vm.take_output());
+        }
+        assert!(outs.windows(2).all(|w| w[0] == w[1]), "{:?}", outs);
+    }
+
+    #[test]
+    fn recursion_limit() {
+        let vm = Vm::new();
+        let r = vm.exec_source("def f():\n    return f()\nf()\n", IsaVersion::V310);
+        assert!(r.is_err());
+        assert!(r.unwrap_err().message.contains("recursion"));
+    }
+
+    #[test]
+    fn enumerate_zip() {
+        assert_eq!(run("for i, v in enumerate(['a', 'b']):\n    print(i, v)\n"), "0 a\n1 b\n");
+        assert_eq!(run("print(zip([1, 2], [3, 4]))\n"), "[(1, 3), (2, 4)]\n");
+    }
+
+    #[test]
+    fn dict_iteration_and_methods() {
+        assert_eq!(run("d = {'b': 2, 'a': 1}\nfor k in d:\n    print(k)\n"), "a\nb\n");
+        assert_eq!(run("d = {'x': 5}\nprint(d.get('x'), d.get('y', 0))\n"), "5 0\n");
+    }
+
+    #[test]
+    fn global_statement() {
+        assert_eq!(run("g = 1\ndef f():\n    global g\n    g = 5\nf()\nprint(g)\n"), "5\n");
+    }
+}

@@ -1,0 +1,175 @@
+//! Cross-module integration tests: the whole stack composing.
+
+use std::rc::Rc;
+
+use depyf::backend::BackendKind;
+use depyf::bytecode::IsaVersion;
+use depyf::corpus::{run_syntax_suite, syntax_cases};
+use depyf::decompiler::baselines::DepyfRs;
+use depyf::decompiler::{decompile, DecompilerTool};
+use depyf::dynamo::{Dynamo, DynamoConfig};
+use depyf::pylang::compile_module;
+use depyf::runtime::Runtime;
+use depyf::session::DebugSession;
+use depyf::tensor::Tensor;
+use depyf::value::Value;
+use depyf::vm::Vm;
+
+/// Property-style invariant: for every syntax case and every ISA version,
+/// the canonical decoder must reproduce the compiler's instruction stream
+/// from the raw bytes (decode ∘ encode = id), recursively.
+#[test]
+fn decode_encode_roundtrip_whole_corpus() {
+    fn check(code: &Rc<depyf::bytecode::CodeObject>) {
+        let back = depyf::bytecode::decode(&code.raw, code.version).expect("decode");
+        assert_eq!(back, code.instrs, "raw decode mismatch in {}", code.name);
+        for inner in code.nested_codes() {
+            check(&inner);
+        }
+    }
+    for case in syntax_cases() {
+        for v in IsaVersion::ALL {
+            let code = compile_module(case.source, "<t>", v).unwrap();
+            check(&code);
+        }
+    }
+}
+
+/// Dynamo + XLA backend: same results as eager for a multi-break model.
+#[test]
+fn dynamo_xla_end_to_end_with_breaks() {
+    let src = "\
+torch.manual_seed(3)
+W = torch.randn([6, 6])
+def forward(x):
+    h = x @ W
+    print('stage')
+    if h.sum() >= 0:
+        h = h.relu()
+    return h.mean()
+print(forward(torch.ones([2, 6])).item())
+print(forward(torch.ones([2, 6]) * -1).item())
+";
+    let plain = Vm::new();
+    plain.seed(9);
+    plain.exec_source(src, IsaVersion::V310).unwrap();
+    let expected = plain.take_output();
+
+    let rt = Runtime::cpu().expect("pjrt");
+    let mut vm = Vm::new();
+    vm.seed(9);
+    let dynamo = Dynamo::with_runtime(DynamoConfig { backend: BackendKind::Xla, ..Default::default() }, rt);
+    vm.eval_hook = Some(dynamo.clone());
+    vm.exec_source(src, IsaVersion::V310).unwrap();
+    // XLA fuses differently than the eager reference: compare numerically
+    // (float lines within 1e-5), not textually.
+    let got = vm.take_output();
+    let pairs: Vec<(&str, &str)> = expected.lines().zip(got.lines()).collect();
+    assert_eq!(expected.lines().count(), got.lines().count());
+    for (e, g) in pairs {
+        match (e.parse::<f64>(), g.parse::<f64>()) {
+            (Ok(ev), Ok(gv)) => assert!((ev - gv).abs() < 1e-5, "{} vs {}", e, g),
+            _ => assert_eq!(e, g),
+        }
+    }
+    assert!(dynamo.metrics.graph_breaks.get() >= 1);
+}
+
+/// The session produces a dump dir whose decompiled artifacts recompile.
+#[test]
+fn session_dumps_recompile() {
+    let dir = std::env::temp_dir().join(format!("depyf_it_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut s = DebugSession::prepare_debug(&dir, BackendKind::Eager).unwrap();
+    s.set_version(IsaVersion::V311);
+    s.run_source("main", "def f(x):\n    return (x * 3).relu().sum()\nprint(f(torch.ones([4])).item())\n").unwrap();
+    let files = s.finish().unwrap();
+    let mut checked = 0;
+    for f in files {
+        let name = f.file_name().unwrap().to_string_lossy().to_string();
+        if name.starts_with("__transformed_") && name.ends_with(".py") {
+            let text = std::fs::read_to_string(&f).unwrap();
+            assert!(!text.contains("decompilation failed"), "{}:\n{}", name, text);
+            compile_module(&text, "<dump>", IsaVersion::V311)
+                .unwrap_or_else(|e| panic!("dump {} does not recompile: {}\n{}", name, e, text));
+            checked += 1;
+        }
+    }
+    assert!(checked >= 1, "no transformed dumps written");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Guard semantics under dynamo: shape-specializations accumulate and
+/// dispatch correctly (values stay correct across interleaved shapes).
+#[test]
+fn multi_shape_specialization_correctness() {
+    let src = "\
+def f(x):
+    return (x * 2 + 1).sum()
+a = torch.ones([2, 2])
+b = torch.ones([3])
+print(f(a).item(), f(b).item(), f(a).item(), f(b).item())
+";
+    let plain = Vm::new();
+    plain.exec_source(src, IsaVersion::V310).unwrap();
+    let expected = plain.take_output();
+    let mut vm = Vm::new();
+    let d = Dynamo::new(DynamoConfig::default());
+    vm.eval_hook = Some(d.clone());
+    vm.exec_source(src, IsaVersion::V310).unwrap();
+    assert_eq!(vm.take_output(), expected);
+    assert_eq!(d.metrics.captures.get(), 2);
+    assert!(d.metrics.cache_hits.get() >= 2);
+}
+
+/// depyf decompiles dynamo's output for a function it later re-executes —
+/// the full Figure-1 + Table-1 pipeline in one test.
+#[test]
+fn figure1_pipeline() {
+    let src = "\
+def f(a, b):
+    x = a / (abs(a) + 1)
+    if b.sum() >= 0:
+        b = b * -1
+    return x * b
+print(f(torch.ones([4]), torch.ones([4])).sum().item())
+";
+    let mut vm = Vm::new();
+    let d = Dynamo::new(DynamoConfig::default());
+    vm.eval_hook = Some(d.clone());
+    vm.exec_source(src, IsaVersion::V310).unwrap();
+    let gen = d.generated_codes();
+    assert!(gen.len() >= 3, "expected transformed + resumes, got {:?}", gen.iter().map(|(n, _)| n.clone()).collect::<Vec<_>>());
+    for (name, code) in gen {
+        let text = decompile(&code).unwrap_or_else(|e| panic!("{}: {}", name, e));
+        compile_module(&text, "<rt>", code.version).unwrap_or_else(|e| panic!("{} recompile: {}\n{}", name, e, text));
+    }
+}
+
+/// The full syntax suite passes for depyf on the 3.11 encoding (the
+/// hardest: RESUME/PRECALL/CACHE/relative jumps).
+#[test]
+fn depyf_v311_suite() {
+    let (cell, failures) = run_syntax_suite(&DepyfRs, IsaVersion::V311);
+    assert_eq!(cell.pass, cell.total, "{:#?}", failures);
+}
+
+/// Tensors flow correctly through a compiled-graph callable installed as a
+/// global (the CompiledGraph value type).
+#[test]
+fn compiled_graph_value_call() {
+    let mut vm = Vm::new();
+    let d = Dynamo::new(DynamoConfig::default());
+    vm.eval_hook = Some(d.clone());
+    vm.exec_source("def f(x):\n    return x.relu()\nr = f(torch.ones([2]))\n", IsaVersion::V310).unwrap();
+    // The installed global __compiled_fn_1 is directly callable.
+    let g = vm.get_global("__compiled_fn_1").expect("compiled fn installed");
+    let out = vm.call(&g, &[Value::tensor(Tensor::new(vec![2], vec![-1.0, 5.0]))]).unwrap();
+    match out {
+        Value::Tuple(t) => {
+            let Value::Tensor(r) = &t[0] else { panic!() };
+            assert_eq!(r.data(), &[0.0, 5.0]);
+        }
+        other => panic!("expected tuple, got {:?}", other),
+    }
+}

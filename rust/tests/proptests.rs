@@ -1,0 +1,124 @@
+//! Property-style randomized tests (in-tree harness; the offline
+//! environment has no proptest — see DESIGN.md §8).
+
+use depyf::bytecode::{decode, encode, BinOp, CmpOp, Instr, IsaVersion, UnOp};
+use depyf::dynamo::{Dynamo, DynamoConfig};
+use depyf::tensor::Rng;
+use depyf::vm::Vm;
+
+/// Generate a random but *well-formed* instruction stream: valid jump
+/// targets, ends with a return.
+fn random_stream(rng: &mut Rng, len: usize) -> Vec<Instr> {
+    let mut out = Vec::with_capacity(len + 1);
+    for i in 0..len {
+        let pick = rng.below(14);
+        let arg = rng.below(300) as u32; // exercises EXTENDED_ARG
+        let target = rng.below(len + 1) as u32;
+        out.push(match pick {
+            0 => Instr::LoadConst(arg),
+            1 => Instr::LoadFast(arg % 32),
+            2 => Instr::StoreFast(arg % 32),
+            3 => Instr::LoadGlobal(arg % 64),
+            4 => Instr::Binary(match rng.below(8) {
+                0 => BinOp::Add, 1 => BinOp::Sub, 2 => BinOp::Mul, 3 => BinOp::Div,
+                4 => BinOp::FloorDiv, 5 => BinOp::Mod, 6 => BinOp::Pow, _ => BinOp::MatMul,
+            }),
+            5 => Instr::Compare(match rng.below(6) {
+                0 => CmpOp::Lt, 1 => CmpOp::Le, 2 => CmpOp::Eq, 3 => CmpOp::Ne, 4 => CmpOp::Gt, _ => CmpOp::Ge,
+            }),
+            6 => Instr::Unary(match rng.below(3) { 0 => UnOp::Neg, 1 => UnOp::Not, _ => UnOp::Pos }),
+            7 => Instr::Jump(target),
+            8 => Instr::PopJumpIfFalse(target),
+            9 => Instr::PopJumpIfTrue(target),
+            10 => Instr::Call(arg % 8),
+            11 => Instr::BuildList(arg % 8),
+            12 => Instr::ContainsOp(rng.below(2) == 0),
+            _ => if i + 1 < len { Instr::ForIter(((i + 1) + rng.below(len - i)) as u32) } else { Instr::Nop },
+        });
+    }
+    out.push(Instr::ReturnValue);
+    out
+}
+
+/// decode(encode(stream)) == stream for arbitrary well-formed streams, on
+/// every ISA version — 200 random cases each.
+#[test]
+fn fuzz_encode_decode_roundtrip() {
+    let mut rng = Rng::new(0xDEC0DE);
+    for case in 0..200 {
+        let len = 1 + rng.below(60);
+        let stream = random_stream(&mut rng, len);
+        for v in IsaVersion::ALL {
+            let raw = encode(&stream, v);
+            let back = decode(&raw, v).unwrap_or_else(|e| panic!("case {} on {}: {}\n{:?}", case, v, e, stream));
+            assert_eq!(back, stream, "case {} on {}", case, v);
+        }
+    }
+}
+
+/// Random arithmetic expressions: VM semantics must be stable across all
+/// four ISA encodings (differential testing of the encoder/VM).
+#[test]
+fn fuzz_arith_cross_version() {
+    let mut rng = Rng::new(7777);
+    for _ in 0..60 {
+        // Build a random integer expression program.
+        let a = rng.below(50) as i64;
+        let b = 1 + rng.below(9) as i64;
+        let c = 1 + rng.below(20) as i64; // nonzero: expressions may divide by z
+        let ops = ["+", "-", "*", "//", "%"];
+        let o1 = ops[rng.below(5)];
+        let o2 = ops[rng.below(5)];
+        let src = format!("x = {}\ny = {}\nz = {}\nprint(x {} y {} z, x > y, y != z)\n", a, b, c, o1, o2);
+        let mut outs = Vec::new();
+        for v in IsaVersion::ALL {
+            let vm = Vm::new();
+            vm.exec_source(&src, v).unwrap_or_else(|e| panic!("{}\n{}", e, src));
+            outs.push(vm.take_output());
+        }
+        assert!(outs.windows(2).all(|w| w[0] == w[1]), "{}\n{:?}", src, outs);
+    }
+}
+
+/// Guard-overflow behavior: a function whose guard always misses must stop
+/// recompiling at the cache limit and keep producing correct results.
+#[test]
+fn cache_limit_falls_back_gracefully() {
+    let src = "\
+counter = 0
+def f(x, k):
+    return (x * k).sum()
+t = torch.ones([2])
+total = 0.0
+for k in range(20):
+    total += f(t, k).item()
+print(total)
+";
+    let plain = Vm::new();
+    plain.exec_source(src, IsaVersion::V310).unwrap();
+    let expected = plain.take_output();
+
+    let mut vm = Vm::new();
+    let d = Dynamo::new(DynamoConfig { cache_limit: 4, ..Default::default() });
+    vm.eval_hook = Some(d.clone());
+    vm.exec_source(src, IsaVersion::V310).unwrap();
+    assert_eq!(vm.take_output(), expected);
+    // Captures stop at the limit; the remaining calls run uncompiled.
+    assert!(d.metrics.captures.get() <= 5, "{:?}", d.metrics.report());
+    assert!(d.metrics.guard_failures.get() >= 1);
+}
+
+/// Error behavior must survive compilation: a runtime error inside a
+/// compiled region surfaces identically (inline raise path).
+#[test]
+fn errors_survive_compilation() {
+    let src = "def f(x):\n    if x.sum().item() > 0:\n        raise 'positive sum'\n    return x\nf(torch.ones([2]))\n";
+    let plain = Vm::new();
+    let e1 = plain.exec_source(src, IsaVersion::V310).unwrap_err();
+    let mut vm = Vm::new();
+    let d = Dynamo::new(DynamoConfig::default());
+    vm.eval_hook = Some(d);
+    let e2 = vm.exec_source(src, IsaVersion::V310).unwrap_err();
+    assert_eq!(e1.message, e2.message);
+    assert!(e1.message.contains("positive sum"));
+}

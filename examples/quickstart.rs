@@ -1,15 +1,17 @@
-//! Quickstart — the paper's Figure 2 workflow:
+//! Quickstart — the paper's Figure 2 workflow through the `depyf::api`
+//! session builder:
 //!
-//! 1. `prepare_debug(dir)`: run a model under the compiler and dump
-//!    everything it did (`full_code.py`, `__compiled_fn_*.py`,
-//!    `__transformed_*.py`, disassembly).
-//! 2. `debug()`: set a breakpoint inside a compiled graph's dumped source
-//!    and step through it line by line, inspecting intermediate tensors.
+//! 1. `Session::builder().dump_to(dir).build()?`: run a model under the
+//!    compiler and dump everything it did (`full_code.py`,
+//!    `__compiled_fn_*.py`, `__transformed_*.py`, disassembly) as typed
+//!    artifacts indexed by `manifest.json`.
+//! 2. `.trace(TraceMode::StepGraphs)`: set a breakpoint inside a compiled
+//!    graph's dumped source and step through it line by line, inspecting
+//!    intermediate tensors.
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use depyf::backend::BackendKind;
-use depyf::session::DebugSession;
+use depyf::prelude::*;
 
 const MODEL: &str = "\
 torch.manual_seed(0)
@@ -23,34 +25,42 @@ print('out sum:', forward(x).sum().item())
 print('out sum:', forward(x).sum().item())
 ";
 
-fn main() -> Result<(), String> {
+fn main() -> Result<(), DepyfError> {
     let dir = std::env::temp_dir().join("depyf_quickstart");
     let _ = std::fs::remove_dir_all(&dir);
 
     // ---- with depyf.prepare_debug(dir): ----
     println!("== prepare_debug: capture + dump ==");
-    let mut session = DebugSession::prepare_debug(&dir, BackendKind::Eager)?;
-    session.run_source("main", MODEL).map_err(|e| e.to_string())?;
+    let mut session = Session::builder().dump_to(&dir).backend_named("eager").build()?;
+    session.run_source("main", MODEL)?;
     println!("{}", session.vm.take_output());
     println!("compiler metrics: {}", session.dynamo.metrics.report());
-    let files = session.finish()?;
-    println!("\ndumped {} files into {}:", files.len(), dir.display());
-    for f in &files {
-        println!("  {}", f.file_name().unwrap().to_string_lossy());
+    let artifacts = session.finish()?;
+    println!("\ndumped {} artifacts into {} (indexed by manifest.json):", artifacts.len(), dir.display());
+    for a in &artifacts {
+        println!("  [{:>18}] {}", a.kind.as_str(), a.file_name());
     }
-    let compiled = std::fs::read_to_string(dir.join("__compiled_fn_1.py")).map_err(|e| e.to_string())?;
+    let compiled = std::fs::read_to_string(dir.join("__compiled_fn_1.py"))?;
     println!("\n--- __compiled_fn_1.py (the captured graph) ---\n{}", compiled);
-    let transformed = std::fs::read_to_string(dir.join("__transformed___transformed_forward.py")).map_err(|e| e.to_string())?;
-    println!("--- __transformed_forward.py (decompiled transformed bytecode) ---\n{}", transformed);
+    let transformed = artifacts
+        .iter()
+        .find(|a| a.kind == ArtifactKind::TransformedSource)
+        .expect("transformed source dumped");
+    println!(
+        "--- {} (decompiled transformed bytecode of '{}') ---\n{}",
+        transformed.file_name(),
+        transformed.name,
+        std::fs::read_to_string(&transformed.path)?
+    );
 
     // ---- with depyf.debug(): ----
     println!("== debug: step through the compiled graph ==");
     let dir2 = std::env::temp_dir().join("depyf_quickstart_dbg");
     let _ = std::fs::remove_dir_all(&dir2);
-    let mut dbg_session = DebugSession::debug(&dir2)?;
+    let mut dbg_session = Session::builder().dump_to(&dir2).trace(TraceMode::StepGraphs).build()?;
     // Break on line 3 of the compiled graph (the second op).
     dbg_session.debugger.break_at("__compiled_fn_1.py", 3);
-    dbg_session.run_source("main", MODEL).map_err(|e| e.to_string())?;
+    dbg_session.run_source("main", MODEL)?;
     dbg_session.finish()?;
     for ev in dbg_session.debugger.events() {
         println!(

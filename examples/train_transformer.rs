@@ -9,6 +9,7 @@
 
 use depyf::runtime::{Arg, Runtime};
 use depyf::tensor::{Rng, Tensor};
+use depyf::DepyfError;
 
 const VOCAB: usize = 128;
 const SEQ: usize = 32;
@@ -43,7 +44,7 @@ fn make_batch(rng: &mut Rng) -> (Tensor, Tensor) {
     (tokens, Tensor::new(vec![BATCH, SEQ], tgt))
 }
 
-fn main() -> Result<(), String> {
+fn main() -> Result<(), DepyfError> {
     let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".to_string());
     let rt = Runtime::cpu_with_artifacts(&dir)?;
     println!("PJRT platform: {}", rt.platform());
@@ -80,7 +81,8 @@ fn main() -> Result<(), String> {
         }
         let out = rt.execute_args(&step_exe, &args)?;
         let loss0 = out[0].item();
-        let expected: f32 = golden.trim().parse().map_err(|e| format!("golden parse: {}", e))?;
+        let expected: f32 =
+            golden.trim().parse().map_err(|e| DepyfError::Parse(format!("golden parse: {}", e)))?;
         let diff = (loss0 - expected).abs();
         println!("golden check: rust-PJRT loss {:.6} vs jax {:.6} (|d|={:.2e})", loss0, expected, diff);
         assert!(diff < 1e-3, "golden mismatch");

@@ -9,7 +9,7 @@
 use std::rc::Rc;
 use std::time::Instant;
 
-use depyf::backend::{compile_graph, BackendKind};
+use depyf::api::{Backend, CompileCtx, EagerBackend, XlaBackend};
 use depyf::graph::{Graph, OpKind};
 use depyf::runtime::Runtime;
 use depyf::tensor::{Rng, Tensor};
@@ -48,8 +48,9 @@ fn main() {
         let g = Rc::new(mlp_graph(n, d));
         let flops = g.flops();
         let name = format!("bench_d{}", d);
-        let eager = compile_graph(&name, Rc::clone(&g), BackendKind::Eager, None);
-        let xla = compile_graph(&name, Rc::clone(&g), BackendKind::Xla, Some(Rc::clone(&rt)));
+        let eager = EagerBackend.compile(&name, Rc::clone(&g), &CompileCtx::default()).expect("eager");
+        let xla_ctx = CompileCtx { runtime: Some(Rc::clone(&rt)), ..Default::default() };
+        let xla = XlaBackend.compile(&name, Rc::clone(&g), &xla_ctx).expect("xla compile");
         assert_eq!(xla.backend_name, "xla", "xla backend failed: {}", xla.backend_name);
         let inputs: Vec<Rc<Tensor>> = vec![
             Rc::new(Tensor::randn(&[n, d], &mut rng)),

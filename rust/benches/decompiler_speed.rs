@@ -11,6 +11,7 @@ use std::time::Instant;
 use depyf::bytecode::IsaVersion;
 use depyf::corpus::syntax_cases;
 use depyf::decompiler::baselines::all_tools_rc;
+use depyf::decompiler::DecompilerTool;
 use depyf::dynamo::{Dynamo, DynamoConfig};
 use depyf::pylang::compile_module;
 use depyf::vm::Vm;

@@ -7,6 +7,7 @@
 use depyf::bytecode::IsaVersion;
 use depyf::corpus::{render_table1, run_model_suite, run_syntax_suite, run_table1};
 use depyf::decompiler::baselines::all_tools_rc;
+use depyf::decompiler::DecompilerTool;
 
 fn main() {
     println!("=== Table 1: decompiler correctness (regenerated) ===\n");

@@ -1,0 +1,268 @@
+//! The pluggable [`Backend`] trait, the process-wide backend registry, and
+//! the explicit [`FallbackPolicy`] — the analogue of
+//! `torch.compile(backend=...)` accepting both built-in names and custom
+//! callables.
+//!
+//! `Eager` and `Xla` are just two implementations registered by default;
+//! [`register_backend`] lets users plug their own compiler into dynamo and
+//! [`crate::api::SessionBuilder`] without touching this crate.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use crate::backend::{eager, xla};
+use crate::graph::{CompiledGraphFn, Graph};
+use crate::runtime::Runtime;
+
+use super::error::DepyfError;
+
+/// What dynamo does when a backend fails to compile a captured graph.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum FallbackPolicy {
+    /// Degrade to the eager reference executor (how torch.compile backends
+    /// behave); the reason is recorded in the compiled fn's `backend_name`
+    /// and in the frontend log — never silently.
+    #[default]
+    Eager,
+    /// Propagate the backend error instead of degrading.
+    Error,
+}
+
+/// Everything a backend may need at compile time.
+#[derive(Clone, Default)]
+pub struct CompileCtx {
+    /// PJRT runtime, for backends that lower to HLO.
+    pub runtime: Option<Rc<Runtime>>,
+    /// Applied by the caller driving [`compile_with_policy`] (dynamo, the
+    /// legacy shim) — backends themselves must NOT apply it; they report
+    /// failures and let the policy decide.
+    pub fallback: FallbackPolicy,
+}
+
+/// A graph compiler: turns a captured [`Graph`] into a callable
+/// [`CompiledGraphFn`]. Implementations are registered by name and looked
+/// up like `torch.compile(backend="name")`.
+pub trait Backend {
+    /// Registry key and the default `backend_name` stamped on output.
+    fn name(&self) -> &str;
+
+    /// True if `compile` needs `ctx.runtime`. `SessionBuilder::build()`
+    /// uses this to reject misconfiguration up front under
+    /// [`FallbackPolicy::Error`].
+    fn requires_runtime(&self) -> bool {
+        false
+    }
+
+    /// Compile one captured graph.
+    fn compile(&self, name: &str, graph: Rc<Graph>, ctx: &CompileCtx) -> Result<CompiledGraphFn, DepyfError>;
+}
+
+/// Build an eager-executing [`CompiledGraphFn`] with an explicit
+/// `backend_name` — the reference executor and the fallback target.
+pub fn eager_graph_fn(name: &str, graph: Rc<Graph>, backend_name: String) -> CompiledGraphFn {
+    let g = Rc::clone(&graph);
+    CompiledGraphFn {
+        name: name.to_string(),
+        graph,
+        backend_name,
+        executor: Box::new(move |inputs| eager::execute(&g, inputs)),
+        calls: std::cell::Cell::new(0),
+    }
+}
+
+/// Node-by-node CPU reference execution.
+pub struct EagerBackend;
+
+impl Backend for EagerBackend {
+    fn name(&self) -> &str {
+        "eager"
+    }
+
+    fn compile(&self, name: &str, graph: Rc<Graph>, _ctx: &CompileCtx) -> Result<CompiledGraphFn, DepyfError> {
+        Ok(eager_graph_fn(name, graph, "eager".into()))
+    }
+}
+
+/// Lower to HLO text, compile + run via PJRT (fused kernels dispatched to
+/// AOT Pallas artifacts when shapes match).
+pub struct XlaBackend;
+
+impl Backend for XlaBackend {
+    fn name(&self) -> &str {
+        "xla"
+    }
+
+    fn requires_runtime(&self) -> bool {
+        true
+    }
+
+    fn compile(&self, name: &str, graph: Rc<Graph>, ctx: &CompileCtx) -> Result<CompiledGraphFn, DepyfError> {
+        let rt = ctx.runtime.as_ref().ok_or_else(|| {
+            DepyfError::Backend("xla backend requires a PJRT runtime (SessionBuilder::runtime)".into())
+        })?;
+        xla::compile(name, &graph, rt)
+    }
+}
+
+/// A compile that went through the fallback policy: the callable plus,
+/// when the eager fallback engaged, the original backend error. Callers
+/// use `fallback_reason` to log the degrade — never infer it from
+/// `backend_name`, which custom backends are free to stamp.
+#[derive(Debug)]
+pub struct PolicyCompiled {
+    pub f: CompiledGraphFn,
+    /// `Some(reason)` iff the backend failed and [`FallbackPolicy::Eager`]
+    /// substituted the eager executor.
+    pub fallback_reason: Option<DepyfError>,
+}
+
+/// Compile through `backend`, applying `ctx.fallback` on failure — the
+/// single implementation of the fallback policy.
+///
+/// Under [`FallbackPolicy::Eager`] this never fails: the returned fn
+/// executes eagerly, the degrade reason is returned in `fallback_reason`
+/// and also recorded in `backend_name` (`"eager (xla fallback: ...)"`).
+pub fn compile_with_policy(
+    backend: &dyn Backend,
+    name: &str,
+    graph: Rc<Graph>,
+    ctx: &CompileCtx,
+) -> Result<PolicyCompiled, DepyfError> {
+    match backend.compile(name, Rc::clone(&graph), ctx) {
+        Ok(f) => Ok(PolicyCompiled { f, fallback_reason: None }),
+        Err(e) => match ctx.fallback {
+            FallbackPolicy::Error => Err(e),
+            FallbackPolicy::Eager => {
+                let f = eager_graph_fn(name, graph, format!("eager ({} fallback: {})", backend.name(), e));
+                Ok(PolicyCompiled { f, fallback_reason: Some(e) })
+            }
+        },
+    }
+}
+
+thread_local! {
+    static REGISTRY: RefCell<HashMap<String, Rc<dyn Backend>>> = RefCell::new(builtin_backends());
+}
+
+fn builtin_backends() -> HashMap<String, Rc<dyn Backend>> {
+    let mut m: HashMap<String, Rc<dyn Backend>> = HashMap::new();
+    m.insert("eager".into(), Rc::new(EagerBackend));
+    m.insert("xla".into(), Rc::new(XlaBackend));
+    m
+}
+
+/// Register (or replace) a backend under its `name()`. Registered backends
+/// are visible to [`lookup_backend`], `SessionBuilder::backend_named` and
+/// the CLI's `--backend` flag. The registry is per-thread (the whole stack
+/// is `Rc`-based and single-threaded).
+pub fn register_backend(backend: Rc<dyn Backend>) {
+    REGISTRY.with(|r| {
+        r.borrow_mut().insert(backend.name().to_string(), backend);
+    });
+}
+
+/// Look up a registered backend by name (`"eager"` and `"xla"` are
+/// pre-registered).
+pub fn lookup_backend(name: &str) -> Option<Rc<dyn Backend>> {
+    REGISTRY.with(|r| r.borrow().get(name).cloned())
+}
+
+/// All registered backend names, sorted — for usage messages and docs.
+pub fn backend_names() -> Vec<String> {
+    REGISTRY.with(|r| {
+        let mut v: Vec<String> = r.borrow().keys().cloned().collect();
+        v.sort();
+        v
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::OpKind;
+    use crate::tensor::Tensor;
+
+    fn relu_graph() -> Rc<Graph> {
+        let mut g = Graph::new("g");
+        let x = g.placeholder("x", &[2]);
+        let r = g.add_op(OpKind::Relu, vec![x]).unwrap();
+        g.set_outputs(vec![r]);
+        Rc::new(g)
+    }
+
+    #[test]
+    fn builtins_are_registered() {
+        assert!(lookup_backend("eager").is_some());
+        assert!(lookup_backend("xla").is_some());
+        assert!(lookup_backend("missing").is_none());
+        let names = backend_names();
+        assert!(names.contains(&"eager".to_string()) && names.contains(&"xla".to_string()));
+    }
+
+    #[test]
+    fn custom_backend_registration_round_trip() {
+        struct Doubler;
+        impl Backend for Doubler {
+            fn name(&self) -> &str {
+                "doubler-test"
+            }
+            fn compile(
+                &self,
+                name: &str,
+                graph: Rc<Graph>,
+                _ctx: &CompileCtx,
+            ) -> Result<CompiledGraphFn, DepyfError> {
+                Ok(eager_graph_fn(name, graph, "doubler-test".into()))
+            }
+        }
+        register_backend(Rc::new(Doubler));
+        let b = lookup_backend("doubler-test").expect("registered");
+        assert_eq!(b.name(), "doubler-test");
+        assert!(!b.requires_runtime());
+        let f = b.compile("g", relu_graph(), &CompileCtx::default()).unwrap();
+        assert_eq!(f.backend_name, "doubler-test");
+        let out = f.call(&[Rc::new(Tensor::new(vec![2], vec![-1.0, 2.0]))]).unwrap();
+        assert_eq!(out[0].data(), &[0.0, 2.0]);
+    }
+
+    #[test]
+    fn xla_without_runtime_errors_under_error_policy() {
+        let ctx = CompileCtx { runtime: None, fallback: FallbackPolicy::Error };
+        let err = compile_with_policy(&XlaBackend, "g", relu_graph(), &ctx).unwrap_err();
+        assert_eq!(err.layer(), "backend");
+        assert!(err.to_string().contains("runtime"), "{}", err);
+    }
+
+    #[test]
+    fn xla_without_runtime_degrades_under_eager_policy() {
+        let ctx = CompileCtx { runtime: None, fallback: FallbackPolicy::Eager };
+        let pc = compile_with_policy(&XlaBackend, "g", relu_graph(), &ctx).unwrap();
+        assert!(pc.fallback_reason.is_some(), "degrade must be signalled explicitly");
+        assert!(pc.f.backend_name.starts_with("eager (xla fallback:"), "{}", pc.f.backend_name);
+        let out = pc.f.call(&[Rc::new(Tensor::new(vec![2], vec![-3.0, 3.0]))]).unwrap();
+        assert_eq!(out[0].data(), &[0.0, 3.0]);
+    }
+
+    #[test]
+    fn successful_custom_backend_reports_no_fallback() {
+        struct Tagger;
+        impl Backend for Tagger {
+            fn name(&self) -> &str {
+                "tagger"
+            }
+            fn compile(
+                &self,
+                name: &str,
+                graph: Rc<Graph>,
+                _ctx: &CompileCtx,
+            ) -> Result<CompiledGraphFn, DepyfError> {
+                Ok(eager_graph_fn(name, graph, "tagger-v2".into()))
+            }
+        }
+        let pc = compile_with_policy(&Tagger, "g", relu_graph(), &CompileCtx::default()).unwrap();
+        // A custom backend_name differing from name() is NOT a fallback.
+        assert!(pc.fallback_reason.is_none());
+        assert_eq!(pc.f.backend_name, "tagger-v2");
+    }
+}

@@ -1,0 +1,134 @@
+//! [`DepyfError`] — the crate-wide structured error type.
+//!
+//! Every public layer (session, hijack, backend, dynamo, runtime,
+//! decompiler) reports failures through this enum instead of bare
+//! `String`s, so callers can match on the failing layer and tooling can
+//! map errors to exit codes without string sniffing.
+
+use std::fmt;
+
+use crate::decompiler::DecompileError;
+use crate::pylang::CompileError;
+use crate::vm::VmError;
+
+/// The crate-wide error type. Variants name the layer that failed.
+#[derive(Debug)]
+pub enum DepyfError {
+    /// Filesystem failures (dump directories, artifact files).
+    Io(String),
+    /// Source, manifest or HLO text that could not be parsed.
+    Parse(String),
+    /// Graph capture / bytecode compilation failures.
+    Compile(String),
+    /// VM runtime errors (carries the pylang traceback).
+    Vm(VmError),
+    /// A graph backend failed to compile or execute a captured graph.
+    Backend(String),
+    /// PJRT runtime failures (client startup, HLO compile, execution).
+    Runtime(String),
+    /// Bytecode decompilation failures.
+    Decompile(String),
+    /// `SessionBuilder` misconfiguration, caught at `build()` time.
+    Builder(String),
+}
+
+impl DepyfError {
+    /// An [`DepyfError::Io`] with a path/operation context prefix.
+    pub fn io(context: impl fmt::Display, err: impl fmt::Display) -> DepyfError {
+        DepyfError::Io(format!("{}: {}", context, err))
+    }
+
+    /// The layer tag ("io", "parse", ...) — stable across message edits.
+    pub fn layer(&self) -> &'static str {
+        match self {
+            DepyfError::Io(_) => "io",
+            DepyfError::Parse(_) => "parse",
+            DepyfError::Compile(_) => "compile",
+            DepyfError::Vm(_) => "vm",
+            DepyfError::Backend(_) => "backend",
+            DepyfError::Runtime(_) => "runtime",
+            DepyfError::Decompile(_) => "decompile",
+            DepyfError::Builder(_) => "builder",
+        }
+    }
+}
+
+impl fmt::Display for DepyfError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DepyfError::Vm(e) => write!(f, "vm error: {}", e),
+            DepyfError::Io(m)
+            | DepyfError::Parse(m)
+            | DepyfError::Compile(m)
+            | DepyfError::Backend(m)
+            | DepyfError::Runtime(m)
+            | DepyfError::Decompile(m)
+            | DepyfError::Builder(m) => write!(f, "{} error: {}", self.layer(), m),
+        }
+    }
+}
+
+impl std::error::Error for DepyfError {}
+
+impl From<std::io::Error> for DepyfError {
+    fn from(e: std::io::Error) -> DepyfError {
+        DepyfError::Io(e.to_string())
+    }
+}
+
+impl From<VmError> for DepyfError {
+    fn from(e: VmError) -> DepyfError {
+        DepyfError::Vm(e)
+    }
+}
+
+impl From<CompileError> for DepyfError {
+    fn from(e: CompileError) -> DepyfError {
+        DepyfError::Parse(e.to_string())
+    }
+}
+
+impl From<DecompileError> for DepyfError {
+    fn from(e: DecompileError) -> DepyfError {
+        DepyfError::Decompile(e.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_names_the_failing_layer() {
+        assert_eq!(DepyfError::Backend("boom".into()).to_string(), "backend error: boom");
+        assert_eq!(DepyfError::Builder("missing dir".into()).to_string(), "builder error: missing dir");
+        assert_eq!(DepyfError::Io("x".into()).layer(), "io");
+    }
+
+    #[test]
+    fn from_vm_error_preserves_traceback() {
+        let mut e = VmError::new("division by zero");
+        e.traceback.push(("f".into(), 3));
+        let d = DepyfError::from(e);
+        match &d {
+            DepyfError::Vm(inner) => assert_eq!(inner.traceback.len(), 1),
+            other => panic!("expected Vm, got {:?}", other),
+        }
+        assert!(d.to_string().contains("division by zero"));
+        assert!(d.to_string().contains("in f"));
+    }
+
+    #[test]
+    fn from_io_error() {
+        let e = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let d = DepyfError::from(e);
+        assert_eq!(d.layer(), "io");
+        assert!(d.to_string().contains("gone"));
+    }
+
+    #[test]
+    fn io_constructor_adds_context() {
+        let d = DepyfError::io("read /tmp/x", "permission denied");
+        assert_eq!(d.to_string(), "io error: read /tmp/x: permission denied");
+    }
+}

@@ -1,0 +1,34 @@
+//! `depyf::api` — the unified public entry point.
+//!
+//! This layer packages the whole stack behind four small, typed surfaces:
+//!
+//! * [`Session`] / [`SessionBuilder`] — the paper's two context managers
+//!   (`prepare_debug`, `debug`) as one fluent builder:
+//!   `Session::builder().backend_named("xla").isa(IsaVersion::V311)
+//!   .dump_to(dir).trace(TraceMode::StepGraphs).build()?`.
+//! * [`Backend`] + [`register_backend`] — pluggable graph compilers with an
+//!   explicit [`FallbackPolicy`], mirroring `torch.compile(backend=...)`.
+//! * [`Artifact`] / [`ArtifactKind`] — typed dump artifacts returned by
+//!   `finish()`, indexed by a machine-readable `manifest.json`.
+//! * [`DepyfError`] — the crate-wide structured error type; no public API
+//!   returns `Result<_, String>`.
+//!
+//! The older per-module entry points (`session::DebugSession`,
+//! `backend::compile_graph`) remain as thin deprecated shims over this
+//! module.
+
+mod artifact;
+mod backend;
+mod error;
+mod session;
+
+pub use artifact::{
+    load_manifest, parse_manifest, render_manifest, write_manifest, Artifact, ArtifactKind, MANIFEST_FILE,
+    MANIFEST_SCHEMA_VERSION,
+};
+pub use backend::{
+    backend_names, compile_with_policy, eager_graph_fn, lookup_backend, register_backend, Backend,
+    CompileCtx, EagerBackend, FallbackPolicy, PolicyCompiled, XlaBackend,
+};
+pub use error::DepyfError;
+pub use session::{Session, SessionBuilder, TraceMode};

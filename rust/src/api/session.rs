@@ -1,0 +1,369 @@
+//! [`Session`] and its fluent [`SessionBuilder`] — the single entry point
+//! to depyf's two workflows (the paper's two context managers):
+//!
+//! ```text
+//! // with depyf.prepare_debug(dir): capture + dump everything
+//! let mut s = Session::builder().dump_to(dir).build()?;
+//! s.run_source("main", src)?;
+//! let artifacts = s.finish()?;          // typed Artifacts + manifest.json
+//!
+//! // with depyf.debug(): step through compiled-graph dump lines
+//! let mut s = Session::builder().dump_to(dir).trace(TraceMode::StepGraphs).build()?;
+//! s.debugger.break_at("__compiled_fn_1.py", 3);
+//! s.run_source("main", src)?;
+//! ```
+//!
+//! The builder subsumes the old `prepare_debug` / `prepare_debug_with_runtime`
+//! / `debug` constructors (kept as deprecated shims in [`crate::session`]):
+//! any registered [`Backend`] can be plugged in, the ISA version and
+//! fallback policy are explicit, and `finish()` returns typed
+//! [`Artifact`]s plus a machine-readable `manifest.json`.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use crate::bytecode::IsaVersion;
+use crate::debugger::Debugger;
+use crate::dynamo::{Dynamo, DynamoConfig, GraphTracer};
+use crate::graph::print_graph_with_lines;
+use crate::hijack::{dump_all, link_source, DumpDir};
+use crate::runtime::Runtime;
+use crate::value::Value;
+use crate::vm::{Vm, VmError};
+
+use super::artifact::{write_manifest, Artifact};
+use super::backend::{backend_names, lookup_backend, Backend, EagerBackend, FallbackPolicy};
+use super::error::DepyfError;
+
+/// How captured graphs execute inside the session.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TraceMode {
+    /// Compile with the configured backend; no per-node callbacks
+    /// (`depyf.prepare_debug`).
+    #[default]
+    Capture,
+    /// Route graphs through the traced eager executor so the debugger can
+    /// stop on `__compiled_fn_*.py` lines (`depyf.debug`). Overrides the
+    /// backend choice — stepping requires the eager executor.
+    StepGraphs,
+}
+
+/// Adapter: dynamo per-node graph events → debugger stops at dump lines.
+struct GraphDebugAdapter {
+    dump_root: PathBuf,
+    debugger: Rc<Debugger>,
+    /// graph name -> (node id -> line) — filled lazily as graphs compile.
+    tables: std::cell::RefCell<HashMap<String, HashMap<usize, u32>>>,
+    dynamo: std::cell::RefCell<Option<Rc<Dynamo>>>,
+}
+
+impl GraphTracer for GraphDebugAdapter {
+    fn on_node(&self, graph_name: &str, node_id: usize, value: &crate::tensor::Tensor) {
+        // Resolve (or build) the line table for this graph straight from
+        // the printer — the single source of truth for dump layout.
+        let line = {
+            let mut tables = self.tables.borrow_mut();
+            if !tables.contains_key(graph_name) {
+                if let Some(d) = self.dynamo.borrow().as_ref() {
+                    if let Some((_, g)) = d.graphs().into_iter().find(|(n, _)| n == graph_name) {
+                        tables.insert(graph_name.to_string(), print_graph_with_lines(&g).1);
+                    }
+                }
+            }
+            tables.get(graph_name).and_then(|t| t.get(&node_id)).copied()
+        };
+        if let Some(line) = line {
+            let file = self.dump_root.join(format!("{}.py", graph_name));
+            self.debugger.graph_stop(&file.to_string_lossy(), line, graph_name, &format!("{}", value));
+        }
+    }
+}
+
+/// A depyf debugging session: a VM wired to a dynamo instance whose every
+/// artifact lands in a [`DumpDir`].
+pub struct Session {
+    pub vm: Vm,
+    pub dynamo: Rc<Dynamo>,
+    pub dump: DumpDir,
+    pub debugger: Rc<Debugger>,
+    adapter: Rc<GraphDebugAdapter>,
+    version: IsaVersion,
+}
+
+impl std::fmt::Debug for Session {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "<depyf session: backend {}, dump {}>",
+            self.dynamo.config.backend.name(),
+            self.dump.root().display()
+        )
+    }
+}
+
+/// Fluent configuration for [`Session`]; see the module docs for the shape.
+pub struct SessionBuilder {
+    dir: Option<PathBuf>,
+    backend: Option<Rc<dyn Backend>>,
+    backend_name: Option<String>,
+    isa: IsaVersion,
+    runtime: Option<Rc<Runtime>>,
+    trace: TraceMode,
+    fallback: FallbackPolicy,
+}
+
+impl Session {
+    /// Start configuring a session. `dump_to(dir)` is the only required
+    /// call; everything else defaults (eager backend, ISA 3.11,
+    /// `TraceMode::Capture`, `FallbackPolicy::Eager`).
+    pub fn builder() -> SessionBuilder {
+        SessionBuilder {
+            dir: None,
+            backend: None,
+            backend_name: None,
+            isa: IsaVersion::V311,
+            runtime: None,
+            trace: TraceMode::Capture,
+            fallback: FallbackPolicy::Eager,
+        }
+    }
+
+    /// Override the ISA version used by [`Session::run_source`].
+    pub fn set_version(&mut self, v: IsaVersion) {
+        self.version = v;
+    }
+
+    /// Run a source program inside the session. The source is hijacked into
+    /// the dump dir first, so the debugger reports dump-relative locations.
+    pub fn run_source(&mut self, name: &str, src: &str) -> Result<Value, VmError> {
+        let path = link_source(&self.dump, name, src).map_err(|e| VmError::new(e.to_string()))?;
+        let code = crate::pylang::compile_module(src, &path.to_string_lossy(), self.version)
+            .map_err(|e| VmError::new(e.to_string()))?;
+        self.vm.run_module(&code)
+    }
+
+    /// Write all dumps (`full_code.py`, `__compiled_fn_*.py`,
+    /// `__transformed_*.py`, disassembly, guards) plus a `manifest.json`
+    /// index, and return the typed artifact list.
+    pub fn finish(&self) -> Result<Vec<Artifact>, DepyfError> {
+        let artifacts = dump_all(&self.dynamo, &self.dump)?;
+        write_manifest(self.dump.root(), &artifacts)?;
+        let _ = &self.adapter;
+        Ok(artifacts)
+    }
+}
+
+impl SessionBuilder {
+    /// Where dump files land (required).
+    pub fn dump_to(mut self, dir: impl AsRef<Path>) -> SessionBuilder {
+        self.dir = Some(dir.as_ref().to_path_buf());
+        self
+    }
+
+    /// Compile captured graphs with this backend instance.
+    pub fn backend(mut self, backend: Rc<dyn Backend>) -> SessionBuilder {
+        self.backend = Some(backend);
+        self.backend_name = None;
+        self
+    }
+
+    /// Compile captured graphs with a registered backend, looked up by name
+    /// at `build()` time (like `torch.compile(backend="name")`).
+    pub fn backend_named(mut self, name: impl Into<String>) -> SessionBuilder {
+        self.backend_name = Some(name.into());
+        self.backend = None;
+        self
+    }
+
+    /// ISA version for sources run through the session.
+    pub fn isa(mut self, v: IsaVersion) -> SessionBuilder {
+        self.isa = v;
+        self
+    }
+
+    /// PJRT runtime for backends that lower to HLO (e.g. `xla`).
+    pub fn runtime(mut self, rt: Rc<Runtime>) -> SessionBuilder {
+        self.runtime = Some(rt);
+        self
+    }
+
+    /// Capture-only (default) or step-through-graphs tracing.
+    pub fn trace(mut self, mode: TraceMode) -> SessionBuilder {
+        self.trace = mode;
+        self
+    }
+
+    /// What to do when the backend fails on a captured graph.
+    pub fn fallback(mut self, policy: FallbackPolicy) -> SessionBuilder {
+        self.fallback = policy;
+        self
+    }
+
+    /// Validate the configuration and wire up the session.
+    pub fn build(self) -> Result<Session, DepyfError> {
+        let dir = self
+            .dir
+            .ok_or_else(|| DepyfError::Builder("SessionBuilder: dump_to(dir) is required".into()))?;
+        let backend: Rc<dyn Backend> = match (self.backend, self.backend_name) {
+            (Some(b), _) => b,
+            (None, Some(name)) => lookup_backend(&name).ok_or_else(|| {
+                DepyfError::Builder(format!(
+                    "unknown backend '{}' (registered: {})",
+                    name,
+                    backend_names().join(", ")
+                ))
+            })?,
+            (None, None) => Rc::new(EagerBackend),
+        };
+        // StepGraphs routes every graph through the traced eager executor,
+        // so the backend is never consulted and needs no runtime.
+        if backend.requires_runtime()
+            && self.runtime.is_none()
+            && self.fallback == FallbackPolicy::Error
+            && self.trace != TraceMode::StepGraphs
+        {
+            return Err(DepyfError::Builder(format!(
+                "backend '{}' requires a runtime (SessionBuilder::runtime) under FallbackPolicy::Error",
+                backend.name()
+            )));
+        }
+        let dump = DumpDir::create(&dir)?;
+        let debugger = Debugger::shared();
+        let adapter = Rc::new(GraphDebugAdapter {
+            dump_root: dump.root().to_path_buf(),
+            debugger: Rc::clone(&debugger),
+            tables: Default::default(),
+            dynamo: std::cell::RefCell::new(None),
+        });
+        let config = DynamoConfig {
+            backend,
+            fallback: self.fallback,
+            tracer: if self.trace == TraceMode::StepGraphs {
+                Some(adapter.clone() as Rc<dyn GraphTracer>)
+            } else {
+                None
+            },
+            ..Default::default()
+        };
+        let dynamo = match self.runtime {
+            Some(rt) => Dynamo::with_runtime(config, rt),
+            None => Dynamo::new(config),
+        };
+        *adapter.dynamo.borrow_mut() = Some(Rc::clone(&dynamo));
+        let mut vm = Vm::new();
+        vm.eval_hook = Some(dynamo.clone());
+        vm.tracer = Some(debugger.clone());
+        Ok(Session { vm, dynamo, dump, debugger, adapter, version: self.isa })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::{load_manifest, ArtifactKind};
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("depyf_session_{}_{}", tag, std::process::id()))
+    }
+
+    #[test]
+    fn builder_dumps_everything_with_manifest() {
+        let dir = tmpdir("prep");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut s = Session::builder().dump_to(&dir).build().unwrap();
+        s.run_source(
+            "main",
+            "def f(x):\n    y = x * 2\n    print('mid')\n    return y.sum()\nprint(f(torch.ones([3])).item())\n",
+        )
+        .unwrap();
+        let artifacts = s.finish().unwrap();
+        assert!(artifacts.iter().any(|a| a.kind == ArtifactKind::FullCode), "{:?}", artifacts);
+        assert!(artifacts.iter().any(|a| a.kind == ArtifactKind::CompiledGraph), "{:?}", artifacts);
+        assert!(artifacts.iter().any(|a| a.kind == ArtifactKind::Source && a.name == "main"), "{:?}", artifacts);
+        let transformed: Vec<&Artifact> =
+            artifacts.iter().filter(|a| a.kind == ArtifactKind::TransformedSource).collect();
+        assert!(!transformed.is_empty(), "{:?}", artifacts);
+        let content = std::fs::read_to_string(&transformed[0].path).unwrap();
+        assert!(content.contains("__compiled_fn_"), "{}", content);
+        // The manifest round-trips and indexes exactly what finish() returned.
+        let indexed = load_manifest(&dir).unwrap();
+        assert_eq!(indexed, artifacts);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn debugger_steps_compiled_graph_lines() {
+        let dir = tmpdir("dbg");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut s = Session::builder().dump_to(&dir).trace(TraceMode::StepGraphs).build().unwrap();
+        // Break on line 3 of the first compiled graph (second op node).
+        s.debugger.break_at("__compiled_fn_1.py", 3);
+        s.run_source("main", "def f(x):\n    return (x * 2 + 1).sum()\nprint(f(torch.ones([4])).item())\n")
+            .unwrap();
+        let evs = s.debugger.events();
+        let graph_stops: Vec<_> = evs.iter().filter(|e| e.file.ends_with("__compiled_fn_1.py")).collect();
+        assert_eq!(graph_stops.len(), 1, "{:?}", evs);
+        assert_eq!(graph_stops[0].line, 3);
+        // The stop carries the intermediate tensor value.
+        assert!(graph_stops[0].locals[0].1.contains("tensor"), "{:?}", graph_stops[0].locals);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn source_breakpoints_respect_dump_paths() {
+        let dir = tmpdir("src");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut s = Session::builder().dump_to(&dir).build().unwrap();
+        s.debugger.break_at("main.py", 2);
+        s.run_source("main", "x = 1\ny = x + 1\nprint(y)\n").unwrap();
+        let evs = s.debugger.events();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].line, 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn builder_requires_dump_dir() {
+        let err = Session::builder().build().unwrap_err();
+        assert_eq!(err.layer(), "builder");
+        assert!(err.to_string().contains("dump_to"), "{}", err);
+    }
+
+    #[test]
+    fn builder_rejects_unknown_backend_name() {
+        let dir = tmpdir("unknown_backend");
+        let err = Session::builder().dump_to(&dir).backend_named("no-such-backend").build().unwrap_err();
+        assert_eq!(err.layer(), "builder");
+        assert!(err.to_string().contains("no-such-backend"), "{}", err);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn builder_rejects_runtimeless_xla_under_error_policy() {
+        let dir = tmpdir("xla_err");
+        let err = Session::builder()
+            .dump_to(&dir)
+            .backend_named("xla")
+            .fallback(FallbackPolicy::Error)
+            .build()
+            .unwrap_err();
+        assert_eq!(err.layer(), "builder");
+        assert!(err.to_string().contains("requires a runtime"), "{}", err);
+        // Under the default Eager policy the same configuration builds (and
+        // degrades per-graph, recording the reason).
+        let s = Session::builder().dump_to(&dir).backend_named("xla").build().unwrap();
+        drop(s);
+        // StepGraphs never consults the backend, so it builds even under
+        // FallbackPolicy::Error with no runtime.
+        let s = Session::builder()
+            .dump_to(&dir)
+            .backend_named("xla")
+            .fallback(FallbackPolicy::Error)
+            .trace(TraceMode::StepGraphs)
+            .build()
+            .unwrap();
+        drop(s);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

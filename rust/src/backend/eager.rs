@@ -5,12 +5,21 @@
 
 use std::rc::Rc;
 
+use crate::api::DepyfError;
 use crate::graph::{Graph, NodeKind, OpKind};
 use crate::tensor::{self, Tensor};
 
 /// Execute with a per-node callback (node id, result) — used by the
 /// debugger to step through `__compiled_fn` dumps line by line.
 pub fn execute_traced(
+    g: &Graph,
+    inputs: &[Rc<Tensor>],
+    on_node: impl FnMut(usize, &Tensor),
+) -> Result<Vec<Tensor>, DepyfError> {
+    execute_traced_inner(g, inputs, on_node).map_err(DepyfError::Backend)
+}
+
+fn execute_traced_inner(
     g: &Graph,
     inputs: &[Rc<Tensor>],
     mut on_node: impl FnMut(usize, &Tensor),
@@ -87,7 +96,7 @@ pub fn execute_traced(
 }
 
 /// Plain execution without tracing.
-pub fn execute(g: &Graph, inputs: &[Rc<Tensor>]) -> Result<Vec<Tensor>, String> {
+pub fn execute(g: &Graph, inputs: &[Rc<Tensor>]) -> Result<Vec<Tensor>, DepyfError> {
     execute_traced(g, inputs, |_, _| {})
 }
 

@@ -1,17 +1,26 @@
 //! Graph backends: the eager reference executor and the XLA/PJRT backend.
 //!
-//! `compile_graph` is dynamo's exit point: it turns a captured [`Graph`]
-//! into a [`CompiledGraphFn`] callable installed into the VM globals.
+//! The public surface now lives in [`crate::api`]: the pluggable
+//! [`Backend`] trait, the name registry ([`register_backend`] /
+//! [`lookup_backend`]) and the explicit [`FallbackPolicy`] — all
+//! re-exported here for convenience. [`BackendKind`] and [`compile_graph`]
+//! remain as thin legacy shims over that machinery.
 
 pub mod eager;
 pub mod xla;
+
+pub use crate::api::{
+    backend_names, compile_with_policy, eager_graph_fn, lookup_backend, register_backend, Backend,
+    CompileCtx, EagerBackend, FallbackPolicy, PolicyCompiled, XlaBackend,
+};
 
 use std::rc::Rc;
 
 use crate::graph::{CompiledGraphFn, Graph};
 use crate::runtime::Runtime;
 
-/// Which backend compiles captured graphs.
+/// The closed two-variant backend selector of the original API. New code
+/// should pass `Rc<dyn Backend>` (any registered backend) instead.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum BackendKind {
     /// Node-by-node CPU reference execution.
@@ -28,45 +37,29 @@ impl BackendKind {
             BackendKind::Xla => "xla",
         }
     }
+
+    /// The trait-object equivalent of this kind.
+    pub fn to_backend(self) -> Rc<dyn Backend> {
+        match self {
+            BackendKind::Eager => Rc::new(EagerBackend),
+            BackendKind::Xla => Rc::new(XlaBackend),
+        }
+    }
 }
 
-/// Compile a captured graph with the chosen backend.
-///
-/// The XLA backend needs a [`Runtime`]; if compilation fails (unsupported
-/// op, no runtime) it degrades to eager — mirroring how torch.compile
-/// backends fall back — and records the reason in the returned name.
+/// Compile a captured graph with the chosen backend, degrading to eager on
+/// failure (the pre-[`FallbackPolicy`] behaviour).
+#[deprecated(note = "use a `Backend` implementation with `api::compile_with_policy` (explicit FallbackPolicy)")]
 pub fn compile_graph(
     name: &str,
     graph: Rc<Graph>,
     kind: BackendKind,
     runtime: Option<Rc<Runtime>>,
 ) -> CompiledGraphFn {
-    if kind == BackendKind::Xla {
-        if let Some(rt) = runtime {
-            match xla::compile(name, &graph, &rt) {
-                Ok(f) => return f,
-                Err(e) => {
-                    // Degrade to eager; callers can see backend_name.
-                    let g = Rc::clone(&graph);
-                    return CompiledGraphFn {
-                        name: name.to_string(),
-                        graph: g,
-                        backend_name: format!("eager (xla fallback: {})", e),
-                        executor: Box::new(move |inputs| eager::execute(&graph, inputs)),
-                        calls: std::cell::Cell::new(0),
-                    };
-                }
-            }
-        }
-    }
-    let g = Rc::clone(&graph);
-    CompiledGraphFn {
-        name: name.to_string(),
-        graph,
-        backend_name: "eager".into(),
-        executor: Box::new(move |inputs| eager::execute(&g, inputs)),
-        calls: std::cell::Cell::new(0),
-    }
+    let ctx = CompileCtx { runtime, fallback: FallbackPolicy::Eager };
+    compile_with_policy(kind.to_backend().as_ref(), name, graph, &ctx)
+        .expect("FallbackPolicy::Eager never fails")
+        .f
 }
 
 #[cfg(test)]
@@ -76,6 +69,7 @@ mod tests {
     use crate::tensor::Tensor;
 
     #[test]
+    #[allow(deprecated)]
     fn eager_compile_and_call() {
         let mut g = Graph::new("__compiled_fn_0");
         let x = g.placeholder("x", &[2]);
@@ -88,11 +82,19 @@ mod tests {
     }
 
     #[test]
+    #[allow(deprecated)]
     fn xla_without_runtime_degrades_to_eager() {
         let mut g = Graph::new("g");
         let x = g.placeholder("x", &[2]);
         g.set_outputs(vec![x]);
         let f = compile_graph("g", Rc::new(g), BackendKind::Xla, None);
         assert!(f.backend_name.starts_with("eager"));
+    }
+
+    #[test]
+    fn kind_to_backend_round_trip() {
+        assert_eq!(BackendKind::Eager.to_backend().name(), "eager");
+        assert_eq!(BackendKind::Xla.to_backend().name(), "xla");
+        assert!(BackendKind::Xla.to_backend().requires_runtime());
     }
 }

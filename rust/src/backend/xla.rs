@@ -10,12 +10,13 @@
 use std::fmt::Write as _;
 use std::rc::Rc;
 
+use crate::api::DepyfError;
 use crate::graph::{CompiledGraphFn, Graph, NodeKind, OpKind};
 use crate::runtime::Runtime;
 use crate::tensor::Tensor;
 
 /// Compile a graph via HLO text + PJRT.
-pub fn compile(name: &str, graph: &Rc<Graph>, rt: &Rc<Runtime>) -> Result<CompiledGraphFn, String> {
+pub fn compile(name: &str, graph: &Rc<Graph>, rt: &Rc<Runtime>) -> Result<CompiledGraphFn, DepyfError> {
     let hlo = emit_hlo(graph)?;
     let exe = rt.compile_hlo_text(&format!("graph:{}", name), &hlo, graph.outputs.len())?;
     let rt2 = Rc::clone(rt);
@@ -160,7 +161,7 @@ impl Emitter {
 }
 
 /// Emit a whole HLO module for the graph.
-pub fn emit_hlo(g: &Graph) -> Result<String, String> {
+pub fn emit_hlo(g: &Graph) -> Result<String, DepyfError> {
     let mut e = Emitter { body: String::new(), used_add: false, used_max: false, used_min: false, tmp: 0 };
     let mut names: Vec<String> = vec![String::new(); g.nodes.len()];
 
@@ -284,7 +285,7 @@ pub fn emit_hlo(g: &Graph) -> Result<String, String> {
                             ));
                             e.line(&format!("{} = {} reshape({})", n, f32ty(&out_shape), d));
                         } else {
-                            return Err(format!("xla: unsupported matmul {:?} @ {:?}", sa, sb));
+                            return Err(DepyfError::Backend(format!("xla: unsupported matmul {:?} @ {:?}", sa, sb)));
                         }
                     }
                     OpKind::Transpose => {

@@ -263,7 +263,7 @@ impl<'a> Tracer<'a> {
         if self.graph.nodes.len() > self.limits.max_nodes {
             return Err(Abort("graph too large".into()));
         }
-        let id = self.graph.add_op(op, args).map_err(Abort)?;
+        let id = self.graph.add_op(op, args).map_err(|e| Abort(e.to_string()))?;
         Ok(Sym::Tensor(id))
     }
 

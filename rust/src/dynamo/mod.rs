@@ -21,7 +21,7 @@ use std::cell::RefCell;
 use std::collections::{HashMap, HashSet};
 use std::rc::Rc;
 
-use crate::backend::BackendKind;
+use crate::api::{compile_with_policy, Backend, CompileCtx, DepyfError, EagerBackend, FallbackPolicy};
 use crate::bytecode::CodeObject;
 use crate::graph::Graph;
 use crate::metrics::Metrics;
@@ -37,19 +37,31 @@ pub trait GraphTracer {
 
 /// Configuration of the dynamo instance.
 pub struct DynamoConfig {
-    pub backend: BackendKind,
+    /// The graph compiler — any [`Backend`] implementation (built-in or
+    /// registered via [`crate::api::register_backend`]).
+    pub backend: Rc<dyn Backend>,
+    /// What happens when the backend fails on a captured graph. The degrade
+    /// (or error) is always recorded in the frontend log — never silent.
+    pub fallback: FallbackPolicy,
     /// Max cache entries per code object before giving up (recompile limit).
     pub cache_limit: usize,
     pub max_trace_instrs: usize,
     pub max_graph_nodes: usize,
-    /// Present in `depyf.debug()` sessions: forces eager execution with
-    /// per-node callbacks.
+    /// Present in `TraceMode::StepGraphs` sessions: forces eager execution
+    /// with per-node callbacks.
     pub tracer: Option<Rc<dyn GraphTracer>>,
 }
 
 impl Default for DynamoConfig {
     fn default() -> Self {
-        DynamoConfig { backend: BackendKind::Eager, cache_limit: 8, max_trace_instrs: 20_000, max_graph_nodes: 2_000, tracer: None }
+        DynamoConfig {
+            backend: Rc::new(EagerBackend),
+            fallback: FallbackPolicy::Eager,
+            cache_limit: 8,
+            max_trace_instrs: 20_000,
+            max_graph_nodes: 2_000,
+            tracer: None,
+        }
     }
 }
 
@@ -133,7 +145,35 @@ impl Dynamo {
             };
             return Value::CompiledGraph(Rc::new(f));
         }
-        let f = crate::backend::compile_graph(name, graph, self.config.backend, self.runtime.clone());
+        let ctx = CompileCtx { runtime: self.runtime.clone(), fallback: self.config.fallback };
+        let backend = self.config.backend.as_ref();
+        let f = match compile_with_policy(backend, name, Rc::clone(&graph), &ctx) {
+            Ok(pc) => {
+                if let Some(reason) = &pc.fallback_reason {
+                    // Fallback engaged: record it in the frontend log.
+                    self.note(format!(
+                        "  backend: {} degraded to eager on {}: {}",
+                        backend.name(),
+                        name,
+                        reason
+                    ));
+                }
+                pc.f
+            }
+            Err(e) => {
+                // FallbackPolicy::Error: the failure is logged here and
+                // surfaced as a VM error when the graph is first called.
+                self.note(format!("  backend: {} failed on {}: {}", backend.name(), name, e));
+                let msg = format!("backend '{}' failed to compile {}: {}", backend.name(), name, e);
+                crate::graph::CompiledGraphFn {
+                    name: name.to_string(),
+                    graph,
+                    backend_name: format!("error({})", backend.name()),
+                    executor: Box::new(move |_| Err(DepyfError::Backend(msg.clone()))),
+                    calls: std::cell::Cell::new(0),
+                }
+            }
+        };
         Value::CompiledGraph(Rc::new(f))
     }
 }
@@ -420,10 +460,84 @@ mod tests {
 
         let rt = Runtime::cpu().expect("pjrt");
         let mut vm = Vm::new();
-        let dynamo = Dynamo::with_runtime(DynamoConfig { backend: BackendKind::Xla, ..Default::default() }, rt);
+        let dynamo = Dynamo::with_runtime(
+            DynamoConfig { backend: Rc::new(crate::api::XlaBackend), ..Default::default() },
+            rt,
+        );
         vm.eval_hook = Some(dynamo.clone());
         vm.exec_source(src, IsaVersion::V310).unwrap();
         assert_eq!(vm.take_output(), expected);
         assert_eq!(dynamo.metrics.captures.get(), 1);
+    }
+
+    #[test]
+    fn fallback_error_policy_surfaces_backend_failure() {
+        // Xla without a runtime under FallbackPolicy::Error: capture
+        // succeeds, but calling the compiled graph raises a VM error.
+        let src = "def f(x):\n    return (x * 2).sum()\nprint(f(torch.ones([2])).item())\n";
+        let mut vm = Vm::new();
+        let dynamo = Dynamo::new(DynamoConfig {
+            backend: Rc::new(crate::api::XlaBackend),
+            fallback: FallbackPolicy::Error,
+            ..Default::default()
+        });
+        vm.eval_hook = Some(dynamo.clone());
+        let err = vm.exec_source(src, IsaVersion::V310).unwrap_err();
+        assert!(err.message.contains("failed to compile"), "{}", err);
+        assert!(dynamo.log().iter().any(|l| l.contains("backend: xla failed")), "{:?}", dynamo.log());
+    }
+
+    #[test]
+    fn fallback_eager_policy_degrades_and_logs() {
+        // Same misconfiguration under the default policy: output stays
+        // correct and the degrade is recorded in the frontend log.
+        let src = "def f(x):\n    return (x * 2).sum()\nprint(f(torch.ones([2])).item())\n";
+        let plain = Vm::new();
+        plain.exec_source(src, IsaVersion::V310).unwrap();
+        let expected = plain.take_output();
+
+        let mut vm = Vm::new();
+        let dynamo = Dynamo::new(DynamoConfig {
+            backend: Rc::new(crate::api::XlaBackend),
+            ..Default::default()
+        });
+        vm.eval_hook = Some(dynamo.clone());
+        vm.exec_source(src, IsaVersion::V310).unwrap();
+        assert_eq!(vm.take_output(), expected);
+        assert!(
+            dynamo.log().iter().any(|l| l.contains("backend: xla degraded to eager")),
+            "{:?}",
+            dynamo.log()
+        );
+    }
+
+    #[test]
+    fn custom_backend_name_is_not_misreported_as_degrade() {
+        // A custom backend may stamp a backend_name different from name();
+        // that must not be logged as a fallback.
+        struct Tagger;
+        impl crate::api::Backend for Tagger {
+            fn name(&self) -> &str {
+                "tagger"
+            }
+            fn compile(
+                &self,
+                name: &str,
+                graph: Rc<Graph>,
+                _ctx: &CompileCtx,
+            ) -> Result<crate::graph::CompiledGraphFn, DepyfError> {
+                Ok(crate::api::eager_graph_fn(name, graph, "tagger-v2".into()))
+            }
+        }
+        let src = "def f(x):\n    return (x * 2).sum()\nprint(f(torch.ones([2])).item())\n";
+        let mut vm = Vm::new();
+        let dynamo = Dynamo::new(DynamoConfig { backend: Rc::new(Tagger), ..Default::default() });
+        vm.eval_hook = Some(dynamo.clone());
+        vm.exec_source(src, IsaVersion::V310).unwrap();
+        assert!(
+            !dynamo.log().iter().any(|l| l.contains("degraded")),
+            "spurious degrade note: {:?}",
+            dynamo.log()
+        );
     }
 }

@@ -4,12 +4,13 @@
 
 mod printer;
 
-pub use printer::print_graph;
+pub use printer::{print_graph, print_graph_with_lines};
 
 use std::cell::Cell;
 use std::fmt;
 use std::rc::Rc;
 
+use crate::api::DepyfError;
 use crate::tensor::{self, Tensor};
 
 pub type NodeId = usize;
@@ -142,7 +143,7 @@ impl Graph {
     }
 
     /// Add an op node, inferring (and validating) its output shape.
-    pub fn add_op(&mut self, op: OpKind, args: Vec<NodeId>) -> Result<NodeId, String> {
+    pub fn add_op(&mut self, op: OpKind, args: Vec<NodeId>) -> Result<NodeId, DepyfError> {
         let shapes: Vec<&[usize]> = args.iter().map(|&a| self.nodes[a].shape.as_slice()).collect();
         let shape = infer_shape(&op, &shapes)?;
         let id = self.nodes.len();
@@ -175,10 +176,10 @@ impl Graph {
 }
 
 /// Output-shape inference for each op.
-pub fn infer_shape(op: &OpKind, shapes: &[&[usize]]) -> Result<Vec<usize>, String> {
-    let need = |n: usize| -> Result<(), String> {
+pub fn infer_shape(op: &OpKind, shapes: &[&[usize]]) -> Result<Vec<usize>, DepyfError> {
+    let need = |n: usize| -> Result<(), DepyfError> {
         if shapes.len() != n {
-            Err(format!("{:?} expects {} args, got {}", op, n, shapes.len()))
+            Err(DepyfError::Compile(format!("{:?} expects {} args, got {}", op, n, shapes.len())))
         } else {
             Ok(())
         }
@@ -186,7 +187,7 @@ pub fn infer_shape(op: &OpKind, shapes: &[&[usize]]) -> Result<Vec<usize>, Strin
     match op {
         OpKind::Add | OpKind::Sub | OpKind::Mul | OpKind::Div | OpKind::Pow | OpKind::Maximum | OpKind::Minimum => {
             need(2)?;
-            tensor::broadcast_shapes(shapes[0], shapes[1])
+            tensor::broadcast_shapes(shapes[0], shapes[1]).map_err(DepyfError::Compile)
         }
         OpKind::Neg
         | OpKind::Relu
@@ -205,14 +206,14 @@ pub fn infer_shape(op: &OpKind, shapes: &[&[usize]]) -> Result<Vec<usize>, Strin
             need(2)?;
             let (a, b) = (shapes[0], shapes[1]);
             if a.len() < 2 || b.len() < 2 {
-                return Err(format!("matmul needs rank>=2, got {:?} @ {:?}", a, b));
+                return Err(DepyfError::Compile(format!("matmul needs rank>=2, got {:?} @ {:?}", a, b)));
             }
             if a[a.len() - 1] != b[b.len() - 2] {
-                return Err(format!("matmul inner-dim mismatch: {:?} @ {:?}", a, b));
+                return Err(DepyfError::Compile(format!("matmul inner-dim mismatch: {:?} @ {:?}", a, b)));
             }
             let batch = if a.len() >= b.len() { &a[..a.len() - 2] } else { &b[..b.len() - 2] };
             if a.len() > 2 && b.len() > 2 && a[..a.len() - 2] != b[..b.len() - 2] {
-                return Err(format!("matmul batch mismatch: {:?} @ {:?}", a, b));
+                return Err(DepyfError::Compile(format!("matmul batch mismatch: {:?} @ {:?}", a, b)));
             }
             let mut s = batch.to_vec();
             s.push(a[a.len() - 2]);
@@ -223,7 +224,7 @@ pub fn infer_shape(op: &OpKind, shapes: &[&[usize]]) -> Result<Vec<usize>, Strin
             need(1)?;
             let a = shapes[0];
             if a.len() < 2 {
-                return Err(format!("transpose needs rank>=2, got {:?}", a));
+                return Err(DepyfError::Compile(format!("transpose needs rank>=2, got {:?}", a)));
             }
             let mut s = a.to_vec();
             let r = s.len();
@@ -233,12 +234,12 @@ pub fn infer_shape(op: &OpKind, shapes: &[&[usize]]) -> Result<Vec<usize>, Strin
         OpKind::Reshape(spec) => {
             need(1)?;
             let numel: usize = shapes[0].iter().product();
-            tensor::reshape_infer(numel, spec)
+            tensor::reshape_infer(numel, spec).map_err(DepyfError::Compile)
         }
         OpKind::Permute(perm) => {
             need(1)?;
             if perm.len() != shapes[0].len() {
-                return Err(format!("permute {:?} on rank-{}", perm, shapes[0].len()));
+                return Err(DepyfError::Compile(format!("permute {:?} on rank-{}", perm, shapes[0].len())));
             }
             Ok(perm.iter().map(|&p| shapes[0][p]).collect())
         }
@@ -248,7 +249,10 @@ pub fn infer_shape(op: &OpKind, shapes: &[&[usize]]) -> Result<Vec<usize>, Strin
                 None => Ok(vec![]),
                 Some(ax) => {
                     if *ax >= shapes[0].len() {
-                        return Err(format!("reduce axis {} out of range for {:?}", ax, shapes[0]));
+                        return Err(DepyfError::Compile(format!(
+                            "reduce axis {} out of range for {:?}",
+                            ax, shapes[0]
+                        )));
                     }
                     let mut s = shapes[0].to_vec();
                     s.remove(*ax);
@@ -258,16 +262,21 @@ pub fn infer_shape(op: &OpKind, shapes: &[&[usize]]) -> Result<Vec<usize>, Strin
         }
         OpKind::LayerNorm => {
             need(3)?;
-            let n = *shapes[0].last().ok_or("layernorm on rank-0")?;
+            let n = *shapes[0]
+                .last()
+                .ok_or_else(|| DepyfError::Compile("layernorm on rank-0".into()))?;
             if shapes[1] != [n] || shapes[2] != [n] {
-                return Err(format!("layernorm params must be [{}], got {:?} {:?}", n, shapes[1], shapes[2]));
+                return Err(DepyfError::Compile(format!(
+                    "layernorm params must be [{}], got {:?} {:?}",
+                    n, shapes[1], shapes[2]
+                )));
             }
             Ok(shapes[0].to_vec())
         }
         OpKind::Embedding => {
             need(2)?;
             if shapes[0].len() != 2 {
-                return Err(format!("embedding table must be rank 2, got {:?}", shapes[0]));
+                return Err(DepyfError::Compile(format!("embedding table must be rank 2, got {:?}", shapes[0])));
             }
             let mut s = shapes[1].to_vec();
             s.push(shapes[0][1]);
@@ -276,12 +285,12 @@ pub fn infer_shape(op: &OpKind, shapes: &[&[usize]]) -> Result<Vec<usize>, Strin
         OpKind::CrossEntropy => {
             need(2)?;
             if shapes[0].is_empty() {
-                return Err("cross_entropy on rank-0 logits".into());
+                return Err(DepyfError::Compile("cross_entropy on rank-0 logits".into()));
             }
             let rows: usize = shapes[0][..shapes[0].len() - 1].iter().product();
             let trows: usize = shapes[1].iter().product();
             if rows != trows {
-                return Err(format!("cross_entropy rows {} vs targets {}", rows, trows));
+                return Err(DepyfError::Compile(format!("cross_entropy rows {} vs targets {}", rows, trows)));
             }
             Ok(vec![])
         }
@@ -296,12 +305,12 @@ pub struct CompiledGraphFn {
     /// Which backend compiled this (for dumps/metrics).
     pub backend_name: String,
     #[allow(clippy::type_complexity)]
-    pub executor: Box<dyn Fn(&[Rc<Tensor>]) -> Result<Vec<Tensor>, String>>,
+    pub executor: Box<dyn Fn(&[Rc<Tensor>]) -> Result<Vec<Tensor>, DepyfError>>,
     pub calls: Cell<u64>,
 }
 
 impl CompiledGraphFn {
-    pub fn call(&self, inputs: &[Rc<Tensor>]) -> Result<Vec<Tensor>, String> {
+    pub fn call(&self, inputs: &[Rc<Tensor>]) -> Result<Vec<Tensor>, DepyfError> {
         self.calls.set(self.calls.get() + 1);
         (self.executor)(inputs)
     }

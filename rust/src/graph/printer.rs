@@ -2,13 +2,26 @@
 //! `__compiled_fn_N.py` dump of Figure 2. Line numbers in the emitted text
 //! are stable, so the debugger can map executor progress to dump lines.
 
+use std::collections::HashMap;
+
 use super::{Graph, NodeKind, OpKind};
 
-/// Render the graph as a Python-like function definition. Returns the text;
-/// node `i` is assigned on a deterministic line so `hijack` can build a
-/// line table (`line = 2 + position among op nodes`).
+/// Render the graph as a Python-like function definition.
+///
+/// Thin wrapper over [`print_graph_with_lines`] for callers that only need
+/// the text.
 pub fn print_graph(g: &Graph) -> String {
+    print_graph_with_lines(g).0
+}
+
+/// Render the graph and return, alongside the text, the line table mapping
+/// op-node id → 1-based line in the rendered text. The table is recorded
+/// *while emitting*, so it is the single source of truth for dump layout —
+/// the debugger's graph stops and `hijack`'s dumps both consume it.
+pub fn print_graph_with_lines(g: &Graph) -> (String, HashMap<usize, u32>) {
     let mut out = String::new();
+    let mut lines: HashMap<usize, u32> = HashMap::new();
+    let mut line = 1u32; // the `def ...` header
     let arg_names: Vec<String> = g
         .inputs
         .iter()
@@ -65,12 +78,14 @@ pub fn print_graph(g: &Graph) -> String {
                 // simple unary methods
                 _ => format!("{}.{}()", var(args[0]), op.method_name()),
             };
+            line += 1;
+            lines.insert(id, line);
             out.push_str(&format!("    v{} = {}  # shape: {:?}\n", id, expr, node.shape));
         }
     }
     let outs: Vec<String> = g.outputs.iter().map(|&o| var(o)).collect();
     out.push_str(&format!("    return ({},)\n", outs.join(", ")));
-    out
+    (out, lines)
 }
 
 #[cfg(test)]
@@ -92,6 +107,24 @@ mod tests {
         assert!(s.contains(".relu()"));
         assert!(s.contains("[2, 4]"));
         assert!(s.trim_end().ends_with("return (v3,)"));
+    }
+
+    #[test]
+    fn line_table_matches_emitted_text() {
+        let mut g = Graph::new("__compiled_fn_0");
+        let x = g.placeholder("x", &[2]);
+        let a = g.add_op(OpKind::Relu, vec![x]).unwrap();
+        let b = g.add_op(OpKind::Exp, vec![a]).unwrap();
+        g.set_outputs(vec![b]);
+        let (text, table) = print_graph_with_lines(&g);
+        assert_eq!(table[&a], 2);
+        assert_eq!(table[&b], 3);
+        // cross-check against the printed text (1-based lines)
+        let lines: Vec<&str> = text.lines().collect();
+        assert!(lines[(table[&a] - 1) as usize].contains(&format!("v{} =", a)));
+        assert!(lines[(table[&b] - 1) as usize].contains(&format!("v{} =", b)));
+        // placeholders never appear in the table
+        assert!(!table.contains_key(&x));
     }
 
     #[test]

@@ -2,13 +2,50 @@
 //!
 //! A Rust reproduction of **depyf** ("Open the Opaque Box of PyTorch
 //! Compiler for Machine Learning Researchers", You et al., 2024), built as a
-//! three-layer Rust + JAX + Pallas stack:
+//! three-layer Rust + JAX + Pallas stack.
+//!
+//! ## The public API: [`api`]
+//!
+//! Everything user-facing funnels through [`api`] — a fluent session
+//! builder, pluggable backends, typed artifacts, and one structured error
+//! type ([`DepyfError`]):
+//!
+//! ```no_run
+//! use depyf::prelude::*;
+//!
+//! # fn main() -> Result<(), DepyfError> {
+//! // with depyf.prepare_debug(dir): run under the compiler, dump everything.
+//! let mut session = Session::builder()
+//!     .dump_to("dump_dir")
+//!     .backend_named("eager")          // or .backend(Rc::new(MyBackend))
+//!     .isa(IsaVersion::V311)
+//!     .build()?;
+//! session.run_source("main", "print((torch.ones([2]) * 2).sum().item())\n")?;
+//! let artifacts = session.finish()?;   // typed Artifacts + manifest.json
+//! for a in &artifacts {
+//!     println!("[{}] {}", a.kind, a.path.display());
+//! }
+//!
+//! // with depyf.debug(): step through compiled-graph dump lines.
+//! let dbg = Session::builder().dump_to("dbg_dir").trace(TraceMode::StepGraphs).build()?;
+//! dbg.debugger.break_at("__compiled_fn_1.py", 2);
+//! # Ok(()) }
+//! ```
+//!
+//! Custom graph compilers plug in exactly like `torch.compile(backend=...)`:
+//! implement [`api::Backend`], call [`api::register_backend`], and pass the
+//! name to `backend_named` (see `examples/custom_backend.rs`). Backend
+//! failures follow an explicit [`api::FallbackPolicy`] instead of silently
+//! degrading. The pre-builder entry points ([`session::DebugSession`],
+//! [`backend::compile_graph`]) remain as deprecated shims.
+//!
+//! ## The stack underneath
 //!
 //! * **Layer 3 (this crate)** — the compiler being opened *and* the tool
 //!   that opens it: a Python-subset language & VM ([`pylang`], [`vm`],
 //!   [`bytecode`]), a Dynamo-like graph-capturing frontend ([`dynamo`]),
 //!   the symbolic-execution bytecode decompiler ([`decompiler`]), the
-//!   introspection/debugging API ([`session`], [`hijack`], [`debugger`]),
+//!   introspection/debugging machinery ([`api`], [`hijack`], [`debugger`]),
 //!   and graph backends ([`backend`]) including an XLA/PJRT backend.
 //! * **Layer 2 (build-time JAX)** — a transformer model AOT-lowered to HLO
 //!   text artifacts loaded by [`runtime`].
@@ -18,6 +55,7 @@
 //! See `DESIGN.md` for the full system inventory and `EXPERIMENTS.md` for
 //! the paper-vs-measured results.
 
+pub mod api;
 pub mod backend;
 pub mod bytecode;
 pub mod corpus;
@@ -34,15 +72,22 @@ pub mod tensor;
 pub mod value;
 pub mod vm;
 
+pub use api::DepyfError;
+
 /// Convenient re-exports for examples and tests.
 pub mod prelude {
+    pub use crate::api::{
+        lookup_backend, register_backend, Artifact, ArtifactKind, Backend, CompileCtx, DepyfError,
+        EagerBackend, FallbackPolicy, Session, SessionBuilder, TraceMode, XlaBackend,
+    };
     pub use crate::backend::BackendKind;
+    #[allow(deprecated)]
+    pub use crate::session::DebugSession;
     pub use crate::bytecode::{disassemble, CodeObject, Instr, IsaVersion};
     pub use crate::decompiler::{decompile, Decompiler};
     pub use crate::dynamo::{Dynamo, DynamoConfig};
     pub use crate::pylang::compile_module;
     pub use crate::runtime::Runtime;
-    pub use crate::session::DebugSession;
     pub use crate::tensor::Tensor;
     pub use crate::value::Value;
     pub use crate::vm::Vm;

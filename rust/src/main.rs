@@ -1,35 +1,89 @@
 //! depyf-rs CLI — the leader entrypoint.
 //!
-//! ```text
-//! depyf run <file.py> [--compile] [--backend eager|xla] [--version 3.8..3.11]
-//! depyf disasm <file.py> [--version V]       # compile + disassemble
-//! depyf decompile <file.py> [--tool NAME]    # bytecode -> source
-//! depyf dump <file.py> <dir>                 # prepare_debug: run + dump all
-//! depyf table1                               # regenerate the paper's Table 1
-//! ```
+//! Run `depyf help` for the full usage text. Usage errors (unknown
+//! commands, flags or flag values) exit with code 2; runtime failures exit
+//! with code 1.
 //!
 //! (Hand-rolled arg parsing: the offline environment has no clap.)
 
-use depyf::backend::BackendKind;
+use std::rc::Rc;
+
+use depyf::api::{backend_names, lookup_backend, Backend, Session};
 use depyf::bytecode::{disassemble, IsaVersion};
 use depyf::corpus::{render_table1, run_table1};
 use depyf::decompiler::baselines::all_tools_rc;
+use depyf::decompiler::DecompilerTool;
 use depyf::dynamo::{Dynamo, DynamoConfig};
 use depyf::pylang::compile_module;
 use depyf::runtime::Runtime;
-use depyf::session::DebugSession;
 use depyf::vm::Vm;
+use depyf::DepyfError;
 
-fn parse_version(args: &[String]) -> IsaVersion {
+const USAGE: &str = "\
+depyf — open the opaque box of the pylang compiler
+
+usage:
+  depyf run <file.py> [--compile] [--backend <name>] [--version <V>]
+      Execute a program; with --compile (or --backend) it runs under the
+      dynamo frontend and reports compiler metrics.
+  depyf disasm <file.py> [--version <V>]
+      Compile and print the bytecode disassembly.
+  depyf decompile <file.py> [--tool depyf|pycdc|decompyle3|uncompyle6] [--version <V>]
+      Compile, then decompile the bytecode back to source.
+  depyf dump <file.py> <dir> [--backend <name>] [--version <V>]
+      prepare_debug: run under the compiler and dump every artifact
+      (full_code.py, __compiled_fn_*.py, __transformed_*.py, disassembly,
+      guards) plus a machine-readable manifest.json into <dir>.
+  depyf table1
+      Regenerate the paper's Table 1 correctness matrix.
+  depyf help
+      Print this text.
+
+flags:
+  --version <V>    ISA version: 3.8, 3.9, 3.10 or 3.11 (default 3.11)
+  --backend <name> A registered graph backend (built-ins: eager, xla;
+                   custom backends via depyf::api::register_backend)
+
+exit codes: 0 success, 1 runtime error, 2 usage error
+";
+
+/// CLI failure, split by exit code: 2 for usage errors, 1 for runtime.
+enum CliError {
+    Usage(String),
+    Run(String),
+}
+
+impl From<DepyfError> for CliError {
+    fn from(e: DepyfError) -> CliError {
+        CliError::Run(e.to_string())
+    }
+}
+
+fn usage(msg: impl Into<String>) -> CliError {
+    CliError::Usage(msg.into())
+}
+
+fn run_err(e: impl std::fmt::Display) -> CliError {
+    CliError::Run(e.to_string())
+}
+
+fn parse_version(args: &[String]) -> Result<IsaVersion, CliError> {
     match flag_value(args, "--version").as_deref() {
-        Some("3.8") => IsaVersion::V38,
-        Some("3.9") => IsaVersion::V39,
-        Some("3.10") => IsaVersion::V310,
-        Some("3.11") | None => IsaVersion::V311,
-        Some(other) => {
-            eprintln!("unknown version '{}', using 3.11", other);
-            IsaVersion::V311
-        }
+        Some("3.8") => Ok(IsaVersion::V38),
+        Some("3.9") => Ok(IsaVersion::V39),
+        Some("3.10") => Ok(IsaVersion::V310),
+        Some("3.11") | None => Ok(IsaVersion::V311),
+        Some(other) => Err(usage(format!("unknown --version '{}' (expected 3.8, 3.9, 3.10 or 3.11)", other))),
+    }
+}
+
+/// Resolve `--backend <name>` against the registry; absent flag → None.
+fn parse_backend(args: &[String]) -> Result<Option<Rc<dyn Backend>>, CliError> {
+    match flag_value(args, "--backend") {
+        None => Ok(None),
+        Some(name) => lookup_backend(&name).map(Some).ok_or_else(|| {
+            usage(format!("unknown --backend '{}' (registered: {})", name, backend_names().join(", ")))
+        }),
     }
 }
 
@@ -41,8 +95,8 @@ fn has_flag(args: &[String], name: &str) -> bool {
     args.iter().any(|a| a == name)
 }
 
-fn read_source(path: &str) -> Result<String, String> {
-    std::fs::read_to_string(path).map_err(|e| format!("read {}: {}", path, e))
+fn read_source(path: &str) -> Result<String, CliError> {
+    std::fs::read_to_string(path).map_err(|e| run_err(format!("read {}: {}", path, e)))
 }
 
 fn main() {
@@ -53,7 +107,7 @@ fn main() {
 
 fn run_cli(args: &[String]) -> i32 {
     let Some(cmd) = args.first() else {
-        eprintln!("usage: depyf <run|disasm|decompile|dump|table1> ...");
+        eprint!("{}", USAGE);
         return 2;
     };
     let rest = &args[1..];
@@ -63,39 +117,53 @@ fn run_cli(args: &[String]) -> i32 {
         "decompile" => cmd_decompile(rest),
         "dump" => cmd_dump(rest),
         "table1" => cmd_table1(rest),
-        other => Err(format!("unknown command '{}'", other)),
+        "help" | "--help" | "-h" => {
+            print!("{}", USAGE);
+            Ok(())
+        }
+        other => Err(usage(format!("unknown command '{}'", other))),
     };
     match result {
         Ok(()) => 0,
-        Err(e) => {
-            eprintln!("error: {}", e);
+        Err(CliError::Usage(m)) => {
+            eprintln!("error: {}\n", m);
+            eprint!("{}", USAGE);
+            2
+        }
+        Err(CliError::Run(m)) => {
+            eprintln!("error: {}", m);
             1
         }
     }
 }
 
-fn cmd_run(args: &[String]) -> Result<(), String> {
-    let file = args.first().ok_or("usage: depyf run <file.py> [--compile] [--backend eager|xla]")?;
+fn cmd_run(args: &[String]) -> Result<(), CliError> {
+    let file = args
+        .first()
+        .ok_or_else(|| usage("run needs a file: depyf run <file.py> [--compile] [--backend <name>]"))?;
+    let version = parse_version(args)?;
+    let backend = parse_backend(args)?;
     let src = read_source(file)?;
-    let version = parse_version(args);
     let mut vm = Vm::new();
-    let dynamo = if has_flag(args, "--compile") {
-        let backend = match flag_value(args, "--backend").as_deref() {
-            Some("xla") => BackendKind::Xla,
-            _ => BackendKind::Eager,
+    let dynamo = if has_flag(args, "--compile") || backend.is_some() {
+        let backend = match backend {
+            Some(b) => b,
+            None => lookup_backend("eager").expect("eager is always registered"),
         };
-        let d = if backend == BackendKind::Xla {
+        let needs_runtime = backend.requires_runtime();
+        let config = DynamoConfig { backend, ..Default::default() };
+        let d = if needs_runtime {
             let rt = Runtime::cpu()?;
-            Dynamo::with_runtime(DynamoConfig { backend, ..Default::default() }, rt)
+            Dynamo::with_runtime(config, rt)
         } else {
-            Dynamo::new(DynamoConfig { backend, ..Default::default() })
+            Dynamo::new(config)
         };
         vm.eval_hook = Some(d.clone());
         Some(d)
     } else {
         None
     };
-    vm.exec_source(&src, version).map_err(|e| e.to_string())?;
+    vm.exec_source(&src, version).map_err(run_err)?;
     print!("{}", vm.take_output());
     if let Some(d) = dynamo {
         eprintln!("[depyf] {}", d.metrics.report());
@@ -103,45 +171,89 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
     Ok(())
 }
 
-fn cmd_disasm(args: &[String]) -> Result<(), String> {
-    let file = args.first().ok_or("usage: depyf disasm <file.py>")?;
+fn cmd_disasm(args: &[String]) -> Result<(), CliError> {
+    let file = args.first().ok_or_else(|| usage("disasm needs a file: depyf disasm <file.py>"))?;
+    let version = parse_version(args)?;
     let src = read_source(file)?;
-    let version = parse_version(args);
-    let code = compile_module(&src, file, version).map_err(|e| e.to_string())?;
+    let code = compile_module(&src, file, version).map_err(run_err)?;
     print!("{}", disassemble(&code));
     Ok(())
 }
 
-fn cmd_decompile(args: &[String]) -> Result<(), String> {
-    let file = args.first().ok_or("usage: depyf decompile <file.py> [--tool depyf|pycdc|decompyle3|uncompyle6]")?;
+fn cmd_decompile(args: &[String]) -> Result<(), CliError> {
+    let file = args.first().ok_or_else(|| {
+        usage("decompile needs a file: depyf decompile <file.py> [--tool depyf|pycdc|decompyle3|uncompyle6]")
+    })?;
+    let version = parse_version(args)?;
     let src = read_source(file)?;
-    let version = parse_version(args);
     let toolname = flag_value(args, "--tool").unwrap_or_else(|| "depyf".into());
     let tool = all_tools_rc()
         .into_iter()
         .find(|t| t.name() == toolname)
-        .ok_or_else(|| format!("unknown tool '{}'", toolname))?;
-    let code = compile_module(&src, file, version).map_err(|e| e.to_string())?;
-    let out = tool.decompile_module(&code).map_err(|e| e.to_string())?;
+        .ok_or_else(|| usage(format!("unknown --tool '{}' (expected depyf, pycdc, decompyle3 or uncompyle6)", toolname)))?;
+    let code = compile_module(&src, file, version).map_err(run_err)?;
+    let out = tool.decompile_module(&code).map_err(run_err)?;
     print!("{}", out);
     Ok(())
 }
 
-fn cmd_dump(args: &[String]) -> Result<(), String> {
-    let file = args.first().ok_or("usage: depyf dump <file.py> <dir>")?;
-    let dir = args.get(1).ok_or("usage: depyf dump <file.py> <dir>")?;
+fn cmd_dump(args: &[String]) -> Result<(), CliError> {
+    let file = args.first().ok_or_else(|| usage("dump needs a file and a dir: depyf dump <file.py> <dir>"))?;
+    let dir = args.get(1).ok_or_else(|| usage("dump needs a dir: depyf dump <file.py> <dir>"))?;
+    let version = parse_version(args)?;
+    let backend = parse_backend(args)?;
     let src = read_source(file)?;
-    let mut session = DebugSession::prepare_debug(dir, BackendKind::Eager)?;
-    session.set_version(parse_version(args));
-    session.run_source("main", &src).map_err(|e| e.to_string())?;
+    let mut builder = Session::builder().dump_to(dir).isa(version);
+    if let Some(b) = backend {
+        if b.requires_runtime() {
+            builder = builder.runtime(Runtime::cpu()?);
+        }
+        builder = builder.backend(b);
+    }
+    let mut session = builder.build()?;
+    session.run_source("main", &src).map_err(run_err)?;
     print!("{}", session.vm.take_output());
-    let files = session.finish()?;
-    eprintln!("[depyf] dumped {} files into {}", files.len(), dir);
+    let artifacts = session.finish()?;
+    eprintln!("[depyf] dumped {} artifacts (+ manifest.json) into {}", artifacts.len(), dir);
     Ok(())
 }
 
-fn cmd_table1(_args: &[String]) -> Result<(), String> {
+fn cmd_table1(_args: &[String]) -> Result<(), CliError> {
     let t = run_table1();
     print!("{}", render_table1(&t));
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_command_is_usage_error() {
+        assert_eq!(run_cli(&["bogus".to_string()]), 2);
+        assert_eq!(run_cli(&[]), 2);
+    }
+
+    #[test]
+    fn help_prints_and_succeeds() {
+        assert_eq!(run_cli(&["help".to_string()]), 0);
+    }
+
+    #[test]
+    fn unknown_backend_value_is_usage_error() {
+        let args = vec!["run".to_string(), "nope.py".to_string(), "--backend".to_string(), "bogus".to_string()];
+        assert_eq!(run_cli(&args), 2);
+    }
+
+    #[test]
+    fn unknown_version_value_is_usage_error() {
+        let args = vec!["disasm".to_string(), "nope.py".to_string(), "--version".to_string(), "2.7".to_string()];
+        assert_eq!(run_cli(&args), 2);
+    }
+
+    #[test]
+    fn missing_file_is_runtime_error() {
+        let args = vec!["disasm".to_string(), "/definitely/not/here.py".to_string()];
+        assert_eq!(run_cli(&args), 1);
+    }
 }

@@ -12,6 +12,8 @@
 use std::collections::HashMap;
 use std::path::Path;
 
+use crate::api::DepyfError;
+
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Artifact {
     pub name: String,
@@ -26,7 +28,7 @@ pub struct Manifest {
     entries: HashMap<String, Artifact>,
 }
 
-fn parse_shapes(s: &str) -> Result<Vec<Vec<usize>>, String> {
+fn parse_shapes(s: &str) -> Result<Vec<Vec<usize>>, DepyfError> {
     if s.is_empty() {
         return Ok(vec![]);
     }
@@ -37,14 +39,16 @@ fn parse_shapes(s: &str) -> Result<Vec<Vec<usize>>, String> {
             }
             shape
                 .split(',')
-                .map(|d| d.parse::<usize>().map_err(|e| format!("bad dim '{}': {}", d, e)))
+                .map(|d| {
+                    d.parse::<usize>().map_err(|e| DepyfError::Parse(format!("bad dim '{}': {}", d, e)))
+                })
                 .collect()
         })
         .collect()
 }
 
 impl Manifest {
-    pub fn parse(text: &str) -> Result<Manifest, String> {
+    pub fn parse(text: &str) -> Result<Manifest, DepyfError> {
         let mut entries = HashMap::new();
         for (lineno, line) in text.lines().enumerate() {
             let line = line.trim();
@@ -53,11 +57,21 @@ impl Manifest {
             }
             let parts: Vec<&str> = line.split_whitespace().collect();
             if parts.len() != 5 {
-                return Err(format!("manifest line {}: expected 5 fields, got {}", lineno + 1, parts.len()));
+                return Err(DepyfError::Parse(format!(
+                    "manifest line {}: expected 5 fields, got {}",
+                    lineno + 1,
+                    parts.len()
+                )));
             }
-            let n_outputs: usize = parts[2].parse().map_err(|e| format!("manifest line {}: {}", lineno + 1, e))?;
-            let ins = parts[3].strip_prefix("in=").ok_or(format!("manifest line {}: missing in=", lineno + 1))?;
-            let outs = parts[4].strip_prefix("out=").ok_or(format!("manifest line {}: missing out=", lineno + 1))?;
+            let n_outputs: usize = parts[2]
+                .parse()
+                .map_err(|e| DepyfError::Parse(format!("manifest line {}: {}", lineno + 1, e)))?;
+            let ins = parts[3]
+                .strip_prefix("in=")
+                .ok_or_else(|| DepyfError::Parse(format!("manifest line {}: missing in=", lineno + 1)))?;
+            let outs = parts[4]
+                .strip_prefix("out=")
+                .ok_or_else(|| DepyfError::Parse(format!("manifest line {}: missing out=", lineno + 1)))?;
             let art = Artifact {
                 name: parts[0].to_string(),
                 file: parts[1].to_string(),
@@ -70,8 +84,9 @@ impl Manifest {
         Ok(Manifest { entries })
     }
 
-    pub fn load(path: &Path) -> Result<Manifest, String> {
-        let text = std::fs::read_to_string(path).map_err(|e| format!("read {}: {}", path.display(), e))?;
+    pub fn load(path: &Path) -> Result<Manifest, DepyfError> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| DepyfError::io(format!("read {}", path.display()), e))?;
         Manifest::parse(&text)
     }
 

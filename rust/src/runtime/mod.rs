@@ -12,6 +12,7 @@ use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::rc::Rc;
 
+use crate::api::DepyfError;
 use crate::tensor::Tensor;
 
 /// An execution input: f32 data, or f32-held integers to be passed as s32.
@@ -50,8 +51,9 @@ pub struct Runtime {
 
 impl Runtime {
     /// CPU PJRT client. Fails if libxla_extension is unavailable.
-    pub fn cpu() -> Result<Rc<Runtime>, String> {
-        let client = xla::PjRtClient::cpu().map_err(|e| format!("PjRtClient::cpu: {}", e))?;
+    pub fn cpu() -> Result<Rc<Runtime>, DepyfError> {
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| DepyfError::Runtime(format!("PjRtClient::cpu: {}", e)))?;
         Ok(Rc::new(Runtime {
             client,
             cache: RefCell::new(HashMap::new()),
@@ -63,8 +65,9 @@ impl Runtime {
     }
 
     /// CPU client with an artifact directory (containing `manifest.txt`).
-    pub fn cpu_with_artifacts(dir: impl AsRef<Path>) -> Result<Rc<Runtime>, String> {
-        let client = xla::PjRtClient::cpu().map_err(|e| format!("PjRtClient::cpu: {}", e))?;
+    pub fn cpu_with_artifacts(dir: impl AsRef<Path>) -> Result<Rc<Runtime>, DepyfError> {
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| DepyfError::Runtime(format!("PjRtClient::cpu: {}", e)))?;
         let dir = dir.as_ref().to_path_buf();
         let manifest = Manifest::load(&dir.join("manifest.txt"))?;
         Ok(Rc::new(Runtime {
@@ -86,14 +89,22 @@ impl Runtime {
     }
 
     /// Compile HLO text under a cache key.
-    pub fn compile_hlo_text(&self, key: &str, text: &str, n_outputs: usize) -> Result<Rc<Executable>, String> {
+    pub fn compile_hlo_text(
+        &self,
+        key: &str,
+        text: &str,
+        n_outputs: usize,
+    ) -> Result<Rc<Executable>, DepyfError> {
         if let Some(e) = self.cache.borrow().get(key) {
             return Ok(Rc::clone(e));
         }
         let proto = xla::HloModuleProto::parse_and_return_unverified_module(text.as_bytes())
-            .map_err(|e| format!("HLO parse failed for '{}': {}", key, e))?;
+            .map_err(|e| DepyfError::Parse(format!("HLO parse failed for '{}': {}", key, e)))?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp).map_err(|e| format!("PJRT compile failed for '{}': {}", key, e))?;
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| DepyfError::Runtime(format!("PJRT compile failed for '{}': {}", key, e)))?;
         self.compiles.set(self.compiles.get() + 1);
         let exec = Rc::new(Executable { exe, n_outputs });
         self.cache.borrow_mut().insert(key.to_string(), Rc::clone(&exec));
@@ -101,26 +112,37 @@ impl Runtime {
     }
 
     /// Load + compile a named artifact from the manifest.
-    pub fn load_artifact(&self, name: &str) -> Result<(Rc<Executable>, Artifact), String> {
-        let m = self.manifest.as_ref().ok_or("runtime has no artifact manifest")?;
-        let art = m.get(name).ok_or_else(|| format!("artifact '{}' not in manifest", name))?.clone();
-        let dir = self.artifacts_dir.as_ref().ok_or("runtime has no artifacts dir")?;
+    pub fn load_artifact(&self, name: &str) -> Result<(Rc<Executable>, Artifact), DepyfError> {
+        let m = self
+            .manifest
+            .as_ref()
+            .ok_or_else(|| DepyfError::Runtime("runtime has no artifact manifest".into()))?;
+        let art = m
+            .get(name)
+            .ok_or_else(|| DepyfError::Runtime(format!("artifact '{}' not in manifest", name)))?
+            .clone();
+        let dir = self
+            .artifacts_dir
+            .as_ref()
+            .ok_or_else(|| DepyfError::Runtime("runtime has no artifacts dir".into()))?;
         let path = dir.join(&art.file);
-        let text = std::fs::read_to_string(&path).map_err(|e| format!("read {}: {}", path.display(), e))?;
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| DepyfError::io(format!("read {}", path.display()), e))?;
         let exe = self.compile_hlo_text(name, &text, art.n_outputs)?;
         Ok((exe, art))
     }
 
     /// Execute with f32 tensor inputs; outputs are unpacked from the
     /// 1-level output tuple.
-    pub fn execute(&self, exe: &Executable, inputs: &[&Tensor]) -> Result<Vec<Tensor>, String> {
+    pub fn execute(&self, exe: &Executable, inputs: &[&Tensor]) -> Result<Vec<Tensor>, DepyfError> {
         let args: Vec<Arg> = inputs.iter().map(|t| Arg::F32(t)).collect();
         self.execute_args(exe, &args)
     }
 
     /// Execute with mixed f32/i32 inputs (token ids are s32 in the jax
     /// artifacts; `Arg::I32` casts the f32-held values).
-    pub fn execute_args(&self, exe: &Executable, inputs: &[Arg]) -> Result<Vec<Tensor>, String> {
+    pub fn execute_args(&self, exe: &Executable, inputs: &[Arg]) -> Result<Vec<Tensor>, DepyfError> {
+        let rt_err = |what: &str, e: &dyn std::fmt::Display| DepyfError::Runtime(format!("{}: {}", what, e));
         let literals: Vec<xla::Literal> = inputs
             .iter()
             .map(|a| {
@@ -133,27 +155,32 @@ impl Runtime {
                     }
                 };
                 let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
-                flat.reshape(&dims).map_err(|e| format!("literal reshape: {}", e))
+                flat.reshape(&dims).map_err(|e| rt_err("literal reshape", &e))
             })
-            .collect::<Result<_, String>>()?;
-        let result = exe.exe.execute::<xla::Literal>(&literals).map_err(|e| format!("execute: {}", e))?;
+            .collect::<Result<_, DepyfError>>()?;
+        let result =
+            exe.exe.execute::<xla::Literal>(&literals).map_err(|e| rt_err("execute", &e))?;
         self.executions.set(self.executions.get() + 1);
         let out0 = result
             .first()
             .and_then(|r| r.first())
-            .ok_or("no output buffer")?
+            .ok_or_else(|| DepyfError::Runtime("no output buffer".into()))?
             .to_literal_sync()
-            .map_err(|e| format!("to_literal: {}", e))?;
-        let parts = out0.to_tuple().map_err(|e| format!("output tuple: {}", e))?;
+            .map_err(|e| rt_err("to_literal", &e))?;
+        let parts = out0.to_tuple().map_err(|e| rt_err("output tuple", &e))?;
         if parts.len() != exe.n_outputs {
-            return Err(format!("expected {} outputs, got {}", exe.n_outputs, parts.len()));
+            return Err(DepyfError::Runtime(format!(
+                "expected {} outputs, got {}",
+                exe.n_outputs,
+                parts.len()
+            )));
         }
         parts
             .into_iter()
             .map(|lit| {
-                let shape = lit.array_shape().map_err(|e| format!("shape: {}", e))?;
+                let shape = lit.array_shape().map_err(|e| rt_err("shape", &e))?;
                 let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-                let data: Vec<f32> = lit.to_vec().map_err(|e| format!("to_vec: {}", e))?;
+                let data: Vec<f32> = lit.to_vec().map_err(|e| rt_err("to_vec", &e))?;
                 Ok(Tensor::new(dims, data))
             })
             .collect()

@@ -1,201 +1,89 @@
-//! The user-facing depyf API: [`DebugSession`] is the analogue of the
-//! paper's two context managers,
+//! Legacy session entry points — thin deprecated shims over
+//! [`crate::api::Session`].
 //!
-//! ```python
-//! with depyf.prepare_debug("dump_dir"):   # capture + dump everything
-//!     model(x)
-//! with depyf.debug():                      # step through the dumps
-//!     model(x)
+//! The user-facing API now lives in [`crate::api`]: one fluent builder
+//! subsumes the three old constructors,
+//!
+//! ```text
+//! // old                                         new
+//! DebugSession::prepare_debug(dir, kind)    Session::builder().dump_to(dir)
+//!                                               .backend(kind.to_backend()).build()
+//! DebugSession::prepare_debug_with_runtime  Session::builder().dump_to(dir)
+//!                                               .backend_named("xla").runtime(rt).build()
+//! DebugSession::debug(dir)                  Session::builder().dump_to(dir)
+//!                                               .trace(TraceMode::StepGraphs).build()
 //! ```
 //!
-//! `DebugSession::prepare_debug(dir)` wires a VM + dynamo so every hooked
-//! call is captured; `finish()` writes the dump files. `enable_debug()`
-//! attaches the [`Debugger`] and re-routes compiled graphs through the
-//! traced eager executor so `__compiled_fn_*.py` lines can be stepped.
+//! and `finish()` now returns typed [`crate::api::Artifact`]s plus writes a
+//! `manifest.json` index. The shims below keep old call sites compiling
+//! (against [`crate::api::DepyfError`] instead of `String` errors) and will
+//! be removed in a future release.
 
-use std::collections::HashMap;
-use std::path::PathBuf;
+use std::path::Path;
 use std::rc::Rc;
 
+use crate::api::{DepyfError, XlaBackend};
 use crate::backend::BackendKind;
-use crate::bytecode::IsaVersion;
-use crate::debugger::Debugger;
-use crate::dynamo::{Dynamo, DynamoConfig, GraphTracer};
-use crate::hijack::{dump_all, graph_line_table, link_source, DumpDir};
 use crate::runtime::Runtime;
-use crate::value::Value;
-use crate::vm::{Vm, VmError};
 
-/// Adapter: dynamo per-node graph events → debugger stops at dump lines.
-struct GraphDebugAdapter {
-    dump_root: PathBuf,
-    debugger: Rc<Debugger>,
-    /// graph name -> (node id -> line) — filled lazily as graphs compile.
-    tables: std::cell::RefCell<HashMap<String, HashMap<usize, u32>>>,
-    dynamo: std::cell::RefCell<Option<Rc<Dynamo>>>,
-}
+pub use crate::api::{Session, SessionBuilder, TraceMode};
 
-impl GraphTracer for GraphDebugAdapter {
-    fn on_node(&self, graph_name: &str, node_id: usize, value: &crate::tensor::Tensor) {
-        // Resolve (or build) the line table for this graph.
-        let line = {
-            let mut tables = self.tables.borrow_mut();
-            if !tables.contains_key(graph_name) {
-                if let Some(d) = self.dynamo.borrow().as_ref() {
-                    if let Some((_, g)) = d.graphs().into_iter().find(|(n, _)| n == graph_name) {
-                        tables.insert(graph_name.to_string(), graph_line_table(&g));
-                    }
-                }
-            }
-            tables.get(graph_name).and_then(|t| t.get(&node_id)).copied()
-        };
-        if let Some(line) = line {
-            let file = self.dump_root.join(format!("{}.py", graph_name));
-            self.debugger.graph_stop(&file.to_string_lossy(), line, graph_name, &format!("{}", value));
-        }
-    }
-}
+/// The pre-builder name for [`Session`].
+#[deprecated(note = "renamed to depyf::api::Session (same type)")]
+pub type DebugSession = Session;
 
-/// A depyf debugging session.
-pub struct DebugSession {
-    pub vm: Vm,
-    pub dynamo: Rc<Dynamo>,
-    pub dump: DumpDir,
-    pub debugger: Rc<Debugger>,
-    adapter: Rc<GraphDebugAdapter>,
-    version: IsaVersion,
-    source_counter: usize,
-}
-
-impl DebugSession {
+impl Session {
     /// `with depyf.prepare_debug(dir)` — capture everything into `dir`.
-    pub fn prepare_debug(dir: impl AsRef<std::path::Path>, backend: BackendKind) -> Result<DebugSession, String> {
-        Self::build(dir, backend, None, false)
+    #[deprecated(note = "use Session::builder().dump_to(dir).backend(kind.to_backend()).build()")]
+    pub fn prepare_debug(dir: impl AsRef<Path>, backend: BackendKind) -> Result<Session, DepyfError> {
+        Session::builder().dump_to(dir).backend(backend.to_backend()).build()
     }
 
     /// Same, with a PJRT runtime for the XLA backend.
+    #[deprecated(note = "use Session::builder().dump_to(dir).backend_named(\"xla\").runtime(rt).build()")]
     pub fn prepare_debug_with_runtime(
-        dir: impl AsRef<std::path::Path>,
+        dir: impl AsRef<Path>,
         runtime: Rc<Runtime>,
-    ) -> Result<DebugSession, String> {
-        Self::build(dir, BackendKind::Xla, Some(runtime), false)
+    ) -> Result<Session, DepyfError> {
+        Session::builder().dump_to(dir).backend(Rc::new(XlaBackend)).runtime(runtime).build()
     }
 
     /// `with depyf.debug()` — like prepare_debug but graphs run through the
     /// traced eager executor so the debugger can step `__compiled_fn` lines.
-    pub fn debug(dir: impl AsRef<std::path::Path>) -> Result<DebugSession, String> {
-        Self::build(dir, BackendKind::Eager, None, true)
-    }
-
-    fn build(
-        dir: impl AsRef<std::path::Path>,
-        backend: BackendKind,
-        runtime: Option<Rc<Runtime>>,
-        debug_trace: bool,
-    ) -> Result<DebugSession, String> {
-        let dump = DumpDir::create(dir)?;
-        let debugger = Debugger::shared();
-        let adapter = Rc::new(GraphDebugAdapter {
-            dump_root: dump.root().to_path_buf(),
-            debugger: Rc::clone(&debugger),
-            tables: Default::default(),
-            dynamo: std::cell::RefCell::new(None),
-        });
-        let config = DynamoConfig {
-            backend,
-            tracer: if debug_trace { Some(adapter.clone() as Rc<dyn GraphTracer>) } else { None },
-            ..Default::default()
-        };
-        let dynamo = match runtime {
-            Some(rt) => Dynamo::with_runtime(config, rt),
-            None => Dynamo::new(config),
-        };
-        *adapter.dynamo.borrow_mut() = Some(Rc::clone(&dynamo));
-        let mut vm = Vm::new();
-        vm.eval_hook = Some(dynamo.clone());
-        vm.tracer = Some(debugger.clone());
-        Ok(DebugSession { vm, dynamo, dump, debugger, adapter, version: IsaVersion::V311, source_counter: 0 })
-    }
-
-    pub fn set_version(&mut self, v: IsaVersion) {
-        self.version = v;
-    }
-
-    /// Run a source program inside the session. The source is hijacked into
-    /// the dump dir first, so the debugger reports dump-relative locations.
-    pub fn run_source(&mut self, name: &str, src: &str) -> Result<Value, VmError> {
-        self.source_counter += 1;
-        let path = link_source(&self.dump, name, src).map_err(VmError::new)?;
-        let code = crate::pylang::compile_module(src, &path.to_string_lossy(), self.version)
-            .map_err(|e| VmError::new(e.to_string()))?;
-        self.vm.run_module(&code)
-    }
-
-    /// Write all dumps (`full_code.py`, `__compiled_fn_*.py`,
-    /// `__transformed_*.py`, disassembly) and return the file list.
-    pub fn finish(&self) -> Result<Vec<PathBuf>, String> {
-        let files = dump_all(&self.dynamo, &self.dump)?;
-        let _ = &self.adapter;
-        Ok(files)
+    #[deprecated(note = "use Session::builder().dump_to(dir).trace(TraceMode::StepGraphs).build()")]
+    pub fn debug(dir: impl AsRef<Path>) -> Result<Session, DepyfError> {
+        Session::builder().dump_to(dir).trace(TraceMode::StepGraphs).build()
     }
 }
 
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
+    use crate::api::ArtifactKind;
 
-    fn tmpdir(tag: &str) -> PathBuf {
-        std::env::temp_dir().join(format!("depyf_session_{}_{}", tag, std::process::id()))
-    }
-
+    /// The deprecated constructors still work end-to-end.
     #[test]
-    fn prepare_debug_dumps_everything() {
-        let dir = tmpdir("prep");
+    fn prepare_debug_shim_still_dumps() {
+        let dir = std::env::temp_dir().join(format!("depyf_shim_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
         let mut s = DebugSession::prepare_debug(&dir, BackendKind::Eager).unwrap();
-        s.run_source(
-            "main",
-            "def f(x):\n    y = x * 2\n    print('mid')\n    return y.sum()\nprint(f(torch.ones([3])).item())\n",
-        )
-        .unwrap();
-        let files = s.finish().unwrap();
-        let names: Vec<String> = files.iter().map(|p| p.file_name().unwrap().to_string_lossy().to_string()).collect();
-        assert!(names.iter().any(|n| n == "full_code.py"), "{:?}", names);
-        assert!(names.iter().any(|n| n.starts_with("__compiled_fn_")), "{:?}", names);
-        assert!(names.iter().any(|n| n.starts_with("__transformed_")), "{:?}", names);
-        // The decompiled transform must mention the compiled-fn call.
-        let t = names.iter().find(|n| n.starts_with("__transformed___transformed_f") || *n == "__transformed___transformed_f.py");
-        let _ = t;
-        let content = std::fs::read_to_string(files.iter().find(|p| p.file_name().unwrap().to_string_lossy().starts_with("__transformed_")).unwrap()).unwrap();
-        assert!(content.contains("__compiled_fn_"), "{}", content);
-        std::fs::remove_dir_all(&dir).ok();
-    }
-
-    #[test]
-    fn debugger_steps_compiled_graph_lines() {
-        let dir = tmpdir("dbg");
-        let mut s = DebugSession::debug(&dir).unwrap();
-        // Break on line 3 of the first compiled graph (second op node).
-        s.debugger.break_at("__compiled_fn_1.py", 3);
-        s.run_source("main", "def f(x):\n    return (x * 2 + 1).sum()\nprint(f(torch.ones([4])).item())\n")
+        s.run_source("main", "def f(x):\n    return (x * 2).sum()\nprint(f(torch.ones([3])).item())\n")
             .unwrap();
-        let evs = s.debugger.events();
-        let graph_stops: Vec<_> = evs.iter().filter(|e| e.file.ends_with("__compiled_fn_1.py")).collect();
-        assert_eq!(graph_stops.len(), 1, "{:?}", evs);
-        assert_eq!(graph_stops[0].line, 3);
-        // The stop carries the intermediate tensor value.
-        assert!(graph_stops[0].locals[0].1.contains("tensor"), "{:?}", graph_stops[0].locals);
+        let artifacts = s.finish().unwrap();
+        assert!(artifacts.iter().any(|a| a.kind == ArtifactKind::CompiledGraph));
         std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]
-    fn source_breakpoints_respect_dump_paths() {
-        let dir = tmpdir("src");
-        let mut s = DebugSession::prepare_debug(&dir, BackendKind::Eager).unwrap();
-        s.debugger.break_at("main.py", 2);
-        s.run_source("main", "x = 1\ny = x + 1\nprint(y)\n").unwrap();
-        let evs = s.debugger.events();
-        assert_eq!(evs.len(), 1);
-        assert_eq!(evs[0].line, 2);
+    fn debug_shim_enables_step_tracing() {
+        let dir = std::env::temp_dir().join(format!("depyf_shim_dbg_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut s = DebugSession::debug(&dir).unwrap();
+        s.debugger.break_at("__compiled_fn_1.py", 2);
+        s.run_source("main", "def f(x):\n    return (x * 2).sum()\nprint(f(torch.ones([3])).item())\n")
+            .unwrap();
+        assert!(s.debugger.events().iter().any(|e| e.file.ends_with("__compiled_fn_1.py")));
         std::fs::remove_dir_all(&dir).ok();
     }
 }

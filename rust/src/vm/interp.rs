@@ -42,7 +42,7 @@ pub fn call_value(vm: &Vm, callee: &Value, args: &[Value]) -> Result<Value, VmEr
         Value::BoundMethod(m) => call_method_on(vm, &m.0, &m.1, args).map_err(VmError::new),
         Value::CompiledGraph(g) => {
             let tensors: Result<Vec<Rc<Tensor>>, String> = args.iter().map(|a| a.as_tensor()).collect();
-            let outs = g.call(&tensors.map_err(VmError::new)?).map_err(VmError::new)?;
+            let outs = g.call(&tensors.map_err(VmError::new)?).map_err(|e| VmError::new(e.to_string()))?;
             Ok(Value::tuple(outs.into_iter().map(Value::tensor).collect()))
         }
         other => Err(VmError::new(format!("'{}' object is not callable", other.type_name()))),

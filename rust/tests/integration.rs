@@ -2,15 +2,18 @@
 
 use std::rc::Rc;
 
-use depyf::backend::BackendKind;
+use depyf::api::{
+    load_manifest, lookup_backend, register_backend, Artifact, ArtifactKind, Backend, CompileCtx,
+    DepyfError, FallbackPolicy, Session, TraceMode, XlaBackend,
+};
 use depyf::bytecode::IsaVersion;
 use depyf::corpus::{run_syntax_suite, syntax_cases};
 use depyf::decompiler::baselines::DepyfRs;
 use depyf::decompiler::{decompile, DecompilerTool};
 use depyf::dynamo::{Dynamo, DynamoConfig};
+use depyf::graph::{CompiledGraphFn, Graph};
 use depyf::pylang::compile_module;
 use depyf::runtime::Runtime;
-use depyf::session::DebugSession;
 use depyf::tensor::Tensor;
 use depyf::value::Value;
 use depyf::vm::Vm;
@@ -58,7 +61,7 @@ print(forward(torch.ones([2, 6]) * -1).item())
     let rt = Runtime::cpu().expect("pjrt");
     let mut vm = Vm::new();
     vm.seed(9);
-    let dynamo = Dynamo::with_runtime(DynamoConfig { backend: BackendKind::Xla, ..Default::default() }, rt);
+    let dynamo = Dynamo::with_runtime(DynamoConfig { backend: Rc::new(XlaBackend), ..Default::default() }, rt);
     vm.eval_hook = Some(dynamo.clone());
     vm.exec_source(src, IsaVersion::V310).unwrap();
     // XLA fuses differently than the eager reference: compare numerically
@@ -75,27 +78,95 @@ print(forward(torch.ones([2, 6]) * -1).item())
     assert!(dynamo.metrics.graph_breaks.get() >= 1);
 }
 
-/// The session produces a dump dir whose decompiled artifacts recompile.
+/// The session produces a dump dir whose decompiled artifacts recompile,
+/// and `finish()` types every artifact + writes a manifest that indexes
+/// exactly the files on disk.
 #[test]
-fn session_dumps_recompile() {
+fn session_dumps_recompile_and_manifest_round_trips() {
     let dir = std::env::temp_dir().join(format!("depyf_it_{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&dir);
-    let mut s = DebugSession::prepare_debug(&dir, BackendKind::Eager).unwrap();
-    s.set_version(IsaVersion::V311);
+    let mut s = Session::builder().dump_to(&dir).isa(IsaVersion::V311).build().unwrap();
     s.run_source("main", "def f(x):\n    return (x * 3).relu().sum()\nprint(f(torch.ones([4])).item())\n").unwrap();
-    let files = s.finish().unwrap();
+    let artifacts = s.finish().unwrap();
     let mut checked = 0;
-    for f in files {
-        let name = f.file_name().unwrap().to_string_lossy().to_string();
-        if name.starts_with("__transformed_") && name.ends_with(".py") {
-            let text = std::fs::read_to_string(&f).unwrap();
-            assert!(!text.contains("decompilation failed"), "{}:\n{}", name, text);
+    for a in &artifacts {
+        assert!(a.path.exists(), "artifact file missing: {:?}", a);
+        if a.kind == ArtifactKind::TransformedSource {
+            let text = std::fs::read_to_string(&a.path).unwrap();
+            assert!(!text.contains("decompilation failed"), "{}:\n{}", a.name, text);
             compile_module(&text, "<dump>", IsaVersion::V311)
-                .unwrap_or_else(|e| panic!("dump {} does not recompile: {}\n{}", name, e, text));
+                .unwrap_or_else(|e| panic!("dump {} does not recompile: {}\n{}", a.name, e, text));
             checked += 1;
         }
     }
     assert!(checked >= 1, "no transformed dumps written");
+    // manifest.json indexes exactly what finish() returned.
+    let indexed = load_manifest(&dir).unwrap();
+    assert_eq!(indexed, artifacts);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Acceptance: a custom backend registered through the `Backend` trait
+/// compiles and executes a captured graph end-to-end via `SessionBuilder`.
+#[test]
+fn custom_backend_end_to_end_via_session_builder() {
+    struct TaggingEager;
+    impl Backend for TaggingEager {
+        fn name(&self) -> &str {
+            "tagging-eager"
+        }
+        fn compile(&self, name: &str, graph: Rc<Graph>, _ctx: &CompileCtx) -> Result<CompiledGraphFn, DepyfError> {
+            Ok(depyf::api::eager_graph_fn(name, graph, "tagging-eager".into()))
+        }
+    }
+    register_backend(Rc::new(TaggingEager));
+    assert!(lookup_backend("tagging-eager").is_some());
+
+    let src = "def f(x, y):\n    return ((x @ y) + 1).relu().sum()\nprint(f(torch.ones([4, 4]), torch.ones([4, 4])).item())\n";
+    let plain = Vm::new();
+    plain.exec_source(src, IsaVersion::V310).unwrap();
+    let expected = plain.take_output();
+
+    let dir = std::env::temp_dir().join(format!("depyf_custom_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut s = Session::builder()
+        .dump_to(&dir)
+        .backend_named("tagging-eager")
+        .isa(IsaVersion::V310)
+        .fallback(FallbackPolicy::Error)
+        .build()
+        .unwrap();
+    s.run_source("main", src).unwrap();
+    assert_eq!(s.vm.take_output(), expected);
+    // The installed compiled graph ran through the custom backend.
+    let g = s.vm.get_global("__compiled_fn_1").expect("compiled fn installed");
+    match g {
+        Value::CompiledGraph(f) => {
+            assert_eq!(f.backend_name, "tagging-eager");
+            assert!(f.calls.get() >= 1, "graph was never executed");
+        }
+        other => panic!("expected compiled graph, got {:?}", other),
+    }
+    let artifacts = s.finish().unwrap();
+    assert!(artifacts.iter().any(|a| a.kind == ArtifactKind::CompiledGraph));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Builder misconfiguration surfaces as a typed `DepyfError::Builder`.
+#[test]
+fn builder_misconfiguration_errors() {
+    let err = Session::builder().build().unwrap_err();
+    assert_eq!(err.layer(), "builder");
+
+    let dir = std::env::temp_dir().join(format!("depyf_cfg_{}", std::process::id()));
+    let err = Session::builder()
+        .dump_to(&dir)
+        .backend_named("xla")
+        .fallback(FallbackPolicy::Error)
+        .build()
+        .unwrap_err();
+    assert_eq!(err.layer(), "builder");
+    assert!(err.to_string().contains("requires a runtime"), "{}", err);
     std::fs::remove_dir_all(&dir).ok();
 }
 
@@ -172,4 +243,18 @@ fn compiled_graph_value_call() {
         }
         other => panic!("expected tuple, got {:?}", other),
     }
+}
+
+/// Step-through debugging works through the builder (`TraceMode::StepGraphs`).
+#[test]
+fn step_graphs_through_builder() {
+    let dir = std::env::temp_dir().join(format!("depyf_it_dbg_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut s = Session::builder().dump_to(&dir).trace(TraceMode::StepGraphs).build().unwrap();
+    s.debugger.break_at("__compiled_fn_1.py", 2);
+    s.run_source("main", "def f(x):\n    return (x * 2).sum()\nprint(f(torch.ones([3])).item())\n").unwrap();
+    let artifacts: Vec<Artifact> = s.finish().unwrap();
+    assert!(artifacts.iter().any(|a| a.kind == ArtifactKind::Guards));
+    assert!(s.debugger.events().iter().any(|e| e.file.ends_with("__compiled_fn_1.py")));
+    std::fs::remove_dir_all(&dir).ok();
 }

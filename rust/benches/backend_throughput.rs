@@ -4,7 +4,10 @@
 //! (the paper's "backend generates binary executables" claim, quantified).
 //!
 //! Run: `cargo bench --bench backend_throughput` (artifacts optional; the
-//! attention section is skipped if `artifacts/` is missing).
+//! attention section is skipped if `artifacts/` is missing). Merges into
+//! `BENCH_hotpath.json`; `DEPYF_BENCH_QUICK=1` for smoke runs.
+
+mod support;
 
 use std::rc::Rc;
 use std::time::Instant;
@@ -40,6 +43,7 @@ fn time_ns(iters: usize, mut f: impl FnMut()) -> f64 {
 }
 
 fn main() {
+    let mut rep = support::Reporter::new("backend_throughput");
     let rt = Runtime::cpu().expect("pjrt cpu");
     let mut rng = Rng::new(7);
     println!("{:<10} {:>6} {:>14} {:>14} {:>10} {:>14}", "graph", "dim", "eager ns", "xla ns", "speedup", "GFLOP/s(xla)");
@@ -62,7 +66,7 @@ fn main() {
         let b = xla.call(&inputs).unwrap();
         assert!(a[0].allclose(&b[0], 2e-2 * d as f32), "backend divergence at d={}", d);
 
-        let iters = if d >= 128 { 50 } else { 200 };
+        let iters = support::iters(if d >= 128 { 50 } else { 200 });
         let te = time_ns(iters, || {
             eager.call(&inputs).unwrap();
         });
@@ -78,6 +82,8 @@ fn main() {
             te / tx,
             flops as f64 / tx
         );
+        rep.record(&format!("mlp_d{}_eager", d), te, "ns/call");
+        rep.record(&format!("mlp_d{}_xla", d), tx, "ns/call");
     }
 
     // AOT Pallas attention artifact (if built).
@@ -89,7 +95,7 @@ fn main() {
                 Tensor::randn(shape, &mut r)
             };
             let (q, k, v) = (mk(1), mk(2), mk(3));
-            let t = time_ns(200, || {
+            let t = time_ns(support::iters(200), || {
                 rt2.execute(&exe, &[&q, &k, &v]).unwrap();
             });
             let (b, h, tt, dd) = (shape[0], shape[1], shape[2], shape[3]);
@@ -104,4 +110,5 @@ fn main() {
     } else {
         println!("\n(artifacts/ not built; skipping AOT attention — run `make artifacts`)");
     }
+    rep.finish();
 }

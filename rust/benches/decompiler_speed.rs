@@ -3,7 +3,10 @@
 //! interactive debugging sessions; decompiling a whole dump dir must be
 //! instant).
 //!
-//! Run: `cargo bench --bench decompiler_speed`
+//! Run: `cargo bench --bench decompiler_speed` (merges into
+//! `BENCH_hotpath.json`; `DEPYF_BENCH_QUICK=1` for smoke runs)
+
+mod support;
 
 use std::rc::Rc;
 use std::time::Instant;
@@ -30,18 +33,19 @@ fn main() {
     let d = Dynamo::new(DynamoConfig::default());
     vm.eval_hook = Some(d.clone());
     vm.exec_source(model, IsaVersion::V310).unwrap();
-    for (_, code) in d.generated_codes() {
-        codes.push(code);
+    for (_, code) in d.generated_codes().iter() {
+        codes.push(Rc::clone(code));
     }
     let total_instrs: usize = codes.iter().map(|c| c.instrs.len()).sum();
     let total_bytes: usize = codes.iter().map(|c| c.raw.len()).sum();
     println!("corpus: {} code objects, {} instructions, {} raw bytes\n", codes.len(), total_instrs, total_bytes);
 
+    let mut rep = support::Reporter::new("decompiler_speed");
     for tool in all_tools_rc() {
         if tool.name() != "depyf" && tool.name() != "pycdc" {
             continue; // version-locked baselines can't decode V310
         }
-        let iters = 20;
+        let iters = support::iters(20);
         let mut ok = 0usize;
         let t0 = Instant::now();
         for _ in 0..iters {
@@ -62,5 +66,7 @@ fn main() {
             ok,
             codes.len()
         );
+        rep.record(&format!("{}_corpus_pass", tool.name()), per_pass_ms * 1e6, "ns/pass");
     }
+    rep.finish();
 }

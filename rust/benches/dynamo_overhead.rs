@@ -3,9 +3,11 @@
 //! state. The "compiler must not slow down steady state" bar from
 //! DESIGN.md §Perf.
 //!
-//! Run: `cargo bench --bench dynamo_overhead`
+//! Run: `cargo bench --bench dynamo_overhead` (merges into
+//! `BENCH_hotpath.json`; `DEPYF_BENCH_QUICK=1` for smoke runs)
 
-use std::rc::Rc;
+mod support;
+
 use std::time::Instant;
 
 use depyf::bytecode::IsaVersion;
@@ -23,30 +25,25 @@ def forward(x):
     return (h @ W2).softmax().sum()
 ";
 
-fn bench(name: &str, iters: usize, mut f: impl FnMut()) -> f64 {
-    // warmup
-    for _ in 0..iters.min(50) {
-        f();
-    }
-    let t0 = Instant::now();
-    for _ in 0..iters {
-        f();
-    }
-    let per = t0.elapsed().as_nanos() as f64 / iters as f64;
+fn bench(name: &str, iters: usize, f: impl FnMut()) -> f64 {
+    let per = support::time_ns(iters, f);
     println!("{:<36} {:>12.0} ns/call ({} iters)", name, per, iters);
     per
 }
 
 fn main() {
+    let mut rep = support::Reporter::new("dynamo_overhead");
+    let iters = support::iters(2000);
     let x = Value::tensor(Tensor::ones(&[16, 32]));
 
     // Plain eager execution (no hook).
     let vm = Vm::new();
     vm.exec_source(SRC, IsaVersion::V310).unwrap();
     let f = vm.get_global("forward").unwrap();
-    let eager = bench("eager call (no compiler)", 2000, || {
+    let eager = bench("eager call (no compiler)", iters, || {
         vm.call(&f, &[x.clone()]).unwrap();
     });
+    rep.record("eager_call", eager, "ns/call");
 
     // Compiled path.
     let mut vm2 = Vm::new();
@@ -58,11 +55,14 @@ fn main() {
     // One-time capture cost.
     let t0 = Instant::now();
     vm2.call(&f2, &[x.clone()]).unwrap();
-    println!("{:<36} {:>12.0} ns (one-time)", "first call (capture+compile)", t0.elapsed().as_nanos() as f64);
+    let capture = t0.elapsed().as_nanos() as f64;
+    println!("{:<36} {:>12.0} ns (one-time)", "first call (capture+compile)", capture);
+    rep.record("first_call_capture", capture, "ns (one-shot)");
 
-    let hit = bench("cache-hit call (guards + dispatch)", 2000, || {
+    let hit = bench("cache-hit call (guards + dispatch)", iters, || {
         vm2.call(&f2, &[x.clone()]).unwrap();
     });
+    rep.record("cache_hit_call", hit, "ns/call");
     println!(
         "\nsteady-state ratio compiled/eager: {:.2}x ({} captures, {} cache hits)",
         hit / eager,
@@ -77,10 +77,12 @@ fn main() {
         vm2.call(&f2, &[v.clone()]).unwrap(); // ensure both entries cached
     }
     let mut i = 0;
-    bench("alternating-shape call (2 entries)", 2000, || {
+    let alt = bench("alternating-shape call (2 entries)", iters, || {
         vm2.call(&f2, &[xs[i % 2].clone()]).unwrap();
         i += 1;
     });
+    rep.record("alternating_shape_call", alt, "ns/call");
     println!("\ncompile-time total: {:?}", dynamo.metrics.compile_time());
     println!("metrics: {}", dynamo.metrics.report());
+    rep.finish();
 }

@@ -1,0 +1,165 @@
+//! Hot-path benches: guard-hit dispatch latency (VM-level and raw
+//! guard-table lookups), the eager executor's planned MLP step, and the
+//! compile cache's hit-vs-miss cost on the PJRT runtime.
+//!
+//! Run: `cargo bench --bench guard_dispatch`. Emits/merges
+//! `BENCH_hotpath.json` (see `benches/support/mod.rs` for the schema);
+//! `DEPYF_BENCH_QUICK=1` runs smoke-level iteration counts.
+
+mod support;
+
+use std::rc::Rc;
+use std::time::Instant;
+
+use depyf::api::{Backend, CompileCtx, EagerBackend, XlaBackend};
+use depyf::bytecode::{CodeObject, IsaVersion};
+use depyf::dynamo::{Dynamo, DynamoConfig, Guard, GuardTable, Origin};
+use depyf::graph::{Graph, OpKind};
+use depyf::runtime::Runtime;
+use depyf::tensor::{Rng, Tensor};
+use depyf::value::Value;
+use depyf::vm::Vm;
+
+const SRC: &str = "\
+torch.manual_seed(0)
+W1 = torch.randn([32, 64])
+W2 = torch.randn([64, 32])
+def forward(x):
+    h = (x @ W1).relu()
+    return (h @ W2).softmax().sum()
+";
+
+fn mlp_graph(n: usize, d: usize) -> Graph {
+    let mut g = Graph::new("bench_mlp");
+    let x = g.placeholder("x", &[n, d]);
+    let w1 = g.placeholder("w1", &[d, d]);
+    let w2 = g.placeholder("w2", &[d, d]);
+    let h = g.add_op(OpKind::MatMul, vec![x, w1]).unwrap();
+    let r = g.add_op(OpKind::Relu, vec![h]).unwrap();
+    let o = g.add_op(OpKind::MatMul, vec![r, w2]).unwrap();
+    let s = g.add_op(OpKind::Softmax, vec![o]).unwrap();
+    let out = g.add_op(OpKind::Sum(None), vec![s]).unwrap();
+    g.set_outputs(vec![out]);
+    g
+}
+
+/// Guard-hit latency through the full VM dispatch (call + hook + table).
+fn bench_vm_guard_hit(rep: &mut support::Reporter) {
+    let mut vm = Vm::new();
+    let dynamo = Dynamo::new(DynamoConfig::default());
+    vm.eval_hook = Some(dynamo.clone());
+    vm.exec_source(SRC, IsaVersion::V310).unwrap();
+    let f = vm.get_global("forward").unwrap();
+    let x = Value::tensor(Tensor::ones(&[16, 32]));
+    vm.call(&f, &[x.clone()]).unwrap(); // capture once
+    let iters = support::iters(2000);
+    let hit = support::time_ns(iters, || {
+        vm.call(&f, &[x.clone()]).unwrap();
+    });
+    rep.record("guard_hit", hit, "ns/call");
+    assert!(dynamo.metrics.cache_hits.get() >= 1);
+
+    // Shape-polymorphic steady state: several entries live, calls
+    // alternate between them (the bucketed-dispatch case).
+    let shapes: [[usize; 2]; 3] = [[16, 32], [8, 32], [4, 32]];
+    let xs: Vec<Value> = shapes.iter().map(|s| Value::tensor(Tensor::ones(s))).collect();
+    for v in &xs {
+        vm.call(&f, &[v.clone()]).unwrap();
+    }
+    let mut i = 0;
+    let alt = support::time_ns(iters, || {
+        vm.call(&f, &[xs[i % xs.len()].clone()]).unwrap();
+        i += 1;
+    });
+    rep.record("guard_hit_polymorphic", alt, "ns/call");
+}
+
+/// Raw dispatcher cost: table lookup without the VM around it.
+fn bench_table_lookup(rep: &mut support::Reporter) {
+    let code = Rc::new(CodeObject::new("e", IsaVersion::V311, 1, vec![], vec![], vec![], vec![], vec![]));
+    let w = Value::tensor(Tensor::ones(&[64, 64]));
+    let mut table = GuardTable::new();
+    for rank_extra in 0..8usize {
+        let shape: Vec<usize> = std::iter::repeat(2).take(2 + (rank_extra % 3)).collect();
+        let mut guards = vec![
+            Guard::TensorShape { origin: Origin::Arg(0), shape },
+            Guard::Identity { origin: Origin::Global("W".into()), value: w.clone() },
+        ];
+        guards.push(Guard::ConstEq { origin: Origin::Arg(1), value: Value::Int(rank_extra as i64) });
+        table.insert(guards, Rc::clone(&code));
+    }
+    let mut globals = std::collections::HashMap::new();
+    globals.insert("W".to_string(), w);
+    // Matches the last rank-2 entry (arg1 == 6).
+    let args = vec![Value::tensor(Tensor::ones(&[2, 2])), Value::Int(6)];
+    assert!(table.lookup(&args, &globals).is_some());
+    let iters = support::iters(200_000);
+    let ns = support::time_ns(iters, || {
+        std::hint::black_box(table.lookup(&args, &globals));
+    });
+    rep.record("table_lookup_8_entries", ns, "ns/lookup");
+}
+
+/// Planned eager executor on the paper's MLP block.
+fn bench_eager_mlp(rep: &mut support::Reporter) {
+    let (n, d) = (32, 64);
+    let g = Rc::new(mlp_graph(n, d));
+    let f = EagerBackend.compile("bench_mlp", Rc::clone(&g), &CompileCtx::default()).unwrap();
+    let mut rng = Rng::new(7);
+    let inputs: Vec<Rc<Tensor>> = vec![
+        Rc::new(Tensor::randn(&[n, d], &mut rng)),
+        Rc::new(Tensor::randn(&[d, d], &mut rng)),
+        Rc::new(Tensor::randn(&[d, d], &mut rng)),
+    ];
+    let iters = support::iters(500);
+    let ns = support::time_ns(iters, || {
+        f.call(&inputs).unwrap();
+    });
+    rep.record("eager_mlp_step", ns, "ns/call");
+}
+
+/// Compile-cache: cold PJRT compile (miss) vs content-hash cache hit.
+fn bench_compile_cache(rep: &mut support::Reporter) {
+    let cache_dir = std::env::temp_dir().join(format!("depyf_bench_cache_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&cache_dir);
+    let rt = match Runtime::cpu_with_disk_cache(&cache_dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("[bench:guard_dispatch] PJRT unavailable, skipping compile-cache bench: {}", e);
+            return;
+        }
+    };
+    let g = Rc::new(mlp_graph(8, 16));
+    let ctx = CompileCtx { runtime: Some(Rc::clone(&rt)), ..Default::default() };
+
+    let t0 = Instant::now();
+    XlaBackend.compile("bench_cc", Rc::clone(&g), &ctx).expect("xla compile");
+    let miss = t0.elapsed().as_nanos() as f64;
+    rep.record("compile_cache_miss", miss, "ns (one-shot)");
+    assert_eq!(rt.compiles.get(), 1);
+
+    let iters = support::iters(200);
+    let hit = support::time_ns(iters, || {
+        XlaBackend.compile("bench_cc", Rc::clone(&g), &ctx).expect("xla compile");
+    });
+    rep.record("compile_cache_hit", hit, "ns/compile");
+    assert_eq!(rt.compiles.get(), 1, "hits must not recompile");
+
+    // Fresh runtime over the same disk cache: lowering is skipped.
+    let rt2 = Runtime::cpu_with_disk_cache(&cache_dir).expect("pjrt");
+    let ctx2 = CompileCtx { runtime: Some(Rc::clone(&rt2)), ..Default::default() };
+    let t0 = Instant::now();
+    XlaBackend.compile("bench_cc2", Rc::clone(&g), &ctx2).expect("xla compile");
+    rep.record("compile_cache_disk_warm", t0.elapsed().as_nanos() as f64, "ns (one-shot)");
+    assert_eq!(rt2.disk_hits.get(), 1, "disk cache must serve the HLO");
+    let _ = std::fs::remove_dir_all(&cache_dir);
+}
+
+fn main() {
+    let mut rep = support::Reporter::new("guard_dispatch");
+    bench_vm_guard_hit(&mut rep);
+    bench_table_lookup(&mut rep);
+    bench_eager_mlp(&mut rep);
+    bench_compile_cache(&mut rep);
+    rep.finish();
+}

@@ -1,0 +1,150 @@
+//! Shared bench harness: timing helpers plus machine-readable reporting.
+//!
+//! Every bench records its numbers through a [`Reporter`], which merges
+//! them into `BENCH_hotpath.json` (override the path with
+//! `DEPYF_BENCH_OUT`). Entries are keyed by `(bench, name)`: re-running a
+//! bench refreshes its own entries and leaves the other benches' rows
+//! intact, so running the whole suite accumulates one combined report.
+//!
+//! `DEPYF_BENCH_QUICK=1` shrinks iteration counts to smoke-test levels —
+//! CI uses it to keep the hot-path benches compiling and running without
+//! paying for statistically meaningful timings.
+//!
+//! Schema:
+//!
+//! ```json
+//! {
+//!   "schema_version": 1,
+//!   "entries": [
+//!     {"bench": "guard_dispatch", "name": "guard_hit", "value": 123.0, "unit": "ns/call"}
+//!   ]
+//! }
+//! ```
+
+// Each bench binary uses its own subset of this harness.
+#![allow(dead_code)]
+
+use std::time::Instant;
+
+use depyf::api::json::{self, Json};
+
+pub const REPORT_SCHEMA_VERSION: u64 = 1;
+
+/// True when the suite runs in CI smoke mode.
+pub fn quick() -> bool {
+    std::env::var("DEPYF_BENCH_QUICK").map(|v| v == "1" || v == "true").unwrap_or(false)
+}
+
+/// Scale an iteration count down to smoke level under `DEPYF_BENCH_QUICK`.
+pub fn iters(full: usize) -> usize {
+    if quick() {
+        2
+    } else {
+        full
+    }
+}
+
+/// Time a closure (with warmup), returning ns per call.
+pub fn time_ns(iterations: usize, mut f: impl FnMut()) -> f64 {
+    for _ in 0..iterations.min(10) {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iterations {
+        f();
+    }
+    t0.elapsed().as_nanos() as f64 / iterations as f64
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Entry {
+    pub bench: String,
+    pub name: String,
+    pub value: f64,
+    pub unit: String,
+}
+
+/// Collects entries for one bench binary and merges them into the shared
+/// report file on `finish()`.
+pub struct Reporter {
+    bench: String,
+    entries: Vec<Entry>,
+}
+
+impl Reporter {
+    pub fn new(bench: &str) -> Reporter {
+        Reporter { bench: bench.to_string(), entries: Vec::new() }
+    }
+
+    /// Record one measurement (also echoed to stdout for human runs).
+    pub fn record(&mut self, name: &str, value: f64, unit: &str) {
+        println!("[bench:{}] {:<32} {:>14.1} {}", self.bench, name, value, unit);
+        self.entries.push(Entry {
+            bench: self.bench.clone(),
+            name: name.to_string(),
+            value,
+            unit: unit.to_string(),
+        });
+    }
+
+    /// Merge this run's entries into the report file and write it.
+    pub fn finish(self) {
+        let path = report_path();
+        let mut merged: Vec<Entry> = load_entries(&path)
+            .into_iter()
+            .filter(|e| e.bench != self.bench)
+            .collect();
+        merged.extend(self.entries);
+        let doc = render(&merged);
+        if let Err(e) = std::fs::write(&path, doc) {
+            eprintln!("[bench:{}] failed to write {}: {}", self.bench, path, e);
+        } else {
+            println!("[bench:{}] wrote {} entries to {}", self.bench, merged.len(), path);
+        }
+    }
+}
+
+pub fn report_path() -> String {
+    std::env::var("DEPYF_BENCH_OUT").unwrap_or_else(|_| "BENCH_hotpath.json".into())
+}
+
+fn load_entries(path: &str) -> Vec<Entry> {
+    let Ok(text) = std::fs::read_to_string(path) else {
+        return Vec::new();
+    };
+    let Ok(doc) = json::parse(&text) else {
+        return Vec::new();
+    };
+    let Some(Json::Arr(items)) = doc.get("entries") else {
+        return Vec::new();
+    };
+    items
+        .iter()
+        .filter_map(|item| {
+            Some(Entry {
+                bench: item.get("bench")?.as_str()?.to_string(),
+                name: item.get("name")?.as_str()?.to_string(),
+                value: item.get("value")?.as_f64()?,
+                unit: item.get("unit")?.as_str()?.to_string(),
+            })
+        })
+        .collect()
+}
+
+fn render(entries: &[Entry]) -> String {
+    let mut out = String::from("{\n");
+    out.push_str(&format!("  \"schema_version\": {},\n", REPORT_SCHEMA_VERSION));
+    out.push_str("  \"entries\": [\n");
+    for (i, e) in entries.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"bench\": \"{}\", \"name\": \"{}\", \"value\": {}, \"unit\": \"{}\"}}{}\n",
+            json::escape(&e.bench),
+            json::escape(&e.name),
+            e.value,
+            json::escape(&e.unit),
+            if i + 1 < entries.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}

@@ -2,7 +2,10 @@
 //! decompiler correctness across ISA versions and program-generated
 //! bytecode, plus wall-clock per suite.
 //!
-//! Run: `cargo bench --bench table1_correctness`
+//! Run: `cargo bench --bench table1_correctness` (merges into
+//! `BENCH_hotpath.json`)
+
+mod support;
 
 use depyf::bytecode::IsaVersion;
 use depyf::corpus::{render_table1, run_model_suite, run_syntax_suite, run_table1};
@@ -10,11 +13,13 @@ use depyf::decompiler::baselines::all_tools_rc;
 use depyf::decompiler::DecompilerTool;
 
 fn main() {
+    let mut rep = support::Reporter::new("table1_correctness");
     println!("=== Table 1: decompiler correctness (regenerated) ===\n");
     let t0 = std::time::Instant::now();
     let table = run_table1();
     println!("{}", render_table1(&table));
     println!("total wall-clock: {:.2?}\n", t0.elapsed());
+    rep.record("table1_wall_clock", t0.elapsed().as_nanos() as f64, "ns (one-shot)");
 
     println!("=== per-suite timing ===");
     for tool in all_tools_rc() {
@@ -34,5 +39,8 @@ fn main() {
             mcell.total,
             mdl
         );
+        rep.record(&format!("{}_syntax_suite", tool.name()), syn.as_nanos() as f64, "ns (one-shot)");
+        rep.record(&format!("{}_model_suite", tool.name()), mdl.as_nanos() as f64, "ns (one-shot)");
     }
+    rep.finish();
 }

@@ -60,13 +60,16 @@ pub trait Backend {
 
 /// Build an eager-executing [`CompiledGraphFn`] with an explicit
 /// `backend_name` — the reference executor and the fallback target.
+/// The execution plan (topo steps, pre-materialized constants, buffer
+/// liveness, reusable arena) is computed here, once per compile, not per
+/// call — see [`eager::ExecPlan`].
 pub fn eager_graph_fn(name: &str, graph: Rc<Graph>, backend_name: String) -> CompiledGraphFn {
-    let g = Rc::clone(&graph);
+    let plan = eager::ExecPlan::new(Rc::clone(&graph));
     CompiledGraphFn {
         name: name.to_string(),
         graph,
         backend_name,
-        executor: Box::new(move |inputs| eager::execute(&g, inputs)),
+        executor: Box::new(move |inputs| plan.run(inputs)),
         calls: std::cell::Cell::new(0),
     }
 }

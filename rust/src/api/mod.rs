@@ -20,6 +20,7 @@
 mod artifact;
 mod backend;
 mod error;
+pub mod json;
 mod session;
 
 pub use artifact::{

@@ -32,7 +32,7 @@ use crate::runtime::Runtime;
 use crate::value::Value;
 use crate::vm::{Vm, VmError};
 
-use super::artifact::{write_manifest, Artifact};
+use super::artifact::{write_manifest, Artifact, ArtifactKind};
 use super::backend::{backend_names, lookup_backend, Backend, EagerBackend, FallbackPolicy};
 use super::error::DepyfError;
 
@@ -55,7 +55,10 @@ struct GraphDebugAdapter {
     debugger: Rc<Debugger>,
     /// graph name -> (node id -> line) — filled lazily as graphs compile.
     tables: std::cell::RefCell<HashMap<String, HashMap<usize, u32>>>,
-    dynamo: std::cell::RefCell<Option<Rc<Dynamo>>>,
+    /// Weak: the dynamo's config holds this adapter (as tracer), so a
+    /// strong reference here would cycle and leak every session's graphs,
+    /// code objects and log.
+    dynamo: std::cell::RefCell<Option<std::rc::Weak<Dynamo>>>,
 }
 
 impl GraphTracer for GraphDebugAdapter {
@@ -65,9 +68,9 @@ impl GraphTracer for GraphDebugAdapter {
         let line = {
             let mut tables = self.tables.borrow_mut();
             if !tables.contains_key(graph_name) {
-                if let Some(d) = self.dynamo.borrow().as_ref() {
-                    if let Some((_, g)) = d.graphs().into_iter().find(|(n, _)| n == graph_name) {
-                        tables.insert(graph_name.to_string(), print_graph_with_lines(&g).1);
+                if let Some(d) = self.dynamo.borrow().as_ref().and_then(|w| w.upgrade()) {
+                    if let Some((_, g)) = d.graphs().iter().find(|(n, _)| n == graph_name) {
+                        tables.insert(graph_name.to_string(), print_graph_with_lines(g).1);
                     }
                 }
             }
@@ -144,10 +147,20 @@ impl Session {
     }
 
     /// Write all dumps (`full_code.py`, `__compiled_fn_*.py`,
-    /// `__transformed_*.py`, disassembly, guards) plus a `manifest.json`
-    /// index, and return the typed artifact list.
+    /// `__transformed_*.py`, disassembly, guards) plus a `metrics.json`
+    /// snapshot of the compiler counters and a `manifest.json` index, and
+    /// return the typed artifact list.
     pub fn finish(&self) -> Result<Vec<Artifact>, DepyfError> {
-        let artifacts = dump_all(&self.dynamo, &self.dump)?;
+        dump_all(&self.dynamo, &self.dump)?;
+        // Per-session perf observability: cache hits/misses, guard
+        // checks/failures, compile_ns — so regressions show up in dumps.
+        self.dump.write_refresh(
+            ArtifactKind::Metrics,
+            "metrics",
+            "metrics.json",
+            &self.dynamo.metrics.to_json(),
+        )?;
+        let artifacts = self.dump.artifacts();
         write_manifest(self.dump.root(), &artifacts)?;
         let _ = &self.adapter;
         Ok(artifacts)
@@ -250,7 +263,7 @@ impl SessionBuilder {
             Some(rt) => Dynamo::with_runtime(config, rt),
             None => Dynamo::new(config),
         };
-        *adapter.dynamo.borrow_mut() = Some(Rc::clone(&dynamo));
+        *adapter.dynamo.borrow_mut() = Some(Rc::downgrade(&dynamo));
         let mut vm = Vm::new();
         vm.eval_hook = Some(dynamo.clone());
         vm.tracer = Some(debugger.clone());
@@ -289,6 +302,28 @@ mod tests {
         // The manifest round-trips and indexes exactly what finish() returned.
         let indexed = load_manifest(&dir).unwrap();
         assert_eq!(indexed, artifacts);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn finish_dumps_session_metrics() {
+        let dir = tmpdir("metrics");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut s = Session::builder().dump_to(&dir).build().unwrap();
+        s.run_source(
+            "main",
+            "def f(x):\n    return (x * 2).sum()\nprint(f(torch.ones([2])).item())\nprint(f(torch.ones([2])).item())\n",
+        )
+        .unwrap();
+        let artifacts = s.finish().unwrap();
+        let m = artifacts.iter().find(|a| a.kind == ArtifactKind::Metrics).expect("metrics artifact");
+        let doc = crate::api::json::parse(&std::fs::read_to_string(&m.path).unwrap()).unwrap();
+        assert_eq!(doc.get("captures").and_then(|v| v.as_f64()), Some(1.0));
+        assert!(doc.get("cache_hits").and_then(|v| v.as_f64()).unwrap() >= 1.0);
+        assert!(doc.get("compile_ns").and_then(|v| v.as_f64()).unwrap() > 0.0);
+        // Repeated finish() refreshes the same file, no duplicates.
+        let again = s.finish().unwrap();
+        assert_eq!(again.iter().filter(|a| a.kind == ArtifactKind::Metrics).count(), 1);
         std::fs::remove_dir_all(&dir).ok();
     }
 

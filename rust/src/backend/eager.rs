@@ -1,16 +1,192 @@
-//! Eager reference backend: executes a captured graph node-by-node with the
-//! CPU tensor library. This is the correctness oracle for the XLA backend
-//! and the executor the debugger steps through (`on_node` callback maps to
-//! dump lines).
+//! Eager reference backend: executes a captured graph with the CPU tensor
+//! library. This is the correctness oracle for the XLA backend and the
+//! executor the debugger steps through (`on_node` callback maps to dump
+//! lines).
+//!
+//! The hot path is [`ExecPlan`]: a per-graph execution plan computed once
+//! at compile time — constants pre-materialized into an env template, op
+//! steps laid out in order, last-use (liveness) lists so intermediate
+//! buffers are released as soon as possible, and a reusable slot arena so
+//! steady-state calls do no per-call planning work and no env reallocation.
 
+use std::cell::RefCell;
 use std::rc::Rc;
 
 use crate::api::DepyfError;
-use crate::graph::{Graph, NodeKind, OpKind};
+use crate::graph::{Graph, NodeId, NodeKind, OpKind};
 use crate::tensor::{self, Tensor};
 
+/// Evaluate one op node against the environment. Shared by the planned and
+/// traced executors.
+fn eval_op(g: &Graph, id: usize, env: &[Option<Tensor>]) -> Result<Tensor, String> {
+    let (op, args) = match &g.nodes[id].kind {
+        NodeKind::Op(op, args) => (op, args),
+        _ => return Err(format!("node {} is not an op", id)),
+    };
+    let get = |i: usize| -> Result<&Tensor, String> {
+        env[args[i]].as_ref().ok_or_else(|| format!("node {} uses unevaluated node {}", id, args[i]))
+    };
+    Ok(match op {
+        OpKind::Add => tensor::add(get(0)?, get(1)?)?,
+        OpKind::Sub => tensor::sub(get(0)?, get(1)?)?,
+        OpKind::Mul => tensor::mul(get(0)?, get(1)?)?,
+        OpKind::Div => tensor::div(get(0)?, get(1)?)?,
+        OpKind::Pow => tensor::pow(get(0)?, get(1)?)?,
+        OpKind::Maximum => tensor::maximum(get(0)?, get(1)?)?,
+        OpKind::Minimum => tensor::minimum(get(0)?, get(1)?)?,
+        OpKind::Neg => tensor::neg(get(0)?),
+        OpKind::Relu => tensor::relu(get(0)?),
+        OpKind::Gelu => tensor::gelu(get(0)?),
+        OpKind::Tanh => tensor::tanh(get(0)?),
+        OpKind::Sigmoid => tensor::sigmoid(get(0)?),
+        OpKind::Exp => tensor::exp(get(0)?),
+        OpKind::Log => tensor::log(get(0)?),
+        OpKind::Sqrt => tensor::sqrt(get(0)?),
+        OpKind::Abs => tensor::abs(get(0)?),
+        OpKind::MatMul => tensor::matmul(get(0)?, get(1)?)?,
+        OpKind::Transpose => tensor::transpose(get(0)?)?,
+        OpKind::Reshape(spec) => {
+            let t = get(0)?;
+            let shape = tensor::reshape_infer(t.numel(), spec)?;
+            t.reshape(shape)
+        }
+        OpKind::Permute(perm) => tensor::permute(get(0)?, perm)?,
+        OpKind::Softmax => tensor::softmax(get(0)?)?,
+        OpKind::Sum(ax) => tensor::sum(get(0)?, *ax)?,
+        OpKind::Mean(ax) => tensor::mean(get(0)?, *ax)?,
+        OpKind::Max(ax) => tensor::max_reduce(get(0)?, *ax)?,
+        OpKind::Min(ax) => tensor::min_reduce(get(0)?, *ax)?,
+        OpKind::LayerNorm => tensor::layernorm(get(0)?, get(1)?, get(2)?, 1e-5)?,
+        OpKind::Embedding => tensor::embedding(get(0)?, get(1)?)?,
+        OpKind::CrossEntropy => tensor::cross_entropy(get(0)?, get(1)?)?,
+    })
+}
+
+fn check_inputs(g: &Graph, inputs: &[Rc<Tensor>]) -> Result<(), String> {
+    if inputs.len() != g.inputs.len() {
+        return Err(format!("graph {} expects {} inputs, got {}", g.name, g.inputs.len(), inputs.len()));
+    }
+    for (slot, input) in g.inputs.iter().zip(inputs.iter()) {
+        let node = &g.nodes[*slot];
+        if node.shape != input.shape() {
+            return Err(format!(
+                "graph {} input {} shape mismatch: expected {:?}, got {:?}",
+                g.name,
+                slot,
+                node.shape,
+                input.shape()
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// A per-graph execution plan: everything derivable from the graph alone,
+/// computed once when the backend compiles it instead of on every call.
+pub struct ExecPlan {
+    graph: Rc<Graph>,
+    /// Env template with constants pre-materialized (`ConstScalar` /
+    /// `ConstTensor` nodes); tensors share storage via `Rc`, so cloning
+    /// the template per call is pointer-cheap.
+    template: Vec<Option<Tensor>>,
+    /// Op node ids in execution order (graph nodes are topologically
+    /// ordered by construction; placeholders and constants are skipped).
+    steps: Vec<NodeId>,
+    /// Parallel to `steps`: env slots whose value dies after that step
+    /// (not used by any later step and not a graph output). Freed eagerly
+    /// so peak memory is bounded by live values, not graph size.
+    dead_after: Vec<Vec<NodeId>>,
+    /// Reused env buffer — steady-state calls reallocate nothing.
+    arena: RefCell<Vec<Option<Tensor>>>,
+}
+
+impl ExecPlan {
+    pub fn new(graph: Rc<Graph>) -> ExecPlan {
+        let mut template: Vec<Option<Tensor>> = vec![None; graph.nodes.len()];
+        let mut steps = Vec::new();
+        for (id, node) in graph.nodes.iter().enumerate() {
+            match &node.kind {
+                NodeKind::Placeholder { .. } => {}
+                NodeKind::ConstScalar(v) => template[id] = Some(Tensor::scalar(*v as f32)),
+                NodeKind::ConstTensor(t) => template[id] = Some(t.clone()),
+                NodeKind::Op(..) => steps.push(id),
+            }
+        }
+        // Liveness: a slot dies after the last step that reads it, unless
+        // it is a graph output (outputs stay live through collection).
+        let mut last_use: Vec<Option<usize>> = vec![None; graph.nodes.len()];
+        for (si, &id) in steps.iter().enumerate() {
+            if let NodeKind::Op(_, args) = &graph.nodes[id].kind {
+                for &a in args {
+                    last_use[a] = Some(si);
+                }
+            }
+        }
+        let mut dead_after: Vec<Vec<NodeId>> = vec![Vec::new(); steps.len()];
+        for (node, lu) in last_use.iter().enumerate() {
+            if let Some(si) = lu {
+                if !graph.outputs.contains(&node) {
+                    dead_after[*si].push(node);
+                }
+            }
+        }
+        ExecPlan { graph, template, steps, dead_after, arena: RefCell::new(Vec::new()) }
+    }
+
+    pub fn graph(&self) -> &Rc<Graph> {
+        &self.graph
+    }
+
+    /// Execute the plan. Reuses the internal arena when free (the planned
+    /// executor never re-enters itself; the fallback covers exotic
+    /// aliasing of one plan from two callables).
+    pub fn run(&self, inputs: &[Rc<Tensor>]) -> Result<Vec<Tensor>, DepyfError> {
+        self.run_inner(inputs).map_err(DepyfError::Backend)
+    }
+
+    fn run_inner(&self, inputs: &[Rc<Tensor>]) -> Result<Vec<Tensor>, String> {
+        let g = &*self.graph;
+        check_inputs(g, inputs)?;
+        let mut borrowed;
+        let mut local;
+        let env: &mut Vec<Option<Tensor>> = match self.arena.try_borrow_mut() {
+            Ok(b) => {
+                borrowed = b;
+                &mut *borrowed
+            }
+            Err(_) => {
+                local = Vec::new();
+                &mut local
+            }
+        };
+        env.clear();
+        env.extend(self.template.iter().cloned());
+        for (slot, input) in g.inputs.iter().zip(inputs.iter()) {
+            env[*slot] = Some((**input).clone());
+        }
+        for (si, &id) in self.steps.iter().enumerate() {
+            let r = eval_op(g, id, env)?;
+            env[id] = Some(r);
+            for &dead in &self.dead_after[si] {
+                env[dead] = None;
+            }
+        }
+        let out = g
+            .outputs
+            .iter()
+            .map(|&o| env[o].clone().ok_or_else(|| format!("output node {} unevaluated", o)))
+            .collect();
+        // Drop live tensors now rather than holding them until the next
+        // call (the arena itself keeps only empty slots).
+        env.clear();
+        out
+    }
+}
+
 /// Execute with a per-node callback (node id, result) — used by the
-/// debugger to step through `__compiled_fn` dumps line by line.
+/// debugger to step through `__compiled_fn` dumps line by line. Walks
+/// nodes directly (no plan): the debugger path trades speed for the
+/// callback ordering guarantee.
 pub fn execute_traced(
     g: &Graph,
     inputs: &[Rc<Tensor>],
@@ -24,21 +200,9 @@ fn execute_traced_inner(
     inputs: &[Rc<Tensor>],
     mut on_node: impl FnMut(usize, &Tensor),
 ) -> Result<Vec<Tensor>, String> {
-    if inputs.len() != g.inputs.len() {
-        return Err(format!("graph {} expects {} inputs, got {}", g.name, g.inputs.len(), inputs.len()));
-    }
+    check_inputs(g, inputs)?;
     let mut env: Vec<Option<Tensor>> = vec![None; g.nodes.len()];
     for (slot, input) in g.inputs.iter().zip(inputs.iter()) {
-        let node = &g.nodes[*slot];
-        if node.shape != input.shape() {
-            return Err(format!(
-                "graph {} input {} shape mismatch: expected {:?}, got {:?}",
-                g.name,
-                slot,
-                node.shape,
-                input.shape()
-            ));
-        }
         env[*slot] = Some((**input).clone());
     }
     for (id, node) in g.nodes.iter().enumerate() {
@@ -46,44 +210,8 @@ fn execute_traced_inner(
             NodeKind::Placeholder { .. } => {}
             NodeKind::ConstScalar(v) => env[id] = Some(Tensor::scalar(*v as f32)),
             NodeKind::ConstTensor(t) => env[id] = Some(t.clone()),
-            NodeKind::Op(op, args) => {
-                let get = |i: usize| -> Result<&Tensor, String> {
-                    env[args[i]].as_ref().ok_or_else(|| format!("node {} uses unevaluated node {}", id, args[i]))
-                };
-                let r = match op {
-                    OpKind::Add => tensor::add(get(0)?, get(1)?)?,
-                    OpKind::Sub => tensor::sub(get(0)?, get(1)?)?,
-                    OpKind::Mul => tensor::mul(get(0)?, get(1)?)?,
-                    OpKind::Div => tensor::div(get(0)?, get(1)?)?,
-                    OpKind::Pow => tensor::pow(get(0)?, get(1)?)?,
-                    OpKind::Maximum => tensor::maximum(get(0)?, get(1)?)?,
-                    OpKind::Minimum => tensor::minimum(get(0)?, get(1)?)?,
-                    OpKind::Neg => tensor::neg(get(0)?),
-                    OpKind::Relu => tensor::relu(get(0)?),
-                    OpKind::Gelu => tensor::gelu(get(0)?),
-                    OpKind::Tanh => tensor::tanh(get(0)?),
-                    OpKind::Sigmoid => tensor::sigmoid(get(0)?),
-                    OpKind::Exp => tensor::exp(get(0)?),
-                    OpKind::Log => tensor::log(get(0)?),
-                    OpKind::Sqrt => tensor::sqrt(get(0)?),
-                    OpKind::Abs => tensor::abs(get(0)?),
-                    OpKind::MatMul => tensor::matmul(get(0)?, get(1)?)?,
-                    OpKind::Transpose => tensor::transpose(get(0)?)?,
-                    OpKind::Reshape(spec) => {
-                        let t = get(0)?;
-                        let shape = tensor::reshape_infer(t.numel(), spec)?;
-                        t.reshape(shape)
-                    }
-                    OpKind::Permute(perm) => tensor::permute(get(0)?, perm)?,
-                    OpKind::Softmax => tensor::softmax(get(0)?)?,
-                    OpKind::Sum(ax) => tensor::sum(get(0)?, *ax)?,
-                    OpKind::Mean(ax) => tensor::mean(get(0)?, *ax)?,
-                    OpKind::Max(ax) => tensor::max_reduce(get(0)?, *ax)?,
-                    OpKind::Min(ax) => tensor::min_reduce(get(0)?, *ax)?,
-                    OpKind::LayerNorm => tensor::layernorm(get(0)?, get(1)?, get(2)?, 1e-5)?,
-                    OpKind::Embedding => tensor::embedding(get(0)?, get(1)?)?,
-                    OpKind::CrossEntropy => tensor::cross_entropy(get(0)?, get(1)?)?,
-                };
+            NodeKind::Op(..) => {
+                let r = eval_op(g, id, &env)?;
                 on_node(id, &r);
                 env[id] = Some(r);
             }
@@ -95,7 +223,8 @@ fn execute_traced_inner(
         .collect()
 }
 
-/// Plain execution without tracing.
+/// Plain one-shot execution (tests, oracles). Hot callers should build an
+/// [`ExecPlan`] once instead.
 pub fn execute(g: &Graph, inputs: &[Rc<Tensor>]) -> Result<Vec<Tensor>, DepyfError> {
     execute_traced(g, inputs, |_, _| {})
 }
@@ -104,6 +233,7 @@ pub fn execute(g: &Graph, inputs: &[Rc<Tensor>]) -> Result<Vec<Tensor>, DepyfErr
 mod tests {
     use super::*;
     use crate::graph::Graph;
+    use crate::tensor::Rng;
 
     #[test]
     fn executes_mlp_block() {
@@ -152,5 +282,70 @@ mod tests {
         let mut seen = Vec::new();
         execute_traced(&g, &[Rc::new(Tensor::zeros(&[2]))], |id, _| seen.push(id)).unwrap();
         assert_eq!(seen, vec![a, b]);
+    }
+
+    fn mlp(n: usize, d: usize) -> Graph {
+        let mut g = Graph::new("plan_mlp");
+        let x = g.placeholder("x", &[n, d]);
+        let w1 = g.placeholder("w1", &[d, d]);
+        let w2 = g.placeholder("w2", &[d, d]);
+        let c = g.const_scalar(0.5);
+        let h = g.add_op(OpKind::MatMul, vec![x, w1]).unwrap();
+        let r = g.add_op(OpKind::Relu, vec![h]).unwrap();
+        let sc = g.add_op(OpKind::Mul, vec![r, c]).unwrap();
+        let o = g.add_op(OpKind::MatMul, vec![sc, w2]).unwrap();
+        let sm = g.add_op(OpKind::Softmax, vec![o]).unwrap();
+        let s = g.add_op(OpKind::Sum(None), vec![sm]).unwrap();
+        g.set_outputs(vec![s]);
+        g
+    }
+
+    #[test]
+    fn plan_matches_unplanned_execution() {
+        let g = Rc::new(mlp(4, 8));
+        let plan = ExecPlan::new(Rc::clone(&g));
+        let mut rng = Rng::new(11);
+        for _ in 0..3 {
+            let inputs: Vec<Rc<Tensor>> = vec![
+                Rc::new(Tensor::randn(&[4, 8], &mut rng)),
+                Rc::new(Tensor::randn(&[8, 8], &mut rng)),
+                Rc::new(Tensor::randn(&[8, 8], &mut rng)),
+            ];
+            let via_plan = plan.run(&inputs).unwrap();
+            let via_walk = execute(&g, &inputs).unwrap();
+            assert_eq!(via_plan.len(), via_walk.len());
+            for (a, b) in via_plan.iter().zip(via_walk.iter()) {
+                assert!(a.allclose(b, 0.0), "plan diverged from reference");
+            }
+        }
+    }
+
+    #[test]
+    fn plan_keeps_intermediate_outputs_alive() {
+        // An intermediate that is ALSO an output must survive dead-slot
+        // freeing even though later steps consume it.
+        let mut g = Graph::new("g");
+        let x = g.placeholder("x", &[3]);
+        let r = g.add_op(OpKind::Relu, vec![x]).unwrap();
+        let e = g.add_op(OpKind::Exp, vec![r]).unwrap();
+        g.set_outputs(vec![r, e]);
+        let plan = ExecPlan::new(Rc::new(g));
+        let out = plan.run(&[Rc::new(Tensor::new(vec![3], vec![-1.0, 0.0, 1.0]))]).unwrap();
+        assert_eq!(out[0].data(), &[0.0, 0.0, 1.0]);
+        assert!((out[1].data()[2] - 1.0f32.exp()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn plan_checks_inputs_like_reference() {
+        let g = Rc::new(mlp(2, 4));
+        let plan = ExecPlan::new(Rc::clone(&g));
+        assert!(plan.run(&[]).is_err());
+        assert!(plan
+            .run(&[
+                Rc::new(Tensor::ones(&[4, 2])), // transposed: wrong shape
+                Rc::new(Tensor::ones(&[4, 4])),
+                Rc::new(Tensor::ones(&[4, 4])),
+            ])
+            .is_err());
     }
 }

@@ -16,9 +16,30 @@ use crate::runtime::Runtime;
 use crate::tensor::Tensor;
 
 /// Compile a graph via HLO text + PJRT.
+///
+/// The executable cache key is `graph:{content_hash}` — structurally
+/// identical graphs (whatever their `__compiled_fn_N` names, whichever
+/// session captured them) compile **once per process** on a shared
+/// [`Runtime`]. With a runtime disk cache, the lowered HLO is persisted
+/// under the same key so repeated runs skip `emit_hlo` entirely and feed
+/// PJRT the cached text.
 pub fn compile(name: &str, graph: &Rc<Graph>, rt: &Rc<Runtime>) -> Result<CompiledGraphFn, DepyfError> {
-    let hlo = emit_hlo(graph)?;
-    let exe = rt.compile_hlo_text(&format!("graph:{}", name), &hlo, graph.outputs.len())?;
+    let key = format!("graph:{:016x}", graph.content_hash());
+    let n_outputs = graph.outputs.len();
+    let exe = match rt.cached_executable(&key) {
+        Some(e) => e,
+        None => {
+            let hlo = match rt.cached_hlo(&key) {
+                Some((text, n)) if n == n_outputs => text,
+                _ => {
+                    let text = emit_hlo(graph)?;
+                    rt.store_hlo(&key, &text, n_outputs);
+                    text
+                }
+            };
+            rt.compile_hlo_text(&key, &hlo, n_outputs)?
+        }
+    };
     let rt2 = Rc::clone(rt);
     let g2 = Rc::clone(graph);
     Ok(CompiledGraphFn {
@@ -618,5 +639,59 @@ mod tests {
         let s = g.add_op(OpKind::Add, vec![x, c]).unwrap();
         g.set_outputs(vec![s]);
         cross_check(&g, vec![Tensor::ones(&[2, 2])], 1e-6);
+    }
+
+    fn small_graph(name: &str) -> Rc<Graph> {
+        let mut g = Graph::new(name);
+        let x = g.placeholder("x", &[2, 2]);
+        let c = g.const_scalar(2.0);
+        let m = g.add_op(OpKind::Mul, vec![x, c]).unwrap();
+        let s = g.add_op(OpKind::Sum(None), vec![m]).unwrap();
+        g.set_outputs(vec![s]);
+        Rc::new(g)
+    }
+
+    /// Structurally identical graphs — however they are named, whichever
+    /// session captured them — must hit one PJRT compile per process.
+    #[test]
+    fn identical_graphs_compile_once_per_runtime() {
+        let rt = Runtime::cpu().expect("pjrt");
+        // Same graph content from "two sessions": both name their first
+        // capture __compiled_fn_1-style, but names don't matter either way.
+        let f1 = compile("__compiled_fn_1", &small_graph("__compiled_fn_1"), &rt).unwrap();
+        assert_eq!(rt.compiles.get(), 1);
+        let f2 = compile("__compiled_fn_7", &small_graph("__compiled_fn_7"), &rt).unwrap();
+        assert_eq!(rt.compiles.get(), 1, "content-hash key must dedupe the second compile");
+        let x = vec![Rc::new(Tensor::ones(&[2, 2]))];
+        assert_eq!(f1.call(&x).unwrap()[0].item(), 8.0);
+        assert_eq!(f2.call(&x).unwrap()[0].item(), 8.0);
+        // A structurally different graph still compiles.
+        let mut g = Graph::new("other");
+        let x0 = g.placeholder("x", &[2, 2]);
+        let r = g.add_op(OpKind::Relu, vec![x0]).unwrap();
+        g.set_outputs(vec![r]);
+        compile("other", &Rc::new(g), &rt).unwrap();
+        assert_eq!(rt.compiles.get(), 2);
+    }
+
+    /// Two sequential runtimes over the same disk-cache dir: the second
+    /// skips lowering and reuses the persisted HLO text.
+    #[test]
+    fn disk_cache_is_shared_across_runtimes() {
+        let dir = std::env::temp_dir().join(format!("depyf_xla_diskcache_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let g = small_graph("g");
+        {
+            let rt1 = Runtime::cpu_with_disk_cache(&dir).expect("pjrt");
+            compile("a", &g, &rt1).unwrap();
+            assert_eq!(rt1.disk_hits.get(), 0);
+            assert_eq!(rt1.disk_cache().unwrap().len(), 1, "first run persists the HLO");
+        }
+        let rt2 = Runtime::cpu_with_disk_cache(&dir).expect("pjrt");
+        let f = compile("b", &g, &rt2).unwrap();
+        assert_eq!(rt2.disk_hits.get(), 1, "second run must reuse the persisted HLO");
+        assert_eq!(rt2.compiles.get(), 1);
+        assert_eq!(f.call(&[Rc::new(Tensor::ones(&[2, 2]))]).unwrap()[0].item(), 8.0);
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

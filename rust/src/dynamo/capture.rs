@@ -228,7 +228,7 @@ impl<'a> Tracer<'a> {
             Value::Iter(it) => {
                 let o = origin.ok_or_else(|| Abort("iterator without origin".into()))?;
                 let b = it.borrow();
-                self.add_guard(Guard::IterRemaining { origin: o.clone(), len: b.items.len() - b.pos });
+                self.add_guard(Guard::IterRemaining { origin: o.clone(), len: b.items.len().saturating_sub(b.pos) });
                 let items: Result<Vec<Sym>, Abort> = b.items[b.pos..]
                     .iter()
                     .enumerate()

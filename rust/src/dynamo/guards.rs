@@ -1,10 +1,22 @@
 //! Guards: the conditions under which a cached compiled entry is valid.
 //! Checked on every hooked call; a miss triggers recompilation (up to the
 //! cache-size limit), exactly like TorchDynamo's guard system.
+//!
+//! Dispatch is two-stage (see [`GuardTable`]): each distinct [`Origin`]
+//! across all of a code object's entries is resolved **at most once per
+//! call** into a memoized slot vector, and entries are bucketed by a cheap
+//! discriminant (the rank of the first-argument tensor) so shape-polymorphic
+//! recompiles don't pay for each other's guard sets. Identity and constant
+//! guards compare pre-computed tokens/fingerprints before falling back to
+//! structural equality.
 
+use std::cell::RefCell;
 use std::collections::HashMap;
+use std::rc::Rc;
 
 use super::sym::Origin;
+use crate::bytecode::CodeObject;
+use crate::fnv::Fnv;
 use crate::value::Value;
 
 #[derive(Clone, Debug)]
@@ -24,29 +36,49 @@ pub enum Guard {
 impl Guard {
     /// Does this guard hold for the given call state?
     pub fn check(&self, args: &[Value], globals: &HashMap<String, Value>) -> bool {
+        let resolved = self.origin().resolve(args, globals);
+        self.holds_for(resolved.as_ref())
+    }
+
+    /// The origin this guard re-resolves on every call.
+    pub fn origin(&self) -> &Origin {
         match self {
-            Guard::TensorShape { origin, shape } => match origin.resolve(args, globals) {
+            Guard::TensorShape { origin, .. }
+            | Guard::ConstEq { origin, .. }
+            | Guard::Identity { origin, .. }
+            | Guard::Len { origin, .. }
+            | Guard::IterRemaining { origin, .. } => origin,
+        }
+    }
+
+    /// Guard predicate against an already-resolved value (`None` = the
+    /// origin's path no longer exists, which always fails).
+    pub fn holds_for(&self, resolved: Option<&Value>) -> bool {
+        match self {
+            Guard::TensorShape { shape, .. } => match resolved {
                 Some(Value::Tensor(t)) => t.shape() == &shape[..],
                 _ => false,
             },
-            Guard::ConstEq { origin, value } => match origin.resolve(args, globals) {
+            Guard::ConstEq { value, .. } => match resolved {
                 Some(v) => v.eq_value(value),
                 None => false,
             },
-            Guard::Identity { origin, value } => match origin.resolve(args, globals) {
+            Guard::Identity { value, .. } => match resolved {
                 Some(v) => v.is_identical(value),
                 None => false,
             },
-            Guard::Len { origin, len } => match origin.resolve(args, globals) {
+            Guard::Len { len, .. } => match resolved {
                 Some(Value::List(l)) => l.borrow().len() == *len,
                 Some(Value::Tuple(t)) => t.len() == *len,
                 Some(Value::Dict(d)) => d.borrow().len() == *len,
                 _ => false,
             },
-            Guard::IterRemaining { origin, len } => match origin.resolve(args, globals) {
+            Guard::IterRemaining { len, .. } => match resolved {
                 Some(Value::Iter(it)) => {
                     let it = it.borrow();
-                    it.items.len() - it.pos == *len
+                    // `pos` can run past `len` if the iterator was advanced
+                    // after capture; that is a miss, not an underflow panic.
+                    it.items.len().checked_sub(it.pos) == Some(*len)
                 }
                 _ => false,
             },
@@ -65,15 +97,337 @@ impl Guard {
     }
 }
 
-/// Check a full guard set.
+/// Check a full guard set (the reference linear-scan semantics; the hot
+/// path goes through [`GuardTable::lookup`] instead).
 pub fn check_all(guards: &[Guard], args: &[Value], globals: &HashMap<String, Value>) -> bool {
     guards.iter().all(|g| g.check(args, globals))
+}
+
+// ---- two-stage dispatch ----
+
+/// Cheap FNV-1a fingerprint of scalar-ish values, precomputed for
+/// [`Guard::ConstEq`] so a mismatch is rejected on a u64 compare without
+/// walking string/struct contents. `None` for values with no cheap
+/// fingerprint (containers, tensors) — those fall back to `eq_value`.
+fn value_fingerprint(v: &Value) -> Option<u64> {
+    // Invariant: `a.eq_value(&b)` implies equal fingerprints (a mismatch
+    // rejects without the structural compare; a match is still confirmed).
+    // Numeric cross-type equality (1 == 1.0 == True) goes through lossy
+    // f64 casts in `eq_value`, so every numeric hashes its f64 image, with
+    // -0.0 normalized onto 0.0.
+    fn num_fp(f: f64) -> u64 {
+        let f = if f == 0.0 { 0.0 } else { f };
+        let mut h = Fnv::new();
+        h.num(1);
+        h.num(f.to_bits());
+        h.finish()
+    }
+    Some(match v {
+        Value::None => {
+            let mut h = Fnv::new();
+            h.num(0);
+            h.finish()
+        }
+        Value::Bool(b) => num_fp(*b as i64 as f64),
+        Value::Int(i) => num_fp(*i as f64),
+        Value::Float(f) => num_fp(*f),
+        Value::Str(s) => {
+            let mut h = Fnv::new();
+            h.num(4);
+            h.bytes(s.as_bytes());
+            h.finish()
+        }
+        _ => return None,
+    })
+}
+
+/// Identity token: (type tag, address-or-value) such that token equality
+/// is exactly [`Value::is_identical`] for the tagged types. Ints are
+/// widened to u64 (not usize) so distinct i64s never share a token on
+/// 32-bit targets. `None` for types without a token — those fall back to
+/// `is_identical`.
+fn identity_token(v: &Value) -> Option<(u8, u64)> {
+    Some(match v {
+        Value::None => (0, 0),
+        Value::Bool(b) => (1, *b as u64),
+        Value::Int(i) => (2, *i as u64),
+        Value::Str(s) => (3, Rc::as_ptr(s) as *const u8 as usize as u64),
+        Value::List(l) => (4, Rc::as_ptr(l) as usize as u64),
+        Value::Tuple(t) => (5, Rc::as_ptr(t) as *const u8 as usize as u64),
+        Value::Dict(d) => (6, Rc::as_ptr(d) as usize as u64),
+        Value::Tensor(t) => (7, Rc::as_ptr(t) as usize as u64),
+        Value::Func(f) => (8, Rc::as_ptr(f) as usize as u64),
+        Value::Builtin(b) => (9, Rc::as_ptr(b) as usize as u64),
+        _ => return None,
+    })
+}
+
+/// The check half of a compiled guard, with pre-computed comparison keys.
+#[derive(Debug)]
+enum Check {
+    TensorShape { shape: Vec<usize> },
+    ConstEq { value: Value, fp: Option<u64> },
+    Identity { value: Value, token: Option<(u8, u64)> },
+    Len { len: usize },
+    IterRemaining { len: usize },
+}
+
+impl Check {
+    fn holds(&self, resolved: Option<&Value>) -> bool {
+        match self {
+            Check::TensorShape { shape } => match resolved {
+                Some(Value::Tensor(t)) => t.shape() == &shape[..],
+                _ => false,
+            },
+            Check::ConstEq { value, fp } => match resolved {
+                Some(v) => {
+                    if let (Some(a), Some(b)) = (fp, value_fingerprint(v)) {
+                        if *a != b {
+                            return false;
+                        }
+                    }
+                    v.eq_value(value)
+                }
+                None => false,
+            },
+            Check::Identity { value, token } => match resolved {
+                Some(v) => {
+                    if let (Some(a), Some(b)) = (token, identity_token(v)) {
+                        return *a == b;
+                    }
+                    v.is_identical(value)
+                }
+                None => false,
+            },
+            Check::Len { len } => match resolved {
+                Some(Value::List(l)) => l.borrow().len() == *len,
+                Some(Value::Tuple(t)) => t.len() == *len,
+                Some(Value::Dict(d)) => d.borrow().len() == *len,
+                _ => false,
+            },
+            Check::IterRemaining { len } => match resolved {
+                Some(Value::Iter(it)) => {
+                    let it = it.borrow();
+                    it.items.len().checked_sub(it.pos) == Some(*len)
+                }
+                _ => false,
+            },
+        }
+    }
+}
+
+/// One guard compiled against the table's slot map: the origin is replaced
+/// by a slot index into the per-call resolved vector.
+#[derive(Debug)]
+struct CompiledGuard {
+    slot: usize,
+    check: Check,
+}
+
+/// Bucket discriminant. An entry carrying a `TensorShape` guard on exactly
+/// `Origin::Arg(0)` can only match calls whose first argument is a tensor
+/// of that rank; everything else is a wildcard checked on every call.
+/// Sound by construction: a rank (or type) mismatch on `arg0` fails that
+/// guard under linear scan too, so skipping the entry never changes the
+/// dispatch result.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+struct Arg0Rank(usize);
+
+fn entry_disc(guards: &[Guard]) -> Option<Arg0Rank> {
+    guards.iter().find_map(|g| match g {
+        Guard::TensorShape { origin: Origin::Arg(0), shape } => Some(Arg0Rank(shape.len())),
+        _ => None,
+    })
+}
+
+fn call_disc(args: &[Value]) -> Option<Arg0Rank> {
+    match args.first() {
+        Some(Value::Tensor(t)) => Some(Arg0Rank(t.rank())),
+        _ => None,
+    }
+}
+
+/// One cached compiled entry: the original guards (for dumps and for the
+/// linear-scan equivalence tests) plus their compiled form.
+pub struct TableEntry {
+    pub guards: Vec<Guard>,
+    pub code: Rc<CodeObject>,
+    compiled: Vec<CompiledGuard>,
+}
+
+/// Precompiled guard dispatcher for one hooked code object.
+///
+/// Stage 1: compute the call discriminant and merge the matching bucket
+/// with the wildcard list (in insertion order, so dispatch picks the same
+/// entry a linear scan would). Stage 2: check each candidate's compiled
+/// guards against the memoized resolved-slot vector — each distinct origin
+/// is resolved at most once per call, however many entries share it.
+#[derive(Default)]
+pub struct GuardTable {
+    origins: Vec<Origin>,
+    slot_by_key: HashMap<String, usize>,
+    entries: Vec<TableEntry>,
+    buckets: HashMap<Arg0Rank, Vec<usize>>,
+    wildcard: Vec<usize>,
+    /// Reused per-call resolved-slot scratch: steady-state dispatch does no
+    /// heap allocation once capacity is warm (cleared after every lookup so
+    /// resolved values don't outlive the call).
+    scratch: RefCell<Vec<Option<Option<Value>>>>,
+}
+
+impl GuardTable {
+    pub fn new() -> GuardTable {
+        GuardTable::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Number of distinct origins across all entries (= resolved slots).
+    pub fn num_slots(&self) -> usize {
+        self.origins.len()
+    }
+
+    pub fn entries(&self) -> &[TableEntry] {
+        &self.entries
+    }
+
+    fn slot_for(&mut self, origin: &Origin) -> usize {
+        let key = origin.cache_key();
+        if let Some(&s) = self.slot_by_key.get(&key) {
+            return s;
+        }
+        let s = self.origins.len();
+        self.origins.push(origin.clone());
+        self.slot_by_key.insert(key, s);
+        s
+    }
+
+    /// Compile and insert a new entry (most recent last, like the old
+    /// linear scan's push order).
+    pub fn insert(&mut self, guards: Vec<Guard>, code: Rc<CodeObject>) {
+        let compiled: Vec<CompiledGuard> = guards
+            .iter()
+            .map(|g| {
+                let slot = self.slot_for(g.origin());
+                let check = match g {
+                    Guard::TensorShape { shape, .. } => Check::TensorShape { shape: shape.clone() },
+                    Guard::ConstEq { value, .. } => {
+                        Check::ConstEq { value: value.clone(), fp: value_fingerprint(value) }
+                    }
+                    Guard::Identity { value, .. } => {
+                        Check::Identity { value: value.clone(), token: identity_token(value) }
+                    }
+                    Guard::Len { len, .. } => Check::Len { len: *len },
+                    Guard::IterRemaining { len, .. } => Check::IterRemaining { len: *len },
+                };
+                CompiledGuard { slot, check }
+            })
+            .collect();
+        let idx = self.entries.len();
+        match entry_disc(&guards) {
+            Some(d) => self.buckets.entry(d).or_default().push(idx),
+            None => self.wildcard.push(idx),
+        }
+        self.entries.push(TableEntry { guards, code, compiled });
+    }
+
+    /// Find the first entry whose guards all pass, resolving origins with
+    /// `resolve` (called at most once per distinct origin). Returns the
+    /// entry index — the same index a linear scan over `entries()` yields.
+    pub fn lookup_with(
+        &self,
+        args: &[Value],
+        resolve: &mut dyn FnMut(&Origin) -> Option<Value>,
+    ) -> Option<usize> {
+        // Memoized resolved-slot vector: outer None = not yet resolved,
+        // inner Option = resolution result (a dead path stays dead). The
+        // buffer is a reused scratch (no per-call allocation in steady
+        // state); the try_borrow fallback covers a resolver that re-enters
+        // this same table.
+        let mut borrowed;
+        let mut local;
+        let slots: &mut Vec<Option<Option<Value>>> = match self.scratch.try_borrow_mut() {
+            Ok(b) => {
+                borrowed = b;
+                &mut *borrowed
+            }
+            Err(_) => {
+                local = Vec::new();
+                &mut local
+            }
+        };
+        slots.clear();
+        slots.resize(self.origins.len(), None);
+        let empty: Vec<usize> = Vec::new();
+        let bucket = match call_disc(args) {
+            Some(d) => self.buckets.get(&d).unwrap_or(&empty),
+            None => &empty,
+        };
+        // Merge bucket + wildcard in ascending entry order (both are
+        // sorted by construction) to preserve linear-scan priority.
+        let (mut bi, mut wi) = (0usize, 0usize);
+        let result = loop {
+            let idx = match (bucket.get(bi), self.wildcard.get(wi)) {
+                (Some(&b), Some(&w)) => {
+                    if b < w {
+                        bi += 1;
+                        b
+                    } else {
+                        wi += 1;
+                        w
+                    }
+                }
+                (Some(&b), None) => {
+                    bi += 1;
+                    b
+                }
+                (None, Some(&w)) => {
+                    wi += 1;
+                    w
+                }
+                (None, None) => break None,
+            };
+            let entry = &self.entries[idx];
+            let mut ok = true;
+            for g in &entry.compiled {
+                if slots[g.slot].is_none() {
+                    slots[g.slot] = Some(resolve(&self.origins[g.slot]));
+                }
+                let v = slots[g.slot].as_ref().unwrap().as_ref();
+                if !g.check.holds(v) {
+                    ok = false;
+                    break;
+                }
+            }
+            if ok {
+                break Some(idx);
+            }
+        };
+        // Drop resolved values now — the scratch keeps only capacity.
+        slots.clear();
+        result
+    }
+
+    /// Production lookup against concrete call state.
+    pub fn lookup(&self, args: &[Value], globals: &HashMap<String, Value>) -> Option<&TableEntry> {
+        let idx = self.lookup_with(args, &mut |o| o.resolve(args, globals))?;
+        Some(&self.entries[idx])
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::bytecode::IsaVersion;
     use crate::tensor::Tensor;
+    use crate::value::ValueIter;
+    use std::cell::RefCell;
 
     #[test]
     fn shape_guard() {
@@ -104,5 +458,142 @@ mod tests {
         let g = Guard::Len { origin: Origin::Arg(0), len: 2 };
         assert!(g.check(&[Value::list(vec![Value::Int(1), Value::Int(2)])], &globals));
         assert!(!g.check(&[Value::list(vec![Value::Int(1)])], &globals));
+    }
+
+    #[test]
+    fn iter_remaining_overrun_fails_instead_of_panicking() {
+        let globals = HashMap::new();
+        let g = Guard::IterRemaining { origin: Origin::Arg(0), len: 1 };
+        // pos beyond items.len(): the iterator advanced past the captured
+        // state. The old `len - pos` underflowed here.
+        let it = Value::Iter(Rc::new(RefCell::new(ValueIter { items: vec![Value::Int(1)], pos: 3 })));
+        assert!(!g.check(&[it], &globals));
+        let ok = Value::Iter(Rc::new(RefCell::new(ValueIter {
+            items: vec![Value::Int(1), Value::Int(2)],
+            pos: 1,
+        })));
+        assert!(g.check(&[ok], &globals));
+    }
+
+    #[test]
+    fn fingerprints_respect_cross_type_equality() {
+        // 1 == 1.0 == True must not be split by the fingerprint fast path.
+        let pairs = [
+            (Value::Int(1), Value::Float(1.0)),
+            (Value::Bool(true), Value::Int(1)),
+            (Value::Float(0.0), Value::Float(-0.0)),
+        ];
+        for (a, b) in pairs {
+            assert!(a.eq_value(&b));
+            assert_eq!(value_fingerprint(&a), value_fingerprint(&b), "{:?} vs {:?}", a, b);
+        }
+        assert_ne!(value_fingerprint(&Value::Int(1)), value_fingerprint(&Value::Int(2)));
+        assert_ne!(value_fingerprint(&Value::str("a")), value_fingerprint(&Value::str("b")));
+    }
+
+    fn dummy_code(tag: &str) -> Rc<CodeObject> {
+        Rc::new(CodeObject::new(tag, IsaVersion::V311, 0, vec![], vec![], vec![], vec![], vec![]))
+    }
+
+    /// Entries that mirror dynamo's shape-polymorphic recompiles: same fn,
+    /// different arg0 shapes, plus a scalar-guarded variant.
+    fn polymorphic_table() -> GuardTable {
+        let w = Value::tensor(Tensor::ones(&[3, 3]));
+        let mut t = GuardTable::new();
+        t.insert(
+            vec![
+                Guard::TensorShape { origin: Origin::Arg(0), shape: vec![2, 2] },
+                Guard::Identity { origin: Origin::Global("W".into()), value: w.clone() },
+            ],
+            dummy_code("e0"),
+        );
+        t.insert(
+            vec![
+                Guard::TensorShape { origin: Origin::Arg(0), shape: vec![3, 3] },
+                Guard::Identity { origin: Origin::Global("W".into()), value: w.clone() },
+            ],
+            dummy_code("e1"),
+        );
+        t.insert(
+            vec![
+                Guard::ConstEq { origin: Origin::Arg(0), value: Value::Int(7) },
+                Guard::ConstEq { origin: Origin::Arg(1), value: Value::Int(9) },
+            ],
+            dummy_code("e2"),
+        );
+        t
+    }
+
+    fn linear_scan(t: &GuardTable, args: &[Value], globals: &HashMap<String, Value>) -> Option<usize> {
+        t.entries().iter().position(|e| check_all(&e.guards, args, globals))
+    }
+
+    #[test]
+    fn table_dispatch_matches_linear_scan() {
+        let t = polymorphic_table();
+        let w = match &t.entries()[0].guards[1] {
+            Guard::Identity { value, .. } => value.clone(),
+            _ => unreachable!(),
+        };
+        let mut globals: HashMap<String, Value> = HashMap::new();
+        globals.insert("W".into(), w);
+        let cases: Vec<Vec<Value>> = vec![
+            vec![Value::tensor(Tensor::ones(&[2, 2]))],
+            vec![Value::tensor(Tensor::ones(&[3, 3]))],
+            vec![Value::tensor(Tensor::ones(&[4, 4]))], // rank hit, shape miss
+            vec![Value::tensor(Tensor::ones(&[2, 2, 2]))], // rank miss everywhere
+            vec![Value::Int(7), Value::Int(9)],         // wildcard entry
+            vec![Value::Int(7), Value::Int(8)],         // wildcard miss
+            vec![],
+        ];
+        for args in &cases {
+            let scan = linear_scan(&t, args, &globals);
+            let table = t.lookup_with(args, &mut |o| o.resolve(args, &globals));
+            assert_eq!(table, scan, "diverged on {:?}", args);
+            assert_eq!(t.lookup(args, &globals).map(|e| e.code.name.clone()),
+                scan.map(|i| t.entries()[i].code.name.clone()));
+        }
+        // Stale global: identity guard must fail in both strategies.
+        let mut g2: HashMap<String, Value> = HashMap::new();
+        g2.insert("W".into(), Value::tensor(Tensor::ones(&[3, 3])));
+        let args = vec![Value::tensor(Tensor::ones(&[2, 2]))];
+        assert_eq!(t.lookup_with(&args, &mut |o| o.resolve(&args, &g2)), None);
+        assert_eq!(linear_scan(&t, &args, &g2), None);
+    }
+
+    #[test]
+    fn distinct_origins_resolved_at_most_once_per_call() {
+        let t = polymorphic_table();
+        // 3 entries share Arg(0); two share Global("W"): 3 distinct origins.
+        assert_eq!(t.num_slots(), 3);
+        let args = vec![Value::tensor(Tensor::ones(&[4, 4]))]; // forces a full miss
+        let globals: HashMap<String, Value> = HashMap::new();
+        let counts: RefCell<HashMap<String, usize>> = RefCell::new(HashMap::new());
+        let got = t.lookup_with(&args, &mut |o| {
+            *counts.borrow_mut().entry(o.cache_key()).or_insert(0) += 1;
+            o.resolve(&args, &globals)
+        });
+        assert_eq!(got, None);
+        for (key, n) in counts.borrow().iter() {
+            assert_eq!(*n, 1, "origin {} resolved {} times", key, n);
+        }
+    }
+
+    #[test]
+    fn bucketing_never_skips_a_matching_wildcard() {
+        // A wildcard entry inserted *between* two bucketed ones must keep
+        // its linear-scan priority.
+        let mut t = GuardTable::new();
+        t.insert(vec![Guard::TensorShape { origin: Origin::Arg(0), shape: vec![2] }], dummy_code("a"));
+        t.insert(vec![Guard::Len { origin: Origin::Arg(1), len: 0 }], dummy_code("b"));
+        t.insert(vec![Guard::TensorShape { origin: Origin::Arg(0), shape: vec![2] }], dummy_code("c"));
+        let globals = HashMap::new();
+        // Both entry 0 and entry 1 match this call; linear scan says 0.
+        let args = vec![Value::tensor(Tensor::ones(&[2])), Value::list(vec![])];
+        assert_eq!(t.lookup(&args, &globals).map(|e| e.code.name.as_str()), Some("a"));
+        // Only the wildcard matches a non-tensor arg0.
+        let args = vec![Value::Int(1), Value::list(vec![])];
+        assert_eq!(t.lookup(&args, &globals).map(|e| e.code.name.as_str()), Some("b"));
+        assert_eq!(linear_scan(&t, &args, &globals), Some(1));
     }
 }

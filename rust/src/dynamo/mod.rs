@@ -14,7 +14,7 @@ pub mod sym;
 
 pub use capture::{Capture, InlineEmit, Limits, Outcome};
 pub use emit::{emit_transformed, make_resume, select_outputs, CodeBuilder};
-pub use guards::Guard;
+pub use guards::{Guard, GuardTable};
 pub use sym::{Origin, Sym};
 
 use std::cell::RefCell;
@@ -35,6 +35,20 @@ pub trait GraphTracer {
     fn on_node(&self, graph_name: &str, node_id: usize, value: &crate::tensor::Tensor);
 }
 
+/// How chatty the frontend log (`full_code`) is. The cache-hit path only
+/// logs at `Trace`, and the gate is applied *before* the format string is
+/// built, so steady-state dispatch allocates nothing for logging.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Verbosity {
+    /// No frontend log at all.
+    Quiet,
+    /// Compile-time events: captures, graph breaks, guards, fallbacks.
+    #[default]
+    Info,
+    /// Everything, including per-call cache-hit events.
+    Trace,
+}
+
 /// Configuration of the dynamo instance.
 pub struct DynamoConfig {
     /// The graph compiler — any [`Backend`] implementation (built-in or
@@ -47,6 +61,8 @@ pub struct DynamoConfig {
     pub cache_limit: usize,
     pub max_trace_instrs: usize,
     pub max_graph_nodes: usize,
+    /// Frontend log verbosity (default [`Verbosity::Info`]).
+    pub verbosity: Verbosity,
     /// Present in `TraceMode::StepGraphs` sessions: forces eager execution
     /// with per-node callbacks.
     pub tracer: Option<Rc<dyn GraphTracer>>,
@@ -60,19 +76,16 @@ impl Default for DynamoConfig {
             cache_limit: 8,
             max_trace_instrs: 20_000,
             max_graph_nodes: 2_000,
+            verbosity: Verbosity::Info,
             tracer: None,
         }
     }
 }
 
-struct Entry {
-    guards: Vec<Guard>,
-    code: Rc<CodeObject>,
-}
-
 #[derive(Default)]
 struct CodeCache {
-    entries: Vec<Entry>,
+    /// Precompiled two-stage guard dispatcher over the cached entries.
+    table: GuardTable,
     skip: bool,
     skip_reason: Option<String>,
 }
@@ -89,6 +102,11 @@ struct State {
     graphs: Vec<(String, Rc<Graph>)>,
     /// Transformed + resume code objects for dumps.
     generated_codes: Vec<(String, Rc<CodeObject>)>,
+    /// Cached read-path snapshots, invalidated on write. Read accessors
+    /// hand out `Rc` clones of these instead of deep-copying the vectors.
+    log_snap: Option<Rc<[String]>>,
+    graphs_snap: Option<Rc<[(String, Rc<Graph>)]>>,
+    codes_snap: Option<Rc<[(String, Rc<CodeObject>)]>>,
 }
 
 /// The dynamo compiler instance. Install with
@@ -109,23 +127,52 @@ impl Dynamo {
         Rc::new(Dynamo { config, runtime: Some(runtime), metrics: Metrics::new(), state: RefCell::new(State::default()) })
     }
 
-    /// The `full_code`-style decision log.
-    pub fn log(&self) -> Vec<String> {
-        self.state.borrow().log.clone()
+    /// The `full_code`-style decision log. Returns a shared snapshot —
+    /// repeated calls between compiles are O(1), not a vector deep-copy.
+    pub fn log(&self) -> Rc<[String]> {
+        let mut st = self.state.borrow_mut();
+        if st.log_snap.is_none() {
+            st.log_snap = Some(Rc::from(st.log.as_slice()));
+        }
+        Rc::clone(st.log_snap.as_ref().unwrap())
     }
 
-    /// Captured graphs, in compile order.
-    pub fn graphs(&self) -> Vec<(String, Rc<Graph>)> {
-        self.state.borrow().graphs.clone()
+    /// Captured graphs, in compile order (shared snapshot).
+    pub fn graphs(&self) -> Rc<[(String, Rc<Graph>)]> {
+        let mut st = self.state.borrow_mut();
+        if st.graphs_snap.is_none() {
+            st.graphs_snap = Some(Rc::from(st.graphs.as_slice()));
+        }
+        Rc::clone(st.graphs_snap.as_ref().unwrap())
     }
 
-    /// Program-generated code objects (transformed bodies + resume fns).
-    pub fn generated_codes(&self) -> Vec<(String, Rc<CodeObject>)> {
-        self.state.borrow().generated_codes.clone()
+    /// Program-generated code objects (transformed bodies + resume fns),
+    /// as a shared snapshot.
+    pub fn generated_codes(&self) -> Rc<[(String, Rc<CodeObject>)]> {
+        let mut st = self.state.borrow_mut();
+        if st.codes_snap.is_none() {
+            st.codes_snap = Some(Rc::from(st.generated_codes.as_slice()));
+        }
+        Rc::clone(st.codes_snap.as_ref().unwrap())
     }
 
     fn note(&self, msg: String) {
-        self.state.borrow_mut().log.push(msg);
+        if self.config.verbosity >= Verbosity::Info {
+            let mut st = self.state.borrow_mut();
+            st.log_snap = None;
+            st.log.push(msg);
+        }
+    }
+
+    /// Trace-level note: the message closure only runs (and the format
+    /// string is only built) when `verbosity >= Trace`, so the cache-hit
+    /// path performs no formatting at default verbosity.
+    fn note_trace(&self, msg: impl FnOnce() -> String) {
+        if self.config.verbosity >= Verbosity::Trace {
+            let mut st = self.state.borrow_mut();
+            st.log_snap = None;
+            st.log.push(msg());
+        }
     }
 
     fn compile_backend(&self, name: &str, graph: Rc<Graph>) -> Value {
@@ -186,28 +233,34 @@ impl EvalHook for Dynamo {
         globals: &Rc<RefCell<HashMap<String, Value>>>,
     ) -> Option<Rc<CodeObject>> {
         let ptr = Rc::as_ptr(&func.code) as usize;
-        {
+        let hit = {
             let st = self.state.borrow();
             if st.own_output.contains(&ptr) {
                 return None;
             }
-            if let Some(cc) = st.cache.get(&ptr) {
-                if cc.skip {
-                    return None;
-                }
-                Metrics::bump(&self.metrics.guard_checks);
-                let g = globals.borrow();
-                for entry in &cc.entries {
-                    if guards::check_all(&entry.guards, args, &g) {
-                        Metrics::bump(&self.metrics.cache_hits);
-                        return Some(Rc::clone(&entry.code));
+            match st.cache.get(&ptr) {
+                None => None,
+                Some(cc) if cc.skip => return None,
+                Some(cc) => {
+                    Metrics::bump(&self.metrics.guard_checks);
+                    let g = globals.borrow();
+                    match cc.table.lookup(args, &g) {
+                        Some(entry) => Some(Rc::clone(&entry.code)),
+                        None => {
+                            Metrics::bump(&self.metrics.guard_failures);
+                            if cc.table.len() >= self.config.cache_limit {
+                                return None; // too many recompiles; run uncompiled
+                            }
+                            None
+                        }
                     }
                 }
-                Metrics::bump(&self.metrics.guard_failures);
-                if cc.entries.len() >= self.config.cache_limit {
-                    return None; // too many recompiles; run uncompiled
-                }
             }
+        };
+        if let Some(code) = hit {
+            Metrics::bump(&self.metrics.cache_hits);
+            self.note_trace(|| format!("cache hit: {} dispatched to {}", func.name, code.name));
+            return Some(code);
         }
         Metrics::bump(&self.metrics.cache_misses);
 
@@ -298,7 +351,9 @@ impl EvalHook for Dynamo {
             }
 
             // Install the compiled graph + resume functions as globals.
-            let graph = Rc::new(cap.graph.clone());
+            // The graph and guard set are *moved* out of the capture — the
+            // read path must not pay for wholesale clones.
+            let graph = Rc::new(std::mem::take(&mut cap.graph));
             {
                 let mut gm = globals.borrow_mut();
                 if transformed.graph_used {
@@ -320,6 +375,8 @@ impl EvalHook for Dynamo {
             // Book-keeping for dumps and the no-rehook set.
             {
                 let mut st = self.state.borrow_mut();
+                st.graphs_snap = None;
+                st.codes_snap = None;
                 st.own_output.insert(Rc::as_ptr(&transformed.code) as usize);
                 if transformed.graph_used {
                     st.graphs.push((graph_name.clone(), Rc::clone(&graph)));
@@ -328,11 +385,8 @@ impl EvalHook for Dynamo {
                 for (rname, rcode) in &transformed.resume_codes {
                     st.generated_codes.push((rname.clone(), Rc::clone(rcode)));
                 }
-                st.cache
-                    .entry(ptr)
-                    .or_default()
-                    .entries
-                    .push(Entry { guards: cap.guards.clone(), code: Rc::clone(&transformed.code) });
+                let guards = std::mem::take(&mut cap.guards);
+                st.cache.entry(ptr).or_default().table.insert(guards, Rc::clone(&transformed.code));
             }
             Some(transformed.code)
         });
@@ -449,6 +503,45 @@ mod tests {
         let src = "def outer():\n    n = torch.ones([2])\n    def inner():\n        return n\n    return inner\ng = outer()\nprint(g().sum().item())\n";
         let (d, _) = check(src);
         assert!(d.metrics.fallbacks.get() >= 1);
+    }
+
+    #[test]
+    fn cache_hit_path_is_silent_by_default() {
+        let (d, _) = check(
+            "def f(x):\n    return (x * 2).sum()\nprint(f(torch.ones([2])).item())\nprint(f(torch.ones([2])).item())\n",
+        );
+        assert!(d.metrics.cache_hits.get() >= 1);
+        assert!(!d.log().iter().any(|l| l.contains("cache hit")), "{:?}", d.log());
+    }
+
+    #[test]
+    fn verbosity_gate_controls_hit_logging() {
+        let src = "def f(x):\n    return (x * 2).sum()\nprint(f(torch.ones([2])).item())\nprint(f(torch.ones([2])).item())\n";
+        let mut vm = Vm::new();
+        let d = Dynamo::new(DynamoConfig { verbosity: Verbosity::Trace, ..Default::default() });
+        vm.eval_hook = Some(d.clone());
+        vm.exec_source(src, IsaVersion::V310).unwrap();
+        assert!(d.log().iter().any(|l| l.contains("cache hit")), "{:?}", d.log());
+
+        let mut vm2 = Vm::new();
+        let q = Dynamo::new(DynamoConfig { verbosity: Verbosity::Quiet, ..Default::default() });
+        vm2.eval_hook = Some(q.clone());
+        vm2.exec_source(src, IsaVersion::V310).unwrap();
+        assert!(q.log().is_empty(), "{:?}", q.log());
+        assert!(q.metrics.cache_hits.get() >= 1, "quiet mode must still dispatch");
+    }
+
+    #[test]
+    fn read_snapshots_are_shared_not_copied() {
+        let (d, _) = check(
+            "def f(x):\n    return (x * 2).sum()\nprint(f(torch.ones([2])).item())\n",
+        );
+        let (a, b) = (d.log(), d.log());
+        assert!(Rc::ptr_eq(&a, &b), "log snapshots must share storage");
+        let (g1, g2) = (d.graphs(), d.graphs());
+        assert!(Rc::ptr_eq(&g1, &g2));
+        let (c1, c2) = (d.generated_codes(), d.generated_codes());
+        assert!(Rc::ptr_eq(&c1, &c2));
     }
 
     #[test]

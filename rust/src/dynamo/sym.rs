@@ -61,6 +61,24 @@ impl Origin {
             Origin::Index(base, k) => format!("{}_{}", base.describe(), sanitize(&k.to_display())),
         }
     }
+
+    /// Stable identity of the resolution *path* (not the value it currently
+    /// resolves to). Two origins with equal keys resolve identically for any
+    /// call state, so the guard dispatcher deduplicates them into one
+    /// resolved slot. Unlike [`Origin::describe`] this is injective: index
+    /// keys are netstring-style length-prefixed, so a key whose `repr()`
+    /// happens to contain bracket/quote characters cannot collide with a
+    /// differently-nested path (e.g. `arg0["x']['y"]` vs `arg0["x"]["y"]`).
+    pub fn cache_key(&self) -> String {
+        match self {
+            Origin::Arg(i) => format!("a{}", i),
+            Origin::Global(n) => format!("g:{}", n),
+            Origin::Index(base, k) => {
+                let kr = k.repr();
+                format!("{}[{}:{}]", base.cache_key(), kr.len(), kr)
+            }
+        }
+    }
 }
 
 fn sanitize(s: &str) -> String {
@@ -161,6 +179,18 @@ mod tests {
         assert!(idx.resolve(&args, &globals).unwrap().eq_value(&Value::Int(20)));
         assert!(Origin::Arg(7).resolve(&args, &globals).is_none());
         assert!(Origin::Global("nope".into()).resolve(&args, &globals).is_none());
+    }
+
+    #[test]
+    fn cache_key_is_injective_for_bracketed_keys() {
+        // A single key whose repr embeds quote/bracket chars must not
+        // collide with a nested two-level path.
+        let tricky = Origin::Arg(0).index(Value::str("x']['y"));
+        let nested = Origin::Arg(0).index(Value::str("x")).index(Value::str("y"));
+        assert_ne!(tricky.cache_key(), nested.cache_key());
+        // Stability: same path, same key.
+        assert_eq!(tricky.cache_key(), Origin::Arg(0).index(Value::str("x']['y")).cache_key());
+        assert_ne!(Origin::Arg(0).cache_key(), Origin::Arg(1).cache_key());
     }
 
     #[test]

@@ -1,0 +1,59 @@
+//! Crate-internal FNV-1a hashing, shared by [`crate::graph`]'s
+//! `content_hash`, the guard dispatcher's constant fingerprints and the
+//! runtime disk cache's file naming — one implementation, one set of
+//! magic constants.
+
+const OFFSET: u64 = 0xcbf29ce484222325;
+const PRIME: u64 = 0x100000001b3;
+
+/// Streaming FNV-1a accumulator.
+pub(crate) struct Fnv(u64);
+
+impl Fnv {
+    pub(crate) fn new() -> Fnv {
+        Fnv(OFFSET)
+    }
+
+    /// Hash a u64 as 8 little-endian bytes.
+    pub(crate) fn num(&mut self, v: u64) {
+        for b in v.to_le_bytes() {
+            self.0 = (self.0 ^ b as u64).wrapping_mul(PRIME);
+        }
+    }
+
+    /// Hash a length-prefixed byte string.
+    pub(crate) fn bytes(&mut self, bs: &[u8]) {
+        self.num(bs.len() as u64);
+        for b in bs {
+            self.0 = (self.0 ^ *b as u64).wrapping_mul(PRIME);
+        }
+    }
+
+    pub(crate) fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+/// One-shot hash of a string.
+pub(crate) fn hash_str(s: &str) -> u64 {
+    let mut h = Fnv::new();
+    h.bytes(s.as_bytes());
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_distinct() {
+        assert_eq!(hash_str("abc"), hash_str("abc"));
+        assert_ne!(hash_str("abc"), hash_str("abd"));
+        assert_ne!(hash_str(""), hash_str("\0"));
+        let mut a = Fnv::new();
+        a.num(1);
+        let mut b = Fnv::new();
+        b.num(2);
+        assert_ne!(a.finish(), b.finish());
+    }
+}

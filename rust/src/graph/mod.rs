@@ -11,6 +11,7 @@ use std::fmt;
 use std::rc::Rc;
 
 use crate::api::DepyfError;
+use crate::fnv::Fnv;
 use crate::tensor::{self, Tensor};
 
 pub type NodeId = usize;
@@ -159,6 +160,56 @@ impl Graph {
         self.nodes.iter().filter(|n| matches!(n.kind, NodeKind::Op(..))).count()
     }
 
+    /// A stable structural hash of the graph: node kinds, op kinds (with
+    /// their static parameters), shapes, constant payloads and the
+    /// input/output wiring — but **not** the graph name. Two graphs built
+    /// independently from the same program and shapes hash identically, so
+    /// this is the compile-cache key shared across sessions and (via the
+    /// on-disk index) across processes; any shape or op change produces a
+    /// different key.
+    pub fn content_hash(&self) -> u64 {
+        let mut h = Fnv::new();
+        h.bytes(b"depyf-graph-v1");
+        h.num(self.nodes.len() as u64);
+        for node in &self.nodes {
+            match &node.kind {
+                NodeKind::Placeholder { .. } => h.num(0),
+                NodeKind::ConstScalar(v) => {
+                    h.num(1);
+                    h.num(v.to_bits());
+                }
+                NodeKind::ConstTensor(t) => {
+                    h.num(2);
+                    h.num(t.rank() as u64);
+                    for v in t.data() {
+                        h.num(v.to_bits() as u64);
+                    }
+                }
+                NodeKind::Op(op, args) => {
+                    h.num(3);
+                    hash_op(&mut h, op);
+                    h.num(args.len() as u64);
+                    for a in args {
+                        h.num(*a as u64);
+                    }
+                }
+            }
+            h.num(node.shape.len() as u64);
+            for d in &node.shape {
+                h.num(*d as u64);
+            }
+        }
+        h.num(self.inputs.len() as u64);
+        for i in &self.inputs {
+            h.num(*i as u64);
+        }
+        h.num(self.outputs.len() as u64);
+        for o in &self.outputs {
+            h.num(*o as u64);
+        }
+        h.finish()
+    }
+
     /// Approximate FLOP count (matmuls dominate).
     pub fn flops(&self) -> u64 {
         let mut total = 0u64;
@@ -172,6 +223,74 @@ impl Graph {
             }
         }
         total
+    }
+}
+
+/// Hash an op kind including its static parameters, so `Sum(None)` vs
+/// `Sum(Some(0))` or `Reshape([2,3])` vs `Reshape([3,2])` differ.
+fn hash_op(h: &mut Fnv, op: &OpKind) {
+    fn axis(h: &mut Fnv, ax: &Option<usize>) {
+        match ax {
+            None => h.num(0),
+            Some(a) => {
+                h.num(1);
+                h.num(*a as u64);
+            }
+        }
+    }
+    match op {
+        OpKind::Add => h.num(1),
+        OpKind::Sub => h.num(2),
+        OpKind::Mul => h.num(3),
+        OpKind::Div => h.num(4),
+        OpKind::Pow => h.num(5),
+        OpKind::Maximum => h.num(6),
+        OpKind::Minimum => h.num(7),
+        OpKind::Neg => h.num(8),
+        OpKind::Relu => h.num(9),
+        OpKind::Gelu => h.num(10),
+        OpKind::Tanh => h.num(11),
+        OpKind::Sigmoid => h.num(12),
+        OpKind::Exp => h.num(13),
+        OpKind::Log => h.num(14),
+        OpKind::Sqrt => h.num(15),
+        OpKind::Abs => h.num(16),
+        OpKind::MatMul => h.num(17),
+        OpKind::Transpose => h.num(18),
+        OpKind::Reshape(spec) => {
+            h.num(19);
+            h.num(spec.len() as u64);
+            for d in spec {
+                h.num(*d as u64);
+            }
+        }
+        OpKind::Permute(perm) => {
+            h.num(20);
+            h.num(perm.len() as u64);
+            for p in perm {
+                h.num(*p as u64);
+            }
+        }
+        OpKind::Softmax => h.num(21),
+        OpKind::Sum(ax) => {
+            h.num(22);
+            axis(h, ax);
+        }
+        OpKind::Mean(ax) => {
+            h.num(23);
+            axis(h, ax);
+        }
+        OpKind::Max(ax) => {
+            h.num(24);
+            axis(h, ax);
+        }
+        OpKind::Min(ax) => {
+            h.num(25);
+            axis(h, ax);
+        }
+        OpKind::LayerNorm => h.num(26),
+        OpKind::Embedding => h.num(27),
+        OpKind::CrossEntropy => h.num(28),
     }
 }
 
@@ -367,6 +486,45 @@ mod tests {
         assert_eq!(g.nodes[s].shape, vec![3]);
         let t = g.add_op(OpKind::Sum(None), vec![s]).unwrap();
         assert_eq!(g.nodes[t].shape, Vec::<usize>::new());
+    }
+
+    fn build(name: &str, shape: &[usize], relu: bool, axis: Option<usize>) -> Graph {
+        let mut g = Graph::new(name);
+        let x = g.placeholder("x", shape);
+        let c = g.const_scalar(2.0);
+        let m = g.add_op(OpKind::Mul, vec![x, c]).unwrap();
+        let a = if relu {
+            g.add_op(OpKind::Relu, vec![m]).unwrap()
+        } else {
+            g.add_op(OpKind::Gelu, vec![m]).unwrap()
+        };
+        let s = g.add_op(OpKind::Sum(axis), vec![a]).unwrap();
+        g.set_outputs(vec![s]);
+        g
+    }
+
+    #[test]
+    fn content_hash_is_stable_across_rebuilds() {
+        let a = build("first", &[2, 3], true, None);
+        let b = build("totally_different_name", &[2, 3], true, None);
+        assert_eq!(a.content_hash(), b.content_hash(), "name must not affect the hash");
+        assert_eq!(a.content_hash(), build("first", &[2, 3], true, None).content_hash());
+    }
+
+    #[test]
+    fn content_hash_changes_with_shapes_ops_and_params() {
+        let base = build("g", &[2, 3], true, None).content_hash();
+        assert_ne!(base, build("g", &[3, 2], true, None).content_hash(), "shape change");
+        assert_ne!(base, build("g", &[2, 3], false, None).content_hash(), "op-kind change");
+        assert_ne!(base, build("g", &[2, 3], true, Some(0)).content_hash(), "axis param change");
+        // Constant payloads matter too.
+        let mut g1 = Graph::new("g");
+        let t1 = g1.const_tensor(Tensor::new(vec![2], vec![1.0, 2.0]));
+        g1.set_outputs(vec![t1]);
+        let mut g2 = Graph::new("g");
+        let t2 = g2.const_tensor(Tensor::new(vec![2], vec![1.0, 3.0]));
+        g2.set_outputs(vec![t2]);
+        assert_ne!(g1.content_hash(), g2.content_hash());
     }
 
     #[test]

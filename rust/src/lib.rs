@@ -39,6 +39,50 @@
 //! degrading. The pre-builder entry points ([`session::DebugSession`],
 //! [`backend::compile_graph`]) remain as deprecated shims.
 //!
+//! ## Performance
+//!
+//! The request path — the paper's "guards are checked on every hooked
+//! call" loop — is engineered, not incidental:
+//!
+//! * **Guard dispatch** ([`dynamo::GuardTable`]): each hooked code object
+//!   precompiles its cached entries into a two-stage dispatcher. Stage 1
+//!   buckets entries by a cheap discriminant (rank of the first-argument
+//!   tensor) merged with a wildcard list in insertion order, so dispatch
+//!   picks exactly the entry a linear scan would. Stage 2 checks compiled
+//!   guards against a memoized resolved-slot vector: every distinct
+//!   [`dynamo::Origin`] is resolved **at most once per call**, identity
+//!   guards compare pre-computed `(tag, address)` tokens, and constant
+//!   guards reject on a pre-computed FNV fingerprint before any
+//!   structural comparison. Cache-hit logging sits behind
+//!   [`dynamo::Verbosity`]: at the default level no format string is
+//!   built on the hit path.
+//! * **Eager executor** ([`backend::eager::ExecPlan`]): graph compilation
+//!   produces a per-graph plan — constants pre-materialized, op steps in
+//!   topological order, buffer liveness (dead slots freed eagerly), and a
+//!   reusable env arena — so steady-state calls do no planning work.
+//!   Elementwise broadcasting precomputes one stride vector per operand
+//!   ([`tensor::Tensor::broadcast_strides`]) and walks the output with an
+//!   odometer instead of a per-element div/mod chain; same-shape and
+//!   1-element operands take linear fast paths; matmul switches to a
+//!   k-blocked kernel when the B panel outgrows cache (bitwise-identical
+//!   results — accumulation order is unchanged).
+//! * **Compile cache** ([`graph::Graph::content_hash`], [`runtime`]):
+//!   PJRT executables are cached under `graph:{content_hash}` — a stable
+//!   structural hash (shapes + op kinds + constants, name excluded) — so
+//!   identical graphs compile once per process however many sessions
+//!   capture them. [`runtime::Runtime::shared`] is the process-wide
+//!   handle the CLI uses, and its [`runtime::DiskCache`] persists an
+//!   HLO→artifact index (`$DEPYF_CACHE_DIR`, default `.depyf_cache`) so
+//!   repeated runs skip graph lowering entirely.
+//!
+//! Per-session counters land in the `metrics.json` dump artifact
+//! (cache hits/misses, guard checks/failures, `compile_ns`). The bench
+//! suite (`cargo bench --bench guard_dispatch`, plus the other benches)
+//! merges machine-readable numbers into `BENCH_hotpath.json`:
+//! `{"entries": [{"bench", "name", "value", "unit"}, ...]}` — guard-hit
+//! latency, eager MLP step and compile-cache hit vs miss live there; CI
+//! smoke-runs the suite with `DEPYF_BENCH_QUICK=1`.
+//!
 //! ## The stack underneath
 //!
 //! * **Layer 3 (this crate)** — the compiler being opened *and* the tool
@@ -57,6 +101,7 @@
 
 pub mod api;
 pub mod backend;
+mod fnv;
 pub mod bytecode;
 pub mod corpus;
 pub mod debugger;

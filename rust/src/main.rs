@@ -153,7 +153,9 @@ fn cmd_run(args: &[String]) -> Result<(), CliError> {
         let needs_runtime = backend.requires_runtime();
         let config = DynamoConfig { backend, ..Default::default() };
         let d = if needs_runtime {
-            let rt = Runtime::cpu()?;
+            // Process-wide runtime: one PJRT client, one executable cache,
+            // plus the persistent HLO cache shared across invocations.
+            let rt = Runtime::shared()?;
             Dynamo::with_runtime(config, rt)
         } else {
             Dynamo::new(config)
@@ -206,7 +208,10 @@ fn cmd_dump(args: &[String]) -> Result<(), CliError> {
     let mut builder = Session::builder().dump_to(dir).isa(version);
     if let Some(b) = backend {
         if b.requires_runtime() {
-            builder = builder.runtime(Runtime::cpu()?);
+            // Shared process-wide runtime: sequential `depyf dump` runs
+            // reuse the persisted HLO cache index instead of spinning up
+            // a cold client + cold cache every time.
+            builder = builder.runtime(Runtime::shared()?);
         }
         builder = builder.backend(b);
     }

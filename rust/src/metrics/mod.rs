@@ -50,6 +50,22 @@ impl Metrics {
             self.compile_time(),
         )
     }
+
+    /// The `metrics.json` session artifact: every counter plus compile
+    /// time, as a flat JSON object (keys are stable; values are u64).
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\n  \"captures\": {},\n  \"cache_hits\": {},\n  \"cache_misses\": {},\n  \"graph_breaks\": {},\n  \"fallbacks\": {},\n  \"guard_checks\": {},\n  \"guard_failures\": {},\n  \"compile_ns\": {}\n}}\n",
+            self.captures.get(),
+            self.cache_hits.get(),
+            self.cache_misses.get(),
+            self.graph_breaks.get(),
+            self.fallbacks.get(),
+            self.guard_checks.get(),
+            self.guard_failures.get(),
+            self.compile_ns.get(),
+        )
+    }
 }
 
 #[cfg(test)]
@@ -65,5 +81,21 @@ mod tests {
         let v = m.time_compile(|| 42);
         assert_eq!(v, 42);
         assert!(m.report().contains("captures=2"));
+    }
+
+    #[test]
+    fn json_dump_is_parseable_and_complete() {
+        let m = Metrics::new();
+        Metrics::bump(&m.captures);
+        Metrics::bump(&m.guard_checks);
+        Metrics::bump(&m.cache_hits);
+        let doc = crate::api::json::parse(&m.to_json()).expect("valid json");
+        assert_eq!(doc.get("captures").and_then(|v| v.as_f64()), Some(1.0));
+        assert_eq!(doc.get("cache_hits").and_then(|v| v.as_f64()), Some(1.0));
+        for key in
+            ["captures", "cache_hits", "cache_misses", "graph_breaks", "fallbacks", "guard_checks", "guard_failures", "compile_ns"]
+        {
+            assert!(doc.get(key).is_some(), "missing {}", key);
+        }
     }
 }

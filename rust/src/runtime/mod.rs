@@ -2,6 +2,14 @@
 //! or codegen output from `backend::xla`), compiles it on the CPU PJRT
 //! client, and executes with [`Tensor`] inputs. Python never runs here —
 //! this is the request path.
+//!
+//! Caching is two-level. In-process, compiled executables are memoized by
+//! key (the XLA backend keys on [`crate::graph::Graph::content_hash`], so
+//! identical graphs compile once per process no matter how many sessions
+//! produce them — [`Runtime::shared`] is the process-wide handle the CLI
+//! uses). On disk, an optional [`DiskCache`] persists an HLO→artifact
+//! index so a repeated run skips graph lowering and reuses the exact HLO
+//! text across processes.
 
 mod manifest;
 
@@ -14,6 +22,90 @@ use std::rc::Rc;
 
 use crate::api::DepyfError;
 use crate::tensor::Tensor;
+
+/// Environment variable overriding the CLI's persistent HLO cache
+/// directory (default `.depyf_cache` under the working directory).
+pub const CACHE_DIR_ENV: &str = "DEPYF_CACHE_DIR";
+
+/// A persistent HLO→artifact cache: `index.txt` maps cache keys to
+/// `n_outputs` and an `.hlo` text file in the same directory. Appends are
+/// line-atomic, so sequential CLI invocations share one index.
+pub struct DiskCache {
+    dir: PathBuf,
+    index: RefCell<HashMap<String, (usize, String)>>,
+}
+
+impl DiskCache {
+    const INDEX: &'static str = "index.txt";
+
+    /// Open (creating if needed) a cache directory and load its index.
+    pub fn open(dir: impl AsRef<Path>) -> Result<DiskCache, DepyfError> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir).map_err(|e| DepyfError::io(format!("mkdir {}", dir.display()), e))?;
+        let mut index = HashMap::new();
+        let path = dir.join(Self::INDEX);
+        if let Ok(text) = std::fs::read_to_string(&path) {
+            for line in text.lines() {
+                let mut parts = line.splitn(3, '\t');
+                if let (Some(key), Some(n), Some(file)) = (parts.next(), parts.next(), parts.next()) {
+                    if let Ok(n) = n.parse::<usize>() {
+                        index.insert(key.to_string(), (n, file.to_string()));
+                    }
+                }
+            }
+        }
+        Ok(DiskCache { dir, index: RefCell::new(index) })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Number of indexed entries.
+    pub fn len(&self) -> usize {
+        self.index.borrow().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.index.borrow().is_empty()
+    }
+
+    /// Look up the HLO text + output arity persisted under `key`.
+    pub fn get(&self, key: &str) -> Option<(String, usize)> {
+        let (n, file) = self.index.borrow().get(key).cloned()?;
+        let text = std::fs::read_to_string(self.dir.join(&file)).ok()?;
+        Some((text, n))
+    }
+
+    /// Persist HLO text under `key`, overwriting any existing entry — a
+    /// stale/corrupt record (e.g. a bad `n_outputs`) is repaired the next
+    /// time the key is re-lowered instead of poisoning the cache forever.
+    /// Best-effort: IO failures leave the cache cold but never fail a
+    /// compile.
+    pub fn put(&self, key: &str, text: &str, n_outputs: usize) {
+        // File name = sanitized key + FNV of the *raw* key: two distinct
+        // keys that sanitize identically (`a:b` vs `a_b`) cannot clobber
+        // each other's .hlo file.
+        let file = format!("{}-{:016x}.hlo", sanitize_key(key), crate::fnv::hash_str(key));
+        if std::fs::write(self.dir.join(&file), text).is_err() {
+            return;
+        }
+        use std::io::Write as _;
+        let line = format!("{}\t{}\t{}\n", key, n_outputs, file);
+        let appended = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(self.dir.join(Self::INDEX))
+            .and_then(|mut f| f.write_all(line.as_bytes()));
+        if appended.is_ok() {
+            self.index.borrow_mut().insert(key.to_string(), (n_outputs, file));
+        }
+    }
+}
+
+fn sanitize_key(k: &str) -> String {
+    k.chars().map(|c| if c.is_ascii_alphanumeric() || c == '_' || c == '-' { c } else { '_' }).collect()
+}
 
 /// An execution input: f32 data, or f32-held integers to be passed as s32.
 pub enum Arg<'a> {
@@ -44,40 +136,76 @@ pub struct Runtime {
     /// Where `make artifacts` put the AOT outputs.
     pub artifacts_dir: Option<PathBuf>,
     manifest: Option<Manifest>,
+    /// Optional persistent HLO cache consulted by the XLA backend.
+    disk: Option<DiskCache>,
     /// Compile + execute counters.
     pub compiles: std::cell::Cell<u64>,
     pub executions: std::cell::Cell<u64>,
+    /// HLO texts served from the persistent cache (lowering skipped).
+    pub disk_hits: std::cell::Cell<u64>,
+}
+
+thread_local! {
+    /// The process-wide runtime handle (the stack is single-threaded and
+    /// `Rc`-based): every CLI command and any session asking for
+    /// [`Runtime::shared`] gets the same client and executable cache.
+    static SHARED: RefCell<Option<Rc<Runtime>>> = const { RefCell::new(None) };
 }
 
 impl Runtime {
-    /// CPU PJRT client. Fails if libxla_extension is unavailable.
-    pub fn cpu() -> Result<Rc<Runtime>, DepyfError> {
+    fn new_with(
+        artifacts_dir: Option<PathBuf>,
+        manifest: Option<Manifest>,
+        disk: Option<DiskCache>,
+    ) -> Result<Rc<Runtime>, DepyfError> {
         let client =
             xla::PjRtClient::cpu().map_err(|e| DepyfError::Runtime(format!("PjRtClient::cpu: {}", e)))?;
         Ok(Rc::new(Runtime {
             client,
             cache: RefCell::new(HashMap::new()),
-            artifacts_dir: None,
-            manifest: None,
+            artifacts_dir,
+            manifest,
+            disk,
             compiles: std::cell::Cell::new(0),
             executions: std::cell::Cell::new(0),
+            disk_hits: std::cell::Cell::new(0),
         }))
+    }
+
+    /// CPU PJRT client. Fails if libxla_extension is unavailable.
+    pub fn cpu() -> Result<Rc<Runtime>, DepyfError> {
+        Runtime::new_with(None, None, None)
     }
 
     /// CPU client with an artifact directory (containing `manifest.txt`).
     pub fn cpu_with_artifacts(dir: impl AsRef<Path>) -> Result<Rc<Runtime>, DepyfError> {
-        let client =
-            xla::PjRtClient::cpu().map_err(|e| DepyfError::Runtime(format!("PjRtClient::cpu: {}", e)))?;
         let dir = dir.as_ref().to_path_buf();
         let manifest = Manifest::load(&dir.join("manifest.txt"))?;
-        Ok(Rc::new(Runtime {
-            client,
-            cache: RefCell::new(HashMap::new()),
-            artifacts_dir: Some(dir),
-            manifest: Some(manifest),
-            compiles: std::cell::Cell::new(0),
-            executions: std::cell::Cell::new(0),
-        }))
+        Runtime::new_with(Some(dir), Some(manifest), None)
+    }
+
+    /// CPU client with a persistent HLO disk cache at `dir`.
+    pub fn cpu_with_disk_cache(dir: impl AsRef<Path>) -> Result<Rc<Runtime>, DepyfError> {
+        Runtime::new_with(None, None, Some(DiskCache::open(dir)?))
+    }
+
+    /// The process-wide shared runtime: one PJRT client + executable cache
+    /// for the whole process, with a persistent disk cache at
+    /// `$DEPYF_CACHE_DIR` (default `.depyf_cache`). Repeated `depyf dump`
+    /// invocations share the persisted index; repeated loads of identical
+    /// HLO within a process compile exactly once.
+    pub fn shared() -> Result<Rc<Runtime>, DepyfError> {
+        SHARED.with(|s| {
+            if let Some(rt) = s.borrow().as_ref() {
+                return Ok(Rc::clone(rt));
+            }
+            let dir = std::env::var(CACHE_DIR_ENV).unwrap_or_else(|_| ".depyf_cache".into());
+            // A broken cache dir must not take down the runtime.
+            let disk = DiskCache::open(&dir).ok();
+            let rt = Runtime::new_with(None, None, disk)?;
+            *s.borrow_mut() = Some(Rc::clone(&rt));
+            Ok(rt)
+        })
     }
 
     pub fn platform(&self) -> String {
@@ -86,6 +214,31 @@ impl Runtime {
 
     pub fn manifest(&self) -> Option<&Manifest> {
         self.manifest.as_ref()
+    }
+
+    /// The persistent HLO cache, if this runtime has one.
+    pub fn disk_cache(&self) -> Option<&DiskCache> {
+        self.disk.as_ref()
+    }
+
+    /// In-process executable cache lookup (no compile).
+    pub fn cached_executable(&self, key: &str) -> Option<Rc<Executable>> {
+        self.cache.borrow().get(key).map(Rc::clone)
+    }
+
+    /// Persistent-cache lookup of HLO text + output arity; bumps
+    /// `disk_hits` so "lowering skipped" is observable.
+    pub fn cached_hlo(&self, key: &str) -> Option<(String, usize)> {
+        let hit = self.disk.as_ref()?.get(key)?;
+        self.disk_hits.set(self.disk_hits.get() + 1);
+        Some(hit)
+    }
+
+    /// Persist HLO text for `key` (no-op without a disk cache).
+    pub fn store_hlo(&self, key: &str, text: &str, n_outputs: usize) {
+        if let Some(d) = &self.disk {
+            d.put(key, text, n_outputs);
+        }
     }
 
     /// Compile HLO text under a cache key.
@@ -190,6 +343,48 @@ impl Runtime {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn tmp(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("depyf_diskcache_{}_{}", tag, std::process::id()))
+    }
+
+    /// The persistent index round-trips across handles (= across
+    /// processes) without any PJRT involvement.
+    #[test]
+    fn disk_cache_round_trips_across_handles() {
+        let dir = tmp("roundtrip");
+        let _ = std::fs::remove_dir_all(&dir);
+        let c = DiskCache::open(&dir).unwrap();
+        assert!(c.is_empty());
+        c.put("graph:00ff", "HloModule m\n", 2);
+        assert_eq!(c.get("graph:00ff"), Some(("HloModule m\n".to_string(), 2)));
+        assert_eq!(c.get("graph:missing"), None);
+        // Re-putting the same key overwrites (stale records self-heal) —
+        // the last index line wins on reload.
+        c.put("graph:00ff", "HloModule repaired\n", 3);
+        assert_eq!(c.get("graph:00ff"), Some(("HloModule repaired\n".to_string(), 3)));
+        // Distinct keys that sanitize to the same file stem must not
+        // clobber each other's artifacts.
+        c.put("graph_00ff", "HloModule collide\n", 1);
+        assert_eq!(c.get("graph:00ff").unwrap().0, "HloModule repaired\n");
+        assert_eq!(c.get("graph_00ff").unwrap().0, "HloModule collide\n");
+        let c2 = DiskCache::open(&dir).unwrap();
+        assert_eq!(c2.len(), 2);
+        assert_eq!(c2.get("graph:00ff"), Some(("HloModule repaired\n".to_string(), 3)));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn shared_runtime_is_one_handle_per_process() {
+        let dir = tmp("shared");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::env::set_var(CACHE_DIR_ENV, &dir);
+        let a = Runtime::shared().expect("pjrt");
+        let b = Runtime::shared().unwrap();
+        assert!(Rc::ptr_eq(&a, &b), "shared() must return the same runtime");
+        assert!(a.disk_cache().is_some(), "shared runtime carries the persistent cache");
+        std::fs::remove_dir_all(&dir).ok();
+    }
 
     /// Hand-written HLO text (the dialect our codegen emits) must compile
     /// and run on the PJRT CPU client.

@@ -103,6 +103,23 @@ impl Tensor {
         s
     }
 
+    /// Strides of this tensor aligned onto a broadcast output shape of rank
+    /// `out_rank` (>= own rank): missing leading axes and own axes of
+    /// extent 1 get stride 0, so walking the output with these strides
+    /// revisits the broadcast source elements. Precomputed **once per op**
+    /// by the elementwise kernels — the per-element div/mod chain of the
+    /// old indexing math is gone.
+    pub fn broadcast_strides(&self, out_rank: usize) -> Vec<usize> {
+        debug_assert!(out_rank >= self.rank());
+        let own = self.strides();
+        let offset = out_rank - self.rank();
+        let mut s = vec![0usize; out_rank];
+        for i in 0..self.rank() {
+            s[offset + i] = if self.shape[i] == 1 { 0 } else { own[i] };
+        }
+        s
+    }
+
     /// Max |a-b| against another tensor of identical shape.
     pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
         assert_eq!(self.shape, other.shape);
@@ -159,6 +176,14 @@ mod tests {
     fn strides_row_major() {
         let t = Tensor::zeros(&[2, 3, 4]);
         assert_eq!(t.strides(), vec![12, 4, 1]);
+    }
+
+    #[test]
+    fn broadcast_strides_zero_out_broadcast_axes() {
+        let t = Tensor::zeros(&[3, 1]);
+        assert_eq!(t.broadcast_strides(2), vec![1, 0]);
+        assert_eq!(t.broadcast_strides(4), vec![0, 0, 1, 0]);
+        assert_eq!(Tensor::scalar(1.0).broadcast_strides(3), vec![0, 0, 0]);
     }
 
     #[test]

@@ -29,7 +29,11 @@ pub fn broadcast_shapes(a: &[usize], b: &[usize]) -> Result<Vec<usize>, String> 
     Ok(out)
 }
 
-/// Map a flat index in the broadcast output back to a flat index in `t`.
+/// Reference implementation of broadcast indexing: map a flat index in the
+/// broadcast output back to a flat index in `t` with a per-element div/mod
+/// chain over every axis. Kept (test-only) as the oracle the stride-based
+/// fast path in [`binary_op`] is equivalence-tested against.
+#[cfg(test)]
 fn broadcast_src_index(out_shape: &[usize], out_idx: usize, t: &Tensor) -> usize {
     let t_shape = t.shape();
     let t_strides = t.strides();
@@ -52,19 +56,56 @@ fn broadcast_src_index(out_shape: &[usize], out_idx: usize, t: &Tensor) -> usize
 }
 
 /// Elementwise binary op with broadcasting.
+///
+/// Fast paths: identical shapes (linear zip) and a 1-element operand on
+/// either side (linear map with a captured scalar). The general path
+/// precomputes one broadcast-aligned stride vector per operand
+/// ([`Tensor::broadcast_strides`]) and walks the output with an odometer —
+/// source indices advance by per-axis deltas, no division or modulo in the
+/// element loop.
 pub fn binary_op(a: &Tensor, b: &Tensor, f: impl Fn(f32, f32) -> f32) -> Result<Tensor, String> {
     let out_shape = broadcast_shapes(a.shape(), b.shape())?;
-    let n: usize = out_shape.iter().product();
     // Fast path: identical shapes.
     if a.shape() == b.shape() {
         let data: Vec<f32> = a.data().iter().zip(b.data().iter()).map(|(&x, &y)| f(x, y)).collect();
         return Ok(Tensor::new(out_shape, data));
     }
+    // Fast path: one side is a single element (scalars, [1], [1,1], ...).
+    // All broadcast dims are 1 then, so the other side's flat order *is*
+    // the output order.
+    if b.numel() == 1 {
+        let y = b.data()[0];
+        let data: Vec<f32> = a.data().iter().map(|&x| f(x, y)).collect();
+        return Ok(Tensor::new(out_shape, data));
+    }
+    if a.numel() == 1 {
+        let x = a.data()[0];
+        let data: Vec<f32> = b.data().iter().map(|&y| f(x, y)).collect();
+        return Ok(Tensor::new(out_shape, data));
+    }
+    let rank = out_shape.len();
+    let n: usize = out_shape.iter().product();
+    let sa = a.broadcast_strides(rank);
+    let sb = b.broadcast_strides(rank);
+    let (ad, bd) = (a.data(), b.data());
     let mut data = Vec::with_capacity(n);
-    for i in 0..n {
-        let x = a.data()[broadcast_src_index(&out_shape, i, a)];
-        let y = b.data()[broadcast_src_index(&out_shape, i, b)];
-        data.push(f(x, y));
+    let mut coords = vec![0usize; rank];
+    let (mut ia, mut ib) = (0usize, 0usize);
+    for _ in 0..n {
+        data.push(f(ad[ia], bd[ib]));
+        // Odometer increment from the innermost axis outward.
+        for ax in (0..rank).rev() {
+            coords[ax] += 1;
+            ia += sa[ax];
+            ib += sb[ax];
+            if coords[ax] < out_shape[ax] {
+                break;
+            }
+            // Axis rolled over: rewind its contribution and carry.
+            coords[ax] = 0;
+            ia -= sa[ax] * out_shape[ax];
+            ib -= sb[ax] * out_shape[ax];
+        }
     }
     Ok(Tensor::new(out_shape, data))
 }
@@ -163,6 +204,26 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Result<Tensor, String> {
         let ad = &a.data()[a_off..a_off + a_mat];
         let bd = &b.data()[b_off..b_off + b_mat];
         let od = &mut out[bi * o_mat..(bi + 1) * o_mat];
+        matmul_kernel(ad, bd, od, am, ak, bn);
+    }
+    let mut shape = batch;
+    shape.push(am);
+    shape.push(bn);
+    Ok(Tensor::new(shape, out))
+}
+
+/// When the B panel no longer fits in L1/L2, tile the k dimension so each
+/// panel of `MM_KBLOCK` B-rows is reused across every output row before
+/// moving on. Per output element the k accumulation order is unchanged
+/// (k strictly ascending), so blocked and plain kernels produce bitwise
+/// identical results.
+const MM_KBLOCK: usize = 64;
+/// Panel size (elements of B touched per k-sweep) above which blocking wins.
+const MM_BLOCK_MIN_PANEL: usize = 64 * 1024 / 4; // ~64 KiB of f32
+
+/// `od += ad (am×ak) @ bd (ak×bn)`; `od` arrives zeroed.
+fn matmul_kernel(ad: &[f32], bd: &[f32], od: &mut [f32], am: usize, ak: usize, bn: usize) {
+    if ak * bn < MM_BLOCK_MIN_PANEL {
         // i-k-j loop order: streams through bd rows, vectorizes the j loop.
         for i in 0..am {
             for k in 0..ak {
@@ -177,11 +238,25 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Result<Tensor, String> {
                 }
             }
         }
+        return;
     }
-    let mut shape = batch;
-    shape.push(am);
-    shape.push(bn);
-    Ok(Tensor::new(shape, out))
+    for k0 in (0..ak).step_by(MM_KBLOCK) {
+        let k1 = (k0 + MM_KBLOCK).min(ak);
+        for i in 0..am {
+            let arow = &ad[i * ak..(i + 1) * ak];
+            let orow = &mut od[i * bn..(i + 1) * bn];
+            for k in k0..k1 {
+                let av = arow[k];
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &bd[k * bn..(k + 1) * bn];
+                for j in 0..bn {
+                    orow[j] += av * brow[j];
+                }
+            }
+        }
+    }
 }
 
 /// Transpose the last two axes.
@@ -526,6 +601,85 @@ mod tests {
         let targets = t(&[2], &[1.0, 3.0]);
         let ce = cross_entropy(&logits, &targets).unwrap();
         assert!((ce.item() - (4.0f32).ln()).abs() < 1e-5);
+    }
+
+    /// Reference broadcasting (div/mod per element) vs the stride-based
+    /// fast path, across ranks 0-4 with every mix of broadcast-1 axes.
+    #[test]
+    fn stride_broadcast_matches_reference_ranks_0_to_4() {
+        use super::super::Rng;
+        let mut rng = Rng::new(0xB40ADCA5);
+        let base: Vec<usize> = vec![2, 3, 2, 3];
+        let mut cases: Vec<(Vec<usize>, Vec<usize>)> = Vec::new();
+        for rank_a in 0..=4usize {
+            for rank_b in 0..=4usize {
+                let rank = rank_a.max(rank_b);
+                // Each side takes the trailing axes of the shared base and
+                // independently squashes a mask of them to 1 — compatible
+                // by construction, covering every broadcast-axis mix.
+                for mask in 0..16u32 {
+                    let sa: Vec<usize> = (0..rank_a)
+                        .map(|i| {
+                            let oi = rank - rank_a + i;
+                            if mask & (1 << (oi % 4)) != 0 { 1 } else { base[oi] }
+                        })
+                        .collect();
+                    let sb: Vec<usize> = (0..rank_b)
+                        .map(|i| {
+                            let oi = rank - rank_b + i;
+                            if mask & (1 << ((oi + 1) % 4)) != 0 { 1 } else { base[oi] }
+                        })
+                        .collect();
+                    cases.push((sa, sb));
+                }
+            }
+        }
+        assert!(cases.len() > 100, "case generation broke: {} cases", cases.len());
+        for (sa, sb) in cases {
+            let a = Tensor::rand(&sa, &mut rng);
+            let b = Tensor::rand(&sb, &mut rng);
+            let got = sub(&a, &b).unwrap();
+            // Reference: per-element div/mod indexing.
+            let out_shape = broadcast_shapes(&sa, &sb).unwrap();
+            let n: usize = out_shape.iter().product();
+            let mut want = Vec::with_capacity(n);
+            for i in 0..n {
+                let x = a.data()[broadcast_src_index(&out_shape, i, &a)];
+                let y = b.data()[broadcast_src_index(&out_shape, i, &b)];
+                want.push(x - y);
+            }
+            assert_eq!(got.shape(), &out_shape[..], "{:?} vs {:?}", sa, sb);
+            assert_eq!(got.data(), &want[..], "{:?} vs {:?}", sa, sb);
+        }
+    }
+
+    /// The blocked matmul kernel must agree with the plain i-k-j loop —
+    /// both accumulate each output element in ascending-k order, so the
+    /// comparison is exact, not approximate.
+    #[test]
+    fn blocked_matmul_matches_plain_kernel() {
+        use super::super::Rng;
+        let mut rng = Rng::new(0x3A7);
+        // ak*bn = 130*140 > MM_BLOCK_MIN_PANEL forces the blocked path,
+        // with ak deliberately not a multiple of MM_KBLOCK.
+        let (am, ak, bn) = (9, 130, 140);
+        assert!(ak * bn >= MM_BLOCK_MIN_PANEL);
+        let a = Tensor::rand(&[am, ak], &mut rng);
+        let b = Tensor::rand(&[ak, bn], &mut rng);
+        let got = matmul(&a, &b).unwrap();
+        let mut want = vec![0.0f32; am * bn];
+        for i in 0..am {
+            for k in 0..ak {
+                let av = a.data()[i * ak + k];
+                if av == 0.0 {
+                    continue;
+                }
+                for j in 0..bn {
+                    want[i * bn + j] += av * b.data()[k * bn + j];
+                }
+            }
+        }
+        assert_eq!(got.data(), &want[..]);
     }
 
     #[test]

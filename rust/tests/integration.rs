@@ -211,8 +211,8 @@ print(f(torch.ones([4]), torch.ones([4])).sum().item())
     vm.exec_source(src, IsaVersion::V310).unwrap();
     let gen = d.generated_codes();
     assert!(gen.len() >= 3, "expected transformed + resumes, got {:?}", gen.iter().map(|(n, _)| n.clone()).collect::<Vec<_>>());
-    for (name, code) in gen {
-        let text = decompile(&code).unwrap_or_else(|e| panic!("{}: {}", name, e));
+    for (name, code) in gen.iter() {
+        let text = decompile(code).unwrap_or_else(|e| panic!("{}: {}", name, e));
         compile_module(&text, "<rt>", code.version).unwrap_or_else(|e| panic!("{} recompile: {}\n{}", name, e, text));
     }
 }

@@ -1,11 +1,14 @@
 //! Custom-backend example — the `torch.compile(backend=my_compiler)`
-//! workflow through `depyf::api`:
+//! workflow through `depyf::api`'s staged pipeline:
 //!
-//! 1. Implement [`Backend`] (here: a counting wrapper over the eager
-//!    reference executor that stamps its own `backend_name`).
+//! 1. Implement [`Backend`]: `plan()` returns a declarative
+//!    [`CompilePlan`] (here: the trivial single-partition plan) and
+//!    `lower()` returns a [`CompiledModule`] (here: a counting wrapper
+//!    over the eager reference executor that stamps its own
+//!    `backend_name`).
 //! 2. `register_backend(...)` — it becomes addressable by name everywhere
 //!    a built-in is (`SessionBuilder::backend_named`, the CLI's
-//!    `--backend` flag).
+//!    `--backend` flag, next to `eager`, `xla`, `sharded`, `batched`).
 //! 3. Drive a model through a session; captured graphs compile through the
 //!    custom backend, and `finish()` indexes the dumps in `manifest.json`.
 //!
@@ -14,8 +17,8 @@
 use std::cell::Cell;
 use std::rc::Rc;
 
-use depyf::api::eager_graph_fn;
-use depyf::graph::{CompiledGraphFn, Graph};
+use depyf::backend::eager::EagerModule;
+use depyf::graph::Graph;
 use depyf::prelude::*;
 
 /// A user-written graph compiler: delegates execution to the eager
@@ -29,10 +32,33 @@ impl Backend for CountingBackend {
         "counting"
     }
 
-    fn compile(&self, name: &str, graph: Rc<Graph>, _ctx: &CompileCtx) -> Result<CompiledGraphFn, DepyfError> {
+    fn plan(&self, req: &CompileRequest) -> Result<CompilePlan, DepyfError> {
+        // The request carries everything a planner might inspect: the
+        // graph, example-input specs, the guard context that specialized
+        // it, and the content-hash cache key.
+        println!(
+            "[counting] planning {}: {} ops, inputs {:?}, {} guards, key {:016x}",
+            req.name,
+            req.graph.num_ops(),
+            req.input_specs.iter().map(|s| s.shape.clone()).collect::<Vec<_>>(),
+            req.guards.len(),
+            req.cache_key
+        );
+        Ok(CompilePlan::monolithic("counting", req, "eager"))
+    }
+
+    fn lower(&self, req: &CompileRequest, plan: &CompilePlan) -> Result<Rc<dyn CompiledModule>, DepyfError> {
         self.compiles.set(self.compiles.get() + 1);
-        println!("[counting] compile #{}: {} ({} ops)", self.compiles.get(), name, graph.num_ops());
-        Ok(eager_graph_fn(name, graph, format!("counting#{}", self.compiles.get())))
+        println!(
+            "[counting] lowering {} (partition 0 targets '{}'), compile #{}",
+            req.name,
+            plan.partitions[0].target,
+            self.compiles.get()
+        );
+        Ok(Rc::new(EagerModule::with_name(
+            Rc::clone(&req.graph),
+            format!("counting#{}", self.compiles.get()),
+        )))
     }
 }
 
@@ -65,11 +91,19 @@ fn main() -> Result<(), DepyfError> {
     if let Value::CompiledGraph(g) = &compiled {
         println!("installed {:?}", g);
         assert!(g.backend_name.starts_with("counting#"), "{}", g.backend_name);
+        assert_eq!(g.module.stats().partitions, 1);
     }
     assert_eq!(backend.compiles.get(), 1, "second call must hit the dynamo cache");
 
+    // The same graph, planned standalone: plans are plain data.
+    let g: Rc<Graph> = Rc::clone(&session.dynamo.graphs()[0].1);
+    let req = CompileRequest::new("__compiled_fn_1", g);
+    let plan = backend.plan(&req)?;
+    println!("\n--- CompilePlan (round-trips through JSON) ---\n{}", plan.to_json());
+    assert_eq!(CompilePlan::parse(&plan.to_json())?, plan);
+
     let artifacts = session.finish()?;
-    println!("\ndumped {} artifacts into {}:", artifacts.len(), dir.display());
+    println!("dumped {} artifacts into {}:", artifacts.len(), dir.display());
     for a in &artifacts {
         println!("  [{:>18}] {}", a.kind.as_str(), a.file_name());
     }

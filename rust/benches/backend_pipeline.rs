@@ -1,0 +1,163 @@
+//! Backend-pipeline benches: what the composite backends buy (and cost).
+//!
+//! * `sharded` vs the monolithic backend on a deep MLP chain — per-call
+//!   stitch overhead (eager targets) and per-shard compile behaviour
+//!   (PJRT targets, when available).
+//! * `batched` vs per-guard-entry compiles — four guard entries whose
+//!   batch sizes land in one bucket compile once instead of four times.
+//!
+//! Run: `cargo bench --bench backend_pipeline`. Merges into
+//! `BENCH_hotpath.json`; `DEPYF_BENCH_QUICK=1` for smoke runs.
+
+mod support;
+
+use std::rc::Rc;
+use std::time::Instant;
+
+use depyf::api::{Backend, CompileRequest, EagerBackend, XlaBackend};
+use depyf::backend::{BatchedBackend, ShardedBackend};
+use depyf::graph::{Graph, OpKind};
+use depyf::runtime::Runtime;
+use depyf::tensor::{Rng, Tensor};
+
+/// `layers` matmul+relu blocks ending in softmax+sum: a chain with an
+/// articulation point between every block.
+fn deep_mlp(batch: usize, d: usize, layers: usize) -> Graph {
+    let mut g = Graph::new("bench_pipeline");
+    let x = g.placeholder("x", &[batch, d]);
+    let mut cur = x;
+    for i in 0..layers {
+        let w = g.placeholder(&format!("w{}", i), &[d, d]);
+        let h = g.add_op(OpKind::MatMul, vec![cur, w]).unwrap();
+        cur = g.add_op(OpKind::Relu, vec![h]).unwrap();
+    }
+    let sm = g.add_op(OpKind::Softmax, vec![cur]).unwrap();
+    g.set_outputs(vec![sm]);
+    g
+}
+
+fn inputs_for(g: &Graph, seed: u64) -> Vec<Rc<Tensor>> {
+    let mut rng = Rng::new(seed);
+    g.input_shapes().into_iter().map(|(_, s)| Rc::new(Tensor::randn(&s, &mut rng))).collect()
+}
+
+/// Sharded (eager targets) vs plain eager: the cost of stitching.
+fn bench_sharded_eager(rep: &mut support::Reporter) {
+    let g = Rc::new(deep_mlp(16, 32, 4));
+    let req = CompileRequest::new("bench_pipeline", Rc::clone(&g));
+    let mono = EagerBackend.compile(&req).expect("eager");
+    let sharded = ShardedBackend::with_max_ops(3).compile(&req).expect("sharded");
+    assert!(sharded.stats().partitions >= 3);
+    let inputs = inputs_for(&g, 1);
+    // Equivalence before timing.
+    let a = mono.call(&inputs).unwrap();
+    let b = sharded.call(&inputs).unwrap();
+    assert_eq!(a[0].data(), b[0].data(), "sharded diverged from monolithic");
+    let iters = support::iters(300);
+    let mono_ns = support::time_ns(iters, || {
+        mono.call(&inputs).unwrap();
+    });
+    let shard_ns = support::time_ns(iters, || {
+        sharded.call(&inputs).unwrap();
+    });
+    rep.record("monolithic_eager_call", mono_ns, "ns/call");
+    rep.record("sharded_eager_call", shard_ns, "ns/call");
+}
+
+/// Sharded vs monolithic XLA: per-shard compiles + stitched execution.
+fn bench_sharded_xla(rep: &mut support::Reporter) {
+    let Ok(rt) = Runtime::cpu() else {
+        eprintln!("[bench:backend_pipeline] PJRT unavailable, skipping xla section");
+        return;
+    };
+    let g = Rc::new(deep_mlp(16, 32, 4));
+    let req = CompileRequest::new("bench_pipeline", Rc::clone(&g)).with_runtime(Some(Rc::clone(&rt)));
+
+    let t0 = Instant::now();
+    let mono = XlaBackend.compile(&req).expect("xla");
+    rep.record("monolithic_xla_compile", t0.elapsed().as_nanos() as f64, "ns (one-shot)");
+    let mono_compiles = rt.compiles.get();
+
+    let t0 = Instant::now();
+    let sharded = ShardedBackend::with_max_ops(3).compile(&req).expect("sharded xla");
+    rep.record("sharded_xla_compile", t0.elapsed().as_nanos() as f64, "ns (one-shot)");
+    let shard_compiles = rt.compiles.get() - mono_compiles;
+    rep.record("sharded_xla_executables", shard_compiles as f64, "compiles");
+    assert!(shard_compiles >= 3, "sharding must produce several executables");
+
+    let inputs = inputs_for(&g, 2);
+    let a = mono.call(&inputs).unwrap();
+    let b = sharded.call(&inputs).unwrap();
+    assert!(a[0].allclose(&b[0], 1e-4), "sharded xla diverged");
+    let iters = support::iters(200);
+    let mono_ns = support::time_ns(iters, || {
+        mono.call(&inputs).unwrap();
+    });
+    let shard_ns = support::time_ns(iters, || {
+        sharded.call(&inputs).unwrap();
+    });
+    rep.record("monolithic_xla_call", mono_ns, "ns/call");
+    rep.record("sharded_xla_call", shard_ns, "ns/call");
+}
+
+/// Batched vs per-guard-entry compiles: batch sizes 5..=8 share bucket 8.
+fn bench_batched(rep: &mut support::Reporter) {
+    let batches = [5usize, 6, 7, 8];
+    // Eager targets: one shared ExecPlan instead of four.
+    let backend = BatchedBackend::new();
+    let t0 = Instant::now();
+    let mut bucket_hits = 0u64;
+    for &b in &batches {
+        let g = Rc::new(deep_mlp(b, 32, 2));
+        let req = CompileRequest::new("bench_batched", Rc::clone(&g));
+        let module = backend.compile(&req).expect("batched");
+        bucket_hits += module.stats().cache_hits;
+        // Sanity: padded execution matches the reference executor.
+        let inputs = inputs_for(&g, 3 + b as u64);
+        let got = module.call(&inputs).unwrap();
+        let want = EagerBackend.compile(&req).unwrap().call(&inputs).unwrap();
+        assert_eq!(got[0].data(), want[0].data(), "batched diverged at b={}", b);
+    }
+    rep.record("batched_eager_4entries", t0.elapsed().as_nanos() as f64, "ns (one-shot)");
+    rep.record("batched_bucket_reuse", bucket_hits as f64, "cache hits");
+    assert_eq!(bucket_hits, batches.len() as u64 - 1, "bucket must be shared");
+
+    // PJRT: four exact executables vs one padded executable. (Distinct
+    // widths per section so the runtime's content-hash cache cannot alias
+    // the exact batch-8 graph with the padded bucket-8 graph.)
+    if let Ok(rt) = Runtime::cpu() {
+        let base = rt.compiles.get();
+        let t0 = Instant::now();
+        for &b in &batches {
+            let g = Rc::new(deep_mlp(b, 24, 2));
+            let req = CompileRequest::new("bench_batched", Rc::clone(&g))
+                .with_runtime(Some(Rc::clone(&rt)));
+            XlaBackend.compile(&req).expect("xla");
+        }
+        let per_entry = rt.compiles.get() - base;
+        rep.record("per_entry_xla_compiles", per_entry as f64, "compiles");
+        rep.record("per_entry_xla_compile_total", t0.elapsed().as_nanos() as f64, "ns (one-shot)");
+
+        let base = rt.compiles.get();
+        let t0 = Instant::now();
+        for &b in &batches {
+            let g = Rc::new(deep_mlp(b, 48, 2));
+            let req = CompileRequest::new("bench_batched", Rc::clone(&g))
+                .with_runtime(Some(Rc::clone(&rt)));
+            BatchedBackend::new().compile(&req).expect("batched xla");
+        }
+        let bucketed = rt.compiles.get() - base;
+        rep.record("batched_xla_compiles", bucketed as f64, "compiles");
+        rep.record("batched_xla_compile_total", t0.elapsed().as_nanos() as f64, "ns (one-shot)");
+        assert_eq!(per_entry, 4, "four guard entries, four exact executables");
+        assert_eq!(bucketed, 1, "one bucket, one executable");
+    }
+}
+
+fn main() {
+    let mut rep = support::Reporter::new("backend_pipeline");
+    bench_sharded_eager(&mut rep);
+    bench_sharded_xla(&mut rep);
+    bench_batched(&mut rep);
+    rep.finish();
+}

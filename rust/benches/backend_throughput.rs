@@ -12,7 +12,7 @@ mod support;
 use std::rc::Rc;
 use std::time::Instant;
 
-use depyf::api::{Backend, CompileCtx, EagerBackend, XlaBackend};
+use depyf::api::{Backend, CompileRequest, EagerBackend, XlaBackend};
 use depyf::graph::{Graph, OpKind};
 use depyf::runtime::Runtime;
 use depyf::tensor::{Rng, Tensor};
@@ -52,10 +52,10 @@ fn main() {
         let g = Rc::new(mlp_graph(n, d));
         let flops = g.flops();
         let name = format!("bench_d{}", d);
-        let eager = EagerBackend.compile(&name, Rc::clone(&g), &CompileCtx::default()).expect("eager");
-        let xla_ctx = CompileCtx { runtime: Some(Rc::clone(&rt)), ..Default::default() };
-        let xla = XlaBackend.compile(&name, Rc::clone(&g), &xla_ctx).expect("xla compile");
-        assert_eq!(xla.backend_name, "xla", "xla backend failed: {}", xla.backend_name);
+        let eager = EagerBackend.compile(&CompileRequest::new(&name, Rc::clone(&g))).expect("eager");
+        let xla_req = CompileRequest::new(&name, Rc::clone(&g)).with_runtime(Some(Rc::clone(&rt)));
+        let xla = XlaBackend.compile(&xla_req).expect("xla compile");
+        assert_eq!(xla.backend_name(), "xla", "xla backend failed: {}", xla.backend_name());
         let inputs: Vec<Rc<Tensor>> = vec![
             Rc::new(Tensor::randn(&[n, d], &mut rng)),
             Rc::new(Tensor::randn(&[d, d], &mut rng)),

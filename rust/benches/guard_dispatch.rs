@@ -11,7 +11,7 @@ mod support;
 use std::rc::Rc;
 use std::time::Instant;
 
-use depyf::api::{Backend, CompileCtx, EagerBackend, XlaBackend};
+use depyf::api::{Backend, CompileRequest, EagerBackend, XlaBackend};
 use depyf::bytecode::{CodeObject, IsaVersion};
 use depyf::dynamo::{Dynamo, DynamoConfig, Guard, GuardTable, Origin};
 use depyf::graph::{Graph, OpKind};
@@ -104,7 +104,7 @@ fn bench_table_lookup(rep: &mut support::Reporter) {
 fn bench_eager_mlp(rep: &mut support::Reporter) {
     let (n, d) = (32, 64);
     let g = Rc::new(mlp_graph(n, d));
-    let f = EagerBackend.compile("bench_mlp", Rc::clone(&g), &CompileCtx::default()).unwrap();
+    let f = EagerBackend.compile(&CompileRequest::new("bench_mlp", Rc::clone(&g))).unwrap();
     let mut rng = Rng::new(7);
     let inputs: Vec<Rc<Tensor>> = vec![
         Rc::new(Tensor::randn(&[n, d], &mut rng)),
@@ -130,26 +130,26 @@ fn bench_compile_cache(rep: &mut support::Reporter) {
         }
     };
     let g = Rc::new(mlp_graph(8, 16));
-    let ctx = CompileCtx { runtime: Some(Rc::clone(&rt)), ..Default::default() };
+    let req = CompileRequest::new("bench_cc", Rc::clone(&g)).with_runtime(Some(Rc::clone(&rt)));
 
     let t0 = Instant::now();
-    XlaBackend.compile("bench_cc", Rc::clone(&g), &ctx).expect("xla compile");
+    XlaBackend.compile(&req).expect("xla compile");
     let miss = t0.elapsed().as_nanos() as f64;
     rep.record("compile_cache_miss", miss, "ns (one-shot)");
     assert_eq!(rt.compiles.get(), 1);
 
     let iters = support::iters(200);
     let hit = support::time_ns(iters, || {
-        XlaBackend.compile("bench_cc", Rc::clone(&g), &ctx).expect("xla compile");
+        XlaBackend.compile(&req).expect("xla compile");
     });
     rep.record("compile_cache_hit", hit, "ns/compile");
     assert_eq!(rt.compiles.get(), 1, "hits must not recompile");
 
     // Fresh runtime over the same disk cache: lowering is skipped.
     let rt2 = Runtime::cpu_with_disk_cache(&cache_dir).expect("pjrt");
-    let ctx2 = CompileCtx { runtime: Some(Rc::clone(&rt2)), ..Default::default() };
+    let req2 = CompileRequest::new("bench_cc2", Rc::clone(&g)).with_runtime(Some(Rc::clone(&rt2)));
     let t0 = Instant::now();
-    XlaBackend.compile("bench_cc2", Rc::clone(&g), &ctx2).expect("xla compile");
+    XlaBackend.compile(&req2).expect("xla compile");
     rep.record("compile_cache_disk_warm", t0.elapsed().as_nanos() as f64, "ns (one-shot)");
     assert_eq!(rt2.disk_hits.get(), 1, "disk cache must serve the HLO");
     let _ = std::fs::remove_dir_all(&cache_dir);

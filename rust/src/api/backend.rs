@@ -1,23 +1,33 @@
-//! The pluggable [`Backend`] trait, the process-wide backend registry, and
-//! the explicit [`FallbackPolicy`] — the analogue of
-//! `torch.compile(backend=...)` accepting both built-in names and custom
-//! callables.
+//! The staged backend pipeline: a typed [`CompileRequest`] flows through
+//! [`Backend::plan`] (a declarative, dumpable [`CompilePlan`]) and
+//! [`Backend::lower`] (an executable [`CompiledModule`]), with a
+//! [`Capabilities`] bitset so the registry, `SessionBuilder` and
+//! [`FallbackPolicy`] can validate configurations up front instead of
+//! failing mid-compile.
 //!
-//! `Eager` and `Xla` are just two implementations registered by default;
-//! [`register_backend`] lets users plug their own compiler into dynamo and
-//! [`crate::api::SessionBuilder`] without touching this crate.
+//! `eager`, `xla`, `sharded` and `batched` are the built-in backends;
+//! [`register_backend`] plugs custom compilers into dynamo and
+//! [`crate::api::SessionBuilder`] without touching this crate — the
+//! analogue of `torch.compile(backend=...)` accepting both built-in names
+//! and custom callables.
 
 use std::cell::RefCell;
 use std::collections::HashMap;
+use std::fmt;
+use std::ops::BitOr;
 use std::rc::Rc;
 
-use crate::backend::{eager, xla};
+use crate::backend::{batched::BatchedBackend, eager, sharded::ShardedBackend, xla};
+use crate::dynamo::Verbosity;
 use crate::graph::{CompiledGraphFn, Graph};
 use crate::runtime::Runtime;
+use crate::tensor::Tensor;
 
+use super::artifact::ArtifactKind;
 use super::error::DepyfError;
+use super::plan::CompilePlan;
 
-/// What dynamo does when a backend fails to compile a captured graph.
+/// What dynamo does when a backend fails to plan or lower a captured graph.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum FallbackPolicy {
     /// Degrade to the eager reference executor (how torch.compile backends
@@ -29,33 +39,252 @@ pub enum FallbackPolicy {
     Error,
 }
 
-/// Everything a backend may need at compile time.
-#[derive(Clone, Default)]
-pub struct CompileCtx {
+/// A small capability bitset declared by every [`Backend`], checked by the
+/// registry, `SessionBuilder::build()` and the CLI *before* any graph is
+/// compiled.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Capabilities(u32);
+
+impl Capabilities {
+    pub const NONE: Capabilities = Capabilities(0);
+    /// Can split one captured graph into several executables.
+    pub const PARTITION: Capabilities = Capabilities(1 << 0);
+    /// Can pad/bucket a dynamic leading dim so one executable serves
+    /// multiple guard entries.
+    pub const DYNAMIC_BATCH: Capabilities = Capabilities(1 << 1);
+    /// Reserved: returns futures for pipelined execution.
+    pub const ASYNC: Capabilities = Capabilities(1 << 2);
+    /// Cannot lower without a PJRT runtime (`SessionBuilder::runtime`).
+    pub const REQUIRES_RUNTIME: Capabilities = Capabilities(1 << 3);
+    /// Lowers to PJRT when a runtime is present, degrades to eager
+    /// executables otherwise (the CLI provisions the shared runtime).
+    pub const USES_RUNTIME: Capabilities = Capabilities(1 << 4);
+
+    pub fn contains(self, other: Capabilities) -> bool {
+        self.0 & other.0 == other.0
+    }
+
+    pub fn is_empty(self) -> bool {
+        self.0 == 0
+    }
+
+    /// Capabilities in `required` that `self` lacks.
+    pub fn missing(self, required: Capabilities) -> Capabilities {
+        Capabilities(required.0 & !self.0)
+    }
+}
+
+impl BitOr for Capabilities {
+    type Output = Capabilities;
+    fn bitor(self, rhs: Capabilities) -> Capabilities {
+        Capabilities(self.0 | rhs.0)
+    }
+}
+
+impl fmt::Display for Capabilities {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut names = Vec::new();
+        for (bit, name) in [
+            (Capabilities::PARTITION, "partition"),
+            (Capabilities::DYNAMIC_BATCH, "dynamic_batch"),
+            (Capabilities::ASYNC, "async"),
+            (Capabilities::REQUIRES_RUNTIME, "requires_runtime"),
+            (Capabilities::USES_RUNTIME, "uses_runtime"),
+        ] {
+            if self.contains(bit) {
+                names.push(name);
+            }
+        }
+        if names.is_empty() {
+            f.write_str("none")
+        } else {
+            f.write_str(&names.join("|"))
+        }
+    }
+}
+
+/// One example input of a captured graph: the placeholder name and the
+/// concrete shape it was specialized to (guards pin these shapes).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct InputSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+/// Everything a backend may need at compile time, as one typed request:
+/// the captured graph, its example-input specs, the guard context that
+/// specialized it, the content-hash cache key, verbosity, the optional
+/// PJRT runtime and the failure policy.
+#[derive(Clone)]
+pub struct CompileRequest {
+    /// The installed global's name (`__compiled_fn_N`).
+    pub name: String,
+    pub graph: Rc<Graph>,
+    /// Placeholder names + concrete shapes, in input order.
+    pub input_specs: Vec<InputSpec>,
+    /// Human-readable guard descriptions attached to this entry.
+    pub guards: Vec<String>,
+    /// `Graph::content_hash()` — the process/disk compile-cache key.
+    pub cache_key: u64,
+    pub verbosity: Verbosity,
     /// PJRT runtime, for backends that lower to HLO.
     pub runtime: Option<Rc<Runtime>>,
-    /// Applied by the caller driving [`compile_with_policy`] (dynamo, the
-    /// legacy shim) — backends themselves must NOT apply it; they report
-    /// failures and let the policy decide.
+    /// Applied by the caller driving [`compile_with_policy`] — backends
+    /// themselves must NOT apply it; they report failures and let the
+    /// policy decide.
     pub fallback: FallbackPolicy,
 }
 
-/// A graph compiler: turns a captured [`Graph`] into a callable
-/// [`CompiledGraphFn`]. Implementations are registered by name and looked
+impl CompileRequest {
+    /// A request with defaults (no guards, no runtime, `Info` verbosity,
+    /// eager fallback); input specs and cache key derive from the graph.
+    pub fn new(name: &str, graph: Rc<Graph>) -> CompileRequest {
+        let input_specs = graph
+            .input_shapes()
+            .into_iter()
+            .map(|(name, shape)| InputSpec { name, shape })
+            .collect();
+        let cache_key = graph.content_hash();
+        CompileRequest {
+            name: name.to_string(),
+            graph,
+            input_specs,
+            guards: Vec::new(),
+            cache_key,
+            verbosity: Verbosity::default(),
+            runtime: None,
+            fallback: FallbackPolicy::default(),
+        }
+    }
+
+    pub fn with_runtime(mut self, rt: Option<Rc<Runtime>>) -> CompileRequest {
+        self.runtime = rt;
+        self
+    }
+
+    pub fn with_guards(mut self, guards: Vec<String>) -> CompileRequest {
+        self.guards = guards;
+        self
+    }
+
+    pub fn with_verbosity(mut self, v: Verbosity) -> CompileRequest {
+        self.verbosity = v;
+        self
+    }
+
+    pub fn with_fallback(mut self, policy: FallbackPolicy) -> CompileRequest {
+        self.fallback = policy;
+        self
+    }
+}
+
+/// A dump artifact a [`CompiledModule`] wants written into the session's
+/// dump dir at `finish()` — per-partition HLO, the compile plan, etc.
+/// (Content-carrying, unlike [`crate::api::Artifact`] which records a file
+/// already on disk.)
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ModuleArtifact {
+    pub kind: ArtifactKind,
+    /// Logical name in the manifest (e.g. `__compiled_fn_1/p0`).
+    pub name: String,
+    /// Preferred file name inside the dump dir.
+    pub file: String,
+    pub content: String,
+}
+
+/// Per-module compile/runtime stats, merged into the session's
+/// `metrics.json` under `"modules"`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ModuleStats {
+    /// Executables this module stitches together (1 for monolithic).
+    pub partitions: u64,
+    /// Padded leading-dim bucket (None when not batched).
+    pub bucket: Option<u64>,
+    /// Inner executables served from a shared cache instead of compiled.
+    pub cache_hits: u64,
+}
+
+/// An executable compiled graph: the output of [`Backend::lower`].
+///
+/// Beyond `call`, a module is *inspectable*: `artifacts()` returns the
+/// per-partition/per-bucket dumps (plan JSON, HLO text) the session
+/// indexes in `manifest.json`, and `stats()` feeds `metrics.json`.
+pub trait CompiledModule {
+    /// Execute the module on tensor inputs shaped like the original graph.
+    fn call(&self, inputs: &[Rc<Tensor>]) -> Result<Vec<Tensor>, DepyfError>;
+
+    /// The name stamped on [`CompiledGraphFn::backend_name`].
+    fn backend_name(&self) -> &str;
+
+    /// Dump artifacts describing this module (may be empty).
+    fn artifacts(&self) -> Vec<ModuleArtifact> {
+        Vec::new()
+    }
+
+    fn stats(&self) -> ModuleStats {
+        ModuleStats { partitions: 1, ..Default::default() }
+    }
+}
+
+/// A closure-backed [`CompiledModule`] — the smallest way for custom
+/// backends (and dynamo's trace/error paths) to satisfy the contract.
+pub struct FnModule {
+    backend_name: String,
+    #[allow(clippy::type_complexity)]
+    f: Box<dyn Fn(&[Rc<Tensor>]) -> Result<Vec<Tensor>, DepyfError>>,
+}
+
+impl CompiledModule for FnModule {
+    fn call(&self, inputs: &[Rc<Tensor>]) -> Result<Vec<Tensor>, DepyfError> {
+        (self.f)(inputs)
+    }
+
+    fn backend_name(&self) -> &str {
+        &self.backend_name
+    }
+}
+
+/// Wrap a closure as a [`CompiledModule`].
+pub fn module_from_fn(
+    backend_name: impl Into<String>,
+    f: impl Fn(&[Rc<Tensor>]) -> Result<Vec<Tensor>, DepyfError> + 'static,
+) -> Rc<dyn CompiledModule> {
+    Rc::new(FnModule { backend_name: backend_name.into(), f: Box::new(f) })
+}
+
+/// A graph compiler in two explicit stages. `plan` decides *what* to build
+/// (partitions, padding/bucketing, per-partition targets) as a declarative
+/// [`CompilePlan`]; `lower` turns that plan into an executable
+/// [`CompiledModule`]. Implementations are registered by name and looked
 /// up like `torch.compile(backend="name")`.
 pub trait Backend {
     /// Registry key and the default `backend_name` stamped on output.
     fn name(&self) -> &str;
 
-    /// True if `compile` needs `ctx.runtime`. `SessionBuilder::build()`
-    /// uses this to reject misconfiguration up front under
-    /// [`FallbackPolicy::Error`].
-    fn requires_runtime(&self) -> bool {
-        false
+    /// What this backend can do / needs — validated up front by
+    /// `SessionBuilder::build()` and the CLI.
+    fn capabilities(&self) -> Capabilities {
+        Capabilities::NONE
     }
 
-    /// Compile one captured graph.
-    fn compile(&self, name: &str, graph: Rc<Graph>, ctx: &CompileCtx) -> Result<CompiledGraphFn, DepyfError>;
+    /// True if `lower` needs `req.runtime` (derived from
+    /// [`Capabilities::REQUIRES_RUNTIME`]).
+    fn requires_runtime(&self) -> bool {
+        self.capabilities().contains(Capabilities::REQUIRES_RUNTIME)
+    }
+
+    /// Stage 1: decide how to compile the request. The returned plan is
+    /// pure description — dumpable as JSON, comparable, inspectable.
+    fn plan(&self, req: &CompileRequest) -> Result<CompilePlan, DepyfError>;
+
+    /// Stage 2: realize a plan as an executable module.
+    fn lower(&self, req: &CompileRequest, plan: &CompilePlan) -> Result<Rc<dyn CompiledModule>, DepyfError>;
+
+    /// Convenience: plan + lower in one step.
+    fn compile(&self, req: &CompileRequest) -> Result<Rc<dyn CompiledModule>, DepyfError> {
+        let plan = self.plan(req)?;
+        self.lower(req, &plan)
+    }
 }
 
 /// Build an eager-executing [`CompiledGraphFn`] with an explicit
@@ -64,14 +293,8 @@ pub trait Backend {
 /// liveness, reusable arena) is computed here, once per compile, not per
 /// call — see [`eager::ExecPlan`].
 pub fn eager_graph_fn(name: &str, graph: Rc<Graph>, backend_name: String) -> CompiledGraphFn {
-    let plan = eager::ExecPlan::new(Rc::clone(&graph));
-    CompiledGraphFn {
-        name: name.to_string(),
-        graph,
-        backend_name,
-        executor: Box::new(move |inputs| plan.run(inputs)),
-        calls: std::cell::Cell::new(0),
-    }
+    let module: Rc<dyn CompiledModule> = Rc::new(eager::EagerModule::with_name(Rc::clone(&graph), backend_name));
+    CompiledGraphFn::from_module(name, graph, module)
 }
 
 /// Node-by-node CPU reference execution.
@@ -82,8 +305,12 @@ impl Backend for EagerBackend {
         "eager"
     }
 
-    fn compile(&self, name: &str, graph: Rc<Graph>, _ctx: &CompileCtx) -> Result<CompiledGraphFn, DepyfError> {
-        Ok(eager_graph_fn(name, graph, "eager".into()))
+    fn plan(&self, req: &CompileRequest) -> Result<CompilePlan, DepyfError> {
+        Ok(CompilePlan::monolithic("eager", req, "eager"))
+    }
+
+    fn lower(&self, req: &CompileRequest, _plan: &CompilePlan) -> Result<Rc<dyn CompiledModule>, DepyfError> {
+        Ok(Rc::new(eager::EagerModule::new(Rc::clone(&req.graph))))
     }
 }
 
@@ -96,15 +323,19 @@ impl Backend for XlaBackend {
         "xla"
     }
 
-    fn requires_runtime(&self) -> bool {
-        true
+    fn capabilities(&self) -> Capabilities {
+        Capabilities::REQUIRES_RUNTIME
     }
 
-    fn compile(&self, name: &str, graph: Rc<Graph>, ctx: &CompileCtx) -> Result<CompiledGraphFn, DepyfError> {
-        let rt = ctx.runtime.as_ref().ok_or_else(|| {
+    fn plan(&self, req: &CompileRequest) -> Result<CompilePlan, DepyfError> {
+        Ok(CompilePlan::monolithic("xla", req, "xla"))
+    }
+
+    fn lower(&self, req: &CompileRequest, _plan: &CompilePlan) -> Result<Rc<dyn CompiledModule>, DepyfError> {
+        let rt = req.runtime.as_ref().ok_or_else(|| {
             DepyfError::Backend("xla backend requires a PJRT runtime (SessionBuilder::runtime)".into())
         })?;
-        xla::compile(name, &graph, rt)
+        Ok(Rc::new(xla::compile_module(&req.name, &req.graph, rt)?))
     }
 }
 
@@ -120,24 +351,27 @@ pub struct PolicyCompiled {
     pub fallback_reason: Option<DepyfError>,
 }
 
-/// Compile through `backend`, applying `ctx.fallback` on failure — the
-/// single implementation of the fallback policy.
+/// Drive the whole pipeline (`plan` → `lower`) through `backend`, applying
+/// `req.fallback` on failure — the single implementation of the fallback
+/// policy.
 ///
 /// Under [`FallbackPolicy::Eager`] this never fails: the returned fn
 /// executes eagerly, the degrade reason is returned in `fallback_reason`
 /// and also recorded in `backend_name` (`"eager (xla fallback: ...)"`).
-pub fn compile_with_policy(
-    backend: &dyn Backend,
-    name: &str,
-    graph: Rc<Graph>,
-    ctx: &CompileCtx,
-) -> Result<PolicyCompiled, DepyfError> {
-    match backend.compile(name, Rc::clone(&graph), ctx) {
-        Ok(f) => Ok(PolicyCompiled { f, fallback_reason: None }),
-        Err(e) => match ctx.fallback {
+pub fn compile_with_policy(backend: &dyn Backend, req: &CompileRequest) -> Result<PolicyCompiled, DepyfError> {
+    match backend.compile(req) {
+        Ok(module) => Ok(PolicyCompiled {
+            f: CompiledGraphFn::from_module(&req.name, Rc::clone(&req.graph), module),
+            fallback_reason: None,
+        }),
+        Err(e) => match req.fallback {
             FallbackPolicy::Error => Err(e),
             FallbackPolicy::Eager => {
-                let f = eager_graph_fn(name, graph, format!("eager ({} fallback: {})", backend.name(), e));
+                let f = eager_graph_fn(
+                    &req.name,
+                    Rc::clone(&req.graph),
+                    format!("eager ({} fallback: {})", backend.name(), e),
+                );
                 Ok(PolicyCompiled { f, fallback_reason: Some(e) })
             }
         },
@@ -152,6 +386,8 @@ fn builtin_backends() -> HashMap<String, Rc<dyn Backend>> {
     let mut m: HashMap<String, Rc<dyn Backend>> = HashMap::new();
     m.insert("eager".into(), Rc::new(EagerBackend));
     m.insert("xla".into(), Rc::new(XlaBackend));
+    m.insert("sharded".into(), Rc::new(ShardedBackend::new()));
+    m.insert("batched".into(), Rc::new(BatchedBackend::new()));
     m
 }
 
@@ -165,8 +401,8 @@ pub fn register_backend(backend: Rc<dyn Backend>) {
     });
 }
 
-/// Look up a registered backend by name (`"eager"` and `"xla"` are
-/// pre-registered).
+/// Look up a registered backend by name (`"eager"`, `"xla"`, `"sharded"`
+/// and `"batched"` are pre-registered).
 pub fn lookup_backend(name: &str) -> Option<Rc<dyn Backend>> {
     REGISTRY.with(|r| r.borrow().get(name).cloned())
 }
@@ -196,11 +432,37 @@ mod tests {
 
     #[test]
     fn builtins_are_registered() {
-        assert!(lookup_backend("eager").is_some());
-        assert!(lookup_backend("xla").is_some());
+        for name in ["eager", "xla", "sharded", "batched"] {
+            assert!(lookup_backend(name).is_some(), "{} missing", name);
+        }
         assert!(lookup_backend("missing").is_none());
         let names = backend_names();
-        assert!(names.contains(&"eager".to_string()) && names.contains(&"xla".to_string()));
+        assert!(names.contains(&"sharded".to_string()) && names.contains(&"batched".to_string()));
+    }
+
+    #[test]
+    fn capability_bitset_semantics() {
+        let caps = Capabilities::PARTITION | Capabilities::USES_RUNTIME;
+        assert!(caps.contains(Capabilities::PARTITION));
+        assert!(!caps.contains(Capabilities::DYNAMIC_BATCH));
+        assert_eq!(caps.missing(Capabilities::PARTITION), Capabilities::NONE);
+        assert_eq!(
+            caps.missing(Capabilities::DYNAMIC_BATCH | Capabilities::PARTITION),
+            Capabilities::DYNAMIC_BATCH
+        );
+        assert_eq!(format!("{}", Capabilities::DYNAMIC_BATCH), "dynamic_batch");
+        assert_eq!(format!("{}", Capabilities::NONE), "none");
+        assert!(XlaBackend.requires_runtime());
+        assert!(!EagerBackend.requires_runtime());
+    }
+
+    #[test]
+    fn request_derives_specs_and_cache_key() {
+        let g = relu_graph();
+        let req = CompileRequest::new("g", Rc::clone(&g));
+        assert_eq!(req.cache_key, g.content_hash());
+        assert_eq!(req.input_specs, vec![InputSpec { name: "x".into(), shape: vec![2] }]);
+        assert!(req.guards.is_empty() && req.runtime.is_none());
     }
 
     #[test]
@@ -210,37 +472,42 @@ mod tests {
             fn name(&self) -> &str {
                 "doubler-test"
             }
-            fn compile(
+            fn plan(&self, req: &CompileRequest) -> Result<CompilePlan, DepyfError> {
+                Ok(CompilePlan::monolithic("doubler-test", req, "eager"))
+            }
+            fn lower(
                 &self,
-                name: &str,
-                graph: Rc<Graph>,
-                _ctx: &CompileCtx,
-            ) -> Result<CompiledGraphFn, DepyfError> {
-                Ok(eager_graph_fn(name, graph, "doubler-test".into()))
+                req: &CompileRequest,
+                _plan: &CompilePlan,
+            ) -> Result<Rc<dyn CompiledModule>, DepyfError> {
+                Ok(Rc::new(eager::EagerModule::with_name(Rc::clone(&req.graph), "doubler-test".into())))
             }
         }
         register_backend(Rc::new(Doubler));
         let b = lookup_backend("doubler-test").expect("registered");
         assert_eq!(b.name(), "doubler-test");
         assert!(!b.requires_runtime());
-        let f = b.compile("g", relu_graph(), &CompileCtx::default()).unwrap();
-        assert_eq!(f.backend_name, "doubler-test");
-        let out = f.call(&[Rc::new(Tensor::new(vec![2], vec![-1.0, 2.0]))]).unwrap();
+        let req = CompileRequest::new("g", relu_graph());
+        let plan = b.plan(&req).unwrap();
+        assert_eq!(plan.partitions.len(), 1);
+        let module = b.lower(&req, &plan).unwrap();
+        assert_eq!(module.backend_name(), "doubler-test");
+        let out = module.call(&[Rc::new(Tensor::new(vec![2], vec![-1.0, 2.0]))]).unwrap();
         assert_eq!(out[0].data(), &[0.0, 2.0]);
     }
 
     #[test]
     fn xla_without_runtime_errors_under_error_policy() {
-        let ctx = CompileCtx { runtime: None, fallback: FallbackPolicy::Error };
-        let err = compile_with_policy(&XlaBackend, "g", relu_graph(), &ctx).unwrap_err();
+        let req = CompileRequest::new("g", relu_graph()).with_fallback(FallbackPolicy::Error);
+        let err = compile_with_policy(&XlaBackend, &req).unwrap_err();
         assert_eq!(err.layer(), "backend");
         assert!(err.to_string().contains("runtime"), "{}", err);
     }
 
     #[test]
     fn xla_without_runtime_degrades_under_eager_policy() {
-        let ctx = CompileCtx { runtime: None, fallback: FallbackPolicy::Eager };
-        let pc = compile_with_policy(&XlaBackend, "g", relu_graph(), &ctx).unwrap();
+        let req = CompileRequest::new("g", relu_graph());
+        let pc = compile_with_policy(&XlaBackend, &req).unwrap();
         assert!(pc.fallback_reason.is_some(), "degrade must be signalled explicitly");
         assert!(pc.f.backend_name.starts_with("eager (xla fallback:"), "{}", pc.f.backend_name);
         let out = pc.f.call(&[Rc::new(Tensor::new(vec![2], vec![-3.0, 3.0]))]).unwrap();
@@ -254,18 +521,30 @@ mod tests {
             fn name(&self) -> &str {
                 "tagger"
             }
-            fn compile(
+            fn plan(&self, req: &CompileRequest) -> Result<CompilePlan, DepyfError> {
+                Ok(CompilePlan::monolithic("tagger", req, "eager"))
+            }
+            fn lower(
                 &self,
-                name: &str,
-                graph: Rc<Graph>,
-                _ctx: &CompileCtx,
-            ) -> Result<CompiledGraphFn, DepyfError> {
-                Ok(eager_graph_fn(name, graph, "tagger-v2".into()))
+                req: &CompileRequest,
+                _plan: &CompilePlan,
+            ) -> Result<Rc<dyn CompiledModule>, DepyfError> {
+                Ok(Rc::new(eager::EagerModule::with_name(Rc::clone(&req.graph), "tagger-v2".into())))
             }
         }
-        let pc = compile_with_policy(&Tagger, "g", relu_graph(), &CompileCtx::default()).unwrap();
+        let pc = compile_with_policy(&Tagger, &CompileRequest::new("g", relu_graph())).unwrap();
         // A custom backend_name differing from name() is NOT a fallback.
         assert!(pc.fallback_reason.is_none());
         assert_eq!(pc.f.backend_name, "tagger-v2");
+    }
+
+    #[test]
+    fn fn_module_wraps_closures() {
+        let m = module_from_fn("custom", |inputs| Ok(vec![(*inputs[0]).clone()]));
+        assert_eq!(m.backend_name(), "custom");
+        assert!(m.artifacts().is_empty());
+        assert_eq!(m.stats().partitions, 1);
+        let out = m.call(&[Rc::new(Tensor::scalar(5.0))]).unwrap();
+        assert_eq!(out[0].item(), 5.0);
     }
 }

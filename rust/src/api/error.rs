@@ -9,6 +9,8 @@ use std::fmt;
 
 use crate::decompiler::DecompileError;
 use crate::pylang::CompileError;
+use crate::tensor::TensorError;
+use crate::value::ValueError;
 use crate::vm::VmError;
 
 /// The crate-wide error type. Variants name the layer that failed.
@@ -24,6 +26,12 @@ pub enum DepyfError {
     Vm(VmError),
     /// A graph backend failed to compile or execute a captured graph.
     Backend(String),
+    /// A typed tensor-library failure (shape/axis/index) surfaced through
+    /// a backend executor — match on [`TensorError::kind`] to distinguish
+    /// shape errors from data-range errors without string sniffing.
+    Tensor(TensorError),
+    /// A typed value-model failure (conversions, truthiness, hashing).
+    Value(ValueError),
     /// PJRT runtime failures (client startup, HLO compile, execution).
     Runtime(String),
     /// Bytecode decompilation failures.
@@ -46,6 +54,8 @@ impl DepyfError {
             DepyfError::Compile(_) => "compile",
             DepyfError::Vm(_) => "vm",
             DepyfError::Backend(_) => "backend",
+            DepyfError::Tensor(_) => "tensor",
+            DepyfError::Value(_) => "value",
             DepyfError::Runtime(_) => "runtime",
             DepyfError::Decompile(_) => "decompile",
             DepyfError::Builder(_) => "builder",
@@ -57,6 +67,8 @@ impl fmt::Display for DepyfError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
             DepyfError::Vm(e) => write!(f, "vm error: {}", e),
+            DepyfError::Tensor(e) => write!(f, "tensor error: {}", e),
+            DepyfError::Value(e) => write!(f, "value error: {}", e),
             DepyfError::Io(m)
             | DepyfError::Parse(m)
             | DepyfError::Compile(m)
@@ -79,6 +91,18 @@ impl From<std::io::Error> for DepyfError {
 impl From<VmError> for DepyfError {
     fn from(e: VmError) -> DepyfError {
         DepyfError::Vm(e)
+    }
+}
+
+impl From<TensorError> for DepyfError {
+    fn from(e: TensorError) -> DepyfError {
+        DepyfError::Tensor(e)
+    }
+}
+
+impl From<ValueError> for DepyfError {
+    fn from(e: ValueError) -> DepyfError {
+        DepyfError::Value(e)
     }
 }
 
@@ -124,6 +148,19 @@ mod tests {
         let d = DepyfError::from(e);
         assert_eq!(d.layer(), "io");
         assert!(d.to_string().contains("gone"));
+    }
+
+    #[test]
+    fn typed_tensor_and_value_variants() {
+        let t = DepyfError::from(crate::tensor::TensorError::Shape("cannot broadcast".into()));
+        assert_eq!(t.layer(), "tensor");
+        match &t {
+            DepyfError::Tensor(e) => assert_eq!(e.kind(), "shape"),
+            other => panic!("expected Tensor, got {:?}", other),
+        }
+        let v = DepyfError::from(crate::value::ValueError::AmbiguousTruth);
+        assert_eq!(v.layer(), "value");
+        assert!(v.to_string().contains("ambiguous"), "{}", v);
     }
 
     #[test]

@@ -1,26 +1,34 @@
 //! `depyf::api` — the unified public entry point.
 //!
-//! This layer packages the whole stack behind four small, typed surfaces:
+//! This layer packages the whole stack behind five small, typed surfaces:
 //!
 //! * [`Session`] / [`SessionBuilder`] — the paper's two context managers
 //!   (`prepare_debug`, `debug`) as one fluent builder:
-//!   `Session::builder().backend_named("xla").isa(IsaVersion::V311)
+//!   `Session::builder().backend_named("sharded").isa(IsaVersion::V311)
 //!   .dump_to(dir).trace(TraceMode::StepGraphs).build()?`.
-//! * [`Backend`] + [`register_backend`] — pluggable graph compilers with an
-//!   explicit [`FallbackPolicy`], mirroring `torch.compile(backend=...)`.
+//! * The staged backend pipeline — a typed [`CompileRequest`] (graph,
+//!   input specs, guard context, cache key, verbosity) flows through
+//!   [`Backend::plan`] (a declarative, dumpable [`CompilePlan`]:
+//!   partitions, padding/bucketing, per-partition targets) and
+//!   [`Backend::lower`] (an executable [`CompiledModule`] with
+//!   `artifacts()` and `stats()`). A [`Capabilities`] bitset lets the
+//!   registry, [`SessionBuilder`] and [`FallbackPolicy`] validate
+//!   configurations up front. Built-ins: `eager`, `xla`, `sharded`,
+//!   `batched`; [`register_backend`] plugs in custom compilers, mirroring
+//!   `torch.compile(backend=...)`.
 //! * [`Artifact`] / [`ArtifactKind`] — typed dump artifacts returned by
-//!   `finish()`, indexed by a machine-readable `manifest.json`.
+//!   `finish()`, indexed by a machine-readable `manifest.json` (compile
+//!   plans and per-partition HLO included).
 //! * [`DepyfError`] — the crate-wide structured error type; no public API
-//!   returns `Result<_, String>`.
-//!
-//! The older per-module entry points (`session::DebugSession`,
-//! `backend::compile_graph`) remain as thin deprecated shims over this
-//! module.
+//!   returns `Result<_, String>`, and tensor/value failures stay typed
+//!   ([`DepyfError::Tensor`] / [`DepyfError::Value`]) down to the op
+//!   library.
 
 mod artifact;
 mod backend;
 mod error;
 pub mod json;
+pub mod plan;
 mod session;
 
 pub use artifact::{
@@ -28,8 +36,10 @@ pub use artifact::{
     MANIFEST_SCHEMA_VERSION,
 };
 pub use backend::{
-    backend_names, compile_with_policy, eager_graph_fn, lookup_backend, register_backend, Backend,
-    CompileCtx, EagerBackend, FallbackPolicy, PolicyCompiled, XlaBackend,
+    backend_names, compile_with_policy, eager_graph_fn, lookup_backend, module_from_fn,
+    register_backend, Backend, Capabilities, CompileRequest, CompiledModule, EagerBackend,
+    FallbackPolicy, FnModule, InputSpec, ModuleArtifact, ModuleStats, PolicyCompiled, XlaBackend,
 };
 pub use error::DepyfError;
+pub use plan::{BatchPlan, CompilePlan, PartitionPlan, PLAN_SCHEMA_VERSION};
 pub use session::{Session, SessionBuilder, TraceMode};

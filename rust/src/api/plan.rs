@@ -1,0 +1,281 @@
+//! [`CompilePlan`] — the declarative output of [`crate::api::Backend::plan`].
+//!
+//! A plan says *what* a backend decided before anything is built: how the
+//! graph is partitioned (node ranges, per-partition target and cache key)
+//! and whether/how the dynamic leading dim is padded into a bucket. Plans
+//! render to JSON (`__plan_<graph>.json` dump artifacts, indexed in
+//! `manifest.json`) and parse back losslessly, so external tooling can
+//! inspect partitioning decisions the same way it inspects guards.
+
+use crate::api::json::{self, Json};
+
+use super::backend::CompileRequest;
+use super::error::DepyfError;
+
+/// Bumped whenever the plan JSON schema changes shape.
+pub const PLAN_SCHEMA_VERSION: u64 = 1;
+
+/// One partition of a captured graph: which op nodes it owns, which
+/// original-graph values it consumes/produces, and where it compiles to.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PartitionPlan {
+    pub index: usize,
+    /// Lowering target for this partition (`"xla"` or `"eager"`).
+    pub target: String,
+    /// Op node ids (in the original graph) executed by this partition.
+    pub nodes: Vec<usize>,
+    /// Original-graph node ids this partition reads (placeholders and
+    /// earlier partitions' outputs; replicated constants excluded).
+    pub inputs: Vec<usize>,
+    /// Original-graph node ids this partition produces for later
+    /// partitions or the final outputs.
+    pub outputs: Vec<usize>,
+    /// `content_hash` of the extracted partition subgraph — the compile
+    /// cache key this partition's executable is stored under.
+    pub cache_key: u64,
+}
+
+/// A padding/bucketing decision over the dynamic leading dim.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BatchPlan {
+    /// The padded axis (always 0 today — the leading dim).
+    pub dim: usize,
+    /// The captured (guard-pinned) batch size.
+    pub orig: usize,
+    /// The padded bucket size (next power of two ≥ `orig`); every guard
+    /// entry whose batch lands in the same bucket shares one executable.
+    pub bucket: usize,
+    /// Input positions (into `graph.inputs`) padded at call time.
+    pub padded_inputs: Vec<usize>,
+    /// Output positions sliced back to `orig` rows after execution.
+    pub sliced_outputs: Vec<usize>,
+}
+
+/// The declarative compile plan: what [`crate::api::Backend::lower`] will
+/// build, as data.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CompilePlan {
+    /// The backend that produced the plan.
+    pub backend: String,
+    /// The graph name the plan applies to.
+    pub graph: String,
+    /// The whole-graph content hash (the request's cache key).
+    pub cache_key: u64,
+    pub partitions: Vec<PartitionPlan>,
+    /// Present when the backend pads/buckets the leading dim.
+    pub batch: Option<BatchPlan>,
+}
+
+impl CompilePlan {
+    /// The trivial single-partition plan every monolithic backend uses:
+    /// all ops in one partition, lowered to `target`.
+    pub fn monolithic(backend: &str, req: &CompileRequest, target: &str) -> CompilePlan {
+        let g = &req.graph;
+        let nodes: Vec<usize> = g
+            .nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| matches!(n.kind, crate::graph::NodeKind::Op(..)))
+            .map(|(id, _)| id)
+            .collect();
+        CompilePlan {
+            backend: backend.to_string(),
+            graph: g.name.clone(),
+            cache_key: req.cache_key,
+            partitions: vec![PartitionPlan {
+                index: 0,
+                target: target.to_string(),
+                nodes,
+                inputs: g.inputs.clone(),
+                outputs: g.outputs.clone(),
+                cache_key: req.cache_key,
+            }],
+            batch: None,
+        }
+    }
+
+    /// Render the plan as a JSON document (the `__plan_*.json` artifact).
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n");
+        out.push_str(&format!("  \"schema_version\": {},\n", PLAN_SCHEMA_VERSION));
+        out.push_str(&format!("  \"backend\": \"{}\",\n", json::escape(&self.backend)));
+        out.push_str(&format!("  \"graph\": \"{}\",\n", json::escape(&self.graph)));
+        out.push_str(&format!("  \"cache_key\": \"{:016x}\",\n", self.cache_key));
+        out.push_str("  \"partitions\": [\n");
+        for (i, p) in self.partitions.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"index\": {}, \"target\": \"{}\", \"cache_key\": \"{:016x}\", \"nodes\": {}, \"inputs\": {}, \"outputs\": {}}}{}\n",
+                p.index,
+                json::escape(&p.target),
+                p.cache_key,
+                render_ids(&p.nodes),
+                render_ids(&p.inputs),
+                render_ids(&p.outputs),
+                if i + 1 < self.partitions.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("  ]");
+        if let Some(b) = &self.batch {
+            out.push_str(&format!(
+                ",\n  \"batch\": {{\"dim\": {}, \"orig\": {}, \"bucket\": {}, \"padded_inputs\": {}, \"sliced_outputs\": {}}}\n",
+                b.dim,
+                b.orig,
+                b.bucket,
+                render_ids(&b.padded_inputs),
+                render_ids(&b.sliced_outputs)
+            ));
+        } else {
+            out.push('\n');
+        }
+        out.push_str("}\n");
+        out
+    }
+
+    /// Parse a plan document (inverse of [`CompilePlan::to_json`]).
+    pub fn parse(text: &str) -> Result<CompilePlan, DepyfError> {
+        let doc = json::parse(text)?;
+        if let Some(Json::Num(v)) = doc.get("schema_version") {
+            if *v != PLAN_SCHEMA_VERSION as f64 {
+                return Err(DepyfError::Parse(format!(
+                    "unsupported plan schema_version {} (expected {})",
+                    v, PLAN_SCHEMA_VERSION
+                )));
+            }
+        }
+        let str_field = |item: &Json, key: &str| -> Result<String, DepyfError> {
+            item.get(key)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| DepyfError::Parse(format!("plan missing string \"{}\"", key)))
+        };
+        let num_field = |item: &Json, key: &str| -> Result<usize, DepyfError> {
+            item.get(key)
+                .and_then(Json::as_f64)
+                .map(|v| v as usize)
+                .ok_or_else(|| DepyfError::Parse(format!("plan missing number \"{}\"", key)))
+        };
+        let key_field = |item: &Json, key: &str| -> Result<u64, DepyfError> {
+            let s = str_field(item, key)?;
+            u64::from_str_radix(&s, 16)
+                .map_err(|e| DepyfError::Parse(format!("bad cache key '{}': {}", s, e)))
+        };
+        let ids_field = |item: &Json, key: &str| -> Result<Vec<usize>, DepyfError> {
+            let arr = item
+                .get(key)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| DepyfError::Parse(format!("plan missing array \"{}\"", key)))?;
+            arr.iter()
+                .map(|v| {
+                    v.as_f64().map(|n| n as usize).ok_or_else(|| {
+                        DepyfError::Parse(format!("plan array \"{}\" holds a non-numeric entry", key))
+                    })
+                })
+                .collect()
+        };
+        let parts = match doc.get("partitions") {
+            Some(Json::Arr(items)) => items,
+            _ => return Err(DepyfError::Parse("plan missing \"partitions\" array".into())),
+        };
+        let mut partitions = Vec::with_capacity(parts.len());
+        for item in parts {
+            partitions.push(PartitionPlan {
+                index: num_field(item, "index")?,
+                target: str_field(item, "target")?,
+                cache_key: key_field(item, "cache_key")?,
+                nodes: ids_field(item, "nodes")?,
+                inputs: ids_field(item, "inputs")?,
+                outputs: ids_field(item, "outputs")?,
+            });
+        }
+        let batch = match doc.get("batch") {
+            None | Some(Json::Null) => None,
+            Some(b) => Some(BatchPlan {
+                dim: num_field(b, "dim")?,
+                orig: num_field(b, "orig")?,
+                bucket: num_field(b, "bucket")?,
+                padded_inputs: ids_field(b, "padded_inputs")?,
+                sliced_outputs: ids_field(b, "sliced_outputs")?,
+            }),
+        };
+        Ok(CompilePlan {
+            backend: str_field(&doc, "backend")?,
+            graph: str_field(&doc, "graph")?,
+            cache_key: key_field(&doc, "cache_key")?,
+            partitions,
+            batch,
+        })
+    }
+}
+
+fn render_ids(ids: &[usize]) -> String {
+    let inner: Vec<String> = ids.iter().map(|i| i.to_string()).collect();
+    format!("[{}]", inner.join(", "))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CompilePlan {
+        CompilePlan {
+            backend: "sharded".into(),
+            graph: "__compiled_fn_1".into(),
+            cache_key: 0xDEAD_BEEF_0BAD_F00D,
+            partitions: vec![
+                PartitionPlan {
+                    index: 0,
+                    target: "xla".into(),
+                    nodes: vec![2, 3],
+                    inputs: vec![0, 1],
+                    outputs: vec![3],
+                    cache_key: 0x0123_4567_89AB_CDEF,
+                },
+                PartitionPlan {
+                    index: 1,
+                    target: "eager".into(),
+                    nodes: vec![4],
+                    inputs: vec![3],
+                    outputs: vec![4],
+                    cache_key: u64::MAX,
+                },
+            ],
+            batch: Some(BatchPlan {
+                dim: 0,
+                orig: 5,
+                bucket: 8,
+                padded_inputs: vec![0],
+                sliced_outputs: vec![0],
+            }),
+        }
+    }
+
+    #[test]
+    fn plan_json_round_trips() {
+        let plan = sample();
+        let text = plan.to_json();
+        let back = CompilePlan::parse(&text).unwrap();
+        assert_eq!(back, plan);
+        // u64 cache keys survive (they are hex strings, not f64 numbers).
+        assert_eq!(back.partitions[1].cache_key, u64::MAX);
+    }
+
+    #[test]
+    fn batchless_plan_round_trips() {
+        let mut plan = sample();
+        plan.batch = None;
+        let back = CompilePlan::parse(&plan.to_json()).unwrap();
+        assert_eq!(back, plan);
+    }
+
+    #[test]
+    fn parse_rejects_bad_documents() {
+        assert!(CompilePlan::parse("").is_err());
+        assert!(CompilePlan::parse("{}").is_err());
+        assert!(CompilePlan::parse("{\"schema_version\": 99, \"partitions\": []}").is_err());
+        let bad_key = sample().to_json().replace("deadbeef0badf00d", "not-hex");
+        assert!(CompilePlan::parse(&bad_key).is_err());
+        // Non-numeric node ids are a parse error, not a silent drop.
+        let bad_ids = sample().to_json().replace("\"nodes\": [2, 3]", "\"nodes\": [2, \"3\"]");
+        assert!(CompilePlan::parse(&bad_ids).is_err());
+    }
+}

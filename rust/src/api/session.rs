@@ -33,7 +33,7 @@ use crate::value::Value;
 use crate::vm::{Vm, VmError};
 
 use super::artifact::{write_manifest, Artifact, ArtifactKind};
-use super::backend::{backend_names, lookup_backend, Backend, EagerBackend, FallbackPolicy};
+use super::backend::{backend_names, lookup_backend, Backend, Capabilities, EagerBackend, FallbackPolicy};
 use super::error::DepyfError;
 
 /// How captured graphs execute inside the session.
@@ -114,6 +114,7 @@ pub struct SessionBuilder {
     runtime: Option<Rc<Runtime>>,
     trace: TraceMode,
     fallback: FallbackPolicy,
+    require: Capabilities,
 }
 
 impl Session {
@@ -129,6 +130,7 @@ impl Session {
             runtime: None,
             trace: TraceMode::Capture,
             fallback: FallbackPolicy::Eager,
+            require: Capabilities::NONE,
         }
     }
 
@@ -147,24 +149,55 @@ impl Session {
     }
 
     /// Write all dumps (`full_code.py`, `__compiled_fn_*.py`,
-    /// `__transformed_*.py`, disassembly, guards) plus a `metrics.json`
-    /// snapshot of the compiler counters and a `manifest.json` index, and
-    /// return the typed artifact list.
+    /// `__transformed_*.py`, disassembly, guards), every backend module's
+    /// artifacts (compile plans, per-partition HLO), a `metrics.json`
+    /// snapshot of the compiler counters (with per-module stats) and a
+    /// `manifest.json` index, and return the typed artifact list.
     pub fn finish(&self) -> Result<Vec<Artifact>, DepyfError> {
         dump_all(&self.dynamo, &self.dump)?;
+        // Backend-module artifacts: compile plans, per-partition/bucket
+        // HLO — whatever each CompiledModule wants on disk.
+        for f in self.dynamo.compiled() {
+            for art in f.module.artifacts() {
+                self.dump.write_refresh(art.kind, &art.name, &art.file, &art.content)?;
+            }
+        }
         // Per-session perf observability: cache hits/misses, guard
-        // checks/failures, compile_ns — so regressions show up in dumps.
+        // checks/failures, compile_ns, plus per-module backend stats — so
+        // regressions (and partition/bucket decisions) show up in dumps.
+        let modules_json = render_modules_json(&self.dynamo.compiled());
         self.dump.write_refresh(
             ArtifactKind::Metrics,
             "metrics",
             "metrics.json",
-            &self.dynamo.metrics.to_json(),
+            &self.dynamo.metrics.to_json_with(Some(("modules", &modules_json))),
         )?;
         let artifacts = self.dump.artifacts();
         write_manifest(self.dump.root(), &artifacts)?;
         let _ = &self.adapter;
         Ok(artifacts)
     }
+}
+
+/// Render the `"modules"` array for `metrics.json`: one entry per
+/// compiled graph with its backend, call count and module stats.
+fn render_modules_json(compiled: &[Rc<crate::graph::CompiledGraphFn>]) -> String {
+    let mut out = String::from("[\n");
+    for (i, f) in compiled.iter().enumerate() {
+        let stats = f.module.stats();
+        out.push_str(&format!(
+            "    {{\"name\": \"{}\", \"backend\": \"{}\", \"calls\": {}, \"partitions\": {}, \"bucket\": {}, \"cache_hits\": {}}}{}\n",
+            super::json::escape(&f.name),
+            super::json::escape(&f.backend_name),
+            f.calls.get(),
+            stats.partitions,
+            stats.bucket.map(|b| b.to_string()).unwrap_or_else(|| "null".into()),
+            stats.cache_hits,
+            if i + 1 < compiled.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ]");
+    out
 }
 
 impl SessionBuilder {
@@ -213,6 +246,16 @@ impl SessionBuilder {
         self
     }
 
+    /// Demand capabilities of the configured backend. Under
+    /// [`FallbackPolicy::Error`] a backend lacking any of them is rejected
+    /// at `build()` time — misconfiguration fails up front, not
+    /// mid-compile. (Under the default eager policy the fallback executor
+    /// absorbs whatever the backend cannot do, so the session builds.)
+    pub fn require(mut self, caps: Capabilities) -> SessionBuilder {
+        self.require = self.require | caps;
+        self
+    }
+
     /// Validate the configuration and wire up the session.
     pub fn build(self) -> Result<Session, DepyfError> {
         let dir = self
@@ -231,14 +274,24 @@ impl SessionBuilder {
         };
         // StepGraphs routes every graph through the traced eager executor,
         // so the backend is never consulted and needs no runtime.
+        let backend_consulted = self.trace != TraceMode::StepGraphs;
         if backend.requires_runtime()
             && self.runtime.is_none()
             && self.fallback == FallbackPolicy::Error
-            && self.trace != TraceMode::StepGraphs
+            && backend_consulted
         {
             return Err(DepyfError::Builder(format!(
                 "backend '{}' requires a runtime (SessionBuilder::runtime) under FallbackPolicy::Error",
                 backend.name()
+            )));
+        }
+        let missing = backend.capabilities().missing(self.require);
+        if !missing.is_empty() && self.fallback == FallbackPolicy::Error && backend_consulted {
+            return Err(DepyfError::Builder(format!(
+                "backend '{}' lacks required capabilities: {} (declared: {})",
+                backend.name(),
+                missing,
+                backend.capabilities()
             )));
         }
         let dump = DumpDir::create(&dir)?;

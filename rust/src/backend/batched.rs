@@ -1,0 +1,640 @@
+//! The `batched` backend: pads/buckets the dynamic leading dim so **one
+//! executable serves multiple guard entries**.
+//!
+//! Guard entries specialize on exact shapes, so a model called with batch
+//! sizes 5, 6, 7 and 8 normally compiles four executables. This backend
+//! runs a conservative *batch-safety analysis* over the captured graph: a
+//! node is `batched` when its leading dim equals the batch size **and**
+//! every op touching it is row-wise along that dim (elementwise chains,
+//! `[B,K] @ [K,N]` matmuls, per-row softmax/layernorm, axis≥1 reductions,
+//! embedding lookups). If the whole graph passes, inputs are padded with
+//! zero rows up to the next power-of-two bucket, the **padded** graph is
+//! compiled (its `content_hash` is the compile-cache key, so every guard
+//! entry in the same bucket reuses one executable — the PR 2 cache, per
+//! bucket), and batched outputs are sliced back to the true batch. Rows
+//! below the pad are bitwise identical to the unpadded execution. Graphs
+//! that fail the analysis compile exactly (no padding) — correctness is
+//! never traded for reuse.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use crate::api::{
+    ArtifactKind, Backend, Capabilities, CompilePlan, CompileRequest, CompiledModule, DepyfError,
+    ModuleArtifact, ModuleStats,
+};
+use crate::api::plan::BatchPlan;
+use crate::graph::{Graph, NodeKind, OpKind};
+use crate::tensor::Tensor;
+
+use super::eager::ExecPlan;
+use super::xla;
+
+/// Result of the batch-safety analysis: the batch size and, per node,
+/// whether its leading dim carries the batch.
+struct BatchInfo {
+    batch: usize,
+    flags: Vec<bool>,
+}
+
+/// Decide which nodes are batched along dim 0, or `None` when any op uses
+/// a batched value in a non-row-wise way (reductions over dim 0,
+/// transposes that move it, contractions against it...).
+fn analyze(g: &Graph) -> Option<BatchInfo> {
+    // The batch size: dim 0 of the first rank>=1 placeholder.
+    let batch = g.inputs.iter().find_map(|&id| match &g.nodes[id].kind {
+        NodeKind::Placeholder { .. } if !g.nodes[id].shape.is_empty() => Some(g.nodes[id].shape[0]),
+        _ => None,
+    })?;
+    if batch == 0 {
+        return None;
+    }
+    let mut flags = vec![false; g.nodes.len()];
+    for (id, node) in g.nodes.iter().enumerate() {
+        flags[id] = match &node.kind {
+            NodeKind::Placeholder { .. } => !node.shape.is_empty() && node.shape[0] == batch,
+            NodeKind::ConstScalar(_) | NodeKind::ConstTensor(_) => false,
+            NodeKind::Op(op, args) => {
+                let f = |i: usize| flags[args[i]];
+                let shape = |i: usize| g.nodes[args[i]].shape.as_slice();
+                let out = &node.shape;
+                match op {
+                    OpKind::Add
+                    | OpKind::Sub
+                    | OpKind::Mul
+                    | OpKind::Div
+                    | OpKind::Pow
+                    | OpKind::Maximum
+                    | OpKind::Minimum => {
+                        let out_b = f(0) || f(1);
+                        if out_b {
+                            for i in 0..2 {
+                                if f(i) {
+                                    // A batched operand must align rank-for-rank
+                                    // so its dim 0 is the output's dim 0.
+                                    if shape(i).len() != out.len() {
+                                        return None;
+                                    }
+                                } else if shape(i).len() == out.len() && shape(i)[0] != 1 {
+                                    // Full-rank unbatched operand spanning the
+                                    // batch dim: padding would misalign it.
+                                    return None;
+                                }
+                            }
+                        }
+                        out_b
+                    }
+                    OpKind::Neg
+                    | OpKind::Relu
+                    | OpKind::Gelu
+                    | OpKind::Tanh
+                    | OpKind::Sigmoid
+                    | OpKind::Exp
+                    | OpKind::Log
+                    | OpKind::Sqrt
+                    | OpKind::Abs => f(0),
+                    OpKind::Softmax => {
+                        if f(0) && shape(0).len() < 2 {
+                            return None; // softmax over the batch dim itself
+                        }
+                        f(0)
+                    }
+                    OpKind::MatMul => match (f(0), f(1)) {
+                        (false, false) => false,
+                        // [B,..,K] @ [K,N]: rows of the result come from rows
+                        // of the batched lhs.
+                        (true, false) => {
+                            if shape(1).len() == 2 {
+                                true
+                            } else {
+                                return None;
+                            }
+                        }
+                        // Batched rhs: its dim 0 is contracted (rank 2) or a
+                        // batch dim that must match an unbatched lhs — unsafe.
+                        (false, true) => return None,
+                        // Both batched: dim 0 must be a shared batch dim.
+                        (true, true) => {
+                            if shape(0).len() == shape(1).len() && shape(0).len() >= 3 {
+                                true
+                            } else {
+                                return None;
+                            }
+                        }
+                    },
+                    OpKind::Transpose => {
+                        if f(0) {
+                            if shape(0).len() >= 3 {
+                                true
+                            } else {
+                                return None; // rank-2 transpose moves dim 0
+                            }
+                        } else {
+                            false
+                        }
+                    }
+                    OpKind::Permute(perm) => {
+                        if f(0) {
+                            if perm.first() == Some(&0) {
+                                true
+                            } else {
+                                return None;
+                            }
+                        } else {
+                            false
+                        }
+                    }
+                    OpKind::Reshape(spec) => {
+                        if f(0) {
+                            // Row-preserving reshape only: [-1, rest] where
+                            // rest covers exactly one input row.
+                            let row: usize = shape(0)[1..].iter().product();
+                            let rest: i64 = spec[1..].iter().product();
+                            if spec.first() == Some(&-1)
+                                && spec[1..].iter().all(|&d| d > 0)
+                                && rest == row as i64
+                            {
+                                true
+                            } else {
+                                return None;
+                            }
+                        } else {
+                            false
+                        }
+                    }
+                    OpKind::Sum(ax) | OpKind::Mean(ax) | OpKind::Max(ax) | OpKind::Min(ax) => {
+                        if f(0) {
+                            match ax {
+                                Some(a) if *a >= 1 => true,
+                                _ => return None, // reduces over/through dim 0
+                            }
+                        } else {
+                            false
+                        }
+                    }
+                    OpKind::LayerNorm => {
+                        if f(1) || f(2) {
+                            return None; // padded params would be wrong
+                        }
+                        if f(0) {
+                            if shape(0).len() >= 2 {
+                                true
+                            } else {
+                                return None;
+                            }
+                        } else {
+                            false
+                        }
+                    }
+                    OpKind::Embedding => {
+                        if f(0) {
+                            return None; // padded table rows change lookups
+                        }
+                        f(1) // padded ids are 0 → valid rows, sliced away
+                    }
+                    OpKind::CrossEntropy => {
+                        if f(0) || f(1) {
+                            return None; // mean over rows mixes padding in
+                        }
+                        false
+                    }
+                }
+            }
+        };
+    }
+    if g.inputs.iter().any(|&id| flags[id]) {
+        Some(BatchInfo { batch, flags })
+    } else {
+        None
+    }
+}
+
+/// Rebuild the graph with every batched node's leading dim padded to
+/// `bucket`. Node ids are preserved 1:1. Fails (→ exact compile) if shape
+/// inference disagrees with the analysis.
+fn pad_graph(g: &Graph, info: &BatchInfo, bucket: usize) -> Option<Graph> {
+    let mut padded = Graph::new(&g.name);
+    for (id, node) in g.nodes.iter().enumerate() {
+        let expect: Vec<usize> = if info.flags[id] {
+            let mut s = node.shape.clone();
+            s[0] = bucket;
+            s
+        } else {
+            node.shape.clone()
+        };
+        let new_id = match &node.kind {
+            NodeKind::Placeholder { name } => padded.placeholder(name, &expect),
+            NodeKind::ConstScalar(v) => padded.const_scalar(*v),
+            NodeKind::ConstTensor(t) => padded.const_tensor(t.clone()),
+            NodeKind::Op(op, args) => padded.add_op(op.clone(), args.clone()).ok()?,
+        };
+        debug_assert_eq!(new_id, id);
+        if padded.nodes[new_id].shape != expect {
+            return None;
+        }
+    }
+    padded.set_outputs(g.outputs.clone());
+    Some(padded)
+}
+
+fn bucket_of(batch: usize) -> usize {
+    batch.next_power_of_two()
+}
+
+/// Rebuild the padded graph from a plan's [`BatchPlan`] alone (no
+/// re-analysis): the flagged input placeholders get the bucket dim and
+/// every op shape re-infers from there. `lower` uses this so the plan —
+/// not a second analysis pass — is the source of truth.
+fn pad_graph_from_plan(g: &Graph, b: &BatchPlan) -> Result<Graph, DepyfError> {
+    let padded_ids: Vec<usize> = b.padded_inputs.iter().map(|&pos| g.inputs[pos]).collect();
+    let mut padded = Graph::new(&g.name);
+    for (id, node) in g.nodes.iter().enumerate() {
+        let new_id = match &node.kind {
+            NodeKind::Placeholder { name } => {
+                let mut shape = node.shape.clone();
+                if padded_ids.contains(&id) {
+                    shape[b.dim] = b.bucket;
+                }
+                padded.placeholder(name, &shape)
+            }
+            NodeKind::ConstScalar(v) => padded.const_scalar(*v),
+            NodeKind::ConstTensor(t) => padded.const_tensor(t.clone()),
+            NodeKind::Op(op, args) => padded.add_op(op.clone(), args.clone()).map_err(|e| {
+                DepyfError::Backend(format!("batched: padded graph no longer infers: {}", e))
+            })?,
+        };
+        debug_assert_eq!(new_id, id);
+    }
+    padded.set_outputs(g.outputs.clone());
+    Ok(padded)
+}
+
+fn pad_rows(t: &Tensor, bucket: usize) -> Tensor {
+    let mut shape = t.shape().to_vec();
+    let row: usize = shape[1..].iter().product::<usize>().max(1);
+    let mut data = t.data().to_vec();
+    data.resize(bucket * row, 0.0);
+    shape[0] = bucket;
+    Tensor::new(shape, data)
+}
+
+fn slice_rows(t: &Tensor, orig: usize) -> Tensor {
+    let mut shape = t.shape().to_vec();
+    let row: usize = shape[1..].iter().product::<usize>().max(1);
+    let data = t.data()[..orig * row].to_vec();
+    shape[0] = orig;
+    Tensor::new(shape, data)
+}
+
+/// The `batched` backend. Holds a per-bucket cache of eager execution
+/// plans (the PJRT path reuses the runtime's own content-hash cache).
+pub struct BatchedBackend {
+    eager_plans: RefCell<HashMap<u64, Rc<ExecPlan>>>,
+}
+
+impl Default for BatchedBackend {
+    fn default() -> Self {
+        BatchedBackend::new()
+    }
+}
+
+impl BatchedBackend {
+    pub fn new() -> BatchedBackend {
+        BatchedBackend { eager_plans: RefCell::new(HashMap::new()) }
+    }
+}
+
+impl Backend for BatchedBackend {
+    fn name(&self) -> &str {
+        "batched"
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        Capabilities::DYNAMIC_BATCH | Capabilities::USES_RUNTIME
+    }
+
+    fn plan(&self, req: &CompileRequest) -> Result<CompilePlan, DepyfError> {
+        let target = if req.runtime.is_some() { "xla" } else { "eager" };
+        let padded = analyze(&req.graph).and_then(|info| {
+            let bucket = bucket_of(info.batch);
+            pad_graph(&req.graph, &info, bucket).map(|g| (info, bucket, g))
+        });
+        let Some((info, bucket, padded)) = padded else {
+            // Not batch-safe: compile the exact shapes, no padding.
+            return Ok(CompilePlan::monolithic("batched", req, target));
+        };
+        let mut plan = CompilePlan::monolithic("batched", req, target);
+        plan.partitions[0].cache_key = padded.content_hash();
+        plan.batch = Some(BatchPlan {
+            dim: 0,
+            orig: info.batch,
+            bucket,
+            padded_inputs: (0..req.graph.inputs.len())
+                .filter(|&i| info.flags[req.graph.inputs[i]])
+                .collect(),
+            sliced_outputs: (0..req.graph.outputs.len())
+                .filter(|&i| info.flags[req.graph.outputs[i]])
+                .collect(),
+        });
+        Ok(plan)
+    }
+
+    fn lower(&self, req: &CompileRequest, plan: &CompilePlan) -> Result<Rc<dyn CompiledModule>, DepyfError> {
+        let target = plan.partitions.first().map(|p| p.target.as_str()).unwrap_or("eager");
+        let (exec_graph, batch) = match &plan.batch {
+            Some(b) => (Rc::new(pad_graph_from_plan(&req.graph, b)?), Some(b.clone())),
+            None => (Rc::clone(&req.graph), None),
+        };
+        let mut cache_hits = 0u64;
+        let inner: Rc<dyn CompiledModule> = match target {
+            "xla" => {
+                let rt = req.runtime.as_ref().ok_or_else(|| {
+                    DepyfError::Backend("batched: plan targets xla but no runtime was provided".into())
+                })?;
+                let inner_name = match &batch {
+                    Some(b) => format!("{}@b{}", req.name, b.bucket),
+                    None => req.name.clone(),
+                };
+                let module = xla::compile_module(&inner_name, &exec_graph, rt)?;
+                cache_hits += module.cache_hit as u64;
+                Rc::new(module)
+            }
+            _ => {
+                let key = exec_graph.content_hash();
+                let cached = self.eager_plans.borrow().get(&key).cloned();
+                let plan_rc = match cached {
+                    Some(p) => {
+                        cache_hits += 1;
+                        p
+                    }
+                    None => {
+                        let p = Rc::new(ExecPlan::new(Rc::clone(&exec_graph)));
+                        self.eager_plans.borrow_mut().insert(key, Rc::clone(&p));
+                        p
+                    }
+                };
+                Rc::new(SharedPlanModule { plan: plan_rc })
+            }
+        };
+        Ok(Rc::new(BatchedModule {
+            graph: Rc::clone(&req.graph),
+            inner,
+            batch,
+            plan_json: plan.to_json(),
+            name: req.name.clone(),
+            cache_hits,
+        }))
+    }
+}
+
+/// An eager [`ExecPlan`] shared (via `Rc`) across every guard entry whose
+/// padded graph lands in the same bucket.
+struct SharedPlanModule {
+    plan: Rc<ExecPlan>,
+}
+
+impl CompiledModule for SharedPlanModule {
+    fn call(&self, inputs: &[Rc<Tensor>]) -> Result<Vec<Tensor>, DepyfError> {
+        self.plan.run(inputs)
+    }
+
+    fn backend_name(&self) -> &str {
+        "eager"
+    }
+}
+
+/// The lowered batched module: pad flagged inputs to the bucket, run the
+/// shared inner executable, slice flagged outputs back.
+pub struct BatchedModule {
+    graph: Rc<Graph>,
+    inner: Rc<dyn CompiledModule>,
+    batch: Option<BatchPlan>,
+    plan_json: String,
+    name: String,
+    cache_hits: u64,
+}
+
+impl CompiledModule for BatchedModule {
+    fn call(&self, inputs: &[Rc<Tensor>]) -> Result<Vec<Tensor>, DepyfError> {
+        self.graph.check_inputs(inputs)?;
+        let Some(b) = &self.batch else {
+            return self.inner.call(inputs);
+        };
+        // Already at the bucket size (power-of-two batch): padding and
+        // slicing would copy every flagged tensor to produce identical
+        // data — the inner executable takes the inputs as-is.
+        if b.orig == b.bucket {
+            return self.inner.call(inputs);
+        }
+        let padded: Vec<Rc<Tensor>> = inputs
+            .iter()
+            .enumerate()
+            .map(|(i, t)| {
+                if b.padded_inputs.contains(&i) {
+                    Rc::new(pad_rows(t, b.bucket))
+                } else {
+                    Rc::clone(t)
+                }
+            })
+            .collect();
+        let outs = self.inner.call(&padded)?;
+        Ok(outs
+            .into_iter()
+            .enumerate()
+            .map(|(i, t)| if b.sliced_outputs.contains(&i) { slice_rows(&t, b.orig) } else { t })
+            .collect())
+    }
+
+    fn backend_name(&self) -> &str {
+        "batched"
+    }
+
+    fn artifacts(&self) -> Vec<ModuleArtifact> {
+        let mut arts = vec![ModuleArtifact {
+            kind: ArtifactKind::Plan,
+            name: self.name.clone(),
+            file: format!("__plan_{}.json", super::sanitize(&self.name)),
+            content: self.plan_json.clone(),
+        }];
+        arts.extend(self.inner.artifacts());
+        arts
+    }
+
+    fn stats(&self) -> ModuleStats {
+        ModuleStats {
+            partitions: 1,
+            bucket: self.batch.as_ref().map(|b| b.bucket as u64),
+            cache_hits: self.cache_hits,
+        }
+    }
+}
+
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::eager;
+    use crate::graph::OpKind;
+    use crate::tensor::Rng;
+
+    /// (x @ W + b).relu().softmax(): batch-safe along dim 0.
+    fn mlp(batch: usize, d: usize) -> Graph {
+        let mut g = Graph::new("bm");
+        let x = g.placeholder("x", &[batch, d]);
+        let w = g.placeholder("w", &[d, d]);
+        let bias = g.placeholder("b", &[d]);
+        let h = g.add_op(OpKind::MatMul, vec![x, w]).unwrap();
+        let hb = g.add_op(OpKind::Add, vec![h, bias]).unwrap();
+        let r = g.add_op(OpKind::Relu, vec![hb]).unwrap();
+        let sm = g.add_op(OpKind::Softmax, vec![r]).unwrap();
+        g.set_outputs(vec![sm]);
+        g
+    }
+
+    fn rand_inputs(g: &Graph, seed: u64) -> Vec<Rc<Tensor>> {
+        let mut rng = Rng::new(seed);
+        g.input_shapes().into_iter().map(|(_, s)| Rc::new(Tensor::randn(&s, &mut rng))).collect()
+    }
+
+    #[test]
+    fn analysis_flags_batch_rows_only() {
+        let g = mlp(5, 6);
+        let info = analyze(&g).expect("mlp is batch-safe");
+        assert_eq!(info.batch, 5);
+        // x flagged; w, bias not.
+        assert!(info.flags[g.inputs[0]]);
+        assert!(!info.flags[g.inputs[1]] && !info.flags[g.inputs[2]]);
+        // Every op output is batched.
+        assert!(info.flags[*g.outputs.first().unwrap()]);
+    }
+
+    #[test]
+    fn analysis_rejects_row_mixing_ops() {
+        // Sum over the batch dim.
+        let mut g = Graph::new("r0");
+        let x = g.placeholder("x", &[5, 3]);
+        let s = g.add_op(OpKind::Sum(Some(0)), vec![x]).unwrap();
+        g.set_outputs(vec![s]);
+        assert!(analyze(&g).is_none());
+        // Full reduce.
+        let mut g = Graph::new("r1");
+        let x = g.placeholder("x", &[5, 3]);
+        let s = g.add_op(OpKind::Sum(None), vec![x]).unwrap();
+        g.set_outputs(vec![s]);
+        assert!(analyze(&g).is_none());
+        // Rank-2 transpose moves the batch dim.
+        let mut g = Graph::new("t");
+        let x = g.placeholder("x", &[5, 3]);
+        let t = g.add_op(OpKind::Transpose, vec![x]).unwrap();
+        g.set_outputs(vec![t]);
+        assert!(analyze(&g).is_none());
+        // Contraction against the batch dim: x [5,3] @ y [3,2] where the
+        // *rhs* is the batched side.
+        let mut g = Graph::new("mm");
+        let w = g.placeholder("w", &[4, 5]);
+        let x = g.placeholder("x", &[5, 3]);
+        let m = g.add_op(OpKind::MatMul, vec![w, x]).unwrap();
+        g.set_outputs(vec![m]);
+        assert!(analyze(&g).is_none());
+    }
+
+    #[test]
+    fn padded_execution_is_bitwise_equal() {
+        for batch in [1usize, 3, 5, 6, 7, 8] {
+            let g = Rc::new(mlp(batch, 4));
+            let req = CompileRequest::new("bm", Rc::clone(&g));
+            let b = BatchedBackend::new();
+            let plan = b.plan(&req).unwrap();
+            assert_eq!(plan.batch.as_ref().unwrap().bucket, batch.next_power_of_two());
+            let module = b.lower(&req, &plan).unwrap();
+            let inputs = rand_inputs(&g, 7 + batch as u64);
+            let got = module.call(&inputs).unwrap();
+            let want = eager::execute(&g, &inputs).unwrap();
+            assert_eq!(got.len(), want.len());
+            for (a, bb) in got.iter().zip(want.iter()) {
+                assert_eq!(a.shape(), bb.shape(), "batch={}", batch);
+                assert_eq!(a.data(), bb.data(), "bitwise divergence at batch={}", batch);
+            }
+        }
+    }
+
+    #[test]
+    fn bucket_shares_one_executable_across_guard_entries() {
+        // Batches 5 and 6 land in bucket 8: the padded graphs are
+        // identical, so the second lower reuses the first's ExecPlan.
+        let backend = BatchedBackend::new();
+        for (i, batch) in [5usize, 6].into_iter().enumerate() {
+            let g = Rc::new(mlp(batch, 4));
+            let req = CompileRequest::new("bm", Rc::clone(&g));
+            let plan = backend.plan(&req).unwrap();
+            let module = backend.lower(&req, &plan).unwrap();
+            assert_eq!(module.stats().cache_hits, i as u64, "batch={}", batch);
+            assert_eq!(module.stats().bucket, Some(8));
+        }
+        assert_eq!(backend.eager_plans.borrow().len(), 1, "one plan serves the bucket");
+        // A different bucket (16) compiles separately.
+        let g = Rc::new(mlp(9, 4));
+        let req = CompileRequest::new("bm", Rc::clone(&g));
+        let plan = backend.plan(&req).unwrap();
+        backend.lower(&req, &plan).unwrap();
+        assert_eq!(backend.eager_plans.borrow().len(), 2);
+    }
+
+    #[test]
+    fn unsafe_graphs_fall_back_to_exact_compiles() {
+        let mut g = Graph::new("exact");
+        let x = g.placeholder("x", &[5, 3]);
+        let s = g.add_op(OpKind::Mean(None), vec![x]).unwrap();
+        g.set_outputs(vec![s]);
+        let g = Rc::new(g);
+        let req = CompileRequest::new("exact", Rc::clone(&g));
+        let backend = BatchedBackend::new();
+        let plan = backend.plan(&req).unwrap();
+        assert!(plan.batch.is_none(), "row-mixing graph must not be padded");
+        let module = backend.lower(&req, &plan).unwrap();
+        assert_eq!(module.stats().bucket, None);
+        let inputs = rand_inputs(&g, 3);
+        let got = module.call(&inputs).unwrap();
+        let want = eager::execute(&g, &inputs).unwrap();
+        assert_eq!(got[0].data(), want[0].data());
+    }
+
+    #[test]
+    fn plan_artifact_records_the_bucket_decision() {
+        let g = Rc::new(mlp(5, 4));
+        let req = CompileRequest::new("bm", Rc::clone(&g));
+        let backend = BatchedBackend::new();
+        let plan = backend.plan(&req).unwrap();
+        let module = backend.lower(&req, &plan).unwrap();
+        let arts = module.artifacts();
+        let plan_art = arts.iter().find(|a| a.kind == ArtifactKind::Plan).expect("plan artifact");
+        let parsed = CompilePlan::parse(&plan_art.content).unwrap();
+        assert_eq!(parsed, plan);
+        assert_eq!(parsed.batch.unwrap().bucket, 8);
+    }
+
+    #[test]
+    fn embedding_ids_are_batchable() {
+        let mut g = Graph::new("emb");
+        let table = g.placeholder("table", &[10, 4]);
+        let ids = g.placeholder("ids", &[3]);
+        let e = g.add_op(OpKind::Embedding, vec![table, ids]).unwrap();
+        g.set_outputs(vec![e]);
+        let g = Rc::new(g);
+        // ids is the *second* input, but it is the first rank>=1 input to
+        // define the batch? No: table comes first, so batch = 10 and only
+        // coincidental dims flag. The analysis must still be *correct*:
+        // compare against eager either way.
+        let req = CompileRequest::new("emb", Rc::clone(&g));
+        let backend = BatchedBackend::new();
+        let plan = backend.plan(&req).unwrap();
+        let module = backend.lower(&req, &plan).unwrap();
+        let mut rng = Rng::new(9);
+        let table_t = Rc::new(Tensor::randn(&[10, 4], &mut rng));
+        let ids_t = Rc::new(Tensor::new(vec![3], vec![0.0, 7.0, 2.0]));
+        let got = module.call(&[Rc::clone(&table_t), Rc::clone(&ids_t)]).unwrap();
+        let want = eager::execute(&g, &[table_t, ids_t]).unwrap();
+        assert_eq!(got[0].data(), want[0].data());
+    }
+}

@@ -12,19 +12,22 @@
 use std::cell::RefCell;
 use std::rc::Rc;
 
-use crate::api::DepyfError;
+use crate::api::{CompiledModule, DepyfError};
 use crate::graph::{Graph, NodeId, NodeKind, OpKind};
 use crate::tensor::{self, Tensor};
 
 /// Evaluate one op node against the environment. Shared by the planned and
-/// traced executors.
-fn eval_op(g: &Graph, id: usize, env: &[Option<Tensor>]) -> Result<Tensor, String> {
+/// traced executors. Tensor-library failures surface as typed
+/// [`DepyfError::Tensor`] (shape vs axis vs index), not strings.
+fn eval_op(g: &Graph, id: usize, env: &[Option<Tensor>]) -> Result<Tensor, DepyfError> {
     let (op, args) = match &g.nodes[id].kind {
         NodeKind::Op(op, args) => (op, args),
-        _ => return Err(format!("node {} is not an op", id)),
+        _ => return Err(DepyfError::Backend(format!("node {} is not an op", id))),
     };
-    let get = |i: usize| -> Result<&Tensor, String> {
-        env[args[i]].as_ref().ok_or_else(|| format!("node {} uses unevaluated node {}", id, args[i]))
+    let get = |i: usize| -> Result<&Tensor, DepyfError> {
+        env[args[i]]
+            .as_ref()
+            .ok_or_else(|| DepyfError::Backend(format!("node {} uses unevaluated node {}", id, args[i])))
     };
     Ok(match op {
         OpKind::Add => tensor::add(get(0)?, get(1)?)?,
@@ -60,25 +63,6 @@ fn eval_op(g: &Graph, id: usize, env: &[Option<Tensor>]) -> Result<Tensor, Strin
         OpKind::Embedding => tensor::embedding(get(0)?, get(1)?)?,
         OpKind::CrossEntropy => tensor::cross_entropy(get(0)?, get(1)?)?,
     })
-}
-
-fn check_inputs(g: &Graph, inputs: &[Rc<Tensor>]) -> Result<(), String> {
-    if inputs.len() != g.inputs.len() {
-        return Err(format!("graph {} expects {} inputs, got {}", g.name, g.inputs.len(), inputs.len()));
-    }
-    for (slot, input) in g.inputs.iter().zip(inputs.iter()) {
-        let node = &g.nodes[*slot];
-        if node.shape != input.shape() {
-            return Err(format!(
-                "graph {} input {} shape mismatch: expected {:?}, got {:?}",
-                g.name,
-                slot,
-                node.shape,
-                input.shape()
-            ));
-        }
-    }
-    Ok(())
 }
 
 /// A per-graph execution plan: everything derivable from the graph alone,
@@ -141,12 +125,8 @@ impl ExecPlan {
     /// executor never re-enters itself; the fallback covers exotic
     /// aliasing of one plan from two callables).
     pub fn run(&self, inputs: &[Rc<Tensor>]) -> Result<Vec<Tensor>, DepyfError> {
-        self.run_inner(inputs).map_err(DepyfError::Backend)
-    }
-
-    fn run_inner(&self, inputs: &[Rc<Tensor>]) -> Result<Vec<Tensor>, String> {
         let g = &*self.graph;
-        check_inputs(g, inputs)?;
+        g.check_inputs(inputs)?;
         let mut borrowed;
         let mut local;
         let env: &mut Vec<Option<Tensor>> = match self.arena.try_borrow_mut() {
@@ -174,12 +154,46 @@ impl ExecPlan {
         let out = g
             .outputs
             .iter()
-            .map(|&o| env[o].clone().ok_or_else(|| format!("output node {} unevaluated", o)))
+            .map(|&o| {
+                env[o].clone().ok_or_else(|| DepyfError::Backend(format!("output node {} unevaluated", o)))
+            })
             .collect();
         // Drop live tensors now rather than holding them until the next
         // call (the arena itself keeps only empty slots).
         env.clear();
         out
+    }
+}
+
+/// The eager backend's [`CompiledModule`]: an [`ExecPlan`] built once at
+/// lower time, with an optional custom `backend_name` stamp (used by the
+/// fallback path and by custom backends that delegate execution here).
+pub struct EagerModule {
+    plan: ExecPlan,
+    backend_name: String,
+}
+
+impl EagerModule {
+    pub fn new(graph: Rc<Graph>) -> EagerModule {
+        EagerModule::with_name(graph, "eager".into())
+    }
+
+    pub fn with_name(graph: Rc<Graph>, backend_name: String) -> EagerModule {
+        EagerModule { plan: ExecPlan::new(graph), backend_name }
+    }
+
+    pub fn from_plan(plan: ExecPlan, backend_name: String) -> EagerModule {
+        EagerModule { plan, backend_name }
+    }
+}
+
+impl CompiledModule for EagerModule {
+    fn call(&self, inputs: &[Rc<Tensor>]) -> Result<Vec<Tensor>, DepyfError> {
+        self.plan.run(inputs)
+    }
+
+    fn backend_name(&self) -> &str {
+        &self.backend_name
     }
 }
 
@@ -190,17 +204,9 @@ impl ExecPlan {
 pub fn execute_traced(
     g: &Graph,
     inputs: &[Rc<Tensor>],
-    on_node: impl FnMut(usize, &Tensor),
-) -> Result<Vec<Tensor>, DepyfError> {
-    execute_traced_inner(g, inputs, on_node).map_err(DepyfError::Backend)
-}
-
-fn execute_traced_inner(
-    g: &Graph,
-    inputs: &[Rc<Tensor>],
     mut on_node: impl FnMut(usize, &Tensor),
-) -> Result<Vec<Tensor>, String> {
-    check_inputs(g, inputs)?;
+) -> Result<Vec<Tensor>, DepyfError> {
+    g.check_inputs(inputs)?;
     let mut env: Vec<Option<Tensor>> = vec![None; g.nodes.len()];
     for (slot, input) in g.inputs.iter().zip(inputs.iter()) {
         env[*slot] = Some((**input).clone());
@@ -219,7 +225,7 @@ fn execute_traced_inner(
     }
     g.outputs
         .iter()
-        .map(|&o| env[o].clone().ok_or_else(|| format!("output node {} unevaluated", o)))
+        .map(|&o| env[o].clone().ok_or_else(|| DepyfError::Backend(format!("output node {} unevaluated", o))))
         .collect()
 }
 

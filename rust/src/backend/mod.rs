@@ -1,100 +1,73 @@
-//! Graph backends: the eager reference executor and the XLA/PJRT backend.
+//! Graph backends: the eager reference executor, the XLA/PJRT backend,
+//! and the composite `sharded` / `batched` backends built on the staged
+//! [`Backend`] pipeline (`plan` → `lower`).
 //!
-//! The public surface now lives in [`crate::api`]: the pluggable
-//! [`Backend`] trait, the name registry ([`register_backend`] /
-//! [`lookup_backend`]) and the explicit [`FallbackPolicy`] — all
-//! re-exported here for convenience. [`BackendKind`] and [`compile_graph`]
-//! remain as thin legacy shims over that machinery.
+//! The public contract lives in [`crate::api`]: [`CompileRequest`] in,
+//! [`CompilePlan`](crate::api::CompilePlan) out of `plan`, an executable
+//! [`CompiledModule`](crate::api::CompiledModule) out of `lower`, with a
+//! [`Capabilities`](crate::api::Capabilities) bitset validated up front by
+//! the registry and `SessionBuilder`. Everything here is re-exported for
+//! convenience. (The legacy `BackendKind` / `compile_graph` shims are
+//! gone — use a registered backend name or `Rc<dyn Backend>`.)
 
+pub mod batched;
 pub mod eager;
+pub mod partition;
+pub mod sharded;
 pub mod xla;
 
 pub use crate::api::{
-    backend_names, compile_with_policy, eager_graph_fn, lookup_backend, register_backend, Backend,
-    CompileCtx, EagerBackend, FallbackPolicy, PolicyCompiled, XlaBackend,
+    backend_names, compile_with_policy, eager_graph_fn, lookup_backend, module_from_fn,
+    register_backend, Backend, Capabilities, CompilePlan, CompileRequest, CompiledModule,
+    EagerBackend, FallbackPolicy, ModuleArtifact, ModuleStats, PolicyCompiled, XlaBackend,
 };
+pub use batched::BatchedBackend;
+pub use sharded::ShardedBackend;
 
-use std::rc::Rc;
-
-use crate::graph::{CompiledGraphFn, Graph};
-use crate::runtime::Runtime;
-
-/// The closed two-variant backend selector of the original API. New code
-/// should pass `Rc<dyn Backend>` (any registered backend) instead.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum BackendKind {
-    /// Node-by-node CPU reference execution.
-    Eager,
-    /// Lower to HLO text, compile + run via PJRT (fused kernels dispatched
-    /// to AOT Pallas artifacts when shapes match).
-    Xla,
-}
-
-impl BackendKind {
-    pub fn name(self) -> &'static str {
-        match self {
-            BackendKind::Eager => "eager",
-            BackendKind::Xla => "xla",
-        }
-    }
-
-    /// The trait-object equivalent of this kind.
-    pub fn to_backend(self) -> Rc<dyn Backend> {
-        match self {
-            BackendKind::Eager => Rc::new(EagerBackend),
-            BackendKind::Xla => Rc::new(XlaBackend),
-        }
-    }
-}
-
-/// Compile a captured graph with the chosen backend, degrading to eager on
-/// failure (the pre-[`FallbackPolicy`] behaviour).
-#[deprecated(note = "use a `Backend` implementation with `api::compile_with_policy` (explicit FallbackPolicy)")]
-pub fn compile_graph(
-    name: &str,
-    graph: Rc<Graph>,
-    kind: BackendKind,
-    runtime: Option<Rc<Runtime>>,
-) -> CompiledGraphFn {
-    let ctx = CompileCtx { runtime, fallback: FallbackPolicy::Eager };
-    compile_with_policy(kind.to_backend().as_ref(), name, graph, &ctx)
-        .expect("FallbackPolicy::Eager never fails")
-        .f
+/// Shared file-stem sanitizer for backend artifact names (`__hlo_*.txt`,
+/// `__plan_*.json`): one rule for every backend, so artifact file names
+/// never diverge between them.
+pub(crate) fn sanitize(name: &str) -> String {
+    name.chars().map(|c| if c.is_ascii_alphanumeric() || c == '_' { c } else { '_' }).collect()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::graph::OpKind;
+    use crate::graph::{Graph, OpKind};
     use crate::tensor::Tensor;
+    use std::rc::Rc;
 
     #[test]
-    #[allow(deprecated)]
     fn eager_compile_and_call() {
         let mut g = Graph::new("__compiled_fn_0");
         let x = g.placeholder("x", &[2]);
         let r = g.add_op(OpKind::Relu, vec![x]).unwrap();
         g.set_outputs(vec![r]);
-        let f = compile_graph("__compiled_fn_0", Rc::new(g), BackendKind::Eager, None);
-        let out = f.call(&[Rc::new(Tensor::new(vec![2], vec![-1.0, 2.0]))]).unwrap();
+        let req = CompileRequest::new("__compiled_fn_0", Rc::new(g));
+        let pc = compile_with_policy(&EagerBackend, &req).unwrap();
+        let out = pc.f.call(&[Rc::new(Tensor::new(vec![2], vec![-1.0, 2.0]))]).unwrap();
         assert_eq!(out[0].data(), &[0.0, 2.0]);
-        assert_eq!(f.calls.get(), 1);
+        assert_eq!(pc.f.calls.get(), 1);
     }
 
     #[test]
-    #[allow(deprecated)]
     fn xla_without_runtime_degrades_to_eager() {
         let mut g = Graph::new("g");
         let x = g.placeholder("x", &[2]);
         g.set_outputs(vec![x]);
-        let f = compile_graph("g", Rc::new(g), BackendKind::Xla, None);
-        assert!(f.backend_name.starts_with("eager"));
+        let req = CompileRequest::new("g", Rc::new(g));
+        let pc = compile_with_policy(&XlaBackend, &req).unwrap();
+        assert!(pc.f.backend_name.starts_with("eager"));
+        assert!(pc.fallback_reason.is_some());
     }
 
     #[test]
-    fn kind_to_backend_round_trip() {
-        assert_eq!(BackendKind::Eager.to_backend().name(), "eager");
-        assert_eq!(BackendKind::Xla.to_backend().name(), "xla");
-        assert!(BackendKind::Xla.to_backend().requires_runtime());
+    fn composite_backends_declare_capabilities() {
+        assert!(ShardedBackend::new().capabilities().contains(Capabilities::PARTITION));
+        assert!(BatchedBackend::new().capabilities().contains(Capabilities::DYNAMIC_BATCH));
+        assert!(!ShardedBackend::new().requires_runtime());
+        assert!(!BatchedBackend::new().requires_runtime());
+        assert!(XlaBackend.requires_runtime());
     }
 }

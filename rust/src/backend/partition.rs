@@ -1,0 +1,428 @@
+//! Graph partitioning + stitching helpers for composite backends.
+//!
+//! Captured graphs are built in topological order, so a partition is a
+//! contiguous range of op nodes. The interesting question is *where* to
+//! cut: each boundary has a **frontier** — the set of op values produced
+//! before the cut and consumed after it — and boundaries with a frontier
+//! of one are the graph's articulation points (a single tensor flows
+//! through, e.g. between transformer blocks). [`partition_by_ops`] packs
+//! ops up to a size budget and then slides each cut back to the smallest
+//! frontier in the tail window, so shard boundaries land on articulation
+//! points whenever the budget allows.
+//!
+//! [`extract`] materializes a partition as a standalone [`Graph`] (cut
+//! inputs become placeholders, constants are replicated) whose
+//! `content_hash` is the per-partition compile-cache key, and
+//! [`Stitcher`] runs a list of partition executables over a shared value
+//! environment, reassembling the original graph's outputs.
+
+use std::rc::Rc;
+
+use crate::api::{CompiledModule, DepyfError};
+use crate::graph::{Graph, NodeId, NodeKind};
+use crate::tensor::Tensor;
+
+/// One contiguous partition of a graph's op nodes.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Partition {
+    /// Op node ids (original graph) executed by this partition, ascending.
+    pub nodes: Vec<NodeId>,
+    /// Original-graph values read from outside: placeholders and earlier
+    /// partitions' op outputs (constants are replicated, not imported).
+    pub inputs: Vec<NodeId>,
+    /// Values this partition must export: consumed by later partitions or
+    /// listed in the graph's outputs.
+    pub outputs: Vec<NodeId>,
+}
+
+/// For every boundary between consecutive op nodes (index `k` = cut after
+/// the k-th op, `1..ops.len()`), the number of op values crossing it.
+pub fn frontier_sizes(g: &Graph) -> Vec<usize> {
+    let ops: Vec<NodeId> = op_nodes(g);
+    let pos_of: std::collections::HashMap<NodeId, usize> =
+        ops.iter().enumerate().map(|(i, &id)| (id, i)).collect();
+    // last op position consuming each op value (graph outputs pin to end).
+    let mut last_use: Vec<usize> = vec![0; ops.len()];
+    for (pi, &id) in ops.iter().enumerate() {
+        if let NodeKind::Op(_, args) = &g.nodes[id].kind {
+            for a in args {
+                if let Some(&src) = pos_of.get(a) {
+                    last_use[src] = last_use[src].max(pi);
+                }
+            }
+        }
+    }
+    for (pi, &id) in ops.iter().enumerate() {
+        if g.outputs.contains(&id) {
+            last_use[pi] = ops.len().max(1) - 1;
+        }
+    }
+    (1..ops.len())
+        .map(|k| (0..k).filter(|&src| last_use[src] >= k && last_use[src] != src).count())
+        .collect()
+}
+
+/// Boundaries whose frontier is exactly one value — the articulation
+/// points a sharded backend prefers to cut at.
+pub fn articulation_points(g: &Graph) -> Vec<usize> {
+    frontier_sizes(g)
+        .into_iter()
+        .enumerate()
+        .filter(|&(_, f)| f == 1)
+        .map(|(i, _)| i + 1)
+        .collect()
+}
+
+/// Split the graph into contiguous partitions of at most `max_ops` op
+/// nodes each. Cuts prefer the smallest frontier (articulation points) in
+/// the trailing half of each full window.
+pub fn partition_by_ops(g: &Graph, max_ops: usize) -> Vec<Partition> {
+    let ops = op_nodes(g);
+    let max_ops = max_ops.max(1);
+    if ops.is_empty() {
+        return Vec::new();
+    }
+    let frontiers = frontier_sizes(g);
+    let mut cut_after: Vec<usize> = Vec::new(); // boundary indices (op count)
+    let mut start = 0usize;
+    while ops.len() - start > max_ops {
+        // Candidate boundaries in (start + max_ops/2, start + max_ops];
+        // pick the last one with the minimal frontier.
+        let lo = start + max_ops.div_ceil(2);
+        let hi = start + max_ops;
+        let mut best = hi;
+        let mut best_frontier = usize::MAX;
+        for k in lo..=hi {
+            let f = frontiers[k - 1];
+            if f <= best_frontier {
+                best_frontier = f;
+                best = k;
+            }
+        }
+        cut_after.push(best);
+        start = best;
+    }
+    // Materialize partitions from the chosen boundaries.
+    let mut bounds = vec![0usize];
+    bounds.extend(cut_after);
+    bounds.push(ops.len());
+    let mut parts = Vec::new();
+    for w in bounds.windows(2) {
+        parts.push(build_partition(g, &ops[w[0]..w[1]]));
+    }
+    parts
+}
+
+fn op_nodes(g: &Graph) -> Vec<NodeId> {
+    g.nodes
+        .iter()
+        .enumerate()
+        .filter(|(_, n)| matches!(n.kind, NodeKind::Op(..)))
+        .map(|(id, _)| id)
+        .collect()
+}
+
+fn build_partition(g: &Graph, ops: &[NodeId]) -> Partition {
+    let inside: std::collections::HashSet<NodeId> = ops.iter().copied().collect();
+    let mut inputs = Vec::new();
+    for &id in ops {
+        if let NodeKind::Op(_, args) = &g.nodes[id].kind {
+            for &a in args {
+                let is_const =
+                    matches!(g.nodes[a].kind, NodeKind::ConstScalar(_) | NodeKind::ConstTensor(_));
+                if !inside.contains(&a) && !is_const && !inputs.contains(&a) {
+                    inputs.push(a);
+                }
+            }
+        }
+    }
+    // Exported: consumed outside this partition, or a graph output.
+    let mut outputs = Vec::new();
+    for &id in ops {
+        let used_outside = g.nodes.iter().enumerate().any(|(other, n)| {
+            !inside.contains(&other)
+                && matches!(&n.kind, NodeKind::Op(_, args) if args.contains(&id))
+        });
+        if (used_outside || g.outputs.contains(&id)) && !outputs.contains(&id) {
+            outputs.push(id);
+        }
+    }
+    Partition { nodes: ops.to_vec(), inputs, outputs }
+}
+
+/// Materialize a partition as a standalone graph: partition inputs become
+/// placeholders (original placeholder names are kept; cut values are named
+/// `cut_<id>`), constants used inside are replicated, and the partition's
+/// exports become the subgraph outputs. The subgraph's `content_hash` is
+/// the per-partition compile-cache key.
+pub fn extract(g: &Graph, part: &Partition, name: &str) -> Result<Graph, DepyfError> {
+    let mut sub = Graph::new(name);
+    let mut map: std::collections::HashMap<NodeId, NodeId> = std::collections::HashMap::new();
+    for &id in &part.inputs {
+        let pname = match &g.nodes[id].kind {
+            NodeKind::Placeholder { name } => name.clone(),
+            _ => format!("cut_{}", id),
+        };
+        map.insert(id, sub.placeholder(&pname, &g.nodes[id].shape));
+    }
+    for &id in &part.nodes {
+        let NodeKind::Op(op, args) = &g.nodes[id].kind else {
+            return Err(DepyfError::Backend(format!("partition node {} is not an op", id)));
+        };
+        let mut sub_args = Vec::with_capacity(args.len());
+        for &a in args {
+            let mapped = match map.get(&a) {
+                Some(&m) => m,
+                None => match &g.nodes[a].kind {
+                    NodeKind::ConstScalar(v) => {
+                        let m = sub.const_scalar(*v);
+                        map.insert(a, m);
+                        m
+                    }
+                    NodeKind::ConstTensor(t) => {
+                        let m = sub.const_tensor(t.clone());
+                        map.insert(a, m);
+                        m
+                    }
+                    other => {
+                        return Err(DepyfError::Backend(format!(
+                            "partition arg {} ({:?}) neither imported nor const",
+                            a, other
+                        )))
+                    }
+                },
+            };
+            sub_args.push(mapped);
+        }
+        let sid = sub.add_op(op.clone(), sub_args)?;
+        map.insert(id, sid);
+    }
+    let outs: Result<Vec<NodeId>, DepyfError> = part
+        .outputs
+        .iter()
+        .map(|o| {
+            map.get(o).copied().ok_or_else(|| {
+                DepyfError::Backend(format!("partition output {} not produced", o))
+            })
+        })
+        .collect();
+    sub.set_outputs(outs?);
+    Ok(sub)
+}
+
+/// One compiled partition inside a [`Stitcher`].
+pub struct StitchPart {
+    pub part: Partition,
+    pub module: Rc<dyn CompiledModule>,
+}
+
+/// Executes a list of partition modules over a shared environment indexed
+/// by original-graph node ids, reassembling the original outputs.
+pub struct Stitcher {
+    graph: Rc<Graph>,
+    parts: Vec<StitchPart>,
+}
+
+impl Stitcher {
+    pub fn new(graph: Rc<Graph>, parts: Vec<StitchPart>) -> Stitcher {
+        Stitcher { graph, parts }
+    }
+
+    pub fn parts(&self) -> &[StitchPart] {
+        &self.parts
+    }
+
+    pub fn run(&self, inputs: &[Rc<Tensor>]) -> Result<Vec<Tensor>, DepyfError> {
+        let g = &*self.graph;
+        g.check_inputs(inputs)?;
+        let mut env: Vec<Option<Rc<Tensor>>> = vec![None; g.nodes.len()];
+        for (&slot, input) in g.inputs.iter().zip(inputs.iter()) {
+            env[slot] = Some(Rc::clone(input));
+        }
+        // Constants that are read across partition boundaries never occur
+        // (they are replicated), but a constant can BE a graph output.
+        for &o in &g.outputs {
+            match &g.nodes[o].kind {
+                NodeKind::ConstScalar(v) => env[o] = Some(Rc::new(Tensor::scalar(*v as f32))),
+                NodeKind::ConstTensor(t) => env[o] = Some(Rc::new(t.clone())),
+                _ => {}
+            }
+        }
+        for sp in &self.parts {
+            let part_inputs: Result<Vec<Rc<Tensor>>, DepyfError> = sp
+                .part
+                .inputs
+                .iter()
+                .map(|&id| {
+                    env[id].clone().ok_or_else(|| {
+                        DepyfError::Backend(format!("stitch: partition input {} unevaluated", id))
+                    })
+                })
+                .collect();
+            let outs = sp.module.call(&part_inputs?)?;
+            if outs.len() != sp.part.outputs.len() {
+                return Err(DepyfError::Backend(format!(
+                    "stitch: partition returned {} outputs, expected {}",
+                    outs.len(),
+                    sp.part.outputs.len()
+                )));
+            }
+            for (&id, t) in sp.part.outputs.iter().zip(outs.into_iter()) {
+                env[id] = Some(Rc::new(t));
+            }
+        }
+        g.outputs
+            .iter()
+            .map(|&o| {
+                env[o]
+                    .as_ref()
+                    .map(|t| (**t).clone())
+                    .ok_or_else(|| DepyfError::Backend(format!("stitch: output {} unevaluated", o)))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::eager::{self, EagerModule};
+    use crate::graph::OpKind;
+    use crate::tensor::Rng;
+
+    /// x @ w1 -> relu -> @ w2 -> softmax -> sum : a chain with clear
+    /// articulation points between every consecutive op.
+    fn mlp() -> Graph {
+        let mut g = Graph::new("mlp");
+        let x = g.placeholder("x", &[4, 8]);
+        let w1 = g.placeholder("w1", &[8, 8]);
+        let w2 = g.placeholder("w2", &[8, 8]);
+        let h = g.add_op(OpKind::MatMul, vec![x, w1]).unwrap();
+        let r = g.add_op(OpKind::Relu, vec![h]).unwrap();
+        let o = g.add_op(OpKind::MatMul, vec![r, w2]).unwrap();
+        let sm = g.add_op(OpKind::Softmax, vec![o]).unwrap();
+        let s = g.add_op(OpKind::Sum(None), vec![sm]).unwrap();
+        g.set_outputs(vec![s]);
+        g
+    }
+
+    #[test]
+    fn chain_boundaries_are_articulation_points() {
+        let g = mlp();
+        // Every boundary in a pure chain carries exactly one value.
+        assert_eq!(frontier_sizes(&g), vec![1, 1, 1, 1]);
+        assert_eq!(articulation_points(&g), vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn diamond_has_a_wider_frontier() {
+        // x -> (a, b) -> a+b : the middle boundary carries two values.
+        let mut g = Graph::new("diamond");
+        let x = g.placeholder("x", &[4]);
+        let a = g.add_op(OpKind::Relu, vec![x]).unwrap();
+        let b = g.add_op(OpKind::Neg, vec![x]).unwrap();
+        let s = g.add_op(OpKind::Add, vec![a, b]).unwrap();
+        g.set_outputs(vec![s]);
+        assert_eq!(frontier_sizes(&g), vec![1, 2]);
+        assert_eq!(articulation_points(&g), vec![1]);
+    }
+
+    #[test]
+    fn partitions_cover_all_ops_without_overlap() {
+        let g = mlp();
+        for max_ops in 1..=6 {
+            let parts = partition_by_ops(&g, max_ops);
+            let mut seen: Vec<NodeId> = parts.iter().flat_map(|p| p.nodes.clone()).collect();
+            let expected: Vec<NodeId> = (0..g.nodes.len())
+                .filter(|&i| matches!(g.nodes[i].kind, NodeKind::Op(..)))
+                .collect();
+            seen.sort_unstable();
+            assert_eq!(seen, expected, "max_ops={}", max_ops);
+            for p in &parts {
+                assert!(p.nodes.len() <= max_ops, "max_ops={} violated: {:?}", max_ops, p.nodes);
+            }
+        }
+        assert_eq!(partition_by_ops(&g, 2).len(), 3);
+        assert_eq!(partition_by_ops(&g, 100).len(), 1);
+    }
+
+    #[test]
+    fn extracted_subgraphs_stitch_back_to_reference() {
+        let g = Rc::new(mlp());
+        let mut rng = Rng::new(42);
+        let inputs: Vec<Rc<Tensor>> = vec![
+            Rc::new(Tensor::randn(&[4, 8], &mut rng)),
+            Rc::new(Tensor::randn(&[8, 8], &mut rng)),
+            Rc::new(Tensor::randn(&[8, 8], &mut rng)),
+        ];
+        let want = eager::execute(&g, &inputs).unwrap();
+        for max_ops in 1..=5 {
+            let parts = partition_by_ops(&g, max_ops);
+            let stitch_parts: Vec<StitchPart> = parts
+                .into_iter()
+                .enumerate()
+                .map(|(i, part)| {
+                    let sub = extract(&g, &part, &format!("mlp.p{}", i)).unwrap();
+                    let module: Rc<dyn CompiledModule> = Rc::new(EagerModule::new(Rc::new(sub)));
+                    StitchPart { part, module }
+                })
+                .collect();
+            let stitcher = Stitcher::new(Rc::clone(&g), stitch_parts);
+            let got = stitcher.run(&inputs).unwrap();
+            assert_eq!(got.len(), want.len());
+            for (a, b) in got.iter().zip(want.iter()) {
+                assert_eq!(a.shape(), b.shape());
+                assert_eq!(a.data(), b.data(), "bitwise divergence at max_ops={}", max_ops);
+            }
+        }
+    }
+
+    #[test]
+    fn constants_are_replicated_and_const_outputs_survive() {
+        let mut g = Graph::new("constout");
+        let x = g.placeholder("x", &[2]);
+        let c = g.const_scalar(2.0);
+        let ct = g.const_tensor(Tensor::new(vec![2], vec![5.0, 6.0]));
+        let m = g.add_op(OpKind::Mul, vec![x, c]).unwrap();
+        let a = g.add_op(OpKind::Add, vec![m, ct]).unwrap();
+        g.set_outputs(vec![a, ct]);
+        let g = Rc::new(g);
+        let parts = partition_by_ops(&g, 1);
+        assert_eq!(parts.len(), 2);
+        // Constants never appear as cross-partition inputs.
+        for p in &parts {
+            assert!(p.inputs.iter().all(|&i| !matches!(
+                g.nodes[i].kind,
+                NodeKind::ConstScalar(_) | NodeKind::ConstTensor(_)
+            )));
+        }
+        let stitch_parts: Vec<StitchPart> = parts
+            .into_iter()
+            .enumerate()
+            .map(|(i, part)| {
+                let sub = extract(&g, &part, &format!("c.p{}", i)).unwrap();
+                let module: Rc<dyn CompiledModule> = Rc::new(EagerModule::new(Rc::new(sub)));
+                StitchPart { part, module }
+            })
+            .collect();
+        let got = Stitcher::new(Rc::clone(&g), stitch_parts)
+            .run(&[Rc::new(Tensor::new(vec![2], vec![1.0, 2.0]))])
+            .unwrap();
+        assert_eq!(got[0].data(), &[7.0, 10.0]);
+        assert_eq!(got[1].data(), &[5.0, 6.0]);
+    }
+
+    #[test]
+    fn extracted_hash_is_per_partition_stable() {
+        let g = mlp();
+        let parts = partition_by_ops(&g, 2);
+        let h1: Vec<u64> =
+            parts.iter().enumerate().map(|(i, p)| extract(&g, p, &format!("a{}", i)).unwrap().content_hash()).collect();
+        // Same structure under different names hashes identically.
+        let h2: Vec<u64> =
+            parts.iter().enumerate().map(|(i, p)| extract(&g, p, &format!("b{}", i)).unwrap().content_hash()).collect();
+        assert_eq!(h1, h2);
+        // Distinct partitions hash differently.
+        assert!(h1.windows(2).all(|w| w[0] != w[1]), "{:?}", h1);
+    }
+}

@@ -10,12 +10,56 @@
 use std::fmt::Write as _;
 use std::rc::Rc;
 
-use crate::api::DepyfError;
+use crate::api::{ArtifactKind, CompiledModule, DepyfError, ModuleArtifact, ModuleStats};
 use crate::graph::{CompiledGraphFn, Graph, NodeKind, OpKind};
-use crate::runtime::Runtime;
+use crate::runtime::{Executable, Runtime};
 use crate::tensor::Tensor;
 
-/// Compile a graph via HLO text + PJRT.
+/// The executable-cache key for a graph: `graph:{content_hash}`.
+pub fn cache_key(graph: &Graph) -> String {
+    format!("graph:{:016x}", graph.content_hash())
+}
+
+/// The XLA backend's [`CompiledModule`]: a PJRT executable plus the HLO
+/// text it was compiled from (dumped as a typed artifact at `finish()`).
+pub struct XlaModule {
+    name: String,
+    graph: Rc<Graph>,
+    rt: Rc<Runtime>,
+    exe: Rc<Executable>,
+    /// True when the executable was served from the runtime's
+    /// content-hash cache instead of compiled fresh.
+    pub cache_hit: bool,
+}
+
+impl CompiledModule for XlaModule {
+    fn call(&self, inputs: &[Rc<Tensor>]) -> Result<Vec<Tensor>, DepyfError> {
+        self.graph.check_inputs(inputs)?;
+        let refs: Vec<&Tensor> = inputs.iter().map(|t| &**t).collect();
+        self.rt.execute(&self.exe, &refs)
+    }
+
+    fn backend_name(&self) -> &str {
+        "xla"
+    }
+
+    /// The HLO text is re-emitted on demand: `artifacts()` runs once at
+    /// `finish()`, keeping the cache-hit compile path free of lowering.
+    fn artifacts(&self) -> Vec<ModuleArtifact> {
+        vec![ModuleArtifact {
+            kind: ArtifactKind::Hlo,
+            name: self.name.clone(),
+            file: format!("__hlo_{}.txt", sanitize(&self.name)),
+            content: emit_hlo(&self.graph).unwrap_or_else(|e| format!("# hlo emission failed: {}\n", e)),
+        }]
+    }
+
+    fn stats(&self) -> ModuleStats {
+        ModuleStats { partitions: 1, bucket: None, cache_hits: self.cache_hit as u64 }
+    }
+}
+
+/// Compile a graph via HLO text + PJRT into an [`XlaModule`].
 ///
 /// The executable cache key is `graph:{content_hash}` — structurally
 /// identical graphs (whatever their `__compiled_fn_N` names, whichever
@@ -23,11 +67,11 @@ use crate::tensor::Tensor;
 /// [`Runtime`]. With a runtime disk cache, the lowered HLO is persisted
 /// under the same key so repeated runs skip `emit_hlo` entirely and feed
 /// PJRT the cached text.
-pub fn compile(name: &str, graph: &Rc<Graph>, rt: &Rc<Runtime>) -> Result<CompiledGraphFn, DepyfError> {
-    let key = format!("graph:{:016x}", graph.content_hash());
+pub fn compile_module(name: &str, graph: &Rc<Graph>, rt: &Rc<Runtime>) -> Result<XlaModule, DepyfError> {
+    let key = cache_key(graph);
     let n_outputs = graph.outputs.len();
-    let exe = match rt.cached_executable(&key) {
-        Some(e) => e,
+    let (exe, cache_hit) = match rt.cached_executable(&key) {
+        Some(e) => (e, true),
         None => {
             let hlo = match rt.cached_hlo(&key) {
                 Some((text, n)) if n == n_outputs => text,
@@ -37,22 +81,16 @@ pub fn compile(name: &str, graph: &Rc<Graph>, rt: &Rc<Runtime>) -> Result<Compil
                     text
                 }
             };
-            rt.compile_hlo_text(&key, &hlo, n_outputs)?
+            (rt.compile_hlo_text(&key, &hlo, n_outputs)?, false)
         }
     };
-    let rt2 = Rc::clone(rt);
-    let g2 = Rc::clone(graph);
-    Ok(CompiledGraphFn {
-        name: name.to_string(),
-        graph: Rc::clone(graph),
-        backend_name: "xla".into(),
-        executor: Box::new(move |inputs| {
-            let refs: Vec<&Tensor> = inputs.iter().map(|t| &**t).collect();
-            let _ = &g2;
-            rt2.execute(&exe, &refs)
-        }),
-        calls: std::cell::Cell::new(0),
-    })
+    Ok(XlaModule { name: name.to_string(), graph: Rc::clone(graph), rt: Rc::clone(rt), exe, cache_hit })
+}
+
+/// Compile a graph and wrap it as a [`CompiledGraphFn`] (tests, benches).
+pub fn compile(name: &str, graph: &Rc<Graph>, rt: &Rc<Runtime>) -> Result<CompiledGraphFn, DepyfError> {
+    let module = compile_module(name, graph, rt)?;
+    Ok(CompiledGraphFn::from_module(name, Rc::clone(graph), Rc::new(module)))
 }
 
 fn f32ty(shape: &[usize]) -> String {
@@ -487,7 +525,7 @@ pub fn emit_hlo(g: &Graph) -> Result<String, DepyfError> {
 }
 
 fn sanitize(name: &str) -> String {
-    let s: String = name.chars().map(|c| if c.is_ascii_alphanumeric() || c == '_' { c } else { '_' }).collect();
+    let s = super::sanitize(name);
     if s.is_empty() {
         "graph".into()
     } else {

@@ -395,7 +395,7 @@ impl<'a> Tracer<'a> {
                     _ => match a.as_value() {
                         Some(v) => {
                             let r = match op {
-                                UnOp::Not => Value::Bool(!v.truthy().map_err(Abort)?),
+                                UnOp::Not => Value::Bool(!v.truthy().map_err(|e| Abort(e.into()))?),
                                 UnOp::Neg => vm::binary_op_values(BinOp::Sub, &Value::Int(0), &v).map_err(Abort)?,
                                 UnOp::Pos => v,
                             };
@@ -465,7 +465,7 @@ impl<'a> Tracer<'a> {
                     }));
                 }
                 let v = cond.as_value().ok_or_else(|| Abort("branch on traced structure".into()))?;
-                let truth = v.truthy().map_err(Abort)?;
+                let truth = v.truthy().map_err(|e| Abort(e.into()))?;
                 if truth == jump_on {
                     *ip = *t as usize;
                 }
@@ -477,7 +477,7 @@ impl<'a> Tracer<'a> {
                     return Err(Abort("boolean operator on tensor".into()));
                 }
                 let v = cond.as_value().ok_or_else(|| Abort("bool-op on traced structure".into()))?;
-                let truth = v.truthy().map_err(Abort)?;
+                let truth = v.truthy().map_err(|e| Abort(e.into()))?;
                 if truth == jump_on {
                     *ip = *t as usize;
                 } else {
@@ -667,7 +667,7 @@ impl<'a> Tracer<'a> {
                         if let Value::Dict(map) = &d {
                             let mut m = map.borrow_mut();
                             for pair in v.chunks(2) {
-                                let k = crate::value::DictKey::from_value(&pair[0]).map_err(Abort)?;
+                                let k = crate::value::DictKey::from_value(&pair[0]).map_err(|e| Abort(e.into()))?;
                                 m.insert(k, pair[1].clone());
                             }
                         }
@@ -810,7 +810,7 @@ impl<'a> Tracer<'a> {
             }
             Sym::Const { value, origin } => {
                 let key = idx.as_value().ok_or_else(|| Abort("non-constant subscript".into()))?;
-                let elem = crate::vm::apply_subscript(value, &key).map_err(Abort)?;
+                let elem = crate::vm::apply_subscript(value, &key).map_err(|e| Abort(e.into()))?;
                 let o = origin.clone().map(|o| o.index(key));
                 let s = self.value_to_sym(&elem, o)?;
                 self.stack.push(s);
@@ -1074,7 +1074,7 @@ impl<'a> Tracer<'a> {
                 if let Some(vals) = vals {
                     // Pure const-method fold (str methods, dict.get, ...).
                     if !matches!(name.as_str(), "append" | "extend" | "pop" | "insert" | "sort" | "reverse") {
-                        let r = vm::call_method_pure(value, &name, &vals).map_err(Abort)?;
+                        let r = vm::call_method_pure(value, &name, &vals).map_err(|e| Abort(e.into()))?;
                         let s = self.value_to_sym(&r, None).unwrap_or(Sym::constant(r));
                         self.stack.push(s);
                         return Ok(None);
@@ -1095,7 +1095,7 @@ impl<'a> Tracer<'a> {
                     let vals: Option<Vec<Value>> = args.iter().map(|a| a.as_value()).collect();
                     let tup: Option<Vec<Value>> = items.iter().map(|s| s.as_value()).collect();
                     if let (Some(vals), Some(tup)) = (vals, tup) {
-                        let r = vm::call_method_pure(&Value::tuple(tup), &name, &vals).map_err(Abort)?;
+                        let r = vm::call_method_pure(&Value::tuple(tup), &name, &vals).map_err(|e| Abort(e.into()))?;
                         self.stack.push(Sym::constant(r));
                         return Ok(None);
                     }

@@ -21,7 +21,9 @@ use std::cell::RefCell;
 use std::collections::{HashMap, HashSet};
 use std::rc::Rc;
 
-use crate::api::{compile_with_policy, Backend, CompileCtx, DepyfError, EagerBackend, FallbackPolicy};
+use crate::api::{
+    compile_with_policy, module_from_fn, Backend, CompileRequest, DepyfError, EagerBackend, FallbackPolicy,
+};
 use crate::bytecode::CodeObject;
 use crate::graph::Graph;
 use crate::metrics::Metrics;
@@ -102,6 +104,9 @@ struct State {
     graphs: Vec<(String, Rc<Graph>)>,
     /// Transformed + resume code objects for dumps.
     generated_codes: Vec<(String, Rc<CodeObject>)>,
+    /// Compiled-graph callables in compile order — the session reads
+    /// their modules' `artifacts()`/`stats()` at `finish()`.
+    compiled: Vec<Rc<crate::graph::CompiledGraphFn>>,
     /// Cached read-path snapshots, invalidated on write. Read accessors
     /// hand out `Rc` clones of these instead of deep-copying the vectors.
     log_snap: Option<Rc<[String]>>,
@@ -156,6 +161,13 @@ impl Dynamo {
         Rc::clone(st.codes_snap.as_ref().unwrap())
     }
 
+    /// The compiled-graph callables installed so far, in compile order.
+    /// Each carries its backend [`crate::api::CompiledModule`], whose
+    /// `artifacts()` and `stats()` the session dumps at `finish()`.
+    pub fn compiled(&self) -> Vec<Rc<crate::graph::CompiledGraphFn>> {
+        self.state.borrow().compiled.clone()
+    }
+
     fn note(&self, msg: String) {
         if self.config.verbosity >= Verbosity::Info {
             let mut st = self.state.borrow_mut();
@@ -175,26 +187,24 @@ impl Dynamo {
         }
     }
 
-    fn compile_backend(&self, name: &str, graph: Rc<Graph>) -> Value {
+    fn compile_backend(&self, name: &str, graph: Rc<Graph>, guards: &[Guard]) -> Value {
         // Debug tracing forces the eager executor with per-node callbacks.
         if let Some(tracer) = &self.config.tracer {
             let t = Rc::clone(tracer);
             let gname = name.to_string();
             let g2 = Rc::clone(&graph);
-            let f = crate::graph::CompiledGraphFn {
-                name: name.to_string(),
-                graph: Rc::clone(&graph),
-                backend_name: "eager+trace".into(),
-                executor: Box::new(move |inputs| {
-                    crate::backend::eager::execute_traced(&g2, inputs, |id, v| t.on_node(&gname, id, v))
-                }),
-                calls: std::cell::Cell::new(0),
-            };
-            return Value::CompiledGraph(Rc::new(f));
+            let module = module_from_fn("eager+trace", move |inputs| {
+                crate::backend::eager::execute_traced(&g2, inputs, |id, v| t.on_node(&gname, id, v))
+            });
+            return self.install_compiled(crate::graph::CompiledGraphFn::from_module(name, graph, module));
         }
-        let ctx = CompileCtx { runtime: self.runtime.clone(), fallback: self.config.fallback };
+        let req = CompileRequest::new(name, Rc::clone(&graph))
+            .with_runtime(self.runtime.clone())
+            .with_guards(guards.iter().map(|g| g.describe()).collect())
+            .with_verbosity(self.config.verbosity)
+            .with_fallback(self.config.fallback);
         let backend = self.config.backend.as_ref();
-        let f = match compile_with_policy(backend, name, Rc::clone(&graph), &ctx) {
+        let f = match compile_with_policy(backend, &req) {
             Ok(pc) => {
                 if let Some(reason) = &pc.fallback_reason {
                     // Fallback engaged: record it in the frontend log.
@@ -204,6 +214,27 @@ impl Dynamo {
                         name,
                         reason
                     ));
+                } else {
+                    // Composite-backend decisions are observable in the
+                    // frontend log, not just in the plan artifact.
+                    let stats = pc.f.module.stats();
+                    if stats.partitions > 1 {
+                        self.note(format!(
+                            "  backend: {} split {} into {} partitions",
+                            backend.name(),
+                            name,
+                            stats.partitions
+                        ));
+                    }
+                    if let Some(bucket) = stats.bucket {
+                        self.note(format!(
+                            "  backend: {} padded {} into bucket {} ({})",
+                            backend.name(),
+                            name,
+                            bucket,
+                            if stats.cache_hits > 0 { "shared executable" } else { "new executable" }
+                        ));
+                    }
                 }
                 pc.f
             }
@@ -212,16 +243,21 @@ impl Dynamo {
                 // surfaced as a VM error when the graph is first called.
                 self.note(format!("  backend: {} failed on {}: {}", backend.name(), name, e));
                 let msg = format!("backend '{}' failed to compile {}: {}", backend.name(), name, e);
-                crate::graph::CompiledGraphFn {
-                    name: name.to_string(),
-                    graph,
-                    backend_name: format!("error({})", backend.name()),
-                    executor: Box::new(move |_| Err(DepyfError::Backend(msg.clone()))),
-                    calls: std::cell::Cell::new(0),
-                }
+                let module = module_from_fn(format!("error({})", backend.name()), move |_| {
+                    Err(DepyfError::Backend(msg.clone()))
+                });
+                crate::graph::CompiledGraphFn::from_module(name, graph, module)
             }
         };
-        Value::CompiledGraph(Rc::new(f))
+        self.install_compiled(f)
+    }
+
+    /// Record the compiled callable for `finish()`-time artifact/stat
+    /// dumps and wrap it as a VM value.
+    fn install_compiled(&self, f: crate::graph::CompiledGraphFn) -> Value {
+        let f = Rc::new(f);
+        self.state.borrow_mut().compiled.push(Rc::clone(&f));
+        Value::CompiledGraph(f)
     }
 }
 
@@ -357,7 +393,10 @@ impl EvalHook for Dynamo {
             {
                 let mut gm = globals.borrow_mut();
                 if transformed.graph_used {
-                    gm.insert(graph_name.clone(), self.compile_backend(&graph_name, Rc::clone(&graph)));
+                    gm.insert(
+                        graph_name.clone(),
+                        self.compile_backend(&graph_name, Rc::clone(&graph), &cap.guards),
+                    );
                 }
                 for (rname, rcode) in &transformed.resume_codes {
                     gm.insert(
@@ -564,6 +603,65 @@ mod tests {
     }
 
     #[test]
+    fn sharded_backend_end_to_end() {
+        let src = "def f(x, y):\n    return ((x @ y) + 1).relu().softmax().sum()\nprint(f(torch.ones([4, 4]), torch.ones([4, 4])).item())\n";
+        let plain = Vm::new();
+        plain.exec_source(src, IsaVersion::V310).unwrap();
+        let expected = plain.take_output();
+
+        let mut vm = Vm::new();
+        let dynamo = Dynamo::new(DynamoConfig {
+            backend: Rc::new(crate::backend::ShardedBackend::with_max_ops(2)),
+            fallback: FallbackPolicy::Error,
+            ..Default::default()
+        });
+        vm.eval_hook = Some(dynamo.clone());
+        vm.exec_source(src, IsaVersion::V310).unwrap();
+        assert_eq!(vm.take_output(), expected);
+        let compiled = dynamo.compiled();
+        assert_eq!(compiled.len(), 1);
+        assert_eq!(compiled[0].backend_name, "sharded");
+        assert!(compiled[0].module.stats().partitions >= 2, "{:?}", compiled[0].module.stats());
+        assert!(
+            dynamo.log().iter().any(|l| l.contains("split") && l.contains("partitions")),
+            "{:?}",
+            dynamo.log()
+        );
+    }
+
+    #[test]
+    fn batched_backend_shares_bucket_across_guard_entries() {
+        // Two shape-specialized guard entries (batch 5 and 6) land in
+        // bucket 8: one executable serves both.
+        let src = "def f(x):\n    return (x * 2).relu()\nprint(f(torch.ones([5, 4])).sum().item())\nprint(f(torch.ones([6, 4])).sum().item())\n";
+        let plain = Vm::new();
+        plain.exec_source(src, IsaVersion::V310).unwrap();
+        let expected = plain.take_output();
+
+        let mut vm = Vm::new();
+        let dynamo = Dynamo::new(DynamoConfig {
+            backend: Rc::new(crate::backend::BatchedBackend::new()),
+            fallback: FallbackPolicy::Error,
+            ..Default::default()
+        });
+        vm.eval_hook = Some(dynamo.clone());
+        vm.exec_source(src, IsaVersion::V310).unwrap();
+        assert_eq!(vm.take_output(), expected);
+        assert_eq!(dynamo.metrics.captures.get(), 2, "shape change still recompiles bytecode");
+        let compiled = dynamo.compiled();
+        assert_eq!(compiled.len(), 2);
+        assert_eq!(compiled[0].module.stats().bucket, Some(8));
+        assert_eq!(compiled[0].module.stats().cache_hits, 0);
+        assert_eq!(compiled[1].module.stats().bucket, Some(8));
+        assert_eq!(compiled[1].module.stats().cache_hits, 1, "second entry must reuse the bucket");
+        assert!(
+            dynamo.log().iter().any(|l| l.contains("shared executable")),
+            "{:?}",
+            dynamo.log()
+        );
+    }
+
+    #[test]
     fn fallback_error_policy_surfaces_backend_failure() {
         // Xla without a runtime under FallbackPolicy::Error: capture
         // succeeds, but calling the compiled graph raises a VM error.
@@ -613,13 +711,18 @@ mod tests {
             fn name(&self) -> &str {
                 "tagger"
             }
-            fn compile(
+            fn plan(&self, req: &CompileRequest) -> Result<crate::api::CompilePlan, DepyfError> {
+                Ok(crate::api::CompilePlan::monolithic("tagger", req, "eager"))
+            }
+            fn lower(
                 &self,
-                name: &str,
-                graph: Rc<Graph>,
-                _ctx: &CompileCtx,
-            ) -> Result<crate::graph::CompiledGraphFn, DepyfError> {
-                Ok(crate::api::eager_graph_fn(name, graph, "tagger-v2".into()))
+                req: &CompileRequest,
+                _plan: &crate::api::CompilePlan,
+            ) -> Result<Rc<dyn crate::api::CompiledModule>, DepyfError> {
+                Ok(Rc::new(crate::backend::eager::EagerModule::with_name(
+                    Rc::clone(&req.graph),
+                    "tagger-v2".into(),
+                )))
             }
         }
         let src = "def f(x):\n    return (x * 2).sum()\nprint(f(torch.ones([2])).item())\n";

@@ -210,6 +210,44 @@ impl Graph {
         h.finish()
     }
 
+    /// `(name, shape)` of every placeholder, in input order — the example
+    /// input specs a [`crate::api::CompileRequest`] carries.
+    pub fn input_shapes(&self) -> Vec<(String, Vec<usize>)> {
+        self.inputs
+            .iter()
+            .map(|&id| match &self.nodes[id].kind {
+                NodeKind::Placeholder { name } => (name.clone(), self.nodes[id].shape.clone()),
+                other => (format!("<{:?}>", other), self.nodes[id].shape.clone()),
+            })
+            .collect()
+    }
+
+    /// Validate a runtime input list against the placeholder arity and
+    /// shapes — the shared precondition of every backend executor.
+    pub fn check_inputs(&self, inputs: &[Rc<Tensor>]) -> Result<(), DepyfError> {
+        if inputs.len() != self.inputs.len() {
+            return Err(DepyfError::Backend(format!(
+                "graph {} expects {} inputs, got {}",
+                self.name,
+                self.inputs.len(),
+                inputs.len()
+            )));
+        }
+        for (slot, input) in self.inputs.iter().zip(inputs.iter()) {
+            let node = &self.nodes[*slot];
+            if node.shape != input.shape() {
+                return Err(DepyfError::Backend(format!(
+                    "graph {} input {} shape mismatch: expected {:?}, got {:?}",
+                    self.name,
+                    slot,
+                    node.shape,
+                    input.shape()
+                )));
+            }
+        }
+        Ok(())
+    }
+
     /// Approximate FLOP count (matmuls dominate).
     pub fn flops(&self) -> u64 {
         let mut total = 0u64;
@@ -306,7 +344,7 @@ pub fn infer_shape(op: &OpKind, shapes: &[&[usize]]) -> Result<Vec<usize>, Depyf
     match op {
         OpKind::Add | OpKind::Sub | OpKind::Mul | OpKind::Div | OpKind::Pow | OpKind::Maximum | OpKind::Minimum => {
             need(2)?;
-            tensor::broadcast_shapes(shapes[0], shapes[1]).map_err(DepyfError::Compile)
+            tensor::broadcast_shapes(shapes[0], shapes[1]).map_err(|e| DepyfError::Compile(e.to_string()))
         }
         OpKind::Neg
         | OpKind::Relu
@@ -353,7 +391,7 @@ pub fn infer_shape(op: &OpKind, shapes: &[&[usize]]) -> Result<Vec<usize>, Depyf
         OpKind::Reshape(spec) => {
             need(1)?;
             let numel: usize = shapes[0].iter().product();
-            tensor::reshape_infer(numel, spec).map_err(DepyfError::Compile)
+            tensor::reshape_infer(numel, spec).map_err(|e| DepyfError::Compile(e.to_string()))
         }
         OpKind::Permute(perm) => {
             need(1)?;
@@ -417,21 +455,38 @@ pub fn infer_shape(op: &OpKind, shapes: &[&[usize]]) -> Result<Vec<usize>, Depyf
 }
 
 /// A compiled graph installed by dynamo as a callable global
-/// (`__compiled_fn_N`). Routes tensor inputs to a backend executor.
+/// (`__compiled_fn_N`). Dispatches tensor inputs through the backend's
+/// [`crate::api::CompiledModule`], which also carries the per-partition
+/// artifacts and stats the session dumps at `finish()`.
 pub struct CompiledGraphFn {
     pub name: String,
     pub graph: Rc<Graph>,
     /// Which backend compiled this (for dumps/metrics).
     pub backend_name: String,
-    #[allow(clippy::type_complexity)]
-    pub executor: Box<dyn Fn(&[Rc<Tensor>]) -> Result<Vec<Tensor>, DepyfError>>,
+    /// The backend's executable module (lowered via `Backend::lower`).
+    pub module: Rc<dyn crate::api::CompiledModule>,
     pub calls: Cell<u64>,
 }
 
 impl CompiledGraphFn {
+    /// Wrap a lowered module; `backend_name` is stamped from the module.
+    pub fn from_module(
+        name: &str,
+        graph: Rc<Graph>,
+        module: Rc<dyn crate::api::CompiledModule>,
+    ) -> CompiledGraphFn {
+        CompiledGraphFn {
+            name: name.to_string(),
+            backend_name: module.backend_name().to_string(),
+            graph,
+            module,
+            calls: Cell::new(0),
+        }
+    }
+
     pub fn call(&self, inputs: &[Rc<Tensor>]) -> Result<Vec<Tensor>, DepyfError> {
         self.calls.set(self.calls.get() + 1);
-        (self.executor)(inputs)
+        self.module.call(inputs)
     }
 }
 

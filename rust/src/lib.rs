@@ -32,12 +32,43 @@
 //! # Ok(()) }
 //! ```
 //!
+//! ## The backend pipeline
+//!
+//! Graph compilation is a staged, inspectable pipeline rather than a
+//! one-shot callback. A typed [`api::CompileRequest`] (graph, example
+//! input specs, guard context, content-hash cache key, verbosity) flows
+//! through two explicit stages:
+//!
+//! * [`api::Backend::plan`] returns a declarative [`api::CompilePlan`] —
+//!   partitions (node sets, per-partition target, per-partition cache
+//!   key) and padding/bucketing decisions — that dumps to
+//!   `__plan_*.json` and round-trips through [`api::CompilePlan::parse`].
+//! * [`api::Backend::lower`] realizes the plan as an
+//!   [`api::CompiledModule`]: `call()` executes, `artifacts()` exposes
+//!   per-partition HLO/plan dumps (indexed in `manifest.json`), and
+//!   `stats()` feeds the `metrics.json` `"modules"` array.
+//!
+//! Every backend declares an [`api::Capabilities`] bitset (`PARTITION`,
+//! `DYNAMIC_BATCH`, `ASYNC`, runtime needs) so the registry,
+//! [`api::SessionBuilder`] (`.require(caps)`) and the CLI validate
+//! configurations before anything compiles. Four backends ship in-tree:
+//!
+//! * `eager` — node-by-node CPU reference execution ([`backend::eager`]).
+//! * `xla` — one PJRT executable per captured graph ([`backend::xla`]).
+//! * `sharded` — splits large graphs at articulation points into several
+//!   PJRT/eager executables and stitches outputs ([`backend::sharded`]);
+//!   partition boundaries are typed artifacts.
+//! * `batched` — pads/buckets the dynamic leading dim so one executable
+//!   serves every guard entry in the same bucket ([`backend::batched`]),
+//!   reusing the content-hash compile cache per bucket.
+//!
 //! Custom graph compilers plug in exactly like `torch.compile(backend=...)`:
 //! implement [`api::Backend`], call [`api::register_backend`], and pass the
 //! name to `backend_named` (see `examples/custom_backend.rs`). Backend
 //! failures follow an explicit [`api::FallbackPolicy`] instead of silently
-//! degrading. The pre-builder entry points ([`session::DebugSession`],
-//! [`backend::compile_graph`]) remain as deprecated shims.
+//! degrading. The pre-builder entry points (`DebugSession::prepare_debug`,
+//! `backend::compile_graph`, `hijack::graph_line_table`) are removed; use
+//! the builder and the pipeline above.
 //!
 //! ## Performance
 //!
@@ -122,12 +153,11 @@ pub use api::DepyfError;
 /// Convenient re-exports for examples and tests.
 pub mod prelude {
     pub use crate::api::{
-        lookup_backend, register_backend, Artifact, ArtifactKind, Backend, CompileCtx, DepyfError,
-        EagerBackend, FallbackPolicy, Session, SessionBuilder, TraceMode, XlaBackend,
+        lookup_backend, register_backend, Artifact, ArtifactKind, Backend, Capabilities,
+        CompilePlan, CompileRequest, CompiledModule, DepyfError, EagerBackend, FallbackPolicy,
+        Session, SessionBuilder, TraceMode, XlaBackend,
     };
-    pub use crate::backend::BackendKind;
-    #[allow(deprecated)]
-    pub use crate::session::DebugSession;
+    pub use crate::backend::{BatchedBackend, ShardedBackend};
     pub use crate::bytecode::{disassemble, CodeObject, Instr, IsaVersion};
     pub use crate::decompiler::{decompile, Decompiler};
     pub use crate::dynamo::{Dynamo, DynamoConfig};

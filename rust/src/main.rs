@@ -8,7 +8,7 @@
 
 use std::rc::Rc;
 
-use depyf::api::{backend_names, lookup_backend, Backend, Session};
+use depyf::api::{backend_names, lookup_backend, Backend, Capabilities, Session};
 use depyf::bytecode::{disassemble, IsaVersion};
 use depyf::corpus::{render_table1, run_table1};
 use depyf::decompiler::baselines::all_tools_rc;
@@ -41,8 +41,17 @@ usage:
 
 flags:
   --version <V>    ISA version: 3.8, 3.9, 3.10 or 3.11 (default 3.11)
-  --backend <name> A registered graph backend (built-ins: eager, xla;
-                   custom backends via depyf::api::register_backend)
+  --backend <name> A registered graph backend; custom backends plug in via
+                   depyf::api::register_backend. Built-ins:
+                     eager    node-by-node CPU reference executor
+                     xla      one PJRT executable per captured graph
+                     sharded  splits graphs at articulation points into
+                              several PJRT/eager executables and stitches
+                              outputs (dumps __plan_*.json + __hlo_*.txt)
+                     batched  pads/buckets the dynamic leading dim so one
+                              executable serves multiple guard entries
+                   sharded/batched lower to PJRT when the shared runtime is
+                   available and to the eager executor otherwise.
 
 exit codes: 0 success, 1 runtime error, 2 usage error
 ";
@@ -151,12 +160,20 @@ fn cmd_run(args: &[String]) -> Result<(), CliError> {
             None => lookup_backend("eager").expect("eager is always registered"),
         };
         let needs_runtime = backend.requires_runtime();
+        let wants_runtime = backend.capabilities().contains(Capabilities::USES_RUNTIME);
         let config = DynamoConfig { backend, ..Default::default() };
         let d = if needs_runtime {
             // Process-wide runtime: one PJRT client, one executable cache,
             // plus the persistent HLO cache shared across invocations.
             let rt = Runtime::shared()?;
             Dynamo::with_runtime(config, rt)
+        } else if wants_runtime {
+            // sharded/batched accelerate with PJRT when available but run
+            // fine on the eager executor when the client cannot start.
+            match Runtime::shared() {
+                Ok(rt) => Dynamo::with_runtime(config, rt),
+                Err(_) => Dynamo::new(config),
+            }
         } else {
             Dynamo::new(config)
         };
@@ -212,6 +229,13 @@ fn cmd_dump(args: &[String]) -> Result<(), CliError> {
             // reuse the persisted HLO cache index instead of spinning up
             // a cold client + cold cache every time.
             builder = builder.runtime(Runtime::shared()?);
+        } else if b.capabilities().contains(Capabilities::USES_RUNTIME) {
+            // Optional acceleration (sharded/batched): take the shared
+            // runtime when PJRT starts, fall back to eager partitions
+            // otherwise.
+            if let Ok(rt) = Runtime::shared() {
+                builder = builder.runtime(rt);
+            }
         }
         builder = builder.backend(b);
     }

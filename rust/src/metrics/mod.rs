@@ -54,8 +54,15 @@ impl Metrics {
     /// The `metrics.json` session artifact: every counter plus compile
     /// time, as a flat JSON object (keys are stable; values are u64).
     pub fn to_json(&self) -> String {
-        format!(
-            "{{\n  \"captures\": {},\n  \"cache_hits\": {},\n  \"cache_misses\": {},\n  \"graph_breaks\": {},\n  \"fallbacks\": {},\n  \"guard_checks\": {},\n  \"guard_failures\": {},\n  \"compile_ns\": {}\n}}\n",
+        self.to_json_with(None)
+    }
+
+    /// Like [`Metrics::to_json`] with one extra pre-rendered JSON field
+    /// appended — the session uses it to inline per-module backend stats
+    /// (`("modules", "[...]")`).
+    pub fn to_json_with(&self, extra: Option<(&str, &str)>) -> String {
+        let mut out = format!(
+            "{{\n  \"captures\": {},\n  \"cache_hits\": {},\n  \"cache_misses\": {},\n  \"graph_breaks\": {},\n  \"fallbacks\": {},\n  \"guard_checks\": {},\n  \"guard_failures\": {},\n  \"compile_ns\": {}",
             self.captures.get(),
             self.cache_hits.get(),
             self.cache_misses.get(),
@@ -64,7 +71,12 @@ impl Metrics {
             self.guard_checks.get(),
             self.guard_failures.get(),
             self.compile_ns.get(),
-        )
+        );
+        if let Some((key, value)) = extra {
+            out.push_str(&format!(",\n  \"{}\": {}", key, value));
+        }
+        out.push_str("\n}\n");
+        out
     }
 }
 
@@ -81,6 +93,15 @@ mod tests {
         let v = m.time_compile(|| 42);
         assert_eq!(v, 42);
         assert!(m.report().contains("captures=2"));
+    }
+
+    #[test]
+    fn json_with_extra_field_parses() {
+        let m = Metrics::new();
+        let text = m.to_json_with(Some(("modules", "[\n    {\"name\": \"g\"}\n  ]")));
+        let doc = crate::api::json::parse(&text).expect("valid json");
+        assert!(doc.get("modules").is_some(), "{}", text);
+        assert!(doc.get("compile_ns").is_some());
     }
 
     #[test]

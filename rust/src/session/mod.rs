@@ -1,73 +1,36 @@
-//! Legacy session entry points — thin deprecated shims over
-//! [`crate::api::Session`].
+//! Session entry points — re-exports of [`crate::api`]'s fluent builder.
 //!
-//! The user-facing API now lives in [`crate::api`]: one fluent builder
-//! subsumes the three old constructors,
+//! The pre-builder constructors (`DebugSession::prepare_debug`,
+//! `prepare_debug_with_runtime`, `debug`) were deprecated in the API
+//! redesign and are now **removed**; migrate as follows:
 //!
 //! ```text
 //! // old                                         new
 //! DebugSession::prepare_debug(dir, kind)    Session::builder().dump_to(dir)
-//!                                               .backend(kind.to_backend()).build()
+//!                                               .backend_named("eager").build()
 //! DebugSession::prepare_debug_with_runtime  Session::builder().dump_to(dir)
 //!                                               .backend_named("xla").runtime(rt).build()
 //! DebugSession::debug(dir)                  Session::builder().dump_to(dir)
 //!                                               .trace(TraceMode::StepGraphs).build()
 //! ```
 //!
-//! and `finish()` now returns typed [`crate::api::Artifact`]s plus writes a
-//! `manifest.json` index. The shims below keep old call sites compiling
-//! (against [`crate::api::DepyfError`] instead of `String` errors) and will
-//! be removed in a future release.
-
-use std::path::Path;
-use std::rc::Rc;
-
-use crate::api::{DepyfError, XlaBackend};
-use crate::backend::BackendKind;
-use crate::runtime::Runtime;
+//! `finish()` returns typed [`crate::api::Artifact`]s plus writes a
+//! `manifest.json` index.
 
 pub use crate::api::{Session, SessionBuilder, TraceMode};
 
-/// The pre-builder name for [`Session`].
-#[deprecated(note = "renamed to depyf::api::Session (same type)")]
-pub type DebugSession = Session;
-
-impl Session {
-    /// `with depyf.prepare_debug(dir)` — capture everything into `dir`.
-    #[deprecated(note = "use Session::builder().dump_to(dir).backend(kind.to_backend()).build()")]
-    pub fn prepare_debug(dir: impl AsRef<Path>, backend: BackendKind) -> Result<Session, DepyfError> {
-        Session::builder().dump_to(dir).backend(backend.to_backend()).build()
-    }
-
-    /// Same, with a PJRT runtime for the XLA backend.
-    #[deprecated(note = "use Session::builder().dump_to(dir).backend_named(\"xla\").runtime(rt).build()")]
-    pub fn prepare_debug_with_runtime(
-        dir: impl AsRef<Path>,
-        runtime: Rc<Runtime>,
-    ) -> Result<Session, DepyfError> {
-        Session::builder().dump_to(dir).backend(Rc::new(XlaBackend)).runtime(runtime).build()
-    }
-
-    /// `with depyf.debug()` — like prepare_debug but graphs run through the
-    /// traced eager executor so the debugger can step `__compiled_fn` lines.
-    #[deprecated(note = "use Session::builder().dump_to(dir).trace(TraceMode::StepGraphs).build()")]
-    pub fn debug(dir: impl AsRef<Path>) -> Result<Session, DepyfError> {
-        Session::builder().dump_to(dir).trace(TraceMode::StepGraphs).build()
-    }
-}
-
 #[cfg(test)]
-#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::api::ArtifactKind;
+    use std::path::PathBuf;
 
-    /// The deprecated constructors still work end-to-end.
+    /// The builder covers the old constructors' workflows end-to-end.
     #[test]
-    fn prepare_debug_shim_still_dumps() {
-        let dir = std::env::temp_dir().join(format!("depyf_shim_{}", std::process::id()));
+    fn builder_replaces_prepare_debug() {
+        let dir: PathBuf = std::env::temp_dir().join(format!("depyf_shimless_{}", std::process::id()));
         let _ = std::fs::remove_dir_all(&dir);
-        let mut s = DebugSession::prepare_debug(&dir, BackendKind::Eager).unwrap();
+        let mut s = Session::builder().dump_to(&dir).backend_named("eager").build().unwrap();
         s.run_source("main", "def f(x):\n    return (x * 2).sum()\nprint(f(torch.ones([3])).item())\n")
             .unwrap();
         let artifacts = s.finish().unwrap();
@@ -76,10 +39,11 @@ mod tests {
     }
 
     #[test]
-    fn debug_shim_enables_step_tracing() {
-        let dir = std::env::temp_dir().join(format!("depyf_shim_dbg_{}", std::process::id()));
+    fn builder_replaces_debug_step_tracing() {
+        let dir: PathBuf =
+            std::env::temp_dir().join(format!("depyf_shimless_dbg_{}", std::process::id()));
         let _ = std::fs::remove_dir_all(&dir);
-        let mut s = DebugSession::debug(&dir).unwrap();
+        let mut s = Session::builder().dump_to(&dir).trace(TraceMode::StepGraphs).build().unwrap();
         s.debugger.break_at("__compiled_fn_1.py", 2);
         s.run_source("main", "def f(x):\n    return (x * 2).sum()\nprint(f(torch.ones([3])).item())\n")
             .unwrap();

@@ -5,12 +5,67 @@
 //! These double as the **eager backend** semantics: graph execution in
 //! `backend::eager` calls straight into this module, and the XLA backend is
 //! cross-checked against it.
+//!
+//! Failures are reported as typed [`TensorError`]s so callers (backends,
+//! the graph IR, the VM) can distinguish shape mismatches from axis and
+//! data-range errors without string matching; `?` still flows into the
+//! `String`-erroring VM layers via `From<TensorError> for String`.
+
+use std::fmt;
 
 use super::Tensor;
 
-/// Broadcast two shapes (numpy rules). Returns the broadcast shape or an
-/// error message describing the mismatch.
-pub fn broadcast_shapes(a: &[usize], b: &[usize]) -> Result<Vec<usize>, String> {
+/// A typed tensor-library failure. Backends match on the variant (is this
+/// a shape problem or bad integer data?) instead of sniffing messages.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TensorError {
+    /// Incompatible shapes: broadcast mismatches, matmul dims, reshape
+    /// specs, parameter shapes.
+    Shape(String),
+    /// A reduce/permute axis out of range for the operand.
+    Axis { axis: usize, shape: Vec<usize> },
+    /// Integer-valued data out of range (embedding ids, class targets) —
+    /// the f32-only library's analogue of a dtype error.
+    Index(String),
+}
+
+impl TensorError {
+    fn shape(msg: impl Into<String>) -> TensorError {
+        TensorError::Shape(msg.into())
+    }
+
+    /// Stable variant tag ("shape" / "axis" / "index").
+    pub fn kind(&self) -> &'static str {
+        match self {
+            TensorError::Shape(_) => "shape",
+            TensorError::Axis { .. } => "axis",
+            TensorError::Index(_) => "index",
+        }
+    }
+}
+
+impl fmt::Display for TensorError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TensorError::Shape(m) | TensorError::Index(m) => f.write_str(m),
+            TensorError::Axis { axis, shape } => {
+                write!(f, "reduce axis {} out of range for {:?}", axis, shape)
+            }
+        }
+    }
+}
+
+impl std::error::Error for TensorError {}
+
+impl From<TensorError> for String {
+    fn from(e: TensorError) -> String {
+        e.to_string()
+    }
+}
+
+/// Broadcast two shapes (numpy rules). Returns the broadcast shape or a
+/// [`TensorError::Shape`] describing the mismatch.
+pub fn broadcast_shapes(a: &[usize], b: &[usize]) -> Result<Vec<usize>, TensorError> {
     let rank = a.len().max(b.len());
     let mut out = vec![0usize; rank];
     for i in 0..rank {
@@ -23,7 +78,7 @@ pub fn broadcast_shapes(a: &[usize], b: &[usize]) -> Result<Vec<usize>, String> 
         } else if db == 1 {
             da
         } else {
-            return Err(format!("cannot broadcast {:?} with {:?}", a, b));
+            return Err(TensorError::shape(format!("cannot broadcast {:?} with {:?}", a, b)));
         };
     }
     Ok(out)
@@ -63,7 +118,7 @@ fn broadcast_src_index(out_shape: &[usize], out_idx: usize, t: &Tensor) -> usize
 /// ([`Tensor::broadcast_strides`]) and walks the output with an odometer —
 /// source indices advance by per-axis deltas, no division or modulo in the
 /// element loop.
-pub fn binary_op(a: &Tensor, b: &Tensor, f: impl Fn(f32, f32) -> f32) -> Result<Tensor, String> {
+pub fn binary_op(a: &Tensor, b: &Tensor, f: impl Fn(f32, f32) -> f32) -> Result<Tensor, TensorError> {
     let out_shape = broadcast_shapes(a.shape(), b.shape())?;
     // Fast path: identical shapes.
     if a.shape() == b.shape() {
@@ -110,25 +165,25 @@ pub fn binary_op(a: &Tensor, b: &Tensor, f: impl Fn(f32, f32) -> f32) -> Result<
     Ok(Tensor::new(out_shape, data))
 }
 
-pub fn add(a: &Tensor, b: &Tensor) -> Result<Tensor, String> {
+pub fn add(a: &Tensor, b: &Tensor) -> Result<Tensor, TensorError> {
     binary_op(a, b, |x, y| x + y)
 }
-pub fn sub(a: &Tensor, b: &Tensor) -> Result<Tensor, String> {
+pub fn sub(a: &Tensor, b: &Tensor) -> Result<Tensor, TensorError> {
     binary_op(a, b, |x, y| x - y)
 }
-pub fn mul(a: &Tensor, b: &Tensor) -> Result<Tensor, String> {
+pub fn mul(a: &Tensor, b: &Tensor) -> Result<Tensor, TensorError> {
     binary_op(a, b, |x, y| x * y)
 }
-pub fn div(a: &Tensor, b: &Tensor) -> Result<Tensor, String> {
+pub fn div(a: &Tensor, b: &Tensor) -> Result<Tensor, TensorError> {
     binary_op(a, b, |x, y| x / y)
 }
-pub fn pow(a: &Tensor, b: &Tensor) -> Result<Tensor, String> {
+pub fn pow(a: &Tensor, b: &Tensor) -> Result<Tensor, TensorError> {
     binary_op(a, b, |x, y| x.powf(y))
 }
-pub fn maximum(a: &Tensor, b: &Tensor) -> Result<Tensor, String> {
+pub fn maximum(a: &Tensor, b: &Tensor) -> Result<Tensor, TensorError> {
     binary_op(a, b, f32::max)
 }
-pub fn minimum(a: &Tensor, b: &Tensor) -> Result<Tensor, String> {
+pub fn minimum(a: &Tensor, b: &Tensor) -> Result<Tensor, TensorError> {
     binary_op(a, b, f32::min)
 }
 
@@ -172,14 +227,14 @@ pub fn gelu(a: &Tensor) -> Tensor {
 
 /// Matrix multiply. Supports 2D @ 2D, and batched (leading dims must match
 /// exactly; the last two dims are contracted).
-pub fn matmul(a: &Tensor, b: &Tensor) -> Result<Tensor, String> {
+pub fn matmul(a: &Tensor, b: &Tensor) -> Result<Tensor, TensorError> {
     if a.rank() < 2 || b.rank() < 2 {
-        return Err(format!("matmul needs rank>=2 operands, got {:?} @ {:?}", a.shape(), b.shape()));
+        return Err(TensorError::shape(format!("matmul needs rank>=2 operands, got {:?} @ {:?}", a.shape(), b.shape())));
     }
     let (am, ak) = (a.shape()[a.rank() - 2], a.shape()[a.rank() - 1]);
     let (bk, bn) = (b.shape()[b.rank() - 2], b.shape()[b.rank() - 1]);
     if ak != bk {
-        return Err(format!("matmul inner-dim mismatch: {:?} @ {:?}", a.shape(), b.shape()));
+        return Err(TensorError::shape(format!("matmul inner-dim mismatch: {:?} @ {:?}", a.shape(), b.shape())));
     }
     let a_batch: Vec<usize> = a.shape()[..a.rank() - 2].to_vec();
     let b_batch: Vec<usize> = b.shape()[..b.rank() - 2].to_vec();
@@ -191,7 +246,7 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Result<Tensor, String> {
     } else if a_batch.is_empty() {
         b_batch.clone()
     } else {
-        return Err(format!("matmul batch mismatch: {:?} @ {:?}", a.shape(), b.shape()));
+        return Err(TensorError::shape(format!("matmul batch mismatch: {:?} @ {:?}", a.shape(), b.shape())));
     };
     let nbatch: usize = batch.iter().product::<usize>().max(1);
     let mut out = vec![0.0f32; nbatch * am * bn];
@@ -260,9 +315,9 @@ fn matmul_kernel(ad: &[f32], bd: &[f32], od: &mut [f32], am: usize, ak: usize, b
 }
 
 /// Transpose the last two axes.
-pub fn transpose(a: &Tensor) -> Result<Tensor, String> {
+pub fn transpose(a: &Tensor) -> Result<Tensor, TensorError> {
     if a.rank() < 2 {
-        return Err(format!("transpose needs rank>=2, got {:?}", a.shape()));
+        return Err(TensorError::shape(format!("transpose needs rank>=2, got {:?}", a.shape())));
     }
     let r = a.rank();
     let (m, n) = (a.shape()[r - 2], a.shape()[r - 1]);
@@ -283,9 +338,9 @@ pub fn transpose(a: &Tensor) -> Result<Tensor, String> {
 }
 
 /// General axis permutation.
-pub fn permute(a: &Tensor, perm: &[usize]) -> Result<Tensor, String> {
+pub fn permute(a: &Tensor, perm: &[usize]) -> Result<Tensor, TensorError> {
     if perm.len() != a.rank() {
-        return Err(format!("permute {:?} on rank-{} tensor", perm, a.rank()));
+        return Err(TensorError::shape(format!("permute {:?} on rank-{} tensor", perm, a.rank())));
     }
     let in_strides = a.strides();
     let out_shape: Vec<usize> = perm.iter().map(|&p| a.shape()[p]).collect();
@@ -309,7 +364,7 @@ pub fn permute(a: &Tensor, perm: &[usize]) -> Result<Tensor, String> {
 }
 
 /// Reduce over one axis (or all axes if `axis` is None) with a fold.
-fn reduce(a: &Tensor, axis: Option<usize>, init: f32, f: impl Fn(f32, f32) -> f32) -> Result<Tensor, String> {
+fn reduce(a: &Tensor, axis: Option<usize>, init: f32, f: impl Fn(f32, f32) -> f32) -> Result<Tensor, TensorError> {
     match axis {
         None => {
             let v = a.data().iter().fold(init, |acc, &x| f(acc, x));
@@ -317,7 +372,7 @@ fn reduce(a: &Tensor, axis: Option<usize>, init: f32, f: impl Fn(f32, f32) -> f3
         }
         Some(ax) => {
             if ax >= a.rank() {
-                return Err(format!("reduce axis {} out of range for {:?}", ax, a.shape()));
+                return Err(TensorError::Axis { axis: ax, shape: a.shape().to_vec() });
             }
             let outer: usize = a.shape()[..ax].iter().product::<usize>().max(1);
             let len = a.shape()[ax];
@@ -339,19 +394,19 @@ fn reduce(a: &Tensor, axis: Option<usize>, init: f32, f: impl Fn(f32, f32) -> f3
     }
 }
 
-pub fn sum(a: &Tensor, axis: Option<usize>) -> Result<Tensor, String> {
+pub fn sum(a: &Tensor, axis: Option<usize>) -> Result<Tensor, TensorError> {
     reduce(a, axis, 0.0, |x, y| x + y)
 }
 
-pub fn max_reduce(a: &Tensor, axis: Option<usize>) -> Result<Tensor, String> {
+pub fn max_reduce(a: &Tensor, axis: Option<usize>) -> Result<Tensor, TensorError> {
     reduce(a, axis, f32::NEG_INFINITY, f32::max)
 }
 
-pub fn min_reduce(a: &Tensor, axis: Option<usize>) -> Result<Tensor, String> {
+pub fn min_reduce(a: &Tensor, axis: Option<usize>) -> Result<Tensor, TensorError> {
     reduce(a, axis, f32::INFINITY, f32::min)
 }
 
-pub fn mean(a: &Tensor, axis: Option<usize>) -> Result<Tensor, String> {
+pub fn mean(a: &Tensor, axis: Option<usize>) -> Result<Tensor, TensorError> {
     let denom = match axis {
         None => a.numel() as f32,
         Some(ax) => a.shape()[ax] as f32,
@@ -361,7 +416,7 @@ pub fn mean(a: &Tensor, axis: Option<usize>) -> Result<Tensor, String> {
 }
 
 /// Softmax over the last axis, numerically stabilized.
-pub fn softmax(a: &Tensor) -> Result<Tensor, String> {
+pub fn softmax(a: &Tensor) -> Result<Tensor, TensorError> {
     if a.rank() == 0 {
         return Ok(Tensor::scalar(1.0));
     }
@@ -385,10 +440,10 @@ pub fn softmax(a: &Tensor) -> Result<Tensor, String> {
 }
 
 /// Layer normalization over the last axis with learned scale/shift.
-pub fn layernorm(x: &Tensor, gamma: &Tensor, beta: &Tensor, eps: f32) -> Result<Tensor, String> {
-    let n = *x.shape().last().ok_or("layernorm on rank-0")?;
+pub fn layernorm(x: &Tensor, gamma: &Tensor, beta: &Tensor, eps: f32) -> Result<Tensor, TensorError> {
+    let n = *x.shape().last().ok_or_else(|| TensorError::shape("layernorm on rank-0"))?;
     if gamma.numel() != n || beta.numel() != n {
-        return Err(format!("layernorm param mismatch: x last dim {}, gamma {}, beta {}", n, gamma.numel(), beta.numel()));
+        return Err(TensorError::shape(format!("layernorm param mismatch: x last dim {}, gamma {}, beta {}", n, gamma.numel(), beta.numel())));
     }
     let rows = x.numel() / n;
     let mut out = vec![0.0f32; x.numel()];
@@ -406,16 +461,16 @@ pub fn layernorm(x: &Tensor, gamma: &Tensor, beta: &Tensor, eps: f32) -> Result<
 
 /// Embedding lookup: `ids` is an integer-valued f32 tensor; gathers rows of
 /// `table` (shape [vocab, dim]).
-pub fn embedding(table: &Tensor, ids: &Tensor) -> Result<Tensor, String> {
+pub fn embedding(table: &Tensor, ids: &Tensor) -> Result<Tensor, TensorError> {
     if table.rank() != 2 {
-        return Err(format!("embedding table must be rank 2, got {:?}", table.shape()));
+        return Err(TensorError::shape(format!("embedding table must be rank 2, got {:?}", table.shape())));
     }
     let (vocab, dim) = (table.shape()[0], table.shape()[1]);
     let mut out = Vec::with_capacity(ids.numel() * dim);
     for &idf in ids.data() {
         let id = idf as usize;
         if id >= vocab {
-            return Err(format!("embedding id {} out of vocab {}", id, vocab));
+            return Err(TensorError::Index(format!("embedding id {} out of vocab {}", id, vocab)));
         }
         out.extend_from_slice(&table.data()[id * dim..(id + 1) * dim]);
     }
@@ -426,11 +481,11 @@ pub fn embedding(table: &Tensor, ids: &Tensor) -> Result<Tensor, String> {
 
 /// Mean cross-entropy between logits [.., n, vocab] and integer targets
 /// [.., n] (f32-encoded).
-pub fn cross_entropy(logits: &Tensor, targets: &Tensor) -> Result<Tensor, String> {
-    let vocab = *logits.shape().last().ok_or("cross_entropy on rank-0 logits")?;
+pub fn cross_entropy(logits: &Tensor, targets: &Tensor) -> Result<Tensor, TensorError> {
+    let vocab = *logits.shape().last().ok_or_else(|| TensorError::shape("cross_entropy on rank-0 logits"))?;
     let rows = logits.numel() / vocab;
     if targets.numel() != rows {
-        return Err(format!("cross_entropy: {} rows vs {} targets", rows, targets.numel()));
+        return Err(TensorError::shape(format!("cross_entropy: {} rows vs {} targets", rows, targets.numel())));
     }
     let mut total = 0.0f32;
     for r in 0..rows {
@@ -439,7 +494,7 @@ pub fn cross_entropy(logits: &Tensor, targets: &Tensor) -> Result<Tensor, String
         let logz = m + row.iter().map(|&x| (x - m).exp()).sum::<f32>().ln();
         let t = targets.data()[r] as usize;
         if t >= vocab {
-            return Err(format!("target {} out of vocab {}", t, vocab));
+            return Err(TensorError::Index(format!("target {} out of vocab {}", t, vocab)));
         }
         total += logz - row[t];
     }
@@ -447,17 +502,17 @@ pub fn cross_entropy(logits: &Tensor, targets: &Tensor) -> Result<Tensor, String
 }
 
 /// Resolve a reshape spec that may contain a single `-1` wildcard.
-pub fn reshape_infer(numel: usize, spec: &[i64]) -> Result<Vec<usize>, String> {
+pub fn reshape_infer(numel: usize, spec: &[i64]) -> Result<Vec<usize>, TensorError> {
     let mut known: usize = 1;
     let mut wild = None;
     for (i, &d) in spec.iter().enumerate() {
         if d == -1 {
             if wild.is_some() {
-                return Err("reshape: more than one -1".into());
+                return Err(TensorError::shape("reshape: more than one -1"));
             }
             wild = Some(i);
         } else if d < 0 {
-            return Err(format!("reshape: bad dim {}", d));
+            return Err(TensorError::shape(format!("reshape: bad dim {}", d)));
         } else {
             known *= d as usize;
         }
@@ -465,11 +520,11 @@ pub fn reshape_infer(numel: usize, spec: &[i64]) -> Result<Vec<usize>, String> {
     let mut out: Vec<usize> = spec.iter().map(|&d| if d < 0 { 0 } else { d as usize }).collect();
     if let Some(i) = wild {
         if known == 0 || numel % known != 0 {
-            return Err(format!("reshape: cannot infer -1 for numel {} with {:?}", numel, spec));
+            return Err(TensorError::shape(format!("reshape: cannot infer -1 for numel {} with {:?}", numel, spec)));
         }
         out[i] = numel / known;
     } else if known != numel {
-        return Err(format!("reshape: {:?} incompatible with numel {}", spec, numel));
+        return Err(TensorError::shape(format!("reshape: {:?} incompatible with numel {}", spec, numel)));
     }
     Ok(out)
 }

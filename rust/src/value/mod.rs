@@ -10,7 +10,75 @@ use std::fmt;
 use std::rc::Rc;
 
 use crate::bytecode::CodeObject;
-use crate::tensor::Tensor;
+use crate::tensor::{Tensor, TensorError};
+
+/// A typed value-model failure: conversions, truthiness, ordering, dict
+/// hashing and the VM method tables all report through this enum, so
+/// callers can distinguish a type error from a tensor shape error without
+/// string matching. `From<ValueError> for String` keeps `?` flowing into
+/// the `String`-erroring VM dispatch layers.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ValueError {
+    /// A conversion saw the wrong type (`as_int` & co).
+    Type { expected: &'static str, got: &'static str },
+    /// Dict key of an unhashable type.
+    Unhashable(&'static str),
+    /// `bool()` of a multi-element tensor.
+    AmbiguousTruth,
+    /// `<` between unorderable types.
+    Unordered { lhs: &'static str, rhs: &'static str },
+    /// NaN made an ordering undefined.
+    NanOrder,
+    /// A tensor op failed underneath a value-level operation.
+    Tensor(TensorError),
+    /// Everything else the method tables report (KeyError, arity, missing
+    /// attributes/methods, index range...), message-formatted.
+    Msg(String),
+}
+
+impl fmt::Display for ValueError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ValueError::Type { expected, got } => write!(f, "expected {}, got {}", expected, got),
+            ValueError::Unhashable(t) => write!(f, "unhashable dict key: {}", t),
+            ValueError::AmbiguousTruth => {
+                f.write_str("Boolean value of Tensor with more than one element is ambiguous")
+            }
+            ValueError::Unordered { lhs, rhs } => {
+                write!(f, "'<' not supported between {} and {}", lhs, rhs)
+            }
+            ValueError::NanOrder => f.write_str("nan comparison"),
+            ValueError::Tensor(e) => e.fmt(f),
+            ValueError::Msg(m) => f.write_str(m),
+        }
+    }
+}
+
+impl std::error::Error for ValueError {}
+
+impl From<TensorError> for ValueError {
+    fn from(e: TensorError) -> ValueError {
+        ValueError::Tensor(e)
+    }
+}
+
+impl From<String> for ValueError {
+    fn from(m: String) -> ValueError {
+        ValueError::Msg(m)
+    }
+}
+
+impl From<&str> for ValueError {
+    fn from(m: &str) -> ValueError {
+        ValueError::Msg(m.to_string())
+    }
+}
+
+impl From<ValueError> for String {
+    fn from(e: ValueError) -> String {
+        e.to_string()
+    }
+}
 
 /// A runtime value.
 #[derive(Clone)]
@@ -53,12 +121,12 @@ pub enum DictKey {
 }
 
 impl DictKey {
-    pub fn from_value(v: &Value) -> Result<DictKey, String> {
+    pub fn from_value(v: &Value) -> Result<DictKey, ValueError> {
         match v {
             Value::Int(i) => Ok(DictKey::Int(*i)),
             Value::Str(s) => Ok(DictKey::Str(s.to_string())),
             Value::Bool(b) => Ok(DictKey::Bool(*b)),
-            other => Err(format!("unhashable dict key: {}", other.type_name())),
+            other => Err(ValueError::Unhashable(other.type_name())),
         }
     }
 
@@ -160,7 +228,7 @@ impl Value {
     }
 
     /// Python truthiness.
-    pub fn truthy(&self) -> Result<bool, String> {
+    pub fn truthy(&self) -> Result<bool, ValueError> {
         Ok(match self {
             Value::None => false,
             Value::Bool(b) => *b,
@@ -179,7 +247,7 @@ impl Value {
             }
             Value::Tensor(t) => {
                 if t.numel() != 1 {
-                    return Err("Boolean value of Tensor with more than one element is ambiguous".into());
+                    return Err(ValueError::AmbiguousTruth);
                 }
                 t.item() != 0.0
             }
@@ -187,30 +255,30 @@ impl Value {
         })
     }
 
-    pub fn as_int(&self) -> Result<i64, String> {
+    pub fn as_int(&self) -> Result<i64, ValueError> {
         match self {
             Value::Int(i) => Ok(*i),
             Value::Bool(b) => Ok(*b as i64),
             Value::Float(f) => Ok(*f as i64),
             Value::Tensor(t) if t.numel() == 1 => Ok(t.item() as i64),
-            other => Err(format!("expected int, got {}", other.type_name())),
+            other => Err(ValueError::Type { expected: "int", got: other.type_name() }),
         }
     }
 
-    pub fn as_float(&self) -> Result<f64, String> {
+    pub fn as_float(&self) -> Result<f64, ValueError> {
         match self {
             Value::Int(i) => Ok(*i as f64),
             Value::Float(f) => Ok(*f),
             Value::Bool(b) => Ok(*b as i64 as f64),
             Value::Tensor(t) if t.numel() == 1 => Ok(t.item() as f64),
-            other => Err(format!("expected float, got {}", other.type_name())),
+            other => Err(ValueError::Type { expected: "float", got: other.type_name() }),
         }
     }
 
-    pub fn as_tensor(&self) -> Result<Rc<Tensor>, String> {
+    pub fn as_tensor(&self) -> Result<Rc<Tensor>, ValueError> {
         match self {
             Value::Tensor(t) => Ok(Rc::clone(t)),
-            other => Err(format!("expected Tensor, got {}", other.type_name())),
+            other => Err(ValueError::Type { expected: "Tensor", got: other.type_name() }),
         }
     }
 
@@ -244,12 +312,12 @@ impl Value {
     }
 
     /// Python `<` comparison for orderable types.
-    pub fn cmp_value(&self, other: &Value) -> Result<Ordering, String> {
+    pub fn cmp_value(&self, other: &Value) -> Result<Ordering, ValueError> {
         match (self, other) {
             (Value::Int(a), Value::Int(b)) => Ok(a.cmp(b)),
-            (Value::Float(a), Value::Float(b)) => a.partial_cmp(b).ok_or_else(|| "nan comparison".into()),
-            (Value::Int(a), Value::Float(b)) => (*a as f64).partial_cmp(b).ok_or_else(|| "nan comparison".into()),
-            (Value::Float(a), Value::Int(b)) => a.partial_cmp(&(*b as f64)).ok_or_else(|| "nan comparison".into()),
+            (Value::Float(a), Value::Float(b)) => a.partial_cmp(b).ok_or(ValueError::NanOrder),
+            (Value::Int(a), Value::Float(b)) => (*a as f64).partial_cmp(b).ok_or(ValueError::NanOrder),
+            (Value::Float(a), Value::Int(b)) => a.partial_cmp(&(*b as f64)).ok_or(ValueError::NanOrder),
             (Value::Bool(a), Value::Bool(b)) => Ok(a.cmp(b)),
             (Value::Bool(a), Value::Int(b)) => Ok((*a as i64).cmp(b)),
             (Value::Int(a), Value::Bool(b)) => Ok(a.cmp(&(*b as i64))),
@@ -273,7 +341,7 @@ impl Value {
                 }
                 Ok(a.len().cmp(&b.len()))
             }
-            _ => Err(format!("'<' not supported between {} and {}", self.type_name(), other.type_name())),
+            _ => Err(ValueError::Unordered { lhs: self.type_name(), rhs: other.type_name() }),
         }
     }
 

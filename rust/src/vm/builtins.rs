@@ -258,7 +258,7 @@ pub fn install(vm: &Vm) {
                     }
                 });
                 match err {
-                    Some(e) => Err(e),
+                    Some(e) => Err(e.into()),
                     None => Ok(Value::list(items)),
                 }
             }

@@ -41,7 +41,7 @@ pub fn call_value(vm: &Vm, callee: &Value, args: &[Value]) -> Result<Value, VmEr
         Value::Builtin(b) => (b.func)(args).map_err(VmError::new),
         Value::BoundMethod(m) => call_method_on(vm, &m.0, &m.1, args).map_err(VmError::new),
         Value::CompiledGraph(g) => {
-            let tensors: Result<Vec<Rc<Tensor>>, String> = args.iter().map(|a| a.as_tensor()).collect();
+            let tensors: Result<Vec<Rc<Tensor>>, crate::value::ValueError> = args.iter().map(|a| a.as_tensor()).collect();
             let outs = g.call(&tensors.map_err(VmError::new)?).map_err(|e| VmError::new(e.to_string()))?;
             Ok(Value::tuple(outs.into_iter().map(Value::tensor).collect()))
         }
@@ -220,7 +220,7 @@ fn run_frame(
             Instr::LoadAttr(n) => {
                 let obj = pop!();
                 let aname = &code.names[*n as usize];
-                stack.push(get_attr(&obj, aname).map_err(|m| fail(m, cur))?);
+                stack.push(get_attr(&obj, aname).map_err(|m| fail(m.into(), cur))?);
             }
             Instr::LoadMethod(n) => {
                 let obj = pop!();
@@ -237,13 +237,13 @@ fn run_frame(
             Instr::BinarySubscr => {
                 let idx = pop!();
                 let obj = pop!();
-                stack.push(apply_subscript(&obj, &idx).map_err(|m| fail(m, cur))?);
+                stack.push(apply_subscript(&obj, &idx).map_err(|m| fail(m.into(), cur))?);
             }
             Instr::StoreSubscr => {
                 let idx = pop!();
                 let obj = pop!();
                 let val = pop!();
-                store_subscript(&obj, &idx, val).map_err(|m| fail(m, cur))?;
+                store_subscript(&obj, &idx, val).map_err(|m| fail(m.into(), cur))?;
             }
             Instr::BuildSlice(n) => {
                 let step = if *n == 3 { pop!() } else { Value::None };
@@ -277,12 +277,12 @@ fn run_frame(
             Instr::Binary(op) => {
                 let b = pop!();
                 let a = pop!();
-                stack.push(binary_op_values(*op, &a, &b).map_err(|m| fail(m, cur))?);
+                stack.push(binary_op_values(*op, &a, &b).map_err(|m| fail(m.into(), cur))?);
             }
             Instr::Unary(op) => {
                 let a = pop!();
                 let v = match op {
-                    UnOp::Not => Value::Bool(!a.truthy().map_err(|m| fail(m, cur))?),
+                    UnOp::Not => Value::Bool(!a.truthy().map_err(|m| fail(m.into(), cur))?),
                     UnOp::Neg => match &a {
                         Value::Int(i) => Value::Int(-i),
                         Value::Float(f) => Value::Float(-f),
@@ -301,13 +301,13 @@ fn run_frame(
             Instr::Compare(c) => {
                 let b = pop!();
                 let a = pop!();
-                let r = compare_values(*c, &a, &b).map_err(|m| fail(m, cur))?;
+                let r = compare_values(*c, &a, &b).map_err(|m| fail(m.into(), cur))?;
                 stack.push(r);
             }
             Instr::ContainsOp(invert) => {
                 let container = pop!();
                 let item = pop!();
-                let found = contains(&container, &item).map_err(|m| fail(m, cur))?;
+                let found = contains(&container, &item).map_err(|m| fail(m.into(), cur))?;
                 stack.push(Value::Bool(found != *invert));
             }
             Instr::IsOp(invert) => {
@@ -320,19 +320,19 @@ fn run_frame(
             }
             Instr::PopJumpIfFalse(t) => {
                 let v = pop!();
-                if !v.truthy().map_err(|m| fail(m, cur))? {
+                if !v.truthy().map_err(|m| fail(m.into(), cur))? {
                     ip = *t as usize;
                 }
             }
             Instr::PopJumpIfTrue(t) => {
                 let v = pop!();
-                if v.truthy().map_err(|m| fail(m, cur))? {
+                if v.truthy().map_err(|m| fail(m.into(), cur))? {
                     ip = *t as usize;
                 }
             }
             Instr::JumpIfFalseOrPop(t) => {
                 let v = stack.last().ok_or_else(|| fail("stack underflow".into(), cur))?;
-                if !v.truthy().map_err(|m| fail(m, cur))? {
+                if !v.truthy().map_err(|m| fail(m.into(), cur))? {
                     ip = *t as usize;
                 } else {
                     stack.pop();
@@ -340,7 +340,7 @@ fn run_frame(
             }
             Instr::JumpIfTrueOrPop(t) => {
                 let v = stack.last().ok_or_else(|| fail("stack underflow".into(), cur))?;
-                if v.truthy().map_err(|m| fail(m, cur))? {
+                if v.truthy().map_err(|m| fail(m.into(), cur))? {
                     ip = *t as usize;
                 } else {
                     stack.pop();
@@ -348,7 +348,7 @@ fn run_frame(
             }
             Instr::GetIter => {
                 let v = pop!();
-                stack.push(make_iter(&v).map_err(|m| fail(m, cur))?);
+                stack.push(make_iter(&v).map_err(|m| fail(m.into(), cur))?);
             }
             Instr::ForIter(t) => {
                 let Some(Value::Iter(it)) = stack.last() else {
@@ -364,7 +364,7 @@ fn run_frame(
                 }
             }
             Instr::Call(n) => {
-                let argv: Vec<Value> = drain_top(&mut stack, *n as usize).map_err(|m| fail(m, cur))?;
+                let argv: Vec<Value> = drain_top(&mut stack, *n as usize).map_err(|m| fail(m.into(), cur))?;
                 let callee = pop!();
                 let r = call_value(vm, &callee, &argv).map_err(|mut e| {
                     e.traceback.push((name.to_string(), code.line_of(cur)));
@@ -373,7 +373,7 @@ fn run_frame(
                 stack.push(r);
             }
             Instr::CallMethod(n) => {
-                let argv: Vec<Value> = drain_top(&mut stack, *n as usize).map_err(|m| fail(m, cur))?;
+                let argv: Vec<Value> = drain_top(&mut stack, *n as usize).map_err(|m| fail(m.into(), cur))?;
                 let callee = pop!();
                 let r = call_value(vm, &callee, &argv).map_err(|mut e| {
                     e.traceback.push((name.to_string(), code.line_of(cur)));
@@ -411,22 +411,22 @@ fn run_frame(
                 return Ok(pop!());
             }
             Instr::BuildList(n) => {
-                let items = drain_top(&mut stack, *n as usize).map_err(|m| fail(m, cur))?;
+                let items = drain_top(&mut stack, *n as usize).map_err(|m| fail(m.into(), cur))?;
                 stack.push(Value::list(items));
             }
             Instr::BuildTuple(n) => {
-                let items = drain_top(&mut stack, *n as usize).map_err(|m| fail(m, cur))?;
+                let items = drain_top(&mut stack, *n as usize).map_err(|m| fail(m.into(), cur))?;
                 stack.push(Value::tuple(items));
             }
             Instr::BuildMap(n) => {
-                let mut kvs = drain_top(&mut stack, 2 * *n as usize).map_err(|m| fail(m, cur))?;
+                let mut kvs = drain_top(&mut stack, 2 * *n as usize).map_err(|m| fail(m.into(), cur))?;
                 let d = Value::dict();
                 if let Value::Dict(map) = &d {
                     let mut m = map.borrow_mut();
                     for _ in 0..*n {
                         let k = kvs.remove(0);
                         let v = kvs.remove(0);
-                        let key = crate::value::DictKey::from_value(&k).map_err(|e| fail(e, cur))?;
+                        let key = crate::value::DictKey::from_value(&k).map_err(|e| fail(e.into(), cur))?;
                         m.insert(key, v);
                     }
                 }

@@ -1,14 +1,17 @@
 //! Attribute access, subscripting, and built-in methods on values
-//! (list/str/dict/tuple/tensor method tables).
+//! (list/str/dict/tuple/tensor method tables). Failures are typed
+//! [`ValueError`]s (wrapping [`crate::tensor::TensorError`] where a tensor
+//! op is underneath), so callers can tell a shape error from a dtype/type
+//! error without string matching.
 
 use std::rc::Rc;
 
 use super::Vm;
 use crate::tensor::{self, Tensor};
-use crate::value::{DictKey, Value};
+use crate::value::{DictKey, Value, ValueError};
 
 /// `obj.name` for non-call attribute access.
-pub fn get_attr(obj: &Value, name: &str) -> Result<Value, String> {
+pub fn get_attr(obj: &Value, name: &str) -> Result<Value, ValueError> {
     match (obj, name) {
         (Value::Tensor(t), "shape") => Ok(Value::tuple(t.shape().iter().map(|&d| Value::Int(d as i64)).collect())),
         (Value::Tensor(t), "ndim") => Ok(Value::Int(t.rank() as i64)),
@@ -17,18 +20,18 @@ pub fn get_attr(obj: &Value, name: &str) -> Result<Value, String> {
             .borrow()
             .get(&DictKey::Str(name.to_string()))
             .cloned()
-            .ok_or_else(|| format!("'dict' object has no attribute '{}'", name)),
+            .ok_or_else(|| ValueError::Msg(format!("'dict' object has no attribute '{}'", name))),
         (Value::Func(f), "__name__") => Ok(Value::str(&f.name)),
         // Unbound method reference (e.g. `m = x.relu`).
         (Value::Tensor(_) | Value::List(_) | Value::Str(_) | Value::Tuple(_), _) => {
             Ok(Value::BoundMethod(Rc::new((obj.clone(), name.to_string()))))
         }
-        (other, _) => Err(format!("'{}' object has no attribute '{}'", other.type_name(), name)),
+        (other, _) => Err(ValueError::Msg(format!("'{}' object has no attribute '{}'", other.type_name(), name))),
     }
 }
 
 /// Resolve Python slice semantics into concrete indices.
-fn slice_indices(len: i64, start: &Value, stop: &Value, step: &Value) -> Result<Vec<i64>, String> {
+fn slice_indices(len: i64, start: &Value, stop: &Value, step: &Value) -> Result<Vec<i64>, ValueError> {
     let step = match step {
         Value::None => 1,
         v => v.as_int()?,
@@ -36,7 +39,7 @@ fn slice_indices(len: i64, start: &Value, stop: &Value, step: &Value) -> Result<
     if step == 0 {
         return Err("slice step cannot be zero".into());
     }
-    let norm = |v: &Value, default: i64| -> Result<i64, String> {
+    let norm = |v: &Value, default: i64| -> Result<i64, ValueError> {
         match v {
             Value::None => Ok(default),
             other => {
@@ -67,18 +70,18 @@ fn slice_indices(len: i64, start: &Value, stop: &Value, step: &Value) -> Result<
     Ok(idx)
 }
 
-fn norm_index(len: usize, i: i64) -> Result<usize, String> {
+fn norm_index(len: usize, i: i64) -> Result<usize, ValueError> {
     let n = len as i64;
     let j = if i < 0 { i + n } else { i };
     if j < 0 || j >= n {
-        Err(format!("index {} out of range (len {})", i, len))
+        Err(ValueError::Msg(format!("index {} out of range (len {})", i, len)))
     } else {
         Ok(j as usize)
     }
 }
 
 /// `obj[idx]`
-pub fn apply_subscript(obj: &Value, idx: &Value) -> Result<Value, String> {
+pub fn apply_subscript(obj: &Value, idx: &Value) -> Result<Value, ValueError> {
     match obj {
         Value::List(l) => match idx {
             Value::Slice(s) => {
@@ -116,7 +119,7 @@ pub fn apply_subscript(obj: &Value, idx: &Value) -> Result<Value, String> {
         }
         Value::Dict(d) => {
             let k = DictKey::from_value(idx)?;
-            d.borrow().get(&k).cloned().ok_or_else(|| format!("KeyError: {}", idx.repr()))
+            d.borrow().get(&k).cloned().ok_or_else(|| ValueError::Msg(format!("KeyError: {}", idx.repr())))
         }
         Value::Tensor(t) => {
             // Integer index along the first axis.
@@ -130,12 +133,12 @@ pub fn apply_subscript(obj: &Value, idx: &Value) -> Result<Value, String> {
             let data = t.data()[j * inner..(j + 1) * inner].to_vec();
             Ok(Value::tensor(Tensor::new(t.shape()[1..].to_vec(), data)))
         }
-        other => Err(format!("'{}' object is not subscriptable", other.type_name())),
+        other => Err(ValueError::Msg(format!("'{}' object is not subscriptable", other.type_name()))),
     }
 }
 
 /// `obj[idx] = val`
-pub fn store_subscript(obj: &Value, idx: &Value, val: Value) -> Result<(), String> {
+pub fn store_subscript(obj: &Value, idx: &Value, val: Value) -> Result<(), ValueError> {
     match obj {
         Value::List(l) => {
             let i = norm_index(l.borrow().len(), idx.as_int()?)?;
@@ -147,37 +150,37 @@ pub fn store_subscript(obj: &Value, idx: &Value, val: Value) -> Result<(), Strin
             d.borrow_mut().insert(k, val);
             Ok(())
         }
-        other => Err(format!("'{}' object does not support item assignment", other.type_name())),
+        other => Err(ValueError::Msg(format!("'{}' object does not support item assignment", other.type_name()))),
     }
 }
 
 /// Dispatch `recv.name(args)`.
-pub fn call_method_on(_vm: &Vm, recv: &Value, name: &str, args: &[Value]) -> Result<Value, String> {
+pub fn call_method_on(_vm: &Vm, recv: &Value, name: &str, args: &[Value]) -> Result<Value, ValueError> {
     call_method_pure(recv, name, args)
 }
 
 /// Method dispatch without a VM handle (none of the built-in methods need
 /// one) — used by dynamo's constant folder too.
-pub fn call_method_pure(recv: &Value, name: &str, args: &[Value]) -> Result<Value, String> {
+pub fn call_method_pure(recv: &Value, name: &str, args: &[Value]) -> Result<Value, ValueError> {
     match recv {
         Value::List(l) => list_method(l, name, args),
         Value::Str(s) => str_method(s, name, args),
         Value::Dict(d) => dict_method(d, name, args),
         Value::Tuple(t) => tuple_method(t, name, args),
         Value::Tensor(t) => tensor_method(t, name, args),
-        other => Err(format!("'{}' object has no method '{}'", other.type_name(), name)),
+        other => Err(ValueError::Msg(format!("'{}' object has no method '{}'", other.type_name(), name))),
     }
 }
 
-fn arity(args: &[Value], lo: usize, hi: usize, name: &str) -> Result<(), String> {
+fn arity(args: &[Value], lo: usize, hi: usize, name: &str) -> Result<(), ValueError> {
     if args.len() < lo || args.len() > hi {
-        Err(format!("{}() takes {}..{} arguments, got {}", name, lo, hi, args.len()))
+        Err(ValueError::Msg(format!("{}() takes {}..{} arguments, got {}", name, lo, hi, args.len())))
     } else {
         Ok(())
     }
 }
 
-fn list_method(l: &Rc<std::cell::RefCell<Vec<Value>>>, name: &str, args: &[Value]) -> Result<Value, String> {
+fn list_method(l: &Rc<std::cell::RefCell<Vec<Value>>>, name: &str, args: &[Value]) -> Result<Value, ValueError> {
     match name {
         "append" => {
             arity(args, 1, 1, name)?;
@@ -192,7 +195,7 @@ fn list_method(l: &Rc<std::cell::RefCell<Vec<Value>>>, name: &str, args: &[Value
                     l.borrow_mut().extend(items);
                 }
                 Value::Tuple(t) => l.borrow_mut().extend(t.iter().cloned()),
-                other => return Err(format!("extend expects list/tuple, got {}", other.type_name())),
+                other => return Err(ValueError::Msg(format!("extend expects list/tuple, got {}", other.type_name()))),
             }
             Ok(Value::None)
         }
@@ -219,7 +222,7 @@ fn list_method(l: &Rc<std::cell::RefCell<Vec<Value>>>, name: &str, args: &[Value
                 .iter()
                 .position(|v| v.eq_value(&args[0]))
                 .map(|i| Value::Int(i as i64))
-                .ok_or_else(|| format!("{} is not in list", args[0].repr()))
+                .ok_or_else(|| ValueError::Msg(format!("{} is not in list", args[0].repr())))
         }
         "count" => {
             arity(args, 1, 1, name)?;
@@ -246,11 +249,11 @@ fn list_method(l: &Rc<std::cell::RefCell<Vec<Value>>>, name: &str, args: &[Value
                 None => Ok(Value::None),
             }
         }
-        other => Err(format!("'list' object has no method '{}'", other)),
+        other => Err(ValueError::Msg(format!("'list' object has no method '{}'", other))),
     }
 }
 
-fn str_method(s: &Rc<str>, name: &str, args: &[Value]) -> Result<Value, String> {
+fn str_method(s: &Rc<str>, name: &str, args: &[Value]) -> Result<Value, ValueError> {
     match name {
         "upper" => Ok(Value::str(&s.to_uppercase())),
         "lower" => Ok(Value::str(&s.to_lowercase())),
@@ -259,21 +262,21 @@ fn str_method(s: &Rc<str>, name: &str, args: &[Value]) -> Result<Value, String> 
             arity(args, 1, 1, name)?;
             match &args[0] {
                 Value::Str(p) => Ok(Value::Bool(s.starts_with(&**p))),
-                other => Err(format!("startswith expects str, got {}", other.type_name())),
+                other => Err(ValueError::Msg(format!("startswith expects str, got {}", other.type_name()))),
             }
         }
         "endswith" => {
             arity(args, 1, 1, name)?;
             match &args[0] {
                 Value::Str(p) => Ok(Value::Bool(s.ends_with(&**p))),
-                other => Err(format!("endswith expects str, got {}", other.type_name())),
+                other => Err(ValueError::Msg(format!("endswith expects str, got {}", other.type_name()))),
             }
         }
         "split" => {
             let parts: Vec<Value> = match args.first() {
                 None => s.split_whitespace().map(Value::str).collect(),
                 Some(Value::Str(sep)) => s.split(&**sep).map(Value::str).collect(),
-                Some(other) => return Err(format!("split expects str, got {}", other.type_name())),
+                Some(other) => return Err(ValueError::Msg(format!("split expects str, got {}", other.type_name()))),
             };
             Ok(Value::list(parts))
         }
@@ -281,17 +284,17 @@ fn str_method(s: &Rc<str>, name: &str, args: &[Value]) -> Result<Value, String> 
             arity(args, 1, 1, name)?;
             match &args[0] {
                 Value::List(l) => {
-                    let parts: Result<Vec<String>, String> = l
+                    let parts: Result<Vec<String>, ValueError> = l
                         .borrow()
                         .iter()
                         .map(|v| match v {
                             Value::Str(x) => Ok(x.to_string()),
-                            other => Err(format!("join expects strings, got {}", other.type_name())),
+                            other => Err(ValueError::Msg(format!("join expects strings, got {}", other.type_name()))),
                         })
                         .collect();
                     Ok(Value::str(&parts?.join(s)))
                 }
-                other => Err(format!("join expects list, got {}", other.type_name())),
+                other => Err(ValueError::Msg(format!("join expects list, got {}", other.type_name()))),
             }
         }
         "replace" => {
@@ -301,7 +304,7 @@ fn str_method(s: &Rc<str>, name: &str, args: &[Value]) -> Result<Value, String> 
                 _ => Err("replace expects two strings".into()),
             }
         }
-        other => Err(format!("'str' object has no method '{}'", other)),
+        other => Err(ValueError::Msg(format!("'str' object has no method '{}'", other))),
     }
 }
 
@@ -309,7 +312,7 @@ fn dict_method(
     d: &Rc<std::cell::RefCell<std::collections::BTreeMap<DictKey, Value>>>,
     name: &str,
     args: &[Value],
-) -> Result<Value, String> {
+) -> Result<Value, ValueError> {
     match name {
         "get" => {
             arity(args, 1, 2, name)?;
@@ -324,52 +327,52 @@ fn dict_method(
             let k = DictKey::from_value(&args[0])?;
             match d.borrow_mut().remove(&k) {
                 Some(v) => Ok(v),
-                None => args.get(1).cloned().ok_or_else(|| format!("KeyError: {}", args[0].repr())),
+                None => args.get(1).cloned().ok_or_else(|| ValueError::Msg(format!("KeyError: {}", args[0].repr()))),
             }
         }
-        other => Err(format!("'dict' object has no method '{}'", other)),
+        other => Err(ValueError::Msg(format!("'dict' object has no method '{}'", other))),
     }
 }
 
-fn tuple_method(t: &Rc<Vec<Value>>, name: &str, args: &[Value]) -> Result<Value, String> {
+fn tuple_method(t: &Rc<Vec<Value>>, name: &str, args: &[Value]) -> Result<Value, ValueError> {
     match name {
         "index" => {
             arity(args, 1, 1, name)?;
             t.iter()
                 .position(|v| v.eq_value(&args[0]))
                 .map(|i| Value::Int(i as i64))
-                .ok_or_else(|| format!("{} is not in tuple", args[0].repr()))
+                .ok_or_else(|| ValueError::Msg(format!("{} is not in tuple", args[0].repr())))
         }
         "count" => {
             arity(args, 1, 1, name)?;
             Ok(Value::Int(t.iter().filter(|v| v.eq_value(&args[0])).count() as i64))
         }
-        other => Err(format!("'tuple' object has no method '{}'", other)),
+        other => Err(ValueError::Msg(format!("'tuple' object has no method '{}'", other))),
     }
 }
 
-fn value_to_axis(v: Option<&Value>) -> Result<Option<usize>, String> {
+fn value_to_axis(v: Option<&Value>) -> Result<Option<usize>, ValueError> {
     match v {
         None | Some(Value::None) => Ok(None),
         Some(other) => Ok(Some(other.as_int()? as usize)),
     }
 }
 
-fn int_list(v: &Value) -> Result<Vec<i64>, String> {
+fn int_list(v: &Value) -> Result<Vec<i64>, ValueError> {
     match v {
         Value::List(l) => l.borrow().iter().map(|x| x.as_int()).collect(),
         Value::Tuple(t) => t.iter().map(|x| x.as_int()).collect(),
-        other => Err(format!("expected list of ints, got {}", other.type_name())),
+        other => Err(ValueError::Msg(format!("expected list of ints, got {}", other.type_name()))),
     }
 }
 
 /// Tensor methods (`x.relu()`, `x.sum(1)`, `x.reshape([2, -1])`, ...).
-pub fn tensor_method(t: &Rc<Tensor>, name: &str, args: &[Value]) -> Result<Value, String> {
+pub fn tensor_method(t: &Rc<Tensor>, name: &str, args: &[Value]) -> Result<Value, ValueError> {
     let tv = |x: Tensor| Ok(Value::tensor(x));
     match name {
         "item" => {
             if t.numel() != 1 {
-                return Err(format!("item() on tensor with {} elements", t.numel()));
+                return Err(ValueError::Msg(format!("item() on tensor with {} elements", t.numel())));
             }
             Ok(Value::Float(t.item() as f64))
         }
@@ -425,7 +428,7 @@ pub fn tensor_method(t: &Rc<Tensor>, name: &str, args: &[Value]) -> Result<Value
             let perm: Vec<usize> = int_list(&args[0])?.iter().map(|&i| i as usize).collect();
             tv(tensor::permute(t, &perm)?)
         }
-        other => Err(format!("'Tensor' object has no method '{}'", other)),
+        other => Err(ValueError::Msg(format!("'Tensor' object has no method '{}'", other))),
     }
 }
 

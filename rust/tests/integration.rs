@@ -3,18 +3,20 @@
 use std::rc::Rc;
 
 use depyf::api::{
-    load_manifest, lookup_backend, register_backend, Artifact, ArtifactKind, Backend, CompileCtx,
-    DepyfError, FallbackPolicy, Session, TraceMode, XlaBackend,
+    load_manifest, lookup_backend, register_backend, Artifact, ArtifactKind, Backend, Capabilities,
+    CompilePlan, CompileRequest, CompiledModule, DepyfError, FallbackPolicy, Session, TraceMode,
+    XlaBackend,
 };
+use depyf::backend::{eager, BatchedBackend, ShardedBackend};
 use depyf::bytecode::IsaVersion;
-use depyf::corpus::{run_syntax_suite, syntax_cases};
+use depyf::corpus::{model_cases, run_syntax_suite, syntax_cases};
 use depyf::decompiler::baselines::DepyfRs;
 use depyf::decompiler::{decompile, DecompilerTool};
 use depyf::dynamo::{Dynamo, DynamoConfig};
-use depyf::graph::{CompiledGraphFn, Graph};
+use depyf::graph::Graph;
 use depyf::pylang::compile_module;
 use depyf::runtime::Runtime;
-use depyf::tensor::Tensor;
+use depyf::tensor::{Rng, Tensor};
 use depyf::value::Value;
 use depyf::vm::Vm;
 
@@ -115,8 +117,15 @@ fn custom_backend_end_to_end_via_session_builder() {
         fn name(&self) -> &str {
             "tagging-eager"
         }
-        fn compile(&self, name: &str, graph: Rc<Graph>, _ctx: &CompileCtx) -> Result<CompiledGraphFn, DepyfError> {
-            Ok(depyf::api::eager_graph_fn(name, graph, "tagging-eager".into()))
+        fn plan(&self, req: &CompileRequest) -> Result<CompilePlan, DepyfError> {
+            Ok(CompilePlan::monolithic("tagging-eager", req, "eager"))
+        }
+        fn lower(
+            &self,
+            req: &CompileRequest,
+            _plan: &CompilePlan,
+        ) -> Result<Rc<dyn CompiledModule>, DepyfError> {
+            Ok(Rc::new(eager::EagerModule::with_name(Rc::clone(&req.graph), "tagging-eager".into())))
         }
     }
     register_backend(Rc::new(TaggingEager));
@@ -243,6 +252,149 @@ fn compiled_graph_value_call() {
         }
         other => panic!("expected tuple, got {:?}", other),
     }
+}
+
+/// Capture every graph the (fully-capturable) table1 model corpus
+/// produces under dynamo.
+fn corpus_graphs() -> Vec<(String, Rc<Graph>)> {
+    let mut out = Vec::new();
+    for case in model_cases().into_iter().filter(|c| c.full_capture) {
+        let mut vm = Vm::new();
+        vm.seed(13);
+        let d = Dynamo::new(DynamoConfig::default());
+        vm.eval_hook = Some(d.clone());
+        vm.exec_source(&case.source, IsaVersion::V310)
+            .unwrap_or_else(|e| panic!("{} failed: {}", case.name, e));
+        for (name, g) in d.graphs().iter() {
+            out.push((format!("{}::{}", case.name, name), Rc::clone(g)));
+        }
+    }
+    assert!(out.len() >= 20, "corpus produced only {} graphs", out.len());
+    out
+}
+
+/// Positive inputs keep integer-valued placeholders (embedding ids,
+/// cross-entropy targets) valid: they all floor to 0.
+fn positive_inputs(g: &Graph, seed: u64) -> Vec<Rc<Tensor>> {
+    let mut rng = Rng::new(seed);
+    g.input_shapes().into_iter().map(|(_, s)| Rc::new(Tensor::rand(&s, &mut rng))).collect()
+}
+
+/// Acceptance: the sharded and batched backends are bitwise-equivalent to
+/// the eager reference on every graph captured from the table1 corpus.
+#[test]
+fn sharded_and_batched_match_eager_on_table1_corpus_graphs() {
+    let sharded = ShardedBackend::with_max_ops(2);
+    let batched = BatchedBackend::new();
+    for (tag, g) in corpus_graphs() {
+        let inputs = positive_inputs(&g, 0xC0FFEE);
+        let want = eager::execute(&g, &inputs).unwrap_or_else(|e| panic!("{}: eager failed: {}", tag, e));
+        for (bname, backend) in [("sharded", &sharded as &dyn Backend), ("batched", &batched)] {
+            let req = CompileRequest::new(&tag, Rc::clone(&g));
+            let module = backend
+                .compile(&req)
+                .unwrap_or_else(|e| panic!("{}: {} compile failed: {}", tag, bname, e));
+            let got = module
+                .call(&inputs)
+                .unwrap_or_else(|e| panic!("{}: {} call failed: {}", tag, bname, e));
+            assert_eq!(got.len(), want.len(), "{}: {}", tag, bname);
+            for (a, b) in got.iter().zip(want.iter()) {
+                assert_eq!(a.shape(), b.shape(), "{}: {}", tag, bname);
+                assert_eq!(a.data(), b.data(), "{}: {} diverged bitwise", tag, bname);
+            }
+        }
+    }
+}
+
+/// `depyf dump --backend sharded` workflow: the session compiles through
+/// the sharded backend, output matches plain execution, and the plan
+/// artifact lands typed in the manifest.
+#[test]
+fn sharded_session_dumps_plan_artifacts() {
+    let src = "\
+torch.manual_seed(4)
+W1 = torch.randn([6, 6])
+W2 = torch.randn([6, 6])
+def forward(x):
+    h = (x @ W1).relu()
+    return (h @ W2).softmax().sum()
+print(forward(torch.ones([3, 6])).item())
+print(forward(torch.ones([3, 6])).item())
+";
+    let plain = Vm::new();
+    plain.seed(2);
+    plain.exec_source(src, IsaVersion::V310).unwrap();
+    let expected = plain.take_output();
+
+    let dir = std::env::temp_dir().join(format!("depyf_sharded_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut s = Session::builder()
+        .dump_to(&dir)
+        .backend_named("sharded")
+        .isa(IsaVersion::V310)
+        .fallback(FallbackPolicy::Error)
+        .build()
+        .unwrap();
+    s.vm.seed(2);
+    s.run_source("main", src).unwrap();
+    assert_eq!(s.vm.take_output(), expected);
+    let artifacts = s.finish().unwrap();
+    let plan = artifacts.iter().find(|a| a.kind == ArtifactKind::Plan).expect("plan artifact dumped");
+    let parsed = CompilePlan::parse(&std::fs::read_to_string(&plan.path).unwrap()).unwrap();
+    assert_eq!(parsed.backend, "sharded");
+    assert!(parsed.partitions.len() >= 2, "graph should shard: {:?}", parsed.partitions.len());
+    // The manifest indexes the plan artifact with its typed kind.
+    let indexed = load_manifest(&dir).unwrap();
+    assert_eq!(indexed, artifacts);
+    // metrics.json carries per-module backend stats.
+    let metrics = artifacts.iter().find(|a| a.kind == ArtifactKind::Metrics).unwrap();
+    let doc = depyf::api::json::parse(&std::fs::read_to_string(&metrics.path).unwrap()).unwrap();
+    let modules = doc.get("modules").and_then(|m| m.as_arr()).expect("modules array");
+    assert!(!modules.is_empty());
+    assert!(
+        modules[0].get("partitions").and_then(|v| v.as_f64()).unwrap() >= 2.0,
+        "module stats must record the partition count"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Capability misconfiguration is rejected at build() under
+/// FallbackPolicy::Error, and absorbed under the default eager policy.
+#[test]
+fn capability_requirements_validated_at_build() {
+    let dir = std::env::temp_dir().join(format!("depyf_caps_{}", std::process::id()));
+    let err = Session::builder()
+        .dump_to(&dir)
+        .backend_named("eager")
+        .require(Capabilities::PARTITION)
+        .fallback(FallbackPolicy::Error)
+        .build()
+        .unwrap_err();
+    assert_eq!(err.layer(), "builder");
+    assert!(err.to_string().contains("partition"), "{}", err);
+    // A backend that declares the capability builds.
+    Session::builder()
+        .dump_to(&dir)
+        .backend_named("sharded")
+        .require(Capabilities::PARTITION)
+        .fallback(FallbackPolicy::Error)
+        .build()
+        .unwrap();
+    Session::builder()
+        .dump_to(&dir)
+        .backend_named("batched")
+        .require(Capabilities::DYNAMIC_BATCH)
+        .fallback(FallbackPolicy::Error)
+        .build()
+        .unwrap();
+    // Under the default eager policy the fallback absorbs the gap.
+    Session::builder()
+        .dump_to(&dir)
+        .backend_named("eager")
+        .require(Capabilities::DYNAMIC_BATCH)
+        .build()
+        .unwrap();
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 /// Step-through debugging works through the builder (`TraceMode::StepGraphs`).

@@ -17,7 +17,9 @@ use std::fmt;
 use std::ops::BitOr;
 use std::rc::Rc;
 
-use crate::backend::{batched::BatchedBackend, eager, sharded::ShardedBackend, xla};
+use crate::backend::{
+    batched::BatchedBackend, eager, recording::RecordingBackend, sharded::ShardedBackend, xla,
+};
 use crate::dynamo::Verbosity;
 use crate::graph::{CompiledGraphFn, Graph};
 use crate::runtime::Runtime;
@@ -59,6 +61,10 @@ impl Capabilities {
     /// Lowers to PJRT when a runtime is present, degrades to eager
     /// executables otherwise (the CLI provisions the shared runtime).
     pub const USES_RUNTIME: Capabilities = Capabilities(1 << 4);
+    /// Decorates another backend's modules (e.g. `recording`) instead of
+    /// compiling itself; everything else it declares is inherited from the
+    /// wrapped backend.
+    pub const WRAPPER: Capabilities = Capabilities(1 << 5);
 
     pub fn contains(self, other: Capabilities) -> bool {
         self.0 & other.0 == other.0
@@ -90,6 +96,7 @@ impl fmt::Display for Capabilities {
             (Capabilities::ASYNC, "async"),
             (Capabilities::REQUIRES_RUNTIME, "requires_runtime"),
             (Capabilities::USES_RUNTIME, "uses_runtime"),
+            (Capabilities::WRAPPER, "wrapper"),
         ] {
             if self.contains(bit) {
                 names.push(name);
@@ -388,6 +395,9 @@ fn builtin_backends() -> HashMap<String, Rc<dyn Backend>> {
     m.insert("xla".into(), Rc::new(XlaBackend));
     m.insert("sharded".into(), Rc::new(ShardedBackend::new()));
     m.insert("batched".into(), Rc::new(BatchedBackend::new()));
+    // The default recording wrapper decorates the eager reference executor;
+    // wrap any other backend via RecordingBackend::new / ::wrapping.
+    m.insert("recording".into(), Rc::new(RecordingBackend::new(Rc::new(EagerBackend))));
     m
 }
 

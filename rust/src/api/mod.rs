@@ -30,6 +30,7 @@ mod error;
 pub mod json;
 pub mod plan;
 mod session;
+pub mod trace;
 
 pub use artifact::{
     load_manifest, parse_manifest, render_manifest, write_manifest, Artifact, ArtifactKind, MANIFEST_FILE,
@@ -43,3 +44,4 @@ pub use backend::{
 pub use error::DepyfError;
 pub use plan::{BatchPlan, CompilePlan, PartitionPlan, PLAN_SCHEMA_VERSION};
 pub use session::{Session, SessionBuilder, TraceMode};
+pub use trace::{TraceBundle, TraceCall, TRACE_SCHEMA_VERSION};

@@ -278,4 +278,44 @@ mod tests {
         let bad_ids = sample().to_json().replace("\"nodes\": [2, 3]", "\"nodes\": [2, \"3\"]");
         assert!(CompilePlan::parse(&bad_ids).is_err());
     }
+
+    /// Satellite: every way a *partition entry* can be malformed is a
+    /// loud parse error — dropped fields, wrong types, a non-array
+    /// partitions value, corrupted per-partition cache keys and batch
+    /// fields. (Round-trips alone never exercise these paths.)
+    #[test]
+    fn parse_rejects_malformed_partition_entries() {
+        let good = sample().to_json();
+        assert!(CompilePlan::parse(&good).is_ok(), "surgery base must parse");
+        let surgeries: &[(&str, &str, &str)] = &[
+            ("partitions is not an array", "\"partitions\": [\n", "\"partitions\": 5, \"unused\": [\n"),
+            ("partition missing index", "\"index\": 0, ", ""),
+            ("partition index is a string", "\"index\": 0", "\"index\": \"zero\""),
+            ("partition missing target", "\"target\": \"xla\", ", ""),
+            ("partition target is a number", "\"target\": \"xla\"", "\"target\": 7"),
+            ("partition missing nodes", "\"nodes\": [2, 3], ", ""),
+            ("partition nodes is an object", "\"nodes\": [2, 3]", "\"nodes\": {}"),
+            ("partition missing inputs", "\"inputs\": [0, 1], ", ""),
+            ("partition missing outputs", ", \"outputs\": [3]", ""),
+            ("partition cache_key not a string", "\"cache_key\": \"0123456789abcdef\"", "\"cache_key\": 81985529216486895"),
+            ("partition cache_key not hex", "0123456789abcdef", "0123456789abcdexx"),
+            ("batch missing dim", "\"dim\": 0, ", ""),
+            ("batch bucket is a string", "\"bucket\": 8", "\"bucket\": \"8\""),
+            ("batch padded_inputs not an array", "\"padded_inputs\": [0]", "\"padded_inputs\": 0"),
+        ];
+        for (why, needle, replacement) in surgeries {
+            let mutated = good.replace(needle, replacement);
+            assert_ne!(mutated, good, "surgery '{}' did not apply", why);
+            assert!(CompilePlan::parse(&mutated).is_err(), "accepted malformed plan: {}", why);
+        }
+        // Whole-document invariants around partitions.
+        assert!(CompilePlan::parse("{\"backend\": \"b\", \"graph\": \"g\", \"cache_key\": \"00\"}").is_err());
+        assert!(
+            CompilePlan::parse(
+                "{\"backend\": \"b\", \"graph\": \"g\", \"cache_key\": \"00\", \"partitions\": [null]}"
+            )
+            .is_err(),
+            "null partition entry"
+        );
+    }
 }

@@ -1,0 +1,315 @@
+//! [`TraceBundle`] — the versioned `__trace_*.json` artifact written by the
+//! `recording` backend wrapper and consumed by `depyf replay`.
+//!
+//! A bundle is **self-contained**: it embeds a lossless serialization of
+//! the compiled graph ([`crate::graph::serde`]), the guard descriptions of
+//! the entry that was recorded, the module's compile stats, and every call
+//! observed at runtime (input and output tensors with bit-exact f32
+//! payloads). Replaying a bundle needs nothing but the bundle: the graph
+//! is rebuilt, recompiled on any registered backend, and re-executed on
+//! the recorded inputs; recorded outputs are the reference.
+
+use std::path::Path;
+
+use crate::api::json::{self, Json};
+use crate::api::{DepyfError, ModuleStats};
+use crate::graph::serde::{f32s_from_hex, f32s_to_hex, graph_from_value, render_graph};
+use crate::graph::Graph;
+use crate::tensor::Tensor;
+
+/// Bumped whenever the trace JSON schema changes shape.
+pub const TRACE_SCHEMA_VERSION: u64 = 1;
+
+/// One recorded invocation of a compiled module.
+#[derive(Clone, Debug)]
+pub struct TraceCall {
+    pub inputs: Vec<Tensor>,
+    pub outputs: Vec<Tensor>,
+}
+
+/// A recorded compiled module: the graph, its compile context, and every
+/// call the recording wrapper observed.
+#[derive(Clone, Debug)]
+pub struct TraceBundle {
+    /// The compiled fn's name (`__compiled_fn_N` — N is the guard-entry
+    /// id, which also disambiguates trace file names when two entries
+    /// share a graph content hash).
+    pub name: String,
+    /// `backend_name` of the wrapped inner module that produced the
+    /// recorded outputs.
+    pub backend: String,
+    /// `Graph::content_hash()` of `graph`.
+    pub cache_key: u64,
+    /// Guard descriptions of the entry this module was compiled for.
+    pub guards: Vec<String>,
+    /// The inner module's compile stats at record time.
+    pub stats: ModuleStats,
+    pub graph: Graph,
+    pub calls: Vec<TraceCall>,
+}
+
+fn render_tensor(t: &Tensor) -> String {
+    let dims: Vec<String> = t.shape().iter().map(|d| d.to_string()).collect();
+    format!("{{\"shape\": [{}], \"data\": \"{}\"}}", dims.join(", "), f32s_to_hex(t.data()))
+}
+
+fn parse_tensor(v: &Json) -> Result<Tensor, DepyfError> {
+    let shape_arr = v
+        .get("shape")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| DepyfError::Parse("trace tensor missing \"shape\"".into()))?;
+    let shape: Result<Vec<usize>, DepyfError> = shape_arr
+        .iter()
+        .map(|d| {
+            d.as_f64()
+                .filter(|n| *n >= 0.0 && n.fract() == 0.0)
+                .map(|n| n as usize)
+                .ok_or_else(|| DepyfError::Parse("trace tensor has a bad shape entry".into()))
+        })
+        .collect();
+    let shape = shape?;
+    let data = f32s_from_hex(
+        v.get("data")
+            .and_then(Json::as_str)
+            .ok_or_else(|| DepyfError::Parse("trace tensor missing \"data\"".into()))?,
+    )?;
+    if shape.iter().product::<usize>() != data.len() {
+        return Err(DepyfError::Parse(format!(
+            "trace tensor shape {:?} disagrees with {} data elements",
+            shape,
+            data.len()
+        )));
+    }
+    Ok(Tensor::new(shape, data))
+}
+
+impl TraceBundle {
+    /// Render the bundle as its `__trace_*.json` document.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n");
+        out.push_str(&format!("  \"schema_version\": {},\n", TRACE_SCHEMA_VERSION));
+        out.push_str(&format!("  \"name\": \"{}\",\n", json::escape(&self.name)));
+        out.push_str(&format!("  \"backend\": \"{}\",\n", json::escape(&self.backend)));
+        out.push_str(&format!("  \"cache_key\": \"{:016x}\",\n", self.cache_key));
+        let guards: Vec<String> =
+            self.guards.iter().map(|g| format!("\"{}\"", json::escape(g))).collect();
+        out.push_str(&format!("  \"guards\": [{}],\n", guards.join(", ")));
+        out.push_str(&format!(
+            "  \"stats\": {{\"partitions\": {}, \"bucket\": {}, \"cache_hits\": {}}},\n",
+            self.stats.partitions,
+            self.stats.bucket.map(|b| b.to_string()).unwrap_or_else(|| "null".into()),
+            self.stats.cache_hits
+        ));
+        // The embedded graph document (2-space indented block).
+        let graph_text = render_graph(&self.graph);
+        let indented: Vec<&str> = graph_text.lines().collect();
+        out.push_str("  \"graph\": ");
+        for (i, line) in indented.iter().enumerate() {
+            if i > 0 {
+                out.push_str("  ");
+            }
+            out.push_str(line);
+            if i + 1 < indented.len() {
+                out.push('\n');
+            }
+        }
+        out.push_str(",\n");
+        out.push_str("  \"calls\": [\n");
+        for (i, call) in self.calls.iter().enumerate() {
+            let ins: Vec<String> = call.inputs.iter().map(render_tensor).collect();
+            let outs: Vec<String> = call.outputs.iter().map(render_tensor).collect();
+            out.push_str(&format!(
+                "    {{\"inputs\": [{}], \"outputs\": [{}]}}{}\n",
+                ins.join(", "),
+                outs.join(", "),
+                if i + 1 < self.calls.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Parse a trace document (inverse of [`TraceBundle::to_json`]).
+    pub fn parse(text: &str) -> Result<TraceBundle, DepyfError> {
+        let doc = json::parse(text)?;
+        match doc.get("schema_version") {
+            Some(Json::Num(v)) if *v == TRACE_SCHEMA_VERSION as f64 => {}
+            Some(Json::Num(v)) => {
+                return Err(DepyfError::Parse(format!(
+                    "unsupported trace schema_version {} (expected {})",
+                    v, TRACE_SCHEMA_VERSION
+                )))
+            }
+            _ => return Err(DepyfError::Parse("trace missing \"schema_version\"".into())),
+        }
+        let str_field = |key: &str| -> Result<String, DepyfError> {
+            doc.get(key)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| DepyfError::Parse(format!("trace missing string \"{}\"", key)))
+        };
+        let name = str_field("name")?;
+        let backend = str_field("backend")?;
+        let cache_key_text = str_field("cache_key")?;
+        let cache_key = u64::from_str_radix(&cache_key_text, 16)
+            .map_err(|e| DepyfError::Parse(format!("bad trace cache key '{}': {}", cache_key_text, e)))?;
+        let guards = match doc.get("guards") {
+            Some(Json::Arr(items)) => items
+                .iter()
+                .map(|v| {
+                    v.as_str()
+                        .map(str::to_string)
+                        .ok_or_else(|| DepyfError::Parse("trace guard is not a string".into()))
+                })
+                .collect::<Result<Vec<String>, DepyfError>>()?,
+            _ => return Err(DepyfError::Parse("trace missing \"guards\" array".into())),
+        };
+        let stats_obj = doc
+            .get("stats")
+            .ok_or_else(|| DepyfError::Parse("trace missing \"stats\"".into()))?;
+        let stat_num = |key: &str| -> Result<u64, DepyfError> {
+            stats_obj
+                .get(key)
+                .and_then(Json::as_f64)
+                .map(|v| v as u64)
+                .ok_or_else(|| DepyfError::Parse(format!("trace stats missing \"{}\"", key)))
+        };
+        let stats = ModuleStats {
+            partitions: stat_num("partitions")?,
+            bucket: match stats_obj.get("bucket") {
+                None | Some(Json::Null) => None,
+                Some(v) => Some(v.as_f64().map(|b| b as u64).ok_or_else(|| {
+                    DepyfError::Parse("trace stats has a non-numeric \"bucket\"".into())
+                })?),
+            },
+            cache_hits: stat_num("cache_hits")?,
+        };
+        let graph = graph_from_value(
+            doc.get("graph")
+                .ok_or_else(|| DepyfError::Parse("trace missing \"graph\"".into()))?,
+        )?;
+        if graph.content_hash() != cache_key {
+            return Err(DepyfError::Parse(format!(
+                "trace cache_key {:016x} disagrees with embedded graph hash {:016x}",
+                cache_key,
+                graph.content_hash()
+            )));
+        }
+        let calls_arr = match doc.get("calls") {
+            Some(Json::Arr(items)) => items,
+            _ => return Err(DepyfError::Parse("trace missing \"calls\" array".into())),
+        };
+        let mut calls = Vec::with_capacity(calls_arr.len());
+        for item in calls_arr {
+            let tensor_list = |key: &str| -> Result<Vec<Tensor>, DepyfError> {
+                item.get(key)
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| DepyfError::Parse(format!("trace call missing \"{}\"", key)))?
+                    .iter()
+                    .map(parse_tensor)
+                    .collect()
+            };
+            calls.push(TraceCall { inputs: tensor_list("inputs")?, outputs: tensor_list("outputs")? });
+        }
+        Ok(TraceBundle { name, backend, cache_key, guards, stats, graph, calls })
+    }
+
+    /// Read + parse a trace bundle from a file.
+    pub fn load(path: impl AsRef<Path>) -> Result<TraceBundle, DepyfError> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| DepyfError::io(format!("read {}", path.display()), e))?;
+        TraceBundle::parse(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::OpKind;
+
+    fn sample() -> TraceBundle {
+        let mut g = Graph::new("__compiled_fn_3");
+        let x = g.placeholder("x", &[2, 2]);
+        let c = g.const_scalar(2.0);
+        let m = g.add_op(OpKind::Mul, vec![x, c]).unwrap();
+        let r = g.add_op(OpKind::Relu, vec![m]).unwrap();
+        g.set_outputs(vec![r]);
+        let cache_key = g.content_hash();
+        TraceBundle {
+            name: "__compiled_fn_3".into(),
+            backend: "eager".into(),
+            cache_key,
+            guards: vec!["check_tensor(args[0], shape=[2, 2])".into(), "k == 2".into()],
+            stats: ModuleStats { partitions: 2, bucket: Some(8), cache_hits: 1 },
+            graph: g,
+            calls: vec![
+                TraceCall {
+                    inputs: vec![Tensor::new(vec![2, 2], vec![-1.0, 2.0, -0.0, f32::NAN])],
+                    outputs: vec![Tensor::new(vec![2, 2], vec![0.0, 4.0, 0.0, f32::NAN])],
+                },
+                TraceCall {
+                    inputs: vec![Tensor::new(vec![2, 2], vec![1.0, 1.0, 1.0, 1.0])],
+                    outputs: vec![Tensor::new(vec![2, 2], vec![2.0, 2.0, 2.0, 2.0])],
+                },
+            ],
+        }
+    }
+
+    fn bits(t: &Tensor) -> Vec<u32> {
+        t.data().iter().map(|v| v.to_bits()).collect()
+    }
+
+    #[test]
+    fn bundle_round_trips_bit_exactly() {
+        let b = sample();
+        let text = b.to_json();
+        let back = TraceBundle::parse(&text).unwrap();
+        assert_eq!(back.name, b.name);
+        assert_eq!(back.backend, b.backend);
+        assert_eq!(back.cache_key, b.cache_key);
+        assert_eq!(back.guards, b.guards);
+        assert_eq!(back.stats, b.stats);
+        assert_eq!(back.graph.content_hash(), b.graph.content_hash());
+        assert_eq!(back.calls.len(), 2);
+        for (a, bb) in back.calls.iter().zip(b.calls.iter()) {
+            for (ta, tb) in a.inputs.iter().zip(bb.inputs.iter()) {
+                assert_eq!(ta.shape(), tb.shape());
+                assert_eq!(bits(ta), bits(tb), "NaN/-0.0 payloads must survive");
+            }
+            for (ta, tb) in a.outputs.iter().zip(bb.outputs.iter()) {
+                assert_eq!(bits(ta), bits(tb));
+            }
+        }
+        // Re-render is stable.
+        assert_eq!(back.to_json(), text);
+    }
+
+    #[test]
+    fn parse_rejects_bad_documents() {
+        let text = sample().to_json();
+        assert!(TraceBundle::parse("").is_err());
+        assert!(TraceBundle::parse("{}").is_err());
+        assert!(TraceBundle::parse(&text.replace("\"schema_version\": 1", "\"schema_version\": 7")).is_err());
+        // Tampered graph: embedded hash check trips.
+        assert!(TraceBundle::parse(&text.replace("\"op\": \"relu\"", "\"op\": \"tanh\"")).is_err());
+        // Truncated tensor payload.
+        let b = sample();
+        let hex = f32s_to_hex(&b.calls[0].inputs[0].data()[..1]);
+        let full = f32s_to_hex(b.calls[0].inputs[0].data());
+        assert!(TraceBundle::parse(&text.replacen(&full, &hex, 1)).is_err());
+    }
+
+    #[test]
+    fn load_reads_from_disk() {
+        let dir = std::env::temp_dir().join(format!("depyf_trace_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("__trace_test.json");
+        let b = sample();
+        std::fs::write(&path, b.to_json()).unwrap();
+        let back = TraceBundle::load(&path).unwrap();
+        assert_eq!(back.cache_key, b.cache_key);
+        assert!(TraceBundle::load(dir.join("missing.json")).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

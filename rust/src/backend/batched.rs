@@ -581,6 +581,132 @@ mod tests {
         assert_eq!(backend.eager_plans.borrow().len(), 2);
     }
 
+    /// Satellite: rows exactly at a power of two take the no-pad fast
+    /// path (orig == bucket) and still produce bitwise-eager results,
+    /// including batch 1 (pow2) and the first bucket above (9 → 16).
+    #[test]
+    fn bucket_boundary_rows_exactly_at_power_of_two() {
+        for batch in [1usize, 2, 4, 8, 16] {
+            let g = Rc::new(mlp(batch, 4));
+            let req = CompileRequest::new("bm", Rc::clone(&g));
+            let backend = BatchedBackend::new();
+            let plan = backend.plan(&req).unwrap();
+            let b = plan.batch.as_ref().expect("mlp is batch-safe");
+            assert_eq!(b.orig, batch);
+            assert_eq!(b.bucket, batch, "a power-of-two batch is its own bucket");
+            let module = backend.lower(&req, &plan).unwrap();
+            assert_eq!(module.stats().bucket, Some(batch as u64));
+            let inputs = rand_inputs(&g, 100 + batch as u64);
+            let got = module.call(&inputs).unwrap();
+            let want = eager::execute(&g, &inputs).unwrap();
+            for (a, w) in got.iter().zip(want.iter()) {
+                assert_eq!(a.shape(), w.shape(), "batch={}", batch);
+                assert_eq!(a.data(), w.data(), "bitwise divergence at pow2 batch={}", batch);
+            }
+        }
+        // One past the boundary pads up to the next bucket.
+        let g = Rc::new(mlp(9, 4));
+        let req = CompileRequest::new("bm", Rc::clone(&g));
+        let backend = BatchedBackend::new();
+        let plan = backend.plan(&req).unwrap();
+        assert_eq!(plan.batch.as_ref().unwrap().bucket, 16);
+    }
+
+    /// Satellite: 0-row inputs are never padded (bucket_of(0) would be
+    /// degenerate); the graph compiles exactly and the empty result is
+    /// bitwise-identical to eager.
+    #[test]
+    fn zero_row_inputs_fall_back_exactly() {
+        let g = Rc::new(mlp(0, 4));
+        let req = CompileRequest::new("bm0", Rc::clone(&g));
+        let backend = BatchedBackend::new();
+        let plan = backend.plan(&req).unwrap();
+        assert!(plan.batch.is_none(), "batch 0 must not be bucketed");
+        let module = backend.lower(&req, &plan).unwrap();
+        assert_eq!(module.stats().bucket, None);
+        let inputs = rand_inputs(&g, 3);
+        assert_eq!(inputs[0].numel(), 0);
+        let got = module.call(&inputs).unwrap();
+        let want = eager::execute(&g, &inputs).unwrap();
+        assert_eq!(got.len(), want.len());
+        for (a, w) in got.iter().zip(want.iter()) {
+            assert_eq!(a.shape(), w.shape());
+            assert_eq!(a.shape()[0], 0, "zero rows in, zero rows out");
+            assert_eq!(a.data(), w.data());
+        }
+    }
+
+    /// Satellite: every batch-unsafe shape falls back to an *exact*
+    /// compile — no batch plan, no bucket stat, per-plan cache key equal
+    /// to the unpadded graph's hash — and stays bitwise-equal to eager.
+    #[test]
+    fn batch_unsafe_graphs_compile_exactly_and_bitwise() {
+        let cases: Vec<(&str, Graph)> = vec![
+            ("sum over batch dim", {
+                let mut g = Graph::new("u0");
+                let x = g.placeholder("x", &[5, 3]);
+                let s = g.add_op(OpKind::Sum(Some(0)), vec![x]).unwrap();
+                g.set_outputs(vec![s]);
+                g
+            }),
+            ("rank-2 transpose moves batch", {
+                let mut g = Graph::new("u1");
+                let x = g.placeholder("x", &[5, 3]);
+                let t = g.add_op(OpKind::Transpose, vec![x]).unwrap();
+                let r = g.add_op(OpKind::Relu, vec![t]).unwrap();
+                g.set_outputs(vec![r]);
+                g
+            }),
+            ("batched rhs contraction", {
+                let mut g = Graph::new("u2");
+                let w = g.placeholder("w", &[5, 5]);
+                let x = g.placeholder("x", &[5, 3]);
+                let m = g.add_op(OpKind::MatMul, vec![w, x]).unwrap();
+                g.set_outputs(vec![m]);
+                g
+            }),
+            ("cross_entropy means over rows", {
+                let mut g = Graph::new("u3");
+                let logits = g.placeholder("logits", &[5, 4]);
+                let tgt = g.placeholder("tgt", &[5]);
+                let ce = g.add_op(OpKind::CrossEntropy, vec![logits, tgt]).unwrap();
+                g.set_outputs(vec![ce]);
+                g
+            }),
+        ];
+        for (why, g) in cases {
+            let g = Rc::new(g);
+            let req = CompileRequest::new(&g.name.clone(), Rc::clone(&g));
+            let backend = BatchedBackend::new();
+            let plan = backend.plan(&req).unwrap();
+            assert!(plan.batch.is_none(), "{} must not be padded", why);
+            assert_eq!(
+                plan.partitions[0].cache_key,
+                g.content_hash(),
+                "{}: exact compile keys on the unpadded graph",
+                why
+            );
+            let module = backend.lower(&req, &plan).unwrap();
+            assert_eq!(module.stats().bucket, None, "{}", why);
+            let inputs: Vec<Rc<Tensor>> = match why {
+                "cross_entropy means over rows" => {
+                    let mut rng = Rng::new(17);
+                    vec![
+                        Rc::new(Tensor::randn(&[5, 4], &mut rng)),
+                        Rc::new(Tensor::new(vec![5], vec![0.0, 3.0, 1.0, 2.0, 0.0])),
+                    ]
+                }
+                _ => rand_inputs(&g, 23),
+            };
+            let got = module.call(&inputs).unwrap();
+            let want = eager::execute(&g, &inputs).unwrap();
+            for (a, w) in got.iter().zip(want.iter()) {
+                assert_eq!(a.shape(), w.shape(), "{}", why);
+                assert_eq!(a.data(), w.data(), "{}: bitwise divergence on exact fallback", why);
+            }
+        }
+    }
+
     #[test]
     fn unsafe_graphs_fall_back_to_exact_compiles() {
         let mut g = Graph::new("exact");

@@ -13,6 +13,7 @@
 pub mod batched;
 pub mod eager;
 pub mod partition;
+pub mod recording;
 pub mod sharded;
 pub mod xla;
 
@@ -22,6 +23,10 @@ pub use crate::api::{
     EagerBackend, FallbackPolicy, ModuleArtifact, ModuleStats, PolicyCompiled, XlaBackend,
 };
 pub use batched::BatchedBackend;
+pub use recording::{
+    localize_divergence, replay_bundle, single_call_bundle, tensor_diff, CulpritOp, Mismatch,
+    RecordingBackend, RecordingModule, ReplayOptions, ReplayReport,
+};
 pub use sharded::ShardedBackend;
 
 /// Shared file-stem sanitizer for backend artifact names (`__hlo_*.txt`,

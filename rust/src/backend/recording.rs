@@ -1,0 +1,690 @@
+//! The `recording` backend wrapper: decorates any inner backend's
+//! [`CompiledModule`] so every call is captured into a versioned,
+//! self-contained [`TraceBundle`] (`__trace_*.json`, indexed in
+//! `manifest.json` as [`ArtifactKind::Trace`]).
+//!
+//! This is the paper's "artifacts on disk faithfully reproduce what
+//! happened in memory" promise extended to *execution*: a trace bundle
+//! carries the lossless graph serialization, the guard context, the inner
+//! module's stats and the bit-exact input/output tensors of every call —
+//! enough to re-run the exact computation offline on any registered
+//! backend ([`replay_bundle`], `depyf replay`) and to cross-check backends
+//! against the eager oracle. Mismatches are localized per op by cutting
+//! the graph into single-op partitions with the sharded partitioner and
+//! replaying each against oracle intermediates ([`localize_divergence`]);
+//! every divergence yields a minimized single-op repro bundle.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::api::trace::{TraceBundle, TraceCall};
+use crate::api::{
+    ArtifactKind, Backend, Capabilities, CompilePlan, CompileRequest, CompiledModule, DepyfError,
+    FallbackPolicy, ModuleArtifact, ModuleStats,
+};
+use crate::graph::{Graph, NodeKind};
+use crate::runtime::Runtime;
+use crate::tensor::Tensor;
+
+use super::eager;
+use super::partition::{extract, partition_by_ops};
+
+/// Wraps an inner backend; every lowered module records its calls.
+pub struct RecordingBackend {
+    inner: Rc<dyn Backend>,
+}
+
+impl RecordingBackend {
+    pub fn new(inner: Rc<dyn Backend>) -> RecordingBackend {
+        RecordingBackend { inner }
+    }
+
+    /// Wrap a registered backend, looked up by name.
+    pub fn wrapping(inner_name: &str) -> Result<RecordingBackend, DepyfError> {
+        let inner = crate::api::lookup_backend(inner_name).ok_or_else(|| {
+            DepyfError::Backend(format!(
+                "recording: unknown inner backend '{}' (registered: {})",
+                inner_name,
+                crate::api::backend_names().join(", ")
+            ))
+        })?;
+        Ok(RecordingBackend { inner })
+    }
+
+    /// The wrapped backend.
+    pub fn inner(&self) -> &Rc<dyn Backend> {
+        &self.inner
+    }
+}
+
+impl Backend for RecordingBackend {
+    fn name(&self) -> &str {
+        "recording"
+    }
+
+    /// Inherits everything the wrapped backend declares, plus `WRAPPER`.
+    fn capabilities(&self) -> Capabilities {
+        self.inner.capabilities() | Capabilities::WRAPPER
+    }
+
+    fn plan(&self, req: &CompileRequest) -> Result<CompilePlan, DepyfError> {
+        // The plan is the inner backend's decision — recording adds no
+        // compile-time structure, only runtime observation.
+        self.inner.plan(req)
+    }
+
+    fn lower(&self, req: &CompileRequest, plan: &CompilePlan) -> Result<Rc<dyn CompiledModule>, DepyfError> {
+        let module = self.inner.lower(req, plan)?;
+        Ok(Rc::new(RecordingModule {
+            name: req.name.clone(),
+            backend_name: format!("recording({})", module.backend_name()),
+            inner_backend: module.backend_name().to_string(),
+            graph: Rc::clone(&req.graph),
+            guards: req.guards.clone(),
+            cache_key: req.cache_key,
+            inner: module,
+            calls: RefCell::new(Vec::new()),
+        }))
+    }
+}
+
+/// A [`CompiledModule`] decorator that forwards `call` to the wrapped
+/// module and appends a [`TraceCall`] per invocation. `artifacts()` emits
+/// the trace bundle alongside whatever the inner module dumps.
+pub struct RecordingModule {
+    name: String,
+    backend_name: String,
+    inner_backend: String,
+    graph: Rc<Graph>,
+    guards: Vec<String>,
+    cache_key: u64,
+    inner: Rc<dyn CompiledModule>,
+    calls: RefCell<Vec<TraceCall>>,
+}
+
+/// The guard-entry id baked into a compiled fn's name (`__compiled_fn_N`
+/// → `N`); falls back to the sanitized name for custom names. Trace file
+/// names embed it *in addition to* the content hash: two guard entries
+/// can wrap structurally identical graphs (same hash), and their traces
+/// must not collide into one `(kind, name)` refresh slot.
+fn entry_suffix(name: &str) -> String {
+    let stem = name.trim_end_matches(|c: char| c.is_ascii_digit());
+    if stem.len() == name.len() {
+        super::sanitize(name)
+    } else {
+        name[stem.len()..].to_string()
+    }
+}
+
+impl RecordingModule {
+    /// Snapshot the recorded state as a self-contained bundle.
+    pub fn bundle(&self) -> TraceBundle {
+        TraceBundle {
+            name: self.name.clone(),
+            backend: self.inner_backend.clone(),
+            cache_key: self.cache_key,
+            guards: self.guards.clone(),
+            stats: self.inner.stats(),
+            graph: (*self.graph).clone(),
+            calls: self.calls.borrow().clone(),
+        }
+    }
+
+    /// Calls recorded so far.
+    pub fn recorded_calls(&self) -> usize {
+        self.calls.borrow().len()
+    }
+
+    /// The dump-dir file name for this module's trace: content hash for
+    /// grouping, guard-entry id for uniqueness (see [`entry_suffix`]).
+    pub fn trace_file_name(&self) -> String {
+        format!("__trace_{:016x}_e{}.json", self.cache_key, entry_suffix(&self.name))
+    }
+}
+
+impl CompiledModule for RecordingModule {
+    fn call(&self, inputs: &[Rc<Tensor>]) -> Result<Vec<Tensor>, DepyfError> {
+        let outputs = self.inner.call(inputs)?;
+        self.calls.borrow_mut().push(TraceCall {
+            inputs: inputs.iter().map(|t| (**t).clone()).collect(),
+            outputs: outputs.clone(),
+        });
+        Ok(outputs)
+    }
+
+    fn backend_name(&self) -> &str {
+        &self.backend_name
+    }
+
+    fn artifacts(&self) -> Vec<ModuleArtifact> {
+        let mut arts = self.inner.artifacts();
+        arts.push(ModuleArtifact {
+            kind: ArtifactKind::Trace,
+            name: self.name.clone(),
+            file: self.trace_file_name(),
+            content: self.bundle().to_json(),
+        });
+        arts
+    }
+
+    fn stats(&self) -> ModuleStats {
+        self.inner.stats()
+    }
+}
+
+// ---- replay ----
+
+/// Options for [`replay_bundle`].
+pub struct ReplayOptions {
+    /// Comparison tolerance. `0.0` (the default) demands **bit equality**
+    /// — identical f32 bit patterns, NaN payloads and -0.0 included. A
+    /// positive eps compares `|a - b| <= eps` with NaN matching NaN (for
+    /// backends like XLA whose fusion reorders float accumulation).
+    pub eps: f32,
+    /// Runtime handed to backends that lower to PJRT.
+    pub runtime: Option<Rc<Runtime>>,
+    /// Localize each mismatch to the first diverging op (slower: compiles
+    /// one single-op subgraph per graph node).
+    pub localize: bool,
+}
+
+impl Default for ReplayOptions {
+    fn default() -> ReplayOptions {
+        ReplayOptions { eps: 0.0, runtime: None, localize: true }
+    }
+}
+
+/// The first op at which a backend diverges from the eager oracle, plus a
+/// minimized single-op repro bundle (the extracted subgraph with the
+/// oracle's inputs/outputs for that op).
+#[derive(Clone, Debug)]
+pub struct CulpritOp {
+    /// Node id in the original graph.
+    pub node: usize,
+    /// The op's method name (`relu`, `matmul`, ...).
+    pub op: String,
+    /// Max divergence observed at that op's output.
+    pub diff: f32,
+    /// Self-contained repro: single-op graph + the one call that diverges.
+    pub repro: TraceBundle,
+}
+
+/// One replay mismatch.
+#[derive(Clone, Debug)]
+pub struct Mismatch {
+    /// Index into the bundle's `calls`.
+    pub call: usize,
+    /// Output position within that call.
+    pub output: usize,
+    /// Max divergence (`f32::INFINITY` for shape/arity mismatches).
+    pub diff: f32,
+    /// Human-readable description of what diverged.
+    pub detail: String,
+    pub culprit: Option<CulpritOp>,
+}
+
+/// The outcome of replaying one bundle on one backend.
+pub struct ReplayReport {
+    pub name: String,
+    /// Backend the bundle was re-executed on.
+    pub backend: String,
+    /// `Some(name)` in differential mode (reference recomputed by that
+    /// backend) — `None` when the recorded outputs were the reference.
+    pub against: Option<String>,
+    pub calls: usize,
+    pub mismatches: Vec<Mismatch>,
+}
+
+impl ReplayReport {
+    pub fn ok(&self) -> bool {
+        self.mismatches.is_empty()
+    }
+
+    /// One-paragraph human summary (the CLI's per-bundle output).
+    pub fn render(&self) -> String {
+        let reference = match &self.against {
+            Some(o) => format!("against {}", o),
+            None => "against recorded outputs".to_string(),
+        };
+        if self.ok() {
+            return format!(
+                "{}: OK — {} call(s) replayed on {} {} with no mismatch",
+                self.name, self.calls, self.backend, reference
+            );
+        }
+        let mut out = format!(
+            "{}: {} mismatch(es) over {} call(s) on {} {}\n",
+            self.name,
+            self.mismatches.len(),
+            self.calls,
+            self.backend,
+            reference
+        );
+        for m in &self.mismatches {
+            out.push_str(&format!("  call {} output {}: {}\n", m.call, m.output, m.detail));
+            if let Some(c) = &m.culprit {
+                out.push_str(&format!(
+                    "    first divergence at node v{} ({}), max |Δ| {:e}\n",
+                    c.node, c.op, c.diff
+                ));
+            }
+        }
+        out.pop();
+        out
+    }
+}
+
+/// Compare two tensors under the replay tolerance. `None` = match;
+/// `Some(diff)` = mismatch with the max observed divergence.
+pub fn tensor_diff(a: &Tensor, b: &Tensor, eps: f32) -> Option<f32> {
+    if a.shape() != b.shape() {
+        return Some(f32::INFINITY);
+    }
+    let mut worst: Option<f32> = None;
+    for (x, y) in a.data().iter().zip(b.data().iter()) {
+        // Identical bits always match — also the eps path, so equal
+        // infinities don't fall into the NaN-producing subtraction below.
+        let matches = x.to_bits() == y.to_bits()
+            || (eps > 0.0 && ((x.is_nan() && y.is_nan()) || (x - y).abs() <= eps));
+        if !matches {
+            let d = (x - y).abs();
+            let d = if d.is_nan() { f32::INFINITY } else { d };
+            worst = Some(worst.map_or(d, |w: f32| w.max(d)));
+        }
+    }
+    worst
+}
+
+/// Run the eager oracle over the graph, returning the value of **every**
+/// node (placeholders, consts and op results) — the per-op ground truth
+/// [`localize_divergence`] checks backends against.
+fn oracle_env(graph: &Graph, inputs: &[Rc<Tensor>]) -> Result<Vec<Option<Tensor>>, DepyfError> {
+    let mut env: Vec<Option<Tensor>> = vec![None; graph.nodes.len()];
+    for (&slot, input) in graph.inputs.iter().zip(inputs.iter()) {
+        env[slot] = Some((**input).clone());
+    }
+    for (id, node) in graph.nodes.iter().enumerate() {
+        match &node.kind {
+            NodeKind::ConstScalar(v) => env[id] = Some(Tensor::scalar(*v as f32)),
+            NodeKind::ConstTensor(t) => env[id] = Some(t.clone()),
+            _ => {}
+        }
+    }
+    let mut op_values: Vec<(usize, Tensor)> = Vec::new();
+    eager::execute_traced(graph, inputs, |id, v| op_values.push((id, v.clone())))?;
+    for (id, v) in op_values {
+        env[id] = Some(v);
+    }
+    Ok(env)
+}
+
+/// Localize a divergence to the first op where `backend` disagrees with
+/// the eager oracle: the graph is cut into **single-op partitions** with
+/// the sharded partitioner, each partition is extracted as a standalone
+/// subgraph, compiled by `backend`, and fed the *oracle's* values for its
+/// inputs — so a divergence at op k cannot be masked or amplified by an
+/// earlier one. Returns `None` when every op matches in isolation (the
+/// divergence only manifests composed, e.g. fused accumulation order).
+pub fn localize_divergence(
+    graph: &Rc<Graph>,
+    inputs: &[Rc<Tensor>],
+    backend: &dyn Backend,
+    opts: &ReplayOptions,
+) -> Result<Option<CulpritOp>, DepyfError> {
+    let env = oracle_env(graph, inputs)?;
+    for part in partition_by_ops(graph, 1) {
+        let node = *part.nodes.first().expect("single-op partition");
+        let sub = Rc::new(extract(graph, &part, &format!("{}.v{}", graph.name, node))?);
+        let sub_name = sub.name.clone();
+        let req = CompileRequest::new(&sub_name, Rc::clone(&sub))
+            .with_runtime(opts.runtime.clone())
+            .with_fallback(FallbackPolicy::Error);
+        let module = backend.compile(&req)?;
+        let part_inputs: Result<Vec<Rc<Tensor>>, DepyfError> = part
+            .inputs
+            .iter()
+            .map(|&id| {
+                env[id]
+                    .clone()
+                    .map(Rc::new)
+                    .ok_or_else(|| DepyfError::Backend(format!("localize: node {} unevaluated", id)))
+            })
+            .collect();
+        let part_inputs = part_inputs?;
+        let got = module.call(&part_inputs)?;
+        for (&out_id, out_t) in part.outputs.iter().zip(got.iter()) {
+            let want = env[out_id]
+                .as_ref()
+                .ok_or_else(|| DepyfError::Backend(format!("localize: node {} unevaluated", out_id)))?;
+            if let Some(diff) = tensor_diff(out_t, want, opts.eps) {
+                let op = match &graph.nodes[node].kind {
+                    NodeKind::Op(op, _) => op.method_name().to_string(),
+                    other => format!("{:?}", other),
+                };
+                let repro = TraceBundle {
+                    name: sub.name.clone(),
+                    backend: backend.name().to_string(),
+                    cache_key: sub.content_hash(),
+                    guards: Vec::new(),
+                    stats: module.stats(),
+                    graph: (*sub).clone(),
+                    calls: vec![TraceCall {
+                        inputs: part_inputs.iter().map(|t| (**t).clone()).collect(),
+                        outputs: part
+                            .outputs
+                            .iter()
+                            .map(|&id| env[id].clone().expect("checked above"))
+                            .collect(),
+                    }],
+                };
+                return Ok(Some(CulpritOp { node, op, diff, repro }));
+            }
+        }
+    }
+    Ok(None)
+}
+
+/// A bundle holding only one recorded call — the minimal whole-graph
+/// repro `replay` and the conformance harness dump on mismatch.
+pub fn single_call_bundle(bundle: &TraceBundle, call: usize) -> TraceBundle {
+    TraceBundle { calls: vec![bundle.calls[call].clone()], ..bundle.clone() }
+}
+
+/// Re-execute a recorded bundle on `backend`.
+///
+/// * `oracle == None`: the **recorded outputs** are the reference — "does
+///   this backend still produce what was observed at record time?"
+/// * `oracle == Some(b)`: differential mode (`--against eager`) — the
+///   reference is recomputed by `b` on the recorded inputs, so two
+///   backends are compared on exactly the captured workload.
+///
+/// Backend failures propagate as errors (no silent eager degrade: a
+/// replay that cannot run the requested backend is a failed replay).
+pub fn replay_bundle(
+    bundle: &TraceBundle,
+    backend: &dyn Backend,
+    oracle: Option<&dyn Backend>,
+    opts: &ReplayOptions,
+) -> Result<ReplayReport, DepyfError> {
+    let graph = Rc::new(bundle.graph.clone());
+    let req = CompileRequest::new(&bundle.name, Rc::clone(&graph))
+        .with_runtime(opts.runtime.clone())
+        .with_guards(bundle.guards.clone())
+        .with_fallback(FallbackPolicy::Error);
+    let module = backend.compile(&req)?;
+    let oracle_module = match oracle {
+        Some(o) => Some(o.compile(&req)?),
+        None => None,
+    };
+    let mut mismatches = Vec::new();
+    for (ci, call) in bundle.calls.iter().enumerate() {
+        let inputs: Vec<Rc<Tensor>> = call.inputs.iter().cloned().map(Rc::new).collect();
+        let got = module.call(&inputs)?;
+        let reference: Vec<Tensor> = match &oracle_module {
+            Some(om) => om.call(&inputs)?,
+            None => call.outputs.clone(),
+        };
+        if got.len() != reference.len() {
+            mismatches.push(Mismatch {
+                call: ci,
+                output: 0,
+                diff: f32::INFINITY,
+                detail: format!("arity mismatch: {} outputs vs {} expected", got.len(), reference.len()),
+                culprit: None,
+            });
+            continue;
+        }
+        let mut diverged = false;
+        for (oi, (g, r)) in got.iter().zip(reference.iter()).enumerate() {
+            if let Some(diff) = tensor_diff(g, r, opts.eps) {
+                let mut detail = if g.shape() != r.shape() {
+                    format!("shape mismatch: {:?} vs {:?}", g.shape(), r.shape())
+                } else {
+                    format!("max |Δ| {:e} (eps {:e})", diff, opts.eps)
+                };
+                // Localize once per diverging call (the per-op sweep covers
+                // every output of the graph at once). A failed localization
+                // is reported, not silently conflated with "every op
+                // matches in isolation".
+                let culprit = if opts.localize && !diverged {
+                    match localize_divergence(&graph, &inputs, backend, opts) {
+                        Ok(c) => c,
+                        Err(e) => {
+                            detail.push_str(&format!(" (localization failed: {})", e));
+                            None
+                        }
+                    }
+                } else {
+                    None
+                };
+                diverged = true;
+                mismatches.push(Mismatch { call: ci, output: oi, diff, detail, culprit });
+            }
+        }
+    }
+    Ok(ReplayReport {
+        name: bundle.name.clone(),
+        backend: backend.name().to_string(),
+        against: oracle.map(|o| o.name().to_string()),
+        calls: bundle.calls.len(),
+        mismatches,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::EagerBackend;
+    use crate::backend::eager::EagerModule;
+    use crate::graph::OpKind;
+    use crate::hijack::DumpDir;
+    use crate::tensor::Rng;
+
+    fn chain_graph(name: &str) -> Rc<Graph> {
+        let mut g = Graph::new(name);
+        let x = g.placeholder("x", &[2, 3]);
+        let r = g.add_op(OpKind::Relu, vec![x]).unwrap();
+        let e = g.add_op(OpKind::Exp, vec![r]).unwrap();
+        let n = g.add_op(OpKind::Neg, vec![e]).unwrap();
+        g.set_outputs(vec![n]);
+        Rc::new(g)
+    }
+
+    fn rand_inputs(g: &Graph, seed: u64) -> Vec<Rc<Tensor>> {
+        let mut rng = Rng::new(seed);
+        g.input_shapes().into_iter().map(|(_, s)| Rc::new(Tensor::randn(&s, &mut rng))).collect()
+    }
+
+    #[test]
+    fn wrapper_inherits_capabilities_and_registers() {
+        let rec = RecordingBackend::new(Rc::new(crate::backend::ShardedBackend::new()));
+        assert!(rec.capabilities().contains(Capabilities::WRAPPER));
+        assert!(rec.capabilities().contains(Capabilities::PARTITION));
+        assert!(!rec.requires_runtime());
+        // The default registered instance wraps eager.
+        let reg = crate::api::lookup_backend("recording").expect("registered");
+        assert!(reg.capabilities().contains(Capabilities::WRAPPER));
+        assert!(RecordingBackend::wrapping("batched").is_ok());
+        assert!(RecordingBackend::wrapping("no-such").is_err());
+    }
+
+    #[test]
+    fn record_then_replay_round_trips_through_text() {
+        let g = chain_graph("__compiled_fn_1");
+        let req = CompileRequest::new("__compiled_fn_1", Rc::clone(&g))
+            .with_guards(vec!["check_tensor(args[0], shape=[2, 3])".into()]);
+        let rec = RecordingBackend::new(Rc::new(EagerBackend));
+        let module = rec.compile(&req).unwrap();
+        assert_eq!(module.backend_name(), "recording(eager)");
+        for seed in [1u64, 2, 3] {
+            module.call(&rand_inputs(&g, seed)).unwrap();
+        }
+        let arts = module.artifacts();
+        let trace = arts.iter().find(|a| a.kind == ArtifactKind::Trace).expect("trace artifact");
+        assert_eq!(trace.name, "__compiled_fn_1");
+        assert!(trace.file.starts_with("__trace_") && trace.file.ends_with("_e1.json"), "{}", trace.file);
+        // The bundle survives the text round-trip and replays clean.
+        let bundle = TraceBundle::parse(&trace.content).unwrap();
+        assert_eq!(bundle.calls.len(), 3);
+        assert_eq!(bundle.backend, "eager");
+        assert_eq!(bundle.guards.len(), 1);
+        let report = replay_bundle(&bundle, &EagerBackend, None, &ReplayOptions::default()).unwrap();
+        assert!(report.ok(), "{}", report.render());
+        assert!(report.render().contains("OK"));
+        // Differential mode against the same backend is also clean.
+        let diff = replay_bundle(&bundle, &EagerBackend, Some(&EagerBackend), &ReplayOptions::default())
+            .unwrap();
+        assert!(diff.ok());
+        assert_eq!(diff.against.as_deref(), Some("eager"));
+    }
+
+    #[test]
+    fn replay_detects_tampered_outputs() {
+        let g = chain_graph("__compiled_fn_1");
+        let req = CompileRequest::new("__compiled_fn_1", Rc::clone(&g));
+        let module = RecordingBackend::new(Rc::new(EagerBackend)).compile(&req).unwrap();
+        module.call(&rand_inputs(&g, 9)).unwrap();
+        let trace = module.artifacts().into_iter().find(|a| a.kind == ArtifactKind::Trace).unwrap();
+        let mut bundle = TraceBundle::parse(&trace.content).unwrap();
+        // Corrupt one recorded output value.
+        let t = &bundle.calls[0].outputs[0];
+        let mut data = t.data().to_vec();
+        data[0] += 0.5;
+        bundle.calls[0].outputs[0] = Tensor::new(t.shape().to_vec(), data);
+        let report = replay_bundle(&bundle, &EagerBackend, None, &ReplayOptions::default()).unwrap();
+        assert_eq!(report.mismatches.len(), 1);
+        assert!((report.mismatches[0].diff - 0.5).abs() < 1e-4, "{}", report.mismatches[0].diff);
+        // Under a generous eps the same replay passes.
+        let lax = ReplayOptions { eps: 1.0, ..Default::default() };
+        assert!(replay_bundle(&bundle, &EagerBackend, None, &lax).unwrap().ok());
+        // Differential mode ignores recorded outputs: still clean.
+        let diff = replay_bundle(&bundle, &EagerBackend, Some(&EagerBackend), &ReplayOptions::default())
+            .unwrap();
+        assert!(diff.ok());
+    }
+
+    /// A deliberately wrong backend: every `exp` result is off by one (the
+    /// error propagates downstream, like a real miscompiled kernel would).
+    struct BuggyExp;
+
+    fn sabotage_exp(g: &Graph) -> Graph {
+        let mut out = Graph::new(&g.name);
+        let mut map = vec![0usize; g.nodes.len()];
+        for (id, node) in g.nodes.iter().enumerate() {
+            map[id] = match &node.kind {
+                NodeKind::Placeholder { name } => out.placeholder(name, &node.shape),
+                NodeKind::ConstScalar(v) => out.const_scalar(*v),
+                NodeKind::ConstTensor(t) => out.const_tensor(t.clone()),
+                NodeKind::Op(op, args) => {
+                    let margs = args.iter().map(|a| map[*a]).collect();
+                    let n = out.add_op(op.clone(), margs).unwrap();
+                    if matches!(op, OpKind::Exp) {
+                        let one = out.const_scalar(1.0);
+                        out.add_op(OpKind::Add, vec![n, one]).unwrap()
+                    } else {
+                        n
+                    }
+                }
+            };
+        }
+        out.set_outputs(g.outputs.iter().map(|o| map[*o]).collect());
+        out
+    }
+
+    impl Backend for BuggyExp {
+        fn name(&self) -> &str {
+            "buggy-exp"
+        }
+        fn plan(&self, req: &CompileRequest) -> Result<CompilePlan, DepyfError> {
+            Ok(CompilePlan::monolithic("buggy-exp", req, "eager"))
+        }
+        fn lower(
+            &self,
+            req: &CompileRequest,
+            _plan: &CompilePlan,
+        ) -> Result<Rc<dyn CompiledModule>, DepyfError> {
+            let wrong = Rc::new(sabotage_exp(&req.graph));
+            Ok(Rc::new(EagerModule::with_name(wrong, "buggy-exp".into())))
+        }
+    }
+
+    #[test]
+    fn localization_names_the_diverging_op() {
+        let g = chain_graph("__compiled_fn_2");
+        // Record ground truth with the honest eager backend.
+        let req = CompileRequest::new("__compiled_fn_2", Rc::clone(&g));
+        let module = RecordingBackend::new(Rc::new(EagerBackend)).compile(&req).unwrap();
+        module.call(&rand_inputs(&g, 4)).unwrap();
+        let bundle = TraceBundle::parse(
+            &module.artifacts().into_iter().find(|a| a.kind == ArtifactKind::Trace).unwrap().content,
+        )
+        .unwrap();
+        // Replay on the buggy backend: the graph ends in neg(exp(relu(x))),
+        // so the end-to-end output diverges and the per-op sweep must pin
+        // the exp node (id 2), not relu or neg.
+        let report = replay_bundle(&bundle, &BuggyExp, None, &ReplayOptions::default()).unwrap();
+        assert_eq!(report.mismatches.len(), 1, "{}", report.render());
+        let culprit = report.mismatches[0].culprit.as_ref().expect("localized");
+        assert_eq!(culprit.op, "exp");
+        assert_eq!(culprit.node, 2);
+        assert!((culprit.diff - 1.0).abs() < 1e-4, "{}", culprit.diff);
+        // The minimized repro is itself a valid, replayable bundle that
+        // reproduces the divergence in one op.
+        let repro = TraceBundle::parse(&culprit.repro.to_json()).unwrap();
+        assert_eq!(repro.graph.num_ops(), 1);
+        assert_eq!(repro.calls.len(), 1);
+        assert!(replay_bundle(&repro, &EagerBackend, None, &ReplayOptions::default()).unwrap().ok());
+        let rerun = replay_bundle(&repro, &BuggyExp, None, &ReplayOptions::default()).unwrap();
+        assert_eq!(rerun.mismatches.len(), 1);
+        assert!(report.render().contains("exp"), "{}", report.render());
+    }
+
+    #[test]
+    fn tensor_diff_is_bitwise_at_eps_zero() {
+        let a = Tensor::new(vec![2], vec![0.0, f32::NAN]);
+        let b = Tensor::new(vec![2], vec![-0.0, f32::NAN]);
+        // -0.0 differs bitwise from 0.0; identical NaN payloads match.
+        assert!(tensor_diff(&a, &b, 0.0).is_some());
+        assert!(tensor_diff(&a, &a, 0.0).is_none());
+        // eps mode: -0.0 ≈ 0.0 and NaN pairs with NaN.
+        assert!(tensor_diff(&a, &b, 1e-9).is_none());
+        // Shape mismatches are infinite.
+        let c = Tensor::new(vec![1, 2], vec![0.0, f32::NAN]);
+        assert_eq!(tensor_diff(&a, &c, 0.0), Some(f32::INFINITY));
+    }
+
+    /// Satellite: two guard entries wrapping structurally identical graphs
+    /// share one content hash — their trace artifacts must land in two
+    /// files, not refresh each other's.
+    #[test]
+    fn trace_files_do_not_collide_on_shared_content_hash() {
+        let g1 = chain_graph("__compiled_fn_1");
+        let g2 = chain_graph("__compiled_fn_2");
+        assert_eq!(g1.content_hash(), g2.content_hash(), "same structure must share a hash");
+        let rec = RecordingBackend::new(Rc::new(EagerBackend));
+        let m1 = rec.compile(&CompileRequest::new("__compiled_fn_1", Rc::clone(&g1))).unwrap();
+        let m2 = rec.compile(&CompileRequest::new("__compiled_fn_2", Rc::clone(&g2))).unwrap();
+        m1.call(&rand_inputs(&g1, 1)).unwrap();
+        m2.call(&rand_inputs(&g2, 2)).unwrap();
+        m2.call(&rand_inputs(&g2, 3)).unwrap();
+        // Mirror Session::finish(): module artifacts flow through the
+        // (kind, name)-keyed refresh writer.
+        let dir = std::env::temp_dir().join(format!("depyf_trace_collide_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let dump = DumpDir::create(&dir).unwrap();
+        for m in [&m1, &m2] {
+            for art in m.artifacts() {
+                dump.write_refresh(art.kind, &art.name, &art.file, &art.content).unwrap();
+            }
+        }
+        let traces: Vec<_> =
+            dump.artifacts().into_iter().filter(|a| a.kind == ArtifactKind::Trace).collect();
+        assert_eq!(traces.len(), 2, "each entry keeps its own trace file: {:?}", traces);
+        assert_ne!(traces[0].path, traces[1].path);
+        let b1 = TraceBundle::load(&traces[0].path).unwrap();
+        let b2 = TraceBundle::load(&traces[1].path).unwrap();
+        assert_eq!(b1.calls.len(), 1);
+        assert_eq!(b2.calls.len(), 2, "second entry's calls must not be clobbered by the first");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

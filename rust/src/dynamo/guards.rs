@@ -337,6 +337,32 @@ impl GuardTable {
         self.entries.push(TableEntry { guards, code, compiled });
     }
 
+    /// Remove the entry at `idx` (cache eviction), returning its code
+    /// object. Bucket and wildcard index lists are rebased so the
+    /// remaining entries keep their exact linear-scan dispatch order; the
+    /// origin slot map is left as-is (an orphaned slot is never resolved
+    /// because no surviving compiled guard references it).
+    pub fn remove(&mut self, idx: usize) -> Option<Rc<CodeObject>> {
+        if idx >= self.entries.len() {
+            return None;
+        }
+        let entry = self.entries.remove(idx);
+        fn rebase(v: &mut Vec<usize>, removed: usize) {
+            v.retain(|&e| e != removed);
+            for e in v.iter_mut() {
+                if *e > removed {
+                    *e -= 1;
+                }
+            }
+        }
+        for bucket in self.buckets.values_mut() {
+            rebase(bucket, idx);
+        }
+        self.buckets.retain(|_, v| !v.is_empty());
+        rebase(&mut self.wildcard, idx);
+        Some(entry.code)
+    }
+
     /// Find the first entry whose guards all pass, resolving origins with
     /// `resolve` (called at most once per distinct origin). Returns the
     /// entry index — the same index a linear scan over `entries()` yields.
@@ -577,6 +603,71 @@ mod tests {
         for (key, n) in counts.borrow().iter() {
             assert_eq!(*n, 1, "origin {} resolved {} times", key, n);
         }
+    }
+
+    /// Satellite: dispatch must stay exactly linear-scan-equivalent while
+    /// entries are removed, whatever the bucket/wildcard interleaving.
+    #[test]
+    fn removal_preserves_linear_scan_equivalence() {
+        // b = bucketed (TensorShape on arg0), w = wildcard. Layout:
+        // [b2, w, b2, w, b3] — removal must rebase both index lists.
+        let build = || -> GuardTable {
+            let mut t = GuardTable::new();
+            t.insert(vec![Guard::TensorShape { origin: Origin::Arg(0), shape: vec![2] }], dummy_code("b0"));
+            t.insert(vec![Guard::Len { origin: Origin::Arg(1), len: 0 }], dummy_code("w1"));
+            t.insert(vec![Guard::TensorShape { origin: Origin::Arg(0), shape: vec![2] }], dummy_code("b2"));
+            t.insert(vec![Guard::ConstEq { origin: Origin::Arg(0), value: Value::Int(5) }], dummy_code("w3"));
+            t.insert(vec![Guard::TensorShape { origin: Origin::Arg(0), shape: vec![3, 3] }], dummy_code("b4"));
+            t
+        };
+        let globals: HashMap<String, Value> = HashMap::new();
+        let cases: Vec<Vec<Value>> = vec![
+            vec![Value::tensor(Tensor::ones(&[2])), Value::list(vec![])],
+            vec![Value::tensor(Tensor::ones(&[3, 3])), Value::list(vec![])],
+            vec![Value::Int(5)],
+            vec![Value::Int(6), Value::list(vec![])],
+            vec![Value::tensor(Tensor::ones(&[7])), Value::list(vec![Value::Int(1)])],
+        ];
+        let check_equiv = |t: &GuardTable, note: &str| {
+            for args in &cases {
+                let scan = linear_scan(t, args, &globals);
+                let table = t.lookup_with(args, &mut |o| o.resolve(args, &globals));
+                assert_eq!(table, scan, "{}: diverged on {:?}", note, args);
+            }
+        };
+        // Remove each position in turn from a fresh table.
+        for victim in 0..5 {
+            let mut t = build();
+            let code = t.remove(victim).expect("in range");
+            assert_eq!(t.len(), 4);
+            assert!(
+                t.entries().iter().all(|e| !Rc::ptr_eq(&e.code, &code)),
+                "removed entry {} still present",
+                victim
+            );
+            check_equiv(&t, &format!("after removing {}", victim));
+        }
+        // Drain one table entry by entry, front-biased, checking at every
+        // intermediate shape (wildcards and buckets interleave throughout).
+        let mut t = build();
+        for step in 0..5 {
+            t.remove(0).expect("non-empty");
+            check_equiv(&t, &format!("drain step {}", step));
+        }
+        assert!(t.is_empty());
+        assert!(t.remove(0).is_none(), "out-of-range removal is None");
+        // Removing the first matching bucketed entry promotes the next one
+        // in linear-scan order, not an arbitrary bucket neighbour. (arg1 is
+        // a non-empty list so the Len==0 wildcard stays out of the way.)
+        let mut t = build();
+        let args = vec![Value::tensor(Tensor::ones(&[2])), Value::list(vec![Value::Int(1)])];
+        assert_eq!(t.lookup(&args, &globals).map(|e| e.code.name.as_str()), Some("b0"));
+        t.remove(0);
+        assert_eq!(t.lookup(&args, &globals).map(|e| e.code.name.as_str()), Some("b2"));
+        // And inserting after removal keeps working (indices stay dense).
+        t.insert(vec![Guard::TensorShape { origin: Origin::Arg(0), shape: vec![2] }], dummy_code("b5"));
+        check_equiv(&t, "after post-removal insert");
+        assert_eq!(t.lookup(&args, &globals).map(|e| e.code.name.as_str()), Some("b2"));
     }
 
     #[test]

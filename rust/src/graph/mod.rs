@@ -3,8 +3,10 @@
 //! shapes are inferred eagerly so capture fails fast on invalid programs.
 
 mod printer;
+pub mod serde;
 
 pub use printer::{print_graph, print_graph_with_lines};
+pub use serde::{parse_graph, render_graph, GRAPH_SCHEMA_VERSION};
 
 use std::cell::Cell;
 use std::fmt;

@@ -1,0 +1,430 @@
+//! Lossless text serialization of captured graphs.
+//!
+//! Trace bundles (`__trace_*.json`, see [`crate::api::trace`]) must be
+//! **self-contained**: a bundle replayed on another machine, or long after
+//! the recording session exited, needs the exact graph that was compiled —
+//! not a pretty-printed approximation. [`render_graph`] therefore encodes
+//! every float as its raw bit pattern (8 hex digits per f32, 16 per f64),
+//! so `parse(render(g))` rebuilds a graph with the **same
+//! [`Graph::content_hash`]** — the round-trip is bit-exact, not
+//! display-precision. Op shapes are re-inferred on parse and checked
+//! against the recorded ones, so a corrupted bundle fails loudly instead
+//! of replaying a different computation.
+
+use crate::api::json::{self, Json};
+use crate::api::DepyfError;
+use crate::tensor::Tensor;
+
+use super::{Graph, NodeKind, OpKind};
+
+/// Bumped whenever the graph JSON schema changes shape.
+pub const GRAPH_SCHEMA_VERSION: u64 = 1;
+
+/// Encode f32 payloads as concatenated 8-hex-digit bit patterns — lossless
+/// (NaN payloads and -0.0 included), compact, and trivially chunkable.
+pub fn f32s_to_hex(data: &[f32]) -> String {
+    let mut out = String::with_capacity(data.len() * 8);
+    for v in data {
+        out.push_str(&format!("{:08x}", v.to_bits()));
+    }
+    out
+}
+
+/// Inverse of [`f32s_to_hex`].
+pub fn f32s_from_hex(s: &str) -> Result<Vec<f32>, DepyfError> {
+    if s.len() % 8 != 0 {
+        return Err(DepyfError::Parse(format!(
+            "f32 hex payload length {} is not a multiple of 8",
+            s.len()
+        )));
+    }
+    s.as_bytes()
+        .chunks(8)
+        .map(|chunk| {
+            let part = std::str::from_utf8(chunk)
+                .map_err(|_| DepyfError::Parse("f32 hex payload is not ASCII".into()))?;
+            u32::from_str_radix(part, 16)
+                .map(f32::from_bits)
+                .map_err(|e| DepyfError::Parse(format!("bad f32 hex '{}': {}", part, e)))
+        })
+        .collect()
+}
+
+fn render_usizes(ids: &[usize]) -> String {
+    let inner: Vec<String> = ids.iter().map(|i| i.to_string()).collect();
+    format!("[{}]", inner.join(", "))
+}
+
+/// Render a graph as a JSON object (no trailing newline) suitable for
+/// embedding in a larger document (the trace bundle) or standing alone.
+pub fn render_graph(g: &Graph) -> String {
+    let mut out = String::from("{\n");
+    out.push_str(&format!("  \"schema_version\": {},\n", GRAPH_SCHEMA_VERSION));
+    out.push_str(&format!("  \"name\": \"{}\",\n", json::escape(&g.name)));
+    out.push_str("  \"nodes\": [\n");
+    for (i, node) in g.nodes.iter().enumerate() {
+        let body = match &node.kind {
+            NodeKind::Placeholder { name } => format!(
+                "\"kind\": \"placeholder\", \"pname\": \"{}\", \"shape\": {}",
+                json::escape(name),
+                render_usizes(&node.shape)
+            ),
+            NodeKind::ConstScalar(v) => format!(
+                "\"kind\": \"const_scalar\", \"bits\": \"{:016x}\"",
+                v.to_bits()
+            ),
+            NodeKind::ConstTensor(t) => format!(
+                "\"kind\": \"const_tensor\", \"shape\": {}, \"data\": \"{}\"",
+                render_usizes(t.shape()),
+                f32s_to_hex(t.data())
+            ),
+            NodeKind::Op(op, args) => format!(
+                "\"kind\": \"op\", \"op\": \"{}\"{}, \"args\": {}, \"shape\": {}",
+                op.method_name(),
+                render_op_params(op),
+                render_usizes(args),
+                render_usizes(&node.shape)
+            ),
+        };
+        out.push_str(&format!("    {{{}}}{}\n", body, if i + 1 < g.nodes.len() { "," } else { "" }));
+    }
+    out.push_str("  ],\n");
+    out.push_str(&format!("  \"inputs\": {},\n", render_usizes(&g.inputs)));
+    out.push_str(&format!("  \"outputs\": {}\n", render_usizes(&g.outputs)));
+    out.push('}');
+    out
+}
+
+fn render_op_params(op: &OpKind) -> String {
+    match op {
+        OpKind::Reshape(spec) => {
+            let inner: Vec<String> = spec.iter().map(|d| d.to_string()).collect();
+            format!(", \"spec\": [{}]", inner.join(", "))
+        }
+        OpKind::Permute(perm) => format!(", \"perm\": {}", render_usizes(perm)),
+        OpKind::Sum(Some(ax)) | OpKind::Mean(Some(ax)) | OpKind::Max(Some(ax)) | OpKind::Min(Some(ax)) => {
+            format!(", \"axis\": {}", ax)
+        }
+        _ => String::new(),
+    }
+}
+
+/// Parse a graph from a standalone JSON document.
+pub fn parse_graph(text: &str) -> Result<Graph, DepyfError> {
+    graph_from_value(&json::parse(text)?)
+}
+
+/// Rebuild a graph from an already-parsed JSON object (used by the trace
+/// bundle parser, which embeds the graph in a larger document).
+pub fn graph_from_value(doc: &Json) -> Result<Graph, DepyfError> {
+    if let Some(Json::Num(v)) = doc.get("schema_version") {
+        if *v != GRAPH_SCHEMA_VERSION as f64 {
+            return Err(DepyfError::Parse(format!(
+                "unsupported graph schema_version {} (expected {})",
+                v, GRAPH_SCHEMA_VERSION
+            )));
+        }
+    }
+    let name = doc
+        .get("name")
+        .and_then(Json::as_str)
+        .ok_or_else(|| DepyfError::Parse("graph missing string \"name\"".into()))?;
+    let nodes = match doc.get("nodes") {
+        Some(Json::Arr(items)) => items,
+        _ => return Err(DepyfError::Parse("graph missing \"nodes\" array".into())),
+    };
+    let ids_field = |item: &Json, key: &str| -> Result<Vec<usize>, DepyfError> {
+        let arr = item
+            .get(key)
+            .and_then(Json::as_arr)
+            .ok_or_else(|| DepyfError::Parse(format!("graph node missing array \"{}\"", key)))?;
+        arr.iter()
+            .map(|v| {
+                v.as_f64()
+                    .filter(|n| *n >= 0.0 && n.fract() == 0.0)
+                    .map(|n| n as usize)
+                    .ok_or_else(|| DepyfError::Parse(format!("graph array \"{}\" holds a bad entry", key)))
+            })
+            .collect()
+    };
+    let mut g = Graph::new(name);
+    for (id, item) in nodes.iter().enumerate() {
+        let kind = item
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or_else(|| DepyfError::Parse(format!("graph node {} missing \"kind\"", id)))?;
+        let built = match kind {
+            "placeholder" => {
+                let pname = item
+                    .get("pname")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| DepyfError::Parse(format!("placeholder {} missing \"pname\"", id)))?;
+                let shape = ids_field(item, "shape")?;
+                g.placeholder(pname, &shape)
+            }
+            "const_scalar" => {
+                let bits = item
+                    .get("bits")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| DepyfError::Parse(format!("const_scalar {} missing \"bits\"", id)))?;
+                let v = u64::from_str_radix(bits, 16)
+                    .map(f64::from_bits)
+                    .map_err(|e| DepyfError::Parse(format!("bad const_scalar bits '{}': {}", bits, e)))?;
+                g.const_scalar(v)
+            }
+            "const_tensor" => {
+                let shape = ids_field(item, "shape")?;
+                let hex = item
+                    .get("data")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| DepyfError::Parse(format!("const_tensor {} missing \"data\"", id)))?;
+                let data = f32s_from_hex(hex)?;
+                if shape.iter().product::<usize>() != data.len() {
+                    return Err(DepyfError::Parse(format!(
+                        "const_tensor {} shape {:?} disagrees with {} data elements",
+                        id,
+                        shape,
+                        data.len()
+                    )));
+                }
+                g.const_tensor(Tensor::new(shape, data))
+            }
+            "op" => {
+                let op = parse_op(item, id)?;
+                let args = ids_field(item, "args")?;
+                if args.iter().any(|&a| a >= id) {
+                    return Err(DepyfError::Parse(format!(
+                        "op node {} references a not-yet-defined arg ({:?})",
+                        id, args
+                    )));
+                }
+                let shape = ids_field(item, "shape")?;
+                let built = g
+                    .add_op(op, args)
+                    .map_err(|e| DepyfError::Parse(format!("op node {} no longer infers: {}", id, e)))?;
+                if g.nodes[built].shape != shape {
+                    return Err(DepyfError::Parse(format!(
+                        "op node {} shape drifted: recorded {:?}, inferred {:?}",
+                        id, shape, g.nodes[built].shape
+                    )));
+                }
+                built
+            }
+            other => return Err(DepyfError::Parse(format!("unknown graph node kind '{}'", other))),
+        };
+        if built != id {
+            return Err(DepyfError::Parse(format!("graph node ids not dense at {}", id)));
+        }
+    }
+    let inputs = ids_field(doc, "inputs")?;
+    if inputs != g.inputs {
+        return Err(DepyfError::Parse(format!(
+            "graph inputs {:?} disagree with placeholder order {:?}",
+            inputs, g.inputs
+        )));
+    }
+    let outputs = ids_field(doc, "outputs")?;
+    if let Some(&bad) = outputs.iter().find(|&&o| o >= g.nodes.len()) {
+        return Err(DepyfError::Parse(format!("graph output {} out of range", bad)));
+    }
+    g.set_outputs(outputs);
+    Ok(g)
+}
+
+fn parse_op(item: &Json, id: usize) -> Result<OpKind, DepyfError> {
+    let name = item
+        .get("op")
+        .and_then(Json::as_str)
+        .ok_or_else(|| DepyfError::Parse(format!("op node {} missing \"op\"", id)))?;
+    let axis = |key: &str| -> Result<Option<usize>, DepyfError> {
+        match item.get(key) {
+            None | Some(Json::Null) => Ok(None),
+            Some(v) => v
+                .as_f64()
+                .filter(|n| *n >= 0.0 && n.fract() == 0.0)
+                .map(|n| Some(n as usize))
+                .ok_or_else(|| DepyfError::Parse(format!("op node {} has a bad \"{}\"", id, key))),
+        }
+    };
+    Ok(match name {
+        "add" => OpKind::Add,
+        "sub" => OpKind::Sub,
+        "mul" => OpKind::Mul,
+        "div" => OpKind::Div,
+        "pow" => OpKind::Pow,
+        "maximum" => OpKind::Maximum,
+        "minimum" => OpKind::Minimum,
+        "neg" => OpKind::Neg,
+        "relu" => OpKind::Relu,
+        "gelu" => OpKind::Gelu,
+        "tanh" => OpKind::Tanh,
+        "sigmoid" => OpKind::Sigmoid,
+        "exp" => OpKind::Exp,
+        "log" => OpKind::Log,
+        "sqrt" => OpKind::Sqrt,
+        "abs" => OpKind::Abs,
+        "matmul" => OpKind::MatMul,
+        "t" => OpKind::Transpose,
+        "softmax" => OpKind::Softmax,
+        "layernorm" => OpKind::LayerNorm,
+        "embedding" => OpKind::Embedding,
+        "cross_entropy" => OpKind::CrossEntropy,
+        "sum" => OpKind::Sum(axis("axis")?),
+        "mean" => OpKind::Mean(axis("axis")?),
+        "max" => OpKind::Max(axis("axis")?),
+        "min" => OpKind::Min(axis("axis")?),
+        "reshape" => {
+            let arr = item
+                .get("spec")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| DepyfError::Parse(format!("reshape node {} missing \"spec\"", id)))?;
+            let spec: Result<Vec<i64>, DepyfError> = arr
+                .iter()
+                .map(|v| {
+                    v.as_f64()
+                        .filter(|n| n.fract() == 0.0)
+                        .map(|n| n as i64)
+                        .ok_or_else(|| DepyfError::Parse(format!("reshape node {} has a bad spec", id)))
+                })
+                .collect();
+            OpKind::Reshape(spec?)
+        }
+        "permute" => {
+            let arr = item
+                .get("perm")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| DepyfError::Parse(format!("permute node {} missing \"perm\"", id)))?;
+            let perm: Result<Vec<usize>, DepyfError> = arr
+                .iter()
+                .map(|v| {
+                    v.as_f64()
+                        .filter(|n| *n >= 0.0 && n.fract() == 0.0)
+                        .map(|n| n as usize)
+                        .ok_or_else(|| DepyfError::Parse(format!("permute node {} has a bad perm", id)))
+                })
+                .collect();
+            OpKind::Permute(perm?)
+        }
+        other => return Err(DepyfError::Parse(format!("unknown op kind '{}'", other))),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_graph() -> Graph {
+        let mut g = Graph::new("__compiled_fn_1");
+        let x = g.placeholder("x", &[2, 3]);
+        let w = g.placeholder("w", &[3, 4]);
+        let c = g.const_scalar(0.1);
+        let ct = g.const_tensor(Tensor::new(vec![4], vec![-0.0, 1.5, f32::MIN_POSITIVE, 3.75]));
+        let m = g.add_op(OpKind::MatMul, vec![x, w]).unwrap();
+        let s = g.add_op(OpKind::Mul, vec![m, c]).unwrap();
+        let a = g.add_op(OpKind::Add, vec![s, ct]).unwrap();
+        let r = g.add_op(OpKind::Reshape(vec![-1, 2]), vec![a]).unwrap();
+        let p = g.add_op(OpKind::Permute(vec![1, 0]), vec![r]).unwrap();
+        let sm = g.add_op(OpKind::Sum(Some(1)), vec![p]).unwrap();
+        let t = g.add_op(OpKind::Sum(None), vec![sm]).unwrap();
+        g.set_outputs(vec![t, p]);
+        g
+    }
+
+    #[test]
+    fn f32_hex_round_trips_exotic_values() {
+        let vals = vec![0.0f32, -0.0, 1.0, -1.5, f32::INFINITY, f32::NEG_INFINITY, f32::NAN, f32::MIN_POSITIVE];
+        let back = f32s_from_hex(&f32s_to_hex(&vals)).unwrap();
+        assert_eq!(back.len(), vals.len());
+        for (a, b) in vals.iter().zip(back.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{} vs {}", a, b);
+        }
+        assert!(f32s_from_hex("3f8000").is_err(), "truncated payload must fail");
+        assert!(f32s_from_hex("zzzzzzzz").is_err());
+    }
+
+    #[test]
+    fn graph_round_trip_preserves_content_hash() {
+        let g = sample_graph();
+        let text = render_graph(&g);
+        let back = parse_graph(&text).unwrap();
+        assert_eq!(back.content_hash(), g.content_hash(), "round-trip must be bit-exact");
+        assert_eq!(back.name, g.name);
+        assert_eq!(back.inputs, g.inputs);
+        assert_eq!(back.outputs, g.outputs);
+        // And re-rendering is stable.
+        assert_eq!(render_graph(&back), text);
+    }
+
+    #[test]
+    fn every_op_kind_round_trips() {
+        // Unary/binary/reduction coverage beyond the sample graph.
+        let mut g = Graph::new("ops");
+        let x = g.placeholder("x", &[2, 2]);
+        let y = g.placeholder("y", &[2, 2]);
+        let gamma = g.placeholder("gamma", &[2]);
+        let beta = g.placeholder("beta", &[2]);
+        let ids = g.placeholder("ids", &[3]);
+        let logits = g.placeholder("logits", &[3, 2]);
+        let tgt = g.placeholder("tgt", &[3]);
+        let mut last = x;
+        for op in [
+            OpKind::Add,
+            OpKind::Sub,
+            OpKind::Mul,
+            OpKind::Div,
+            OpKind::Pow,
+            OpKind::Maximum,
+            OpKind::Minimum,
+        ] {
+            last = g.add_op(op, vec![last, y]).unwrap();
+        }
+        for op in [
+            OpKind::Neg,
+            OpKind::Relu,
+            OpKind::Gelu,
+            OpKind::Tanh,
+            OpKind::Sigmoid,
+            OpKind::Exp,
+            OpKind::Log,
+            OpKind::Sqrt,
+            OpKind::Abs,
+            OpKind::Softmax,
+            OpKind::Transpose,
+        ] {
+            last = g.add_op(op, vec![last]).unwrap();
+        }
+        let mm = g.add_op(OpKind::MatMul, vec![last, y]).unwrap();
+        let ln = g.add_op(OpKind::LayerNorm, vec![mm, gamma, beta]).unwrap();
+        let mx = g.add_op(OpKind::Max(Some(0)), vec![ln]).unwrap();
+        let mn = g.add_op(OpKind::Min(None), vec![mx]).unwrap();
+        let me = g.add_op(OpKind::Mean(None), vec![mn]).unwrap();
+        let emb = g.add_op(OpKind::Embedding, vec![y, ids]).unwrap();
+        let ce = g.add_op(OpKind::CrossEntropy, vec![logits, tgt]).unwrap();
+        g.set_outputs(vec![me, emb, ce]);
+        let back = parse_graph(&render_graph(&g)).unwrap();
+        assert_eq!(back.content_hash(), g.content_hash());
+    }
+
+    #[test]
+    fn parse_rejects_corrupted_documents() {
+        let text = render_graph(&sample_graph());
+        assert!(parse_graph("").is_err());
+        assert!(parse_graph("{}").is_err());
+        assert!(parse_graph(&text.replace("\"schema_version\": 1", "\"schema_version\": 99")).is_err());
+        // Unknown op.
+        assert!(parse_graph(&text.replace("\"op\": \"matmul\"", "\"op\": \"conv3d\"")).is_err());
+        // Recorded shape disagreeing with inference fails loudly.
+        assert!(parse_graph(&text.replace("\"shape\": [2, 4]", "\"shape\": [4, 2]")).is_err());
+        // Forward references are rejected.
+        assert!(parse_graph(&text.replace("\"args\": [4, 2]", "\"args\": [4, 99]")).is_err());
+        // Const payload size mismatch.
+        let g2 = {
+            let mut g = Graph::new("c");
+            let t = g.const_tensor(Tensor::new(vec![2], vec![1.0, 2.0]));
+            g.set_outputs(vec![t]);
+            g
+        };
+        let bad = render_graph(&g2).replace("\"shape\": [2]", "\"shape\": [3]");
+        assert!(parse_graph(&bad).is_err());
+    }
+}

@@ -49,9 +49,9 @@
 //!   `stats()` feeds the `metrics.json` `"modules"` array.
 //!
 //! Every backend declares an [`api::Capabilities`] bitset (`PARTITION`,
-//! `DYNAMIC_BATCH`, `ASYNC`, runtime needs) so the registry,
+//! `DYNAMIC_BATCH`, `ASYNC`, `WRAPPER`, runtime needs) so the registry,
 //! [`api::SessionBuilder`] (`.require(caps)`) and the CLI validate
-//! configurations before anything compiles. Four backends ship in-tree:
+//! configurations before anything compiles. Five backends ship in-tree:
 //!
 //! * `eager` — node-by-node CPU reference execution ([`backend::eager`]).
 //! * `xla` — one PJRT executable per captured graph ([`backend::xla`]).
@@ -61,6 +61,12 @@
 //! * `batched` — pads/buckets the dynamic leading dim so one executable
 //!   serves every guard entry in the same bucket ([`backend::batched`]),
 //!   reusing the content-hash compile cache per bucket.
+//! * `recording` — a *wrapper* backend ([`backend::recording`]) that
+//!   decorates any inner backend's modules and serializes every call into
+//!   a self-contained, versioned `__trace_*.json` bundle
+//!   ([`api::trace::TraceBundle`], `ArtifactKind::Trace` in the
+//!   manifest); `recording:<name>` on the CLI wraps any registered
+//!   backend.
 //!
 //! Custom graph compilers plug in exactly like `torch.compile(backend=...)`:
 //! implement [`api::Backend`], call [`api::register_backend`], and pass the
@@ -113,6 +119,34 @@
 //! `{"entries": [{"bench", "name", "value", "unit"}, ...]}` — guard-hit
 //! latency, eager MLP step and compile-cache hit vs miss live there; CI
 //! smoke-runs the suite with `DEPYF_BENCH_QUICK=1`.
+//!
+//! ## Testing & conformance
+//!
+//! Cross-backend correctness is evidence, not hope: the **eager executor
+//! is the oracle**, and `tests/conformance.rs` is the harness that holds
+//! every other backend to it (see `rust/tests/README.md` for the full
+//! strategy).
+//!
+//! * **Record**: programs run under the `recording` wrapper, which
+//!   captures each compiled fn's calls (bit-exact f32 payloads) plus the
+//!   lossless graph serialization ([`graph::serde`], floats as raw bit
+//!   patterns — `parse(render(g))` preserves `content_hash`) into a
+//!   versioned [`api::trace::TraceBundle`].
+//! * **Replay**: [`backend::replay_bundle`] recompiles a bundle's graph
+//!   on any registered backend and re-executes the recorded inputs —
+//!   against the recorded outputs, or against a fresh oracle run in
+//!   differential mode (`depyf replay --against eager`). Comparison is
+//!   bitwise at `eps = 0` (sharded/batched must match the oracle
+//!   bit-for-bit) and eps-based for XLA's fused float math.
+//! * **Localize**: on mismatch, the graph is cut into single-op
+//!   partitions with the sharded partitioner and each op is replayed
+//!   against oracle intermediates ([`backend::localize_divergence`]); the
+//!   first diverging op yields a **minimized single-op repro bundle**.
+//! * **Sweep**: the full table1 model corpus plus ≥200 deterministic
+//!   generated graphs per backend (seeded generator in `tests/support`,
+//!   shared with `tests/proptests.rs`; same seed → same graphs). CI runs
+//!   the quick sweep (`DEPYF_CONFORMANCE_QUICK=1`) and uploads mismatch
+//!   repro bundles as artifacts on failure.
 //!
 //! ## The stack underneath
 //!

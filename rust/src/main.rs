@@ -8,7 +8,11 @@
 
 use std::rc::Rc;
 
-use depyf::api::{backend_names, lookup_backend, Backend, Capabilities, Session};
+use depyf::api::{
+    backend_names, load_manifest, lookup_backend, ArtifactKind, Backend, Capabilities, Session,
+    TraceBundle,
+};
+use depyf::backend::{replay_bundle, RecordingBackend, ReplayOptions};
 use depyf::bytecode::{disassemble, IsaVersion};
 use depyf::corpus::{render_table1, run_table1};
 use depyf::decompiler::baselines::all_tools_rc;
@@ -36,6 +40,15 @@ usage:
       guards) plus a machine-readable manifest.json into <dir>.
   depyf table1
       Regenerate the paper's Table 1 correctness matrix.
+  depyf replay <trace.json|dump-dir> [--backend <name>] [--against <oracle>]
+               [--eps <tol>] [--no-localize]
+      Re-execute recorded __trace_*.json bundles (written by the recording
+      backend) on any registered backend. A dump-dir argument replays every
+      trace indexed in its manifest.json. Default comparison is bit-exact
+      against the recorded outputs; --against <oracle> recomputes the
+      reference with another backend (differential mode), --eps switches
+      to |a-b| <= tol. Mismatches are localized to the first diverging op
+      (disable with --no-localize) and exit with code 1.
   depyf help
       Print this text.
 
@@ -43,17 +56,21 @@ flags:
   --version <V>    ISA version: 3.8, 3.9, 3.10 or 3.11 (default 3.11)
   --backend <name> A registered graph backend; custom backends plug in via
                    depyf::api::register_backend. Built-ins:
-                     eager    node-by-node CPU reference executor
-                     xla      one PJRT executable per captured graph
-                     sharded  splits graphs at articulation points into
-                              several PJRT/eager executables and stitches
-                              outputs (dumps __plan_*.json + __hlo_*.txt)
-                     batched  pads/buckets the dynamic leading dim so one
-                              executable serves multiple guard entries
+                     eager      node-by-node CPU reference executor
+                     xla        one PJRT executable per captured graph
+                     sharded    splits graphs at articulation points into
+                                several PJRT/eager executables and stitches
+                                outputs (dumps __plan_*.json + __hlo_*.txt)
+                     batched    pads/buckets the dynamic leading dim so one
+                                executable serves multiple guard entries
+                     recording  wraps eager and records every call into a
+                                replayable __trace_*.json bundle; wrap any
+                                other backend as recording:<name>
+                                (e.g. --backend recording:sharded)
                    sharded/batched lower to PJRT when the shared runtime is
                    available and to the eager executor otherwise.
 
-exit codes: 0 success, 1 runtime error, 2 usage error
+exit codes: 0 success, 1 runtime error (incl. replay mismatches), 2 usage error
 ";
 
 /// CLI failure, split by exit code: 2 for usage errors, 1 for runtime.
@@ -87,13 +104,24 @@ fn parse_version(args: &[String]) -> Result<IsaVersion, CliError> {
 }
 
 /// Resolve `--backend <name>` against the registry; absent flag → None.
+/// `recording:<inner>` wraps any registered backend in the recording
+/// decorator (bare `recording` is the pre-registered eager wrapper).
 fn parse_backend(args: &[String]) -> Result<Option<Rc<dyn Backend>>, CliError> {
     match flag_value(args, "--backend") {
         None => Ok(None),
-        Some(name) => lookup_backend(&name).map(Some).ok_or_else(|| {
-            usage(format!("unknown --backend '{}' (registered: {})", name, backend_names().join(", ")))
-        }),
+        Some(name) => resolve_backend(&name).map(Some),
     }
+}
+
+fn resolve_backend(name: &str) -> Result<Rc<dyn Backend>, CliError> {
+    if let Some(inner) = name.strip_prefix("recording:") {
+        return RecordingBackend::wrapping(inner)
+            .map(|b| Rc::new(b) as Rc<dyn Backend>)
+            .map_err(|e| usage(e.to_string()));
+    }
+    lookup_backend(name).ok_or_else(|| {
+        usage(format!("unknown --backend '{}' (registered: {})", name, backend_names().join(", ")))
+    })
 }
 
 fn flag_value(args: &[String], name: &str) -> Option<String> {
@@ -126,6 +154,7 @@ fn run_cli(args: &[String]) -> i32 {
         "decompile" => cmd_decompile(rest),
         "dump" => cmd_dump(rest),
         "table1" => cmd_table1(rest),
+        "replay" => cmd_replay(rest),
         "help" | "--help" | "-h" => {
             print!("{}", USAGE);
             Ok(())
@@ -159,23 +188,11 @@ fn cmd_run(args: &[String]) -> Result<(), CliError> {
             Some(b) => b,
             None => lookup_backend("eager").expect("eager is always registered"),
         };
-        let needs_runtime = backend.requires_runtime();
-        let wants_runtime = backend.capabilities().contains(Capabilities::USES_RUNTIME);
+        let runtime = provision_runtime(&[&backend])?;
         let config = DynamoConfig { backend, ..Default::default() };
-        let d = if needs_runtime {
-            // Process-wide runtime: one PJRT client, one executable cache,
-            // plus the persistent HLO cache shared across invocations.
-            let rt = Runtime::shared()?;
-            Dynamo::with_runtime(config, rt)
-        } else if wants_runtime {
-            // sharded/batched accelerate with PJRT when available but run
-            // fine on the eager executor when the client cannot start.
-            match Runtime::shared() {
-                Ok(rt) => Dynamo::with_runtime(config, rt),
-                Err(_) => Dynamo::new(config),
-            }
-        } else {
-            Dynamo::new(config)
+        let d = match runtime {
+            Some(rt) => Dynamo::with_runtime(config, rt),
+            None => Dynamo::new(config),
         };
         vm.eval_hook = Some(d.clone());
         Some(d)
@@ -224,18 +241,8 @@ fn cmd_dump(args: &[String]) -> Result<(), CliError> {
     let src = read_source(file)?;
     let mut builder = Session::builder().dump_to(dir).isa(version);
     if let Some(b) = backend {
-        if b.requires_runtime() {
-            // Shared process-wide runtime: sequential `depyf dump` runs
-            // reuse the persisted HLO cache index instead of spinning up
-            // a cold client + cold cache every time.
-            builder = builder.runtime(Runtime::shared()?);
-        } else if b.capabilities().contains(Capabilities::USES_RUNTIME) {
-            // Optional acceleration (sharded/batched): take the shared
-            // runtime when PJRT starts, fall back to eager partitions
-            // otherwise.
-            if let Ok(rt) = Runtime::shared() {
-                builder = builder.runtime(rt);
-            }
+        if let Some(rt) = provision_runtime(&[&b])? {
+            builder = builder.runtime(rt);
         }
         builder = builder.backend(b);
     }
@@ -250,6 +257,80 @@ fn cmd_dump(args: &[String]) -> Result<(), CliError> {
 fn cmd_table1(_args: &[String]) -> Result<(), CliError> {
     let t = run_table1();
     print!("{}", render_table1(&t));
+    Ok(())
+}
+
+/// The one runtime-provisioning policy, shared by `run`, `dump` and
+/// `replay`: backends that *require* a runtime get the shared process-wide
+/// PJRT client (one executable cache + the persistent HLO disk cache
+/// across sequential invocations) or fail hard; `USES_RUNTIME` backends
+/// (sharded/batched) take it when the client starts and fall back to
+/// eager lowering otherwise; everything else runs runtime-free.
+fn provision_runtime(backends: &[&Rc<dyn Backend>]) -> Result<Option<Rc<Runtime>>, CliError> {
+    if backends.iter().any(|b| b.requires_runtime()) {
+        return Ok(Some(Runtime::shared()?));
+    }
+    if backends.iter().any(|b| b.capabilities().contains(Capabilities::USES_RUNTIME)) {
+        return Ok(Runtime::shared().ok());
+    }
+    Ok(None)
+}
+
+fn cmd_replay(args: &[String]) -> Result<(), CliError> {
+    let path = args.first().ok_or_else(|| {
+        usage("replay needs a trace: depyf replay <trace.json|dump-dir> [--backend <name>] [--against <oracle>]")
+    })?;
+    let backend = match parse_backend(args)? {
+        Some(b) => b,
+        None => lookup_backend("eager").expect("eager is always registered"),
+    };
+    let oracle = match flag_value(args, "--against") {
+        None => None,
+        Some(name) => Some(resolve_backend(&name)?),
+    };
+    let eps: f32 = match flag_value(args, "--eps") {
+        None => 0.0,
+        Some(s) => s
+            .parse()
+            .ok()
+            .filter(|v: &f32| v.is_finite() && *v >= 0.0)
+            .ok_or_else(|| usage(format!("bad --eps '{}' (expected a non-negative float)", s)))?,
+    };
+    let localize = !has_flag(args, "--no-localize");
+
+    // A dump dir replays every Trace artifact its manifest indexes; a
+    // file is a single bundle.
+    let p = std::path::Path::new(path);
+    let mut bundles = Vec::new();
+    if p.is_dir() {
+        for a in load_manifest(p)? {
+            if a.kind == ArtifactKind::Trace {
+                bundles.push(TraceBundle::load(&a.path)?);
+            }
+        }
+        if bundles.is_empty() {
+            return Err(run_err(format!("no trace artifacts indexed in {}/manifest.json", path)));
+        }
+    } else {
+        bundles.push(TraceBundle::load(p)?);
+    }
+
+    let mut consulted = vec![&backend];
+    if let Some(o) = &oracle {
+        consulted.push(o);
+    }
+    let runtime = provision_runtime(&consulted)?;
+    let opts = ReplayOptions { eps, runtime, localize };
+    let mut mismatches = 0usize;
+    for b in &bundles {
+        let report = replay_bundle(b, backend.as_ref(), oracle.as_deref(), &opts)?;
+        println!("{}", report.render());
+        mismatches += report.mismatches.len();
+    }
+    if mismatches > 0 {
+        return Err(run_err(format!("{} mismatch(es) across {} bundle(s)", mismatches, bundles.len())));
+    }
+    eprintln!("[depyf] replayed {} bundle(s) on {}: no mismatches", bundles.len(), backend.name());
     Ok(())
 }
 
@@ -284,5 +365,67 @@ mod tests {
     fn missing_file_is_runtime_error() {
         let args = vec!["disasm".to_string(), "/definitely/not/here.py".to_string()];
         assert_eq!(run_cli(&args), 1);
+    }
+
+    fn s(parts: &[&str]) -> Vec<String> {
+        parts.iter().map(|p| p.to_string()).collect()
+    }
+
+    #[test]
+    fn replay_usage_and_runtime_errors() {
+        assert_eq!(run_cli(&s(&["replay"])), 2, "missing path is a usage error");
+        assert_eq!(run_cli(&s(&["replay", "x.json", "--eps", "banana"])), 2);
+        assert_eq!(run_cli(&s(&["replay", "x.json", "--eps", "-1"])), 2);
+        assert_eq!(run_cli(&s(&["replay", "x.json", "--backend", "bogus"])), 2);
+        assert_eq!(run_cli(&s(&["replay", "x.json", "--against", "bogus"])), 2);
+        assert_eq!(run_cli(&s(&["replay", "/definitely/not/here.json"])), 1);
+    }
+
+    #[test]
+    fn recording_wrapper_backend_names_resolve() {
+        assert!(resolve_backend("recording").is_ok());
+        let wrapped = resolve_backend("recording:sharded").unwrap();
+        assert!(wrapped.capabilities().contains(Capabilities::WRAPPER));
+        assert!(matches!(resolve_backend("recording:nope"), Err(CliError::Usage(_))));
+    }
+
+    /// End-to-end: record a dump with the recording backend, then replay
+    /// the whole dump dir — plain, on sharded, and differentially.
+    #[test]
+    fn dump_with_recording_then_replay_round_trips() {
+        let base = std::env::temp_dir().join(format!("depyf_cli_replay_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&base);
+        std::fs::create_dir_all(&base).unwrap();
+        let prog = base.join("prog.py");
+        std::fs::write(
+            &prog,
+            "def f(x):\n    return ((x @ x) + 1).relu().softmax().sum()\nprint(f(torch.ones([4, 4])).item())\nprint(f(torch.ones([4, 4])).item())\n",
+        )
+        .unwrap();
+        let dump = base.join("dump");
+        let dump_s = dump.to_string_lossy().into_owned();
+        let prog_s = prog.to_string_lossy().into_owned();
+        assert_eq!(run_cli(&s(&["dump", &prog_s, &dump_s, "--backend", "recording"])), 0);
+        assert!(dump.join("manifest.json").exists());
+        let traces: Vec<_> = std::fs::read_dir(&dump)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().starts_with("__trace_"))
+            .collect();
+        assert_eq!(traces.len(), 1, "one compiled fn, one trace bundle");
+        // Replay against recorded outputs (bit-exact on the recording
+        // backend's own executor), re-execute on sharded, and differential
+        // sharded-vs-eager. sharded/batched may lower to PJRT when the
+        // shared runtime starts, so those replays use the XLA tolerance.
+        assert_eq!(run_cli(&s(&["replay", &dump_s])), 0);
+        assert_eq!(run_cli(&s(&["replay", &dump_s, "--backend", "sharded", "--eps", "1e-4"])), 0);
+        assert_eq!(
+            run_cli(&s(&["replay", &dump_s, "--backend", "sharded", "--against", "eager", "--eps", "1e-4"])),
+            0
+        );
+        // A single-bundle file path works too.
+        let trace_path = traces[0].path().to_string_lossy().into_owned();
+        assert_eq!(run_cli(&s(&["replay", &trace_path, "--backend", "batched", "--eps", "1e-4"])), 0);
+        std::fs::remove_dir_all(&base).ok();
     }
 }

@@ -1,0 +1,269 @@
+//! Corpus-driven differential conformance harness for all backends.
+//!
+//! Strategy (see `tests/README.md`): the **eager executor is the oracle**.
+//! Programs/graphs are run once under the `recording` wrapper so every
+//! compiled-fn call is captured into a `__trace_*.json` bundle; each
+//! bundle is then pushed through the **text round-trip** (parse of the
+//! rendered bundle — the serialization layer is under test too) and
+//! replayed on every other backend in differential mode. sharded/batched
+//! lower to eager partitions here (no runtime), so they must be
+//! **bit-exact**; XLA fuses and reorders float math, so it gets an eps.
+//!
+//! Two graph sources feed the sweep:
+//! * the full table1 model corpus (140 programs through dynamo), and
+//! * ≥200 deterministic generated graphs per backend (seeded generator in
+//!   `tests/support`, shared with `tests/proptests.rs`).
+//!
+//! Every mismatch dumps a minimized repro bundle (single-op culprit
+//! subgraph when localization pins one, else the single failing call)
+//! into `$DEPYF_CONFORMANCE_OUT` (default `conformance_failures/`) — CI
+//! uploads that directory when the job fails. `DEPYF_CONFORMANCE_QUICK=1`
+//! (or `DEPYF_BENCH_QUICK=1`) shrinks the sweep for smoke runs.
+
+mod support;
+
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use depyf::api::{
+    ArtifactKind, Backend, CompileRequest, EagerBackend, TraceBundle, XlaBackend,
+};
+use depyf::backend::{
+    replay_bundle, single_call_bundle, BatchedBackend, RecordingBackend, ReplayOptions,
+    ShardedBackend,
+};
+use depyf::bytecode::IsaVersion;
+use depyf::corpus::model_cases;
+use depyf::dynamo::{Dynamo, DynamoConfig};
+use depyf::runtime::Runtime;
+use depyf::tensor::Rng;
+use depyf::vm::Vm;
+
+/// Seed of the generated-graph sweep: same seed → same graphs → same
+/// inputs, across machines and runs.
+const GEN_SEED: u64 = 0x5EED_C0DE;
+/// Full-mode generated graph count per backend (acceptance floor: 200).
+const GEN_GRAPHS: usize = 200;
+
+fn quick() -> bool {
+    std::env::var("DEPYF_CONFORMANCE_QUICK").is_ok() || std::env::var("DEPYF_BENCH_QUICK").is_ok()
+}
+
+fn repro_dir() -> PathBuf {
+    std::env::var("DEPYF_CONFORMANCE_OUT")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("conformance_failures"))
+}
+
+/// Write a minimized repro bundle; returns its path for the panic text.
+fn dump_repro(bundle: &TraceBundle, tag: &str) -> String {
+    let dir = repro_dir();
+    let _ = std::fs::create_dir_all(&dir);
+    let safe: String = bundle
+        .name
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '_' { c } else { '_' })
+        .collect();
+    let path = dir.join(format!("repro_{}_{}.json", tag, safe));
+    let _ = std::fs::write(&path, bundle.to_json());
+    path.display().to_string()
+}
+
+/// Replay `bundle` on `backend` (differentially against the eager oracle
+/// when `differential`, else against the recorded outputs) and panic with
+/// a minimized repro on any mismatch.
+fn assert_conforms(bundle: &TraceBundle, backend: &dyn Backend, eps: f32, differential: bool, tag: &str) {
+    let opts = ReplayOptions { eps, runtime: None, localize: true };
+    let oracle: Option<&dyn Backend> = if differential { Some(&EagerBackend) } else { None };
+    let report = replay_bundle(bundle, backend, oracle, &opts)
+        .unwrap_or_else(|e| panic!("[{}] {} failed to replay {}: {}", tag, backend.name(), bundle.name, e));
+    if report.ok() {
+        return;
+    }
+    let m = &report.mismatches[0];
+    let repro = m
+        .culprit
+        .as_ref()
+        .map(|c| c.repro.clone())
+        .unwrap_or_else(|| single_call_bundle(bundle, m.call));
+    let path = dump_repro(&repro, tag);
+    panic!(
+        "[{}] backend '{}' diverged from the eager oracle:\n{}\nminimized repro dumped to {}",
+        tag,
+        backend.name(),
+        report.render(),
+        path
+    );
+}
+
+/// Run one program source under dynamo with the recording wrapper and
+/// collect every trace bundle — parsed back from its rendered JSON, so
+/// the on-disk representation is what gets replayed.
+fn record_program(source: &str, label: &str) -> Vec<TraceBundle> {
+    let rec: Rc<dyn Backend> = Rc::new(RecordingBackend::new(Rc::new(EagerBackend)));
+    let dynamo = Dynamo::new(DynamoConfig { backend: rec, ..Default::default() });
+    let mut vm = Vm::new();
+    vm.eval_hook = Some(dynamo.clone());
+    vm.exec_source(source, IsaVersion::V310)
+        .unwrap_or_else(|e| panic!("{} failed under the recording backend: {}", label, e));
+    let mut bundles = Vec::new();
+    for f in dynamo.compiled() {
+        for art in f.module.artifacts() {
+            if art.kind == ArtifactKind::Trace {
+                let bundle = TraceBundle::parse(&art.content)
+                    .unwrap_or_else(|e| panic!("{}: trace bundle does not parse: {}", label, e));
+                if !bundle.calls.is_empty() {
+                    bundles.push(bundle);
+                }
+            }
+        }
+    }
+    bundles
+}
+
+/// The table1 corpus sweep: record every model's compiled graphs with
+/// their real runtime inputs, then cross-check sharded and batched against
+/// the eager oracle bit-for-bit. Recording fidelity is checked first: the
+/// eager replay of the round-tripped bundle must equal the recorded
+/// outputs exactly.
+#[test]
+fn table1_corpus_record_replay_cross_backend() {
+    let cases = model_cases();
+    let step = if quick() { 10 } else { 1 };
+    let mut total_bundles = 0usize;
+    let mut total_calls = 0usize;
+    for case in cases.iter().step_by(step) {
+        for bundle in record_program(&case.source, &case.name) {
+            total_bundles += 1;
+            total_calls += bundle.calls.len();
+            let tag = format!("corpus_{}", case.name);
+            // Recording fidelity + serialization: eager must reproduce the
+            // recorded outputs bit-for-bit.
+            assert_conforms(&bundle, &EagerBackend, 0.0, false, &tag);
+            // Differential conformance, eager as oracle, bitwise.
+            assert_conforms(&bundle, &ShardedBackend::new(), 0.0, true, &tag);
+            assert_conforms(&bundle, &ShardedBackend::with_max_ops(1), 0.0, true, &tag);
+            assert_conforms(&bundle, &BatchedBackend::new(), 0.0, true, &tag);
+        }
+    }
+    assert!(total_bundles >= if quick() { 10 } else { 100 }, "only {} bundles recorded", total_bundles);
+    assert!(total_calls >= total_bundles, "bundles must carry real calls");
+}
+
+/// XLA conformance on recorded corpus traces. PJRT reorders/fuses float
+/// math, so the comparison is eps-based, and the whole test skips (with a
+/// note) where no PJRT client can start.
+#[test]
+fn table1_corpus_traces_replay_on_xla_within_eps() {
+    let Ok(rt) = Runtime::cpu() else {
+        eprintln!("skipping xla conformance: no PJRT client in this environment");
+        return;
+    };
+    let cases = model_cases();
+    // Full-capture families cover every op family xla lowers; graph-break
+    // families re-cover the same graph shapes, so sample those.
+    let step = if quick() { 10 } else { 4 };
+    let mut checked = 0usize;
+    for case in cases.iter().step_by(step) {
+        for bundle in record_program(&case.source, &case.name) {
+            let opts = ReplayOptions { eps: 1e-4, runtime: Some(Rc::clone(&rt)), localize: true };
+            let report = replay_bundle(&bundle, &XlaBackend, None, &opts)
+                .unwrap_or_else(|e| panic!("xla replay of {} failed: {}", case.name, e));
+            if !report.ok() {
+                let m = &report.mismatches[0];
+                let repro = m
+                    .culprit
+                    .as_ref()
+                    .map(|c| c.repro.clone())
+                    .unwrap_or_else(|| single_call_bundle(&bundle, m.call));
+                let path = dump_repro(&repro, &format!("xla_{}", case.name));
+                panic!("xla diverged on {}:\n{}\nrepro at {}", case.name, report.render(), path);
+            }
+            checked += 1;
+        }
+    }
+    assert!(checked > 0, "xla sweep replayed nothing");
+}
+
+/// The generated-graph sweep: ≥200 seeded graphs recorded on eager, each
+/// round-tripped through the trace text and replayed differentially on
+/// sharded (two shard budgets) and batched. Bit-exact, no runtime.
+#[test]
+fn generated_graphs_conform_across_backends() {
+    let n = if quick() { 40 } else { GEN_GRAPHS };
+    let mut gen = support::GraphGen::new(GEN_SEED);
+    let mut input_rng = Rng::new(GEN_SEED ^ 0x9E37_79B9);
+    for i in 0..n {
+        let g = Rc::new(gen.next_graph());
+        let name = g.name.clone();
+        let req = CompileRequest::new(&name, Rc::clone(&g));
+        let rec = RecordingBackend::new(Rc::new(EagerBackend));
+        let module = rec
+            .compile(&req)
+            .unwrap_or_else(|e| panic!("graph {} failed to compile on eager: {}", name, e));
+        for _ in 0..2 {
+            let inputs = support::rand_inputs(&g, &mut input_rng);
+            module
+                .call(&inputs)
+                .unwrap_or_else(|e| panic!("graph {} failed to execute on eager: {}", name, e));
+        }
+        let art = module
+            .artifacts()
+            .into_iter()
+            .find(|a| a.kind == ArtifactKind::Trace)
+            .expect("recording module emits a trace artifact");
+        let bundle = TraceBundle::parse(&art.content)
+            .unwrap_or_else(|e| panic!("graph {}: bundle does not parse: {}", name, e));
+        let tag = format!("gen_{}", i);
+        assert_conforms(&bundle, &EagerBackend, 0.0, false, &tag);
+        assert_conforms(&bundle, &ShardedBackend::new(), 0.0, true, &tag);
+        assert_conforms(&bundle, &ShardedBackend::with_max_ops(1), 0.0, true, &tag);
+        assert_conforms(&bundle, &BatchedBackend::new(), 0.0, true, &tag);
+    }
+}
+
+/// Determinism acceptance: two generators with the same seed produce the
+/// same graph sequence (content hashes) and the sequence is diverse.
+#[test]
+fn generated_graph_sweep_is_deterministic() {
+    let hashes = |seed: u64| -> Vec<u64> {
+        let mut gen = support::GraphGen::new(seed);
+        (0..GEN_GRAPHS).map(|_| gen.next_graph().content_hash()).collect()
+    };
+    let a = hashes(GEN_SEED);
+    let b = hashes(GEN_SEED);
+    assert_eq!(a, b, "same seed must generate the same {} graphs", GEN_GRAPHS);
+    let distinct: std::collections::HashSet<u64> = a.iter().copied().collect();
+    assert!(distinct.len() > GEN_GRAPHS / 2, "generator collapsed: {} distinct graphs", distinct.len());
+    let c = hashes(GEN_SEED + 1);
+    assert_ne!(a, c, "different seeds must differ");
+}
+
+/// A dynamo session with the recording wrapper indexes the trace in
+/// manifest.json, and `TraceBundle::load` reads it back from disk — the
+/// full `depyf dump --backend recording` → `depyf replay` file contract.
+#[test]
+fn session_dump_indexes_trace_artifacts() {
+    use depyf::api::{load_manifest, Session};
+    let dir = std::env::temp_dir().join(format!("depyf_conformance_dump_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut s = Session::builder().dump_to(&dir).backend_named("recording").build().unwrap();
+    s.run_source(
+        "main",
+        "def f(x):\n    return ((x * 2) + 1).relu().sum()\nprint(f(torch.ones([3])).item())\nprint(f(torch.ones([3])).item())\n",
+    )
+    .unwrap();
+    let artifacts = s.finish().unwrap();
+    let traces: Vec<_> = artifacts.iter().filter(|a| a.kind == ArtifactKind::Trace).collect();
+    assert_eq!(traces.len(), 1, "{:?}", artifacts);
+    // Indexed in the manifest with the same path.
+    let indexed = load_manifest(&dir).unwrap();
+    assert!(indexed.iter().any(|a| a.kind == ArtifactKind::Trace && a.path == traces[0].path));
+    // Loads from disk and replays clean on eager and batched.
+    let bundle = TraceBundle::load(&traces[0].path).unwrap();
+    assert_eq!(bundle.calls.len(), 2, "both calls recorded");
+    assert!(!bundle.guards.is_empty(), "guard context travels with the trace");
+    assert_conforms(&bundle, &EagerBackend, 0.0, false, "session_dump");
+    assert_conforms(&bundle, &BatchedBackend::new(), 0.0, true, "session_dump");
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,8 +1,19 @@
 //! Property-style randomized tests (in-tree harness; the offline
 //! environment has no proptest — see DESIGN.md §8).
+//!
+//! The tensor-graph properties run over the **seeded graph generator** in
+//! `tests/support` (shared with `tests/conformance.rs`): broadcasting
+//! binary ops, matmuls across the k-blocked kernel threshold, and
+//! const-operand (folding) shapes, all deterministic per seed.
 
+mod support;
+
+use std::rc::Rc;
+
+use depyf::backend::eager::{self, ExecPlan};
 use depyf::bytecode::{decode, encode, BinOp, CmpOp, Instr, IsaVersion, UnOp};
 use depyf::dynamo::{Dynamo, DynamoConfig};
+use depyf::graph::{parse_graph, render_graph};
 use depyf::tensor::Rng;
 use depyf::vm::Vm;
 
@@ -106,6 +117,82 @@ print(total)
     // Captures stop at the limit; the remaining calls run uncompiled.
     assert!(d.metrics.captures.get() <= 5, "{:?}", d.metrics.report());
     assert!(d.metrics.guard_failures.get() >= 1);
+}
+
+/// The planned eager executor (const pre-materialization, liveness,
+/// stride-based broadcasting, k-blocked matmul, fast paths) must be
+/// **bitwise** equal to the naive traced walk on 200 generated graphs —
+/// the traced walk is the oracle the fast paths are judged against.
+#[test]
+fn fuzz_exec_plan_matches_traced_oracle() {
+    let mut gen = support::GraphGen::new(0xE5C_A1A);
+    let mut rng = Rng::new(0xFEED);
+    for case in 0..200 {
+        let g = Rc::new(gen.next_graph());
+        let inputs = support::rand_inputs(&g, &mut rng);
+        let plan = ExecPlan::new(Rc::clone(&g));
+        let fast = plan.run(&inputs).unwrap_or_else(|e| panic!("case {} ({}): plan: {}", case, g.name, e));
+        let slow =
+            eager::execute(&g, &inputs).unwrap_or_else(|e| panic!("case {} ({}): oracle: {}", case, g.name, e));
+        assert_eq!(fast.len(), slow.len(), "case {}", case);
+        for (f, s) in fast.iter().zip(slow.iter()) {
+            assert_eq!(f.shape(), s.shape(), "case {} ({})", case, g.name);
+            let fb: Vec<u32> = f.data().iter().map(|v| v.to_bits()).collect();
+            let sb: Vec<u32> = s.data().iter().map(|v| v.to_bits()).collect();
+            assert_eq!(fb, sb, "case {} ({}): planned executor diverged bitwise", case, g.name);
+        }
+        // Planned execution must also be self-deterministic (arena reuse
+        // must not leak state between calls).
+        let again = plan.run(&inputs).unwrap();
+        for (f, a) in fast.iter().zip(again.iter()) {
+            assert_eq!(f.data(), a.data(), "case {}: second run differs", case);
+        }
+    }
+}
+
+/// The generator actually covers the features it exists for: true
+/// broadcasting (operand shape mismatch), matmuls whose B panel crosses
+/// the 64 KiB blocking threshold, and constant operands feeding ops.
+#[test]
+fn fuzz_generator_covers_broadcast_blocking_and_consts() {
+    let mut gen = support::GraphGen::new(0x5EED_C0DE); // the conformance seed
+    let (mut broadcast, mut big_mm, mut consts) = (0usize, 0usize, 0usize);
+    for _ in 0..200 {
+        let g = gen.next_graph();
+        broadcast += support::has_broadcast(&g) as usize;
+        big_mm += support::has_big_matmul(&g) as usize;
+        consts += support::has_const_operand(&g) as usize;
+    }
+    // Every 8th graph is a big-matmul-with-bias graph by construction:
+    // that alone guarantees 25 broadcasting and 25 blocked-matmul graphs.
+    assert!(broadcast >= 25, "only {}/200 graphs broadcast", broadcast);
+    assert!(big_mm >= 20, "only {}/200 graphs cross the matmul blocking threshold", big_mm);
+    assert!(consts >= 10, "only {}/200 graphs have const operands", consts);
+}
+
+/// Lossless serialization property over generated graphs: the parsed
+/// graph hashes identically and executes to bitwise-identical outputs.
+#[test]
+fn fuzz_graph_serde_round_trip_is_bit_exact() {
+    let mut gen = support::GraphGen::new(0xD15C);
+    let mut rng = Rng::new(0xD15C ^ 7);
+    for case in 0..100 {
+        let g = Rc::new(gen.next_graph());
+        let back = Rc::new(
+            parse_graph(&render_graph(&g))
+                .unwrap_or_else(|e| panic!("case {} ({}): reparse: {}", case, g.name, e)),
+        );
+        assert_eq!(back.content_hash(), g.content_hash(), "case {} ({})", case, g.name);
+        let inputs = support::rand_inputs(&g, &mut rng);
+        let a = eager::execute(&g, &inputs).unwrap();
+        let b = eager::execute(&back, &inputs).unwrap();
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.shape(), y.shape(), "case {}", case);
+            let xb: Vec<u32> = x.data().iter().map(|v| v.to_bits()).collect();
+            let yb: Vec<u32> = y.data().iter().map(|v| v.to_bits()).collect();
+            assert_eq!(xb, yb, "case {}: reparsed graph executed differently", case);
+        }
+    }
 }
 
 /// Error behavior must survive compilation: a runtime error inside a

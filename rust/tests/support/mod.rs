@@ -1,0 +1,259 @@
+//! Shared test support: the **seeded graph generator** used by both the
+//! conformance harness (`tests/conformance.rs`) and the property tests
+//! (`tests/proptests.rs`).
+//!
+//! Determinism is a hard requirement (same seed → same graphs → same
+//! inputs), so everything is driven by the crate's own
+//! [`depyf::tensor::Rng`] — no `Date::now`, no global randomness. The
+//! generator deliberately steers into the features the backends treat
+//! specially: broadcasting binary ops (rank/extent-1 mismatches), matmuls
+//! sized across the eager executor's k-blocked kernel threshold (a B
+//! panel larger than 64 KiB), constant scalar/tensor operands (const
+//! folding shapes), reductions with and without axes, reshapes, permutes
+//! and softmax/layernorm rows.
+
+#![allow(dead_code)]
+
+use std::rc::Rc;
+
+use depyf::graph::{Graph, NodeKind, OpKind};
+use depyf::tensor::{Rng, Tensor};
+
+/// The eager matmul kernel switches to k-blocking when the B panel
+/// (k × n × 4 bytes) outgrows ~64 KiB; generated "big" matmuls cross it.
+pub const BLOCKED_MATMUL_B_PANEL_BYTES: usize = 64 * 1024;
+
+/// Deterministic, seeded graph generator.
+pub struct GraphGen {
+    rng: Rng,
+    count: usize,
+}
+
+impl GraphGen {
+    pub fn new(seed: u64) -> GraphGen {
+        GraphGen { rng: Rng::new(seed), count: 0 }
+    }
+
+    fn dim(&mut self) -> usize {
+        // Extent 1 is deliberately common: it is what broadcasting keys on.
+        [1, 2, 3, 4, 5][self.rng.below(5)]
+    }
+
+    fn shape(&mut self) -> Vec<usize> {
+        let rank = 1 + self.rng.below(3);
+        (0..rank).map(|_| self.dim()).collect()
+    }
+
+    /// Generate the next graph. Graph `name`s carry a running index so
+    /// two generators with the same seed produce identical sequences.
+    pub fn next_graph(&mut self) -> Graph {
+        let idx = self.count;
+        self.count += 1;
+        // Every 8th graph exercises the k-blocked matmul kernel.
+        if idx % 8 == 7 {
+            return self.big_matmul_graph(idx);
+        }
+        let mut g = Graph::new(&format!("gen_{}", idx));
+        let n_inputs = 1 + self.rng.below(3);
+        let mut pool: Vec<usize> = Vec::new();
+        for i in 0..n_inputs {
+            let shape = self.shape();
+            pool.push(g.placeholder(&format!("x{}", i), &shape));
+        }
+        // Constant operands: scalars and small tensors (const folding).
+        if self.rng.below(2) == 0 {
+            pool.push(g.const_scalar((self.rng.uniform() as f64) * 4.0 - 2.0));
+        }
+        if self.rng.below(3) == 0 {
+            let d = self.dim();
+            pool.push(g.const_tensor(Tensor::randn(&[d], &mut self.rng)));
+        }
+        let n_ops = 3 + self.rng.below(6);
+        let mut exp_used = false;
+        for _ in 0..n_ops {
+            self.add_random_op(&mut g, &mut pool, &mut exp_used);
+        }
+        // 1–2 outputs: the most recent op result, plus occasionally an
+        // earlier op (ops only — every backend path treats op outputs
+        // uniformly; placeholder outputs are not what models return).
+        let last_op = *pool
+            .iter()
+            .rev()
+            .find(|&&id| matches!(g.nodes[id].kind, NodeKind::Op(..)))
+            .expect("the fallback arm guarantees at least one op");
+        let mut outputs = vec![last_op];
+        if self.rng.below(2) == 0 {
+            let extra = pool[self.rng.below(pool.len())];
+            if matches!(g.nodes[extra].kind, NodeKind::Op(..)) && !outputs.contains(&extra) {
+                outputs.push(extra);
+            }
+        }
+        g.set_outputs(outputs);
+        g
+    }
+
+    /// A `[m, k] @ [k, n]` chain whose B panel crosses the blocking
+    /// threshold, composed with an elementwise epilogue.
+    fn big_matmul_graph(&mut self, idx: usize) -> Graph {
+        let mut g = Graph::new(&format!("gen_{}", idx));
+        let m = 4 + self.rng.below(5);
+        let k = 96;
+        let n = 180 + self.rng.below(40); // k*n*4 ≥ 69 KB > 64 KiB
+        let x = g.placeholder("x", &[m, k]);
+        let w = g.placeholder("w", &[k, n]);
+        let b = g.placeholder("b", &[n]); // broadcast along rows
+        let mm = g.add_op(OpKind::MatMul, vec![x, w]).unwrap();
+        let biased = g.add_op(OpKind::Add, vec![mm, b]).unwrap();
+        let act = g.add_op(OpKind::Tanh, vec![biased]).unwrap();
+        let red = g.add_op(OpKind::Sum(Some(1)), vec![act]).unwrap();
+        g.set_outputs(vec![red]);
+        g
+    }
+
+    /// Append one random (shape-valid) op, favoring feature coverage.
+    fn add_random_op(&mut self, g: &mut Graph, pool: &mut Vec<usize>, exp_used: &mut bool) {
+        for _attempt in 0..8 {
+            let choice = self.rng.below(10);
+            let added = match choice {
+                // Binary elementwise (broadcasting). Div/Pow excluded: the
+                // generator keeps values finite so eps-mode replays (XLA)
+                // aren't dominated by inf/NaN plumbing.
+                0 | 1 | 2 => {
+                    let a = pool[self.rng.below(pool.len())];
+                    let b = pool[self.rng.below(pool.len())];
+                    let ops = [OpKind::Add, OpKind::Sub, OpKind::Mul, OpKind::Maximum, OpKind::Minimum];
+                    let op = ops[self.rng.below(5)].clone();
+                    g.add_op(op, vec![a, b]).ok()
+                }
+                // Squashing unaries keep magnitudes bounded under chaining.
+                3 | 4 => {
+                    let a = pool[self.rng.below(pool.len())];
+                    let ops =
+                        [OpKind::Neg, OpKind::Relu, OpKind::Tanh, OpKind::Sigmoid, OpKind::Abs, OpKind::Gelu];
+                    let op = ops[self.rng.below(6)].clone();
+                    g.add_op(op, vec![a]).ok()
+                }
+                // One exp per graph (over a sigmoid, so it stays bounded),
+                // and sqrt only over abs (stays finite).
+                5 => {
+                    let a = pool[self.rng.below(pool.len())];
+                    if *exp_used {
+                        match g.add_op(OpKind::Abs, vec![a]) {
+                            Ok(ab) => g.add_op(OpKind::Sqrt, vec![ab]).ok(),
+                            Err(_) => None,
+                        }
+                    } else {
+                        match g.add_op(OpKind::Sigmoid, vec![a]) {
+                            Ok(sq) => {
+                                *exp_used = true;
+                                g.add_op(OpKind::Exp, vec![sq]).ok()
+                            }
+                            Err(_) => None,
+                        }
+                    }
+                }
+                // Small matmul between a rank-2 pool value and a fresh weight.
+                6 => match pool.iter().rev().find(|&&id| g.nodes[id].shape.len() == 2).copied() {
+                    None => None,
+                    Some(a) => {
+                        let k = g.nodes[a].shape[1];
+                        let n = self.dim();
+                        let w = g.placeholder(&format!("w{}", g.nodes.len()), &[k, n]);
+                        g.add_op(OpKind::MatMul, vec![a, w]).ok()
+                    }
+                },
+                // Reductions, with and without axes.
+                7 => {
+                    let a = pool[self.rng.below(pool.len())];
+                    let rank = g.nodes[a].shape.len();
+                    let axis = if rank > 0 && self.rng.below(2) == 0 {
+                        Some(self.rng.below(rank))
+                    } else {
+                        None
+                    };
+                    let op = match self.rng.below(4) {
+                        0 => OpKind::Sum(axis),
+                        1 => OpKind::Mean(axis),
+                        2 => OpKind::Max(axis),
+                        _ => OpKind::Min(axis),
+                    };
+                    g.add_op(op, vec![a]).ok()
+                }
+                // Shape ops: transpose / permute / row-preserving reshape.
+                8 => {
+                    let a = pool[self.rng.below(pool.len())];
+                    let rank = g.nodes[a].shape.len();
+                    if rank >= 2 && self.rng.below(2) == 0 {
+                        g.add_op(OpKind::Transpose, vec![a]).ok()
+                    } else if rank >= 2 {
+                        let mut perm: Vec<usize> = (0..rank).collect();
+                        // Deterministic Fisher-Yates.
+                        for i in (1..rank).rev() {
+                            perm.swap(i, self.rng.below(i + 1));
+                        }
+                        g.add_op(OpKind::Permute(perm), vec![a]).ok()
+                    } else {
+                        g.add_op(OpKind::Reshape(vec![-1]), vec![a]).ok()
+                    }
+                }
+                // Softmax rows (rank >= 1).
+                _ => {
+                    let a = pool[self.rng.below(pool.len())];
+                    if g.nodes[a].shape.is_empty() {
+                        None
+                    } else {
+                        g.add_op(OpKind::Softmax, vec![a]).ok()
+                    }
+                }
+            };
+            if let Some(id) = added {
+                pool.push(id);
+                return;
+            }
+        }
+        // All attempts were shape-invalid: fall back to a guaranteed op.
+        let a = pool[self.rng.below(pool.len())];
+        let id = g.add_op(OpKind::Neg, vec![a]).expect("neg always infers");
+        pool.push(id);
+    }
+}
+
+/// Deterministic random inputs for a generated graph.
+pub fn rand_inputs(g: &Graph, rng: &mut Rng) -> Vec<Rc<Tensor>> {
+    g.input_shapes().into_iter().map(|(_, s)| Rc::new(Tensor::randn(&s, rng))).collect()
+}
+
+// ---- coverage predicates (used by proptests to assert the generator
+// actually hits the features it claims to) ----
+
+/// Some binary op whose operand shapes differ (true broadcasting).
+pub fn has_broadcast(g: &Graph) -> bool {
+    g.nodes.iter().any(|n| match &n.kind {
+        NodeKind::Op(
+            OpKind::Add | OpKind::Sub | OpKind::Mul | OpKind::Maximum | OpKind::Minimum,
+            args,
+        ) => g.nodes[args[0]].shape != g.nodes[args[1]].shape,
+        _ => false,
+    })
+}
+
+/// Some matmul whose B panel crosses the k-blocked kernel threshold.
+pub fn has_big_matmul(g: &Graph) -> bool {
+    g.nodes.iter().any(|n| match &n.kind {
+        NodeKind::Op(OpKind::MatMul, args) => {
+            let b = &g.nodes[args[1]].shape;
+            b.len() == 2 && b[0] * b[1] * 4 > BLOCKED_MATMUL_B_PANEL_BYTES
+        }
+        _ => false,
+    })
+}
+
+/// Some constant node feeding an op (const-folding shapes).
+pub fn has_const_operand(g: &Graph) -> bool {
+    g.nodes.iter().any(|n| match &n.kind {
+        NodeKind::Op(_, args) => args.iter().any(|&a| {
+            matches!(g.nodes[a].kind, NodeKind::ConstScalar(_) | NodeKind::ConstTensor(_))
+        }),
+        _ => false,
+    })
+}

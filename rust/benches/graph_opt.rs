@@ -1,0 +1,174 @@
+//! Graph-optimizer benches: what `--opt-level 2` buys over `0` on the
+//! eager executor.
+//!
+//! * `elementwise_chain_*` — gelu residual blocks (the fusion showcase):
+//!   call time of the optimized+fused ExecPlan vs the verbatim one, with
+//!   the acceptance gate `speedup >= 1.3x` asserted in full runs.
+//! * `layernorm_block_*` — gelu/layernorm residual blocks: fusion gains
+//!   on a realistic mixed graph (layernorm itself never fuses).
+//! * `const_heavy_*` — node-count reduction from const folding + DCE and
+//!   the resulting call-time win.
+//! * `optimize_ns` — the one-off cost of running the pass pipeline.
+//!
+//! Run: `cargo bench --bench graph_opt`. Merges into `BENCH_hotpath.json`
+//! (`DEPYF_BENCH_QUICK=1` for CI smoke runs, which skip the flaky-on-
+//! shared-runners speedup assertion).
+
+mod support;
+
+use std::rc::Rc;
+use std::time::Instant;
+
+use depyf::api::{Backend, CompileRequest, EagerBackend, OptLevel};
+use depyf::graph::{optimize, Graph, OpKind};
+use depyf::tensor::{Rng, Tensor};
+
+/// `blocks` of `y = gelu(x * c + bias) + x` — a pure elementwise residual
+/// chain with a foldable const subexpression per block.
+fn elementwise_chain(rows: usize, d: usize, blocks: usize) -> Graph {
+    let mut g = Graph::new("opt_elementwise");
+    let x = g.placeholder("x", &[rows, d]);
+    let mut cur = x;
+    for i in 0..blocks {
+        // Const chain the optimizer folds to one scalar.
+        let c1 = g.const_scalar(0.5 + i as f64 * 0.01);
+        let c2 = g.const_scalar(2.0);
+        let c3 = g.const_scalar(1.0);
+        let cc = g.add_op(OpKind::Mul, vec![c1, c2]).unwrap();
+        let cc2 = g.add_op(OpKind::Mul, vec![cc, c3]).unwrap();
+        let bias = g.const_tensor(Tensor::new(
+            vec![d],
+            (0..d).map(|j| (j as f32) * 0.003 - 0.2).collect(),
+        ));
+        let t = g.add_op(OpKind::Mul, vec![cur, cc2]).unwrap();
+        let tb = g.add_op(OpKind::Add, vec![t, bias]).unwrap();
+        let a = g.add_op(OpKind::Gelu, vec![tb]).unwrap();
+        let n1 = g.add_op(OpKind::Neg, vec![a]).unwrap();
+        let n2 = g.add_op(OpKind::Neg, vec![n1]).unwrap(); // double-neg: erased
+        cur = g.add_op(OpKind::Add, vec![n2, cur]).unwrap();
+    }
+    let s = g.add_op(OpKind::Sum(None), vec![cur]).unwrap();
+    g.set_outputs(vec![s]);
+    g
+}
+
+/// gelu/layernorm residual blocks: `x = layernorm(gelu(x*c) + x, g, b)`.
+fn layernorm_blocks(rows: usize, d: usize, blocks: usize) -> Graph {
+    let mut g = Graph::new("opt_layernorm");
+    let x = g.placeholder("x", &[rows, d]);
+    let gamma = g.const_tensor(Tensor::ones(&[d]));
+    let beta = g.const_tensor(Tensor::zeros(&[d]));
+    let mut cur = x;
+    for _ in 0..blocks {
+        let c = g.const_scalar(0.9);
+        let t = g.add_op(OpKind::Mul, vec![cur, c]).unwrap();
+        let a = g.add_op(OpKind::Gelu, vec![t]).unwrap();
+        let r = g.add_op(OpKind::Add, vec![a, cur]).unwrap();
+        cur = g.add_op(OpKind::LayerNorm, vec![r, gamma, beta]).unwrap();
+    }
+    let s = g.add_op(OpKind::Sum(None), vec![cur]).unwrap();
+    g.set_outputs(vec![s]);
+    g
+}
+
+/// Const-heavy graph: long constant chains feeding a small live core.
+fn const_heavy(d: usize) -> Graph {
+    let mut g = Graph::new("opt_const");
+    let x = g.placeholder("x", &[d]);
+    let mut cc = g.const_tensor(Tensor::ones(&[d]));
+    for i in 0..24 {
+        let k = g.const_scalar(1.0 + (i % 5) as f64 * 0.1);
+        cc = g.add_op(OpKind::Mul, vec![cc, k]).unwrap();
+        if i % 3 == 0 {
+            cc = g.add_op(OpKind::Sqrt, vec![cc]).unwrap();
+        }
+    }
+    let m = g.add_op(OpKind::Mul, vec![x, cc]).unwrap();
+    let s = g.add_op(OpKind::Sum(None), vec![m]).unwrap();
+    g.set_outputs(vec![s]);
+    g
+}
+
+fn inputs_for(g: &Graph, seed: u64) -> Vec<Rc<Tensor>> {
+    let mut rng = Rng::new(seed);
+    g.input_shapes().into_iter().map(|(_, s)| Rc::new(Tensor::randn(&s, &mut rng))).collect()
+}
+
+/// Compile `g` on the eager backend at `level` and time steady-state calls.
+/// Returns (ns/call, planned-graph op count). Bitwise equivalence against
+/// the -O0 module is asserted before any timing.
+fn bench_levels(
+    rep: &mut support::Reporter,
+    tag: &str,
+    g: Graph,
+    iters: usize,
+    seed: u64,
+) -> (f64, f64) {
+    let g = Rc::new(g);
+    let mk = |level: OptLevel| {
+        let req = CompileRequest::new(&g.name.clone(), Rc::clone(&g)).with_opt_level(level);
+        let module = EagerBackend.compile(&req).expect("eager compile");
+        let ops = req.optimized().graph.num_ops();
+        (module, ops)
+    };
+    let (m0, ops0) = mk(OptLevel::O0);
+    let (m2, ops2) = mk(OptLevel::O2);
+    let inputs = inputs_for(&g, seed);
+    let a = m0.call(&inputs).unwrap();
+    let b = m2.call(&inputs).unwrap();
+    for (x, y) in a.iter().zip(b.iter()) {
+        assert!(
+            x.data().iter().zip(y.data().iter()).all(|(p, q)| p.to_bits() == q.to_bits()),
+            "{}: -O2 diverged bitwise from -O0",
+            tag
+        );
+    }
+    let o0_ns = support::time_ns(iters, || {
+        m0.call(&inputs).unwrap();
+    });
+    let o2_ns = support::time_ns(iters, || {
+        m2.call(&inputs).unwrap();
+    });
+    rep.record(&format!("{}_opt0_call", tag), o0_ns, "ns/call");
+    rep.record(&format!("{}_opt2_call", tag), o2_ns, "ns/call");
+    rep.record(&format!("{}_opt0_ops", tag), ops0 as f64, "ops");
+    rep.record(&format!("{}_opt2_ops", tag), ops2 as f64, "ops");
+    let speedup = o0_ns / o2_ns;
+    rep.record(&format!("{}_speedup", tag), speedup, "x");
+    (speedup, (ops0 - ops2) as f64)
+}
+
+fn main() {
+    let mut rep = support::Reporter::new("graph_opt");
+    let quick = support::quick();
+
+    // Elementwise residual chain: the acceptance bench. 128x256 f32 per
+    // tensor (~128 KiB) x 6 blocks — fusion removes every intermediate
+    // allocation; folding + neg-neg erasure removes ops outright.
+    let (speedup, reduced) =
+        bench_levels(&mut rep, "elementwise_chain", elementwise_chain(128, 256, 6), support::iters(60), 1);
+    assert!(reduced >= 12.0, "const folding should remove >= 2 ops per block, removed {}", reduced);
+    if !quick {
+        assert!(
+            speedup >= 1.3,
+            "acceptance: elementwise chain must speed up >= 1.3x at -O2 (got {:.2}x)",
+            speedup
+        );
+    }
+
+    // gelu/layernorm residual blocks: realistic mixed graph.
+    bench_levels(&mut rep, "layernorm_block", layernorm_blocks(64, 192, 4), support::iters(60), 2);
+
+    // Const-heavy graph: folding collapses the whole const chain.
+    let (_, const_reduced) = bench_levels(&mut rep, "const_heavy", const_heavy(4096), support::iters(200), 3);
+    assert!(const_reduced >= 24.0, "const chain must fold away, removed {}", const_reduced);
+
+    // One-off optimizer cost on the largest bench graph.
+    let g = Rc::new(elementwise_chain(128, 256, 6));
+    let t0 = Instant::now();
+    let opt = optimize(&g, OptLevel::O2);
+    rep.record("optimize_ns", t0.elapsed().as_nanos() as f64, "ns (one-shot)");
+    rep.record("optimize_rewrites", opt.total_rewrites() as f64, "rewrites");
+
+    rep.finish();
+}

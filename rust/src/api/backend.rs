@@ -21,6 +21,7 @@ use crate::backend::{
     batched::BatchedBackend, eager, recording::RecordingBackend, sharded::ShardedBackend, xla,
 };
 use crate::dynamo::Verbosity;
+use crate::graph::opt::{optimize, OptLevel, Optimized};
 use crate::graph::{CompiledGraphFn, Graph};
 use crate::runtime::Runtime;
 use crate::tensor::Tensor;
@@ -140,11 +141,16 @@ pub struct CompileRequest {
     /// themselves must NOT apply it; they report failures and let the
     /// policy decide.
     pub fallback: FallbackPolicy,
+    /// Optimizer level the plan stage applies (`--opt-level`, default 2).
+    pub opt_level: OptLevel,
+    /// Memoized optimizer output: `plan` and `lower` share one run.
+    opt: RefCell<Option<Rc<Optimized>>>,
 }
 
 impl CompileRequest {
     /// A request with defaults (no guards, no runtime, `Info` verbosity,
-    /// eager fallback); input specs and cache key derive from the graph.
+    /// eager fallback, `--opt-level 2`); input specs and cache key derive
+    /// from the graph.
     pub fn new(name: &str, graph: Rc<Graph>) -> CompileRequest {
         let input_specs = graph
             .input_shapes()
@@ -161,7 +167,27 @@ impl CompileRequest {
             verbosity: Verbosity::default(),
             runtime: None,
             fallback: FallbackPolicy::default(),
+            opt_level: OptLevel::default(),
+            opt: RefCell::new(None),
         }
+    }
+
+    /// Run the `graph::opt` pipeline at this request's level, once —
+    /// every backend's `plan` and `lower` stage works on
+    /// `optimized().graph` (at `O0` that is the captured graph itself).
+    pub fn optimized(&self) -> Rc<Optimized> {
+        if let Some(o) = self.opt.borrow().as_ref() {
+            return Rc::clone(o);
+        }
+        let o = Rc::new(optimize(&self.graph, self.opt_level));
+        *self.opt.borrow_mut() = Some(Rc::clone(&o));
+        o
+    }
+
+    pub fn with_opt_level(mut self, level: OptLevel) -> CompileRequest {
+        self.opt_level = level;
+        *self.opt.borrow_mut() = None;
+        self
     }
 
     pub fn with_runtime(mut self, rt: Option<Rc<Runtime>>) -> CompileRequest {
@@ -298,13 +324,18 @@ pub trait Backend {
 /// `backend_name` — the reference executor and the fallback target.
 /// The execution plan (topo steps, pre-materialized constants, buffer
 /// liveness, reusable arena) is computed here, once per compile, not per
-/// call — see [`eager::ExecPlan`].
+/// call — see [`eager::ExecPlan`]. Deliberately executes the graph
+/// *verbatim* (no optimizer): the fallback is the most conservative
+/// executor available, usable even when a backend choked on the
+/// optimized graph.
 pub fn eager_graph_fn(name: &str, graph: Rc<Graph>, backend_name: String) -> CompiledGraphFn {
-    let module: Rc<dyn CompiledModule> = Rc::new(eager::EagerModule::with_name(Rc::clone(&graph), backend_name));
+    let module: Rc<dyn CompiledModule> =
+        Rc::new(eager::EagerModule::with_fusion(Rc::clone(&graph), backend_name, false));
     CompiledGraphFn::from_module(name, graph, module)
 }
 
-/// Node-by-node CPU reference execution.
+/// Node-by-node CPU reference execution (of the optimized graph; fused
+/// elementwise regions at `--opt-level 2`).
 pub struct EagerBackend;
 
 impl Backend for EagerBackend {
@@ -317,12 +348,20 @@ impl Backend for EagerBackend {
     }
 
     fn lower(&self, req: &CompileRequest, _plan: &CompilePlan) -> Result<Rc<dyn CompiledModule>, DepyfError> {
-        Ok(Rc::new(eager::EagerModule::new(Rc::clone(&req.graph))))
+        let opt = req.optimized();
+        Ok(Rc::new(eager::EagerModule::with_fusion(
+            Rc::clone(&opt.graph),
+            "eager".into(),
+            req.opt_level.fuses(),
+        )))
     }
 }
 
 /// Lower to HLO text, compile + run via PJRT (fused kernels dispatched to
-/// AOT Pallas artifacts when shapes match).
+/// AOT Pallas artifacts when shapes match). Lowers the *optimized* graph
+/// — folded/simplified but unfused: PJRT applies its own fusion, so the
+/// executable cache is keyed on the optimized graph's content hash and
+/// differently-captured-but-equivalent graphs share one executable.
 pub struct XlaBackend;
 
 impl Backend for XlaBackend {
@@ -342,7 +381,8 @@ impl Backend for XlaBackend {
         let rt = req.runtime.as_ref().ok_or_else(|| {
             DepyfError::Backend("xla backend requires a PJRT runtime (SessionBuilder::runtime)".into())
         })?;
-        Ok(Rc::new(xla::compile_module(&req.name, &req.graph, rt)?))
+        let opt = req.optimized();
+        Ok(Rc::new(xla::compile_module(&req.name, &opt.graph, rt)?))
     }
 }
 

@@ -41,7 +41,8 @@ pub use backend::{
     register_backend, Backend, Capabilities, CompileRequest, CompiledModule, EagerBackend,
     FallbackPolicy, FnModule, InputSpec, ModuleArtifact, ModuleStats, PolicyCompiled, XlaBackend,
 };
+pub use crate::graph::opt::{OptLevel, Optimized, PassStat};
 pub use error::DepyfError;
-pub use plan::{BatchPlan, CompilePlan, PartitionPlan, PLAN_SCHEMA_VERSION};
+pub use plan::{BatchPlan, CompilePlan, OptSummary, PartitionPlan, PassDelta, PLAN_SCHEMA_VERSION};
 pub use session::{Session, SessionBuilder, TraceMode};
 pub use trace::{TraceBundle, TraceCall, TRACE_SCHEMA_VERSION};

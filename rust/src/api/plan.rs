@@ -8,12 +8,48 @@
 //! inspect partitioning decisions the same way it inspects guards.
 
 use crate::api::json::{self, Json};
+use crate::graph::opt::Optimized;
 
 use super::backend::CompileRequest;
 use super::error::DepyfError;
 
 /// Bumped whenever the plan JSON schema changes shape.
 pub const PLAN_SCHEMA_VERSION: u64 = 1;
+
+/// One optimizer pass's node delta, as recorded in the plan JSON.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PassDelta {
+    pub pass: String,
+    pub nodes_before: usize,
+    pub nodes_after: usize,
+    pub rewrites: usize,
+}
+
+/// The optimizer decisions baked into a plan: the level that ran and the
+/// pass list with per-pass node deltas (`"opt"` in `__plan_*.json`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct OptSummary {
+    pub level: u8,
+    pub passes: Vec<PassDelta>,
+}
+
+impl OptSummary {
+    pub fn from_optimized(opt: &Optimized) -> OptSummary {
+        OptSummary {
+            level: opt.level.as_u8(),
+            passes: opt
+                .passes
+                .iter()
+                .map(|p| PassDelta {
+                    pass: p.pass.to_string(),
+                    nodes_before: p.nodes_before,
+                    nodes_after: p.nodes_after,
+                    rewrites: p.rewrites,
+                })
+                .collect(),
+        }
+    }
+}
 
 /// One partition of a captured graph: which op nodes it owns, which
 /// original-graph values it consumes/produces, and where it compiles to.
@@ -64,13 +100,20 @@ pub struct CompilePlan {
     pub partitions: Vec<PartitionPlan>,
     /// Present when the backend pads/buckets the leading dim.
     pub batch: Option<BatchPlan>,
+    /// The optimizer run that produced the planned graph (level + pass
+    /// deltas); `None` for plans written before the optimizer existed.
+    pub opt: Option<OptSummary>,
 }
 
 impl CompilePlan {
     /// The trivial single-partition plan every monolithic backend uses:
-    /// all ops in one partition, lowered to `target`.
+    /// all ops in one partition, lowered to `target`. Node ids refer to
+    /// the **optimized** graph (`req.optimized()`), and the partition's
+    /// cache key is the optimized graph's content hash — so equivalent
+    /// captures share executables.
     pub fn monolithic(backend: &str, req: &CompileRequest, target: &str) -> CompilePlan {
-        let g = &req.graph;
+        let opt = req.optimized();
+        let g = &opt.graph;
         let nodes: Vec<usize> = g
             .nodes
             .iter()
@@ -88,9 +131,10 @@ impl CompilePlan {
                 nodes,
                 inputs: g.inputs.clone(),
                 outputs: g.outputs.clone(),
-                cache_key: req.cache_key,
+                cache_key: g.content_hash(),
             }],
             batch: None,
+            opt: Some(OptSummary::from_optimized(&opt)),
         }
     }
 
@@ -115,6 +159,20 @@ impl CompilePlan {
             ));
         }
         out.push_str("  ]");
+        if let Some(o) = &self.opt {
+            out.push_str(&format!(",\n  \"opt\": {{\"level\": {}, \"passes\": [", o.level));
+            for (i, p) in o.passes.iter().enumerate() {
+                out.push_str(&format!(
+                    "{}{{\"pass\": \"{}\", \"nodes_before\": {}, \"nodes_after\": {}, \"rewrites\": {}}}",
+                    if i > 0 { ", " } else { "" },
+                    json::escape(&p.pass),
+                    p.nodes_before,
+                    p.nodes_after,
+                    p.rewrites
+                ));
+            }
+            out.push_str("]}");
+        }
         if let Some(b) = &self.batch {
             out.push_str(&format!(
                 ",\n  \"batch\": {{\"dim\": {}, \"orig\": {}, \"bucket\": {}, \"padded_inputs\": {}, \"sliced_outputs\": {}}}\n",
@@ -197,12 +255,33 @@ impl CompilePlan {
                 sliced_outputs: ids_field(b, "sliced_outputs")?,
             }),
         };
+        let opt = match doc.get("opt") {
+            None | Some(Json::Null) => None,
+            Some(o) => {
+                let passes = match o.get("passes") {
+                    Some(Json::Arr(items)) => items
+                        .iter()
+                        .map(|item| {
+                            Ok(PassDelta {
+                                pass: str_field(item, "pass")?,
+                                nodes_before: num_field(item, "nodes_before")?,
+                                nodes_after: num_field(item, "nodes_after")?,
+                                rewrites: num_field(item, "rewrites")?,
+                            })
+                        })
+                        .collect::<Result<Vec<PassDelta>, DepyfError>>()?,
+                    _ => return Err(DepyfError::Parse("plan \"opt\" missing \"passes\" array".into())),
+                };
+                Some(OptSummary { level: num_field(o, "level")? as u8, passes })
+            }
+        };
         Ok(CompilePlan {
             backend: str_field(&doc, "backend")?,
             graph: str_field(&doc, "graph")?,
             cache_key: key_field(&doc, "cache_key")?,
             partitions,
             batch,
+            opt,
         })
     }
 }
@@ -246,6 +325,13 @@ mod tests {
                 padded_inputs: vec![0],
                 sliced_outputs: vec![0],
             }),
+            opt: Some(OptSummary {
+                level: 2,
+                passes: vec![
+                    PassDelta { pass: "const_fold".into(), nodes_before: 9, nodes_after: 9, rewrites: 2 },
+                    PassDelta { pass: "dce".into(), nodes_before: 9, nodes_after: 7, rewrites: 2 },
+                ],
+            }),
         }
     }
 
@@ -257,6 +343,10 @@ mod tests {
         assert_eq!(back, plan);
         // u64 cache keys survive (they are hex strings, not f64 numbers).
         assert_eq!(back.partitions[1].cache_key, u64::MAX);
+        // The opt summary round-trips pass-for-pass.
+        let opt = back.opt.unwrap();
+        assert_eq!(opt.level, 2);
+        assert_eq!(opt.passes[1].nodes_after, 7);
     }
 
     #[test]
@@ -265,6 +355,47 @@ mod tests {
         plan.batch = None;
         let back = CompilePlan::parse(&plan.to_json()).unwrap();
         assert_eq!(back, plan);
+    }
+
+    #[test]
+    fn optless_plan_round_trips() {
+        // Plans written before the optimizer existed (no "opt" key) still
+        // parse; the field stays None and re-renders without the key.
+        let mut plan = sample();
+        plan.opt = None;
+        let text = plan.to_json();
+        assert!(!text.contains("\"opt\""));
+        let back = CompilePlan::parse(&text).unwrap();
+        assert_eq!(back, plan);
+    }
+
+    /// Satellite: every way the *opt summary* can be malformed is a loud
+    /// parse error, not a silently-defaulted field.
+    #[test]
+    fn parse_rejects_malformed_opt_summaries() {
+        let good = sample().to_json();
+        assert!(CompilePlan::parse(&good).is_ok());
+        let surgeries: &[(&str, &str, &str)] = &[
+            ("opt missing level", "\"level\": 2, ", ""),
+            ("opt level is a string", "\"level\": 2", "\"level\": \"two\""),
+            ("opt passes not an array", "\"passes\": [{", "\"passes\": 5, \"unused\": [{"),
+            ("pass missing name", "\"pass\": \"const_fold\", ", ""),
+            ("pass name is a number", "\"pass\": \"const_fold\"", "\"pass\": 3"),
+            ("pass missing nodes_before", "\"nodes_before\": 9, \"nodes_after\": 9", "\"nodes_after\": 9"),
+            ("pass rewrites is a string", "\"rewrites\": 2}", "\"rewrites\": \"2\"}"),
+        ];
+        for (why, needle, replacement) in surgeries {
+            let mutated = good.replacen(needle, replacement, 1);
+            assert_ne!(mutated, good, "surgery '{}' did not apply", why);
+            assert!(CompilePlan::parse(&mutated).is_err(), "accepted malformed plan: {}", why);
+        }
+        // A null opt is the explicit "no optimizer ran" encoding.
+        let nulled = good.replace(
+            "\"opt\": {\"level\": 2, \"passes\": [{\"pass\": \"const_fold\", \"nodes_before\": 9, \"nodes_after\": 9, \"rewrites\": 2}, {\"pass\": \"dce\", \"nodes_before\": 9, \"nodes_after\": 7, \"rewrites\": 2}]}",
+            "\"opt\": null",
+        );
+        assert_ne!(nulled, good);
+        assert_eq!(CompilePlan::parse(&nulled).unwrap().opt, None);
     }
 
     #[test]

@@ -26,7 +26,8 @@ use std::rc::Rc;
 use crate::bytecode::IsaVersion;
 use crate::debugger::Debugger;
 use crate::dynamo::{Dynamo, DynamoConfig, GraphTracer};
-use crate::graph::print_graph_with_lines;
+use crate::graph::opt::{render_optimized_json, OptLevel, Optimized};
+use crate::graph::{print_graph, print_graph_with_lines};
 use crate::hijack::{dump_all, link_source, DumpDir};
 use crate::runtime::Runtime;
 use crate::value::Value;
@@ -115,6 +116,7 @@ pub struct SessionBuilder {
     trace: TraceMode,
     fallback: FallbackPolicy,
     require: Capabilities,
+    opt_level: OptLevel,
 }
 
 impl Session {
@@ -131,6 +133,7 @@ impl Session {
             trace: TraceMode::Capture,
             fallback: FallbackPolicy::Eager,
             require: Capabilities::NONE,
+            opt_level: OptLevel::default(),
         }
     }
 
@@ -150,9 +153,11 @@ impl Session {
 
     /// Write all dumps (`full_code.py`, `__compiled_fn_*.py`,
     /// `__transformed_*.py`, disassembly, guards), every backend module's
-    /// artifacts (compile plans, per-partition HLO), a `metrics.json`
-    /// snapshot of the compiler counters (with per-module stats) and a
-    /// `manifest.json` index, and return the typed artifact list.
+    /// artifacts (compile plans, per-partition HLO), the optimizer's
+    /// `__optimized_*.{txt,json}` before/after dumps, a `metrics.json`
+    /// snapshot of the compiler counters (with per-module stats incl.
+    /// pass deltas) and a `manifest.json` index, and return the typed
+    /// artifact list.
     pub fn finish(&self) -> Result<Vec<Artifact>, DepyfError> {
         dump_all(&self.dynamo, &self.dump)?;
         // Backend-module artifacts: compile plans, per-partition/bucket
@@ -162,10 +167,34 @@ impl Session {
                 self.dump.write_refresh(art.kind, &art.name, &art.file, &art.content)?;
             }
         }
+        // The optimizer's before/after story, next to the original
+        // `__compiled_fn_*.py`: a human-diffable .txt (pass table + the
+        // optimized graph printed like the original dump) and a lossless
+        // .json (serde graph + pass stats). Skipped at -O0, where the
+        // optimized graph IS the original.
+        let optimizations = self.dynamo.optimizations();
+        for (name, opt) in &optimizations {
+            if opt.level == OptLevel::O0 {
+                continue;
+            }
+            self.dump.write_refresh(
+                ArtifactKind::OptimizedGraph,
+                name,
+                &format!("__optimized_{}.txt", sanitize_stem(name)),
+                &render_optimized_txt(name, opt),
+            )?;
+            self.dump.write_refresh(
+                ArtifactKind::OptimizedGraph,
+                &format!("{}.json", name),
+                &format!("__optimized_{}.json", sanitize_stem(name)),
+                &render_optimized_json(name, opt),
+            )?;
+        }
         // Per-session perf observability: cache hits/misses, guard
-        // checks/failures, compile_ns, plus per-module backend stats — so
-        // regressions (and partition/bucket decisions) show up in dumps.
-        let modules_json = render_modules_json(&self.dynamo.compiled());
+        // checks/failures, evictions, compile_ns, plus per-module backend
+        // stats and optimizer pass deltas — so regressions (and
+        // partition/bucket/rewrite decisions) show up in dumps.
+        let modules_json = render_modules_json(&self.dynamo.compiled(), &optimizations);
         self.dump.write_refresh(
             ArtifactKind::Metrics,
             "metrics",
@@ -179,20 +208,63 @@ impl Session {
     }
 }
 
+fn sanitize_stem(name: &str) -> String {
+    name.chars().map(|c| if c.is_ascii_alphanumeric() || c == '_' { c } else { '_' }).collect()
+}
+
+/// The `__optimized_*.txt` artifact: a commented pass table followed by
+/// the optimized graph printed exactly like `__compiled_fn_*.py`, so
+/// `diff __compiled_fn_1.py __optimized___compiled_fn_1.txt` shows what
+/// the optimizer did.
+fn render_optimized_txt(name: &str, opt: &Optimized) -> String {
+    let mut out = format!("# optimizer report for {} (opt-level {})\n", name, opt.level);
+    for p in &opt.passes {
+        out.push_str(&format!(
+            "#   {:<12} nodes {:>4} -> {:<4} rewrites {}\n",
+            p.pass, p.nodes_before, p.nodes_after, p.rewrites
+        ));
+    }
+    out.push_str("#\n");
+    out.push_str(&print_graph(&opt.graph));
+    out.push_str("# ^ optimized graph (diff against the __compiled_fn dump)\n");
+    out
+}
+
 /// Render the `"modules"` array for `metrics.json`: one entry per
-/// compiled graph with its backend, call count and module stats.
-fn render_modules_json(compiled: &[Rc<crate::graph::CompiledGraphFn>]) -> String {
+/// compiled graph with its backend, call count, module stats and the
+/// optimizer pass deltas that shaped its planned graph.
+fn render_modules_json(
+    compiled: &[Rc<crate::graph::CompiledGraphFn>],
+    optimizations: &[(String, Rc<Optimized>)],
+) -> String {
+    let opt_json = |name: &str| -> String {
+        let Some((_, opt)) = optimizations.iter().find(|(n, _)| n == name) else {
+            return "null".into();
+        };
+        let passes: Vec<String> = opt
+            .passes
+            .iter()
+            .map(|p| {
+                format!(
+                    "{{\"pass\": \"{}\", \"nodes_before\": {}, \"nodes_after\": {}, \"rewrites\": {}}}",
+                    p.pass, p.nodes_before, p.nodes_after, p.rewrites
+                )
+            })
+            .collect();
+        format!("{{\"level\": {}, \"passes\": [{}]}}", opt.level.as_u8(), passes.join(", "))
+    };
     let mut out = String::from("[\n");
     for (i, f) in compiled.iter().enumerate() {
         let stats = f.module.stats();
         out.push_str(&format!(
-            "    {{\"name\": \"{}\", \"backend\": \"{}\", \"calls\": {}, \"partitions\": {}, \"bucket\": {}, \"cache_hits\": {}}}{}\n",
+            "    {{\"name\": \"{}\", \"backend\": \"{}\", \"calls\": {}, \"partitions\": {}, \"bucket\": {}, \"cache_hits\": {}, \"opt\": {}}}{}\n",
             super::json::escape(&f.name),
             super::json::escape(&f.backend_name),
             f.calls.get(),
             stats.partitions,
             stats.bucket.map(|b| b.to_string()).unwrap_or_else(|| "null".into()),
             stats.cache_hits,
+            opt_json(&f.name),
             if i + 1 < compiled.len() { "," } else { "" }
         ));
     }
@@ -243,6 +315,14 @@ impl SessionBuilder {
     /// What to do when the backend fails on a captured graph.
     pub fn fallback(mut self, policy: FallbackPolicy) -> SessionBuilder {
         self.fallback = policy;
+        self
+    }
+
+    /// Graph-optimizer level applied at `Backend::plan` time for every
+    /// captured graph (`--opt-level`; default 2 — folding, CSE, DCE,
+    /// algebraic rewrites and eager elementwise fusion).
+    pub fn opt_level(mut self, level: OptLevel) -> SessionBuilder {
+        self.opt_level = level;
         self
     }
 
@@ -305,6 +385,7 @@ impl SessionBuilder {
         let config = DynamoConfig {
             backend,
             fallback: self.fallback,
+            opt_level: self.opt_level,
             tracer: if self.trace == TraceMode::StepGraphs {
                 Some(adapter.clone() as Rc<dyn GraphTracer>)
             } else {
@@ -378,6 +459,56 @@ mod tests {
         let again = s.finish().unwrap();
         assert_eq!(again.iter().filter(|a| a.kind == ArtifactKind::Metrics).count(), 1);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn finish_dumps_optimized_graph_artifacts() {
+        let dir = tmpdir("opt");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut s = Session::builder().dump_to(&dir).build().unwrap();
+        // A graph with a foldable const chain and a fusible elementwise run.
+        s.run_source(
+            "main",
+            "def f(x):\n    k = 2.0 * 3.0\n    return ((x * k).relu() * 1.0).sum()\nprint(f(torch.ones([4])).item())\n",
+        )
+        .unwrap();
+        let artifacts = s.finish().unwrap();
+        let opts: Vec<&Artifact> =
+            artifacts.iter().filter(|a| a.kind == ArtifactKind::OptimizedGraph).collect();
+        assert_eq!(opts.len(), 2, "one .txt + one .json per graph: {:?}", artifacts);
+        let txt = opts.iter().find(|a| a.path.to_string_lossy().ends_with(".txt")).unwrap();
+        let body = std::fs::read_to_string(&txt.path).unwrap();
+        assert!(body.contains("optimizer report"), "{}", body);
+        assert!(body.contains("const_fold"), "{}", body);
+        assert!(body.contains("def __compiled_fn_1"), "{}", body);
+        let js = opts.iter().find(|a| a.path.to_string_lossy().ends_with(".json")).unwrap();
+        let doc = crate::api::json::parse(&std::fs::read_to_string(&js.path).unwrap()).unwrap();
+        assert_eq!(doc.get("level").and_then(|v| v.as_f64()), Some(2.0));
+        // The embedded graph is the optimizer's output, parseable losslessly.
+        let g = crate::graph::serde::graph_from_value(doc.get("graph").unwrap()).unwrap();
+        assert!(g.num_ops() < 4, "folding + x*1 should shrink the graph: {:?}", g);
+        // The manifest indexes the new kind, and metrics.json carries the
+        // per-module pass deltas.
+        let indexed = load_manifest(&dir).unwrap();
+        assert!(indexed.iter().any(|a| a.kind == ArtifactKind::OptimizedGraph));
+        let m = artifacts.iter().find(|a| a.kind == ArtifactKind::Metrics).unwrap();
+        let mdoc = crate::api::json::parse(&std::fs::read_to_string(&m.path).unwrap()).unwrap();
+        let modules = match mdoc.get("modules") {
+            Some(crate::api::json::Json::Arr(items)) => items,
+            other => panic!("modules array missing: {:?}", other),
+        };
+        assert!(modules[0].get("opt").and_then(|o| o.get("passes")).is_some(), "{:?}", modules);
+        // At -O0 no optimized artifacts appear.
+        let dir0 = tmpdir("opt0");
+        let _ = std::fs::remove_dir_all(&dir0);
+        let mut s0 =
+            Session::builder().dump_to(&dir0).opt_level(crate::api::OptLevel::O0).build().unwrap();
+        s0.run_source("main", "def f(x):\n    return (x * 2).sum()\nprint(f(torch.ones([2])).item())\n")
+            .unwrap();
+        let a0 = s0.finish().unwrap();
+        assert!(a0.iter().all(|a| a.kind != ArtifactKind::OptimizedGraph), "{:?}", a0);
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::remove_dir_all(&dir0).ok();
     }
 
     #[test]

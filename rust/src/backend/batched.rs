@@ -288,9 +288,10 @@ fn slice_rows(t: &Tensor, orig: usize) -> Tensor {
 }
 
 /// The `batched` backend. Holds a per-bucket cache of eager execution
-/// plans (the PJRT path reuses the runtime's own content-hash cache).
+/// plans keyed on (padded-graph content hash, fusion flag) — the PJRT
+/// path reuses the runtime's own content-hash cache.
 pub struct BatchedBackend {
-    eager_plans: RefCell<HashMap<u64, Rc<ExecPlan>>>,
+    eager_plans: RefCell<HashMap<(u64, bool), Rc<ExecPlan>>>,
 }
 
 impl Default for BatchedBackend {
@@ -315,10 +316,14 @@ impl Backend for BatchedBackend {
     }
 
     fn plan(&self, req: &CompileRequest) -> Result<CompilePlan, DepyfError> {
+        // Batch-safety analysis and padding run on the *optimized* graph;
+        // the monolithic fallback already plans it.
+        let opt = req.optimized();
+        let g = &opt.graph;
         let target = if req.runtime.is_some() { "xla" } else { "eager" };
-        let padded = analyze(&req.graph).and_then(|info| {
+        let padded = analyze(g).and_then(|info| {
             let bucket = bucket_of(info.batch);
-            pad_graph(&req.graph, &info, bucket).map(|g| (info, bucket, g))
+            pad_graph(g, &info, bucket).map(|p| (info, bucket, p))
         });
         let Some((info, bucket, padded)) = padded else {
             // Not batch-safe: compile the exact shapes, no padding.
@@ -330,21 +335,18 @@ impl Backend for BatchedBackend {
             dim: 0,
             orig: info.batch,
             bucket,
-            padded_inputs: (0..req.graph.inputs.len())
-                .filter(|&i| info.flags[req.graph.inputs[i]])
-                .collect(),
-            sliced_outputs: (0..req.graph.outputs.len())
-                .filter(|&i| info.flags[req.graph.outputs[i]])
-                .collect(),
+            padded_inputs: (0..g.inputs.len()).filter(|&i| info.flags[g.inputs[i]]).collect(),
+            sliced_outputs: (0..g.outputs.len()).filter(|&i| info.flags[g.outputs[i]]).collect(),
         });
         Ok(plan)
     }
 
     fn lower(&self, req: &CompileRequest, plan: &CompilePlan) -> Result<Rc<dyn CompiledModule>, DepyfError> {
+        let opt = req.optimized();
         let target = plan.partitions.first().map(|p| p.target.as_str()).unwrap_or("eager");
         let (exec_graph, batch) = match &plan.batch {
-            Some(b) => (Rc::new(pad_graph_from_plan(&req.graph, b)?), Some(b.clone())),
-            None => (Rc::clone(&req.graph), None),
+            Some(b) => (Rc::new(pad_graph_from_plan(&opt.graph, b)?), Some(b.clone())),
+            None => (Rc::clone(&opt.graph), None),
         };
         let mut cache_hits = 0u64;
         let inner: Rc<dyn CompiledModule> = match target {
@@ -361,7 +363,7 @@ impl Backend for BatchedBackend {
                 Rc::new(module)
             }
             _ => {
-                let key = exec_graph.content_hash();
+                let key = (exec_graph.content_hash(), req.opt_level.fuses());
                 let cached = self.eager_plans.borrow().get(&key).cloned();
                 let plan_rc = match cached {
                     Some(p) => {
@@ -369,7 +371,10 @@ impl Backend for BatchedBackend {
                         p
                     }
                     None => {
-                        let p = Rc::new(ExecPlan::new(Rc::clone(&exec_graph)));
+                        let p = Rc::new(ExecPlan::with_fusion(
+                            Rc::clone(&exec_graph),
+                            req.opt_level.fuses(),
+                        ));
                         self.eager_plans.borrow_mut().insert(key, Rc::clone(&p));
                         p
                     }
@@ -378,7 +383,7 @@ impl Backend for BatchedBackend {
             }
         };
         Ok(Rc::new(BatchedModule {
-            graph: Rc::clone(&req.graph),
+            graph: Rc::clone(&opt.graph),
             inner,
             batch,
             plan_json: plan.to_json(),

@@ -8,8 +8,21 @@
 //! steps laid out in order, last-use (liveness) lists so intermediate
 //! buffers are released as soon as possible, and a reusable slot arena so
 //! steady-state calls do no per-call planning work and no env reallocation.
+//!
+//! At `--opt-level 2` the plan additionally **fuses elementwise chains**:
+//! maximal runs of broadcasting-compatible unary/binary elementwise ops
+//! whose interior values are consumed only inside the run collapse into a
+//! [`FusedRegion`] executed as one stride-walked pass over the output —
+//! broadcast inputs gathered by a chunk odometer, every op a tight loop
+//! over cache-resident chunk buffers, one output allocation and **zero
+//! intermediate tensors** between fused ops, with per-element math that
+//! is bit-for-bit the same as the unfused per-op kernels. Fusion lives
+//! entirely here, *below* the graph IR: there is no `FusedElementwise`
+//! `OpKind`, so `graph::serde` / `content_hash` / trace bundles are
+//! untouched (see `graph::opt` module docs).
 
 use std::cell::RefCell;
+use std::collections::HashMap;
 use std::rc::Rc;
 
 use crate::api::{CompiledModule, DepyfError};
@@ -17,9 +30,11 @@ use crate::graph::{Graph, NodeId, NodeKind, OpKind};
 use crate::tensor::{self, Tensor};
 
 /// Evaluate one op node against the environment. Shared by the planned and
-/// traced executors. Tensor-library failures surface as typed
+/// traced executors, and by the optimizer's constant folder
+/// (`graph::opt`), so folded constants carry exactly the bits execution
+/// would produce. Tensor-library failures surface as typed
 /// [`DepyfError::Tensor`] (shape vs axis vs index), not strings.
-fn eval_op(g: &Graph, id: usize, env: &[Option<Tensor>]) -> Result<Tensor, DepyfError> {
+pub fn eval_op(g: &Graph, id: usize, env: &[Option<Tensor>]) -> Result<Tensor, DepyfError> {
     let (op, args) = match &g.nodes[id].kind {
         NodeKind::Op(op, args) => (op, args),
         _ => return Err(DepyfError::Backend(format!("node {} is not an op", id))),
@@ -65,6 +80,416 @@ fn eval_op(g: &Graph, id: usize, env: &[Option<Tensor>]) -> Result<Tensor, Depyf
     })
 }
 
+/// Op kinds a fused region may contain: pure per-element unary/binary
+/// math (broadcasting). Everything else (matmul, reductions, shape ops,
+/// softmax/layernorm rows) materializes as usual.
+fn fusible(op: &OpKind) -> bool {
+    matches!(
+        op,
+        OpKind::Add
+            | OpKind::Sub
+            | OpKind::Mul
+            | OpKind::Div
+            | OpKind::Pow
+            | OpKind::Maximum
+            | OpKind::Minimum
+            | OpKind::Neg
+            | OpKind::Relu
+            | OpKind::Gelu
+            | OpKind::Tanh
+            | OpKind::Sigmoid
+            | OpKind::Exp
+            | OpKind::Log
+            | OpKind::Sqrt
+            | OpKind::Abs
+    )
+}
+
+/// Apply one fusible op over chunk slices, dispatching on the op kind
+/// **once per chunk** so each arm is a tight, vectorizable loop. Every
+/// arm's per-element body is the same scalar computation the unfused
+/// kernels in [`tensor::ops`] use (gelu/sigmoid literally share one
+/// function), so fused and unfused execution are bitwise identical.
+fn apply_chunk(op: &OpKind, a: &[f32], b: &[f32], dst: &mut [f32]) {
+    macro_rules! bin {
+        ($f:expr) => {
+            for ((d, &x), &y) in dst.iter_mut().zip(a.iter()).zip(b.iter()) {
+                *d = $f(x, y);
+            }
+        };
+    }
+    macro_rules! un {
+        ($f:expr) => {
+            for (d, &x) in dst.iter_mut().zip(a.iter()) {
+                *d = $f(x);
+            }
+        };
+    }
+    match op {
+        OpKind::Add => bin!(|x, y| x + y),
+        OpKind::Sub => bin!(|x, y| x - y),
+        OpKind::Mul => bin!(|x, y| x * y),
+        OpKind::Div => bin!(|x, y| x / y),
+        OpKind::Pow => bin!(|x: f32, y: f32| x.powf(y)),
+        OpKind::Maximum => bin!(f32::max),
+        OpKind::Minimum => bin!(f32::min),
+        OpKind::Neg => un!(|x: f32| -x),
+        OpKind::Relu => un!(|x: f32| x.max(0.0)),
+        OpKind::Gelu => un!(tensor::gelu_scalar),
+        OpKind::Tanh => un!(f32::tanh),
+        OpKind::Sigmoid => un!(tensor::sigmoid_scalar),
+        OpKind::Exp => un!(f32::exp),
+        OpKind::Log => un!(f32::ln),
+        OpKind::Sqrt => un!(f32::sqrt),
+        OpKind::Abs => un!(f32::abs),
+        other => unreachable!("non-elementwise op {:?} in a fused region", other),
+    }
+}
+
+/// Chunk size of the fused executor: small enough that the whole register
+/// file of a region (one buffer per op) stays cache-resident, large
+/// enough to amortize per-chunk dispatch.
+const FUSE_CHUNK: usize = 4096;
+
+/// Where a fused op reads each operand from.
+#[derive(Clone, Copy, Debug)]
+enum FusedArg {
+    /// External value: index into [`FusedRegion::inputs`].
+    Input(usize),
+    /// Result of an earlier op in the same region (register index).
+    Reg(usize),
+}
+
+#[derive(Debug)]
+struct FusedOp {
+    op: OpKind,
+    a: FusedArg,
+    /// Ignored for unary ops.
+    b: FusedArg,
+}
+
+/// Reusable chunk buffers of one fused region — like the [`ExecPlan`]
+/// env arena, steady-state calls allocate nothing but the output tensor.
+#[derive(Debug, Default)]
+struct FuseScratch {
+    /// One chunk buffer per *interior* op (the root writes into the
+    /// output directly, so `ops.len() - 1` buffers).
+    op_buf: Vec<Vec<f32>>,
+    /// One chunk buffer per broadcast (non-dense) input; dense inputs
+    /// keep an empty placeholder.
+    in_buf: Vec<Vec<f32>>,
+}
+
+/// A maximal run of elementwise ops executed as one chunked, stride-walked
+/// pass: external inputs are read through broadcast strides onto the
+/// region output's shape, interior values live in chunk-sized op buffers
+/// (never materialized as tensors), and only the root node's tensor is
+/// allocated.
+#[derive(Debug)]
+pub struct FusedRegion {
+    /// The node whose env slot this region writes.
+    root: NodeId,
+    out_shape: Vec<usize>,
+    /// Env slots read (placeholders, constants, unfused op results).
+    inputs: Vec<NodeId>,
+    /// Region ops in topological order; the last one produces the output.
+    ops: Vec<FusedOp>,
+    /// Per input: shape equals `out_shape` (read directly, no gather).
+    /// Precomputed at plan time from the graph's static shapes.
+    dense: Vec<bool>,
+    /// Broadcast strides onto `out_shape` per non-dense input (empty for
+    /// dense ones).
+    strides: Vec<Vec<usize>>,
+    /// Reused chunk buffers — steady-state calls reallocate nothing.
+    scratch: RefCell<FuseScratch>,
+}
+
+impl FusedRegion {
+    /// Number of graph ops collapsed into this region.
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    /// Execute the region: the flat output index space is walked in
+    /// [`FUSE_CHUNK`]-sized chunks. Broadcast inputs are gathered into
+    /// chunk buffers with a stride odometer (no div/mod per element;
+    /// dense inputs are sliced directly), then every region op runs as a
+    /// tight per-chunk loop over cache-resident buffers. Chunk buffers
+    /// live in the region's scratch arena, so the only tensor-sized
+    /// (and steady-state only) allocation is the region output.
+    fn run(&self, env: &[Option<Tensor>]) -> Result<Tensor, DepyfError> {
+        let mut srcs: Vec<&Tensor> = Vec::with_capacity(self.inputs.len());
+        for &id in &self.inputs {
+            srcs.push(env[id].as_ref().ok_or_else(|| {
+                DepyfError::Backend(format!("fused region at node {} uses unevaluated node {}", self.root, id))
+            })?);
+        }
+        let rank = self.out_shape.len();
+        let n: usize = self.out_shape.iter().product();
+        let chunk = n.min(FUSE_CHUNK).max(1);
+        let any_gather = self.dense.iter().any(|d| !d);
+        let last = self.ops.len() - 1;
+        // Reused chunk buffers (the try_borrow fallback covers exotic
+        // aliasing of one plan from two callables, like the env arena).
+        let mut borrowed;
+        let mut local;
+        let scratch: &mut FuseScratch = match self.scratch.try_borrow_mut() {
+            Ok(b) => {
+                borrowed = b;
+                &mut *borrowed
+            }
+            Err(_) => {
+                local = FuseScratch::default();
+                &mut local
+            }
+        };
+        let FuseScratch { op_buf, in_buf } = scratch;
+        op_buf.resize_with(last, Vec::new);
+        for buf in op_buf.iter_mut() {
+            buf.resize(chunk, 0.0);
+        }
+        in_buf.resize_with(self.inputs.len(), Vec::new);
+        for (p, buf) in in_buf.iter_mut().enumerate() {
+            buf.resize(if self.dense[p] { 0 } else { chunk }, 0.0);
+        }
+        let mut out = vec![0f32; n];
+        let mut coords = vec![0usize; rank];
+        let mut gidx = vec![0usize; srcs.len()];
+        let mut start = 0usize;
+        while start < n {
+            let len = (n - start).min(chunk);
+            if any_gather {
+                // Odometer walk shared by every broadcast input.
+                for i in 0..len {
+                    for (p, buf) in in_buf.iter_mut().enumerate() {
+                        if !self.dense[p] {
+                            buf[i] = srcs[p].data()[gidx[p]];
+                        }
+                    }
+                    for ax in (0..rank).rev() {
+                        coords[ax] += 1;
+                        for (p, s) in self.strides.iter().enumerate() {
+                            if !self.dense[p] {
+                                gidx[p] += s[ax];
+                            }
+                        }
+                        if coords[ax] < self.out_shape[ax] {
+                            break;
+                        }
+                        coords[ax] = 0;
+                        for (p, s) in self.strides.iter().enumerate() {
+                            if !self.dense[p] {
+                                gidx[p] -= s[ax] * self.out_shape[ax];
+                            }
+                        }
+                    }
+                }
+            }
+            for (k, fo) in self.ops.iter().enumerate() {
+                let (done, rest) = op_buf.split_at_mut(k);
+                let done: &[Vec<f32>] = done;
+                let a = pick_src(fo.a, &self.dense, &srcs, in_buf, done, start, len);
+                let b = pick_src(fo.b, &self.dense, &srcs, in_buf, done, start, len);
+                if k == last {
+                    // The root writes straight into the output tensor.
+                    apply_chunk(&fo.op, a, b, &mut out[start..start + len]);
+                } else {
+                    apply_chunk(&fo.op, a, b, &mut rest[0][..len]);
+                }
+            }
+            start += len;
+        }
+        Ok(Tensor::new(self.out_shape.clone(), out))
+    }
+}
+
+/// Resolve one fused-op operand to its chunk slice: a dense input reads
+/// the tensor directly at the chunk offset, a broadcast input reads its
+/// gathered chunk buffer, and a register reads an earlier op's buffer.
+fn pick_src<'a>(
+    arg: FusedArg,
+    dense: &[bool],
+    srcs: &'a [&'a Tensor],
+    in_buf: &'a [Vec<f32>],
+    done: &'a [Vec<f32>],
+    start: usize,
+    len: usize,
+) -> &'a [f32] {
+    match arg {
+        FusedArg::Input(p) if dense[p] => &srcs[p].data()[start..start + len],
+        FusedArg::Input(p) => &in_buf[p][..len],
+        FusedArg::Reg(r) => &done[r][..len],
+    }
+}
+
+/// One execution step: an ordinary op evaluation or a fused region.
+enum Step {
+    Op(NodeId),
+    Fused(FusedRegion),
+}
+
+impl Step {
+    /// The env slot this step writes.
+    fn writes(&self) -> NodeId {
+        match self {
+            Step::Op(id) => *id,
+            Step::Fused(r) => r.root,
+        }
+    }
+}
+
+/// `(op, args)` of an op node, `None` for leaves.
+fn node_op(g: &Graph, id: NodeId) -> Option<(&OpKind, &[NodeId])> {
+    match &g.nodes[id].kind {
+        NodeKind::Op(op, args) => Some((op, args.as_slice())),
+        _ => None,
+    }
+}
+
+/// Group fusible elementwise ops into regions. Regions are rooted at the
+/// *last* node of a run (largest id) and grown backwards through args: a
+/// producer joins only when it is itself fusible, not a graph output,
+/// consumed exclusively inside the region, and its shape broadcasts onto
+/// the root's shape. Deterministic: roots are visited in descending node
+/// order, membership grows to a fixpoint.
+fn fuse_steps(g: &Graph) -> Vec<Step> {
+    let n = g.nodes.len();
+    let mut consumers: Vec<Vec<NodeId>> = vec![Vec::new(); n];
+    for (id, node) in g.nodes.iter().enumerate() {
+        if let NodeKind::Op(_, args) = &node.kind {
+            for &a in args {
+                consumers[a].push(id);
+            }
+        }
+    }
+    let is_output: Vec<bool> = {
+        let mut v = vec![false; n];
+        for &o in &g.outputs {
+            v[o] = true;
+        }
+        v
+    };
+    let broadcasts_onto = |inner: NodeId, root: NodeId| -> bool {
+        tensor::broadcast_shapes(&g.nodes[inner].shape, &g.nodes[root].shape)
+            .map(|s| s == g.nodes[root].shape)
+            .unwrap_or(false)
+    };
+    let mut region_of: Vec<Option<usize>> = vec![None; n];
+    let mut regions: Vec<Vec<NodeId>> = Vec::new();
+    for root in (0..n).rev() {
+        if region_of[root].is_some() {
+            continue;
+        }
+        let Some((op, _)) = node_op(g, root) else { continue };
+        if !fusible(op) {
+            continue;
+        }
+        let mut members = vec![root];
+        // Fixpoint growth: a producer may only join once every one of its
+        // consumers has (e.g. a value feeding two members).
+        loop {
+            let mut grew = false;
+            let mut mi = 0;
+            while mi < members.len() {
+                let m = members[mi];
+                mi += 1;
+                let (_, args) = node_op(g, m).expect("members are ops");
+                for &a in args.iter() {
+                    if members.contains(&a) || region_of[a].is_some() || is_output[a] {
+                        continue;
+                    }
+                    let Some((aop, _)) = node_op(g, a) else { continue };
+                    if !fusible(aop)
+                        || !consumers[a].iter().all(|c| members.contains(c))
+                        || !broadcasts_onto(a, root)
+                    {
+                        continue;
+                    }
+                    members.push(a);
+                    grew = true;
+                }
+            }
+            if !grew {
+                break;
+            }
+        }
+        if members.len() >= 2 {
+            let rid = regions.len();
+            for &m in &members {
+                region_of[m] = Some(rid);
+            }
+            members.sort_unstable();
+            regions.push(members);
+        }
+    }
+    // Emit steps in node order; a region materializes at its root.
+    let mut steps = Vec::new();
+    for (id, node) in g.nodes.iter().enumerate() {
+        if !matches!(node.kind, NodeKind::Op(..)) {
+            continue;
+        }
+        match region_of[id] {
+            None => steps.push(Step::Op(id)),
+            Some(rid) => {
+                let members = &regions[rid];
+                if *members.last().unwrap() != id {
+                    continue; // interior member: evaluated inside the region
+                }
+                let mut reg_index: HashMap<NodeId, usize> = HashMap::new();
+                let mut inputs: Vec<NodeId> = Vec::new();
+                let mut ops = Vec::with_capacity(members.len());
+                for (k, &m) in members.iter().enumerate() {
+                    reg_index.insert(m, k);
+                    let (op, args) = node_op(g, m).expect("members are ops");
+                    let mut resolve = |a: NodeId| -> FusedArg {
+                        if let Some(&r) = reg_index.get(&a) {
+                            return FusedArg::Reg(r);
+                        }
+                        match inputs.iter().position(|&x| x == a) {
+                            Some(p) => FusedArg::Input(p),
+                            None => {
+                                inputs.push(a);
+                                FusedArg::Input(inputs.len() - 1)
+                            }
+                        }
+                    };
+                    let a = resolve(args[0]);
+                    let b = if args.len() > 1 { resolve(args[1]) } else { a };
+                    ops.push(FusedOp { op: op.clone(), a, b });
+                }
+                let out_shape = g.nodes[id].shape.clone();
+                let dense: Vec<bool> =
+                    inputs.iter().map(|&a| g.nodes[a].shape == out_shape).collect();
+                let strides: Vec<Vec<usize>> = inputs
+                    .iter()
+                    .zip(dense.iter())
+                    .map(|(&a, &d)| {
+                        if d {
+                            Vec::new()
+                        } else {
+                            tensor::broadcast_strides_for(&g.nodes[a].shape, out_shape.len())
+                        }
+                    })
+                    .collect();
+                steps.push(Step::Fused(FusedRegion {
+                    root: id,
+                    out_shape,
+                    inputs,
+                    ops,
+                    dense,
+                    strides,
+                    scratch: RefCell::new(FuseScratch::default()),
+                }));
+            }
+        }
+    }
+    steps
+}
+
 /// A per-graph execution plan: everything derivable from the graph alone,
 /// computed once when the backend compiles it instead of on every call.
 pub struct ExecPlan {
@@ -73,9 +498,10 @@ pub struct ExecPlan {
     /// `ConstTensor` nodes); tensors share storage via `Rc`, so cloning
     /// the template per call is pointer-cheap.
     template: Vec<Option<Tensor>>,
-    /// Op node ids in execution order (graph nodes are topologically
-    /// ordered by construction; placeholders and constants are skipped).
-    steps: Vec<NodeId>,
+    /// Execution steps in order: plain op evaluations and fused
+    /// elementwise regions (graph nodes are topologically ordered by
+    /// construction; placeholders and constants are skipped).
+    steps: Vec<Step>,
     /// Parallel to `steps`: env slots whose value dies after that step
     /// (not used by any later step and not a graph output). Freed eagerly
     /// so peak memory is bounded by live values, not graph size.
@@ -85,24 +511,55 @@ pub struct ExecPlan {
 }
 
 impl ExecPlan {
+    /// Plan with elementwise fusion on (the `--opt-level 2` executor).
     pub fn new(graph: Rc<Graph>) -> ExecPlan {
+        ExecPlan::with_fusion(graph, true)
+    }
+
+    /// Plan without fusion: one step per op node, exactly the pre-fusion
+    /// executor (`--opt-level 0|1`).
+    pub fn unfused(graph: Rc<Graph>) -> ExecPlan {
+        ExecPlan::with_fusion(graph, false)
+    }
+
+    pub fn with_fusion(graph: Rc<Graph>, fuse: bool) -> ExecPlan {
         let mut template: Vec<Option<Tensor>> = vec![None; graph.nodes.len()];
-        let mut steps = Vec::new();
         for (id, node) in graph.nodes.iter().enumerate() {
             match &node.kind {
-                NodeKind::Placeholder { .. } => {}
                 NodeKind::ConstScalar(v) => template[id] = Some(Tensor::scalar(*v as f32)),
                 NodeKind::ConstTensor(t) => template[id] = Some(t.clone()),
-                NodeKind::Op(..) => steps.push(id),
+                _ => {}
             }
         }
+        let steps = if fuse {
+            fuse_steps(&graph)
+        } else {
+            graph
+                .nodes
+                .iter()
+                .enumerate()
+                .filter(|(_, n)| matches!(n.kind, NodeKind::Op(..)))
+                .map(|(id, _)| Step::Op(id))
+                .collect()
+        };
         // Liveness: a slot dies after the last step that reads it, unless
         // it is a graph output (outputs stay live through collection).
+        // Fused regions read only their external inputs; interior member
+        // slots are never written, so they never appear here.
         let mut last_use: Vec<Option<usize>> = vec![None; graph.nodes.len()];
-        for (si, &id) in steps.iter().enumerate() {
-            if let NodeKind::Op(_, args) = &graph.nodes[id].kind {
-                for &a in args {
-                    last_use[a] = Some(si);
+        for (si, step) in steps.iter().enumerate() {
+            match step {
+                Step::Op(id) => {
+                    if let NodeKind::Op(_, args) = &graph.nodes[*id].kind {
+                        for &a in args {
+                            last_use[a] = Some(si);
+                        }
+                    }
+                }
+                Step::Fused(r) => {
+                    for &a in &r.inputs {
+                        last_use[a] = Some(si);
+                    }
                 }
             }
         }
@@ -119,6 +576,22 @@ impl ExecPlan {
 
     pub fn graph(&self) -> &Rc<Graph> {
         &self.graph
+    }
+
+    /// How many fused regions the plan contains (0 when unfused).
+    pub fn fused_regions(&self) -> usize {
+        self.steps.iter().filter(|s| matches!(s, Step::Fused(_))).count()
+    }
+
+    /// Graph ops collapsed into fused regions (members, roots included).
+    pub fn fused_ops(&self) -> usize {
+        self.steps
+            .iter()
+            .map(|s| match s {
+                Step::Fused(r) => r.len(),
+                Step::Op(_) => 0,
+            })
+            .sum()
     }
 
     /// Execute the plan. Reuses the internal arena when free (the planned
@@ -144,9 +617,12 @@ impl ExecPlan {
         for (slot, input) in g.inputs.iter().zip(inputs.iter()) {
             env[*slot] = Some((**input).clone());
         }
-        for (si, &id) in self.steps.iter().enumerate() {
-            let r = eval_op(g, id, env)?;
-            env[id] = Some(r);
+        for (si, step) in self.steps.iter().enumerate() {
+            let r = match step {
+                Step::Op(id) => eval_op(g, *id, env)?,
+                Step::Fused(region) => region.run(env)?,
+            };
+            env[step.writes()] = Some(r);
             for &dead in &self.dead_after[si] {
                 env[dead] = None;
             }
@@ -182,8 +658,18 @@ impl EagerModule {
         EagerModule { plan: ExecPlan::new(graph), backend_name }
     }
 
+    /// Explicit fusion control — backends thread `OptLevel::fuses()` here
+    /// so `--opt-level 0|1` really runs the pre-fusion executor.
+    pub fn with_fusion(graph: Rc<Graph>, backend_name: String, fuse: bool) -> EagerModule {
+        EagerModule { plan: ExecPlan::with_fusion(graph, fuse), backend_name }
+    }
+
     pub fn from_plan(plan: ExecPlan, backend_name: String) -> EagerModule {
         EagerModule { plan, backend_name }
+    }
+
+    pub fn plan(&self) -> &ExecPlan {
+        &self.plan
     }
 }
 
@@ -339,6 +825,114 @@ mod tests {
         let out = plan.run(&[Rc::new(Tensor::new(vec![3], vec![-1.0, 0.0, 1.0]))]).unwrap();
         assert_eq!(out[0].data(), &[0.0, 0.0, 1.0]);
         assert!((out[1].data()[2] - 1.0f32.exp()).abs() < 1e-6);
+    }
+
+    fn assert_bitwise_eq(a: &[Tensor], b: &[Tensor], why: &str) {
+        assert_eq!(a.len(), b.len(), "{}", why);
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.shape(), y.shape(), "{}", why);
+            let eq = x.data().iter().zip(y.data().iter()).all(|(p, q)| p.to_bits() == q.to_bits());
+            assert!(eq, "{}: {:?} vs {:?}", why, x, y);
+        }
+    }
+
+    /// Broadcast-heavy elementwise chain: bias add ([d] onto [n,d]), const
+    /// scale, gelu, residual — the fusion candidate shape.
+    fn elementwise_chain() -> Graph {
+        let mut g = Graph::new("fuse");
+        let x = g.placeholder("x", &[3, 4]);
+        let b = g.placeholder("b", &[4]);
+        let c = g.const_scalar(0.7);
+        let t = g.add_op(OpKind::Mul, vec![x, c]).unwrap();
+        let t2 = g.add_op(OpKind::Add, vec![t, b]).unwrap();
+        let a = g.add_op(OpKind::Gelu, vec![t2]).unwrap();
+        let s = g.add_op(OpKind::Sigmoid, vec![a]).unwrap();
+        let r = g.add_op(OpKind::Add, vec![s, x]).unwrap();
+        g.set_outputs(vec![r]);
+        g
+    }
+
+    #[test]
+    fn fused_plan_is_bitwise_equal_to_unfused_and_traced() {
+        let g = Rc::new(elementwise_chain());
+        let fused = ExecPlan::new(Rc::clone(&g));
+        let unfused = ExecPlan::unfused(Rc::clone(&g));
+        assert!(fused.fused_regions() >= 1, "chain must fuse");
+        assert!(fused.fused_ops() >= 4, "{}", fused.fused_ops());
+        assert_eq!(unfused.fused_regions(), 0);
+        let mut rng = Rng::new(0xF5ED);
+        for _ in 0..4 {
+            let inputs: Vec<Rc<Tensor>> = vec![
+                Rc::new(Tensor::randn(&[3, 4], &mut rng)),
+                Rc::new(Tensor::randn(&[4], &mut rng)),
+            ];
+            let f = fused.run(&inputs).unwrap();
+            let u = unfused.run(&inputs).unwrap();
+            let t = execute(&g, &inputs).unwrap();
+            assert_bitwise_eq(&f, &u, "fused vs unfused");
+            assert_bitwise_eq(&f, &t, "fused vs traced");
+        }
+    }
+
+    #[test]
+    fn fusion_respects_outputs_and_external_consumers() {
+        // An interior value that is also a graph output (or consumed by a
+        // non-fusible op) must stay materialized.
+        let mut g = Graph::new("g");
+        let x = g.placeholder("x", &[4]);
+        let r = g.add_op(OpKind::Relu, vec![x]).unwrap();
+        let e = g.add_op(OpKind::Exp, vec![r]).unwrap();
+        g.set_outputs(vec![r, e]);
+        let plan = ExecPlan::new(Rc::new(g));
+        // r is an output: the two ops cannot collapse into one region.
+        assert_eq!(plan.fused_regions(), 0);
+        let out = plan.run(&[Rc::new(Tensor::new(vec![4], vec![-1.0, 0.0, 1.0, 2.0]))]).unwrap();
+        assert_eq!(out[0].data(), &[0.0, 0.0, 1.0, 2.0]);
+
+        // A value consumed by a reduction (non-fusible) stays out too.
+        let mut g = Graph::new("g2");
+        let x = g.placeholder("x", &[4]);
+        let r = g.add_op(OpKind::Relu, vec![x]).unwrap();
+        let t = g.add_op(OpKind::Tanh, vec![r]).unwrap();
+        let s = g.add_op(OpKind::Sum(None), vec![r]).unwrap();
+        let m = g.add_op(OpKind::Add, vec![t, s]).unwrap();
+        g.set_outputs(vec![m]);
+        let g = Rc::new(g);
+        let plan = ExecPlan::new(Rc::clone(&g));
+        let mut rng = Rng::new(3);
+        let inputs = vec![Rc::new(Tensor::randn(&[4], &mut rng))];
+        assert_bitwise_eq(&plan.run(&inputs).unwrap(), &execute(&g, &inputs).unwrap(), "mixed");
+    }
+
+    #[test]
+    fn fusion_recomputes_smaller_intermediates_exactly() {
+        // An interior value of smaller shape than the region output
+        // (bias-side chain) is recomputed per output element — bitwise
+        // identical to materializing it.
+        let mut g = Graph::new("g");
+        let x = g.placeholder("x", &[2, 3]);
+        let b = g.placeholder("b", &[3]);
+        let nb = g.add_op(OpKind::Neg, vec![b]).unwrap(); // shape [3]
+        let a = g.add_op(OpKind::Add, vec![x, nb]).unwrap(); // shape [2,3]
+        let r = g.add_op(OpKind::Relu, vec![a]).unwrap();
+        g.set_outputs(vec![r]);
+        let g = Rc::new(g);
+        let plan = ExecPlan::new(Rc::clone(&g));
+        assert_eq!(plan.fused_regions(), 1);
+        assert_eq!(plan.fused_ops(), 3);
+        let mut rng = Rng::new(9);
+        let inputs: Vec<Rc<Tensor>> =
+            vec![Rc::new(Tensor::randn(&[2, 3], &mut rng)), Rc::new(Tensor::randn(&[3], &mut rng))];
+        assert_bitwise_eq(&plan.run(&inputs).unwrap(), &execute(&g, &inputs).unwrap(), "recompute");
+    }
+
+    #[test]
+    fn matmul_heavy_graphs_gain_no_regions() {
+        let g = Rc::new(mlp(4, 8));
+        let plan = ExecPlan::new(Rc::clone(&g));
+        // mlp: matmul/softmax/sum break the chain; relu+mul(c) still fuse.
+        assert_eq!(plan.fused_regions(), 1);
+        assert_eq!(plan.fused_ops(), 2);
     }
 
     #[test]

@@ -186,11 +186,20 @@ pub struct ReplayOptions {
     /// Localize each mismatch to the first diverging op (slower: compiles
     /// one single-op subgraph per graph node).
     pub localize: bool,
+    /// Optimizer level for the replay compile (`--opt-level`). Bundles
+    /// always carry the *pre-optimizer* captured graph, so replaying the
+    /// same trace at `O0` vs `O2` bisects optimizer/fusion miscompiles.
+    pub opt_level: crate::graph::OptLevel,
 }
 
 impl Default for ReplayOptions {
     fn default() -> ReplayOptions {
-        ReplayOptions { eps: 0.0, runtime: None, localize: true }
+        ReplayOptions {
+            eps: 0.0,
+            runtime: None,
+            localize: true,
+            opt_level: crate::graph::OptLevel::default(),
+        }
     }
 }
 
@@ -338,7 +347,8 @@ pub fn localize_divergence(
         let sub_name = sub.name.clone();
         let req = CompileRequest::new(&sub_name, Rc::clone(&sub))
             .with_runtime(opts.runtime.clone())
-            .with_fallback(FallbackPolicy::Error);
+            .with_fallback(FallbackPolicy::Error)
+            .with_opt_level(opts.opt_level);
         let module = backend.compile(&req)?;
         let part_inputs: Result<Vec<Rc<Tensor>>, DepyfError> = part
             .inputs
@@ -410,7 +420,8 @@ pub fn replay_bundle(
     let req = CompileRequest::new(&bundle.name, Rc::clone(&graph))
         .with_runtime(opts.runtime.clone())
         .with_guards(bundle.guards.clone())
-        .with_fallback(FallbackPolicy::Error);
+        .with_fallback(FallbackPolicy::Error)
+        .with_opt_level(opts.opt_level);
     let module = backend.compile(&req)?;
     let oracle_module = match oracle {
         Some(o) => Some(o.compile(&req)?),
@@ -536,6 +547,44 @@ mod tests {
             .unwrap();
         assert!(diff.ok());
         assert_eq!(diff.against.as_deref(), Some("eager"));
+    }
+
+    /// Satellite: fusion/optimization live *below* the trace format.
+    /// Bundles serialize the pre-optimizer captured graph (hash intact),
+    /// and replaying them at any opt level reproduces the recorded bits.
+    #[test]
+    fn bundles_carry_the_preoptimizer_graph_and_replay_at_any_level() {
+        use crate::graph::OptLevel;
+        // A graph the optimizer definitely rewrites: const subexpression,
+        // double-neg, and a fusible elementwise chain.
+        let mut g = Graph::new("__compiled_fn_3");
+        let x = g.placeholder("x", &[2, 3]);
+        let c1 = g.const_scalar(2.0);
+        let c2 = g.const_scalar(3.0);
+        let cc = g.add_op(OpKind::Add, vec![c1, c2]).unwrap();
+        let t = g.add_op(OpKind::Mul, vec![x, cc]).unwrap();
+        let n1 = g.add_op(OpKind::Neg, vec![t]).unwrap();
+        let n2 = g.add_op(OpKind::Neg, vec![n1]).unwrap();
+        let r = g.add_op(OpKind::Gelu, vec![n2]).unwrap();
+        g.set_outputs(vec![r]);
+        let g = Rc::new(g);
+        let opt = crate::graph::optimize(&g, OptLevel::O2);
+        assert!(opt.changed(), "test graph must actually optimize");
+
+        let req = CompileRequest::new("__compiled_fn_3", Rc::clone(&g));
+        let module = RecordingBackend::new(Rc::new(EagerBackend)).compile(&req).unwrap();
+        module.call(&rand_inputs(&g, 21)).unwrap();
+        let trace = module.artifacts().into_iter().find(|a| a.kind == ArtifactKind::Trace).unwrap();
+        let bundle = TraceBundle::parse(&trace.content).unwrap();
+        // The bundle's graph is the ORIGINAL capture, not the optimized one.
+        assert_eq!(bundle.graph.content_hash(), g.content_hash());
+        assert_ne!(bundle.graph.content_hash(), opt.graph.content_hash());
+        // Replays are clean (bitwise) at every opt level.
+        for level in [OptLevel::O0, OptLevel::O1, OptLevel::O2] {
+            let opts = ReplayOptions { opt_level: level, ..Default::default() };
+            let report = replay_bundle(&bundle, &EagerBackend, None, &opts).unwrap();
+            assert!(report.ok(), "level {}: {}", level, report.render());
+        }
     }
 
     #[test]

@@ -70,11 +70,14 @@ impl Backend for ShardedBackend {
     }
 
     fn plan(&self, req: &CompileRequest) -> Result<CompilePlan, DepyfError> {
+        // Partition the *optimized* graph: plan node ids, shard cache keys
+        // and the stitcher all live in post-optimizer coordinates.
+        let opt = req.optimized();
         let target = if req.runtime.is_some() { "xla" } else { "eager" };
-        let parts = partition_by_ops(&req.graph, self.max_ops);
+        let parts = partition_by_ops(&opt.graph, self.max_ops);
         let mut partitions = Vec::with_capacity(parts.len());
         for (i, part) in parts.iter().enumerate() {
-            let sub = Rc::new(extract(&req.graph, part, &shard_name(&req.name, i))?);
+            let sub = Rc::new(extract(&opt.graph, part, &shard_name(&req.name, i))?);
             let cache_key = sub.content_hash();
             self.subgraphs.borrow_mut().insert(cache_key, sub);
             partitions.push(PartitionPlan {
@@ -88,14 +91,16 @@ impl Backend for ShardedBackend {
         }
         Ok(CompilePlan {
             backend: "sharded".into(),
-            graph: req.graph.name.clone(),
+            graph: opt.graph.name.clone(),
             cache_key: req.cache_key,
             partitions,
             batch: None,
+            opt: Some(crate::api::plan::OptSummary::from_optimized(&opt)),
         })
     }
 
     fn lower(&self, req: &CompileRequest, plan: &CompilePlan) -> Result<Rc<dyn CompiledModule>, DepyfError> {
+        let opt = req.optimized();
         let mut stitch_parts = Vec::with_capacity(plan.partitions.len());
         let mut cache_hits = 0u64;
         for p in &plan.partitions {
@@ -108,7 +113,7 @@ impl Backend for ShardedBackend {
             // extraction for externally-supplied (e.g. parsed) plans.
             let sub = match self.subgraphs.borrow().get(&p.cache_key).cloned() {
                 Some(s) => s,
-                None => Rc::new(extract(&req.graph, &part, &shard_name(&req.name, p.index))?),
+                None => Rc::new(extract(&opt.graph, &part, &shard_name(&req.name, p.index))?),
             };
             let module: Rc<dyn CompiledModule> = match p.target.as_str() {
                 "xla" => {
@@ -122,12 +127,16 @@ impl Backend for ShardedBackend {
                     cache_hits += m.cache_hit as u64;
                     Rc::new(m)
                 }
-                _ => Rc::new(EagerModule::new(Rc::clone(&sub))),
+                _ => Rc::new(EagerModule::with_fusion(
+                    Rc::clone(&sub),
+                    "eager".into(),
+                    req.opt_level.fuses(),
+                )),
             };
             stitch_parts.push(StitchPart { part, module });
         }
         Ok(Rc::new(ShardedModule {
-            stitcher: Stitcher::new(Rc::clone(&req.graph), stitch_parts),
+            stitcher: Stitcher::new(Rc::clone(&opt.graph), stitch_parts),
             plan_json: plan.to_json(),
             name: req.name.clone(),
             cache_hits,

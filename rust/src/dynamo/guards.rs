@@ -10,7 +10,7 @@
 //! guards compare pre-computed tokens/fingerprints before falling back to
 //! structural equality.
 
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
 use std::rc::Rc;
 
@@ -248,11 +248,28 @@ fn call_disc(args: &[Value]) -> Option<Arg0Rank> {
 }
 
 /// One cached compiled entry: the original guards (for dumps and for the
-/// linear-scan equivalence tests) plus their compiled form.
+/// linear-scan equivalence tests) plus their compiled form and the usage
+/// tracking ([`GuardTable::lookup`] hits + recency stamp) the LRU
+/// eviction policy reads.
 pub struct TableEntry {
     pub guards: Vec<Guard>,
     pub code: Rc<CodeObject>,
     compiled: Vec<CompiledGuard>,
+    /// Successful dispatches through this entry.
+    hits: Cell<u64>,
+    /// Logical clock of the last dispatch (insertion counts as a use, so
+    /// a brand-new entry is never the immediate eviction victim).
+    last_used: Cell<u64>,
+}
+
+impl TableEntry {
+    pub fn hit_count(&self) -> u64 {
+        self.hits.get()
+    }
+
+    pub fn last_used(&self) -> u64 {
+        self.last_used.get()
+    }
 }
 
 /// Precompiled guard dispatcher for one hooked code object.
@@ -273,6 +290,8 @@ pub struct GuardTable {
     /// heap allocation once capacity is warm (cleared after every lookup so
     /// resolved values don't outlive the call).
     scratch: RefCell<Vec<Option<Option<Value>>>>,
+    /// Monotonic logical clock stamping entry usage (LRU recency).
+    clock: Cell<u64>,
 }
 
 impl GuardTable {
@@ -334,7 +353,32 @@ impl GuardTable {
             Some(d) => self.buckets.entry(d).or_default().push(idx),
             None => self.wildcard.push(idx),
         }
-        self.entries.push(TableEntry { guards, code, compiled });
+        let stamp = self.tick();
+        self.entries.push(TableEntry {
+            guards,
+            code,
+            compiled,
+            hits: Cell::new(0),
+            last_used: Cell::new(stamp),
+        });
+    }
+
+    fn tick(&self) -> u64 {
+        let t = self.clock.get() + 1;
+        self.clock.set(t);
+        t
+    }
+
+    /// Evict the least-recently-used entry (ties broken by fewer hits,
+    /// then lowest index — fully deterministic), returning its index and
+    /// code object. This is what dynamo runs at `cache_limit` instead of
+    /// giving up and running uncompiled.
+    pub fn evict_lru(&mut self) -> Option<(usize, Rc<CodeObject>)> {
+        let victim = (0..self.entries.len()).min_by_key(|&i| {
+            (self.entries[i].last_used.get(), self.entries[i].hits.get(), i)
+        })?;
+        let code = self.remove(victim)?;
+        Some((victim, code))
     }
 
     /// Remove the entry at `idx` (cache eviction), returning its code
@@ -440,10 +484,16 @@ impl GuardTable {
         result
     }
 
-    /// Production lookup against concrete call state.
+    /// Production lookup against concrete call state. Successful
+    /// dispatches bump the entry's hit counter and recency stamp (the LRU
+    /// signal); the reference [`GuardTable::lookup_with`] stays
+    /// side-effect-free for the equivalence tests.
     pub fn lookup(&self, args: &[Value], globals: &HashMap<String, Value>) -> Option<&TableEntry> {
         let idx = self.lookup_with(args, &mut |o| o.resolve(args, globals))?;
-        Some(&self.entries[idx])
+        let entry = &self.entries[idx];
+        entry.hits.set(entry.hits.get() + 1);
+        entry.last_used.set(self.tick());
+        Some(entry)
     }
 }
 
@@ -668,6 +718,66 @@ mod tests {
         t.insert(vec![Guard::TensorShape { origin: Origin::Arg(0), shape: vec![2] }], dummy_code("b5"));
         check_equiv(&t, "after post-removal insert");
         assert_eq!(t.lookup(&args, &globals).map(|e| e.code.name.as_str()), Some("b2"));
+    }
+
+    /// Satellite: LRU eviction picks the least-recently-dispatched entry
+    /// (insert counts as a use; ties fall to hit count then index), and
+    /// dispatch stays exactly linear-scan-equivalent afterwards.
+    #[test]
+    fn lru_eviction_tracks_real_usage() {
+        let globals: HashMap<String, Value> = HashMap::new();
+        let mut t = GuardTable::new();
+        t.insert(vec![Guard::ConstEq { origin: Origin::Arg(0), value: Value::Int(0) }], dummy_code("e0"));
+        t.insert(vec![Guard::ConstEq { origin: Origin::Arg(0), value: Value::Int(1) }], dummy_code("e1"));
+        t.insert(vec![Guard::ConstEq { origin: Origin::Arg(0), value: Value::Int(2) }], dummy_code("e2"));
+        // Touch e0 and e2; e1 becomes the LRU victim.
+        assert_eq!(t.lookup(&[Value::Int(0)], &globals).map(|e| e.code.name.as_str()), Some("e0"));
+        assert_eq!(t.lookup(&[Value::Int(2)], &globals).map(|e| e.code.name.as_str()), Some("e2"));
+        assert_eq!(t.entries()[0].hit_count(), 1);
+        assert_eq!(t.entries()[1].hit_count(), 0);
+        let (idx, code) = t.evict_lru().expect("non-empty");
+        assert_eq!((idx, code.name.as_str()), (1, "e1"));
+        assert_eq!(t.len(), 2);
+        // Surviving entries still dispatch in linear-scan order.
+        for (arg, want) in [(0i64, Some("e0")), (1, None), (2, Some("e2"))] {
+            assert_eq!(
+                t.lookup(&[Value::Int(arg)], &globals).map(|e| e.code.name.as_str()),
+                want,
+                "after eviction, arg {}",
+                arg
+            );
+            let scan = linear_scan(&t, &[Value::Int(arg)], &globals);
+            assert_eq!(scan.map(|i| t.entries()[i].code.name.as_str()), want);
+        }
+        // A fresh insert is never the immediate next victim: with e0/e2
+        // untouched since their stamps above, e0 (older stamp) goes first.
+        t.insert(vec![Guard::ConstEq { origin: Origin::Arg(0), value: Value::Int(3) }], dummy_code("e3"));
+        let (_, code) = t.evict_lru().unwrap();
+        assert_eq!(code.name, "e0");
+        // Drain to empty; eviction on an empty table is None.
+        assert!(t.evict_lru().is_some() && t.evict_lru().is_some());
+        assert!(t.evict_lru().is_none());
+    }
+
+    /// Eviction keeps bucket/wildcard interleavings linear-scan-faithful
+    /// even when the victims are interior bucketed entries.
+    #[test]
+    fn lru_eviction_preserves_dispatch_order_across_kinds() {
+        let globals: HashMap<String, Value> = HashMap::new();
+        let mut t = GuardTable::new();
+        t.insert(vec![Guard::TensorShape { origin: Origin::Arg(0), shape: vec![2] }], dummy_code("b0"));
+        t.insert(vec![Guard::Len { origin: Origin::Arg(1), len: 0 }], dummy_code("w1"));
+        t.insert(vec![Guard::TensorShape { origin: Origin::Arg(0), shape: vec![2] }], dummy_code("b2"));
+        // Use b0 repeatedly; w1 and b2 stay cold. Evictions go w1 then b2.
+        let args2 = vec![Value::tensor(Tensor::ones(&[2])), Value::list(vec![Value::Int(1)])];
+        for _ in 0..3 {
+            assert_eq!(t.lookup(&args2, &globals).map(|e| e.code.name.as_str()), Some("b0"));
+        }
+        let (_, c1) = t.evict_lru().unwrap();
+        assert_eq!(c1.name, "w1");
+        let (_, c2) = t.evict_lru().unwrap();
+        assert_eq!(c2.name, "b2");
+        assert_eq!(t.lookup(&args2, &globals).map(|e| e.code.name.as_str()), Some("b0"));
     }
 
     #[test]

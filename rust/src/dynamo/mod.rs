@@ -25,6 +25,7 @@ use crate::api::{
     compile_with_policy, module_from_fn, Backend, CompileRequest, DepyfError, EagerBackend, FallbackPolicy,
 };
 use crate::bytecode::CodeObject;
+use crate::graph::opt::{OptLevel, Optimized};
 use crate::graph::Graph;
 use crate::metrics::Metrics;
 use crate::runtime::Runtime;
@@ -59,12 +60,23 @@ pub struct DynamoConfig {
     /// What happens when the backend fails on a captured graph. The degrade
     /// (or error) is always recorded in the frontend log — never silent.
     pub fallback: FallbackPolicy,
-    /// Max cache entries per code object before giving up (recompile limit).
+    /// Max cache entries per code object. Reaching it no longer means
+    /// "run uncompiled": the least-recently-used guard entry is evicted
+    /// (per-entry hit counter + recency stamp, see
+    /// [`GuardTable::evict_lru`]) and the new specialization compiles.
+    /// Sustained churn is still bounded: past
+    /// `cache_limit * THRASH_EVICTIONS_FACTOR` evictions the code object
+    /// is marked skip (thrash backstop — an unbounded specialization
+    /// cycle would otherwise recompile on every call).
     pub cache_limit: usize,
     pub max_trace_instrs: usize,
     pub max_graph_nodes: usize,
     /// Frontend log verbosity (default [`Verbosity::Info`]).
     pub verbosity: Verbosity,
+    /// Graph-optimizer level applied at `Backend::plan` time
+    /// (`--opt-level`, default 2). `StepGraphs` tracing bypasses the
+    /// optimizer — the debugger steps the captured graph verbatim.
+    pub opt_level: OptLevel,
     /// Present in `TraceMode::StepGraphs` sessions: forces eager execution
     /// with per-node callbacks.
     pub tracer: Option<Rc<dyn GraphTracer>>,
@@ -79,10 +91,19 @@ impl Default for DynamoConfig {
             max_trace_instrs: 20_000,
             max_graph_nodes: 2_000,
             verbosity: Verbosity::Info,
+            opt_level: OptLevel::default(),
             tracer: None,
         }
     }
 }
+
+/// Per-`cache_limit` multiplier before eviction churn is declared
+/// thrashing: a code object that has evicted `cache_limit *
+/// THRASH_EVICTIONS_FACTOR` entries is cycling through more
+/// specializations than the cache can hold (the classic LRU pathology —
+/// every call would recompile forever), so it is marked skip and runs
+/// uncompiled from then on, like a capture failure.
+const THRASH_EVICTIONS_FACTOR: usize = 8;
 
 #[derive(Default)]
 struct CodeCache {
@@ -90,6 +111,8 @@ struct CodeCache {
     table: GuardTable,
     skip: bool,
     skip_reason: Option<String>,
+    /// Total LRU evictions this code object has caused (thrash detector).
+    evictions: usize,
 }
 
 #[derive(Default)]
@@ -107,6 +130,10 @@ struct State {
     /// Compiled-graph callables in compile order — the session reads
     /// their modules' `artifacts()`/`stats()` at `finish()`.
     compiled: Vec<Rc<crate::graph::CompiledGraphFn>>,
+    /// Optimizer results per compiled graph (name → memoized run) — the
+    /// session dumps `__optimized_*.{txt,json}` and per-module pass stats
+    /// from these at `finish()`.
+    optimizations: Vec<(String, Rc<Optimized>)>,
     /// Cached read-path snapshots, invalidated on write. Read accessors
     /// hand out `Rc` clones of these instead of deep-copying the vectors.
     log_snap: Option<Rc<[String]>>,
@@ -168,6 +195,12 @@ impl Dynamo {
         self.state.borrow().compiled.clone()
     }
 
+    /// Optimizer runs per compiled graph, in compile order (the memoized
+    /// [`CompileRequest::optimized`] results the backends planned with).
+    pub fn optimizations(&self) -> Vec<(String, Rc<Optimized>)> {
+        self.state.borrow().optimizations.clone()
+    }
+
     fn note(&self, msg: String) {
         if self.config.verbosity >= Verbosity::Info {
             let mut st = self.state.borrow_mut();
@@ -202,8 +235,10 @@ impl Dynamo {
             .with_runtime(self.runtime.clone())
             .with_guards(guards.iter().map(|g| g.describe()).collect())
             .with_verbosity(self.config.verbosity)
-            .with_fallback(self.config.fallback);
+            .with_fallback(self.config.fallback)
+            .with_opt_level(self.config.opt_level);
         let backend = self.config.backend.as_ref();
+        let mut optimizer_engaged = false;
         let f = match compile_with_policy(backend, &req) {
             Ok(pc) => {
                 if let Some(reason) = &pc.fallback_reason {
@@ -215,6 +250,7 @@ impl Dynamo {
                         reason
                     ));
                 } else {
+                    optimizer_engaged = true;
                     // Composite-backend decisions are observable in the
                     // frontend log, not just in the plan artifact.
                     let stats = pc.f.module.stats();
@@ -249,6 +285,26 @@ impl Dynamo {
                 crate::graph::CompiledGraphFn::from_module(name, graph, module)
             }
         };
+        // Record the optimizer run (memoized on the request — the backend
+        // consumed it during plan/lower) for finish()-time `__optimized_*`
+        // dumps, and surface real rewrites in the log — but ONLY when the
+        // backend actually shipped the optimized graph. The eager fallback
+        // and the error module execute the captured graph verbatim, so
+        // recording pass deltas for them would misattribute what ran.
+        if optimizer_engaged {
+            let opt = req.optimized();
+            if opt.changed() {
+                self.note(format!(
+                    "  optimizer: {} {} -> {} nodes at -O{} ({} rewrites)",
+                    name,
+                    req.graph.nodes.len(),
+                    opt.graph.nodes.len(),
+                    opt.level,
+                    opt.total_rewrites()
+                ));
+            }
+            self.state.borrow_mut().optimizations.push((name.to_string(), opt));
+        }
         self.install_compiled(f)
     }
 
@@ -283,10 +339,10 @@ impl EvalHook for Dynamo {
                     match cc.table.lookup(args, &g) {
                         Some(entry) => Some(Rc::clone(&entry.code)),
                         None => {
+                            // Miss: recompile. A full table evicts its LRU
+                            // entry at insert time instead of running the
+                            // call uncompiled.
                             Metrics::bump(&self.metrics.guard_failures);
-                            if cc.table.len() >= self.config.cache_limit {
-                                return None; // too many recompiles; run uncompiled
-                            }
                             None
                         }
                     }
@@ -412,7 +468,7 @@ impl EvalHook for Dynamo {
             }
 
             // Book-keeping for dumps and the no-rehook set.
-            {
+            let evicted = {
                 let mut st = self.state.borrow_mut();
                 st.graphs_snap = None;
                 st.codes_snap = None;
@@ -425,7 +481,46 @@ impl EvalHook for Dynamo {
                     st.generated_codes.push((rname.clone(), Rc::clone(rcode)));
                 }
                 let guards = std::mem::take(&mut cap.guards);
-                st.cache.entry(ptr).or_default().table.insert(guards, Rc::clone(&transformed.code));
+                let cc = st.cache.entry(ptr).or_default();
+                // LRU eviction at the cache limit: drop the entry with the
+                // stalest dispatch stamp so the fresh specialization always
+                // compiles (the old behaviour ran uncompiled forever). A
+                // code object that keeps churning — more than
+                // cache_limit * THRASH_EVICTIONS_FACTOR evictions — is
+                // cycling through unbounded specializations; further calls
+                // run uncompiled instead of recompiling every time.
+                let at_capacity =
+                    self.config.cache_limit > 0 && cc.table.len() >= self.config.cache_limit;
+                let evicted = if at_capacity { cc.table.evict_lru() } else { None };
+                if evicted.is_some() {
+                    cc.evictions += 1;
+                    Metrics::bump(&self.metrics.evictions);
+                }
+                let thrashing = self.config.cache_limit > 0
+                    && cc.evictions >= self.config.cache_limit * THRASH_EVICTIONS_FACTOR;
+                if thrashing {
+                    cc.skip = true;
+                    cc.skip_reason = Some(format!(
+                        "guard-cache thrashing: {} evictions at cache_limit {}",
+                        cc.evictions, self.config.cache_limit
+                    ));
+                }
+                cc.table.insert(guards, Rc::clone(&transformed.code));
+                (evicted, thrashing)
+            };
+            let (evicted, thrashing) = evicted;
+            if let Some((idx, code)) = evicted {
+                self.note(format!(
+                    "  cache: evicted LRU entry {} ({}) of {} at cache_limit {}",
+                    idx, code.name, func.name, self.config.cache_limit
+                ));
+            }
+            if thrashing {
+                Metrics::bump(&self.metrics.fallbacks);
+                self.note(format!(
+                    "  cache: {} is thrashing ({}x cache_limit evictions); future calls run uncompiled",
+                    func.name, THRASH_EVICTIONS_FACTOR
+                ));
             }
             Some(transformed.code)
         });
@@ -700,6 +795,10 @@ mod tests {
             "{:?}",
             dynamo.log()
         );
+        // The fallback executor ran the captured graph verbatim — no
+        // optimizer run may be recorded (or dumped) for it.
+        assert!(dynamo.optimizations().is_empty(), "{:?}", dynamo.log());
+        assert!(!dynamo.log().iter().any(|l| l.contains("optimizer:")), "{:?}", dynamo.log());
     }
 
     #[test]

@@ -2,9 +2,11 @@
 //! Dynamo extracts. Nodes are created by dynamo's symbolic evaluation;
 //! shapes are inferred eagerly so capture fails fast on invalid programs.
 
+pub mod opt;
 mod printer;
 pub mod serde;
 
+pub use opt::{optimize, OptLevel, Optimized, PassStat};
 pub use printer::{print_graph, print_graph_with_lines};
 pub use serde::{parse_graph, render_graph, GRAPH_SCHEMA_VERSION};
 
@@ -208,6 +210,48 @@ impl Graph {
         h.num(self.outputs.len() as u64);
         for o in &self.outputs {
             h.num(*o as u64);
+        }
+        h.finish()
+    }
+
+    /// Structural hash of **one** node: kind tag, op kind with static
+    /// parameters, const payload bits, argument wiring and output shape.
+    /// This is the CSE key in [`opt`]: two op/const nodes hashing equal
+    /// (and comparing structurally equal) compute identical values in any
+    /// environment. Placeholders hash their own id, so distinct inputs
+    /// never collide — each is a separate calling-convention slot.
+    pub fn node_structural_hash(&self, id: NodeId) -> u64 {
+        let mut h = Fnv::new();
+        h.bytes(b"depyf-node-v1");
+        let node = &self.nodes[id];
+        match &node.kind {
+            NodeKind::Placeholder { .. } => {
+                h.num(0);
+                h.num(id as u64);
+            }
+            NodeKind::ConstScalar(v) => {
+                h.num(1);
+                h.num(v.to_bits());
+            }
+            NodeKind::ConstTensor(t) => {
+                h.num(2);
+                h.num(t.rank() as u64);
+                for v in t.data() {
+                    h.num(v.to_bits() as u64);
+                }
+            }
+            NodeKind::Op(op, args) => {
+                h.num(3);
+                hash_op(&mut h, op);
+                h.num(args.len() as u64);
+                for a in args {
+                    h.num(*a as u64);
+                }
+            }
+        }
+        h.num(node.shape.len() as u64);
+        for d in &node.shape {
+            h.num(*d as u64);
         }
         h.finish()
     }

@@ -1,0 +1,890 @@
+//! `graph::opt` — the deterministic graph-optimizer pass pipeline that
+//! runs between capture and lowering (at `Backend::plan` time, for every
+//! backend).
+//!
+//! True to the paper, the transformation itself is transparent: the
+//! optimizer returns pass-by-pass [`PassStat`]s, sessions dump the
+//! optimized graph as `__optimized_*.{txt,json}` artifacts next to the
+//! original, and compile plans record the pass list and per-pass node
+//! deltas (`__plan_*.json`).
+//!
+//! ## Passes, in pipeline order
+//!
+//! 1. **`const_fold`** — op nodes whose inputs are all constants are
+//!    evaluated with the eager executor's own
+//!    [`eval_op`](crate::backend::eager::eval_op) (so folded values are
+//!    bitwise what execution would have produced) and replaced by
+//!    `ConstTensor` nodes. Outputs larger than [`FOLD_NUMEL_LIMIT`]
+//!    elements are left unfolded so dumps and trace artifacts don't bloat.
+//! 2. **`algebraic`** (`-O2` only) — identity rewrites: `x*1`, `1*x`,
+//!    `x/1`, `x-0`, `x+0`, `x*0`, double-negation, `transpose∘transpose`,
+//!    `reshape∘reshape` (collapsed to one reshape), identity permutes and
+//!    same-shape reshapes.
+//! 3. **`cse`** — common-subexpression elimination keyed on per-node
+//!    structural hashes ([`Graph::node_structural_hash`]); structurally
+//!    identical op/const nodes collapse to the first occurrence
+//!    (placeholders are never merged — they are the calling convention).
+//! 4. **`dce`** — dead-code elimination: op/const nodes unreachable from
+//!    the outputs are dropped. Placeholders are always kept, dead or not,
+//!    so the optimized graph accepts exactly the original input list.
+//!
+//! ## The bit-exactness contract
+//!
+//! Optimization must **never change results**: the conformance harness
+//! replays every corpus graph at `--opt-level 0` vs `2` and demands
+//! *bitwise* equality on the eager/sharded/batched backends. Every rewrite
+//! above is therefore exact on IEEE f32 semantics, and the two classically
+//! "value-safe but bit-unsafe" rewrites are gated:
+//!
+//! * `x + 0.0` is **not** an identity for `x = -0.0` (`-0.0 + 0.0 = +0.0`
+//!   flips the sign bit). It fires only when the zero is all `-0.0` bits
+//!   (`x + (-0.0) = x` holds for every f32) or when a small value
+//!   analysis proves `x` never carries `-0.0` (outputs of
+//!   `exp`/`sigmoid`/`softmax`/`abs`, sign-checked constants).
+//! * `x * 0.0` is only `+0.0` when `x` is finite, non-NaN and
+//!   non-negative (`-1.0 * 0.0 = -0.0`, `inf * 0.0 = NaN`,
+//!   `NaN * 0.0 = NaN`). No op output can be proven NaN-free without
+//!   input range analysis — even `sigmoid` propagates NaN — so this fires
+//!   only for element-checked constants.
+//!
+//! `x - 0.0` and `x * 1.0` (and friends) are unconditionally bit-exact
+//! and always fire. (Like every production compiler, rewrites that drop
+//! an arithmetic op assume quiet-NaN payloads propagate through f32
+//! `+`/`-`/`*` unchanged — true on the x86-64/aarch64 targets this crate
+//! runs and tests on.)
+//!
+//! ## Where fusion lives
+//!
+//! Elementwise-chain **fusion is not a graph rewrite**: there is no
+//! `OpKind::FusedElementwise` variant. The optimized graph contains only
+//! the ordinary op kinds, so [`crate::graph::serde`] and
+//! [`Graph::content_hash`] are untouched and trace bundles keep
+//! round-tripping. Fusion happens *below* the IR, when the eager backend
+//! builds its [`ExecPlan`](crate::backend::eager::ExecPlan): runs of
+//! broadcasting-compatible elementwise ops become fused regions executed
+//! as a single stride-walked loop (no intermediate tensor allocations).
+//! The XLA backend lowers the unfused-but-folded graph and lets PJRT fuse.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::rc::Rc;
+
+use crate::tensor::Tensor;
+
+use super::{Graph, NodeId, NodeKind, OpKind};
+
+/// Optimization level (the CLI's `--opt-level 0|1|2`, default 2).
+///
+/// * `O0` — capture verbatim: no passes, no elementwise fusion.
+/// * `O1` — cleanup only: `const_fold` + `cse` + `dce`.
+/// * `O2` — `O1` plus `algebraic` rewrites, and the eager `ExecPlan`
+///   fuses elementwise chains.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord)]
+pub enum OptLevel {
+    O0,
+    O1,
+    #[default]
+    O2,
+}
+
+impl OptLevel {
+    /// Parse a CLI flag value (`"0"`, `"1"`, `"2"`).
+    pub fn parse(s: &str) -> Option<OptLevel> {
+        match s {
+            "0" => Some(OptLevel::O0),
+            "1" => Some(OptLevel::O1),
+            "2" => Some(OptLevel::O2),
+            _ => None,
+        }
+    }
+
+    pub fn as_u8(self) -> u8 {
+        match self {
+            OptLevel::O0 => 0,
+            OptLevel::O1 => 1,
+            OptLevel::O2 => 2,
+        }
+    }
+
+    pub fn from_u8(v: u8) -> Option<OptLevel> {
+        match v {
+            0 => Some(OptLevel::O0),
+            1 => Some(OptLevel::O1),
+            2 => Some(OptLevel::O2),
+            _ => None,
+        }
+    }
+
+    /// Whether the eager `ExecPlan` fuses elementwise chains at this level.
+    pub fn fuses(self) -> bool {
+        self >= OptLevel::O2
+    }
+}
+
+impl fmt::Display for OptLevel {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.as_u8())
+    }
+}
+
+/// What one pass did: node counts around it plus how many rewrites fired
+/// (folds, simplifications, merges, removals).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PassStat {
+    pub pass: &'static str,
+    pub nodes_before: usize,
+    pub nodes_after: usize,
+    pub rewrites: usize,
+}
+
+/// The optimizer's output: the (possibly shared, if nothing changed)
+/// optimized graph plus per-pass statistics.
+#[derive(Clone, Debug)]
+pub struct Optimized {
+    pub graph: Rc<Graph>,
+    pub level: OptLevel,
+    pub passes: Vec<PassStat>,
+}
+
+impl Optimized {
+    /// True when any pass performed at least one rewrite.
+    pub fn changed(&self) -> bool {
+        self.passes.iter().any(|p| p.rewrites > 0)
+    }
+
+    /// Total rewrites across the pipeline.
+    pub fn total_rewrites(&self) -> usize {
+        self.passes.iter().map(|p| p.rewrites).sum()
+    }
+}
+
+/// Folding cap: an op whose output has more elements than this stays
+/// unfolded (a folded const is embedded in dumps, trace bundles and the
+/// content hash — unbounded materialization would bloat all three).
+pub const FOLD_NUMEL_LIMIT: usize = 4096;
+
+/// Run the pass pipeline at `level`. `O0` returns the input graph
+/// unchanged (shared `Rc`); so does any level whose passes all fire zero
+/// rewrites, so `Rc::ptr_eq` distinguishes "optimized" from "verbatim".
+pub fn optimize(graph: &Rc<Graph>, level: OptLevel) -> Optimized {
+    if level == OptLevel::O0 {
+        return Optimized { graph: Rc::clone(graph), level, passes: Vec::new() };
+    }
+    type Pass = fn(&Graph) -> (Graph, usize);
+    let pipeline: &[(&'static str, Pass)] = match level {
+        OptLevel::O0 => unreachable!(),
+        OptLevel::O1 => &[("const_fold", const_fold), ("cse", cse), ("dce", dce)],
+        OptLevel::O2 => {
+            &[("const_fold", const_fold), ("algebraic", algebraic), ("cse", cse), ("dce", dce)]
+        }
+    };
+    let mut g: Graph = (**graph).clone();
+    let mut passes = Vec::with_capacity(pipeline.len());
+    for &(name, pass) in pipeline {
+        let nodes_before = g.nodes.len();
+        let (next, rewrites) = pass(&g);
+        passes.push(PassStat { pass: name, nodes_before, nodes_after: next.nodes.len(), rewrites });
+        g = next;
+    }
+    let changed = passes.iter().any(|p| p.rewrites > 0);
+    let graph = if changed { Rc::new(g) } else { Rc::clone(graph) };
+    Optimized { graph, level, passes }
+}
+
+/// Render the optimizer report + optimized graph as a standalone JSON
+/// document (the `__optimized_*.json` session artifact). The embedded
+/// graph is the lossless [`super::serde`] encoding, so tooling can parse
+/// it back bit-exactly and diff it against the original trace graph.
+pub fn render_optimized_json(name: &str, opt: &Optimized) -> String {
+    let mut out = String::from("{\n");
+    out.push_str(&format!("  \"name\": \"{}\",\n", crate::api::json::escape(name)));
+    out.push_str(&format!("  \"level\": {},\n", opt.level.as_u8()));
+    out.push_str("  \"passes\": [\n");
+    for (i, p) in opt.passes.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"pass\": \"{}\", \"nodes_before\": {}, \"nodes_after\": {}, \"rewrites\": {}}}{}\n",
+            p.pass,
+            p.nodes_before,
+            p.nodes_after,
+            p.rewrites,
+            if i + 1 < opt.passes.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ],\n");
+    out.push_str(&format!("  \"graph\": {}\n", super::serde::render_graph(&opt.graph)));
+    out.push_str("}\n");
+    out
+}
+
+// ---- rebuild plumbing ----
+
+/// Copy a non-op node verbatim into `out`, returning its new id.
+fn copy_leaf(out: &mut Graph, node: &super::Node) -> NodeId {
+    match &node.kind {
+        NodeKind::Placeholder { name } => out.placeholder(name, &node.shape),
+        NodeKind::ConstScalar(v) => out.const_scalar(*v),
+        NodeKind::ConstTensor(t) => out.const_tensor(t.clone()),
+        NodeKind::Op(..) => unreachable!("copy_leaf on an op node"),
+    }
+}
+
+/// Structural equality of two nodes in the same graph (consts by bit
+/// pattern, ops by kind + args). Placeholders are never equal — each is a
+/// distinct calling-convention slot.
+fn nodes_equal(g: &Graph, a: NodeId, b: NodeId) -> bool {
+    if g.nodes[a].shape != g.nodes[b].shape {
+        return false;
+    }
+    match (&g.nodes[a].kind, &g.nodes[b].kind) {
+        (NodeKind::ConstScalar(x), NodeKind::ConstScalar(y)) => x.to_bits() == y.to_bits(),
+        (NodeKind::ConstTensor(x), NodeKind::ConstTensor(y)) => {
+            x.shape() == y.shape()
+                && x.data().iter().zip(y.data().iter()).all(|(p, q)| p.to_bits() == q.to_bits())
+        }
+        (NodeKind::Op(o1, a1), NodeKind::Op(o2, a2)) => o1 == o2 && a1 == a2,
+        _ => false,
+    }
+}
+
+// ---- pass: const_fold ----
+
+/// Evaluate `op(margs)` against materialized constants using the eager
+/// executor's own per-op evaluator: the node is appended to `out`,
+/// evaluated, and popped again. Folded bits are exactly the bits
+/// execution would have produced.
+fn fold_eval(out: &mut Graph, op: &OpKind, margs: &[NodeId], env: &[Option<Tensor>]) -> Option<Tensor> {
+    let id = out.add_op(op.clone(), margs.to_vec()).ok()?;
+    let result = crate::backend::eager::eval_op(out, id, env).ok();
+    out.nodes.pop();
+    result
+}
+
+fn const_fold(g: &Graph) -> (Graph, usize) {
+    let mut out = Graph::new(&g.name);
+    let mut map = vec![0usize; g.nodes.len()];
+    // Materialized constant per *new* node (None for placeholders/ops) —
+    // exactly the env template the eager ExecPlan would build.
+    let mut env: Vec<Option<Tensor>> = Vec::with_capacity(g.nodes.len());
+    let mut rewrites = 0usize;
+    for (id, node) in g.nodes.iter().enumerate() {
+        map[id] = match &node.kind {
+            NodeKind::Op(op, args) => {
+                let margs: Vec<NodeId> = args.iter().map(|&a| map[a]).collect();
+                let numel: usize = node.shape.iter().product();
+                let foldable = numel <= FOLD_NUMEL_LIMIT && margs.iter().all(|&a| env[a].is_some());
+                match foldable.then(|| fold_eval(&mut out, op, &margs, &env)).flatten() {
+                    Some(value) => {
+                        rewrites += 1;
+                        env.push(Some(value.clone()));
+                        out.const_tensor(value)
+                    }
+                    None => {
+                        env.push(None);
+                        out.add_op(op.clone(), margs).expect("shapes were already inferred")
+                    }
+                }
+            }
+            other => {
+                env.push(match other {
+                    NodeKind::ConstScalar(v) => Some(Tensor::scalar(*v as f32)),
+                    NodeKind::ConstTensor(t) => Some(t.clone()),
+                    _ => None,
+                });
+                copy_leaf(&mut out, node)
+            }
+        };
+    }
+    out.set_outputs(g.outputs.iter().map(|&o| map[o]).collect());
+    (out, rewrites)
+}
+
+// ---- pass: algebraic ----
+
+const ONE_BITS: u32 = 0x3f80_0000; // 1.0f32
+const POS_ZERO_BITS: u32 = 0x0000_0000;
+const NEG_ZERO_BITS: u32 = 0x8000_0000;
+
+/// `Some(bits)` when the node is a constant whose every element shares one
+/// bit pattern (empty tensors yield `None`).
+fn const_fill_bits(g: &Graph, id: NodeId) -> Option<u32> {
+    match &g.nodes[id].kind {
+        NodeKind::ConstScalar(v) => Some((*v as f32).to_bits()),
+        NodeKind::ConstTensor(t) => {
+            let first = t.data().first()?.to_bits();
+            t.data().iter().all(|x| x.to_bits() == first).then_some(first)
+        }
+        _ => None,
+    }
+}
+
+/// Conservative: true when the node's value provably never contains a
+/// `-0.0` element (so `x + 0.0 → x` is bit-exact).
+fn never_negzero(g: &Graph, id: NodeId) -> bool {
+    match &g.nodes[id].kind {
+        NodeKind::Op(OpKind::Exp | OpKind::Sigmoid | OpKind::Softmax | OpKind::Abs, _) => true,
+        NodeKind::ConstScalar(v) => (*v as f32).to_bits() != NEG_ZERO_BITS,
+        NodeKind::ConstTensor(t) => t.data().iter().all(|x| x.to_bits() != NEG_ZERO_BITS),
+        _ => false,
+    }
+}
+
+/// Conservative: true when every element is provably finite, non-NaN and
+/// non-negative with a positive sign bit (so `x * 0.0 → +0.0` is
+/// bit-exact; `-1*0 = -0`, `inf*0 = NaN`, `NaN*0 = NaN` are the traps).
+/// Only element-checked **constants** qualify: no op output can be proven
+/// NaN-free without input range analysis (even `sigmoid` propagates NaN),
+/// so in practice this arm fires for unfolded over-cap constants.
+fn finite_nonneg(g: &Graph, id: NodeId) -> bool {
+    match &g.nodes[id].kind {
+        NodeKind::ConstScalar(v) => {
+            let f = *v as f32;
+            f.is_finite() && f.is_sign_positive()
+        }
+        NodeKind::ConstTensor(t) => t.data().iter().all(|x| x.is_finite() && x.is_sign_positive()),
+        _ => false,
+    }
+}
+
+/// One algebraic rewrite decision.
+enum Rewrite {
+    /// Reuse an existing node (shape-identical by construction).
+    Use(NodeId),
+    /// Replace with a different (simpler) op.
+    Op(OpKind, Vec<NodeId>),
+    /// Replace with a constant.
+    Const(Tensor),
+}
+
+/// Decide whether `op(margs)` (args already mapped into `out`) simplifies.
+/// Every rewrite returned here is bit-exact on IEEE f32 semantics — see
+/// the module docs for the `x+0` / `x*0` gating.
+fn simplify(out: &Graph, op: &OpKind, margs: &[NodeId], shape: &[usize]) -> Option<Rewrite> {
+    let arg_shape = |i: usize| out.nodes[margs[i]].shape.as_slice();
+    match op {
+        OpKind::Neg => match &out.nodes[margs[0]].kind {
+            NodeKind::Op(OpKind::Neg, inner) => Some(Rewrite::Use(inner[0])),
+            _ => None,
+        },
+        OpKind::Transpose => match &out.nodes[margs[0]].kind {
+            NodeKind::Op(OpKind::Transpose, inner) => Some(Rewrite::Use(inner[0])),
+            _ => None,
+        },
+        OpKind::Reshape(_) => {
+            if arg_shape(0) == shape {
+                return Some(Rewrite::Use(margs[0]));
+            }
+            match &out.nodes[margs[0]].kind {
+                // reshape∘reshape: both only relabel the row-major layout,
+                // so collapsing to one reshape with the final shape is
+                // exact — and when that shape is the inner source's own,
+                // the whole chain disappears.
+                NodeKind::Op(OpKind::Reshape(_), inner) => {
+                    if out.nodes[inner[0]].shape == shape {
+                        Some(Rewrite::Use(inner[0]))
+                    } else {
+                        Some(Rewrite::Op(
+                            OpKind::Reshape(shape.iter().map(|&d| d as i64).collect()),
+                            vec![inner[0]],
+                        ))
+                    }
+                }
+                _ => None,
+            }
+        }
+        OpKind::Permute(perm) => {
+            perm.iter().enumerate().all(|(i, &p)| i == p).then(|| Rewrite::Use(margs[0]))
+        }
+        OpKind::Mul => {
+            for (k, other) in [(0usize, 1usize), (1, 0)] {
+                let Some(bits) = const_fill_bits(out, margs[k]) else { continue };
+                if bits == ONE_BITS && arg_shape(other) == shape {
+                    return Some(Rewrite::Use(margs[other]));
+                }
+                if bits == POS_ZERO_BITS && finite_nonneg(out, margs[other]) {
+                    return Some(Rewrite::Const(Tensor::zeros(shape)));
+                }
+            }
+            None
+        }
+        OpKind::Div => {
+            (const_fill_bits(out, margs[1]) == Some(ONE_BITS) && arg_shape(0) == shape)
+                .then(|| Rewrite::Use(margs[0]))
+        }
+        OpKind::Sub => {
+            // x - (+0.0) = x for every f32 (including x = -0.0); x - (-0.0)
+            // is NOT exact (-0 - -0 = +0), so only a +0 constant fires.
+            (const_fill_bits(out, margs[1]) == Some(POS_ZERO_BITS) && arg_shape(0) == shape)
+                .then(|| Rewrite::Use(margs[0]))
+        }
+        OpKind::Add => {
+            for (k, other) in [(0usize, 1usize), (1, 0)] {
+                let Some(bits) = const_fill_bits(out, margs[k]) else { continue };
+                if arg_shape(other) != shape {
+                    continue;
+                }
+                // x + (-0.0) = x for every f32; x + (+0.0) only when x is
+                // provably free of -0.0 elements.
+                if bits == NEG_ZERO_BITS
+                    || (bits == POS_ZERO_BITS && never_negzero(out, margs[other]))
+                {
+                    return Some(Rewrite::Use(margs[other]));
+                }
+            }
+            None
+        }
+        _ => None,
+    }
+}
+
+fn algebraic(g: &Graph) -> (Graph, usize) {
+    let mut out = Graph::new(&g.name);
+    let mut map = vec![0usize; g.nodes.len()];
+    let mut rewrites = 0usize;
+    for (id, node) in g.nodes.iter().enumerate() {
+        map[id] = match &node.kind {
+            NodeKind::Op(op, args) => {
+                let margs: Vec<NodeId> = args.iter().map(|&a| map[a]).collect();
+                match simplify(&out, op, &margs, &node.shape) {
+                    Some(Rewrite::Use(nid)) => {
+                        rewrites += 1;
+                        nid
+                    }
+                    Some(Rewrite::Op(new_op, new_args)) => {
+                        rewrites += 1;
+                        out.add_op(new_op, new_args).expect("rewrite preserves shapes")
+                    }
+                    Some(Rewrite::Const(t)) => {
+                        rewrites += 1;
+                        out.const_tensor(t)
+                    }
+                    None => out.add_op(op.clone(), margs).expect("shapes were already inferred"),
+                }
+            }
+            _ => copy_leaf(&mut out, node),
+        };
+    }
+    out.set_outputs(g.outputs.iter().map(|&o| map[o]).collect());
+    (out, rewrites)
+}
+
+// ---- pass: cse ----
+
+fn cse(g: &Graph) -> (Graph, usize) {
+    let mut out = Graph::new(&g.name);
+    let mut map = vec![0usize; g.nodes.len()];
+    let mut seen: HashMap<u64, Vec<NodeId>> = HashMap::new();
+    let mut rewrites = 0usize;
+    // Append the candidate node, then either keep it or pop it in favor of
+    // a structurally identical earlier node.
+    let mut dedupe = |out: &mut Graph, nid: NodeId, rewrites: &mut usize| -> NodeId {
+        let key = out.node_structural_hash(nid);
+        if let Some(cands) = seen.get(&key) {
+            for &c in cands {
+                if nodes_equal(out, c, nid) {
+                    out.nodes.pop();
+                    *rewrites += 1;
+                    return c;
+                }
+            }
+        }
+        seen.entry(key).or_default().push(nid);
+        nid
+    };
+    for (id, node) in g.nodes.iter().enumerate() {
+        map[id] = match &node.kind {
+            // Placeholders are the calling convention — never merged.
+            NodeKind::Placeholder { name } => out.placeholder(name, &node.shape),
+            NodeKind::ConstScalar(v) => {
+                let nid = out.const_scalar(*v);
+                dedupe(&mut out, nid, &mut rewrites)
+            }
+            NodeKind::ConstTensor(t) => {
+                let nid = out.const_tensor(t.clone());
+                dedupe(&mut out, nid, &mut rewrites)
+            }
+            NodeKind::Op(op, args) => {
+                let margs: Vec<NodeId> = args.iter().map(|&a| map[a]).collect();
+                let nid = out.add_op(op.clone(), margs).expect("shapes were already inferred");
+                dedupe(&mut out, nid, &mut rewrites)
+            }
+        };
+    }
+    out.set_outputs(g.outputs.iter().map(|&o| map[o]).collect());
+    (out, rewrites)
+}
+
+// ---- pass: dce ----
+
+fn dce(g: &Graph) -> (Graph, usize) {
+    let mut live = vec![false; g.nodes.len()];
+    let mut stack: Vec<NodeId> = g.outputs.clone();
+    while let Some(id) = stack.pop() {
+        if live[id] {
+            continue;
+        }
+        live[id] = true;
+        if let NodeKind::Op(_, args) = &g.nodes[id].kind {
+            stack.extend(args.iter().copied());
+        }
+    }
+    let mut out = Graph::new(&g.name);
+    let mut map = vec![usize::MAX; g.nodes.len()];
+    let mut removed = 0usize;
+    for (id, node) in g.nodes.iter().enumerate() {
+        // Placeholders survive even when dead: the compiled fn is called
+        // with the full original input list.
+        if !live[id] && !matches!(node.kind, NodeKind::Placeholder { .. }) {
+            removed += 1;
+            continue;
+        }
+        map[id] = match &node.kind {
+            NodeKind::Op(op, args) => {
+                let margs: Vec<NodeId> = args.iter().map(|&a| map[a]).collect();
+                out.add_op(op.clone(), margs).expect("shapes were already inferred")
+            }
+            _ => copy_leaf(&mut out, node),
+        };
+    }
+    out.set_outputs(g.outputs.iter().map(|&o| map[o]).collect());
+    (out, removed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::eager;
+    use crate::tensor::Rng;
+
+    fn run_both(g: &Rc<Graph>, level: OptLevel, seed: u64) -> (Vec<Tensor>, Vec<Tensor>) {
+        let opt = optimize(g, level);
+        let mut rng = Rng::new(seed);
+        let inputs: Vec<Rc<Tensor>> = g
+            .input_shapes()
+            .into_iter()
+            .map(|(_, s)| Rc::new(Tensor::randn(&s, &mut rng)))
+            .collect();
+        let want = eager::execute(g, &inputs).unwrap();
+        let got = eager::execute(&opt.graph, &inputs).unwrap();
+        (got, want)
+    }
+
+    fn assert_bitwise(g: &Rc<Graph>, level: OptLevel, seed: u64) {
+        let (got, want) = run_both(g, level, seed);
+        assert_eq!(got.len(), want.len());
+        for (a, b) in got.iter().zip(want.iter()) {
+            assert_eq!(a.shape(), b.shape());
+            let eq = a.data().iter().zip(b.data().iter()).all(|(x, y)| x.to_bits() == y.to_bits());
+            assert!(eq, "optimizer changed bits: {:?} vs {:?}", a, b);
+        }
+    }
+
+    #[test]
+    fn level_parse_and_ordering() {
+        assert_eq!(OptLevel::parse("0"), Some(OptLevel::O0));
+        assert_eq!(OptLevel::parse("1"), Some(OptLevel::O1));
+        assert_eq!(OptLevel::parse("2"), Some(OptLevel::O2));
+        assert_eq!(OptLevel::parse("3"), None);
+        assert!(OptLevel::O2 > OptLevel::O1);
+        assert!(OptLevel::O2.fuses() && !OptLevel::O1.fuses());
+        assert_eq!(OptLevel::default(), OptLevel::O2);
+        assert_eq!(OptLevel::from_u8(2), Some(OptLevel::O2));
+        assert_eq!(format!("{}", OptLevel::O1), "1");
+    }
+
+    #[test]
+    fn o0_and_unchanged_graphs_share_the_input_rc() {
+        let mut g = Graph::new("g");
+        let x = g.placeholder("x", &[2, 3]);
+        let w = g.placeholder("w", &[3, 4]);
+        let m = g.add_op(OpKind::MatMul, vec![x, w]).unwrap();
+        g.set_outputs(vec![m]);
+        let g = Rc::new(g);
+        let o0 = optimize(&g, OptLevel::O0);
+        assert!(Rc::ptr_eq(&o0.graph, &g) && o0.passes.is_empty());
+        // Nothing to do at O2 either: same Rc, zero-rewrite pass stats.
+        let o2 = optimize(&g, OptLevel::O2);
+        assert!(Rc::ptr_eq(&o2.graph, &g));
+        assert!(!o2.changed());
+        assert_eq!(o2.passes.len(), 4);
+        assert_eq!(o2.passes[0].pass, "const_fold");
+    }
+
+    #[test]
+    fn const_subtrees_fold_to_execution_bits() {
+        // (2 + 3) * x + (ones[3] * 4).sqrt() — the const subtrees fold.
+        let mut g = Graph::new("fold");
+        let x = g.placeholder("x", &[3]);
+        let c2 = g.const_scalar(2.0);
+        let c3 = g.const_scalar(3.0);
+        let c4 = g.const_scalar(4.0);
+        let ones = g.const_tensor(Tensor::ones(&[3]));
+        let s = g.add_op(OpKind::Add, vec![c2, c3]).unwrap();
+        let sx = g.add_op(OpKind::Mul, vec![s, x]).unwrap();
+        let o4 = g.add_op(OpKind::Mul, vec![ones, c4]).unwrap();
+        let sq = g.add_op(OpKind::Sqrt, vec![o4]).unwrap();
+        let out = g.add_op(OpKind::Add, vec![sx, sq]).unwrap();
+        g.set_outputs(vec![out]);
+        let g = Rc::new(g);
+        let opt = optimize(&g, OptLevel::O1);
+        assert!(opt.changed());
+        // add(c2,c3), mul(ones,c4), sqrt fold; mul(s,x) and the final add stay.
+        assert_eq!(opt.graph.num_ops(), 2, "{:?}", opt.graph);
+        let folds = opt.passes.iter().find(|p| p.pass == "const_fold").unwrap();
+        assert_eq!(folds.rewrites, 3);
+        // DCE drops the now-dead original consts.
+        assert!(opt.graph.nodes.len() < g.nodes.len());
+        assert_bitwise(&g, OptLevel::O1, 7);
+        assert_bitwise(&g, OptLevel::O2, 8);
+    }
+
+    #[test]
+    fn fold_respects_the_numel_cap() {
+        // An all-const op with an over-cap output must stay unfolded (its
+        // consumers then stay too), while a small-output op over the same
+        // big constant folds fine.
+        let mut g = Graph::new("cap");
+        let big = g.const_tensor(Tensor::ones(&[FOLD_NUMEL_LIMIT + 1]));
+        let c = g.const_scalar(2.0);
+        let m = g.add_op(OpKind::Mul, vec![big, c]).unwrap(); // output > cap
+        let s = g.add_op(OpKind::Sum(None), vec![m]).unwrap(); // arg not const
+        let s2 = g.add_op(OpKind::Sum(None), vec![big]).unwrap(); // scalar: folds
+        let out = g.add_op(OpKind::Add, vec![s, s2]).unwrap();
+        g.set_outputs(vec![out]);
+        let g = Rc::new(g);
+        let opt = optimize(&g, OptLevel::O1);
+        let folds = opt.passes.iter().find(|p| p.pass == "const_fold").unwrap();
+        assert_eq!(folds.rewrites, 1, "{:?}", opt.passes);
+        assert!(opt
+            .graph
+            .nodes
+            .iter()
+            .any(|n| matches!(&n.kind, NodeKind::Op(OpKind::Mul, _))));
+        assert_bitwise(&g, OptLevel::O1, 9);
+    }
+
+    #[test]
+    fn cse_merges_structural_duplicates() {
+        // relu(x)+relu(x) built twice over; CSE collapses the duplicates.
+        let mut g = Graph::new("cse");
+        let x = g.placeholder("x", &[4]);
+        let r1 = g.add_op(OpKind::Relu, vec![x]).unwrap();
+        let r2 = g.add_op(OpKind::Relu, vec![x]).unwrap();
+        let a1 = g.add_op(OpKind::Add, vec![r1, r2]).unwrap();
+        let r3 = g.add_op(OpKind::Relu, vec![x]).unwrap();
+        let a2 = g.add_op(OpKind::Add, vec![r1, r3]).unwrap();
+        let out = g.add_op(OpKind::Mul, vec![a1, a2]).unwrap();
+        g.set_outputs(vec![out]);
+        let g = Rc::new(g);
+        let opt = optimize(&g, OptLevel::O1);
+        // 3 relus -> 1, 2 structurally identical adds -> 1.
+        assert_eq!(opt.graph.num_ops(), 3, "{:?}", opt.graph);
+        assert_bitwise(&g, OptLevel::O1, 11);
+    }
+
+    #[test]
+    fn cse_never_merges_placeholders_or_distinct_consts() {
+        let mut g = Graph::new("ph");
+        let x = g.placeholder("x", &[2]);
+        let y = g.placeholder("y", &[2]); // same shape as x: must stay distinct
+        let c1 = g.const_scalar(1.5);
+        let c2 = g.const_scalar(2.5);
+        let a = g.add_op(OpKind::Mul, vec![x, c1]).unwrap();
+        let b = g.add_op(OpKind::Mul, vec![y, c2]).unwrap();
+        let s = g.add_op(OpKind::Add, vec![a, b]).unwrap();
+        g.set_outputs(vec![s]);
+        let g = Rc::new(g);
+        let opt = optimize(&g, OptLevel::O1);
+        assert_eq!(opt.graph.inputs.len(), 2);
+        assert_bitwise(&g, OptLevel::O1, 3);
+    }
+
+    #[test]
+    fn dce_drops_dead_ops_but_keeps_placeholders() {
+        let mut g = Graph::new("dce");
+        let x = g.placeholder("x", &[3]);
+        let unused_in = g.placeholder("unused", &[5]);
+        let r = g.add_op(OpKind::Relu, vec![x]).unwrap();
+        let _dead = g.add_op(OpKind::Exp, vec![x]).unwrap();
+        let _dead2 = g.add_op(OpKind::Tanh, vec![unused_in]).unwrap();
+        g.set_outputs(vec![r]);
+        let g = Rc::new(g);
+        let opt = optimize(&g, OptLevel::O1);
+        assert_eq!(opt.graph.num_ops(), 1);
+        // Both placeholders survive: the call arity is part of the contract.
+        assert_eq!(opt.graph.inputs.len(), 2);
+        assert_eq!(opt.graph.input_shapes(), g.input_shapes());
+        assert_bitwise(&g, OptLevel::O1, 5);
+    }
+
+    #[test]
+    fn algebraic_identities_fire_and_stay_bitwise() {
+        // ((x * 1) / 1 - 0) double-neg, transpose∘transpose, reshape∘reshape.
+        let mut g = Graph::new("alg");
+        let x = g.placeholder("x", &[2, 6]);
+        let one = g.const_scalar(1.0);
+        let zero = g.const_scalar(0.0);
+        let m = g.add_op(OpKind::Mul, vec![x, one]).unwrap();
+        let d = g.add_op(OpKind::Div, vec![m, one]).unwrap();
+        let s = g.add_op(OpKind::Sub, vec![d, zero]).unwrap();
+        let n1 = g.add_op(OpKind::Neg, vec![s]).unwrap();
+        let n2 = g.add_op(OpKind::Neg, vec![n1]).unwrap();
+        let t1 = g.add_op(OpKind::Transpose, vec![n2]).unwrap();
+        let t2 = g.add_op(OpKind::Transpose, vec![t1]).unwrap();
+        let r1 = g.add_op(OpKind::Reshape(vec![3, -1]), vec![t2]).unwrap();
+        let r2 = g.add_op(OpKind::Reshape(vec![-1, 6]), vec![r1]).unwrap();
+        let out = g.add_op(OpKind::Sum(None), vec![r2]).unwrap();
+        g.set_outputs(vec![out]);
+        let g = Rc::new(g);
+        let opt = optimize(&g, OptLevel::O2);
+        // Everything between x and the sum cancels: reshape [2,6]->[2,6]
+        // is itself erased by the same-shape rule, leaving just the sum.
+        assert_eq!(opt.graph.num_ops(), 1, "{:?}", opt.graph);
+        let alg = opt.passes.iter().find(|p| p.pass == "algebraic").unwrap();
+        assert!(alg.rewrites >= 6, "{:?}", alg);
+        assert_bitwise(&g, OptLevel::O2, 13);
+        // O1 leaves algebraic identities alone.
+        let o1 = optimize(&g, OptLevel::O1);
+        assert!(o1.graph.num_ops() > 1);
+    }
+
+    #[test]
+    fn signed_zero_gating_is_respected() {
+        // exp(x) + 0 simplifies (exp never yields -0.0)...
+        let mut g = Graph::new("zadd");
+        let x = g.placeholder("x", &[3]);
+        let zero = g.const_scalar(0.0);
+        let e = g.add_op(OpKind::Exp, vec![x]).unwrap();
+        let a = g.add_op(OpKind::Add, vec![e, zero]).unwrap();
+        g.set_outputs(vec![a]);
+        let opt = optimize(&Rc::new(g), OptLevel::O2);
+        assert_eq!(opt.graph.num_ops(), 1, "exp(x)+0 must drop the add");
+
+        // ...but a bare x + 0 must NOT (x = -0.0 would flip its sign bit).
+        let mut g = Graph::new("zadd2");
+        let x = g.placeholder("x", &[3]);
+        let zero = g.const_scalar(0.0);
+        let a = g.add_op(OpKind::Add, vec![x, zero]).unwrap();
+        g.set_outputs(vec![a]);
+        let g = Rc::new(g);
+        let opt = optimize(&g, OptLevel::O2);
+        assert_eq!(opt.graph.num_ops(), 1, "x+0 must survive: not bit-exact for -0.0");
+        // The gate is real: -0.0 + 0.0 flips the sign bit.
+        let neg0 = Rc::new(Tensor::new(vec![3], vec![-0.0, 1.0, -1.0]));
+        let out = eager::execute(&g, &[neg0]).unwrap();
+        assert_eq!(out[0].data()[0].to_bits(), 0.0f32.to_bits());
+
+        // x + (-0.0) is exact for every x and always fires.
+        let mut g = Graph::new("zadd3");
+        let x = g.placeholder("x", &[3]);
+        let nzero = g.const_scalar(-0.0);
+        let a = g.add_op(OpKind::Add, vec![x, nzero]).unwrap();
+        g.set_outputs(vec![a]);
+        let opt = optimize(&Rc::new(g), OptLevel::O2);
+        assert_eq!(opt.graph.num_ops(), 0, "x + (-0.0) is bit-exact for all x");
+
+        // NO op output is provably NaN-free (sigmoid(NaN) = NaN and
+        // NaN * 0 = NaN), so `u(x) * 0` never folds for any unary u...
+        for op in [OpKind::Sigmoid, OpKind::Tanh] {
+            let mut g = Graph::new("zmul");
+            let x = g.placeholder("x", &[3]);
+            let zero = g.const_scalar(0.0);
+            let u = g.add_op(op, vec![x]).unwrap();
+            let m = g.add_op(OpKind::Mul, vec![u, zero]).unwrap();
+            g.set_outputs(vec![m]);
+            let g = Rc::new(g);
+            let opt = optimize(&g, OptLevel::O2);
+            assert_eq!(opt.graph.num_ops(), 2, "op-output * 0 must survive (NaN/-0.0 inputs)");
+            assert_bitwise(&g, OptLevel::O2, 17);
+        }
+        // ...but a checked positive-finite constant does — here an
+        // over-cap const the folder left alone, erased by the x*0 rule.
+        let mut g = Graph::new("zmul2");
+        let big = g.const_tensor(Tensor::ones(&[FOLD_NUMEL_LIMIT + 1]));
+        let zero = g.const_scalar(0.0);
+        let m = g.add_op(OpKind::Mul, vec![big, zero]).unwrap();
+        let s = g.add_op(OpKind::Sum(None), vec![m]).unwrap();
+        g.set_outputs(vec![s]);
+        let g = Rc::new(g);
+        let opt = optimize(&g, OptLevel::O2);
+        assert!(
+            !opt.graph.nodes.iter().any(|n| matches!(&n.kind, NodeKind::Op(OpKind::Mul, _))),
+            "positive-const * 0 folds to const zeros"
+        );
+        assert_bitwise(&g, OptLevel::O2, 18);
+    }
+
+    /// The x*0 gate is real: sigmoid propagates NaN, and folding to +0.0
+    /// would change the answer for NaN inputs.
+    #[test]
+    fn mul_by_zero_gate_protects_nan_inputs() {
+        let mut g = Graph::new("nan");
+        let x = g.placeholder("x", &[2]);
+        let zero = g.const_scalar(0.0);
+        let u = g.add_op(OpKind::Sigmoid, vec![x]).unwrap();
+        let m = g.add_op(OpKind::Mul, vec![u, zero]).unwrap();
+        g.set_outputs(vec![m]);
+        let g = Rc::new(g);
+        let opt = optimize(&g, OptLevel::O2);
+        let nan_in = Rc::new(Tensor::new(vec![2], vec![f32::NAN, 1.0]));
+        let a = eager::execute(&g, &[Rc::clone(&nan_in)]).unwrap();
+        let b = eager::execute(&opt.graph, &[nan_in]).unwrap();
+        assert!(a[0].data()[0].is_nan(), "NaN must propagate through sigmoid*0");
+        assert!(b[0].data()[0].is_nan(), "the optimizer must not erase the NaN");
+        assert_eq!(a[0].data()[1].to_bits(), b[0].data()[1].to_bits());
+    }
+
+    #[test]
+    fn optimized_graph_round_trips_through_serde() {
+        // Satellite: fusion lives below serde; the optimizer emits only
+        // ordinary node kinds, so its output graphs serialize losslessly.
+        let mut g = Graph::new("rt");
+        let x = g.placeholder("x", &[2, 3]);
+        let c = g.const_scalar(2.0);
+        let c2 = g.const_scalar(3.0);
+        let s = g.add_op(OpKind::Add, vec![c, c2]).unwrap();
+        let m = g.add_op(OpKind::Mul, vec![x, s]).unwrap();
+        let r = g.add_op(OpKind::Relu, vec![m]).unwrap();
+        g.set_outputs(vec![r]);
+        let opt = optimize(&Rc::new(g), OptLevel::O2);
+        assert!(opt.changed());
+        let text = super::super::serde::render_graph(&opt.graph);
+        let back = super::super::serde::parse_graph(&text).unwrap();
+        assert_eq!(back.content_hash(), opt.graph.content_hash());
+        // And the __optimized_*.json artifact parses as standard JSON.
+        let doc = crate::api::json::parse(&render_optimized_json("rt", &opt)).unwrap();
+        assert_eq!(doc.get("level").and_then(|v| v.as_f64()), Some(2.0));
+        assert!(doc.get("graph").is_some());
+        assert!(matches!(doc.get("passes"), Some(crate::api::json::Json::Arr(_))));
+    }
+
+    #[test]
+    fn pipeline_is_bitwise_on_random_mixed_graphs() {
+        // A handful of composite graphs: folding + cse + algebraic +
+        // fusion-eligible chains, all bitwise-checked against the
+        // unoptimized walk.
+        let mut rng = Rng::new(0x0071);
+        for case in 0..20 {
+            let mut g = Graph::new(&format!("mix_{}", case));
+            let x = g.placeholder("x", &[3, 4]);
+            let b = g.placeholder("b", &[4]);
+            let c1 = g.const_scalar((rng.uniform() as f64) * 2.0 + 0.5);
+            let c2 = g.const_scalar(1.0);
+            let cc = g.add_op(OpKind::Mul, vec![c1, c2]).unwrap(); // folds
+            let t = g.add_op(OpKind::Mul, vec![x, cc]).unwrap();
+            let t2 = g.add_op(OpKind::Add, vec![t, b]).unwrap();
+            let a = g.add_op(OpKind::Gelu, vec![t2]).unwrap();
+            let n1 = g.add_op(OpKind::Neg, vec![a]).unwrap();
+            let n2 = g.add_op(OpKind::Neg, vec![n1]).unwrap(); // cancels
+            let dup = g.add_op(OpKind::Gelu, vec![t2]).unwrap(); // CSE with a
+            let s = g.add_op(OpKind::Add, vec![n2, dup]).unwrap();
+            let out = g.add_op(OpKind::Sum(None), vec![s]).unwrap();
+            g.set_outputs(vec![out]);
+            let g = Rc::new(g);
+            let opt = optimize(&g, OptLevel::O2);
+            assert!(opt.changed(), "case {}", case);
+            assert!(opt.graph.num_ops() < g.num_ops(), "case {}", case);
+            assert_bitwise(&g, OptLevel::O1, 100 + case);
+            assert_bitwise(&g, OptLevel::O2, 200 + case);
+        }
+    }
+}

@@ -76,6 +76,49 @@
 //! `backend::compile_graph`, `hijack::graph_line_table`) are removed; use
 //! the builder and the pipeline above.
 //!
+//! ## Graph optimizer
+//!
+//! Between capture and lowering sits a real compiler optimizer
+//! ([`graph::opt`]), run at `Backend::plan` time for **every** backend at
+//! the request's `--opt-level` (default 2):
+//!
+//! | level | passes |
+//! |-------|--------|
+//! | `0`   | none — capture verbatim, no elementwise fusion |
+//! | `1`   | `const_fold` → `cse` → `dce` |
+//! | `2`   | `const_fold` → `algebraic` → `cse` → `dce`, plus fused elementwise chains in the eager [`backend::eager::ExecPlan`] |
+//!
+//! `const_fold` evaluates all-const op nodes with the eager executor's
+//! own `eval_op` (folded bits are execution bits); `algebraic` applies
+//! only **bit-exact** identities (`x*1`, `x/1`, `x-0`, double-neg,
+//! `transpose∘transpose`, `reshape∘reshape`; `x+0`/`x*0` fire only when
+//! a sign/finiteness analysis proves them exact — `-0.0 + 0.0` flips a
+//! sign bit, `-1.0 * 0.0 = -0.0`); `cse` merges structurally identical
+//! nodes by per-node hash; `dce` drops unreachable ops while keeping
+//! every placeholder (the call convention). Optimization **never changes
+//! results**: the conformance suite replays the whole corpus at
+//! `--opt-level 0` vs `2` and demands bitwise equality on
+//! eager/sharded/batched.
+//!
+//! True to the paper, the transformation is dumped, not hidden:
+//! `Session::finish()` writes `__optimized_*.txt` (a commented pass table
+//! plus the optimized graph printed exactly like `__compiled_fn_*.py` —
+//! diff the two files to see what the optimizer did) and
+//! `__optimized_*.json` (lossless serde graph + pass stats,
+//! `ArtifactKind::OptimizedGraph` in the manifest); `__plan_*.json`
+//! records the level and per-pass node deltas (`"opt"`), and
+//! `metrics.json`'s `"modules"` entries carry the same deltas.
+//!
+//! **Fusion lives below the IR**: there is no `FusedElementwise` op kind.
+//! The eager `ExecPlan` groups broadcasting-compatible elementwise runs
+//! into regions executed as one stride-walked pass (chunked, zero
+//! intermediate tensors); XLA lowers the folded-but-unfused graph and
+//! lets PJRT fuse; trace bundles always serialize the *pre-optimizer*
+//! captured graph, so `depyf replay --opt-level 0` vs `2` bisects any
+//! optimizer suspicion (see `rust/tests/README.md`). Compile caches key
+//! on the **optimized** graph's `content_hash`, so graphs that become
+//! equivalent after optimization share executables.
+//!
 //! ## Performance
 //!
 //! The request path — the paper's "guards are checked on every hooked
@@ -92,7 +135,10 @@
 //!   guards reject on a pre-computed FNV fingerprint before any
 //!   structural comparison. Cache-hit logging sits behind
 //!   [`dynamo::Verbosity`]: at the default level no format string is
-//!   built on the hit path.
+//!   built on the hit path. At `cache_limit` the table **evicts its
+//!   least-recently-used entry** (per-entry hit counter + recency stamp)
+//!   and compiles the new specialization — nothing runs uncompiled, hot
+//!   entries survive churn, and evictions are counted in `metrics.json`.
 //! * **Eager executor** ([`backend::eager::ExecPlan`]): graph compilation
 //!   produces a per-graph plan — constants pre-materialized, op steps in
 //!   topological order, buffer liveness (dead slots freed eagerly), and a
@@ -189,7 +235,7 @@ pub mod prelude {
     pub use crate::api::{
         lookup_backend, register_backend, Artifact, ArtifactKind, Backend, Capabilities,
         CompilePlan, CompileRequest, CompiledModule, DepyfError, EagerBackend, FallbackPolicy,
-        Session, SessionBuilder, TraceMode, XlaBackend,
+        OptLevel, Session, SessionBuilder, TraceMode, XlaBackend,
     };
     pub use crate::backend::{BatchedBackend, ShardedBackend};
     pub use crate::bytecode::{disassemble, CodeObject, Instr, IsaVersion};

@@ -9,8 +9,8 @@
 use std::rc::Rc;
 
 use depyf::api::{
-    backend_names, load_manifest, lookup_backend, ArtifactKind, Backend, Capabilities, Session,
-    TraceBundle,
+    backend_names, load_manifest, lookup_backend, ArtifactKind, Backend, Capabilities, OptLevel,
+    Session, TraceBundle,
 };
 use depyf::backend::{replay_bundle, RecordingBackend, ReplayOptions};
 use depyf::bytecode::{disassemble, IsaVersion};
@@ -28,6 +28,7 @@ depyf — open the opaque box of the pylang compiler
 
 usage:
   depyf run <file.py> [--compile] [--backend <name>] [--version <V>]
+            [--opt-level 0|1|2]
       Execute a program; with --compile (or --backend) it runs under the
       dynamo frontend and reports compiler metrics.
   depyf disasm <file.py> [--version <V>]
@@ -35,13 +36,15 @@ usage:
   depyf decompile <file.py> [--tool depyf|pycdc|decompyle3|uncompyle6] [--version <V>]
       Compile, then decompile the bytecode back to source.
   depyf dump <file.py> <dir> [--backend <name>] [--version <V>]
+             [--opt-level 0|1|2]
       prepare_debug: run under the compiler and dump every artifact
-      (full_code.py, __compiled_fn_*.py, __transformed_*.py, disassembly,
-      guards) plus a machine-readable manifest.json into <dir>.
+      (full_code.py, __compiled_fn_*.py, __optimized_*.{txt,json},
+      __transformed_*.py, disassembly, guards) plus a machine-readable
+      manifest.json into <dir>.
   depyf table1
       Regenerate the paper's Table 1 correctness matrix.
   depyf replay <trace.json|dump-dir> [--backend <name>] [--against <oracle>]
-               [--eps <tol>] [--no-localize]
+               [--eps <tol>] [--no-localize] [--opt-level 0|1|2]
       Re-execute recorded __trace_*.json bundles (written by the recording
       backend) on any registered backend. A dump-dir argument replays every
       trace indexed in its manifest.json. Default comparison is bit-exact
@@ -54,6 +57,17 @@ usage:
 
 flags:
   --version <V>    ISA version: 3.8, 3.9, 3.10 or 3.11 (default 3.11)
+  --opt-level <N>  Graph-optimizer level (default 2):
+                     0  capture verbatim: no passes, no elementwise fusion
+                     1  const folding + CSE + dead-code elimination
+                     2  level 1 + algebraic rewrites (x*1, x-0, double-neg,
+                        transpose∘transpose, reshape∘reshape, gated x+0/x*0)
+                        + fused elementwise chains in the eager executor
+                   Optimization never changes results: levels 0 and 2 are
+                   bitwise-identical on eager/sharded/batched (the
+                   conformance suite enforces it). Traces record the
+                   pre-optimizer graph, so `depyf replay --opt-level 0`
+                   vs `2` bisects optimizer/fusion suspicions.
   --backend <name> A registered graph backend; custom backends plug in via
                    depyf::api::register_backend. Built-ins:
                      eager      node-by-node CPU reference executor
@@ -100,6 +114,14 @@ fn parse_version(args: &[String]) -> Result<IsaVersion, CliError> {
         Some("3.10") => Ok(IsaVersion::V310),
         Some("3.11") | None => Ok(IsaVersion::V311),
         Some(other) => Err(usage(format!("unknown --version '{}' (expected 3.8, 3.9, 3.10 or 3.11)", other))),
+    }
+}
+
+fn parse_opt_level(args: &[String]) -> Result<OptLevel, CliError> {
+    match flag_value(args, "--opt-level") {
+        None => Ok(OptLevel::default()),
+        Some(v) => OptLevel::parse(&v)
+            .ok_or_else(|| usage(format!("unknown --opt-level '{}' (expected 0, 1 or 2)", v))),
     }
 }
 
@@ -181,6 +203,7 @@ fn cmd_run(args: &[String]) -> Result<(), CliError> {
         .ok_or_else(|| usage("run needs a file: depyf run <file.py> [--compile] [--backend <name>]"))?;
     let version = parse_version(args)?;
     let backend = parse_backend(args)?;
+    let opt_level = parse_opt_level(args)?;
     let src = read_source(file)?;
     let mut vm = Vm::new();
     let dynamo = if has_flag(args, "--compile") || backend.is_some() {
@@ -189,7 +212,7 @@ fn cmd_run(args: &[String]) -> Result<(), CliError> {
             None => lookup_backend("eager").expect("eager is always registered"),
         };
         let runtime = provision_runtime(&[&backend])?;
-        let config = DynamoConfig { backend, ..Default::default() };
+        let config = DynamoConfig { backend, opt_level, ..Default::default() };
         let d = match runtime {
             Some(rt) => Dynamo::with_runtime(config, rt),
             None => Dynamo::new(config),
@@ -238,8 +261,9 @@ fn cmd_dump(args: &[String]) -> Result<(), CliError> {
     let dir = args.get(1).ok_or_else(|| usage("dump needs a dir: depyf dump <file.py> <dir>"))?;
     let version = parse_version(args)?;
     let backend = parse_backend(args)?;
+    let opt_level = parse_opt_level(args)?;
     let src = read_source(file)?;
-    let mut builder = Session::builder().dump_to(dir).isa(version);
+    let mut builder = Session::builder().dump_to(dir).isa(version).opt_level(opt_level);
     if let Some(b) = backend {
         if let Some(rt) = provision_runtime(&[&b])? {
             builder = builder.runtime(rt);
@@ -297,6 +321,7 @@ fn cmd_replay(args: &[String]) -> Result<(), CliError> {
             .ok_or_else(|| usage(format!("bad --eps '{}' (expected a non-negative float)", s)))?,
     };
     let localize = !has_flag(args, "--no-localize");
+    let opt_level = parse_opt_level(args)?;
 
     // A dump dir replays every Trace artifact its manifest indexes; a
     // file is a single bundle.
@@ -320,7 +345,7 @@ fn cmd_replay(args: &[String]) -> Result<(), CliError> {
         consulted.push(o);
     }
     let runtime = provision_runtime(&consulted)?;
-    let opts = ReplayOptions { eps, runtime, localize };
+    let opts = ReplayOptions { eps, runtime, localize, opt_level };
     let mut mismatches = 0usize;
     for b in &bundles {
         let report = replay_bundle(b, backend.as_ref(), oracle.as_deref(), &opts)?;
@@ -375,6 +400,7 @@ mod tests {
     fn replay_usage_and_runtime_errors() {
         assert_eq!(run_cli(&s(&["replay"])), 2, "missing path is a usage error");
         assert_eq!(run_cli(&s(&["replay", "x.json", "--eps", "banana"])), 2);
+        assert_eq!(run_cli(&s(&["replay", "x.json", "--opt-level", "9"])), 2);
         assert_eq!(run_cli(&s(&["replay", "x.json", "--eps", "-1"])), 2);
         assert_eq!(run_cli(&s(&["replay", "x.json", "--backend", "bogus"])), 2);
         assert_eq!(run_cli(&s(&["replay", "x.json", "--against", "bogus"])), 2);
@@ -418,6 +444,9 @@ mod tests {
         // sharded-vs-eager. sharded/batched may lower to PJRT when the
         // shared runtime starts, so those replays use the XLA tolerance.
         assert_eq!(run_cli(&s(&["replay", &dump_s])), 0);
+        // Bisection workflow: the same trace replays bitwise-clean with the
+        // optimizer off entirely.
+        assert_eq!(run_cli(&s(&["replay", &dump_s, "--opt-level", "0"])), 0);
         assert_eq!(run_cli(&s(&["replay", &dump_s, "--backend", "sharded", "--eps", "1e-4"])), 0);
         assert_eq!(
             run_cli(&s(&["replay", &dump_s, "--backend", "sharded", "--against", "eager", "--eps", "1e-4"])),

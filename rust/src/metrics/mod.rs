@@ -13,6 +13,8 @@ pub struct Metrics {
     pub fallbacks: Cell<u64>,
     pub guard_checks: Cell<u64>,
     pub guard_failures: Cell<u64>,
+    /// Guard-table entries evicted by the LRU policy at `cache_limit`.
+    pub evictions: Cell<u64>,
     pub compile_ns: Cell<u64>,
 }
 
@@ -39,7 +41,7 @@ impl Metrics {
 
     pub fn report(&self) -> String {
         format!(
-            "captures={} cache_hits={} cache_misses={} graph_breaks={} fallbacks={} guard_checks={} guard_failures={} compile_time={:?}",
+            "captures={} cache_hits={} cache_misses={} graph_breaks={} fallbacks={} guard_checks={} guard_failures={} evictions={} compile_time={:?}",
             self.captures.get(),
             self.cache_hits.get(),
             self.cache_misses.get(),
@@ -47,6 +49,7 @@ impl Metrics {
             self.fallbacks.get(),
             self.guard_checks.get(),
             self.guard_failures.get(),
+            self.evictions.get(),
             self.compile_time(),
         )
     }
@@ -62,7 +65,7 @@ impl Metrics {
     /// (`("modules", "[...]")`).
     pub fn to_json_with(&self, extra: Option<(&str, &str)>) -> String {
         let mut out = format!(
-            "{{\n  \"captures\": {},\n  \"cache_hits\": {},\n  \"cache_misses\": {},\n  \"graph_breaks\": {},\n  \"fallbacks\": {},\n  \"guard_checks\": {},\n  \"guard_failures\": {},\n  \"compile_ns\": {}",
+            "{{\n  \"captures\": {},\n  \"cache_hits\": {},\n  \"cache_misses\": {},\n  \"graph_breaks\": {},\n  \"fallbacks\": {},\n  \"guard_checks\": {},\n  \"guard_failures\": {},\n  \"evictions\": {},\n  \"compile_ns\": {}",
             self.captures.get(),
             self.cache_hits.get(),
             self.cache_misses.get(),
@@ -70,6 +73,7 @@ impl Metrics {
             self.fallbacks.get(),
             self.guard_checks.get(),
             self.guard_failures.get(),
+            self.evictions.get(),
             self.compile_ns.get(),
         );
         if let Some((key, value)) = extra {
@@ -114,7 +118,7 @@ mod tests {
         assert_eq!(doc.get("captures").and_then(|v| v.as_f64()), Some(1.0));
         assert_eq!(doc.get("cache_hits").and_then(|v| v.as_f64()), Some(1.0));
         for key in
-            ["captures", "cache_hits", "cache_misses", "graph_breaks", "fallbacks", "guard_checks", "guard_failures", "compile_ns"]
+            ["captures", "cache_hits", "cache_misses", "graph_breaks", "fallbacks", "guard_checks", "guard_failures", "evictions", "compile_ns"]
         {
             assert!(doc.get(key).is_some(), "missing {}", key);
         }

@@ -110,14 +110,7 @@ impl Tensor {
     /// by the elementwise kernels — the per-element div/mod chain of the
     /// old indexing math is gone.
     pub fn broadcast_strides(&self, out_rank: usize) -> Vec<usize> {
-        debug_assert!(out_rank >= self.rank());
-        let own = self.strides();
-        let offset = out_rank - self.rank();
-        let mut s = vec![0usize; out_rank];
-        for i in 0..self.rank() {
-            s[offset + i] = if self.shape[i] == 1 { 0 } else { own[i] };
-        }
-        s
+        broadcast_strides_for(&self.shape, out_rank)
     }
 
     /// Max |a-b| against another tensor of identical shape.
@@ -134,6 +127,24 @@ impl Tensor {
     pub fn allclose(&self, other: &Tensor, tol: f32) -> bool {
         self.shape == other.shape && self.max_abs_diff(other) <= tol
     }
+}
+
+/// Shape-only form of [`Tensor::broadcast_strides`] — the eager backend's
+/// fused regions precompute strides at plan time, before any tensor
+/// exists.
+pub fn broadcast_strides_for(shape: &[usize], out_rank: usize) -> Vec<usize> {
+    debug_assert!(out_rank >= shape.len());
+    // Row-major strides of `shape` itself.
+    let mut own = vec![1usize; shape.len()];
+    for i in (0..shape.len().saturating_sub(1)).rev() {
+        own[i] = own[i + 1] * shape[i + 1];
+    }
+    let offset = out_rank - shape.len();
+    let mut s = vec![0usize; out_rank];
+    for i in 0..shape.len() {
+        s[offset + i] = if shape[i] == 1 { 0 } else { own[i] };
+    }
+    s
 }
 
 impl fmt::Debug for Tensor {

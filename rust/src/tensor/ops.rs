@@ -214,15 +214,27 @@ pub fn tanh(a: &Tensor) -> Tensor {
     unary_op(a, f32::tanh)
 }
 pub fn sigmoid(a: &Tensor) -> Tensor {
-    unary_op(a, |x| 1.0 / (1.0 + (-x).exp()))
+    unary_op(a, sigmoid_scalar)
+}
+
+/// Per-element sigmoid — shared by [`sigmoid`] and the fused elementwise
+/// kernel in `backend::eager`, so both paths compute identical bits.
+#[inline]
+pub fn sigmoid_scalar(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
 }
 
 /// tanh-approximation GELU (the variant JAX uses by default).
 pub fn gelu(a: &Tensor) -> Tensor {
-    unary_op(a, |x| {
-        let c = (2.0f32 / std::f32::consts::PI).sqrt();
-        0.5 * x * (1.0 + (c * (x + 0.044715 * x * x * x)).tanh())
-    })
+    unary_op(a, gelu_scalar)
+}
+
+/// Per-element GELU — shared by [`gelu`] and the fused elementwise kernel
+/// in `backend::eager`, so both paths compute identical bits.
+#[inline]
+pub fn gelu_scalar(x: f32) -> f32 {
+    let c = (2.0f32 / std::f32::consts::PI).sqrt();
+    0.5 * x * (1.0 + (c * (x + 0.044715 * x * x * x)).tanh())
 }
 
 /// Matrix multiply. Supports 2D @ 2D, and batched (leading dims must match

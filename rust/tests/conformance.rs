@@ -26,7 +26,8 @@ use std::path::PathBuf;
 use std::rc::Rc;
 
 use depyf::api::{
-    ArtifactKind, Backend, CompileRequest, EagerBackend, TraceBundle, XlaBackend,
+    ArtifactKind, Backend, CompileRequest, EagerBackend, FallbackPolicy, OptLevel, TraceBundle,
+    XlaBackend,
 };
 use depyf::backend::{
     replay_bundle, single_call_bundle, BatchedBackend, RecordingBackend, ReplayOptions,
@@ -73,7 +74,7 @@ fn dump_repro(bundle: &TraceBundle, tag: &str) -> String {
 /// when `differential`, else against the recorded outputs) and panic with
 /// a minimized repro on any mismatch.
 fn assert_conforms(bundle: &TraceBundle, backend: &dyn Backend, eps: f32, differential: bool, tag: &str) {
-    let opts = ReplayOptions { eps, runtime: None, localize: true };
+    let opts = ReplayOptions { eps, runtime: None, localize: true, ..Default::default() };
     let oracle: Option<&dyn Backend> = if differential { Some(&EagerBackend) } else { None };
     let report = replay_bundle(bundle, backend, oracle, &opts)
         .unwrap_or_else(|e| panic!("[{}] {} failed to replay {}: {}", tag, backend.name(), bundle.name, e));
@@ -166,7 +167,12 @@ fn table1_corpus_traces_replay_on_xla_within_eps() {
     let mut checked = 0usize;
     for case in cases.iter().step_by(step) {
         for bundle in record_program(&case.source, &case.name) {
-            let opts = ReplayOptions { eps: 1e-4, runtime: Some(Rc::clone(&rt)), localize: true };
+            let opts = ReplayOptions {
+                eps: 1e-4,
+                runtime: Some(Rc::clone(&rt)),
+                localize: true,
+                ..Default::default()
+            };
             let report = replay_bundle(&bundle, &XlaBackend, None, &opts)
                 .unwrap_or_else(|e| panic!("xla replay of {} failed: {}", case.name, e));
             if !report.ok() {
@@ -219,6 +225,117 @@ fn generated_graphs_conform_across_backends() {
         assert_conforms(&bundle, &ShardedBackend::new(), 0.0, true, &tag);
         assert_conforms(&bundle, &ShardedBackend::with_max_ops(1), 0.0, true, &tag);
         assert_conforms(&bundle, &BatchedBackend::new(), 0.0, true, &tag);
+    }
+}
+
+/// Compile `bundle.graph` on `backend` at `level` and run every recorded
+/// call, returning the raw outputs (FallbackPolicy::Error: a backend that
+/// cannot compile is a failed sweep, not a silent eager degrade).
+fn outputs_at(
+    bundle: &TraceBundle,
+    backend: &dyn Backend,
+    level: OptLevel,
+    tag: &str,
+) -> Vec<Vec<depyf::tensor::Tensor>> {
+    let graph = Rc::new(bundle.graph.clone());
+    let req = CompileRequest::new(&bundle.name, Rc::clone(&graph))
+        .with_fallback(FallbackPolicy::Error)
+        .with_opt_level(level);
+    let module = backend
+        .compile(&req)
+        .unwrap_or_else(|e| panic!("[{}] {} failed to compile at -O{}: {}", tag, backend.name(), level, e));
+    bundle
+        .calls
+        .iter()
+        .map(|call| {
+            let inputs: Vec<Rc<depyf::tensor::Tensor>> =
+                call.inputs.iter().cloned().map(Rc::new).collect();
+            module.call(&inputs).unwrap_or_else(|e| {
+                panic!("[{}] {} failed to execute at -O{}: {}", tag, backend.name(), level, e)
+            })
+        })
+        .collect()
+}
+
+/// Assert the opt-level sweep invariant for one bundle on one backend:
+/// `--opt-level 0` and `2` produce **bitwise identical** outputs — the
+/// optimizer (folding, CSE, DCE, algebraic rewrites) and eager fusion
+/// must never change results.
+fn assert_opt_levels_agree(bundle: &TraceBundle, backend: &dyn Backend, tag: &str) {
+    let o0 = outputs_at(bundle, backend, OptLevel::O0, tag);
+    let o2 = outputs_at(bundle, backend, OptLevel::O2, tag);
+    assert_eq!(o0.len(), o2.len(), "[{}] call-count drift", tag);
+    for (ci, (c0, c2)) in o0.iter().zip(o2.iter()).enumerate() {
+        assert_eq!(c0.len(), c2.len(), "[{}] call {} arity drift", tag, ci);
+        for (oi, (a, b)) in c0.iter().zip(c2.iter()).enumerate() {
+            assert_eq!(a.shape(), b.shape(), "[{}] call {} output {} shape drift", tag, ci, oi);
+            let bitwise =
+                a.data().iter().zip(b.data().iter()).all(|(x, y)| x.to_bits() == y.to_bits());
+            if !bitwise {
+                let path = dump_repro(&single_call_bundle(bundle, ci), &format!("optlevel_{}", tag));
+                panic!(
+                    "[{}] backend '{}' diverged between -O0 and -O2 at call {} output {}\nrepro dumped to {}",
+                    tag,
+                    backend.name(),
+                    ci,
+                    oi,
+                    path
+                );
+            }
+        }
+    }
+}
+
+/// Satellite sweep: every table1-corpus trace AND generated-corpus graph
+/// replayed at `--opt-level 0` vs `2` must be bitwise-equal on
+/// eager/sharded/batched. This is the optimizer's acceptance gate —
+/// fusion and folding never change results.
+#[test]
+fn opt_level_0_vs_2_is_bitwise_clean_across_backends() {
+    let backends: Vec<Box<dyn Fn() -> Box<dyn Backend>>> = vec![
+        Box::new(|| Box::new(EagerBackend)),
+        Box::new(|| Box::new(ShardedBackend::new())),
+        Box::new(|| Box::new(ShardedBackend::with_max_ops(1))),
+        Box::new(|| Box::new(BatchedBackend::new())),
+    ];
+    // Table1 corpus (sampled — full-capture families cover every op shape).
+    let cases = model_cases();
+    let step = if quick() { 20 } else { 4 };
+    let mut swept = 0usize;
+    for case in cases.iter().step_by(step) {
+        for bundle in record_program(&case.source, &case.name) {
+            let tag = format!("corpus_{}", case.name);
+            for make in &backends {
+                assert_opt_levels_agree(&bundle, make().as_ref(), &tag);
+            }
+            swept += 1;
+        }
+    }
+    assert!(swept > 0, "corpus sweep replayed nothing");
+    // Generated corpus: fresh graphs (distinct seed from the main sweep so
+    // the two tests don't shadow each other's coverage).
+    let n = if quick() { 15 } else { 60 };
+    let mut gen = support::GraphGen::new(GEN_SEED ^ 0x0717);
+    let mut input_rng = Rng::new(GEN_SEED ^ 0x0718);
+    for i in 0..n {
+        let g = Rc::new(gen.next_graph());
+        let name = g.name.clone();
+        let req = CompileRequest::new(&name, Rc::clone(&g));
+        let rec = RecordingBackend::new(Rc::new(EagerBackend));
+        let module = rec.compile(&req).unwrap_or_else(|e| panic!("graph {}: {}", name, e));
+        for _ in 0..2 {
+            module.call(&support::rand_inputs(&g, &mut input_rng)).unwrap();
+        }
+        let art = module
+            .artifacts()
+            .into_iter()
+            .find(|a| a.kind == ArtifactKind::Trace)
+            .expect("recording module emits a trace artifact");
+        let bundle = TraceBundle::parse(&art.content).unwrap();
+        let tag = format!("gen_{}", i);
+        for make in &backends {
+            assert_opt_levels_agree(&bundle, make().as_ref(), &tag);
+        }
     }
 }
 

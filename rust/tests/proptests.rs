@@ -91,10 +91,12 @@ fn fuzz_arith_cross_version() {
     }
 }
 
-/// Guard-overflow behavior: a function whose guard always misses must stop
-/// recompiling at the cache limit and keep producing correct results.
+/// Guard-overflow behavior: a function whose guard always misses keeps
+/// producing correct results; at the cache limit the LRU guard entry is
+/// evicted and the fresh specialization compiles (the table never grows
+/// past the limit, and nothing runs uncompiled).
 #[test]
-fn cache_limit_falls_back_gracefully() {
+fn cache_limit_evicts_lru_instead_of_running_uncompiled() {
     let src = "\
 counter = 0
 def f(x, k):
@@ -114,9 +116,78 @@ print(total)
     vm.eval_hook = Some(d.clone());
     vm.exec_source(src, IsaVersion::V310).unwrap();
     assert_eq!(vm.take_output(), expected);
-    // Captures stop at the limit; the remaining calls run uncompiled.
-    assert!(d.metrics.captures.get() <= 5, "{:?}", d.metrics.report());
+    // Every distinct k recompiles (k is ConstEq-guarded); the table holds
+    // at most cache_limit entries thanks to LRU eviction.
+    assert_eq!(d.metrics.captures.get(), 20, "{:?}", d.metrics.report());
+    assert_eq!(d.metrics.evictions.get(), 20 - 4, "{:?}", d.metrics.report());
     assert!(d.metrics.guard_failures.get() >= 1);
+    assert!(d.log().iter().any(|l| l.contains("evicted LRU entry")), "{:?}", d.log());
+}
+
+/// The thrash backstop: a code object cycling through unbounded
+/// specializations stops recompiling after cache_limit * 8 evictions and
+/// runs uncompiled from then on — correct output, bounded compile work.
+#[test]
+fn sustained_guard_cache_thrashing_trips_the_skip_backstop() {
+    // cache_limit 2: backstop arms at 16 evictions (18 captures); the 60
+    // distinct k values would otherwise compile 60 times.
+    let src = "\
+def f(x, k):
+    return (x * k).sum()
+t = torch.ones([2])
+total = 0.0
+for k in range(60):
+    total += f(t, k).item()
+print(total)
+";
+    let plain = Vm::new();
+    plain.exec_source(src, IsaVersion::V310).unwrap();
+    let expected = plain.take_output();
+
+    let mut vm = Vm::new();
+    let d = Dynamo::new(DynamoConfig { cache_limit: 2, ..Default::default() });
+    vm.eval_hook = Some(d.clone());
+    vm.exec_source(src, IsaVersion::V310).unwrap();
+    assert_eq!(vm.take_output(), expected);
+    assert_eq!(d.metrics.evictions.get(), 16, "{:?}", d.metrics.report());
+    assert_eq!(d.metrics.captures.get(), 18, "compiles stop at the backstop: {:?}", d.metrics.report());
+    assert!(d.log().iter().any(|l| l.contains("thrashing")), "{:?}", d.log());
+}
+
+/// Eviction respects recency: re-dispatching to an old entry keeps it
+/// cached while colder entries get evicted, so a hot shape stays a cache
+/// hit even after many one-off specializations flow through.
+#[test]
+fn lru_keeps_hot_entries_dispatchable() {
+    // Shape [2] is hot (re-used every iteration); shapes [3]..[12] are
+    // one-off. With cache_limit 4, the hot entry must survive the churn.
+    let src = "\
+def f(x):
+    return (x * 2).sum()
+hot = torch.ones([2])
+total = 0.0
+for n in range(3, 13):
+    total += f(hot).item()
+    total += f(torch.ones([n])).item()
+total += f(hot).item()
+print(total)
+";
+    let plain = Vm::new();
+    plain.exec_source(src, IsaVersion::V310).unwrap();
+    let expected = plain.take_output();
+
+    let mut vm = Vm::new();
+    let d = Dynamo::new(DynamoConfig { cache_limit: 4, ..Default::default() });
+    vm.eval_hook = Some(d.clone());
+    vm.exec_source(src, IsaVersion::V310).unwrap();
+    assert_eq!(vm.take_output(), expected);
+    // 1 hot capture + 10 one-off captures; the hot entry is dispatched on
+    // every loop iteration so it is never the LRU victim.
+    assert_eq!(d.metrics.captures.get(), 11, "{:?}", d.metrics.report());
+    assert!(d.metrics.evictions.get() >= 7, "{:?}", d.metrics.report());
+    // The hot entry's repeated dispatches are all cache hits: 9 in-loop
+    // re-dispatches plus the final call.
+    assert!(d.metrics.cache_hits.get() >= 10, "{:?}", d.metrics.report());
 }
 
 /// The planned eager executor (const pre-materialization, liveness,
@@ -127,19 +198,29 @@ print(total)
 fn fuzz_exec_plan_matches_traced_oracle() {
     let mut gen = support::GraphGen::new(0xE5C_A1A);
     let mut rng = Rng::new(0xFEED);
+    let mut fused_graphs = 0usize;
     for case in 0..200 {
         let g = Rc::new(gen.next_graph());
         let inputs = support::rand_inputs(&g, &mut rng);
+        // ExecPlan::new fuses elementwise chains; the unfused plan is the
+        // pre-fusion executor. Both must match the traced walk bitwise.
         let plan = ExecPlan::new(Rc::clone(&g));
+        let unfused = ExecPlan::unfused(Rc::clone(&g));
+        fused_graphs += (plan.fused_regions() > 0) as usize;
         let fast = plan.run(&inputs).unwrap_or_else(|e| panic!("case {} ({}): plan: {}", case, g.name, e));
         let slow =
             eager::execute(&g, &inputs).unwrap_or_else(|e| panic!("case {} ({}): oracle: {}", case, g.name, e));
+        let mid = unfused
+            .run(&inputs)
+            .unwrap_or_else(|e| panic!("case {} ({}): unfused plan: {}", case, g.name, e));
         assert_eq!(fast.len(), slow.len(), "case {}", case);
-        for (f, s) in fast.iter().zip(slow.iter()) {
+        for ((f, s), m) in fast.iter().zip(slow.iter()).zip(mid.iter()) {
             assert_eq!(f.shape(), s.shape(), "case {} ({})", case, g.name);
             let fb: Vec<u32> = f.data().iter().map(|v| v.to_bits()).collect();
             let sb: Vec<u32> = s.data().iter().map(|v| v.to_bits()).collect();
-            assert_eq!(fb, sb, "case {} ({}): planned executor diverged bitwise", case, g.name);
+            let mb: Vec<u32> = m.data().iter().map(|v| v.to_bits()).collect();
+            assert_eq!(fb, sb, "case {} ({}): fused executor diverged bitwise", case, g.name);
+            assert_eq!(mb, sb, "case {} ({}): unfused executor diverged bitwise", case, g.name);
         }
         // Planned execution must also be self-deterministic (arena reuse
         // must not leak state between calls).
@@ -148,6 +229,10 @@ fn fuzz_exec_plan_matches_traced_oracle() {
             assert_eq!(f.data(), a.data(), "case {}: second run differs", case);
         }
     }
+    // The generator's elementwise chains must actually exercise fusion:
+    // every 8th graph is a matmul+bias+tanh chain whose add/tanh pair
+    // fuses by construction, so 25 fused graphs are guaranteed.
+    assert!(fused_graphs >= 25, "only {}/200 generated graphs fused", fused_graphs);
 }
 
 /// The generator actually covers the features it exists for: true

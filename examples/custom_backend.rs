@@ -14,8 +14,8 @@
 //!
 //! Run: `cargo run --release --example custom_backend`
 
-use std::cell::Cell;
-use std::rc::Rc;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 
 use depyf::backend::eager::EagerModule;
 use depyf::graph::Graph;
@@ -23,8 +23,10 @@ use depyf::prelude::*;
 
 /// A user-written graph compiler: delegates execution to the eager
 /// reference executor but counts compilations and tags its output.
+/// Backends are `Send + Sync` (the registry is process-wide and serving
+/// threads share them), so the counter is atomic, not a `Cell`.
 struct CountingBackend {
-    compiles: Cell<usize>,
+    compiles: AtomicUsize,
 }
 
 impl Backend for CountingBackend {
@@ -47,17 +49,15 @@ impl Backend for CountingBackend {
         Ok(CompilePlan::monolithic("counting", req, "eager"))
     }
 
-    fn lower(&self, req: &CompileRequest, plan: &CompilePlan) -> Result<Rc<dyn CompiledModule>, DepyfError> {
-        self.compiles.set(self.compiles.get() + 1);
+    fn lower(&self, req: &CompileRequest, plan: &CompilePlan) -> Result<Arc<dyn CompiledModule>, DepyfError> {
+        let n = self.compiles.fetch_add(1, Ordering::Relaxed) + 1;
         println!(
             "[counting] lowering {} (partition 0 targets '{}'), compile #{}",
-            req.name,
-            plan.partitions[0].target,
-            self.compiles.get()
+            req.name, plan.partitions[0].target, n
         );
-        Ok(Rc::new(EagerModule::with_name(
-            Rc::clone(&req.graph),
-            format!("counting#{}", self.compiles.get()),
+        Ok(Arc::new(EagerModule::with_name(
+            Arc::clone(&req.graph),
+            format!("counting#{}", n),
         )))
     }
 }
@@ -72,7 +72,7 @@ print('f =', f(a, b).item())
 ";
 
 fn main() -> Result<(), DepyfError> {
-    let backend = Rc::new(CountingBackend { compiles: Cell::new(0) });
+    let backend = Arc::new(CountingBackend { compiles: AtomicUsize::new(0) });
     register_backend(backend.clone());
     println!("registered backends: {}", depyf::api::backend_names().join(", "));
 
@@ -93,10 +93,10 @@ fn main() -> Result<(), DepyfError> {
         assert!(g.backend_name.starts_with("counting#"), "{}", g.backend_name);
         assert_eq!(g.module.stats().partitions, 1);
     }
-    assert_eq!(backend.compiles.get(), 1, "second call must hit the dynamo cache");
+    assert_eq!(backend.compiles.load(Ordering::Relaxed), 1, "second call must hit the dynamo cache");
 
     // The same graph, planned standalone: plans are plain data.
-    let g: Rc<Graph> = Rc::clone(&session.dynamo.graphs()[0].1);
+    let g: Arc<Graph> = Arc::clone(&session.dynamo.graphs()[0].1);
     let req = CompileRequest::new("__compiled_fn_1", g);
     let plan = backend.plan(&req)?;
     println!("\n--- CompilePlan (round-trips through JSON) ---\n{}", plan.to_json());

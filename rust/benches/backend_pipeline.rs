@@ -12,6 +12,7 @@
 mod support;
 
 use std::rc::Rc;
+use std::sync::Arc;
 use std::time::Instant;
 
 use depyf::api::{Backend, CompileRequest, EagerBackend, XlaBackend};
@@ -43,8 +44,8 @@ fn inputs_for(g: &Graph, seed: u64) -> Vec<Rc<Tensor>> {
 
 /// Sharded (eager targets) vs plain eager: the cost of stitching.
 fn bench_sharded_eager(rep: &mut support::Reporter) {
-    let g = Rc::new(deep_mlp(16, 32, 4));
-    let req = CompileRequest::new("bench_pipeline", Rc::clone(&g));
+    let g = Arc::new(deep_mlp(16, 32, 4));
+    let req = CompileRequest::new("bench_pipeline", Arc::clone(&g));
     let mono = EagerBackend.compile(&req).expect("eager");
     let sharded = ShardedBackend::with_max_ops(3).compile(&req).expect("sharded");
     assert!(sharded.stats().partitions >= 3);
@@ -70,8 +71,8 @@ fn bench_sharded_xla(rep: &mut support::Reporter) {
         eprintln!("[bench:backend_pipeline] PJRT unavailable, skipping xla section");
         return;
     };
-    let g = Rc::new(deep_mlp(16, 32, 4));
-    let req = CompileRequest::new("bench_pipeline", Rc::clone(&g)).with_runtime(Some(Rc::clone(&rt)));
+    let g = Arc::new(deep_mlp(16, 32, 4));
+    let req = CompileRequest::new("bench_pipeline", Arc::clone(&g)).with_runtime(Some(Arc::clone(&rt)));
 
     let t0 = Instant::now();
     let mono = XlaBackend.compile(&req).expect("xla");
@@ -108,8 +109,8 @@ fn bench_batched(rep: &mut support::Reporter) {
     let t0 = Instant::now();
     let mut bucket_hits = 0u64;
     for &b in &batches {
-        let g = Rc::new(deep_mlp(b, 32, 2));
-        let req = CompileRequest::new("bench_batched", Rc::clone(&g));
+        let g = Arc::new(deep_mlp(b, 32, 2));
+        let req = CompileRequest::new("bench_batched", Arc::clone(&g));
         let module = backend.compile(&req).expect("batched");
         bucket_hits += module.stats().cache_hits;
         // Sanity: padded execution matches the reference executor.
@@ -129,9 +130,9 @@ fn bench_batched(rep: &mut support::Reporter) {
         let base = rt.compiles.get();
         let t0 = Instant::now();
         for &b in &batches {
-            let g = Rc::new(deep_mlp(b, 24, 2));
-            let req = CompileRequest::new("bench_batched", Rc::clone(&g))
-                .with_runtime(Some(Rc::clone(&rt)));
+            let g = Arc::new(deep_mlp(b, 24, 2));
+            let req = CompileRequest::new("bench_batched", Arc::clone(&g))
+                .with_runtime(Some(Arc::clone(&rt)));
             XlaBackend.compile(&req).expect("xla");
         }
         let per_entry = rt.compiles.get() - base;
@@ -141,9 +142,9 @@ fn bench_batched(rep: &mut support::Reporter) {
         let base = rt.compiles.get();
         let t0 = Instant::now();
         for &b in &batches {
-            let g = Rc::new(deep_mlp(b, 48, 2));
-            let req = CompileRequest::new("bench_batched", Rc::clone(&g))
-                .with_runtime(Some(Rc::clone(&rt)));
+            let g = Arc::new(deep_mlp(b, 48, 2));
+            let req = CompileRequest::new("bench_batched", Arc::clone(&g))
+                .with_runtime(Some(Arc::clone(&rt)));
             BatchedBackend::new().compile(&req).expect("batched xla");
         }
         let bucketed = rt.compiles.get() - base;

@@ -10,6 +10,7 @@
 mod support;
 
 use std::rc::Rc;
+use std::sync::Arc;
 use std::time::Instant;
 
 use depyf::api::{Backend, CompileRequest, EagerBackend, XlaBackend};
@@ -49,11 +50,11 @@ fn main() {
     println!("{:<10} {:>6} {:>14} {:>14} {:>10} {:>14}", "graph", "dim", "eager ns", "xla ns", "speedup", "GFLOP/s(xla)");
     for &d in &[16usize, 32, 64, 128, 256] {
         let n = 32;
-        let g = Rc::new(mlp_graph(n, d));
+        let g = Arc::new(mlp_graph(n, d));
         let flops = g.flops();
         let name = format!("bench_d{}", d);
-        let eager = EagerBackend.compile(&CompileRequest::new(&name, Rc::clone(&g))).expect("eager");
-        let xla_req = CompileRequest::new(&name, Rc::clone(&g)).with_runtime(Some(Rc::clone(&rt)));
+        let eager = EagerBackend.compile(&CompileRequest::new(&name, Arc::clone(&g))).expect("eager");
+        let xla_req = CompileRequest::new(&name, Arc::clone(&g)).with_runtime(Some(Arc::clone(&rt)));
         let xla = XlaBackend.compile(&xla_req).expect("xla compile");
         assert_eq!(xla.backend_name(), "xla", "xla backend failed: {}", xla.backend_name());
         let inputs: Vec<Rc<Tensor>> = vec![

@@ -17,6 +17,7 @@
 mod support;
 
 use std::rc::Rc;
+use std::sync::Arc;
 use std::time::Instant;
 
 use depyf::api::{Backend, CompileRequest, EagerBackend, OptLevel};
@@ -104,9 +105,9 @@ fn bench_levels(
     iters: usize,
     seed: u64,
 ) -> (f64, f64) {
-    let g = Rc::new(g);
+    let g = Arc::new(g);
     let mk = |level: OptLevel| {
-        let req = CompileRequest::new(&g.name.clone(), Rc::clone(&g)).with_opt_level(level);
+        let req = CompileRequest::new(&g.name.clone(), Arc::clone(&g)).with_opt_level(level);
         let module = EagerBackend.compile(&req).expect("eager compile");
         let ops = req.optimized().graph.num_ops();
         (module, ops)
@@ -164,7 +165,7 @@ fn main() {
     assert!(const_reduced >= 24.0, "const chain must fold away, removed {}", const_reduced);
 
     // One-off optimizer cost on the largest bench graph.
-    let g = Rc::new(elementwise_chain(128, 256, 6));
+    let g = Arc::new(elementwise_chain(128, 256, 6));
     let t0 = Instant::now();
     let opt = optimize(&g, OptLevel::O2);
     rep.record("optimize_ns", t0.elapsed().as_nanos() as f64, "ns (one-shot)");

@@ -9,6 +9,7 @@
 mod support;
 
 use std::rc::Rc;
+use std::sync::Arc;
 use std::time::Instant;
 
 use depyf::api::{Backend, CompileRequest, EagerBackend, XlaBackend};
@@ -103,8 +104,8 @@ fn bench_table_lookup(rep: &mut support::Reporter) {
 /// Planned eager executor on the paper's MLP block.
 fn bench_eager_mlp(rep: &mut support::Reporter) {
     let (n, d) = (32, 64);
-    let g = Rc::new(mlp_graph(n, d));
-    let f = EagerBackend.compile(&CompileRequest::new("bench_mlp", Rc::clone(&g))).unwrap();
+    let g = Arc::new(mlp_graph(n, d));
+    let f = EagerBackend.compile(&CompileRequest::new("bench_mlp", Arc::clone(&g))).unwrap();
     let mut rng = Rng::new(7);
     let inputs: Vec<Rc<Tensor>> = vec![
         Rc::new(Tensor::randn(&[n, d], &mut rng)),
@@ -129,8 +130,8 @@ fn bench_compile_cache(rep: &mut support::Reporter) {
             return;
         }
     };
-    let g = Rc::new(mlp_graph(8, 16));
-    let req = CompileRequest::new("bench_cc", Rc::clone(&g)).with_runtime(Some(Rc::clone(&rt)));
+    let g = Arc::new(mlp_graph(8, 16));
+    let req = CompileRequest::new("bench_cc", Arc::clone(&g)).with_runtime(Some(Arc::clone(&rt)));
 
     let t0 = Instant::now();
     XlaBackend.compile(&req).expect("xla compile");
@@ -147,7 +148,7 @@ fn bench_compile_cache(rep: &mut support::Reporter) {
 
     // Fresh runtime over the same disk cache: lowering is skipped.
     let rt2 = Runtime::cpu_with_disk_cache(&cache_dir).expect("pjrt");
-    let req2 = CompileRequest::new("bench_cc2", Rc::clone(&g)).with_runtime(Some(Rc::clone(&rt2)));
+    let req2 = CompileRequest::new("bench_cc2", Arc::clone(&g)).with_runtime(Some(Arc::clone(&rt2)));
     let t0 = Instant::now();
     XlaBackend.compile(&req2).expect("xla compile");
     rep.record("compile_cache_disk_warm", t0.elapsed().as_nanos() as f64, "ns (one-shot)");

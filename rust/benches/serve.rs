@@ -1,0 +1,95 @@
+//! Serving throughput vs thread count: the concurrent-dispatch subsystem
+//! measured end to end (dynamo sessions over the table1 model corpus,
+//! shared module cache, per-call latency percentiles).
+//!
+//! Unlike the hot-path benches this one writes its own report —
+//! `BENCH_serve.json` (override with `DEPYF_BENCH_SERVE_OUT`) — because
+//! the serve numbers are a scaling curve, not single hot-path samples.
+//! Schema matches `BENCH_hotpath.json`:
+//! `{"schema_version": 1, "entries": [{"bench", "name", "value", "unit"}]}`.
+//!
+//! Run: `cargo bench --bench serve` (`DEPYF_BENCH_QUICK=1` for the CI
+//! smoke configuration).
+
+mod support;
+
+use depyf::serve::serve_once;
+
+fn out_path() -> String {
+    std::env::var("DEPYF_BENCH_SERVE_OUT").unwrap_or_else(|_| "BENCH_serve.json".into())
+}
+
+fn main() {
+    let quick = support::quick();
+    let iters = if quick { 1 } else { 3 };
+    let limit = if quick { 8 } else { usize::MAX };
+    let thread_counts: &[usize] = if quick { &[1, 2, 4] } else { &[1, 2, 4, 8] };
+
+    let mut entries: Vec<(String, f64, &'static str)> = Vec::new();
+    let mut baseline = 0.0f64;
+    for &threads in thread_counts {
+        let report = serve_once(threads, iters, "eager", limit).expect("serve run");
+        assert_eq!(
+            report.errors, 0,
+            "serve diverged from the single-thread reference: {:?}",
+            report.failures
+        );
+        if threads == 1 {
+            baseline = report.throughput;
+        }
+        println!(
+            "[bench:serve] eager threads={:<2} case-runs={:<5} throughput={:>10.1} runs/s p50={:.3}ms p99={:.3}ms cache hits/misses={}/{}",
+            threads,
+            report.case_runs,
+            report.throughput,
+            report.p50_ms,
+            report.p99_ms,
+            report.module_cache_hits,
+            report.module_cache_misses,
+        );
+        entries.push((format!("throughput_t{}", threads), report.throughput, "runs/s"));
+        entries.push((format!("p50_t{}", threads), report.p50_ms, "ms"));
+        entries.push((format!("p99_t{}", threads), report.p99_ms, "ms"));
+        if threads > 1 && baseline > 0.0 {
+            entries.push((
+                format!("speedup_1_to_{}", threads),
+                report.throughput / baseline,
+                "x",
+            ));
+        }
+    }
+
+    // One async-wrapped point: the worker-pool hop under contention.
+    let async_threads = 4;
+    let report = serve_once(async_threads, iters, "async:eager", limit.min(16))
+        .expect("async serve run");
+    assert_eq!(report.errors, 0, "async serve diverged: {:?}", report.failures);
+    println!(
+        "[bench:serve] async:eager threads={} throughput={:.1} runs/s p99={:.3}ms",
+        async_threads, report.throughput, report.p99_ms
+    );
+    entries.push((format!("async_throughput_t{}", async_threads), report.throughput, "runs/s"));
+
+    let body: Vec<String> = entries
+        .iter()
+        .map(|(name, value, unit)| {
+            format!(
+                "    {{\"bench\": \"serve\", \"name\": \"{}\", \"value\": {:.3}, \"unit\": \"{}\"}}",
+                name, value, unit
+            )
+        })
+        .collect();
+    let doc = format!(
+        "{{\n  \"schema_version\": {},\n  \"entries\": [\n{}\n  ]\n}}\n",
+        support::REPORT_SCHEMA_VERSION,
+        body.join(",\n")
+    );
+    let path = out_path();
+    match std::fs::write(&path, doc) {
+        Ok(()) => println!("[bench:serve] wrote {} entries to {}", entries.len(), path),
+        Err(e) => {
+            eprintln!("[bench:serve] failed to write {}: {}", path, e);
+            std::process::exit(1);
+        }
+    }
+}

@@ -11,11 +11,11 @@
 //! analogue of `torch.compile(backend=...)` accepting both built-in names
 //! and custom callables.
 
-use std::cell::RefCell;
 use std::collections::HashMap;
 use std::fmt;
 use std::ops::BitOr;
 use std::rc::Rc;
+use std::sync::{Arc, Mutex, OnceLock, PoisonError, RwLock};
 
 use crate::backend::{
     batched::BatchedBackend, eager, recording::RecordingBackend, sharded::ShardedBackend, xla,
@@ -55,7 +55,10 @@ impl Capabilities {
     /// Can pad/bucket a dynamic leading dim so one executable serves
     /// multiple guard entries.
     pub const DYNAMIC_BATCH: Capabilities = Capabilities(1 << 1);
-    /// Reserved: returns futures for pipelined execution.
+    /// Modules expose future-returning submission on top of `call` —
+    /// the `async` wrapper backend ([`crate::serve::AsyncBackend`])
+    /// dispatches calls to a worker pool and returns
+    /// [`crate::serve::CallFuture`]s.
     pub const ASYNC: Capabilities = Capabilities(1 << 2);
     /// Cannot lower without a PJRT runtime (`SessionBuilder::runtime`).
     pub const REQUIRES_RUNTIME: Capabilities = Capabilities(1 << 3);
@@ -123,11 +126,10 @@ pub struct InputSpec {
 /// the captured graph, its example-input specs, the guard context that
 /// specialized it, the content-hash cache key, verbosity, the optional
 /// PJRT runtime and the failure policy.
-#[derive(Clone)]
 pub struct CompileRequest {
     /// The installed global's name (`__compiled_fn_N`).
     pub name: String,
-    pub graph: Rc<Graph>,
+    pub graph: Arc<Graph>,
     /// Placeholder names + concrete shapes, in input order.
     pub input_specs: Vec<InputSpec>,
     /// Human-readable guard descriptions attached to this entry.
@@ -136,7 +138,7 @@ pub struct CompileRequest {
     pub cache_key: u64,
     pub verbosity: Verbosity,
     /// PJRT runtime, for backends that lower to HLO.
-    pub runtime: Option<Rc<Runtime>>,
+    pub runtime: Option<Arc<Runtime>>,
     /// Applied by the caller driving [`compile_with_policy`] — backends
     /// themselves must NOT apply it; they report failures and let the
     /// policy decide.
@@ -144,14 +146,34 @@ pub struct CompileRequest {
     /// Optimizer level the plan stage applies (`--opt-level`, default 2).
     pub opt_level: OptLevel,
     /// Memoized optimizer output: `plan` and `lower` share one run.
-    opt: RefCell<Option<Rc<Optimized>>>,
+    /// A `Mutex` (not `RefCell`) so requests can be handed to compile
+    /// worker threads; it is only ever locked briefly, never across a
+    /// compile.
+    opt: Mutex<Option<Arc<Optimized>>>,
+}
+
+impl Clone for CompileRequest {
+    fn clone(&self) -> CompileRequest {
+        CompileRequest {
+            name: self.name.clone(),
+            graph: Arc::clone(&self.graph),
+            input_specs: self.input_specs.clone(),
+            guards: self.guards.clone(),
+            cache_key: self.cache_key,
+            verbosity: self.verbosity,
+            runtime: self.runtime.clone(),
+            fallback: self.fallback,
+            opt_level: self.opt_level,
+            opt: Mutex::new(self.opt.lock().unwrap_or_else(PoisonError::into_inner).clone()),
+        }
+    }
 }
 
 impl CompileRequest {
     /// A request with defaults (no guards, no runtime, `Info` verbosity,
     /// eager fallback, `--opt-level 2`); input specs and cache key derive
     /// from the graph.
-    pub fn new(name: &str, graph: Rc<Graph>) -> CompileRequest {
+    pub fn new(name: &str, graph: Arc<Graph>) -> CompileRequest {
         let input_specs = graph
             .input_shapes()
             .into_iter()
@@ -168,29 +190,30 @@ impl CompileRequest {
             runtime: None,
             fallback: FallbackPolicy::default(),
             opt_level: OptLevel::default(),
-            opt: RefCell::new(None),
+            opt: Mutex::new(None),
         }
     }
 
     /// Run the `graph::opt` pipeline at this request's level, once —
     /// every backend's `plan` and `lower` stage works on
     /// `optimized().graph` (at `O0` that is the captured graph itself).
-    pub fn optimized(&self) -> Rc<Optimized> {
-        if let Some(o) = self.opt.borrow().as_ref() {
-            return Rc::clone(o);
+    pub fn optimized(&self) -> Arc<Optimized> {
+        let mut slot = self.opt.lock().unwrap_or_else(PoisonError::into_inner);
+        if let Some(o) = slot.as_ref() {
+            return Arc::clone(o);
         }
-        let o = Rc::new(optimize(&self.graph, self.opt_level));
-        *self.opt.borrow_mut() = Some(Rc::clone(&o));
+        let o = Arc::new(optimize(&self.graph, self.opt_level));
+        *slot = Some(Arc::clone(&o));
         o
     }
 
     pub fn with_opt_level(mut self, level: OptLevel) -> CompileRequest {
         self.opt_level = level;
-        *self.opt.borrow_mut() = None;
+        *self.opt.lock().unwrap_or_else(PoisonError::into_inner) = None;
         self
     }
 
-    pub fn with_runtime(mut self, rt: Option<Rc<Runtime>>) -> CompileRequest {
+    pub fn with_runtime(mut self, rt: Option<Arc<Runtime>>) -> CompileRequest {
         self.runtime = rt;
         self
     }
@@ -242,7 +265,12 @@ pub struct ModuleStats {
 /// Beyond `call`, a module is *inspectable*: `artifacts()` returns the
 /// per-partition/per-bucket dumps (plan JSON, HLO text) the session
 /// indexes in `manifest.json`, and `stats()` feeds `metrics.json`.
-pub trait CompiledModule {
+///
+/// Modules are `Send + Sync`: compile once, dispatch from any number of
+/// threads (`Arc<dyn CompiledModule>` is the shared handle — see the
+/// "Concurrent serving" section of the crate docs). Inputs are
+/// call-local `Rc<Tensor>`s; only the module itself crosses threads.
+pub trait CompiledModule: Send + Sync {
     /// Execute the module on tensor inputs shaped like the original graph.
     fn call(&self, inputs: &[Rc<Tensor>]) -> Result<Vec<Tensor>, DepyfError>;
 
@@ -264,7 +292,7 @@ pub trait CompiledModule {
 pub struct FnModule {
     backend_name: String,
     #[allow(clippy::type_complexity)]
-    f: Box<dyn Fn(&[Rc<Tensor>]) -> Result<Vec<Tensor>, DepyfError>>,
+    f: Box<dyn Fn(&[Rc<Tensor>]) -> Result<Vec<Tensor>, DepyfError> + Send + Sync>,
 }
 
 impl CompiledModule for FnModule {
@@ -280,9 +308,9 @@ impl CompiledModule for FnModule {
 /// Wrap a closure as a [`CompiledModule`].
 pub fn module_from_fn(
     backend_name: impl Into<String>,
-    f: impl Fn(&[Rc<Tensor>]) -> Result<Vec<Tensor>, DepyfError> + 'static,
-) -> Rc<dyn CompiledModule> {
-    Rc::new(FnModule { backend_name: backend_name.into(), f: Box::new(f) })
+    f: impl Fn(&[Rc<Tensor>]) -> Result<Vec<Tensor>, DepyfError> + Send + Sync + 'static,
+) -> Arc<dyn CompiledModule> {
+    Arc::new(FnModule { backend_name: backend_name.into(), f: Box::new(f) })
 }
 
 /// A graph compiler in two explicit stages. `plan` decides *what* to build
@@ -290,7 +318,11 @@ pub fn module_from_fn(
 /// [`CompilePlan`]; `lower` turns that plan into an executable
 /// [`CompiledModule`]. Implementations are registered by name and looked
 /// up like `torch.compile(backend="name")`.
-pub trait Backend {
+///
+/// Backends are `Send + Sync` and live in a process-wide registry:
+/// compiles may be issued from any thread, so internal caches must use
+/// `Mutex`/atomics rather than `RefCell`/`Cell`.
+pub trait Backend: Send + Sync {
     /// Registry key and the default `backend_name` stamped on output.
     fn name(&self) -> &str;
 
@@ -311,10 +343,10 @@ pub trait Backend {
     fn plan(&self, req: &CompileRequest) -> Result<CompilePlan, DepyfError>;
 
     /// Stage 2: realize a plan as an executable module.
-    fn lower(&self, req: &CompileRequest, plan: &CompilePlan) -> Result<Rc<dyn CompiledModule>, DepyfError>;
+    fn lower(&self, req: &CompileRequest, plan: &CompilePlan) -> Result<Arc<dyn CompiledModule>, DepyfError>;
 
     /// Convenience: plan + lower in one step.
-    fn compile(&self, req: &CompileRequest) -> Result<Rc<dyn CompiledModule>, DepyfError> {
+    fn compile(&self, req: &CompileRequest) -> Result<Arc<dyn CompiledModule>, DepyfError> {
         let plan = self.plan(req)?;
         self.lower(req, &plan)
     }
@@ -328,9 +360,9 @@ pub trait Backend {
 /// *verbatim* (no optimizer): the fallback is the most conservative
 /// executor available, usable even when a backend choked on the
 /// optimized graph.
-pub fn eager_graph_fn(name: &str, graph: Rc<Graph>, backend_name: String) -> CompiledGraphFn {
-    let module: Rc<dyn CompiledModule> =
-        Rc::new(eager::EagerModule::with_fusion(Rc::clone(&graph), backend_name, false));
+pub fn eager_graph_fn(name: &str, graph: Arc<Graph>, backend_name: String) -> CompiledGraphFn {
+    let module: Arc<dyn CompiledModule> =
+        Arc::new(eager::EagerModule::with_fusion(Arc::clone(&graph), backend_name, false));
     CompiledGraphFn::from_module(name, graph, module)
 }
 
@@ -347,10 +379,10 @@ impl Backend for EagerBackend {
         Ok(CompilePlan::monolithic("eager", req, "eager"))
     }
 
-    fn lower(&self, req: &CompileRequest, _plan: &CompilePlan) -> Result<Rc<dyn CompiledModule>, DepyfError> {
+    fn lower(&self, req: &CompileRequest, _plan: &CompilePlan) -> Result<Arc<dyn CompiledModule>, DepyfError> {
         let opt = req.optimized();
-        Ok(Rc::new(eager::EagerModule::with_fusion(
-            Rc::clone(&opt.graph),
+        Ok(Arc::new(eager::EagerModule::with_fusion(
+            Arc::clone(&opt.graph),
             "eager".into(),
             req.opt_level.fuses(),
         )))
@@ -377,12 +409,12 @@ impl Backend for XlaBackend {
         Ok(CompilePlan::monolithic("xla", req, "xla"))
     }
 
-    fn lower(&self, req: &CompileRequest, _plan: &CompilePlan) -> Result<Rc<dyn CompiledModule>, DepyfError> {
+    fn lower(&self, req: &CompileRequest, _plan: &CompilePlan) -> Result<Arc<dyn CompiledModule>, DepyfError> {
         let rt = req.runtime.as_ref().ok_or_else(|| {
             DepyfError::Backend("xla backend requires a PJRT runtime (SessionBuilder::runtime)".into())
         })?;
         let opt = req.optimized();
-        Ok(Rc::new(xla::compile_module(&req.name, &opt.graph, rt)?))
+        Ok(Arc::new(xla::compile_module(&req.name, &opt.graph, rt)?))
     }
 }
 
@@ -408,7 +440,7 @@ pub struct PolicyCompiled {
 pub fn compile_with_policy(backend: &dyn Backend, req: &CompileRequest) -> Result<PolicyCompiled, DepyfError> {
     match backend.compile(req) {
         Ok(module) => Ok(PolicyCompiled {
-            f: CompiledGraphFn::from_module(&req.name, Rc::clone(&req.graph), module),
+            f: CompiledGraphFn::from_module(&req.name, Arc::clone(&req.graph), module),
             fallback_reason: None,
         }),
         Err(e) => match req.fallback {
@@ -416,7 +448,7 @@ pub fn compile_with_policy(backend: &dyn Backend, req: &CompileRequest) -> Resul
             FallbackPolicy::Eager => {
                 let f = eager_graph_fn(
                     &req.name,
-                    Rc::clone(&req.graph),
+                    Arc::clone(&req.graph),
                     format!("eager ({} fallback: {})", backend.name(), e),
                 );
                 Ok(PolicyCompiled { f, fallback_reason: Some(e) })
@@ -425,45 +457,58 @@ pub fn compile_with_policy(backend: &dyn Backend, req: &CompileRequest) -> Resul
     }
 }
 
-thread_local! {
-    static REGISTRY: RefCell<HashMap<String, Rc<dyn Backend>>> = RefCell::new(builtin_backends());
+/// The process-wide backend registry. A `RwLock` so dispatch-path lookups
+/// from any number of serving threads proceed in parallel and never block
+/// on each other; `register_backend` writes are rare (startup, tests).
+/// Lazily initialized with the builtins on first use.
+static REGISTRY: OnceLock<RwLock<HashMap<String, Arc<dyn Backend>>>> = OnceLock::new();
+
+fn registry() -> &'static RwLock<HashMap<String, Arc<dyn Backend>>> {
+    REGISTRY.get_or_init(|| RwLock::new(builtin_backends()))
 }
 
-fn builtin_backends() -> HashMap<String, Rc<dyn Backend>> {
-    let mut m: HashMap<String, Rc<dyn Backend>> = HashMap::new();
-    m.insert("eager".into(), Rc::new(EagerBackend));
-    m.insert("xla".into(), Rc::new(XlaBackend));
-    m.insert("sharded".into(), Rc::new(ShardedBackend::new()));
-    m.insert("batched".into(), Rc::new(BatchedBackend::new()));
+fn builtin_backends() -> HashMap<String, Arc<dyn Backend>> {
+    let mut m: HashMap<String, Arc<dyn Backend>> = HashMap::new();
+    m.insert("eager".into(), Arc::new(EagerBackend));
+    m.insert("xla".into(), Arc::new(XlaBackend));
+    m.insert("sharded".into(), Arc::new(ShardedBackend::new()));
+    m.insert("batched".into(), Arc::new(BatchedBackend::new()));
     // The default recording wrapper decorates the eager reference executor;
     // wrap any other backend via RecordingBackend::new / ::wrapping.
-    m.insert("recording".into(), Rc::new(RecordingBackend::new(Rc::new(EagerBackend))));
+    m.insert("recording".into(), Arc::new(RecordingBackend::new(Arc::new(EagerBackend))));
+    // The async wrapper likewise defaults to eager; `async:<name>` on the
+    // CLI wraps any registered backend.
+    m.insert("async".into(), Arc::new(crate::serve::AsyncBackend::new(Arc::new(EagerBackend))));
+    // The sharded partition chain with one stage thread per shard.
+    m.insert("pipelined".into(), Arc::new(crate::serve::PipelinedShardedBackend::new()));
     m
 }
 
 /// Register (or replace) a backend under its `name()`. Registered backends
 /// are visible to [`lookup_backend`], `SessionBuilder::backend_named` and
-/// the CLI's `--backend` flag. The registry is per-thread (the whole stack
-/// is `Rc`-based and single-threaded).
-pub fn register_backend(backend: Rc<dyn Backend>) {
-    REGISTRY.with(|r| {
-        r.borrow_mut().insert(backend.name().to_string(), backend);
-    });
+/// the CLI's `--backend` flag. The registry is **process-wide** and
+/// thread-safe: backends registered on any thread are visible to all
+/// (which is why [`Backend`] is `Send + Sync`).
+pub fn register_backend(backend: Arc<dyn Backend>) {
+    registry()
+        .write()
+        .unwrap_or_else(PoisonError::into_inner)
+        .insert(backend.name().to_string(), backend);
 }
 
-/// Look up a registered backend by name (`"eager"`, `"xla"`, `"sharded"`
-/// and `"batched"` are pre-registered).
-pub fn lookup_backend(name: &str) -> Option<Rc<dyn Backend>> {
-    REGISTRY.with(|r| r.borrow().get(name).cloned())
+/// Look up a registered backend by name (`"eager"`, `"xla"`, `"sharded"`,
+/// `"batched"`, `"recording"` and `"async"` are pre-registered). Takes the
+/// registry read lock only — concurrent lookups never serialize.
+pub fn lookup_backend(name: &str) -> Option<Arc<dyn Backend>> {
+    registry().read().unwrap_or_else(PoisonError::into_inner).get(name).cloned()
 }
 
 /// All registered backend names, sorted — for usage messages and docs.
 pub fn backend_names() -> Vec<String> {
-    REGISTRY.with(|r| {
-        let mut v: Vec<String> = r.borrow().keys().cloned().collect();
-        v.sort();
-        v
-    })
+    let mut v: Vec<String> =
+        registry().read().unwrap_or_else(PoisonError::into_inner).keys().cloned().collect();
+    v.sort();
+    v
 }
 
 #[cfg(test)]
@@ -472,12 +517,12 @@ mod tests {
     use crate::graph::OpKind;
     use crate::tensor::Tensor;
 
-    fn relu_graph() -> Rc<Graph> {
+    fn relu_graph() -> Arc<Graph> {
         let mut g = Graph::new("g");
         let x = g.placeholder("x", &[2]);
         let r = g.add_op(OpKind::Relu, vec![x]).unwrap();
         g.set_outputs(vec![r]);
-        Rc::new(g)
+        Arc::new(g)
     }
 
     #[test]
@@ -509,7 +554,7 @@ mod tests {
     #[test]
     fn request_derives_specs_and_cache_key() {
         let g = relu_graph();
-        let req = CompileRequest::new("g", Rc::clone(&g));
+        let req = CompileRequest::new("g", Arc::clone(&g));
         assert_eq!(req.cache_key, g.content_hash());
         assert_eq!(req.input_specs, vec![InputSpec { name: "x".into(), shape: vec![2] }]);
         assert!(req.guards.is_empty() && req.runtime.is_none());
@@ -529,11 +574,11 @@ mod tests {
                 &self,
                 req: &CompileRequest,
                 _plan: &CompilePlan,
-            ) -> Result<Rc<dyn CompiledModule>, DepyfError> {
-                Ok(Rc::new(eager::EagerModule::with_name(Rc::clone(&req.graph), "doubler-test".into())))
+            ) -> Result<Arc<dyn CompiledModule>, DepyfError> {
+                Ok(Arc::new(eager::EagerModule::with_name(Arc::clone(&req.graph), "doubler-test".into())))
             }
         }
-        register_backend(Rc::new(Doubler));
+        register_backend(Arc::new(Doubler));
         let b = lookup_backend("doubler-test").expect("registered");
         assert_eq!(b.name(), "doubler-test");
         assert!(!b.requires_runtime());
@@ -578,8 +623,8 @@ mod tests {
                 &self,
                 req: &CompileRequest,
                 _plan: &CompilePlan,
-            ) -> Result<Rc<dyn CompiledModule>, DepyfError> {
-                Ok(Rc::new(eager::EagerModule::with_name(Rc::clone(&req.graph), "tagger-v2".into())))
+            ) -> Result<Arc<dyn CompiledModule>, DepyfError> {
+                Ok(Arc::new(eager::EagerModule::with_name(Arc::clone(&req.graph), "tagger-v2".into())))
             }
         }
         let pc = compile_with_policy(&Tagger, &CompileRequest::new("g", relu_graph())).unwrap();

@@ -22,6 +22,7 @@
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::rc::Rc;
+use std::sync::Arc;
 
 use crate::bytecode::IsaVersion;
 use crate::debugger::Debugger;
@@ -109,10 +110,10 @@ impl std::fmt::Debug for Session {
 /// Fluent configuration for [`Session`]; see the module docs for the shape.
 pub struct SessionBuilder {
     dir: Option<PathBuf>,
-    backend: Option<Rc<dyn Backend>>,
+    backend: Option<Arc<dyn Backend>>,
     backend_name: Option<String>,
     isa: IsaVersion,
-    runtime: Option<Rc<Runtime>>,
+    runtime: Option<Arc<Runtime>>,
     trace: TraceMode,
     fallback: FallbackPolicy,
     require: Capabilities,
@@ -235,7 +236,7 @@ fn render_optimized_txt(name: &str, opt: &Optimized) -> String {
 /// optimizer pass deltas that shaped its planned graph.
 fn render_modules_json(
     compiled: &[Rc<crate::graph::CompiledGraphFn>],
-    optimizations: &[(String, Rc<Optimized>)],
+    optimizations: &[(String, Arc<Optimized>)],
 ) -> String {
     let opt_json = |name: &str| -> String {
         let Some((_, opt)) = optimizations.iter().find(|(n, _)| n == name) else {
@@ -280,7 +281,7 @@ impl SessionBuilder {
     }
 
     /// Compile captured graphs with this backend instance.
-    pub fn backend(mut self, backend: Rc<dyn Backend>) -> SessionBuilder {
+    pub fn backend(mut self, backend: Arc<dyn Backend>) -> SessionBuilder {
         self.backend = Some(backend);
         self.backend_name = None;
         self
@@ -301,7 +302,7 @@ impl SessionBuilder {
     }
 
     /// PJRT runtime for backends that lower to HLO (e.g. `xla`).
-    pub fn runtime(mut self, rt: Rc<Runtime>) -> SessionBuilder {
+    pub fn runtime(mut self, rt: Arc<Runtime>) -> SessionBuilder {
         self.runtime = Some(rt);
         self
     }
@@ -341,7 +342,7 @@ impl SessionBuilder {
         let dir = self
             .dir
             .ok_or_else(|| DepyfError::Builder("SessionBuilder: dump_to(dir) is required".into()))?;
-        let backend: Rc<dyn Backend> = match (self.backend, self.backend_name) {
+        let backend: Arc<dyn Backend> = match (self.backend, self.backend_name) {
             (Some(b), _) => b,
             (None, Some(name)) => lookup_backend(&name).ok_or_else(|| {
                 DepyfError::Builder(format!(
@@ -350,7 +351,7 @@ impl SessionBuilder {
                     backend_names().join(", ")
                 ))
             })?,
-            (None, None) => Rc::new(EagerBackend),
+            (None, None) => Arc::new(EagerBackend),
         };
         // StepGraphs routes every graph through the traced eager executor,
         // so the backend is never consulted and needs no runtime.

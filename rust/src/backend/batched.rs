@@ -16,9 +16,9 @@
 //! that fail the analysis compile exactly (no padding) — correctness is
 //! never traded for reuse.
 
-use std::cell::RefCell;
 use std::collections::HashMap;
 use std::rc::Rc;
+use std::sync::{Arc, Mutex, PoisonError};
 
 use crate::api::{
     ArtifactKind, Backend, Capabilities, CompilePlan, CompileRequest, CompiledModule, DepyfError,
@@ -291,7 +291,10 @@ fn slice_rows(t: &Tensor, orig: usize) -> Tensor {
 /// plans keyed on (padded-graph content hash, fusion flag) — the PJRT
 /// path reuses the runtime's own content-hash cache.
 pub struct BatchedBackend {
-    eager_plans: RefCell<HashMap<(u64, bool), Rc<ExecPlan>>>,
+    /// `Mutex` (not `RefCell`): the backend sits in the process-wide
+    /// registry, so guard entries on different threads may lower into the
+    /// same bucket concurrently.
+    eager_plans: Mutex<HashMap<(u64, bool), Arc<ExecPlan>>>,
 }
 
 impl Default for BatchedBackend {
@@ -302,7 +305,7 @@ impl Default for BatchedBackend {
 
 impl BatchedBackend {
     pub fn new() -> BatchedBackend {
-        BatchedBackend { eager_plans: RefCell::new(HashMap::new()) }
+        BatchedBackend { eager_plans: Mutex::new(HashMap::new()) }
     }
 }
 
@@ -341,15 +344,15 @@ impl Backend for BatchedBackend {
         Ok(plan)
     }
 
-    fn lower(&self, req: &CompileRequest, plan: &CompilePlan) -> Result<Rc<dyn CompiledModule>, DepyfError> {
+    fn lower(&self, req: &CompileRequest, plan: &CompilePlan) -> Result<Arc<dyn CompiledModule>, DepyfError> {
         let opt = req.optimized();
         let target = plan.partitions.first().map(|p| p.target.as_str()).unwrap_or("eager");
         let (exec_graph, batch) = match &plan.batch {
-            Some(b) => (Rc::new(pad_graph_from_plan(&opt.graph, b)?), Some(b.clone())),
-            None => (Rc::clone(&opt.graph), None),
+            Some(b) => (Arc::new(pad_graph_from_plan(&opt.graph, b)?), Some(b.clone())),
+            None => (Arc::clone(&opt.graph), None),
         };
         let mut cache_hits = 0u64;
-        let inner: Rc<dyn CompiledModule> = match target {
+        let inner: Arc<dyn CompiledModule> = match target {
             "xla" => {
                 let rt = req.runtime.as_ref().ok_or_else(|| {
                     DepyfError::Backend("batched: plan targets xla but no runtime was provided".into())
@@ -360,30 +363,37 @@ impl Backend for BatchedBackend {
                 };
                 let module = xla::compile_module(&inner_name, &exec_graph, rt)?;
                 cache_hits += module.cache_hit as u64;
-                Rc::new(module)
+                Arc::new(module)
             }
             _ => {
                 let key = (exec_graph.content_hash(), req.opt_level.fuses());
-                let cached = self.eager_plans.borrow().get(&key).cloned();
-                let plan_rc = match cached {
+                // Plan-building happens outside the lock; a racing thread
+                // may build the same plan, but the map stays consistent and
+                // both plans execute identically (last insert wins).
+                let cached =
+                    self.eager_plans.lock().unwrap_or_else(PoisonError::into_inner).get(&key).cloned();
+                let plan_arc = match cached {
                     Some(p) => {
                         cache_hits += 1;
                         p
                     }
                     None => {
-                        let p = Rc::new(ExecPlan::with_fusion(
-                            Rc::clone(&exec_graph),
+                        let p = Arc::new(ExecPlan::with_fusion(
+                            Arc::clone(&exec_graph),
                             req.opt_level.fuses(),
                         ));
-                        self.eager_plans.borrow_mut().insert(key, Rc::clone(&p));
+                        self.eager_plans
+                            .lock()
+                            .unwrap_or_else(PoisonError::into_inner)
+                            .insert(key, Arc::clone(&p));
                         p
                     }
                 };
-                Rc::new(SharedPlanModule { plan: plan_rc })
+                Arc::new(SharedPlanModule { plan: plan_arc })
             }
         };
-        Ok(Rc::new(BatchedModule {
-            graph: Rc::clone(&opt.graph),
+        Ok(Arc::new(BatchedModule {
+            graph: Arc::clone(&opt.graph),
             inner,
             batch,
             plan_json: plan.to_json(),
@@ -393,10 +403,10 @@ impl Backend for BatchedBackend {
     }
 }
 
-/// An eager [`ExecPlan`] shared (via `Rc`) across every guard entry whose
+/// An eager [`ExecPlan`] shared (via `Arc`) across every guard entry whose
 /// padded graph lands in the same bucket.
 struct SharedPlanModule {
-    plan: Rc<ExecPlan>,
+    plan: Arc<ExecPlan>,
 }
 
 impl CompiledModule for SharedPlanModule {
@@ -412,8 +422,8 @@ impl CompiledModule for SharedPlanModule {
 /// The lowered batched module: pad flagged inputs to the bucket, run the
 /// shared inner executable, slice flagged outputs back.
 pub struct BatchedModule {
-    graph: Rc<Graph>,
-    inner: Rc<dyn CompiledModule>,
+    graph: Arc<Graph>,
+    inner: Arc<dyn CompiledModule>,
     batch: Option<BatchPlan>,
     plan_json: String,
     name: String,
@@ -547,8 +557,8 @@ mod tests {
     #[test]
     fn padded_execution_is_bitwise_equal() {
         for batch in [1usize, 3, 5, 6, 7, 8] {
-            let g = Rc::new(mlp(batch, 4));
-            let req = CompileRequest::new("bm", Rc::clone(&g));
+            let g = Arc::new(mlp(batch, 4));
+            let req = CompileRequest::new("bm", Arc::clone(&g));
             let b = BatchedBackend::new();
             let plan = b.plan(&req).unwrap();
             assert_eq!(plan.batch.as_ref().unwrap().bucket, batch.next_power_of_two());
@@ -570,20 +580,24 @@ mod tests {
         // identical, so the second lower reuses the first's ExecPlan.
         let backend = BatchedBackend::new();
         for (i, batch) in [5usize, 6].into_iter().enumerate() {
-            let g = Rc::new(mlp(batch, 4));
-            let req = CompileRequest::new("bm", Rc::clone(&g));
+            let g = Arc::new(mlp(batch, 4));
+            let req = CompileRequest::new("bm", Arc::clone(&g));
             let plan = backend.plan(&req).unwrap();
             let module = backend.lower(&req, &plan).unwrap();
             assert_eq!(module.stats().cache_hits, i as u64, "batch={}", batch);
             assert_eq!(module.stats().bucket, Some(8));
         }
-        assert_eq!(backend.eager_plans.borrow().len(), 1, "one plan serves the bucket");
+        assert_eq!(
+            backend.eager_plans.lock().unwrap().len(),
+            1,
+            "one plan serves the bucket"
+        );
         // A different bucket (16) compiles separately.
-        let g = Rc::new(mlp(9, 4));
-        let req = CompileRequest::new("bm", Rc::clone(&g));
+        let g = Arc::new(mlp(9, 4));
+        let req = CompileRequest::new("bm", Arc::clone(&g));
         let plan = backend.plan(&req).unwrap();
         backend.lower(&req, &plan).unwrap();
-        assert_eq!(backend.eager_plans.borrow().len(), 2);
+        assert_eq!(backend.eager_plans.lock().unwrap().len(), 2);
     }
 
     /// Satellite: rows exactly at a power of two take the no-pad fast
@@ -592,8 +606,8 @@ mod tests {
     #[test]
     fn bucket_boundary_rows_exactly_at_power_of_two() {
         for batch in [1usize, 2, 4, 8, 16] {
-            let g = Rc::new(mlp(batch, 4));
-            let req = CompileRequest::new("bm", Rc::clone(&g));
+            let g = Arc::new(mlp(batch, 4));
+            let req = CompileRequest::new("bm", Arc::clone(&g));
             let backend = BatchedBackend::new();
             let plan = backend.plan(&req).unwrap();
             let b = plan.batch.as_ref().expect("mlp is batch-safe");
@@ -610,8 +624,8 @@ mod tests {
             }
         }
         // One past the boundary pads up to the next bucket.
-        let g = Rc::new(mlp(9, 4));
-        let req = CompileRequest::new("bm", Rc::clone(&g));
+        let g = Arc::new(mlp(9, 4));
+        let req = CompileRequest::new("bm", Arc::clone(&g));
         let backend = BatchedBackend::new();
         let plan = backend.plan(&req).unwrap();
         assert_eq!(plan.batch.as_ref().unwrap().bucket, 16);
@@ -622,8 +636,8 @@ mod tests {
     /// bitwise-identical to eager.
     #[test]
     fn zero_row_inputs_fall_back_exactly() {
-        let g = Rc::new(mlp(0, 4));
-        let req = CompileRequest::new("bm0", Rc::clone(&g));
+        let g = Arc::new(mlp(0, 4));
+        let req = CompileRequest::new("bm0", Arc::clone(&g));
         let backend = BatchedBackend::new();
         let plan = backend.plan(&req).unwrap();
         assert!(plan.batch.is_none(), "batch 0 must not be bucketed");
@@ -680,8 +694,8 @@ mod tests {
             }),
         ];
         for (why, g) in cases {
-            let g = Rc::new(g);
-            let req = CompileRequest::new(&g.name.clone(), Rc::clone(&g));
+            let g = Arc::new(g);
+            let req = CompileRequest::new(&g.name.clone(), Arc::clone(&g));
             let backend = BatchedBackend::new();
             let plan = backend.plan(&req).unwrap();
             assert!(plan.batch.is_none(), "{} must not be padded", why);
@@ -718,8 +732,8 @@ mod tests {
         let x = g.placeholder("x", &[5, 3]);
         let s = g.add_op(OpKind::Mean(None), vec![x]).unwrap();
         g.set_outputs(vec![s]);
-        let g = Rc::new(g);
-        let req = CompileRequest::new("exact", Rc::clone(&g));
+        let g = Arc::new(g);
+        let req = CompileRequest::new("exact", Arc::clone(&g));
         let backend = BatchedBackend::new();
         let plan = backend.plan(&req).unwrap();
         assert!(plan.batch.is_none(), "row-mixing graph must not be padded");
@@ -733,8 +747,8 @@ mod tests {
 
     #[test]
     fn plan_artifact_records_the_bucket_decision() {
-        let g = Rc::new(mlp(5, 4));
-        let req = CompileRequest::new("bm", Rc::clone(&g));
+        let g = Arc::new(mlp(5, 4));
+        let req = CompileRequest::new("bm", Arc::clone(&g));
         let backend = BatchedBackend::new();
         let plan = backend.plan(&req).unwrap();
         let module = backend.lower(&req, &plan).unwrap();
@@ -752,12 +766,12 @@ mod tests {
         let ids = g.placeholder("ids", &[3]);
         let e = g.add_op(OpKind::Embedding, vec![table, ids]).unwrap();
         g.set_outputs(vec![e]);
-        let g = Rc::new(g);
+        let g = Arc::new(g);
         // ids is the *second* input, but it is the first rank>=1 input to
         // define the batch? No: table comes first, so batch = 10 and only
         // coincidental dims flag. The analysis must still be *correct*:
         // compare against eager either way.
-        let req = CompileRequest::new("emb", Rc::clone(&g));
+        let req = CompileRequest::new("emb", Arc::clone(&g));
         let backend = BatchedBackend::new();
         let plan = backend.plan(&req).unwrap();
         let module = backend.lower(&req, &plan).unwrap();

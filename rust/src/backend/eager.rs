@@ -21,9 +21,9 @@
 //! `OpKind`, so `graph::serde` / `content_hash` / trace bundles are
 //! untouched (see `graph::opt` module docs).
 
-use std::cell::RefCell;
 use std::collections::HashMap;
 use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 use crate::api::{CompiledModule, DepyfError};
 use crate::graph::{Graph, NodeId, NodeKind, OpKind};
@@ -201,7 +201,10 @@ pub struct FusedRegion {
     /// dense ones).
     strides: Vec<Vec<usize>>,
     /// Reused chunk buffers — steady-state calls reallocate nothing.
-    scratch: RefCell<FuseScratch>,
+    /// A `Mutex` (uncontended in the common case) so one plan can be
+    /// dispatched from many threads; a contended call falls back to a
+    /// local scratch rather than blocking.
+    scratch: Mutex<FuseScratch>,
 }
 
 impl FusedRegion {
@@ -233,11 +236,11 @@ impl FusedRegion {
         let chunk = n.min(FUSE_CHUNK).max(1);
         let any_gather = self.dense.iter().any(|d| !d);
         let last = self.ops.len() - 1;
-        // Reused chunk buffers (the try_borrow fallback covers exotic
-        // aliasing of one plan from two callables, like the env arena).
+        // Reused chunk buffers (the try_lock fallback covers concurrent
+        // dispatch of one plan from several threads, like the env arena).
         let mut borrowed;
         let mut local;
-        let scratch: &mut FuseScratch = match self.scratch.try_borrow_mut() {
+        let scratch: &mut FuseScratch = match self.scratch.try_lock() {
             Ok(b) => {
                 borrowed = b;
                 &mut *borrowed
@@ -482,7 +485,7 @@ fn fuse_steps(g: &Graph) -> Vec<Step> {
                     ops,
                     dense,
                     strides,
-                    scratch: RefCell::new(FuseScratch::default()),
+                    scratch: Mutex::new(FuseScratch::default()),
                 }));
             }
         }
@@ -493,9 +496,9 @@ fn fuse_steps(g: &Graph) -> Vec<Step> {
 /// A per-graph execution plan: everything derivable from the graph alone,
 /// computed once when the backend compiles it instead of on every call.
 pub struct ExecPlan {
-    graph: Rc<Graph>,
+    graph: Arc<Graph>,
     /// Env template with constants pre-materialized (`ConstScalar` /
-    /// `ConstTensor` nodes); tensors share storage via `Rc`, so cloning
+    /// `ConstTensor` nodes); tensors share storage via `Arc`, so cloning
     /// the template per call is pointer-cheap.
     template: Vec<Option<Tensor>>,
     /// Execution steps in order: plain op evaluations and fused
@@ -506,23 +509,25 @@ pub struct ExecPlan {
     /// (not used by any later step and not a graph output). Freed eagerly
     /// so peak memory is bounded by live values, not graph size.
     dead_after: Vec<Vec<NodeId>>,
-    /// Reused env buffer — steady-state calls reallocate nothing.
-    arena: RefCell<Vec<Option<Tensor>>>,
+    /// Reused env buffer — steady-state calls reallocate nothing. A
+    /// `Mutex` so the plan is `Sync`; concurrent callers that lose the
+    /// `try_lock` race use a local env instead of serializing.
+    arena: Mutex<Vec<Option<Tensor>>>,
 }
 
 impl ExecPlan {
     /// Plan with elementwise fusion on (the `--opt-level 2` executor).
-    pub fn new(graph: Rc<Graph>) -> ExecPlan {
+    pub fn new(graph: Arc<Graph>) -> ExecPlan {
         ExecPlan::with_fusion(graph, true)
     }
 
     /// Plan without fusion: one step per op node, exactly the pre-fusion
     /// executor (`--opt-level 0|1`).
-    pub fn unfused(graph: Rc<Graph>) -> ExecPlan {
+    pub fn unfused(graph: Arc<Graph>) -> ExecPlan {
         ExecPlan::with_fusion(graph, false)
     }
 
-    pub fn with_fusion(graph: Rc<Graph>, fuse: bool) -> ExecPlan {
+    pub fn with_fusion(graph: Arc<Graph>, fuse: bool) -> ExecPlan {
         let mut template: Vec<Option<Tensor>> = vec![None; graph.nodes.len()];
         for (id, node) in graph.nodes.iter().enumerate() {
             match &node.kind {
@@ -571,10 +576,10 @@ impl ExecPlan {
                 }
             }
         }
-        ExecPlan { graph, template, steps, dead_after, arena: RefCell::new(Vec::new()) }
+        ExecPlan { graph, template, steps, dead_after, arena: Mutex::new(Vec::new()) }
     }
 
-    pub fn graph(&self) -> &Rc<Graph> {
+    pub fn graph(&self) -> &Arc<Graph> {
         &self.graph
     }
 
@@ -602,7 +607,7 @@ impl ExecPlan {
         g.check_inputs(inputs)?;
         let mut borrowed;
         let mut local;
-        let env: &mut Vec<Option<Tensor>> = match self.arena.try_borrow_mut() {
+        let env: &mut Vec<Option<Tensor>> = match self.arena.try_lock() {
             Ok(b) => {
                 borrowed = b;
                 &mut *borrowed
@@ -650,17 +655,17 @@ pub struct EagerModule {
 }
 
 impl EagerModule {
-    pub fn new(graph: Rc<Graph>) -> EagerModule {
+    pub fn new(graph: Arc<Graph>) -> EagerModule {
         EagerModule::with_name(graph, "eager".into())
     }
 
-    pub fn with_name(graph: Rc<Graph>, backend_name: String) -> EagerModule {
+    pub fn with_name(graph: Arc<Graph>, backend_name: String) -> EagerModule {
         EagerModule { plan: ExecPlan::new(graph), backend_name }
     }
 
     /// Explicit fusion control — backends thread `OptLevel::fuses()` here
     /// so `--opt-level 0|1` really runs the pre-fusion executor.
-    pub fn with_fusion(graph: Rc<Graph>, backend_name: String, fuse: bool) -> EagerModule {
+    pub fn with_fusion(graph: Arc<Graph>, backend_name: String, fuse: bool) -> EagerModule {
         EagerModule { plan: ExecPlan::with_fusion(graph, fuse), backend_name }
     }
 
@@ -794,8 +799,8 @@ mod tests {
 
     #[test]
     fn plan_matches_unplanned_execution() {
-        let g = Rc::new(mlp(4, 8));
-        let plan = ExecPlan::new(Rc::clone(&g));
+        let g = Arc::new(mlp(4, 8));
+        let plan = ExecPlan::new(Arc::clone(&g));
         let mut rng = Rng::new(11);
         for _ in 0..3 {
             let inputs: Vec<Rc<Tensor>> = vec![
@@ -821,7 +826,7 @@ mod tests {
         let r = g.add_op(OpKind::Relu, vec![x]).unwrap();
         let e = g.add_op(OpKind::Exp, vec![r]).unwrap();
         g.set_outputs(vec![r, e]);
-        let plan = ExecPlan::new(Rc::new(g));
+        let plan = ExecPlan::new(Arc::new(g));
         let out = plan.run(&[Rc::new(Tensor::new(vec![3], vec![-1.0, 0.0, 1.0]))]).unwrap();
         assert_eq!(out[0].data(), &[0.0, 0.0, 1.0]);
         assert!((out[1].data()[2] - 1.0f32.exp()).abs() < 1e-6);
@@ -854,9 +859,9 @@ mod tests {
 
     #[test]
     fn fused_plan_is_bitwise_equal_to_unfused_and_traced() {
-        let g = Rc::new(elementwise_chain());
-        let fused = ExecPlan::new(Rc::clone(&g));
-        let unfused = ExecPlan::unfused(Rc::clone(&g));
+        let g = Arc::new(elementwise_chain());
+        let fused = ExecPlan::new(Arc::clone(&g));
+        let unfused = ExecPlan::unfused(Arc::clone(&g));
         assert!(fused.fused_regions() >= 1, "chain must fuse");
         assert!(fused.fused_ops() >= 4, "{}", fused.fused_ops());
         assert_eq!(unfused.fused_regions(), 0);
@@ -883,7 +888,7 @@ mod tests {
         let r = g.add_op(OpKind::Relu, vec![x]).unwrap();
         let e = g.add_op(OpKind::Exp, vec![r]).unwrap();
         g.set_outputs(vec![r, e]);
-        let plan = ExecPlan::new(Rc::new(g));
+        let plan = ExecPlan::new(Arc::new(g));
         // r is an output: the two ops cannot collapse into one region.
         assert_eq!(plan.fused_regions(), 0);
         let out = plan.run(&[Rc::new(Tensor::new(vec![4], vec![-1.0, 0.0, 1.0, 2.0]))]).unwrap();
@@ -897,8 +902,8 @@ mod tests {
         let s = g.add_op(OpKind::Sum(None), vec![r]).unwrap();
         let m = g.add_op(OpKind::Add, vec![t, s]).unwrap();
         g.set_outputs(vec![m]);
-        let g = Rc::new(g);
-        let plan = ExecPlan::new(Rc::clone(&g));
+        let g = Arc::new(g);
+        let plan = ExecPlan::new(Arc::clone(&g));
         let mut rng = Rng::new(3);
         let inputs = vec![Rc::new(Tensor::randn(&[4], &mut rng))];
         assert_bitwise_eq(&plan.run(&inputs).unwrap(), &execute(&g, &inputs).unwrap(), "mixed");
@@ -916,8 +921,8 @@ mod tests {
         let a = g.add_op(OpKind::Add, vec![x, nb]).unwrap(); // shape [2,3]
         let r = g.add_op(OpKind::Relu, vec![a]).unwrap();
         g.set_outputs(vec![r]);
-        let g = Rc::new(g);
-        let plan = ExecPlan::new(Rc::clone(&g));
+        let g = Arc::new(g);
+        let plan = ExecPlan::new(Arc::clone(&g));
         assert_eq!(plan.fused_regions(), 1);
         assert_eq!(plan.fused_ops(), 3);
         let mut rng = Rng::new(9);
@@ -928,8 +933,8 @@ mod tests {
 
     #[test]
     fn matmul_heavy_graphs_gain_no_regions() {
-        let g = Rc::new(mlp(4, 8));
-        let plan = ExecPlan::new(Rc::clone(&g));
+        let g = Arc::new(mlp(4, 8));
+        let plan = ExecPlan::new(Arc::clone(&g));
         // mlp: matmul/softmax/sum break the chain; relu+mul(c) still fuse.
         assert_eq!(plan.fused_regions(), 1);
         assert_eq!(plan.fused_ops(), 2);
@@ -937,8 +942,8 @@ mod tests {
 
     #[test]
     fn plan_checks_inputs_like_reference() {
-        let g = Rc::new(mlp(2, 4));
-        let plan = ExecPlan::new(Rc::clone(&g));
+        let g = Arc::new(mlp(2, 4));
+        let plan = ExecPlan::new(Arc::clone(&g));
         assert!(plan.run(&[]).is_err());
         assert!(plan
             .run(&[

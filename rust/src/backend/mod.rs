@@ -8,7 +8,7 @@
 //! [`Capabilities`](crate::api::Capabilities) bitset validated up front by
 //! the registry and `SessionBuilder`. Everything here is re-exported for
 //! convenience. (The legacy `BackendKind` / `compile_graph` shims are
-//! gone — use a registered backend name or `Rc<dyn Backend>`.)
+//! gone — use a registered backend name or `Arc<dyn Backend>`.)
 
 pub mod batched;
 pub mod eager;
@@ -42,6 +42,7 @@ mod tests {
     use crate::graph::{Graph, OpKind};
     use crate::tensor::Tensor;
     use std::rc::Rc;
+    use std::sync::Arc;
 
     #[test]
     fn eager_compile_and_call() {
@@ -49,7 +50,7 @@ mod tests {
         let x = g.placeholder("x", &[2]);
         let r = g.add_op(OpKind::Relu, vec![x]).unwrap();
         g.set_outputs(vec![r]);
-        let req = CompileRequest::new("__compiled_fn_0", Rc::new(g));
+        let req = CompileRequest::new("__compiled_fn_0", Arc::new(g));
         let pc = compile_with_policy(&EagerBackend, &req).unwrap();
         let out = pc.f.call(&[Rc::new(Tensor::new(vec![2], vec![-1.0, 2.0]))]).unwrap();
         assert_eq!(out[0].data(), &[0.0, 2.0]);
@@ -61,7 +62,7 @@ mod tests {
         let mut g = Graph::new("g");
         let x = g.placeholder("x", &[2]);
         g.set_outputs(vec![x]);
-        let req = CompileRequest::new("g", Rc::new(g));
+        let req = CompileRequest::new("g", Arc::new(g));
         let pc = compile_with_policy(&XlaBackend, &req).unwrap();
         assert!(pc.f.backend_name.starts_with("eager"));
         assert!(pc.fallback_reason.is_some());

@@ -17,6 +17,7 @@
 //! environment, reassembling the original graph's outputs.
 
 use std::rc::Rc;
+use std::sync::Arc;
 
 use crate::api::{CompiledModule, DepyfError};
 use crate::graph::{Graph, NodeId, NodeKind};
@@ -213,23 +214,28 @@ pub fn extract(g: &Graph, part: &Partition, name: &str) -> Result<Graph, DepyfEr
 /// One compiled partition inside a [`Stitcher`].
 pub struct StitchPart {
     pub part: Partition,
-    pub module: Rc<dyn CompiledModule>,
+    pub module: Arc<dyn CompiledModule>,
 }
 
 /// Executes a list of partition modules over a shared environment indexed
 /// by original-graph node ids, reassembling the original outputs.
 pub struct Stitcher {
-    graph: Rc<Graph>,
+    graph: Arc<Graph>,
     parts: Vec<StitchPart>,
 }
 
 impl Stitcher {
-    pub fn new(graph: Rc<Graph>, parts: Vec<StitchPart>) -> Stitcher {
+    pub fn new(graph: Arc<Graph>, parts: Vec<StitchPart>) -> Stitcher {
         Stitcher { graph, parts }
     }
 
     pub fn parts(&self) -> &[StitchPart] {
         &self.parts
+    }
+
+    /// The original (pre-partition) graph the stitcher reassembles.
+    pub fn graph(&self) -> &Arc<Graph> {
+        &self.graph
     }
 
     pub fn run(&self, inputs: &[Rc<Tensor>]) -> Result<Vec<Tensor>, DepyfError> {
@@ -348,7 +354,7 @@ mod tests {
 
     #[test]
     fn extracted_subgraphs_stitch_back_to_reference() {
-        let g = Rc::new(mlp());
+        let g = Arc::new(mlp());
         let mut rng = Rng::new(42);
         let inputs: Vec<Rc<Tensor>> = vec![
             Rc::new(Tensor::randn(&[4, 8], &mut rng)),
@@ -363,11 +369,11 @@ mod tests {
                 .enumerate()
                 .map(|(i, part)| {
                     let sub = extract(&g, &part, &format!("mlp.p{}", i)).unwrap();
-                    let module: Rc<dyn CompiledModule> = Rc::new(EagerModule::new(Rc::new(sub)));
+                    let module: Arc<dyn CompiledModule> = Arc::new(EagerModule::new(Arc::new(sub)));
                     StitchPart { part, module }
                 })
                 .collect();
-            let stitcher = Stitcher::new(Rc::clone(&g), stitch_parts);
+            let stitcher = Stitcher::new(Arc::clone(&g), stitch_parts);
             let got = stitcher.run(&inputs).unwrap();
             assert_eq!(got.len(), want.len());
             for (a, b) in got.iter().zip(want.iter()) {
@@ -386,7 +392,7 @@ mod tests {
         let m = g.add_op(OpKind::Mul, vec![x, c]).unwrap();
         let a = g.add_op(OpKind::Add, vec![m, ct]).unwrap();
         g.set_outputs(vec![a, ct]);
-        let g = Rc::new(g);
+        let g = Arc::new(g);
         let parts = partition_by_ops(&g, 1);
         assert_eq!(parts.len(), 2);
         // Constants never appear as cross-partition inputs.
@@ -401,11 +407,11 @@ mod tests {
             .enumerate()
             .map(|(i, part)| {
                 let sub = extract(&g, &part, &format!("c.p{}", i)).unwrap();
-                let module: Rc<dyn CompiledModule> = Rc::new(EagerModule::new(Rc::new(sub)));
+                let module: Arc<dyn CompiledModule> = Arc::new(EagerModule::new(Arc::new(sub)));
                 StitchPart { part, module }
             })
             .collect();
-        let got = Stitcher::new(Rc::clone(&g), stitch_parts)
+        let got = Stitcher::new(Arc::clone(&g), stitch_parts)
             .run(&[Rc::new(Tensor::new(vec![2], vec![1.0, 2.0]))])
             .unwrap();
         assert_eq!(got[0].data(), &[7.0, 10.0]);

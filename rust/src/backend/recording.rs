@@ -14,8 +14,8 @@
 //! replaying each against oracle intermediates ([`localize_divergence`]);
 //! every divergence yields a minimized single-op repro bundle.
 
-use std::cell::RefCell;
 use std::rc::Rc;
+use std::sync::{Arc, Mutex, PoisonError};
 
 use crate::api::trace::{TraceBundle, TraceCall};
 use crate::api::{
@@ -31,11 +31,11 @@ use super::partition::{extract, partition_by_ops};
 
 /// Wraps an inner backend; every lowered module records its calls.
 pub struct RecordingBackend {
-    inner: Rc<dyn Backend>,
+    inner: Arc<dyn Backend>,
 }
 
 impl RecordingBackend {
-    pub fn new(inner: Rc<dyn Backend>) -> RecordingBackend {
+    pub fn new(inner: Arc<dyn Backend>) -> RecordingBackend {
         RecordingBackend { inner }
     }
 
@@ -52,7 +52,7 @@ impl RecordingBackend {
     }
 
     /// The wrapped backend.
-    pub fn inner(&self) -> &Rc<dyn Backend> {
+    pub fn inner(&self) -> &Arc<dyn Backend> {
         &self.inner
     }
 }
@@ -73,17 +73,17 @@ impl Backend for RecordingBackend {
         self.inner.plan(req)
     }
 
-    fn lower(&self, req: &CompileRequest, plan: &CompilePlan) -> Result<Rc<dyn CompiledModule>, DepyfError> {
+    fn lower(&self, req: &CompileRequest, plan: &CompilePlan) -> Result<Arc<dyn CompiledModule>, DepyfError> {
         let module = self.inner.lower(req, plan)?;
-        Ok(Rc::new(RecordingModule {
+        Ok(Arc::new(RecordingModule {
             name: req.name.clone(),
             backend_name: format!("recording({})", module.backend_name()),
             inner_backend: module.backend_name().to_string(),
-            graph: Rc::clone(&req.graph),
+            graph: Arc::clone(&req.graph),
             guards: req.guards.clone(),
             cache_key: req.cache_key,
             inner: module,
-            calls: RefCell::new(Vec::new()),
+            calls: Mutex::new(Vec::new()),
         }))
     }
 }
@@ -95,11 +95,14 @@ pub struct RecordingModule {
     name: String,
     backend_name: String,
     inner_backend: String,
-    graph: Rc<Graph>,
+    graph: Arc<Graph>,
     guards: Vec<String>,
     cache_key: u64,
-    inner: Rc<dyn CompiledModule>,
-    calls: RefCell<Vec<TraceCall>>,
+    inner: Arc<dyn CompiledModule>,
+    /// Appended under a `Mutex`: concurrent callers record their calls in
+    /// arrival order (any interleaving is a valid trace — each entry is
+    /// self-contained).
+    calls: Mutex<Vec<TraceCall>>,
 }
 
 /// The guard-entry id baked into a compiled fn's name (`__compiled_fn_N`
@@ -126,13 +129,13 @@ impl RecordingModule {
             guards: self.guards.clone(),
             stats: self.inner.stats(),
             graph: (*self.graph).clone(),
-            calls: self.calls.borrow().clone(),
+            calls: self.calls.lock().unwrap_or_else(PoisonError::into_inner).clone(),
         }
     }
 
     /// Calls recorded so far.
     pub fn recorded_calls(&self) -> usize {
-        self.calls.borrow().len()
+        self.calls.lock().unwrap_or_else(PoisonError::into_inner).len()
     }
 
     /// The dump-dir file name for this module's trace: content hash for
@@ -145,7 +148,7 @@ impl RecordingModule {
 impl CompiledModule for RecordingModule {
     fn call(&self, inputs: &[Rc<Tensor>]) -> Result<Vec<Tensor>, DepyfError> {
         let outputs = self.inner.call(inputs)?;
-        self.calls.borrow_mut().push(TraceCall {
+        self.calls.lock().unwrap_or_else(PoisonError::into_inner).push(TraceCall {
             inputs: inputs.iter().map(|t| (**t).clone()).collect(),
             outputs: outputs.clone(),
         });
@@ -182,7 +185,7 @@ pub struct ReplayOptions {
     /// backends like XLA whose fusion reorders float accumulation).
     pub eps: f32,
     /// Runtime handed to backends that lower to PJRT.
-    pub runtime: Option<Rc<Runtime>>,
+    pub runtime: Option<Arc<Runtime>>,
     /// Localize each mismatch to the first diverging op (slower: compiles
     /// one single-op subgraph per graph node).
     pub localize: bool,
@@ -335,7 +338,7 @@ fn oracle_env(graph: &Graph, inputs: &[Rc<Tensor>]) -> Result<Vec<Option<Tensor>
 /// earlier one. Returns `None` when every op matches in isolation (the
 /// divergence only manifests composed, e.g. fused accumulation order).
 pub fn localize_divergence(
-    graph: &Rc<Graph>,
+    graph: &Arc<Graph>,
     inputs: &[Rc<Tensor>],
     backend: &dyn Backend,
     opts: &ReplayOptions,
@@ -343,9 +346,9 @@ pub fn localize_divergence(
     let env = oracle_env(graph, inputs)?;
     for part in partition_by_ops(graph, 1) {
         let node = *part.nodes.first().expect("single-op partition");
-        let sub = Rc::new(extract(graph, &part, &format!("{}.v{}", graph.name, node))?);
+        let sub = Arc::new(extract(graph, &part, &format!("{}.v{}", graph.name, node))?);
         let sub_name = sub.name.clone();
-        let req = CompileRequest::new(&sub_name, Rc::clone(&sub))
+        let req = CompileRequest::new(&sub_name, Arc::clone(&sub))
             .with_runtime(opts.runtime.clone())
             .with_fallback(FallbackPolicy::Error)
             .with_opt_level(opts.opt_level);
@@ -416,8 +419,8 @@ pub fn replay_bundle(
     oracle: Option<&dyn Backend>,
     opts: &ReplayOptions,
 ) -> Result<ReplayReport, DepyfError> {
-    let graph = Rc::new(bundle.graph.clone());
-    let req = CompileRequest::new(&bundle.name, Rc::clone(&graph))
+    let graph = Arc::new(bundle.graph.clone());
+    let req = CompileRequest::new(&bundle.name, Arc::clone(&graph))
         .with_runtime(opts.runtime.clone())
         .with_guards(bundle.guards.clone())
         .with_fallback(FallbackPolicy::Error)
@@ -491,14 +494,14 @@ mod tests {
     use crate::hijack::DumpDir;
     use crate::tensor::Rng;
 
-    fn chain_graph(name: &str) -> Rc<Graph> {
+    fn chain_graph(name: &str) -> Arc<Graph> {
         let mut g = Graph::new(name);
         let x = g.placeholder("x", &[2, 3]);
         let r = g.add_op(OpKind::Relu, vec![x]).unwrap();
         let e = g.add_op(OpKind::Exp, vec![r]).unwrap();
         let n = g.add_op(OpKind::Neg, vec![e]).unwrap();
         g.set_outputs(vec![n]);
-        Rc::new(g)
+        Arc::new(g)
     }
 
     fn rand_inputs(g: &Graph, seed: u64) -> Vec<Rc<Tensor>> {
@@ -508,7 +511,7 @@ mod tests {
 
     #[test]
     fn wrapper_inherits_capabilities_and_registers() {
-        let rec = RecordingBackend::new(Rc::new(crate::backend::ShardedBackend::new()));
+        let rec = RecordingBackend::new(Arc::new(crate::backend::ShardedBackend::new()));
         assert!(rec.capabilities().contains(Capabilities::WRAPPER));
         assert!(rec.capabilities().contains(Capabilities::PARTITION));
         assert!(!rec.requires_runtime());
@@ -522,9 +525,9 @@ mod tests {
     #[test]
     fn record_then_replay_round_trips_through_text() {
         let g = chain_graph("__compiled_fn_1");
-        let req = CompileRequest::new("__compiled_fn_1", Rc::clone(&g))
+        let req = CompileRequest::new("__compiled_fn_1", Arc::clone(&g))
             .with_guards(vec!["check_tensor(args[0], shape=[2, 3])".into()]);
-        let rec = RecordingBackend::new(Rc::new(EagerBackend));
+        let rec = RecordingBackend::new(Arc::new(EagerBackend));
         let module = rec.compile(&req).unwrap();
         assert_eq!(module.backend_name(), "recording(eager)");
         for seed in [1u64, 2, 3] {
@@ -567,12 +570,12 @@ mod tests {
         let n2 = g.add_op(OpKind::Neg, vec![n1]).unwrap();
         let r = g.add_op(OpKind::Gelu, vec![n2]).unwrap();
         g.set_outputs(vec![r]);
-        let g = Rc::new(g);
+        let g = Arc::new(g);
         let opt = crate::graph::optimize(&g, OptLevel::O2);
         assert!(opt.changed(), "test graph must actually optimize");
 
-        let req = CompileRequest::new("__compiled_fn_3", Rc::clone(&g));
-        let module = RecordingBackend::new(Rc::new(EagerBackend)).compile(&req).unwrap();
+        let req = CompileRequest::new("__compiled_fn_3", Arc::clone(&g));
+        let module = RecordingBackend::new(Arc::new(EagerBackend)).compile(&req).unwrap();
         module.call(&rand_inputs(&g, 21)).unwrap();
         let trace = module.artifacts().into_iter().find(|a| a.kind == ArtifactKind::Trace).unwrap();
         let bundle = TraceBundle::parse(&trace.content).unwrap();
@@ -590,8 +593,8 @@ mod tests {
     #[test]
     fn replay_detects_tampered_outputs() {
         let g = chain_graph("__compiled_fn_1");
-        let req = CompileRequest::new("__compiled_fn_1", Rc::clone(&g));
-        let module = RecordingBackend::new(Rc::new(EagerBackend)).compile(&req).unwrap();
+        let req = CompileRequest::new("__compiled_fn_1", Arc::clone(&g));
+        let module = RecordingBackend::new(Arc::new(EagerBackend)).compile(&req).unwrap();
         module.call(&rand_inputs(&g, 9)).unwrap();
         let trace = module.artifacts().into_iter().find(|a| a.kind == ArtifactKind::Trace).unwrap();
         let mut bundle = TraceBundle::parse(&trace.content).unwrap();
@@ -651,9 +654,9 @@ mod tests {
             &self,
             req: &CompileRequest,
             _plan: &CompilePlan,
-        ) -> Result<Rc<dyn CompiledModule>, DepyfError> {
-            let wrong = Rc::new(sabotage_exp(&req.graph));
-            Ok(Rc::new(EagerModule::with_name(wrong, "buggy-exp".into())))
+        ) -> Result<Arc<dyn CompiledModule>, DepyfError> {
+            let wrong = Arc::new(sabotage_exp(&req.graph));
+            Ok(Arc::new(EagerModule::with_name(wrong, "buggy-exp".into())))
         }
     }
 
@@ -661,8 +664,8 @@ mod tests {
     fn localization_names_the_diverging_op() {
         let g = chain_graph("__compiled_fn_2");
         // Record ground truth with the honest eager backend.
-        let req = CompileRequest::new("__compiled_fn_2", Rc::clone(&g));
-        let module = RecordingBackend::new(Rc::new(EagerBackend)).compile(&req).unwrap();
+        let req = CompileRequest::new("__compiled_fn_2", Arc::clone(&g));
+        let module = RecordingBackend::new(Arc::new(EagerBackend)).compile(&req).unwrap();
         module.call(&rand_inputs(&g, 4)).unwrap();
         let bundle = TraceBundle::parse(
             &module.artifacts().into_iter().find(|a| a.kind == ArtifactKind::Trace).unwrap().content,
@@ -710,9 +713,9 @@ mod tests {
         let g1 = chain_graph("__compiled_fn_1");
         let g2 = chain_graph("__compiled_fn_2");
         assert_eq!(g1.content_hash(), g2.content_hash(), "same structure must share a hash");
-        let rec = RecordingBackend::new(Rc::new(EagerBackend));
-        let m1 = rec.compile(&CompileRequest::new("__compiled_fn_1", Rc::clone(&g1))).unwrap();
-        let m2 = rec.compile(&CompileRequest::new("__compiled_fn_2", Rc::clone(&g2))).unwrap();
+        let rec = RecordingBackend::new(Arc::new(EagerBackend));
+        let m1 = rec.compile(&CompileRequest::new("__compiled_fn_1", Arc::clone(&g1))).unwrap();
+        let m2 = rec.compile(&CompileRequest::new("__compiled_fn_2", Arc::clone(&g2))).unwrap();
         m1.call(&rand_inputs(&g1, 1)).unwrap();
         m2.call(&rand_inputs(&g2, 2)).unwrap();
         m2.call(&rand_inputs(&g2, 3)).unwrap();

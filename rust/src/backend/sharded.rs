@@ -13,9 +13,9 @@
 //! [`Stitcher`](super::partition::Stitcher). Partition boundaries are
 //! recorded as a typed plan artifact plus per-partition HLO dumps.
 
-use std::cell::RefCell;
 use std::collections::HashMap;
 use std::rc::Rc;
+use std::sync::{Arc, Mutex, PoisonError};
 
 use crate::api::{
     ArtifactKind, Backend, Capabilities, CompilePlan, CompileRequest, CompiledModule, DepyfError,
@@ -39,8 +39,10 @@ pub struct ShardedBackend {
     /// Subgraphs extracted at `plan()` time, keyed by content hash, so
     /// `lower()` reuses them instead of re-running extraction (names are
     /// excluded from the hash; structurally identical shards share one
-    /// entry, like the runtime's executable cache).
-    subgraphs: RefCell<HashMap<u64, Rc<crate::graph::Graph>>>,
+    /// entry, like the runtime's executable cache). A `Mutex` because the
+    /// backend lives in the process-wide registry and compiles can be
+    /// issued from any thread.
+    subgraphs: Mutex<HashMap<u64, Arc<crate::graph::Graph>>>,
 }
 
 impl Default for ShardedBackend {
@@ -56,7 +58,7 @@ impl ShardedBackend {
 
     /// Override the per-shard op budget (≥ 1).
     pub fn with_max_ops(max_ops: usize) -> ShardedBackend {
-        ShardedBackend { max_ops: max_ops.max(1), subgraphs: RefCell::new(HashMap::new()) }
+        ShardedBackend { max_ops: max_ops.max(1), subgraphs: Mutex::new(HashMap::new()) }
     }
 }
 
@@ -77,9 +79,9 @@ impl Backend for ShardedBackend {
         let parts = partition_by_ops(&opt.graph, self.max_ops);
         let mut partitions = Vec::with_capacity(parts.len());
         for (i, part) in parts.iter().enumerate() {
-            let sub = Rc::new(extract(&opt.graph, part, &shard_name(&req.name, i))?);
+            let sub = Arc::new(extract(&opt.graph, part, &shard_name(&req.name, i))?);
             let cache_key = sub.content_hash();
-            self.subgraphs.borrow_mut().insert(cache_key, sub);
+            self.subgraphs.lock().unwrap_or_else(PoisonError::into_inner).insert(cache_key, sub);
             partitions.push(PartitionPlan {
                 index: i,
                 target: target.to_string(),
@@ -99,7 +101,28 @@ impl Backend for ShardedBackend {
         })
     }
 
-    fn lower(&self, req: &CompileRequest, plan: &CompilePlan) -> Result<Rc<dyn CompiledModule>, DepyfError> {
+    fn lower(&self, req: &CompileRequest, plan: &CompilePlan) -> Result<Arc<dyn CompiledModule>, DepyfError> {
+        let (stitcher, cache_hits) = self.lower_stitcher(req, plan)?;
+        Ok(Arc::new(ShardedModule {
+            stitcher,
+            plan_json: plan.to_json(),
+            name: req.name.clone(),
+            cache_hits,
+        }))
+    }
+}
+
+impl ShardedBackend {
+    /// Lower every partition of `plan` to its module and wire the results
+    /// through a [`Stitcher`]. Shared by `lower()` (sequential stitching)
+    /// and the serving pipeline ([`crate::serve::PipelinedShardedModule`]),
+    /// which runs each partition on its own stage thread instead. Returns
+    /// the stitcher plus the number of per-shard compile-cache hits.
+    pub fn lower_stitcher(
+        &self,
+        req: &CompileRequest,
+        plan: &CompilePlan,
+    ) -> Result<(Stitcher, u64), DepyfError> {
         let opt = req.optimized();
         let mut stitch_parts = Vec::with_capacity(plan.partitions.len());
         let mut cache_hits = 0u64;
@@ -111,11 +134,17 @@ impl Backend for ShardedBackend {
             };
             // Reuse the subgraph plan() extracted; fall back to a fresh
             // extraction for externally-supplied (e.g. parsed) plans.
-            let sub = match self.subgraphs.borrow().get(&p.cache_key).cloned() {
+            let cached = self
+                .subgraphs
+                .lock()
+                .unwrap_or_else(PoisonError::into_inner)
+                .get(&p.cache_key)
+                .cloned();
+            let sub = match cached {
                 Some(s) => s,
-                None => Rc::new(extract(&opt.graph, &part, &shard_name(&req.name, p.index))?),
+                None => Arc::new(extract(&opt.graph, &part, &shard_name(&req.name, p.index))?),
             };
-            let module: Rc<dyn CompiledModule> = match p.target.as_str() {
+            let module: Arc<dyn CompiledModule> = match p.target.as_str() {
                 "xla" => {
                     let rt = req.runtime.as_ref().ok_or_else(|| {
                         DepyfError::Backend(format!(
@@ -125,22 +154,17 @@ impl Backend for ShardedBackend {
                     })?;
                     let m = xla::compile_module(&shard_name(&req.name, p.index), &sub, rt)?;
                     cache_hits += m.cache_hit as u64;
-                    Rc::new(m)
+                    Arc::new(m)
                 }
-                _ => Rc::new(EagerModule::with_fusion(
-                    Rc::clone(&sub),
+                _ => Arc::new(EagerModule::with_fusion(
+                    Arc::clone(&sub),
                     "eager".into(),
                     req.opt_level.fuses(),
                 )),
             };
             stitch_parts.push(StitchPart { part, module });
         }
-        Ok(Rc::new(ShardedModule {
-            stitcher: Stitcher::new(Rc::clone(&opt.graph), stitch_parts),
-            plan_json: plan.to_json(),
-            name: req.name.clone(),
-            cache_hits,
-        }))
+        Ok((Stitcher::new(Arc::clone(&opt.graph), stitch_parts), cache_hits))
     }
 }
 
@@ -218,8 +242,8 @@ mod tests {
 
     #[test]
     fn plan_shards_and_records_per_partition_keys() {
-        let g = Rc::new(deep_chain(9)); // 10 ops
-        let req = CompileRequest::new("chain", Rc::clone(&g));
+        let g = Arc::new(deep_chain(9)); // 10 ops
+        let req = CompileRequest::new("chain", Arc::clone(&g));
         let backend = ShardedBackend::with_max_ops(4);
         let plan = backend.plan(&req).unwrap();
         assert!(plan.partitions.len() >= 3, "{:?}", plan.partitions.len());
@@ -236,8 +260,8 @@ mod tests {
     #[test]
     fn sharded_is_bitwise_equal_to_eager() {
         for max_ops in [1usize, 2, 4, 100] {
-            let g = Rc::new(deep_chain(7));
-            let req = CompileRequest::new("chain", Rc::clone(&g));
+            let g = Arc::new(deep_chain(7));
+            let req = CompileRequest::new("chain", Arc::clone(&g));
             let backend = ShardedBackend::with_max_ops(max_ops);
             let module = backend.compile(&req).unwrap();
             let inputs = rand_inputs(&g, 11);
@@ -252,8 +276,8 @@ mod tests {
 
     #[test]
     fn module_artifacts_expose_the_plan() {
-        let g = Rc::new(deep_chain(5));
-        let req = CompileRequest::new("chain", Rc::clone(&g));
+        let g = Arc::new(deep_chain(5));
+        let req = CompileRequest::new("chain", Arc::clone(&g));
         let backend = ShardedBackend::with_max_ops(2);
         let module = backend.compile(&req).unwrap();
         let arts = module.artifacts();
@@ -273,8 +297,8 @@ mod tests {
         let e = g.add_op(OpKind::Exp, vec![r]).unwrap();
         let n = g.add_op(OpKind::Neg, vec![e]).unwrap();
         g.set_outputs(vec![r, n]);
-        let g = Rc::new(g);
-        let req = CompileRequest::new("multi", Rc::clone(&g));
+        let g = Arc::new(g);
+        let req = CompileRequest::new("multi", Arc::clone(&g));
         let module = ShardedBackend::with_max_ops(1).compile(&req).unwrap();
         let inputs = rand_inputs(&g, 5);
         let got = module.call(&inputs).unwrap();

@@ -9,6 +9,7 @@
 
 use std::fmt::Write as _;
 use std::rc::Rc;
+use std::sync::Arc;
 
 use crate::api::{ArtifactKind, CompiledModule, DepyfError, ModuleArtifact, ModuleStats};
 use crate::graph::{CompiledGraphFn, Graph, NodeKind, OpKind};
@@ -24,9 +25,9 @@ pub fn cache_key(graph: &Graph) -> String {
 /// text it was compiled from (dumped as a typed artifact at `finish()`).
 pub struct XlaModule {
     name: String,
-    graph: Rc<Graph>,
-    rt: Rc<Runtime>,
-    exe: Rc<Executable>,
+    graph: Arc<Graph>,
+    rt: Arc<Runtime>,
+    exe: Arc<Executable>,
     /// True when the executable was served from the runtime's
     /// content-hash cache instead of compiled fresh.
     pub cache_hit: bool,
@@ -67,7 +68,7 @@ impl CompiledModule for XlaModule {
 /// [`Runtime`]. With a runtime disk cache, the lowered HLO is persisted
 /// under the same key so repeated runs skip `emit_hlo` entirely and feed
 /// PJRT the cached text.
-pub fn compile_module(name: &str, graph: &Rc<Graph>, rt: &Rc<Runtime>) -> Result<XlaModule, DepyfError> {
+pub fn compile_module(name: &str, graph: &Arc<Graph>, rt: &Arc<Runtime>) -> Result<XlaModule, DepyfError> {
     let key = cache_key(graph);
     let n_outputs = graph.outputs.len();
     let (exe, cache_hit) = match rt.cached_executable(&key) {
@@ -84,13 +85,13 @@ pub fn compile_module(name: &str, graph: &Rc<Graph>, rt: &Rc<Runtime>) -> Result
             (rt.compile_hlo_text(&key, &hlo, n_outputs)?, false)
         }
     };
-    Ok(XlaModule { name: name.to_string(), graph: Rc::clone(graph), rt: Rc::clone(rt), exe, cache_hit })
+    Ok(XlaModule { name: name.to_string(), graph: Arc::clone(graph), rt: Arc::clone(rt), exe, cache_hit })
 }
 
 /// Compile a graph and wrap it as a [`CompiledGraphFn`] (tests, benches).
-pub fn compile(name: &str, graph: &Rc<Graph>, rt: &Rc<Runtime>) -> Result<CompiledGraphFn, DepyfError> {
+pub fn compile(name: &str, graph: &Arc<Graph>, rt: &Arc<Runtime>) -> Result<CompiledGraphFn, DepyfError> {
     let module = compile_module(name, graph, rt)?;
-    Ok(CompiledGraphFn::from_module(name, Rc::clone(graph), Rc::new(module)))
+    Ok(CompiledGraphFn::from_module(name, Arc::clone(graph), Arc::new(module)))
 }
 
 fn f32ty(shape: &[usize]) -> String {
@@ -542,7 +543,7 @@ mod tests {
 
     fn cross_check(g: &Graph, inputs: Vec<Tensor>, tol: f32) {
         let rt = Runtime::cpu().expect("pjrt");
-        let g = Rc::new(g.clone());
+        let g = Arc::new(g.clone());
         let f = compile("test", &g, &rt).unwrap_or_else(|e| panic!("xla compile failed: {}\n{}", e, emit_hlo(&g).unwrap()));
         let rcs: Vec<Rc<Tensor>> = inputs.into_iter().map(Rc::new).collect();
         let got = f.call(&rcs).expect("xla exec");
@@ -679,14 +680,14 @@ mod tests {
         cross_check(&g, vec![Tensor::ones(&[2, 2])], 1e-6);
     }
 
-    fn small_graph(name: &str) -> Rc<Graph> {
+    fn small_graph(name: &str) -> Arc<Graph> {
         let mut g = Graph::new(name);
         let x = g.placeholder("x", &[2, 2]);
         let c = g.const_scalar(2.0);
         let m = g.add_op(OpKind::Mul, vec![x, c]).unwrap();
         let s = g.add_op(OpKind::Sum(None), vec![m]).unwrap();
         g.set_outputs(vec![s]);
-        Rc::new(g)
+        Arc::new(g)
     }
 
     /// Structurally identical graphs — however they are named, whichever
@@ -708,7 +709,7 @@ mod tests {
         let x0 = g.placeholder("x", &[2, 2]);
         let r = g.add_op(OpKind::Relu, vec![x0]).unwrap();
         g.set_outputs(vec![r]);
-        compile("other", &Rc::new(g), &rt).unwrap();
+        compile("other", &Arc::new(g), &rt).unwrap();
         assert_eq!(rt.compiles.get(), 2);
     }
 

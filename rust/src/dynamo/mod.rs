@@ -20,6 +20,7 @@ pub use sym::{Origin, Sym};
 use std::cell::RefCell;
 use std::collections::{HashMap, HashSet};
 use std::rc::Rc;
+use std::sync::Arc;
 
 use crate::api::{
     compile_with_policy, module_from_fn, Backend, CompileRequest, DepyfError, EagerBackend, FallbackPolicy,
@@ -56,7 +57,7 @@ pub enum Verbosity {
 pub struct DynamoConfig {
     /// The graph compiler — any [`Backend`] implementation (built-in or
     /// registered via [`crate::api::register_backend`]).
-    pub backend: Rc<dyn Backend>,
+    pub backend: Arc<dyn Backend>,
     /// What happens when the backend fails on a captured graph. The degrade
     /// (or error) is always recorded in the frontend log — never silent.
     pub fallback: FallbackPolicy,
@@ -78,14 +79,17 @@ pub struct DynamoConfig {
     /// optimizer — the debugger steps the captured graph verbatim.
     pub opt_level: OptLevel,
     /// Present in `TraceMode::StepGraphs` sessions: forces eager execution
-    /// with per-node callbacks.
+    /// with per-node callbacks. Debugger-only and thread-confined: the
+    /// traced module wraps the tracer in [`crate::runtime::ThreadBound`],
+    /// so stepping works on the session's own thread and errors cleanly if
+    /// a traced module ever leaks into multi-thread dispatch.
     pub tracer: Option<Rc<dyn GraphTracer>>,
 }
 
 impl Default for DynamoConfig {
     fn default() -> Self {
         DynamoConfig {
-            backend: Rc::new(EagerBackend),
+            backend: Arc::new(EagerBackend),
             fallback: FallbackPolicy::Eager,
             cache_limit: 8,
             max_trace_instrs: 20_000,
@@ -124,7 +128,7 @@ struct State {
     /// `full_code`-style event log.
     log: Vec<String>,
     /// Captured graphs (name -> graph) for dumps & benches.
-    graphs: Vec<(String, Rc<Graph>)>,
+    graphs: Vec<(String, Arc<Graph>)>,
     /// Transformed + resume code objects for dumps.
     generated_codes: Vec<(String, Rc<CodeObject>)>,
     /// Compiled-graph callables in compile order — the session reads
@@ -133,11 +137,11 @@ struct State {
     /// Optimizer results per compiled graph (name → memoized run) — the
     /// session dumps `__optimized_*.{txt,json}` and per-module pass stats
     /// from these at `finish()`.
-    optimizations: Vec<(String, Rc<Optimized>)>,
+    optimizations: Vec<(String, Arc<Optimized>)>,
     /// Cached read-path snapshots, invalidated on write. Read accessors
     /// hand out `Rc` clones of these instead of deep-copying the vectors.
     log_snap: Option<Rc<[String]>>,
-    graphs_snap: Option<Rc<[(String, Rc<Graph>)]>>,
+    graphs_snap: Option<Rc<[(String, Arc<Graph>)]>>,
     codes_snap: Option<Rc<[(String, Rc<CodeObject>)]>>,
 }
 
@@ -145,7 +149,7 @@ struct State {
 /// `vm.eval_hook = Some(dynamo.clone())`.
 pub struct Dynamo {
     pub config: DynamoConfig,
-    pub runtime: Option<Rc<Runtime>>,
+    pub runtime: Option<Arc<Runtime>>,
     pub metrics: Metrics,
     state: RefCell<State>,
 }
@@ -155,7 +159,7 @@ impl Dynamo {
         Rc::new(Dynamo { config, runtime: None, metrics: Metrics::new(), state: RefCell::new(State::default()) })
     }
 
-    pub fn with_runtime(config: DynamoConfig, runtime: Rc<Runtime>) -> Rc<Dynamo> {
+    pub fn with_runtime(config: DynamoConfig, runtime: Arc<Runtime>) -> Rc<Dynamo> {
         Rc::new(Dynamo { config, runtime: Some(runtime), metrics: Metrics::new(), state: RefCell::new(State::default()) })
     }
 
@@ -170,7 +174,7 @@ impl Dynamo {
     }
 
     /// Captured graphs, in compile order (shared snapshot).
-    pub fn graphs(&self) -> Rc<[(String, Rc<Graph>)]> {
+    pub fn graphs(&self) -> Rc<[(String, Arc<Graph>)]> {
         let mut st = self.state.borrow_mut();
         if st.graphs_snap.is_none() {
             st.graphs_snap = Some(Rc::from(st.graphs.as_slice()));
@@ -197,7 +201,7 @@ impl Dynamo {
 
     /// Optimizer runs per compiled graph, in compile order (the memoized
     /// [`CompileRequest::optimized`] results the backends planned with).
-    pub fn optimizations(&self) -> Vec<(String, Rc<Optimized>)> {
+    pub fn optimizations(&self) -> Vec<(String, Arc<Optimized>)> {
         self.state.borrow().optimizations.clone()
     }
 
@@ -220,18 +224,22 @@ impl Dynamo {
         }
     }
 
-    fn compile_backend(&self, name: &str, graph: Rc<Graph>, guards: &[Guard]) -> Value {
+    fn compile_backend(&self, name: &str, graph: Arc<Graph>, guards: &[Guard]) -> Value {
         // Debug tracing forces the eager executor with per-node callbacks.
+        // The tracer is Rc-based (it reaches back into the session), so the
+        // traced module confines it to this thread: `get()` errors instead
+        // of racing if such a module crosses threads.
         if let Some(tracer) = &self.config.tracer {
-            let t = Rc::clone(tracer);
+            let t = crate::runtime::ThreadBound::new(Rc::clone(tracer));
             let gname = name.to_string();
-            let g2 = Rc::clone(&graph);
+            let g2 = Arc::clone(&graph);
             let module = module_from_fn("eager+trace", move |inputs| {
+                let t = t.get()?;
                 crate::backend::eager::execute_traced(&g2, inputs, |id, v| t.on_node(&gname, id, v))
             });
             return self.install_compiled(crate::graph::CompiledGraphFn::from_module(name, graph, module));
         }
-        let req = CompileRequest::new(name, Rc::clone(&graph))
+        let req = CompileRequest::new(name, Arc::clone(&graph))
             .with_runtime(self.runtime.clone())
             .with_guards(guards.iter().map(|g| g.describe()).collect())
             .with_verbosity(self.config.verbosity)
@@ -445,13 +453,13 @@ impl EvalHook for Dynamo {
             // Install the compiled graph + resume functions as globals.
             // The graph and guard set are *moved* out of the capture — the
             // read path must not pay for wholesale clones.
-            let graph = Rc::new(std::mem::take(&mut cap.graph));
+            let graph = Arc::new(std::mem::take(&mut cap.graph));
             {
                 let mut gm = globals.borrow_mut();
                 if transformed.graph_used {
                     gm.insert(
                         graph_name.clone(),
-                        self.compile_backend(&graph_name, Rc::clone(&graph), &cap.guards),
+                        self.compile_backend(&graph_name, Arc::clone(&graph), &cap.guards),
                     );
                 }
                 for (rname, rcode) in &transformed.resume_codes {
@@ -474,7 +482,7 @@ impl EvalHook for Dynamo {
                 st.codes_snap = None;
                 st.own_output.insert(Rc::as_ptr(&transformed.code) as usize);
                 if transformed.graph_used {
-                    st.graphs.push((graph_name.clone(), Rc::clone(&graph)));
+                    st.graphs.push((graph_name.clone(), Arc::clone(&graph)));
                 }
                 st.generated_codes.push((transformed.code.name.clone(), Rc::clone(&transformed.code)));
                 for (rname, rcode) in &transformed.resume_codes {
@@ -688,7 +696,7 @@ mod tests {
         let rt = Runtime::cpu().expect("pjrt");
         let mut vm = Vm::new();
         let dynamo = Dynamo::with_runtime(
-            DynamoConfig { backend: Rc::new(crate::api::XlaBackend), ..Default::default() },
+            DynamoConfig { backend: Arc::new(crate::api::XlaBackend), ..Default::default() },
             rt,
         );
         vm.eval_hook = Some(dynamo.clone());
@@ -706,7 +714,7 @@ mod tests {
 
         let mut vm = Vm::new();
         let dynamo = Dynamo::new(DynamoConfig {
-            backend: Rc::new(crate::backend::ShardedBackend::with_max_ops(2)),
+            backend: Arc::new(crate::backend::ShardedBackend::with_max_ops(2)),
             fallback: FallbackPolicy::Error,
             ..Default::default()
         });
@@ -735,7 +743,7 @@ mod tests {
 
         let mut vm = Vm::new();
         let dynamo = Dynamo::new(DynamoConfig {
-            backend: Rc::new(crate::backend::BatchedBackend::new()),
+            backend: Arc::new(crate::backend::BatchedBackend::new()),
             fallback: FallbackPolicy::Error,
             ..Default::default()
         });
@@ -763,7 +771,7 @@ mod tests {
         let src = "def f(x):\n    return (x * 2).sum()\nprint(f(torch.ones([2])).item())\n";
         let mut vm = Vm::new();
         let dynamo = Dynamo::new(DynamoConfig {
-            backend: Rc::new(crate::api::XlaBackend),
+            backend: Arc::new(crate::api::XlaBackend),
             fallback: FallbackPolicy::Error,
             ..Default::default()
         });
@@ -784,7 +792,7 @@ mod tests {
 
         let mut vm = Vm::new();
         let dynamo = Dynamo::new(DynamoConfig {
-            backend: Rc::new(crate::api::XlaBackend),
+            backend: Arc::new(crate::api::XlaBackend),
             ..Default::default()
         });
         vm.eval_hook = Some(dynamo.clone());
@@ -817,16 +825,16 @@ mod tests {
                 &self,
                 req: &CompileRequest,
                 _plan: &crate::api::CompilePlan,
-            ) -> Result<Rc<dyn crate::api::CompiledModule>, DepyfError> {
-                Ok(Rc::new(crate::backend::eager::EagerModule::with_name(
-                    Rc::clone(&req.graph),
+            ) -> Result<Arc<dyn crate::api::CompiledModule>, DepyfError> {
+                Ok(Arc::new(crate::backend::eager::EagerModule::with_name(
+                    Arc::clone(&req.graph),
                     "tagger-v2".into(),
                 )))
             }
         }
         let src = "def f(x):\n    return (x * 2).sum()\nprint(f(torch.ones([2])).item())\n";
         let mut vm = Vm::new();
-        let dynamo = Dynamo::new(DynamoConfig { backend: Rc::new(Tagger), ..Default::default() });
+        let dynamo = Dynamo::new(DynamoConfig { backend: Arc::new(Tagger), ..Default::default() });
         vm.eval_hook = Some(dynamo.clone());
         vm.exec_source(src, IsaVersion::V310).unwrap();
         assert!(

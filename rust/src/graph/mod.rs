@@ -13,6 +13,7 @@ pub use serde::{parse_graph, render_graph, GRAPH_SCHEMA_VERSION};
 use std::cell::Cell;
 use std::fmt;
 use std::rc::Rc;
+use std::sync::Arc;
 
 use crate::api::DepyfError;
 use crate::fnv::Fnv;
@@ -506,11 +507,11 @@ pub fn infer_shape(op: &OpKind, shapes: &[&[usize]]) -> Result<Vec<usize>, Depyf
 /// artifacts and stats the session dumps at `finish()`.
 pub struct CompiledGraphFn {
     pub name: String,
-    pub graph: Rc<Graph>,
+    pub graph: Arc<Graph>,
     /// Which backend compiled this (for dumps/metrics).
     pub backend_name: String,
     /// The backend's executable module (lowered via `Backend::lower`).
-    pub module: Rc<dyn crate::api::CompiledModule>,
+    pub module: Arc<dyn crate::api::CompiledModule>,
     pub calls: Cell<u64>,
 }
 
@@ -518,8 +519,8 @@ impl CompiledGraphFn {
     /// Wrap a lowered module; `backend_name` is stamped from the module.
     pub fn from_module(
         name: &str,
-        graph: Rc<Graph>,
-        module: Rc<dyn crate::api::CompiledModule>,
+        graph: Arc<Graph>,
+        module: Arc<dyn crate::api::CompiledModule>,
     ) -> CompiledGraphFn {
         CompiledGraphFn {
             name: name.to_string(),

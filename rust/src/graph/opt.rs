@@ -68,6 +68,7 @@
 use std::collections::HashMap;
 use std::fmt;
 use std::rc::Rc;
+use std::sync::Arc;
 
 use crate::tensor::Tensor;
 
@@ -141,7 +142,7 @@ pub struct PassStat {
 /// optimized graph plus per-pass statistics.
 #[derive(Clone, Debug)]
 pub struct Optimized {
-    pub graph: Rc<Graph>,
+    pub graph: Arc<Graph>,
     pub level: OptLevel,
     pub passes: Vec<PassStat>,
 }
@@ -165,10 +166,10 @@ pub const FOLD_NUMEL_LIMIT: usize = 4096;
 
 /// Run the pass pipeline at `level`. `O0` returns the input graph
 /// unchanged (shared `Rc`); so does any level whose passes all fire zero
-/// rewrites, so `Rc::ptr_eq` distinguishes "optimized" from "verbatim".
-pub fn optimize(graph: &Rc<Graph>, level: OptLevel) -> Optimized {
+/// rewrites, so `Arc::ptr_eq` distinguishes "optimized" from "verbatim".
+pub fn optimize(graph: &Arc<Graph>, level: OptLevel) -> Optimized {
     if level == OptLevel::O0 {
-        return Optimized { graph: Rc::clone(graph), level, passes: Vec::new() };
+        return Optimized { graph: Arc::clone(graph), level, passes: Vec::new() };
     }
     type Pass = fn(&Graph) -> (Graph, usize);
     let pipeline: &[(&'static str, Pass)] = match level {
@@ -187,7 +188,7 @@ pub fn optimize(graph: &Rc<Graph>, level: OptLevel) -> Optimized {
         g = next;
     }
     let changed = passes.iter().any(|p| p.rewrites > 0);
-    let graph = if changed { Rc::new(g) } else { Rc::clone(graph) };
+    let graph = if changed { Arc::new(g) } else { Arc::clone(graph) };
     Optimized { graph, level, passes }
 }
 
@@ -555,7 +556,7 @@ mod tests {
     use crate::backend::eager;
     use crate::tensor::Rng;
 
-    fn run_both(g: &Rc<Graph>, level: OptLevel, seed: u64) -> (Vec<Tensor>, Vec<Tensor>) {
+    fn run_both(g: &Arc<Graph>, level: OptLevel, seed: u64) -> (Vec<Tensor>, Vec<Tensor>) {
         let opt = optimize(g, level);
         let mut rng = Rng::new(seed);
         let inputs: Vec<Rc<Tensor>> = g
@@ -568,7 +569,7 @@ mod tests {
         (got, want)
     }
 
-    fn assert_bitwise(g: &Rc<Graph>, level: OptLevel, seed: u64) {
+    fn assert_bitwise(g: &Arc<Graph>, level: OptLevel, seed: u64) {
         let (got, want) = run_both(g, level, seed);
         assert_eq!(got.len(), want.len());
         for (a, b) in got.iter().zip(want.iter()) {
@@ -598,12 +599,12 @@ mod tests {
         let w = g.placeholder("w", &[3, 4]);
         let m = g.add_op(OpKind::MatMul, vec![x, w]).unwrap();
         g.set_outputs(vec![m]);
-        let g = Rc::new(g);
+        let g = Arc::new(g);
         let o0 = optimize(&g, OptLevel::O0);
-        assert!(Rc::ptr_eq(&o0.graph, &g) && o0.passes.is_empty());
-        // Nothing to do at O2 either: same Rc, zero-rewrite pass stats.
+        assert!(Arc::ptr_eq(&o0.graph, &g) && o0.passes.is_empty());
+        // Nothing to do at O2 either: same Arc, zero-rewrite pass stats.
         let o2 = optimize(&g, OptLevel::O2);
-        assert!(Rc::ptr_eq(&o2.graph, &g));
+        assert!(Arc::ptr_eq(&o2.graph, &g));
         assert!(!o2.changed());
         assert_eq!(o2.passes.len(), 4);
         assert_eq!(o2.passes[0].pass, "const_fold");
@@ -624,7 +625,7 @@ mod tests {
         let sq = g.add_op(OpKind::Sqrt, vec![o4]).unwrap();
         let out = g.add_op(OpKind::Add, vec![sx, sq]).unwrap();
         g.set_outputs(vec![out]);
-        let g = Rc::new(g);
+        let g = Arc::new(g);
         let opt = optimize(&g, OptLevel::O1);
         assert!(opt.changed());
         // add(c2,c3), mul(ones,c4), sqrt fold; mul(s,x) and the final add stay.
@@ -650,7 +651,7 @@ mod tests {
         let s2 = g.add_op(OpKind::Sum(None), vec![big]).unwrap(); // scalar: folds
         let out = g.add_op(OpKind::Add, vec![s, s2]).unwrap();
         g.set_outputs(vec![out]);
-        let g = Rc::new(g);
+        let g = Arc::new(g);
         let opt = optimize(&g, OptLevel::O1);
         let folds = opt.passes.iter().find(|p| p.pass == "const_fold").unwrap();
         assert_eq!(folds.rewrites, 1, "{:?}", opt.passes);
@@ -674,7 +675,7 @@ mod tests {
         let a2 = g.add_op(OpKind::Add, vec![r1, r3]).unwrap();
         let out = g.add_op(OpKind::Mul, vec![a1, a2]).unwrap();
         g.set_outputs(vec![out]);
-        let g = Rc::new(g);
+        let g = Arc::new(g);
         let opt = optimize(&g, OptLevel::O1);
         // 3 relus -> 1, 2 structurally identical adds -> 1.
         assert_eq!(opt.graph.num_ops(), 3, "{:?}", opt.graph);
@@ -692,7 +693,7 @@ mod tests {
         let b = g.add_op(OpKind::Mul, vec![y, c2]).unwrap();
         let s = g.add_op(OpKind::Add, vec![a, b]).unwrap();
         g.set_outputs(vec![s]);
-        let g = Rc::new(g);
+        let g = Arc::new(g);
         let opt = optimize(&g, OptLevel::O1);
         assert_eq!(opt.graph.inputs.len(), 2);
         assert_bitwise(&g, OptLevel::O1, 3);
@@ -707,7 +708,7 @@ mod tests {
         let _dead = g.add_op(OpKind::Exp, vec![x]).unwrap();
         let _dead2 = g.add_op(OpKind::Tanh, vec![unused_in]).unwrap();
         g.set_outputs(vec![r]);
-        let g = Rc::new(g);
+        let g = Arc::new(g);
         let opt = optimize(&g, OptLevel::O1);
         assert_eq!(opt.graph.num_ops(), 1);
         // Both placeholders survive: the call arity is part of the contract.
@@ -734,7 +735,7 @@ mod tests {
         let r2 = g.add_op(OpKind::Reshape(vec![-1, 6]), vec![r1]).unwrap();
         let out = g.add_op(OpKind::Sum(None), vec![r2]).unwrap();
         g.set_outputs(vec![out]);
-        let g = Rc::new(g);
+        let g = Arc::new(g);
         let opt = optimize(&g, OptLevel::O2);
         // Everything between x and the sum cancels: reshape [2,6]->[2,6]
         // is itself erased by the same-shape rule, leaving just the sum.
@@ -756,7 +757,7 @@ mod tests {
         let e = g.add_op(OpKind::Exp, vec![x]).unwrap();
         let a = g.add_op(OpKind::Add, vec![e, zero]).unwrap();
         g.set_outputs(vec![a]);
-        let opt = optimize(&Rc::new(g), OptLevel::O2);
+        let opt = optimize(&Arc::new(g), OptLevel::O2);
         assert_eq!(opt.graph.num_ops(), 1, "exp(x)+0 must drop the add");
 
         // ...but a bare x + 0 must NOT (x = -0.0 would flip its sign bit).
@@ -765,7 +766,7 @@ mod tests {
         let zero = g.const_scalar(0.0);
         let a = g.add_op(OpKind::Add, vec![x, zero]).unwrap();
         g.set_outputs(vec![a]);
-        let g = Rc::new(g);
+        let g = Arc::new(g);
         let opt = optimize(&g, OptLevel::O2);
         assert_eq!(opt.graph.num_ops(), 1, "x+0 must survive: not bit-exact for -0.0");
         // The gate is real: -0.0 + 0.0 flips the sign bit.
@@ -779,7 +780,7 @@ mod tests {
         let nzero = g.const_scalar(-0.0);
         let a = g.add_op(OpKind::Add, vec![x, nzero]).unwrap();
         g.set_outputs(vec![a]);
-        let opt = optimize(&Rc::new(g), OptLevel::O2);
+        let opt = optimize(&Arc::new(g), OptLevel::O2);
         assert_eq!(opt.graph.num_ops(), 0, "x + (-0.0) is bit-exact for all x");
 
         // NO op output is provably NaN-free (sigmoid(NaN) = NaN and
@@ -791,7 +792,7 @@ mod tests {
             let u = g.add_op(op, vec![x]).unwrap();
             let m = g.add_op(OpKind::Mul, vec![u, zero]).unwrap();
             g.set_outputs(vec![m]);
-            let g = Rc::new(g);
+            let g = Arc::new(g);
             let opt = optimize(&g, OptLevel::O2);
             assert_eq!(opt.graph.num_ops(), 2, "op-output * 0 must survive (NaN/-0.0 inputs)");
             assert_bitwise(&g, OptLevel::O2, 17);
@@ -804,7 +805,7 @@ mod tests {
         let m = g.add_op(OpKind::Mul, vec![big, zero]).unwrap();
         let s = g.add_op(OpKind::Sum(None), vec![m]).unwrap();
         g.set_outputs(vec![s]);
-        let g = Rc::new(g);
+        let g = Arc::new(g);
         let opt = optimize(&g, OptLevel::O2);
         assert!(
             !opt.graph.nodes.iter().any(|n| matches!(&n.kind, NodeKind::Op(OpKind::Mul, _))),
@@ -823,7 +824,7 @@ mod tests {
         let u = g.add_op(OpKind::Sigmoid, vec![x]).unwrap();
         let m = g.add_op(OpKind::Mul, vec![u, zero]).unwrap();
         g.set_outputs(vec![m]);
-        let g = Rc::new(g);
+        let g = Arc::new(g);
         let opt = optimize(&g, OptLevel::O2);
         let nan_in = Rc::new(Tensor::new(vec![2], vec![f32::NAN, 1.0]));
         let a = eager::execute(&g, &[Rc::clone(&nan_in)]).unwrap();
@@ -845,7 +846,7 @@ mod tests {
         let m = g.add_op(OpKind::Mul, vec![x, s]).unwrap();
         let r = g.add_op(OpKind::Relu, vec![m]).unwrap();
         g.set_outputs(vec![r]);
-        let opt = optimize(&Rc::new(g), OptLevel::O2);
+        let opt = optimize(&Arc::new(g), OptLevel::O2);
         assert!(opt.changed());
         let text = super::super::serde::render_graph(&opt.graph);
         let back = super::super::serde::parse_graph(&text).unwrap();
@@ -879,7 +880,7 @@ mod tests {
             let s = g.add_op(OpKind::Add, vec![n2, dup]).unwrap();
             let out = g.add_op(OpKind::Sum(None), vec![s]).unwrap();
             g.set_outputs(vec![out]);
-            let g = Rc::new(g);
+            let g = Arc::new(g);
             let opt = optimize(&g, OptLevel::O2);
             assert!(opt.changed(), "case {}", case);
             assert!(opt.graph.num_ops() < g.num_ops(), "case {}", case);

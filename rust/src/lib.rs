@@ -17,7 +17,7 @@
 //! // with depyf.prepare_debug(dir): run under the compiler, dump everything.
 //! let mut session = Session::builder()
 //!     .dump_to("dump_dir")
-//!     .backend_named("eager")          // or .backend(Rc::new(MyBackend))
+//!     .backend_named("eager")          // or .backend(Arc::new(MyBackend))
 //!     .isa(IsaVersion::V311)
 //!     .build()?;
 //! session.run_source("main", "print((torch.ones([2]) * 2).sum().item())\n")?;
@@ -166,6 +166,52 @@
 //! latency, eager MLP step and compile-cache hit vs miss live there; CI
 //! smoke-runs the suite with `DEPYF_BENCH_QUICK=1`.
 //!
+//! ## Concurrent serving
+//!
+//! The serving story — compile once, dispatch from many threads — is a
+//! first-class subsystem ([`serve`]), and the thread-safety contract it
+//! rests on is explicit, layer by layer:
+//!
+//! * **Backend registry** ([`api::register_backend`]): a process-wide
+//!   `RwLock` map. Lookups take the read lock; registration from any
+//!   thread is visible to all. [`api::Backend`] is `Send + Sync`.
+//! * **Compiled modules**: [`api::CompiledModule`] is `Send + Sync` and
+//!   dispatched through `Arc` handles — one compile, any number of
+//!   calling threads. Inputs stay call-local `Rc<Tensor>`s; tensors
+//!   themselves share data via `Arc` and cross threads freely.
+//! * **Compile caches**: the serve layer's [`serve::ModuleCache`] (graph
+//!   content hash → module) takes snapshot reads on the dispatch path and
+//!   compiles *outside* the lock — a compile in flight never blocks a
+//!   cache hit. The on-disk HLO index ([`runtime::DiskCache`]) publishes
+//!   updates by atomic rename, so concurrent writers (even separate
+//!   processes) can lose at most a cold cache line, never corrupt it.
+//! * **Sessions stay single-threaded**: [`dynamo::Dynamo`], the VM and
+//!   the [`dynamo::GuardTable`] are session-local (`Rc`-based values).
+//!   Guard usage counters (hits, recency) are atomics so the LRU story
+//!   holds under shared-reference readers; concurrency across sessions
+//!   comes from each serving thread owning its own session while sharing
+//!   the registry, module cache and backends.
+//! * **The PJRT runtime is thread-confined**: [`runtime::Runtime`] wraps
+//!   its client and executables in `ThreadBound` — using them off the
+//!   owning thread is a clean error, not UB. `depyf serve` therefore
+//!   drives CPU backends (`xla` is rejected up front).
+//!
+//! `Capabilities::ASYNC` is real: the `async` wrapper backend
+//! ([`serve::AsyncBackend`], `async:<name>` on the CLI) lowers modules
+//! whose `submit()` returns a [`serve::CallFuture`] backed by a small
+//! worker pool — hold several futures to overlap calls — while plain
+//! `call()` keeps the synchronous contract (submit + wait). The
+//! `pipelined` backend ([`serve::PipelinedShardedBackend`]) runs the
+//! sharded partition chain with one stage thread per shard, so shard k of
+//! call i overlaps shard k+1 of call i−1.
+//!
+//! `depyf serve --threads N --backend <name>` drives N concurrent
+//! sessions over the table1 model corpus, checks every output against a
+//! single-thread reference run, merges per-thread metrics into
+//! `metrics.json` and writes throughput/latency percentiles (1-thread
+//! baseline vs N-thread, with the speedup) to `BENCH_serve.json`;
+//! `benches/serve.rs` sweeps thread counts.
+//!
 //! ## Testing & conformance
 //!
 //! Cross-backend correctness is evidence, not hope: the **eager executor
@@ -223,6 +269,7 @@ pub mod hijack;
 pub mod metrics;
 pub mod pylang;
 pub mod runtime;
+pub mod serve;
 pub mod session;
 pub mod tensor;
 pub mod value;
@@ -243,6 +290,7 @@ pub mod prelude {
     pub use crate::dynamo::{Dynamo, DynamoConfig};
     pub use crate::pylang::compile_module;
     pub use crate::runtime::Runtime;
+    pub use crate::serve::{AsyncBackend, CallFuture, PipelinedShardedBackend};
     pub use crate::tensor::Tensor;
     pub use crate::value::Value;
     pub use crate::vm::Vm;

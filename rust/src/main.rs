@@ -6,7 +6,7 @@
 //!
 //! (Hand-rolled arg parsing: the offline environment has no clap.)
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use depyf::api::{
     backend_names, load_manifest, lookup_backend, ArtifactKind, Backend, Capabilities, OptLevel,
@@ -43,6 +43,15 @@ usage:
       manifest.json into <dir>.
   depyf table1
       Regenerate the paper's Table 1 correctness matrix.
+  depyf serve [--threads N] [--backend <name>] [--iters M] [--out <dir>]
+      Concurrent serving mode: N worker threads (default 4) each drive an
+      independent session over the table1 model corpus, dispatching through
+      the shared thread-safe backend registry and module cache. Writes
+      merged per-thread metrics (compiles, cache hits, evictions, p50/p99
+      call latency) to <dir>/metrics.json and a throughput record to
+      <dir>/BENCH_serve.json (default dir: serve_out). Backends that
+      require the PJRT runtime (xla) are rejected — the runtime is
+      thread-confined; use eager/sharded/batched/pipelined/recording/async.
   depyf replay <trace.json|dump-dir> [--backend <name>] [--against <oracle>]
                [--eps <tol>] [--no-localize] [--opt-level 0|1|2]
       Re-execute recorded __trace_*.json bundles (written by the recording
@@ -81,6 +90,13 @@ flags:
                                 replayable __trace_*.json bundle; wrap any
                                 other backend as recording:<name>
                                 (e.g. --backend recording:sharded)
+                     async      wraps eager; modules accept submissions and
+                                return futures resolved by a worker pool
+                                (Capabilities::ASYNC); wrap any other
+                                backend as async:<name>
+                     pipelined  the sharded partition chain with one stage
+                                thread per shard: shard k of call i overlaps
+                                shard k+1 of call i-1
                    sharded/batched lower to PJRT when the shared runtime is
                    available and to the eager executor otherwise.
 
@@ -127,18 +143,24 @@ fn parse_opt_level(args: &[String]) -> Result<OptLevel, CliError> {
 
 /// Resolve `--backend <name>` against the registry; absent flag → None.
 /// `recording:<inner>` wraps any registered backend in the recording
-/// decorator (bare `recording` is the pre-registered eager wrapper).
-fn parse_backend(args: &[String]) -> Result<Option<Rc<dyn Backend>>, CliError> {
+/// decorator (bare `recording` is the pre-registered eager wrapper);
+/// `async:<inner>` wraps one in the future-returning async decorator.
+fn parse_backend(args: &[String]) -> Result<Option<Arc<dyn Backend>>, CliError> {
     match flag_value(args, "--backend") {
         None => Ok(None),
         Some(name) => resolve_backend(&name).map(Some),
     }
 }
 
-fn resolve_backend(name: &str) -> Result<Rc<dyn Backend>, CliError> {
+fn resolve_backend(name: &str) -> Result<Arc<dyn Backend>, CliError> {
     if let Some(inner) = name.strip_prefix("recording:") {
         return RecordingBackend::wrapping(inner)
-            .map(|b| Rc::new(b) as Rc<dyn Backend>)
+            .map(|b| Arc::new(b) as Arc<dyn Backend>)
+            .map_err(|e| usage(e.to_string()));
+    }
+    if let Some(inner) = name.strip_prefix("async:") {
+        return depyf::serve::AsyncBackend::wrapping(inner)
+            .map(|b| Arc::new(b) as Arc<dyn Backend>)
             .map_err(|e| usage(e.to_string()));
     }
     lookup_backend(name).ok_or_else(|| {
@@ -176,6 +198,7 @@ fn run_cli(args: &[String]) -> i32 {
         "decompile" => cmd_decompile(rest),
         "dump" => cmd_dump(rest),
         "table1" => cmd_table1(rest),
+        "serve" => cmd_serve(rest),
         "replay" => cmd_replay(rest),
         "help" | "--help" | "-h" => {
             print!("{}", USAGE);
@@ -290,7 +313,7 @@ fn cmd_table1(_args: &[String]) -> Result<(), CliError> {
 /// across sequential invocations) or fail hard; `USES_RUNTIME` backends
 /// (sharded/batched) take it when the client starts and fall back to
 /// eager lowering otherwise; everything else runs runtime-free.
-fn provision_runtime(backends: &[&Rc<dyn Backend>]) -> Result<Option<Rc<Runtime>>, CliError> {
+fn provision_runtime(backends: &[&Arc<dyn Backend>]) -> Result<Option<Arc<Runtime>>, CliError> {
     if backends.iter().any(|b| b.requires_runtime()) {
         return Ok(Some(Runtime::shared()?));
     }
@@ -298,6 +321,48 @@ fn provision_runtime(backends: &[&Rc<dyn Backend>]) -> Result<Option<Rc<Runtime>
         return Ok(Runtime::shared().ok());
     }
     Ok(None)
+}
+
+/// `depyf serve`: concurrent dispatch over the table1 corpus.
+fn cmd_serve(args: &[String]) -> Result<(), CliError> {
+    let threads: usize = match flag_value(args, "--threads") {
+        None => 4,
+        Some(s) => s
+            .parse()
+            .ok()
+            .filter(|&n: &usize| n >= 1 && n <= 256)
+            .ok_or_else(|| usage(format!("bad --threads '{}' (expected 1..=256)", s)))?,
+    };
+    let iters: usize = match flag_value(args, "--iters") {
+        None => 4,
+        Some(s) => s
+            .parse()
+            .ok()
+            .filter(|&n: &usize| n >= 1)
+            .ok_or_else(|| usage(format!("bad --iters '{}' (expected >= 1)", s)))?,
+    };
+    let backend_name = flag_value(args, "--backend").unwrap_or_else(|| "eager".into());
+    // Validate the name up front (usage error, exit 2, for typos) and
+    // reject runtime-requiring backends: the PJRT client is
+    // thread-confined, so xla cannot serve from worker threads.
+    let backend = resolve_backend(&backend_name)?;
+    if backend.requires_runtime() {
+        return Err(usage(format!(
+            "--backend {} requires the PJRT runtime, which is thread-confined; \
+             serve supports eager, sharded, batched, pipelined, recording:<b> and async:<b>",
+            backend_name
+        )));
+    }
+    let out_dir = flag_value(args, "--out").unwrap_or_else(|| "serve_out".into());
+    let opts = depyf::serve::ServeOptions {
+        threads,
+        iters,
+        backend: backend_name,
+        out_dir: std::path::PathBuf::from(out_dir),
+    };
+    let report = depyf::serve::run_serve(&opts)?;
+    print!("{}", report.render());
+    Ok(())
 }
 
 fn cmd_replay(args: &[String]) -> Result<(), CliError> {
@@ -405,6 +470,27 @@ mod tests {
         assert_eq!(run_cli(&s(&["replay", "x.json", "--backend", "bogus"])), 2);
         assert_eq!(run_cli(&s(&["replay", "x.json", "--against", "bogus"])), 2);
         assert_eq!(run_cli(&s(&["replay", "/definitely/not/here.json"])), 1);
+    }
+
+    #[test]
+    fn serve_usage_errors() {
+        assert_eq!(run_cli(&s(&["serve", "--threads", "banana"])), 2);
+        assert_eq!(run_cli(&s(&["serve", "--threads", "0"])), 2);
+        assert_eq!(run_cli(&s(&["serve", "--threads", "999"])), 2);
+        assert_eq!(run_cli(&s(&["serve", "--iters", "0"])), 2);
+        assert_eq!(run_cli(&s(&["serve", "--backend", "bogus"])), 2);
+        assert_eq!(run_cli(&s(&["serve", "--backend", "async:bogus"])), 2);
+        // xla needs the PJRT runtime, which is thread-confined — serve
+        // refuses it up front rather than crashing a worker.
+        assert_eq!(run_cli(&s(&["serve", "--backend", "xla"])), 2);
+    }
+
+    #[test]
+    fn async_wrapper_backend_names_resolve() {
+        let wrapped = resolve_backend("async:eager").unwrap();
+        assert!(wrapped.capabilities().contains(Capabilities::WRAPPER));
+        assert!(wrapped.capabilities().contains(Capabilities::ASYNC));
+        assert!(matches!(resolve_backend("async:nope"), Err(CliError::Usage(_))));
     }
 
     #[test]

@@ -84,6 +84,83 @@ impl Metrics {
     }
 }
 
+/// A plain-data copy of [`Metrics`] that crosses threads.
+///
+/// `Metrics` itself is `Cell`-based (cheap, session-local, deliberately
+/// not `Sync`). Serve workers each own their sessions' `Metrics`, take a
+/// `snapshot()` at the end of the run, and the driver `merge`s the
+/// snapshots into the one `metrics.json` it writes.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct MetricsSnapshot {
+    pub captures: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub graph_breaks: u64,
+    pub fallbacks: u64,
+    pub guard_checks: u64,
+    pub guard_failures: u64,
+    pub evictions: u64,
+    pub compile_ns: u64,
+}
+
+impl Metrics {
+    /// Copy the current counter values into a `Send`-able snapshot.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            captures: self.captures.get(),
+            cache_hits: self.cache_hits.get(),
+            cache_misses: self.cache_misses.get(),
+            graph_breaks: self.graph_breaks.get(),
+            fallbacks: self.fallbacks.get(),
+            guard_checks: self.guard_checks.get(),
+            guard_failures: self.guard_failures.get(),
+            evictions: self.evictions.get(),
+            compile_ns: self.compile_ns.get(),
+        }
+    }
+}
+
+impl MetricsSnapshot {
+    /// Field-wise accumulate another snapshot into this one.
+    pub fn merge(&mut self, other: &MetricsSnapshot) {
+        self.captures += other.captures;
+        self.cache_hits += other.cache_hits;
+        self.cache_misses += other.cache_misses;
+        self.graph_breaks += other.graph_breaks;
+        self.fallbacks += other.fallbacks;
+        self.guard_checks += other.guard_checks;
+        self.guard_failures += other.guard_failures;
+        self.evictions += other.evictions;
+        self.compile_ns += other.compile_ns;
+    }
+
+    /// Same flat-object layout as [`Metrics::to_json_with`], so a merged
+    /// serve `metrics.json` has the exact keys a session dump has.
+    pub fn to_json_with(&self, extra: Option<(&str, &str)>) -> String {
+        let mut out = format!(
+            "{{\n  \"captures\": {},\n  \"cache_hits\": {},\n  \"cache_misses\": {},\n  \"graph_breaks\": {},\n  \"fallbacks\": {},\n  \"guard_checks\": {},\n  \"guard_failures\": {},\n  \"evictions\": {},\n  \"compile_ns\": {}",
+            self.captures,
+            self.cache_hits,
+            self.cache_misses,
+            self.graph_breaks,
+            self.fallbacks,
+            self.guard_checks,
+            self.guard_failures,
+            self.evictions,
+            self.compile_ns,
+        );
+        if let Some((key, value)) = extra {
+            out.push_str(&format!(",\n  \"{}\": {}", key, value));
+        }
+        out.push_str("\n}\n");
+        out
+    }
+
+    pub fn to_json(&self) -> String {
+        self.to_json_with(None)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -106,6 +183,36 @@ mod tests {
         let doc = crate::api::json::parse(&text).expect("valid json");
         assert!(doc.get("modules").is_some(), "{}", text);
         assert!(doc.get("compile_ns").is_some());
+    }
+
+    #[test]
+    fn snapshot_merge_and_json() {
+        let m = Metrics::new();
+        Metrics::bump(&m.captures);
+        Metrics::bump(&m.cache_hits);
+        let mut merged = m.snapshot();
+        let other = MetricsSnapshot { captures: 2, evictions: 1, ..Default::default() };
+        merged.merge(&other);
+        assert_eq!(merged.captures, 3);
+        assert_eq!(merged.cache_hits, 1);
+        assert_eq!(merged.evictions, 1);
+        let doc = crate::api::json::parse(&merged.to_json()).expect("valid json");
+        assert_eq!(doc.get("captures").and_then(|v| v.as_f64()), Some(3.0));
+        // Snapshots cross threads: merge results from spawned workers.
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                std::thread::spawn(|| {
+                    let m = Metrics::new();
+                    Metrics::bump(&m.guard_checks);
+                    m.snapshot()
+                })
+            })
+            .collect();
+        let mut total = MetricsSnapshot::default();
+        for h in handles {
+            total.merge(&h.join().expect("worker"));
+        }
+        assert_eq!(total.guard_checks, 4);
     }
 
     #[test]

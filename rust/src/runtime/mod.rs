@@ -10,29 +10,116 @@
 //! uses). On disk, an optional [`DiskCache`] persists an HLO→artifact
 //! index so a repeated run skips graph lowering and reuses the exact HLO
 //! text across processes.
+//!
+//! # Thread safety
+//!
+//! The runtime handle is `Send + Sync`: the executable cache and counters
+//! are lock-/atomic-based, [`Runtime::shared`] hands every thread the same
+//! `Arc`, and [`DiskCache`] rewrites its index via atomic rename so
+//! concurrent writers never corrupt it. The PJRT client and loaded
+//! executables themselves are **thread-confined** ([`ThreadBound`]):
+//! compile/execute must happen on the thread that created the runtime —
+//! off-thread use returns a typed error instead of UB. That is why the
+//! concurrent serving path (`depyf serve`) only drives CPU backends and
+//! why `REQUIRES_RUNTIME` backends are excluded from multi-threaded
+//! dispatch.
 
 mod manifest;
 
 pub use manifest::{Artifact, Manifest};
 
-use std::cell::RefCell;
 use std::collections::HashMap;
+use std::mem::ManuallyDrop;
 use std::path::{Path, PathBuf};
-use std::rc::Rc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, PoisonError};
+use std::thread::ThreadId;
 
 use crate::api::DepyfError;
 use crate::tensor::Tensor;
+
+/// A monotonically increasing counter with the same `get()` surface the
+/// old `Cell<u64>` fields had, but atomic — observable from any thread.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+
+    pub fn bump(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Confines a non-`Send` value (PJRT client, loaded executable) to the
+/// thread that created it while letting the *container* cross threads.
+///
+/// `get()` succeeds only on the owning thread; any other thread gets a
+/// typed [`DepyfError::Runtime`] instead of undefined behavior. Dropping
+/// from a foreign thread leaks the value rather than running a
+/// thread-affine destructor off-thread — the shared runtime lives for the
+/// process anyway.
+pub struct ThreadBound<T> {
+    value: ManuallyDrop<T>,
+    owner: ThreadId,
+}
+
+// SAFETY: the inner value is only ever reachable (`get`) or dropped on
+// `owner`; foreign threads see errors (or a leak on drop), never `&T`.
+unsafe impl<T> Send for ThreadBound<T> {}
+unsafe impl<T> Sync for ThreadBound<T> {}
+
+impl<T> ThreadBound<T> {
+    pub fn new(value: T) -> ThreadBound<T> {
+        ThreadBound { value: ManuallyDrop::new(value), owner: std::thread::current().id() }
+    }
+
+    /// The wrapped value — errors when called off the owning thread.
+    pub fn get(&self) -> Result<&T, DepyfError> {
+        if std::thread::current().id() == self.owner {
+            Ok(&self.value)
+        } else {
+            Err(DepyfError::Runtime(
+                "PJRT handle used off its owning thread (the client is thread-confined; \
+                 serve/multi-thread dispatch must use CPU backends)"
+                    .into(),
+            ))
+        }
+    }
+}
+
+impl<T> Drop for ThreadBound<T> {
+    fn drop(&mut self) {
+        if std::thread::current().id() == self.owner {
+            // SAFETY: dropped exactly once, on the owning thread.
+            unsafe { ManuallyDrop::drop(&mut self.value) }
+        }
+    }
+}
 
 /// Environment variable overriding the CLI's persistent HLO cache
 /// directory (default `.depyf_cache` under the working directory).
 pub const CACHE_DIR_ENV: &str = "DEPYF_CACHE_DIR";
 
 /// A persistent HLO→artifact cache: `index.txt` maps cache keys to
-/// `n_outputs` and an `.hlo` text file in the same directory. Appends are
-/// line-atomic, so sequential CLI invocations share one index.
+/// `n_outputs` and an `.hlo` text file in the same directory.
+///
+/// Writes go through **atomic rename**: `put` re-reads the on-disk index,
+/// merges it with the in-memory view, writes the merged snapshot to a
+/// unique temp file and renames it over `index.txt`. Readers (this or
+/// another process) therefore always see a complete, well-formed index —
+/// never a torn line — and concurrent writers merge instead of clobbering.
 pub struct DiskCache {
     dir: PathBuf,
-    index: RefCell<HashMap<String, (usize, String)>>,
+    index: Mutex<HashMap<String, (usize, String)>>,
+    /// Distinguishes temp files of concurrent in-process writers.
+    writes: Counter,
 }
 
 impl DiskCache {
@@ -54,7 +141,7 @@ impl DiskCache {
                 }
             }
         }
-        Ok(DiskCache { dir, index: RefCell::new(index) })
+        Ok(DiskCache { dir, index: Mutex::new(index), writes: Counter::new() })
     }
 
     pub fn dir(&self) -> &Path {
@@ -63,18 +150,36 @@ impl DiskCache {
 
     /// Number of indexed entries.
     pub fn len(&self) -> usize {
-        self.index.borrow().len()
+        self.index.lock().unwrap_or_else(PoisonError::into_inner).len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.index.borrow().is_empty()
+        self.len() == 0
     }
 
     /// Look up the HLO text + output arity persisted under `key`.
     pub fn get(&self, key: &str) -> Option<(String, usize)> {
-        let (n, file) = self.index.borrow().get(key).cloned()?;
+        let (n, file) =
+            self.index.lock().unwrap_or_else(PoisonError::into_inner).get(key).cloned()?;
         let text = std::fs::read_to_string(self.dir.join(&file)).ok()?;
         Some((text, n))
+    }
+
+    /// Read whatever index is on disk right now (for merging).
+    fn read_disk_index(&self) -> HashMap<String, (usize, String)> {
+        let mut index = HashMap::new();
+        if let Ok(text) = std::fs::read_to_string(self.dir.join(Self::INDEX)) {
+            for line in text.lines() {
+                let mut parts = line.splitn(3, '\t');
+                if let (Some(key), Some(n), Some(file)) = (parts.next(), parts.next(), parts.next())
+                {
+                    if let Ok(n) = n.parse::<usize>() {
+                        index.insert(key.to_string(), (n, file.to_string()));
+                    }
+                }
+            }
+        }
+        index
     }
 
     /// Persist HLO text under `key`, overwriting any existing entry — a
@@ -82,6 +187,12 @@ impl DiskCache {
     /// time the key is re-lowered instead of poisoning the cache forever.
     /// Best-effort: IO failures leave the cache cold but never fail a
     /// compile.
+    ///
+    /// Concurrency: the in-memory index lock serializes writers within the
+    /// process; the merged snapshot + atomic rename keeps the on-disk
+    /// index well-formed under concurrent *processes* too (a racing
+    /// process can at worst drop the other's newest entry — a cold cache
+    /// line, never a torn one).
     pub fn put(&self, key: &str, text: &str, n_outputs: usize) {
         // File name = sanitized key + FNV of the *raw* key: two distinct
         // keys that sanitize identically (`a:b` vs `a_b`) cannot clobber
@@ -90,15 +201,27 @@ impl DiskCache {
         if std::fs::write(self.dir.join(&file), text).is_err() {
             return;
         }
-        use std::io::Write as _;
-        let line = format!("{}\t{}\t{}\n", key, n_outputs, file);
-        let appended = std::fs::OpenOptions::new()
-            .create(true)
-            .append(true)
-            .open(self.dir.join(Self::INDEX))
-            .and_then(|mut f| f.write_all(line.as_bytes()));
-        if appended.is_ok() {
-            self.index.borrow_mut().insert(key.to_string(), (n_outputs, file));
+        let mut index = self.index.lock().unwrap_or_else(PoisonError::into_inner);
+        // Merge: disk entries from other writers + everything we know +
+        // the new record.
+        let mut merged = self.read_disk_index();
+        for (k, v) in index.iter() {
+            merged.insert(k.clone(), v.clone());
+        }
+        merged.insert(key.to_string(), (n_outputs, file.clone()));
+        let mut lines: Vec<String> =
+            merged.iter().map(|(k, (n, f))| format!("{}\t{}\t{}\n", k, n, f)).collect();
+        lines.sort();
+        self.writes.bump();
+        let tmp = self
+            .dir
+            .join(format!(".index.tmp.{}.{}", std::process::id(), self.writes.get()));
+        let written = std::fs::write(&tmp, lines.concat())
+            .and_then(|_| std::fs::rename(&tmp, self.dir.join(Self::INDEX)));
+        if written.is_ok() {
+            *index = merged;
+        } else {
+            let _ = std::fs::remove_file(&tmp);
         }
     }
 }
@@ -121,9 +244,12 @@ impl<'a> Arg<'a> {
     }
 }
 
-/// A compiled executable plus its output arity metadata.
+/// A compiled executable plus its output arity metadata. `Send + Sync`
+/// as a handle (so modules holding it can cross threads), but the PJRT
+/// executable inside is thread-confined — `Runtime::execute` errors off
+/// the owning thread.
 pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
+    exe: ThreadBound<xla::PjRtLoadedExecutable>,
     /// HLO modules lowered from jax with `return_tuple=True` produce a
     /// 1-level output tuple; our own codegen does the same.
     pub n_outputs: usize,
@@ -131,61 +257,60 @@ pub struct Executable {
 
 /// The PJRT runtime wrapper.
 pub struct Runtime {
-    client: xla::PjRtClient,
-    cache: RefCell<HashMap<String, Rc<Executable>>>,
+    client: ThreadBound<xla::PjRtClient>,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
     /// Where `make artifacts` put the AOT outputs.
     pub artifacts_dir: Option<PathBuf>,
     manifest: Option<Manifest>,
     /// Optional persistent HLO cache consulted by the XLA backend.
     disk: Option<DiskCache>,
     /// Compile + execute counters.
-    pub compiles: std::cell::Cell<u64>,
-    pub executions: std::cell::Cell<u64>,
+    pub compiles: Counter,
+    pub executions: Counter,
     /// HLO texts served from the persistent cache (lowering skipped).
-    pub disk_hits: std::cell::Cell<u64>,
+    pub disk_hits: Counter,
 }
 
-thread_local! {
-    /// The process-wide runtime handle (the stack is single-threaded and
-    /// `Rc`-based): every CLI command and any session asking for
-    /// [`Runtime::shared`] gets the same client and executable cache.
-    static SHARED: RefCell<Option<Rc<Runtime>>> = const { RefCell::new(None) };
-}
+/// The process-wide runtime handle: every CLI command, session, or serve
+/// thread asking for [`Runtime::shared`] gets the same client and
+/// executable cache. Initialization is double-checked under the mutex —
+/// two racing first callers produce exactly one client.
+static SHARED: Mutex<Option<Arc<Runtime>>> = Mutex::new(None);
 
 impl Runtime {
     fn new_with(
         artifacts_dir: Option<PathBuf>,
         manifest: Option<Manifest>,
         disk: Option<DiskCache>,
-    ) -> Result<Rc<Runtime>, DepyfError> {
+    ) -> Result<Arc<Runtime>, DepyfError> {
         let client =
             xla::PjRtClient::cpu().map_err(|e| DepyfError::Runtime(format!("PjRtClient::cpu: {}", e)))?;
-        Ok(Rc::new(Runtime {
-            client,
-            cache: RefCell::new(HashMap::new()),
+        Ok(Arc::new(Runtime {
+            client: ThreadBound::new(client),
+            cache: Mutex::new(HashMap::new()),
             artifacts_dir,
             manifest,
             disk,
-            compiles: std::cell::Cell::new(0),
-            executions: std::cell::Cell::new(0),
-            disk_hits: std::cell::Cell::new(0),
+            compiles: Counter::new(),
+            executions: Counter::new(),
+            disk_hits: Counter::new(),
         }))
     }
 
     /// CPU PJRT client. Fails if libxla_extension is unavailable.
-    pub fn cpu() -> Result<Rc<Runtime>, DepyfError> {
+    pub fn cpu() -> Result<Arc<Runtime>, DepyfError> {
         Runtime::new_with(None, None, None)
     }
 
     /// CPU client with an artifact directory (containing `manifest.txt`).
-    pub fn cpu_with_artifacts(dir: impl AsRef<Path>) -> Result<Rc<Runtime>, DepyfError> {
+    pub fn cpu_with_artifacts(dir: impl AsRef<Path>) -> Result<Arc<Runtime>, DepyfError> {
         let dir = dir.as_ref().to_path_buf();
         let manifest = Manifest::load(&dir.join("manifest.txt"))?;
         Runtime::new_with(Some(dir), Some(manifest), None)
     }
 
     /// CPU client with a persistent HLO disk cache at `dir`.
-    pub fn cpu_with_disk_cache(dir: impl AsRef<Path>) -> Result<Rc<Runtime>, DepyfError> {
+    pub fn cpu_with_disk_cache(dir: impl AsRef<Path>) -> Result<Arc<Runtime>, DepyfError> {
         Runtime::new_with(None, None, Some(DiskCache::open(dir)?))
     }
 
@@ -194,22 +319,28 @@ impl Runtime {
     /// `$DEPYF_CACHE_DIR` (default `.depyf_cache`). Repeated `depyf dump`
     /// invocations share the persisted index; repeated loads of identical
     /// HLO within a process compile exactly once.
-    pub fn shared() -> Result<Rc<Runtime>, DepyfError> {
-        SHARED.with(|s| {
-            if let Some(rt) = s.borrow().as_ref() {
-                return Ok(Rc::clone(rt));
-            }
-            let dir = std::env::var(CACHE_DIR_ENV).unwrap_or_else(|_| ".depyf_cache".into());
-            // A broken cache dir must not take down the runtime.
-            let disk = DiskCache::open(&dir).ok();
-            let rt = Runtime::new_with(None, None, disk)?;
-            *s.borrow_mut() = Some(Rc::clone(&rt));
-            Ok(rt)
-        })
+    ///
+    /// Thread-safe: concurrent first callers race to the lock; whichever
+    /// wins initializes, the rest observe the stored handle. (Note the
+    /// client stays confined to the winning thread — see [`ThreadBound`].)
+    pub fn shared() -> Result<Arc<Runtime>, DepyfError> {
+        let mut slot = SHARED.lock().unwrap_or_else(PoisonError::into_inner);
+        if let Some(rt) = slot.as_ref() {
+            return Ok(Arc::clone(rt));
+        }
+        let dir = std::env::var(CACHE_DIR_ENV).unwrap_or_else(|_| ".depyf_cache".into());
+        // A broken cache dir must not take down the runtime.
+        let disk = DiskCache::open(&dir).ok();
+        let rt = Runtime::new_with(None, None, disk)?;
+        *slot = Some(Arc::clone(&rt));
+        Ok(rt)
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        self.client
+            .get()
+            .map(|c| c.platform_name())
+            .unwrap_or_else(|_| "unavailable (off-thread)".into())
     }
 
     pub fn manifest(&self) -> Option<&Manifest> {
@@ -222,15 +353,15 @@ impl Runtime {
     }
 
     /// In-process executable cache lookup (no compile).
-    pub fn cached_executable(&self, key: &str) -> Option<Rc<Executable>> {
-        self.cache.borrow().get(key).map(Rc::clone)
+    pub fn cached_executable(&self, key: &str) -> Option<Arc<Executable>> {
+        self.cache.lock().unwrap_or_else(PoisonError::into_inner).get(key).map(Arc::clone)
     }
 
     /// Persistent-cache lookup of HLO text + output arity; bumps
     /// `disk_hits` so "lowering skipped" is observable.
     pub fn cached_hlo(&self, key: &str) -> Option<(String, usize)> {
         let hit = self.disk.as_ref()?.get(key)?;
-        self.disk_hits.set(self.disk_hits.get() + 1);
+        self.disk_hits.bump();
         Some(hit)
     }
 
@@ -241,31 +372,35 @@ impl Runtime {
         }
     }
 
-    /// Compile HLO text under a cache key.
+    /// Compile HLO text under a cache key. The compile itself runs outside
+    /// the cache lock (PJRT compiles can be slow; dispatch must not block
+    /// on a compile in flight) — two racing threads may both compile, the
+    /// first insert wins and both get a usable executable.
     pub fn compile_hlo_text(
         &self,
         key: &str,
         text: &str,
         n_outputs: usize,
-    ) -> Result<Rc<Executable>, DepyfError> {
-        if let Some(e) = self.cache.borrow().get(key) {
-            return Ok(Rc::clone(e));
+    ) -> Result<Arc<Executable>, DepyfError> {
+        if let Some(e) = self.cache.lock().unwrap_or_else(PoisonError::into_inner).get(key) {
+            return Ok(Arc::clone(e));
         }
         let proto = xla::HloModuleProto::parse_and_return_unverified_module(text.as_bytes())
             .map_err(|e| DepyfError::Parse(format!("HLO parse failed for '{}': {}", key, e)))?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self
             .client
+            .get()?
             .compile(&comp)
             .map_err(|e| DepyfError::Runtime(format!("PJRT compile failed for '{}': {}", key, e)))?;
-        self.compiles.set(self.compiles.get() + 1);
-        let exec = Rc::new(Executable { exe, n_outputs });
-        self.cache.borrow_mut().insert(key.to_string(), Rc::clone(&exec));
-        Ok(exec)
+        self.compiles.bump();
+        let exec = Arc::new(Executable { exe: ThreadBound::new(exe), n_outputs });
+        let mut cache = self.cache.lock().unwrap_or_else(PoisonError::into_inner);
+        Ok(Arc::clone(cache.entry(key.to_string()).or_insert(exec)))
     }
 
     /// Load + compile a named artifact from the manifest.
-    pub fn load_artifact(&self, name: &str) -> Result<(Rc<Executable>, Artifact), DepyfError> {
+    pub fn load_artifact(&self, name: &str) -> Result<(Arc<Executable>, Artifact), DepyfError> {
         let m = self
             .manifest
             .as_ref()
@@ -312,8 +447,8 @@ impl Runtime {
             })
             .collect::<Result<_, DepyfError>>()?;
         let result =
-            exe.exe.execute::<xla::Literal>(&literals).map_err(|e| rt_err("execute", &e))?;
-        self.executions.set(self.executions.get() + 1);
+            exe.exe.get()?.execute::<xla::Literal>(&literals).map_err(|e| rt_err("execute", &e))?;
+        self.executions.bump();
         let out0 = result
             .first()
             .and_then(|r| r.first())
@@ -374,6 +509,53 @@ mod tests {
         std::fs::remove_dir_all(&dir).ok();
     }
 
+    /// The satellite contended-writer case: many threads `put` distinct
+    /// keys into one cache concurrently. The atomic-rename index must end
+    /// up complete and well-formed — every entry present, no torn lines —
+    /// when re-opened by a fresh handle.
+    #[test]
+    fn disk_cache_survives_contended_writers() {
+        let dir = tmp("contended");
+        let _ = std::fs::remove_dir_all(&dir);
+        let c = std::sync::Arc::new(DiskCache::open(&dir).unwrap());
+        let n_threads = 8;
+        let per_thread = 4;
+        let handles: Vec<_> = (0..n_threads)
+            .map(|t| {
+                let c = std::sync::Arc::clone(&c);
+                std::thread::spawn(move || {
+                    for i in 0..per_thread {
+                        let key = format!("graph:t{}:{}", t, i);
+                        c.put(&key, &format!("HloModule m_{}_{}\n", t, i), t + 1);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(c.len(), n_threads * per_thread);
+        // A fresh handle (= another process) sees the complete index.
+        let c2 = DiskCache::open(&dir).unwrap();
+        assert_eq!(c2.len(), n_threads * per_thread, "index lost entries under contention");
+        for t in 0..n_threads {
+            for i in 0..per_thread {
+                let key = format!("graph:t{}:{}", t, i);
+                let (text, n) = c2.get(&key).unwrap_or_else(|| panic!("missing {}", key));
+                assert_eq!(text, format!("HloModule m_{}_{}\n", t, i));
+                assert_eq!(n, t + 1);
+            }
+        }
+        // No stray temp files left behind.
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().starts_with(".index.tmp"))
+            .collect();
+        assert!(leftovers.is_empty(), "temp index files leaked: {:?}", leftovers);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
     #[test]
     fn shared_runtime_is_one_handle_per_process() {
         let dir = tmp("shared");
@@ -381,7 +563,7 @@ mod tests {
         std::env::set_var(CACHE_DIR_ENV, &dir);
         let a = Runtime::shared().expect("pjrt");
         let b = Runtime::shared().unwrap();
-        assert!(Rc::ptr_eq(&a, &b), "shared() must return the same runtime");
+        assert!(Arc::ptr_eq(&a, &b), "shared() must return the same runtime");
         assert!(a.disk_cache().is_some(), "shared runtime carries the persistent cache");
         std::fs::remove_dir_all(&dir).ok();
     }

@@ -1,0 +1,218 @@
+//! The `async` backend wrapper: [`Capabilities::ASYNC`] made real.
+//!
+//! `AsyncBackend` decorates any inner backend; the modules it lowers
+//! expose [`AsyncModule::submit`], which queues the call on a small
+//! [`WorkerPool`] and immediately returns a [`CallFuture`]. The plain
+//! [`CompiledModule::call`] contract is preserved as submit-then-wait, so
+//! an async-wrapped backend drops into every existing dispatch path
+//! (dynamo guard entries, `depyf run`, the conformance harness)
+//! unchanged — callers that *want* overlap use `submit` and hold several
+//! futures in flight.
+//!
+//! The pool is lazy: registering the builtin `async` backend must not
+//! spawn threads, so workers start on the first lowered module.
+
+use std::rc::Rc;
+use std::sync::{Arc, OnceLock};
+
+use crate::api::{
+    Backend, Capabilities, CompilePlan, CompileRequest, CompiledModule, DepyfError, ModuleArtifact,
+    ModuleStats,
+};
+use crate::tensor::Tensor;
+
+use super::future::{call_channel, CallFuture, WorkerPool};
+
+/// Default worker count for the shared call pool.
+pub const DEFAULT_WORKERS: usize = 4;
+
+/// Wraps an inner backend; every lowered module calls through a worker
+/// pool and can return futures instead of blocking.
+pub struct AsyncBackend {
+    inner: Arc<dyn Backend>,
+    workers: usize,
+    /// Spawned on first `lower`, shared by every module of this backend.
+    pool: OnceLock<Arc<WorkerPool>>,
+}
+
+impl AsyncBackend {
+    pub fn new(inner: Arc<dyn Backend>) -> AsyncBackend {
+        AsyncBackend::with_workers(inner, DEFAULT_WORKERS)
+    }
+
+    /// Size the worker pool explicitly (rounded up to 1).
+    pub fn with_workers(inner: Arc<dyn Backend>, workers: usize) -> AsyncBackend {
+        AsyncBackend { inner, workers: workers.max(1), pool: OnceLock::new() }
+    }
+
+    /// Wrap a registered backend, looked up by name (`async:<name>`).
+    pub fn wrapping(inner_name: &str) -> Result<AsyncBackend, DepyfError> {
+        let inner = crate::api::lookup_backend(inner_name).ok_or_else(|| {
+            DepyfError::Backend(format!(
+                "async: unknown inner backend '{}' (registered: {})",
+                inner_name,
+                crate::api::backend_names().join(", ")
+            ))
+        })?;
+        Ok(AsyncBackend::new(inner))
+    }
+
+    /// The wrapped backend.
+    pub fn inner(&self) -> &Arc<dyn Backend> {
+        &self.inner
+    }
+
+    fn pool(&self) -> Arc<WorkerPool> {
+        Arc::clone(self.pool.get_or_init(|| Arc::new(WorkerPool::new(self.workers))))
+    }
+}
+
+impl Backend for AsyncBackend {
+    fn name(&self) -> &str {
+        "async"
+    }
+
+    /// Inherits the wrapped backend's capabilities, plus `ASYNC | WRAPPER`.
+    fn capabilities(&self) -> Capabilities {
+        self.inner.capabilities() | Capabilities::ASYNC | Capabilities::WRAPPER
+    }
+
+    fn plan(&self, req: &CompileRequest) -> Result<CompilePlan, DepyfError> {
+        // Asynchrony is a dispatch-time property; the compile-time plan is
+        // entirely the inner backend's.
+        self.inner.plan(req)
+    }
+
+    fn lower(&self, req: &CompileRequest, plan: &CompilePlan) -> Result<Arc<dyn CompiledModule>, DepyfError> {
+        let module = self.inner.lower(req, plan)?;
+        Ok(Arc::new(AsyncModule {
+            backend_name: format!("async({})", module.backend_name()),
+            inner: module,
+            pool: self.pool(),
+        }))
+    }
+}
+
+/// A [`CompiledModule`] whose calls run on the backend's worker pool.
+pub struct AsyncModule {
+    backend_name: String,
+    inner: Arc<dyn CompiledModule>,
+    pool: Arc<WorkerPool>,
+}
+
+impl AsyncModule {
+    /// Queue a call and return immediately. Inputs are owned `Tensor`s
+    /// (cheap `Arc`-data clones) because the job crosses a thread
+    /// boundary; the worker rebuilds the call-local `Rc` handles the
+    /// [`CompiledModule::call`] signature wants.
+    pub fn submit(&self, inputs: Vec<Tensor>) -> CallFuture {
+        let (promise, future) = call_channel();
+        let inner = Arc::clone(&self.inner);
+        self.pool.submit(Box::new(move || {
+            let handles: Vec<Rc<Tensor>> = inputs.into_iter().map(Rc::new).collect();
+            promise.fulfill(inner.call(&handles));
+        }));
+        future
+    }
+}
+
+impl CompiledModule for AsyncModule {
+    /// Synchronous contract: submit to the pool and wait. Identical
+    /// results to the inner module, via one queue hop.
+    fn call(&self, inputs: &[Rc<Tensor>]) -> Result<Vec<Tensor>, DepyfError> {
+        let owned: Vec<Tensor> = inputs.iter().map(|t| (**t).clone()).collect();
+        self.submit(owned).wait()
+    }
+
+    fn backend_name(&self) -> &str {
+        &self.backend_name
+    }
+
+    fn artifacts(&self) -> Vec<ModuleArtifact> {
+        self.inner.artifacts()
+    }
+
+    fn stats(&self) -> ModuleStats {
+        self.inner.stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::EagerBackend;
+    use crate::graph::{Graph, OpKind};
+
+    fn add_graph() -> Graph {
+        let mut g = Graph::new("g");
+        let a = g.placeholder("a", &[2]);
+        let b = g.placeholder("b", &[2]);
+        let s = g.add_op(OpKind::Add, vec![a, b]).unwrap();
+        g.set_outputs(vec![s]);
+        g
+    }
+
+    fn lower_async(backend: &AsyncBackend) -> Arc<dyn CompiledModule> {
+        let req = CompileRequest::new("__compiled_fn_1", Arc::new(add_graph()));
+        let plan = backend.plan(&req).expect("plan");
+        backend.lower(&req, &plan).expect("lower")
+    }
+
+    /// Like `lower` but keeps the concrete [`AsyncModule`] so tests can
+    /// reach `submit`.
+    fn lower_async_concrete(backend: &AsyncBackend) -> AsyncModule {
+        let req = CompileRequest::new("__compiled_fn_1", Arc::new(add_graph()));
+        let plan = backend.plan(&req).expect("plan");
+        let inner = backend.inner().lower(&req, &plan).expect("lower inner");
+        AsyncModule {
+            backend_name: format!("async({})", inner.backend_name()),
+            inner,
+            pool: backend.pool(),
+        }
+    }
+
+    #[test]
+    fn async_call_matches_eager() {
+        let backend = AsyncBackend::with_workers(Arc::new(EagerBackend), 2);
+        let module = lower_async(&backend);
+        let a = Rc::new(Tensor::new(vec![2], vec![1.0, 2.0]));
+        let b = Rc::new(Tensor::new(vec![2], vec![10.0, 20.0]));
+        let out = module.call(&[a, b]).expect("call ok");
+        assert_eq!(out[0].data(), &[11.0, 22.0]);
+        assert_eq!(module.backend_name(), "async(eager)");
+    }
+
+    #[test]
+    fn submit_overlaps_calls_in_flight() {
+        let backend = AsyncBackend::with_workers(Arc::new(EagerBackend), 4);
+        let module = lower_async_concrete(&backend);
+        let futures: Vec<CallFuture> = (0..8)
+            .map(|i| {
+                module.submit(vec![
+                    Tensor::new(vec![2], vec![i as f32, 1.0]),
+                    Tensor::new(vec![2], vec![2.0, 3.0]),
+                ])
+            })
+            .collect();
+        for (i, f) in futures.into_iter().enumerate() {
+            let out = f.wait().expect("overlapped call ok");
+            assert_eq!(out[0].data(), &[i as f32 + 2.0, 4.0]);
+        }
+    }
+
+    #[test]
+    fn capabilities_add_async_and_wrapper() {
+        let backend = AsyncBackend::new(Arc::new(EagerBackend));
+        let caps = backend.capabilities();
+        assert!(caps.contains(Capabilities::ASYNC));
+        assert!(caps.contains(Capabilities::WRAPPER));
+    }
+
+    #[test]
+    fn wrapping_unknown_backend_reports_registry() {
+        let err = AsyncBackend::wrapping("nope").expect_err("unknown backend");
+        let msg = format!("{}", err);
+        assert!(msg.contains("async: unknown inner backend 'nope'"), "{}", msg);
+        assert!(msg.contains("eager"), "{}", msg);
+    }
+}

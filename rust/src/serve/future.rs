@@ -1,0 +1,216 @@
+//! Future/promise plumbing for asynchronous module calls, plus the small
+//! worker pool that backs [`crate::serve::AsyncBackend`].
+//!
+//! `CallFuture` is deliberately tiny: a one-shot slot guarded by a
+//! `Mutex` + `Condvar` pair, not an `std::future::Future` — the serving
+//! layer is thread-based, and a blocking `wait()` is what the dispatch
+//! path needs. The producing side (`CallPromise`) can be fulfilled at
+//! most once; dropping it unfulfilled (a worker panicked, or the pool was
+//! torn down with jobs still queued) resolves the future with an error
+//! instead of deadlocking the waiter.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
+use std::thread::JoinHandle;
+
+use crate::api::DepyfError;
+use crate::tensor::Tensor;
+
+/// The one-shot result slot shared by a promise/future pair.
+enum SlotState {
+    Pending,
+    Done(Result<Vec<Tensor>, DepyfError>),
+}
+
+struct CallSlot {
+    state: Mutex<SlotState>,
+    ready: Condvar,
+}
+
+/// The consumer half of an asynchronous module call: returned by
+/// `AsyncModule::submit` (and the pipelined sharded module), resolved by
+/// a worker thread.
+pub struct CallFuture {
+    slot: Arc<CallSlot>,
+}
+
+/// The producer half: fulfilled exactly once by the worker that ran the
+/// call. Dropping it unfulfilled resolves the future with an error.
+pub struct CallPromise {
+    slot: Arc<CallSlot>,
+    fulfilled: bool,
+}
+
+/// Build a connected promise/future pair.
+pub(crate) fn call_channel() -> (CallPromise, CallFuture) {
+    let slot = Arc::new(CallSlot { state: Mutex::new(SlotState::Pending), ready: Condvar::new() });
+    (CallPromise { slot: Arc::clone(&slot), fulfilled: false }, CallFuture { slot })
+}
+
+impl CallFuture {
+    /// True once the result is in (never blocks).
+    pub fn is_ready(&self) -> bool {
+        let guard = self.slot.state.lock().unwrap_or_else(PoisonError::into_inner);
+        !matches!(*guard, SlotState::Pending)
+    }
+
+    /// Block until the worker resolves the call, consuming the future.
+    pub fn wait(self) -> Result<Vec<Tensor>, DepyfError> {
+        let mut guard = self.slot.state.lock().unwrap_or_else(PoisonError::into_inner);
+        loop {
+            match std::mem::replace(&mut *guard, SlotState::Pending) {
+                SlotState::Done(result) => return result,
+                SlotState::Pending => {
+                    guard = self.slot.ready.wait(guard).unwrap_or_else(PoisonError::into_inner);
+                }
+            }
+        }
+    }
+}
+
+impl CallPromise {
+    /// Resolve the paired future. Consumes the promise — a promise can be
+    /// fulfilled at most once.
+    pub fn fulfill(mut self, result: Result<Vec<Tensor>, DepyfError>) {
+        self.fulfilled = true;
+        self.resolve(result);
+    }
+
+    fn resolve(&self, result: Result<Vec<Tensor>, DepyfError>) {
+        let mut guard = self.slot.state.lock().unwrap_or_else(PoisonError::into_inner);
+        *guard = SlotState::Done(result);
+        self.slot.ready.notify_all();
+    }
+}
+
+impl Drop for CallPromise {
+    fn drop(&mut self) {
+        if !self.fulfilled {
+            self.resolve(Err(DepyfError::Backend(
+                "async call dropped before completion (worker exited or pool shut down)".into(),
+            )));
+        }
+    }
+}
+
+/// A job submitted to the pool: a boxed closure run on one worker thread.
+pub type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A fixed-size pool of OS threads draining one shared job queue.
+///
+/// Workers share a single `mpsc::Receiver` behind a mutex (jobs are
+/// coarse — whole module calls — so queue contention is negligible).
+/// Dropping the pool closes the queue and joins every worker; queued but
+/// unstarted jobs are dropped, which resolves their futures with the
+/// `CallPromise` drop error rather than hanging callers.
+pub struct WorkerPool {
+    sender: Option<mpsc::Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `size.max(1)` worker threads.
+    pub fn new(size: usize) -> WorkerPool {
+        let (sender, receiver) = mpsc::channel::<Job>();
+        let receiver = Arc::new(Mutex::new(receiver));
+        let workers = (0..size.max(1))
+            .map(|i| {
+                let receiver = Arc::clone(&receiver);
+                std::thread::Builder::new()
+                    .name(format!("depyf-worker-{}", i))
+                    .spawn(move || loop {
+                        // Hold the queue lock only for the dequeue, not the job.
+                        let job = {
+                            let rx = receiver.lock().unwrap_or_else(PoisonError::into_inner);
+                            rx.recv()
+                        };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break, // queue closed: pool is shutting down
+                        }
+                    })
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        WorkerPool { sender: Some(sender), workers }
+    }
+
+    /// Queue a job. Silently dropped if the pool is already shutting down
+    /// (the job's promise then reports the shutdown to its waiter).
+    pub fn submit(&self, job: Job) {
+        if let Some(sender) = &self.sender {
+            let _ = sender.send(job);
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.sender.take(); // close the queue so workers' recv() errors out
+        for worker in self.workers.drain(..) {
+            let _ = worker.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn future_resolves_across_threads() {
+        let (promise, future) = call_channel();
+        assert!(!future.is_ready());
+        let t = std::thread::spawn(move || {
+            promise.fulfill(Ok(vec![Tensor::scalar(7.0)]));
+        });
+        let out = future.wait().expect("resolved ok");
+        assert_eq!(out[0].item(), 7.0);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn dropped_promise_errors_instead_of_hanging() {
+        let (promise, future) = call_channel();
+        drop(promise);
+        let err = future.wait().expect_err("dropped promise must error");
+        assert!(format!("{}", err).contains("dropped before completion"), "{}", err);
+    }
+
+    #[test]
+    fn pool_runs_jobs_on_worker_threads() {
+        let pool = WorkerPool::new(3);
+        assert_eq!(pool.size(), 3);
+        let futures: Vec<CallFuture> = (0..16)
+            .map(|i| {
+                let (promise, future) = call_channel();
+                pool.submit(Box::new(move || {
+                    promise.fulfill(Ok(vec![Tensor::scalar(i as f32 * 2.0)]));
+                }));
+                future
+            })
+            .collect();
+        for (i, f) in futures.into_iter().enumerate() {
+            assert_eq!(f.wait().expect("job ok")[0].item(), i as f32 * 2.0);
+        }
+    }
+
+    #[test]
+    fn pool_shutdown_joins_workers() {
+        let pool = WorkerPool::new(2);
+        let (promise, future) = call_channel();
+        pool.submit(Box::new(move || promise.fulfill(Ok(vec![]))));
+        assert!(future.wait().is_ok());
+        drop(pool); // must not hang
+    }
+
+    #[test]
+    fn zero_size_pool_rounds_up_to_one_worker() {
+        let pool = WorkerPool::new(0);
+        assert_eq!(pool.size(), 1);
+    }
+}

@@ -1,0 +1,583 @@
+//! Concurrent serving: compile once, dispatch from many threads.
+//!
+//! The paper frames dynamo as infrastructure that production workloads
+//! hit from many callers at once. This subsystem is that serving story
+//! for the reproduction, layered on the thread-safety contract the rest
+//! of the crate now provides (process-wide `RwLock` backend registry,
+//! `Send + Sync` [`CompiledModule`]s, atomic guard-table usage counters,
+//! rename-safe disk cache — see the "Concurrent serving" section of the
+//! crate docs):
+//!
+//! - [`future`]: one-shot call futures and the [`WorkerPool`] behind them.
+//! - [`AsyncBackend`]: `Capabilities::ASYNC` made real — a wrapper
+//!   backend whose modules run calls on a worker pool and can return
+//!   [`CallFuture`]s (`submit`) instead of blocking (`call`).
+//! - [`PipelinedShardedBackend`]: the sharded partition chain with one
+//!   stage thread per shard, overlapping shard k of call i with shard
+//!   k+1 of call i−1.
+//! - [`ModuleCache`] / [`CachingBackend`]: a process-shared compile cache
+//!   keyed by graph content hash, so N serving threads compile each
+//!   distinct graph once.
+//! - [`run_serve`]: the `depyf serve` driver — N OS threads, each running
+//!   its own dynamo sessions over the table1 model corpus, outputs
+//!   checked against a single-thread reference run, per-thread metrics
+//!   merged into one `metrics.json`, throughput and latency percentiles
+//!   into `BENCH_serve.json`.
+
+pub mod async_backend;
+pub mod future;
+pub mod pipeline;
+
+pub use async_backend::{AsyncBackend, AsyncModule};
+pub use future::{CallFuture, WorkerPool};
+pub use pipeline::{PipelinedShardedBackend, PipelinedShardedModule};
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::sync::{Arc, PoisonError, RwLock};
+use std::time::Instant;
+
+use crate::api::{
+    Backend, Capabilities, CompilePlan, CompileRequest, CompiledModule, DepyfError,
+};
+use crate::bytecode::IsaVersion;
+use crate::corpus::model_cases;
+use crate::dynamo::{Dynamo, DynamoConfig};
+use crate::graph::OptLevel;
+use crate::metrics::MetricsSnapshot;
+use crate::runtime::Counter;
+use crate::vm::Vm;
+
+/// A stable small tag for the cache key ([`OptLevel`] carries no data).
+fn opt_tag(level: &OptLevel) -> u8 {
+    match level {
+        OptLevel::O0 => 0,
+        OptLevel::O1 => 1,
+        OptLevel::O2 => 2,
+    }
+}
+
+/// A process-shared compile cache: `(backend, opt level, graph content
+/// hash)` → compiled module. Reads take the `RwLock` shared, so dispatch
+/// threads looking up already-compiled graphs never serialize; compiles
+/// happen *outside* the lock and the first finished insert wins.
+pub struct ModuleCache {
+    map: RwLock<HashMap<(String, u8, u64), Arc<dyn CompiledModule>>>,
+    hits: Counter,
+    misses: Counter,
+}
+
+impl Default for ModuleCache {
+    fn default() -> Self {
+        ModuleCache::new()
+    }
+}
+
+impl ModuleCache {
+    pub fn new() -> ModuleCache {
+        ModuleCache { map: RwLock::new(HashMap::new()), hits: Counter::new(), misses: Counter::new() }
+    }
+
+    /// Modules served from cache instead of compiled.
+    pub fn hits(&self) -> u64 {
+        self.hits.get()
+    }
+
+    /// Modules actually compiled through the inner backend.
+    pub fn misses(&self) -> u64 {
+        self.misses.get()
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.read().unwrap_or_else(PoisonError::into_inner).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn get(&self, key: &(String, u8, u64)) -> Option<Arc<dyn CompiledModule>> {
+        self.map.read().unwrap_or_else(PoisonError::into_inner).get(key).cloned()
+    }
+
+    /// Insert unless a racing compile got there first; either way, every
+    /// caller ends up holding the same winning module.
+    fn insert_if_absent(
+        &self,
+        key: (String, u8, u64),
+        module: Arc<dyn CompiledModule>,
+    ) -> Arc<dyn CompiledModule> {
+        let mut map = self.map.write().unwrap_or_else(PoisonError::into_inner);
+        Arc::clone(map.entry(key).or_insert(module))
+    }
+}
+
+/// Wraps an inner backend with a shared [`ModuleCache`]: the serving
+/// layer hands one `CachingBackend` (same `Arc`) to every thread's
+/// dynamo, so a graph captured by thread 3 reuses the module thread 0
+/// compiled.
+pub struct CachingBackend {
+    inner: Arc<dyn Backend>,
+    cache: Arc<ModuleCache>,
+}
+
+impl CachingBackend {
+    pub fn new(inner: Arc<dyn Backend>, cache: Arc<ModuleCache>) -> CachingBackend {
+        CachingBackend { inner, cache }
+    }
+
+    pub fn cache(&self) -> &Arc<ModuleCache> {
+        &self.cache
+    }
+}
+
+impl Backend for CachingBackend {
+    /// Transparent: sessions report the inner backend's name.
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        self.inner.capabilities() | Capabilities::WRAPPER
+    }
+
+    fn plan(&self, req: &CompileRequest) -> Result<CompilePlan, DepyfError> {
+        self.inner.plan(req)
+    }
+
+    fn lower(&self, req: &CompileRequest, plan: &CompilePlan) -> Result<Arc<dyn CompiledModule>, DepyfError> {
+        let key = (self.inner.name().to_string(), opt_tag(&req.opt_level), req.cache_key);
+        if let Some(module) = self.cache.get(&key) {
+            self.cache.hits.bump();
+            return Ok(module);
+        }
+        // Compile outside the lock: a slow lower on one thread must not
+        // block other threads' cache reads.
+        let module = self.inner.lower(req, plan)?;
+        self.cache.misses.bump();
+        Ok(self.cache.insert_if_absent(key, module))
+    }
+}
+
+/// Options for [`run_serve`] (mirrors `depyf serve` flags).
+pub struct ServeOptions {
+    /// Concurrent serving threads (the CLI allows 1..=256).
+    pub threads: usize,
+    /// Passes over the model corpus per thread.
+    pub iters: usize,
+    /// Backend name; supports the `recording:<inner>` and `async:<inner>`
+    /// wrapper prefixes. Runtime-requiring backends (xla) are rejected:
+    /// the PJRT client is thread-confined.
+    pub backend: String,
+    /// Where `metrics.json` and `BENCH_serve.json` land.
+    pub out_dir: PathBuf,
+}
+
+/// What one serving thread did.
+struct ThreadReport {
+    case_runs: u64,
+    errors: u64,
+    failures: Vec<String>,
+    latencies_ms: Vec<f64>,
+    metrics: MetricsSnapshot,
+}
+
+/// Aggregated result of one serve run (plus, from [`run_serve`], the
+/// single-thread baseline it was measured against).
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    pub backend: String,
+    pub threads: usize,
+    pub iters: usize,
+    /// Total dynamo sessions driven (threads × corpus cases × iters).
+    pub case_runs: u64,
+    /// Case runs that errored or diverged from the single-thread
+    /// reference output.
+    pub errors: u64,
+    /// First few divergence descriptions, for the report.
+    pub failures: Vec<String>,
+    pub elapsed_ms: f64,
+    /// Case runs per second, wall clock.
+    pub throughput: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub module_cache_hits: u64,
+    pub module_cache_misses: u64,
+    /// Merged across every thread's sessions.
+    pub metrics: MetricsSnapshot,
+    /// Filled by [`run_serve`]: the 1-thread reference throughput and the
+    /// resulting scaling factor.
+    pub baseline_throughput: Option<f64>,
+    pub speedup: Option<f64>,
+}
+
+impl ServeReport {
+    /// Human-readable summary printed by `depyf serve`.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "depyf serve: backend={} threads={} iters={}\n  case-runs={} errors={} elapsed={:.1}ms throughput={:.1} runs/s\n  latency p50={:.3}ms p99={:.3}ms\n  module-cache hits={} misses={}\n  dynamo: captures={} cache_hits={} cache_misses={} graph_breaks={} fallbacks={} evictions={}\n",
+            self.backend,
+            self.threads,
+            self.iters,
+            self.case_runs,
+            self.errors,
+            self.elapsed_ms,
+            self.throughput,
+            self.p50_ms,
+            self.p99_ms,
+            self.module_cache_hits,
+            self.module_cache_misses,
+            self.metrics.captures,
+            self.metrics.cache_hits,
+            self.metrics.cache_misses,
+            self.metrics.graph_breaks,
+            self.metrics.fallbacks,
+            self.metrics.evictions,
+        );
+        if let (Some(base), Some(speedup)) = (self.baseline_throughput, self.speedup) {
+            out.push_str(&format!(
+                "  baseline(1 thread)={:.1} runs/s speedup={:.2}x\n",
+                base, speedup
+            ));
+        }
+        for f in &self.failures {
+            out.push_str(&format!("  FAIL {}\n", f));
+        }
+        out
+    }
+
+    /// The `"serve"` object inlined into the merged `metrics.json`.
+    fn to_serve_json(&self) -> String {
+        format!(
+            "{{\"backend\": \"{}\", \"threads\": {}, \"iters\": {}, \"case_runs\": {}, \"errors\": {}, \"throughput_runs_per_s\": {:.3}, \"p50_ms\": {:.3}, \"p99_ms\": {:.3}, \"module_cache_hits\": {}, \"module_cache_misses\": {}}}",
+            crate::api::json::escape(&self.backend),
+            self.threads,
+            self.iters,
+            self.case_runs,
+            self.errors,
+            self.throughput,
+            self.p50_ms,
+            self.p99_ms,
+            self.module_cache_hits,
+            self.module_cache_misses,
+        )
+    }
+}
+
+/// Resolve a serve backend name, honoring the CLI's wrapper prefixes.
+fn resolve_serve_backend(name: &str) -> Result<Arc<dyn Backend>, DepyfError> {
+    if let Some(inner) = name.strip_prefix("recording:") {
+        return crate::backend::recording::RecordingBackend::wrapping(inner)
+            .map(|b| Arc::new(b) as Arc<dyn Backend>);
+    }
+    if let Some(inner) = name.strip_prefix("async:") {
+        return AsyncBackend::wrapping(inner).map(|b| Arc::new(b) as Arc<dyn Backend>);
+    }
+    crate::api::lookup_backend(name).ok_or_else(|| {
+        DepyfError::Backend(format!(
+            "serve: unknown backend '{}' (registered: {})",
+            name,
+            crate::api::backend_names().join(", ")
+        ))
+    })
+}
+
+/// One unit of serving work: a corpus program plus the reference output a
+/// plain (uncompiled, single-thread) interpreter produced for it.
+struct WorkItem {
+    name: String,
+    source: String,
+    expected: String,
+}
+
+/// Build the corpus: every table1 model case (capped at `limit`), with
+/// its single-thread reference output.
+fn build_corpus(limit: usize) -> Result<Vec<WorkItem>, DepyfError> {
+    let mut items = Vec::new();
+    for case in model_cases().into_iter().take(limit) {
+        let vm = Vm::new();
+        vm.exec_source(&case.source, IsaVersion::V310).map_err(DepyfError::Vm)?;
+        items.push(WorkItem { name: case.name, source: case.source, expected: vm.take_output() });
+    }
+    Ok(items)
+}
+
+/// Nearest-rank percentile over an already-sorted slice.
+fn percentile(sorted_ms: &[f64], p: f64) -> f64 {
+    if sorted_ms.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted_ms.len() as f64 - 1.0) * p).round() as usize;
+    sorted_ms[idx.min(sorted_ms.len() - 1)]
+}
+
+/// Run one serving thread: `iters` passes over the corpus, a fresh dynamo
+/// session per case run (the cross-run sharing is the module cache inside
+/// `backend`), output checked against the reference.
+fn run_worker(backend: Arc<dyn Backend>, corpus: Arc<Vec<WorkItem>>, iters: usize) -> ThreadReport {
+    let mut report = ThreadReport {
+        case_runs: 0,
+        errors: 0,
+        failures: Vec::new(),
+        latencies_ms: Vec::new(),
+        metrics: MetricsSnapshot::default(),
+    };
+    for _ in 0..iters {
+        for item in corpus.iter() {
+            let t0 = Instant::now();
+            let dynamo = Dynamo::new(DynamoConfig {
+                backend: Arc::clone(&backend),
+                ..DynamoConfig::default()
+            });
+            let mut vm = Vm::new();
+            vm.eval_hook = Some(dynamo.clone());
+            let outcome = vm.exec_source(&item.source, IsaVersion::V310);
+            report.latencies_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+            report.case_runs += 1;
+            report.metrics.merge(&dynamo.metrics.snapshot());
+            match outcome {
+                Err(e) => {
+                    report.errors += 1;
+                    if report.failures.len() < 4 {
+                        report.failures.push(format!("{}: vm error: {}", item.name, e));
+                    }
+                }
+                Ok(_) => {
+                    let got = vm.take_output();
+                    if got != item.expected {
+                        report.errors += 1;
+                        if report.failures.len() < 4 {
+                            report.failures.push(format!(
+                                "{}: output diverged from single-thread reference",
+                                item.name
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    report
+}
+
+/// Drive `threads` concurrent serving threads over the first `limit`
+/// table1 model cases, `iters` passes each, through one shared module
+/// cache. Pure in-memory — [`run_serve`] adds the report files.
+pub fn serve_once(
+    threads: usize,
+    iters: usize,
+    backend_name: &str,
+    limit: usize,
+) -> Result<ServeReport, DepyfError> {
+    let inner = resolve_serve_backend(backend_name)?;
+    if inner.requires_runtime() {
+        return Err(DepyfError::Backend(format!(
+            "serve: backend '{}' requires the PJRT runtime, which is thread-confined",
+            backend_name
+        )));
+    }
+    let cache = Arc::new(ModuleCache::new());
+    let backend: Arc<dyn Backend> = Arc::new(CachingBackend::new(inner, Arc::clone(&cache)));
+    let corpus = Arc::new(build_corpus(limit)?);
+    if corpus.is_empty() {
+        return Err(DepyfError::Backend("serve: empty corpus".into()));
+    }
+
+    let t0 = Instant::now();
+    let reports: Vec<ThreadReport> = if threads <= 1 {
+        vec![run_worker(backend, corpus, iters)]
+    } else {
+        let handles: Vec<_> = (0..threads)
+            .map(|i| {
+                let backend = Arc::clone(&backend);
+                let corpus = Arc::clone(&corpus);
+                std::thread::Builder::new()
+                    .name(format!("depyf-serve-{}", i))
+                    .spawn(move || run_worker(backend, corpus, iters))
+                    .expect("spawn serve thread")
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("serve thread panicked"))
+            .collect()
+    };
+    let elapsed_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    let mut merged = MetricsSnapshot::default();
+    let mut latencies = Vec::new();
+    let mut case_runs = 0u64;
+    let mut errors = 0u64;
+    let mut failures = Vec::new();
+    for r in reports {
+        merged.merge(&r.metrics);
+        latencies.extend(r.latencies_ms);
+        case_runs += r.case_runs;
+        errors += r.errors;
+        failures.extend(r.failures);
+    }
+    failures.truncate(8);
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    Ok(ServeReport {
+        backend: backend_name.to_string(),
+        threads,
+        iters,
+        case_runs,
+        errors,
+        failures,
+        elapsed_ms,
+        throughput: if elapsed_ms > 0.0 { case_runs as f64 / (elapsed_ms / 1e3) } else { 0.0 },
+        p50_ms: percentile(&latencies, 0.50),
+        p99_ms: percentile(&latencies, 0.99),
+        module_cache_hits: cache.hits(),
+        module_cache_misses: cache.misses(),
+        metrics: merged,
+        baseline_throughput: None,
+        speedup: None,
+    })
+}
+
+/// The `depyf serve` entry point: measure a 1-thread baseline, then the
+/// requested thread count, write `metrics.json` (merged per-thread dynamo
+/// counters + a `"serve"` summary object) and `BENCH_serve.json`
+/// (throughput vs thread count) into `opts.out_dir`, and fail hard if any
+/// case run diverged from the single-thread reference.
+pub fn run_serve(opts: &ServeOptions) -> Result<ServeReport, DepyfError> {
+    let baseline = serve_once(1, opts.iters, &opts.backend, usize::MAX)?;
+    let mut report = if opts.threads == 1 {
+        baseline.clone()
+    } else {
+        serve_once(opts.threads, opts.iters, &opts.backend, usize::MAX)?
+    };
+    report.baseline_throughput = Some(baseline.throughput);
+    report.speedup = Some(if baseline.throughput > 0.0 {
+        report.throughput / baseline.throughput
+    } else {
+        0.0
+    });
+
+    std::fs::create_dir_all(&opts.out_dir)
+        .map_err(|e| DepyfError::io(opts.out_dir.display(), e))?;
+    let metrics_path = opts.out_dir.join("metrics.json");
+    let metrics_json = report.metrics.to_json_with(Some(("serve", &report.to_serve_json())));
+    std::fs::write(&metrics_path, metrics_json)
+        .map_err(|e| DepyfError::io(metrics_path.display(), e))?;
+
+    let bench_path = opts.out_dir.join("BENCH_serve.json");
+    let speedup = report.speedup.unwrap_or(0.0);
+    let entries: Vec<(String, f64, &str)> = vec![
+        ("throughput_t1".to_string(), baseline.throughput, "runs/s"),
+        (format!("throughput_t{}", report.threads), report.throughput, "runs/s"),
+        (format!("speedup_1_to_{}", report.threads), speedup, "x"),
+        (format!("p50_t{}", report.threads), report.p50_ms, "ms"),
+        (format!("p99_t{}", report.threads), report.p99_ms, "ms"),
+    ];
+    let body: Vec<String> = entries
+        .iter()
+        .map(|(name, value, unit)| {
+            format!(
+                "    {{\"bench\": \"serve\", \"name\": \"{}\", \"value\": {:.3}, \"unit\": \"{}\"}}",
+                name, value, unit
+            )
+        })
+        .collect();
+    let bench_json = format!(
+        "{{\n  \"schema_version\": 1,\n  \"entries\": [\n{}\n  ]\n}}\n",
+        body.join(",\n")
+    );
+    std::fs::write(&bench_path, bench_json)
+        .map_err(|e| DepyfError::io(bench_path.display(), e))?;
+
+    if report.errors > 0 {
+        return Err(DepyfError::Backend(format!(
+            "serve: {} of {} case runs failed or diverged from the single-thread reference ({})",
+            report.errors,
+            report.case_runs,
+            report.failures.join(" | ")
+        )));
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::EagerBackend;
+    use crate::graph::{Graph, OpKind};
+    use crate::tensor::Tensor;
+
+    fn mul_graph() -> Graph {
+        let mut g = Graph::new("g");
+        let a = g.placeholder("a", &[2]);
+        let b = g.placeholder("b", &[2]);
+        let m = g.add_op(OpKind::Mul, vec![a, b]).unwrap();
+        g.set_outputs(vec![m]);
+        g
+    }
+
+    #[test]
+    fn module_cache_shares_compiles_across_threads() {
+        let cache = Arc::new(ModuleCache::new());
+        let backend: Arc<dyn Backend> =
+            Arc::new(CachingBackend::new(Arc::new(EagerBackend), Arc::clone(&cache)));
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let backend = Arc::clone(&backend);
+                std::thread::spawn(move || {
+                    let req = CompileRequest::new("__compiled_fn_1", Arc::new(mul_graph()));
+                    let plan = backend.plan(&req).expect("plan");
+                    let module = backend.lower(&req, &plan).expect("lower");
+                    let a = Rc::new(Tensor::new(vec![2], vec![2.0, 3.0]));
+                    let b = Rc::new(Tensor::new(vec![2], vec![4.0, 5.0]));
+                    module.call(&[a, b]).expect("call")[0].data().to_vec()
+                })
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().expect("thread"), vec![8.0, 15.0]);
+        }
+        // Same content hash everywhere: exactly one module in the cache,
+        // and every lowering after the first was a hit.
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.hits() + cache.misses(), 4);
+        assert!(cache.hits() >= 1, "hits={} misses={}", cache.hits(), cache.misses());
+    }
+
+    #[test]
+    fn serve_once_multithreaded_matches_reference() {
+        let report = serve_once(3, 1, "eager", 4).expect("serve");
+        assert_eq!(report.errors, 0, "failures: {:?}", report.failures);
+        assert_eq!(report.case_runs, 3 * 4);
+        assert!(report.metrics.captures > 0, "dynamo never captured anything");
+        assert!(report.p99_ms >= report.p50_ms);
+        assert!(report.module_cache_hits + report.module_cache_misses > 0);
+    }
+
+    #[test]
+    fn serve_once_rejects_runtime_backends_and_unknown_names() {
+        let err = serve_once(1, 1, "xla", 1).expect_err("xla must be rejected");
+        assert!(format!("{}", err).contains("thread-confined"), "{}", err);
+        let err = serve_once(1, 1, "no-such-backend", 1).expect_err("unknown name");
+        assert!(format!("{}", err).contains("unknown backend"), "{}", err);
+    }
+
+    #[test]
+    fn serve_report_render_and_json() {
+        let report = serve_once(2, 1, "async:eager", 3).expect("serve");
+        assert_eq!(report.errors, 0, "failures: {:?}", report.failures);
+        let text = report.render();
+        assert!(text.contains("backend=async:eager"), "{}", text);
+        let json = crate::api::json::parse(&report.to_serve_json()).expect("valid json");
+        assert_eq!(json.get("threads").and_then(|v| v.as_f64()), Some(2.0));
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let v = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 1.0), 4.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        assert!(percentile(&v, 0.5) >= 2.0);
+    }
+}

@@ -1,0 +1,393 @@
+//! Pipelined execution of the sharded backend's partition plan.
+//!
+//! The stock `ShardedModule` runs its partitions sequentially inside one
+//! `call`. [`PipelinedShardedModule`] gives every partition its own
+//! *stage thread*, chained by channels: a call's environment packet flows
+//! stage 0 → 1 → … → k, so **shard k of call i overlaps shard k+1 of
+//! call i−1** — classic pipeline parallelism across in-flight calls.
+//! Single-call latency is unchanged (the stages of one call still run in
+//! order); throughput under concurrent submitters approaches
+//! `1 / slowest_stage` instead of `1 / sum(stages)`.
+//!
+//! The environment-threading semantics are exactly
+//! `Stitcher::run`'s: an `env` vector indexed by original-graph node ids,
+//! seeded with the call inputs (and const graph outputs), with each stage
+//! gathering `part.inputs` and scattering `part.outputs`. The only
+//! difference is that tensors cross stage boundaries as owned `Tensor`s
+//! (cheap `Arc`-data clones) instead of call-local `Rc`s.
+
+use std::rc::Rc;
+use std::sync::{mpsc, Arc, Mutex, PoisonError};
+use std::thread::JoinHandle;
+
+use crate::api::{
+    ArtifactKind, Backend, Capabilities, CompilePlan, CompileRequest, CompiledModule, DepyfError,
+    ModuleArtifact, ModuleStats,
+};
+use crate::backend::partition::{Partition, Stitcher};
+use crate::backend::sharded::ShardedBackend;
+use crate::graph::{Graph, NodeKind};
+use crate::tensor::Tensor;
+
+use super::future::{call_channel, CallFuture, CallPromise};
+
+/// The sharded backend with stage-threaded modules. Registered as
+/// `pipelined`; plans exactly like `sharded` (same partitioner, same
+/// per-shard compile cache), differs only in how a module dispatches.
+pub struct PipelinedShardedBackend {
+    inner: ShardedBackend,
+}
+
+impl Default for PipelinedShardedBackend {
+    fn default() -> Self {
+        PipelinedShardedBackend::new()
+    }
+}
+
+impl PipelinedShardedBackend {
+    pub fn new() -> PipelinedShardedBackend {
+        PipelinedShardedBackend { inner: ShardedBackend::new() }
+    }
+
+    /// Cap partition size (forwarded to the sharded partitioner) — small
+    /// caps make deep pipelines, useful in tests.
+    pub fn with_max_ops(max_ops: usize) -> PipelinedShardedBackend {
+        PipelinedShardedBackend { inner: ShardedBackend::with_max_ops(max_ops) }
+    }
+}
+
+impl Backend for PipelinedShardedBackend {
+    fn name(&self) -> &str {
+        "pipelined"
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        self.inner.capabilities() | Capabilities::ASYNC
+    }
+
+    fn plan(&self, req: &CompileRequest) -> Result<CompilePlan, DepyfError> {
+        self.inner.plan(req)
+    }
+
+    fn lower(&self, req: &CompileRequest, plan: &CompilePlan) -> Result<Arc<dyn CompiledModule>, DepyfError> {
+        let (stitcher, cache_hits) = self.inner.lower_stitcher(req, plan)?;
+        Ok(Arc::new(PipelinedShardedModule::new(&req.name, &stitcher, plan.to_json(), cache_hits)))
+    }
+}
+
+/// One in-flight call: the shared environment plus the promise to resolve
+/// when the last stage finishes.
+struct Pkt {
+    env: Vec<Option<Tensor>>,
+    promise: CallPromise,
+}
+
+/// A [`CompiledModule`] that executes the sharded partition chain on
+/// dedicated stage threads, one channel hop per partition boundary.
+pub struct PipelinedShardedModule {
+    name: String,
+    graph: Arc<Graph>,
+    plan_json: String,
+    cache_hits: u64,
+    /// Kept for `artifacts()`; the execution copies live on the stages.
+    part_modules: Vec<Arc<dyn CompiledModule>>,
+    /// `None` for the degenerate zero-partition plan (const/passthrough
+    /// graphs): those calls are answered inline.
+    sender: Mutex<Option<mpsc::Sender<Pkt>>>,
+    stages: Vec<JoinHandle<()>>,
+}
+
+impl PipelinedShardedModule {
+    /// Build the stage chain from a lowered stitcher. Partitions and
+    /// module handles are cloned out of it; the stitcher itself is left
+    /// usable (the plain sharded path and tests reuse it).
+    pub fn new(name: &str, stitcher: &Stitcher, plan_json: String, cache_hits: u64) -> PipelinedShardedModule {
+        let graph = Arc::clone(stitcher.graph());
+        let part_modules: Vec<Arc<dyn CompiledModule>> =
+            stitcher.parts().iter().map(|sp| Arc::clone(&sp.module)).collect();
+        let n = stitcher.parts().len();
+        if n == 0 {
+            return PipelinedShardedModule {
+                name: name.to_string(),
+                graph,
+                plan_json,
+                cache_hits,
+                part_modules,
+                sender: Mutex::new(None),
+                stages: Vec::new(),
+            };
+        }
+        let (first_tx, mut prev_rx) = mpsc::channel::<Pkt>();
+        let mut stages = Vec::with_capacity(n);
+        for (k, sp) in stitcher.parts().iter().enumerate() {
+            let part = sp.part.clone();
+            let module = Arc::clone(&sp.module);
+            let graph = Arc::clone(&graph);
+            let last = k + 1 == n;
+            let (next_tx, next_rx) = if last {
+                (None, None)
+            } else {
+                let (tx, rx) = mpsc::channel::<Pkt>();
+                (Some(tx), Some(rx))
+            };
+            let rx = prev_rx;
+            let handle = std::thread::Builder::new()
+                .name(format!("depyf-stage-{}", k))
+                .spawn(move || stage_loop(rx, part, module, next_tx, graph))
+                .expect("spawn pipeline stage");
+            stages.push(handle);
+            prev_rx = match next_rx {
+                Some(rx) => rx,
+                None => break,
+            };
+        }
+        PipelinedShardedModule {
+            name: name.to_string(),
+            graph,
+            plan_json,
+            cache_hits,
+            part_modules,
+            sender: Mutex::new(Some(first_tx)),
+            stages,
+        }
+    }
+
+    /// Seed the environment the way `Stitcher::run` does: call inputs on
+    /// `graph.inputs`, const graph outputs pre-materialized.
+    fn build_env(&self, inputs: &[Rc<Tensor>]) -> Result<Vec<Option<Tensor>>, DepyfError> {
+        let g = &*self.graph;
+        g.check_inputs(inputs)?;
+        let mut env: Vec<Option<Tensor>> = vec![None; g.nodes.len()];
+        for (&slot, input) in g.inputs.iter().zip(inputs.iter()) {
+            env[slot] = Some((**input).clone());
+        }
+        for &o in &g.outputs {
+            match &g.nodes[o].kind {
+                NodeKind::ConstScalar(v) => env[o] = Some(Tensor::scalar(*v as f32)),
+                NodeKind::ConstTensor(t) => env[o] = Some(t.clone()),
+                _ => {}
+            }
+        }
+        Ok(env)
+    }
+
+    /// Inject a call into the pipeline and return immediately. Calls
+    /// submitted from one thread resolve in submission order (stages are
+    /// FIFO channels).
+    pub fn submit(&self, inputs: &[Rc<Tensor>]) -> CallFuture {
+        let (promise, future) = call_channel();
+        let env = match self.build_env(inputs) {
+            Ok(env) => env,
+            Err(e) => {
+                promise.fulfill(Err(e));
+                return future;
+            }
+        };
+        let sender = self.sender.lock().unwrap_or_else(PoisonError::into_inner);
+        match &*sender {
+            Some(tx) => {
+                // A failed send drops the Pkt — its promise then resolves
+                // the future with the shutdown error.
+                let _ = tx.send(Pkt { env, promise });
+            }
+            None => {
+                // Zero partitions: every output is already in the env.
+                promise.fulfill(collect_outputs(&self.graph, &env));
+            }
+        }
+        future
+    }
+
+    /// Stage-thread count (== partitions).
+    pub fn depth(&self) -> usize {
+        self.stages.len()
+    }
+}
+
+/// Gather `graph.outputs` from a finished environment.
+fn collect_outputs(graph: &Graph, env: &[Option<Tensor>]) -> Result<Vec<Tensor>, DepyfError> {
+    graph
+        .outputs
+        .iter()
+        .map(|&o| {
+            env[o]
+                .clone()
+                .ok_or_else(|| DepyfError::Backend(format!("pipeline: output {} unevaluated", o)))
+        })
+        .collect()
+}
+
+/// Body of one stage thread: receive a packet, run this partition over
+/// it, forward (or resolve, on the last stage). Any error resolves the
+/// packet's promise immediately — later stages never see it.
+fn stage_loop(
+    rx: mpsc::Receiver<Pkt>,
+    part: Partition,
+    module: Arc<dyn CompiledModule>,
+    next: Option<mpsc::Sender<Pkt>>,
+    graph: Arc<Graph>,
+) {
+    while let Ok(mut pkt) = rx.recv() {
+        let gathered: Result<Vec<Rc<Tensor>>, DepyfError> = part
+            .inputs
+            .iter()
+            .map(|&id| {
+                pkt.env[id].clone().map(Rc::new).ok_or_else(|| {
+                    DepyfError::Backend(format!("pipeline: partition input {} unevaluated", id))
+                })
+            })
+            .collect();
+        match gathered.and_then(|ins| module.call(&ins)) {
+            Ok(outs) if outs.len() == part.outputs.len() => {
+                for (&id, t) in part.outputs.iter().zip(outs.into_iter()) {
+                    pkt.env[id] = Some(t);
+                }
+                match &next {
+                    Some(tx) => {
+                        let _ = tx.send(pkt);
+                    }
+                    None => {
+                        let result = collect_outputs(&graph, &pkt.env);
+                        pkt.promise.fulfill(result);
+                    }
+                }
+            }
+            Ok(outs) => pkt.promise.fulfill(Err(DepyfError::Backend(format!(
+                "pipeline: partition returned {} outputs, expected {}",
+                outs.len(),
+                part.outputs.len()
+            )))),
+            Err(e) => pkt.promise.fulfill(Err(e)),
+        }
+    }
+    // rx closed: previous stage (or the module) is shutting down. Dropping
+    // `next` cascades the shutdown forward.
+}
+
+impl CompiledModule for PipelinedShardedModule {
+    /// Synchronous contract: one packet through the whole pipeline.
+    fn call(&self, inputs: &[Rc<Tensor>]) -> Result<Vec<Tensor>, DepyfError> {
+        self.submit(inputs).wait()
+    }
+
+    fn backend_name(&self) -> &str {
+        "sharded+pipelined"
+    }
+
+    fn artifacts(&self) -> Vec<ModuleArtifact> {
+        let mut arts = vec![ModuleArtifact {
+            kind: ArtifactKind::Plan,
+            name: self.name.clone(),
+            file: format!("__plan_{}.json", crate::backend::sanitize(&self.name)),
+            content: self.plan_json.clone(),
+        }];
+        for module in &self.part_modules {
+            arts.extend(module.artifacts());
+        }
+        arts
+    }
+
+    fn stats(&self) -> ModuleStats {
+        ModuleStats {
+            partitions: self.part_modules.len() as u64,
+            bucket: None,
+            cache_hits: self.cache_hits,
+        }
+    }
+}
+
+impl Drop for PipelinedShardedModule {
+    fn drop(&mut self) {
+        // Close the intake; each stage drains, drops its forward sender,
+        // and the shutdown cascades down the chain.
+        self.sender.lock().unwrap_or_else(PoisonError::into_inner).take();
+        for stage in self.stages.drain(..) {
+            let _ = stage.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::OpKind;
+    use crate::tensor::Rng;
+
+    fn deep_chain(depth: usize) -> Graph {
+        let mut g = Graph::new("chain");
+        let x = g.placeholder("x", &[3, 5]);
+        let mut cur = x;
+        for i in 0..depth {
+            cur = match i % 3 {
+                0 => g.add_op(OpKind::Relu, vec![cur]).unwrap(),
+                1 => g.add_op(OpKind::Tanh, vec![cur]).unwrap(),
+                _ => g.add_op(OpKind::Gelu, vec![cur]).unwrap(),
+            };
+        }
+        let s = g.add_op(OpKind::Sum(None), vec![cur]).unwrap();
+        g.set_outputs(vec![s]);
+        g
+    }
+
+    fn lower_pair(g: Graph, max_ops: usize) -> (Arc<dyn CompiledModule>, Arc<dyn CompiledModule>) {
+        let graph = Arc::new(g);
+        let sharded = ShardedBackend::with_max_ops(max_ops);
+        let req = CompileRequest::new("__compiled_fn_1", Arc::clone(&graph));
+        let plan = sharded.plan(&req).expect("plan");
+        let sequential = sharded.lower(&req, &plan).expect("sharded lower");
+        let pipelined_backend = PipelinedShardedBackend::with_max_ops(max_ops);
+        let plan2 = pipelined_backend.plan(&req).expect("plan2");
+        let pipelined = pipelined_backend.lower(&req, &plan2).expect("pipelined lower");
+        (sequential, pipelined)
+    }
+
+    #[test]
+    fn pipelined_matches_sequential_sharded_bitwise() {
+        let (sequential, pipelined) = lower_pair(deep_chain(9), 2);
+        let mut rng = Rng::new(7);
+        for _ in 0..5 {
+            let x = Rc::new(Tensor::randn(&[3, 5], &mut rng));
+            let want = sequential.call(&[Rc::clone(&x)]).expect("sequential");
+            let got = pipelined.call(&[x]).expect("pipelined");
+            assert_eq!(want.len(), got.len());
+            for (w, g) in want.iter().zip(got.iter()) {
+                assert_eq!(w.shape(), g.shape());
+                assert_eq!(w.data(), g.data(), "pipelined output must be bitwise equal");
+            }
+        }
+    }
+
+    #[test]
+    fn overlapped_submissions_resolve_in_order() {
+        let graph = Arc::new(deep_chain(6));
+        let backend = PipelinedShardedBackend::with_max_ops(1);
+        let req = CompileRequest::new("__compiled_fn_2", Arc::clone(&graph));
+        let plan = backend.plan(&req).expect("plan");
+        let (stitcher, hits) = ShardedBackend::with_max_ops(1).lower_stitcher(&req, &plan).expect("stitch");
+        let module = PipelinedShardedModule::new("__compiled_fn_2", &stitcher, plan.to_json(), hits);
+        assert!(module.depth() >= 2, "want a real pipeline, got depth {}", module.depth());
+        let mut rng = Rng::new(11);
+        let inputs: Vec<Rc<Tensor>> =
+            (0..6).map(|_| Rc::new(Tensor::randn(&[3, 5], &mut rng))).collect();
+        // All six calls in flight at once, crossing stages concurrently.
+        let futures: Vec<CallFuture> = inputs.iter().map(|x| module.submit(&[Rc::clone(x)])).collect();
+        for (x, f) in inputs.iter().zip(futures.into_iter()) {
+            let want = stitcher.run(&[Rc::clone(x)]).expect("reference");
+            let got = f.wait().expect("pipelined");
+            assert_eq!(want[0].data(), got[0].data());
+        }
+    }
+
+    #[test]
+    fn input_arity_error_resolves_future() {
+        let (_, pipelined) = lower_pair(deep_chain(3), 2);
+        let err = pipelined.call(&[]).expect_err("missing input must error");
+        assert!(!format!("{}", err).is_empty());
+    }
+
+    #[test]
+    fn drop_with_no_calls_terminates_stages() {
+        let (_, pipelined) = lower_pair(deep_chain(5), 1);
+        drop(pipelined); // must join stage threads, not hang
+    }
+}

@@ -4,7 +4,7 @@
 //! value that user programs manipulate, that dynamo proxies during symbolic
 //! evaluation, and that the eager backend computes with. Row-major, f32 only
 //! (the dtype the paper's models overwhelmingly use), functional (ops return
-//! new tensors; data is shared via `Rc`).
+//! new tensors; data is shared via `Arc`, so tensors cross threads freely).
 
 mod ops;
 mod rng;
@@ -13,13 +13,13 @@ pub use ops::*;
 pub use rng::Rng;
 
 use std::fmt;
-use std::rc::Rc;
+use std::sync::Arc;
 
 /// A dense row-major f32 tensor.
 #[derive(Clone)]
 pub struct Tensor {
     shape: Vec<usize>,
-    data: Rc<Vec<f32>>,
+    data: Arc<Vec<f32>>,
 }
 
 impl Tensor {
@@ -27,41 +27,41 @@ impl Tensor {
     pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
         let n: usize = shape.iter().product();
         assert_eq!(n, data.len(), "shape {:?} wants {} elems, got {}", shape, n, data.len());
-        Tensor { shape, data: Rc::new(data) }
+        Tensor { shape, data: Arc::new(data) }
     }
 
     /// A scalar (rank-0) tensor.
     pub fn scalar(v: f32) -> Tensor {
-        Tensor { shape: vec![], data: Rc::new(vec![v]) }
+        Tensor { shape: vec![], data: Arc::new(vec![v]) }
     }
 
     /// All-zeros tensor.
     pub fn zeros(shape: &[usize]) -> Tensor {
         let n: usize = shape.iter().product();
-        Tensor { shape: shape.to_vec(), data: Rc::new(vec![0.0; n]) }
+        Tensor { shape: shape.to_vec(), data: Arc::new(vec![0.0; n]) }
     }
 
     /// All-ones tensor.
     pub fn ones(shape: &[usize]) -> Tensor {
         let n: usize = shape.iter().product();
-        Tensor { shape: shape.to_vec(), data: Rc::new(vec![1.0; n]) }
+        Tensor { shape: shape.to_vec(), data: Arc::new(vec![1.0; n]) }
     }
 
     /// `[0, 1, ..., n-1]` as f32.
     pub fn arange(n: usize) -> Tensor {
-        Tensor { shape: vec![n], data: Rc::new((0..n).map(|i| i as f32).collect()) }
+        Tensor { shape: vec![n], data: Arc::new((0..n).map(|i| i as f32).collect()) }
     }
 
     /// Standard-normal tensor from a caller-owned PRNG (deterministic).
     pub fn randn(shape: &[usize], rng: &mut Rng) -> Tensor {
         let n: usize = shape.iter().product();
-        Tensor { shape: shape.to_vec(), data: Rc::new((0..n).map(|_| rng.normal()).collect()) }
+        Tensor { shape: shape.to_vec(), data: Arc::new((0..n).map(|_| rng.normal()).collect()) }
     }
 
     /// Uniform [0,1) tensor from a caller-owned PRNG.
     pub fn rand(shape: &[usize], rng: &mut Rng) -> Tensor {
         let n: usize = shape.iter().product();
-        Tensor { shape: shape.to_vec(), data: Rc::new((0..n).map(|_| rng.uniform()).collect()) }
+        Tensor { shape: shape.to_vec(), data: Arc::new((0..n).map(|_| rng.uniform()).collect()) }
     }
 
     pub fn shape(&self) -> &[usize] {
@@ -91,7 +91,7 @@ impl Tensor {
     pub fn reshape(&self, shape: Vec<usize>) -> Tensor {
         let n: usize = shape.iter().product();
         assert_eq!(n, self.numel(), "reshape {:?} -> {:?}", self.shape, shape);
-        Tensor { shape, data: Rc::clone(&self.data) }
+        Tensor { shape, data: Arc::clone(&self.data) }
     }
 
     /// Strides (in elements) of the row-major layout.

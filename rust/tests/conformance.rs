@@ -24,6 +24,7 @@ mod support;
 
 use std::path::PathBuf;
 use std::rc::Rc;
+use std::sync::Arc;
 
 use depyf::api::{
     ArtifactKind, Backend, CompileRequest, EagerBackend, FallbackPolicy, OptLevel, TraceBundle,
@@ -101,7 +102,7 @@ fn assert_conforms(bundle: &TraceBundle, backend: &dyn Backend, eps: f32, differ
 /// collect every trace bundle — parsed back from its rendered JSON, so
 /// the on-disk representation is what gets replayed.
 fn record_program(source: &str, label: &str) -> Vec<TraceBundle> {
-    let rec: Rc<dyn Backend> = Rc::new(RecordingBackend::new(Rc::new(EagerBackend)));
+    let rec: Arc<dyn Backend> = Arc::new(RecordingBackend::new(Arc::new(EagerBackend)));
     let dynamo = Dynamo::new(DynamoConfig { backend: rec, ..Default::default() });
     let mut vm = Vm::new();
     vm.eval_hook = Some(dynamo.clone());
@@ -169,7 +170,7 @@ fn table1_corpus_traces_replay_on_xla_within_eps() {
         for bundle in record_program(&case.source, &case.name) {
             let opts = ReplayOptions {
                 eps: 1e-4,
-                runtime: Some(Rc::clone(&rt)),
+                runtime: Some(Arc::clone(&rt)),
                 localize: true,
                 ..Default::default()
             };
@@ -200,10 +201,10 @@ fn generated_graphs_conform_across_backends() {
     let mut gen = support::GraphGen::new(GEN_SEED);
     let mut input_rng = Rng::new(GEN_SEED ^ 0x9E37_79B9);
     for i in 0..n {
-        let g = Rc::new(gen.next_graph());
+        let g = Arc::new(gen.next_graph());
         let name = g.name.clone();
-        let req = CompileRequest::new(&name, Rc::clone(&g));
-        let rec = RecordingBackend::new(Rc::new(EagerBackend));
+        let req = CompileRequest::new(&name, Arc::clone(&g));
+        let rec = RecordingBackend::new(Arc::new(EagerBackend));
         let module = rec
             .compile(&req)
             .unwrap_or_else(|e| panic!("graph {} failed to compile on eager: {}", name, e));
@@ -237,8 +238,8 @@ fn outputs_at(
     level: OptLevel,
     tag: &str,
 ) -> Vec<Vec<depyf::tensor::Tensor>> {
-    let graph = Rc::new(bundle.graph.clone());
-    let req = CompileRequest::new(&bundle.name, Rc::clone(&graph))
+    let graph = Arc::new(bundle.graph.clone());
+    let req = CompileRequest::new(&bundle.name, Arc::clone(&graph))
         .with_fallback(FallbackPolicy::Error)
         .with_opt_level(level);
     let module = backend
@@ -318,10 +319,10 @@ fn opt_level_0_vs_2_is_bitwise_clean_across_backends() {
     let mut gen = support::GraphGen::new(GEN_SEED ^ 0x0717);
     let mut input_rng = Rng::new(GEN_SEED ^ 0x0718);
     for i in 0..n {
-        let g = Rc::new(gen.next_graph());
+        let g = Arc::new(gen.next_graph());
         let name = g.name.clone();
-        let req = CompileRequest::new(&name, Rc::clone(&g));
-        let rec = RecordingBackend::new(Rc::new(EagerBackend));
+        let req = CompileRequest::new(&name, Arc::clone(&g));
+        let rec = RecordingBackend::new(Arc::new(EagerBackend));
         let module = rec.compile(&req).unwrap_or_else(|e| panic!("graph {}: {}", name, e));
         for _ in 0..2 {
             module.call(&support::rand_inputs(&g, &mut input_rng)).unwrap();
@@ -383,4 +384,110 @@ fn session_dump_indexes_trace_artifacts() {
     assert_conforms(&bundle, &EagerBackend, 0.0, false, "session_dump");
     assert_conforms(&bundle, &BatchedBackend::new(), 0.0, true, "session_dump");
     std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Tentpole satellite: concurrent dispatch equivalence. N threads calling
+/// the same `Arc<dyn CompiledModule>` handles (compiled once, on the
+/// `recording:eager` wrapper) must produce results **bitwise equal** to
+/// the single-thread eager oracle, and the trace bundles recorded under
+/// that contention must neither lose calls nor collide in `(kind, name)`.
+#[test]
+fn multithread_dispatch_is_bitwise_equal_to_single_thread_eager() {
+    use depyf::api::CompiledModule;
+    use depyf::backend::eager;
+    use depyf::tensor::Tensor;
+
+    const THREADS: usize = 4;
+    const CALLS_PER_GRAPH: usize = 3;
+    let n_graphs = if quick() { 16 } else { 48 };
+
+    struct Work {
+        name: String,
+        module: Arc<dyn CompiledModule>,
+        /// Owned input sets (tensors cross threads; workers rebuild `Rc`s).
+        input_sets: Vec<Vec<depyf::tensor::Tensor>>,
+        /// Single-thread eager oracle outputs, as raw f32 bits.
+        want: Vec<Vec<Vec<u32>>>,
+    }
+
+    let mut gen = support::GraphGen::new(GEN_SEED ^ 0xA11CE);
+    let mut input_rng = Rng::new(GEN_SEED ^ 0xA11CF);
+    let mut works = Vec::new();
+    for i in 0..n_graphs {
+        let g = Arc::new(gen.next_graph());
+        let name = format!("__compiled_fn_{}", i + 1);
+        let req = CompileRequest::new(&name, Arc::clone(&g));
+        let rec = RecordingBackend::new(Arc::new(EagerBackend));
+        let module = rec.compile(&req).unwrap_or_else(|e| panic!("{}: compile: {}", name, e));
+        let mut input_sets = Vec::new();
+        let mut want = Vec::new();
+        for _ in 0..CALLS_PER_GRAPH {
+            let inputs = support::rand_inputs(&g, &mut input_rng);
+            let oracle = eager::execute(&g, &inputs)
+                .unwrap_or_else(|e| panic!("{}: eager oracle: {}", name, e));
+            want.push(
+                oracle
+                    .iter()
+                    .map(|t: &Tensor| t.data().iter().map(|v| v.to_bits()).collect())
+                    .collect(),
+            );
+            input_sets.push(inputs.iter().map(|t| (**t).clone()).collect());
+        }
+        works.push(Work { name, module, input_sets, want });
+    }
+    let works = Arc::new(works);
+
+    let handles: Vec<_> = (0..THREADS)
+        .map(|t| {
+            let works = Arc::clone(&works);
+            std::thread::spawn(move || {
+                for w in works.iter() {
+                    for (ci, inputs) in w.input_sets.iter().enumerate() {
+                        let handles: Vec<Rc<depyf::tensor::Tensor>> =
+                            inputs.iter().cloned().map(Rc::new).collect();
+                        let got = w
+                            .module
+                            .call(&handles)
+                            .unwrap_or_else(|e| panic!("thread {}: {}: {}", t, w.name, e));
+                        assert_eq!(got.len(), w.want[ci].len(), "thread {}: {}", t, w.name);
+                        for (oi, out) in got.iter().enumerate() {
+                            let bits: Vec<u32> = out.data().iter().map(|v| v.to_bits()).collect();
+                            assert_eq!(
+                                bits, w.want[ci][oi],
+                                "thread {}: {} call {} output {} diverged from single-thread eager",
+                                t, w.name, ci, oi
+                            );
+                        }
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("dispatch thread panicked");
+    }
+
+    // Trace bundles recorded under contention: every call present, every
+    // (kind, name) slot unique across the whole fleet of modules.
+    let mut seen = std::collections::HashSet::new();
+    for w in works.iter() {
+        let traces: Vec<_> =
+            w.module.artifacts().into_iter().filter(|a| a.kind == ArtifactKind::Trace).collect();
+        assert_eq!(traces.len(), 1, "{}: expected one trace artifact", w.name);
+        let art = &traces[0];
+        assert!(
+            seen.insert((art.kind, art.name.clone())),
+            "(kind, name) collision on {:?}/{}",
+            art.kind,
+            art.name
+        );
+        let bundle = TraceBundle::parse(&art.content)
+            .unwrap_or_else(|e| panic!("{}: trace does not parse: {}", w.name, e));
+        assert_eq!(
+            bundle.calls.len(),
+            THREADS * CALLS_PER_GRAPH,
+            "{}: concurrent recording lost calls",
+            w.name
+        );
+    }
 }

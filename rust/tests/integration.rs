@@ -1,6 +1,7 @@
 //! Cross-module integration tests: the whole stack composing.
 
 use std::rc::Rc;
+use std::sync::Arc;
 
 use depyf::api::{
     load_manifest, lookup_backend, register_backend, Artifact, ArtifactKind, Backend, Capabilities,
@@ -63,7 +64,7 @@ print(forward(torch.ones([2, 6]) * -1).item())
     let rt = Runtime::cpu().expect("pjrt");
     let mut vm = Vm::new();
     vm.seed(9);
-    let dynamo = Dynamo::with_runtime(DynamoConfig { backend: Rc::new(XlaBackend), ..Default::default() }, rt);
+    let dynamo = Dynamo::with_runtime(DynamoConfig { backend: Arc::new(XlaBackend), ..Default::default() }, rt);
     vm.eval_hook = Some(dynamo.clone());
     vm.exec_source(src, IsaVersion::V310).unwrap();
     // XLA fuses differently than the eager reference: compare numerically
@@ -124,11 +125,11 @@ fn custom_backend_end_to_end_via_session_builder() {
             &self,
             req: &CompileRequest,
             _plan: &CompilePlan,
-        ) -> Result<Rc<dyn CompiledModule>, DepyfError> {
-            Ok(Rc::new(eager::EagerModule::with_name(Rc::clone(&req.graph), "tagging-eager".into())))
+        ) -> Result<Arc<dyn CompiledModule>, DepyfError> {
+            Ok(Arc::new(eager::EagerModule::with_name(Arc::clone(&req.graph), "tagging-eager".into())))
         }
     }
-    register_backend(Rc::new(TaggingEager));
+    register_backend(Arc::new(TaggingEager));
     assert!(lookup_backend("tagging-eager").is_some());
 
     let src = "def f(x, y):\n    return ((x @ y) + 1).relu().sum()\nprint(f(torch.ones([4, 4]), torch.ones([4, 4])).item())\n";
@@ -256,7 +257,7 @@ fn compiled_graph_value_call() {
 
 /// Capture every graph the (fully-capturable) table1 model corpus
 /// produces under dynamo.
-fn corpus_graphs() -> Vec<(String, Rc<Graph>)> {
+fn corpus_graphs() -> Vec<(String, Arc<Graph>)> {
     let mut out = Vec::new();
     for case in model_cases().into_iter().filter(|c| c.full_capture) {
         let mut vm = Vm::new();
@@ -266,7 +267,7 @@ fn corpus_graphs() -> Vec<(String, Rc<Graph>)> {
         vm.exec_source(&case.source, IsaVersion::V310)
             .unwrap_or_else(|e| panic!("{} failed: {}", case.name, e));
         for (name, g) in d.graphs().iter() {
-            out.push((format!("{}::{}", case.name, name), Rc::clone(g)));
+            out.push((format!("{}::{}", case.name, name), Arc::clone(g)));
         }
     }
     assert!(out.len() >= 20, "corpus produced only {} graphs", out.len());
@@ -290,7 +291,7 @@ fn sharded_and_batched_match_eager_on_table1_corpus_graphs() {
         let inputs = positive_inputs(&g, 0xC0FFEE);
         let want = eager::execute(&g, &inputs).unwrap_or_else(|e| panic!("{}: eager failed: {}", tag, e));
         for (bname, backend) in [("sharded", &sharded as &dyn Backend), ("batched", &batched)] {
-            let req = CompileRequest::new(&tag, Rc::clone(&g));
+            let req = CompileRequest::new(&tag, Arc::clone(&g));
             let module = backend
                 .compile(&req)
                 .unwrap_or_else(|e| panic!("{}: {} compile failed: {}", tag, bname, e));

@@ -8,7 +8,7 @@
 
 mod support;
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use depyf::backend::eager::{self, ExecPlan};
 use depyf::bytecode::{decode, encode, BinOp, CmpOp, Instr, IsaVersion, UnOp};
@@ -200,12 +200,12 @@ fn fuzz_exec_plan_matches_traced_oracle() {
     let mut rng = Rng::new(0xFEED);
     let mut fused_graphs = 0usize;
     for case in 0..200 {
-        let g = Rc::new(gen.next_graph());
+        let g = Arc::new(gen.next_graph());
         let inputs = support::rand_inputs(&g, &mut rng);
         // ExecPlan::new fuses elementwise chains; the unfused plan is the
         // pre-fusion executor. Both must match the traced walk bitwise.
-        let plan = ExecPlan::new(Rc::clone(&g));
-        let unfused = ExecPlan::unfused(Rc::clone(&g));
+        let plan = ExecPlan::new(Arc::clone(&g));
+        let unfused = ExecPlan::unfused(Arc::clone(&g));
         fused_graphs += (plan.fused_regions() > 0) as usize;
         let fast = plan.run(&inputs).unwrap_or_else(|e| panic!("case {} ({}): plan: {}", case, g.name, e));
         let slow =
@@ -262,8 +262,8 @@ fn fuzz_graph_serde_round_trip_is_bit_exact() {
     let mut gen = support::GraphGen::new(0xD15C);
     let mut rng = Rng::new(0xD15C ^ 7);
     for case in 0..100 {
-        let g = Rc::new(gen.next_graph());
-        let back = Rc::new(
+        let g = Arc::new(gen.next_graph());
+        let back = Arc::new(
             parse_graph(&render_graph(&g))
                 .unwrap_or_else(|e| panic!("case {} ({}): reparse: {}", case, g.name, e)),
         );

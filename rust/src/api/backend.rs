@@ -14,6 +14,7 @@
 use std::collections::HashMap;
 use std::fmt;
 use std::ops::BitOr;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::rc::Rc;
 use std::sync::{Arc, Mutex, OnceLock, PoisonError, RwLock};
 
@@ -285,6 +286,13 @@ pub trait CompiledModule: Send + Sync {
     fn stats(&self) -> ModuleStats {
         ModuleStats { partitions: 1, ..Default::default() }
     }
+
+    /// Hook invoked by the dispatch path when `call` failed and a
+    /// fallback executor served the request instead: `served_by` names
+    /// the backend that actually produced `outputs`. Wrapper backends
+    /// that record calls (`recording`) override this so trace bundles
+    /// capture degraded calls too; the default is a no-op.
+    fn record_degraded(&self, _inputs: &[Rc<Tensor>], _outputs: &[Tensor], _served_by: &str) {}
 }
 
 /// A closure-backed [`CompiledModule`] — the smallest way for custom
@@ -376,10 +384,12 @@ impl Backend for EagerBackend {
     }
 
     fn plan(&self, req: &CompileRequest) -> Result<CompilePlan, DepyfError> {
+        crate::faults::gate(crate::faults::Site::BackendPlan)?;
         Ok(CompilePlan::monolithic("eager", req, "eager"))
     }
 
     fn lower(&self, req: &CompileRequest, _plan: &CompilePlan) -> Result<Arc<dyn CompiledModule>, DepyfError> {
+        crate::faults::gate(crate::faults::Site::BackendLower)?;
         let opt = req.optimized();
         Ok(Arc::new(eager::EagerModule::with_fusion(
             Arc::clone(&opt.graph),
@@ -406,10 +416,12 @@ impl Backend for XlaBackend {
     }
 
     fn plan(&self, req: &CompileRequest) -> Result<CompilePlan, DepyfError> {
+        crate::faults::gate(crate::faults::Site::BackendPlan)?;
         Ok(CompilePlan::monolithic("xla", req, "xla"))
     }
 
     fn lower(&self, req: &CompileRequest, _plan: &CompilePlan) -> Result<Arc<dyn CompiledModule>, DepyfError> {
+        crate::faults::gate(crate::faults::Site::BackendLower)?;
         let rt = req.runtime.as_ref().ok_or_else(|| {
             DepyfError::Backend("xla backend requires a PJRT runtime (SessionBuilder::runtime)".into())
         })?;
@@ -437,8 +449,18 @@ pub struct PolicyCompiled {
 /// Under [`FallbackPolicy::Eager`] this never fails: the returned fn
 /// executes eagerly, the degrade reason is returned in `fallback_reason`
 /// and also recorded in `backend_name` (`"eager (xla fallback: ...)"`).
+///
+/// The compile runs under `catch_unwind`: a panicking backend becomes
+/// [`DepyfError::Panic`] and flows through the same policy, so one bad
+/// compiler never unwinds through the dispatch path (and never poisons
+/// the shared locks above it). `AssertUnwindSafe` is sound here because
+/// every lock the compile path touches recovers from poison instead of
+/// unwrapping, and `req.opt` holds only a memoized immutable snapshot.
 pub fn compile_with_policy(backend: &dyn Backend, req: &CompileRequest) -> Result<PolicyCompiled, DepyfError> {
-    match backend.compile(req) {
+    let compiled = catch_unwind(AssertUnwindSafe(|| backend.compile(req))).unwrap_or_else(|payload| {
+        Err(DepyfError::from_panic(&format!("backend {}", backend.name()), payload))
+    });
+    match compiled {
         Ok(module) => Ok(PolicyCompiled {
             f: CompiledGraphFn::from_module(&req.name, Arc::clone(&req.graph), module),
             fallback_reason: None,
@@ -631,6 +653,39 @@ mod tests {
         // A custom backend_name differing from name() is NOT a fallback.
         assert!(pc.fallback_reason.is_none());
         assert_eq!(pc.f.backend_name, "tagger-v2");
+    }
+
+    #[test]
+    fn panicking_backend_is_isolated_and_degrades() {
+        struct Bomb;
+        impl Backend for Bomb {
+            fn name(&self) -> &str {
+                "bomb"
+            }
+            fn plan(&self, _req: &CompileRequest) -> Result<CompilePlan, DepyfError> {
+                panic!("kaboom")
+            }
+            fn lower(
+                &self,
+                _req: &CompileRequest,
+                _plan: &CompilePlan,
+            ) -> Result<Arc<dyn CompiledModule>, DepyfError> {
+                unreachable!("plan always panics")
+            }
+        }
+        // Error policy surfaces the panic as a typed, transient error.
+        let req = CompileRequest::new("g", relu_graph()).with_fallback(FallbackPolicy::Error);
+        let err = compile_with_policy(&Bomb, &req).unwrap_err();
+        assert_eq!(err.layer(), "panic");
+        assert!(err.to_string().contains("backend bomb panicked: kaboom"), "{}", err);
+        assert!(err.is_transient());
+        // Eager policy degrades and the result still executes.
+        let req = CompileRequest::new("g", relu_graph());
+        let pc = compile_with_policy(&Bomb, &req).unwrap();
+        assert!(pc.fallback_reason.is_some(), "panic degrade must be signalled");
+        assert!(pc.f.backend_name.starts_with("eager (bomb fallback:"), "{}", pc.f.backend_name);
+        let out = pc.f.call(&[Rc::new(Tensor::new(vec![2], vec![-1.0, 4.0]))]).unwrap();
+        assert_eq!(out[0].data(), &[0.0, 4.0]);
     }
 
     #[test]

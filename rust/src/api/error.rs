@@ -38,6 +38,15 @@ pub enum DepyfError {
     Decompile(String),
     /// `SessionBuilder` misconfiguration, caught at `build()` time.
     Builder(String),
+    /// A panic caught by the dispatch path's `catch_unwind` isolation
+    /// (backend `plan`/`lower`, `CompiledModule::call`). Carries the
+    /// panic payload text; shared locks are never poisoned by it.
+    Panic(String),
+    /// A deterministic injected fault from the [`crate::faults`] layer
+    /// (chaos testing). Never produced in production configurations.
+    Fault(String),
+    /// A call or compile exceeded its deadline and was abandoned.
+    Timeout(String),
 }
 
 impl DepyfError {
@@ -59,7 +68,36 @@ impl DepyfError {
             DepyfError::Runtime(_) => "runtime",
             DepyfError::Decompile(_) => "decompile",
             DepyfError::Builder(_) => "builder",
+            DepyfError::Panic(_) => "panic",
+            DepyfError::Fault(_) => "fault",
+            DepyfError::Timeout(_) => "timeout",
         }
+    }
+
+    /// Build a [`DepyfError::Panic`] from a payload caught by
+    /// `std::panic::catch_unwind`, extracting the conventional
+    /// `&str`/`String` payload text.
+    pub fn from_panic(context: &str, payload: Box<dyn std::any::Any + Send>) -> DepyfError {
+        let msg = if let Some(s) = payload.downcast_ref::<&str>() {
+            (*s).to_string()
+        } else if let Some(s) = payload.downcast_ref::<String>() {
+            s.clone()
+        } else {
+            "non-string panic payload".to_string()
+        };
+        DepyfError::Panic(format!("{} panicked: {}", context, msg))
+    }
+
+    /// Whether a retry could plausibly succeed: transient infrastructure
+    /// failures (I/O, runtime hiccups, injected faults, isolated panics)
+    /// are worth one more attempt; structural failures (shape errors,
+    /// unsupported ops, misconfiguration) will fail identically every
+    /// time and should degrade immediately.
+    pub fn is_transient(&self) -> bool {
+        matches!(
+            self,
+            DepyfError::Io(_) | DepyfError::Runtime(_) | DepyfError::Fault(_) | DepyfError::Panic(_)
+        )
     }
 }
 
@@ -75,7 +113,10 @@ impl fmt::Display for DepyfError {
             | DepyfError::Backend(m)
             | DepyfError::Runtime(m)
             | DepyfError::Decompile(m)
-            | DepyfError::Builder(m) => write!(f, "{} error: {}", self.layer(), m),
+            | DepyfError::Builder(m)
+            | DepyfError::Panic(m)
+            | DepyfError::Fault(m)
+            | DepyfError::Timeout(m) => write!(f, "{} error: {}", self.layer(), m),
         }
     }
 }
@@ -167,5 +208,38 @@ mod tests {
     fn io_constructor_adds_context() {
         let d = DepyfError::io("read /tmp/x", "permission denied");
         assert_eq!(d.to_string(), "io error: read /tmp/x: permission denied");
+    }
+
+    #[test]
+    fn resilience_variants_name_their_layers() {
+        assert_eq!(DepyfError::Panic("worker died".into()).to_string(), "panic error: worker died");
+        assert_eq!(DepyfError::Fault("injected".into()).layer(), "fault");
+        assert_eq!(
+            DepyfError::Timeout("call exceeded 50ms".into()).to_string(),
+            "timeout error: call exceeded 50ms"
+        );
+    }
+
+    #[test]
+    fn from_panic_extracts_str_and_string_payloads() {
+        let caught = std::panic::catch_unwind(|| panic!("boom")).unwrap_err();
+        let d = DepyfError::from_panic("backend xla", caught);
+        assert_eq!(d.layer(), "panic");
+        assert_eq!(d.to_string(), "panic error: backend xla panicked: boom");
+        let caught = std::panic::catch_unwind(|| panic!("{} exploded", "stage")).unwrap_err();
+        let d = DepyfError::from_panic("pipeline", caught);
+        assert!(d.to_string().contains("pipeline panicked: stage exploded"), "{}", d);
+    }
+
+    #[test]
+    fn transience_splits_retryable_from_structural() {
+        assert!(DepyfError::Io("disk blip".into()).is_transient());
+        assert!(DepyfError::Runtime("pjrt hiccup".into()).is_transient());
+        assert!(DepyfError::Fault("injected".into()).is_transient());
+        assert!(DepyfError::Panic("caught".into()).is_transient());
+        assert!(!DepyfError::Compile("bad shape".into()).is_transient());
+        assert!(!DepyfError::Backend("unsupported op".into()).is_transient());
+        assert!(!DepyfError::Timeout("deadline".into()).is_transient());
+        assert!(!DepyfError::Builder("misconfigured".into()).is_transient());
     }
 }

@@ -194,13 +194,15 @@ impl Session {
         // Per-session perf observability: cache hits/misses, guard
         // checks/failures, evictions, compile_ns, plus per-module backend
         // stats and optimizer pass deltas — so regressions (and
-        // partition/bucket/rewrite decisions) show up in dumps.
+        // partition/bucket/rewrite decisions) show up in dumps. The
+        // snapshot folds in the dispatch-path resilience counters
+        // (retries, degraded calls, timeouts, caught panics).
         let modules_json = render_modules_json(&self.dynamo.compiled(), &optimizations);
         self.dump.write_refresh(
             ArtifactKind::Metrics,
             "metrics",
             "metrics.json",
-            &self.dynamo.metrics.to_json_with(Some(("modules", &modules_json))),
+            &self.dynamo.metrics_snapshot().to_json_with(Some(("modules", &modules_json))),
         )?;
         let artifacts = self.dump.artifacts();
         write_manifest(self.dump.root(), &artifacts)?;

@@ -25,6 +25,12 @@ pub const TRACE_SCHEMA_VERSION: u64 = 1;
 pub struct TraceCall {
     pub inputs: Vec<Tensor>,
     pub outputs: Vec<Tensor>,
+    /// `backend_name` of the module that *actually* served this call when
+    /// it differs from the bundle's backend — i.e. the call degraded to a
+    /// fallback. `None` for calls served by the requested backend.
+    /// Additive field: omitted from the JSON when `None`, defaulted when
+    /// absent, so the schema version is unchanged.
+    pub served_by: Option<String>,
 }
 
 /// A recorded compiled module: the graph, its compile context, and every
@@ -118,10 +124,15 @@ impl TraceBundle {
         for (i, call) in self.calls.iter().enumerate() {
             let ins: Vec<String> = call.inputs.iter().map(render_tensor).collect();
             let outs: Vec<String> = call.outputs.iter().map(render_tensor).collect();
+            let served = match &call.served_by {
+                Some(b) => format!(", \"served_by\": \"{}\"", json::escape(b)),
+                None => String::new(),
+            };
             out.push_str(&format!(
-                "    {{\"inputs\": [{}], \"outputs\": [{}]}}{}\n",
+                "    {{\"inputs\": [{}], \"outputs\": [{}]{}}}{}\n",
                 ins.join(", "),
                 outs.join(", "),
+                served,
                 if i + 1 < self.calls.len() { "," } else { "" }
             ));
         }
@@ -209,7 +220,11 @@ impl TraceBundle {
                     .map(parse_tensor)
                     .collect()
             };
-            calls.push(TraceCall { inputs: tensor_list("inputs")?, outputs: tensor_list("outputs")? });
+            calls.push(TraceCall {
+                inputs: tensor_list("inputs")?,
+                outputs: tensor_list("outputs")?,
+                served_by: item.get("served_by").and_then(Json::as_str).map(str::to_string),
+            });
         }
         Ok(TraceBundle { name, backend, cache_key, guards, stats, graph, calls })
     }
@@ -247,10 +262,12 @@ mod tests {
                 TraceCall {
                     inputs: vec![Tensor::new(vec![2, 2], vec![-1.0, 2.0, -0.0, f32::NAN])],
                     outputs: vec![Tensor::new(vec![2, 2], vec![0.0, 4.0, 0.0, f32::NAN])],
+                    served_by: None,
                 },
                 TraceCall {
                     inputs: vec![Tensor::new(vec![2, 2], vec![1.0, 1.0, 1.0, 1.0])],
                     outputs: vec![Tensor::new(vec![2, 2], vec![2.0, 2.0, 2.0, 2.0])],
+                    served_by: Some("eager (xla call fallback)".into()),
                 },
             ],
         }
@@ -281,6 +298,9 @@ mod tests {
                 assert_eq!(bits(ta), bits(tb));
             }
         }
+        // served_by is per-call: absent stays None, recorded value survives.
+        assert_eq!(back.calls[0].served_by, None);
+        assert_eq!(back.calls[1].served_by.as_deref(), Some("eager (xla call fallback)"));
         // Re-render is stable.
         assert_eq!(back.to_json(), text);
     }

@@ -319,6 +319,7 @@ impl Backend for BatchedBackend {
     }
 
     fn plan(&self, req: &CompileRequest) -> Result<CompilePlan, DepyfError> {
+        crate::faults::gate(crate::faults::Site::BackendPlan)?;
         // Batch-safety analysis and padding run on the *optimized* graph;
         // the monolithic fallback already plans it.
         let opt = req.optimized();
@@ -345,6 +346,7 @@ impl Backend for BatchedBackend {
     }
 
     fn lower(&self, req: &CompileRequest, plan: &CompilePlan) -> Result<Arc<dyn CompiledModule>, DepyfError> {
+        crate::faults::gate(crate::faults::Site::BackendLower)?;
         let opt = req.optimized();
         let target = plan.partitions.first().map(|p| p.target.as_str()).unwrap_or("eager");
         let (exec_graph, batch) = match &plan.batch {

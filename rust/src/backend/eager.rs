@@ -23,7 +23,7 @@
 
 use std::collections::HashMap;
 use std::rc::Rc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, TryLockError};
 
 use crate::api::{CompiledModule, DepyfError};
 use crate::graph::{Graph, NodeId, NodeKind, OpKind};
@@ -245,7 +245,14 @@ impl FusedRegion {
                 borrowed = b;
                 &mut *borrowed
             }
-            Err(_) => {
+            // A panicking holder leaves the buffers intact (they're
+            // overwritten before use) — recover rather than degrading
+            // every later call to the local-alloc path.
+            Err(TryLockError::Poisoned(b)) => {
+                borrowed = b.into_inner();
+                &mut *borrowed
+            }
+            Err(TryLockError::WouldBlock) => {
                 local = FuseScratch::default();
                 &mut local
             }
@@ -612,7 +619,13 @@ impl ExecPlan {
                 borrowed = b;
                 &mut *borrowed
             }
-            Err(_) => {
+            // Poison recovery: the arena is fully reset below before any
+            // slot is read, so a panicked holder's state is harmless.
+            Err(TryLockError::Poisoned(b)) => {
+                borrowed = b.into_inner();
+                &mut *borrowed
+            }
+            Err(TryLockError::WouldBlock) => {
                 local = Vec::new();
                 &mut local
             }

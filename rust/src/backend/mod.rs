@@ -14,6 +14,7 @@ pub mod batched;
 pub mod eager;
 pub mod partition;
 pub mod recording;
+pub mod resilient;
 pub mod sharded;
 pub mod xla;
 
@@ -27,6 +28,7 @@ pub use recording::{
     localize_divergence, replay_bundle, single_call_bundle, tensor_diff, CulpritOp, Mismatch,
     RecordingBackend, RecordingModule, ReplayOptions, ReplayReport,
 };
+pub use resilient::{ResilienceStats, ResilientBackend};
 pub use sharded::ShardedBackend;
 
 /// Shared file-stem sanitizer for backend artifact names (`__hlo_*.txt`,

@@ -151,8 +151,21 @@ impl CompiledModule for RecordingModule {
         self.calls.lock().unwrap_or_else(PoisonError::into_inner).push(TraceCall {
             inputs: inputs.iter().map(|t| (**t).clone()).collect(),
             outputs: outputs.clone(),
+            served_by: None,
         });
         Ok(outputs)
+    }
+
+    /// A call that failed on the wrapped module and was served by a
+    /// fallback still lands in the trace — tagged with the backend that
+    /// actually produced the outputs, so `depyf replay` can re-run it
+    /// against the originally-requested backend later.
+    fn record_degraded(&self, inputs: &[Rc<Tensor>], outputs: &[Tensor], served_by: &str) {
+        self.calls.lock().unwrap_or_else(PoisonError::into_inner).push(TraceCall {
+            inputs: inputs.iter().map(|t| (**t).clone()).collect(),
+            outputs: outputs.to_vec(),
+            served_by: Some(served_by.to_string()),
+        });
     }
 
     fn backend_name(&self) -> &str {
@@ -388,6 +401,7 @@ pub fn localize_divergence(
                             .iter()
                             .map(|&id| env[id].clone().expect("checked above"))
                             .collect(),
+                        served_by: None,
                     }],
                 };
                 return Ok(Some(CulpritOp { node, op, diff, repro }));
@@ -689,6 +703,27 @@ mod tests {
         let rerun = replay_bundle(&repro, &BuggyExp, None, &ReplayOptions::default()).unwrap();
         assert_eq!(rerun.mismatches.len(), 1);
         assert!(report.render().contains("exp"), "{}", report.render());
+    }
+
+    /// Tentpole satellite: a degraded call is still traced, tagged with
+    /// the backend that actually served it, and the tag survives the text
+    /// round-trip for `depyf replay --backend recorded`.
+    #[test]
+    fn degraded_calls_are_traced_with_their_serving_backend() {
+        let g = chain_graph("__compiled_fn_4");
+        let req = CompileRequest::new("__compiled_fn_4", Arc::clone(&g));
+        let module = RecordingBackend::new(Arc::new(EagerBackend)).compile(&req).unwrap();
+        let inputs = rand_inputs(&g, 13);
+        let outputs = module.call(&inputs).unwrap();
+        module.record_degraded(&inputs, &outputs, "eager (xla call fallback)");
+        let trace = module.artifacts().into_iter().find(|a| a.kind == ArtifactKind::Trace).unwrap();
+        let bundle = TraceBundle::parse(&trace.content).unwrap();
+        assert_eq!(bundle.calls.len(), 2);
+        assert_eq!(bundle.calls[0].served_by, None);
+        assert_eq!(bundle.calls[1].served_by.as_deref(), Some("eager (xla call fallback)"));
+        // The degraded call replays like any other (outputs are real).
+        let report = replay_bundle(&bundle, &EagerBackend, None, &ReplayOptions::default()).unwrap();
+        assert!(report.ok(), "{}", report.render());
     }
 
     #[test]

@@ -1,0 +1,413 @@
+//! [`ResilientBackend`] — retry-with-backoff plus a circuit breaker
+//! around any inner backend's `plan`/`lower`.
+//!
+//! A transparent wrapper (like the serve layer's `CachingBackend`): it
+//! keeps the inner backend's `name()` and capabilities, so nothing
+//! downstream can tell it is there — except that transient compile
+//! failures ([`DepyfError::is_transient`], including panics caught by
+//! its own `catch_unwind`) are retried with exponential backoff, and a
+//! run of consecutive *final* failures trips a circuit breaker:
+//!
+//! * **closed** — normal operation; each final failure increments a
+//!   consecutive-failure count, any success resets it.
+//! * **open** — after `trip_threshold` consecutive failures. Compiles
+//!   fail fast with a `Backend` error (no inner attempt), which under
+//!   [`FallbackPolicy::Eager`](crate::api::FallbackPolicy) degrades
+//!   dispatch to the eager executor instead of hammering a compiler
+//!   that is down. The cooldown is *count-based* (deterministic — no
+//!   wall clock): after `cooldown_skips` fail-fast skips the breaker
+//!   moves to half-open.
+//! * **half-open** — the next compile is a probe: success closes the
+//!   breaker, failure re-opens it (and counts as another trip). Under
+//!   concurrency more than one in-flight probe may be admitted; that
+//!   only costs extra attempts, never correctness.
+//!
+//! Retries, trips, fail-fast skips and caught panics are counted in
+//! [`ResilienceStats`]; `depyf serve` wraps every backend in this and
+//! folds the counts into `metrics.json` / `BENCH_serve.json`. On the
+//! CLI, `resilient:<name>` wraps any registered backend explicitly.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, PoisonError};
+use std::time::Duration;
+
+use crate::api::{
+    Backend, Capabilities, CompilePlan, CompileRequest, CompiledModule, DepyfError,
+};
+
+/// Retry/trip/skip/panic counters, shared out via [`ResilientBackend::stats`]
+/// so the serve layer can merge them into its metrics snapshot.
+#[derive(Debug, Default)]
+pub struct ResilienceStats {
+    retries: AtomicU64,
+    trips: AtomicU64,
+    skips: AtomicU64,
+    panics: AtomicU64,
+}
+
+impl ResilienceStats {
+    /// Transient failures that were retried (per retry, not per request).
+    pub fn retries(&self) -> u64 {
+        self.retries.load(Ordering::Relaxed)
+    }
+
+    /// Times the breaker entered the open state (including re-opens from
+    /// a failed half-open probe).
+    pub fn trips(&self) -> u64 {
+        self.trips.load(Ordering::Relaxed)
+    }
+
+    /// Compiles failed fast by an open breaker without touching the
+    /// inner backend.
+    pub fn skips(&self) -> u64 {
+        self.skips.load(Ordering::Relaxed)
+    }
+
+    /// Inner-backend panics converted to [`DepyfError::Panic`].
+    pub fn panics(&self) -> u64 {
+        self.panics.load(Ordering::Relaxed)
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum BreakerState {
+    Closed { consecutive_failures: u32 },
+    Open { skips_remaining: u32 },
+    HalfOpen,
+}
+
+/// Retry + circuit-breaker wrapper around any [`Backend`]. See the
+/// module docs for the state machine.
+pub struct ResilientBackend {
+    inner: Arc<dyn Backend>,
+    max_retries: u32,
+    backoff: Duration,
+    trip_threshold: u32,
+    cooldown_skips: u32,
+    state: Mutex<BreakerState>,
+    stats: Arc<ResilienceStats>,
+}
+
+impl ResilientBackend {
+    /// Wrap `inner` with the defaults: 2 retries at 1ms doubling
+    /// backoff, breaker trips after 3 consecutive failures, half-open
+    /// probe after 2 fail-fast skips.
+    pub fn new(inner: Arc<dyn Backend>) -> ResilientBackend {
+        ResilientBackend {
+            inner,
+            max_retries: 2,
+            backoff: Duration::from_millis(1),
+            trip_threshold: 3,
+            cooldown_skips: 2,
+            state: Mutex::new(BreakerState::Closed { consecutive_failures: 0 }),
+            stats: Arc::new(ResilienceStats::default()),
+        }
+    }
+
+    /// Wrap a registered backend, looked up by name.
+    pub fn wrapping(inner_name: &str) -> Result<ResilientBackend, DepyfError> {
+        let inner = crate::api::lookup_backend(inner_name).ok_or_else(|| {
+            DepyfError::Backend(format!(
+                "resilient: unknown inner backend '{}' (registered: {})",
+                inner_name,
+                crate::api::backend_names().join(", ")
+            ))
+        })?;
+        Ok(ResilientBackend::new(inner))
+    }
+
+    /// Override the retry policy (`backoff` doubles per retry; zero
+    /// disables sleeping, handy in tests).
+    pub fn with_retry(mut self, max_retries: u32, backoff: Duration) -> ResilientBackend {
+        self.max_retries = max_retries;
+        self.backoff = backoff;
+        self
+    }
+
+    /// Override the breaker: trip after `trip_threshold` consecutive
+    /// failures (min 1), half-open after `cooldown_skips` fail-fast skips.
+    pub fn with_breaker(mut self, trip_threshold: u32, cooldown_skips: u32) -> ResilientBackend {
+        self.trip_threshold = trip_threshold.max(1);
+        self.cooldown_skips = cooldown_skips;
+        self
+    }
+
+    pub fn stats(&self) -> Arc<ResilienceStats> {
+        Arc::clone(&self.stats)
+    }
+
+    /// The breaker state as a report string: `closed`, `open` or
+    /// `half-open`.
+    pub fn breaker_state(&self) -> &'static str {
+        match *self.state.lock().unwrap_or_else(PoisonError::into_inner) {
+            BreakerState::Closed { .. } => "closed",
+            BreakerState::Open { .. } => "open",
+            BreakerState::HalfOpen => "half-open",
+        }
+    }
+
+    /// Breaker admission. `Err` = open, fail fast (counted as a skip).
+    fn admit(&self) -> Result<(), DepyfError> {
+        let mut st = self.state.lock().unwrap_or_else(PoisonError::into_inner);
+        match *st {
+            BreakerState::Closed { .. } | BreakerState::HalfOpen => Ok(()),
+            BreakerState::Open { skips_remaining: 0 } => {
+                *st = BreakerState::HalfOpen;
+                Ok(())
+            }
+            BreakerState::Open { ref mut skips_remaining } => {
+                *skips_remaining -= 1;
+                self.stats.skips.fetch_add(1, Ordering::Relaxed);
+                Err(DepyfError::Backend(format!(
+                    "{}: circuit breaker open after {} consecutive compile failures; failing fast",
+                    self.inner.name(),
+                    self.trip_threshold
+                )))
+            }
+        }
+    }
+
+    fn on_success(&self) {
+        *self.state.lock().unwrap_or_else(PoisonError::into_inner) =
+            BreakerState::Closed { consecutive_failures: 0 };
+    }
+
+    fn on_failure(&self) {
+        let mut st = self.state.lock().unwrap_or_else(PoisonError::into_inner);
+        *st = match *st {
+            BreakerState::Closed { consecutive_failures } => {
+                let n = consecutive_failures + 1;
+                if n >= self.trip_threshold {
+                    self.stats.trips.fetch_add(1, Ordering::Relaxed);
+                    BreakerState::Open { skips_remaining: self.cooldown_skips }
+                } else {
+                    BreakerState::Closed { consecutive_failures: n }
+                }
+            }
+            BreakerState::HalfOpen => {
+                self.stats.trips.fetch_add(1, Ordering::Relaxed);
+                BreakerState::Open { skips_remaining: self.cooldown_skips }
+            }
+            open @ BreakerState::Open { .. } => open,
+        };
+    }
+
+    /// One breaker-admitted, panic-isolated, retrying attempt sequence.
+    /// `AssertUnwindSafe` is sound for the same reason as in
+    /// `compile_with_policy`: every lock below recovers from poison.
+    fn protected<T>(
+        &self,
+        what: &str,
+        attempt: &dyn Fn() -> Result<T, DepyfError>,
+    ) -> Result<T, DepyfError> {
+        self.admit()?;
+        let mut tries = 0u32;
+        loop {
+            let result = catch_unwind(AssertUnwindSafe(attempt)).unwrap_or_else(|payload| {
+                self.stats.panics.fetch_add(1, Ordering::Relaxed);
+                Err(DepyfError::from_panic(
+                    &format!("backend {} {}", self.inner.name(), what),
+                    payload,
+                ))
+            });
+            match result {
+                Ok(v) => {
+                    self.on_success();
+                    return Ok(v);
+                }
+                Err(e) if e.is_transient() && tries < self.max_retries => {
+                    tries += 1;
+                    self.stats.retries.fetch_add(1, Ordering::Relaxed);
+                    if !self.backoff.is_zero() {
+                        std::thread::sleep(self.backoff * (1 << (tries - 1).min(8)));
+                    }
+                }
+                Err(e) => {
+                    self.on_failure();
+                    return Err(e);
+                }
+            }
+        }
+    }
+}
+
+impl Backend for ResilientBackend {
+    /// Transparent: keeps the inner name so `backend_name` stamps,
+    /// artifact files and logs are unchanged by the wrapper.
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        self.inner.capabilities() | Capabilities::WRAPPER
+    }
+
+    fn plan(&self, req: &CompileRequest) -> Result<CompilePlan, DepyfError> {
+        self.protected("plan", &|| self.inner.plan(req))
+    }
+
+    fn lower(&self, req: &CompileRequest, plan: &CompilePlan) -> Result<Arc<dyn CompiledModule>, DepyfError> {
+        self.protected("lower", &|| self.inner.lower(req, plan))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::{CompilePlan, EagerBackend};
+    use crate::graph::{Graph, OpKind};
+    use std::rc::Rc;
+    use std::sync::Arc;
+
+    fn relu_graph() -> Arc<Graph> {
+        let mut g = Graph::new("g");
+        let x = g.placeholder("x", &[2]);
+        let r = g.add_op(OpKind::Relu, vec![x]).unwrap();
+        g.set_outputs(vec![r]);
+        Arc::new(g)
+    }
+
+    /// Fails (transiently or by panic) for the first `fail_first` plan
+    /// calls, then behaves like eager.
+    struct Flaky {
+        fail_first: u64,
+        panics: bool,
+        calls: AtomicU64,
+    }
+
+    impl Flaky {
+        fn new(fail_first: u64, panics: bool) -> Flaky {
+            Flaky { fail_first, panics, calls: AtomicU64::new(0) }
+        }
+    }
+
+    impl Backend for Flaky {
+        fn name(&self) -> &str {
+            "flaky"
+        }
+        fn plan(&self, req: &CompileRequest) -> Result<CompilePlan, DepyfError> {
+            let n = self.calls.fetch_add(1, Ordering::Relaxed);
+            if n < self.fail_first {
+                if self.panics {
+                    panic!("flaky plan #{}", n);
+                }
+                return Err(DepyfError::Runtime(format!("flaky plan #{}", n)));
+            }
+            Ok(CompilePlan::monolithic("flaky", req, "eager"))
+        }
+        fn lower(
+            &self,
+            req: &CompileRequest,
+            _plan: &CompilePlan,
+        ) -> Result<Arc<dyn CompiledModule>, DepyfError> {
+            Ok(Arc::new(crate::backend::eager::EagerModule::with_name(
+                Arc::clone(&req.graph),
+                "flaky".into(),
+            )))
+        }
+    }
+
+    fn req() -> CompileRequest {
+        CompileRequest::new("g", relu_graph())
+    }
+
+    #[test]
+    fn transparent_name_and_capabilities() {
+        let r = ResilientBackend::new(Arc::new(EagerBackend));
+        assert_eq!(r.name(), "eager");
+        assert!(r.capabilities().contains(Capabilities::WRAPPER));
+        assert!(!r.requires_runtime());
+        let module = r.compile(&req()).unwrap();
+        assert_eq!(module.backend_name(), "eager");
+        let out = module
+            .call(&[Rc::new(crate::tensor::Tensor::new(vec![2], vec![-1.0, 2.0]))])
+            .unwrap();
+        assert_eq!(out[0].data(), &[0.0, 2.0]);
+    }
+
+    #[test]
+    fn transient_failures_are_retried_to_success() {
+        let r = ResilientBackend::new(Arc::new(Flaky::new(2, false)))
+            .with_retry(2, Duration::ZERO);
+        let module = r.compile(&req()).expect("third attempt succeeds");
+        assert_eq!(module.backend_name(), "flaky");
+        assert_eq!(r.stats().retries(), 2);
+        assert_eq!(r.stats().trips(), 0);
+        assert_eq!(r.breaker_state(), "closed");
+    }
+
+    #[test]
+    fn panics_are_caught_counted_and_retried() {
+        let r = ResilientBackend::new(Arc::new(Flaky::new(1, true)))
+            .with_retry(2, Duration::ZERO);
+        let module = r.compile(&req()).expect("retry after caught panic");
+        assert_eq!(module.backend_name(), "flaky");
+        assert_eq!(r.stats().panics(), 1);
+        assert_eq!(r.stats().retries(), 1);
+    }
+
+    #[test]
+    fn structural_failures_are_not_retried() {
+        struct Structural;
+        impl Backend for Structural {
+            fn name(&self) -> &str {
+                "structural"
+            }
+            fn plan(&self, _req: &CompileRequest) -> Result<CompilePlan, DepyfError> {
+                Err(DepyfError::Backend("unsupported op".into()))
+            }
+            fn lower(
+                &self,
+                _req: &CompileRequest,
+                _plan: &CompilePlan,
+            ) -> Result<Arc<dyn CompiledModule>, DepyfError> {
+                unreachable!()
+            }
+        }
+        let r = ResilientBackend::new(Arc::new(Structural)).with_retry(5, Duration::ZERO);
+        let err = r.plan(&req()).unwrap_err();
+        assert_eq!(err.layer(), "backend");
+        assert_eq!(r.stats().retries(), 0, "structural errors fail immediately");
+    }
+
+    #[test]
+    fn breaker_trips_fails_fast_probes_and_recovers() {
+        // 12 transient failures, then healthy. No retries, trip after 3
+        // failures, half-open after 2 skips → the exact sequence below.
+        let r = ResilientBackend::new(Arc::new(Flaky::new(12, false)))
+            .with_retry(0, Duration::ZERO)
+            .with_breaker(3, 2);
+        // Three real failures close→open (inner sees 3 calls).
+        for _ in 0..3 {
+            assert_eq!(r.plan(&req()).unwrap_err().layer(), "runtime");
+        }
+        assert_eq!(r.breaker_state(), "open");
+        assert_eq!(r.stats().trips(), 1);
+        // Two fail-fast skips: inner is never touched.
+        for _ in 0..2 {
+            let err = r.plan(&req()).unwrap_err();
+            assert!(err.to_string().contains("circuit breaker open"), "{}", err);
+        }
+        assert_eq!(r.stats().skips(), 2);
+        // Probe (inner call #4) fails → re-open; trips now 2.
+        assert_eq!(r.plan(&req()).unwrap_err().layer(), "runtime");
+        assert_eq!(r.breaker_state(), "open");
+        assert_eq!(r.stats().trips(), 2);
+        // Burn the cooldown (2 more skips), then keep probing until the
+        // inner backend heals: probes 5..=12 fail, each re-opening with a
+        // 2-skip cooldown; probe 13 succeeds and closes the breaker.
+        let mut closed = false;
+        for _ in 0..40 {
+            if r.plan(&req()).is_ok() {
+                closed = true;
+                break;
+            }
+        }
+        assert!(closed, "breaker never recovered");
+        assert_eq!(r.breaker_state(), "closed");
+        assert!(r.stats().skips() > 2);
+        // Healthy again: no fail-fast.
+        r.plan(&req()).unwrap();
+    }
+}

@@ -72,6 +72,7 @@ impl Backend for ShardedBackend {
     }
 
     fn plan(&self, req: &CompileRequest) -> Result<CompilePlan, DepyfError> {
+        crate::faults::gate(crate::faults::Site::BackendPlan)?;
         // Partition the *optimized* graph: plan node ids, shard cache keys
         // and the stitcher all live in post-optimizer coordinates.
         let opt = req.optimized();
@@ -123,6 +124,7 @@ impl ShardedBackend {
         req: &CompileRequest,
         plan: &CompilePlan,
     ) -> Result<(Stitcher, u64), DepyfError> {
+        crate::faults::gate(crate::faults::Site::BackendLower)?;
         let opt = req.optimized();
         let mut stitch_parts = Vec::with_capacity(plan.partitions.len());
         let mut cache_hits = 0u64;

@@ -78,6 +78,12 @@ pub struct DynamoConfig {
     /// (`--opt-level`, default 2). `StepGraphs` tracing bypasses the
     /// optimizer — the debugger steps the captured graph verbatim.
     pub opt_level: OptLevel,
+    /// Per-call deadline for compiled-graph dispatch (`--deadline-ms`).
+    /// A call that outlives it is abandoned on its watchdog thread and
+    /// served by the eager fallback (under [`FallbackPolicy::Eager`]) or
+    /// surfaced as [`DepyfError::Timeout`] (under `Error`). `None`
+    /// (default): calls run inline with no watchdog thread.
+    pub deadline_ms: Option<u64>,
     /// Present in `TraceMode::StepGraphs` sessions: forces eager execution
     /// with per-node callbacks. Debugger-only and thread-confined: the
     /// traced module wraps the tracer in [`crate::runtime::ThreadBound`],
@@ -96,6 +102,7 @@ impl Default for DynamoConfig {
             max_graph_nodes: 2_000,
             verbosity: Verbosity::Info,
             opt_level: OptLevel::default(),
+            deadline_ms: None,
             tracer: None,
         }
     }
@@ -151,16 +158,41 @@ pub struct Dynamo {
     pub config: DynamoConfig,
     pub runtime: Option<Arc<Runtime>>,
     pub metrics: Metrics,
+    /// Call-time resilience counters (retries, degraded calls, timeouts,
+    /// caught panics), shared with every compiled fn this instance
+    /// installs; folded into [`Dynamo::metrics_snapshot`].
+    pub call_counters: Arc<crate::graph::CallCounters>,
     state: RefCell<State>,
 }
 
 impl Dynamo {
     pub fn new(config: DynamoConfig) -> Rc<Dynamo> {
-        Rc::new(Dynamo { config, runtime: None, metrics: Metrics::new(), state: RefCell::new(State::default()) })
+        Rc::new(Dynamo {
+            config,
+            runtime: None,
+            metrics: Metrics::new(),
+            call_counters: Arc::new(crate::graph::CallCounters::default()),
+            state: RefCell::new(State::default()),
+        })
     }
 
     pub fn with_runtime(config: DynamoConfig, runtime: Arc<Runtime>) -> Rc<Dynamo> {
-        Rc::new(Dynamo { config, runtime: Some(runtime), metrics: Metrics::new(), state: RefCell::new(State::default()) })
+        Rc::new(Dynamo {
+            config,
+            runtime: Some(runtime),
+            metrics: Metrics::new(),
+            call_counters: Arc::new(crate::graph::CallCounters::default()),
+            state: RefCell::new(State::default()),
+        })
+    }
+
+    /// [`Metrics::snapshot`] plus the dispatch-path resilience counters
+    /// the compiled fns accumulated — the complete per-session picture
+    /// that `Session::finish()` and the serve workers report.
+    pub fn metrics_snapshot(&self) -> crate::metrics::MetricsSnapshot {
+        let mut snap = self.metrics.snapshot();
+        self.call_counters.fold_into(&mut snap);
+        snap
     }
 
     /// The `full_code`-style decision log. Returns a shared snapshot —
@@ -251,6 +283,7 @@ impl Dynamo {
             Ok(pc) => {
                 if let Some(reason) = &pc.fallback_reason {
                     // Fallback engaged: record it in the frontend log.
+                    Metrics::bump(&self.metrics.degraded_compiles);
                     self.note(format!(
                         "  backend: {} degraded to eager on {}: {}",
                         backend.name(),
@@ -313,6 +346,14 @@ impl Dynamo {
             }
             self.state.borrow_mut().optimizations.push((name.to_string(), opt));
         }
+        // Every dispatch-path callable gets call-time resilience wired to
+        // the session policy: panic isolation is always on; retry/degrade
+        // and the deadline watchdog follow the configured fallback.
+        let f = f.with_resilience(crate::graph::CallResilience::new(
+            self.config.fallback,
+            self.config.deadline_ms.map(std::time::Duration::from_millis),
+            Arc::clone(&self.call_counters),
+        ));
         self.install_compiled(f)
     }
 

@@ -1,0 +1,482 @@
+//! Deterministic fault injection for the dispatch path.
+//!
+//! The serving stack promises graceful degradation: a panicking backend,
+//! a corrupt cache entry or a stuck worker must never take down the
+//! fleet. This module is how that promise is *tested* — a seeded
+//! [`FaultPlan`] injects errors, panics and delays at named sites along
+//! the compile/dispatch path, deterministically (same seed + same hit
+//! order → same faults), so the chaos suite can reconcile every injected
+//! fault against the retry/degrade/timeout counters it produced.
+//!
+//! # Fault sites
+//!
+//! | site | fires inside |
+//! | --- | --- |
+//! | `backend.plan` | every concrete backend's `Backend::plan` |
+//! | `backend.lower` | every concrete backend's `Backend::lower` |
+//! | `module.call` | `CompiledGraphFn` dispatch (the compiled-call hot path) |
+//! | `disk_cache.read` | `DiskCache::get` (fault → treated as a miss) |
+//! | `disk_cache.write` | `DiskCache::put` (fault → write skipped) |
+//! | `worker_pool.submit` | `WorkerPool::submit` (async backend futures) |
+//! | `pipeline.stage` | per-packet work in each pipelined stage thread |
+//!
+//! # The `DEPYF_FAULTS` spec grammar
+//!
+//! Clauses separated by `;`: an optional `seed=<u64>` plus any number of
+//! `<site>=<kind>[@<num>/<den>]` clauses, where `<kind>` is `error`,
+//! `panic` or `delay:<ms>` and `@<num>/<den>` is the firing rate
+//! (default `1/1` — every hit fires). Example:
+//!
+//! ```text
+//! DEPYF_FAULTS="seed=7;backend.plan=error@1/5;module.call=panic@1/7;pipeline.stage=delay:20@1/3"
+//! ```
+//!
+//! Whether hit `n` at a site fires is a pure function of
+//! `(seed, site, n)` — an FNV hash modulo the rate denominator — so a
+//! failing chaos run is reproduced by its seed + spec alone.
+//!
+//! # Cost when off
+//!
+//! Unconfigured processes pay exactly one relaxed atomic load per gated
+//! site — no locks, no allocation, no branches beyond the load. The env
+//! var is consulted once, lazily, on the first gate. Programmatic
+//! installation ([`install`]) returns an RAII [`FaultGuard`] that clears
+//! the plan (and its counters) on drop; chaos tests install a fresh plan
+//! per round so per-round counters start at zero.
+
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, Once, PoisonError, RwLock};
+use std::time::Duration;
+
+use crate::api::DepyfError;
+
+/// A named injection point on the dispatch path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Site {
+    BackendPlan,
+    BackendLower,
+    ModuleCall,
+    DiskCacheRead,
+    DiskCacheWrite,
+    WorkerSubmit,
+    PipelineStage,
+}
+
+/// Every site, in spec/report order.
+pub const SITES: [Site; 7] = [
+    Site::BackendPlan,
+    Site::BackendLower,
+    Site::ModuleCall,
+    Site::DiskCacheRead,
+    Site::DiskCacheWrite,
+    Site::WorkerSubmit,
+    Site::PipelineStage,
+];
+
+impl Site {
+    /// The spec-grammar name of this site.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Site::BackendPlan => "backend.plan",
+            Site::BackendLower => "backend.lower",
+            Site::ModuleCall => "module.call",
+            Site::DiskCacheRead => "disk_cache.read",
+            Site::DiskCacheWrite => "disk_cache.write",
+            Site::WorkerSubmit => "worker_pool.submit",
+            Site::PipelineStage => "pipeline.stage",
+        }
+    }
+
+    /// Inverse of [`Site::as_str`].
+    pub fn parse(s: &str) -> Option<Site> {
+        SITES.iter().copied().find(|site| site.as_str() == s)
+    }
+
+    fn index(self) -> usize {
+        SITES.iter().position(|&s| s == self).expect("site is in SITES")
+    }
+}
+
+impl std::fmt::Display for Site {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// What an armed site does when a hit fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Return [`DepyfError::Fault`] from the gated operation.
+    Error,
+    /// `panic!` inside the gated operation (exercises `catch_unwind`
+    /// isolation and poison recovery).
+    Panic,
+    /// Sleep this many milliseconds, then proceed normally (exercises
+    /// deadlines and watchdogs).
+    Delay(u64),
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+struct Clause {
+    kind: FaultKind,
+    /// Fires on `num` out of every `den` hits (hash-selected, not
+    /// periodic): `fnv(seed, site, hit) % den < num`.
+    num: u64,
+    den: u64,
+}
+
+/// A seeded, deterministic set of armed fault sites. Built
+/// programmatically ([`FaultPlan::new`] + [`FaultPlan::arm`]) or parsed
+/// from the `DEPYF_FAULTS` spec grammar ([`FaultPlan::parse`]).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FaultPlan {
+    seed: u64,
+    clauses: [Option<Clause>; 7],
+}
+
+impl FaultPlan {
+    /// An empty plan (no armed sites) with the given seed.
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan { seed, clauses: Default::default() }
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Arm a site to fire on every hit.
+    pub fn arm(self, site: Site, kind: FaultKind) -> FaultPlan {
+        self.arm_rate(site, kind, 1, 1)
+    }
+
+    /// Arm a site to fire on `num` out of every `den` hits.
+    pub fn arm_rate(mut self, site: Site, kind: FaultKind, num: u64, den: u64) -> FaultPlan {
+        self.clauses[site.index()] = Some(Clause { kind, num, den: den.max(1) });
+        self
+    }
+
+    /// Parse the `DEPYF_FAULTS` spec grammar (see module docs).
+    pub fn parse(spec: &str) -> Result<FaultPlan, DepyfError> {
+        let bad = |what: &str, part: &str| {
+            DepyfError::Fault(format!("bad fault spec: {} '{}' (grammar: seed=<u64>;<site>=<error|panic|delay:<ms>>[@<num>/<den>];...)", what, part))
+        };
+        let mut plan = FaultPlan::new(0);
+        for clause in spec.split(';').map(str::trim).filter(|s| !s.is_empty()) {
+            let (key, value) = clause.split_once('=').ok_or_else(|| bad("clause", clause))?;
+            let (key, value) = (key.trim(), value.trim());
+            if key == "seed" {
+                plan.seed = value.parse().map_err(|_| bad("seed", value))?;
+                continue;
+            }
+            let site = Site::parse(key).ok_or_else(|| bad("site", key))?;
+            let (kind_part, rate_part) = match value.split_once('@') {
+                Some((k, r)) => (k.trim(), Some(r.trim())),
+                None => (value, None),
+            };
+            let kind = match kind_part.split_once(':') {
+                None => match kind_part {
+                    "error" => FaultKind::Error,
+                    "panic" => FaultKind::Panic,
+                    _ => return Err(bad("kind", kind_part)),
+                },
+                Some(("delay", ms)) => FaultKind::Delay(ms.trim().parse().map_err(|_| bad("delay", ms))?),
+                Some(_) => return Err(bad("kind", kind_part)),
+            };
+            let (num, den) = match rate_part {
+                None => (1, 1),
+                Some(r) => {
+                    let (n, d) = r.split_once('/').ok_or_else(|| bad("rate", r))?;
+                    let n: u64 = n.trim().parse().map_err(|_| bad("rate", r))?;
+                    let d: u64 = d.trim().parse().map_err(|_| bad("rate", r))?;
+                    if d == 0 {
+                        return Err(bad("rate", r));
+                    }
+                    (n, d)
+                }
+            };
+            plan.clauses[site.index()] = Some(Clause { kind, num, den });
+        }
+        Ok(plan)
+    }
+
+    fn is_empty(&self) -> bool {
+        self.clauses.iter().all(Option::is_none)
+    }
+}
+
+/// Per-site hit/fire counters of an installed plan.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SiteStats {
+    /// Times the gate was reached while this site was armed.
+    pub hits: u64,
+    /// Times a fault actually fired (error returned, panic raised or
+    /// delay slept).
+    pub fired: u64,
+}
+
+/// An installed plan plus its counters. Counters start at zero on every
+/// [`install`], so per-round chaos accounting needs no manual reset.
+struct ActivePlan {
+    plan: FaultPlan,
+    hits: [AtomicU64; 7],
+    fired: [AtomicU64; 7],
+}
+
+impl ActivePlan {
+    fn new(plan: FaultPlan) -> ActivePlan {
+        ActivePlan { plan, hits: Default::default(), fired: Default::default() }
+    }
+
+    /// Deterministic: whether hit `n` at `site` fires under this plan.
+    fn fires(&self, site: Site, n: u64, clause: &Clause) -> bool {
+        let h = crate::fnv::hash_str(&format!("{}:{}:{}", self.plan.seed, site.as_str(), n));
+        h % clause.den < clause.num
+    }
+
+    fn check(&self, site: Site) -> Result<(), DepyfError> {
+        let i = site.index();
+        let Some(clause) = &self.plan.clauses[i] else { return Ok(()) };
+        let n = self.hits[i].fetch_add(1, Ordering::Relaxed);
+        if !self.fires(site, n, clause) {
+            return Ok(());
+        }
+        self.fired[i].fetch_add(1, Ordering::Relaxed);
+        match clause.kind {
+            FaultKind::Delay(ms) => {
+                std::thread::sleep(Duration::from_millis(ms));
+                Ok(())
+            }
+            FaultKind::Error => {
+                Err(DepyfError::Fault(format!("injected fault at {} (hit #{})", site.as_str(), n)))
+            }
+            FaultKind::Panic => panic!("injected panic at {} (hit #{})", site.as_str(), n),
+        }
+    }
+
+    fn stats(&self, site: Site) -> SiteStats {
+        let i = site.index();
+        SiteStats {
+            hits: self.hits[i].load(Ordering::Relaxed),
+            fired: self.fired[i].load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// 0 = uninitialized (env not consulted yet), 1 = off, 2 = a plan is
+/// installed. The off path is a single relaxed load.
+static MODE: AtomicU8 = AtomicU8::new(0);
+static PLAN: RwLock<Option<Arc<ActivePlan>>> = RwLock::new(None);
+
+fn current_plan() -> Option<Arc<ActivePlan>> {
+    PLAN.read().unwrap_or_else(PoisonError::into_inner).clone()
+}
+
+/// Consult `DEPYF_FAULTS` exactly once, on the first gate of a process
+/// that never called [`install`]. Malformed specs are reported and
+/// ignored rather than crashing the workload.
+fn init_from_env() {
+    static ONCE: Once = Once::new();
+    ONCE.call_once(|| {
+        match std::env::var("DEPYF_FAULTS") {
+            Ok(spec) if !spec.trim().is_empty() => match FaultPlan::parse(&spec) {
+                Ok(plan) if !plan.is_empty() => {
+                    *PLAN.write().unwrap_or_else(PoisonError::into_inner) =
+                        Some(Arc::new(ActivePlan::new(plan)));
+                    MODE.store(2, Ordering::Relaxed);
+                }
+                Ok(_) => MODE.store(1, Ordering::Relaxed),
+                Err(e) => {
+                    eprintln!("[depyf] ignoring malformed DEPYF_FAULTS: {}", e);
+                    MODE.store(1, Ordering::Relaxed);
+                }
+            },
+            _ => MODE.store(1, Ordering::Relaxed),
+        }
+    });
+}
+
+/// Install a plan process-wide, replacing any env-configured one, and
+/// reset all counters. The returned guard clears the plan on drop —
+/// hold it for the duration of a chaos round.
+#[must_use = "dropping the guard immediately uninstalls the plan"]
+pub fn install(plan: FaultPlan) -> FaultGuard {
+    *PLAN.write().unwrap_or_else(PoisonError::into_inner) = Some(Arc::new(ActivePlan::new(plan)));
+    MODE.store(2, Ordering::Relaxed);
+    FaultGuard { _priv: () }
+}
+
+/// RAII handle from [`install`]: dropping it clears the active plan.
+pub struct FaultGuard {
+    _priv: (),
+}
+
+impl Drop for FaultGuard {
+    fn drop(&mut self) {
+        *PLAN.write().unwrap_or_else(PoisonError::into_inner) = None;
+        MODE.store(1, Ordering::Relaxed);
+    }
+}
+
+/// The injection gate, called at each named site. Unconfigured: one
+/// relaxed atomic load, then `Ok`. Configured: counts the hit and
+/// either proceeds, sleeps (delay), returns [`DepyfError::Fault`]
+/// (error) or panics (panic).
+#[inline]
+pub fn gate(site: Site) -> Result<(), DepyfError> {
+    loop {
+        match MODE.load(Ordering::Relaxed) {
+            1 => return Ok(()),
+            0 => init_from_env(),
+            _ => {
+                let Some(active) = current_plan() else { return Ok(()) };
+                return active.check(site);
+            }
+        }
+    }
+}
+
+/// Counters of the currently installed plan (zeros when none is
+/// installed). Chaos rounds reconcile these against the resilience
+/// counters the injected faults produced.
+pub fn stats(site: Site) -> SiteStats {
+    match current_plan() {
+        Some(active) => active.stats(site),
+        None => SiteStats::default(),
+    }
+}
+
+/// Total faults fired across all sites of the current plan.
+pub fn fired_total() -> u64 {
+    match current_plan() {
+        Some(active) => SITES.iter().map(|&s| active.stats(s).fired).sum(),
+        None => 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn site_names_round_trip() {
+        for site in SITES {
+            assert_eq!(Site::parse(site.as_str()), Some(site), "{}", site);
+        }
+        assert_eq!(Site::parse("nope"), None);
+    }
+
+    #[test]
+    fn spec_grammar_parses_and_rejects() {
+        let plan =
+            FaultPlan::parse("seed=7;backend.plan=error@1/5;module.call=panic;pipeline.stage=delay:20@1/3")
+                .unwrap();
+        assert_eq!(plan.seed(), 7);
+        assert_eq!(
+            plan.clauses[Site::BackendPlan.index()],
+            Some(Clause { kind: FaultKind::Error, num: 1, den: 5 })
+        );
+        assert_eq!(
+            plan.clauses[Site::ModuleCall.index()],
+            Some(Clause { kind: FaultKind::Panic, num: 1, den: 1 })
+        );
+        assert_eq!(
+            plan.clauses[Site::PipelineStage.index()],
+            Some(Clause { kind: FaultKind::Delay(20), num: 1, den: 3 })
+        );
+        assert!(plan.clauses[Site::DiskCacheRead.index()].is_none());
+
+        // Whitespace tolerated; same plan.
+        let spaced = FaultPlan::parse(
+            " seed = 7 ; backend.plan = error @ 1/5 ; module.call = panic ; pipeline.stage = delay: 20 @ 1/3 ",
+        );
+        // `seed = 7` has spaces inside key/value which we trim; the rate
+        // split also trims. Only the delay param keeps a space → trimmed.
+        assert_eq!(spaced.unwrap(), plan);
+
+        for bad in [
+            "backend.plan",            // no '='
+            "nosuch.site=error",       // unknown site
+            "module.call=explode",     // unknown kind
+            "module.call=delay",       // delay without ms
+            "module.call=delay:abc",   // bad ms
+            "module.call=error@1",     // rate without '/'
+            "module.call=error@1/0",   // zero denominator
+            "seed=banana",             // bad seed
+        ] {
+            let err = FaultPlan::parse(bad).expect_err(bad);
+            assert_eq!(err.layer(), "fault", "{}", bad);
+        }
+    }
+
+    #[test]
+    fn firing_is_deterministic_and_rate_bounded() {
+        let plan = FaultPlan::new(42).arm_rate(Site::BackendPlan, FaultKind::Error, 1, 4);
+        let a = ActivePlan::new(plan.clone());
+        let b = ActivePlan::new(plan);
+        let mut fired_a = 0u64;
+        for _ in 0..400 {
+            let ra = a.check(Site::BackendPlan);
+            let rb = b.check(Site::BackendPlan);
+            assert_eq!(ra.is_err(), rb.is_err(), "same seed, same hit → same outcome");
+            if ra.is_err() {
+                fired_a += 1;
+            }
+        }
+        let st = a.stats(Site::BackendPlan);
+        assert_eq!(st.hits, 400);
+        assert_eq!(st.fired, fired_a);
+        // Hash selection at 1/4 over 400 hits lands well inside (0, 400).
+        assert!(st.fired > 25 && st.fired < 175, "fired {} of 400", st.fired);
+        // A different seed fires a different subset.
+        let c = ActivePlan::new(FaultPlan::new(43).arm_rate(Site::BackendPlan, FaultKind::Error, 1, 4));
+        let mut diverged = false;
+        for n in 0..400u64 {
+            let clause = Clause { kind: FaultKind::Error, num: 1, den: 4 };
+            if a.fires(Site::BackendPlan, n, &clause) != c.fires(Site::BackendPlan, n, &clause) {
+                diverged = true;
+                break;
+            }
+        }
+        assert!(diverged, "seeds 42 and 43 select identical fault subsets");
+    }
+
+    #[test]
+    fn unarmed_sites_never_fire_and_count_nothing() {
+        let a = ActivePlan::new(FaultPlan::new(1).arm(Site::ModuleCall, FaultKind::Error));
+        for _ in 0..10 {
+            a.check(Site::BackendPlan).unwrap();
+        }
+        assert_eq!(a.stats(Site::BackendPlan), SiteStats::default());
+        assert!(a.check(Site::ModuleCall).is_err(), "1/1 rate fires every hit");
+        assert_eq!(a.stats(Site::ModuleCall), SiteStats { hits: 1, fired: 1 });
+    }
+
+    #[test]
+    fn full_rate_error_message_names_site_and_hit() {
+        let a = ActivePlan::new(FaultPlan::new(9).arm(Site::DiskCacheWrite, FaultKind::Error));
+        let err = a.check(Site::DiskCacheWrite).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("injected fault at disk_cache.write"), "{}", msg);
+        assert!(err.is_transient(), "injected faults retry");
+    }
+
+    /// Global install/uninstall round-trip with an *empty* plan — safe to
+    /// run concurrently with every other unit test in the binary because
+    /// no site is armed (gates stay Ok). Armed-plan behavior is covered
+    /// above without touching the global, and end-to-end in tests/chaos.rs
+    /// (which serializes on its own lock).
+    #[test]
+    fn install_guard_round_trips_without_arming() {
+        {
+            let _guard = install(FaultPlan::new(5));
+            assert_eq!(MODE.load(Ordering::Relaxed), 2);
+            gate(Site::ModuleCall).unwrap();
+            gate(Site::BackendPlan).unwrap();
+            assert_eq!(stats(Site::ModuleCall), SiteStats::default(), "empty plan arms nothing");
+            assert_eq!(fired_total(), 0);
+        }
+        assert_eq!(MODE.load(Ordering::Relaxed), 1);
+        assert!(current_plan().is_none(), "guard drop clears the plan");
+        gate(Site::ModuleCall).unwrap();
+    }
+}

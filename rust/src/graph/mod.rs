@@ -12,8 +12,11 @@ pub use serde::{parse_graph, render_graph, GRAPH_SCHEMA_VERSION};
 
 use std::cell::Cell;
 use std::fmt;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::rc::Rc;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock};
+use std::time::Duration;
 
 use crate::api::DepyfError;
 use crate::fnv::Fnv;
@@ -501,10 +504,72 @@ pub fn infer_shape(op: &OpKind, shapes: &[&[usize]]) -> Result<Vec<usize>, Depyf
     }
 }
 
+/// Dispatch-path resilience counters, shared (via `Arc`) between every
+/// compiled fn a session installs so the session can fold them into its
+/// metrics snapshot once. All atomics: compiled fns are dispatched from
+/// serving threads.
+#[derive(Debug, Default)]
+pub struct CallCounters {
+    /// Transient call failures retried on the same module.
+    pub retries: AtomicU64,
+    /// Calls served by the eager fallback after the module failed.
+    pub degraded_calls: AtomicU64,
+    /// Calls abandoned at their deadline (then served by the fallback).
+    pub timeouts: AtomicU64,
+    /// Module-call panics converted to [`DepyfError::Panic`].
+    pub panics_caught: AtomicU64,
+}
+
+impl CallCounters {
+    /// Accumulate these counters into a metrics snapshot (the session /
+    /// serve driver calls this once per snapshot).
+    pub fn fold_into(&self, snap: &mut crate::metrics::MetricsSnapshot) {
+        snap.retries += self.retries.load(Ordering::Relaxed);
+        snap.degraded_calls += self.degraded_calls.load(Ordering::Relaxed);
+        snap.timeouts += self.timeouts.load(Ordering::Relaxed);
+        snap.panics_caught += self.panics_caught.load(Ordering::Relaxed);
+    }
+}
+
+/// Call-time resilience configuration attached by dynamo (see
+/// [`CompiledGraphFn::with_resilience`]): what to do when a dispatched
+/// call fails, panics or outlives its deadline.
+pub struct CallResilience {
+    /// [`crate::api::FallbackPolicy::Eager`] serves failed calls from a
+    /// lazily-built eager fallback module; `Error` propagates.
+    pub fallback: crate::api::FallbackPolicy,
+    /// Abandon calls that run longer than this (the call is watchdogged
+    /// on a helper thread; the abandoned worker finishes harmlessly).
+    pub deadline: Option<Duration>,
+    /// Transient-failure retries on the same module before degrading.
+    pub max_retries: u32,
+    pub counters: Arc<CallCounters>,
+}
+
+impl CallResilience {
+    /// One retry, the given policy/deadline, counters shared with the
+    /// session.
+    pub fn new(
+        fallback: crate::api::FallbackPolicy,
+        deadline: Option<Duration>,
+        counters: Arc<CallCounters>,
+    ) -> CallResilience {
+        CallResilience { fallback, deadline, max_retries: 1, counters }
+    }
+}
+
 /// A compiled graph installed by dynamo as a callable global
 /// (`__compiled_fn_N`). Dispatches tensor inputs through the backend's
 /// [`crate::api::CompiledModule`], which also carries the per-partition
 /// artifacts and stats the session dumps at `finish()`.
+///
+/// Dispatch is panic-isolated: `call` runs the module under
+/// `catch_unwind`, so a panicking backend executor becomes
+/// [`DepyfError::Panic`] instead of unwinding through the VM (and never
+/// poisons shared locks). With [`CallResilience`] attached, transient
+/// failures are retried, deadlines abandon stuck calls, and final
+/// failures degrade to a lazily-built eager fallback module that is
+/// bitwise-equal to the reference executor.
 pub struct CompiledGraphFn {
     pub name: String,
     pub graph: Arc<Graph>,
@@ -513,6 +578,10 @@ pub struct CompiledGraphFn {
     /// The backend's executable module (lowered via `Backend::lower`).
     pub module: Arc<dyn crate::api::CompiledModule>,
     pub calls: Cell<u64>,
+    /// Call-time retry/degrade/deadline behavior (None: isolation only).
+    resilience: Option<CallResilience>,
+    /// The eager fallback module, built on first degraded call.
+    fallback_module: OnceLock<Arc<dyn crate::api::CompiledModule>>,
 }
 
 impl CompiledGraphFn {
@@ -528,12 +597,143 @@ impl CompiledGraphFn {
             graph,
             module,
             calls: Cell::new(0),
+            resilience: None,
+            fallback_module: OnceLock::new(),
         }
+    }
+
+    /// Attach call-time resilience (dynamo does this from its config).
+    pub fn with_resilience(mut self, res: CallResilience) -> CompiledGraphFn {
+        self.resilience = Some(res);
+        self
     }
 
     pub fn call(&self, inputs: &[Rc<Tensor>]) -> Result<Vec<Tensor>, DepyfError> {
         self.calls.set(self.calls.get() + 1);
-        self.module.call(inputs)
+        match &self.resilience {
+            None => self.dispatch_caught(inputs, None),
+            Some(res) => self.call_resilient(res, inputs),
+        }
+    }
+
+    /// One panic-isolated dispatch on the calling thread. The fault gate
+    /// sits *inside* the `catch_unwind` so injected panics exercise the
+    /// isolation path like real ones. `AssertUnwindSafe` is sound: every
+    /// shared lock below recovers from poison, and this `&self` borrow
+    /// holds no interior state a panic could tear.
+    fn dispatch_caught(
+        &self,
+        inputs: &[Rc<Tensor>],
+        counters: Option<&CallCounters>,
+    ) -> Result<Vec<Tensor>, DepyfError> {
+        catch_unwind(AssertUnwindSafe(|| {
+            crate::faults::gate(crate::faults::Site::ModuleCall)?;
+            self.module.call(inputs)
+        }))
+        .unwrap_or_else(|payload| {
+            if let Some(c) = counters {
+                c.panics_caught.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(DepyfError::from_panic(&format!("module {} ({})", self.name, self.backend_name), payload))
+        })
+    }
+
+    /// Watchdogged dispatch: the module runs on a helper thread; if it
+    /// misses the deadline the call is abandoned (the worker finishes
+    /// harmlessly — its `send` to a dropped receiver is a no-op) and the
+    /// caller degrades instead of hanging.
+    fn dispatch_deadline(
+        &self,
+        inputs: &[Rc<Tensor>],
+        deadline: Duration,
+        counters: &Arc<CallCounters>,
+    ) -> Result<Vec<Tensor>, DepyfError> {
+        let owned: Vec<Tensor> = inputs.iter().map(|t| (**t).clone()).collect();
+        let module = Arc::clone(&self.module);
+        let context = format!("module {} ({})", self.name, self.backend_name);
+        let counters_in = Arc::clone(counters);
+        let (tx, rx) = std::sync::mpsc::channel();
+        std::thread::spawn(move || {
+            let handles: Vec<Rc<Tensor>> = owned.into_iter().map(Rc::new).collect();
+            let result = catch_unwind(AssertUnwindSafe(|| {
+                crate::faults::gate(crate::faults::Site::ModuleCall)?;
+                module.call(&handles)
+            }))
+            .unwrap_or_else(|payload| {
+                counters_in.panics_caught.fetch_add(1, Ordering::Relaxed);
+                Err(DepyfError::from_panic(&context, payload))
+            });
+            let _ = tx.send(result);
+        });
+        match rx.recv_timeout(deadline) {
+            Ok(result) => result,
+            Err(_) => {
+                counters.timeouts.fetch_add(1, Ordering::Relaxed);
+                Err(DepyfError::Timeout(format!(
+                    "module {} ({}) exceeded its {:?} deadline; call abandoned",
+                    self.name, self.backend_name, deadline
+                )))
+            }
+        }
+    }
+
+    fn call_resilient(
+        &self,
+        res: &CallResilience,
+        inputs: &[Rc<Tensor>],
+    ) -> Result<Vec<Tensor>, DepyfError> {
+        let mut tries = 0u32;
+        let final_err = loop {
+            let result = match res.deadline {
+                None => self.dispatch_caught(inputs, Some(&res.counters)),
+                Some(d) => self.dispatch_deadline(inputs, d, &res.counters),
+            };
+            match result {
+                Ok(out) => return Ok(out),
+                // A timed-out call is abandoned, not retried: the module
+                // is presumed stuck, so go straight to the fallback.
+                Err(e @ DepyfError::Timeout(_)) => break e,
+                Err(e) if e.is_transient() && tries < res.max_retries => {
+                    tries += 1;
+                    res.counters.retries.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(e) => break e,
+            }
+        };
+        match res.fallback {
+            crate::api::FallbackPolicy::Error => Err(final_err),
+            crate::api::FallbackPolicy::Eager => {
+                let fb = self.eager_fallback();
+                let fb_result = catch_unwind(AssertUnwindSafe(|| fb.call(inputs)))
+                    .unwrap_or_else(|payload| Err(DepyfError::from_panic("eager fallback", payload)));
+                match fb_result {
+                    Ok(out) => {
+                        res.counters.degraded_calls.fetch_add(1, Ordering::Relaxed);
+                        // Let recording wrappers capture the degraded call
+                        // (with the backend that actually served it).
+                        self.module.record_degraded(inputs, &out, fb.backend_name());
+                        Ok(out)
+                    }
+                    // The fallback failing too means the inputs (not the
+                    // backend) are bad: report the original failure.
+                    Err(_) => Err(final_err),
+                }
+            }
+        }
+    }
+
+    /// The lazily-built eager fallback: the *unoptimized, unfused*
+    /// reference executor over this fn's captured graph — bitwise-equal
+    /// to the conformance oracle, usable even when the optimized module
+    /// is what is failing.
+    fn eager_fallback(&self) -> Arc<dyn crate::api::CompiledModule> {
+        Arc::clone(self.fallback_module.get_or_init(|| {
+            Arc::new(crate::backend::eager::EagerModule::with_fusion(
+                Arc::clone(&self.graph),
+                format!("eager ({} call fallback)", self.backend_name),
+                false,
+            ))
+        }))
     }
 }
 
@@ -640,5 +840,102 @@ mod tests {
         let tgt = g.placeholder("tgt", &[6]);
         let ce = g.add_op(OpKind::CrossEntropy, vec![logits, tgt]).unwrap();
         assert_eq!(g.nodes[ce].shape, Vec::<usize>::new());
+    }
+
+    fn relu_graph() -> Arc<Graph> {
+        let mut g = Graph::new("f");
+        let x = g.placeholder("x", &[2]);
+        let r = g.add_op(OpKind::Relu, vec![x]).unwrap();
+        g.set_outputs(vec![r]);
+        Arc::new(g)
+    }
+
+    /// A module whose `call` misbehaves on demand.
+    struct Broken {
+        mode: &'static str, // "panic" | "error" | "stuck"
+    }
+
+    impl crate::api::CompiledModule for Broken {
+        fn call(&self, _inputs: &[Rc<Tensor>]) -> Result<Vec<Tensor>, DepyfError> {
+            match self.mode {
+                "panic" => panic!("executor bug"),
+                "stuck" => {
+                    std::thread::sleep(Duration::from_millis(300));
+                    Err(DepyfError::Runtime("finished too late to matter".into()))
+                }
+                _ => Err(DepyfError::Runtime("transient executor failure".into())),
+            }
+        }
+        fn backend_name(&self) -> &str {
+            "broken"
+        }
+    }
+
+    #[test]
+    fn compiled_fn_isolates_module_panics() {
+        let f = CompiledGraphFn::from_module("f", relu_graph(), Arc::new(Broken { mode: "panic" }));
+        let err = f.call(&[Rc::new(Tensor::new(vec![2], vec![1.0, -1.0]))]).unwrap_err();
+        assert_eq!(err.layer(), "panic");
+        assert!(err.to_string().contains("module f (broken) panicked: executor bug"), "{}", err);
+        assert_eq!(f.calls.get(), 1);
+    }
+
+    #[test]
+    fn resilient_call_retries_then_degrades_to_bitwise_eager() {
+        let counters = Arc::new(CallCounters::default());
+        let f = CompiledGraphFn::from_module("f", relu_graph(), Arc::new(Broken { mode: "error" }))
+            .with_resilience(CallResilience::new(
+                crate::api::FallbackPolicy::Eager,
+                None,
+                Arc::clone(&counters),
+            ));
+        let out = f.call(&[Rc::new(Tensor::new(vec![2], vec![1.0, -1.0]))]).unwrap();
+        assert_eq!(out[0].data(), &[1.0, 0.0], "fallback must be the eager reference result");
+        assert_eq!(counters.retries.load(Ordering::Relaxed), 1, "one retry before degrading");
+        assert_eq!(counters.degraded_calls.load(Ordering::Relaxed), 1);
+        assert_eq!(counters.timeouts.load(Ordering::Relaxed), 0);
+        // Panicking modules degrade the same way, counting the panic.
+        let f = CompiledGraphFn::from_module("f", relu_graph(), Arc::new(Broken { mode: "panic" }))
+            .with_resilience(CallResilience::new(
+                crate::api::FallbackPolicy::Eager,
+                None,
+                Arc::clone(&counters),
+            ));
+        let out = f.call(&[Rc::new(Tensor::new(vec![2], vec![-2.0, 3.0]))]).unwrap();
+        assert_eq!(out[0].data(), &[0.0, 3.0]);
+        assert_eq!(counters.panics_caught.load(Ordering::Relaxed), 2, "initial call + retry");
+    }
+
+    #[test]
+    fn resilient_call_propagates_under_error_policy() {
+        let counters = Arc::new(CallCounters::default());
+        let f = CompiledGraphFn::from_module("f", relu_graph(), Arc::new(Broken { mode: "error" }))
+            .with_resilience(CallResilience::new(
+                crate::api::FallbackPolicy::Error,
+                None,
+                Arc::clone(&counters),
+            ));
+        let err = f.call(&[Rc::new(Tensor::new(vec![2], vec![1.0, -1.0]))]).unwrap_err();
+        assert_eq!(err.layer(), "runtime");
+        assert_eq!(counters.retries.load(Ordering::Relaxed), 1);
+        assert_eq!(counters.degraded_calls.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn deadline_abandons_stuck_call_and_serves_fallback() {
+        let counters = Arc::new(CallCounters::default());
+        let f = CompiledGraphFn::from_module("f", relu_graph(), Arc::new(Broken { mode: "stuck" }))
+            .with_resilience(CallResilience::new(
+                crate::api::FallbackPolicy::Eager,
+                Some(Duration::from_millis(25)),
+                Arc::clone(&counters),
+            ));
+        let t0 = std::time::Instant::now();
+        let out = f.call(&[Rc::new(Tensor::new(vec![2], vec![4.0, -4.0]))]).unwrap();
+        assert_eq!(out[0].data(), &[4.0, 0.0]);
+        assert!(t0.elapsed() < Duration::from_millis(250), "abandon, don't wait out the stuck call");
+        assert_eq!(counters.timeouts.load(Ordering::Relaxed), 1);
+        assert_eq!(counters.degraded_calls.load(Ordering::Relaxed), 1);
+        assert_eq!(counters.retries.load(Ordering::Relaxed), 0, "timeouts are not retried");
     }
 }

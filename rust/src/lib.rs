@@ -212,6 +212,56 @@
 //! baseline vs N-thread, with the speedup) to `BENCH_serve.json`;
 //! `benches/serve.rs` sweeps thread counts.
 //!
+//! ## Fault tolerance
+//!
+//! Wrapping a workload in depyf must never make it *less* reliable than
+//! running without it, so the dispatch path degrades instead of dying:
+//!
+//! * **Panic isolation**: backend `plan`/`lower` and every
+//!   `CompiledModule::call` run under `catch_unwind`; a panic becomes
+//!   [`DepyfError::Panic`] (`api::DepyfError::layer() == "panic"`) and
+//!   flows through the normal [`api::FallbackPolicy`]. Every
+//!   process-wide lock (backend registry, executable caches,
+//!   [`runtime::DiskCache`], [`serve::ModuleCache`], the worker pool)
+//!   recovers from poison instead of unwrapping, so one panicked thread
+//!   cannot brick the others.
+//! * **Retry + circuit breaker** ([`backend::ResilientBackend`],
+//!   `resilient:<name>` on the CLI, applied automatically by
+//!   `depyf serve`): transient compile failures
+//!   ([`DepyfError::is_transient`]) are retried with backoff; after 3
+//!   consecutive failures the breaker trips **open** and compiles fail
+//!   fast (degrading dispatch to eager under `FallbackPolicy::Eager`);
+//!   after a cooldown one **half-open** probe is let through — success
+//!   closes the breaker, failure reopens it.
+//! * **Call-time degradation**: a compiled module whose call fails
+//!   transiently is retried once, then served by a lazily-built eager
+//!   fallback module (bitwise-equal to the reference executor); trace
+//!   bundles record which backend actually served each call
+//!   (`served_by`), and `depyf replay --backend recorded` re-runs the
+//!   trace on the originally requested backend to confirm the fallback
+//!   was output-equivalent.
+//! * **Deadlines**: [`serve::CallFuture::wait_timeout`] never blocks past
+//!   its deadline, and `depyf serve --deadline-ms <n>` abandons stuck
+//!   calls (the abandoned worker finishes harmlessly thanks to drop-safe
+//!   promises) and serves the eager fallback instead.
+//! * **Cache integrity**: disk-cache index entries carry an FNV checksum
+//!   of the cached HLO; corruption quarantines the entry
+//!   (`<file>.quarantined`) and recompiles rather than erroring.
+//!
+//! All of it is *testable on demand* via deterministic fault injection
+//! ([`faults`]): `DEPYF_FAULTS="seed=7;backend.plan=error@1/5;`
+//! `module.call=panic@1/7;pipeline.stage=delay:20@1/3"` arms seeded
+//! faults (kinds `error` | `panic` | `delay:<ms>`, rate `@num/den`) at
+//! the named sites `backend.plan`, `backend.lower`, `module.call`,
+//! `disk_cache.read`, `disk_cache.write`, `worker_pool.submit` and
+//! `pipeline.stage`. Whether hit *n* at a site fires is a pure function
+//! of `(seed, site, n)`, so any chaos failure reproduces from its seed
+//! (see `rust/tests/README.md`). Unconfigured, each site costs one
+//! relaxed atomic load. Retries, degradations, breaker trips/skips,
+//! caught panics and timeouts all land in `metrics.json` and the
+//! `depyf serve` summary, which also reports per-thread failures and
+//! exits non-zero if any serving thread died.
+//!
 //! ## Testing & conformance
 //!
 //! Cross-backend correctness is evidence, not hope: the **eager executor
@@ -264,6 +314,7 @@ pub mod corpus;
 pub mod debugger;
 pub mod decompiler;
 pub mod dynamo;
+pub mod faults;
 pub mod graph;
 pub mod hijack;
 pub mod metrics;
@@ -284,7 +335,7 @@ pub mod prelude {
         CompilePlan, CompileRequest, CompiledModule, DepyfError, EagerBackend, FallbackPolicy,
         OptLevel, Session, SessionBuilder, TraceMode, XlaBackend,
     };
-    pub use crate::backend::{BatchedBackend, ShardedBackend};
+    pub use crate::backend::{BatchedBackend, ResilientBackend, ShardedBackend};
     pub use crate::bytecode::{disassemble, CodeObject, Instr, IsaVersion};
     pub use crate::decompiler::{decompile, Decompiler};
     pub use crate::dynamo::{Dynamo, DynamoConfig};

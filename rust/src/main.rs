@@ -44,23 +44,32 @@ usage:
   depyf table1
       Regenerate the paper's Table 1 correctness matrix.
   depyf serve [--threads N] [--backend <name>] [--iters M] [--out <dir>]
+              [--deadline-ms D]
       Concurrent serving mode: N worker threads (default 4) each drive an
       independent session over the table1 model corpus, dispatching through
-      the shared thread-safe backend registry and module cache. Writes
-      merged per-thread metrics (compiles, cache hits, evictions, p50/p99
-      call latency) to <dir>/metrics.json and a throughput record to
-      <dir>/BENCH_serve.json (default dir: serve_out). Backends that
-      require the PJRT runtime (xla) are rejected — the runtime is
-      thread-confined; use eager/sharded/batched/pipelined/recording/async.
-  depyf replay <trace.json|dump-dir> [--backend <name>] [--against <oracle>]
-               [--eps <tol>] [--no-localize] [--opt-level 0|1|2]
+      the shared thread-safe backend registry and module cache. The inner
+      backend is always wrapped in the resilient decorator (retry + circuit
+      breaker); --deadline-ms abandons calls that exceed D milliseconds and
+      serves them from the eager fallback. Writes merged per-thread metrics
+      (compiles, cache hits, evictions, retries, degrades, breaker trips,
+      timeouts, p50/p99 call latency) to <dir>/metrics.json and a
+      throughput record to <dir>/BENCH_serve.json (default dir: serve_out).
+      Exits non-zero if any serving thread died. Backends that require the
+      PJRT runtime (xla) are rejected — the runtime is thread-confined; use
+      eager/sharded/batched/pipelined/recording/async/resilient.
+  depyf replay <trace.json|dump-dir> [--backend <name>|recorded]
+               [--against <oracle>] [--eps <tol>] [--no-localize]
+               [--opt-level 0|1|2]
       Re-execute recorded __trace_*.json bundles (written by the recording
       backend) on any registered backend. A dump-dir argument replays every
-      trace indexed in its manifest.json. Default comparison is bit-exact
-      against the recorded outputs; --against <oracle> recomputes the
-      reference with another backend (differential mode), --eps switches
-      to |a-b| <= tol. Mismatches are localized to the first diverging op
-      (disable with --no-localize) and exit with code 1.
+      trace indexed in its manifest.json. --backend recorded re-runs each
+      bundle on the backend it was originally recorded against (degraded
+      calls carry a per-call "served_by" tag naming the fallback that
+      actually served them). Default comparison is bit-exact against the
+      recorded outputs; --against <oracle> recomputes the reference with
+      another backend (differential mode), --eps switches to |a-b| <= tol.
+      Mismatches are localized to the first diverging op (disable with
+      --no-localize) and exit with code 1.
   depyf help
       Print this text.
 
@@ -97,6 +106,11 @@ flags:
                      pipelined  the sharded partition chain with one stage
                                 thread per shard: shard k of call i overlaps
                                 shard k+1 of call i-1
+                     resilient  wraps eager with retry-with-backoff for
+                                transient compile failures plus a circuit
+                                breaker that fails fast after repeated
+                                failures; wrap any other backend as
+                                resilient:<name>
                    sharded/batched lower to PJRT when the shared runtime is
                    available and to the eager executor otherwise.
 
@@ -144,7 +158,8 @@ fn parse_opt_level(args: &[String]) -> Result<OptLevel, CliError> {
 /// Resolve `--backend <name>` against the registry; absent flag → None.
 /// `recording:<inner>` wraps any registered backend in the recording
 /// decorator (bare `recording` is the pre-registered eager wrapper);
-/// `async:<inner>` wraps one in the future-returning async decorator.
+/// `async:<inner>` wraps one in the future-returning async decorator;
+/// `resilient[:<inner>]` wraps one in the retry/circuit-breaker decorator.
 fn parse_backend(args: &[String]) -> Result<Option<Arc<dyn Backend>>, CliError> {
     match flag_value(args, "--backend") {
         None => Ok(None),
@@ -160,6 +175,12 @@ fn resolve_backend(name: &str) -> Result<Arc<dyn Backend>, CliError> {
     }
     if let Some(inner) = name.strip_prefix("async:") {
         return depyf::serve::AsyncBackend::wrapping(inner)
+            .map(|b| Arc::new(b) as Arc<dyn Backend>)
+            .map_err(|e| usage(e.to_string()));
+    }
+    if name == "resilient" || name.starts_with("resilient:") {
+        let inner = name.strip_prefix("resilient:").unwrap_or("eager");
+        return depyf::backend::ResilientBackend::wrapping(inner)
             .map(|b| Arc::new(b) as Arc<dyn Backend>)
             .map_err(|e| usage(e.to_string()));
     }
@@ -349,16 +370,27 @@ fn cmd_serve(args: &[String]) -> Result<(), CliError> {
     if backend.requires_runtime() {
         return Err(usage(format!(
             "--backend {} requires the PJRT runtime, which is thread-confined; \
-             serve supports eager, sharded, batched, pipelined, recording:<b> and async:<b>",
+             serve supports eager, sharded, batched, pipelined, recording:<b>, \
+             async:<b> and resilient:<b>",
             backend_name
         )));
     }
+    let deadline_ms: Option<u64> = match flag_value(args, "--deadline-ms") {
+        None => None,
+        Some(s) => Some(
+            s.parse()
+                .ok()
+                .filter(|&n: &u64| n >= 1)
+                .ok_or_else(|| usage(format!("bad --deadline-ms '{}' (expected >= 1)", s)))?,
+        ),
+    };
     let out_dir = flag_value(args, "--out").unwrap_or_else(|| "serve_out".into());
     let opts = depyf::serve::ServeOptions {
         threads,
         iters,
         backend: backend_name,
         out_dir: std::path::PathBuf::from(out_dir),
+        deadline_ms,
     };
     let report = depyf::serve::run_serve(&opts)?;
     print!("{}", report.render());
@@ -367,11 +399,14 @@ fn cmd_serve(args: &[String]) -> Result<(), CliError> {
 
 fn cmd_replay(args: &[String]) -> Result<(), CliError> {
     let path = args.first().ok_or_else(|| {
-        usage("replay needs a trace: depyf replay <trace.json|dump-dir> [--backend <name>] [--against <oracle>]")
+        usage("replay needs a trace: depyf replay <trace.json|dump-dir> [--backend <name>|recorded] [--against <oracle>]")
     })?;
-    let backend = match parse_backend(args)? {
-        Some(b) => b,
-        None => lookup_backend("eager").expect("eager is always registered"),
+    // `--backend recorded` defers the choice to each bundle: re-run it on
+    // the backend it was originally recorded against.
+    let fixed_backend: Option<Arc<dyn Backend>> = match flag_value(args, "--backend") {
+        None => Some(lookup_backend("eager").expect("eager is always registered")),
+        Some(name) if name == "recorded" => None,
+        Some(name) => Some(resolve_backend(&name)?),
     };
     let oracle = match flag_value(args, "--against") {
         None => None,
@@ -405,14 +440,27 @@ fn cmd_replay(args: &[String]) -> Result<(), CliError> {
         bundles.push(TraceBundle::load(p)?);
     }
 
-    let mut consulted = vec![&backend];
+    let per_bundle: Vec<Arc<dyn Backend>> = bundles
+        .iter()
+        .map(|b| match &fixed_backend {
+            Some(be) => Ok(Arc::clone(be)),
+            None => resolve_backend(&b.backend).map_err(|e| {
+                let m = match e {
+                    CliError::Usage(m) | CliError::Run(m) => m,
+                };
+                run_err(format!("replay: bundle '{}' was recorded on backend '{}': {}", b.name, b.backend, m))
+            }),
+        })
+        .collect::<Result<_, _>>()?;
+
+    let mut consulted: Vec<&Arc<dyn Backend>> = per_bundle.iter().collect();
     if let Some(o) = &oracle {
         consulted.push(o);
     }
     let runtime = provision_runtime(&consulted)?;
     let opts = ReplayOptions { eps, runtime, localize, opt_level };
     let mut mismatches = 0usize;
-    for b in &bundles {
+    for (b, backend) in bundles.iter().zip(per_bundle.iter()) {
         let report = replay_bundle(b, backend.as_ref(), oracle.as_deref(), &opts)?;
         println!("{}", report.render());
         mismatches += report.mismatches.len();
@@ -420,7 +468,11 @@ fn cmd_replay(args: &[String]) -> Result<(), CliError> {
     if mismatches > 0 {
         return Err(run_err(format!("{} mismatch(es) across {} bundle(s)", mismatches, bundles.len())));
     }
-    eprintln!("[depyf] replayed {} bundle(s) on {}: no mismatches", bundles.len(), backend.name());
+    let on = match &fixed_backend {
+        Some(be) => be.name().to_string(),
+        None => "their recorded backends".to_string(),
+    };
+    eprintln!("[depyf] replayed {} bundle(s) on {}: no mismatches", bundles.len(), on);
     Ok(())
 }
 
@@ -478,7 +530,10 @@ mod tests {
         assert_eq!(run_cli(&s(&["serve", "--threads", "0"])), 2);
         assert_eq!(run_cli(&s(&["serve", "--threads", "999"])), 2);
         assert_eq!(run_cli(&s(&["serve", "--iters", "0"])), 2);
+        assert_eq!(run_cli(&s(&["serve", "--deadline-ms", "0"])), 2);
+        assert_eq!(run_cli(&s(&["serve", "--deadline-ms", "soon"])), 2);
         assert_eq!(run_cli(&s(&["serve", "--backend", "bogus"])), 2);
+        assert_eq!(run_cli(&s(&["serve", "--backend", "resilient:bogus"])), 2);
         assert_eq!(run_cli(&s(&["serve", "--backend", "async:bogus"])), 2);
         // xla needs the PJRT runtime, which is thread-confined — serve
         // refuses it up front rather than crashing a worker.
@@ -491,6 +546,16 @@ mod tests {
         assert!(wrapped.capabilities().contains(Capabilities::WRAPPER));
         assert!(wrapped.capabilities().contains(Capabilities::ASYNC));
         assert!(matches!(resolve_backend("async:nope"), Err(CliError::Usage(_))));
+    }
+
+    #[test]
+    fn resilient_wrapper_backend_names_resolve() {
+        let bare = resolve_backend("resilient").unwrap();
+        assert_eq!(bare.name(), "eager", "transparent wrapper around eager");
+        assert!(bare.capabilities().contains(Capabilities::WRAPPER));
+        let wrapped = resolve_backend("resilient:sharded").unwrap();
+        assert_eq!(wrapped.name(), "sharded");
+        assert!(matches!(resolve_backend("resilient:nope"), Err(CliError::Usage(_))));
     }
 
     #[test]
@@ -530,6 +595,9 @@ mod tests {
         // sharded-vs-eager. sharded/batched may lower to PJRT when the
         // shared runtime starts, so those replays use the XLA tolerance.
         assert_eq!(run_cli(&s(&["replay", &dump_s])), 0);
+        // --backend recorded resolves each bundle's originally-recorded
+        // backend (eager here, via the recording wrapper).
+        assert_eq!(run_cli(&s(&["replay", &dump_s, "--backend", "recorded"])), 0);
         // Bisection workflow: the same trace replays bitwise-clean with the
         // optimizer off entirely.
         assert_eq!(run_cli(&s(&["replay", &dump_s, "--opt-level", "0"])), 0);

@@ -15,6 +15,20 @@ pub struct Metrics {
     pub guard_failures: Cell<u64>,
     /// Guard-table entries evicted by the LRU policy at `cache_limit`.
     pub evictions: Cell<u64>,
+    /// Transient compile/call failures retried by the resilience layer.
+    pub retries: Cell<u64>,
+    /// Calls whose module failed and were served by the eager fallback.
+    pub degraded_calls: Cell<u64>,
+    /// Compiles degraded to eager under `FallbackPolicy::Eager`.
+    pub degraded_compiles: Cell<u64>,
+    /// Circuit-breaker transitions into the open state.
+    pub breaker_trips: Cell<u64>,
+    /// Compiles failed fast by an open circuit breaker.
+    pub breaker_skips: Cell<u64>,
+    /// Calls abandoned at their deadline and served by the fallback.
+    pub timeouts: Cell<u64>,
+    /// Panics converted to `DepyfError::Panic` by `catch_unwind` isolation.
+    pub panics_caught: Cell<u64>,
     pub compile_ns: Cell<u64>,
 }
 
@@ -41,7 +55,7 @@ impl Metrics {
 
     pub fn report(&self) -> String {
         format!(
-            "captures={} cache_hits={} cache_misses={} graph_breaks={} fallbacks={} guard_checks={} guard_failures={} evictions={} compile_time={:?}",
+            "captures={} cache_hits={} cache_misses={} graph_breaks={} fallbacks={} guard_checks={} guard_failures={} evictions={} retries={} degraded_calls={} degraded_compiles={} breaker_trips={} breaker_skips={} timeouts={} panics_caught={} compile_time={:?}",
             self.captures.get(),
             self.cache_hits.get(),
             self.cache_misses.get(),
@@ -50,6 +64,13 @@ impl Metrics {
             self.guard_checks.get(),
             self.guard_failures.get(),
             self.evictions.get(),
+            self.retries.get(),
+            self.degraded_calls.get(),
+            self.degraded_compiles.get(),
+            self.breaker_trips.get(),
+            self.breaker_skips.get(),
+            self.timeouts.get(),
+            self.panics_caught.get(),
             self.compile_time(),
         )
     }
@@ -65,7 +86,7 @@ impl Metrics {
     /// (`("modules", "[...]")`).
     pub fn to_json_with(&self, extra: Option<(&str, &str)>) -> String {
         let mut out = format!(
-            "{{\n  \"captures\": {},\n  \"cache_hits\": {},\n  \"cache_misses\": {},\n  \"graph_breaks\": {},\n  \"fallbacks\": {},\n  \"guard_checks\": {},\n  \"guard_failures\": {},\n  \"evictions\": {},\n  \"compile_ns\": {}",
+            "{{\n  \"captures\": {},\n  \"cache_hits\": {},\n  \"cache_misses\": {},\n  \"graph_breaks\": {},\n  \"fallbacks\": {},\n  \"guard_checks\": {},\n  \"guard_failures\": {},\n  \"evictions\": {},\n  \"retries\": {},\n  \"degraded_calls\": {},\n  \"degraded_compiles\": {},\n  \"breaker_trips\": {},\n  \"breaker_skips\": {},\n  \"timeouts\": {},\n  \"panics_caught\": {},\n  \"compile_ns\": {}",
             self.captures.get(),
             self.cache_hits.get(),
             self.cache_misses.get(),
@@ -74,6 +95,13 @@ impl Metrics {
             self.guard_checks.get(),
             self.guard_failures.get(),
             self.evictions.get(),
+            self.retries.get(),
+            self.degraded_calls.get(),
+            self.degraded_compiles.get(),
+            self.breaker_trips.get(),
+            self.breaker_skips.get(),
+            self.timeouts.get(),
+            self.panics_caught.get(),
             self.compile_ns.get(),
         );
         if let Some((key, value)) = extra {
@@ -100,6 +128,13 @@ pub struct MetricsSnapshot {
     pub guard_checks: u64,
     pub guard_failures: u64,
     pub evictions: u64,
+    pub retries: u64,
+    pub degraded_calls: u64,
+    pub degraded_compiles: u64,
+    pub breaker_trips: u64,
+    pub breaker_skips: u64,
+    pub timeouts: u64,
+    pub panics_caught: u64,
     pub compile_ns: u64,
 }
 
@@ -115,6 +150,13 @@ impl Metrics {
             guard_checks: self.guard_checks.get(),
             guard_failures: self.guard_failures.get(),
             evictions: self.evictions.get(),
+            retries: self.retries.get(),
+            degraded_calls: self.degraded_calls.get(),
+            degraded_compiles: self.degraded_compiles.get(),
+            breaker_trips: self.breaker_trips.get(),
+            breaker_skips: self.breaker_skips.get(),
+            timeouts: self.timeouts.get(),
+            panics_caught: self.panics_caught.get(),
             compile_ns: self.compile_ns.get(),
         }
     }
@@ -131,6 +173,13 @@ impl MetricsSnapshot {
         self.guard_checks += other.guard_checks;
         self.guard_failures += other.guard_failures;
         self.evictions += other.evictions;
+        self.retries += other.retries;
+        self.degraded_calls += other.degraded_calls;
+        self.degraded_compiles += other.degraded_compiles;
+        self.breaker_trips += other.breaker_trips;
+        self.breaker_skips += other.breaker_skips;
+        self.timeouts += other.timeouts;
+        self.panics_caught += other.panics_caught;
         self.compile_ns += other.compile_ns;
     }
 
@@ -138,7 +187,7 @@ impl MetricsSnapshot {
     /// serve `metrics.json` has the exact keys a session dump has.
     pub fn to_json_with(&self, extra: Option<(&str, &str)>) -> String {
         let mut out = format!(
-            "{{\n  \"captures\": {},\n  \"cache_hits\": {},\n  \"cache_misses\": {},\n  \"graph_breaks\": {},\n  \"fallbacks\": {},\n  \"guard_checks\": {},\n  \"guard_failures\": {},\n  \"evictions\": {},\n  \"compile_ns\": {}",
+            "{{\n  \"captures\": {},\n  \"cache_hits\": {},\n  \"cache_misses\": {},\n  \"graph_breaks\": {},\n  \"fallbacks\": {},\n  \"guard_checks\": {},\n  \"guard_failures\": {},\n  \"evictions\": {},\n  \"retries\": {},\n  \"degraded_calls\": {},\n  \"degraded_compiles\": {},\n  \"breaker_trips\": {},\n  \"breaker_skips\": {},\n  \"timeouts\": {},\n  \"panics_caught\": {},\n  \"compile_ns\": {}",
             self.captures,
             self.cache_hits,
             self.cache_misses,
@@ -147,6 +196,13 @@ impl MetricsSnapshot {
             self.guard_checks,
             self.guard_failures,
             self.evictions,
+            self.retries,
+            self.degraded_calls,
+            self.degraded_compiles,
+            self.breaker_trips,
+            self.breaker_skips,
+            self.timeouts,
+            self.panics_caught,
             self.compile_ns,
         );
         if let Some((key, value)) = extra {
@@ -224,10 +280,45 @@ mod tests {
         let doc = crate::api::json::parse(&m.to_json()).expect("valid json");
         assert_eq!(doc.get("captures").and_then(|v| v.as_f64()), Some(1.0));
         assert_eq!(doc.get("cache_hits").and_then(|v| v.as_f64()), Some(1.0));
-        for key in
-            ["captures", "cache_hits", "cache_misses", "graph_breaks", "fallbacks", "guard_checks", "guard_failures", "evictions", "compile_ns"]
-        {
+        for key in [
+            "captures",
+            "cache_hits",
+            "cache_misses",
+            "graph_breaks",
+            "fallbacks",
+            "guard_checks",
+            "guard_failures",
+            "evictions",
+            "retries",
+            "degraded_calls",
+            "degraded_compiles",
+            "breaker_trips",
+            "breaker_skips",
+            "timeouts",
+            "panics_caught",
+            "compile_ns",
+        ] {
             assert!(doc.get(key).is_some(), "missing {}", key);
         }
+    }
+
+    #[test]
+    fn resilience_counters_flow_through_snapshot_and_json() {
+        let m = Metrics::new();
+        Metrics::bump(&m.retries);
+        Metrics::bump(&m.retries);
+        Metrics::bump(&m.degraded_calls);
+        Metrics::bump(&m.breaker_trips);
+        Metrics::bump(&m.timeouts);
+        Metrics::bump(&m.panics_caught);
+        assert!(m.report().contains("retries=2"));
+        assert!(m.report().contains("degraded_calls=1"));
+        let mut snap = m.snapshot();
+        snap.merge(&MetricsSnapshot { breaker_skips: 3, degraded_compiles: 1, ..Default::default() });
+        let doc = crate::api::json::parse(&snap.to_json()).expect("valid json");
+        assert_eq!(doc.get("retries").and_then(|v| v.as_f64()), Some(2.0));
+        assert_eq!(doc.get("degraded_compiles").and_then(|v| v.as_f64()), Some(1.0));
+        assert_eq!(doc.get("breaker_skips").and_then(|v| v.as_f64()), Some(3.0));
+        assert_eq!(doc.get("timeouts").and_then(|v| v.as_f64()), Some(1.0));
     }
 }

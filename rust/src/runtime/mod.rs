@@ -107,8 +107,31 @@ impl<T> Drop for ThreadBound<T> {
 /// directory (default `.depyf_cache` under the working directory).
 pub const CACHE_DIR_ENV: &str = "DEPYF_CACHE_DIR";
 
+/// One indexed record: output arity, `.hlo` file name, and the FNV-1a
+/// checksum of the file's text at write time (`None` for entries written
+/// by older versions — those read back unverified).
+type IndexEntry = (usize, String, Option<u64>);
+
+/// Parse one `index.txt` line: `key\tn_outputs\tfile[\tchecksum_hex]`.
+/// The checksum field is additive — 3-field lines from older caches stay
+/// readable.
+fn parse_index_line(line: &str) -> Option<(String, IndexEntry)> {
+    let mut parts = line.splitn(4, '\t');
+    let (key, n, file) = (parts.next()?, parts.next()?, parts.next()?);
+    let n = n.parse::<usize>().ok()?;
+    let checksum = match parts.next() {
+        Some(hex) => Some(u64::from_str_radix(hex, 16).ok()?),
+        None => None,
+    };
+    Some((key.to_string(), (n, file.to_string(), checksum)))
+}
+
 /// A persistent HLO→artifact cache: `index.txt` maps cache keys to
-/// `n_outputs` and an `.hlo` text file in the same directory.
+/// `n_outputs`, an `.hlo` text file in the same directory, and the file's
+/// content checksum. Reads verify the checksum: a corrupted payload is
+/// quarantined (renamed to `<file>.quarantined`, kept for post-mortem)
+/// and reported as a miss, so the caller recompiles instead of executing
+/// garbage.
 ///
 /// Writes go through **atomic rename**: `put` re-reads the on-disk index,
 /// merges it with the in-memory view, writes the merged snapshot to a
@@ -117,7 +140,7 @@ pub const CACHE_DIR_ENV: &str = "DEPYF_CACHE_DIR";
 /// never a torn line — and concurrent writers merge instead of clobbering.
 pub struct DiskCache {
     dir: PathBuf,
-    index: Mutex<HashMap<String, (usize, String)>>,
+    index: Mutex<HashMap<String, IndexEntry>>,
     /// Distinguishes temp files of concurrent in-process writers.
     writes: Counter,
 }
@@ -133,11 +156,8 @@ impl DiskCache {
         let path = dir.join(Self::INDEX);
         if let Ok(text) = std::fs::read_to_string(&path) {
             for line in text.lines() {
-                let mut parts = line.splitn(3, '\t');
-                if let (Some(key), Some(n), Some(file)) = (parts.next(), parts.next(), parts.next()) {
-                    if let Ok(n) = n.parse::<usize>() {
-                        index.insert(key.to_string(), (n, file.to_string()));
-                    }
+                if let Some((key, entry)) = parse_index_line(line) {
+                    index.insert(key, entry);
                 }
             }
         }
@@ -157,25 +177,36 @@ impl DiskCache {
         self.len() == 0
     }
 
-    /// Look up the HLO text + output arity persisted under `key`.
+    /// Look up the HLO text + output arity persisted under `key`,
+    /// verifying the payload checksum. A corrupted file is quarantined
+    /// and treated as a miss (the caller recompiles, and the next `put`
+    /// repairs the entry). An injected `disk_cache.read` fault is also a
+    /// miss — never an error: cache degradation must not fail compiles.
     pub fn get(&self, key: &str) -> Option<(String, usize)> {
-        let (n, file) =
+        if crate::faults::gate(crate::faults::Site::DiskCacheRead).is_err() {
+            return None;
+        }
+        let (n, file, checksum) =
             self.index.lock().unwrap_or_else(PoisonError::into_inner).get(key).cloned()?;
-        let text = std::fs::read_to_string(self.dir.join(&file)).ok()?;
+        let path = self.dir.join(&file);
+        let text = std::fs::read_to_string(&path).ok()?;
+        if let Some(want) = checksum {
+            if crate::fnv::hash_str(&text) != want {
+                let _ = std::fs::rename(&path, self.dir.join(format!("{}.quarantined", file)));
+                self.index.lock().unwrap_or_else(PoisonError::into_inner).remove(key);
+                return None;
+            }
+        }
         Some((text, n))
     }
 
     /// Read whatever index is on disk right now (for merging).
-    fn read_disk_index(&self) -> HashMap<String, (usize, String)> {
+    fn read_disk_index(&self) -> HashMap<String, IndexEntry> {
         let mut index = HashMap::new();
         if let Ok(text) = std::fs::read_to_string(self.dir.join(Self::INDEX)) {
             for line in text.lines() {
-                let mut parts = line.splitn(3, '\t');
-                if let (Some(key), Some(n), Some(file)) = (parts.next(), parts.next(), parts.next())
-                {
-                    if let Ok(n) = n.parse::<usize>() {
-                        index.insert(key.to_string(), (n, file.to_string()));
-                    }
+                if let Some((key, entry)) = parse_index_line(line) {
+                    index.insert(key, entry);
                 }
             }
         }
@@ -194,6 +225,11 @@ impl DiskCache {
     /// process can at worst drop the other's newest entry — a cold cache
     /// line, never a torn one).
     pub fn put(&self, key: &str, text: &str, n_outputs: usize) {
+        // An injected disk_cache.write fault skips the write — same
+        // contract as a full disk: the cache stays cold, compiles succeed.
+        if crate::faults::gate(crate::faults::Site::DiskCacheWrite).is_err() {
+            return;
+        }
         // File name = sanitized key + FNV of the *raw* key: two distinct
         // keys that sanitize identically (`a:b` vs `a_b`) cannot clobber
         // each other's .hlo file.
@@ -208,9 +244,14 @@ impl DiskCache {
         for (k, v) in index.iter() {
             merged.insert(k.clone(), v.clone());
         }
-        merged.insert(key.to_string(), (n_outputs, file.clone()));
-        let mut lines: Vec<String> =
-            merged.iter().map(|(k, (n, f))| format!("{}\t{}\t{}\n", k, n, f)).collect();
+        merged.insert(key.to_string(), (n_outputs, file.clone(), Some(crate::fnv::hash_str(text))));
+        let mut lines: Vec<String> = merged
+            .iter()
+            .map(|(k, (n, f, c))| match c {
+                Some(c) => format!("{}\t{}\t{}\t{:016x}\n", k, n, f, c),
+                None => format!("{}\t{}\t{}\n", k, n, f),
+            })
+            .collect();
         lines.sort();
         self.writes.bump();
         let tmp = self
@@ -506,6 +547,44 @@ mod tests {
         let c2 = DiskCache::open(&dir).unwrap();
         assert_eq!(c2.len(), 2);
         assert_eq!(c2.get("graph:00ff"), Some(("HloModule repaired\n".to_string(), 3)));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Checksum verification: a payload corrupted on disk is quarantined
+    /// (kept as `<file>.quarantined` for post-mortem), reported as a miss,
+    /// and repaired by the next `put`. Legacy 3-field index lines (no
+    /// checksum) still read back unverified.
+    #[test]
+    fn disk_cache_quarantines_corrupt_entries_and_recovers() {
+        let dir = tmp("quarantine");
+        let _ = std::fs::remove_dir_all(&dir);
+        let c = DiskCache::open(&dir).unwrap();
+        c.put("graph:aa", "HloModule good\n", 1);
+        assert!(c.get("graph:aa").is_some());
+        // Corrupt the payload behind the index's back.
+        let hlo: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().ends_with(".hlo"))
+            .collect();
+        assert_eq!(hlo.len(), 1);
+        std::fs::write(hlo[0].path(), "HloModule tampered\n").unwrap();
+        // A fresh handle (checksum loaded from the index) detects it.
+        let c2 = DiskCache::open(&dir).unwrap();
+        assert_eq!(c2.get("graph:aa"), None, "corrupt entry must read as a miss");
+        let quarantined = format!("{}.quarantined", hlo[0].file_name().to_string_lossy());
+        assert!(dir.join(&quarantined).exists(), "payload kept for post-mortem");
+        assert!(!hlo[0].path().exists(), "corrupt file moved out of the live cache");
+        // Recompile-and-put repairs the entry.
+        c2.put("graph:aa", "HloModule recompiled\n", 1);
+        assert_eq!(c2.get("graph:aa"), Some(("HloModule recompiled\n".to_string(), 1)));
+        // Legacy line without a checksum field reads back unverified.
+        let legacy = dir.join("legacy.hlo");
+        std::fs::write(&legacy, "HloModule legacy\n").unwrap();
+        let index = std::fs::read_to_string(dir.join("index.txt")).unwrap();
+        std::fs::write(dir.join("index.txt"), format!("{}graph:old\t2\tlegacy.hlo\n", index)).unwrap();
+        let c3 = DiskCache::open(&dir).unwrap();
+        assert_eq!(c3.get("graph:old"), Some(("HloModule legacy\n".to_string(), 2)));
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -12,6 +12,7 @@
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex, PoisonError};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use crate::api::DepyfError;
 use crate::tensor::Tensor;
@@ -62,6 +63,41 @@ impl CallFuture {
                 SlotState::Done(result) => return result,
                 SlotState::Pending => {
                     guard = self.slot.ready.wait(guard).unwrap_or_else(PoisonError::into_inner);
+                }
+            }
+        }
+    }
+
+    /// Block for at most `deadline`, consuming the future either way.
+    ///
+    /// On timeout the call is *abandoned*, not cancelled: the worker keeps
+    /// running and its eventual result is discarded when the slot's last
+    /// `Arc` drops. The waiter gets `DepyfError::Timeout` and can degrade
+    /// or re-dispatch without deadlocking the worker thread.
+    pub fn wait_timeout(self, deadline: Duration) -> Result<Vec<Tensor>, DepyfError> {
+        let start = Instant::now();
+        let mut guard = self.slot.state.lock().unwrap_or_else(PoisonError::into_inner);
+        loop {
+            match std::mem::replace(&mut *guard, SlotState::Pending) {
+                SlotState::Done(result) => return result,
+                SlotState::Pending => {
+                    // Re-derive the remaining budget each lap so spurious
+                    // wakeups can't extend the overall deadline.
+                    let remaining = match deadline.checked_sub(start.elapsed()) {
+                        Some(r) if r > Duration::ZERO => r,
+                        _ => {
+                            return Err(DepyfError::Timeout(format!(
+                                "async call exceeded its {:?} deadline; call abandoned",
+                                deadline
+                            )))
+                        }
+                    };
+                    let (g, _timed_out) = self
+                        .slot
+                        .ready
+                        .wait_timeout(guard, remaining)
+                        .unwrap_or_else(PoisonError::into_inner);
+                    guard = g;
                 }
             }
         }
@@ -137,7 +173,15 @@ impl WorkerPool {
 
     /// Queue a job. Silently dropped if the pool is already shutting down
     /// (the job's promise then reports the shutdown to its waiter).
+    ///
+    /// The `worker_pool.submit` fault site fires here: an injected error
+    /// drops the job instead of queuing it, which resolves the job's
+    /// promise with the drop error — the waiter sees a failed call, never
+    /// a hang.
     pub fn submit(&self, job: Job) {
+        if crate::faults::gate(crate::faults::Site::WorkerSubmit).is_err() {
+            return; // job drops here; its promise reports the failure
+        }
         if let Some(sender) = &self.sender {
             let _ = sender.send(job);
         }
@@ -212,5 +256,33 @@ mod tests {
     fn zero_size_pool_rounds_up_to_one_worker() {
         let pool = WorkerPool::new(0);
         assert_eq!(pool.size(), 1);
+    }
+
+    #[test]
+    fn wait_timeout_returns_result_when_worker_is_fast() {
+        let (promise, future) = call_channel();
+        let t = std::thread::spawn(move || {
+            promise.fulfill(Ok(vec![Tensor::scalar(3.0)]));
+        });
+        let out = future.wait_timeout(Duration::from_secs(5)).expect("fast worker beats deadline");
+        assert_eq!(out[0].item(), 3.0);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn wait_timeout_abandons_slow_call_without_blocking_worker() {
+        let (promise, future) = call_channel();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(200));
+            promise.fulfill(Ok(vec![Tensor::scalar(9.0)])); // must not hang or panic
+        });
+        let start = Instant::now();
+        let err = future
+            .wait_timeout(Duration::from_millis(20))
+            .expect_err("slow call must time out");
+        assert!(start.elapsed() < Duration::from_millis(180), "returned before the worker finished");
+        assert_eq!(err.layer(), "timeout");
+        assert!(format!("{}", err).contains("deadline"), "{}", err);
+        t.join().unwrap(); // worker still completes cleanly after abandonment
     }
 }

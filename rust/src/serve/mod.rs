@@ -166,12 +166,15 @@ pub struct ServeOptions {
     pub threads: usize,
     /// Passes over the model corpus per thread.
     pub iters: usize,
-    /// Backend name; supports the `recording:<inner>` and `async:<inner>`
-    /// wrapper prefixes. Runtime-requiring backends (xla) are rejected:
-    /// the PJRT client is thread-confined.
+    /// Backend name; supports the `recording:<inner>`, `async:<inner>`,
+    /// and `resilient:<inner>` wrapper prefixes. Runtime-requiring
+    /// backends (xla) are rejected: the PJRT client is thread-confined.
     pub backend: String,
     /// Where `metrics.json` and `BENCH_serve.json` land.
     pub out_dir: PathBuf,
+    /// Per-call deadline (`--deadline-ms`): calls exceeding it are
+    /// abandoned and served by the eager fallback.
+    pub deadline_ms: Option<u64>,
 }
 
 /// What one serving thread did.
@@ -181,6 +184,9 @@ struct ThreadReport {
     failures: Vec<String>,
     latencies_ms: Vec<f64>,
     metrics: MetricsSnapshot,
+    /// True for the synthesized report of a thread that panicked clean
+    /// through `run_worker` (never for a thread that finished).
+    died: bool,
 }
 
 /// Aggregated result of one serve run (plus, from [`run_serve`], the
@@ -204,6 +210,9 @@ pub struct ServeReport {
     pub p99_ms: f64,
     pub module_cache_hits: u64,
     pub module_cache_misses: u64,
+    /// Serving threads that panicked clean through `run_worker` (anything
+    /// here makes [`run_serve`] exit non-zero).
+    pub dead_threads: u64,
     /// Merged across every thread's sessions.
     pub metrics: MetricsSnapshot,
     /// Filled by [`run_serve`]: the 1-thread reference throughput and the
@@ -235,6 +244,17 @@ impl ServeReport {
             self.metrics.fallbacks,
             self.metrics.evictions,
         );
+        out.push_str(&format!(
+            "  resilience: retries={} degraded_calls={} degraded_compiles={} breaker_trips={} breaker_skips={} timeouts={} panics_caught={} dead_threads={}\n",
+            self.metrics.retries,
+            self.metrics.degraded_calls,
+            self.metrics.degraded_compiles,
+            self.metrics.breaker_trips,
+            self.metrics.breaker_skips,
+            self.metrics.timeouts,
+            self.metrics.panics_caught,
+            self.dead_threads,
+        ));
         if let (Some(base), Some(speedup)) = (self.baseline_throughput, self.speedup) {
             out.push_str(&format!(
                 "  baseline(1 thread)={:.1} runs/s speedup={:.2}x\n",
@@ -250,12 +270,13 @@ impl ServeReport {
     /// The `"serve"` object inlined into the merged `metrics.json`.
     fn to_serve_json(&self) -> String {
         format!(
-            "{{\"backend\": \"{}\", \"threads\": {}, \"iters\": {}, \"case_runs\": {}, \"errors\": {}, \"throughput_runs_per_s\": {:.3}, \"p50_ms\": {:.3}, \"p99_ms\": {:.3}, \"module_cache_hits\": {}, \"module_cache_misses\": {}}}",
+            "{{\"backend\": \"{}\", \"threads\": {}, \"iters\": {}, \"case_runs\": {}, \"errors\": {}, \"dead_threads\": {}, \"throughput_runs_per_s\": {:.3}, \"p50_ms\": {:.3}, \"p99_ms\": {:.3}, \"module_cache_hits\": {}, \"module_cache_misses\": {}}}",
             crate::api::json::escape(&self.backend),
             self.threads,
             self.iters,
             self.case_runs,
             self.errors,
+            self.dead_threads,
             self.throughput,
             self.p50_ms,
             self.p99_ms,
@@ -315,19 +336,26 @@ fn percentile(sorted_ms: &[f64], p: f64) -> f64 {
 /// Run one serving thread: `iters` passes over the corpus, a fresh dynamo
 /// session per case run (the cross-run sharing is the module cache inside
 /// `backend`), output checked against the reference.
-fn run_worker(backend: Arc<dyn Backend>, corpus: Arc<Vec<WorkItem>>, iters: usize) -> ThreadReport {
+fn run_worker(
+    backend: Arc<dyn Backend>,
+    corpus: Arc<Vec<WorkItem>>,
+    iters: usize,
+    deadline_ms: Option<u64>,
+) -> ThreadReport {
     let mut report = ThreadReport {
         case_runs: 0,
         errors: 0,
         failures: Vec::new(),
         latencies_ms: Vec::new(),
         metrics: MetricsSnapshot::default(),
+        died: false,
     };
     for _ in 0..iters {
         for item in corpus.iter() {
             let t0 = Instant::now();
             let dynamo = Dynamo::new(DynamoConfig {
                 backend: Arc::clone(&backend),
+                deadline_ms,
                 ..DynamoConfig::default()
             });
             let mut vm = Vm::new();
@@ -335,7 +363,9 @@ fn run_worker(backend: Arc<dyn Backend>, corpus: Arc<Vec<WorkItem>>, iters: usiz
             let outcome = vm.exec_source(&item.source, IsaVersion::V310);
             report.latencies_ms.push(t0.elapsed().as_secs_f64() * 1e3);
             report.case_runs += 1;
-            report.metrics.merge(&dynamo.metrics.snapshot());
+            // metrics_snapshot (not metrics.snapshot): folds the session's
+            // call-level retry/degrade/timeout counters into the snapshot.
+            report.metrics.merge(&dynamo.metrics_snapshot());
             match outcome {
                 Err(e) => {
                     report.errors += 1;
@@ -370,15 +400,36 @@ pub fn serve_once(
     backend_name: &str,
     limit: usize,
 ) -> Result<ServeReport, DepyfError> {
-    let inner = resolve_serve_backend(backend_name)?;
+    serve_once_with(threads, iters, backend_name, limit, None)
+}
+
+/// [`serve_once`] with a per-call deadline. Every serve run wraps the
+/// inner backend in a [`ResilientBackend`] (under the module cache, so
+/// cache hits never touch the breaker); an explicit `resilient:` prefix
+/// is stripped first so the wrap happens exactly once.
+pub fn serve_once_with(
+    threads: usize,
+    iters: usize,
+    backend_name: &str,
+    limit: usize,
+    deadline_ms: Option<u64>,
+) -> Result<ServeReport, DepyfError> {
+    let inner_name = match backend_name {
+        "resilient" => "eager",
+        other => other.strip_prefix("resilient:").unwrap_or(other),
+    };
+    let inner = resolve_serve_backend(inner_name)?;
     if inner.requires_runtime() {
         return Err(DepyfError::Backend(format!(
             "serve: backend '{}' requires the PJRT runtime, which is thread-confined",
             backend_name
         )));
     }
+    let resilient = Arc::new(crate::backend::ResilientBackend::new(inner));
+    let rstats = resilient.stats();
     let cache = Arc::new(ModuleCache::new());
-    let backend: Arc<dyn Backend> = Arc::new(CachingBackend::new(inner, Arc::clone(&cache)));
+    let backend: Arc<dyn Backend> =
+        Arc::new(CachingBackend::new(resilient as Arc<dyn Backend>, Arc::clone(&cache)));
     let corpus = Arc::new(build_corpus(limit)?);
     if corpus.is_empty() {
         return Err(DepyfError::Backend("serve: empty corpus".into()));
@@ -386,7 +437,7 @@ pub fn serve_once(
 
     let t0 = Instant::now();
     let reports: Vec<ThreadReport> = if threads <= 1 {
-        vec![run_worker(backend, corpus, iters)]
+        vec![run_worker(backend, corpus, iters, deadline_ms)]
     } else {
         let handles: Vec<_> = (0..threads)
             .map(|i| {
@@ -394,13 +445,30 @@ pub fn serve_once(
                 let corpus = Arc::clone(&corpus);
                 std::thread::Builder::new()
                     .name(format!("depyf-serve-{}", i))
-                    .spawn(move || run_worker(backend, corpus, iters))
+                    .spawn(move || run_worker(backend, corpus, iters, deadline_ms))
                     .expect("spawn serve thread")
             })
             .collect();
+        // A panicked worker becomes a synthesized failure report instead
+        // of killing the whole serve run: the other threads' results (and
+        // the fact that one thread died) still reach the exit summary.
         handles
             .into_iter()
-            .map(|h| h.join().expect("serve thread panicked"))
+            .enumerate()
+            .map(|(i, h)| match h.join() {
+                Ok(report) => report,
+                Err(payload) => {
+                    let e = DepyfError::from_panic(&format!("serve thread {}", i), payload);
+                    ThreadReport {
+                        case_runs: 0,
+                        errors: 1,
+                        failures: vec![format!("{}", e)],
+                        latencies_ms: Vec::new(),
+                        metrics: MetricsSnapshot::default(),
+                        died: true,
+                    }
+                }
+            })
             .collect()
     };
     let elapsed_ms = t0.elapsed().as_secs_f64() * 1e3;
@@ -409,14 +477,22 @@ pub fn serve_once(
     let mut latencies = Vec::new();
     let mut case_runs = 0u64;
     let mut errors = 0u64;
+    let mut dead_threads = 0u64;
     let mut failures = Vec::new();
     for r in reports {
         merged.merge(&r.metrics);
         latencies.extend(r.latencies_ms);
         case_runs += r.case_runs;
         errors += r.errors;
+        dead_threads += r.died as u64;
         failures.extend(r.failures);
     }
+    // Compile-level resilience lives in the shared backend wrapper, not in
+    // any one thread's session metrics: fold it in once, here.
+    merged.retries += rstats.retries();
+    merged.breaker_trips += rstats.trips();
+    merged.breaker_skips += rstats.skips();
+    merged.panics_caught += rstats.panics();
     failures.truncate(8);
     latencies.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
     Ok(ServeReport {
@@ -432,6 +508,7 @@ pub fn serve_once(
         p99_ms: percentile(&latencies, 0.99),
         module_cache_hits: cache.hits(),
         module_cache_misses: cache.misses(),
+        dead_threads,
         metrics: merged,
         baseline_throughput: None,
         speedup: None,
@@ -444,11 +521,11 @@ pub fn serve_once(
 /// (throughput vs thread count) into `opts.out_dir`, and fail hard if any
 /// case run diverged from the single-thread reference.
 pub fn run_serve(opts: &ServeOptions) -> Result<ServeReport, DepyfError> {
-    let baseline = serve_once(1, opts.iters, &opts.backend, usize::MAX)?;
+    let baseline = serve_once_with(1, opts.iters, &opts.backend, usize::MAX, opts.deadline_ms)?;
     let mut report = if opts.threads == 1 {
         baseline.clone()
     } else {
-        serve_once(opts.threads, opts.iters, &opts.backend, usize::MAX)?
+        serve_once_with(opts.threads, opts.iters, &opts.backend, usize::MAX, opts.deadline_ms)?
     };
     report.baseline_throughput = Some(baseline.throughput);
     report.speedup = Some(if baseline.throughput > 0.0 {
@@ -472,6 +549,16 @@ pub fn run_serve(opts: &ServeOptions) -> Result<ServeReport, DepyfError> {
         (format!("speedup_1_to_{}", report.threads), speedup, "x"),
         (format!("p50_t{}", report.threads), report.p50_ms, "ms"),
         (format!("p99_t{}", report.threads), report.p99_ms, "ms"),
+        ("retries".to_string(), report.metrics.retries as f64, "count"),
+        (
+            "degraded".to_string(),
+            (report.metrics.degraded_calls + report.metrics.degraded_compiles) as f64,
+            "count",
+        ),
+        ("breaker_trips".to_string(), report.metrics.breaker_trips as f64, "count"),
+        ("timeouts".to_string(), report.metrics.timeouts as f64, "count"),
+        ("panics_caught".to_string(), report.metrics.panics_caught as f64, "count"),
+        ("dead_threads".to_string(), report.dead_threads as f64, "count"),
     ];
     let body: Vec<String> = entries
         .iter()
@@ -489,6 +576,14 @@ pub fn run_serve(opts: &ServeOptions) -> Result<ServeReport, DepyfError> {
     std::fs::write(&bench_path, bench_json)
         .map_err(|e| DepyfError::io(bench_path.display(), e))?;
 
+    if report.dead_threads > 0 {
+        return Err(DepyfError::Backend(format!(
+            "serve: {} of {} serving threads died ({})",
+            report.dead_threads,
+            report.threads,
+            report.failures.join(" | ")
+        )));
+    }
     if report.errors > 0 {
         return Err(DepyfError::Backend(format!(
             "serve: {} of {} case runs failed or diverged from the single-thread reference ({})",
@@ -570,6 +665,18 @@ mod tests {
         assert!(text.contains("backend=async:eager"), "{}", text);
         let json = crate::api::json::parse(&report.to_serve_json()).expect("valid json");
         assert_eq!(json.get("threads").and_then(|v| v.as_f64()), Some(2.0));
+    }
+
+    #[test]
+    fn serve_accepts_resilient_prefix_and_reports_resilience_line() {
+        let report = serve_once(2, 1, "resilient:eager", 2).expect("serve");
+        assert_eq!(report.errors, 0, "failures: {:?}", report.failures);
+        assert_eq!(report.dead_threads, 0);
+        let text = report.render();
+        assert!(text.contains("backend=resilient:eager"), "{}", text);
+        assert!(text.contains("resilience: retries=0"), "{}", text);
+        let json = crate::api::json::parse(&report.to_serve_json()).expect("valid json");
+        assert_eq!(json.get("dead_threads").and_then(|v| v.as_f64()), Some(0.0));
     }
 
     #[test]

@@ -16,6 +16,7 @@
 //! difference is that tensors cross stage boundaries as owned `Tensor`s
 //! (cheap `Arc`-data clones) instead of call-local `Rc`s.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::rc::Rc;
 use std::sync::{mpsc, Arc, Mutex, PoisonError};
 use std::thread::JoinHandle;
@@ -133,7 +134,7 @@ impl PipelinedShardedModule {
             let rx = prev_rx;
             let handle = std::thread::Builder::new()
                 .name(format!("depyf-stage-{}", k))
-                .spawn(move || stage_loop(rx, part, module, next_tx, graph))
+                .spawn(move || stage_loop(rx, k, part, module, next_tx, graph))
                 .expect("spawn pipeline stage");
             stages.push(handle);
             prev_rx = match next_rx {
@@ -219,25 +220,38 @@ fn collect_outputs(graph: &Graph, env: &[Option<Tensor>]) -> Result<Vec<Tensor>,
 
 /// Body of one stage thread: receive a packet, run this partition over
 /// it, forward (or resolve, on the last stage). Any error resolves the
-/// packet's promise immediately — later stages never see it.
+/// packet's promise immediately — later stages never see it. The per-
+/// packet work (including the `pipeline.stage` fault site) runs under
+/// `catch_unwind`: a panicking partition fails *that packet*, not the
+/// stage thread — a dead stage would deadlock every later in-flight call.
 fn stage_loop(
     rx: mpsc::Receiver<Pkt>,
+    stage: usize,
     part: Partition,
     module: Arc<dyn CompiledModule>,
     next: Option<mpsc::Sender<Pkt>>,
     graph: Arc<Graph>,
 ) {
     while let Ok(mut pkt) = rx.recv() {
-        let gathered: Result<Vec<Rc<Tensor>>, DepyfError> = part
-            .inputs
-            .iter()
-            .map(|&id| {
-                pkt.env[id].clone().map(Rc::new).ok_or_else(|| {
-                    DepyfError::Backend(format!("pipeline: partition input {} unevaluated", id))
+        // AssertUnwindSafe: the closure only reads pkt.env and shared
+        // module state, and every lock below recovers from poison.
+        let ran = catch_unwind(AssertUnwindSafe(|| {
+            crate::faults::gate(crate::faults::Site::PipelineStage)?;
+            let ins: Vec<Rc<Tensor>> = part
+                .inputs
+                .iter()
+                .map(|&id| {
+                    pkt.env[id].clone().map(Rc::new).ok_or_else(|| {
+                        DepyfError::Backend(format!("pipeline: partition input {} unevaluated", id))
+                    })
                 })
-            })
-            .collect();
-        match gathered.and_then(|ins| module.call(&ins)) {
+                .collect::<Result<_, _>>()?;
+            module.call(&ins)
+        }));
+        let outcome = ran.unwrap_or_else(|payload| {
+            Err(DepyfError::from_panic(&format!("pipeline stage {}", stage), payload))
+        });
+        match outcome {
             Ok(outs) if outs.len() == part.outputs.len() => {
                 for (&id, t) in part.outputs.iter().zip(outs.into_iter()) {
                     pkt.env[id] = Some(t);

@@ -1,0 +1,405 @@
+//! Chaos conformance: seeded fault injection over the serving stack.
+//!
+//! Every round installs a deterministic [`depyf::faults::FaultPlan`]
+//! (exactly what `DEPYF_FAULTS=<spec>` would install), drives the table1
+//! corpus through `depyf serve`'s engine — [`serve_once_with`], 4
+//! concurrent threads against one shared module cache — and then
+//! *reconciles* the injected-fault counters against the resilience
+//! counters they must have produced:
+//!
+//! * `module.call` error/panic rounds:  `fired == retries + degraded_calls`
+//! * compile (`backend.plan`/`lower`) rounds:
+//!   `fired + breaker_skips == retries + degraded_compiles`
+//! * delay-under-deadline rounds:       `fired == timeouts == degraded_calls`
+//! * `worker_pool.submit` rounds:       `fired == degraded_calls` (no retry:
+//!   a dropped job is a structural failure)
+//!
+//! Throughout, `report.errors` must stay 0 — every degraded call is served
+//! by the eager fallback, which is bitwise-equal to the single-thread
+//! reference the corpus was built against — and no thread may die and no
+//! lock may stay poisoned (each panic round is followed by a clean serve
+//! in the same process).
+//!
+//! The global fault plan is process-wide, so every test here serializes
+//! on one mutex; the in-crate unit tests never install an *armed* global
+//! plan (see `src/faults/mod.rs`), which keeps the two binaries from
+//! interfering even under `cargo test`'s parallelism.
+//!
+//! On failure a round dumps a repro bundle — the exact fault spec, whose
+//! embedded seed is the entire source of randomness — into
+//! `$DEPYF_CHAOS_OUT` (default `chaos_failures/`); CI uploads that
+//! directory. Reproduce locally with
+//! `cargo test -q --test chaos <round_test_name>`.
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock, PoisonError};
+use std::time::Duration;
+
+use depyf::api::{
+    lookup_backend, register_backend, Backend, CompilePlan, CompileRequest, CompiledModule,
+    DepyfError, EagerBackend,
+};
+use depyf::faults::{self, FaultPlan, Site};
+use depyf::runtime::DiskCache;
+use depyf::serve::{serve_once_with, WorkerPool};
+
+/// Armed fault plans are process-global: chaos rounds must never overlap.
+/// Poison-recovering so one failed round cannot abort the rest.
+fn chaos_lock() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(())).lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Run one chaos round; on failure, write a repro bundle (round name, the
+/// exact `DEPYF_FAULTS` spec, the failure text) into `$DEPYF_CHAOS_OUT`
+/// before re-raising the panic.
+fn round<T>(name: &str, spec: &str, f: impl FnOnce() -> T) -> T {
+    match catch_unwind(AssertUnwindSafe(f)) {
+        Ok(v) => v,
+        Err(payload) => {
+            let msg = payload
+                .downcast_ref::<String>()
+                .map(String::as_str)
+                .or_else(|| payload.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic payload>");
+            let dir = std::env::var("DEPYF_CHAOS_OUT")
+                .map(std::path::PathBuf::from)
+                .unwrap_or_else(|_| std::path::PathBuf::from("chaos_failures"));
+            if std::fs::create_dir_all(&dir).is_ok() {
+                let _ = std::fs::write(
+                    dir.join(format!("{}.txt", name)),
+                    format!(
+                        "chaos round: {}\nfault spec:  DEPYF_FAULTS=\"{}\"\nfailure:     {}\n\n\
+                         The seed inside the spec is the entire source of randomness: the same\n\
+                         spec fires the same faults. Reproduce with\n\
+                           cargo test -q --test chaos {}\n",
+                        name, spec, msg, name
+                    ),
+                );
+            }
+            resume_unwind(payload)
+        }
+    }
+}
+
+fn install(spec: &str) -> faults::FaultGuard {
+    faults::install(FaultPlan::parse(spec).expect("chaos spec parses"))
+}
+
+/// Full-rate `module.call` errors: every dispatch fails, is retried once
+/// (injected faults are transient), then degrades to the eager fallback —
+/// which must be bitwise-equal to the single-thread reference.
+#[test]
+fn module_call_errors_degrade_to_bitwise_correct_eager() {
+    let _serial = chaos_lock();
+    let spec = "seed=11;module.call=error";
+    round("module_call_error", spec, || {
+        let guard = install(spec);
+        let report = serve_once_with(4, 2, "eager", 3, None).expect("serve");
+        let st = faults::stats(Site::ModuleCall);
+        drop(guard);
+        assert_eq!(report.errors, 0, "degraded calls must stay bitwise-correct: {:?}", report.failures);
+        assert_eq!(report.dead_threads, 0);
+        assert!(st.fired > 0, "full-rate plan must fire (hits {})", st.hits);
+        let m = &report.metrics;
+        assert!(m.retries > 0 && m.degraded_calls > 0, "retries {} degraded {}", m.retries, m.degraded_calls);
+        assert_eq!(
+            st.fired,
+            m.retries + m.degraded_calls,
+            "every injected fault is either retried or degraded (hits {})",
+            st.hits
+        );
+        assert_eq!(m.timeouts, 0);
+        assert_eq!(m.panics_caught, 0, "error faults do not unwind");
+    });
+}
+
+/// The acceptance-criteria round: `module.call` panics in some threads
+/// must never fail a request on any thread, never kill a serving thread,
+/// and never leave a lock poisoned — proven by a clean serve in the same
+/// process immediately after.
+#[test]
+fn module_call_panics_never_fail_other_threads_or_poison_locks() {
+    let _serial = chaos_lock();
+    let spec = "seed=23;module.call=panic@1/2";
+    round("module_call_panic", spec, || {
+        let guard = install(spec);
+        let report = serve_once_with(4, 2, "eager", 3, None).expect("serve");
+        let st = faults::stats(Site::ModuleCall);
+        drop(guard);
+        assert_eq!(
+            report.errors, 0,
+            "a panicking call in one thread must not fail any request: {:?}",
+            report.failures
+        );
+        assert_eq!(report.dead_threads, 0, "panics are caught at the dispatch layer; threads never die");
+        assert!(st.fired > 0, "plan fired nothing over {} hits", st.hits);
+        let m = &report.metrics;
+        assert_eq!(m.panics_caught, st.fired, "every injected panic is caught exactly once");
+        assert_eq!(st.fired, m.retries + m.degraded_calls, "hits {}", st.hits);
+
+        // Same process, plan uninstalled: serving is clean and every
+        // resilience counter stays at zero — nothing was left poisoned,
+        // no breaker stays tripped, no fault machinery stays engaged.
+        let clean = serve_once_with(4, 1, "eager", 3, None).expect("clean serve after panic round");
+        assert_eq!(clean.errors, 0, "{:?}", clean.failures);
+        assert_eq!(clean.dead_threads, 0);
+        let c = &clean.metrics;
+        assert_eq!(
+            (c.retries, c.degraded_calls, c.degraded_compiles, c.breaker_trips, c.timeouts, c.panics_caught),
+            (0, 0, 0, 0, 0, 0),
+            "no resilience counter moves once the plan is uninstalled"
+        );
+    });
+}
+
+/// A full compiler outage (`backend.plan` always fails): compiles retry,
+/// the breaker trips, later compiles are skipped fail-fast, and *every*
+/// case is still answered correctly by the eager fallback.
+#[test]
+fn full_compile_outage_trips_the_breaker_and_serves_eager() {
+    let _serial = chaos_lock();
+    let spec = "seed=5;backend.plan=error";
+    round("backend_plan_outage", spec, || {
+        let guard = install(spec);
+        let report = serve_once_with(4, 2, "eager", 2, None).expect("serve");
+        let st = faults::stats(Site::BackendPlan);
+        drop(guard);
+        assert_eq!(
+            report.errors, 0,
+            "an unavailable compiler degrades to eager; it never serves wrong answers: {:?}",
+            report.failures
+        );
+        let m = &report.metrics;
+        assert!(m.degraded_compiles > 0, "every compile must degrade");
+        assert!(m.retries > 0, "injected plan faults are transient and retried first");
+        assert!(m.breaker_trips > 0, "consecutive failures must trip the breaker");
+        // Reconciliation: every compile that reached the backend ends a
+        // fired-fault retry chain; every breaker skip degrades a compile
+        // *without* a fired fault.
+        assert_eq!(
+            st.fired + m.breaker_skips,
+            m.retries + m.degraded_compiles,
+            "fired {} skips {} retries {} degraded {} (hits {})",
+            st.fired, m.breaker_skips, m.retries, m.degraded_compiles, st.hits
+        );
+        assert_eq!(m.degraded_calls, 0, "a compile-level outage never reaches the call path");
+    });
+}
+
+/// Same reconciliation for the `backend.lower` site (shared-cache misses
+/// route through it; a permanently failing lower keeps the module cache
+/// cold, so the gate stays hot).
+#[test]
+fn backend_lower_faults_reconcile_with_compile_counters() {
+    let _serial = chaos_lock();
+    let spec = "seed=9;backend.lower=error";
+    round("backend_lower_outage", spec, || {
+        let guard = install(spec);
+        let report = serve_once_with(4, 1, "eager", 2, None).expect("serve");
+        let st = faults::stats(Site::BackendLower);
+        drop(guard);
+        assert_eq!(report.errors, 0, "{:?}", report.failures);
+        let m = &report.metrics;
+        assert!(st.fired > 0, "lower must be exercised (hits {})", st.hits);
+        assert!(m.degraded_compiles > 0);
+        assert_eq!(
+            st.fired + m.breaker_skips,
+            m.retries + m.degraded_compiles,
+            "fired {} skips {} retries {} degraded {}",
+            st.fired, m.breaker_skips, m.retries, m.degraded_compiles
+        );
+    });
+}
+
+/// Injected 600ms stalls against a 120ms deadline: every stalled call is
+/// abandoned (never retried — the module is presumed stuck) and served by
+/// the eager fallback; the stage/worker threads never deadlock.
+#[test]
+fn deadline_abandons_stuck_calls_and_serves_the_fallback() {
+    let _serial = chaos_lock();
+    let spec = "seed=31;module.call=delay:600";
+    round("deadline_delay", spec, || {
+        let guard = install(spec);
+        let report = serve_once_with(2, 1, "eager", 1, Some(120)).expect("serve");
+        // Abandoned watchdog threads may still be inside the injected
+        // sleep; wait them out so every fired delay is on the books.
+        std::thread::sleep(Duration::from_millis(800));
+        let st = faults::stats(Site::ModuleCall);
+        drop(guard);
+        assert_eq!(report.errors, 0, "{:?}", report.failures);
+        let m = &report.metrics;
+        assert!(m.timeouts > 0, "600ms injected delays must overrun a 120ms deadline");
+        assert_eq!(m.timeouts, st.fired, "every fired delay times out; nothing else does");
+        assert_eq!(m.degraded_calls, m.timeouts, "every abandoned call is served by the fallback");
+        assert_eq!(m.retries, 0, "timed-out calls are abandoned, never retried");
+    });
+}
+
+/// `worker_pool.submit` faults drop the job before it is queued; the
+/// call's future resolves with the drop error (never a hang) and the call
+/// degrades — a structural failure, so no retry.
+#[test]
+fn dropped_pool_jobs_degrade_instead_of_hanging() {
+    let _serial = chaos_lock();
+    let spec = "seed=17;worker_pool.submit=error@1/2";
+    round("worker_submit", spec, || {
+        let guard = install(spec);
+        let report = serve_once_with(4, 2, "async:eager", 2, None).expect("serve");
+        let st = faults::stats(Site::WorkerSubmit);
+        drop(guard);
+        assert_eq!(report.errors, 0, "{:?}", report.failures);
+        assert_eq!(report.dead_threads, 0);
+        let m = &report.metrics;
+        assert!(st.hits > 0, "async dispatch must reach the pool");
+        assert!(st.fired > 0, "plan fired nothing over {} hits", st.hits);
+        assert_eq!(
+            st.fired, m.degraded_calls,
+            "each dropped job degrades its call exactly once (retries {})",
+            m.retries
+        );
+        assert_eq!(m.retries, 0, "a dropped job is a structural failure, not retried");
+    });
+}
+
+/// `pipeline.stage` faults — errors *and* panics — fail exactly one
+/// in-flight packet. The stage thread survives (a dead stage would
+/// deadlock every later call), the failed call retries or degrades, and
+/// the counters reconcile like any other call-path fault.
+#[test]
+fn pipeline_stage_faults_fail_one_packet_not_the_pipeline() {
+    let _serial = chaos_lock();
+    for (name, spec) in [
+        ("pipeline_stage_error", "seed=13;pipeline.stage=error@1/3"),
+        ("pipeline_stage_panic", "seed=29;pipeline.stage=panic@1/3"),
+    ] {
+        round(name, spec, || {
+            let guard = install(spec);
+            let report = serve_once_with(4, 2, "pipelined", 2, None).expect("serve");
+            let st = faults::stats(Site::PipelineStage);
+            drop(guard);
+            assert_eq!(report.errors, 0, "{}: {:?}", name, report.failures);
+            assert_eq!(report.dead_threads, 0, "{}", name);
+            let m = &report.metrics;
+            assert!(st.fired > 0, "{}: plan fired nothing over {} hits", name, st.hits);
+            assert_eq!(
+                st.fired,
+                m.retries + m.degraded_calls,
+                "{}: every failed packet is retried or degraded (hits {})",
+                name, st.hits
+            );
+        });
+    }
+}
+
+/// Disk-cache faults degrade to *misses*, never errors: a faulted read
+/// reports a miss while the entry stays intact; a faulted write is
+/// skipped, leaving the cache cold but consistent.
+#[test]
+fn disk_cache_faults_degrade_to_misses_not_failures() {
+    let _serial = chaos_lock();
+    let dir = std::env::temp_dir().join(format!("depyf-chaos-cache-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let cache = DiskCache::open(&dir).expect("open cache");
+    cache.put("graph:k", "HloModule chaos\n", 2);
+    assert_eq!(cache.get("graph:k"), Some(("HloModule chaos\n".to_string(), 2)));
+
+    let read_spec = "seed=3;disk_cache.read=error";
+    round("disk_cache_read", read_spec, || {
+        let guard = install(read_spec);
+        assert_eq!(cache.get("graph:k"), None, "an injected read fault is a miss, not an error");
+        let st = faults::stats(Site::DiskCacheRead);
+        assert_eq!((st.hits, st.fired), (1, 1));
+        drop(guard);
+        assert!(cache.get("graph:k").is_some(), "the entry is intact once the fault clears");
+    });
+
+    let write_spec = "seed=3;disk_cache.write=error";
+    round("disk_cache_write", write_spec, || {
+        let guard = install(write_spec);
+        cache.put("graph:k2", "HloModule dropped\n", 1);
+        let st = faults::stats(Site::DiskCacheWrite);
+        assert_eq!((st.hits, st.fired), (1, 1));
+        drop(guard);
+        assert_eq!(cache.get("graph:k2"), None, "the faulted write was skipped");
+        assert!(cache.get("graph:k").is_some(), "other entries are untouched");
+    });
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A panic raised *while the process-wide backend-registry lock is held*
+/// (`register_backend` evaluates `backend.name()` under the write guard)
+/// must not lock later callers out: every acquisition in the crate
+/// recovers from poison.
+#[test]
+fn poisoned_registry_lock_recovers_for_later_callers() {
+    let _serial = chaos_lock();
+    struct PanickyName;
+    impl Backend for PanickyName {
+        fn name(&self) -> &str {
+            panic!("chaos: name() panics while the registry write lock is held")
+        }
+        fn plan(&self, _req: &CompileRequest) -> Result<CompilePlan, DepyfError> {
+            unreachable!("never registered")
+        }
+        fn lower(
+            &self,
+            _req: &CompileRequest,
+            _plan: &CompilePlan,
+        ) -> Result<Arc<dyn CompiledModule>, DepyfError> {
+            unreachable!("never registered")
+        }
+    }
+    let poisoned = catch_unwind(AssertUnwindSafe(|| register_backend(Arc::new(PanickyName))));
+    assert!(poisoned.is_err(), "name() must panic under the registry lock");
+    // Reads and writes both recover from the poison.
+    assert!(lookup_backend("eager").is_some(), "lookups survive a poisoned registry");
+    register_backend(Arc::new(EagerBackend));
+    assert!(lookup_backend("eager").is_some(), "registration works after recovery too");
+}
+
+/// A job that panics kills one pool worker; the queue mutex (released
+/// before the job runs) is not poisoned, and the surviving worker drains
+/// every later job. Pool teardown joins the dead worker without hanging.
+#[test]
+fn pool_survives_a_panicking_job() {
+    let _serial = chaos_lock();
+    let pool = WorkerPool::new(2);
+    let (tx, rx) = std::sync::mpsc::channel();
+    pool.submit(Box::new(|| panic!("chaos: job panics on a worker thread")));
+    for i in 0..4 {
+        let tx = tx.clone();
+        pool.submit(Box::new(move || {
+            let _ = tx.send(i);
+        }));
+    }
+    let mut got: Vec<i32> = (0..4)
+        .map(|_| rx.recv_timeout(Duration::from_secs(10)).expect("surviving worker drains the queue"))
+        .collect();
+    got.sort_unstable();
+    assert_eq!(got, vec![0, 1, 2, 3]);
+    drop(pool); // joins every worker, including the dead one — must not hang
+}
+
+/// The reproducibility contract behind the repro bundles: with one
+/// serving thread (no scheduling nondeterminism), the same spec produces
+/// the same hits, the same fired faults and the same counter movements.
+#[test]
+fn same_seed_fires_the_same_faults() {
+    let _serial = chaos_lock();
+    let spec = "seed=47;module.call=error@1/4";
+    round("determinism", spec, || {
+        let mut runs = Vec::new();
+        for _ in 0..2 {
+            let guard = install(spec);
+            let report = serve_once_with(1, 2, "eager", 2, None).expect("serve");
+            let st = faults::stats(Site::ModuleCall);
+            drop(guard);
+            assert_eq!(report.errors, 0, "{:?}", report.failures);
+            let m = &report.metrics;
+            assert_eq!(st.fired, m.retries + m.degraded_calls, "hits {}", st.hits);
+            runs.push((st.hits, st.fired, m.retries, m.degraded_calls));
+        }
+        assert_eq!(runs[0], runs[1], "single-threaded chaos rounds replay bit-identically from the seed");
+    });
+}

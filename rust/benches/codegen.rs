@@ -1,0 +1,209 @@
+//! Codegen-backend benches: what compiling an [`ExecPlan`] into a flat
+//! loop program buys over interpreting it.
+//!
+//! * `gelu_chain_*` — a pure elementwise gelu-residual chain (the
+//!   register-allocation showcase: every intermediate lives in a reused
+//!   slot, every op is a specialized inner loop). Acceptance gate:
+//!   codegen `>= 1.5x` over the interpreted eager ExecPlan.
+//! * `matmul_epilogue_*` — `gelu(x @ w + bias)`: the k-blocked matmul
+//!   kernel with the bias/gelu epilogue fused into its output tiles.
+//!   Acceptance gate: `>= 1.3x` over the interpreted plan.
+//!
+//! Both cases run the loop program single-threaded and with a 4-worker
+//! row-tiling pool; every timed module is asserted bitwise-equal to the
+//! eager oracle first. The interpreted baseline is the *unfused* eager
+//! ExecPlan — the plain node-by-node interpreter the paper's workflow
+//! starts from — with the fused interpreter recorded alongside for
+//! context.
+//!
+//! Run: `cargo bench --bench codegen`. Merges into `BENCH_hotpath.json`
+//! and additionally writes `BENCH_codegen.json` (override with
+//! `DEPYF_BENCH_CODEGEN_OUT`); `DEPYF_BENCH_QUICK=1` for CI smoke runs,
+//! which skip the flaky-on-shared-runners speedup gates.
+
+mod support;
+
+use std::rc::Rc;
+use std::sync::Arc;
+
+use depyf::api::{Backend, CompileRequest, CompiledModule, EagerBackend, OptLevel};
+use depyf::backend::eager::EagerModule;
+use depyf::codegen::CodegenBackend;
+use depyf::graph::{Graph, OpKind};
+use depyf::tensor::{Rng, Tensor};
+
+fn out_path() -> String {
+    std::env::var("DEPYF_BENCH_CODEGEN_OUT").unwrap_or_else(|_| "BENCH_codegen.json".into())
+}
+
+/// `blocks` of `y = gelu(x * c + bias) + x` — pure elementwise work.
+fn gelu_chain(rows: usize, d: usize, blocks: usize) -> Graph {
+    let mut g = Graph::new("codegen_gelu_chain");
+    let x = g.placeholder("x", &[rows, d]);
+    let mut cur = x;
+    for i in 0..blocks {
+        let c = g.const_scalar(0.5 + i as f64 * 0.01);
+        let bias = g.const_tensor(Tensor::new(
+            vec![d],
+            (0..d).map(|j| (j as f32) * 0.003 - 0.2).collect(),
+        ));
+        let t = g.add_op(OpKind::Mul, vec![cur, c]).unwrap();
+        let tb = g.add_op(OpKind::Add, vec![t, bias]).unwrap();
+        let a = g.add_op(OpKind::Gelu, vec![tb]).unwrap();
+        cur = g.add_op(OpKind::Add, vec![a, cur]).unwrap();
+    }
+    g.set_outputs(vec![cur]);
+    g
+}
+
+/// `gelu(x @ w + bias)` — the matmul kernel plus a fusable epilogue.
+fn matmul_epilogue(m: usize, k: usize, n: usize) -> Graph {
+    let mut g = Graph::new("codegen_matmul_epilogue");
+    let x = g.placeholder("x", &[m, k]);
+    let mut rng = Rng::new(7);
+    let w = g.const_tensor(Tensor::randn(&[k, n], &mut rng));
+    let bias = g.const_tensor(Tensor::randn(&[n], &mut rng));
+    let mm = g.add_op(OpKind::MatMul, vec![x, w]).unwrap();
+    let b = g.add_op(OpKind::Add, vec![mm, bias]).unwrap();
+    let ge = g.add_op(OpKind::Gelu, vec![b]).unwrap();
+    g.set_outputs(vec![ge]);
+    g
+}
+
+fn inputs_for(g: &Graph, seed: u64) -> Vec<Rc<Tensor>> {
+    let mut rng = Rng::new(seed);
+    g.input_shapes().into_iter().map(|(_, s)| Rc::new(Tensor::randn(&s, &mut rng))).collect()
+}
+
+fn assert_bitwise(tag: &str, oracle: &[Tensor], got: &[Tensor]) {
+    assert_eq!(oracle.len(), got.len(), "{}: output arity diverged", tag);
+    for (x, y) in oracle.iter().zip(got.iter()) {
+        assert!(
+            x.data().iter().zip(y.data().iter()).all(|(p, q)| p.to_bits() == q.to_bits()),
+            "{}: codegen diverged bitwise from the eager oracle",
+            tag
+        );
+    }
+}
+
+/// Time one case across the four executors; returns the gated speedup
+/// (interpreted plan / best loop-program configuration).
+fn bench_case(
+    rep: &mut support::Reporter,
+    entries: &mut Vec<(String, f64, &'static str)>,
+    tag: &str,
+    g: Graph,
+    iters: usize,
+    seed: u64,
+) -> f64 {
+    let g = Arc::new(g);
+    let req = CompileRequest::new(&g.name.clone(), Arc::clone(&g)).with_opt_level(OptLevel::O2);
+    let opt_graph = Arc::clone(&req.optimized().graph);
+    let interp = EagerModule::with_fusion(Arc::clone(&opt_graph), "eager".into(), false);
+    let fused = EagerBackend.compile(&req).expect("eager compile");
+    let cg1 = CodegenBackend::new().compile(&req).expect("codegen compile");
+    let cg4 = CodegenBackend::with_threads(4).compile(&req).expect("codegen compile (t4)");
+
+    let inputs = inputs_for(&g, seed);
+    let oracle = fused.call(&inputs).unwrap();
+    assert_bitwise(tag, &oracle, &interp.call(&inputs).unwrap());
+    assert_bitwise(tag, &oracle, &cg1.call(&inputs).unwrap());
+    assert_bitwise(tag, &oracle, &cg4.call(&inputs).unwrap());
+
+    let interp_ns = support::time_ns(iters, || {
+        interp.call(&inputs).unwrap();
+    });
+    let fused_ns = support::time_ns(iters, || {
+        fused.call(&inputs).unwrap();
+    });
+    let cg1_ns = support::time_ns(iters, || {
+        cg1.call(&inputs).unwrap();
+    });
+    let cg4_ns = support::time_ns(iters, || {
+        cg4.call(&inputs).unwrap();
+    });
+
+    let mut put = |name: String, value: f64, unit: &'static str| {
+        rep.record(&name, value, unit);
+        entries.push((name, value, unit));
+    };
+    put(format!("{}_interp_call", tag), interp_ns, "ns/call");
+    put(format!("{}_fused_call", tag), fused_ns, "ns/call");
+    put(format!("{}_codegen_t1_call", tag), cg1_ns, "ns/call");
+    put(format!("{}_codegen_t4_call", tag), cg4_ns, "ns/call");
+    let speedup = interp_ns / cg1_ns.min(cg4_ns);
+    put(format!("{}_speedup", tag), speedup, "x");
+    speedup
+}
+
+fn main() {
+    let mut rep = support::Reporter::new("codegen");
+    let mut entries: Vec<(String, f64, &'static str)> = Vec::new();
+    let quick = support::quick();
+
+    // Elementwise residual chain: 512x512 f32 (1 MiB live) x 6 blocks.
+    // Large enough that the 4-thread row tiling engages (> 64 Ki
+    // elements per loop), small enough to stay cache-resident per chunk.
+    let elem = bench_case(
+        &mut rep,
+        &mut entries,
+        "gelu_chain",
+        gelu_chain(512, 512, 6),
+        support::iters(30),
+        1,
+    );
+    if !quick {
+        assert!(
+            elem >= 1.5,
+            "acceptance: loop program must beat the interpreted plan >= 1.5x \
+             on the elementwise chain (got {:.2}x)",
+            elem
+        );
+    }
+
+    // Matmul + fused epilogue: [256,256] @ [256,384] + bias -> gelu.
+    // ~25M MACs/call, above the pool's minimum-work threshold.
+    let mm = bench_case(
+        &mut rep,
+        &mut entries,
+        "matmul_epilogue",
+        matmul_epilogue(256, 256, 384),
+        support::iters(20),
+        2,
+    );
+    if !quick {
+        assert!(
+            mm >= 1.3,
+            "acceptance: loop program must beat the interpreted plan >= 1.3x \
+             on matmul+epilogue (got {:.2}x)",
+            mm
+        );
+    }
+
+    rep.finish();
+
+    // The standalone report: same schema as BENCH_hotpath.json, one file
+    // per subsystem so CI can gate on it without parsing the merged doc.
+    let body: Vec<String> = entries
+        .iter()
+        .map(|(name, value, unit)| {
+            format!(
+                "    {{\"bench\": \"codegen\", \"name\": \"{}\", \"value\": {:.3}, \"unit\": \"{}\"}}",
+                name, value, unit
+            )
+        })
+        .collect();
+    let doc = format!(
+        "{{\n  \"schema_version\": {},\n  \"entries\": [\n{}\n  ]\n}}\n",
+        support::REPORT_SCHEMA_VERSION,
+        body.join(",\n")
+    );
+    let path = out_path();
+    match std::fs::write(&path, doc) {
+        Ok(()) => println!("[bench:codegen] wrote {} entries to {}", entries.len(), path),
+        Err(e) => {
+            eprintln!("[bench:codegen] failed to write {}: {}", path, e);
+            std::process::exit(1);
+        }
+    }
+}

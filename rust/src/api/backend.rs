@@ -495,6 +495,9 @@ fn builtin_backends() -> HashMap<String, Arc<dyn Backend>> {
     m.insert("xla".into(), Arc::new(XlaBackend));
     m.insert("sharded".into(), Arc::new(ShardedBackend::new()));
     m.insert("batched".into(), Arc::new(BatchedBackend::new()));
+    // The loop-program compiler: lowers the optimized graph to a flat,
+    // register-allocated instruction buffer (see `crate::codegen`).
+    m.insert("codegen".into(), Arc::new(crate::codegen::CodegenBackend::new()));
     // The default recording wrapper decorates the eager reference executor;
     // wrap any other backend via RecordingBackend::new / ::wrapping.
     m.insert("recording".into(), Arc::new(RecordingBackend::new(Arc::new(EagerBackend))));
@@ -549,7 +552,7 @@ mod tests {
 
     #[test]
     fn builtins_are_registered() {
-        for name in ["eager", "xla", "sharded", "batched"] {
+        for name in ["eager", "xla", "sharded", "batched", "codegen"] {
             assert!(lookup_backend(name).is_some(), "{} missing", name);
         }
         assert!(lookup_backend("missing").is_none());

@@ -1,6 +1,8 @@
 //! Graph backends: the eager reference executor, the XLA/PJRT backend,
 //! and the composite `sharded` / `batched` backends built on the staged
-//! [`Backend`] pipeline (`plan` → `lower`).
+//! [`Backend`] pipeline (`plan` → `lower`). The loop-program compiler
+//! lives in its own top-level module ([`crate::codegen`], registered as
+//! `codegen`) but speaks the exact same contract.
 //!
 //! The public contract lives in [`crate::api`]: [`CompileRequest`] in,
 //! [`CompilePlan`](crate::api::CompilePlan) out of `plan`, an executable

@@ -1,0 +1,1835 @@
+//! The `codegen` backend: compiles an optimized graph into a flat,
+//! register-allocated **loop program** instead of interpreting a `Step`
+//! list per call.
+//!
+//! Where the eager executor ([`crate::backend::eager::ExecPlan`]) walks
+//! node-indexed env slots with per-op dispatch, `Backend::lower` here runs
+//! a real (if small) compiler:
+//!
+//! 1. **Instruction selection** — elementwise runs collapse into
+//!    [`ElemLoop`]s (one chunked pass, specialized per [`ElemKind`]), 2-D
+//!    matmuls become [`MatMulInstr`]s with their single-consumer
+//!    elementwise tails folded in as **fused epilogues** (bias-add /
+//!    activation applied to the output tile while it is cache-hot), and
+//!    everything else (reductions, softmax, shape ops, batched matmul)
+//!    falls back to one [`crate::backend::eager::eval_op`] call per node —
+//!    bitwise-identical by construction.
+//! 2. **Stride-class resolution** — every loop input is classified at
+//!    lower time as `dense` (read straight from the source buffer),
+//!    `splat` (scalar broadcast), `row` (innermost-axis vector broadcast,
+//!    gathered by segment memcpy) or `strided` (general broadcast walked
+//!    by the chunk odometer). The common cases never touch a per-element
+//!    odometer.
+//! 3. **Register allocation** — values live in a slot-numbered arena;
+//!    liveness analysis frees a slot after its last reader, so slots (and
+//!    their `f32` buffers, recycled through a free list) are reused across
+//!    instructions. `peak_live` in the dump shows the win over the eager
+//!    plan's one-slot-per-node env.
+//!
+//! The program renders as a readable `__loopir_*.txt` dump artifact
+//! ([`crate::api::ArtifactKind::LoopIr`], indexed in `manifest.json`) —
+//! the paper's transparency story applied to our own compiler. Execution
+//! is proven **bitwise equal** to the eager oracle by the conformance
+//! sweep (`tests/conformance.rs`) and unit tests below: every per-element
+//! scalar op is the same code the unfused kernels run, matmul replicates
+//! the eager kernel's exact accumulation order (including the k-blocked
+//! path and its `av == 0.0` skip), and multi-threaded row tiling via
+//! [`crate::serve::WorkerPool`] never changes any per-element order.
+
+use std::rc::Rc;
+use std::sync::{Arc, Mutex, TryLockError};
+
+use crate::api::{
+    ArtifactKind, Backend, CompilePlan, CompileRequest, CompiledModule, DepyfError, ModuleArtifact,
+    ModuleStats,
+};
+use crate::backend::eager::eval_op;
+use crate::graph::{Graph, NodeId, NodeKind, OpKind};
+use crate::serve::future::{call_channel, WorkerPool};
+use crate::tensor::{self, Tensor};
+
+/// Chunk size of the loop executor — matches the eager fused executor so
+/// both keep their working set cache-resident.
+const CHUNK: usize = 4096;
+
+/// Matmul k-blocking parameters — **must** mirror `tensor::ops`'s private
+/// kernel constants so the plain/blocked path decision (and therefore the
+/// bitwise result) is identical to the oracle.
+const MM_KBLOCK: usize = 64;
+const MM_BLOCK_MIN_PANEL: usize = 64 * 1024 / 4; // ~64 KiB of f32
+
+/// Minimum `m * k * n` before a matmul is row-tiled across the pool.
+const MM_PAR_MIN_WORK: usize = 1 << 20;
+/// Minimum output elements before an elementwise loop is range-split.
+const ELEM_PAR_MIN: usize = 1 << 16;
+/// Recycled output buffers kept across calls.
+const FREE_BUFS_MAX: usize = 32;
+
+/// The 16 elementwise kinds a loop may contain. Per-element math is
+/// bit-for-bit the kernels in `tensor::ops` (gelu/sigmoid literally share
+/// one function), so fused loops and unfused per-op execution agree on
+/// every bit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElemKind {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Pow,
+    Maximum,
+    Minimum,
+    Neg,
+    Relu,
+    Gelu,
+    Tanh,
+    Sigmoid,
+    Exp,
+    Log,
+    Sqrt,
+    Abs,
+}
+
+impl ElemKind {
+    fn from_op(op: &OpKind) -> Option<ElemKind> {
+        Some(match op {
+            OpKind::Add => ElemKind::Add,
+            OpKind::Sub => ElemKind::Sub,
+            OpKind::Mul => ElemKind::Mul,
+            OpKind::Div => ElemKind::Div,
+            OpKind::Pow => ElemKind::Pow,
+            OpKind::Maximum => ElemKind::Maximum,
+            OpKind::Minimum => ElemKind::Minimum,
+            OpKind::Neg => ElemKind::Neg,
+            OpKind::Relu => ElemKind::Relu,
+            OpKind::Gelu => ElemKind::Gelu,
+            OpKind::Tanh => ElemKind::Tanh,
+            OpKind::Sigmoid => ElemKind::Sigmoid,
+            OpKind::Exp => ElemKind::Exp,
+            OpKind::Log => ElemKind::Log,
+            OpKind::Sqrt => ElemKind::Sqrt,
+            OpKind::Abs => ElemKind::Abs,
+            _ => return None,
+        })
+    }
+
+    fn is_binary(self) -> bool {
+        matches!(
+            self,
+            ElemKind::Add
+                | ElemKind::Sub
+                | ElemKind::Mul
+                | ElemKind::Div
+                | ElemKind::Pow
+                | ElemKind::Maximum
+                | ElemKind::Minimum
+        )
+    }
+
+    fn name(self) -> &'static str {
+        match self {
+            ElemKind::Add => "add",
+            ElemKind::Sub => "sub",
+            ElemKind::Mul => "mul",
+            ElemKind::Div => "div",
+            ElemKind::Pow => "pow",
+            ElemKind::Maximum => "maximum",
+            ElemKind::Minimum => "minimum",
+            ElemKind::Neg => "neg",
+            ElemKind::Relu => "relu",
+            ElemKind::Gelu => "gelu",
+            ElemKind::Tanh => "tanh",
+            ElemKind::Sigmoid => "sigmoid",
+            ElemKind::Exp => "exp",
+            ElemKind::Log => "log",
+            ElemKind::Sqrt => "sqrt",
+            ElemKind::Abs => "abs",
+        }
+    }
+
+    /// Binary per-element application (epilogue path; the chunk path uses
+    /// [`apply_kind_chunk`] so the kind match hoists out of the loop).
+    #[inline]
+    fn apply2(self, x: f32, y: f32) -> f32 {
+        match self {
+            ElemKind::Add => x + y,
+            ElemKind::Sub => x - y,
+            ElemKind::Mul => x * y,
+            ElemKind::Div => x / y,
+            ElemKind::Pow => x.powf(y),
+            ElemKind::Maximum => f32::max(x, y),
+            ElemKind::Minimum => f32::min(x, y),
+            _ => self.apply1(x),
+        }
+    }
+
+    /// Unary per-element application.
+    #[inline]
+    fn apply1(self, x: f32) -> f32 {
+        match self {
+            ElemKind::Neg => -x,
+            ElemKind::Relu => x.max(0.0),
+            ElemKind::Gelu => tensor::gelu_scalar(x),
+            ElemKind::Tanh => f32::tanh(x),
+            ElemKind::Sigmoid => tensor::sigmoid_scalar(x),
+            ElemKind::Exp => f32::exp(x),
+            ElemKind::Log => f32::ln(x),
+            ElemKind::Sqrt => f32::sqrt(x),
+            ElemKind::Abs => f32::abs(x),
+            _ => unreachable!("binary kind {:?} applied as unary", self),
+        }
+    }
+}
+
+/// Apply one kind over chunk slices, dispatching **once per chunk** so
+/// each arm is a tight, vectorizable loop — the same structure (and the
+/// same per-element bodies) as the eager fused executor's `apply_chunk`.
+fn apply_kind_chunk(kind: ElemKind, a: &[f32], b: &[f32], dst: &mut [f32]) {
+    macro_rules! bin {
+        ($f:expr) => {
+            for ((d, &x), &y) in dst.iter_mut().zip(a.iter()).zip(b.iter()) {
+                *d = $f(x, y);
+            }
+        };
+    }
+    macro_rules! un {
+        ($f:expr) => {
+            for (d, &x) in dst.iter_mut().zip(a.iter()) {
+                *d = $f(x);
+            }
+        };
+    }
+    match kind {
+        ElemKind::Add => bin!(|x, y| x + y),
+        ElemKind::Sub => bin!(|x, y| x - y),
+        ElemKind::Mul => bin!(|x, y| x * y),
+        ElemKind::Div => bin!(|x, y| x / y),
+        ElemKind::Pow => bin!(|x: f32, y: f32| x.powf(y)),
+        ElemKind::Maximum => bin!(f32::max),
+        ElemKind::Minimum => bin!(f32::min),
+        ElemKind::Neg => un!(|x: f32| -x),
+        ElemKind::Relu => un!(|x: f32| x.max(0.0)),
+        ElemKind::Gelu => un!(tensor::gelu_scalar),
+        ElemKind::Tanh => un!(f32::tanh),
+        ElemKind::Sigmoid => un!(tensor::sigmoid_scalar),
+        ElemKind::Exp => un!(f32::exp),
+        ElemKind::Log => un!(f32::ln),
+        ElemKind::Sqrt => un!(f32::sqrt),
+        ElemKind::Abs => un!(f32::abs),
+    }
+}
+
+/// How a loop input is read, resolved at lower time from static shapes.
+#[derive(Clone, Debug, PartialEq, Eq)]
+enum Access {
+    /// Shape equals the loop's output shape: read the buffer directly.
+    Dense,
+    /// One element broadcast everywhere: pre-filled chunk buffer.
+    Splat,
+    /// Innermost-axis vector broadcast (`[n]` onto `[.., n]`): gathered by
+    /// wrapping segment memcpy, no odometer.
+    Row { period: usize },
+    /// General broadcast: per-axis strides onto the output shape, walked
+    /// by the shared chunk odometer (the uncommon case).
+    Strided(Vec<usize>),
+}
+
+impl Access {
+    /// Classify `shape` read at `out_shape` resolution.
+    fn classify(shape: &[usize], out_shape: &[usize]) -> Access {
+        if shape == out_shape {
+            return Access::Dense;
+        }
+        let numel: usize = shape.iter().product();
+        if numel <= 1 {
+            return Access::Splat;
+        }
+        let strides = tensor::broadcast_strides_for(shape, out_shape.len());
+        let rank = out_shape.len();
+        let last = out_shape[rank - 1];
+        if strides[rank - 1] == 1 && strides[..rank - 1].iter().all(|&s| s == 0) && numel == last {
+            return Access::Row { period: last };
+        }
+        Access::Strided(strides)
+    }
+}
+
+/// Where one loop step reads each operand.
+#[derive(Clone, Copy, Debug)]
+enum Src {
+    /// External value: index into [`ElemLoop::inputs`].
+    In(usize),
+    /// Result of an earlier step in the same loop (register index).
+    Reg(usize),
+}
+
+#[derive(Clone, Debug)]
+struct ElemStep {
+    kind: ElemKind,
+    a: Src,
+    /// Mirrors `a` for unary kinds (ignored).
+    b: Src,
+}
+
+#[derive(Clone, Debug)]
+struct LoopInput {
+    slot: usize,
+    access: Access,
+}
+
+/// A fused elementwise region compiled to one chunked, stride-resolved
+/// pass over the output index space.
+#[derive(Clone, Debug)]
+struct ElemLoop {
+    out_shape: Vec<usize>,
+    numel: usize,
+    inputs: Vec<LoopInput>,
+    /// Steps in topological order; the last one writes the output.
+    ops: Vec<ElemStep>,
+}
+
+/// One fused epilogue step applied to the matmul output tile.
+#[derive(Clone, Debug)]
+struct EpiStep {
+    kind: ElemKind,
+    operand: Option<EpiOperand>,
+}
+
+/// The non-accumulator operand of a binary epilogue step, read through
+/// row/col strides resolved at lower time (`0` on broadcast axes).
+#[derive(Clone, Debug)]
+struct EpiOperand {
+    slot: usize,
+    row_stride: usize,
+    col_stride: usize,
+    /// True when the accumulator is the op's left-hand side.
+    acc_is_lhs: bool,
+}
+
+/// A 2-D matmul with its fused elementwise tail.
+#[derive(Clone, Debug)]
+struct MatMulInstr {
+    a_slot: usize,
+    b_slot: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    epilogue: Vec<EpiStep>,
+}
+
+impl MatMulInstr {
+    fn blocked(&self) -> bool {
+        self.k * self.n >= MM_BLOCK_MIN_PANEL
+    }
+}
+
+/// Fallback: evaluate one graph node through the eager reference kernels.
+#[derive(Clone, Debug)]
+struct EvalInstr {
+    node: NodeId,
+    /// `(graph node id, arena slot)` per argument.
+    args: Vec<(NodeId, usize)>,
+}
+
+#[derive(Clone, Debug)]
+enum InstrOp {
+    /// Bind call input `index` into a slot.
+    Input { index: usize },
+    Loop(ElemLoop),
+    MatMul(MatMulInstr),
+    Eval(EvalInstr),
+}
+
+#[derive(Clone, Debug)]
+struct Instr {
+    op: InstrOp,
+    /// The arena slot this instruction writes.
+    out_slot: usize,
+    /// Slots whose value dies after this instruction (freed eagerly; their
+    /// buffers are recycled when uniquely owned).
+    dead_after: Vec<usize>,
+}
+
+/// Reusable per-module execution state (arena, chunk buffers, the eval
+/// fallback env and the recycled output buffers).
+#[derive(Default)]
+struct Scratch {
+    arena: Vec<Option<Tensor>>,
+    env: Vec<Option<Tensor>>,
+    bufs: LoopBufs,
+    free: Vec<Vec<f32>>,
+}
+
+/// Chunk-sized loop buffers, reused across instructions and calls.
+#[derive(Default)]
+struct LoopBufs {
+    regs: Vec<Vec<f32>>,
+    inbuf: Vec<Vec<f32>>,
+    coords: Vec<usize>,
+    gidx: Vec<usize>,
+}
+
+/// The compiled loop program: a linear instruction buffer over a
+/// slot-numbered value arena.
+pub struct LoopProgram {
+    graph: Arc<Graph>,
+    /// Arena template with constants pre-materialized at their slots.
+    template: Vec<Option<Tensor>>,
+    /// `(slot, node)` of each pre-materialized constant (for the dump).
+    const_slots: Vec<(usize, NodeId)>,
+    instrs: Vec<Instr>,
+    /// Output slots, in graph-output order.
+    outputs: Vec<usize>,
+    n_slots: usize,
+    peak_live: usize,
+}
+
+/// Take (or allocate) an output buffer of `numel` zeros.
+fn take_buf(free: &mut Vec<Vec<f32>>, numel: usize) -> Vec<f32> {
+    match free.pop() {
+        Some(mut b) => {
+            b.clear();
+            b.resize(numel, 0.0);
+            b
+        }
+        None => vec![0.0f32; numel],
+    }
+}
+
+/// `od += ad(rows i0..i1 of am×ak) @ bd(ak×bn)`, `od` covering only rows
+/// `i0..i1` (zeroed). Replicates the eager matmul kernel exactly — same
+/// plain/blocked threshold on the full `ak*bn` panel, same strictly
+/// ascending k order per output element, same `av == 0.0` skip — so any
+/// row tiling of the output is bitwise identical to the full kernel.
+fn matmul_rows(ad: &[f32], bd: &[f32], od: &mut [f32], i0: usize, i1: usize, ak: usize, bn: usize) {
+    if ak * bn < MM_BLOCK_MIN_PANEL {
+        for i in i0..i1 {
+            for k in 0..ak {
+                let av = ad[i * ak + k];
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &bd[k * bn..(k + 1) * bn];
+                let orow = &mut od[(i - i0) * bn..(i - i0 + 1) * bn];
+                for j in 0..bn {
+                    orow[j] += av * brow[j];
+                }
+            }
+        }
+        return;
+    }
+    for k0 in (0..ak).step_by(MM_KBLOCK) {
+        let k1 = (k0 + MM_KBLOCK).min(ak);
+        for i in i0..i1 {
+            let arow = &ad[i * ak..(i + 1) * ak];
+            let orow = &mut od[(i - i0) * bn..(i - i0 + 1) * bn];
+            for k in k0..k1 {
+                let av = arow[k];
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &bd[k * bn..(k + 1) * bn];
+                for j in 0..bn {
+                    orow[j] += av * brow[j];
+                }
+            }
+        }
+    }
+}
+
+/// Apply the fused epilogue to output rows `i0..i1` (`od` covers exactly
+/// those rows). `operands` is parallel to `steps` (resolved tensors for
+/// binary steps). Element-at-a-time in step order — the same scalar
+/// sequence the unfused per-op tensors would apply, so bitwise identical.
+fn apply_epilogue_rows(
+    steps: &[EpiStep],
+    operands: &[Option<Tensor>],
+    od: &mut [f32],
+    i0: usize,
+    i1: usize,
+    bn: usize,
+) {
+    for (step, operand) in steps.iter().zip(operands.iter()) {
+        match (&step.operand, operand) {
+            (None, _) => {
+                for x in od.iter_mut() {
+                    *x = step.kind.apply1(*x);
+                }
+            }
+            (Some(o), Some(t)) => {
+                let data = t.data();
+                for i in i0..i1 {
+                    let row = &mut od[(i - i0) * bn..(i - i0 + 1) * bn];
+                    let base = i * o.row_stride;
+                    if o.col_stride == 0 {
+                        let v = data[base];
+                        if o.acc_is_lhs {
+                            for x in row.iter_mut() {
+                                *x = step.kind.apply2(*x, v);
+                            }
+                        } else {
+                            for x in row.iter_mut() {
+                                *x = step.kind.apply2(v, *x);
+                            }
+                        }
+                    } else {
+                        let src = &data[base..base + bn];
+                        if o.acc_is_lhs {
+                            for (x, &v) in row.iter_mut().zip(src.iter()) {
+                                *x = step.kind.apply2(*x, v);
+                            }
+                        } else {
+                            for (x, &v) in row.iter_mut().zip(src.iter()) {
+                                *x = step.kind.apply2(v, *x);
+                            }
+                        }
+                    }
+                }
+            }
+            (Some(_), None) => unreachable!("binary epilogue step without resolved operand"),
+        }
+    }
+}
+
+/// Resolve one step operand to its chunk slice.
+fn pick<'a>(
+    src: Src,
+    el: &ElemLoop,
+    srcs: &'a [&'a Tensor],
+    inbuf: &'a [Vec<f32>],
+    done: &'a [Vec<f32>],
+    start: usize,
+    len: usize,
+) -> &'a [f32] {
+    match src {
+        Src::In(p) => match el.inputs[p].access {
+            Access::Dense => &srcs[p].data()[start..start + len],
+            _ => &inbuf[p][..len],
+        },
+        Src::Reg(r) => &done[r][..len],
+    }
+}
+
+/// Execute `el` over the flat output range `lo..hi`, writing into `dst`
+/// (`dst.len() == hi - lo`). Pure per-element maps, so any range split
+/// computes the same bits — the parallel path tiles exactly this.
+fn run_elem_range(
+    el: &ElemLoop,
+    srcs: &[&Tensor],
+    lo: usize,
+    hi: usize,
+    bufs: &mut LoopBufs,
+    dst: &mut [f32],
+) {
+    let rank = el.out_shape.len();
+    let chunk = el.numel.min(CHUNK).max(1);
+    let last = el.ops.len() - 1;
+    bufs.regs.resize_with(last, Vec::new);
+    for b in bufs.regs.iter_mut() {
+        b.clear();
+        b.resize(chunk, 0.0);
+    }
+    bufs.inbuf.resize_with(el.inputs.len(), Vec::new);
+    let mut any_strided = false;
+    for (p, inp) in el.inputs.iter().enumerate() {
+        let buf = &mut bufs.inbuf[p];
+        buf.clear();
+        match &inp.access {
+            Access::Dense => {}
+            Access::Splat => {
+                buf.resize(chunk, srcs[p].data()[0]);
+            }
+            Access::Row { .. } => buf.resize(chunk, 0.0),
+            Access::Strided(_) => {
+                any_strided = true;
+                buf.resize(chunk, 0.0);
+            }
+        }
+    }
+    // Seed the shared odometer at flat index `lo`.
+    bufs.coords.clear();
+    bufs.coords.resize(rank, 0);
+    if any_strided {
+        let mut rem = lo;
+        for ax in (0..rank).rev() {
+            let d = el.out_shape[ax];
+            bufs.coords[ax] = rem % d;
+            rem /= d;
+        }
+    }
+    bufs.gidx.clear();
+    bufs.gidx.resize(el.inputs.len(), 0);
+    for (p, inp) in el.inputs.iter().enumerate() {
+        if let Access::Strided(s) = &inp.access {
+            bufs.gidx[p] = bufs.coords.iter().zip(s.iter()).map(|(c, st)| c * st).sum();
+        }
+    }
+    let mut start = lo;
+    while start < hi {
+        let len = (hi - start).min(chunk);
+        for (p, inp) in el.inputs.iter().enumerate() {
+            if let Access::Row { period } = inp.access {
+                // Wrapping segment copy: no odometer, no div/mod per
+                // element.
+                let src = srcs[p].data();
+                let buf = &mut bufs.inbuf[p];
+                let mut i = 0;
+                let mut off = start % period;
+                while i < len {
+                    let take = (period - off).min(len - i);
+                    buf[i..i + take].copy_from_slice(&src[off..off + take]);
+                    i += take;
+                    off = 0;
+                }
+            }
+        }
+        if any_strided {
+            // Odometer walk shared by every strided input (mirrors the
+            // eager fused gather).
+            for i in 0..len {
+                for (p, inp) in el.inputs.iter().enumerate() {
+                    if let Access::Strided(_) = inp.access {
+                        bufs.inbuf[p][i] = srcs[p].data()[bufs.gidx[p]];
+                    }
+                }
+                for ax in (0..rank).rev() {
+                    bufs.coords[ax] += 1;
+                    for (p, inp) in el.inputs.iter().enumerate() {
+                        if let Access::Strided(s) = &inp.access {
+                            bufs.gidx[p] += s[ax];
+                        }
+                    }
+                    if bufs.coords[ax] < el.out_shape[ax] {
+                        break;
+                    }
+                    bufs.coords[ax] = 0;
+                    for (p, inp) in el.inputs.iter().enumerate() {
+                        if let Access::Strided(s) = &inp.access {
+                            bufs.gidx[p] -= s[ax] * el.out_shape[ax];
+                        }
+                    }
+                }
+            }
+        }
+        for (si, step) in el.ops.iter().enumerate() {
+            let (done, rest) = bufs.regs.split_at_mut(si);
+            let done: &[Vec<f32>] = done;
+            let a = pick(step.a, el, srcs, &bufs.inbuf, done, start, len);
+            let b = pick(step.b, el, srcs, &bufs.inbuf, done, start, len);
+            if si == last {
+                apply_kind_chunk(step.kind, a, b, &mut dst[start - lo..start - lo + len]);
+            } else {
+                apply_kind_chunk(step.kind, a, b, &mut rest[0][..len]);
+            }
+        }
+        start += len;
+    }
+}
+
+/// Contiguous row-range splits for the parallel paths.
+fn split_ranges(total: usize, tiles: usize) -> Vec<(usize, usize)> {
+    let tiles = tiles.max(1).min(total.max(1));
+    let per = total.div_ceil(tiles);
+    let mut out = Vec::new();
+    let mut start = 0;
+    while start < total {
+        let end = (start + per).min(total);
+        out.push((start, end));
+        start = end;
+    }
+    out
+}
+
+/// The op kind and args of node `id`, `None` for non-op nodes.
+fn node_op(g: &Graph, id: NodeId) -> Option<(&OpKind, &[NodeId])> {
+    match &g.nodes[id].kind {
+        NodeKind::Op(op, args) => Some((op, args.as_slice())),
+        _ => None,
+    }
+}
+
+impl LoopProgram {
+    /// Compile `graph` into a loop program. Infallible: anything the
+    /// specialized instructions cannot express lowers to an eval-fallback
+    /// instruction.
+    pub fn compile(graph: Arc<Graph>) -> LoopProgram {
+        let g = &*graph;
+        let n = g.nodes.len();
+        let mut consumers: Vec<Vec<NodeId>> = vec![Vec::new(); n];
+        for (id, node) in g.nodes.iter().enumerate() {
+            if let NodeKind::Op(_, args) = &node.kind {
+                for &a in args {
+                    consumers[a].push(id);
+                }
+            }
+        }
+        let mut is_output = vec![false; n];
+        for &o in &g.outputs {
+            is_output[o] = true;
+        }
+
+        // --- 1. Matmul chains: 2-D matmuls grow a fused elementwise
+        // epilogue through their single-consumer tails. `mm_claim` marks
+        // the matmul and every chain node; the instruction materializes at
+        // the chain's last node.
+        struct ChainSpec {
+            a: NodeId,
+            b: NodeId,
+            m: usize,
+            k: usize,
+            n: usize,
+            steps: Vec<(ElemKind, Option<(NodeId, bool)>)>,
+        }
+        let mut mm_claim = vec![false; n];
+        let mut mm_at: Vec<Option<ChainSpec>> = (0..n).map(|_| None).collect();
+        for id in 0..n {
+            let Some((op, args)) = node_op(g, id) else { continue };
+            if !matches!(op, OpKind::MatMul) {
+                continue;
+            }
+            let (a, b) = (args[0], args[1]);
+            if g.nodes[a].shape.len() != 2 || g.nodes[b].shape.len() != 2 {
+                continue; // batched / higher-rank: eval fallback
+            }
+            let (m, k) = (g.nodes[a].shape[0], g.nodes[a].shape[1]);
+            let nn = g.nodes[b].shape[1];
+            let out_shape = g.nodes[id].shape.clone();
+            let mut steps: Vec<(ElemKind, Option<(NodeId, bool)>)> = Vec::new();
+            let mut cur = id;
+            loop {
+                if is_output[cur] || consumers[cur].len() != 1 {
+                    break;
+                }
+                let c = consumers[cur][0];
+                if mm_claim[c] {
+                    break;
+                }
+                let Some((cop, cargs)) = node_op(g, c) else { break };
+                let Some(kind) = ElemKind::from_op(cop) else { break };
+                if g.nodes[c].shape != out_shape {
+                    break;
+                }
+                if kind.is_binary() {
+                    let (other, acc_is_lhs) =
+                        if cargs[0] == cur { (cargs[1], true) } else { (cargs[0], false) };
+                    let oshape = &g.nodes[other].shape;
+                    if oshape.len() > 2 {
+                        break;
+                    }
+                    let fits = tensor::broadcast_shapes(oshape, &out_shape)
+                        .map(|s| s == out_shape)
+                        .unwrap_or(false);
+                    if !fits {
+                        break;
+                    }
+                    steps.push((kind, Some((other, acc_is_lhs))));
+                } else {
+                    steps.push((kind, None));
+                }
+                cur = c;
+            }
+            mm_claim[id] = true;
+            // Claim the chain nodes: they are the successive single
+            // consumers the loop above walked.
+            let mut c = id;
+            for _ in 0..steps.len() {
+                c = consumers[c][0];
+                mm_claim[c] = true;
+            }
+            mm_at[cur] = Some(ChainSpec { a, b, m, k, n: nn, steps });
+        }
+
+        // --- 2. Elementwise regions over the remaining nodes. Mirrors the
+        // eager fuser (roots descending, fixpoint growth, broadcast-onto
+        // gate) but keeps singletons: every elementwise op runs as a
+        // stride-resolved loop.
+        let fusible_at = |id: NodeId| -> bool {
+            !mm_claim[id]
+                && node_op(g, id).map(|(op, _)| ElemKind::from_op(op).is_some()).unwrap_or(false)
+        };
+        let broadcasts_onto = |inner: NodeId, root: NodeId| -> bool {
+            tensor::broadcast_shapes(&g.nodes[inner].shape, &g.nodes[root].shape)
+                .map(|s| s == g.nodes[root].shape)
+                .unwrap_or(false)
+        };
+        let mut region_of: Vec<Option<usize>> = vec![None; n];
+        let mut regions: Vec<Vec<NodeId>> = Vec::new();
+        for root in (0..n).rev() {
+            if region_of[root].is_some() || !fusible_at(root) {
+                continue;
+            }
+            let mut members = vec![root];
+            loop {
+                let mut grew = false;
+                let mut mi = 0;
+                while mi < members.len() {
+                    let m = members[mi];
+                    mi += 1;
+                    let (_, args) = node_op(g, m).expect("members are ops");
+                    for &a in args.iter() {
+                        if members.contains(&a) || region_of[a].is_some() || is_output[a] {
+                            continue;
+                        }
+                        if !fusible_at(a)
+                            || !consumers[a].iter().all(|c| members.contains(c))
+                            || !broadcasts_onto(a, root)
+                        {
+                            continue;
+                        }
+                        members.push(a);
+                        grew = true;
+                    }
+                }
+                if !grew {
+                    break;
+                }
+            }
+            let rid = regions.len();
+            for &m in &members {
+                region_of[m] = Some(rid);
+            }
+            members.sort_unstable();
+            regions.push(members);
+        }
+
+        // --- 3. Emission order: inputs first, then op instructions at
+        // their emit node's position (region root / chain end / node).
+        enum Emit {
+            Input(usize),
+            Region(usize),
+            Chain(NodeId),
+            Eval(NodeId),
+        }
+        let mut emits: Vec<(NodeId, Emit)> = Vec::new();
+        for (idx, &inp) in g.inputs.iter().enumerate() {
+            emits.push((inp, Emit::Input(idx)));
+        }
+        for (id, node) in g.nodes.iter().enumerate() {
+            if !matches!(node.kind, NodeKind::Op(..)) {
+                continue;
+            }
+            if mm_claim[id] {
+                if mm_at[id].is_some() {
+                    emits.push((id, Emit::Chain(id)));
+                }
+                continue;
+            }
+            match region_of[id] {
+                Some(rid) if *regions[rid].last().unwrap() == id => {
+                    emits.push((id, Emit::Region(rid)));
+                }
+                Some(_) => {} // interior member: computed inside its loop
+                None => emits.push((id, Emit::Eval(id))),
+            }
+        }
+
+        // --- 4. Slot allocation: liveness-driven reuse. Constants take
+        // the first slots (the arena template); each instruction allocates
+        // its output slot *before* freeing its dying operands, so an
+        // output never aliases a buffer the same instruction reads.
+        let mut slot_of: Vec<Option<usize>> = vec![None; n];
+        let mut next_slot = 0usize;
+        let mut free_slots: Vec<usize> = Vec::new();
+        let mut const_slots: Vec<(usize, NodeId)> = Vec::new();
+        for (id, node) in g.nodes.iter().enumerate() {
+            if matches!(node.kind, NodeKind::ConstScalar(_) | NodeKind::ConstTensor(_)) {
+                slot_of[id] = Some(next_slot);
+                const_slots.push((next_slot, id));
+                next_slot += 1;
+            }
+        }
+        // Per-emit read sets (graph node ids), used for last-read liveness.
+        let reads_of = |e: &Emit| -> Vec<NodeId> {
+            let mut r: Vec<NodeId> = Vec::new();
+            let mut push = |a: NodeId| {
+                if !r.contains(&a) {
+                    r.push(a);
+                }
+            };
+            match e {
+                Emit::Input(_) => {}
+                Emit::Region(rid) => {
+                    let members = &regions[*rid];
+                    for &m in members {
+                        let (_, args) = node_op(g, m).expect("members are ops");
+                        for &a in args {
+                            if !members.contains(&a) {
+                                push(a);
+                            }
+                        }
+                    }
+                }
+                Emit::Chain(end) => {
+                    let spec = mm_at[*end].as_ref().expect("chain spec at end node");
+                    push(spec.a);
+                    push(spec.b);
+                    for (_, operand) in &spec.steps {
+                        if let Some((o, _)) = operand {
+                            push(*o);
+                        }
+                    }
+                }
+                Emit::Eval(id) => {
+                    let (_, args) = node_op(g, *id).expect("eval emits are ops");
+                    for &a in args {
+                        push(a);
+                    }
+                }
+            }
+            r
+        };
+        let mut last_read: Vec<Option<usize>> = vec![None; n];
+        for (ei, (_, e)) in emits.iter().enumerate() {
+            for a in reads_of(e) {
+                last_read[a] = Some(ei);
+            }
+        }
+        // A constant nobody reads stays pinned in its template slot; an
+        // unread instruction output is freed right after it is produced.
+        let mut live = const_slots.len();
+        let mut peak_live = live;
+        let mut instr_slots: Vec<usize> = Vec::new();
+        let mut instr_dead: Vec<Vec<usize>> = Vec::new();
+        for (ei, (node, e)) in emits.iter().enumerate() {
+            let out_slot = free_slots.pop().unwrap_or_else(|| {
+                let s = next_slot;
+                next_slot += 1;
+                s
+            });
+            slot_of[*node] = Some(out_slot);
+            live += 1;
+            peak_live = peak_live.max(live);
+            let mut dead: Vec<usize> = Vec::new();
+            for a in reads_of(e) {
+                if last_read[a] == Some(ei) && !is_output[a] {
+                    if let Some(s) = slot_of[a] {
+                        dead.push(s);
+                        free_slots.push(s);
+                        live -= 1;
+                    }
+                }
+            }
+            if last_read[*node].is_none() && !is_output[*node] {
+                dead.push(out_slot);
+                free_slots.push(out_slot);
+                live -= 1;
+            }
+            instr_slots.push(out_slot);
+            instr_dead.push(dead);
+        }
+        let n_slots = next_slot;
+
+        // --- 5. Materialize the instruction buffer.
+        let slot = |id: NodeId| -> usize { slot_of[id].expect("read of unmaterialized node") };
+        let mut instrs: Vec<Instr> = Vec::with_capacity(emits.len());
+        for (ei, (node, e)) in emits.iter().enumerate() {
+            let op = match e {
+                Emit::Input(idx) => InstrOp::Input { index: *idx },
+                Emit::Region(rid) => {
+                    let members = &regions[*rid];
+                    let root = *members.last().unwrap();
+                    let out_shape = g.nodes[root].shape.clone();
+                    let mut reg_index: Vec<(NodeId, usize)> = Vec::new();
+                    let mut input_nodes: Vec<NodeId> = Vec::new();
+                    let mut ops = Vec::with_capacity(members.len());
+                    for (si, &m) in members.iter().enumerate() {
+                        reg_index.push((m, si));
+                        let (mop, args) = node_op(g, m).expect("members are ops");
+                        let kind = ElemKind::from_op(mop).expect("members are elementwise");
+                        let mut resolve = |a: NodeId| -> Src {
+                            if let Some(&(_, r)) = reg_index.iter().find(|(x, _)| *x == a) {
+                                return Src::Reg(r);
+                            }
+                            match input_nodes.iter().position(|&x| x == a) {
+                                Some(p) => Src::In(p),
+                                None => {
+                                    input_nodes.push(a);
+                                    Src::In(input_nodes.len() - 1)
+                                }
+                            }
+                        };
+                        let a = resolve(args[0]);
+                        let b = if args.len() > 1 { resolve(args[1]) } else { a };
+                        ops.push(ElemStep { kind, a, b });
+                    }
+                    let inputs: Vec<LoopInput> = input_nodes
+                        .iter()
+                        .map(|&a| LoopInput {
+                            slot: slot(a),
+                            access: Access::classify(&g.nodes[a].shape, &out_shape),
+                        })
+                        .collect();
+                    let numel = out_shape.iter().product();
+                    InstrOp::Loop(ElemLoop { out_shape, numel, inputs, ops })
+                }
+                Emit::Chain(end) => {
+                    let spec = mm_at[*end].as_ref().expect("chain spec at end node");
+                    let epilogue: Vec<EpiStep> = spec
+                        .steps
+                        .iter()
+                        .map(|(kind, operand)| EpiStep {
+                            kind: *kind,
+                            operand: operand.map(|(o, acc_is_lhs)| {
+                                let strides = tensor::broadcast_strides_for(&g.nodes[o].shape, 2);
+                                EpiOperand {
+                                    slot: slot(o),
+                                    row_stride: strides[0],
+                                    col_stride: strides[1],
+                                    acc_is_lhs,
+                                }
+                            }),
+                        })
+                        .collect();
+                    InstrOp::MatMul(MatMulInstr {
+                        a_slot: slot(spec.a),
+                        b_slot: slot(spec.b),
+                        m: spec.m,
+                        k: spec.k,
+                        n: spec.n,
+                        epilogue,
+                    })
+                }
+                Emit::Eval(id) => {
+                    let (_, args) = node_op(g, *id).expect("eval emits are ops");
+                    InstrOp::Eval(EvalInstr {
+                        node: *id,
+                        args: args.iter().map(|&a| (a, slot(a))).collect(),
+                    })
+                }
+            };
+            instrs.push(Instr {
+                op,
+                out_slot: instr_slots[ei],
+                dead_after: instr_dead[ei].clone(),
+            });
+        }
+        let mut template: Vec<Option<Tensor>> = vec![None; n_slots];
+        for &(s, id) in &const_slots {
+            template[s] = Some(match &g.nodes[id].kind {
+                NodeKind::ConstScalar(v) => Tensor::scalar(*v as f32),
+                NodeKind::ConstTensor(t) => t.clone(),
+                _ => unreachable!("const slot points at a non-const node"),
+            });
+        }
+        let outputs = g.outputs.iter().map(|&o| slot(o)).collect();
+        LoopProgram { graph, template, const_slots, instrs, outputs, n_slots, peak_live }
+    }
+
+    /// Execute the program. `pool` (when present) row-tiles large matmuls
+    /// and range-splits large elementwise loops; a dropped pool job is
+    /// recomputed inline, so execution never fails or hangs structurally.
+    fn run(
+        &self,
+        inputs: &[Rc<Tensor>],
+        scratch: &mut Scratch,
+        pool: Option<&Arc<WorkerPool>>,
+    ) -> Result<Vec<Tensor>, DepyfError> {
+        let g = &*self.graph;
+        let Scratch { arena, env, bufs, free } = scratch;
+        arena.clear();
+        arena.extend(self.template.iter().cloned());
+        env.clear();
+        env.resize(g.nodes.len(), None);
+        for instr in &self.instrs {
+            let value = match &instr.op {
+                InstrOp::Input { index } => (*inputs[*index]).clone(),
+                InstrOp::Loop(el) => run_loop(el, arena, bufs, free, pool)?,
+                InstrOp::MatMul(mm) => run_matmul(mm, arena, free, pool)?,
+                InstrOp::Eval(ev) => {
+                    for &(a, s) in &ev.args {
+                        env[a] = arena[s].clone();
+                    }
+                    let t = eval_op(g, ev.node, env)?;
+                    for &(a, _) in &ev.args {
+                        env[a] = None;
+                    }
+                    t
+                }
+            };
+            arena[instr.out_slot] = Some(value);
+            for &s in &instr.dead_after {
+                if let Some(t) = arena[s].take() {
+                    if free.len() < FREE_BUFS_MAX {
+                        if let Some(buf) = t.into_data() {
+                            free.push(buf);
+                        }
+                    }
+                }
+            }
+        }
+        let out = self
+            .outputs
+            .iter()
+            .map(|&s| {
+                arena[s]
+                    .clone()
+                    .ok_or_else(|| DepyfError::Backend(format!("output slot {} unevaluated", s)))
+            })
+            .collect();
+        arena.clear();
+        out
+    }
+
+    /// Slots in the arena (constants + peak concurrent values).
+    pub fn n_slots(&self) -> usize {
+        self.n_slots
+    }
+
+    /// Maximum values live at once — the liveness win over the eager
+    /// plan's one-slot-per-node env.
+    pub fn peak_live(&self) -> usize {
+        self.peak_live
+    }
+
+    /// Render the loop IR as the `__loopir_*.txt` dump text.
+    pub fn render(&self) -> String {
+        let g = &*self.graph;
+        let mut out = String::new();
+        out.push_str(&format!("loop program {} (backend codegen)\n", g.name));
+        out.push_str(&format!(
+            "slots: {}  peak live: {}  instrs: {}\n",
+            self.n_slots,
+            self.peak_live,
+            self.instrs.len()
+        ));
+        for &(s, id) in &self.const_slots {
+            out.push_str(&format!("const s{} = node {} {:?}\n", s, id, g.nodes[id].shape));
+        }
+        for (i, instr) in self.instrs.iter().enumerate() {
+            match &instr.op {
+                InstrOp::Input { index } => {
+                    let node = g.inputs[*index];
+                    let name = match &g.nodes[node].kind {
+                        NodeKind::Placeholder { name } => name.as_str(),
+                        _ => "?",
+                    };
+                    out.push_str(&format!(
+                        "i{:<3} input  s{} = arg{} \"{}\" {:?}",
+                        i, instr.out_slot, index, name, g.nodes[node].shape
+                    ));
+                }
+                InstrOp::Loop(el) => {
+                    out.push_str(&format!(
+                        "i{:<3} loop   s{} = {:?} <{} elems, {} ops>",
+                        i, instr.out_slot, el.out_shape, el.numel, el.ops.len()
+                    ));
+                    for (p, inp) in el.inputs.iter().enumerate() {
+                        let access = match &inp.access {
+                            Access::Dense => "dense".to_string(),
+                            Access::Splat => "splat".to_string(),
+                            Access::Row { period } => format!("row(period={})", period),
+                            Access::Strided(s) => format!("strided{:?}", s),
+                        };
+                        out.push_str(&format!("\n        in{} = s{} {}", p, inp.slot, access));
+                    }
+                    for (si, step) in el.ops.iter().enumerate() {
+                        let fmt = |s: Src| match s {
+                            Src::In(p) => format!("in{}", p),
+                            Src::Reg(r) => format!("r{}", r),
+                        };
+                        if step.kind.is_binary() {
+                            out.push_str(&format!(
+                                "\n        r{} = {} {}, {}",
+                                si,
+                                step.kind.name(),
+                                fmt(step.a),
+                                fmt(step.b)
+                            ));
+                        } else {
+                            out.push_str(&format!(
+                                "\n        r{} = {} {}",
+                                si,
+                                step.kind.name(),
+                                fmt(step.a)
+                            ));
+                        }
+                    }
+                }
+                InstrOp::MatMul(mm) => {
+                    out.push_str(&format!(
+                        "i{:<3} matmul s{} = s{} @ s{} [m={} k={} n={}] path={}",
+                        i,
+                        instr.out_slot,
+                        mm.a_slot,
+                        mm.b_slot,
+                        mm.m,
+                        mm.k,
+                        mm.n,
+                        if mm.blocked() { "blocked" } else { "plain" }
+                    ));
+                    if !mm.epilogue.is_empty() {
+                        let steps: Vec<String> = mm
+                            .epilogue
+                            .iter()
+                            .map(|s| match &s.operand {
+                                Some(o) => format!(
+                                    "{} s{} (rs={} cs={}{})",
+                                    s.kind.name(),
+                                    o.slot,
+                                    o.row_stride,
+                                    o.col_stride,
+                                    if o.acc_is_lhs { "" } else { ", acc-rhs" }
+                                ),
+                                None => s.kind.name().to_string(),
+                            })
+                            .collect();
+                        out.push_str(&format!("\n        epilogue: {}", steps.join("; ")));
+                    }
+                }
+                InstrOp::Eval(ev) => {
+                    let opname = match &g.nodes[ev.node].kind {
+                        NodeKind::Op(op, _) => op.method_name(),
+                        _ => "?",
+                    };
+                    let args: Vec<String> =
+                        ev.args.iter().map(|&(_, s)| format!("s{}", s)).collect();
+                    out.push_str(&format!(
+                        "i{:<3} eval   s{} = {}(node {}; reads {})",
+                        i,
+                        instr.out_slot,
+                        opname,
+                        ev.node,
+                        args.join(", ")
+                    ));
+                }
+            }
+            if !instr.dead_after.is_empty() {
+                let freed: Vec<String> =
+                    instr.dead_after.iter().map(|s| format!("s{}", s)).collect();
+                out.push_str(&format!("  free [{}]", freed.join(", ")));
+            }
+            out.push('\n');
+        }
+        let outs: Vec<String> = self.outputs.iter().map(|s| format!("s{}", s)).collect();
+        out.push_str(&format!("outputs: {}\n", outs.join(", ")));
+        out
+    }
+}
+
+/// Execute one elementwise loop (serial, or range-split across the pool).
+fn run_loop(
+    el: &ElemLoop,
+    arena: &[Option<Tensor>],
+    bufs: &mut LoopBufs,
+    free: &mut Vec<Vec<f32>>,
+    pool: Option<&Arc<WorkerPool>>,
+) -> Result<Tensor, DepyfError> {
+    let mut srcs: Vec<&Tensor> = Vec::with_capacity(el.inputs.len());
+    for inp in &el.inputs {
+        srcs.push(fetch_slot(arena, inp.slot)?);
+    }
+    if let Some(pool) = pool {
+        if pool.size() > 1 && el.numel >= ELEM_PAR_MIN {
+            let owned: Vec<Tensor> = srcs.iter().map(|t| (*t).clone()).collect();
+            let ranges = split_ranges(el.numel, pool.size());
+            let mut waits = Vec::with_capacity(ranges.len());
+            for &(lo, hi) in &ranges {
+                let (promise, future) = call_channel();
+                let el = el.clone();
+                let owned = owned.clone();
+                pool.submit(Box::new(move || {
+                    let refs: Vec<&Tensor> = owned.iter().collect();
+                    let mut tile = vec![0.0f32; hi - lo];
+                    run_elem_range(&el, &refs, lo, hi, &mut LoopBufs::default(), &mut tile);
+                    promise.fulfill(Ok(vec![Tensor::new(vec![hi - lo], tile)]));
+                }));
+                waits.push((future, lo, hi));
+            }
+            let mut out: Vec<f32> = Vec::with_capacity(el.numel);
+            for (future, lo, hi) in waits {
+                match future.wait() {
+                    Ok(parts) => out.extend_from_slice(parts[0].data()),
+                    Err(_) => {
+                        // Dropped pool job (fault injection / shutdown):
+                        // recompute the range inline, same bits.
+                        let refs: Vec<&Tensor> = owned.iter().collect();
+                        let mut tile = vec![0.0f32; hi - lo];
+                        run_elem_range(el, &refs, lo, hi, &mut LoopBufs::default(), &mut tile);
+                        out.extend_from_slice(&tile);
+                    }
+                }
+            }
+            return Ok(Tensor::new(el.out_shape.clone(), out));
+        }
+    }
+    let mut out = take_buf(free, el.numel);
+    run_elem_range(el, &srcs, 0, el.numel, bufs, &mut out);
+    Ok(Tensor::new(el.out_shape.clone(), out))
+}
+
+/// Read an arena slot that the emission order guarantees is populated.
+fn fetch_slot(arena: &[Option<Tensor>], s: usize) -> Result<&Tensor, DepyfError> {
+    arena[s]
+        .as_ref()
+        .ok_or_else(|| DepyfError::Backend(format!("input slot {} unevaluated", s)))
+}
+
+/// Execute one matmul instruction (serial, or row-tiled across the pool).
+fn run_matmul(
+    mm: &MatMulInstr,
+    arena: &[Option<Tensor>],
+    free: &mut Vec<Vec<f32>>,
+    pool: Option<&Arc<WorkerPool>>,
+) -> Result<Tensor, DepyfError> {
+    let a = fetch_slot(arena, mm.a_slot)?;
+    let b = fetch_slot(arena, mm.b_slot)?;
+    let mut operands: Vec<Option<Tensor>> = Vec::with_capacity(mm.epilogue.len());
+    for step in &mm.epilogue {
+        operands.push(match &step.operand {
+            Some(o) => Some(fetch_slot(arena, o.slot)?.clone()),
+            None => None,
+        });
+    }
+    let (m, k, n) = (mm.m, mm.k, mm.n);
+    if let Some(pool) = pool {
+        if pool.size() > 1 && m >= 2 && m * k * n >= MM_PAR_MIN_WORK {
+            let ranges = split_ranges(m, pool.size());
+            let mut waits = Vec::with_capacity(ranges.len());
+            for &(i0, i1) in &ranges {
+                let (promise, future) = call_channel();
+                let (a, b) = (a.clone(), b.clone());
+                let steps = mm.epilogue.clone();
+                let ops = operands.clone();
+                pool.submit(Box::new(move || {
+                    let mut od = vec![0.0f32; (i1 - i0) * n];
+                    matmul_rows(a.data(), b.data(), &mut od, i0, i1, k, n);
+                    apply_epilogue_rows(&steps, &ops, &mut od, i0, i1, n);
+                    promise.fulfill(Ok(vec![Tensor::new(vec![i1 - i0, n], od)]));
+                }));
+                waits.push((future, i0, i1));
+            }
+            let mut out: Vec<f32> = Vec::with_capacity(m * n);
+            for (future, i0, i1) in waits {
+                match future.wait() {
+                    Ok(parts) => out.extend_from_slice(parts[0].data()),
+                    Err(_) => {
+                        let mut od = vec![0.0f32; (i1 - i0) * n];
+                        matmul_rows(a.data(), b.data(), &mut od, i0, i1, k, n);
+                        apply_epilogue_rows(&mm.epilogue, &operands, &mut od, i0, i1, n);
+                        out.extend_from_slice(&od);
+                    }
+                }
+            }
+            return Ok(Tensor::new(vec![m, n], out));
+        }
+    }
+    let mut od = take_buf(free, m * n);
+    matmul_rows(a.data(), b.data(), &mut od, 0, m, k, n);
+    apply_epilogue_rows(&mm.epilogue, &operands, &mut od, 0, m, n);
+    Ok(Tensor::new(vec![m, n], od))
+}
+
+/// The codegen backend's [`CompiledModule`]: a [`LoopProgram`] built once
+/// at lower time, with reusable scratch and an optional worker pool.
+pub struct CodegenModule {
+    name: String,
+    program: LoopProgram,
+    scratch: Mutex<Scratch>,
+    pool: Option<Arc<WorkerPool>>,
+}
+
+impl CodegenModule {
+    pub fn new(name: &str, graph: Arc<Graph>, pool: Option<Arc<WorkerPool>>) -> CodegenModule {
+        CodegenModule {
+            name: name.to_string(),
+            program: LoopProgram::compile(graph),
+            scratch: Mutex::new(Scratch::default()),
+            pool,
+        }
+    }
+
+    pub fn program(&self) -> &LoopProgram {
+        &self.program
+    }
+}
+
+impl CompiledModule for CodegenModule {
+    fn call(&self, inputs: &[Rc<Tensor>]) -> Result<Vec<Tensor>, DepyfError> {
+        self.program.graph.check_inputs(inputs)?;
+        let mut borrowed;
+        let mut local;
+        // Same try-lock idiom as the eager arena: concurrent callers that
+        // lose the race use local scratch instead of serializing, and a
+        // poisoned holder's state is harmless (reset before any read).
+        let scratch: &mut Scratch = match self.scratch.try_lock() {
+            Ok(b) => {
+                borrowed = b;
+                &mut *borrowed
+            }
+            Err(TryLockError::Poisoned(b)) => {
+                borrowed = b.into_inner();
+                &mut *borrowed
+            }
+            Err(TryLockError::WouldBlock) => {
+                local = Scratch::default();
+                &mut local
+            }
+        };
+        self.program.run(inputs, scratch, self.pool.as_ref())
+    }
+
+    fn backend_name(&self) -> &str {
+        "codegen"
+    }
+
+    fn artifacts(&self) -> Vec<ModuleArtifact> {
+        let stem = crate::backend::sanitize(&self.name);
+        vec![ModuleArtifact {
+            kind: ArtifactKind::LoopIr,
+            name: self.name.clone(),
+            file: format!("__loopir_{}.txt", stem),
+            content: self.program.render(),
+        }]
+    }
+
+    fn stats(&self) -> ModuleStats {
+        ModuleStats { partitions: 1, ..Default::default() }
+    }
+}
+
+/// The `codegen` backend: `plan` emits the monolithic plan, `lower`
+/// compiles the optimized graph into a [`LoopProgram`]. The registered
+/// instance is single-threaded; [`CodegenBackend::with_threads`] shares
+/// one [`WorkerPool`] across every module it lowers for row-tiled
+/// matmuls and range-split elementwise loops.
+pub struct CodegenBackend {
+    pool: Option<Arc<WorkerPool>>,
+}
+
+impl CodegenBackend {
+    pub fn new() -> CodegenBackend {
+        CodegenBackend { pool: None }
+    }
+
+    /// A codegen backend whose modules tile large loops/panels across
+    /// `threads` workers. Bitwise identical to the single-threaded path:
+    /// tiling never reorders any per-element accumulation.
+    pub fn with_threads(threads: usize) -> CodegenBackend {
+        let pool = if threads > 1 { Some(Arc::new(WorkerPool::new(threads))) } else { None };
+        CodegenBackend { pool }
+    }
+}
+
+impl Default for CodegenBackend {
+    fn default() -> Self {
+        CodegenBackend::new()
+    }
+}
+
+impl Backend for CodegenBackend {
+    fn name(&self) -> &str {
+        "codegen"
+    }
+
+    fn plan(&self, req: &CompileRequest) -> Result<CompilePlan, DepyfError> {
+        crate::faults::gate(crate::faults::Site::BackendPlan)?;
+        Ok(CompilePlan::monolithic("codegen", req, "codegen"))
+    }
+
+    fn lower(
+        &self,
+        req: &CompileRequest,
+        _plan: &CompilePlan,
+    ) -> Result<Arc<dyn CompiledModule>, DepyfError> {
+        crate::faults::gate(crate::faults::Site::BackendLower)?;
+        let opt = req.optimized();
+        Ok(Arc::new(CodegenModule::new(&req.name, Arc::clone(&opt.graph), self.pool.clone())))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::eager::EagerModule;
+    use crate::graph::Graph;
+
+    fn assert_bitwise_eq(a: &[Tensor], b: &[Tensor], what: &str) {
+        assert_eq!(a.len(), b.len(), "{}: output arity", what);
+        for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+            assert_eq!(x.shape(), y.shape(), "{}: output {} shape", what, i);
+            let xb: Vec<u32> = x.data().iter().map(|v| v.to_bits()).collect();
+            let yb: Vec<u32> = y.data().iter().map(|v| v.to_bits()).collect();
+            assert_eq!(xb, yb, "{}: output {} bits", what, i);
+        }
+    }
+
+    fn run_both(g: &Arc<Graph>, inputs: &[Rc<Tensor>], what: &str) -> Vec<Tensor> {
+        let eager = EagerModule::with_fusion(Arc::clone(g), "eager".into(), false);
+        let module = CodegenModule::new(&g.name, Arc::clone(g), None);
+        let want = eager.call(inputs).unwrap();
+        let got = module.call(inputs).unwrap();
+        assert_bitwise_eq(&got, &want, what);
+        got
+    }
+
+    /// x[3,4] * c + bias, gelu, sigmoid, + residual — the eager test
+    /// chain, with a splat and a row-broadcast input.
+    fn elementwise_chain() -> Arc<Graph> {
+        let mut g = Graph::new("chain");
+        let x = g.placeholder("x", &[3, 4]);
+        let b = g.placeholder("b", &[4]);
+        let c = g.const_scalar(0.7);
+        let m = g.add_op(OpKind::Mul, vec![x, c]).unwrap();
+        let a = g.add_op(OpKind::Add, vec![m, b]).unwrap();
+        let ge = g.add_op(OpKind::Gelu, vec![a]).unwrap();
+        let s = g.add_op(OpKind::Sigmoid, vec![ge]).unwrap();
+        let r = g.add_op(OpKind::Add, vec![s, x]).unwrap();
+        g.set_outputs(vec![r]);
+        Arc::new(g)
+    }
+
+    fn chain_inputs() -> Vec<Rc<Tensor>> {
+        vec![
+            Rc::new(Tensor::new(
+                vec![3, 4],
+                vec![-2.0, -0.5, 0.0, 0.5, 1.0, 1.5, -1.0, 3.0, -0.0, 2.5, 0.25, -3.0],
+            )),
+            Rc::new(Tensor::new(vec![4], vec![0.1, -0.2, 0.3, -0.4])),
+        ]
+    }
+
+    #[test]
+    fn elementwise_chain_is_bitwise_equal_to_eager() {
+        run_both(&elementwise_chain(), &chain_inputs(), "elementwise chain");
+    }
+
+    #[test]
+    fn chain_compiles_to_one_loop_with_resolved_strides() {
+        let module = CodegenModule::new("chain", elementwise_chain(), None);
+        let loops: Vec<&ElemLoop> = module
+            .program
+            .instrs
+            .iter()
+            .filter_map(|i| match &i.op {
+                InstrOp::Loop(el) => Some(el),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(loops.len(), 1, "whole chain fuses into one loop");
+        let el = loops[0];
+        assert_eq!(el.ops.len(), 5);
+        // Stride classes resolved at lower time: x dense, bias a row
+        // broadcast, the const scalar a splat — no general odometer.
+        assert!(el.inputs.iter().any(|i| i.access == Access::Dense));
+        assert!(el.inputs.iter().any(|i| i.access == Access::Splat));
+        assert!(el.inputs.iter().any(|i| matches!(i.access, Access::Row { period: 4 })));
+        assert!(!el.inputs.iter().any(|i| matches!(i.access, Access::Strided(_))));
+        let ir = module.program.render();
+        assert!(ir.contains("row(period=4)"), "dump shows the stride class:\n{}", ir);
+    }
+
+    #[test]
+    fn stride_classes_cover_splat_row_and_strided() {
+        // [3,1] onto [3,4] needs real strides; [4] is a row; [1] a splat.
+        let mut g = Graph::new("strides");
+        let x = g.placeholder("x", &[3, 4]);
+        let col = g.placeholder("col", &[3, 1]);
+        let row = g.placeholder("row", &[4]);
+        let one = g.placeholder("one", &[1]);
+        let a = g.add_op(OpKind::Add, vec![x, col]).unwrap();
+        let m = g.add_op(OpKind::Mul, vec![a, row]).unwrap();
+        let s = g.add_op(OpKind::Sub, vec![m, one]).unwrap();
+        g.set_outputs(vec![s]);
+        let g = Arc::new(g);
+        assert_eq!(Access::classify(&[3, 1], &[3, 4]), Access::Strided(vec![1, 0]));
+        assert_eq!(Access::classify(&[4], &[3, 4]), Access::Row { period: 4 });
+        assert_eq!(Access::classify(&[1], &[3, 4]), Access::Splat);
+        assert_eq!(Access::classify(&[3, 4], &[3, 4]), Access::Dense);
+        let inputs = vec![
+            Rc::new(Tensor::new(vec![3, 4], (0..12).map(|i| i as f32 - 5.5).collect())),
+            Rc::new(Tensor::new(vec![3, 1], vec![0.5, -1.5, 2.0])),
+            Rc::new(Tensor::new(vec![4], vec![1.0, -2.0, 0.0, 0.25])),
+            Rc::new(Tensor::new(vec![1], vec![0.125])),
+        ];
+        run_both(&g, &inputs, "stride classes");
+    }
+
+    #[test]
+    fn slot_reuse_frees_dead_values() {
+        // A long dependency chain: unary ops x -> .. -> out. With liveness
+        // the program needs far fewer slots than values.
+        let mut g = Graph::new("slots");
+        let x = g.placeholder("x", &[8]);
+        // Non-fusible ops force one instruction per node (no region), so
+        // slot reuse across instructions is what's being measured.
+        let mut cur = x;
+        for _ in 0..6 {
+            cur = g.add_op(OpKind::Sum(Some(0)), vec![cur]).unwrap();
+            cur = g.add_op(OpKind::Reshape(vec![1]), vec![cur]).unwrap();
+        }
+        g.set_outputs(vec![cur]);
+        let program = LoopProgram::compile(Arc::new(g));
+        // 13 values (input + 12 op results) but peak liveness is 2.
+        assert!(program.peak_live() <= 3, "peak live {} too high", program.peak_live());
+        assert!(
+            program.n_slots() <= 3,
+            "liveness should reuse slots: {} allocated",
+            program.n_slots()
+        );
+        let freed: usize = program.instrs.iter().map(|i| i.dead_after.len()).sum();
+        assert!(freed >= 12, "dead values are freed eagerly (freed {})", freed);
+    }
+
+    #[test]
+    fn matmul_epilogue_fuses_bias_and_activation() {
+        let mut g = Graph::new("mm_epi");
+        let x = g.placeholder("x", &[3, 5]);
+        let w = g.placeholder("w", &[5, 4]);
+        let b = g.placeholder("b", &[4]);
+        let mm = g.add_op(OpKind::MatMul, vec![x, w]).unwrap();
+        let add = g.add_op(OpKind::Add, vec![mm, b]).unwrap();
+        let act = g.add_op(OpKind::Gelu, vec![add]).unwrap();
+        g.set_outputs(vec![act]);
+        let g = Arc::new(g);
+        let program = LoopProgram::compile(Arc::clone(&g));
+        let mms: Vec<&MatMulInstr> = program
+            .instrs
+            .iter()
+            .filter_map(|i| match &i.op {
+                InstrOp::MatMul(mm) => Some(mm),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(mms.len(), 1);
+        assert_eq!(mms[0].epilogue.len(), 2, "bias add + gelu fold into the epilogue");
+        let bias = mms[0].epilogue[0].operand.as_ref().unwrap();
+        assert_eq!((bias.row_stride, bias.col_stride), (0, 1), "bias reads row-broadcast");
+        assert!(!program.instrs.iter().any(|i| matches!(i.op, InstrOp::Loop(_))));
+        let inputs = vec![
+            Rc::new(Tensor::new(vec![3, 5], (0..15).map(|i| (i as f32) * 0.3 - 2.0).collect())),
+            Rc::new(Tensor::new(vec![5, 4], (0..20).map(|i| (i as f32) * 0.1 - 1.0).collect())),
+            Rc::new(Tensor::new(vec![4], vec![0.5, -0.5, 1.5, 0.0])),
+        ];
+        run_both(&g, &inputs, "matmul epilogue");
+    }
+
+    #[test]
+    fn epilogue_fusion_respects_outputs_and_multi_consumers() {
+        // The matmul result is itself a graph output: nothing may fold
+        // into an epilogue past it.
+        let mut g = Graph::new("mm_out");
+        let x = g.placeholder("x", &[2, 3]);
+        let w = g.placeholder("w", &[3, 2]);
+        let mm = g.add_op(OpKind::MatMul, vec![x, w]).unwrap();
+        let act = g.add_op(OpKind::Relu, vec![mm]).unwrap();
+        g.set_outputs(vec![mm, act]);
+        let g = Arc::new(g);
+        let program = LoopProgram::compile(Arc::clone(&g));
+        let mm_instr = program
+            .instrs
+            .iter()
+            .find_map(|i| match &i.op {
+                InstrOp::MatMul(mm) => Some(mm),
+                _ => None,
+            })
+            .expect("matmul instruction");
+        assert!(mm_instr.epilogue.is_empty(), "output matmul must not grow an epilogue");
+        let inputs = vec![
+            Rc::new(Tensor::new(vec![2, 3], vec![1.0, -2.0, 3.0, 0.0, 0.5, -0.5])),
+            Rc::new(Tensor::new(vec![3, 2], vec![0.1, 0.2, -0.3, 0.4, 0.5, -0.6])),
+        ];
+        run_both(&g, &inputs, "matmul output");
+
+        // Two consumers of the matmul: the chain cannot claim either.
+        let mut g2 = Graph::new("mm_two");
+        let x = g2.placeholder("x", &[2, 3]);
+        let w = g2.placeholder("w", &[3, 2]);
+        let mm = g2.add_op(OpKind::MatMul, vec![x, w]).unwrap();
+        let r = g2.add_op(OpKind::Relu, vec![mm]).unwrap();
+        let t = g2.add_op(OpKind::Tanh, vec![mm]).unwrap();
+        let s = g2.add_op(OpKind::Add, vec![r, t]).unwrap();
+        g2.set_outputs(vec![s]);
+        let g2 = Arc::new(g2);
+        let program2 = LoopProgram::compile(Arc::clone(&g2));
+        let mm2 = program2
+            .instrs
+            .iter()
+            .find_map(|i| match &i.op {
+                InstrOp::MatMul(mm) => Some(mm),
+                _ => None,
+            })
+            .expect("matmul instruction");
+        assert!(mm2.epilogue.is_empty(), "multi-consumer matmul must stay bare");
+        run_both(
+            &g2,
+            &[
+                Rc::new(Tensor::new(vec![2, 3], vec![1.0, -2.0, 3.0, 0.0, 0.5, -0.5])),
+                Rc::new(Tensor::new(vec![3, 2], vec![0.1, 0.2, -0.3, 0.4, 0.5, -0.6])),
+            ],
+            "multi-consumer matmul",
+        );
+    }
+
+    #[test]
+    fn blocked_matmul_path_is_bitwise_equal() {
+        // ak*bn = 130*140 > MM_BLOCK_MIN_PANEL forces the k-blocked path,
+        // ak deliberately not a multiple of MM_KBLOCK, with zeros salted
+        // in to exercise the av == 0.0 skip.
+        let (m, k, n) = (6, 130, 140);
+        assert!(k * n >= MM_BLOCK_MIN_PANEL);
+        let mut g = Graph::new("mm_blocked");
+        let a = g.placeholder("a", &[m, k]);
+        let b = g.placeholder("b", &[k, n]);
+        let bias = g.placeholder("bias", &[n]);
+        let mm = g.add_op(OpKind::MatMul, vec![a, b]).unwrap();
+        let add = g.add_op(OpKind::Add, vec![mm, bias]).unwrap();
+        let act = g.add_op(OpKind::Tanh, vec![add]).unwrap();
+        g.set_outputs(vec![act]);
+        let g = Arc::new(g);
+        let ad: Vec<f32> =
+            (0..m * k).map(|i| if i % 7 == 0 { 0.0 } else { (i as f32 * 0.37).sin() }).collect();
+        let bd: Vec<f32> = (0..k * n).map(|i| (i as f32 * 0.11).cos()).collect();
+        let biasd: Vec<f32> = (0..n).map(|i| (i as f32) * 0.01 - 0.5).collect();
+        let inputs = vec![
+            Rc::new(Tensor::new(vec![m, k], ad)),
+            Rc::new(Tensor::new(vec![k, n], bd)),
+            Rc::new(Tensor::new(vec![n], biasd)),
+        ];
+        run_both(&g, &inputs, "blocked matmul epilogue");
+        let program = LoopProgram::compile(Arc::clone(&g));
+        assert!(program.render().contains("path=blocked"));
+    }
+
+    #[test]
+    fn eval_fallback_covers_non_loop_ops() {
+        let mut g = Graph::new("fallback");
+        let x = g.placeholder("x", &[4, 6]);
+        let sm = g.add_op(OpKind::Softmax, vec![x]).unwrap();
+        let t = g.add_op(OpKind::Transpose, vec![sm]).unwrap();
+        let s = g.add_op(OpKind::Sum(Some(1)), vec![t]).unwrap();
+        g.set_outputs(vec![s]);
+        let g = Arc::new(g);
+        let inputs =
+            vec![Rc::new(Tensor::new(vec![4, 6], (0..24).map(|i| i as f32 * 0.2 - 2.5).collect()))];
+        run_both(&g, &inputs, "eval fallback");
+        let program = LoopProgram::compile(Arc::clone(&g));
+        let evals = program.instrs.iter().filter(|i| matches!(i.op, InstrOp::Eval(_))).count();
+        assert_eq!(evals, 3, "softmax/transpose/sum all eval-fallback");
+    }
+
+    #[test]
+    fn threaded_execution_is_bitwise_equal_to_serial() {
+        // Large enough to cross both parallel thresholds.
+        let (m, k, n) = (64, 130, 140);
+        let mut g = Graph::new("par");
+        let a = g.placeholder("a", &[m, k]);
+        let b = g.placeholder("b", &[k, n]);
+        let bias = g.placeholder("bias", &[n]);
+        let mm = g.add_op(OpKind::MatMul, vec![a, b]).unwrap();
+        let add = g.add_op(OpKind::Add, vec![mm, bias]).unwrap();
+        let act = g.add_op(OpKind::Gelu, vec![add]).unwrap();
+        g.set_outputs(vec![act]);
+        let g = Arc::new(g);
+        let inputs = vec![
+            Rc::new(Tensor::new(
+                vec![m, k],
+                (0..m * k)
+                    .map(|i| if i % 5 == 0 { 0.0 } else { (i as f32 * 0.13).sin() })
+                    .collect(),
+            )),
+            Rc::new(Tensor::new(vec![k, n], (0..k * n).map(|i| (i as f32 * 0.07).cos()).collect())),
+            Rc::new(Tensor::new(vec![n], (0..n).map(|i| (i as f32) * 0.02 - 1.0).collect())),
+        ];
+        let serial = CodegenModule::new("par", Arc::clone(&g), None);
+        let pool = Some(Arc::new(WorkerPool::new(4)));
+        let threaded = CodegenModule::new("par", Arc::clone(&g), pool);
+        let want = serial.call(&inputs).unwrap();
+        for _ in 0..3 {
+            let got = threaded.call(&inputs).unwrap();
+            assert_bitwise_eq(&got, &want, "threaded matmul");
+        }
+
+        // Elementwise range-split path (numel >= ELEM_PAR_MIN).
+        let rows = 300;
+        let cols = 256;
+        let mut g2 = Graph::new("par_elem");
+        let x = g2.placeholder("x", &[rows, cols]);
+        let bias = g2.placeholder("b", &[cols]);
+        let a2 = g2.add_op(OpKind::Add, vec![x, bias]).unwrap();
+        let ge = g2.add_op(OpKind::Gelu, vec![a2]).unwrap();
+        let out = g2.add_op(OpKind::Add, vec![ge, x]).unwrap();
+        g2.set_outputs(vec![out]);
+        let g2 = Arc::new(g2);
+        assert!(rows * cols >= ELEM_PAR_MIN);
+        let inputs2 = vec![
+            Rc::new(Tensor::new(
+                vec![rows, cols],
+                (0..rows * cols).map(|i| (i as f32 * 0.003).sin() * 2.0).collect(),
+            )),
+            Rc::new(Tensor::new(vec![cols], (0..cols).map(|i| (i as f32) * 0.01 - 1.2).collect())),
+        ];
+        let serial2 = CodegenModule::new("par_elem", Arc::clone(&g2), None);
+        let threaded2 =
+            CodegenModule::new("par_elem", Arc::clone(&g2), Some(Arc::new(WorkerPool::new(4))));
+        let want2 = serial2.call(&inputs2).unwrap();
+        let got2 = threaded2.call(&inputs2).unwrap();
+        assert_bitwise_eq(&got2, &want2, "threaded elementwise");
+    }
+
+    #[test]
+    fn loop_ir_artifact_is_dumped_and_readable() {
+        let module = CodegenModule::new("__compiled_fn_1", elementwise_chain(), None);
+        let arts = module.artifacts();
+        assert_eq!(arts.len(), 1);
+        assert_eq!(arts[0].kind, ArtifactKind::LoopIr);
+        assert_eq!(arts[0].file, "__loopir___compiled_fn_1.txt");
+        assert!(arts[0].content.contains("loop program chain"));
+        assert!(arts[0].content.contains("peak live"));
+        assert!(arts[0].content.contains("outputs: "));
+        // The render names every instruction form it uses.
+        assert!(arts[0].content.contains("input"));
+        assert!(arts[0].content.contains("loop"));
+    }
+
+    #[test]
+    fn backend_contract_plan_and_lower() {
+        let g = elementwise_chain();
+        let req = CompileRequest::new("__compiled_fn_9", Arc::clone(&g));
+        let backend = CodegenBackend::new();
+        let plan = backend.plan(&req).unwrap();
+        assert_eq!(plan.backend, "codegen");
+        assert_eq!(plan.partitions.len(), 1);
+        let module = backend.lower(&req, &plan).unwrap();
+        assert_eq!(module.backend_name(), "codegen");
+        let out = module.call(&chain_inputs()).unwrap();
+        let eager = EagerModule::with_fusion(Arc::clone(&g), "eager".into(), false);
+        assert_bitwise_eq(&out, &eager.call(&chain_inputs()).unwrap(), "backend contract");
+        assert_eq!(module.stats().partitions, 1);
+    }
+
+    #[test]
+    fn codegen_is_registered_and_composes_with_wrappers() {
+        let b = crate::api::lookup_backend("codegen").expect("codegen registered");
+        assert_eq!(b.name(), "codegen");
+        let g = elementwise_chain();
+        let req = CompileRequest::new("wrapped", Arc::clone(&g));
+        let resilient = crate::backend::ResilientBackend::new(Arc::new(CodegenBackend::new()));
+        let module = resilient.compile(&req).unwrap();
+        let out = module.call(&chain_inputs()).unwrap();
+        let eager = EagerModule::with_fusion(Arc::clone(&g), "eager".into(), false);
+        assert_bitwise_eq(&out, &eager.call(&chain_inputs()).unwrap(), "resilient:codegen");
+    }
+
+    #[test]
+    fn scalar_output_and_identity_graphs_work() {
+        // Output is a placeholder (no ops at all).
+        let mut g = Graph::new("ident");
+        let x = g.placeholder("x", &[3]);
+        g.set_outputs(vec![x]);
+        let g = Arc::new(g);
+        let inputs = vec![Rc::new(Tensor::new(vec![3], vec![1.0, -0.0, f32::NAN]))];
+        let module = CodegenModule::new("ident", Arc::clone(&g), None);
+        let out = module.call(&inputs).unwrap();
+        assert_eq!(out[0].data()[0].to_bits(), 1.0f32.to_bits());
+        assert_eq!(out[0].data()[1].to_bits(), (-0.0f32).to_bits());
+        assert!(out[0].data()[2].is_nan());
+
+        // Scalar (rank-0) elementwise output.
+        let mut g2 = Graph::new("scalar");
+        let a = g2.placeholder("a", &[]);
+        let c = g2.const_scalar(2.0);
+        let r = g2.add_op(OpKind::Mul, vec![a, c]).unwrap();
+        g2.set_outputs(vec![r]);
+        let g2 = Arc::new(g2);
+        run_both(&g2, &[Rc::new(Tensor::new(vec![], vec![3.5]))], "scalar graph");
+    }
+}

@@ -19,7 +19,10 @@
 //! 2. **`algebraic`** (`-O2` only) — identity rewrites: `x*1`, `1*x`,
 //!    `x/1`, `x-0`, `x+0`, `x*0`, double-negation, `transpose∘transpose`,
 //!    `reshape∘reshape` (collapsed to one reshape), identity permutes and
-//!    same-shape reshapes.
+//!    same-shape reshapes; plus transpose hoisting over matmul
+//!    (`transpose(a)·transpose(b)` → `transpose(b·a)`, one materialized
+//!    transpose instead of two — gated on provably finite operands, see
+//!    [`finite_elems`]).
 //! 3. **`cse`** — common-subexpression elimination keyed on per-node
 //!    structural hashes ([`Graph::node_structural_hash`]); structurally
 //!    identical op/const nodes collapse to the first occurrence
@@ -346,6 +349,20 @@ fn finite_nonneg(g: &Graph, id: NodeId) -> bool {
     }
 }
 
+/// Conservative: true when every element is provably finite and non-NaN
+/// (sign unconstrained). As with [`finite_nonneg`], only element-checked
+/// constants qualify — used to gate the transpose-hoisting matmul rewrite,
+/// whose bit hazards (NaN-payload selection in a commuted multiply, the
+/// kernel's skip-zero test moving between operands) all require a NaN or
+/// an infinity to observe.
+fn finite_elems(g: &Graph, id: NodeId) -> bool {
+    match &g.nodes[id].kind {
+        NodeKind::ConstScalar(v) => (*v as f32).is_finite(),
+        NodeKind::ConstTensor(t) => t.data().iter().all(|x| x.is_finite()),
+        _ => false,
+    }
+}
+
 /// One algebraic rewrite decision.
 enum Rewrite {
     /// Reuse an existing node (shape-identical by construction).
@@ -354,6 +371,9 @@ enum Rewrite {
     Op(OpKind, Vec<NodeId>),
     /// Replace with a constant.
     Const(Tensor),
+    /// Replace with `outer(inner(args))` — the pass's only two-op rewrite
+    /// (transpose hoisting emits a matmul *and* the hoisted transpose).
+    Wrap(OpKind, Vec<NodeId>, OpKind),
 }
 
 /// Decide whether `op(margs)` (args already mapped into `out`) simplifies.
@@ -433,6 +453,28 @@ fn simplify(out: &Graph, op: &OpKind, margs: &[NodeId], shape: &[usize]) -> Opti
             }
             None
         }
+        OpKind::MatMul => {
+            // transpose(a)·transpose(b) → transpose(b·a): every output
+            // element sums the same products over the same ascending-k
+            // order, so the only bit hazards are the commuted multiply
+            // (NaN-payload selection) and the kernel's skip-zero test
+            // moving between operands (±0.0 absorption) — both need a NaN
+            // or an infinity to observe, so the rewrite fires only when
+            // both operands are element-checked finite ([`finite_elems`]).
+            // Like `x*0`, in practice that means unfolded over-cap
+            // constants (smaller const transposes fold away first).
+            let (NodeKind::Op(OpKind::Transpose, ia), NodeKind::Op(OpKind::Transpose, ib)) =
+                (&out.nodes[margs[0]].kind, &out.nodes[margs[1]].kind)
+            else {
+                return None;
+            };
+            let (a, b) = (ia[0], ib[0]);
+            (out.nodes[a].shape.len() == 2
+                && out.nodes[b].shape.len() == 2
+                && finite_elems(out, a)
+                && finite_elems(out, b))
+                .then(|| Rewrite::Wrap(OpKind::MatMul, vec![b, a], OpKind::Transpose))
+        }
         _ => None,
     }
 }
@@ -457,6 +499,12 @@ fn algebraic(g: &Graph) -> (Graph, usize) {
                     Some(Rewrite::Const(t)) => {
                         rewrites += 1;
                         out.const_tensor(t)
+                    }
+                    Some(Rewrite::Wrap(inner_op, inner_args, outer_op)) => {
+                        rewrites += 1;
+                        let mid =
+                            out.add_op(inner_op, inner_args).expect("rewrite preserves shapes");
+                        out.add_op(outer_op, vec![mid]).expect("rewrite preserves shapes")
                     }
                     None => out.add_op(op.clone(), margs).expect("shapes were already inferred"),
                 }
@@ -746,6 +794,54 @@ mod tests {
         // O1 leaves algebraic identities alone.
         let o1 = optimize(&g, OptLevel::O1);
         assert!(o1.graph.num_ops() > 1);
+    }
+
+    #[test]
+    fn transpose_hoisting_over_matmul() {
+        // transpose(A)·transpose(B) over finite over-cap constants hoists
+        // to transpose(B·A): one materialized transpose instead of two.
+        let n = 65; // 65*65 = 4225 > FOLD_NUMEL_LIMIT: the consts stay unfolded
+        let mut rng = Rng::new(0xACED);
+        let mut g = Graph::new("th");
+        let a = g.const_tensor(Tensor::randn(&[n, n], &mut rng));
+        let b = g.const_tensor(Tensor::randn(&[n, n], &mut rng));
+        let x = g.placeholder("x", &[1, n]);
+        let ta = g.add_op(OpKind::Transpose, vec![a]).unwrap();
+        let tb = g.add_op(OpKind::Transpose, vec![b]).unwrap();
+        let m = g.add_op(OpKind::MatMul, vec![ta, tb]).unwrap();
+        let y = g.add_op(OpKind::MatMul, vec![x, m]).unwrap();
+        g.set_outputs(vec![y]);
+        let g = Arc::new(g);
+        let opt = optimize(&g, OptLevel::O2);
+        let alg = opt.passes.iter().find(|p| p.pass == "algebraic").unwrap();
+        assert!(alg.rewrites >= 1, "{:?}", opt.passes);
+        let transposes = opt
+            .graph
+            .nodes
+            .iter()
+            .filter(|nd| matches!(&nd.kind, NodeKind::Op(OpKind::Transpose, _)))
+            .count();
+        assert_eq!(transposes, 1, "two transposes must hoist into one");
+        assert_bitwise(&g, OptLevel::O2, 21);
+
+        // The gate is real: placeholder operands can't be proven finite
+        // (a NaN input would pick a different payload in the commuted
+        // multiply), so the same shape must NOT rewrite.
+        let mut g = Graph::new("th_gate");
+        let p = g.placeholder("p", &[n, n]);
+        let q = g.placeholder("q", &[n, n]);
+        let tp = g.add_op(OpKind::Transpose, vec![p]).unwrap();
+        let tq = g.add_op(OpKind::Transpose, vec![q]).unwrap();
+        let m = g.add_op(OpKind::MatMul, vec![tp, tq]).unwrap();
+        g.set_outputs(vec![m]);
+        let opt = optimize(&Arc::new(g), OptLevel::O2);
+        let transposes = opt
+            .graph
+            .nodes
+            .iter()
+            .filter(|nd| matches!(&nd.kind, NodeKind::Op(OpKind::Transpose, _)))
+            .count();
+        assert_eq!(transposes, 2, "unproven operands must keep both transposes");
     }
 
     #[test]

@@ -166,6 +166,45 @@
 //! latency, eager MLP step and compile-cache hit vs miss live there; CI
 //! smoke-runs the suite with `DEPYF_BENCH_QUICK=1`.
 //!
+//! ## Codegen backend
+//!
+//! `--backend codegen` ([`codegen`]) is the step past the interpreted
+//! `ExecPlan`: `Backend::lower` **compiles** the optimized graph into a
+//! flat [`codegen::LoopProgram`] — a linear instruction buffer over a
+//! slot-numbered value arena — and steady-state `call()`s just execute
+//! that buffer. Three things distinguish it from interpretation:
+//!
+//! * **Register allocation**: liveness analysis assigns every value a
+//!   numbered slot and reuses slots the moment their last reader has run
+//!   (the dump prints `peak live` vs total slot count); freed buffers are
+//!   recycled through a small free-list instead of reallocated.
+//! * **Loop specialization at lower time**: each fused elementwise region
+//!   becomes one `loop` instruction whose operand *stride classes*
+//!   (`dense` / `splat` / `row(period=k)` / `strided[..]`) are resolved
+//!   when the program is built — the common contiguous case runs a
+//!   straight-line chunk loop with no per-element odometer. Matmuls lower
+//!   to a k-blocked kernel with **fused epilogues** (bias-add /
+//!   activation applied to the output tile in-cache), and large panels
+//!   row-tile across a [`serve`] worker pool (`CodegenBackend::with_threads`)
+//!   in a per-element-order-preserving way, so threading is bitwise-safe.
+//! * **Transparency**: the whole program dumps as a readable
+//!   `__loopir_*.txt` artifact (`ArtifactKind::LoopIr`, indexed in
+//!   `manifest.json`). Each line is one instruction —
+//!   `i1   loop   s2 = [3, 4] <12 elems, 5 ops>` followed by its inputs'
+//!   stride classes and scalar steps, `i2   matmul s3 = s0 @ s1 [m=.. k=.. n=..]
+//!   path=blocked` plus its `epilogue:` steps, `eval` for the op kinds that
+//!   fall back to the reference executor — with `free [sN]` annotations
+//!   showing where slots die. Diff it against `__optimized_*.txt` to see
+//!   exactly what compilation did.
+//!
+//! Results are bitwise-equal to eager by construction (same scalar bodies,
+//! same accumulation order) and by evidence: the conformance sweep holds
+//! `codegen` to the oracle at `eps = 0` across the corpus at opt levels
+//! 0 and 2, and `depyf replay --backend codegen --against eager` bisects
+//! any suspicion. `benches/codegen.rs` gates the speedup that justifies
+//! the subsystem (≥1.5x on elementwise chains, ≥1.3x on matmul+epilogue
+//! vs the interpreted plan) into `BENCH_codegen.json`.
+//!
 //! ## Concurrent serving
 //!
 //! The serving story — compile once, dispatch from many threads — is a
@@ -310,6 +349,7 @@ pub mod api;
 pub mod backend;
 mod fnv;
 pub mod bytecode;
+pub mod codegen;
 pub mod corpus;
 pub mod debugger;
 pub mod decompiler;

@@ -56,7 +56,9 @@ usage:
       throughput record to <dir>/BENCH_serve.json (default dir: serve_out).
       Exits non-zero if any serving thread died. Backends that require the
       PJRT runtime (xla) are rejected — the runtime is thread-confined; use
-      eager/sharded/batched/pipelined/recording/async/resilient.
+      eager/sharded/batched/codegen/pipelined/recording/async/resilient.
+      Compiled plans spill to an on-disk cache (DEPYF_CACHE_DIR, default
+      .depyf_cache) so repeat fleets skip recompilation.
   depyf replay <trace.json|dump-dir> [--backend <name>|recorded]
                [--against <oracle>] [--eps <tol>] [--no-localize]
                [--opt-level 0|1|2]
@@ -82,7 +84,7 @@ flags:
                         transpose∘transpose, reshape∘reshape, gated x+0/x*0)
                         + fused elementwise chains in the eager executor
                    Optimization never changes results: levels 0 and 2 are
-                   bitwise-identical on eager/sharded/batched (the
+                   bitwise-identical on eager/sharded/batched/codegen (the
                    conformance suite enforces it). Traces record the
                    pre-optimizer graph, so `depyf replay --opt-level 0`
                    vs `2` bisects optimizer/fusion suspicions.
@@ -95,6 +97,9 @@ flags:
                                 outputs (dumps __plan_*.json + __hlo_*.txt)
                      batched    pads/buckets the dynamic leading dim so one
                                 executable serves multiple guard entries
+                     codegen    compiles the optimized graph to a flat,
+                                register-allocated loop program (bitwise-
+                                equal to eager; dumps __loopir_*.txt)
                      recording  wraps eager and records every call into a
                                 replayable __trace_*.json bundle; wrap any
                                 other backend as recording:<name>
@@ -185,7 +190,12 @@ fn resolve_backend(name: &str) -> Result<Arc<dyn Backend>, CliError> {
             .map_err(|e| usage(e.to_string()));
     }
     lookup_backend(name).ok_or_else(|| {
-        usage(format!("unknown --backend '{}' (registered: {})", name, backend_names().join(", ")))
+        usage(format!(
+            "unknown --backend '{}' (registered: {}; wrappers: recording:<inner>, \
+             async:<inner>, resilient:<inner>)",
+            name,
+            backend_names().join(", ")
+        ))
     })
 }
 
@@ -370,8 +380,8 @@ fn cmd_serve(args: &[String]) -> Result<(), CliError> {
     if backend.requires_runtime() {
         return Err(usage(format!(
             "--backend {} requires the PJRT runtime, which is thread-confined; \
-             serve supports eager, sharded, batched, pipelined, recording:<b>, \
-             async:<b> and resilient:<b>",
+             serve supports eager, sharded, batched, codegen, pipelined, \
+             recording:<b>, async:<b> and resilient:<b>",
             backend_name
         )));
     }
@@ -495,6 +505,17 @@ mod tests {
     fn unknown_backend_value_is_usage_error() {
         let args = vec!["run".to_string(), "nope.py".to_string(), "--backend".to_string(), "bogus".to_string()];
         assert_eq!(run_cli(&args), 2);
+    }
+
+    #[test]
+    fn unknown_backend_error_lists_wrapper_grammar() {
+        let Err(CliError::Usage(msg)) = resolve_backend("bogus") else {
+            panic!("bogus backend must be a usage error");
+        };
+        assert!(msg.contains("codegen"), "registered list names codegen: {}", msg);
+        assert!(msg.contains("recording:<inner>"), "wrapper grammar in error: {}", msg);
+        assert!(msg.contains("async:<inner>"), "wrapper grammar in error: {}", msg);
+        assert!(msg.contains("resilient:<inner>"), "wrapper grammar in error: {}", msg);
     }
 
     #[test]

@@ -17,7 +17,9 @@
 //!   k+1 of call i−1.
 //! - [`ModuleCache`] / [`CachingBackend`]: a process-shared compile cache
 //!   keyed by graph content hash, so N serving threads compile each
-//!   distinct graph once.
+//!   distinct graph once — spilling plan records to the persistent
+//!   [`DiskCache`] (`depyf serve` opens it automatically), so a fresh
+//!   fleet's first miss consults the plan index before compiling.
 //! - [`run_serve`]: the `depyf serve` driver — N OS threads, each running
 //!   its own dynamo sessions over the table1 model corpus, outputs
 //!   checked against a single-thread reference run, per-thread metrics
@@ -46,7 +48,7 @@ use crate::corpus::model_cases;
 use crate::dynamo::{Dynamo, DynamoConfig};
 use crate::graph::OptLevel;
 use crate::metrics::MetricsSnapshot;
-use crate::runtime::Counter;
+use crate::runtime::{Counter, DiskCache};
 use crate::vm::Vm;
 
 /// A stable small tag for the cache key ([`OptLevel`] carries no data).
@@ -62,10 +64,21 @@ fn opt_tag(level: &OptLevel) -> u8 {
 /// hash)` → compiled module. Reads take the `RwLock` shared, so dispatch
 /// threads looking up already-compiled graphs never serialize; compiles
 /// happen *outside* the lock and the first finished insert wins.
+///
+/// With [`ModuleCache::with_disk`], the cache **spills to the persistent
+/// plan index**: a memory miss consults the on-disk [`DiskCache`] before
+/// compiling (a hit — counted in `disk_hits` and the serve summary —
+/// means an earlier fleet already lowered this exact `(backend, opt,
+/// graph)` and its compile plan is on record), and a compile whose plan
+/// is not yet indexed persists it after lowering. Compiled modules
+/// themselves are process-local (they hold live closures), so the disk
+/// layer shares *plans* across processes, never executables.
 pub struct ModuleCache {
     map: RwLock<HashMap<(String, u8, u64), Arc<dyn CompiledModule>>>,
     hits: Counter,
     misses: Counter,
+    disk: Option<Arc<DiskCache>>,
+    disk_hits: Counter,
 }
 
 impl Default for ModuleCache {
@@ -76,7 +89,20 @@ impl Default for ModuleCache {
 
 impl ModuleCache {
     pub fn new() -> ModuleCache {
-        ModuleCache { map: RwLock::new(HashMap::new()), hits: Counter::new(), misses: Counter::new() }
+        ModuleCache {
+            map: RwLock::new(HashMap::new()),
+            hits: Counter::new(),
+            misses: Counter::new(),
+            disk: None,
+            disk_hits: Counter::new(),
+        }
+    }
+
+    /// A module cache that spills its plan records to `disk` (the same
+    /// [`DiskCache`] the PJRT runtime persists HLO into — module records
+    /// use a `module:` key prefix, so the namespaces never collide).
+    pub fn with_disk(disk: Arc<DiskCache>) -> ModuleCache {
+        ModuleCache { disk: Some(disk), ..ModuleCache::new() }
     }
 
     /// Modules served from cache instead of compiled.
@@ -87,6 +113,11 @@ impl ModuleCache {
     /// Modules actually compiled through the inner backend.
     pub fn misses(&self) -> u64 {
         self.misses.get()
+    }
+
+    /// Memory misses whose plan was already in the persistent index.
+    pub fn disk_hits(&self) -> u64 {
+        self.disk_hits.get()
     }
 
     pub fn len(&self) -> usize {
@@ -110,6 +141,31 @@ impl ModuleCache {
     ) -> Arc<dyn CompiledModule> {
         let mut map = self.map.write().unwrap_or_else(PoisonError::into_inner);
         Arc::clone(map.entry(key).or_insert(module))
+    }
+
+    /// Stable persistent-index key for a module cache entry.
+    fn disk_key(key: &(String, u8, u64)) -> String {
+        format!("module:{}:{}:{:016x}", key.0, key.1, key.2)
+    }
+
+    /// Consult the persistent plan index for a memory miss. `true` (and a
+    /// `disk_hits` bump) when the plan is already on record — the caller
+    /// then skips re-persisting it after compiling.
+    fn disk_lookup(&self, key: &str) -> bool {
+        let Some(disk) = &self.disk else { return false };
+        let hit = disk.get(key).is_some();
+        if hit {
+            self.disk_hits.bump();
+        }
+        hit
+    }
+
+    /// Persist a freshly-compiled module's plan record. Best-effort, like
+    /// every [`DiskCache`] write: IO failure leaves the index cold.
+    fn disk_store(&self, key: &str, plan_text: &str, n_outputs: usize) {
+        if let Some(disk) = &self.disk {
+            disk.put(key, plan_text, n_outputs);
+        }
     }
 }
 
@@ -152,11 +208,20 @@ impl Backend for CachingBackend {
             self.cache.hits.bump();
             return Ok(module);
         }
+        // Memory miss: consult the persistent plan index before compiling.
+        let disk_key = ModuleCache::disk_key(&key);
+        let plan_on_record = self.cache.disk_lookup(&disk_key);
         // Compile outside the lock: a slow lower on one thread must not
         // block other threads' cache reads.
         let module = self.inner.lower(req, plan)?;
         self.cache.misses.bump();
-        Ok(self.cache.insert_if_absent(key, module))
+        // First-insert-wins is unchanged: the winning module comes from the
+        // in-memory entry, never from disk.
+        let module = self.cache.insert_if_absent(key, module);
+        if !plan_on_record {
+            self.cache.disk_store(&disk_key, &plan.to_json(), req.graph.outputs.len());
+        }
+        Ok(module)
     }
 }
 
@@ -210,6 +275,9 @@ pub struct ServeReport {
     pub p99_ms: f64,
     pub module_cache_hits: u64,
     pub module_cache_misses: u64,
+    /// Memory misses whose compile plan was already in the persistent
+    /// on-disk index (0 when serving without a disk cache).
+    pub module_cache_disk_hits: u64,
     /// Serving threads that panicked clean through `run_worker` (anything
     /// here makes [`run_serve`] exit non-zero).
     pub dead_threads: u64,
@@ -225,7 +293,7 @@ impl ServeReport {
     /// Human-readable summary printed by `depyf serve`.
     pub fn render(&self) -> String {
         let mut out = format!(
-            "depyf serve: backend={} threads={} iters={}\n  case-runs={} errors={} elapsed={:.1}ms throughput={:.1} runs/s\n  latency p50={:.3}ms p99={:.3}ms\n  module-cache hits={} misses={}\n  dynamo: captures={} cache_hits={} cache_misses={} graph_breaks={} fallbacks={} evictions={}\n",
+            "depyf serve: backend={} threads={} iters={}\n  case-runs={} errors={} elapsed={:.1}ms throughput={:.1} runs/s\n  latency p50={:.3}ms p99={:.3}ms\n  module-cache hits={} misses={} disk_hits={}\n  dynamo: captures={} cache_hits={} cache_misses={} graph_breaks={} fallbacks={} evictions={}\n",
             self.backend,
             self.threads,
             self.iters,
@@ -237,6 +305,7 @@ impl ServeReport {
             self.p99_ms,
             self.module_cache_hits,
             self.module_cache_misses,
+            self.module_cache_disk_hits,
             self.metrics.captures,
             self.metrics.cache_hits,
             self.metrics.cache_misses,
@@ -270,7 +339,7 @@ impl ServeReport {
     /// The `"serve"` object inlined into the merged `metrics.json`.
     fn to_serve_json(&self) -> String {
         format!(
-            "{{\"backend\": \"{}\", \"threads\": {}, \"iters\": {}, \"case_runs\": {}, \"errors\": {}, \"dead_threads\": {}, \"throughput_runs_per_s\": {:.3}, \"p50_ms\": {:.3}, \"p99_ms\": {:.3}, \"module_cache_hits\": {}, \"module_cache_misses\": {}}}",
+            "{{\"backend\": \"{}\", \"threads\": {}, \"iters\": {}, \"case_runs\": {}, \"errors\": {}, \"dead_threads\": {}, \"throughput_runs_per_s\": {:.3}, \"p50_ms\": {:.3}, \"p99_ms\": {:.3}, \"module_cache_hits\": {}, \"module_cache_misses\": {}, \"module_cache_disk_hits\": {}}}",
             crate::api::json::escape(&self.backend),
             self.threads,
             self.iters,
@@ -282,6 +351,7 @@ impl ServeReport {
             self.p99_ms,
             self.module_cache_hits,
             self.module_cache_misses,
+            self.module_cache_disk_hits,
         )
     }
 }
@@ -414,6 +484,20 @@ pub fn serve_once_with(
     limit: usize,
     deadline_ms: Option<u64>,
 ) -> Result<ServeReport, DepyfError> {
+    serve_once_spilling(threads, iters, backend_name, limit, deadline_ms, None)
+}
+
+/// [`serve_once_with`] plus an optional persistent [`DiskCache`] the
+/// module cache spills plan records into (what `depyf serve` uses — see
+/// [`ModuleCache::with_disk`]).
+pub fn serve_once_spilling(
+    threads: usize,
+    iters: usize,
+    backend_name: &str,
+    limit: usize,
+    deadline_ms: Option<u64>,
+    disk: Option<Arc<DiskCache>>,
+) -> Result<ServeReport, DepyfError> {
     let inner_name = match backend_name {
         "resilient" => "eager",
         other => other.strip_prefix("resilient:").unwrap_or(other),
@@ -427,7 +511,10 @@ pub fn serve_once_with(
     }
     let resilient = Arc::new(crate::backend::ResilientBackend::new(inner));
     let rstats = resilient.stats();
-    let cache = Arc::new(ModuleCache::new());
+    let cache = Arc::new(match disk {
+        Some(d) => ModuleCache::with_disk(d),
+        None => ModuleCache::new(),
+    });
     let backend: Arc<dyn Backend> =
         Arc::new(CachingBackend::new(resilient as Arc<dyn Backend>, Arc::clone(&cache)));
     let corpus = Arc::new(build_corpus(limit)?);
@@ -508,6 +595,7 @@ pub fn serve_once_with(
         p99_ms: percentile(&latencies, 0.99),
         module_cache_hits: cache.hits(),
         module_cache_misses: cache.misses(),
+        module_cache_disk_hits: cache.disk_hits(),
         dead_threads,
         metrics: merged,
         baseline_throughput: None,
@@ -521,11 +609,31 @@ pub fn serve_once_with(
 /// (throughput vs thread count) into `opts.out_dir`, and fail hard if any
 /// case run diverged from the single-thread reference.
 pub fn run_serve(opts: &ServeOptions) -> Result<ServeReport, DepyfError> {
-    let baseline = serve_once_with(1, opts.iters, &opts.backend, usize::MAX, opts.deadline_ms)?;
+    // The fleet-level plan index: same directory the PJRT runtime uses
+    // (`$DEPYF_CACHE_DIR`, default `.depyf_cache`). A broken cache dir
+    // must not take down serving — spill is simply disabled.
+    let cache_dir = std::env::var(crate::runtime::CACHE_DIR_ENV)
+        .unwrap_or_else(|_| ".depyf_cache".into());
+    let disk = DiskCache::open(&cache_dir).ok().map(Arc::new);
+    let baseline = serve_once_spilling(
+        1,
+        opts.iters,
+        &opts.backend,
+        usize::MAX,
+        opts.deadline_ms,
+        disk.clone(),
+    )?;
     let mut report = if opts.threads == 1 {
         baseline.clone()
     } else {
-        serve_once_with(opts.threads, opts.iters, &opts.backend, usize::MAX, opts.deadline_ms)?
+        serve_once_spilling(
+            opts.threads,
+            opts.iters,
+            &opts.backend,
+            usize::MAX,
+            opts.deadline_ms,
+            disk,
+        )?
     };
     report.baseline_throughput = Some(baseline.throughput);
     report.speedup = Some(if baseline.throughput > 0.0 {
@@ -637,6 +745,39 @@ mod tests {
         assert_eq!(cache.len(), 1);
         assert_eq!(cache.hits() + cache.misses(), 4);
         assert!(cache.hits() >= 1, "hits={} misses={}", cache.hits(), cache.misses());
+    }
+
+    #[test]
+    fn module_cache_spills_plans_to_disk_and_counts_disk_hits() {
+        let dir = std::env::temp_dir().join(format!("depyf_spill_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let disk = Arc::new(DiskCache::open(&dir).unwrap());
+        // Fleet 1: memory miss + index miss → compile, persist the plan.
+        let c1 = Arc::new(ModuleCache::with_disk(Arc::clone(&disk)));
+        let b1 = CachingBackend::new(Arc::new(EagerBackend), Arc::clone(&c1));
+        let req = CompileRequest::new("__compiled_fn_1", Arc::new(mul_graph()));
+        let plan = b1.plan(&req).unwrap();
+        b1.lower(&req, &plan).unwrap();
+        assert_eq!((c1.misses(), c1.disk_hits()), (1, 0));
+        assert_eq!(disk.len(), 1, "plan record must be persisted");
+        // Fleet 2 (a fresh process, simulated by a fresh ModuleCache):
+        // memory miss, but the plan index already has the record.
+        let c2 = Arc::new(ModuleCache::with_disk(Arc::clone(&disk)));
+        let b2 = CachingBackend::new(Arc::new(EagerBackend), Arc::clone(&c2));
+        let module = b2.lower(&req, &plan).unwrap();
+        assert_eq!((c2.misses(), c2.disk_hits()), (1, 1));
+        // First-insert-wins untouched: the next lower is a pure memory hit
+        // on the same winning module, and nothing is rewritten on disk.
+        let again = b2.lower(&req, &plan).unwrap();
+        assert!(Arc::ptr_eq(&module, &again));
+        assert_eq!(c2.hits(), 1);
+        assert_eq!(disk.len(), 1);
+        // The persisted record is the compile plan itself, parseable back.
+        let key = ModuleCache::disk_key(&("eager".into(), opt_tag(&req.opt_level), req.cache_key));
+        let (text, n) = disk.get(&key).expect("indexed plan record");
+        assert_eq!(n, 1);
+        assert!(CompilePlan::parse(&text).is_ok(), "persisted text must be a valid plan");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

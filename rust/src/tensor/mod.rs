@@ -80,6 +80,14 @@ impl Tensor {
         &self.data
     }
 
+    /// Reclaim the underlying buffer when this is the only owner (`None`
+    /// when the data is shared). Lets executors recycle dead-value
+    /// allocations instead of dropping them — see the codegen backend's
+    /// free-list.
+    pub(crate) fn into_data(self) -> Option<Vec<f32>> {
+        Arc::try_unwrap(self.data).ok()
+    }
+
     /// The single element of a rank-0/1-element tensor (`.item()`).
     pub fn item(&self) -> f32 {
         assert_eq!(self.numel(), 1, "item() on tensor with {} elements", self.numel());

@@ -114,6 +114,36 @@ fn module_call_errors_degrade_to_bitwise_correct_eager() {
     });
 }
 
+/// The same call-fault round through the codegen backend
+/// (`resilient:codegen`): failing loop-program dispatches retry, then
+/// degrade to the eager fallback — bitwise-equal to the reference by the
+/// conformance gate — and the counters reconcile exactly as for eager.
+#[test]
+fn codegen_under_call_faults_degrades_bitwise_correctly() {
+    let _serial = chaos_lock();
+    let spec = "seed=41;module.call=error@1/2";
+    round("codegen_call_error", spec, || {
+        let guard = install(spec);
+        let report = serve_once_with(4, 2, "resilient:codegen", 3, None).expect("serve");
+        let st = faults::stats(Site::ModuleCall);
+        drop(guard);
+        assert_eq!(
+            report.errors, 0,
+            "degraded codegen calls must stay bitwise-correct: {:?}",
+            report.failures
+        );
+        assert_eq!(report.dead_threads, 0);
+        assert!(st.fired > 0, "plan fired nothing over {} hits", st.hits);
+        let m = &report.metrics;
+        assert_eq!(
+            st.fired,
+            m.retries + m.degraded_calls,
+            "every injected fault is either retried or degraded (hits {})",
+            st.hits
+        );
+    });
+}
+
 /// The acceptance-criteria round: `module.call` panics in some threads
 /// must never fail a request on any thread, never kill a serving thread,
 /// and never leave a lock poisoned — proven by a clean serve in the same

@@ -6,8 +6,10 @@
 //! bundle is then pushed through the **text round-trip** (parse of the
 //! rendered bundle — the serialization layer is under test too) and
 //! replayed on every other backend in differential mode. sharded/batched
-//! lower to eager partitions here (no runtime), so they must be
-//! **bit-exact**; XLA fuses and reorders float math, so it gets an eps.
+//! lower to eager partitions here (no runtime) and codegen's loop
+//! programs replicate the eager kernels' accumulation order exactly, so
+//! all three must be **bit-exact**; XLA fuses and reorders float math,
+//! so it gets an eps.
 //!
 //! Two graph sources feed the sweep:
 //! * the full table1 model corpus (140 programs through dynamo), and
@@ -35,6 +37,7 @@ use depyf::backend::{
     ShardedBackend,
 };
 use depyf::bytecode::IsaVersion;
+use depyf::codegen::CodegenBackend;
 use depyf::corpus::model_cases;
 use depyf::dynamo::{Dynamo, DynamoConfig};
 use depyf::runtime::Runtime;
@@ -146,6 +149,7 @@ fn table1_corpus_record_replay_cross_backend() {
             assert_conforms(&bundle, &ShardedBackend::new(), 0.0, true, &tag);
             assert_conforms(&bundle, &ShardedBackend::with_max_ops(1), 0.0, true, &tag);
             assert_conforms(&bundle, &BatchedBackend::new(), 0.0, true, &tag);
+            assert_conforms(&bundle, &CodegenBackend::new(), 0.0, true, &tag);
         }
     }
     assert!(total_bundles >= if quick() { 10 } else { 100 }, "only {} bundles recorded", total_bundles);
@@ -226,6 +230,7 @@ fn generated_graphs_conform_across_backends() {
         assert_conforms(&bundle, &ShardedBackend::new(), 0.0, true, &tag);
         assert_conforms(&bundle, &ShardedBackend::with_max_ops(1), 0.0, true, &tag);
         assert_conforms(&bundle, &BatchedBackend::new(), 0.0, true, &tag);
+        assert_conforms(&bundle, &CodegenBackend::new(), 0.0, true, &tag);
     }
 }
 
@@ -298,6 +303,10 @@ fn opt_level_0_vs_2_is_bitwise_clean_across_backends() {
         Box::new(|| Box::new(ShardedBackend::new())),
         Box::new(|| Box::new(ShardedBackend::with_max_ops(1))),
         Box::new(|| Box::new(BatchedBackend::new())),
+        Box::new(|| Box::new(CodegenBackend::new())),
+        // Threaded row-tiling preserves per-element accumulation order, so
+        // the multi-threaded loop programs sit under the same bitwise gate.
+        Box::new(|| Box::new(CodegenBackend::with_threads(4))),
     ];
     // Table1 corpus (sampled — full-capture families cover every op shape).
     let cases = model_cases();

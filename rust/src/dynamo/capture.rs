@@ -871,10 +871,17 @@ impl<'a> Tracer<'a> {
                     return Ok(None);
                 }
                 _ if unary_op(name).is_some() && args.len() == 1 => {
-                    let na = self.tensorify(&args[0])?;
-                    let s = self.add_node(unary_op(name).unwrap(), vec![na])?;
-                    self.stack.push(s);
-                    return Ok(None);
+                    // The guard established `is_some`; bind with `if let` so a
+                    // disagreeing re-evaluation falls through to the generic
+                    // tensor-arg graph break below instead of panicking.
+                    if let Some(k) = unary_op(name) {
+                        let na = self.tensorify(&args[0])?;
+                        let s = self.add_node(k, vec![na])?;
+                        self.stack.push(s);
+                        return Ok(None);
+                    }
+                    let operands = vec![callee, args[0].clone()];
+                    return Ok(Some(self.brk(cur, InlineEmit::CallFn(1), operands, &format!("builtin '{}' with tensor args", name))));
                 }
                 "layernorm" if args.len() == 3 => {
                     let ns: Result<Vec<NodeId>, Abort> = args.iter().map(|a| self.tensorify(a)).collect();
@@ -1209,7 +1216,22 @@ impl<'a> Tracer<'a> {
                     &format!("data-dependent .{}() reads tensor contents", name),
                 )))
             }
-            other => Err(Abort(format!("tensor method '{}' unsupported in graph", other))),
+            // Anything else — an unknown method name, or a known one with an
+            // arity the graph arms above don't model — degrades to a graph
+            // break: the VM replays the call for real (and raises its own
+            // error for a genuinely unsupported method) instead of the whole
+            // capture aborting or, worse, panicking.
+            other => {
+                let argc = args.len() as u32;
+                let mut operands = vec![recv];
+                operands.extend(args);
+                Ok(Some(self.brk(
+                    cur,
+                    InlineEmit::CallMethod { name: other.to_string(), argc },
+                    operands,
+                    &format!("tensor method '{}' unsupported in graph", other),
+                )))
+            }
         }
     }
 }

@@ -884,4 +884,50 @@ mod tests {
             dynamo.log()
         );
     }
+
+    /// Run a failing module twice (plain and hooked); the error messages
+    /// must agree, and the capture must not have aborted into a skip.
+    fn check_err(src: &str) -> (Rc<Dynamo>, String) {
+        let plain = Vm::new();
+        plain.seed(7);
+        let expected = plain.exec_source(src, IsaVersion::V310).unwrap_err().message;
+
+        let mut vm = Vm::new();
+        vm.seed(7);
+        let dynamo = Dynamo::new(DynamoConfig::default());
+        vm.eval_hook = Some(dynamo.clone());
+        let got = vm.exec_source(src, IsaVersion::V310).unwrap_err().message;
+        assert_eq!(got, expected, "error changed under dynamo for:\n{}", src);
+        (dynamo, got)
+    }
+
+    // Fuzzer-derived: an unknown tensor method used to abort the whole
+    // capture; now it graph-breaks and the VM replays the call (raising the
+    // same error the plain run raises).
+    #[test]
+    fn unknown_tensor_method_breaks_instead_of_aborting() {
+        let src = "def f(x):\n    y = x * 2\n    return y.clamp()\nprint(f(torch.ones([3])).sum().item())\n";
+        let (d, msg) = check_err(src);
+        assert!(msg.contains("clamp"), "{}", msg);
+        assert!(d.metrics.graph_breaks.get() >= 1, "unknown method must graph-break: {:?}", d.log());
+        assert!(d.metrics.captures.get() >= 1, "prefix before the break must still compile: {:?}", d.log());
+    }
+
+    // Fuzzer-derived: a known unary method called with the wrong arity falls
+    // through every graph arm; it must degrade to the VM, not panic.
+    #[test]
+    fn wrong_arity_tensor_method_degrades_to_vm() {
+        let src = "def f(x):\n    return x.relu(1)\nprint(f(torch.ones([2])).sum().item())\n";
+        let (d, _) = check_err(src);
+        assert!(d.metrics.graph_breaks.get() >= 1, "{:?}", d.log());
+    }
+
+    // The graceful break also covers calls the VM *does* execute: the break
+    // resumes and the program completes with the plain-VM output.
+    #[test]
+    fn data_dependent_method_arg_still_runs_correctly() {
+        let src = "def f(x):\n    a = int(x.mean().item()) * 0\n    y = x + 1\n    return y.sum(a)\nprint(f(torch.ones([2, 3])).sum().item())\n";
+        let (d, _) = check(src);
+        assert!(d.metrics.graph_breaks.get() >= 1, "{:?}", d.log());
+    }
 }

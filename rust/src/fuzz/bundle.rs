@@ -1,0 +1,187 @@
+//! The committed regression-bundle format (`tests/fuzz_regressions/*.json`).
+//!
+//! A bundle is everything needed to re-check one finding long after the
+//! fuzzer run that produced it: the (shrunken) source, the seed/iteration
+//! coordinates it came from, the backend × opt-level it diverged on, both
+//! observed behaviours, and — when the replay localizer could pin it — the
+//! culprit op. The replay sweep in `tests/fuzz_regressions.rs` re-executes
+//! every committed bundle bitwise on every backend in CI.
+
+use std::path::Path;
+
+use crate::api::json::{self, Json};
+use crate::api::DepyfError;
+
+pub const FUZZ_BUNDLE_SCHEMA: u32 = 1;
+
+/// One committed fuzz finding.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FuzzBundle {
+    /// File-stem-safe bundle name.
+    pub name: String,
+    /// Fuzzer coordinates (informational once committed).
+    pub seed: u64,
+    pub iter: u64,
+    /// Backend name (registry name or wrapper composition) the divergence
+    /// was observed on.
+    pub backend: String,
+    pub opt_level: u8,
+    /// `DivergenceKind::as_str` value.
+    pub kind: String,
+    /// The (shrunken) program source.
+    pub source: String,
+    /// Plain-VM behaviour (`RunOutcome::render`).
+    pub expected: String,
+    /// Hooked behaviour at the time of capture.
+    pub actual: String,
+    /// Replay-localizer verdict, when one was reached.
+    pub culprit: Option<String>,
+    /// Free-form context for future readers.
+    pub note: Option<String>,
+    /// When true, the regression sweep asserts the plain run's rendering
+    /// equals `expected` *exactly* (hand-computed outputs). When false,
+    /// `expected` is informational and only plain-vs-hooked agreement is
+    /// enforced.
+    pub strict: bool,
+    /// When true, the plain run must end in a typed error (the bundle pins
+    /// a previously-panicking or previously-aborting input).
+    pub expect_error: bool,
+}
+
+impl FuzzBundle {
+    pub fn to_json(&self) -> String {
+        let opt_str = |v: &Option<String>| match v {
+            Some(s) => format!("\"{}\"", json::escape(s)),
+            None => "null".to_string(),
+        };
+        format!(
+            "{{\n  \"schema\": {},\n  \"name\": \"{}\",\n  \"seed\": \"{}\",\n  \"iter\": {},\n  \"backend\": \"{}\",\n  \"opt_level\": {},\n  \"kind\": \"{}\",\n  \"source\": \"{}\",\n  \"expected\": \"{}\",\n  \"actual\": \"{}\",\n  \"culprit\": {},\n  \"note\": {},\n  \"strict\": {},\n  \"expect_error\": {}\n}}\n",
+            FUZZ_BUNDLE_SCHEMA,
+            json::escape(&self.name),
+            self.seed,
+            self.iter,
+            json::escape(&self.backend),
+            self.opt_level,
+            json::escape(&self.kind),
+            json::escape(&self.source),
+            json::escape(&self.expected),
+            json::escape(&self.actual),
+            opt_str(&self.culprit),
+            opt_str(&self.note),
+            self.strict,
+            self.expect_error,
+        )
+    }
+
+    pub fn parse(text: &str) -> Result<FuzzBundle, DepyfError> {
+        let doc = json::parse(text)?;
+        let bad = |what: &str| DepyfError::Parse(format!("fuzz bundle: missing or malformed '{}'", what));
+        let str_field = |key: &str| -> Result<String, DepyfError> {
+            doc.get(key).and_then(Json::as_str).map(str::to_string).ok_or_else(|| bad(key))
+        };
+        let num_field = |key: &str| -> Result<f64, DepyfError> {
+            doc.get(key).and_then(Json::as_f64).ok_or_else(|| bad(key))
+        };
+        let opt_field = |key: &str| -> Option<String> {
+            doc.get(key).and_then(Json::as_str).map(str::to_string)
+        };
+        let bool_field = |key: &str| -> bool {
+            matches!(doc.get(key), Some(Json::Bool(true)))
+        };
+        let schema = num_field("schema")? as u32;
+        if schema != FUZZ_BUNDLE_SCHEMA {
+            return Err(DepyfError::Parse(format!(
+                "fuzz bundle: schema {} unsupported (expected {})",
+                schema, FUZZ_BUNDLE_SCHEMA
+            )));
+        }
+        // Seed is a string so u64 values survive the f64 number path.
+        let seed = str_field("seed")?.parse::<u64>().map_err(|_| bad("seed"))?;
+        Ok(FuzzBundle {
+            name: str_field("name")?,
+            seed,
+            iter: num_field("iter")? as u64,
+            backend: str_field("backend")?,
+            opt_level: num_field("opt_level")? as u8,
+            kind: str_field("kind")?,
+            source: str_field("source")?,
+            expected: str_field("expected")?,
+            actual: str_field("actual")?,
+            culprit: opt_field("culprit"),
+            note: opt_field("note"),
+            strict: bool_field("strict"),
+            expect_error: bool_field("expect_error"),
+        })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<FuzzBundle, DepyfError> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| DepyfError::Parse(format!("read {}: {}", path.as_ref().display(), e)))?;
+        FuzzBundle::parse(&text)
+    }
+
+    /// Write the bundle as `<dir>/<name>.json`; returns the path.
+    pub fn save(&self, dir: impl AsRef<Path>) -> Result<std::path::PathBuf, DepyfError> {
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir)
+            .map_err(|e| DepyfError::Parse(format!("mkdir {}: {}", dir.display(), e)))?;
+        let path = dir.join(format!("{}.json", self.name));
+        std::fs::write(&path, self.to_json())
+            .map_err(|e| DepyfError::Parse(format!("write {}: {}", path.display(), e)))?;
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> FuzzBundle {
+        FuzzBundle {
+            name: "fuzz_s42_i7_codegen_o2".into(),
+            seed: 42,
+            iter: 7,
+            backend: "codegen".into(),
+            opt_level: 2,
+            kind: "output-divergence".into(),
+            source: "def f(x):\n    return (x * 2)\n__r0 = f(torch.rand([3]))\nprint(__r0.sum().item())\n".into(),
+            expected: "status: ok\noutput: \"1.5\\n\"".into(),
+            actual: "status: ok\noutput: \"3.0\\n\"".into(),
+            culprit: Some("first divergence at node v1 (mul)".into()),
+            note: None,
+            strict: false,
+            expect_error: false,
+        }
+    }
+
+    #[test]
+    fn json_round_trip_is_lossless() {
+        let b = sample();
+        let back = FuzzBundle::parse(&b.to_json()).unwrap();
+        assert_eq!(back, b);
+    }
+
+    #[test]
+    fn seed_survives_as_u64() {
+        let mut b = sample();
+        b.seed = u64::MAX;
+        let back = FuzzBundle::parse(&b.to_json()).unwrap();
+        assert_eq!(back.seed, u64::MAX);
+    }
+
+    #[test]
+    fn unknown_schema_is_rejected() {
+        let text = sample().to_json().replace("\"schema\": 1", "\"schema\": 99");
+        assert!(FuzzBundle::parse(&text).is_err());
+    }
+
+    #[test]
+    fn save_and_load_round_trip() {
+        let dir = std::env::temp_dir().join(format!("depyf_fuzz_bundle_{}", std::process::id()));
+        let b = sample();
+        let path = b.save(&dir).unwrap();
+        let back = FuzzBundle::load(&path).unwrap();
+        assert_eq!(back, b);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

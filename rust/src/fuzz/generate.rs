@@ -1,0 +1,197 @@
+//! Seeded program generation from composable templates.
+//!
+//! Every random choice flows through one [`Rng`] seeded per iteration, so
+//! `(seed, iter)` fully determines the program — the property the CI
+//! fuzz-smoke job and `--seed`-based repro both rely on.
+
+use crate::tensor::Rng;
+
+use super::prog::{CallSite, ExitKind, Expr, Frag, Helper, HelperKind, LoopExit, Prog};
+
+/// Zero-arg tensor methods safe for any shape and bounded on `[0, 1)`-ish
+/// inputs (no NaN/inf producers — see [`Expr`] docs).
+pub const METHODS: &[&str] = &["relu", "gelu", "tanh", "sigmoid", "abs", "neg", "softmax"];
+
+/// `torch.<name>(x)` unary builtins captured as graph ops.
+pub const TORCH_UNARY: &[&str] = &["relu", "gelu", "tanh", "softmax"];
+
+/// Float literals used by [`Expr::AddFloat`] (exactly representable, so
+/// rendering and re-parsing round-trip bit-exactly).
+pub const FLOATS: &[&str] = &["0.5", "0.25", "1.5"];
+
+/// Call-site shapes: 1-D and 2-D, all small. Shape diversity across call
+/// sites is what exercises guard specialization and recompiles.
+pub const SHAPES: &[&[usize]] = &[&[4], &[8], &[2, 3], &[3, 2], &[6], &[2, 2]];
+
+fn pick<'a, T>(rng: &mut Rng, xs: &'a [T]) -> &'a T {
+    &xs[rng.below(xs.len())]
+}
+
+/// Build a random tensor expression over the variables in scope.
+fn gen_expr(rng: &mut Rng, tensors: &[String], scalars: &[String], helpers: &[Helper], depth: usize) -> Expr {
+    if depth == 0 {
+        return Expr::Var(pick(rng, tensors).clone());
+    }
+    match rng.below(8) {
+        0 => {
+            let op = *pick(rng, &['+', '-', '*']);
+            let a = gen_expr(rng, tensors, scalars, helpers, depth - 1);
+            let b = gen_expr(rng, tensors, scalars, helpers, depth - 1);
+            Expr::Bin(op, Box::new(a), Box::new(b))
+        }
+        1 => Expr::Method(pick(rng, METHODS).to_string(), Box::new(gen_expr(rng, tensors, scalars, helpers, depth - 1))),
+        2 => Expr::Torch(pick(rng, TORCH_UNARY).to_string(), Box::new(gen_expr(rng, tensors, scalars, helpers, depth - 1))),
+        3 => Expr::ScaleInt(Box::new(gen_expr(rng, tensors, scalars, helpers, depth - 1)), 1 + rng.below(4) as i64),
+        4 => Expr::AddFloat(Box::new(gen_expr(rng, tensors, scalars, helpers, depth - 1)), pick(rng, FLOATS).to_string()),
+        5 if !scalars.is_empty() => {
+            Expr::ScaleVar(Box::new(gen_expr(rng, tensors, scalars, helpers, depth - 1)), pick(rng, scalars).clone())
+        }
+        6 if !helpers.is_empty() => {
+            let h = pick(rng, helpers).name.clone();
+            Expr::Call(h, Box::new(gen_expr(rng, tensors, scalars, helpers, depth - 1)))
+        }
+        _ => Expr::Var(pick(rng, tensors).clone()),
+    }
+}
+
+fn gen_exit(rng: &mut Rng, n: i64) -> Option<LoopExit> {
+    match rng.below(3) {
+        0 => None,
+        1 => Some(LoopExit { when: rng.below(n.max(1) as usize) as i64, kind: ExitKind::Break }),
+        _ => Some(LoopExit { when: rng.below(n.max(1) as usize) as i64, kind: ExitKind::Continue }),
+    }
+}
+
+/// Generate a fresh program. All names are positional (`t0`, `s0`, `i0`,
+/// ...), so two structurally equal programs render to identical source.
+pub fn generate(rng: &mut Rng) -> Prog {
+    let mut helpers = Vec::new();
+    if rng.below(2) == 0 {
+        helpers.push(Helper { name: "h0".into(), kind: HelperKind::Plain { k: 1 + rng.below(4) as i64 } });
+    }
+    if rng.below(3) == 0 {
+        helpers.push(Helper { name: "g0".into(), kind: HelperKind::Closure { k: 1 + rng.below(3) as i64 } });
+    }
+
+    let mut tensors: Vec<String> = vec!["x".into()];
+    let mut scalars: Vec<String> = Vec::new();
+    let mut body: Vec<Frag> = Vec::new();
+    let mut next_t = 0usize;
+    let mut next_s = 0usize;
+    let mut next_loop = 0usize;
+    let mut next_list = 0usize;
+
+    let nfrags = 2 + rng.below(3);
+    for _ in 0..nfrags {
+        let dst = format!("t{}", next_t);
+        next_t += 1;
+        let frag = match rng.below(7) {
+            0 | 1 => Frag::Assign { dst: dst.clone(), expr: gen_expr(rng, &tensors, &scalars, &helpers, 2) },
+            2 => {
+                // Scalar definition + immediate tensor use (mixed int/float
+                // arithmetic feeding tensor ops).
+                let s = format!("s{}", next_s);
+                next_s += 1;
+                let text = match rng.below(4) {
+                    0 => "(2 + 1)".to_string(),
+                    1 => "(3 * 2)".to_string(),
+                    2 => "(5 - 3)".to_string(),
+                    _ => format!("{}", 1 + rng.below(4)),
+                };
+                scalars.push(s.clone());
+                let inner = gen_expr(rng, &tensors, &scalars, &helpers, 1);
+                body.push(Frag::Scalar { dst: s.clone(), text });
+                Frag::Assign { dst: dst.clone(), expr: Expr::ScaleVar(Box::new(inner), s) }
+            }
+            3 => Frag::Branch {
+                dst: dst.clone(),
+                recv: pick(rng, &tensors).clone(),
+                via_item: rng.below(2) == 0,
+                thr: rng.below(6) as i64,
+                then_expr: gen_expr(rng, &tensors, &scalars, &helpers, 1),
+                else_expr: gen_expr(rng, &tensors, &scalars, &helpers, 1),
+            },
+            4 => {
+                let var = format!("i{}", next_loop);
+                next_loop += 1;
+                let n = 2 + rng.below(4) as i64;
+                Frag::ForLoop {
+                    var,
+                    n,
+                    acc: dst.clone(),
+                    init: gen_expr(rng, &tensors, &scalars, &helpers, 1),
+                    step: gen_expr(rng, &tensors, &scalars, &helpers, 1),
+                    exit: gen_exit(rng, n),
+                }
+            }
+            5 => {
+                let counter = format!("c{}", next_loop);
+                next_loop += 1;
+                let start = 2 + rng.below(4) as i64;
+                Frag::WhileLoop {
+                    counter,
+                    start,
+                    acc: dst.clone(),
+                    init: gen_expr(rng, &tensors, &scalars, &helpers, 1),
+                    step: gen_expr(rng, &tensors, &scalars, &helpers, 1),
+                    exit: gen_exit(rng, start),
+                }
+            }
+            _ => {
+                let list = format!("xs{}", next_list);
+                next_list += 1;
+                let n_items = 2 + rng.below(2);
+                let items = (0..n_items).map(|_| gen_expr(rng, &tensors, &scalars, &helpers, 1)).collect();
+                Frag::ListSum { list, dst: dst.clone(), items }
+            }
+        };
+        body.push(frag);
+        tensors.push(dst);
+    }
+
+    let ret = tensors.last().cloned().unwrap_or_else(|| "x".into());
+
+    let mut calls = Vec::new();
+    let n_calls = 1 + rng.below(3);
+    for i in 0..n_calls {
+        let shape: Vec<usize> = if i > 0 && rng.below(3) == 0 {
+            // Repeat the previous shape: guard-cache hit path.
+            calls[i - 1].shape.clone()
+        } else {
+            pick(rng, SHAPES).to_vec()
+        };
+        calls.push(CallSite { shape });
+    }
+
+    Prog { helpers, body, ret, calls }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bytecode::IsaVersion;
+
+    #[test]
+    fn generated_programs_are_deterministic() {
+        for seed in 0..10u64 {
+            let a = generate(&mut Rng::new(seed)).render();
+            let b = generate(&mut Rng::new(seed)).render();
+            assert_eq!(a, b, "seed {}", seed);
+        }
+    }
+
+    #[test]
+    fn generated_programs_compile_and_run_on_the_plain_vm() {
+        for seed in 0..60u64 {
+            let src = generate(&mut Rng::new(seed)).render();
+            crate::pylang::compile_module(&src, "<fuzz>", IsaVersion::V310)
+                .unwrap_or_else(|e| panic!("seed {}: {}\n{}", seed, e, src));
+            let vm = crate::vm::Vm::new();
+            vm.seed(7);
+            vm.instr_budget.set(500_000);
+            vm.exec_source(&src, IsaVersion::V310)
+                .unwrap_or_else(|e| panic!("seed {}: {}\n{}", seed, e, src));
+            assert!(!vm.take_output().is_empty(), "seed {} printed nothing:\n{}", seed, src);
+        }
+    }
+}

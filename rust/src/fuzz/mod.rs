@@ -1,0 +1,369 @@
+//! Program-level differential fuzzing (`depyf fuzz`).
+//!
+//! The conformance harness sweeps *graphs*; TorchProbe-style experience
+//! says dynamic-compiler bugs concentrate higher up — in capture, guards
+//! and control flow. This module closes that gap: it generates whole
+//! `pylang` programs from composable templates (data-dependent branches,
+//! `for`/`while` loops with `break`/`continue`, closures, container
+//! mutation, tensor-shape changes across guard boundaries, mixed
+//! int/float/bool arithmetic), applies semantics-preserving and
+//! semantics-perturbing mutations, and runs each program twice — once on
+//! the plain VM, once under dynamo — diffing printed output, error
+//! messages and result **bit patterns** across backends and opt levels.
+//!
+//! Pipeline per iteration (fully determined by `(seed, iter)`; no
+//! wall-clock anywhere):
+//!
+//! 1. [`generate`](generate::generate) a program, [`mutate`](mutate::mutate) it;
+//! 2. run it plain ([`oracle::run_program`]) — instruction-budget
+//!    exhaustion skips the iteration;
+//! 3. for each backend × opt level, run hooked and [`oracle::compare`];
+//! 4. on divergence, [`shrink`](shrink::shrink) the program while the same
+//!    failure kind reproduces, chain into the `replay` single-op localizer
+//!    ([`localize_source`]), and emit a [`FuzzBundle`] — the committed
+//!    regression format replayed by `tests/fuzz_regressions.rs`.
+//!
+//! Panics on either side are caught under `catch_unwind` and are always
+//! findings: the user-input-reachable panics this fuzzer tripped first
+//! (capture unary-op unwrap, compiler loop-stack unwraps, builtin shape
+//! wraparound) are now typed errors or graceful graph breaks, each pinned
+//! by a committed bundle.
+
+pub mod bundle;
+pub mod generate;
+pub mod mutate;
+pub mod oracle;
+pub mod prog;
+pub mod shrink;
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::Arc;
+
+use crate::api::{lookup_backend, ArtifactKind, Backend, TraceBundle};
+use crate::backend::{replay_bundle, RecordingBackend, ReplayOptions, ResilientBackend};
+use crate::bytecode::IsaVersion;
+use crate::dynamo::{Dynamo, DynamoConfig, Verbosity};
+use crate::graph::opt::OptLevel;
+use crate::tensor::Rng;
+use crate::vm::Vm;
+
+pub use bundle::FuzzBundle;
+pub use oracle::{compare, run_program, DivergenceKind, RunOutcome, RunStatus};
+
+/// Default per-run instruction budget. Loops the generator emits are
+/// bounded, so a trip means a mutation produced something pathological —
+/// the iteration is skipped, not reported.
+pub const DEFAULT_BUDGET: u64 = 500_000;
+
+/// Backends every default fuzz run sweeps: all registered graph compilers
+/// plus a wrapper composition. `async` is deliberately not in the default
+/// set — its worker threads are exercised by `tests/chaos.rs`, and the
+/// oracle wants single-threaded determinism; select it explicitly with
+/// `--backend async:<inner>` if wanted.
+pub fn default_backends() -> Vec<String> {
+    vec![
+        "eager".to_string(),
+        "sharded".to_string(),
+        "batched".to_string(),
+        "codegen".to_string(),
+        "resilient:codegen".to_string(),
+    ]
+}
+
+/// Resolve a backend name, honouring the CLI wrapper grammar
+/// (`recording:<inner>`, `resilient[:<inner>]`).
+pub fn resolve_backend(name: &str) -> Result<Arc<dyn Backend>, String> {
+    if let Some(inner) = name.strip_prefix("recording:") {
+        return RecordingBackend::wrapping(inner).map(|b| Arc::new(b) as Arc<dyn Backend>).map_err(|e| e.to_string());
+    }
+    if let Some(inner) = name.strip_prefix("async:") {
+        return crate::serve::AsyncBackend::wrapping(inner)
+            .map(|b| Arc::new(b) as Arc<dyn Backend>)
+            .map_err(|e| e.to_string());
+    }
+    if name == "resilient" || name.starts_with("resilient:") {
+        let inner = name.strip_prefix("resilient:").unwrap_or("eager");
+        return ResilientBackend::wrapping(inner).map(|b| Arc::new(b) as Arc<dyn Backend>).map_err(|e| e.to_string());
+    }
+    lookup_backend(name).ok_or_else(|| format!("unknown backend '{}'", name))
+}
+
+/// Options for one [`run_fuzz`] sweep.
+#[derive(Clone, Debug)]
+pub struct FuzzOptions {
+    pub seed: u64,
+    pub iters: u64,
+    /// Backend names to sweep (empty: [`default_backends`]).
+    pub backends: Vec<String>,
+    /// Opt levels to sweep (empty: `[O0, O2]`).
+    pub opt_levels: Vec<OptLevel>,
+    /// Per-run instruction budget.
+    pub budget: u64,
+    /// Delta-debug failures before bundling (disable for speed when
+    /// triaging interactively).
+    pub shrink: bool,
+}
+
+impl Default for FuzzOptions {
+    fn default() -> Self {
+        FuzzOptions {
+            seed: 42,
+            iters: 100,
+            backends: Vec::new(),
+            opt_levels: Vec::new(),
+            budget: DEFAULT_BUDGET,
+            shrink: true,
+        }
+    }
+}
+
+/// Outcome of a sweep.
+#[derive(Clone, Debug, Default)]
+pub struct FuzzReport {
+    pub seed: u64,
+    pub iters: u64,
+    /// Differential runs performed (programs × backends × opt levels).
+    pub runs: u64,
+    /// Iterations skipped because a side tripped the instruction budget.
+    pub skipped_budget: u64,
+    pub failures: Vec<FuzzBundle>,
+}
+
+impl FuzzReport {
+    pub fn ok(&self) -> bool {
+        self.failures.is_empty()
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "fuzz: seed {} — {} program(s), {} differential run(s), {} budget skip(s), {} failure(s)",
+            self.seed,
+            self.iters,
+            self.runs,
+            self.skipped_budget,
+            self.failures.len()
+        );
+        for f in &self.failures {
+            out.push_str(&format!(
+                "\n  {}: {} on {} at O{} (iter {})",
+                f.name, f.kind, f.backend, f.opt_level, f.iter
+            ));
+            if let Some(c) = &f.culprit {
+                for line in c.lines() {
+                    out.push_str(&format!("\n    {}", line));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Per-iteration RNG: decorrelates consecutive iterations without any
+/// global state (same scheme as the guard-cache hashers: golden-ratio odd
+/// multiplier).
+fn iter_rng(seed: u64, iter: u64) -> Rng {
+    Rng::new(seed ^ iter.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(0xD1B54A32D192ED03))
+}
+
+/// The program source for `(seed, iter)` — the repro coordinates printed
+/// in reports and stored in bundles.
+pub fn gen_source(seed: u64, iter: u64) -> String {
+    let mut rng = iter_rng(seed, iter);
+    let mut prog = generate::generate(&mut rng);
+    mutate::mutate(&mut prog, &mut rng);
+    prog.render()
+}
+
+/// Chain a shrunken output divergence into the existing `replay` single-op
+/// localizer: re-run the program with a recording wrapper around the
+/// target backend, then replay every captured trace bundle against the
+/// eager oracle with per-op localization. Returns the rendered replay
+/// report(s) for bundles that still mismatch, if any.
+pub fn localize_source(src: &str, backend_name: &str, opt: OptLevel, budget: u64) -> Option<String> {
+    let backend = resolve_backend(backend_name).ok()?;
+    let src = src.to_string();
+    let result = catch_unwind(AssertUnwindSafe(move || {
+        let rec: Arc<dyn Backend> = Arc::new(RecordingBackend::new(Arc::clone(&backend)));
+        let mut vm = Vm::new();
+        vm.seed(oracle::ORACLE_SEED);
+        vm.instr_budget.set(budget);
+        let dynamo = Dynamo::new(DynamoConfig {
+            backend: rec,
+            opt_level: opt,
+            verbosity: Verbosity::Quiet,
+            ..Default::default()
+        });
+        vm.eval_hook = Some(dynamo.clone());
+        let _ = vm.exec_source(&src, IsaVersion::V310);
+        let mut notes = Vec::new();
+        for cf in dynamo.compiled() {
+            for art in cf.module.artifacts() {
+                if art.kind != ArtifactKind::Trace {
+                    continue;
+                }
+                let Ok(tb) = TraceBundle::parse(&art.content) else { continue };
+                let opts = ReplayOptions { localize: true, opt_level: opt, ..Default::default() };
+                match replay_bundle(&tb, backend.as_ref(), Some(&crate::api::EagerBackend), &opts) {
+                    Ok(report) if !report.ok() => notes.push(report.render()),
+                    _ => {}
+                }
+            }
+        }
+        notes
+    }));
+    match result {
+        Ok(notes) if !notes.is_empty() => Some(notes.join("\n")),
+        _ => None,
+    }
+}
+
+/// Run a full differential sweep. Deterministic in `opts`: same options,
+/// same report (counts, failure names, sources, bundles).
+pub fn run_fuzz(opts: &FuzzOptions) -> Result<FuzzReport, String> {
+    let backend_names = if opts.backends.is_empty() { default_backends() } else { opts.backends.clone() };
+    let mut backends: Vec<(String, Arc<dyn Backend>)> = Vec::new();
+    for name in &backend_names {
+        backends.push((name.clone(), resolve_backend(name)?));
+    }
+    let opt_levels: Vec<OptLevel> =
+        if opts.opt_levels.is_empty() { vec![OptLevel::O0, OptLevel::O2] } else { opts.opt_levels.clone() };
+
+    let mut report =
+        FuzzReport { seed: opts.seed, iters: opts.iters, runs: 0, skipped_budget: 0, failures: Vec::new() };
+
+    for iter in 0..opts.iters {
+        let mut rng = iter_rng(opts.seed, iter);
+        let mut prog = generate::generate(&mut rng);
+        mutate::mutate(&mut prog, &mut rng);
+        let src = prog.render();
+
+        let plain = run_program(&src, None, opts.budget);
+        if plain.status == RunStatus::Budget {
+            report.skipped_budget += 1;
+            continue;
+        }
+
+        'combos: for (name, backend) in &backends {
+            for &opt in &opt_levels {
+                report.runs += 1;
+                let hooked = run_program(&src, Some((Arc::clone(backend), opt)), opts.budget);
+                if hooked.status == RunStatus::Budget {
+                    report.skipped_budget += 1;
+                    continue;
+                }
+                let Some(kind) = compare(&plain, &hooked) else { continue };
+
+                // Shrink while the same failure kind reproduces on the
+                // same backend × opt level.
+                let final_prog = if opts.shrink {
+                    let backend = Arc::clone(backend);
+                    let budget = opts.budget;
+                    shrink::shrink(
+                        &prog,
+                        &mut |cand| {
+                            let s = cand.render();
+                            let p = run_program(&s, None, budget);
+                            if p.status == RunStatus::Budget {
+                                return false;
+                            }
+                            let h = run_program(&s, Some((Arc::clone(&backend), opt)), budget);
+                            compare(&p, &h) == Some(kind)
+                        },
+                        200,
+                    )
+                } else {
+                    prog.clone()
+                };
+                let final_src = final_prog.render();
+                let final_plain = run_program(&final_src, None, opts.budget);
+                let final_hooked = run_program(&final_src, Some((Arc::clone(backend), opt)), opts.budget);
+
+                let culprit = if kind == DivergenceKind::Output {
+                    localize_source(&final_src, name, opt, opts.budget)
+                } else {
+                    None
+                };
+                let safe_name: String =
+                    name.chars().map(|c| if c.is_ascii_alphanumeric() { c } else { '_' }).collect();
+                report.failures.push(FuzzBundle {
+                    name: format!("fuzz_s{}_i{}_{}_o{}", opts.seed, iter, safe_name, opt.as_u8()),
+                    seed: opts.seed,
+                    iter,
+                    backend: name.clone(),
+                    opt_level: opt.as_u8(),
+                    kind: kind.as_str().to_string(),
+                    source: final_src,
+                    expected: final_plain.render(),
+                    actual: final_hooked.render(),
+                    culprit,
+                    note: Some("auto-shrunken by `depyf fuzz`; replayed bitwise by tests/fuzz_regressions.rs".into()),
+                    strict: false,
+                    expect_error: false,
+                });
+                // One bundle per iteration: the same root cause usually
+                // fails every remaining combo, and N copies of one finding
+                // drown the report.
+                break 'combos;
+            }
+        }
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_opts() -> FuzzOptions {
+        FuzzOptions {
+            seed: 42,
+            iters: 8,
+            backends: vec!["eager".into()],
+            opt_levels: vec![OptLevel::O0, OptLevel::O2],
+            budget: DEFAULT_BUDGET,
+            shrink: true,
+        }
+    }
+
+    #[test]
+    fn gen_source_is_deterministic_per_coordinates() {
+        for iter in 0..6 {
+            assert_eq!(gen_source(42, iter), gen_source(42, iter), "iter {}", iter);
+        }
+        // Different iterations decorrelate (at least one differs).
+        assert!((1..6).any(|i| gen_source(42, i) != gen_source(42, 0)));
+    }
+
+    #[test]
+    fn quick_sweep_on_eager_finds_nothing() {
+        let report = run_fuzz(&quick_opts()).unwrap();
+        assert!(report.ok(), "{}", report.render());
+        assert_eq!(report.skipped_budget, 0, "{}", report.render());
+        assert_eq!(report.runs, 8 * 2, "every program × opt combo must run: {}", report.render());
+    }
+
+    #[test]
+    fn sweep_is_deterministic() {
+        let a = run_fuzz(&quick_opts()).unwrap();
+        let b = run_fuzz(&quick_opts()).unwrap();
+        assert_eq!(a.runs, b.runs);
+        assert_eq!(a.skipped_budget, b.skipped_budget);
+        let names = |r: &FuzzReport| r.failures.iter().map(|f| f.name.clone()).collect::<Vec<_>>();
+        assert_eq!(names(&a), names(&b));
+    }
+
+    #[test]
+    fn unknown_backend_is_an_error_not_a_panic() {
+        let mut opts = quick_opts();
+        opts.backends = vec!["warp-drive".into()];
+        assert!(run_fuzz(&opts).unwrap_err().contains("warp-drive"));
+    }
+
+    #[test]
+    fn wrapper_grammar_resolves() {
+        assert!(resolve_backend("resilient:codegen").is_ok());
+        assert!(resolve_backend("recording:eager").is_ok());
+        assert!(resolve_backend("eager").is_ok());
+        assert!(resolve_backend("nope").is_err());
+    }
+}

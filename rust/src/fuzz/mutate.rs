@@ -1,0 +1,241 @@
+//! Seeded structural mutations.
+//!
+//! Two families, applied 0–3 at a time:
+//!
+//! * **Semantics-preserving** (`insert_noop`, `dup_call` with the same
+//!   shape): the program must still agree bitwise — catches optimizer and
+//!   guard-cache bugs that only show up on re-dispatch.
+//! * **Semantics-perturbing** (`perturb_shape`, `perturb_const`,
+//!   `swap_method`, `drop_frag`): both sides change together — catches
+//!   capture bugs on shapes/paths the seed program missed. `swap_method`
+//!   occasionally swaps in a method *no* backend supports (`clamp`), which
+//!   must degrade to identical errors on both sides, pinning the graceful
+//!   graph-break path.
+
+use crate::tensor::Rng;
+
+use super::generate::METHODS;
+use super::prog::{Expr, Frag, Prog};
+
+/// An unsupported tensor method: the VM raises, capture must gracefully
+/// break — both runs end in the *same* error.
+const UNSUPPORTED_METHOD: &str = "clamp";
+
+/// Mutate `prog` in place with 0–3 random mutations.
+pub fn mutate(prog: &mut Prog, rng: &mut Rng) {
+    let n = rng.below(3);
+    for _ in 0..n {
+        apply_one(prog, rng);
+    }
+}
+
+fn apply_one(prog: &mut Prog, rng: &mut Rng) {
+    match rng.below(6) {
+        0 => dup_call(prog, rng),
+        1 => perturb_shape(prog, rng),
+        2 => perturb_const(prog, rng),
+        3 => swap_method(prog, rng),
+        4 => insert_noop(prog, rng),
+        _ => drop_frag(prog, rng),
+    }
+}
+
+/// Duplicate a call site — the second dispatch must hit the guard cache
+/// and still produce bit-identical results.
+fn dup_call(prog: &mut Prog, rng: &mut Rng) {
+    if prog.calls.is_empty() {
+        return;
+    }
+    let i = rng.below(prog.calls.len());
+    let c = prog.calls[i].clone();
+    prog.calls.insert(i, c);
+}
+
+/// Change one dimension of one call site — a guard boundary: the shape
+/// change must recompile, not silently reuse a stale executable.
+fn perturb_shape(prog: &mut Prog, rng: &mut Rng) {
+    if prog.calls.is_empty() {
+        return;
+    }
+    let i = rng.below(prog.calls.len());
+    let c = &mut prog.calls[i];
+    if c.shape.is_empty() {
+        return;
+    }
+    let d = rng.below(c.shape.len());
+    // Stay non-zero and small: zero-size tensors and big allocs are out of
+    // scope for the differential oracle.
+    c.shape[d] = 1 + rng.below(6);
+}
+
+/// Tweak one integer/float constant (or a branch threshold / loop bound).
+fn perturb_const(prog: &mut Prog, rng: &mut Rng) {
+    // Collect candidate positions first so the choice is uniform.
+    let mut n_consts = 0usize;
+    for f in &mut prog.body {
+        f.walk_exprs_mut(&mut |e| {
+            if matches!(e, Expr::ScaleInt(..) | Expr::AddFloat(..)) {
+                n_consts += 1;
+            }
+        });
+    }
+    let n_extra = prog
+        .body
+        .iter()
+        .filter(|f| matches!(f, Frag::Branch { .. } | Frag::ForLoop { .. } | Frag::WhileLoop { .. }))
+        .count();
+    let total = n_consts + n_extra;
+    if total == 0 {
+        return;
+    }
+    let target = rng.below(total);
+    if target < n_consts {
+        let mut seen = 0usize;
+        for f in &mut prog.body {
+            f.walk_exprs_mut(&mut |e| {
+                match e {
+                    Expr::ScaleInt(_, k) => {
+                        if seen == target {
+                            *k = (*k % 4) + 1;
+                        }
+                        seen += 1;
+                    }
+                    Expr::AddFloat(_, c) => {
+                        if seen == target {
+                            *c = if c == "0.5" { "1.5".to_string() } else { "0.5".to_string() };
+                        }
+                        seen += 1;
+                    }
+                    _ => {}
+                }
+            });
+        }
+    } else {
+        let mut seen = n_consts;
+        for f in &mut prog.body {
+            match f {
+                Frag::Branch { thr, .. } => {
+                    if seen == target {
+                        *thr += 1;
+                    }
+                    seen += 1;
+                }
+                Frag::ForLoop { n, .. } => {
+                    if seen == target {
+                        *n = (*n % 5).max(1) + 1;
+                    }
+                    seen += 1;
+                }
+                Frag::WhileLoop { start, .. } => {
+                    if seen == target {
+                        *start = (*start % 5).max(1) + 1;
+                    }
+                    seen += 1;
+                }
+                _ => {}
+            }
+        }
+    }
+}
+
+/// Swap one unary method for a neighbour; rarely, for an unsupported one.
+fn swap_method(prog: &mut Prog, rng: &mut Rng) {
+    let unsupported = rng.below(8) == 0;
+    let rotation = 1 + rng.below(METHODS.len() - 1);
+    let mut n_methods = 0usize;
+    for f in &mut prog.body {
+        f.walk_exprs_mut(&mut |e| {
+            if matches!(e, Expr::Method(..)) {
+                n_methods += 1;
+            }
+        });
+    }
+    if n_methods == 0 {
+        return;
+    }
+    let target = rng.below(n_methods);
+    let mut seen = 0usize;
+    for f in &mut prog.body {
+        f.walk_exprs_mut(&mut |e| {
+            if let Expr::Method(name, _) = e {
+                if seen == target {
+                    if unsupported {
+                        *name = UNSUPPORTED_METHOD.to_string();
+                    } else {
+                        let idx = METHODS.iter().position(|m| m == name).unwrap_or(0);
+                        *name = METHODS[(idx + rotation) % METHODS.len()].to_string();
+                    }
+                }
+                seen += 1;
+            }
+        });
+    }
+}
+
+/// Wrap one expression in `(e * 1)` — bit-exact identity, but it changes
+/// the captured graph and gives the optimizer something to chew on.
+fn insert_noop(prog: &mut Prog, rng: &mut Rng) {
+    if prog.body.is_empty() {
+        return;
+    }
+    let i = rng.below(prog.body.len());
+    let mut done = false;
+    prog.body[i].walk_exprs_mut(&mut |e| {
+        if !done {
+            let inner = e.clone();
+            *e = Expr::ScaleInt(Box::new(inner), 1);
+            done = true;
+        }
+    });
+}
+
+/// Drop one fragment. Later references to its destination become
+/// NameErrors — which both sides must raise *identically*.
+fn drop_frag(prog: &mut Prog, rng: &mut Rng) {
+    if prog.body.len() <= 1 {
+        return;
+    }
+    let i = rng.below(prog.body.len());
+    prog.body.remove(i);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fuzz::generate::generate;
+
+    #[test]
+    fn mutation_is_deterministic() {
+        for seed in 0..12u64 {
+            let mk = || {
+                let mut rng = Rng::new(seed);
+                let mut p = generate(&mut rng);
+                mutate(&mut p, &mut rng);
+                p.render()
+            };
+            assert_eq!(mk(), mk(), "seed {}", seed);
+        }
+    }
+
+    #[test]
+    fn mutated_programs_still_render_to_parsable_source() {
+        for seed in 0..40u64 {
+            let mut rng = Rng::new(seed);
+            let mut p = generate(&mut rng);
+            mutate(&mut p, &mut rng);
+            let src = p.render();
+            crate::pylang::parse(&src).unwrap_or_else(|e| panic!("seed {}: {}\n{}", seed, e, src));
+        }
+    }
+
+    #[test]
+    fn insert_noop_wraps_without_changing_leaf_vars() {
+        let mut rng = Rng::new(3);
+        let mut p = generate(&mut rng);
+        let before: Vec<String> = p.body.iter().map(|f| f.dst().to_string()).collect();
+        insert_noop(&mut p, &mut rng);
+        let after: Vec<String> = p.body.iter().map(|f| f.dst().to_string()).collect();
+        assert_eq!(before, after);
+        assert!(p.render().contains("* 1)"));
+    }
+}

@@ -1,0 +1,246 @@
+//! The differential oracle: one program, two executions.
+//!
+//! The plain VM run is ground truth (it is what `pylang` semantics *are*);
+//! the dynamo-hooked run must agree **bitwise** — same printed output,
+//! same `__r{i}` result bit patterns, and on failure the same error. Any
+//! disagreement, and any panic escaping either side, is a finding.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::Arc;
+
+use crate::api::Backend;
+use crate::bytecode::IsaVersion;
+use crate::dynamo::{Dynamo, DynamoConfig, Verbosity};
+use crate::graph::opt::OptLevel;
+use crate::value::Value;
+use crate::vm::Vm;
+
+/// Fixed RNG seed for every oracle VM: both sides must draw identical
+/// `torch.rand` inputs for a bitwise diff to mean anything.
+pub const ORACLE_SEED: u64 = 7;
+
+/// How one execution ended.
+#[derive(Clone, Debug, PartialEq)]
+pub enum RunStatus {
+    Ok,
+    /// The VM raised a (typed) error — the message, traceback excluded.
+    Error(String),
+    /// A panic escaped to `catch_unwind` — always a finding.
+    Panic(String),
+    /// The instruction budget tripped: the program is too slow/looping;
+    /// the iteration is skipped, not reported.
+    Budget,
+}
+
+/// Everything the oracle compares.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunOutcome {
+    pub status: RunStatus,
+    /// Captured `print` output.
+    pub output: String,
+    /// Bit-exact encodings of the `__r{i}` result globals, in order.
+    pub results: Vec<String>,
+}
+
+impl RunOutcome {
+    /// One-string rendering for bundles and reports.
+    pub fn render(&self) -> String {
+        let head = match &self.status {
+            RunStatus::Ok => "ok".to_string(),
+            RunStatus::Error(m) => format!("error: {}", m),
+            RunStatus::Panic(m) => format!("panic: {}", m),
+            RunStatus::Budget => "budget".to_string(),
+        };
+        let mut out = format!("status: {}\noutput: {:?}", head, self.output);
+        for (i, r) in self.results.iter().enumerate() {
+            out.push_str(&format!("\n__r{}: {}", i, r));
+        }
+        out
+    }
+}
+
+/// Bit-exact value encoding: f32/f64 payloads go through `to_bits`, so
+/// `-0.0` vs `0.0` and differing NaN payloads all count as divergence.
+pub fn encode_value(v: &Value) -> String {
+    match v {
+        Value::Tensor(t) => {
+            let bits: Vec<String> = t.data().iter().map(|f| format!("{:08x}", f.to_bits())).collect();
+            format!("tensor{:?}:{}", t.shape(), bits.join(","))
+        }
+        Value::Float(f) => format!("float:{:016x}", f.to_bits()),
+        Value::Int(i) => format!("int:{}", i),
+        Value::Bool(b) => format!("bool:{}", b),
+        Value::None => "none".to_string(),
+        other => format!("{}:{}", other.type_name(), other.to_display()),
+    }
+}
+
+fn collect_results(vm: &Vm) -> Vec<String> {
+    let mut out = Vec::new();
+    for i in 0.. {
+        match vm.get_global(&format!("__r{}", i)) {
+            Some(v) => out.push(encode_value(&v)),
+            None => break,
+        }
+    }
+    out
+}
+
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Execute `src` on a fresh VM. `backend == None` is the plain run;
+/// `Some((backend, opt))` hooks dynamo with that backend at that opt
+/// level (quiet, eager fallback — the production default).
+pub fn run_program(src: &str, backend: Option<(Arc<dyn Backend>, OptLevel)>, budget: u64) -> RunOutcome {
+    let src = src.to_string();
+    let result = catch_unwind(AssertUnwindSafe(move || {
+        let mut vm = Vm::new();
+        vm.seed(ORACLE_SEED);
+        vm.instr_budget.set(budget);
+        if let Some((b, opt)) = backend {
+            let dynamo = Dynamo::new(DynamoConfig {
+                backend: b,
+                opt_level: opt,
+                verbosity: Verbosity::Quiet,
+                ..Default::default()
+            });
+            vm.eval_hook = Some(dynamo);
+        }
+        let status = match vm.exec_source(&src, IsaVersion::V310) {
+            Ok(_) => RunStatus::Ok,
+            Err(e) if e.message.contains("instruction budget exceeded") => RunStatus::Budget,
+            Err(e) => RunStatus::Error(e.message),
+        };
+        let output = vm.take_output();
+        let results = if status == RunStatus::Ok { collect_results(&vm) } else { Vec::new() };
+        RunOutcome { status, output, results }
+    }));
+    match result {
+        Ok(outcome) => outcome,
+        Err(payload) => {
+            RunOutcome { status: RunStatus::Panic(panic_message(payload)), output: String::new(), results: Vec::new() }
+        }
+    }
+}
+
+/// What kind of disagreement the oracle observed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DivergenceKind {
+    /// Both ran to completion; printed output or result bits differ.
+    Output,
+    /// Both errored, with different messages.
+    ErrorMismatch,
+    /// One side succeeded where the other errored.
+    StatusMismatch,
+    /// A panic escaped either side.
+    Panic,
+}
+
+impl DivergenceKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DivergenceKind::Output => "output-divergence",
+            DivergenceKind::ErrorMismatch => "error-mismatch",
+            DivergenceKind::StatusMismatch => "status-mismatch",
+            DivergenceKind::Panic => "panic",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<DivergenceKind> {
+        match s {
+            "output-divergence" => Some(DivergenceKind::Output),
+            "error-mismatch" => Some(DivergenceKind::ErrorMismatch),
+            "status-mismatch" => Some(DivergenceKind::StatusMismatch),
+            "panic" => Some(DivergenceKind::Panic),
+            _ => None,
+        }
+    }
+}
+
+/// Compare a plain run against a hooked run. `None` means agreement (or
+/// an instruction-budget skip — too-slow programs are not findings).
+pub fn compare(plain: &RunOutcome, hooked: &RunOutcome) -> Option<DivergenceKind> {
+    if plain.status == RunStatus::Budget || hooked.status == RunStatus::Budget {
+        return None;
+    }
+    if matches!(plain.status, RunStatus::Panic(_)) || matches!(hooked.status, RunStatus::Panic(_)) {
+        return Some(DivergenceKind::Panic);
+    }
+    match (&plain.status, &hooked.status) {
+        (RunStatus::Ok, RunStatus::Ok) => {
+            if plain.output != hooked.output || plain.results != hooked.results {
+                Some(DivergenceKind::Output)
+            } else {
+                None
+            }
+        }
+        (RunStatus::Error(a), RunStatus::Error(b)) => {
+            if a != b {
+                Some(DivergenceKind::ErrorMismatch)
+            } else {
+                None
+            }
+        }
+        _ => Some(DivergenceKind::StatusMismatch),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::EagerBackend;
+
+    #[test]
+    fn plain_and_hooked_agree_on_a_simple_program() {
+        let src = "def f(x):\n    return (x * 2)\n__r0 = f(torch.rand([3]))\nprint(__r0.sum().item())\n";
+        let plain = run_program(src, None, 1_000_000);
+        assert_eq!(plain.status, RunStatus::Ok, "{:?}", plain);
+        assert_eq!(plain.results.len(), 1);
+        let hooked = run_program(src, Some((Arc::new(EagerBackend), OptLevel::O0)), 1_000_000);
+        assert_eq!(compare(&plain, &hooked), None, "plain:\n{}\nhooked:\n{}", plain.render(), hooked.render());
+    }
+
+    #[test]
+    fn budget_exhaustion_is_a_skip_not_a_finding() {
+        let src = "n = 0\nwhile True:\n    n = n + 1\n";
+        let plain = run_program(src, None, 10_000);
+        assert_eq!(plain.status, RunStatus::Budget);
+        assert_eq!(compare(&plain, &plain), None);
+    }
+
+    #[test]
+    fn panics_are_caught_and_classified() {
+        let plain = RunOutcome { status: RunStatus::Ok, output: "1\n".into(), results: vec![] };
+        let panicked = RunOutcome { status: RunStatus::Panic("boom".into()), output: String::new(), results: vec![] };
+        assert_eq!(compare(&plain, &panicked), Some(DivergenceKind::Panic));
+    }
+
+    #[test]
+    fn error_equality_is_agreement_inequality_is_not() {
+        let a = RunOutcome { status: RunStatus::Error("nope".into()), output: String::new(), results: vec![] };
+        let b = RunOutcome { status: RunStatus::Error("nope".into()), output: String::new(), results: vec![] };
+        assert_eq!(compare(&a, &b), None);
+        let c = RunOutcome { status: RunStatus::Error("other".into()), output: String::new(), results: vec![] };
+        assert_eq!(compare(&a, &c), Some(DivergenceKind::ErrorMismatch));
+        let ok = RunOutcome { status: RunStatus::Ok, output: String::new(), results: vec![] };
+        assert_eq!(compare(&ok, &a), Some(DivergenceKind::StatusMismatch));
+    }
+
+    #[test]
+    fn encode_value_is_bit_exact() {
+        assert_eq!(encode_value(&Value::Float(0.0)), "float:0000000000000000");
+        assert_eq!(encode_value(&Value::Float(-0.0)), "float:8000000000000000");
+        assert_ne!(
+            encode_value(&Value::tensor(crate::tensor::Tensor::new(vec![1], vec![0.0]))),
+            encode_value(&Value::tensor(crate::tensor::Tensor::new(vec![1], vec![-0.0]))),
+        );
+    }
+}

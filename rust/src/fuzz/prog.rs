@@ -1,0 +1,357 @@
+//! Structured program model for the differential fuzzer.
+//!
+//! The fuzzer never mutates raw source text — it generates and mutates a
+//! small structured representation ([`Prog`]) built from composable
+//! templates (branches, loops with `break`/`continue`, closures, container
+//! mutation, guard-boundary shape changes) and renders it to `pylang`
+//! source. Structure is what makes mutation and shrinking well-typed: a
+//! dropped fragment or a simplified expression is still a syntactically
+//! valid program, so every oracle run exercises semantics, not the parser.
+
+use std::fmt::Write as _;
+
+/// A tensor-valued expression over previously defined variables.
+///
+/// The vocabulary is deliberately restricted to operations that are
+/// elementwise (shape-preserving) and numerically closed over the fuzzer's
+/// input range (`torch.rand` in `[0, 1)` combined with small constants):
+/// `+`, `-`, `*` and bounded unary methods. That keeps every generated
+/// program valid for *any* call-site shape and free of NaN/inf sources
+/// (`/`, `pow`, `log`, `exp` are excluded by construction), so a bitwise
+/// output diff means a real capture/compile divergence, not float folklore.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Expr {
+    /// A variable reference.
+    Var(String),
+    /// Elementwise tensor arithmetic: `(a + b)`, `(a - b)`, `(a * b)`.
+    Bin(char, Box<Expr>, Box<Expr>),
+    /// Zero-argument tensor method: `a.relu()`.
+    Method(String, Box<Expr>),
+    /// Module-level unary builtin: `torch.relu(a)`.
+    Torch(String, Box<Expr>),
+    /// Integer scaling: `(a * 3)`.
+    ScaleInt(Box<Expr>, i64),
+    /// Float offset: `(a + 0.5)` — literal text kept verbatim so rendering
+    /// is exact and mutation-stable.
+    AddFloat(Box<Expr>, String),
+    /// Scale by a previously defined scalar variable: `(a * s0)`.
+    ScaleVar(Box<Expr>, String),
+    /// Call a generated helper or closure: `h0(a)`.
+    Call(String, Box<Expr>),
+}
+
+impl Expr {
+    pub fn render(&self) -> String {
+        match self {
+            Expr::Var(v) => v.clone(),
+            Expr::Bin(op, a, b) => format!("({} {} {})", a.render(), op, b.render()),
+            Expr::Method(m, a) => format!("{}.{}()", a.render(), m),
+            Expr::Torch(m, a) => format!("torch.{}({})", m, a.render()),
+            Expr::ScaleInt(a, k) => format!("({} * {})", a.render(), k),
+            Expr::AddFloat(a, c) => format!("({} + {})", a.render(), c),
+            Expr::ScaleVar(a, s) => format!("({} * {})", a.render(), s),
+            Expr::Call(f, a) => format!("{}({})", f, a.render()),
+        }
+    }
+
+    /// Visit every node (pre-order), mutably. Drives index-targeted
+    /// mutations without unsafe aliasing gymnastics.
+    pub fn walk_mut(&mut self, f: &mut dyn FnMut(&mut Expr)) {
+        f(self);
+        match self {
+            Expr::Var(_) => {}
+            Expr::Bin(_, a, b) => {
+                a.walk_mut(f);
+                b.walk_mut(f);
+            }
+            Expr::Method(_, a)
+            | Expr::Torch(_, a)
+            | Expr::ScaleInt(a, _)
+            | Expr::AddFloat(a, _)
+            | Expr::ScaleVar(a, _)
+            | Expr::Call(_, a) => a.walk_mut(f),
+        }
+    }
+
+    /// Number of nodes in the expression tree.
+    pub fn size(&self) -> usize {
+        let mut n = 0;
+        let mut probe = self.clone();
+        probe.walk_mut(&mut |_| n += 1);
+        n
+    }
+
+    /// The first (leftmost) variable referenced — the shrinker's
+    /// "simplify expression to one of its leaves" target.
+    pub fn first_var(&self) -> Option<String> {
+        match self {
+            Expr::Var(v) => Some(v.clone()),
+            Expr::Bin(_, a, b) => a.first_var().or_else(|| b.first_var()),
+            Expr::Method(_, a)
+            | Expr::Torch(_, a)
+            | Expr::ScaleInt(a, _)
+            | Expr::AddFloat(a, _)
+            | Expr::ScaleVar(a, _)
+            | Expr::Call(_, a) => a.first_var(),
+        }
+    }
+}
+
+/// Early loop exit injected into a loop body.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ExitKind {
+    Break,
+    Continue,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct LoopExit {
+    /// Fires when the loop variable / countdown counter equals this.
+    pub when: i64,
+    pub kind: ExitKind,
+}
+
+/// One body fragment of the generated function `f`.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frag {
+    /// `dst = <expr>`
+    Assign { dst: String, expr: Expr },
+    /// `dst = <text>` — scalar int/float arithmetic (mixed-type coverage).
+    Scalar { dst: String, text: String },
+    /// Data-dependent branch. `via_item` breaks the graph through
+    /// `.item()`; otherwise the comparison stays a (1-element) tensor and
+    /// the truthiness test itself is the break point.
+    Branch { dst: String, recv: String, via_item: bool, thr: i64, then_expr: Expr, else_expr: Expr },
+    /// `acc = init; for var in range(n): [continue-guard] acc = acc + step [break-guard]`
+    ForLoop { var: String, n: i64, acc: String, init: Expr, step: Expr, exit: Option<LoopExit> },
+    /// Countdown while loop over `counter`, same accumulator scheme.
+    WhileLoop { counter: String, start: i64, acc: String, init: Expr, step: Expr, exit: Option<LoopExit> },
+    /// Container mutation: build a list, append, reduce with `sum(xs)`.
+    ListSum { list: String, dst: String, items: Vec<Expr> },
+}
+
+impl Frag {
+    /// The tensor variable this fragment defines.
+    pub fn dst(&self) -> &str {
+        match self {
+            Frag::Assign { dst, .. }
+            | Frag::Scalar { dst, .. }
+            | Frag::Branch { dst, .. }
+            | Frag::ListSum { dst, .. } => dst,
+            Frag::ForLoop { acc, .. } | Frag::WhileLoop { acc, .. } => acc,
+        }
+    }
+
+    /// Visit every expression in the fragment, mutably.
+    pub fn walk_exprs_mut(&mut self, f: &mut dyn FnMut(&mut Expr)) {
+        match self {
+            Frag::Assign { expr, .. } => expr.walk_mut(f),
+            Frag::Scalar { .. } => {}
+            Frag::Branch { then_expr, else_expr, .. } => {
+                then_expr.walk_mut(f);
+                else_expr.walk_mut(f);
+            }
+            Frag::ForLoop { init, step, .. } | Frag::WhileLoop { init, step, .. } => {
+                init.walk_mut(f);
+                step.walk_mut(f);
+            }
+            Frag::ListSum { items, .. } => {
+                for e in items {
+                    e.walk_mut(f);
+                }
+            }
+        }
+    }
+
+    fn render(&self, out: &mut String) {
+        match self {
+            Frag::Assign { dst, expr } => {
+                let _ = writeln!(out, "    {} = {}", dst, expr.render());
+            }
+            Frag::Scalar { dst, text } => {
+                let _ = writeln!(out, "    {} = {}", dst, text);
+            }
+            Frag::Branch { dst, recv, via_item, thr, then_expr, else_expr } => {
+                if *via_item {
+                    let _ = writeln!(out, "    if {}.sum().item() > {}:", recv, thr);
+                } else {
+                    let _ = writeln!(out, "    if {}.sum() >= {}:", recv, thr);
+                }
+                let _ = writeln!(out, "        {} = {}", dst, then_expr.render());
+                let _ = writeln!(out, "    else:");
+                let _ = writeln!(out, "        {} = {}", dst, else_expr.render());
+            }
+            Frag::ForLoop { var, n, acc, init, step, exit } => {
+                let _ = writeln!(out, "    {} = {}", acc, init.render());
+                let _ = writeln!(out, "    for {} in range({}):", var, n);
+                if let Some(LoopExit { when, kind: ExitKind::Continue }) = exit {
+                    let _ = writeln!(out, "        if {} == {}:", var, when);
+                    let _ = writeln!(out, "            continue");
+                }
+                let _ = writeln!(out, "        {} = ({} + {})", acc, acc, step.render());
+                if let Some(LoopExit { when, kind: ExitKind::Break }) = exit {
+                    let _ = writeln!(out, "        if {} == {}:", var, when);
+                    let _ = writeln!(out, "            break");
+                }
+            }
+            Frag::WhileLoop { counter, start, acc, init, step, exit } => {
+                let _ = writeln!(out, "    {} = {}", counter, start);
+                let _ = writeln!(out, "    {} = {}", acc, init.render());
+                let _ = writeln!(out, "    while {} > 0:", counter);
+                let _ = writeln!(out, "        {} = ({} + {})", acc, acc, step.render());
+                let _ = writeln!(out, "        {} = ({} - 1)", counter, counter);
+                // The exit sits after the decrement: a `continue` here must
+                // not skip it (that would never terminate).
+                if let Some(LoopExit { when, kind }) = exit {
+                    let _ = writeln!(out, "        if {} == {}:", counter, when);
+                    let kw = match kind {
+                        ExitKind::Break => "break",
+                        ExitKind::Continue => "continue",
+                    };
+                    let _ = writeln!(out, "            {}", kw);
+                }
+            }
+            Frag::ListSum { list, dst, items } => {
+                let first = items.first().map(|e| e.render()).unwrap_or_else(|| "x".into());
+                let _ = writeln!(out, "    {} = [{}]", list, first);
+                for e in items.iter().skip(1) {
+                    let _ = writeln!(out, "    {}.append({})", list, e.render());
+                }
+                let _ = writeln!(out, "    {} = sum({})", dst, list);
+            }
+        }
+    }
+}
+
+/// A module-level helper function available to body fragments.
+#[derive(Clone, Debug, PartialEq)]
+pub enum HelperKind {
+    /// `def h(t): return (t * k)` — plain user function (graph break).
+    Plain { k: i64 },
+    /// A closure over a captured scalar — capture aborts on free
+    /// variables, so this exercises the skip/fallback path.
+    Closure { k: i64 },
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Helper {
+    pub name: String,
+    pub kind: HelperKind,
+}
+
+impl Helper {
+    fn render(&self, out: &mut String) {
+        match &self.kind {
+            HelperKind::Plain { k } => {
+                let _ = writeln!(out, "def {}(t):", self.name);
+                let _ = writeln!(out, "    return (t * {})", k);
+            }
+            HelperKind::Closure { k } => {
+                let _ = writeln!(out, "def __mk_{}():", self.name);
+                let _ = writeln!(out, "    n = {}", k);
+                let _ = writeln!(out, "    def {}(t):", self.name);
+                let _ = writeln!(out, "        return (t + n)");
+                let _ = writeln!(out, "    return {}", self.name);
+                let _ = writeln!(out, "{} = __mk_{}()", self.name, self.name);
+            }
+        }
+    }
+}
+
+/// One top-level invocation of `f`. Distinct shapes across call sites are
+/// the guard-boundary coverage: each new shape recompiles, repeats hit the
+/// guard cache.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CallSite {
+    pub shape: Vec<usize>,
+}
+
+/// A whole generated program: helpers, a single function `f(x)` assembled
+/// from fragments, and top-level call sites whose results are printed
+/// *and* stored in `__r{i}` globals for bitwise comparison.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Prog {
+    pub helpers: Vec<Helper>,
+    pub body: Vec<Frag>,
+    /// The variable `f` returns.
+    pub ret: String,
+    pub calls: Vec<CallSite>,
+}
+
+impl Prog {
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for h in &self.helpers {
+            h.render(&mut out);
+        }
+        out.push_str("def f(x):\n");
+        for frag in &self.body {
+            frag.render(&mut out);
+        }
+        let _ = writeln!(out, "    return {}", self.ret);
+        for (i, c) in self.calls.iter().enumerate() {
+            let dims: Vec<String> = c.shape.iter().map(|d| d.to_string()).collect();
+            let _ = writeln!(out, "__r{} = f(torch.rand([{}]))", i, dims.join(", "));
+            let _ = writeln!(out, "print(__r{}.sum().item())", i);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_is_deterministic_and_parenthesized() {
+        let e = Expr::Bin(
+            '+',
+            Box::new(Expr::Method("relu".into(), Box::new(Expr::Var("x".into())))),
+            Box::new(Expr::ScaleInt(Box::new(Expr::Var("t0".into())), 3)),
+        );
+        assert_eq!(e.render(), "(x.relu() + (t0 * 3))");
+        assert_eq!(e.size(), 5);
+        assert_eq!(e.first_var().as_deref(), Some("x"));
+    }
+
+    #[test]
+    fn program_renders_to_compilable_source() {
+        let prog = Prog {
+            helpers: vec![
+                Helper { name: "h0".into(), kind: HelperKind::Plain { k: 3 } },
+                Helper { name: "g0".into(), kind: HelperKind::Closure { k: 2 } },
+            ],
+            body: vec![
+                Frag::Assign { dst: "t0".into(), expr: Expr::Call("h0".into(), Box::new(Expr::Var("x".into()))) },
+                Frag::Branch {
+                    dst: "t1".into(),
+                    recv: "t0".into(),
+                    via_item: true,
+                    thr: 2,
+                    then_expr: Expr::Var("t0".into()),
+                    else_expr: Expr::Method("neg".into(), Box::new(Expr::Var("t0".into()))),
+                },
+                Frag::ForLoop {
+                    var: "i0".into(),
+                    n: 3,
+                    acc: "t2".into(),
+                    init: Expr::Var("t1".into()),
+                    step: Expr::Var("x".into()),
+                    exit: Some(LoopExit { when: 1, kind: ExitKind::Continue }),
+                },
+                Frag::ListSum {
+                    list: "xs0".into(),
+                    dst: "t3".into(),
+                    items: vec![Expr::Var("t2".into()), Expr::Call("g0".into(), Box::new(Expr::Var("x".into())))],
+                },
+            ],
+            ret: "t3".into(),
+            calls: vec![CallSite { shape: vec![2, 3] }, CallSite { shape: vec![4] }],
+        };
+        let src = prog.render();
+        crate::pylang::compile_module(&src, "<fuzz>", crate::bytecode::IsaVersion::V310)
+            .unwrap_or_else(|e| panic!("{}\n{}", e, src));
+        assert!(src.contains("def f(x):"));
+        assert!(src.contains("__r1 = f(torch.rand([4]))"));
+    }
+}

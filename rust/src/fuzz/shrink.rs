@@ -1,0 +1,145 @@
+//! Program-level delta debugging.
+//!
+//! Given a failing program and a predicate "does this still fail the same
+//! way?", greedily try structural reductions — drop a call site, drop a
+//! fragment, flatten a branch or loop, simplify an expression to its first
+//! leaf — accepting any reduction that preserves the failure, until a full
+//! pass makes no progress or the run budget is spent. The result is the
+//! small program committed in a regression bundle; single-*op* localization
+//! is then delegated to the existing `replay` machinery (see
+//! [`super::localize_source`]).
+
+use super::prog::{Expr, Frag, Prog};
+
+/// All one-step reductions of `prog`, smallest-step first.
+pub fn candidates(prog: &Prog) -> Vec<Prog> {
+    let mut out = Vec::new();
+
+    // Drop a call site (keep at least one — no calls, no oracle).
+    if prog.calls.len() > 1 {
+        for i in 0..prog.calls.len() {
+            let mut p = prog.clone();
+            p.calls.remove(i);
+            out.push(p);
+        }
+    }
+
+    // Drop a body fragment.
+    if prog.body.len() > 1 {
+        for i in 0..prog.body.len() {
+            let mut p = prog.clone();
+            p.body.remove(i);
+            out.push(p);
+        }
+    }
+
+    // Flatten control flow: branch -> its then-assignment, loop -> one
+    // unrolled step, list-sum -> its first item.
+    for i in 0..prog.body.len() {
+        let replacement = match &prog.body[i] {
+            Frag::Branch { dst, then_expr, .. } => {
+                Some(Frag::Assign { dst: dst.clone(), expr: then_expr.clone() })
+            }
+            Frag::ForLoop { acc, init, step, .. } | Frag::WhileLoop { acc, init, step, .. } => Some(Frag::Assign {
+                dst: acc.clone(),
+                expr: Expr::Bin('+', Box::new(init.clone()), Box::new(step.clone())),
+            }),
+            Frag::ListSum { dst, items, .. } => {
+                items.first().map(|e| Frag::Assign { dst: dst.clone(), expr: e.clone() })
+            }
+            _ => None,
+        };
+        if let Some(frag) = replacement {
+            let mut p = prog.clone();
+            p.body[i] = frag;
+            out.push(p);
+        }
+    }
+
+    // Simplify an expression to its first variable leaf.
+    for i in 0..prog.body.len() {
+        if let Frag::Assign { dst, expr } = &prog.body[i] {
+            if expr.size() > 1 {
+                if let Some(v) = expr.first_var() {
+                    let mut p = prog.clone();
+                    p.body[i] = Frag::Assign { dst: dst.clone(), expr: Expr::Var(v) };
+                    out.push(p);
+                }
+            }
+        }
+    }
+
+    // Drop a helper (only useful once no fragment calls it; the failure
+    // predicate rejects the reduction otherwise).
+    for i in 0..prog.helpers.len() {
+        let mut p = prog.clone();
+        p.helpers.remove(i);
+        out.push(p);
+    }
+
+    out
+}
+
+/// Greedy delta-debug: keep applying the first failure-preserving
+/// reduction until fixpoint or `max_runs` predicate evaluations.
+pub fn shrink(prog: &Prog, still_fails: &mut dyn FnMut(&Prog) -> bool, max_runs: usize) -> Prog {
+    let mut cur = prog.clone();
+    let mut runs = 0usize;
+    loop {
+        let mut improved = false;
+        for cand in candidates(&cur) {
+            if runs >= max_runs {
+                return cur;
+            }
+            runs += 1;
+            if still_fails(&cand) {
+                cur = cand;
+                improved = true;
+                break;
+            }
+        }
+        if !improved {
+            return cur;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fuzz::generate::generate;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn candidates_only_shrink() {
+        for seed in 0..10u64 {
+            let p = generate(&mut Rng::new(seed));
+            let base = p.render().len();
+            for c in candidates(&p) {
+                assert!(!c.calls.is_empty(), "seed {}: candidate lost all call sites", seed);
+                assert!(c.render().len() < base + 16, "seed {}: candidate grew", seed);
+            }
+        }
+    }
+
+    #[test]
+    fn shrink_reaches_a_fixpoint_under_an_always_failing_predicate() {
+        let p = generate(&mut Rng::new(11));
+        let shrunk = shrink(&p, &mut |_| true, 500);
+        // Everything reducible is reduced: one call, one fragment, helpers gone.
+        assert_eq!(shrunk.calls.len(), 1);
+        assert_eq!(shrunk.body.len(), 1);
+        assert!(shrunk.helpers.is_empty());
+        assert!(candidates(&shrunk).iter().all(|c| c == &shrunk || c.render() != shrunk.render()));
+    }
+
+    #[test]
+    fn shrink_respects_the_predicate() {
+        let p = generate(&mut Rng::new(12));
+        let keep = p.body.len();
+        // Nothing "fails": the program must come back untouched.
+        let same = shrink(&p, &mut |_| false, 500);
+        assert_eq!(same.body.len(), keep);
+        assert_eq!(same.render(), p.render());
+    }
+}

@@ -329,6 +329,31 @@
 //!   the quick sweep (`DEPYF_CONFORMANCE_QUICK=1`) and uploads mismatch
 //!   repro bundles as artifacts on failure.
 //!
+//! ## Fuzzing
+//!
+//! The conformance sweep holds backends to the oracle at the *graph*
+//! level; [`fuzz`] (`depyf fuzz --seed N --iters M`) attacks the layers
+//! above it with **program-level differential fuzzing**. A seeded
+//! generator builds whole `pylang` programs from composable templates —
+//! data-dependent branches, `for`/`while` loops with `break`/`continue`,
+//! closures, container mutation, tensor-shape changes across guard
+//! boundaries, mixed int/float/bool arithmetic — then applies
+//! semantics-preserving mutations (noop wrapping, call duplication onto
+//! the guard-cache hit path) and semantics-perturbing ones (shape/constant
+//! perturbation, method swaps including deliberately unsupported ones).
+//! Each program runs twice — plain VM vs dynamo-hooked — and the runs
+//! must agree **bitwise**: same printed output, same result bit patterns
+//! (`-0.0` and NaN payloads included), and on failure the *same* error.
+//! The sweep crosses every registered graph backend (eager, sharded,
+//! batched, codegen, wrapper compositions) with opt levels 0 and 2, so
+//! one run also cross-checks the optimizer and the wrapper stack.
+//! Divergences, disagreeing errors, and panics caught under
+//! `catch_unwind` are auto-shrunk by program-level delta debugging,
+//! chained into the replay single-op localizer, and emitted as committed
+//! regression bundles (`tests/fuzz_regressions/`) that CI replays bitwise
+//! on every backend. Everything derives from `(seed, iter)` — no wall
+//! clock anywhere — so every finding reproduces from its coordinates.
+//!
 //! ## The stack underneath
 //!
 //! * **Layer 3 (this crate)** — the compiler being opened *and* the tool
@@ -355,6 +380,7 @@ pub mod debugger;
 pub mod decompiler;
 pub mod dynamo;
 pub mod faults;
+pub mod fuzz;
 pub mod graph;
 pub mod hijack;
 pub mod metrics;

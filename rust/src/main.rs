@@ -72,6 +72,18 @@ usage:
       another backend (differential mode), --eps switches to |a-b| <= tol.
       Mismatches are localized to the first diverging op (disable with
       --no-localize) and exit with code 1.
+  depyf fuzz [--seed N] [--iters M] [--backend <name>] [--opt-level 0|1|2]
+             [--out <dir>] [--no-shrink]
+      Program-level differential fuzzing: generate M seeded pylang
+      programs (branches, loops with break/continue, closures, container
+      mutation, guard-boundary shape changes), mutate them, and run each
+      twice — plain VM vs dynamo — demanding bitwise agreement (printed
+      output, result bit patterns, error messages). Sweeps eager, sharded,
+      batched, codegen and resilient:codegen at opt levels 0 and 2 unless
+      --backend / --opt-level narrow it. Divergences and caught panics are
+      auto-shrunk (disable with --no-shrink), chained into the replay
+      localizer, written as regression bundles to <dir> (default
+      fuzz_out), and exit with code 1. Fully deterministic in --seed.
   depyf help
       Print this text.
 
@@ -231,6 +243,7 @@ fn run_cli(args: &[String]) -> i32 {
         "table1" => cmd_table1(rest),
         "serve" => cmd_serve(rest),
         "replay" => cmd_replay(rest),
+        "fuzz" => cmd_fuzz(rest),
         "help" | "--help" | "-h" => {
             print!("{}", USAGE);
             Ok(())
@@ -486,6 +499,68 @@ fn cmd_replay(args: &[String]) -> Result<(), CliError> {
     Ok(())
 }
 
+/// `depyf fuzz`: seeded program-level differential fuzzing.
+fn cmd_fuzz(args: &[String]) -> Result<(), CliError> {
+    let seed: u64 = match flag_value(args, "--seed") {
+        None => 42,
+        Some(s) => s.parse().map_err(|_| usage(format!("bad --seed '{}' (expected a u64)", s)))?,
+    };
+    let iters: u64 = match flag_value(args, "--iters") {
+        None => 100,
+        Some(s) => s
+            .parse()
+            .ok()
+            .filter(|&n: &u64| n >= 1)
+            .ok_or_else(|| usage(format!("bad --iters '{}' (expected >= 1)", s)))?,
+    };
+    let backends = match flag_value(args, "--backend") {
+        None => Vec::new(), // the default sweep set
+        Some(name) => {
+            resolve_backend(&name)?; // typos are usage errors before any work
+            vec![name]
+        }
+    };
+    let opt_levels = match flag_value(args, "--opt-level") {
+        None => Vec::new(), // O0 and O2
+        Some(v) => vec![
+            OptLevel::parse(&v).ok_or_else(|| usage(format!("unknown --opt-level '{}' (expected 0, 1 or 2)", v)))?,
+        ],
+    };
+    let out_dir = flag_value(args, "--out").unwrap_or_else(|| "fuzz_out".into());
+    let opts = depyf::fuzz::FuzzOptions {
+        seed,
+        iters,
+        backends,
+        opt_levels,
+        budget: depyf::fuzz::DEFAULT_BUDGET,
+        shrink: !has_flag(args, "--no-shrink"),
+    };
+    // The oracle traps panics with catch_unwind and reports them as
+    // findings; silence the default hook so expected trips don't spray
+    // backtraces over the report.
+    let prev = std::panic::take_hook();
+    std::panic::set_hook(Box::new(|_| {}));
+    let report = depyf::fuzz::run_fuzz(&opts);
+    std::panic::set_hook(prev);
+    let report = report.map_err(run_err)?;
+    println!("{}", report.render());
+    if !report.ok() {
+        let dir = std::path::Path::new(&out_dir);
+        for f in &report.failures {
+            let p = f.save(dir).map_err(run_err)?;
+            eprintln!("[depyf] wrote {}", p.display());
+        }
+        return Err(run_err(format!(
+            "{} divergence(s); repro bundles in {} (replay a shrunken source with `depyf run`, \
+             its trace with `depyf replay`)",
+            report.failures.len(),
+            out_dir
+        )));
+    }
+    eprintln!("[depyf] fuzz: no divergences");
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -559,6 +634,20 @@ mod tests {
         // xla needs the PJRT runtime, which is thread-confined — serve
         // refuses it up front rather than crashing a worker.
         assert_eq!(run_cli(&s(&["serve", "--backend", "xla"])), 2);
+    }
+
+    #[test]
+    fn fuzz_usage_errors() {
+        assert_eq!(run_cli(&s(&["fuzz", "--seed", "banana"])), 2);
+        assert_eq!(run_cli(&s(&["fuzz", "--iters", "0"])), 2);
+        assert_eq!(run_cli(&s(&["fuzz", "--backend", "bogus"])), 2);
+        assert_eq!(run_cli(&s(&["fuzz", "--opt-level", "9"])), 2);
+    }
+
+    #[test]
+    fn fuzz_smoke_run_is_clean() {
+        // Tiny but real: two programs, differential on eager at O0.
+        assert_eq!(run_cli(&s(&["fuzz", "--seed", "1", "--iters", "2", "--backend", "eager", "--opt-level", "0"])), 0);
     }
 
     #[test]

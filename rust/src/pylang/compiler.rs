@@ -625,7 +625,7 @@ impl FnCtx {
                 self.emit(Instr::Jump(header as u32), line);
                 let else_start = self.here();
                 self.patch(jf, else_start);
-                let lp = self.loops.pop().unwrap();
+                let lp = self.loops.pop().ok_or_else(|| self.err("loop context lost compiling 'while'", line))?;
                 self.compile_body(orelse)?;
                 let end = self.here();
                 for b in lp.break_jumps {
@@ -644,7 +644,7 @@ impl FnCtx {
                 self.emit(Instr::Jump(header as u32), line);
                 let else_start = self.here();
                 self.patch(fi, else_start);
-                let lp = self.loops.pop().unwrap();
+                let lp = self.loops.pop().ok_or_else(|| self.err("loop context lost compiling 'for'", line))?;
                 self.compile_body(orelse)?;
                 let end = self.here();
                 for b in lp.break_jumps {
@@ -653,14 +653,18 @@ impl FnCtx {
                 Ok(())
             }
             StmtKind::Break => {
-                let lp = self.loops.last().ok_or_else(|| self.err("'break' outside loop", line))?;
-                let is_for = lp.is_for;
+                let is_for = match self.loops.last() {
+                    Some(lp) => lp.is_for,
+                    None => return Err(self.err("'break' outside loop", line)),
+                };
                 if is_for {
                     // Discard the loop iterator.
                     self.emit(Instr::PopTop, line);
                 }
                 let j = self.emit(Instr::Jump(PLACEHOLDER), line);
-                self.loops.last_mut().unwrap().break_jumps.push(j);
+                if let Some(lp) = self.loops.last_mut() {
+                    lp.break_jumps.push(j);
+                }
                 Ok(())
             }
             StmtKind::Continue => {
@@ -1111,6 +1115,45 @@ mod tests {
 
     #[test]
     fn break_outside_loop_rejected() {
-        assert!(compile_module("break\n", "<t>", IsaVersion::V310).is_err());
+        let e = compile_module("break\n", "<t>", IsaVersion::V310).unwrap_err();
+        assert!(e.to_string().contains("'break' outside loop"), "{}", e);
+        assert_eq!(e.line, 1);
+    }
+
+    #[test]
+    fn continue_outside_loop_rejected_at_module_scope() {
+        let e = compile_module("x = 1\ncontinue\n", "<t>", IsaVersion::V310).unwrap_err();
+        assert!(e.to_string().contains("'continue' outside loop"), "{}", e);
+        assert_eq!(e.line, 2);
+    }
+
+    #[test]
+    fn break_outside_loop_rejected_at_function_scope() {
+        let e = compile_module("def f(x):\n    break\n    return x\n", "<t>", IsaVersion::V310).unwrap_err();
+        assert!(e.to_string().contains("'break' outside loop"), "{}", e);
+        assert_eq!(e.line, 2);
+    }
+
+    #[test]
+    fn continue_outside_loop_rejected_at_function_scope() {
+        let e = compile_module("def f(x):\n    continue\n", "<t>", IsaVersion::V310).unwrap_err();
+        assert!(e.to_string().contains("'continue' outside loop"), "{}", e);
+        assert_eq!(e.line, 2);
+    }
+
+    #[test]
+    fn break_in_function_defined_inside_loop_rejected() {
+        // The enclosing `for` must NOT leak a loop context into the nested
+        // function body — `break` there is still outside any loop.
+        let src = "for i in range(3):\n    def f():\n        break\n";
+        let e = compile_module(src, "<t>", IsaVersion::V310).unwrap_err();
+        assert!(e.to_string().contains("'break' outside loop"), "{}", e);
+        assert_eq!(e.line, 3);
+    }
+
+    #[test]
+    fn break_and_continue_inside_loops_still_compile() {
+        compile("while True:\n    break\n");
+        compile("def f():\n    for i in range(4):\n        if i == 1:\n            continue\n        if i == 2:\n            break\n    return i\n");
     }
 }

@@ -5,17 +5,20 @@ use std::rc::Rc;
 
 use super::Vm;
 use crate::tensor::{self, Rng, Tensor};
-use crate::value::{DictKey, Value};
+use crate::value::{DictKey, Value, ValueError};
+
+/// Hard ceiling on tensor elements a builtin constructor will allocate
+/// (64 Mi elements = 256 MiB of `f32`). Shapes past it — including the
+/// `-1 as usize` wraparound a malformed shape used to produce — become a
+/// `ValueError` instead of a capacity panic or an uncatchable OOM abort.
+pub const MAX_TENSOR_ELEMS: usize = 1 << 26;
 
 fn nested_list_to_tensor(v: &Value) -> Result<(Vec<usize>, Vec<f32>), String> {
     match v {
         Value::List(l) => {
             let items = l.borrow();
-            if items.is_empty() {
-                return Ok((vec![0], vec![]));
-            }
-            // Leaf level?
-            let is_leaf = !matches!(items[0], Value::List(_));
+            // Leaf level? (An empty list is a leaf with zero elements.)
+            let is_leaf = items.first().map(|x| !matches!(x, Value::List(_))).unwrap_or(true);
             if is_leaf {
                 let data: Result<Vec<f32>, String> = items.iter().map(|x| Ok(x.as_float()? as f32)).collect();
                 let data = data?;
@@ -25,34 +28,63 @@ fn nested_list_to_tensor(v: &Value) -> Result<(Vec<usize>, Vec<f32>), String> {
                 let mut data = Vec::new();
                 for item in items.iter() {
                     let (s, d) = nested_list_to_tensor(item)?;
-                    match &shape {
-                        None => shape = Some(s),
+                    match &mut shape {
+                        slot @ None => *slot = Some(s),
                         Some(prev) => {
                             if *prev != s {
-                                return Err("ragged nested list".into());
+                                return Err(ValueError::Msg("ragged nested list".into()).into());
                             }
                         }
                     }
                     data.extend(d);
                 }
                 let mut full = vec![items.len()];
-                full.extend(shape.unwrap());
+                if let Some(inner) = shape {
+                    full.extend(inner);
+                }
                 Ok((full, data))
             }
         }
         Value::Int(i) => Ok((vec![], vec![*i as f32])),
         Value::Float(f) => Ok((vec![], vec![*f as f32])),
-        other => Err(format!("cannot build tensor from {}", other.type_name())),
+        other => Err(ValueError::Msg(format!("cannot build tensor from {}", other.type_name())).into()),
     }
 }
 
-fn shape_arg(v: &Value) -> Result<Vec<usize>, String> {
-    match v {
-        Value::List(l) => l.borrow().iter().map(|x| Ok(x.as_int()? as usize)).collect(),
-        Value::Tuple(t) => t.iter().map(|x| Ok(x.as_int()? as usize)).collect(),
-        Value::Int(i) => Ok(vec![*i as usize]),
-        other => Err(format!("expected shape list, got {}", other.type_name())),
+/// One dimension of a shape argument: must be a non-negative integer.
+/// Rejecting negatives here matters — `as usize` on `-1` wraps to 2^64-1
+/// and the subsequent allocation panics (or aborts) instead of erroring.
+fn shape_dim(v: &Value) -> Result<usize, String> {
+    let i = v.as_int()?;
+    if i < 0 {
+        return Err(ValueError::Msg(format!("negative dimension {} in tensor shape", i)).into());
     }
+    Ok(i as usize)
+}
+
+/// Validate a full shape: every dim non-negative, element count within
+/// [`MAX_TENSOR_ELEMS`] (checked multiply, so `[2^40, 2^40]` can't wrap).
+fn checked_shape(dims: Vec<usize>) -> Result<Vec<usize>, String> {
+    let mut elems: usize = 1;
+    for &d in &dims {
+        elems = elems
+            .checked_mul(d)
+            .filter(|&n| n <= MAX_TENSOR_ELEMS)
+            .ok_or_else(|| -> String {
+                ValueError::Msg(format!("tensor shape {:?} exceeds {} elements", dims, MAX_TENSOR_ELEMS)).into()
+            })?;
+    }
+    Ok(dims)
+}
+
+fn shape_arg(v: &Value) -> Result<Vec<usize>, String> {
+    let dims: Vec<usize> = match v {
+        Value::List(l) => l.borrow().iter().map(shape_dim).collect::<Result<_, _>>()?,
+        Value::Tuple(t) => t.iter().map(shape_dim).collect::<Result<_, _>>()?,
+        Value::Int(_) => vec![shape_dim(v)?],
+        other => return Err(ValueError::Msg(format!("expected shape list, got {}", other.type_name())).into()),
+    };
+    checked_shape(dims)
 }
 
 fn values_as_iterable(v: &Value) -> Result<Vec<Value>, String> {
@@ -316,7 +348,15 @@ pub fn install(vm: &Vm) {
         }));
 
         t.insert(DictKey::Str("arange".into()), Value::builtin("arange", |args| match args {
-            [n] => Ok(Value::tensor(Tensor::arange(n.as_int()? as usize))),
+            [n] => {
+                // Like Python's range/arange: a negative bound is empty, it
+                // must not wrap through `as usize` into a 2^63-element alloc.
+                let n = n.as_int()?.max(0) as usize;
+                if n > MAX_TENSOR_ELEMS {
+                    return Err(ValueError::Msg(format!("torch.arange({}) exceeds {} elements", n, MAX_TENSOR_ELEMS)).into());
+                }
+                Ok(Value::tensor(Tensor::arange(n)))
+            }
             _ => Err("torch.arange(n)".into()),
         }));
 
@@ -410,4 +450,70 @@ pub fn install(vm: &Vm) {
         }));
     }
     globals.insert("torch".into(), torch);
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::bytecode::IsaVersion;
+    use crate::vm::Vm;
+
+    fn run_err(src: &str) -> String {
+        let vm = Vm::new();
+        vm.exec_source(src, IsaVersion::V310).unwrap_err().message
+    }
+
+    fn run_ok(src: &str) -> String {
+        let vm = Vm::new();
+        vm.exec_source(src, IsaVersion::V310).unwrap_or_else(|e| panic!("{}\n{}", e, src));
+        vm.take_output()
+    }
+
+    // Fuzzer-derived: `torch.zeros([-1])` used to wrap `-1 as usize` into a
+    // 2^64-element allocation and panic with a capacity overflow.
+    #[test]
+    fn negative_shape_dim_is_a_value_error_not_a_panic() {
+        let e = run_err("t = torch.zeros([-1])\n");
+        assert!(e.contains("negative dimension -1"), "{}", e);
+        let e = run_err("t = torch.ones([2, -3])\n");
+        assert!(e.contains("negative dimension -3"), "{}", e);
+        let e = run_err("t = torch.rand([-4])\n");
+        assert!(e.contains("negative dimension -4"), "{}", e);
+        let e = run_err("t = torch.randint(5, [-1])\n");
+        assert!(e.contains("negative dimension -1"), "{}", e);
+    }
+
+    // Fuzzer-derived: an oversized product used to reach the allocator and
+    // abort the process (OOM is not unwindable), killing the whole session.
+    #[test]
+    fn oversized_shape_is_a_value_error_not_an_abort() {
+        let e = run_err("t = torch.ones([65536, 65536])\n");
+        assert!(e.contains("exceeds"), "{}", e);
+        // Product wraps u64 without the checked multiply.
+        let e = run_err("t = torch.zeros([1099511627776, 1099511627776])\n");
+        assert!(e.contains("exceeds"), "{}", e);
+        let e = run_err("t = torch.arange(268435457)\n");
+        assert!(e.contains("exceeds"), "{}", e);
+    }
+
+    // Fuzzer-derived: `arange` of a negative bound also wrapped through
+    // `as usize`; Python semantics say it is simply empty.
+    #[test]
+    fn arange_negative_is_empty() {
+        assert_eq!(run_ok("t = torch.arange(-5)\nprint(t.numel())\n"), "0\n");
+        assert_eq!(run_ok("t = torch.arange(0)\nprint(t.numel())\n"), "0\n");
+    }
+
+    #[test]
+    fn tensor_literals_still_build_after_hardening() {
+        assert_eq!(run_ok("t = torch.tensor([[1, 2], [3, 4]])\nprint(t.sum().item())\n"), "10.0\n");
+        assert_eq!(run_ok("t = torch.tensor([])\nprint(t.numel())\n"), "0\n");
+        assert_eq!(run_ok("t = torch.tensor([[], []])\nprint(t.numel())\n"), "0\n");
+        assert_eq!(run_ok("t = torch.ones([2, 3])\nprint(t.numel())\n"), "6\n");
+    }
+
+    #[test]
+    fn ragged_nested_list_is_an_error() {
+        let e = run_err("t = torch.tensor([[1, 2], [3]])\n");
+        assert!(e.contains("ragged"), "{}", e);
+    }
 }

@@ -1,0 +1,111 @@
+//! Replays the committed fuzz-regression corpus (`tests/fuzz_regressions/
+//! *.json`) bitwise on every backend.
+//!
+//! Each bundle is a finding the program-level fuzzer (`depyf fuzz`) once
+//! made — or a hand-distilled pin of a fixed panic — in the committed
+//! [`depyf::fuzz::FuzzBundle`] format. For every bundle the harness:
+//!
+//! 1. runs the source on the plain VM: it must never panic; `expect_error`
+//!    bundles must end in a *typed* error, `strict` bundles must reproduce
+//!    their recorded rendering exactly;
+//! 2. runs it dynamo-hooked on eager, sharded, batched, codegen and
+//!    resilient:codegen at opt levels 0 and 2, demanding bitwise agreement
+//!    with the plain run ([`depyf::fuzz::compare`] returns `None`).
+//!
+//! To commit a new regression, drop the bundle `depyf fuzz` wrote into
+//! `tests/fuzz_regressions/` (see `tests/README.md`).
+
+use std::panic;
+use std::path::PathBuf;
+
+use depyf::api::OptLevel;
+use depyf::fuzz::{compare, resolve_backend, run_program, FuzzBundle, RunStatus, DEFAULT_BUDGET};
+
+/// The replay sweep's backend set: every registered graph compiler the
+/// oracle holds to bit-exactness, plus one wrapper composition.
+const BACKENDS: &[&str] = &["eager", "sharded", "batched", "codegen", "resilient:codegen"];
+const OPT_LEVELS: &[OptLevel] = &[OptLevel::O0, OptLevel::O2];
+
+fn corpus_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests").join("fuzz_regressions")
+}
+
+fn load_corpus() -> Vec<FuzzBundle> {
+    let dir = corpus_dir();
+    let mut out = Vec::new();
+    for entry in std::fs::read_dir(&dir).unwrap_or_else(|e| panic!("read {}: {}", dir.display(), e)) {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("json") {
+            continue;
+        }
+        let b = FuzzBundle::load(&path).unwrap_or_else(|e| panic!("{}: {}", path.display(), e));
+        let stem = path.file_stem().unwrap().to_string_lossy().into_owned();
+        assert_eq!(b.name, stem, "{}: bundle name must match its file stem", path.display());
+        out.push(b);
+    }
+    out.sort_by(|a, b| a.name.cmp(&b.name));
+    out
+}
+
+#[test]
+fn corpus_is_nonempty_and_well_formed() {
+    let corpus = load_corpus();
+    assert!(corpus.len() >= 10, "expected a committed corpus, found {} bundle(s)", corpus.len());
+    for b in &corpus {
+        assert!(!b.source.is_empty(), "{}: empty source", b.name);
+        assert!(!(b.strict && b.expect_error && b.expected.starts_with("status: ok")), "{}: contradictory flags", b.name);
+    }
+}
+
+#[test]
+fn every_bundle_replays_bitwise_on_every_backend() {
+    let corpus = load_corpus();
+    // The oracle traps panics itself; silence the default hook so a
+    // regressed panic shows up as one readable failure line, not a
+    // backtrace mid-run.
+    let prev = panic::take_hook();
+    panic::set_hook(Box::new(|_| {}));
+    let mut failures: Vec<String> = Vec::new();
+    for b in &corpus {
+        let plain = run_program(&b.source, None, DEFAULT_BUDGET);
+        if let RunStatus::Panic(m) = &plain.status {
+            failures.push(format!("{}: plain run panicked: {}", b.name, m));
+            continue;
+        }
+        if plain.status == RunStatus::Budget {
+            failures.push(format!("{}: plain run tripped the instruction budget", b.name));
+            continue;
+        }
+        if b.expect_error && !matches!(plain.status, RunStatus::Error(_)) {
+            failures.push(format!("{}: expected a typed error, got:\n{}", b.name, plain.render()));
+        }
+        if b.strict && plain.render() != b.expected {
+            failures.push(format!("{}: strict rendering drifted:\nwant:\n{}\ngot:\n{}", b.name, b.expected, plain.render()));
+        }
+        for name in BACKENDS {
+            let backend = match resolve_backend(name) {
+                Ok(be) => be,
+                Err(e) => {
+                    failures.push(format!("{}: backend {}: {}", b.name, name, e));
+                    continue;
+                }
+            };
+            for &opt in OPT_LEVELS {
+                let hooked = run_program(&b.source, Some((backend.clone(), opt)), DEFAULT_BUDGET);
+                if let Some(kind) = compare(&plain, &hooked) {
+                    failures.push(format!(
+                        "{}: {} on {} at O{}:\nplain:\n{}\nhooked:\n{}",
+                        b.name,
+                        kind.as_str(),
+                        name,
+                        opt.as_u8(),
+                        plain.render(),
+                        hooked.render()
+                    ));
+                }
+            }
+        }
+    }
+    panic::set_hook(prev);
+    assert!(failures.is_empty(), "{} regression(s):\n{}", failures.len(), failures.join("\n---\n"));
+}

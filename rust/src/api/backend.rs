@@ -287,6 +287,18 @@ pub trait CompiledModule: Send + Sync {
         ModuleStats { partitions: 1, ..Default::default() }
     }
 
+    /// Whether this module *cooperates* with a published request deadline
+    /// ([`crate::serve::deadline::current_deadline`]): it bounds its own
+    /// `call`, returning [`DepyfError::Timeout`] when the budget runs
+    /// out. The dispatch path then skips the sidecar watchdog thread it
+    /// must otherwise spawn per deadlined call — the worker is reclaimed
+    /// by the module's own supervision instead of left burning CPU.
+    /// Default `false`: plain synchronous executors cannot interrupt
+    /// themselves.
+    fn deadline_aware(&self) -> bool {
+        false
+    }
+
     /// Hook invoked by the dispatch path when `call` failed and a
     /// fallback executor served the request instead: `served_by` names
     /// the backend that actually produced `outputs`. Wrapper backends

@@ -47,6 +47,12 @@ pub enum DepyfError {
     Fault(String),
     /// A call or compile exceeded its deadline and was abandoned.
     Timeout(String),
+    /// Admission control shed the request: the serving queue was full (or
+    /// the remaining deadline could not cover the observed service time)
+    /// and the job was rejected *before* any work ran. Deliberately not
+    /// transient — retrying into an overloaded queue amplifies the
+    /// overload; callers should degrade to their fallback immediately.
+    Overloaded(String),
 }
 
 impl DepyfError {
@@ -71,6 +77,7 @@ impl DepyfError {
             DepyfError::Panic(_) => "panic",
             DepyfError::Fault(_) => "fault",
             DepyfError::Timeout(_) => "timeout",
+            DepyfError::Overloaded(_) => "overloaded",
         }
     }
 
@@ -116,7 +123,8 @@ impl fmt::Display for DepyfError {
             | DepyfError::Builder(m)
             | DepyfError::Panic(m)
             | DepyfError::Fault(m)
-            | DepyfError::Timeout(m) => write!(f, "{} error: {}", self.layer(), m),
+            | DepyfError::Timeout(m)
+            | DepyfError::Overloaded(m) => write!(f, "{} error: {}", self.layer(), m),
         }
     }
 }
@@ -241,5 +249,15 @@ mod tests {
         assert!(!DepyfError::Backend("unsupported op".into()).is_transient());
         assert!(!DepyfError::Timeout("deadline".into()).is_transient());
         assert!(!DepyfError::Builder("misconfigured".into()).is_transient());
+        // A shed is a capacity decision, not a hiccup: retrying into an
+        // overloaded queue amplifies the overload, so degrade instead.
+        assert!(!DepyfError::Overloaded("queue full".into()).is_transient());
+    }
+
+    #[test]
+    fn overloaded_names_its_layer() {
+        let e = DepyfError::Overloaded("queue full (cap 4); request shed".into());
+        assert_eq!(e.layer(), "overloaded");
+        assert_eq!(e.to_string(), "overloaded error: queue full (cap 4); request shed");
     }
 }

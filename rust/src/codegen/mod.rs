@@ -1226,12 +1226,17 @@ fn run_loop(
                 let (promise, future) = call_channel();
                 let el = el.clone();
                 let owned = owned.clone();
-                pool.submit(Box::new(move || {
+                // A draining/faulted pool hands the job back with a typed
+                // error; running it inline computes the same bits and
+                // fulfills the future, so the wait below still succeeds.
+                if let Err((_e, job)) = pool.submit(Box::new(move || {
                     let refs: Vec<&Tensor> = owned.iter().collect();
                     let mut tile = vec![0.0f32; hi - lo];
                     run_elem_range(&el, &refs, lo, hi, &mut LoopBufs::default(), &mut tile);
                     promise.fulfill(Ok(vec![Tensor::new(vec![hi - lo], tile)]));
-                }));
+                })) {
+                    job();
+                }
                 waits.push((future, lo, hi));
             }
             let mut out: Vec<f32> = Vec::with_capacity(el.numel);
@@ -1289,12 +1294,16 @@ fn run_matmul(
                 let (a, b) = (a.clone(), b.clone());
                 let steps = mm.epilogue.clone();
                 let ops = operands.clone();
-                pool.submit(Box::new(move || {
+                // Same inline-recompute contract as the elementwise path:
+                // a rejected submit runs the tile on this thread instead.
+                if let Err((_e, job)) = pool.submit(Box::new(move || {
                     let mut od = vec![0.0f32; (i1 - i0) * n];
                     matmul_rows(a.data(), b.data(), &mut od, i0, i1, k, n);
                     apply_epilogue_rows(&steps, &ops, &mut od, i0, i1, n);
                     promise.fulfill(Ok(vec![Tensor::new(vec![i1 - i0, n], od)]));
-                }));
+                })) {
+                    job();
+                }
                 waits.push((future, i0, i1));
             }
             let mut out: Vec<f32> = Vec::with_capacity(m * n);

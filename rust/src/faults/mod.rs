@@ -19,6 +19,8 @@
 //! | `disk_cache.write` | `DiskCache::put` (fault → write skipped) |
 //! | `worker_pool.submit` | `WorkerPool::submit` (async backend futures) |
 //! | `pipeline.stage` | per-packet work in each pipelined stage thread |
+//! | `worker.heartbeat` | per-job work in each supervised worker (delay = a wedged job the watchdog must kill; error = a simulated mid-job crash) |
+//! | `serve.admission` | `Supervisor::submit_call` admission (error = forced shed) |
 //!
 //! # The `DEPYF_FAULTS` spec grammar
 //!
@@ -60,10 +62,12 @@ pub enum Site {
     DiskCacheWrite,
     WorkerSubmit,
     PipelineStage,
+    WorkerHeartbeat,
+    ServeAdmission,
 }
 
 /// Every site, in spec/report order.
-pub const SITES: [Site; 7] = [
+pub const SITES: [Site; 9] = [
     Site::BackendPlan,
     Site::BackendLower,
     Site::ModuleCall,
@@ -71,6 +75,8 @@ pub const SITES: [Site; 7] = [
     Site::DiskCacheWrite,
     Site::WorkerSubmit,
     Site::PipelineStage,
+    Site::WorkerHeartbeat,
+    Site::ServeAdmission,
 ];
 
 impl Site {
@@ -84,6 +90,8 @@ impl Site {
             Site::DiskCacheWrite => "disk_cache.write",
             Site::WorkerSubmit => "worker_pool.submit",
             Site::PipelineStage => "pipeline.stage",
+            Site::WorkerHeartbeat => "worker.heartbeat",
+            Site::ServeAdmission => "serve.admission",
         }
     }
 
@@ -131,7 +139,7 @@ struct Clause {
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct FaultPlan {
     seed: u64,
-    clauses: [Option<Clause>; 7],
+    clauses: [Option<Clause>; 9],
 }
 
 impl FaultPlan {
@@ -218,8 +226,8 @@ pub struct SiteStats {
 /// [`install`], so per-round chaos accounting needs no manual reset.
 struct ActivePlan {
     plan: FaultPlan,
-    hits: [AtomicU64; 7],
-    fired: [AtomicU64; 7],
+    hits: [AtomicU64; 9],
+    fired: [AtomicU64; 9],
 }
 
 impl ActivePlan {
@@ -384,6 +392,17 @@ mod tests {
             Some(Clause { kind: FaultKind::Delay(20), num: 1, den: 3 })
         );
         assert!(plan.clauses[Site::DiskCacheRead.index()].is_none());
+
+        // The supervision sites joined the grammar in PR 10.
+        let sup = FaultPlan::parse("seed=3;worker.heartbeat=delay:500@1/3;serve.admission=error@1/2").unwrap();
+        assert_eq!(
+            sup.clauses[Site::WorkerHeartbeat.index()],
+            Some(Clause { kind: FaultKind::Delay(500), num: 1, den: 3 })
+        );
+        assert_eq!(
+            sup.clauses[Site::ServeAdmission.index()],
+            Some(Clause { kind: FaultKind::Error, num: 1, den: 2 })
+        );
 
         // Whitespace tolerated; same plan.
         let spaced = FaultPlan::parse(

@@ -46,6 +46,12 @@ pub struct FuzzBundle {
     /// When true, the plain run must end in a typed error (the bundle pins
     /// a previously-panicking or previously-aborting input).
     pub expect_error: bool,
+    /// Filled by `depyf fuzz --bisect-opt`: the lowest opt level (0/1/2)
+    /// at which the shrunken divergence reproduces single-threaded.
+    /// `None` on bundles captured without bisection, or when the
+    /// divergence did not reproduce in the bisect re-run (e.g. a
+    /// concurrency-only finding from `--serve` mode).
+    pub first_divergent_opt: Option<u8>,
 }
 
 impl FuzzBundle {
@@ -54,8 +60,12 @@ impl FuzzBundle {
             Some(s) => format!("\"{}\"", json::escape(s)),
             None => "null".to_string(),
         };
+        let opt_num = |v: &Option<u8>| match v {
+            Some(n) => n.to_string(),
+            None => "null".to_string(),
+        };
         format!(
-            "{{\n  \"schema\": {},\n  \"name\": \"{}\",\n  \"seed\": \"{}\",\n  \"iter\": {},\n  \"backend\": \"{}\",\n  \"opt_level\": {},\n  \"kind\": \"{}\",\n  \"source\": \"{}\",\n  \"expected\": \"{}\",\n  \"actual\": \"{}\",\n  \"culprit\": {},\n  \"note\": {},\n  \"strict\": {},\n  \"expect_error\": {}\n}}\n",
+            "{{\n  \"schema\": {},\n  \"name\": \"{}\",\n  \"seed\": \"{}\",\n  \"iter\": {},\n  \"backend\": \"{}\",\n  \"opt_level\": {},\n  \"kind\": \"{}\",\n  \"source\": \"{}\",\n  \"expected\": \"{}\",\n  \"actual\": \"{}\",\n  \"culprit\": {},\n  \"note\": {},\n  \"strict\": {},\n  \"expect_error\": {},\n  \"first_divergent_opt\": {}\n}}\n",
             FUZZ_BUNDLE_SCHEMA,
             json::escape(&self.name),
             self.seed,
@@ -70,6 +80,7 @@ impl FuzzBundle {
             opt_str(&self.note),
             self.strict,
             self.expect_error,
+            opt_num(&self.first_divergent_opt),
         )
     }
 
@@ -111,6 +122,11 @@ impl FuzzBundle {
             note: opt_field("note"),
             strict: bool_field("strict"),
             expect_error: bool_field("expect_error"),
+            // Absent on bundles committed before the field existed.
+            first_divergent_opt: doc
+                .get("first_divergent_opt")
+                .and_then(Json::as_f64)
+                .map(|v| v as u8),
         })
     }
 
@@ -151,6 +167,7 @@ mod tests {
             note: None,
             strict: false,
             expect_error: false,
+            first_divergent_opt: Some(2),
         }
     }
 
@@ -167,6 +184,18 @@ mod tests {
         b.seed = u64::MAX;
         let back = FuzzBundle::parse(&b.to_json()).unwrap();
         assert_eq!(back.seed, u64::MAX);
+    }
+
+    #[test]
+    fn bundles_without_bisect_field_still_parse() {
+        // Backward compatibility: bundles committed before `--bisect-opt`
+        // existed have no `first_divergent_opt` key at all.
+        let text = sample().to_json().replace(",\n  \"first_divergent_opt\": 2", "");
+        let back = FuzzBundle::parse(&text).unwrap();
+        assert_eq!(back.first_divergent_opt, None);
+        // And an explicit null parses the same way.
+        let text = sample().to_json().replace("\"first_divergent_opt\": 2", "\"first_divergent_opt\": null");
+        assert_eq!(FuzzBundle::parse(&text).unwrap().first_divergent_opt, None);
     }
 
     #[test]

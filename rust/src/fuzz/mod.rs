@@ -102,6 +102,15 @@ pub struct FuzzOptions {
     /// Delta-debug failures before bundling (disable for speed when
     /// triaging interactively).
     pub shrink: bool,
+    /// `--serve --threads N`: dispatch the hooked runs from N concurrent
+    /// threads through one shared [`crate::serve::ModuleCache`] per
+    /// backend, diffing each against the precomputed single-thread plain
+    /// outcome. Divergences are not shrunk (re-running a shrink candidate
+    /// single-threaded cannot reproduce a concurrency bug).
+    pub serve_threads: Option<usize>,
+    /// `--bisect-opt`: re-run each (shrunken) divergence at O0/O1/O2 and
+    /// record the first exhibiting level in the bundle.
+    pub bisect_opt: bool,
 }
 
 impl Default for FuzzOptions {
@@ -113,6 +122,8 @@ impl Default for FuzzOptions {
             opt_levels: Vec::new(),
             budget: DEFAULT_BUDGET,
             shrink: true,
+            serve_threads: None,
+            bisect_opt: false,
         }
     }
 }
@@ -217,9 +228,36 @@ pub fn localize_source(src: &str, backend_name: &str, opt: OptLevel, budget: u64
     }
 }
 
+/// Re-run a divergent source at O0/O1/O2 on the same backend and report
+/// the first level the divergence exhibits at — the `--bisect-opt`
+/// triage step that separates "the optimizer broke it" (first level 1
+/// or 2) from "capture/codegen broke it" (level 0). `None` when the
+/// divergence does not reproduce single-threaded at any level.
+pub fn bisect_first_divergent_opt(src: &str, backend: &Arc<dyn Backend>, budget: u64) -> Option<u8> {
+    let plain = run_program(src, None, budget);
+    if plain.status == RunStatus::Budget {
+        return None;
+    }
+    for opt in [OptLevel::O0, OptLevel::O1, OptLevel::O2] {
+        let hooked = run_program(src, Some((Arc::clone(backend), opt)), budget);
+        if hooked.status == RunStatus::Budget {
+            continue;
+        }
+        if compare(&plain, &hooked).is_some() {
+            return Some(opt.as_u8());
+        }
+    }
+    None
+}
+
 /// Run a full differential sweep. Deterministic in `opts`: same options,
-/// same report (counts, failure names, sources, bundles).
+/// same report (counts, failure names, sources, bundles). With
+/// [`FuzzOptions::serve_threads`] set, dispatch runs in concurrent serve
+/// mode instead ([`run_fuzz_serve`]).
 pub fn run_fuzz(opts: &FuzzOptions) -> Result<FuzzReport, String> {
+    if let Some(threads) = opts.serve_threads {
+        return run_fuzz_serve(opts, threads.max(1));
+    }
     let backend_names = if opts.backends.is_empty() { default_backends() } else { opts.backends.clone() };
     let mut backends: Vec<(String, Arc<dyn Backend>)> = Vec::new();
     for name in &backend_names {
@@ -283,6 +321,11 @@ pub fn run_fuzz(opts: &FuzzOptions) -> Result<FuzzReport, String> {
                 } else {
                     None
                 };
+                let first_divergent_opt = if opts.bisect_opt {
+                    bisect_first_divergent_opt(&final_src, backend, opts.budget)
+                } else {
+                    None
+                };
                 let safe_name: String =
                     name.chars().map(|c| if c.is_ascii_alphanumeric() { c } else { '_' }).collect();
                 report.failures.push(FuzzBundle {
@@ -299,11 +342,148 @@ pub fn run_fuzz(opts: &FuzzOptions) -> Result<FuzzReport, String> {
                     note: Some("auto-shrunken by `depyf fuzz`; replayed bitwise by tests/fuzz_regressions.rs".into()),
                     strict: false,
                     expect_error: false,
+                    first_divergent_opt,
                 });
                 // One bundle per iteration: the same root cause usually
                 // fails every remaining combo, and N copies of one finding
                 // drown the report.
                 break 'combos;
+            }
+        }
+    }
+    Ok(report)
+}
+
+/// One precomputed serve-fuzz case: the program plus its single-thread
+/// plain outcome (the reference every concurrent hooked run diffs
+/// against).
+struct ServeCase {
+    iter: u64,
+    src: String,
+    plain: RunOutcome,
+}
+
+/// What one serve-fuzz thread observed for its partition.
+struct ServeSlice {
+    runs: u64,
+    skipped_budget: u64,
+    /// `(iter, opt, kind, hooked render)` per divergence.
+    found: Vec<(u64, u8, DivergenceKind, String)>,
+}
+
+/// Concurrent differential fuzzing (`depyf fuzz --serve --threads N`):
+/// the hooked side of every diff runs on one of N OS threads, all
+/// dispatching through a *shared* [`crate::serve::ModuleCache`] — so the
+/// property under test shifts from "compiler output is correct" to
+/// "compiler output is correct when N callers race one compile cache".
+/// Programs and plain outcomes are precomputed single-threaded, the
+/// iteration space is partitioned deterministically (`index % N`), and
+/// divergences are reported unshrunk (a shrink re-run cannot reproduce
+/// a race) with a `serve:<inner>` backend tag.
+pub fn run_fuzz_serve(opts: &FuzzOptions, threads: usize) -> Result<FuzzReport, String> {
+    let backend_names = if opts.backends.is_empty() { default_backends() } else { opts.backends.clone() };
+    // Resolve every name up front so a typo fails fast, not mid-sweep.
+    for name in &backend_names {
+        resolve_backend(name)?;
+    }
+    let opt_levels: Vec<OptLevel> =
+        if opts.opt_levels.is_empty() { vec![OptLevel::O0, OptLevel::O2] } else { opts.opt_levels.clone() };
+
+    let mut report =
+        FuzzReport { seed: opts.seed, iters: opts.iters, runs: 0, skipped_budget: 0, failures: Vec::new() };
+
+    let mut cases: Vec<Arc<ServeCase>> = Vec::new();
+    for iter in 0..opts.iters {
+        let src = gen_source(opts.seed, iter);
+        let plain = run_program(&src, None, opts.budget);
+        if plain.status == RunStatus::Budget {
+            report.skipped_budget += 1;
+            continue;
+        }
+        cases.push(Arc::new(ServeCase { iter, src, plain }));
+    }
+
+    for name in &backend_names {
+        // One shared compile cache per backend sweep: exactly the serving
+        // topology (`CachingBackend` over N dispatch threads).
+        let inner = resolve_backend(name)?;
+        let cache = Arc::new(crate::serve::ModuleCache::new());
+        let shared: Arc<dyn Backend> =
+            Arc::new(crate::serve::CachingBackend::new(inner, Arc::clone(&cache)));
+        for &opt in &opt_levels {
+            let handles: Vec<std::thread::JoinHandle<ServeSlice>> = (0..threads)
+                .map(|t| {
+                    let shared = Arc::clone(&shared);
+                    let mine: Vec<Arc<ServeCase>> = cases
+                        .iter()
+                        .enumerate()
+                        .filter(|(i, _)| i % threads == t)
+                        .map(|(_, c)| Arc::clone(c))
+                        .collect();
+                    let budget = opts.budget;
+                    std::thread::Builder::new()
+                        .name(format!("depyf-fuzz-serve-{}", t))
+                        .spawn(move || {
+                            let mut slice =
+                                ServeSlice { runs: 0, skipped_budget: 0, found: Vec::new() };
+                            for case in mine {
+                                slice.runs += 1;
+                                let hooked =
+                                    run_program(&case.src, Some((Arc::clone(&shared), opt)), budget);
+                                if hooked.status == RunStatus::Budget {
+                                    slice.skipped_budget += 1;
+                                    continue;
+                                }
+                                if let Some(kind) = compare(&case.plain, &hooked) {
+                                    slice.found.push((case.iter, opt.as_u8(), kind, hooked.render()));
+                                }
+                            }
+                            slice
+                        })
+                        .expect("spawn fuzz serve thread")
+                })
+                .collect();
+            let mut found: Vec<(u64, u8, DivergenceKind, String)> = Vec::new();
+            for h in handles {
+                let slice = h.join().map_err(|_| "fuzz serve thread panicked".to_string())?;
+                report.runs += slice.runs;
+                report.skipped_budget += slice.skipped_budget;
+                found.extend(slice.found);
+            }
+            // Thread join order is arbitrary; the report's order must not be.
+            found.sort_by_key(|(iter, o, _, _)| (*iter, *o));
+            for (iter, o, kind, actual) in found {
+                let case = cases
+                    .iter()
+                    .find(|c| c.iter == iter)
+                    .expect("divergent iter is in the case list");
+                let inner_single = resolve_backend(name)?;
+                let first_divergent_opt = if opts.bisect_opt {
+                    bisect_first_divergent_opt(&case.src, &inner_single, opts.budget)
+                } else {
+                    None
+                };
+                let safe_name: String =
+                    name.chars().map(|c| if c.is_ascii_alphanumeric() { c } else { '_' }).collect();
+                report.failures.push(FuzzBundle {
+                    name: format!("fuzz_s{}_i{}_serve_{}_o{}", opts.seed, iter, safe_name, o),
+                    seed: opts.seed,
+                    iter,
+                    backend: format!("serve:{}", name),
+                    opt_level: o,
+                    kind: kind.as_str().to_string(),
+                    source: case.src.clone(),
+                    expected: case.plain.render(),
+                    actual,
+                    culprit: None,
+                    note: Some(format!(
+                        "found by `depyf fuzz --serve --threads {}` (shared module cache, unshrunk)",
+                        threads
+                    )),
+                    strict: false,
+                    expect_error: false,
+                    first_divergent_opt,
+                });
             }
         }
     }
@@ -322,6 +502,8 @@ mod tests {
             opt_levels: vec![OptLevel::O0, OptLevel::O2],
             budget: DEFAULT_BUDGET,
             shrink: true,
+            serve_threads: None,
+            bisect_opt: false,
         }
     }
 
@@ -357,6 +539,41 @@ mod tests {
         let mut opts = quick_opts();
         opts.backends = vec!["warp-drive".into()];
         assert!(run_fuzz(&opts).unwrap_err().contains("warp-drive"));
+    }
+
+    #[test]
+    fn serve_mode_clean_sweep_matches_single_thread_reference() {
+        let opts = FuzzOptions {
+            serve_threads: Some(3),
+            backends: vec!["codegen".into()],
+            ..quick_opts()
+        };
+        let report = run_fuzz(&opts).unwrap();
+        assert!(report.ok(), "{}", report.render());
+        // Every non-budget program ran on every opt level, across threads.
+        assert_eq!(report.runs, 8 * 2, "{}", report.render());
+    }
+
+    #[test]
+    fn serve_mode_is_deterministic_in_counts_and_findings() {
+        let opts = FuzzOptions {
+            serve_threads: Some(4),
+            backends: vec!["eager".into()],
+            ..quick_opts()
+        };
+        let a = run_fuzz(&opts).unwrap();
+        let b = run_fuzz(&opts).unwrap();
+        assert_eq!(a.runs, b.runs);
+        assert_eq!(a.skipped_budget, b.skipped_budget);
+        let names = |r: &FuzzReport| r.failures.iter().map(|f| f.name.clone()).collect::<Vec<_>>();
+        assert_eq!(names(&a), names(&b));
+    }
+
+    #[test]
+    fn bisect_on_a_clean_source_reports_no_divergent_level() {
+        let src = gen_source(42, 0);
+        let backend = resolve_backend("eager").unwrap();
+        assert_eq!(bisect_first_divergent_opt(&src, &backend, DEFAULT_BUDGET), None);
     }
 
     #[test]

@@ -638,16 +638,32 @@ impl CompiledGraphFn {
         })
     }
 
-    /// Watchdogged dispatch: the module runs on a helper thread; if it
+    /// Deadlined dispatch. A [`deadline_aware`] module (async, pipelined)
+    /// is trusted to bound its own call: the deadline is published on the
+    /// calling thread via [`crate::serve::with_deadline`] — where it also
+    /// propagates into queue admission, stage packets and the compile
+    /// path — and the call runs inline, no sidecar thread. Everything
+    /// else gets the watchdog: the module runs on a helper thread; if it
     /// misses the deadline the call is abandoned (the worker finishes
     /// harmlessly — its `send` to a dropped receiver is a no-op) and the
     /// caller degrades instead of hanging.
+    ///
+    /// [`deadline_aware`]: crate::api::CompiledModule::deadline_aware
     fn dispatch_deadline(
         &self,
         inputs: &[Rc<Tensor>],
         deadline: Duration,
         counters: &Arc<CallCounters>,
     ) -> Result<Vec<Tensor>, DepyfError> {
+        if self.module.deadline_aware() {
+            let result = crate::serve::with_deadline(crate::serve::Deadline::after(deadline), || {
+                self.dispatch_caught(inputs, Some(counters))
+            });
+            if let Err(DepyfError::Timeout(_)) = &result {
+                counters.timeouts.fetch_add(1, Ordering::Relaxed);
+            }
+            return result;
+        }
         let owned: Vec<Tensor> = inputs.iter().map(|t| (**t).clone()).collect();
         let module = Arc::clone(&self.module);
         let context = format!("module {} ({})", self.name, self.backend_name);

@@ -251,6 +251,44 @@
 //! baseline vs N-thread, with the speedup) to `BENCH_serve.json`;
 //! `benches/serve.rs` sweeps thread counts.
 //!
+//! ## Supervised serving
+//!
+//! An `async:` backend's worker fleet does not merely exist — it is
+//! *supervised* ([`serve::Supervisor`]), and the serving stack carries
+//! per-request deadlines end to end:
+//!
+//! * **Heartbeats + watchdog**: every supervised worker stamps an atomic
+//!   heartbeat when it picks up a job. A watchdog scans the fleet; a busy
+//!   worker silent past the stall budget (`--stall-ms`, default 1000) is
+//!   declared lost, its in-flight call is resolved out from under it with
+//!   a typed transient error (first write wins, so the caller degrades to
+//!   the eager fallback instead of hanging), and a replacement is spawned
+//!   under a restart budget with doubling backoff. Past the budget the
+//!   supervisor gives up: queued jobs flush with a typed error and new
+//!   work is rejected, so a crash-looping fleet fails fast.
+//! * **Admission control** ([`serve::AdmissionPolicy`], `--admission`):
+//!   the supervisor queue is bounded (`--queue-cap`, default 64). On
+//!   overflow, `block` applies backpressure, `shed` rejects with
+//!   [`DepyfError::Overloaded`] (deliberately *not* transient — the
+//!   dispatch path maps it straight to the bitwise-correct eager
+//!   fallback), and `deadline-aware` additionally sheds any job whose
+//!   remaining deadline cannot cover the observed p50 service time.
+//! * **Deadline propagation** ([`serve::Deadline`],
+//!   [`serve::with_deadline`]): `--deadline-ms` no longer just bounds the
+//!   caller's wait — the deadline is published to the dispatch path and
+//!   rides into every layer that could waste work: supervised jobs abort
+//!   at dequeue when their budget is spent, every `pipelined` stage
+//!   checks the packet's deadline before computing, and the module
+//!   cache's compile path refuses to start lowering for an
+//!   already-expired request. Each early abort counts into
+//!   `deadline_propagated_aborts`.
+//! * **Graceful drain**: `depyf serve` stops admitting, lets in-flight
+//!   work finish, waits for the fleet to be restored (every watchdog kill
+//!   matched by a respawn), then merges supervisor counters — `sheds`,
+//!   `respawns`, `watchdog_kills`, `queue_depth_p99` — into
+//!   `metrics.json`, the serve summary and `BENCH_serve.json`
+//!   deterministically.
+//!
 //! ## Fault tolerance
 //!
 //! Wrapping a workload in depyf must never make it *less* reliable than
@@ -292,8 +330,11 @@
 //! `module.call=panic@1/7;pipeline.stage=delay:20@1/3"` arms seeded
 //! faults (kinds `error` | `panic` | `delay:<ms>`, rate `@num/den`) at
 //! the named sites `backend.plan`, `backend.lower`, `module.call`,
-//! `disk_cache.read`, `disk_cache.write`, `worker_pool.submit` and
-//! `pipeline.stage`. Whether hit *n* at a site fires is a pure function
+//! `disk_cache.read`, `disk_cache.write`, `worker_pool.submit`,
+//! `pipeline.stage`, `worker.heartbeat` (a `delay` wedges a supervised
+//! job past the stall budget, provoking the watchdog) and
+//! `serve.admission` (forces a shed at the supervisor's front door).
+//! Whether hit *n* at a site fires is a pure function
 //! of `(seed, site, n)`, so any chaos failure reproduces from its seed
 //! (see `rust/tests/README.md`). Unconfigured, each site costs one
 //! relaxed atomic load. Retries, degradations, breaker trips/skips,
@@ -353,6 +394,15 @@
 //! regression bundles (`tests/fuzz_regressions/`) that CI replays bitwise
 //! on every backend. Everything derives from `(seed, iter)` — no wall
 //! clock anywhere — so every finding reproduces from its coordinates.
+//! `depyf fuzz --serve --threads T` turns the same corpus against the
+//! concurrent dispatch path: T threads race each program through one
+//! shared [`serve::ModuleCache`] per backend × opt level and every
+//! thread's outcome is diffed against the single-thread reference
+//! (bundles are tagged `serve:<inner>` and replayed concurrently by the
+//! regression sweep); `--bisect-opt` re-runs each divergence at O0/O1/O2
+//! and records the first exhibiting level in the bundle's
+//! `first_divergent_opt` field, separating optimizer regressions from
+//! capture bugs at triage time.
 //!
 //! ## The stack underneath
 //!

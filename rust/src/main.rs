@@ -44,18 +44,31 @@ usage:
   depyf table1
       Regenerate the paper's Table 1 correctness matrix.
   depyf serve [--threads N] [--backend <name>] [--iters M] [--out <dir>]
-              [--deadline-ms D]
+              [--deadline-ms D] [--admission block|shed|deadline-aware]
+              [--queue-cap Q] [--pool-workers W] [--stall-ms S]
       Concurrent serving mode: N worker threads (default 4) each drive an
       independent session over the table1 model corpus, dispatching through
       the shared thread-safe backend registry and module cache. The inner
       backend is always wrapped in the resilient decorator (retry + circuit
       breaker); --deadline-ms abandons calls that exceed D milliseconds and
-      serves them from the eager fallback. Writes merged per-thread metrics
-      (compiles, cache hits, evictions, retries, degrades, breaker trips,
-      timeouts, p50/p99 call latency) to <dir>/metrics.json and a
-      throughput record to <dir>/BENCH_serve.json (default dir: serve_out).
-      Exits non-zero if any serving thread died. Backends that require the
-      PJRT runtime (xla) are rejected — the runtime is thread-confined; use
+      serves them from the eager fallback — the deadline propagates into
+      pipeline stages and the compile path, which abort early instead of
+      finishing doomed work. With an async:<inner> backend the worker pool
+      runs under a supervisor: W pool workers (default 4) heartbeat per
+      job; a worker silent past S ms (default 1000) is declared lost,
+      killed and respawned under a restart budget, and its abandoned calls
+      degrade to the eager fallback instead of hanging. The supervisor
+      queue holds at most Q jobs (default 64); --admission picks what
+      happens at the bound: block (backpressure, the default), shed (typed
+      Overloaded error, served eagerly), or deadline-aware (shed only jobs
+      whose remaining deadline cannot cover the observed p50 service
+      time). Writes merged per-thread metrics (compiles, cache hits,
+      evictions, retries, degrades, breaker trips, timeouts, sheds,
+      respawns, watchdog kills, deadline-propagated aborts, queue-depth
+      p99, p50/p99 call latency) to <dir>/metrics.json and a throughput
+      record to <dir>/BENCH_serve.json (default dir: serve_out). Exits
+      non-zero if any serving thread died. Backends that require the PJRT
+      runtime (xla) are rejected — the runtime is thread-confined; use
       eager/sharded/batched/codegen/pipelined/recording/async/resilient.
       Compiled plans spill to an on-disk cache (DEPYF_CACHE_DIR, default
       .depyf_cache) so repeat fleets skip recompilation.
@@ -73,7 +86,8 @@ usage:
       Mismatches are localized to the first diverging op (disable with
       --no-localize) and exit with code 1.
   depyf fuzz [--seed N] [--iters M] [--backend <name>] [--opt-level 0|1|2]
-             [--out <dir>] [--no-shrink]
+             [--out <dir>] [--no-shrink] [--serve [--threads T]]
+             [--bisect-opt]
       Program-level differential fuzzing: generate M seeded pylang
       programs (branches, loops with break/continue, closures, container
       mutation, guard-boundary shape changes), mutate them, and run each
@@ -84,6 +98,13 @@ usage:
       auto-shrunk (disable with --no-shrink), chained into the replay
       localizer, written as regression bundles to <dir> (default
       fuzz_out), and exit with code 1. Fully deterministic in --seed.
+      --serve switches to concurrent-dispatch fuzzing: T threads (default
+      4) race each program through one shared module cache per backend ×
+      opt level and every thread's outcome is diffed against the
+      single-thread reference (findings are not shrunk — shrinking can
+      mask a race). --bisect-opt re-runs each divergence single-threaded
+      at O0/O1/O2 and records the first exhibiting level in the bundle's
+      first_divergent_opt field.
   depyf help
       Print this text.
 
@@ -407,6 +428,39 @@ fn cmd_serve(args: &[String]) -> Result<(), CliError> {
                 .ok_or_else(|| usage(format!("bad --deadline-ms '{}' (expected >= 1)", s)))?,
         ),
     };
+    // Supervision tuning (only bites when the backend resolves to an
+    // `async:` wrapper, whose worker pool runs under the supervisor).
+    let defaults = depyf::serve::SupervisorConfig::default();
+    let admission = match flag_value(args, "--admission") {
+        None => defaults.policy,
+        Some(s) => depyf::serve::AdmissionPolicy::parse(&s).ok_or_else(|| {
+            usage(format!("bad --admission '{}' (expected block, shed or deadline-aware)", s))
+        })?,
+    };
+    let queue_cap: usize = match flag_value(args, "--queue-cap") {
+        None => defaults.queue_cap,
+        Some(s) => s
+            .parse()
+            .ok()
+            .filter(|&n: &usize| n >= 1)
+            .ok_or_else(|| usage(format!("bad --queue-cap '{}' (expected >= 1)", s)))?,
+    };
+    let pool_workers: usize = match flag_value(args, "--pool-workers") {
+        None => defaults.workers,
+        Some(s) => s
+            .parse()
+            .ok()
+            .filter(|&n: &usize| n >= 1 && n <= 64)
+            .ok_or_else(|| usage(format!("bad --pool-workers '{}' (expected 1..=64)", s)))?,
+    };
+    let stall_ms: u64 = match flag_value(args, "--stall-ms") {
+        None => defaults.stall_ms,
+        Some(s) => s
+            .parse()
+            .ok()
+            .filter(|&n: &u64| n >= 1)
+            .ok_or_else(|| usage(format!("bad --stall-ms '{}' (expected >= 1)", s)))?,
+    };
     let out_dir = flag_value(args, "--out").unwrap_or_else(|| "serve_out".into());
     let opts = depyf::serve::ServeOptions {
         threads,
@@ -414,6 +468,10 @@ fn cmd_serve(args: &[String]) -> Result<(), CliError> {
         backend: backend_name,
         out_dir: std::path::PathBuf::from(out_dir),
         deadline_ms,
+        admission,
+        queue_cap,
+        pool_workers,
+        stall_ms,
     };
     let report = depyf::serve::run_serve(&opts)?;
     print!("{}", report.render());
@@ -526,6 +584,21 @@ fn cmd_fuzz(args: &[String]) -> Result<(), CliError> {
             OptLevel::parse(&v).ok_or_else(|| usage(format!("unknown --opt-level '{}' (expected 0, 1 or 2)", v)))?,
         ],
     };
+    let serve_threads: Option<usize> = if has_flag(args, "--serve") {
+        Some(match flag_value(args, "--threads") {
+            None => 4,
+            Some(s) => s
+                .parse()
+                .ok()
+                .filter(|&n: &usize| n >= 1 && n <= 64)
+                .ok_or_else(|| usage(format!("bad --threads '{}' (expected 1..=64)", s)))?,
+        })
+    } else {
+        if flag_value(args, "--threads").is_some() {
+            return Err(usage("--threads only applies to fuzz --serve mode"));
+        }
+        None
+    };
     let out_dir = flag_value(args, "--out").unwrap_or_else(|| "fuzz_out".into());
     let opts = depyf::fuzz::FuzzOptions {
         seed,
@@ -534,6 +607,8 @@ fn cmd_fuzz(args: &[String]) -> Result<(), CliError> {
         opt_levels,
         budget: depyf::fuzz::DEFAULT_BUDGET,
         shrink: !has_flag(args, "--no-shrink"),
+        serve_threads,
+        bisect_opt: has_flag(args, "--bisect-opt"),
     };
     // The oracle traps panics with catch_unwind and reports them as
     // findings; silence the default hook so expected trips don't spray
@@ -634,6 +709,13 @@ mod tests {
         // xla needs the PJRT runtime, which is thread-confined — serve
         // refuses it up front rather than crashing a worker.
         assert_eq!(run_cli(&s(&["serve", "--backend", "xla"])), 2);
+        // Supervision tuning flags validate before any work starts.
+        assert_eq!(run_cli(&s(&["serve", "--admission", "panic-wildly"])), 2);
+        assert_eq!(run_cli(&s(&["serve", "--queue-cap", "0"])), 2);
+        assert_eq!(run_cli(&s(&["serve", "--queue-cap", "lots"])), 2);
+        assert_eq!(run_cli(&s(&["serve", "--pool-workers", "0"])), 2);
+        assert_eq!(run_cli(&s(&["serve", "--pool-workers", "banana"])), 2);
+        assert_eq!(run_cli(&s(&["serve", "--stall-ms", "0"])), 2);
     }
 
     #[test]
@@ -642,6 +724,24 @@ mod tests {
         assert_eq!(run_cli(&s(&["fuzz", "--iters", "0"])), 2);
         assert_eq!(run_cli(&s(&["fuzz", "--backend", "bogus"])), 2);
         assert_eq!(run_cli(&s(&["fuzz", "--opt-level", "9"])), 2);
+        assert_eq!(run_cli(&s(&["fuzz", "--serve", "--threads", "0"])), 2);
+        assert_eq!(run_cli(&s(&["fuzz", "--serve", "--threads", "999"])), 2);
+        // --threads without --serve is a likely typo for serve mode.
+        assert_eq!(run_cli(&s(&["fuzz", "--threads", "4"])), 2);
+    }
+
+    #[test]
+    fn fuzz_serve_smoke_run_is_clean() {
+        // Concurrent-dispatch mode end to end: two programs raced by two
+        // threads through a shared cache on eager at O0, plus bisect
+        // plumbing (a clean sweep just leaves first_divergent_opt unset).
+        assert_eq!(
+            run_cli(&s(&[
+                "fuzz", "--seed", "1", "--iters", "2", "--backend", "eager", "--opt-level", "0",
+                "--serve", "--threads", "2", "--bisect-opt",
+            ])),
+            0
+        );
     }
 
     #[test]

@@ -29,6 +29,20 @@ pub struct Metrics {
     pub timeouts: Cell<u64>,
     /// Panics converted to `DepyfError::Panic` by `catch_unwind` isolation.
     pub panics_caught: Cell<u64>,
+    /// Requests rejected by admission control (queue full or insufficient
+    /// remaining deadline) before any work ran.
+    pub sheds: Cell<u64>,
+    /// Replacement workers spawned by the supervisor's watchdog.
+    pub respawns: Cell<u64>,
+    /// Wedged workers the watchdog marked lost (heartbeat past the stall
+    /// budget) and abandoned.
+    pub watchdog_kills: Cell<u64>,
+    /// Work aborted early because a propagated deadline was already
+    /// exhausted (queued jobs, pipeline stages, cache-miss compiles).
+    pub deadline_propagated_aborts: Cell<u64>,
+    /// Peak-tail queue depth (p99 of per-enqueue depth samples) — a
+    /// gauge, not a counter; merges take the max.
+    pub queue_depth_p99: Cell<u64>,
     pub compile_ns: Cell<u64>,
 }
 
@@ -55,7 +69,7 @@ impl Metrics {
 
     pub fn report(&self) -> String {
         format!(
-            "captures={} cache_hits={} cache_misses={} graph_breaks={} fallbacks={} guard_checks={} guard_failures={} evictions={} retries={} degraded_calls={} degraded_compiles={} breaker_trips={} breaker_skips={} timeouts={} panics_caught={} compile_time={:?}",
+            "captures={} cache_hits={} cache_misses={} graph_breaks={} fallbacks={} guard_checks={} guard_failures={} evictions={} retries={} degraded_calls={} degraded_compiles={} breaker_trips={} breaker_skips={} timeouts={} panics_caught={} sheds={} respawns={} watchdog_kills={} deadline_propagated_aborts={} queue_depth_p99={} compile_time={:?}",
             self.captures.get(),
             self.cache_hits.get(),
             self.cache_misses.get(),
@@ -71,6 +85,11 @@ impl Metrics {
             self.breaker_skips.get(),
             self.timeouts.get(),
             self.panics_caught.get(),
+            self.sheds.get(),
+            self.respawns.get(),
+            self.watchdog_kills.get(),
+            self.deadline_propagated_aborts.get(),
+            self.queue_depth_p99.get(),
             self.compile_time(),
         )
     }
@@ -86,7 +105,7 @@ impl Metrics {
     /// (`("modules", "[...]")`).
     pub fn to_json_with(&self, extra: Option<(&str, &str)>) -> String {
         let mut out = format!(
-            "{{\n  \"captures\": {},\n  \"cache_hits\": {},\n  \"cache_misses\": {},\n  \"graph_breaks\": {},\n  \"fallbacks\": {},\n  \"guard_checks\": {},\n  \"guard_failures\": {},\n  \"evictions\": {},\n  \"retries\": {},\n  \"degraded_calls\": {},\n  \"degraded_compiles\": {},\n  \"breaker_trips\": {},\n  \"breaker_skips\": {},\n  \"timeouts\": {},\n  \"panics_caught\": {},\n  \"compile_ns\": {}",
+            "{{\n  \"captures\": {},\n  \"cache_hits\": {},\n  \"cache_misses\": {},\n  \"graph_breaks\": {},\n  \"fallbacks\": {},\n  \"guard_checks\": {},\n  \"guard_failures\": {},\n  \"evictions\": {},\n  \"retries\": {},\n  \"degraded_calls\": {},\n  \"degraded_compiles\": {},\n  \"breaker_trips\": {},\n  \"breaker_skips\": {},\n  \"timeouts\": {},\n  \"panics_caught\": {},\n  \"sheds\": {},\n  \"respawns\": {},\n  \"watchdog_kills\": {},\n  \"deadline_propagated_aborts\": {},\n  \"queue_depth_p99\": {},\n  \"compile_ns\": {}",
             self.captures.get(),
             self.cache_hits.get(),
             self.cache_misses.get(),
@@ -102,6 +121,11 @@ impl Metrics {
             self.breaker_skips.get(),
             self.timeouts.get(),
             self.panics_caught.get(),
+            self.sheds.get(),
+            self.respawns.get(),
+            self.watchdog_kills.get(),
+            self.deadline_propagated_aborts.get(),
+            self.queue_depth_p99.get(),
             self.compile_ns.get(),
         );
         if let Some((key, value)) = extra {
@@ -135,6 +159,13 @@ pub struct MetricsSnapshot {
     pub breaker_skips: u64,
     pub timeouts: u64,
     pub panics_caught: u64,
+    pub sheds: u64,
+    pub respawns: u64,
+    pub watchdog_kills: u64,
+    pub deadline_propagated_aborts: u64,
+    /// Gauge: per-run p99 queue depth; [`MetricsSnapshot::merge`] takes
+    /// the max instead of summing.
+    pub queue_depth_p99: u64,
     pub compile_ns: u64,
 }
 
@@ -157,6 +188,11 @@ impl Metrics {
             breaker_skips: self.breaker_skips.get(),
             timeouts: self.timeouts.get(),
             panics_caught: self.panics_caught.get(),
+            sheds: self.sheds.get(),
+            respawns: self.respawns.get(),
+            watchdog_kills: self.watchdog_kills.get(),
+            deadline_propagated_aborts: self.deadline_propagated_aborts.get(),
+            queue_depth_p99: self.queue_depth_p99.get(),
             compile_ns: self.compile_ns.get(),
         }
     }
@@ -180,6 +216,12 @@ impl MetricsSnapshot {
         self.breaker_skips += other.breaker_skips;
         self.timeouts += other.timeouts;
         self.panics_caught += other.panics_caught;
+        self.sheds += other.sheds;
+        self.respawns += other.respawns;
+        self.watchdog_kills += other.watchdog_kills;
+        self.deadline_propagated_aborts += other.deadline_propagated_aborts;
+        // Depth is a gauge: the merged tail is the worst per-run tail.
+        self.queue_depth_p99 = self.queue_depth_p99.max(other.queue_depth_p99);
         self.compile_ns += other.compile_ns;
     }
 
@@ -187,7 +229,7 @@ impl MetricsSnapshot {
     /// serve `metrics.json` has the exact keys a session dump has.
     pub fn to_json_with(&self, extra: Option<(&str, &str)>) -> String {
         let mut out = format!(
-            "{{\n  \"captures\": {},\n  \"cache_hits\": {},\n  \"cache_misses\": {},\n  \"graph_breaks\": {},\n  \"fallbacks\": {},\n  \"guard_checks\": {},\n  \"guard_failures\": {},\n  \"evictions\": {},\n  \"retries\": {},\n  \"degraded_calls\": {},\n  \"degraded_compiles\": {},\n  \"breaker_trips\": {},\n  \"breaker_skips\": {},\n  \"timeouts\": {},\n  \"panics_caught\": {},\n  \"compile_ns\": {}",
+            "{{\n  \"captures\": {},\n  \"cache_hits\": {},\n  \"cache_misses\": {},\n  \"graph_breaks\": {},\n  \"fallbacks\": {},\n  \"guard_checks\": {},\n  \"guard_failures\": {},\n  \"evictions\": {},\n  \"retries\": {},\n  \"degraded_calls\": {},\n  \"degraded_compiles\": {},\n  \"breaker_trips\": {},\n  \"breaker_skips\": {},\n  \"timeouts\": {},\n  \"panics_caught\": {},\n  \"sheds\": {},\n  \"respawns\": {},\n  \"watchdog_kills\": {},\n  \"deadline_propagated_aborts\": {},\n  \"queue_depth_p99\": {},\n  \"compile_ns\": {}",
             self.captures,
             self.cache_hits,
             self.cache_misses,
@@ -203,6 +245,11 @@ impl MetricsSnapshot {
             self.breaker_skips,
             self.timeouts,
             self.panics_caught,
+            self.sheds,
+            self.respawns,
+            self.watchdog_kills,
+            self.deadline_propagated_aborts,
+            self.queue_depth_p99,
             self.compile_ns,
         );
         if let Some((key, value)) = extra {
@@ -296,6 +343,11 @@ mod tests {
             "breaker_skips",
             "timeouts",
             "panics_caught",
+            "sheds",
+            "respawns",
+            "watchdog_kills",
+            "deadline_propagated_aborts",
+            "queue_depth_p99",
             "compile_ns",
         ] {
             assert!(doc.get(key).is_some(), "missing {}", key);
@@ -320,5 +372,25 @@ mod tests {
         assert_eq!(doc.get("degraded_compiles").and_then(|v| v.as_f64()), Some(1.0));
         assert_eq!(doc.get("breaker_skips").and_then(|v| v.as_f64()), Some(3.0));
         assert_eq!(doc.get("timeouts").and_then(|v| v.as_f64()), Some(1.0));
+    }
+
+    #[test]
+    fn supervision_counters_sum_but_depth_gauge_takes_max() {
+        let mut a = MetricsSnapshot { sheds: 2, respawns: 1, watchdog_kills: 1, queue_depth_p99: 7, ..Default::default() };
+        let b = MetricsSnapshot {
+            sheds: 3,
+            deadline_propagated_aborts: 4,
+            queue_depth_p99: 5,
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.sheds, 5);
+        assert_eq!(a.respawns, 1);
+        assert_eq!(a.watchdog_kills, 1);
+        assert_eq!(a.deadline_propagated_aborts, 4);
+        assert_eq!(a.queue_depth_p99, 7, "gauge merges by max, not sum");
+        let doc = crate::api::json::parse(&a.to_json()).expect("valid json");
+        assert_eq!(doc.get("sheds").and_then(|v| v.as_f64()), Some(5.0));
+        assert_eq!(doc.get("queue_depth_p99").and_then(|v| v.as_f64()), Some(7.0));
     }
 }

@@ -1,16 +1,25 @@
 //! The `async` backend wrapper: [`Capabilities::ASYNC`] made real.
 //!
 //! `AsyncBackend` decorates any inner backend; the modules it lowers
-//! expose [`AsyncModule::submit`], which queues the call on a small
-//! [`WorkerPool`] and immediately returns a [`CallFuture`]. The plain
+//! expose [`AsyncModule::submit`], which queues the call on a shared
+//! [`Supervisor`] and immediately returns a [`CallFuture`]. The plain
 //! [`CompiledModule::call`] contract is preserved as submit-then-wait, so
 //! an async-wrapped backend drops into every existing dispatch path
 //! (dynamo guard entries, `depyf run`, the conformance harness)
 //! unchanged — callers that *want* overlap use `submit` and hold several
 //! futures in flight.
 //!
-//! The pool is lazy: registering the builtin `async` backend must not
-//! spawn threads, so workers start on the first lowered module.
+//! Since PR 10 the workers behind a lowered module are *supervised*: the
+//! queue is bounded with an explicit
+//! [`AdmissionPolicy`](super::supervisor::AdmissionPolicy), a watchdog
+//! kills and respawns workers whose heartbeat stalls, and the
+//! per-request [`Deadline`] published by the dispatch path
+//! ([`crate::serve::deadline::current_deadline`]) rides into the queue
+//! with each job — admission can shed doomed work and workers abort
+//! expired jobs instead of computing dead results.
+//!
+//! The supervisor is lazy: registering the builtin `async` backend must
+//! not spawn threads, so workers start on the first lowered module.
 
 use std::rc::Rc;
 use std::sync::{Arc, OnceLock};
@@ -21,18 +30,20 @@ use crate::api::{
 };
 use crate::tensor::Tensor;
 
-use super::future::{call_channel, CallFuture, WorkerPool};
+use super::deadline::{current_deadline, Deadline};
+use super::future::CallFuture;
+use super::supervisor::{Supervisor, SupervisorConfig};
 
 /// Default worker count for the shared call pool.
 pub const DEFAULT_WORKERS: usize = 4;
 
-/// Wraps an inner backend; every lowered module calls through a worker
-/// pool and can return futures instead of blocking.
+/// Wraps an inner backend; every lowered module calls through a
+/// supervised worker fleet and can return futures instead of blocking.
 pub struct AsyncBackend {
     inner: Arc<dyn Backend>,
-    workers: usize,
+    cfg: SupervisorConfig,
     /// Spawned on first `lower`, shared by every module of this backend.
-    pool: OnceLock<Arc<WorkerPool>>,
+    supervisor: OnceLock<Arc<Supervisor>>,
 }
 
 impl AsyncBackend {
@@ -40,13 +51,29 @@ impl AsyncBackend {
         AsyncBackend::with_workers(inner, DEFAULT_WORKERS)
     }
 
-    /// Size the worker pool explicitly (rounded up to 1).
+    /// Size the worker fleet explicitly (rounded up to 1); default
+    /// supervision tuning otherwise.
     pub fn with_workers(inner: Arc<dyn Backend>, workers: usize) -> AsyncBackend {
-        AsyncBackend { inner, workers: workers.max(1), pool: OnceLock::new() }
+        AsyncBackend::with_config(
+            inner,
+            SupervisorConfig { workers: workers.max(1), ..SupervisorConfig::default() },
+        )
+    }
+
+    /// Full supervision tuning: worker count, queue bound, admission
+    /// policy, stall budget, restart budget.
+    pub fn with_config(inner: Arc<dyn Backend>, cfg: SupervisorConfig) -> AsyncBackend {
+        AsyncBackend { inner, cfg, supervisor: OnceLock::new() }
     }
 
     /// Wrap a registered backend, looked up by name (`async:<name>`).
     pub fn wrapping(inner_name: &str) -> Result<AsyncBackend, DepyfError> {
+        AsyncBackend::wrapping_with(inner_name, SupervisorConfig::default())
+    }
+
+    /// [`AsyncBackend::wrapping`] with explicit supervision tuning (what
+    /// the serve driver uses to apply `--admission`/`--queue-cap`/...).
+    pub fn wrapping_with(inner_name: &str, cfg: SupervisorConfig) -> Result<AsyncBackend, DepyfError> {
         let inner = crate::api::lookup_backend(inner_name).ok_or_else(|| {
             DepyfError::Backend(format!(
                 "async: unknown inner backend '{}' (registered: {})",
@@ -54,7 +81,7 @@ impl AsyncBackend {
                 crate::api::backend_names().join(", ")
             ))
         })?;
-        Ok(AsyncBackend::new(inner))
+        Ok(AsyncBackend::with_config(inner, cfg))
     }
 
     /// The wrapped backend.
@@ -62,8 +89,11 @@ impl AsyncBackend {
         &self.inner
     }
 
-    fn pool(&self) -> Arc<WorkerPool> {
-        Arc::clone(self.pool.get_or_init(|| Arc::new(WorkerPool::new(self.workers))))
+    /// The shared supervisor (spawned on first use). The serve driver
+    /// holds this handle to drain the fleet and fold its counters into
+    /// the merged report.
+    pub fn supervisor(&self) -> Arc<Supervisor> {
+        Arc::clone(self.supervisor.get_or_init(|| Arc::new(Supervisor::new(self.cfg))))
     }
 }
 
@@ -88,44 +118,66 @@ impl Backend for AsyncBackend {
         Ok(Arc::new(AsyncModule {
             backend_name: format!("async({})", module.backend_name()),
             inner: module,
-            pool: self.pool(),
+            supervisor: self.supervisor(),
         }))
     }
 }
 
-/// A [`CompiledModule`] whose calls run on the backend's worker pool.
+/// A [`CompiledModule`] whose calls run on the backend's supervised
+/// worker fleet.
 pub struct AsyncModule {
     backend_name: String,
     inner: Arc<dyn CompiledModule>,
-    pool: Arc<WorkerPool>,
+    supervisor: Arc<Supervisor>,
 }
 
 impl AsyncModule {
-    /// Queue a call and return immediately. Inputs are owned `Tensor`s
-    /// (cheap `Arc`-data clones) because the job crosses a thread
-    /// boundary; the worker rebuilds the call-local `Rc` handles the
-    /// [`CompiledModule::call`] signature wants.
+    /// Queue a call and return immediately, stamping the submitting
+    /// thread's current [`Deadline`] (if any) onto the job. Inputs are
+    /// owned `Tensor`s (cheap `Arc`-data clones) because the job crosses
+    /// a thread boundary; the worker rebuilds the call-local `Rc`
+    /// handles the [`CompiledModule::call`] signature wants.
     pub fn submit(&self, inputs: Vec<Tensor>) -> CallFuture {
-        let (promise, future) = call_channel();
+        self.submit_with_deadline(inputs, current_deadline())
+    }
+
+    /// [`AsyncModule::submit`] with an explicit deadline (or none).
+    pub fn submit_with_deadline(&self, inputs: Vec<Tensor>, deadline: Option<Deadline>) -> CallFuture {
         let inner = Arc::clone(&self.inner);
-        self.pool.submit(Box::new(move || {
-            let handles: Vec<Rc<Tensor>> = inputs.into_iter().map(Rc::new).collect();
-            promise.fulfill(inner.call(&handles));
-        }));
-        future
+        self.supervisor.submit_call(
+            deadline,
+            Box::new(move || {
+                let handles: Vec<Rc<Tensor>> = inputs.into_iter().map(Rc::new).collect();
+                inner.call(&handles)
+            }),
+        )
     }
 }
 
 impl CompiledModule for AsyncModule {
-    /// Synchronous contract: submit to the pool and wait. Identical
-    /// results to the inner module, via one queue hop.
+    /// Synchronous contract: submit to the fleet and wait. Identical
+    /// results to the inner module, via one queue hop. With a published
+    /// deadline the wait is bounded by the remaining budget, so a wedged
+    /// fleet costs the caller at most the deadline, never a hang.
     fn call(&self, inputs: &[Rc<Tensor>]) -> Result<Vec<Tensor>, DepyfError> {
         let owned: Vec<Tensor> = inputs.iter().map(|t| (**t).clone()).collect();
-        self.submit(owned).wait()
+        let deadline = current_deadline();
+        let future = self.submit_with_deadline(owned, deadline);
+        match deadline {
+            Some(d) => future.wait_timeout(d.remaining()),
+            None => future.wait(),
+        }
     }
 
     fn backend_name(&self) -> &str {
         &self.backend_name
+    }
+
+    /// The dispatch path's deadline watchdog can trust this module to
+    /// time itself out (bounded wait above), so no sidecar thread is
+    /// needed per deadlined call.
+    fn deadline_aware(&self) -> bool {
+        true
     }
 
     fn artifacts(&self) -> Vec<ModuleArtifact> {
@@ -142,6 +194,7 @@ mod tests {
     use super::*;
     use crate::api::EagerBackend;
     use crate::graph::{Graph, OpKind};
+    use crate::serve::deadline::with_deadline;
 
     fn add_graph() -> Graph {
         let mut g = Graph::new("g");
@@ -167,7 +220,7 @@ mod tests {
         AsyncModule {
             backend_name: format!("async({})", inner.backend_name()),
             inner,
-            pool: backend.pool(),
+            supervisor: backend.supervisor(),
         }
     }
 
@@ -180,6 +233,7 @@ mod tests {
         let out = module.call(&[a, b]).expect("call ok");
         assert_eq!(out[0].data(), &[11.0, 22.0]);
         assert_eq!(module.backend_name(), "async(eager)");
+        assert!(module.deadline_aware());
     }
 
     #[test]
@@ -198,6 +252,27 @@ mod tests {
             let out = f.wait().expect("overlapped call ok");
             assert_eq!(out[0].data(), &[i as f32 + 2.0, 4.0]);
         }
+    }
+
+    #[test]
+    fn published_deadline_rides_into_the_call() {
+        let backend = AsyncBackend::with_workers(Arc::new(EagerBackend), 1);
+        let module = lower_async(&backend);
+        let a = Rc::new(Tensor::new(vec![2], vec![1.0, 2.0]));
+        let b = Rc::new(Tensor::new(vec![2], vec![3.0, 4.0]));
+        // A healthy fleet beats a generous deadline.
+        let out = with_deadline(Deadline::in_ms(10_000), || module.call(&[a, b]))
+            .expect("fast call beats deadline");
+        assert_eq!(out[0].data(), &[4.0, 6.0]);
+        // An exhausted deadline fails typed instead of computing: either
+        // the bounded wait times out or the worker aborts at dequeue.
+        let a = Rc::new(Tensor::new(vec![2], vec![1.0, 2.0]));
+        let b = Rc::new(Tensor::new(vec![2], vec![3.0, 4.0]));
+        let err = with_deadline(Deadline::after(std::time::Duration::ZERO), || {
+            module.call(&[a, b])
+        })
+        .expect_err("expired deadline cannot succeed");
+        assert_eq!(err.layer(), "timeout");
     }
 
     #[test]

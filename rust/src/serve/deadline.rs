@@ -1,0 +1,174 @@
+//! End-to-end deadline propagation for the serving stack.
+//!
+//! A [`Deadline`] is an absolute point in time a request must finish by.
+//! It is stamped once at the request boundary and then *travels with the
+//! work* instead of being re-derived per layer:
+//!
+//! - the dispatch path publishes it for the duration of a call via
+//!   [`with_deadline`] (a thread-local — submission always happens on
+//!   the caller's thread);
+//! - `AsyncModule::submit` copies [`current_deadline`] into the queued
+//!   job, so admission control can shed doomed work and workers can
+//!   abort jobs whose budget expired while they sat in the queue;
+//! - every `pipelined` stage checks the packet's deadline before
+//!   computing, aborting the chain early instead of producing dead
+//!   results;
+//! - `CachingBackend` refuses to start a cache-miss compile once the
+//!   deadline is exhausted.
+//!
+//! Each such early abort calls [`note_deadline_abort`]; the serve driver
+//! reads the process-wide counter as a before/after delta and reports it
+//! as `deadline_propagated_aborts`. A monotonic global (rather than a
+//! per-layer counter) is what lets queue workers, stage threads and the
+//! compile path — which share no state — all account to one number.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+/// An absolute completion deadline carried by a request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Deadline {
+    at: Instant,
+}
+
+impl Deadline {
+    /// A deadline `budget` from now.
+    pub fn after(budget: Duration) -> Deadline {
+        Deadline { at: Instant::now() + budget }
+    }
+
+    /// A deadline `ms` milliseconds from now.
+    pub fn in_ms(ms: u64) -> Deadline {
+        Deadline::after(Duration::from_millis(ms))
+    }
+
+    /// The absolute expiry instant.
+    pub fn at(&self) -> Instant {
+        self.at
+    }
+
+    /// Budget left before expiry (zero once expired).
+    pub fn remaining(&self) -> Duration {
+        self.at.saturating_duration_since(Instant::now())
+    }
+
+    pub fn expired(&self) -> bool {
+        Instant::now() >= self.at
+    }
+
+    /// The earlier of two deadlines — composing a per-call budget with an
+    /// enclosing request budget must never *extend* the request budget.
+    pub fn min(self, other: Deadline) -> Deadline {
+        if other.at < self.at {
+            other
+        } else {
+            self
+        }
+    }
+}
+
+thread_local! {
+    static CURRENT: Cell<Option<Deadline>> = const { Cell::new(None) };
+}
+
+/// The deadline of the request currently executing on this thread, if
+/// one was published with [`with_deadline`].
+pub fn current_deadline() -> Option<Deadline> {
+    CURRENT.with(Cell::get)
+}
+
+/// Run `f` with `deadline` published as this thread's current deadline
+/// (narrowed to the enclosing one if that is tighter), restoring the
+/// previous value afterwards — panics included, so a caught panic in a
+/// gated region cannot leak a stale deadline into the next request.
+pub fn with_deadline<T>(deadline: Deadline, f: impl FnOnce() -> T) -> T {
+    struct Restore(Option<Deadline>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            CURRENT.with(|c| c.set(self.0));
+        }
+    }
+    let prev = CURRENT.with(Cell::get);
+    let effective = prev.map_or(deadline, |outer| deadline.min(outer));
+    CURRENT.with(|c| c.set(Some(effective)));
+    let _restore = Restore(prev);
+    f()
+}
+
+/// Process-wide count of deadline-propagated early aborts (monotonic).
+static DEADLINE_ABORTS: AtomicU64 = AtomicU64::new(0);
+
+/// Record one early abort: work skipped because its deadline was already
+/// exhausted (queued job dropped, stage chain cut, compile refused).
+pub fn note_deadline_abort() {
+    DEADLINE_ABORTS.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Current value of the process-wide abort counter. Readers interested
+/// in one run take a before/after delta.
+pub fn deadline_abort_count() -> u64 {
+    DEADLINE_ABORTS.load(Ordering::Relaxed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn remaining_counts_down_and_expires() {
+        let d = Deadline::in_ms(200);
+        assert!(!d.expired());
+        assert!(d.remaining() <= Duration::from_millis(200));
+        let past = Deadline::after(Duration::ZERO);
+        assert!(past.expired());
+        assert_eq!(past.remaining(), Duration::ZERO);
+    }
+
+    #[test]
+    fn min_picks_the_tighter_deadline() {
+        let tight = Deadline::in_ms(10);
+        let loose = Deadline::in_ms(10_000);
+        assert_eq!(tight.min(loose), tight);
+        assert_eq!(loose.min(tight), tight);
+    }
+
+    #[test]
+    fn with_deadline_publishes_scoped_and_restores() {
+        assert!(current_deadline().is_none());
+        let d = Deadline::in_ms(500);
+        with_deadline(d, || {
+            assert_eq!(current_deadline(), Some(d));
+            // Nesting narrows to the tighter of the two.
+            let tighter = Deadline::in_ms(1);
+            with_deadline(tighter, || {
+                assert_eq!(current_deadline(), Some(tighter));
+            });
+            // A looser inner deadline cannot extend the outer budget.
+            let looser = Deadline::in_ms(60_000);
+            with_deadline(looser, || {
+                assert_eq!(current_deadline(), Some(d));
+            });
+            assert_eq!(current_deadline(), Some(d));
+        });
+        assert!(current_deadline().is_none());
+    }
+
+    #[test]
+    fn with_deadline_restores_after_panic() {
+        let d = Deadline::in_ms(500);
+        let caught = std::panic::catch_unwind(|| {
+            with_deadline(d, || panic!("stage exploded"));
+        });
+        assert!(caught.is_err());
+        assert!(current_deadline().is_none(), "panic must not leak the deadline");
+    }
+
+    #[test]
+    fn abort_counter_is_monotonic() {
+        let before = deadline_abort_count();
+        note_deadline_abort();
+        note_deadline_abort();
+        assert!(deadline_abort_count() >= before + 2);
+    }
+}

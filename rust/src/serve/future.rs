@@ -106,16 +106,53 @@ impl CallFuture {
 
 impl CallPromise {
     /// Resolve the paired future. Consumes the promise — a promise can be
-    /// fulfilled at most once.
+    /// fulfilled at most once. If a [`CallResolver`] already resolved the
+    /// slot (the supervisor abandoned the call), this is a no-op: the
+    /// first writer wins and the late result is discarded.
     pub fn fulfill(mut self, result: Result<Vec<Tensor>, DepyfError>) {
         self.fulfilled = true;
         self.resolve(result);
     }
 
-    fn resolve(&self, result: Result<Vec<Tensor>, DepyfError>) {
-        let mut guard = self.slot.state.lock().unwrap_or_else(PoisonError::into_inner);
-        *guard = SlotState::Done(result);
-        self.slot.ready.notify_all();
+    /// A secondary handle onto the same slot, for a *supervisor* that may
+    /// need to resolve the call out from under a wedged worker. First
+    /// write wins: whichever of the resolver and the promise resolves
+    /// first determines the waiter's result.
+    pub(crate) fn resolver(&self) -> CallResolver {
+        CallResolver { slot: Arc::clone(&self.slot) }
+    }
+
+    fn resolve(&self, result: Result<Vec<Tensor>, DepyfError>) -> bool {
+        resolve_slot(&self.slot, result)
+    }
+}
+
+/// Set the slot if still pending; first write wins.
+fn resolve_slot(slot: &CallSlot, result: Result<Vec<Tensor>, DepyfError>) -> bool {
+    let mut guard = slot.state.lock().unwrap_or_else(PoisonError::into_inner);
+    if !matches!(*guard, SlotState::Pending) {
+        return false;
+    }
+    *guard = SlotState::Done(result);
+    slot.ready.notify_all();
+    true
+}
+
+/// A cloneable out-of-band resolver for a promise's slot (see
+/// [`CallPromise::resolver`]). The supervisor's watchdog holds one per
+/// in-flight job so it can fail an abandoned call over to the caller —
+/// who degrades to eager — while the wedged worker's eventual `fulfill`
+/// becomes a no-op.
+#[derive(Clone)]
+pub(crate) struct CallResolver {
+    slot: Arc<CallSlot>,
+}
+
+impl CallResolver {
+    /// Resolve the call if nobody else has; returns whether this write
+    /// won the race.
+    pub(crate) fn resolve_if_pending(&self, result: Result<Vec<Tensor>, DepyfError>) -> bool {
+        resolve_slot(&self.slot, result)
     }
 }
 
@@ -171,33 +208,56 @@ impl WorkerPool {
         WorkerPool { sender: Some(sender), workers }
     }
 
-    /// Queue a job. Silently dropped if the pool is already shutting down
-    /// (the job's promise then reports the shutdown to its waiter).
+    /// Queue a job. A rejected job is handed *back* along with a typed
+    /// error instead of being silently dropped: a shut-down or draining
+    /// pool returns [`DepyfError::Runtime`] (transient — the fleet is
+    /// restarting, a retry elsewhere can succeed), and the caller decides
+    /// whether to run the job inline (codegen's row-tiling recompute
+    /// path), resolve its promise with the typed error (async dispatch),
+    /// or drop it (the promise's drop error then reports the failure).
     ///
     /// The `worker_pool.submit` fault site fires here: an injected error
-    /// drops the job instead of queuing it, which resolves the job's
-    /// promise with the drop error — the waiter sees a failed call, never
-    /// a hang.
-    pub fn submit(&self, job: Job) {
-        if crate::faults::gate(crate::faults::Site::WorkerSubmit).is_err() {
-            return; // job drops here; its promise reports the failure
+    /// rejects the job the same way, so chaos rounds exercise exactly the
+    /// rejection path production shutdown takes.
+    pub fn submit(&self, job: Job) -> Result<(), (DepyfError, Job)> {
+        if let Err(e) = crate::faults::gate(crate::faults::Site::WorkerSubmit) {
+            return Err((e, job));
         }
-        if let Some(sender) = &self.sender {
-            let _ = sender.send(job);
+        match &self.sender {
+            Some(sender) => sender.send(job).map_err(|mpsc::SendError(job)| {
+                (
+                    DepyfError::Runtime(
+                        "worker pool queue closed mid-shutdown; job rejected".into(),
+                    ),
+                    job,
+                )
+            }),
+            None => Err((
+                DepyfError::Runtime("worker pool is draining/shut down; job rejected".into()),
+                job,
+            )),
         }
     }
 
     pub fn size(&self) -> usize {
         self.workers.len()
     }
+
+    /// Graceful shutdown that leaves the pool *addressable*: close the
+    /// queue, finish queued work, join every worker. Subsequent
+    /// [`WorkerPool::submit`] calls get the typed rejection instead of a
+    /// silent drop — the drain half of the serve shutdown story.
+    pub fn drain(&mut self) {
+        self.sender.take();
+        for worker in self.workers.drain(..) {
+            let _ = worker.join();
+        }
+    }
 }
 
 impl Drop for WorkerPool {
     fn drop(&mut self) {
-        self.sender.take(); // close the queue so workers' recv() errors out
-        for worker in self.workers.drain(..) {
-            let _ = worker.join();
-        }
+        self.drain(); // close the queue so workers' recv() errors out, then join
     }
 }
 
@@ -232,9 +292,10 @@ mod tests {
         let futures: Vec<CallFuture> = (0..16)
             .map(|i| {
                 let (promise, future) = call_channel();
-                pool.submit(Box::new(move || {
+                let queued = pool.submit(Box::new(move || {
                     promise.fulfill(Ok(vec![Tensor::scalar(i as f32 * 2.0)]));
                 }));
+                assert!(queued.is_ok(), "live pool accepts jobs");
                 future
             })
             .collect();
@@ -247,9 +308,45 @@ mod tests {
     fn pool_shutdown_joins_workers() {
         let pool = WorkerPool::new(2);
         let (promise, future) = call_channel();
-        pool.submit(Box::new(move || promise.fulfill(Ok(vec![]))));
+        assert!(pool.submit(Box::new(move || promise.fulfill(Ok(vec![])))).is_ok());
         assert!(future.wait().is_ok());
         drop(pool); // must not hang
+    }
+
+    #[test]
+    fn drained_pool_rejects_jobs_with_typed_transient_error() {
+        let mut pool = WorkerPool::new(2);
+        pool.drain();
+        assert_eq!(pool.size(), 0, "drain joins every worker");
+        let (promise, future) = call_channel();
+        let (err, job) = pool
+            .submit(Box::new(move || promise.fulfill(Ok(vec![Tensor::scalar(4.0)]))))
+            .err()
+            .expect("drained pool must reject");
+        assert_eq!(err.layer(), "runtime");
+        assert!(err.is_transient(), "rejection is transient: {}", err);
+        assert!(format!("{}", err).contains("draining/shut down"), "{}", err);
+        // The job comes back intact: the caller can still run it inline
+        // (codegen's recompute path) and the waiter gets the real result.
+        job();
+        assert_eq!(future.wait().expect("inline run fulfills")[0].item(), 4.0);
+    }
+
+    #[test]
+    fn resolver_beats_late_promise_and_late_fulfill_is_noop() {
+        let (promise, future) = call_channel();
+        let resolver = promise.resolver();
+        assert!(resolver.resolve_if_pending(Err(DepyfError::Runtime("worker stalled".into()))));
+        // The waiter sees the supervisor's abandonment...
+        let err = future.wait().expect_err("resolver result wins");
+        assert_eq!(err.layer(), "runtime");
+        // ...and the wedged worker's eventual fulfill is a harmless no-op.
+        promise.fulfill(Ok(vec![Tensor::scalar(1.0)]));
+        let (promise2, future2) = call_channel();
+        let resolver2 = promise2.resolver();
+        promise2.fulfill(Ok(vec![Tensor::scalar(2.0)]));
+        assert!(!resolver2.resolve_if_pending(Err(DepyfError::Runtime("late".into()))));
+        assert_eq!(future2.wait().expect("promise won")[0].item(), 2.0);
     }
 
     #[test]

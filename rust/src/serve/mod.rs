@@ -9,9 +9,19 @@
 //! crate docs):
 //!
 //! - [`future`]: one-shot call futures and the [`WorkerPool`] behind them.
+//! - [`Supervisor`]: the supervised worker fleet behind `async:` — a
+//!   bounded admission queue ([`AdmissionPolicy`]: block, shed, or
+//!   deadline-aware shed) in front of heartbeat-monitored workers; a
+//!   watchdog kills and respawns stalled workers under a restart budget
+//!   and re-fulfills abandoned calls with typed errors so callers degrade
+//!   to eager instead of hanging.
+//! - [`deadline`]: per-request [`Deadline`]s that travel with the work —
+//!   published on the dispatching thread ([`with_deadline`]), copied into
+//!   queued jobs and pipeline packets, checked before a cache-miss
+//!   compile. Every early abort lands in `deadline_propagated_aborts`.
 //! - [`AsyncBackend`]: `Capabilities::ASYNC` made real — a wrapper
-//!   backend whose modules run calls on a worker pool and can return
-//!   [`CallFuture`]s (`submit`) instead of blocking (`call`).
+//!   backend whose modules run calls on the supervised fleet and can
+//!   return [`CallFuture`]s (`submit`) instead of blocking (`call`).
 //! - [`PipelinedShardedBackend`]: the sharded partition chain with one
 //!   stage thread per shard, overlapping shard k of call i with shard
 //!   k+1 of call i−1.
@@ -27,12 +37,16 @@
 //!   into `BENCH_serve.json`.
 
 pub mod async_backend;
+pub mod deadline;
 pub mod future;
 pub mod pipeline;
+pub mod supervisor;
 
 pub use async_backend::{AsyncBackend, AsyncModule};
+pub use deadline::{current_deadline, with_deadline, Deadline};
 pub use future::{CallFuture, WorkerPool};
 pub use pipeline::{PipelinedShardedBackend, PipelinedShardedModule};
+pub use supervisor::{AdmissionPolicy, Supervisor, SupervisorConfig, SupervisorSnapshot};
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -208,7 +222,20 @@ impl Backend for CachingBackend {
             self.cache.hits.bump();
             return Ok(module);
         }
-        // Memory miss: consult the persistent plan index before compiling.
+        // Memory miss: starting a compile is the most expensive thing this
+        // path can do — refuse if the requesting call's budget is already
+        // spent (the caller degrades to eager; a future request without a
+        // deadline will compile and populate the cache).
+        if let Some(d) = deadline::current_deadline() {
+            if d.expired() {
+                deadline::note_deadline_abort();
+                return Err(DepyfError::Timeout(format!(
+                    "module cache miss for '{}': request deadline exhausted; compile aborted before lowering",
+                    req.name
+                )));
+            }
+        }
+        // Consult the persistent plan index before compiling.
         let disk_key = ModuleCache::disk_key(&key);
         let plan_on_record = self.cache.disk_lookup(&disk_key);
         // Compile outside the lock: a slow lower on one thread must not
@@ -240,6 +267,63 @@ pub struct ServeOptions {
     /// Per-call deadline (`--deadline-ms`): calls exceeding it are
     /// abandoned and served by the eager fallback.
     pub deadline_ms: Option<u64>,
+    /// Admission policy for the `async:` supervisor queue (`--admission`).
+    pub admission: AdmissionPolicy,
+    /// Supervisor queue bound (`--queue-cap`).
+    pub queue_cap: usize,
+    /// Supervised workers behind an `async:` backend (`--pool-workers`).
+    pub pool_workers: usize,
+    /// Heartbeat stall budget before the watchdog kills a worker
+    /// (`--stall-ms`).
+    pub stall_ms: u64,
+}
+
+/// Knobs for one in-memory serve run beyond thread count and corpus
+/// size: the per-call deadline, the plan-spill disk, and the supervision
+/// tuning applied when the backend resolves to an `async:` wrapper.
+#[derive(Clone)]
+pub struct ServeTuning {
+    pub deadline_ms: Option<u64>,
+    pub disk: Option<Arc<DiskCache>>,
+    pub admission: AdmissionPolicy,
+    pub queue_cap: usize,
+    pub workers: usize,
+    pub stall_ms: u64,
+    /// Supervisor restart budget. Not CLI-exposed; chaos rounds raise it
+    /// so long fault sequences keep the exact kill/respawn reconciliation
+    /// instead of tripping the give-up path.
+    pub max_restarts: u32,
+}
+
+impl Default for ServeTuning {
+    fn default() -> ServeTuning {
+        let cfg = SupervisorConfig::default();
+        ServeTuning {
+            deadline_ms: None,
+            disk: None,
+            admission: cfg.policy,
+            queue_cap: cfg.queue_cap,
+            workers: cfg.workers,
+            stall_ms: cfg.stall_ms,
+            max_restarts: cfg.max_restarts,
+        }
+    }
+}
+
+impl ServeTuning {
+    /// The supervision config an `async:` backend resolved under this
+    /// tuning gets (the backoff base stays at its default: nothing needs
+    /// to tune it).
+    fn supervisor_config(&self) -> SupervisorConfig {
+        SupervisorConfig {
+            workers: self.workers,
+            queue_cap: self.queue_cap,
+            policy: self.admission,
+            stall_ms: self.stall_ms,
+            max_restarts: self.max_restarts,
+            ..SupervisorConfig::default()
+        }
+    }
 }
 
 /// What one serving thread did.
@@ -324,6 +408,14 @@ impl ServeReport {
             self.metrics.panics_caught,
             self.dead_threads,
         ));
+        out.push_str(&format!(
+            "  supervision: sheds={} respawns={} watchdog_kills={} deadline_aborts={} queue_depth_p99={}\n",
+            self.metrics.sheds,
+            self.metrics.respawns,
+            self.metrics.watchdog_kills,
+            self.metrics.deadline_propagated_aborts,
+            self.metrics.queue_depth_p99,
+        ));
         if let (Some(base), Some(speedup)) = (self.baseline_throughput, self.speedup) {
             out.push_str(&format!(
                 "  baseline(1 thread)={:.1} runs/s speedup={:.2}x\n",
@@ -339,7 +431,7 @@ impl ServeReport {
     /// The `"serve"` object inlined into the merged `metrics.json`.
     fn to_serve_json(&self) -> String {
         format!(
-            "{{\"backend\": \"{}\", \"threads\": {}, \"iters\": {}, \"case_runs\": {}, \"errors\": {}, \"dead_threads\": {}, \"throughput_runs_per_s\": {:.3}, \"p50_ms\": {:.3}, \"p99_ms\": {:.3}, \"module_cache_hits\": {}, \"module_cache_misses\": {}, \"module_cache_disk_hits\": {}}}",
+            "{{\"backend\": \"{}\", \"threads\": {}, \"iters\": {}, \"case_runs\": {}, \"errors\": {}, \"dead_threads\": {}, \"throughput_runs_per_s\": {:.3}, \"p50_ms\": {:.3}, \"p99_ms\": {:.3}, \"module_cache_hits\": {}, \"module_cache_misses\": {}, \"module_cache_disk_hits\": {}, \"sheds\": {}, \"respawns\": {}, \"watchdog_kills\": {}, \"deadline_propagated_aborts\": {}, \"queue_depth_p99\": {}}}",
             crate::api::json::escape(&self.backend),
             self.threads,
             self.iters,
@@ -352,26 +444,41 @@ impl ServeReport {
             self.module_cache_hits,
             self.module_cache_misses,
             self.module_cache_disk_hits,
+            self.metrics.sheds,
+            self.metrics.respawns,
+            self.metrics.watchdog_kills,
+            self.metrics.deadline_propagated_aborts,
+            self.metrics.queue_depth_p99,
         )
     }
 }
 
 /// Resolve a serve backend name, honoring the CLI's wrapper prefixes.
-fn resolve_serve_backend(name: &str) -> Result<Arc<dyn Backend>, DepyfError> {
+/// An `async:` backend gets the tuning's supervision config, and its
+/// [`Supervisor`] handle is returned alongside so the driver can drain
+/// the fleet and fold its counters into the merged report.
+fn resolve_serve_backend(
+    name: &str,
+    tuning: &ServeTuning,
+) -> Result<(Arc<dyn Backend>, Option<Arc<Supervisor>>), DepyfError> {
     if let Some(inner) = name.strip_prefix("recording:") {
         return crate::backend::recording::RecordingBackend::wrapping(inner)
-            .map(|b| Arc::new(b) as Arc<dyn Backend>);
+            .map(|b| (Arc::new(b) as Arc<dyn Backend>, None));
     }
     if let Some(inner) = name.strip_prefix("async:") {
-        return AsyncBackend::wrapping(inner).map(|b| Arc::new(b) as Arc<dyn Backend>);
+        let backend = AsyncBackend::wrapping_with(inner, tuning.supervisor_config())?;
+        let sup = backend.supervisor();
+        return Ok((Arc::new(backend) as Arc<dyn Backend>, Some(sup)));
     }
-    crate::api::lookup_backend(name).ok_or_else(|| {
-        DepyfError::Backend(format!(
-            "serve: unknown backend '{}' (registered: {})",
-            name,
-            crate::api::backend_names().join(", ")
-        ))
-    })
+    crate::api::lookup_backend(name)
+        .map(|b| (b, None))
+        .ok_or_else(|| {
+            DepyfError::Backend(format!(
+                "serve: unknown backend '{}' (registered: {})",
+                name,
+                crate::api::backend_names().join(", ")
+            ))
+        })
 }
 
 /// One unit of serving work: a corpus program plus the reference output a
@@ -405,7 +512,10 @@ fn percentile(sorted_ms: &[f64], p: f64) -> f64 {
 
 /// Run one serving thread: `iters` passes over the corpus, a fresh dynamo
 /// session per case run (the cross-run sharing is the module cache inside
-/// `backend`), output checked against the reference.
+/// `backend`), output checked against the reference. With a deadline
+/// configured, each case run executes under [`with_deadline`], so the
+/// request budget reaches queue admission, pipeline packets and the
+/// compile path via the thread-local — not just the per-call watchdog.
 fn run_worker(
     backend: Arc<dyn Backend>,
     corpus: Arc<Vec<WorkItem>>,
@@ -430,7 +540,13 @@ fn run_worker(
             });
             let mut vm = Vm::new();
             vm.eval_hook = Some(dynamo.clone());
-            let outcome = vm.exec_source(&item.source, IsaVersion::V310);
+            let run = || vm.exec_source(&item.source, IsaVersion::V310);
+            let outcome = match deadline_ms {
+                // The whole case run shares one request budget; per-call
+                // dispatch narrows to the tighter of the two.
+                Some(ms) => with_deadline(Deadline::in_ms(ms), run),
+                None => run(),
+            };
             report.latencies_ms.push(t0.elapsed().as_secs_f64() * 1e3);
             report.case_runs += 1;
             // metrics_snapshot (not metrics.snapshot): folds the session's
@@ -470,7 +586,7 @@ pub fn serve_once(
     backend_name: &str,
     limit: usize,
 ) -> Result<ServeReport, DepyfError> {
-    serve_once_with(threads, iters, backend_name, limit, None)
+    serve_once_tuned(threads, iters, backend_name, limit, ServeTuning::default())
 }
 
 /// [`serve_once`] with a per-call deadline. Every serve run wraps the
@@ -484,12 +600,17 @@ pub fn serve_once_with(
     limit: usize,
     deadline_ms: Option<u64>,
 ) -> Result<ServeReport, DepyfError> {
-    serve_once_spilling(threads, iters, backend_name, limit, deadline_ms, None)
+    serve_once_tuned(
+        threads,
+        iters,
+        backend_name,
+        limit,
+        ServeTuning { deadline_ms, ..ServeTuning::default() },
+    )
 }
 
 /// [`serve_once_with`] plus an optional persistent [`DiskCache`] the
-/// module cache spills plan records into (what `depyf serve` uses — see
-/// [`ModuleCache::with_disk`]).
+/// module cache spills plan records into (see [`ModuleCache::with_disk`]).
 pub fn serve_once_spilling(
     threads: usize,
     iters: usize,
@@ -498,11 +619,34 @@ pub fn serve_once_spilling(
     deadline_ms: Option<u64>,
     disk: Option<Arc<DiskCache>>,
 ) -> Result<ServeReport, DepyfError> {
+    serve_once_tuned(
+        threads,
+        iters,
+        backend_name,
+        limit,
+        ServeTuning { deadline_ms, disk, ..ServeTuning::default() },
+    )
+}
+
+/// The full-knob serve run (what `depyf serve` uses): deadline, plan
+/// spill, and supervision tuning for `async:` backends. After the
+/// serving threads join, an `async:` backend's supervisor is drained
+/// (stop admitting, finish in-flight) and its shed/respawn/kill/depth
+/// counters fold into the merged report, alongside the run's delta of
+/// the process-wide deadline-propagated-abort counter.
+pub fn serve_once_tuned(
+    threads: usize,
+    iters: usize,
+    backend_name: &str,
+    limit: usize,
+    tuning: ServeTuning,
+) -> Result<ServeReport, DepyfError> {
+    let deadline_ms = tuning.deadline_ms;
     let inner_name = match backend_name {
         "resilient" => "eager",
         other => other.strip_prefix("resilient:").unwrap_or(other),
     };
-    let inner = resolve_serve_backend(inner_name)?;
+    let (inner, supervisor) = resolve_serve_backend(inner_name, &tuning)?;
     if inner.requires_runtime() {
         return Err(DepyfError::Backend(format!(
             "serve: backend '{}' requires the PJRT runtime, which is thread-confined",
@@ -511,7 +655,7 @@ pub fn serve_once_spilling(
     }
     let resilient = Arc::new(crate::backend::ResilientBackend::new(inner));
     let rstats = resilient.stats();
-    let cache = Arc::new(match disk {
+    let cache = Arc::new(match tuning.disk {
         Some(d) => ModuleCache::with_disk(d),
         None => ModuleCache::new(),
     });
@@ -522,6 +666,7 @@ pub fn serve_once_spilling(
         return Err(DepyfError::Backend("serve: empty corpus".into()));
     }
 
+    let aborts_before = deadline::deadline_abort_count();
     let t0 = Instant::now();
     let reports: Vec<ThreadReport> = if threads <= 1 {
         vec![run_worker(backend, corpus, iters, deadline_ms)]
@@ -580,6 +725,18 @@ pub fn serve_once_spilling(
     merged.breaker_trips += rstats.trips();
     merged.breaker_skips += rstats.skips();
     merged.panics_caught += rstats.panics();
+    // Supervision counters live in the shared fleet, likewise folded once.
+    // Drain first: stop admitting, let in-flight jobs finish, join the
+    // workers — the snapshot is then deterministic for this run.
+    if let Some(sup) = supervisor {
+        sup.drain();
+        sup.snapshot().fold_into(&mut merged);
+    }
+    // Deadline-propagated aborts are a process-global (queue workers,
+    // stage threads and the compile path share no state); this run's
+    // share is the before/after delta.
+    merged.deadline_propagated_aborts +=
+        deadline::deadline_abort_count().saturating_sub(aborts_before);
     failures.truncate(8);
     latencies.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
     Ok(ServeReport {
@@ -615,25 +772,21 @@ pub fn run_serve(opts: &ServeOptions) -> Result<ServeReport, DepyfError> {
     let cache_dir = std::env::var(crate::runtime::CACHE_DIR_ENV)
         .unwrap_or_else(|_| ".depyf_cache".into());
     let disk = DiskCache::open(&cache_dir).ok().map(Arc::new);
-    let baseline = serve_once_spilling(
-        1,
-        opts.iters,
-        &opts.backend,
-        usize::MAX,
-        opts.deadline_ms,
-        disk.clone(),
-    )?;
+    let tuning = ServeTuning {
+        deadline_ms: opts.deadline_ms,
+        disk,
+        admission: opts.admission,
+        queue_cap: opts.queue_cap,
+        workers: opts.pool_workers,
+        stall_ms: opts.stall_ms,
+        ..ServeTuning::default()
+    };
+    let baseline =
+        serve_once_tuned(1, opts.iters, &opts.backend, usize::MAX, tuning.clone())?;
     let mut report = if opts.threads == 1 {
         baseline.clone()
     } else {
-        serve_once_spilling(
-            opts.threads,
-            opts.iters,
-            &opts.backend,
-            usize::MAX,
-            opts.deadline_ms,
-            disk,
-        )?
+        serve_once_tuned(opts.threads, opts.iters, &opts.backend, usize::MAX, tuning)?
     };
     report.baseline_throughput = Some(baseline.throughput);
     report.speedup = Some(if baseline.throughput > 0.0 {
@@ -667,6 +820,15 @@ pub fn run_serve(opts: &ServeOptions) -> Result<ServeReport, DepyfError> {
         ("timeouts".to_string(), report.metrics.timeouts as f64, "count"),
         ("panics_caught".to_string(), report.metrics.panics_caught as f64, "count"),
         ("dead_threads".to_string(), report.dead_threads as f64, "count"),
+        ("sheds".to_string(), report.metrics.sheds as f64, "count"),
+        ("respawns".to_string(), report.metrics.respawns as f64, "count"),
+        ("watchdog_kills".to_string(), report.metrics.watchdog_kills as f64, "count"),
+        (
+            "deadline_propagated_aborts".to_string(),
+            report.metrics.deadline_propagated_aborts as f64,
+            "count",
+        ),
+        ("queue_depth_p99".to_string(), report.metrics.queue_depth_p99 as f64, "count"),
     ];
     let body: Vec<String> = entries
         .iter()
@@ -816,8 +978,50 @@ mod tests {
         let text = report.render();
         assert!(text.contains("backend=resilient:eager"), "{}", text);
         assert!(text.contains("resilience: retries=0"), "{}", text);
+        assert!(text.contains("supervision: sheds=0"), "{}", text);
         let json = crate::api::json::parse(&report.to_serve_json()).expect("valid json");
         assert_eq!(json.get("dead_threads").and_then(|v| v.as_f64()), Some(0.0));
+        assert_eq!(json.get("sheds").and_then(|v| v.as_f64()), Some(0.0));
+        assert_eq!(json.get("queue_depth_p99").and_then(|v| v.as_f64()), Some(0.0));
+    }
+
+    #[test]
+    fn overloaded_shed_serve_still_returns_correct_outputs() {
+        // 2x+ overload against a deliberately starved fleet: one worker,
+        // a queue of one, shed admission. Every shed request must still
+        // come back bitwise-correct through the eager degrade path, so
+        // the run reports zero errors no matter how many calls were shed.
+        let tuning = ServeTuning {
+            admission: AdmissionPolicy::Shed,
+            queue_cap: 1,
+            workers: 1,
+            ..ServeTuning::default()
+        };
+        let report = serve_once_tuned(6, 2, "async:eager", 3, tuning).expect("serve");
+        assert_eq!(report.errors, 0, "failures: {:?}", report.failures);
+        assert_eq!(report.dead_threads, 0);
+        assert_eq!(report.case_runs, 6 * 2 * 3);
+        // A shed is never retried, only degraded: in a run whose only
+        // error source is admission control, every shed is exactly one
+        // degraded call.
+        assert_eq!(
+            report.metrics.sheds, report.metrics.degraded_calls,
+            "each shed must degrade exactly once"
+        );
+        assert_eq!(report.metrics.retries, 0, "Overloaded must not be retried");
+    }
+
+    #[test]
+    fn serve_with_deadline_stays_correct_and_counts_aborts() {
+        // A generous request deadline: nothing should expire, the run
+        // stays clean, and the supervision summary renders.
+        let tuning = ServeTuning { deadline_ms: Some(30_000), ..ServeTuning::default() };
+        let report = serve_once_tuned(2, 1, "async:eager", 3, tuning).expect("serve");
+        assert_eq!(report.errors, 0, "failures: {:?}", report.failures);
+        let text = report.render();
+        assert!(text.contains("supervision:"), "{}", text);
+        let json = crate::api::json::parse(&report.to_serve_json()).expect("valid json");
+        assert!(json.get("deadline_propagated_aborts").is_some());
     }
 
     #[test]

@@ -30,6 +30,7 @@ use crate::backend::sharded::ShardedBackend;
 use crate::graph::{Graph, NodeKind};
 use crate::tensor::Tensor;
 
+use super::deadline::{current_deadline, note_deadline_abort, Deadline};
 use super::future::{call_channel, CallFuture, CallPromise};
 
 /// The sharded backend with stage-threaded modules. Registered as
@@ -77,10 +78,13 @@ impl Backend for PipelinedShardedBackend {
 }
 
 /// One in-flight call: the shared environment plus the promise to resolve
-/// when the last stage finishes.
+/// when the last stage finishes. The submitting thread's deadline (if
+/// any) rides along so every stage can abort an already-dead packet
+/// instead of computing results nobody will read.
 struct Pkt {
     env: Vec<Option<Tensor>>,
     promise: CallPromise,
+    deadline: Option<Deadline>,
 }
 
 /// A [`CompiledModule`] that executes the sharded partition chain on
@@ -174,7 +178,9 @@ impl PipelinedShardedModule {
 
     /// Inject a call into the pipeline and return immediately. Calls
     /// submitted from one thread resolve in submission order (stages are
-    /// FIFO channels).
+    /// FIFO channels). The submitter's published [`Deadline`] (if any)
+    /// is stamped onto the packet here, while we are still on the
+    /// caller's thread.
     pub fn submit(&self, inputs: &[Rc<Tensor>]) -> CallFuture {
         let (promise, future) = call_channel();
         let env = match self.build_env(inputs) {
@@ -184,12 +190,13 @@ impl PipelinedShardedModule {
                 return future;
             }
         };
+        let deadline = current_deadline();
         let sender = self.sender.lock().unwrap_or_else(PoisonError::into_inner);
         match &*sender {
             Some(tx) => {
                 // A failed send drops the Pkt — its promise then resolves
                 // the future with the shutdown error.
-                let _ = tx.send(Pkt { env, promise });
+                let _ = tx.send(Pkt { env, promise, deadline });
             }
             None => {
                 // Zero partitions: every output is already in the env.
@@ -233,6 +240,19 @@ fn stage_loop(
     graph: Arc<Graph>,
 ) {
     while let Ok(mut pkt) = rx.recv() {
+        // A packet whose deadline expired in an upstream queue is dead:
+        // abort it here instead of spending this stage (and every later
+        // one) computing results the caller stopped waiting for.
+        if let Some(d) = pkt.deadline {
+            if d.expired() {
+                note_deadline_abort();
+                pkt.promise.fulfill(Err(DepyfError::Timeout(format!(
+                    "pipeline stage {}: packet deadline exhausted; aborting before compute",
+                    stage
+                ))));
+                continue;
+            }
+        }
         // AssertUnwindSafe: the closure only reads pkt.env and shared
         // module state, and every lock below recovers from poison.
         let ran = catch_unwind(AssertUnwindSafe(|| {
@@ -279,13 +299,26 @@ fn stage_loop(
 }
 
 impl CompiledModule for PipelinedShardedModule {
-    /// Synchronous contract: one packet through the whole pipeline.
+    /// Synchronous contract: one packet through the whole pipeline. With
+    /// a published deadline the wait is bounded by the remaining budget,
+    /// so a wedged stage costs the caller at most the deadline.
     fn call(&self, inputs: &[Rc<Tensor>]) -> Result<Vec<Tensor>, DepyfError> {
-        self.submit(inputs).wait()
+        let future = self.submit(inputs);
+        match current_deadline() {
+            Some(d) => future.wait_timeout(d.remaining()),
+            None => future.wait(),
+        }
     }
 
     fn backend_name(&self) -> &str {
         "sharded+pipelined"
+    }
+
+    /// The module bounds its own calls when a deadline is published
+    /// (stamped packets + bounded wait), so the dispatch path need not
+    /// spawn a sidecar watchdog thread per deadlined call.
+    fn deadline_aware(&self) -> bool {
+        true
     }
 
     fn artifacts(&self) -> Vec<ModuleArtifact> {
@@ -403,5 +436,38 @@ mod tests {
     fn drop_with_no_calls_terminates_stages() {
         let (_, pipelined) = lower_pair(deep_chain(5), 1);
         drop(pipelined); // must join stage threads, not hang
+    }
+
+    #[test]
+    fn expired_deadline_aborts_the_stage_chain() {
+        use crate::serve::deadline::{deadline_abort_count, with_deadline};
+        let (_, pipelined) = lower_pair(deep_chain(6), 1);
+        assert!(pipelined.deadline_aware());
+        let mut rng = Rng::new(3);
+        let x = Rc::new(Tensor::randn(&[3, 5], &mut rng));
+        // A generous budget completes normally.
+        let out = with_deadline(Deadline::in_ms(10_000), || pipelined.call(&[Rc::clone(&x)]))
+            .expect("healthy pipeline beats a generous deadline");
+        assert_eq!(out.len(), 1);
+        // An exhausted budget aborts at the first stage instead of
+        // flowing dead work through the whole chain.
+        let before = deadline_abort_count();
+        let err = with_deadline(Deadline::after(std::time::Duration::ZERO), || {
+            pipelined.call(&[Rc::clone(&x)])
+        })
+        .expect_err("expired deadline cannot succeed");
+        assert_eq!(err.layer(), "timeout");
+        // The caller's bounded wait can return before the stage thread
+        // dequeues the dead packet; give the abort a moment to land.
+        for _ in 0..200 {
+            if deadline_abort_count() > before {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        assert!(
+            deadline_abort_count() > before,
+            "stage abort must account to the propagated-abort counter"
+        );
     }
 }

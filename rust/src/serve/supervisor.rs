@@ -1,0 +1,894 @@
+//! Worker supervision and admission control for the serving stack.
+//!
+//! [`WorkerPool`](super::WorkerPool) runs jobs; a [`Supervisor`] keeps the
+//! *system* healthy while it does. Three mechanisms, all observable
+//! through the `sheds` / `respawns` / `watchdog_kills` / `queue_depth_p99`
+//! metrics:
+//!
+//! 1. **Heartbeats + watchdog.** Every worker stamps an atomic heartbeat
+//!    when it starts a job. A watchdog thread scans the fleet on a short
+//!    tick: a busy worker whose heartbeat is older than the stall budget
+//!    ([`SupervisorConfig::stall_ms`]) is marked *lost*, its in-flight
+//!    call is resolved out from under it with a typed transient error
+//!    (first write wins — see `CallResolver` — so the caller degrades to
+//!    eager instead of hanging), the wedged thread is detached, and a
+//!    replacement is spawned under a restart budget with doubling
+//!    backoff. Past [`SupervisorConfig::max_restarts`] the supervisor
+//!    gives up: queued jobs are flushed with a typed [`DepyfError`] and
+//!    new submissions are rejected, so a crash-looping fleet fails fast
+//!    instead of flapping forever.
+//!
+//! 2. **Bounded queue + admission policy.** The shared queue holds at
+//!    most [`SupervisorConfig::queue_cap`] jobs. On overflow,
+//!    [`AdmissionPolicy::Block`] applies backpressure (the submitter
+//!    waits), [`AdmissionPolicy::Shed`] rejects immediately with
+//!    [`DepyfError::Overloaded`] (deliberately *not* transient — the
+//!    dispatch path maps it straight to the eager fallback, which is the
+//!    correct response to overload), and [`AdmissionPolicy::DeadlineAware`]
+//!    additionally sheds any job whose remaining deadline cannot cover
+//!    the observed p50 service time — work that would time out anyway is
+//!    refused while it is still cheap to refuse.
+//!
+//! 3. **Deadlines in the queue.** Jobs carry an optional
+//!    [`Deadline`]; a worker dequeuing an already-expired job aborts it
+//!    with `DepyfError::Timeout` (counted as a deadline-propagated
+//!    abort) instead of computing a result nobody is waiting for.
+//!
+//! Two fault sites make this testable: `worker.heartbeat` fires inside
+//! the per-job work (a `delay` wedges the job past the stall budget, so
+//! chaos rounds reconcile `fired == watchdog_kills == respawns` exactly;
+//! an `error` simulates a mid-job crash), and `serve.admission` forces a
+//! shed at admission (`fired == sheds`).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::api::DepyfError;
+use crate::metrics::MetricsSnapshot;
+use crate::serve::deadline::{note_deadline_abort, Deadline};
+use crate::serve::future::{call_channel, CallFuture, CallPromise, CallResolver};
+use crate::tensor::Tensor;
+
+/// What the supervisor does when a submission finds the queue full.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum AdmissionPolicy {
+    /// Backpressure: the submitting thread waits for a slot. No request
+    /// is ever refused, at the cost of caller latency under overload.
+    #[default]
+    Block,
+    /// Fail fast: reject with [`DepyfError::Overloaded`] so the caller's
+    /// dispatch path degrades to its eager fallback immediately.
+    Shed,
+    /// [`AdmissionPolicy::Shed`] on overflow, plus: shed any job whose
+    /// remaining [`Deadline`] is below the observed p50 service time —
+    /// it would time out in the queue, so refuse it while refusal is
+    /// still cheap.
+    DeadlineAware,
+}
+
+impl AdmissionPolicy {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            AdmissionPolicy::Block => "block",
+            AdmissionPolicy::Shed => "shed",
+            AdmissionPolicy::DeadlineAware => "deadline-aware",
+        }
+    }
+
+    /// Parse the CLI spelling (`--admission block|shed|deadline-aware`).
+    pub fn parse(s: &str) -> Option<AdmissionPolicy> {
+        match s {
+            "block" => Some(AdmissionPolicy::Block),
+            "shed" => Some(AdmissionPolicy::Shed),
+            "deadline-aware" | "deadline" => Some(AdmissionPolicy::DeadlineAware),
+            _ => None,
+        }
+    }
+}
+
+/// Tuning for a [`Supervisor`]. The defaults suit the in-process serve
+/// driver; chaos tests shrink the stall budget to provoke the watchdog.
+#[derive(Clone, Copy, Debug)]
+pub struct SupervisorConfig {
+    /// Worker threads (min 1).
+    pub workers: usize,
+    /// Bounded queue capacity (min 1).
+    pub queue_cap: usize,
+    pub policy: AdmissionPolicy,
+    /// Heartbeat stall budget in ms: a busy worker silent this long is
+    /// considered wedged and killed.
+    pub stall_ms: u64,
+    /// Give-up threshold: total respawns allowed before the supervisor
+    /// stops replacing workers and rejects new work.
+    pub max_restarts: u32,
+    /// Base respawn backoff in ms; doubles per restart (capped) so a
+    /// crash loop cannot hot-spin the watchdog.
+    pub restart_backoff_ms: u64,
+}
+
+impl Default for SupervisorConfig {
+    fn default() -> SupervisorConfig {
+        SupervisorConfig {
+            workers: 4,
+            queue_cap: 64,
+            policy: AdmissionPolicy::Block,
+            stall_ms: 1_000,
+            max_restarts: 8,
+            restart_backoff_ms: 1,
+        }
+    }
+}
+
+/// A supervised job's work: produces the call result the promise carries.
+pub type CallWork = Box<dyn FnOnce() -> Result<Vec<Tensor>, DepyfError> + Send + 'static>;
+
+struct SupJob {
+    work: CallWork,
+    deadline: Option<Deadline>,
+    promise: CallPromise,
+}
+
+struct QueueState {
+    jobs: VecDeque<SupJob>,
+    draining: bool,
+    shutdown: bool,
+}
+
+/// Last-N service times (µs) backing the DeadlineAware p50 estimate.
+struct ServiceRing {
+    samples: Vec<u64>,
+    next: usize,
+}
+
+impl ServiceRing {
+    const CAP: usize = 64;
+
+    fn new() -> ServiceRing {
+        ServiceRing { samples: Vec::with_capacity(ServiceRing::CAP), next: 0 }
+    }
+
+    fn record(&mut self, us: u64) {
+        if self.samples.len() < ServiceRing::CAP {
+            self.samples.push(us);
+        } else {
+            self.samples[self.next] = us;
+            self.next = (self.next + 1) % ServiceRing::CAP;
+        }
+    }
+
+    fn p50(&self) -> Duration {
+        if self.samples.is_empty() {
+            return Duration::ZERO;
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_unstable();
+        Duration::from_micros(sorted[sorted.len() / 2])
+    }
+}
+
+struct Shared {
+    cfg: SupervisorConfig,
+    q: Mutex<QueueState>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    sheds: AtomicU64,
+    kills: AtomicU64,
+    respawns: AtomicU64,
+    restarts: AtomicU64,
+    gave_up: AtomicBool,
+    /// Histogram of queue depth sampled after each enqueue; index =
+    /// depth (1..=cap), slot 0 unused by enqueue sampling.
+    depth_hist: Vec<AtomicU64>,
+    service: Mutex<ServiceRing>,
+    epoch: Instant,
+}
+
+impl Shared {
+    fn now_ms(&self) -> u64 {
+        self.epoch.elapsed().as_millis() as u64
+    }
+
+    fn record_service(&self, elapsed: Duration) {
+        let mut ring = self.service.lock().unwrap_or_else(PoisonError::into_inner);
+        ring.record(elapsed.as_micros() as u64);
+    }
+
+    fn service_p50(&self) -> Duration {
+        self.service.lock().unwrap_or_else(PoisonError::into_inner).p50()
+    }
+
+    /// Nearest-rank p99 over the per-enqueue depth samples.
+    fn queue_depth_p99(&self) -> u64 {
+        let counts: Vec<u64> = self.depth_hist.iter().map(|c| c.load(Ordering::Relaxed)).collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let rank = ((total * 99 + 99) / 100).max(1); // nearest-rank ceil
+        let mut seen = 0u64;
+        for (depth, count) in counts.iter().enumerate() {
+            seen += count;
+            if seen >= rank {
+                return depth as u64;
+            }
+        }
+        (counts.len() - 1) as u64
+    }
+}
+
+/// Per-worker state shared between the worker thread and the watchdog.
+struct WorkerState {
+    busy: AtomicBool,
+    /// ms since the supervisor's epoch, stamped at job start.
+    heartbeat_ms: AtomicU64,
+    /// Set by the watchdog: this worker was abandoned; it must exit at
+    /// the next loop edge because a replacement now owns its slot.
+    lost: AtomicBool,
+    /// The in-flight call's out-of-band resolver, published for the
+    /// duration of the job so the watchdog can abandon it.
+    resolver: Mutex<Option<CallResolver>>,
+}
+
+impl WorkerState {
+    fn new() -> WorkerState {
+        WorkerState {
+            busy: AtomicBool::new(false),
+            heartbeat_ms: AtomicU64::new(0),
+            lost: AtomicBool::new(false),
+            resolver: Mutex::new(None),
+        }
+    }
+}
+
+struct WorkerEntry {
+    state: Arc<WorkerState>,
+    /// `None` once the watchdog detached a wedged thread (it exits on its
+    /// own when — if — the stuck job returns) or after a join.
+    handle: Option<JoinHandle<()>>,
+    generation: u64,
+}
+
+/// Counter snapshot for reports; see module docs for what each means.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SupervisorSnapshot {
+    pub sheds: u64,
+    pub respawns: u64,
+    pub watchdog_kills: u64,
+    pub queue_depth_p99: u64,
+    pub gave_up: bool,
+}
+
+impl SupervisorSnapshot {
+    /// Accumulate into a metrics snapshot (depth is a gauge → max).
+    pub fn fold_into(&self, m: &mut MetricsSnapshot) {
+        m.sheds += self.sheds;
+        m.respawns += self.respawns;
+        m.watchdog_kills += self.watchdog_kills;
+        m.queue_depth_p99 = m.queue_depth_p99.max(self.queue_depth_p99);
+    }
+}
+
+/// The supervision layer: bounded admission in front, heartbeat-watched
+/// workers behind, a watchdog respawning what wedges. See module docs.
+pub struct Supervisor {
+    shared: Arc<Shared>,
+    slots: Arc<Mutex<Vec<WorkerEntry>>>,
+    watchdog: Option<JoinHandle<()>>,
+}
+
+impl Supervisor {
+    pub fn new(cfg: SupervisorConfig) -> Supervisor {
+        let cfg = SupervisorConfig {
+            workers: cfg.workers.max(1),
+            queue_cap: cfg.queue_cap.max(1),
+            stall_ms: cfg.stall_ms.max(1),
+            ..cfg
+        };
+        let shared = Arc::new(Shared {
+            q: Mutex::new(QueueState { jobs: VecDeque::new(), draining: false, shutdown: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            sheds: AtomicU64::new(0),
+            kills: AtomicU64::new(0),
+            respawns: AtomicU64::new(0),
+            restarts: AtomicU64::new(0),
+            gave_up: AtomicBool::new(false),
+            depth_hist: (0..=cfg.queue_cap).map(|_| AtomicU64::new(0)).collect(),
+            service: Mutex::new(ServiceRing::new()),
+            epoch: Instant::now(),
+            cfg,
+        });
+        let slots: Vec<WorkerEntry> = (0..cfg.workers)
+            .map(|i| {
+                let state = Arc::new(WorkerState::new());
+                let handle = spawn_worker(&shared, &state, i, 0);
+                WorkerEntry { state, handle: Some(handle), generation: 0 }
+            })
+            .collect();
+        let slots = Arc::new(Mutex::new(slots));
+        let watchdog = {
+            let shared = Arc::clone(&shared);
+            let slots = Arc::clone(&slots);
+            std::thread::Builder::new()
+                .name("depyf-watchdog".into())
+                .spawn(move || watchdog_loop(shared, slots))
+                .expect("spawn watchdog")
+        };
+        Supervisor { shared, slots, watchdog: Some(watchdog) }
+    }
+
+    /// Submit work under admission control; always returns a future that
+    /// resolves (accepted, shed, rejected or abandoned — never a hang).
+    /// `deadline` rides with the job: DeadlineAware admission consults
+    /// it, and a worker dequeuing it after expiry aborts instead of
+    /// computing a dead result.
+    pub fn submit_call(&self, deadline: Option<Deadline>, work: CallWork) -> CallFuture {
+        let (promise, future) = call_channel();
+        // Same site `WorkerPool::submit` gates, same semantics: the
+        // injected rejection reaches the caller as a typed transient
+        // error instead of a dropped job.
+        if let Err(e) = crate::faults::gate(crate::faults::Site::WorkerSubmit) {
+            promise.fulfill(Err(e));
+            return future;
+        }
+        // Forced shed: chaos rounds reconcile `fired == sheds` here.
+        if crate::faults::gate(crate::faults::Site::ServeAdmission).is_err() {
+            self.shed(promise, "injected admission fault");
+            return future;
+        }
+        if self.shared.gave_up.load(Ordering::Acquire) {
+            promise.fulfill(Err(self.give_up_error()));
+            return future;
+        }
+        let cfg = &self.shared.cfg;
+        let mut q = self.shared.q.lock().unwrap_or_else(PoisonError::into_inner);
+        loop {
+            if q.draining || q.shutdown {
+                drop(q);
+                promise.fulfill(Err(DepyfError::Runtime(
+                    "supervisor is draining; call rejected".into(),
+                )));
+                return future;
+            }
+            if cfg.policy == AdmissionPolicy::DeadlineAware {
+                if let Some(d) = deadline {
+                    let p50 = self.shared.service_p50();
+                    let remaining = d.remaining();
+                    if remaining < p50 {
+                        drop(q);
+                        self.shed(
+                            promise,
+                            &format!(
+                                "remaining deadline {:?} is below the observed p50 service time {:?}",
+                                remaining, p50
+                            ),
+                        );
+                        return future;
+                    }
+                }
+            }
+            if q.jobs.len() < cfg.queue_cap {
+                break;
+            }
+            match cfg.policy {
+                AdmissionPolicy::Block => {
+                    q = self.shared.not_full.wait(q).unwrap_or_else(PoisonError::into_inner);
+                }
+                AdmissionPolicy::Shed | AdmissionPolicy::DeadlineAware => {
+                    drop(q);
+                    self.shed(promise, &format!("queue full (cap {})", cfg.queue_cap));
+                    return future;
+                }
+            }
+        }
+        q.jobs.push_back(SupJob { work, deadline, promise });
+        self.shared.depth_hist[q.jobs.len()].fetch_add(1, Ordering::Relaxed);
+        self.shared.not_empty.notify_one();
+        drop(q);
+        future
+    }
+
+    fn shed(&self, promise: CallPromise, why: &str) {
+        self.shared.sheds.fetch_add(1, Ordering::Relaxed);
+        promise.fulfill(Err(DepyfError::Overloaded(format!(
+            "request shed by admission control: {}",
+            why
+        ))));
+    }
+
+    fn give_up_error(&self) -> DepyfError {
+        DepyfError::Backend(format!(
+            "supervisor restart budget exhausted ({} respawns): workers are crash-looping; rejecting work so callers degrade",
+            self.shared.cfg.max_restarts
+        ))
+    }
+
+    /// Graceful shutdown: stop admitting, let workers finish queued and
+    /// in-flight jobs (abandoned/lost workers excluded), join the fleet.
+    /// Subsequent submissions are rejected with a typed transient error;
+    /// counters stay readable, so reports merge deterministically after
+    /// the drain instead of racing live workers.
+    pub fn drain(&self) {
+        {
+            let mut q = self.shared.q.lock().unwrap_or_else(PoisonError::into_inner);
+            q.draining = true;
+            self.shared.not_empty.notify_all();
+            self.shared.not_full.notify_all();
+        }
+        loop {
+            let queue_empty = {
+                let q = self.shared.q.lock().unwrap_or_else(PoisonError::into_inner);
+                q.jobs.is_empty()
+            };
+            let inflight = {
+                let slots = self.slots.lock().unwrap_or_else(PoisonError::into_inner);
+                slots.iter().any(|e| {
+                    e.state.busy.load(Ordering::Acquire) && !e.state.lost.load(Ordering::Acquire)
+                })
+            };
+            // A kill resolves the caller *before* the (backed-off) respawn
+            // lands, so also wait for the fleet to be restored — otherwise
+            // a snapshot taken right after drain can read respawns < kills
+            // and the chaos reconciliation would flake. Past the restart
+            // budget no respawn is coming; `gave_up` settles the ledger.
+            let fleet_restored = self.shared.gave_up.load(Ordering::Acquire)
+                || self.shared.respawns.load(Ordering::Relaxed)
+                    == self.shared.kills.load(Ordering::Relaxed);
+            if queue_empty && !inflight && fleet_restored {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let mut slots = self.slots.lock().unwrap_or_else(PoisonError::into_inner);
+        for entry in slots.iter_mut() {
+            if let Some(handle) = entry.handle.take() {
+                let _ = handle.join();
+            }
+        }
+    }
+
+    pub fn snapshot(&self) -> SupervisorSnapshot {
+        SupervisorSnapshot {
+            sheds: self.shared.sheds.load(Ordering::Relaxed),
+            respawns: self.shared.respawns.load(Ordering::Relaxed),
+            watchdog_kills: self.shared.kills.load(Ordering::Relaxed),
+            queue_depth_p99: self.shared.queue_depth_p99(),
+            gave_up: self.shared.gave_up.load(Ordering::Acquire),
+        }
+    }
+
+    pub fn config(&self) -> &SupervisorConfig {
+        &self.shared.cfg
+    }
+}
+
+impl Drop for Supervisor {
+    fn drop(&mut self) {
+        {
+            let mut q = self.shared.q.lock().unwrap_or_else(PoisonError::into_inner);
+            q.shutdown = true;
+            self.shared.not_empty.notify_all();
+            self.shared.not_full.notify_all();
+        }
+        let mut slots = self.slots.lock().unwrap_or_else(PoisonError::into_inner);
+        for entry in slots.iter_mut() {
+            if let Some(handle) = entry.handle.take() {
+                let _ = handle.join();
+            }
+        }
+        drop(slots);
+        if let Some(watchdog) = self.watchdog.take() {
+            let _ = watchdog.join();
+        }
+    }
+}
+
+fn spawn_worker(
+    shared: &Arc<Shared>,
+    state: &Arc<WorkerState>,
+    slot: usize,
+    generation: u64,
+) -> JoinHandle<()> {
+    let shared = Arc::clone(shared);
+    let state = Arc::clone(state);
+    std::thread::Builder::new()
+        .name(format!("depyf-sup-{}-g{}", slot, generation))
+        .spawn(move || worker_loop(shared, state))
+        .expect("spawn supervised worker")
+}
+
+fn worker_loop(shared: Arc<Shared>, state: Arc<WorkerState>) {
+    loop {
+        let job = {
+            let mut q = shared.q.lock().unwrap_or_else(PoisonError::into_inner);
+            loop {
+                if q.shutdown {
+                    // Hard shutdown drops queued jobs; their promises'
+                    // drop error resolves any remaining waiters.
+                    break None;
+                }
+                if let Some(job) = q.jobs.pop_front() {
+                    shared.not_full.notify_one();
+                    break Some(job);
+                }
+                if q.draining {
+                    break None; // drain: queue empty means we are done
+                }
+                q = shared.not_empty.wait(q).unwrap_or_else(PoisonError::into_inner);
+            }
+        };
+        let Some(SupJob { work, deadline, promise }) = job else { break };
+        if let Some(d) = deadline {
+            if d.expired() {
+                note_deadline_abort();
+                promise.fulfill(Err(DepyfError::Timeout(
+                    "job deadline exhausted while queued; aborted before dispatch".into(),
+                )));
+                continue;
+            }
+        }
+        state.heartbeat_ms.store(shared.now_ms(), Ordering::Relaxed);
+        *state.resolver.lock().unwrap_or_else(PoisonError::into_inner) = Some(promise.resolver());
+        state.busy.store(true, Ordering::Release);
+        let t0 = Instant::now();
+        // `worker.heartbeat` fires inside the guarded region: a delay
+        // wedges this job past the stall budget (the watchdog kills us),
+        // an error simulates a mid-job crash, a panic exercises the
+        // catch_unwind isolation below.
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            crate::faults::gate(crate::faults::Site::WorkerHeartbeat)?;
+            work()
+        }))
+        .unwrap_or_else(|payload| Err(DepyfError::from_panic("supervised worker", payload)));
+        state.busy.store(false, Ordering::Release);
+        *state.resolver.lock().unwrap_or_else(PoisonError::into_inner) = None;
+        let lost = state.lost.load(Ordering::Acquire);
+        if !lost {
+            // Wedged jobs don't pollute the p50 the DeadlineAware policy
+            // sheds against.
+            shared.record_service(t0.elapsed());
+        }
+        // No-op if the watchdog already abandoned this call.
+        promise.fulfill(result);
+        if lost {
+            break; // a replacement owns this slot now
+        }
+    }
+}
+
+fn watchdog_loop(shared: Arc<Shared>, slots: Arc<Mutex<Vec<WorkerEntry>>>) {
+    let tick = Duration::from_millis((shared.cfg.stall_ms / 4).clamp(2, 50));
+    loop {
+        std::thread::sleep(tick);
+        {
+            let q = shared.q.lock().unwrap_or_else(PoisonError::into_inner);
+            if q.shutdown {
+                return;
+            }
+        }
+        let now = shared.now_ms();
+        let mut slots_guard = slots.lock().unwrap_or_else(PoisonError::into_inner);
+        for (slot, entry) in slots_guard.iter_mut().enumerate() {
+            let st = &entry.state;
+            if !st.busy.load(Ordering::Acquire) || st.lost.load(Ordering::Acquire) {
+                continue;
+            }
+            let stalled_for = now.saturating_sub(st.heartbeat_ms.load(Ordering::Relaxed));
+            if stalled_for <= shared.cfg.stall_ms {
+                continue;
+            }
+            // Wedged: abandon the call, detach the thread, respawn.
+            st.lost.store(true, Ordering::Release);
+            shared.kills.fetch_add(1, Ordering::Relaxed);
+            let resolver =
+                st.resolver.lock().unwrap_or_else(PoisonError::into_inner).take();
+            if let Some(resolver) = resolver {
+                resolver.resolve_if_pending(Err(DepyfError::Runtime(format!(
+                    "supervisor abandoned the call: worker heartbeat stalled {}ms (budget {}ms); a replacement worker took the slot",
+                    stalled_for, shared.cfg.stall_ms
+                ))));
+            }
+            // Detached, not joined: the thread exits on its own when (if)
+            // the stuck job ever returns; its late result is discarded by
+            // first-write-wins resolution.
+            entry.handle.take();
+            let restarts = shared.restarts.fetch_add(1, Ordering::Relaxed) + 1;
+            if restarts > shared.cfg.max_restarts as u64 {
+                give_up(&shared);
+                continue;
+            }
+            // Doubling backoff, capped: a crash loop must not hot-spin.
+            let backoff = shared
+                .cfg
+                .restart_backoff_ms
+                .saturating_mul(1u64 << (restarts - 1).min(10))
+                .min(200);
+            if backoff > 0 {
+                std::thread::sleep(Duration::from_millis(backoff));
+            }
+            let state = Arc::new(WorkerState::new());
+            entry.generation += 1;
+            let handle = spawn_worker(&shared, &state, slot, entry.generation);
+            entry.state = state;
+            entry.handle = Some(handle);
+            shared.respawns.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Past the restart budget: reject new work *and* flush the queue with
+/// the same typed error, so jobs stranded behind dead workers resolve
+/// (and degrade) instead of waiting on capacity that will never return.
+fn give_up(shared: &Arc<Shared>) {
+    shared.gave_up.store(true, Ordering::Release);
+    let stranded: Vec<SupJob> = {
+        let mut q = shared.q.lock().unwrap_or_else(PoisonError::into_inner);
+        q.jobs.drain(..).collect()
+    };
+    for job in stranded {
+        job.promise.fulfill(Err(DepyfError::Backend(format!(
+            "supervisor restart budget exhausted ({} respawns): workers are crash-looping; rejecting work so callers degrade",
+            shared.cfg.max_restarts
+        ))));
+    }
+    shared.not_full.notify_all();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    fn cfg(workers: usize, cap: usize, policy: AdmissionPolicy) -> SupervisorConfig {
+        SupervisorConfig {
+            workers,
+            queue_cap: cap,
+            policy,
+            stall_ms: 5_000, // far away unless a test shrinks it
+            ..SupervisorConfig::default()
+        }
+    }
+
+    fn ok_job(v: f32) -> CallWork {
+        Box::new(move || Ok(vec![Tensor::scalar(v)]))
+    }
+
+    #[test]
+    fn jobs_run_and_resolve_in_order_of_submission_value() {
+        let sup = Supervisor::new(cfg(2, 8, AdmissionPolicy::Block));
+        let futures: Vec<CallFuture> =
+            (0..8).map(|i| sup.submit_call(None, ok_job(i as f32))).collect();
+        for (i, f) in futures.into_iter().enumerate() {
+            assert_eq!(f.wait().expect("job ok")[0].item(), i as f32);
+        }
+        let snap = sup.snapshot();
+        assert_eq!(snap.sheds, 0);
+        assert_eq!(snap.watchdog_kills, 0);
+        assert!(snap.queue_depth_p99 <= 8);
+    }
+
+    #[test]
+    fn block_policy_backpressures_instead_of_shedding() {
+        let sup = Supervisor::new(cfg(1, 1, AdmissionPolicy::Block));
+        // One slow job occupies the worker; cap 1 queue fills behind it.
+        let futures: Vec<CallFuture> = (0..4)
+            .map(|i| {
+                sup.submit_call(
+                    None,
+                    Box::new(move || {
+                        std::thread::sleep(Duration::from_millis(10));
+                        Ok(vec![Tensor::scalar(i as f32)])
+                    }),
+                )
+            })
+            .collect();
+        for (i, f) in futures.into_iter().enumerate() {
+            assert_eq!(f.wait().expect("blocked, not shed")[0].item(), i as f32);
+        }
+        assert_eq!(sup.snapshot().sheds, 0, "Block never sheds");
+    }
+
+    #[test]
+    fn shed_policy_rejects_overflow_with_typed_overloaded() {
+        let sup = Supervisor::new(cfg(1, 1, AdmissionPolicy::Shed));
+        let (release_tx, release_rx) = mpsc::channel::<()>();
+        let (started_tx, started_rx) = mpsc::channel::<()>();
+        // A: occupies the single worker until released.
+        let fut_a = sup.submit_call(
+            None,
+            Box::new(move || {
+                started_tx.send(()).ok();
+                release_rx.recv().ok();
+                Ok(vec![Tensor::scalar(1.0)])
+            }),
+        );
+        started_rx.recv().expect("worker picked up job A");
+        // B: fills the cap-1 queue. C: must shed.
+        let fut_b = sup.submit_call(None, ok_job(2.0));
+        let fut_c = sup.submit_call(None, ok_job(3.0));
+        let err = fut_c.wait().expect_err("C must be shed");
+        assert_eq!(err.layer(), "overloaded");
+        assert!(!err.is_transient(), "sheds must not be retried into the full queue");
+        assert!(format!("{}", err).contains("queue full (cap 1)"), "{}", err);
+        release_tx.send(()).expect("release job A");
+        assert_eq!(fut_a.wait().expect("A completes")[0].item(), 1.0);
+        assert_eq!(fut_b.wait().expect("B was queued, not shed")[0].item(), 2.0);
+        let snap = sup.snapshot();
+        assert_eq!(snap.sheds, 1);
+        assert_eq!(snap.queue_depth_p99, 1, "cap bounds the sampled depth");
+    }
+
+    #[test]
+    fn deadline_aware_sheds_doomed_jobs_but_admits_viable_ones() {
+        let sup = Supervisor::new(cfg(1, 8, AdmissionPolicy::DeadlineAware));
+        // Seed the service-time estimate with ~20ms jobs.
+        for _ in 0..4 {
+            let f = sup.submit_call(
+                None,
+                Box::new(|| {
+                    std::thread::sleep(Duration::from_millis(20));
+                    Ok(vec![Tensor::scalar(0.0)])
+                }),
+            );
+            f.wait().expect("seeding job");
+        }
+        assert!(sup.shared.service_p50() >= Duration::from_millis(15));
+        // 1ms of budget cannot cover a ~20ms p50: shed at admission.
+        let doomed = sup.submit_call(Some(Deadline::in_ms(1)), ok_job(9.0));
+        let err = doomed.wait().expect_err("doomed job must shed");
+        assert_eq!(err.layer(), "overloaded");
+        assert!(format!("{}", err).contains("p50"), "{}", err);
+        // A generous budget is admitted and served.
+        let viable = sup.submit_call(Some(Deadline::in_ms(10_000)), ok_job(4.0));
+        assert_eq!(viable.wait().expect("viable job runs")[0].item(), 4.0);
+        // No deadline at all is always admitted under DeadlineAware.
+        let free = sup.submit_call(None, ok_job(5.0));
+        assert_eq!(free.wait().expect("no-deadline job runs")[0].item(), 5.0);
+        assert_eq!(sup.snapshot().sheds, 1);
+    }
+
+    #[test]
+    fn watchdog_abandons_stalled_call_and_respawns_the_worker() {
+        let sup = Supervisor::new(SupervisorConfig {
+            stall_ms: 30,
+            ..cfg(1, 4, AdmissionPolicy::Block)
+        });
+        let t0 = Instant::now();
+        let wedged = sup.submit_call(
+            None,
+            Box::new(|| {
+                std::thread::sleep(Duration::from_millis(600));
+                Ok(vec![Tensor::scalar(-1.0)])
+            }),
+        );
+        // Promise drop-safety via the resolver: the caller gets a typed
+        // transient error well before the wedged job finishes.
+        let err = wedged.wait().expect_err("watchdog must abandon the call");
+        assert!(t0.elapsed() < Duration::from_millis(500), "abandoned before the job finished");
+        assert_eq!(err.layer(), "runtime");
+        assert!(err.is_transient(), "abandonment retries elsewhere: {}", err);
+        assert!(format!("{}", err).contains("heartbeat stalled"), "{}", err);
+        // The replacement worker serves the next job.
+        let next = sup.submit_call(None, ok_job(7.0));
+        assert_eq!(next.wait().expect("replacement worker runs")[0].item(), 7.0);
+        let snap = sup.snapshot();
+        assert_eq!(snap.watchdog_kills, 1);
+        assert_eq!(snap.respawns, 1);
+        assert!(!snap.gave_up);
+    }
+
+    #[test]
+    fn restart_budget_exhaustion_gives_up_with_typed_error() {
+        let sup = Supervisor::new(SupervisorConfig {
+            stall_ms: 25,
+            max_restarts: 1,
+            ..cfg(1, 4, AdmissionPolicy::Block)
+        });
+        let stall_job = || -> CallWork {
+            Box::new(|| {
+                std::thread::sleep(Duration::from_millis(400));
+                Ok(vec![])
+            })
+        };
+        // First stall: killed and respawned (budget 1).
+        assert!(sup.submit_call(None, stall_job()).wait().is_err());
+        // Second stall: killed, but the budget is spent → give up.
+        assert!(sup.submit_call(None, stall_job()).wait().is_err());
+        // Wait for the watchdog to conclude.
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while !sup.snapshot().gave_up && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let snap = sup.snapshot();
+        assert!(snap.gave_up, "supervisor must give up past the budget: {:?}", snap);
+        assert_eq!(snap.watchdog_kills, 2);
+        assert_eq!(snap.respawns, 1, "no respawn past the budget");
+        let rejected = sup.submit_call(None, ok_job(1.0));
+        let err = rejected.wait().expect_err("gave-up supervisor rejects work");
+        assert!(format!("{}", err).contains("restart budget exhausted"), "{}", err);
+    }
+
+    #[test]
+    fn drain_finishes_inflight_then_rejects_new_work() {
+        let sup = Supervisor::new(cfg(2, 8, AdmissionPolicy::Block));
+        let futures: Vec<CallFuture> = (0..6)
+            .map(|i| {
+                sup.submit_call(
+                    None,
+                    Box::new(move || {
+                        std::thread::sleep(Duration::from_millis(5));
+                        Ok(vec![Tensor::scalar(i as f32)])
+                    }),
+                )
+            })
+            .collect();
+        sup.drain();
+        for (i, f) in futures.into_iter().enumerate() {
+            assert_eq!(f.wait().expect("in-flight finishes")[0].item(), i as f32);
+        }
+        let late = sup.submit_call(None, ok_job(0.0));
+        let err = late.wait().expect_err("drained supervisor admits nothing");
+        assert_eq!(err.layer(), "runtime");
+        assert!(err.is_transient());
+        assert!(format!("{}", err).contains("draining"), "{}", err);
+    }
+
+    #[test]
+    fn expired_deadline_is_aborted_at_dequeue_not_computed() {
+        let sup = Supervisor::new(cfg(1, 8, AdmissionPolicy::Block));
+        let aborts_before = crate::serve::deadline::deadline_abort_count();
+        let (release_tx, release_rx) = mpsc::channel::<()>();
+        let (started_tx, started_rx) = mpsc::channel::<()>();
+        let blocker = sup.submit_call(
+            None,
+            Box::new(move || {
+                started_tx.send(()).ok();
+                release_rx.recv().ok();
+                Ok(vec![])
+            }),
+        );
+        started_rx.recv().expect("worker busy");
+        // 5ms of budget spent entirely behind the blocker.
+        let doomed = sup.submit_call(Some(Deadline::in_ms(5)), ok_job(1.0));
+        std::thread::sleep(Duration::from_millis(20));
+        release_tx.send(()).expect("release blocker");
+        let err = doomed.wait().expect_err("expired job must abort at dequeue");
+        assert_eq!(err.layer(), "timeout");
+        assert!(format!("{}", err).contains("while queued"), "{}", err);
+        blocker.wait().expect("blocker ok");
+        assert!(
+            crate::serve::deadline::deadline_abort_count() > aborts_before,
+            "abort must be counted"
+        );
+    }
+
+    #[test]
+    fn panicking_job_is_caught_and_worker_survives() {
+        let sup = Supervisor::new(cfg(1, 4, AdmissionPolicy::Block));
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(|_| {}));
+        let boom = sup.submit_call(None, Box::new(|| panic!("job exploded")));
+        let err = boom.wait().expect_err("panic becomes a typed error");
+        std::panic::set_hook(prev);
+        assert_eq!(err.layer(), "panic");
+        // Same worker thread (no kill, no respawn) serves the next call.
+        let next = sup.submit_call(None, ok_job(6.0));
+        assert_eq!(next.wait().expect("worker survived the panic")[0].item(), 6.0);
+        let snap = sup.snapshot();
+        assert_eq!(snap.watchdog_kills, 0);
+        assert_eq!(snap.respawns, 0);
+    }
+
+    #[test]
+    fn admission_policy_parses_cli_spellings() {
+        assert_eq!(AdmissionPolicy::parse("block"), Some(AdmissionPolicy::Block));
+        assert_eq!(AdmissionPolicy::parse("shed"), Some(AdmissionPolicy::Shed));
+        assert_eq!(AdmissionPolicy::parse("deadline-aware"), Some(AdmissionPolicy::DeadlineAware));
+        assert_eq!(AdmissionPolicy::parse("deadline"), Some(AdmissionPolicy::DeadlineAware));
+        assert_eq!(AdmissionPolicy::parse("drop"), None);
+        assert_eq!(AdmissionPolicy::DeadlineAware.as_str(), "deadline-aware");
+    }
+}

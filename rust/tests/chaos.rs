@@ -11,8 +11,16 @@
 //! * compile (`backend.plan`/`lower`) rounds:
 //!   `fired + breaker_skips == retries + degraded_compiles`
 //! * delay-under-deadline rounds:       `fired == timeouts == degraded_calls`
-//! * `worker_pool.submit` rounds:       `fired == degraded_calls` (no retry:
-//!   a dropped job is a structural failure)
+//! * `worker_pool.submit` rounds:       `fired == retries + degraded_calls`
+//!   (an injected submit rejection reaches the caller as a typed
+//!   *transient* error — retried once, then degraded)
+//! * `worker.heartbeat` delay rounds:   `fired == watchdog_kills == respawns`
+//!   (every wedged job is killed exactly once and every kill is matched
+//!   by a respawn) and `fired == retries + degraded_calls` (every
+//!   abandoned call surfaces exactly one transient error)
+//! * `serve.admission` error rounds:    `fired == sheds == degraded_calls`
+//!   (a shed is `Overloaded` — deliberately not transient, so it is
+//!   never retried into the full queue)
 //!
 //! Throughout, `report.errors` must stay 0 — every degraded call is served
 //! by the eager fallback, which is bitwise-equal to the single-thread
@@ -41,7 +49,7 @@ use depyf::api::{
 };
 use depyf::faults::{self, FaultPlan, Site};
 use depyf::runtime::DiskCache;
-use depyf::serve::{serve_once_with, WorkerPool};
+use depyf::serve::{serve_once_tuned, serve_once_with, ServeTuning, WorkerPool};
 
 /// Armed fault plans are process-global: chaos rounds must never overlap.
 /// Poison-recovering so one failed round cannot abort the rest.
@@ -266,11 +274,12 @@ fn deadline_abandons_stuck_calls_and_serves_the_fallback() {
     });
 }
 
-/// `worker_pool.submit` faults drop the job before it is queued; the
-/// call's future resolves with the drop error (never a hang) and the call
-/// degrades — a structural failure, so no retry.
+/// `worker_pool.submit` faults reject the job at the queue's edge; the
+/// call's future resolves with a typed *transient* error (never a hang,
+/// never a silently dropped promise), so the dispatch path retries once
+/// and then degrades to the eager fallback.
 #[test]
-fn dropped_pool_jobs_degrade_instead_of_hanging() {
+fn rejected_pool_submissions_degrade_instead_of_hanging() {
     let _serial = chaos_lock();
     let spec = "seed=17;worker_pool.submit=error@1/2";
     round("worker_submit", spec, || {
@@ -284,11 +293,126 @@ fn dropped_pool_jobs_degrade_instead_of_hanging() {
         assert!(st.hits > 0, "async dispatch must reach the pool");
         assert!(st.fired > 0, "plan fired nothing over {} hits", st.hits);
         assert_eq!(
-            st.fired, m.degraded_calls,
-            "each dropped job degrades its call exactly once (retries {})",
-            m.retries
+            st.fired,
+            m.retries + m.degraded_calls,
+            "each rejected submission is retried or degraded exactly once (hits {})",
+            st.hits
         );
-        assert_eq!(m.retries, 0, "a dropped job is a structural failure, not retried");
+        assert_eq!(m.timeouts, 0);
+    });
+}
+
+/// Injected `worker.heartbeat` delays wedge supervised jobs far past the
+/// stall budget: the watchdog must kill each wedged worker exactly once,
+/// respawn a replacement for every kill, and resolve the abandoned call
+/// with a transient error that the dispatch path retries/degrades — so
+/// the serve stays bitwise-correct with zero errors. Exact ledger:
+/// `fired == watchdog_kills == respawns` and
+/// `fired == retries + degraded_calls`.
+#[test]
+fn stalled_workers_are_killed_respawned_and_reconciled_exactly() {
+    let _serial = chaos_lock();
+    let spec = "seed=53;worker.heartbeat=delay:250@1/4";
+    round("worker_heartbeat_stall", spec, || {
+        let guard = install(spec);
+        // Raise the restart budget far above any plausible fire count so
+        // the give-up path cannot break the 1:1:1 reconciliation, and
+        // shrink the stall budget well under the 250ms injected wedge
+        // (while staying far above a legitimate sub-ms eager call).
+        let tuning = ServeTuning { stall_ms: 60, max_restarts: 100_000, ..ServeTuning::default() };
+        let report = serve_once_tuned(2, 1, "async:eager", 2, tuning).expect("serve");
+        let st = faults::stats(Site::WorkerHeartbeat);
+        drop(guard);
+        assert_eq!(report.errors, 0, "abandoned calls must degrade bitwise-correctly: {:?}", report.failures);
+        assert_eq!(report.dead_threads, 0, "kills hit pool workers, never serving threads");
+        assert!(st.fired > 0, "plan fired nothing over {} hits", st.hits);
+        let m = &report.metrics;
+        assert_eq!(
+            m.watchdog_kills, st.fired,
+            "every wedged job is killed exactly once (hits {})",
+            st.hits
+        );
+        assert_eq!(m.respawns, st.fired, "every kill is matched by a respawn");
+        assert_eq!(
+            st.fired,
+            m.retries + m.degraded_calls,
+            "every abandonment surfaces exactly one transient error"
+        );
+        assert_eq!(m.timeouts, 0, "no deadline in play; abandonment is not a timeout");
+        assert_eq!(m.sheds, 0, "the queue never overflowed");
+    });
+}
+
+/// Injected `serve.admission` faults force a shed at the supervisor's
+/// front door: the caller sees a typed `Overloaded` error — deliberately
+/// *not* transient, so it is never retried into the (notionally full)
+/// queue — and is served by the eager fallback. Exact ledger:
+/// `fired == sheds == degraded_calls` with zero retries and timeouts.
+#[test]
+fn admission_faults_shed_and_still_serve_correct_answers() {
+    let _serial = chaos_lock();
+    let spec = "seed=61;serve.admission=error@1/3";
+    round("serve_admission_shed", spec, || {
+        let guard = install(spec);
+        let report = serve_once_with(4, 2, "async:eager", 2, None).expect("serve");
+        let st = faults::stats(Site::ServeAdmission);
+        drop(guard);
+        assert_eq!(report.errors, 0, "shed calls must be served correctly by eager: {:?}", report.failures);
+        assert_eq!(report.dead_threads, 0);
+        assert!(st.fired > 0, "plan fired nothing over {} hits", st.hits);
+        let m = &report.metrics;
+        assert_eq!(m.sheds, st.fired, "every fired admission fault sheds exactly once");
+        assert_eq!(m.sheds, m.degraded_calls, "every shed is served by the fallback");
+        assert_eq!(m.retries, 0, "Overloaded is not transient; sheds are never retried");
+        assert_eq!(m.timeouts, 0);
+        assert_eq!(m.watchdog_kills, 0, "admission faults never touch healthy workers");
+    });
+}
+
+/// Compile faults and worker stalls *together*: while the circuit breaker
+/// is tripping/half-open-probing recompiles, the watchdog is concurrently
+/// killing and respawning wedged workers. The two recovery mechanisms
+/// must not interfere: the combined ledger reconciles every injected
+/// failure event as exactly one retry or one degrade, kills stay matched
+/// with respawns, no serving thread dies, and a clean serve in the same
+/// process proves nothing stays latched or poisoned.
+#[test]
+fn breaker_probes_race_respawns_without_interference() {
+    let _serial = chaos_lock();
+    let spec = "seed=37;backend.plan=error@1/2;worker.heartbeat=delay:250@1/5";
+    round("breaker_vs_respawn", spec, || {
+        let guard = install(spec);
+        let tuning = ServeTuning { stall_ms: 60, max_restarts: 100_000, ..ServeTuning::default() };
+        let report = serve_once_tuned(2, 2, "async:eager", 2, tuning).expect("serve");
+        let st_plan = faults::stats(Site::BackendPlan);
+        let st_hb = faults::stats(Site::WorkerHeartbeat);
+        drop(guard);
+        assert_eq!(report.errors, 0, "{:?}", report.failures);
+        assert_eq!(report.dead_threads, 0);
+        assert!(st_plan.hits > 0, "compiles must reach the faulted planner");
+        let m = &report.metrics;
+        assert_eq!(m.watchdog_kills, st_hb.fired, "kills track fired stalls exactly");
+        assert_eq!(m.respawns, m.watchdog_kills, "every kill is matched by a respawn");
+        // The combined ledger: every fired plan fault, breaker skip and
+        // fired stall is accounted as exactly one retry or one degrade.
+        assert_eq!(
+            st_plan.fired + m.breaker_skips + st_hb.fired,
+            m.retries + m.degraded_compiles + m.degraded_calls,
+            "plan fired {} skips {} stalls fired {} retries {} degraded compiles {} degraded calls {}",
+            st_plan.fired, m.breaker_skips, st_hb.fired, m.retries, m.degraded_compiles, m.degraded_calls
+        );
+
+        // Same process, plan uninstalled: a fresh serve is clean — no
+        // breaker stays tripped, no supervisor state leaks across runs.
+        let clean = serve_once_with(2, 1, "async:eager", 2, None).expect("clean serve after chaos");
+        assert_eq!(clean.errors, 0, "{:?}", clean.failures);
+        assert_eq!(clean.dead_threads, 0);
+        let c = &clean.metrics;
+        assert_eq!(
+            (c.retries, c.degraded_calls, c.degraded_compiles, c.watchdog_kills, c.respawns, c.sheds),
+            (0, 0, 0, 0, 0, 0),
+            "no resilience or supervision counter moves once the plan is uninstalled"
+        );
     });
 }
 
@@ -396,12 +520,16 @@ fn pool_survives_a_panicking_job() {
     let _serial = chaos_lock();
     let pool = WorkerPool::new(2);
     let (tx, rx) = std::sync::mpsc::channel();
-    pool.submit(Box::new(|| panic!("chaos: job panics on a worker thread")));
+    assert!(
+        pool.submit(Box::new(|| panic!("chaos: job panics on a worker thread"))).is_ok(),
+        "a live pool accepts the job"
+    );
     for i in 0..4 {
         let tx = tx.clone();
-        pool.submit(Box::new(move || {
+        let accepted = pool.submit(Box::new(move || {
             let _ = tx.send(i);
         }));
+        assert!(accepted.is_ok(), "a live pool accepts follow-up jobs");
     }
     let mut got: Vec<i32> = (0..4)
         .map(|_| rx.recv_timeout(Duration::from_secs(10)).expect("surviving worker drains the queue"))

@@ -109,3 +109,69 @@ fn every_bundle_replays_bitwise_on_every_backend() {
     panic::set_hook(prev);
     assert!(failures.is_empty(), "{} regression(s):\n{}", failures.len(), failures.join("\n---\n"));
 }
+
+/// Bundles tagged `serve:<inner>` came from (or pin) the concurrent
+/// dispatch path: replay each with several OS threads racing one shared
+/// [`depyf::serve::ModuleCache`] — the `depyf fuzz --serve` topology —
+/// and demand every thread's outcome agrees bitwise with the
+/// single-thread plain run.
+#[test]
+fn serve_bundles_replay_concurrently_through_shared_cache() {
+    use depyf::serve::{CachingBackend, ModuleCache};
+    use std::sync::Arc;
+    const THREADS: usize = 4;
+    let corpus: Vec<FuzzBundle> =
+        load_corpus().into_iter().filter(|b| b.backend.starts_with("serve:")).collect();
+    assert!(!corpus.is_empty(), "expected at least one committed serve: bundle");
+    let mut failures: Vec<String> = Vec::new();
+    for b in &corpus {
+        let inner_name = b.backend.strip_prefix("serve:").unwrap();
+        let plain = run_program(&b.source, None, DEFAULT_BUDGET);
+        assert!(
+            !matches!(plain.status, RunStatus::Panic(_) | RunStatus::Budget),
+            "{}: plain run must complete: {}",
+            b.name,
+            plain.render()
+        );
+        for &opt in OPT_LEVELS {
+            let inner = match resolve_backend(inner_name) {
+                Ok(be) => be,
+                Err(e) => {
+                    failures.push(format!("{}: backend {}: {}", b.name, inner_name, e));
+                    continue;
+                }
+            };
+            let cache = Arc::new(ModuleCache::new());
+            let shared: Arc<dyn depyf::api::Backend> =
+                Arc::new(CachingBackend::new(inner, Arc::clone(&cache)));
+            let handles: Vec<_> = (0..THREADS)
+                .map(|_| {
+                    let shared = Arc::clone(&shared);
+                    let src = b.source.clone();
+                    std::thread::spawn(move || run_program(&src, Some((shared, opt)), DEFAULT_BUDGET))
+                })
+                .collect();
+            for (t, h) in handles.into_iter().enumerate() {
+                let hooked = h.join().expect("replay thread");
+                if let Some(kind) = compare(&plain, &hooked) {
+                    failures.push(format!(
+                        "{}: {} on thread {} ({} at O{}):\nplain:\n{}\nhooked:\n{}",
+                        b.name,
+                        kind.as_str(),
+                        t,
+                        b.backend,
+                        opt.as_u8(),
+                        plain.render(),
+                        hooked.render()
+                    ));
+                }
+            }
+            assert!(
+                cache.hits() + cache.misses() > 0,
+                "{}: the shared module cache was never exercised",
+                b.name
+            );
+        }
+    }
+    assert!(failures.is_empty(), "{} regression(s):\n{}", failures.len(), failures.join("\n---\n"));
+}
